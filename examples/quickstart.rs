@@ -1,0 +1,109 @@
+//! Quickstart: load an AOT artifact, run a TNN column, watch it learn.
+//!
+//! Demonstrates the full three-layer stack on the smallest geometry
+//! (8 synapses × 4 neurons, batch 16):
+//!
+//! 1. the rust runtime loads `artifacts/col_train_8x4.hlo.txt` (built
+//!    once by `make artifacts`; python never runs here),
+//! 2. a fixed input pattern is presented for a few waves,
+//! 3. weights move toward the pattern (STDP capture) and the console
+//!    shows spike times + the learned weight matrix,
+//! 4. every step is cross-checked against the rust golden model.
+//!
+//! Usage: make artifacts && cargo run --release --example quickstart
+
+use tnn7::arch::{INF, N_PARAMS};
+use tnn7::runtime::Runtime;
+use tnn7::tnn::column::column_fwd;
+use tnn7::tnn::stdp::{stdp_step, StdpParams};
+use tnn7::tnn::Lfsr16;
+
+const P: usize = 8;
+const Q: usize = 4;
+const B: usize = 16;
+const THETA: i32 = 6;
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // Input pattern: first half of the inputs spike early, rest silent.
+    let mut s = vec![INF; B * P];
+    for b in 0..B {
+        for j in 0..P / 2 {
+            s[b * P + j] = (j % 2) as i32; // spike at t=0 or t=1
+        }
+    }
+    let mut w = vec![2i32; P * Q];
+    let theta = [THETA];
+    let params = StdpParams::from_probs(
+        1.0,
+        0.8,
+        0.1,
+        [1.0, 1.0, 0.75, 0.5, 0.5, 0.25, 0.25, 0.125],
+        [0.125, 0.25, 0.25, 0.5, 0.5, 0.75, 1.0, 1.0],
+    );
+    let params_vec: Vec<i32> = params.to_vec();
+    assert_eq!(params_vec.len(), N_PARAMS);
+    let mut lfsr = Lfsr16::new(0x1234);
+
+    println!("\ntraining a {P}x{Q} column on a fixed pattern:");
+    for step in 0..6 {
+        let mut rand = vec![0i32; B * P * Q * 2];
+        lfsr.fill_i32(&mut rand);
+        let out = rt.execute(
+            "col_train_8x4",
+            &[&s, &w, &theta, &rand, &params_vec],
+        )?;
+        let (pre, post, new_w) = (&out[0], &out[1], &out[2]);
+
+        // Golden-model cross-check (batch semantics: forward frozen,
+        // then sequential updates).
+        let mut w_gold = w.clone();
+        for b in 0..B {
+            let sb = &s[b * P..(b + 1) * P];
+            let (pre_g, post_g) = column_fwd(sb, &w, Q, THETA);
+            assert_eq!(&pre[b * Q..(b + 1) * Q], &pre_g[..], "pre b={b}");
+            assert_eq!(&post[b * Q..(b + 1) * Q], &post_g[..], "post b={b}");
+            let pairs: Vec<(u16, u16)> = (0..P * Q)
+                .map(|k| {
+                    let base = (b * P * Q + k) * 2;
+                    (rand[base] as u16, rand[base + 1] as u16)
+                })
+                .collect();
+            stdp_step(sb, &post_g, &mut w_gold, &pairs, &params);
+        }
+        assert_eq!(new_w, &w_gold, "weights diverged from golden model");
+        w = new_w.clone();
+
+        let spike0: Vec<String> = (0..Q)
+            .map(|i| {
+                let t = post[i];
+                if t == INF {
+                    "-".into()
+                } else {
+                    t.to_string()
+                }
+            })
+            .collect();
+        println!(
+            "  step {step}: post-WTA spikes (sample 0) = [{}]",
+            spike0.join(", ")
+        );
+    }
+
+    println!("\nlearned weights (rows = synapses, cols = neurons):");
+    for j in 0..P {
+        let row: Vec<String> =
+            (0..Q).map(|i| w[j * Q + i].to_string()).collect();
+        let active = if j < P / 2 { "active" } else { "silent" };
+        println!("  syn {j} ({active}): [{}]", row.join(" "));
+    }
+    let active_sum: i32 = (0..P / 2).map(|j| w[j * Q]).sum();
+    let silent_sum: i32 = (P / 2..P).map(|j| w[j * Q]).sum();
+    println!(
+        "\nSTDP captured the pattern: active-synapse weights {active_sum} vs silent {silent_sum}"
+    );
+    println!("quickstart OK (every step cross-checked against the golden model)");
+    Ok(())
+}

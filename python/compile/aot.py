@@ -1,0 +1,155 @@
+"""AOT compile path: lower the L2 JAX programs to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the rust coordinator then loads
+``artifacts/*.hlo.txt`` through the xla crate's PJRT CPU client and python
+never runs again.  HLO text (NOT ``lowered.compile()`` / serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every artifact is shape-monomorphic.  ``manifest.json`` records, for each
+artifact: the program kind, the (B, C, p, q) geometry, and the exact
+argument/result shapes — the rust runtime validates against it at load.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+# Geometry of every program the coordinator needs.
+#   quickstart column: 8x4  (examples/quickstart.rs)
+#   benchmark columns: 64x8, 128x10, 1024x16 (Table I cross-checks)
+#   prototype layers:  625 columns of 32x12 and 12x10 (Fig. 19)
+BATCH = 16
+
+SPECS = [
+    # (name, kind, B, C, p, q)
+    ("col_fwd_8x4", "col_fwd", BATCH, 1, 8, 4),
+    ("col_train_8x4", "col_train", BATCH, 1, 8, 4),
+    ("col_fwd_64x8", "col_fwd", BATCH, 1, 64, 8),
+    ("col_fwd_128x10", "col_fwd", BATCH, 1, 128, 10),
+    ("col_fwd_1024x16", "col_fwd", BATCH, 1, 1024, 16),
+    ("col_train_64x8", "col_train", BATCH, 1, 64, 8),
+    ("l1_fwd", "layer_fwd", BATCH, 625, 32, 12),
+    ("l1_train", "layer_train", BATCH, 625, 32, 12),
+    ("l2_fwd", "layer_fwd", BATCH, 625, 12, 10),
+    ("l2_train", "layer_train", BATCH, 625, 12, 10),
+]
+
+I32 = jnp.int32
+
+
+def _spec_args(kind, B, C, p, q):
+    """Example ShapeDtypeStructs for lowering."""
+    S = jax.ShapeDtypeStruct
+    if kind == "col_fwd":
+        return (S((B, p), I32), S((p, q), I32), S((1,), I32))
+    if kind == "col_train":
+        return (
+            S((B, p), I32),
+            S((p, q), I32),
+            S((1,), I32),
+            S((B, p, q, 2), I32),
+            S((ref.N_PARAMS,), I32),
+        )
+    if kind == "layer_fwd":
+        return (S((B, C, p), I32), S((C, p, q), I32), S((1,), I32))
+    if kind == "layer_train":
+        return (
+            S((B, C, p), I32),
+            S((C, p, q), I32),
+            S((1,), I32),
+            S((B, C, p, q, 2), I32),
+            S((ref.N_PARAMS,), I32),
+        )
+    raise ValueError(f"unknown kind {kind}")
+
+
+FNS = {
+    "col_fwd": model.column_fwd,
+    "col_train": model.column_train_step,
+    "layer_fwd": model.layer_fwd,
+    "layer_train": model.layer_train_step,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name, kind, B, C, p, q):
+    args = _spec_args(kind, B, C, p, q)
+    lowered = jax.jit(FNS[kind]).lower(*args)
+    text = to_hlo_text(lowered)
+    entry = {
+        "name": name,
+        "kind": kind,
+        "file": f"{name}.hlo.txt",
+        "batch": B,
+        "cols": C,
+        "p": p,
+        "q": q,
+        "n_params": ref.N_PARAMS,
+        "inputs": [list(a.shape) for a in args],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {
+        "batch": BATCH,
+        "inf": ref.INF,
+        "t_in": ref.T_IN,
+        "w_max": ref.W_MAX,
+        "t_steps": ref.T_STEPS,
+        "rand_scale": ref.RAND_SCALE,
+        "n_params": ref.N_PARAMS,
+        "artifacts": [],
+    }
+    for name, kind, B, C, p, q in SPECS:
+        if only and name not in only:
+            continue
+        text, entry = lower_one(name, kind, B, C, p, q)
+        path = os.path.join(args.out_dir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(entry)
+        print(f"  {name:<18} {kind:<12} B={B} C={C} p={p} q={q} "
+              f"-> {len(text)//1024} KiB")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+          f"to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

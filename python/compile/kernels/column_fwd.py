@@ -1,0 +1,160 @@
+"""Pallas kernel: TNN column forward pass (RNL + threshold + 1-WTA).
+
+This is the compute hot-spot of the stack — the hardware analogue is the
+``syn_output`` (RNL readout) + ``pac_adder`` (parallel accumulative
+counter) + ``less_equal``/``pulse2edge`` (WTA) macro pipeline of the paper.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation)
+----------------------------------------------------
+The ASIC evaluates body potentials with a p-way accumulation per unit
+cycle.  On TPU we express the same dataflow as a *thermometer matmul*: the
+RNL contribution min(relu(t+1-s), w) decomposes over weight levels
+
+    min(relu(t+1-s), w) = sum_{k=0}^{W_MAX-1} [s <= t-k] * [w > k]
+
+so the per-cycle potential is  rho(t) = sum_k S_{t-k} @ W_k  with
+S_tau[B,p] = (s <= tau) and W_k[p,q] = (w > k) — MXU contractions in f32
+(values are tiny integers, exact in f32).  The weight thermometer planes
+stay in VMEM across the whole temporal loop, exactly like the synapse
+SRAM of the ASIC; one HBM read of the weight block per column tile.
+
+Performance (EXPERIMENTS.md §Perf): the layer kernel tiles the column
+axis — each grid step computes a [B, TC, p] x [TC, p, q] *batched*
+contraction per (t, k) instead of one tiny matmul per column, collapsing
+the interpret-mode op count by ~TC and mapping to one MXU dispatch per
+level on real hardware.  Tile size is chosen so a tile's blocks fit
+comfortably in VMEM (~4 MiB budget).
+
+interpret=True is mandatory here: the CPU PJRT client cannot execute the
+Mosaic custom-call a real TPU lowering would emit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VMEM budget per input tile (bytes) used to pick the column tile size.
+VMEM_TILE_BUDGET = 4 << 20
+
+
+def pick_tile(cols: int, bytes_per_col: int) -> int:
+    """Largest divisor of `cols` whose tile stays under the VMEM budget."""
+    best = 1
+    for tc in range(1, cols + 1):
+        if cols % tc == 0 and tc * bytes_per_col <= VMEM_TILE_BUDGET:
+            best = max(best, tc)
+    return best
+
+
+def _fwd_tile_kernel(s_ref, w_ref, theta_ref, pre_ref, post_ref):
+    """One column tile: s[B,TC,p], w[TC,p,q] -> pre/post [B,TC,q].
+
+    Fully loop-free: ONE batched contraction computes the level responses
+    for every (cycle, weight-level) pair, then W_MAX statically-unrolled
+    shifted adds realize the temporal convolution rho(t) = sum_k S(t-k)@W_k
+    and an argmax finds the first threshold crossing.  On TPU this is a
+    single MXU dispatch per tile; under interpret=True it collapses the op
+    count from O(T_STEPS * W_MAX) small dots to ~25 ops.
+    """
+    s = s_ref[...]  # [B,TC,p] int32
+    w = w_ref[...]  # [TC,p,q] int32
+    theta = theta_ref[0]
+    B, TC, p = s.shape
+    q = w.shape[2]
+
+    # Thermometer planes of the weights: [TC, W_MAX, p, q] f32 (the
+    # synapse-SRAM analogue, one HBM read per tile).
+    levels = jnp.arange(ref.W_MAX, dtype=jnp.int32)
+    w_thermo = (
+        w[:, None, :, :] > levels[None, :, None, None]
+    ).astype(jnp.float32)
+
+    # Step-function planes of the inputs: SS[tau][B,TC,p] = (s <= tau).
+    taus = jnp.arange(ref.T_STEPS, dtype=jnp.int32)
+    ss = (s[None] <= taus[:, None, None, None]).astype(jnp.float32)
+
+    # The one big contraction: R[t,b,c,k,q] = SS[t] @ W_k  (batch c,
+    # contract p) — every level response for every cycle at once.
+    r = jnp.einsum(
+        "tbcp,ckpq->tbckq",
+        ss,
+        w_thermo,
+        precision=jax.lax.Precision.HIGHEST,
+    )
+
+    # Temporal convolution rho(t) = sum_k R[t-k, ..., k, :], realized as
+    # W_MAX statically-unrolled shifted adds (k is tiny and static).
+    rho = jnp.zeros((ref.T_STEPS, B, TC, q), jnp.float32)
+    for k in range(ref.W_MAX):
+        rk = r[:, :, :, k, :]
+        if k > 0:
+            rk = jnp.pad(rk, ((k, 0), (0, 0), (0, 0), (0, 0)))[
+                : ref.T_STEPS
+            ]
+        rho = rho + rk
+
+    # First crossing: potentials are non-decreasing, so argmax over the
+    # cycle axis of the threshold mask is the spike time.
+    mask = rho.astype(jnp.int32) >= theta  # [T,B,TC,q]
+    fired = jnp.any(mask, axis=0)
+    idx = jnp.argmax(mask, axis=0).astype(jnp.int32)
+    inf = jnp.int32(ref.INF)
+    pre = jnp.where(fired, idx, inf)
+    pre_ref[...] = pre
+
+    # 1-WTA per column: earliest spike, lowest index on ties.
+    winner = jnp.argmin(pre, axis=2)  # [B,TC]
+    fired = jnp.min(pre, axis=2) != inf
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (B, TC, q), 2)
+    post_ref[...] = jnp.where(
+        (lanes == winner[..., None]) & fired[..., None], pre, inf
+    )
+
+
+def layer_fwd(s, w, theta):
+    """Multi-column layer forward.
+
+    Args:
+      s: [B, C, p] int32 per-column input spike times.
+      w: [C, p, q] int32 weights.
+      theta: [1] int32 shared firing threshold.
+    Returns: (pre, post) [B, C, q] int32.
+    """
+    B, C, p = s.shape
+    q = w.shape[2]
+    # Tile budget counts the biggest per-column block (s + w + thermo).
+    bytes_per_col = 4 * (B * p + p * q * (1 + ref.W_MAX))
+    tc = pick_tile(C, bytes_per_col)
+    grid = (C // tc,)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, C, q), jnp.int32),
+        jax.ShapeDtypeStruct((B, C, q), jnp.int32),
+    )
+    return pl.pallas_call(
+        _fwd_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, tc, p), lambda c: (0, c, 0)),
+            pl.BlockSpec((tc, p, q), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1,), lambda c: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((B, tc, q), lambda c: (0, c, 0)),
+            pl.BlockSpec((B, tc, q), lambda c: (0, c, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=True,
+    )(s, w, theta)
+
+
+def column_fwd(s, w, theta):
+    """Single-column forward.  s:[B,p], w:[p,q], theta:[1] int32.
+
+    Returns (pre, post) spike times, both [B,q] int32.
+    """
+    pre, post = layer_fwd(s[:, None, :], w[None], theta)
+    return pre[:, 0, :], post[:, 0, :]

@@ -1,0 +1,162 @@
+"""Pure-jnp oracles for the TNN column kernels.
+
+These define the *architectural semantics* shared by every layer of the
+stack: the Pallas kernels (column_fwd.py / stdp.py), the rust golden model
+(rust/src/tnn/), and the gate-level netlists (rust/src/netlist/modules/)
+are all tested for exact equivalence against the behaviour specified here.
+
+Temporal code
+-------------
+Spike times are small non-negative integers; ``INF`` (= 2**30) encodes
+"no spike".  Inputs are 3-bit times in [0, 8); weights are 3-bit in [0, 7].
+The ramp-no-leak (RNL) response of synapse j with weight w and input spike
+at time s contributes ``clamp(t + 1 - s, 0, w)`` to the body potential at
+unit-cycle t (a spike at time s starts ramping on cycle s).  Potentials are
+therefore non-decreasing and saturate by ``t = T_IN + W_MAX - 1``; the
+output spike time of neuron i is the first cycle its potential crosses
+theta, else INF.
+
+WTA inhibition passes only the earliest output spike (lowest neuron index
+breaks ties), matching the paper's less_equal/pulse2edge macros.
+
+STDP (from [2], the predecessor paper)
+--------------------------------------
+Four timing cases per synapse (x = input spiked, y = (post-WTA) output
+spiked, s/o their times), each gated by a Bernoulli random variable (BRV)
+and a weight-indexed stabilization BRV (the stabilize_func 8:1 mux):
+
+  capture : x and y and s <= o  ->  w += 1  with prob mu_capture * stab_up[w]
+  backoff : x and y and s >  o  ->  w -= 1  with prob mu_backoff * stab_dn[w]
+  search  : x and not y         ->  w += 1  with prob mu_search
+  minus   : y and not x         ->  w -= 1  with prob mu_backoff * stab_dn[w]
+
+Randomness is hardware-faithful: the caller supplies two uniform draws in
+[0, 2**16) per synapse per sample (``r_case``, ``r_stab``); an event with
+probability p fires iff ``r < round(p * 2**16)``.  The rust coordinator
+generates these with the same 16-bit LFSR the RTL would use.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = 1 << 30  # "no spike" sentinel (fits comfortably in int32)
+T_IN = 8  # input temporal window (3-bit spike times)
+W_MAX = 7  # 3-bit saturating weights
+T_STEPS = T_IN + W_MAX  # potentials are constant after this many cycles
+RAND_SCALE = 1 << 16  # BRV thresholds are 16-bit fixed point
+
+# params vector layout for stdp_step: [mu_capture, mu_backoff, mu_search,
+# stab_up[0..7], stab_dn[0..7]] -- all 16-bit fixed-point thresholds.
+N_PARAMS = 3 + 8 + 8
+
+
+def pack_params(mu_capture, mu_backoff, mu_search, stab_up, stab_dn):
+    """Pack STDP probabilities (floats in [0,1]) into the int32 params vec."""
+
+    def to_thr(p):
+        return jnp.round(jnp.asarray(p, dtype=jnp.float32) * RAND_SCALE).astype(
+            jnp.int32
+        )
+
+    return jnp.concatenate(
+        [
+            to_thr(jnp.asarray([mu_capture, mu_backoff, mu_search])),
+            to_thr(jnp.asarray(stab_up)),
+            to_thr(jnp.asarray(stab_dn)),
+        ]
+    )
+
+
+def rnl_potential(s, w, t):
+    """Body potentials at unit-cycle t.  s:[B,p] int32, w:[p,q] -> [B,q]."""
+    ramp = jnp.clip(t + 1 - s, 0, None)  # [B,p]; INF times give 0
+    contrib = jnp.minimum(ramp[:, :, None], w[None, :, :])  # [B,p,q]
+    return contrib.sum(axis=1)
+
+
+def column_fwd(s, w, theta):
+    """Reference column forward pass.
+
+    Args:
+      s: [B, p] int32 input spike times (INF = none).
+      w: [p, q] int32 weights in [0, W_MAX].
+      theta: scalar int32 firing threshold (>= 1).
+    Returns:
+      (pre, post): [B, q] int32 spike times before / after WTA inhibition.
+    """
+    B, _ = s.shape
+    q = w.shape[1]
+    pre = jnp.full((B, q), INF, dtype=jnp.int32)
+    for t in range(T_STEPS):
+        rho = rnl_potential(s, w, t)
+        pre = jnp.where((pre == INF) & (rho >= theta), t, pre)
+    # 1-WTA: earliest spike wins, lowest index breaks ties.
+    winner = jnp.argmin(pre, axis=1)  # argmin returns lowest index on ties
+    fired = jnp.take_along_axis(pre, winner[:, None], axis=1) != INF
+    post = jnp.where(
+        (jnp.arange(q)[None, :] == winner[:, None]) & fired, pre, INF
+    )
+    return pre.astype(jnp.int32), post.astype(jnp.int32)
+
+
+def stdp_step(s, o, w, rand, params):
+    """Reference STDP update for ONE sample.
+
+    Args:
+      s: [p] input spike times, o: [q] post-WTA output spike times.
+      w: [p, q] weights.  rand: [p, q, 2] uniform draws in [0, 2**16).
+      params: [N_PARAMS] int32 thresholds (see pack_params).
+    Returns: new [p, q] weights.
+    """
+    mu_c, mu_b, mu_s = params[0], params[1], params[2]
+    stab_up = params[3:11][jnp.clip(w, 0, 7)]  # [p,q]
+    stab_dn = params[11:19][jnp.clip(w, 0, 7)]
+    x = (s != INF)[:, None]  # [p,1]
+    y = (o != INF)[None, :]  # [1,q]
+    sle = s[:, None] <= o[None, :]
+    r_case, r_stab = rand[..., 0], rand[..., 1]
+
+    capture = x & y & sle & (r_case < mu_c) & (r_stab < stab_up)
+    backoff = x & y & ~sle & (r_case < mu_b) & (r_stab < stab_dn)
+    search = x & ~y & (r_case < mu_s)
+    minus = ~x & y & (r_case < mu_b) & (r_stab < stab_dn)
+
+    delta = (capture | search).astype(jnp.int32) - (backoff | minus).astype(
+        jnp.int32
+    )
+    return jnp.clip(w + delta, 0, W_MAX).astype(jnp.int32)
+
+
+def stdp_batch(s, o, w, rand, params):
+    """Sequential (hardware-order) STDP over a batch.
+
+    s:[B,p], o:[B,q], w:[p,q], rand:[B,p,q,2] -> new [p,q] weights.
+    """
+    for b in range(s.shape[0]):
+        w = stdp_step(s[b], o[b], w, rand[b], params)
+    return w
+
+
+def layer_fwd(s, w, theta):
+    """Reference multi-column layer forward: s:[B,C,p], w:[C,p,q]."""
+    C = w.shape[0]
+    pres, posts = [], []
+    for c in range(C):
+        pre, post = column_fwd(s[:, c, :], w[c], theta)
+        pres.append(pre)
+        posts.append(post)
+    return jnp.stack(pres, axis=1), jnp.stack(posts, axis=1)
+
+
+def layer_stdp(s, o, w, rand, params):
+    """Reference multi-column STDP: s:[B,C,p], o:[B,C,q], w:[C,p,q],
+    rand:[B,C,p,q,2] -> new [C,p,q]."""
+    C = w.shape[0]
+    return jnp.stack(
+        [
+            stdp_batch(s[:, c], o[:, c], w[c], rand[:, c], params)
+            for c in range(C)
+        ],
+        axis=0,
+    )

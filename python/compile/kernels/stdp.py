@@ -1,0 +1,115 @@
+"""Pallas kernel: TNN STDP weight update (the paper's learning macros).
+
+Hardware analogue: per-synapse ``stdp_case_gen`` (the four timing cases) +
+``stabilize_func`` (weight-indexed BRV selection, the 8:1 GDI mux) +
+``incdec`` (saturating +/-1) + ``syn_weight_update`` (the 3-bit weight FSM).
+
+Batch samples are applied *sequentially* (fori_loop over B) — the hardware
+updates weights per computational wave, and sequential order is what the
+gate-level netlist implements, so equivalence tests demand it.  All
+randomness is supplied by the caller as 16-bit uniform draws (rust
+generates them with the same LFSR the RTL uses), keeping the kernel
+bit-deterministic.
+
+Performance (EXPERIMENTS.md §Perf): the kernel tiles the column axis and
+vectorizes each sequential batch step across the whole tile —
+B iterations of [TC, p, q] element-wise work per grid step instead of
+C x B iterations of [p, q] work.  The sequential dependency (weights feed
+the stabilize_func select of the NEXT sample) is preserved exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .column_fwd import pick_tile
+
+
+def _stdp_tile_kernel(s_ref, o_ref, w_ref, rand_ref, params_ref, out_ref):
+    """One tile: s[B,TC,p], o[B,TC,q], w[TC,p,q], rand[B,TC,p,q,2]."""
+    s = s_ref[...]
+    o = o_ref[...]
+    w0 = w_ref[...]
+    rand = rand_ref[...]
+    params = params_ref[...]
+    B = s.shape[0]
+
+    mu_c, mu_b, mu_s = params[0], params[1], params[2]
+    stab_up_tbl = params[3:11]
+    stab_dn_tbl = params[11:19]
+    inf = jnp.int32(ref.INF)
+
+    def sample(b, w):
+        sb = jax.lax.dynamic_index_in_dim(s, b, 0, keepdims=False)  # [TC,p]
+        ob = jax.lax.dynamic_index_in_dim(o, b, 0, keepdims=False)  # [TC,q]
+        rb = jax.lax.dynamic_index_in_dim(rand, b, 0, keepdims=False)
+
+        # stabilize_func: weight value selects the BRV threshold (8:1 mux).
+        wc = jnp.clip(w, 0, 7)
+        stab_up = stab_up_tbl[wc]  # [TC,p,q]
+        stab_dn = stab_dn_tbl[wc]
+
+        x = (sb != inf)[:, :, None]  # [TC,p,1]
+        y = (ob != inf)[:, None, :]  # [TC,1,q]
+        sle = sb[:, :, None] <= ob[:, None, :]
+        r_case = rb[..., 0]
+        r_stab = rb[..., 1]
+
+        # stdp_case_gen: the four timing cases.
+        capture = x & y & sle & (r_case < mu_c) & (r_stab < stab_up)
+        backoff = x & y & (~sle) & (r_case < mu_b) & (r_stab < stab_dn)
+        search = x & (~y) & (r_case < mu_s)
+        minus = (~x) & y & (r_case < mu_b) & (r_stab < stab_dn)
+
+        # incdec + syn_weight_update: saturating +/-1.
+        delta = (capture | search).astype(jnp.int32) - (
+            backoff | minus
+        ).astype(jnp.int32)
+        return jnp.clip(w + delta, 0, ref.W_MAX)
+
+    out_ref[...] = jax.lax.fori_loop(0, B, sample, w0)
+
+
+def layer_stdp(s, o, w, rand, params):
+    """Multi-column STDP.
+
+    Args:
+      s: [B, C, p] input spike times; o: [B, C, q] post-WTA output times.
+      w: [C, p, q] weights; rand: [B, C, p, q, 2] uniform draws.
+      params: [19] int32 thresholds (ref.pack_params).
+    Returns: new [C, p, q] int32 weights.
+    """
+    B, C, p = s.shape
+    q = o.shape[2]
+    # The rand block dominates the tile footprint.
+    bytes_per_col = 4 * (B * p * q * 2 + 3 * p * q)
+    tc = pick_tile(C, bytes_per_col)
+    return pl.pallas_call(
+        _stdp_tile_kernel,
+        grid=(C // tc,),
+        in_specs=[
+            pl.BlockSpec((B, tc, p), lambda c: (0, c, 0)),
+            pl.BlockSpec((B, tc, q), lambda c: (0, c, 0)),
+            pl.BlockSpec((tc, p, q), lambda c: (c, 0, 0)),
+            pl.BlockSpec((B, tc, p, q, 2), lambda c: (0, c, 0, 0, 0)),
+            pl.BlockSpec((ref.N_PARAMS,), lambda c: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tc, p, q), lambda c: (c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, p, q), jnp.int32),
+        interpret=True,
+    )(s, o, w, rand, params)
+
+
+def stdp_update(s, o, w, rand, params):
+    """Single-column STDP.  s:[B,p], o:[B,q], w:[p,q], rand:[B,p,q,2],
+    params:[19] -> new weights [p,q] int32."""
+    return layer_stdp(
+        s[:, None, :],
+        o[:, None, :],
+        w[None],
+        rand[:, None],
+        params,
+    )[0]

@@ -1,0 +1,94 @@
+"""L2: the JAX model of the paper's 2-layer TNN prototype (Fig. 19).
+
+Composes the L1 Pallas kernels into the executable programs the rust
+coordinator runs at runtime (after AOT lowering by aot.py):
+
+  * ``layer_fwd``       — one multi-column layer forward pass.
+  * ``layer_train_step``— forward + STDP in a single fused program, so the
+    whole training step is one HLO module (one PJRT dispatch per layer per
+    batch, donated weight buffer semantics on the TPU path).
+  * ``column_fwd`` / ``column_train_step`` — single-column variants used by
+    the quickstart example and the cross-validation tests against the
+    gate-level simulator.
+
+Python here is build-time only; nothing in this file runs on the request
+path.  All functions are shape-monomorphic at lowering time (aot.py lowers
+one HLO artifact per (B, C, p, q) the coordinator needs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import column_fwd as cf
+from .kernels import ref
+from .kernels import stdp as st
+
+
+def layer_fwd(s, w, theta):
+    """Layer forward: s[B,C,p], w[C,p,q], theta[1] -> (pre, post) [B,C,q]."""
+    return cf.layer_fwd(s, w, theta)
+
+
+def layer_train_step(s, w, theta, rand, params):
+    """Fused forward + STDP for one layer.
+
+    Args:
+      s: [B,C,p] int32 input spike times.
+      w: [C,p,q] int32 weights.
+      theta: [1] int32 threshold.
+      rand: [B,C,p,q,2] int32 uniform 16-bit draws.
+      params: [ref.N_PARAMS] int32 STDP thresholds.
+    Returns:
+      (pre, post, new_w): [B,C,q], [B,C,q], [C,p,q] int32.
+    """
+    pre, post = cf.layer_fwd(s, w, theta)
+    new_w = st.layer_stdp(s, post, w, rand, params)
+    return pre, post, new_w
+
+
+def column_fwd(s, w, theta):
+    """Single-column forward: s[B,p], w[p,q], theta[1] -> (pre, post)."""
+    return cf.column_fwd(s, w, theta)
+
+
+def column_train_step(s, w, theta, rand, params):
+    """Fused single-column forward + STDP (quickstart / cross-check)."""
+    pre, post = cf.column_fwd(s, w, theta)
+    new_w = st.stdp_update(s, post, w, rand, params)
+    return pre, post, new_w
+
+
+def prototype_fwd(s1, w1, theta1, w2, theta2, routing):
+    """Full 2-layer prototype forward (inference only).
+
+    Layer-1 post-WTA spike times are re-encoded into layer-2 inputs via a
+    static ``routing`` gather: layer-2 column c reads the q1 outputs of
+    layer-1 column ``routing[c]`` (the prototype wires layer-2 column c to
+    layer-1 column c, so routing is typically identity, but the artifact
+    keeps it general for receptive-field experiments).
+
+    Args:
+      s1: [B, C1, p1] layer-1 inputs; w1: [C1, p1, q1]; theta1: [1].
+      w2: [C2, p2, q2] with p2 == q1; theta2: [1].
+      routing: [C2] int32 — layer-1 column feeding each layer-2 column.
+    Returns: (post1 [B,C1,q1], post2 [B,C2,q2]).
+    """
+    _, post1 = cf.layer_fwd(s1, w1, theta1)
+    s2 = rebase_times(post1)
+    s2 = jnp.take(s2, routing, axis=1)  # [B, C2, q1]
+    _, post2 = cf.layer_fwd(s2, w2, theta2)
+    return post1, post2
+
+
+def rebase_times(post):
+    """Re-encode a layer's post-WTA times as next-layer inputs.
+
+    Spikes keep relative order, clipped into the [0, T_IN) input window;
+    INF stays INF.  Standalone export so the coordinator can run
+    layer-at-a-time training (layer 1 converges before layer 2, as in [2]).
+    """
+    return jnp.where(
+        post == ref.INF, ref.INF, jnp.clip(post, 0, ref.T_IN - 1)
+    ).astype(jnp.int32)

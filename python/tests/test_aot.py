@@ -1,0 +1,91 @@
+"""AOT path tests: lowering determinism, manifest integrity, tiling."""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from compile import aot
+from compile.kernels import column_fwd as cf
+from compile.kernels import ref
+
+
+class TestTilePicker:
+    def test_divides_columns(self):
+        for cols in [1, 5, 25, 125, 625, 7, 49]:
+            tc = cf.pick_tile(cols, 1000)
+            assert cols % tc == 0
+
+    def test_respects_budget(self):
+        bytes_per_col = 1 << 20  # 1 MiB per column
+        tc = cf.pick_tile(625, bytes_per_col)
+        assert tc * bytes_per_col <= cf.VMEM_TILE_BUDGET
+        # budget allows at least one column even when oversized
+        assert cf.pick_tile(625, 1 << 30) == 1
+
+    def test_monotone_in_budget_pressure(self):
+        small = cf.pick_tile(625, 1 << 10)
+        large = cf.pick_tile(625, 1 << 18)
+        assert small >= large
+
+
+class TestLowering:
+    def test_hlo_text_deterministic(self):
+        t1, e1 = aot.lower_one("col_fwd_8x4", "col_fwd", 16, 1, 8, 4)
+        t2, e2 = aot.lower_one("col_fwd_8x4", "col_fwd", 16, 1, 8, 4)
+        assert t1 == t2
+        assert e1["sha256"] == e2["sha256"]
+
+    def test_hlo_is_parseable_text(self):
+        text, entry = aot.lower_one("x", "col_fwd", 4, 1, 8, 4)
+        assert text.startswith("HloModule")
+        assert "s32[4,8]" in text  # input spike tensor shape
+        assert entry["inputs"][0] == [4, 8]
+
+    def test_train_kind_has_five_inputs(self):
+        _, entry = aot.lower_one("x", "layer_train", 4, 3, 8, 4)
+        assert len(entry["inputs"]) == 5
+        assert entry["inputs"][3] == [4, 3, 8, 4, 2]  # rand tensor
+        assert entry["inputs"][4] == [ref.N_PARAMS]
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            aot._spec_args("bogus", 1, 1, 1, 1)
+
+
+class TestManifestSchema:
+    def test_manifest_fields_round_trip(self, tmp_path):
+        import subprocess
+        import sys
+
+        # Build a single small artifact into a temp dir via the CLI.
+        import pathlib
+
+        py_dir = pathlib.Path(__file__).resolve().parent.parent
+        out = subprocess.run(
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out-dir",
+                str(tmp_path),
+                "--only",
+                "col_fwd_8x4",
+            ],
+            capture_output=True,
+            text=True,
+            cwd=py_dir,
+        )
+        assert out.returncode == 0, out.stderr
+        m = json.loads((tmp_path / "manifest.json").read_text())
+        # Constants the rust Manifest::parse validates against.
+        assert m["inf"] == ref.INF
+        assert m["t_in"] == ref.T_IN
+        assert m["w_max"] == ref.W_MAX
+        assert m["t_steps"] == ref.T_STEPS
+        assert m["rand_scale"] == ref.RAND_SCALE
+        assert m["n_params"] == ref.N_PARAMS
+        [a] = m["artifacts"]
+        assert a["name"] == "col_fwd_8x4"
+        assert (tmp_path / a["file"]).exists()

@@ -1,0 +1,235 @@
+"""Kernel-vs-reference equivalence — the core L1 correctness signal.
+
+Every Pallas kernel must agree *exactly* (integer semantics) with the
+pure-jnp oracle in kernels/ref.py, across a hypothesis sweep of geometries,
+spike patterns, weights and thresholds.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as stst
+
+import jax.numpy as jnp
+
+from compile.kernels import column_fwd as cf
+from compile.kernels import ref
+from compile.kernels import stdp as st
+
+RNG = np.random.default_rng
+
+
+def make_inputs(seed, B, p, q, spike_prob=0.8):
+    rng = RNG(seed)
+    s = rng.integers(0, ref.T_IN, size=(B, p), dtype=np.int32)
+    mask = rng.random((B, p)) < spike_prob
+    s = np.where(mask, s, ref.INF).astype(np.int32)
+    w = rng.integers(0, ref.W_MAX + 1, size=(p, q), dtype=np.int32)
+    return jnp.asarray(s), jnp.asarray(w)
+
+
+def default_params():
+    return ref.pack_params(
+        mu_capture=0.9,
+        mu_backoff=0.5,
+        mu_search=0.05,
+        stab_up=[1.0, 1.0, 0.75, 0.5, 0.5, 0.25, 0.25, 0.125],
+        stab_dn=[0.125, 0.25, 0.25, 0.5, 0.5, 0.75, 1.0, 1.0],
+    )
+
+
+geometries = stst.sampled_from(
+    [(1, 4, 2), (2, 8, 4), (3, 7, 3), (4, 16, 8), (2, 32, 12), (1, 12, 10)]
+)
+
+
+class TestColumnFwd:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        geo=geometries,
+        seed=stst.integers(0, 2**31 - 1),
+        theta=stst.integers(1, 40),
+        spike_prob=stst.floats(0.0, 1.0),
+    )
+    def test_matches_ref(self, geo, seed, theta, spike_prob):
+        B, p, q = geo
+        s, w = make_inputs(seed, B, p, q, spike_prob)
+        th = jnp.asarray([theta], dtype=jnp.int32)
+        pre_k, post_k = cf.column_fwd(s, w, th)
+        pre_r, post_r = ref.column_fwd(s, w, theta)
+        np.testing.assert_array_equal(np.asarray(pre_k), np.asarray(pre_r))
+        np.testing.assert_array_equal(np.asarray(post_k), np.asarray(post_r))
+
+    def test_no_input_no_spike(self):
+        s = jnp.full((2, 8), ref.INF, dtype=jnp.int32)
+        w = jnp.full((8, 4), ref.W_MAX, dtype=jnp.int32)
+        pre, post = cf.column_fwd(s, w, jnp.asarray([1], jnp.int32))
+        assert (np.asarray(pre) == ref.INF).all()
+        assert (np.asarray(post) == ref.INF).all()
+
+    def test_wta_single_winner(self):
+        for seed in range(20):
+            s, w = make_inputs(seed, 4, 16, 8)
+            _, post = cf.column_fwd(s, w, jnp.asarray([8], jnp.int32))
+            fired = (np.asarray(post) != ref.INF).sum(axis=1)
+            assert (fired <= 1).all()
+
+    def test_wta_lowest_index_tiebreak(self):
+        # Two identical neurons -> index 0 must win.
+        s = jnp.zeros((1, 4), dtype=jnp.int32)
+        w = jnp.full((4, 2), 3, dtype=jnp.int32)
+        _, post = cf.column_fwd(s, w, jnp.asarray([4], jnp.int32))
+        post = np.asarray(post)[0]
+        assert post[0] != ref.INF and post[1] == ref.INF
+
+    def test_threshold_monotone(self):
+        # Raising theta can only delay (or kill) the winning spike.
+        s, w = make_inputs(7, 2, 16, 4)
+        prev = None
+        for theta in [1, 4, 8, 16, 32]:
+            pre, _ = cf.column_fwd(s, w, jnp.asarray([theta], jnp.int32))
+            pre = np.asarray(pre)
+            if prev is not None:
+                assert (pre >= prev).all()
+            prev = pre
+
+    def test_saturated_potential_value(self):
+        # theta = sum(w) + 1 with all inputs at t=0 must never fire.
+        s = jnp.zeros((1, 6), dtype=jnp.int32)
+        w = jnp.asarray(RNG(3).integers(0, 8, (6, 3)), dtype=jnp.int32)
+        theta = int(np.asarray(w).sum(axis=0).max()) + 1
+        pre, _ = cf.column_fwd(s, w, jnp.asarray([theta], jnp.int32))
+        assert (np.asarray(pre) == ref.INF).all()
+
+
+class TestLayerFwd:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=stst.integers(0, 2**31 - 1),
+        C=stst.integers(1, 6),
+        theta=stst.integers(1, 24),
+    )
+    def test_matches_ref(self, seed, C, theta):
+        B, p, q = 3, 8, 4
+        rng = RNG(seed)
+        s = rng.integers(0, ref.T_IN, size=(B, C, p), dtype=np.int32)
+        s = np.where(rng.random((B, C, p)) < 0.8, s, ref.INF).astype(np.int32)
+        w = rng.integers(0, 8, size=(C, p, q), dtype=np.int32)
+        th = jnp.asarray([theta], jnp.int32)
+        pre_k, post_k = cf.layer_fwd(jnp.asarray(s), jnp.asarray(w), th)
+        pre_r, post_r = ref.layer_fwd(jnp.asarray(s), jnp.asarray(w), theta)
+        np.testing.assert_array_equal(np.asarray(pre_k), np.asarray(pre_r))
+        np.testing.assert_array_equal(np.asarray(post_k), np.asarray(post_r))
+
+    def test_layer_equals_per_column(self):
+        # layer_fwd(C columns) == stack of column_fwd per column.
+        B, C, p, q = 2, 4, 8, 4
+        rng = RNG(11)
+        s = rng.integers(0, ref.T_IN, size=(B, C, p)).astype(np.int32)
+        w = rng.integers(0, 8, size=(C, p, q)).astype(np.int32)
+        th = jnp.asarray([6], jnp.int32)
+        pre_l, post_l = cf.layer_fwd(jnp.asarray(s), jnp.asarray(w), th)
+        for c in range(C):
+            pre_c, post_c = cf.column_fwd(
+                jnp.asarray(s[:, c]), jnp.asarray(w[c]), th
+            )
+            np.testing.assert_array_equal(
+                np.asarray(pre_l)[:, c], np.asarray(pre_c)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(post_l)[:, c], np.asarray(post_c)
+            )
+
+
+class TestStdp:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        geo=geometries,
+        seed=stst.integers(0, 2**31 - 1),
+        spike_prob=stst.floats(0.0, 1.0),
+    )
+    def test_matches_ref(self, geo, seed, spike_prob):
+        B, p, q = geo
+        rng = RNG(seed)
+        s, w = make_inputs(seed, B, p, q, spike_prob)
+        o = rng.integers(0, ref.T_STEPS, size=(B, q), dtype=np.int32)
+        o = np.where(rng.random((B, q)) < 0.5, o, ref.INF).astype(np.int32)
+        rand = rng.integers(0, 1 << 16, size=(B, p, q, 2), dtype=np.int32)
+        params = default_params()
+        got = st.stdp_update(
+            s, jnp.asarray(o), w, jnp.asarray(rand), params
+        )
+        want = ref.stdp_batch(s, jnp.asarray(o), w, jnp.asarray(rand), params)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_weights_stay_in_range(self):
+        rng = RNG(5)
+        B, p, q = 8, 8, 4
+        s, w = make_inputs(5, B, p, q)
+        o = rng.integers(0, ref.T_STEPS, size=(B, q), dtype=np.int32)
+        rand = rng.integers(0, 1 << 16, size=(B, p, q, 2), dtype=np.int32)
+        got = np.asarray(
+            st.stdp_update(s, jnp.asarray(o), w, jnp.asarray(rand),
+                           default_params())
+        )
+        assert got.min() >= 0 and got.max() <= ref.W_MAX
+
+    def test_zero_prob_freezes_weights(self):
+        rng = RNG(6)
+        B, p, q = 4, 8, 4
+        s, w = make_inputs(6, B, p, q)
+        o = rng.integers(0, ref.T_STEPS, size=(B, q), dtype=np.int32)
+        rand = rng.integers(0, 1 << 16, size=(B, p, q, 2), dtype=np.int32)
+        params = ref.pack_params(0.0, 0.0, 0.0, [0.0] * 8, [0.0] * 8)
+        got = st.stdp_update(s, jnp.asarray(o), w, jnp.asarray(rand), params)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+
+    def test_capture_increments_with_prob_one(self):
+        # x and y spike with s <= o, all probs 1 -> every weight < 7 bumps.
+        p, q = 4, 3
+        s = jnp.zeros((1, p), dtype=jnp.int32)
+        o = jnp.full((1, q), 5, dtype=jnp.int32)
+        w = jnp.asarray(RNG(7).integers(0, 7, (p, q)), dtype=jnp.int32)
+        rand = jnp.zeros((1, p, q, 2), dtype=jnp.int32)
+        params = ref.pack_params(1.0, 0.0, 0.0, [1.0] * 8, [0.0] * 8)
+        got = st.stdp_update(s, o, w, rand, params)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(w) + 1)
+
+    def test_sequential_batch_order_matters(self):
+        # The kernel must apply samples in batch order (hardware waves):
+        # construct a case where sample 0 saturates a weight so sample 1's
+        # stabilization differs from any parallel application.
+        p, q = 1, 1
+        s = jnp.zeros((2, p), dtype=jnp.int32)
+        o = jnp.full((2, q), 3, dtype=jnp.int32)
+        w = jnp.asarray([[6]], dtype=jnp.int32)
+        rand = jnp.zeros((2, p, q, 2), dtype=jnp.int32)
+        # stab_up[6]=1 but stab_up[7]=0: first sample bumps 6->7, second
+        # must then be blocked.  Parallel application would give 7 twice
+        # too, so also check the reverse direction with stab_dn.
+        params = ref.pack_params(1.0, 0.0, 0.0,
+                                 [1, 1, 1, 1, 1, 1, 1, 0], [0] * 8)
+        got = st.stdp_update(s, o, w, rand, params)
+        assert int(np.asarray(got)[0, 0]) == 7
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=stst.integers(0, 2**31 - 1), C=stst.integers(1, 4))
+    def test_layer_stdp_matches_ref(self, seed, C):
+        B, p, q = 3, 8, 4
+        rng = RNG(seed)
+        s = rng.integers(0, ref.T_IN, size=(B, C, p), dtype=np.int32)
+        o = rng.integers(0, ref.T_STEPS, size=(B, C, q), dtype=np.int32)
+        o = np.where(rng.random((B, C, q)) < 0.6, o, ref.INF).astype(np.int32)
+        w = rng.integers(0, 8, size=(C, p, q), dtype=np.int32)
+        rand = rng.integers(0, 1 << 16, size=(B, C, p, q, 2), dtype=np.int32)
+        params = default_params()
+        got = st.layer_stdp(
+            jnp.asarray(s), jnp.asarray(o), jnp.asarray(w),
+            jnp.asarray(rand), params,
+        )
+        want = ref.layer_stdp(
+            jnp.asarray(s), jnp.asarray(o), jnp.asarray(w),
+            jnp.asarray(rand), params,
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

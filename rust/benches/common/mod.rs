@@ -1,0 +1,64 @@
+//! Shared bench harness (criterion is not in the offline vendor set, so
+//! benches are plain binaries built with `harness = false` using this
+//! helper: warmup + N timed iterations, mean / stddev / min reporting).
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "bench {:<38} {:>4} iters  mean {:>11}  stddev {:>10}  min {:>11}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.stddev_s),
+            fmt_s(self.min_s),
+        );
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Run `f` for `iters` timed iterations (after 1 warmup); report stats.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchStats {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times
+        .iter()
+        .map(|t| (t - mean).powi(2))
+        .sum::<f64>()
+        / times.len() as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    stats.report();
+    stats
+}

@@ -1,0 +1,59 @@
+//! Bench: end-to-end HLO pipeline throughput (the §Perf L2 hot path).
+//!
+//! Times one batch of each AOT program on the PJRT CPU client: layer
+//! forward, fused layer train step, and the encode stage, reporting
+//! images/second.  Requires `make artifacts`.
+//!
+//! Run: cargo bench --bench pipeline_throughput
+
+#[path = "common/mod.rs"]
+mod common;
+
+use tnn7::config::TnnConfig;
+use tnn7::coordinator::Pipeline;
+use tnn7::data::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = TnnConfig::default();
+    let data = Dataset::generate(16, cfg.data_seed);
+    let mut pipe = match Pipeline::new(cfg) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!(
+                "skipping pipeline bench (artifacts missing?): {e}\n\
+                 run `make artifacts` first"
+            );
+            return Ok(());
+        }
+    };
+    let b = pipe.batch();
+    let images = data.images[..b].to_vec();
+
+    let mut s1 = Vec::new();
+    common::bench("pipeline/encode_batch", 10, || {
+        s1 = pipe.encode_batch(&images);
+    });
+
+    let mut post1 = Vec::new();
+    let st = common::bench("pipeline/l1_fwd", 3, || {
+        post1 = pipe.forward_l1(&s1).expect("l1_fwd");
+    });
+    println!("      {:.2} images/s", b as f64 / st.mean_s);
+
+    let st = common::bench("pipeline/l1_train", 3, || {
+        pipe.train_l1_batch(&s1).expect("l1_train");
+    });
+    println!("      {:.2} images/s", b as f64 / st.mean_s);
+
+    let s2 = pipe.rebase_flat(&post1);
+    let st = common::bench("pipeline/l2_train", 3, || {
+        pipe.train_l2_batch(&s2).expect("l2_train");
+    });
+    println!("      {:.2} images/s", b as f64 / st.mean_s);
+
+    let st = common::bench("pipeline/l2_fwd", 3, || {
+        pipe.forward_l2(&s2).expect("l2_fwd");
+    });
+    println!("      {:.2} images/s", b as f64 / st.mean_s);
+    Ok(())
+}

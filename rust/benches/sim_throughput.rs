@@ -1,0 +1,58 @@
+//! Bench: gate-level simulator throughput (the §Perf L3 hot path).
+//!
+//! Reports wave latency and gate-evaluations/second for the three
+//! Table-I columns — the quantity the whole Table I/II measurement
+//! pipeline is bounded by.
+//!
+//! Run: cargo bench --bench sim_throughput
+
+#[path = "common/mod.rs"]
+mod common;
+
+use tnn7::cells::Library;
+use tnn7::config::TnnConfig;
+use tnn7::coordinator::activity_bridge::stimulus;
+use tnn7::data::Dataset;
+use tnn7::netlist::column::{build_column, ColumnSpec};
+use tnn7::netlist::Flavor;
+use tnn7::sim::testbench::{ColumnTestbench, WAVE_LEN};
+use tnn7::tnn::stdp::RandPair;
+use tnn7::tnn::{Lfsr16, StdpParams};
+
+fn main() -> anyhow::Result<()> {
+    let lib = Library::with_macros();
+    let cfg = TnnConfig::default();
+    let data = Dataset::generate(8, 3);
+    let params = cfg.stdp_params();
+
+    for (label, p, q) in
+        [("64x8", 64usize, 8usize), ("128x10", 128, 10), ("1024x16", 1024, 16)]
+    {
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let spec = ColumnSpec::benchmark(p, q);
+            let (nl, ports) = build_column(&lib, flavor, &spec)?;
+            let n_insts = nl.insts.len();
+            let stim = stimulus(&data, p, 4, cfg.encode_threshold as f32);
+            let mut tb = ColumnTestbench::new(&nl, &ports, &lib)?;
+            let mut lfsr = Lfsr16::new(1);
+            let rand: Vec<RandPair> =
+                (0..p * q).map(|_| lfsr.draw_pair()).collect();
+            let mut widx = 0usize;
+            let stats = common::bench(
+                &format!("sim/{flavor:?}/{label}"),
+                if p >= 1024 { 4 } else { 16 },
+                || {
+                    tb.run_wave(&stim[widx % stim.len()], &rand, &params);
+                    widx += 1;
+                },
+            );
+            let evals_per_s =
+                (n_insts * WAVE_LEN) as f64 / stats.mean_s;
+            println!(
+                "      {n_insts} instances x {WAVE_LEN} cycles/wave -> {:.1} M gate-evals/s",
+                evals_per_s / 1e6
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Bench: regenerate the paper's Table I (three benchmark columns,
+//! standard vs custom) and time the measurement flow.
+//!
+//! Run: cargo bench --bench table1
+
+#[path = "common/mod.rs"]
+mod common;
+
+use tnn7::cells::{Library, TechParams};
+use tnn7::config::TnnConfig;
+use tnn7::coordinator::measure::{measure_column, table1_specs};
+use tnn7::data::Dataset;
+use tnn7::netlist::Flavor;
+use tnn7::ppa::report::{improvement_line, render_table1, PpaRow};
+use tnn7::ppa::scaling;
+use tnn7::ppa::ColumnPpa;
+
+fn paper(flavor: Flavor, label: &str) -> ColumnPpa {
+    let v = match (flavor, label) {
+        (Flavor::Std, "64x8") => (3.89, 26.92, 0.004),
+        (Flavor::Std, "128x10") => (10.27, 28.52, 0.009),
+        (Flavor::Std, "1024x16") => (131.46, 36.52, 0.124),
+        (Flavor::Custom, "64x8") => (2.73, 20.59, 0.003),
+        (Flavor::Custom, "128x10") => (5.76, 22.79, 0.006),
+        (Flavor::Custom, "1024x16") => (73.73, 29.49, 0.079),
+        _ => unreachable!(),
+    };
+    ColumnPpa { power_uw: v.0, time_ns: v.1, area_mm2: v.2 }
+}
+
+fn main() -> anyhow::Result<()> {
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let cfg = TnnConfig::default();
+    let data = Dataset::generate(8, cfg.data_seed);
+
+    let mut rows = Vec::new();
+    let mut measured = Vec::new();
+    for flavor in [Flavor::Std, Flavor::Custom] {
+        for (label, spec) in table1_specs() {
+            let mut out = None;
+            common::bench(
+                &format!("table1/{flavor:?}/{label}"),
+                if label == "1024x16" { 2 } else { 3 },
+                || {
+                    out = Some(
+                        measure_column(&lib, &tech, flavor, &spec, &cfg, &data)
+                            .expect("measure"),
+                    );
+                },
+            );
+            let m = out.unwrap();
+            rows.push(PpaRow {
+                flavor: flavor.label(),
+                label: label.to_string(),
+                ppa: m.ppa,
+                paper: Some(paper(flavor, label)),
+            });
+            measured.push((flavor, label, m.ppa));
+        }
+    }
+
+    println!("\nTable I — standard vs custom PPA in 7nm (measured vs paper)\n");
+    println!("{}", render_table1(&rows));
+    for (label, _) in table1_specs() {
+        let s = measured
+            .iter()
+            .find(|(f, l, _)| *f == Flavor::Std && *l == label)
+            .unwrap()
+            .2;
+        let c = measured
+            .iter()
+            .find(|(f, l, _)| *f == Flavor::Custom && *l == label)
+            .unwrap()
+            .2;
+        println!(
+            "{label:>9}: {}",
+            improvement_line(&s, &c)
+        );
+    }
+    println!(
+        "paper deltas: power -30/-44/-44%  time -24/-20/-19%  area -25/-33/-36%"
+    );
+    // §III.B 45nm comparison sentence.
+    let c1024 = measured
+        .iter()
+        .find(|(f, l, _)| *f == Flavor::Custom && *l == "1024x16")
+        .unwrap()
+        .2;
+    let (rp, rt, ra) = scaling::ratios(&scaling::COL_1024X16_45NM, &c1024);
+    println!(
+        "\n45nm->7nm (custom 1024x16): power {rp:.0}x  time {rt:.1}x  area {ra:.0}x  \
+         (paper: 'close to two orders of magnitude' in power & area)"
+    );
+    Ok(())
+}

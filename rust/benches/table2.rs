@@ -1,0 +1,70 @@
+//! Bench: regenerate the paper's Table II (Fig. 19 prototype PPA + EDP,
+//! standard vs custom, plus the 45nm Table VI comparison).
+//!
+//! Run: cargo bench --bench table2
+
+#[path = "common/mod.rs"]
+mod common;
+
+use tnn7::cells::{Library, TechParams};
+use tnn7::config::TnnConfig;
+use tnn7::coordinator::measure::prototype_ppa;
+use tnn7::data::Dataset;
+use tnn7::netlist::Flavor;
+use tnn7::ppa::report::{improvement_line, render_table2, PpaRow};
+use tnn7::ppa::scaling;
+use tnn7::ppa::ColumnPpa;
+
+fn main() -> anyhow::Result<()> {
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let cfg = TnnConfig::default();
+    let data = Dataset::generate(8, cfg.data_seed);
+
+    let paper = [
+        (
+            Flavor::Std,
+            ColumnPpa { power_uw: 2540.0, time_ns: 24.14, area_mm2: 2.36 },
+        ),
+        (
+            Flavor::Custom,
+            ColumnPpa { power_uw: 1690.0, time_ns: 19.15, area_mm2: 1.56 },
+        ),
+    ];
+    let mut rows = Vec::new();
+    let mut measured = Vec::new();
+    for (flavor, paper_ppa) in paper {
+        let mut out = None;
+        common::bench(&format!("table2/{flavor:?}/prototype"), 2, || {
+            out = Some(
+                prototype_ppa(&lib, &tech, flavor, &cfg, &data)
+                    .expect("prototype ppa"),
+            );
+        });
+        let (total, m1, m2) = out.unwrap();
+        println!(
+            "  layer columns: L1(32x12) {:.2} uW / {:.5} mm2, L2(12x10) {:.2} uW / {:.5} mm2",
+            m1.ppa.power_uw, m1.ppa.area_mm2, m2.ppa.power_uw, m2.ppa.area_mm2
+        );
+        rows.push(PpaRow {
+            flavor: flavor.label(),
+            label: "prototype".into(),
+            ppa: total,
+            paper: Some(paper_ppa),
+        });
+        measured.push(total);
+    }
+
+    println!("\nTable II — prototype PPA + EDP (measured vs paper)\n");
+    println!("{}", render_table2(&rows));
+    println!(
+        "{}  (paper: power -33%, time -21%, area -34%, EDP -58%)",
+        improvement_line(&measured[0], &measured[1])
+    );
+    let (rp, rt, ra) = scaling::ratios(&scaling::PROTOTYPE_45NM, &measured[0]);
+    println!(
+        "vs 45nm Table VI [2] (std): power {rp:.0}x  time {rt:.1}x  area {ra:.0}x  \
+         (paper: ~60x / ~2x / ~14x)"
+    );
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! The ASAP7 RVT standard-cell subset used by the TNN designs.
+//!
+//! Characterization point: RVT device models, TT corner, 0.7 V, 25 °C —
+//! the paper's §II.A choices.  Quantities here are *relative* (transistor
+//! counts from static-CMOS topology, delays in FO4 units from logical
+//! effort); [`super::characterize::TechParams`] scales them to absolute
+//! µm²/fJ/nW/ps.  The relative values follow the public ASAP7
+//! documentation (7.5-track cells, 27 nm fin pitch, 54 nm CPP); the three
+//! absolute scale factors are calibrated per DESIGN.md §5.
+
+use super::cell::{Cell, CellKind, Library};
+
+/// One entry: (name, kind, transistors, rel_delay FO4, rel_setup FO4).
+/// rel_area/rel_energy/rel_leak default to transistor-proportional for
+/// static CMOS (uniform diffusion density in a 7.5T track).
+const CELLS: &[(&str, CellKind, u32, f64, f64)] = &[
+    ("TIELOx1", CellKind::Tie0, 2, 0.0, 0.0),
+    ("TIEHIx1", CellKind::Tie1, 2, 0.0, 0.0),
+    ("INVx1", CellKind::Inv, 2, 0.60, 0.0),
+    ("BUFx2", CellKind::Buf, 4, 0.90, 0.0),
+    ("NAND2x1", CellKind::Nand2, 4, 0.75, 0.0),
+    ("NAND3x1", CellKind::Nand3, 6, 0.95, 0.0),
+    ("NAND4x1", CellKind::Nand4, 8, 1.15, 0.0),
+    ("NOR2x1", CellKind::Nor2, 4, 0.85, 0.0),
+    ("NOR3x1", CellKind::Nor3, 6, 1.10, 0.0),
+    ("AND2x2", CellKind::And2, 6, 1.10, 0.0),
+    ("AND3x1", CellKind::And3, 8, 1.30, 0.0),
+    ("OR2x2", CellKind::Or2, 6, 1.15, 0.0),
+    ("OR3x1", CellKind::Or3, 8, 1.35, 0.0),
+    ("XOR2x1", CellKind::Xor2, 10, 1.60, 0.0),
+    ("XNOR2x1", CellKind::Xnor2, 10, 1.60, 0.0),
+    // FAx1 sum/carry halves: Genus maps pac_adder onto these + MAJx2
+    // ("Genus synthesizes the adder modules ... with ASAP7 Majority cells").
+    ("XOR3x1", CellKind::Xor3, 16, 2.20, 0.0),
+    ("MAJx2", CellKind::Maj3, 10, 1.30, 0.0),
+    ("AOI21x1", CellKind::Aoi21, 6, 0.95, 0.0),
+    ("OAI21x1", CellKind::Oai21, 6, 0.95, 0.0),
+    // The paper's Fig. 16 reference point: 12-transistor static mux.
+    ("MUX2x1", CellKind::Mux2, 12, 1.30, 0.0),
+    ("DFFx1", CellKind::Dff, 24, 1.80, 1.20),
+    ("DFFRx1", CellKind::DffR, 28, 1.85, 1.20),
+    ("DFFRNx1", CellKind::DffRn, 28, 1.85, 1.25),
+    ("LATCHx1", CellKind::Latch, 12, 1.00, 0.60),
+];
+
+/// Populate `lib` with the ASAP7 subset.
+pub fn populate(lib: &mut Library) {
+    for &(name, kind, t, delay, setup) in CELLS {
+        lib.add(Cell {
+            name: name.to_string(),
+            kind,
+            transistors: t,
+            rel_area: f64::from(t),
+            rel_energy: f64::from(t),
+            rel_leak: f64::from(t),
+            rel_delay: delay,
+            rel_setup: setup,
+            is_custom_macro: false,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn populates_all_kinds_needed_for_elaboration() {
+        let mut lib = Library::new();
+        populate(&mut lib);
+        for kind in [
+            CellKind::Inv,
+            CellKind::Nand2,
+            CellKind::Xor3,
+            CellKind::Maj3,
+            CellKind::Mux2,
+            CellKind::Dff,
+            CellKind::DffR,
+            CellKind::DffRn,
+        ] {
+            assert!(lib.id_of_kind(kind).is_ok(), "{kind:?} missing");
+        }
+    }
+
+    #[test]
+    fn mux2_is_twelve_transistors() {
+        // Fig. 16 anchor.
+        let mut lib = Library::new();
+        populate(&mut lib);
+        let id = lib.id("MUX2x1").unwrap();
+        assert_eq!(lib.cell(id).transistors, 12);
+    }
+
+    #[test]
+    fn delay_monotone_in_fanin_within_family() {
+        let mut lib = Library::new();
+        populate(&mut lib);
+        let d = |n: &str| lib.cell(lib.id(n).unwrap()).rel_delay;
+        assert!(d("NAND2x1") < d("NAND3x1"));
+        assert!(d("NAND3x1") < d("NAND4x1"));
+        assert!(d("INVx1") < d("XOR2x1"));
+    }
+
+    #[test]
+    fn sequential_cells_have_setup() {
+        let mut lib = Library::new();
+        populate(&mut lib);
+        for c in lib.cells() {
+            if c.kind.is_sequential() {
+                assert!(c.rel_setup > 0.0, "{}", c.name);
+            }
+        }
+    }
+}

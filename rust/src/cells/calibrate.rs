@@ -1,0 +1,245 @@
+//! Fit the global technology constants to the paper's Table I
+//! standard-cell rows (DESIGN.md §5).
+//!
+//! The model evaluates each benchmark column in *relative* units
+//! ([`TechParams::unit`]); this module solves small least-squares systems
+//! mapping those relative predictions onto the paper's absolute
+//! standard-cell numbers:
+//!
+//! * area:  `area_paper ≈ k_area · area_rel`           (1 unknown, 3 rows)
+//! * delay: `time_paper ≈ k_fo4  · time_rel`           (1 unknown, 3 rows)
+//! * power: `P_paper ≈ k_e · E_rate_rel + k_l · L_rel` (2 unknowns, 3 rows)
+//!
+//! The custom-macro rows, Table II, EDP and all 45nm ratios are then
+//! *predictions* — `tnn7 calibrate` prints the fit plus residuals, and
+//! EXPERIMENTS.md records them.
+
+use super::characterize::TechParams;
+
+/// One Table-I observation in relative model units + paper absolute units.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    /// Column label for reporting (e.g. "64x8").
+    pub label: &'static str,
+    /// Model: relative placed area (Σ rel_area / utilization).
+    pub rel_area: f64,
+    /// Model: relative dynamic energy per second (toggle-units × f_wave).
+    pub rel_energy_rate: f64,
+    /// Model: relative leakage.
+    pub rel_leak: f64,
+    /// Model: relative computation time (FO4 units per wave).
+    pub rel_time: f64,
+    /// Paper: power in µW.
+    pub paper_power_uw: f64,
+    /// Paper: computation time in ns.
+    pub paper_time_ns: f64,
+    /// Paper: area in mm².
+    pub paper_area_mm2: f64,
+}
+
+/// Result of the calibration fit.
+#[derive(Debug, Clone, Copy)]
+pub struct Fit {
+    pub tech: TechParams,
+    /// RMS relative residual per metric (area, time, power).
+    pub resid_area: f64,
+    pub resid_time: f64,
+    pub resid_power: f64,
+}
+
+/// One-parameter least squares through the origin: y ≈ k·x.
+fn fit1(xs: &[f64], ys: &[f64]) -> f64 {
+    let num: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let den: f64 = xs.iter().map(|x| x * x).sum();
+    num / den
+}
+
+/// Two-parameter least squares: y ≈ a·u + b·v (normal equations).
+fn fit2(us: &[f64], vs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let (mut suu, mut svv, mut suv, mut suy, mut svy) =
+        (0.0, 0.0, 0.0, 0.0, 0.0);
+    for i in 0..ys.len() {
+        suu += us[i] * us[i];
+        svv += vs[i] * vs[i];
+        suv += us[i] * vs[i];
+        suy += us[i] * ys[i];
+        svy += vs[i] * ys[i];
+    }
+    let det = suu * svv - suv * suv;
+    if det.abs() < 1e-12 {
+        // Degenerate: fall back to energy-only fit.
+        return (suy / suu, 0.0);
+    }
+    let a = (svv * suy - suv * svy) / det;
+    let b = (suu * svy - suv * suy) / det;
+    (a, b)
+}
+
+fn rms_rel_resid(pred: &[f64], obs: &[f64]) -> f64 {
+    let n = pred.len() as f64;
+    (pred
+        .iter()
+        .zip(obs)
+        .map(|(p, o)| ((p - o) / o).powi(2))
+        .sum::<f64>()
+        / n)
+        .sqrt()
+}
+
+/// Solve the three fits (see module docs).
+///
+/// Units: the returned `TechParams` convert relative model units into
+/// µm² / fJ / nW / ps, consistent with power in µW = (fJ·rate + nW)·1e-3
+/// handled by the caller's unit bookkeeping in [`crate::ppa::power`].
+pub fn fit(observations: &[Observation]) -> Fit {
+    let areas_rel: Vec<f64> = observations.iter().map(|o| o.rel_area).collect();
+    let areas_um2: Vec<f64> = observations
+        .iter()
+        .map(|o| o.paper_area_mm2 * 1e6)
+        .collect();
+    let k_area = fit1(&areas_rel, &areas_um2);
+
+    let times_rel: Vec<f64> = observations.iter().map(|o| o.rel_time).collect();
+    let times_ps: Vec<f64> = observations
+        .iter()
+        .map(|o| o.paper_time_ns * 1e3)
+        .collect();
+    let k_fo4 = fit1(&times_rel, &times_ps);
+
+    // Power: µW = k_e·(rel energy rate) + k_l·(rel leak), with rel energy
+    // rate already in toggle-units/s so k_e carries fJ (1e-15 W·s) → µW
+    // bookkeeping; we fold the 1e-9 factors into the constants and recover
+    // the physical fJ/nW numbers below.
+    // rel_energy_rate was computed against a clock measured in FO4 units;
+    // the physical clock is k_fo4 times longer, so the physical energy
+    // rate is 1/k_fo4 of the relative one.  Rescale BEFORE fitting so the
+    // recovered fJ constant is valid at the calibrated clock.
+    let e_rate: Vec<f64> = observations
+        .iter()
+        .map(|o| o.rel_energy_rate / k_fo4)
+        .collect();
+    let leaks: Vec<f64> = observations.iter().map(|o| o.rel_leak).collect();
+    let pows: Vec<f64> = observations
+        .iter()
+        .map(|o| o.paper_power_uw)
+        .collect();
+    let (mut k_e, mut k_l) = fit2(&e_rate, &leaks, &pows);
+    if k_e <= 0.0 || k_l <= 0.0 {
+        // The two regressors are nearly collinear on the three anchors
+        // (paper power is ~linear in column size), so the unconstrained
+        // fit can go negative.  Fall back to a physically-anchored split:
+        // fix the dynamic share of total power at the largest anchor to
+        // DYN_SHARE and derive both constants.  0.35 minimizes the rms
+        // residual over the three anchors while keeping a real
+        // activity-dependent term (EXPERIMENTS.md discusses the
+        // collinearity of the anchors).
+        const DYN_SHARE: f64 = 0.35;
+        let i_max = pows
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        k_e = DYN_SHARE * pows[i_max] / e_rate[i_max];
+        k_l = (1.0 - DYN_SHARE) * pows[i_max] / leaks[i_max];
+    }
+    // k_e: µW per (toggle-unit/s) = 1e-6 W·s = 1e9 fJ → fJ = k_e·1e9.
+    // k_l: µW per leak-unit = 1e3 nW.
+    let energy_per_unit_fj = (k_e * 1e9).max(0.0);
+    let leak_per_unit_nw = (k_l * 1e3).max(0.0);
+
+    let tech = TechParams {
+        area_per_unit_um2: k_area,
+        energy_per_unit_fj,
+        leak_per_unit_nw,
+        fo4_ps: k_fo4,
+    };
+
+    let pred_area: Vec<f64> =
+        areas_rel.iter().map(|a| a * k_area).collect();
+    let pred_time: Vec<f64> = times_rel.iter().map(|t| t * k_fo4).collect();
+    let pred_pow: Vec<f64> = (0..pows.len())
+        .map(|i| k_e.max(0.0) * e_rate[i] + k_l.max(0.0) * leaks[i])
+        .collect();
+
+    Fit {
+        tech,
+        resid_area: rms_rel_resid(&pred_area, &areas_um2),
+        resid_time: rms_rel_resid(&pred_time, &times_ps),
+        resid_power: rms_rel_resid(&pred_pow, &pows),
+    }
+}
+
+/// The paper's Table I standard-cell anchor rows (power µW, time ns,
+/// area mm²) — the ONLY numbers the model is fitted to.
+pub const TABLE1_STD_ANCHORS: [(&str, f64, f64, f64); 3] = [
+    ("64x8", 3.89, 26.92, 0.004),
+    ("128x10", 10.27, 28.52, 0.009),
+    ("1024x16", 131.46, 36.52, 0.124),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit1_exact_on_proportional_data() {
+        let k = fit1(&[1.0, 2.0, 3.0], &[2.0, 4.0, 6.0]);
+        assert!((k - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit2_recovers_plane() {
+        // y = 3u + 5v
+        let us = [1.0, 2.0, 0.5, 4.0];
+        let vs = [1.0, 0.5, 2.0, 1.0];
+        let ys: Vec<f64> =
+            (0..4).map(|i| 3.0 * us[i] + 5.0 * vs[i]).collect();
+        let (a, b) = fit2(&us, &vs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_on_synthetic_observations_is_exact() {
+        // Build observations that exactly obey the model; residuals ~ 0.
+        let tech = TechParams {
+            area_per_unit_um2: 0.01,
+            energy_per_unit_fj: 0.5,
+            leak_per_unit_nw: 0.02,
+            fo4_ps: 12.0,
+        };
+        let obs: Vec<Observation> = [(1e6, 2e10, 1e5, 2000.0),
+            (2.3e6, 5e10, 2.2e5, 2200.0),
+            (3e7, 6e11, 3e6, 2800.0)]
+            .iter()
+            .enumerate()
+            .map(|(i, &(a, er, l, t))| Observation {
+                label: ["a", "b", "c"][i],
+                rel_area: a,
+                rel_energy_rate: er,
+                rel_leak: l,
+                rel_time: t,
+                paper_power_uw: (tech.energy_per_unit_fj * 1e-9)
+                    * (er / tech.fo4_ps)
+                    + (tech.leak_per_unit_nw * 1e-3) * l,
+                paper_time_ns: tech.fo4_ps * t * 1e-3,
+                paper_area_mm2: tech.area_per_unit_um2 * a * 1e-6,
+            })
+            .collect();
+        let fit = fit(&obs);
+        assert!(fit.resid_area < 1e-9);
+        assert!(fit.resid_time < 1e-9);
+        assert!(fit.resid_power < 1e-9);
+        assert!((fit.tech.area_per_unit_um2 - 0.01).abs() < 1e-9);
+        assert!((fit.tech.fo4_ps - 12.0).abs() < 1e-9);
+        assert!((fit.tech.energy_per_unit_fj - 0.5).abs() < 1e-6);
+        assert!((fit.tech.leak_per_unit_nw - 0.02).abs() < 1e-6);
+    }
+
+    #[test]
+    fn anchors_match_paper_table1() {
+        assert_eq!(TABLE1_STD_ANCHORS[2].1, 131.46);
+        assert_eq!(TABLE1_STD_ANCHORS[0].3, 0.004);
+    }
+}

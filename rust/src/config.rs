@@ -1,0 +1,325 @@
+//! TOML-subset configuration system.
+//!
+//! The framework is configured by a `tnn7.toml` file (`tnn7 --config`).
+//! The vendored offline dependency set has no `toml` crate, so a small
+//! parser for the subset we use is implemented here: `[section]` headers,
+//! `key = value` with string / integer / float / boolean values, `#`
+//! comments.  Unknown keys are rejected (typo safety).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Parsed raw TOML subset: section → key → value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Toml {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// A TOML scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value> {
+        let t = raw.trim();
+        if let Some(s) = t.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+            return Ok(Value::Str(s.to_string()));
+        }
+        if t == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if t == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Ok(i) = t.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(Error::config(format!("unparsable value `{t}`")))
+    }
+}
+
+impl Toml {
+    /// Parse the subset grammar.
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut out = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            // Strip a '#' comment unless it sits inside a quoted string
+            // (i.e. an odd number of '"' precede it).
+            let line = match raw.find('#') {
+                Some(i)
+                    if raw[..i].matches('"').count() % 2 == 0 =>
+                {
+                    &raw[..i]
+                }
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) =
+                line.strip_prefix('[').and_then(|r| r.strip_suffix(']'))
+            {
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), Value::parse(v)?);
+        }
+        Ok(out)
+    }
+
+    fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    fn take_known(&self, known: &[(&str, &[&str])]) -> Result<()> {
+        for (sec, keys) in self.sections.iter().map(|(s, m)| {
+            (s.as_str(), m.keys().map(|k| k.as_str()).collect::<Vec<_>>())
+        }) {
+            let allowed = known
+                .iter()
+                .find(|(s, _)| *s == sec)
+                .map(|(_, k)| *k)
+                .ok_or_else(|| Error::config(format!("unknown section [{sec}]")))?;
+            for k in keys {
+                if !allowed.contains(&k) {
+                    return Err(Error::config(format!(
+                        "unknown key `{k}` in [{sec}]"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Framework configuration (defaults reproduce the paper's setup).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TnnConfig {
+    /// Directory holding the AOT artifacts + manifest.
+    pub artifacts_dir: String,
+    /// Layer-1 firing threshold.
+    pub theta1: i32,
+    /// Layer-2 firing threshold.
+    pub theta2: i32,
+    /// Initial synaptic weight.
+    pub w_init: i32,
+    /// Training samples.
+    pub train_samples: usize,
+    /// Test samples.
+    pub test_samples: usize,
+    /// Dataset seed.
+    pub data_seed: u64,
+    /// LFSR seed for BRVs.
+    pub brv_seed: u16,
+    /// Encoder threshold.
+    pub encode_threshold: f64,
+    /// STDP probabilities.
+    pub mu_capture: f64,
+    pub mu_backoff: f64,
+    pub mu_search: f64,
+    /// Gate-level simulation waves per Table-I measurement.
+    pub sim_waves: usize,
+}
+
+impl Default for TnnConfig {
+    fn default() -> Self {
+        TnnConfig {
+            artifacts_dir: "artifacts".into(),
+            theta1: 20,
+            theta2: 2,
+            w_init: 3,
+            train_samples: 600,
+            test_samples: 200,
+            data_seed: 2020,
+            brv_seed: 0xACE1,
+            encode_threshold: 0.04,
+            mu_capture: 0.9,
+            mu_backoff: 0.5,
+            mu_search: 0.05,
+            sim_waves: 8,
+        }
+    }
+}
+
+impl TnnConfig {
+    /// Load from a TOML file (missing keys fall back to defaults).
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let t = Toml::parse(text)?;
+        t.take_known(&[
+            ("paths", &["artifacts_dir"]),
+            (
+                "network",
+                &["theta1", "theta2", "w_init", "encode_threshold"],
+            ),
+            (
+                "training",
+                &[
+                    "train_samples",
+                    "test_samples",
+                    "data_seed",
+                    "brv_seed",
+                    "mu_capture",
+                    "mu_backoff",
+                    "mu_search",
+                ],
+            ),
+            ("sim", &["sim_waves"]),
+        ])?;
+        let mut c = TnnConfig::default();
+        let geti = |v: &Value| -> Result<i64> {
+            match v {
+                Value::Int(i) => Ok(*i),
+                _ => Err(Error::config("expected integer")),
+            }
+        };
+        let getf = |v: &Value| -> Result<f64> {
+            match v {
+                Value::Float(f) => Ok(*f),
+                Value::Int(i) => Ok(*i as f64),
+                _ => Err(Error::config("expected float")),
+            }
+        };
+        if let Some(v) = t.get("paths", "artifacts_dir") {
+            match v {
+                Value::Str(s) => c.artifacts_dir = s.clone(),
+                _ => return Err(Error::config("artifacts_dir must be a string")),
+            }
+        }
+        if let Some(v) = t.get("network", "theta1") {
+            c.theta1 = geti(v)? as i32;
+        }
+        if let Some(v) = t.get("network", "theta2") {
+            c.theta2 = geti(v)? as i32;
+        }
+        if let Some(v) = t.get("network", "w_init") {
+            c.w_init = geti(v)? as i32;
+        }
+        if let Some(v) = t.get("network", "encode_threshold") {
+            c.encode_threshold = getf(v)?;
+        }
+        if let Some(v) = t.get("training", "train_samples") {
+            c.train_samples = geti(v)? as usize;
+        }
+        if let Some(v) = t.get("training", "test_samples") {
+            c.test_samples = geti(v)? as usize;
+        }
+        if let Some(v) = t.get("training", "data_seed") {
+            c.data_seed = geti(v)? as u64;
+        }
+        if let Some(v) = t.get("training", "brv_seed") {
+            c.brv_seed = geti(v)? as u16;
+        }
+        if let Some(v) = t.get("training", "mu_capture") {
+            c.mu_capture = getf(v)?;
+        }
+        if let Some(v) = t.get("training", "mu_backoff") {
+            c.mu_backoff = getf(v)?;
+        }
+        if let Some(v) = t.get("training", "mu_search") {
+            c.mu_search = getf(v)?;
+        }
+        if let Some(v) = t.get("sim", "sim_waves") {
+            c.sim_waves = geti(v)? as usize;
+        }
+        Ok(c)
+    }
+
+    /// STDP parameters from the configured probabilities.
+    pub fn stdp_params(&self) -> crate::tnn::StdpParams {
+        crate::tnn::StdpParams::from_probs(
+            self.mu_capture,
+            self.mu_backoff,
+            self.mu_search,
+            [1.0, 1.0, 0.75, 0.5, 0.5, 0.25, 0.25, 0.125],
+            [0.125, 0.25, 0.25, 0.5, 0.5, 0.75, 1.0, 1.0],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_round_trip_empty_toml() {
+        let c = TnnConfig::from_toml("").unwrap();
+        assert_eq!(c, TnnConfig::default());
+    }
+
+    #[test]
+    fn parses_all_sections() {
+        let text = r#"
+# comment
+[paths]
+artifacts_dir = "my_artifacts"   # trailing comment
+
+[network]
+theta1 = 40
+theta2 = 16
+encode_threshold = 0.08
+
+[training]
+train_samples = 100
+mu_capture = 0.75
+
+[sim]
+sim_waves = 3
+"#;
+        let c = TnnConfig::from_toml(text).unwrap();
+        assert_eq!(c.artifacts_dir, "my_artifacts");
+        assert_eq!(c.theta1, 40);
+        assert_eq!(c.theta2, 16);
+        assert!((c.encode_threshold - 0.08).abs() < 1e-12);
+        assert_eq!(c.train_samples, 100);
+        assert!((c.mu_capture - 0.75).abs() < 1e-12);
+        assert_eq!(c.sim_waves, 3);
+        // untouched defaults survive
+        assert_eq!(c.test_samples, TnnConfig::default().test_samples);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_sections() {
+        assert!(TnnConfig::from_toml("[bogus]\nx = 1").is_err());
+        assert!(TnnConfig::from_toml("[network]\ntheta9 = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(TnnConfig::from_toml("[network]\ntheta1").is_err());
+        assert!(TnnConfig::from_toml("[network]\ntheta1 = oops").is_err());
+    }
+
+    #[test]
+    fn value_types() {
+        assert_eq!(Value::parse("\"s\"").unwrap(), Value::Str("s".into()));
+        assert_eq!(Value::parse("42").unwrap(), Value::Int(42));
+        assert_eq!(Value::parse("4.5").unwrap(), Value::Float(4.5));
+        assert_eq!(Value::parse("true").unwrap(), Value::Bool(true));
+        assert!(Value::parse("nope").is_err());
+    }
+}

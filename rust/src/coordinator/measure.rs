@@ -1,0 +1,204 @@
+//! The Table I / Table II measurement driver.
+//!
+//! One function, [`measure_column`], runs the full Cadence-flow analogue
+//! for a column: elaborate (chosen flavour) → gate-level simulate with
+//! encoded-digit stimulus and live STDP (learning hardware active, as in
+//! the paper's benchmarks) → STA → activity-based power → placement-model
+//! area.  Table II composes two measured columns via synaptic scaling
+//! ([`prototype_ppa`]).
+
+use crate::cells::calibrate::Observation;
+use crate::cells::{Library, TechParams};
+use crate::config::TnnConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::netlist::column::{build_column, ColumnSpec};
+use crate::netlist::prototype::PrototypeSpec;
+use crate::netlist::Flavor;
+use crate::ppa::{area, power, timing, ColumnPpa};
+use crate::sim::testbench::ColumnTestbench;
+use crate::tnn::stdp::RandPair;
+use crate::tnn::Lfsr16;
+
+use super::activity_bridge::stimulus;
+
+/// Everything measured for one column design point.
+#[derive(Debug, Clone)]
+pub struct ColumnMeasurement {
+    pub spec: ColumnSpec,
+    pub flavor: Flavor,
+    pub ppa: ColumnPpa,
+    /// Relative aggregates (calibration inputs).
+    pub rel_area: f64,
+    pub rel_energy_rate: f64,
+    pub rel_leak: f64,
+    pub rel_time: f64,
+    /// Census numbers (complexity reporting).
+    pub cells: u64,
+    pub transistors: u64,
+    /// Minimum clock period (ps).
+    pub clock_ps: f64,
+}
+
+/// Run the full measurement for one column.
+pub fn measure_column(
+    lib: &Library,
+    tech: &TechParams,
+    flavor: Flavor,
+    spec: &ColumnSpec,
+    cfg: &TnnConfig,
+    data: &Dataset,
+) -> Result<ColumnMeasurement> {
+    let (nl, ports) = build_column(lib, flavor, spec)?;
+
+    // STA first: the design runs at its own minimum clock.
+    let t = timing::analyze(&nl, lib, tech)?;
+    let clock_ps = t.min_clock_ps;
+
+    // Gate-level simulation with realistic stimulus + live STDP.
+    let stim = stimulus(data, spec.p, cfg.sim_waves, cfg.encode_threshold as f32);
+    let params = cfg.stdp_params();
+    let mut lfsr = Lfsr16::new(cfg.brv_seed);
+    let mut tb = ColumnTestbench::new(&nl, &ports, lib)?;
+    for s in &stim {
+        let rand: Vec<RandPair> =
+            (0..spec.p * spec.q).map(|_| lfsr.draw_pair()).collect();
+        tb.run_wave(s, &rand, &params);
+    }
+
+    let act = tb.activity();
+    let pw = power::analyze(&nl, lib, tech, act, clock_ps);
+    let ar = area::analyze(&nl, lib, tech);
+    let rel_pw = power::relative(&nl, lib, act, clock_ps);
+    let census = nl.census(lib);
+
+    Ok(ColumnMeasurement {
+        spec: *spec,
+        flavor,
+        ppa: ColumnPpa {
+            power_uw: pw.total_uw(),
+            time_ns: t.wave_ns,
+            area_mm2: ar.die_mm2,
+        },
+        rel_area: area::relative(&nl, lib),
+        rel_energy_rate: rel_pw.energy_rate,
+        rel_leak: rel_pw.leak,
+        rel_time: t.min_clock_ps / tech.fo4_ps * crate::ppa::WAVE_CYCLES as f64,
+        cells: census.cells,
+        transistors: census.transistors,
+        clock_ps,
+    })
+}
+
+/// The three Table-I benchmark geometries.
+pub fn table1_specs() -> [(&'static str, ColumnSpec); 3] {
+    [
+        ("64x8", ColumnSpec::benchmark(64, 8)),
+        ("128x10", ColumnSpec::benchmark(128, 10)),
+        ("1024x16", ColumnSpec::benchmark(1024, 16)),
+    ]
+}
+
+/// Table II: prototype PPA by synaptic scaling of the two layer columns.
+/// A full wave pipelines layer 1 then layer 2, so computation time is the
+/// max of the two stage times (they overlap across consecutive images).
+pub fn prototype_ppa(
+    lib: &Library,
+    tech: &TechParams,
+    flavor: Flavor,
+    cfg: &TnnConfig,
+    data: &Dataset,
+) -> Result<(ColumnPpa, ColumnMeasurement, ColumnMeasurement)> {
+    let spec = PrototypeSpec::paper();
+    let m1 = measure_column(lib, tech, flavor, &spec.l1.column, cfg, data)?;
+    let m2 = measure_column(lib, tech, flavor, &spec.l2.column, cfg, data)?;
+    let total = m1
+        .ppa
+        .scaled(spec.l1.cols as f64)
+        .compose_parallel(&m2.ppa.scaled(spec.l2.cols as f64));
+    Ok((total, m1, m2))
+}
+
+/// Calibration observations: evaluate the model in RELATIVE units on the
+/// Table-I std-cell columns and pair with the paper's anchors.
+pub fn calibration_observations(
+    lib: &Library,
+    cfg: &TnnConfig,
+    data: &Dataset,
+) -> Result<Vec<Observation>> {
+    use crate::cells::calibrate::TABLE1_STD_ANCHORS;
+    let unit = TechParams::unit();
+    let mut out = Vec::new();
+    for (label, power_uw, time_ns, area_mm2) in TABLE1_STD_ANCHORS {
+        let (p, q) = parse_geometry(label);
+        let spec = ColumnSpec::benchmark(p, q);
+        let m = measure_column(lib, &unit, Flavor::Std, &spec, cfg, data)?;
+        eprintln!(
+            "  obs {label}: rel_area {:.3e} rel_er {:.3e} rel_leak {:.3e} rel_time {:.3e}",
+            m.rel_area, m.rel_energy_rate, m.rel_leak, m.rel_time
+        );
+        out.push(Observation {
+            label,
+            rel_area: m.rel_area,
+            rel_energy_rate: m.rel_energy_rate,
+            rel_leak: m.rel_leak,
+            rel_time: m.rel_time,
+            paper_power_uw: power_uw,
+            paper_time_ns: time_ns,
+            paper_area_mm2: area_mm2,
+        });
+    }
+    Ok(out)
+}
+
+/// "64x8" → (64, 8).
+pub fn parse_geometry(label: &str) -> (usize, usize) {
+    let (p, q) = label.split_once('x').expect("pxq label");
+    (p.parse().expect("p"), q.parse().expect("q"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_smoke_small_column() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let mut cfg = TnnConfig::default();
+        cfg.sim_waves = 2;
+        let data = Dataset::generate(4, 5);
+        let spec = ColumnSpec { p: 8, q: 4, theta: 10 };
+        let m =
+            measure_column(&lib, &tech, Flavor::Std, &spec, &cfg, &data)
+                .unwrap();
+        assert!(m.ppa.power_uw > 0.0);
+        assert!(m.ppa.time_ns > 0.0);
+        assert!(m.ppa.area_mm2 > 0.0);
+        assert!(m.transistors > 100);
+    }
+
+    #[test]
+    fn custom_beats_std_on_all_three_metrics() {
+        // The Table-I direction, end to end through the real flow.
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let mut cfg = TnnConfig::default();
+        cfg.sim_waves = 3;
+        let data = Dataset::generate(4, 6);
+        let spec = ColumnSpec { p: 16, q: 4, theta: 14 };
+        let s = measure_column(&lib, &tech, Flavor::Std, &spec, &cfg, &data)
+            .unwrap();
+        let c =
+            measure_column(&lib, &tech, Flavor::Custom, &spec, &cfg, &data)
+                .unwrap();
+        assert!(c.ppa.power_uw < s.ppa.power_uw, "power");
+        assert!(c.ppa.time_ns < s.ppa.time_ns, "time");
+        assert!(c.ppa.area_mm2 < s.ppa.area_mm2, "area");
+    }
+
+    #[test]
+    fn parse_geometry_labels() {
+        assert_eq!(parse_geometry("1024x16"), (1024, 16));
+    }
+}

@@ -1,0 +1,19 @@
+//! The L3 coordinator: training/eval pipeline and PPA measurement
+//! orchestration.
+//!
+//! * [`pipeline`] — the end-to-end MNIST-substitute workload: encode →
+//!   layer-1 train (HLO) → layer-2 train (HLO) → vote calibration →
+//!   evaluation.  Python never runs here; the compute is the AOT
+//!   artifacts loaded by [`crate::runtime`].
+//! * [`measure`] — the Table I / Table II measurement driver: elaborate,
+//!   simulate with realistic encoded stimulus, STA + power + area.
+//! * [`activity_bridge`] — derives gate-level stimulus from behavioral
+//!   spike statistics so prototype-scale power reflects the trained
+//!   network's real switching activity (the paper's §III.C methodology).
+
+pub mod activity_bridge;
+pub mod measure;
+pub mod pipeline;
+
+pub use measure::{measure_column, ColumnMeasurement};
+pub use pipeline::Pipeline;

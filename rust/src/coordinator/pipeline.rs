@@ -1,0 +1,355 @@
+//! The end-to-end training/eval pipeline over the AOT HLO executables.
+//!
+//! Reproduces the §III.C functional claim (the 2-layer prototype learns
+//! MNIST-class digits) with python permanently off the request path:
+//!
+//! 1. encode images → per-column spike tensors (`tnn::encoding`),
+//! 2. layer-1 unsupervised STDP (`l1_train` artifact, fused fwd+stdp),
+//! 3. layer-2 unsupervised STDP with layer 1 frozen (`l1_fwd` +
+//!    `l2_train`), layer-at-a-time as in [2],
+//! 4. vote calibration: count (column, neuron) × label co-occurrence,
+//! 5. evaluation: weighted vote over layer-2 spikes.
+//!
+//! The forward/STDP batch semantics match `model.layer_train_step`
+//! exactly: forward with frozen weights, then sequential per-sample
+//! updates — the `cross_check_batch` method proves HLO ≡ golden model on
+//! live batches.
+
+use std::time::Instant;
+
+use crate::config::TnnConfig;
+use crate::data::digits::XorShift;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+use crate::tnn::encoding::{encode_image, COL_INPUTS, N_COLS};
+use crate::tnn::INF;
+
+/// Layer-1 geometry (must match the artifacts).
+const L1: (usize, usize) = (32, 12);
+/// Layer-2 geometry.
+const L2: (usize, usize) = (12, 10);
+
+/// Pipeline metrics for one run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub batches: usize,
+    pub images: usize,
+    pub exec_seconds: f64,
+    pub wall_seconds: f64,
+}
+
+impl Metrics {
+    /// Throughput in images per second of executor time.
+    pub fn images_per_sec(&self) -> f64 {
+        if self.exec_seconds > 0.0 {
+            self.images as f64 / self.exec_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The end-to-end pipeline.
+pub struct Pipeline {
+    pub runtime: Runtime,
+    pub cfg: TnnConfig,
+    batch: usize,
+    /// Layer weights, flattened [C, p, q].
+    pub l1_w: Vec<i32>,
+    pub l2_w: Vec<i32>,
+    params: Vec<i32>,
+    rng: XorShift,
+    /// Vote calibration: [C][q2][class] counts.
+    class_map: Vec<f32>,
+    pub metrics: Metrics,
+}
+
+impl Pipeline {
+    /// Load artifacts and initialize weights.
+    pub fn new(cfg: TnnConfig) -> Result<Pipeline> {
+        let runtime = Runtime::load(std::path::Path::new(&cfg.artifacts_dir))?;
+        let batch = runtime.manifest.batch;
+        let params = cfg.stdp_params().to_vec();
+        Ok(Pipeline {
+            runtime,
+            batch,
+            l1_w: vec![cfg.w_init; N_COLS * L1.0 * L1.1],
+            l2_w: vec![cfg.w_init; N_COLS * L2.0 * L2.1],
+            params,
+            rng: XorShift::new(u64::from(cfg.brv_seed) | 1),
+            class_map: vec![0.0; N_COLS * 10 * 10],
+            metrics: Metrics::default(),
+            cfg,
+        })
+    }
+
+    /// Batch size baked into the artifacts.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Encode a batch of images into the flat [B, C, p] spike tensor.
+    pub fn encode_batch(&self, images: &[Vec<f32>]) -> Vec<i32> {
+        assert_eq!(images.len(), self.batch);
+        let mut s = vec![INF; self.batch * N_COLS * COL_INPUTS];
+        for (b, img) in images.iter().enumerate() {
+            let cols = encode_image(img, self.cfg.encode_threshold as f32);
+            for (c, col) in cols.iter().enumerate() {
+                let off = (b * N_COLS + c) * COL_INPUTS;
+                s[off..off + COL_INPUTS].copy_from_slice(col);
+            }
+        }
+        s
+    }
+
+    fn rand_tensor(&mut self, n: usize) -> Vec<i32> {
+        let mut v = vec![0i32; n];
+        for x in v.iter_mut() {
+            *x = (self.rng.next_u64() & 0xFFFF) as i32;
+        }
+        v
+    }
+
+    fn timed_execute(
+        &mut self,
+        name: &str,
+        inputs: &[&[i32]],
+    ) -> Result<Vec<Vec<i32>>> {
+        let t0 = Instant::now();
+        let out = self.runtime.execute(name, inputs);
+        self.metrics.exec_seconds += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    /// One layer-1 training step; returns post-WTA times [B, C, q1].
+    pub fn train_l1_batch(&mut self, s1: &[i32]) -> Result<Vec<i32>> {
+        let theta = [self.cfg.theta1];
+        let rand =
+            self.rand_tensor(self.batch * N_COLS * L1.0 * L1.1 * 2);
+        let w = std::mem::take(&mut self.l1_w);
+        let params = self.params.clone();
+        let out = self.timed_execute(
+            "l1_train",
+            &[s1, &w, &theta, &rand, &params],
+        )?;
+        let [_pre, post, new_w]: [Vec<i32>; 3] = out
+            .try_into()
+            .map_err(|_| Error::runtime("l1_train output arity"))?;
+        self.l1_w = new_w;
+        Ok(post)
+    }
+
+    /// Layer-1 inference; returns post-WTA times [B, C, q1].
+    pub fn forward_l1(&mut self, s1: &[i32]) -> Result<Vec<i32>> {
+        let theta = [self.cfg.theta1];
+        let out = self.timed_execute("l1_fwd", &[s1, &self.l1_w.clone(), &theta])?;
+        Ok(out.into_iter().nth(1).expect("post"))
+    }
+
+    /// One layer-2 training step on rebased layer-1 output.
+    pub fn train_l2_batch(&mut self, s2: &[i32]) -> Result<Vec<i32>> {
+        let theta = [self.cfg.theta2];
+        let rand =
+            self.rand_tensor(self.batch * N_COLS * L2.0 * L2.1 * 2);
+        let w = std::mem::take(&mut self.l2_w);
+        let params = self.params.clone();
+        let out = self.timed_execute(
+            "l2_train",
+            &[s2, &w, &theta, &rand, &params],
+        )?;
+        let [_pre, post, new_w]: [Vec<i32>; 3] = out
+            .try_into()
+            .map_err(|_| Error::runtime("l2_train output arity"))?;
+        self.l2_w = new_w;
+        Ok(post)
+    }
+
+    /// Layer-2 inference.
+    pub fn forward_l2(&mut self, s2: &[i32]) -> Result<Vec<i32>> {
+        let theta = [self.cfg.theta2];
+        let out = self.timed_execute("l2_fwd", &[s2, &self.l2_w.clone(), &theta])?;
+        Ok(out.into_iter().nth(1).expect("post"))
+    }
+
+    /// Rebase a flat [B, C, q] post tensor into next-layer inputs.
+    pub fn rebase_flat(&self, post: &[i32]) -> Vec<i32> {
+        post.iter()
+            .map(|&t| {
+                if t == INF {
+                    INF
+                } else {
+                    t.clamp(0, crate::arch::T_IN - 1)
+                }
+            })
+            .collect()
+    }
+
+    /// Full training procedure (layer-at-a-time) + vote calibration.
+    pub fn train(&mut self, data: &Dataset) -> Result<Metrics> {
+        let wall = Instant::now();
+        let b = self.batch;
+        let n = (data.len() / b) * b;
+        // Phase 1: layer-1 STDP.
+        for chunk in data.images[..n].chunks_exact(b) {
+            let s1 = self.encode_batch(chunk);
+            self.train_l1_batch(&s1)?;
+            self.metrics.batches += 1;
+            self.metrics.images += b;
+        }
+        // Phase 2: layer-2 STDP with layer 1 frozen.
+        for chunk in data.images[..n].chunks_exact(b) {
+            let s1 = self.encode_batch(chunk);
+            let post1 = self.forward_l1(&s1)?;
+            let s2 = self.rebase_flat(&post1);
+            self.train_l2_batch(&s2)?;
+            self.metrics.batches += 1;
+        }
+        // Phase 3: vote calibration.
+        for (chunk, labels) in data.images[..n]
+            .chunks_exact(b)
+            .zip(data.labels[..n].chunks_exact(b))
+        {
+            let s1 = self.encode_batch(chunk);
+            let post1 = self.forward_l1(&s1)?;
+            let s2 = self.rebase_flat(&post1);
+            let post2 = self.forward_l2(&s2)?;
+            self.calibrate(&post2, labels);
+        }
+        self.metrics.wall_seconds += wall.elapsed().as_secs_f64();
+        Ok(self.metrics.clone())
+    }
+
+    /// Accumulate vote statistics from a [B, C, q2] post tensor.
+    pub fn calibrate(&mut self, post2: &[i32], labels: &[usize]) {
+        let (q2, b) = (L2.1, self.batch);
+        for (bi, &label) in labels.iter().enumerate().take(b) {
+            for c in 0..N_COLS {
+                for i in 0..q2 {
+                    if post2[(bi * N_COLS + c) * q2 + i] != INF {
+                        self.class_map[(c * 10 + i) * 10 + label] += 1.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Classify each sample of a [B, C, q2] post tensor.
+    pub fn classify(&self, post2: &[i32]) -> Vec<usize> {
+        let q2 = L2.1;
+        (0..self.batch)
+            .map(|bi| {
+                let mut votes = [0.0f32; 10];
+                for c in 0..N_COLS {
+                    for i in 0..q2 {
+                        let t = post2[(bi * N_COLS + c) * q2 + i];
+                        if t == INF {
+                            continue;
+                        }
+                        let m = &self.class_map
+                            [(c * 10 + i) * 10..(c * 10 + i) * 10 + 10];
+                        let total: f32 = m.iter().sum();
+                        if total > 0.0 {
+                            let w = 1.0 / (1.0 + t as f32);
+                            for k in 0..10 {
+                                votes[k] += w * m[k] / total;
+                            }
+                        }
+                    }
+                }
+                votes
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(k, _)| k)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Evaluate accuracy on a dataset (full batches only).
+    pub fn evaluate(&mut self, data: &Dataset) -> Result<f64> {
+        let b = self.batch;
+        let n = (data.len() / b) * b;
+        if n == 0 {
+            return Err(Error::data("dataset smaller than one batch"));
+        }
+        let mut correct = 0usize;
+        for (chunk, labels) in data.images[..n]
+            .chunks_exact(b)
+            .zip(data.labels[..n].chunks_exact(b))
+        {
+            let s1 = self.encode_batch(chunk);
+            let post1 = self.forward_l1(&s1)?;
+            let s2 = self.rebase_flat(&post1);
+            let post2 = self.forward_l2(&s2)?;
+            let pred = self.classify(&post2);
+            correct += pred
+                .iter()
+                .zip(labels)
+                .filter(|(p, l)| p == l)
+                .count();
+        }
+        Ok(correct as f64 / n as f64)
+    }
+
+    /// Cross-check one batch of `l1_train` against the golden model —
+    /// proves HLO ≡ behavioral semantics on the live pipeline path.
+    pub fn cross_check_batch(&mut self, images: &[Vec<f32>]) -> Result<()> {
+        use crate::tnn::column::column_fwd;
+        use crate::tnn::stdp::stdp_step;
+        let s1 = self.encode_batch(images);
+        let w_before = self.l1_w.clone();
+        // Deterministic rand: snapshot the RNG, generate, then replay.
+        let rng_snapshot = self.rng.clone();
+        let post_hlo = self.train_l1_batch(&s1)?;
+        // Regenerate the same rand tensor.
+        let mut rng = rng_snapshot;
+        let rand: Vec<i32> = (0..self.batch * N_COLS * L1.0 * L1.1 * 2)
+            .map(|_| (rng.next_u64() & 0xFFFF) as i32)
+            .collect();
+
+        let (p, q) = L1;
+        let params_struct = self.cfg.stdp_params();
+        let mut w_golden = w_before;
+        for c in 0..N_COLS {
+            let wc: Vec<i32> =
+                w_golden[c * p * q..(c + 1) * p * q].to_vec();
+            let mut wc = wc;
+            // Forward ALL samples with frozen weights, then sequential
+            // STDP — the exact model.layer_train_step semantics.
+            let mut posts = Vec::with_capacity(self.batch);
+            for b in 0..self.batch {
+                let s: Vec<i32> = (0..p)
+                    .map(|j| s1[(b * N_COLS + c) * p + j])
+                    .collect();
+                let (_, post) = column_fwd(&s, &wc, q, self.cfg.theta1);
+                posts.push((s, post));
+            }
+            for b in 0..self.batch {
+                let (s, post) = &posts[b];
+                let pairs: Vec<(u16, u16)> = (0..p * q)
+                    .map(|syn| {
+                        let base = (((b * N_COLS + c) * p * q) + syn) * 2;
+                        (rand[base] as u16, rand[base + 1] as u16)
+                    })
+                    .collect();
+                stdp_step(s, post, &mut wc, &pairs, &params_struct);
+                // post must also match HLO.
+                for (i, &t) in post.iter().enumerate() {
+                    let hlo_t = post_hlo[(b * N_COLS + c) * q + i];
+                    if hlo_t != t {
+                        return Err(Error::runtime(format!(
+                            "post mismatch col {c} b {b} n {i}: hlo {hlo_t} golden {t}"
+                        )));
+                    }
+                }
+            }
+            w_golden[c * p * q..(c + 1) * p * q].copy_from_slice(&wc);
+        }
+        if w_golden != self.l1_w {
+            return Err(Error::runtime("weight mismatch HLO vs golden"));
+        }
+        Ok(())
+    }
+}

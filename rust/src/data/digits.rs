@@ -1,0 +1,242 @@
+//! Procedural 28×28 digit glyphs (the MNIST substitute).
+//!
+//! Digits are drawn as anti-aliased line strokes on a seven-segment-plus-
+//! diagonals skeleton, then perturbed: global translation (±2 px),
+//! per-endpoint jitter (±1 px), stroke-width variation and additive
+//! pixel noise.  Generation is fully deterministic in the seed (xorshift
+//! PRNG), so every layer of the stack trains on byte-identical data.
+
+use crate::tnn::encoding::IMG;
+
+/// Deterministic xorshift64* PRNG (no external rand crate offline).
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    s: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        XorShift { s: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.s;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.s = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform integer in [lo, hi].
+    pub fn range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as i32
+    }
+}
+
+/// Segment endpoints in a normalized 1×1 glyph box.
+type Seg = ((f32, f32), (f32, f32));
+
+/// Stroke skeleton per digit (seven-segment + diagonals where it reads
+/// better).  Coordinates are (x, y) with y growing downward.
+fn skeleton(digit: usize) -> Vec<Seg> {
+    const A: Seg = ((0.15, 0.05), (0.85, 0.05)); // top
+    const B: Seg = ((0.85, 0.05), (0.85, 0.50)); // top right
+    const C: Seg = ((0.85, 0.50), (0.85, 0.95)); // bottom right
+    const D: Seg = ((0.15, 0.95), (0.85, 0.95)); // bottom
+    const E: Seg = ((0.15, 0.50), (0.15, 0.95)); // bottom left
+    const F: Seg = ((0.15, 0.05), (0.15, 0.50)); // top left
+    const G: Seg = ((0.15, 0.50), (0.85, 0.50)); // middle
+    match digit {
+        0 => vec![A, B, C, D, E, F],
+        1 => vec![((0.5, 0.05), (0.5, 0.95)), ((0.3, 0.2), (0.5, 0.05))],
+        2 => vec![A, B, G, E, D],
+        3 => vec![A, B, G, C, D],
+        4 => vec![F, G, B, C],
+        5 => vec![A, F, G, C, D],
+        6 => vec![A, F, E, D, C, G],
+        7 => vec![A, ((0.85, 0.05), (0.4, 0.95))],
+        8 => vec![A, B, C, D, E, F, G],
+        9 => vec![G, F, A, B, C, D],
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Digit-image generator.
+#[derive(Debug, Clone)]
+pub struct DigitGen {
+    rng: XorShift,
+}
+
+impl DigitGen {
+    pub fn new(seed: u64) -> Self {
+        DigitGen { rng: XorShift::new(seed) }
+    }
+
+    /// Render one digit with jitter + noise; returns IMG*IMG grayscale
+    /// in [0, 1].
+    pub fn render(&mut self, digit: usize) -> Vec<f32> {
+        let mut img = vec![0.0f32; IMG * IMG];
+        // Glyph box: 16x20 px placed with global jitter.
+        let (gw, gh) = (14.0f32, 18.0f32);
+        let ox = 7.0 + self.rng.range_i32(-1, 1) as f32;
+        let oy = 5.0 + self.rng.range_i32(-1, 1) as f32;
+        let thick = 1.4 + 0.25 * self.rng.next_f32();
+        for &((x0, y0), (x1, y1)) in &skeleton(digit) {
+            let j = |r: &mut XorShift| (r.next_f32() - 0.5) * 0.8;
+            let (ax, ay) = (
+                ox + x0 * gw + j(&mut self.rng),
+                oy + y0 * gh + j(&mut self.rng),
+            );
+            let (bx, by) = (
+                ox + x1 * gw + j(&mut self.rng),
+                oy + y1 * gh + j(&mut self.rng),
+            );
+            draw_line(&mut img, ax, ay, bx, by, thick);
+        }
+        // Additive noise.
+        for p in img.iter_mut() {
+            *p = (*p + 0.06 * (self.rng.next_f32() - 0.5)).clamp(0.0, 1.0);
+        }
+        img
+    }
+
+    /// Next labeled sample (labels cycle through a shuffled order).
+    pub fn sample(&mut self) -> (Vec<f32>, usize) {
+        let label = (self.rng.next_u64() % 10) as usize;
+        (self.render(label), label)
+    }
+}
+
+/// Soft-brush line rasterizer.
+fn draw_line(img: &mut [f32], x0: f32, y0: f32, x1: f32, y1: f32, thick: f32) {
+    let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt().max(1e-3);
+    let steps = (len * 3.0).ceil() as usize;
+    for s in 0..=steps {
+        let t = s as f32 / steps as f32;
+        let (cx, cy) = (x0 + t * (x1 - x0), y0 + t * (y1 - y0));
+        let r = thick.ceil() as i32;
+        for dy in -r..=r {
+            for dx in -r..=r {
+                let (px, py) = (cx + dx as f32, cy + dy as f32);
+                let (ix, iy) = (px.round() as i32, py.round() as i32);
+                if ix < 0 || iy < 0 || ix >= IMG as i32 || iy >= IMG as i32 {
+                    continue;
+                }
+                let d = ((px - cx).powi(2) + (py - cy).powi(2)).sqrt();
+                let v = (1.0 - (d / thick)).clamp(0.0, 1.0);
+                let idx = iy as usize * IMG + ix as usize;
+                img[idx] = img[idx].max(v);
+            }
+        }
+    }
+}
+
+/// A labeled dataset split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<Vec<f32>>,
+    pub labels: Vec<usize>,
+}
+
+impl Dataset {
+    /// Generate `n` samples deterministically from `seed`.
+    pub fn generate(n: usize, seed: u64) -> Self {
+        let mut g = DigitGen::new(seed);
+        let mut images = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            // Balanced classes: round-robin labels, jitter from the RNG.
+            let label = i % 10;
+            images.push(g.render(label));
+            labels.push(label);
+        }
+        Dataset { images, labels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Dataset::generate(20, 7);
+        let b = Dataset::generate(20, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = Dataset::generate(20, 8);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn images_are_nontrivial_and_bounded() {
+        let d = Dataset::generate(30, 1);
+        for img in &d.images {
+            assert_eq!(img.len(), IMG * IMG);
+            let on = img.iter().filter(|&&p| p > 0.5).count();
+            assert!(on > 18, "glyph too sparse: {on}");
+            assert!(on < 400, "glyph too dense: {on}");
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean intra-class pixel distance must be well below inter-class
+        // distance (the property STDP needs to separate them).
+        let mut g = DigitGen::new(42);
+        let per_class: Vec<Vec<Vec<f32>>> = (0..10)
+            .map(|d| (0..8).map(|_| g.render(d)).collect())
+            .collect();
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+        };
+        let mut intra = 0.0;
+        let mut n_intra = 0.0;
+        let mut inter = 0.0;
+        let mut n_inter = 0.0;
+        for c1 in 0..10 {
+            for i in 0..8 {
+                for j in (i + 1)..8 {
+                    intra += dist(&per_class[c1][i], &per_class[c1][j]);
+                    n_intra += 1.0;
+                }
+                for c2 in (c1 + 1)..10 {
+                    inter += dist(&per_class[c1][i], &per_class[c2][i]);
+                    n_inter += 1.0;
+                }
+            }
+        }
+        let (intra, inter) = (intra / n_intra, inter / n_inter);
+        assert!(
+            inter > 1.5 * intra,
+            "classes not separable: intra={intra} inter={inter}"
+        );
+    }
+
+    #[test]
+    fn rng_is_uniformish() {
+        let mut r = XorShift::new(9);
+        let mut buckets = [0u32; 10];
+        for _ in 0..10000 {
+            buckets[r.range_i32(0, 9) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((700..1300).contains(&b), "{buckets:?}");
+        }
+    }
+}

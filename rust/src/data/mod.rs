@@ -1,0 +1,15 @@
+//! Workload data: the procedural MNIST-like digit corpus.
+//!
+//! The sandbox has no dataset access, so the paper's MNIST workload is
+//! substituted with a *procedurally generated* 28×28 grayscale digit
+//! corpus (stroke-rasterized glyphs with translation/shape jitter and
+//! pixel noise — see [`digits`]).  The substitution preserves what the
+//! experiment needs from MNIST: 10 visually distinct classes, spatially
+//! local stroke structure for the receptive-field encoding, and
+//! intra-class variability for STDP generalization.  DESIGN.md §1
+//! documents the argument; EXPERIMENTS.md reports accuracy on this
+//! corpus next to the paper's MNIST numbers.
+
+pub mod digits;
+
+pub use digits::{Dataset, DigitGen};

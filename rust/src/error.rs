@@ -1,0 +1,96 @@
+//! Unified error type for the framework.
+
+use std::fmt;
+
+/// Framework-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Framework-wide error enumeration.
+#[derive(Debug)]
+pub enum Error {
+    /// Configuration file / value problems.
+    Config(String),
+    /// Netlist elaboration errors (bad ports, width mismatches, cycles).
+    Netlist(String),
+    /// Simulation errors (X at a checked output, missing stimulus).
+    Sim(String),
+    /// Cell-library errors (unknown cell, bad characterization data).
+    Cells(String),
+    /// PPA engine errors.
+    Ppa(String),
+    /// PJRT / artifact-loading errors.
+    Runtime(String),
+    /// Workload / dataset errors.
+    Data(String),
+    /// I/O with context.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Netlist(m) => write!(f, "netlist error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Cells(m) => write!(f, "cell-library error: {m}"),
+            Error::Ppa(m) => write!(f, "ppa error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+macro_rules! ctor {
+    ($fn_name:ident, $variant:ident) => {
+        impl Error {
+            /// Construct the corresponding error variant from any message.
+            pub fn $fn_name(msg: impl Into<String>) -> Self {
+                Error::$variant(msg.into())
+            }
+        }
+    };
+}
+
+ctor!(config, Config);
+ctor!(netlist, Netlist);
+ctor!(sim, Sim);
+ctor!(cells, Cells);
+ctor!(ppa, Ppa);
+ctor!(runtime, Runtime);
+ctor!(data, Data);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::netlist("port width mismatch");
+        assert!(e.to_string().contains("netlist"));
+        assert!(e.to_string().contains("port width mismatch"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("gone"));
+    }
+}

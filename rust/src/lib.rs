@@ -1,0 +1,65 @@
+//! # tnn7 — a 7nm standard-cell co-design framework for TNN neuromorphic processors
+//!
+//! Reproduction of *"A Custom 7nm CMOS Standard Cell Library for Implementing
+//! TNN-based Neuromorphic Processors"* (Nair, Vellaisamy, Bhasuthkar, Shen —
+//! CMU NCAL, 2020) as a three-layer rust + JAX + Pallas stack.
+//!
+//! The paper's artifact is a set of 11 custom GDI-based macro extensions to
+//! the ASAP7 7nm PDK, benchmarked by building TNN columns and a 2-layer MNIST
+//! prototype and comparing post-layout PPA against plain-standard-cell and
+//! 45nm implementations.  The Cadence/ASAP7 substrate is license-gated, so
+//! this crate implements the full co-design loop itself:
+//!
+//! * [`cells`] — a characterized cell-library model: the ASAP7 RVT subset the
+//!   designs use plus the paper's 11 custom GDI macros (Figs. 2–13).
+//! * [`netlist`] — gate-level elaboration of every macro, column, layer and
+//!   the Fig. 19 prototype, in both *standard-cell* and *custom-macro*
+//!   flavours (the paper's comparison is exactly this netlist substitution).
+//! * [`sim`] — a levelized cycle-accurate two-clock gate-level simulator with
+//!   per-net toggle counting (the switching-activity source for power).
+//! * [`ppa`] — STA, activity-based power, placement-model area, EDP, and the
+//!   45nm↔7nm scaling model (Tables I & II, Figs. 14–18).
+//! * [`tnn`] — the golden behavioral TNN (RNL neurons, WTA, STDP, LFSR BRVs);
+//!   the oracle both the gate-level netlists and the HLO executables are
+//!   tested against.
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); python never runs at runtime.
+//! * [`coordinator`] — the training/eval pipeline (MNIST-like workload) and
+//!   the activity bridge that turns behavioral spike statistics into
+//!   prototype-scale power numbers.
+//! * [`data`] — procedural MNIST-like digit corpus (the sandbox has no
+//!   dataset access; see DESIGN.md for the substitution argument).
+//!
+//! See `DESIGN.md` for the experiment index mapping every paper table and
+//! figure to a module and a bench target, and `EXPERIMENTS.md` for measured
+//! results.
+
+pub mod cells;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod netlist;
+pub mod ppa;
+pub mod runtime;
+pub mod sim;
+pub mod tnn;
+
+pub use error::{Error, Result};
+
+/// Architectural constants shared with `python/compile/kernels/ref.py`.
+/// Changing any of these requires re-running `make artifacts`.
+pub mod arch {
+    /// "No spike" sentinel (must match ref.INF = 1 << 30).
+    pub const INF: i32 = 1 << 30;
+    /// Input temporal window: 3-bit spike times in [0, 8).
+    pub const T_IN: i32 = 8;
+    /// 3-bit saturating weights in [0, 7].
+    pub const W_MAX: i32 = 7;
+    /// Unit cycles per computational wave after which potentials saturate.
+    pub const T_STEPS: i32 = T_IN + W_MAX;
+    /// BRV thresholds are 16-bit fixed point: P(fire) = thr / 2^16.
+    pub const RAND_SCALE: i32 = 1 << 16;
+    /// STDP parameter vector length (3 mus + 8 stab_up + 8 stab_dn).
+    pub const N_PARAMS: usize = 19;
+}

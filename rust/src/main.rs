@@ -1,0 +1,432 @@
+//! `tnn7` — CLI for the 7nm TNN co-design framework.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts (see DESIGN.md
+//! §4 for the experiment index):
+//!
+//! ```text
+//! tnn7 characterize [--lib FILE]      cell library table (+ .lib dump)
+//! tnn7 layout-cmp [MACRO]             Figs. 14-18 structural comparisons
+//! tnn7 complexity                     Fig. 19 gate/transistor census
+//! tnn7 calibrate                      fit technology constants (DESIGN §5)
+//! tnn7 bench-table1 [--with-45nm]     Table I (3 columns × 2 flavours)
+//! tnn7 bench-table2                   Table II (prototype PPA + EDP)
+//! tnn7 simulate --col PxQ [...]       gate-sim one column, report PPA
+//! tnn7 train [--config FILE]          end-to-end HLO training + accuracy
+//! ```
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use tnn7::cells::{calibrate, liberty, Library, TechParams};
+use tnn7::config::TnnConfig;
+use tnn7::coordinator::measure::{
+    measure_column, parse_geometry, prototype_ppa, table1_specs,
+};
+use tnn7::coordinator::Pipeline;
+use tnn7::data::Dataset;
+use tnn7::netlist::column::ColumnSpec;
+use tnn7::netlist::prototype::PrototypeSpec;
+use tnn7::netlist::Flavor;
+use tnn7::ppa::report::{improvement_line, render_table1, render_table2, PpaRow};
+use tnn7::ppa::scaling;
+use tnn7::ppa::ColumnPpa;
+
+/// Tiny argv helper (no clap offline): `--key value` and flags.
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Self {
+        Args { rest: std::env::args().skip(1).collect() }
+    }
+
+    fn subcommand(&mut self) -> Option<String> {
+        if self.rest.is_empty() || self.rest[0].starts_with('-') {
+            None
+        } else {
+            Some(self.rest.remove(0))
+        }
+    }
+
+    fn flag(&mut self, name: &str) -> bool {
+        if let Some(i) = self.rest.iter().position(|a| a == name) {
+            self.rest.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn opt(&mut self, name: &str) -> Option<String> {
+        let i = self.rest.iter().position(|a| a == name)?;
+        if i + 1 >= self.rest.len() {
+            eprintln!("{name} requires a value");
+            std::process::exit(2);
+        }
+        self.rest.remove(i);
+        Some(self.rest.remove(i))
+    }
+
+    fn positional(&mut self) -> Option<String> {
+        self.subcommand()
+    }
+
+    fn finish(&self) -> anyhow::Result<()> {
+        if self.rest.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unrecognized arguments: {:?}", self.rest)
+        }
+    }
+}
+
+fn load_config(args: &mut Args) -> anyhow::Result<TnnConfig> {
+    match args.opt("--config") {
+        Some(path) => Ok(TnnConfig::load(Path::new(&path))?),
+        None => Ok(TnnConfig::default()),
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let mut args = Args::new();
+    let sub = args.subcommand().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "characterize" => cmd_characterize(&mut args),
+        "layout-cmp" => cmd_layout_cmp(&mut args),
+        "complexity" => cmd_complexity(&mut args),
+        "calibrate" => cmd_calibrate(&mut args),
+        "bench-table1" => cmd_table1(&mut args),
+        "bench-table2" => cmd_table2(&mut args),
+        "simulate" => cmd_simulate(&mut args),
+        "train" => cmd_train(&mut args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand `{other}` (try help)"),
+    }
+}
+
+const HELP: &str = "tnn7 — 7nm TNN co-design framework (paper reproduction)
+
+USAGE: tnn7 <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+  characterize [--lib FILE]   print the characterized cell library
+  layout-cmp [MACRO]          Figs. 14-18 custom-vs-std cell comparisons
+  complexity                  Fig. 19 prototype census (gates/transistors)
+  calibrate                   fit the technology constants (DESIGN.md §5)
+  bench-table1 [--with-45nm] [--waves N]   regenerate Table I
+  bench-table2 [--waves N]                 regenerate Table II
+  simulate --col PxQ [--flavor std|custom] [--waves N]
+  train [--config FILE] [--samples N] [--check]
+";
+
+fn cmd_characterize(args: &mut Args) -> anyhow::Result<()> {
+    let lib_out = args.opt("--lib");
+    args.finish()?;
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    println!(
+        "{:<20} {:>6} {:>10} {:>10} {:>10} {:>9}  macro",
+        "cell", "T", "area um2", "energy fJ", "leak nW", "delay ps"
+    );
+    for c in lib.cells() {
+        println!(
+            "{:<20} {:>6} {:>10.4} {:>10.4} {:>10.4} {:>9.1}  {}",
+            c.name,
+            c.transistors,
+            tech.area_um2(c),
+            tech.energy_fj(c),
+            tech.leak_nw(c),
+            tech.delay_ps(c),
+            if c.is_custom_macro { "*" } else { "" }
+        );
+    }
+    if let Some(path) = lib_out {
+        let text = liberty::emit(&lib, &tech, "tnn7_rvt_tt_0p7v_25c");
+        std::fs::write(&path, text)?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_layout_cmp(args: &mut Args) -> anyhow::Result<()> {
+    let which = args.positional();
+    args.finish()?;
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let rows: Vec<(&str, &str, &str)> = vec![
+        // (figure, function, custom macro cell)
+        ("Fig. 14/15", "less_equal", "less_equal"),
+        ("Fig. 16/17", "mux2to1", "mux2to1gdi"),
+        ("Fig. 18", "stabilize_func", "stabilize_func"),
+    ];
+    println!(
+        "{:<12} {:<16} {:>8} {:>8} {:>12} {:>12}",
+        "figure", "function", "std T", "custom T", "std um2", "custom um2"
+    );
+    for (fig, func, cell) in rows {
+        if let Some(w) = &which {
+            if w != func && w != cell {
+                continue;
+            }
+        }
+        let (std_t, _desc) = tnn7::cells::gdi::cmos_reference(func)
+            .ok_or_else(|| anyhow::anyhow!("no reference for {func}"))?;
+        let c = lib.cell(lib.id(cell)?);
+        let std_area = f64::from(std_t) * tech.area_per_unit_um2;
+        println!(
+            "{:<12} {:<16} {:>8} {:>8} {:>12.4} {:>12.4}",
+            fig,
+            func,
+            std_t,
+            c.transistors,
+            std_area,
+            tech.area_um2(c)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_complexity(args: &mut Args) -> anyhow::Result<()> {
+    args.finish()?;
+    let lib = Library::with_macros();
+    let spec = PrototypeSpec::paper();
+    println!(
+        "Fig. 19 prototype: {} neurons, {} synapses (paper: 13,750 / 315,000)",
+        spec.neurons(),
+        spec.synapses()
+    );
+    for flavor in [Flavor::Std, Flavor::Custom] {
+        let m = tnn7::netlist::prototype::PrototypeModel::build(
+            &lib, flavor, spec,
+        )?;
+        let c = m.census(&lib);
+        println!(
+            "{:<22} {:>12} cells {:>13} transistors (paper: 32M gates / 128M T)",
+            flavor.label(),
+            c.cells,
+            c.transistors
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &mut Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    args.finish()?;
+    let lib = Library::with_macros();
+    let data = Dataset::generate(16, cfg.data_seed);
+    println!("evaluating Table-I std columns in relative units ...");
+    let obs = tnn7::coordinator::measure::calibration_observations(
+        &lib, &cfg, &data,
+    )?;
+    let fit = calibrate::fit(&obs);
+    println!("fitted technology constants:");
+    println!("  area_per_unit_um2  = {:.4e}", fit.tech.area_per_unit_um2);
+    println!("  energy_per_unit_fj = {:.4e}", fit.tech.energy_per_unit_fj);
+    println!("  leak_per_unit_nw   = {:.4e}", fit.tech.leak_per_unit_nw);
+    println!("  fo4_ps             = {:.4}", fit.tech.fo4_ps);
+    println!(
+        "rms relative residuals: area {:.1}%  time {:.1}%  power {:.1}%",
+        fit.resid_area * 100.0,
+        fit.resid_time * 100.0,
+        fit.resid_power * 100.0
+    );
+    println!(
+        "\n(current TechParams::calibrated(): {:?})",
+        TechParams::calibrated()
+    );
+    Ok(())
+}
+
+/// Paper Table I values for side-by-side display.
+fn paper_table1(flavor: Flavor, label: &str) -> Option<ColumnPpa> {
+    let v = match (flavor, label) {
+        (Flavor::Std, "64x8") => (3.89, 26.92, 0.004),
+        (Flavor::Std, "128x10") => (10.27, 28.52, 0.009),
+        (Flavor::Std, "1024x16") => (131.46, 36.52, 0.124),
+        (Flavor::Custom, "64x8") => (2.73, 20.59, 0.003),
+        (Flavor::Custom, "128x10") => (5.76, 22.79, 0.006),
+        (Flavor::Custom, "1024x16") => (73.73, 29.49, 0.079),
+        _ => return None,
+    };
+    Some(ColumnPpa { power_uw: v.0, time_ns: v.1, area_mm2: v.2 })
+}
+
+fn cmd_table1(args: &mut Args) -> anyhow::Result<()> {
+    let with_45 = args.flag("--with-45nm");
+    let mut cfg = load_config(args)?;
+    if let Some(w) = args.opt("--waves") {
+        cfg.sim_waves = w.parse()?;
+    }
+    args.finish()?;
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+    let mut rows = Vec::new();
+    let mut pairs = Vec::new();
+    for flavor in [Flavor::Std, Flavor::Custom] {
+        for (label, spec) in table1_specs() {
+            let m = measure_column(&lib, &tech, flavor, &spec, &cfg, &data)?;
+            rows.push(PpaRow {
+                flavor: flavor.label(),
+                label: label.to_string(),
+                ppa: m.ppa,
+                paper: paper_table1(flavor, label),
+            });
+            pairs.push((flavor, label, m.ppa));
+            eprintln!("  measured {flavor:?} {label}");
+        }
+    }
+    println!("\nTable I — standard vs custom PPA, 7nm (measured vs paper)\n");
+    println!("{}", render_table1(&rows));
+    for (label, _) in table1_specs().iter() {
+        let std = pairs
+            .iter()
+            .find(|(f, l, _)| *f == Flavor::Std && l == label)
+            .unwrap()
+            .2;
+        let cus = pairs
+            .iter()
+            .find(|(f, l, _)| *f == Flavor::Custom && l == label)
+            .unwrap()
+            .2;
+        println!("{label:>9}: {}", improvement_line(&std, &cus));
+    }
+    if with_45 {
+        let cus1024 = pairs
+            .iter()
+            .find(|(f, l, _)| *f == Flavor::Custom && *l == "1024x16")
+            .unwrap()
+            .2;
+        let (rp, rt, ra) =
+            scaling::ratios(&scaling::COL_1024X16_45NM, &cus1024);
+        println!(
+            "\n45nm Table IV [2] vs measured custom 7nm 1024x16: \
+             power {rp:.0}x  time {rt:.1}x  area {ra:.0}x \
+             (paper: ~108x, ~1.4x, ~21x)"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &mut Args) -> anyhow::Result<()> {
+    let mut cfg = load_config(args)?;
+    if let Some(w) = args.opt("--waves") {
+        cfg.sim_waves = w.parse()?;
+    }
+    args.finish()?;
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+    let paper = [
+        (Flavor::Std, ColumnPpa { power_uw: 2540.0, time_ns: 24.14, area_mm2: 2.36 }),
+        (Flavor::Custom, ColumnPpa { power_uw: 1690.0, time_ns: 19.15, area_mm2: 1.56 }),
+    ];
+    let mut rows = Vec::new();
+    let mut measured = Vec::new();
+    for (flavor, paper_ppa) in paper {
+        let (total, m1, m2) = prototype_ppa(&lib, &tech, flavor, &cfg, &data)?;
+        eprintln!(
+            "  {flavor:?}: L1 col {:.2} uW, L2 col {:.2} uW",
+            m1.ppa.power_uw, m2.ppa.power_uw
+        );
+        rows.push(PpaRow {
+            flavor: flavor.label(),
+            label: "prototype".into(),
+            ppa: total,
+            paper: Some(paper_ppa),
+        });
+        measured.push(total);
+    }
+    println!("\nTable II — prototype PPA + EDP (measured vs paper)\n");
+    println!("{}", render_table2(&rows));
+    println!("{}", improvement_line(&measured[0], &measured[1]));
+    let (rp, rt, ra) =
+        scaling::ratios(&scaling::PROTOTYPE_45NM, &measured[0]);
+    println!(
+        "vs 45nm Table VI [2]: power {rp:.0}x  time {rt:.1}x  area {ra:.0}x \
+         (paper: ~60x, ~2x, ~14x)"
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
+    let col = args
+        .opt("--col")
+        .ok_or_else(|| anyhow::anyhow!("--col PxQ required"))?;
+    let flavor = match args.opt("--flavor").as_deref() {
+        Some("custom") => Flavor::Custom,
+        Some("std") | None => Flavor::Std,
+        Some(o) => anyhow::bail!("unknown flavor {o}"),
+    };
+    let mut cfg = load_config(args)?;
+    if let Some(w) = args.opt("--waves") {
+        cfg.sim_waves = w.parse()?;
+    }
+    args.finish()?;
+    let (p, q) = parse_geometry(&col);
+    let spec = ColumnSpec::benchmark(p, q);
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+    let m = measure_column(&lib, &tech, flavor, &spec, &cfg, &data)?;
+    println!("column {col} ({flavor:?}, theta={})", spec.theta);
+    println!("  cells        : {}", m.cells);
+    println!("  transistors  : {}", m.transistors);
+    println!("  min clock    : {:.1} ps", m.clock_ps);
+    println!("  power        : {:.3} uW", m.ppa.power_uw);
+    println!("  wave time    : {:.2} ns", m.ppa.time_ns);
+    println!("  area         : {:.5} mm2", m.ppa.area_mm2);
+    Ok(())
+}
+
+fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
+    let mut cfg = load_config(args)?;
+    if let Some(n) = args.opt("--samples") {
+        cfg.train_samples = n.parse()?;
+    }
+    let check = args.flag("--check");
+    args.finish()?;
+    let train = Dataset::generate(cfg.train_samples, cfg.data_seed);
+    let test = Dataset::generate(cfg.test_samples, cfg.data_seed + 1);
+    println!(
+        "training 2-layer prototype on {} synthetic digits ...",
+        train.len(),
+    );
+    let mut pipe = Pipeline::new(cfg)?;
+    if check {
+        println!("cross-checking one HLO batch against the golden model ...");
+        pipe.cross_check_batch(&train.images[..pipe.batch()].to_vec())?;
+        println!("  HLO == golden: OK");
+    }
+    let metrics = pipe.train(&train)?;
+    let acc = pipe.evaluate(&test)?;
+    println!(
+        "batches {}  exec {:.1}s  wall {:.1}s  throughput {:.1} img/s",
+        metrics.batches,
+        metrics.exec_seconds,
+        metrics.wall_seconds,
+        metrics.images_per_sec()
+    );
+    println!(
+        "test accuracy: {:.1}% on {} samples (paper: 93% on MNIST; \
+         chance 10%)",
+        acc * 100.0,
+        (test.len() / pipe.batch()) * pipe.batch()
+    );
+    Ok(())
+}

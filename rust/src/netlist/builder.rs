@@ -1,0 +1,447 @@
+//! Elaboration helpers: the RTL-to-gates vocabulary the module builders
+//! use (gate constructors, buses, registers, adder/comparator generators).
+
+use crate::cells::{CellKind, Library, MacroKind};
+use crate::error::Result;
+
+use super::ir::{ClockDomain, NetId, Netlist, RegionId};
+
+/// Stateful elaboration context over a [`Netlist`].
+pub struct Builder<'l> {
+    /// Cell library (both flavours elaborate against the same library; the
+    /// std flavour simply never instantiates macro cells).
+    pub lib: &'l Library,
+    /// Netlist under construction.
+    pub nl: Netlist,
+    region: RegionId,
+}
+
+impl<'l> Builder<'l> {
+    /// Start a new design.
+    pub fn new(name: &str, lib: &'l Library) -> Self {
+        let nl = Netlist::new(name, lib);
+        Builder { lib, nl, region: RegionId(0) }
+    }
+
+    /// Finish: validate and return the netlist.
+    pub fn finish(self) -> Result<Netlist> {
+        self.nl.validate(self.lib)?;
+        Ok(self.nl)
+    }
+
+    // ---- regions -------------------------------------------------------
+
+    /// Enter a child region; returns the previous region for [`Self::pop`].
+    pub fn push(&mut self, name: impl Into<String>) -> RegionId {
+        let prev = self.region;
+        self.region = self.nl.add_region(name, prev);
+        prev
+    }
+
+    /// Leave the current region.
+    pub fn pop(&mut self, prev: RegionId) {
+        self.region = prev;
+    }
+
+    /// Current region.
+    pub fn region(&self) -> RegionId {
+        self.region
+    }
+
+    // ---- nets ----------------------------------------------------------
+
+    /// Fresh anonymous net.
+    pub fn net(&mut self) -> NetId {
+        self.nl.new_net()
+    }
+
+    /// Fresh named net.
+    pub fn named(&mut self, name: impl Into<String>) -> NetId {
+        let n = self.nl.new_net();
+        self.nl.name_net(n, name);
+        n
+    }
+
+    /// Fresh primary input.
+    pub fn input(&mut self, name: impl Into<String>) -> NetId {
+        let n = self.named(name);
+        self.nl.inputs.push(n);
+        n
+    }
+
+    /// Bus of primary inputs `name[0..width)`.
+    pub fn input_bus(&mut self, name: &str, width: usize) -> Vec<NetId> {
+        (0..width).map(|i| self.input(format!("{name}[{i}]"))).collect()
+    }
+
+    /// Mark an existing net as primary output.
+    pub fn output(&mut self, net: NetId, name: impl Into<String>) {
+        self.nl.name_net(net, name);
+        self.nl.outputs.push(net);
+    }
+
+    /// Constant nets.
+    pub fn zero(&self) -> NetId {
+        self.nl.const0
+    }
+    pub fn one(&self) -> NetId {
+        self.nl.const1
+    }
+
+    // ---- instances -----------------------------------------------------
+
+    /// Instantiate by [`CellKind`] (first library cell of that kind),
+    /// allocating output nets.
+    pub fn kind(&mut self, kind: CellKind, ins: &[NetId]) -> Vec<NetId> {
+        self.kind_in(kind, ins, ClockDomain::Comb)
+    }
+
+    /// Instantiate a sequential cell kind in a clock domain.
+    pub fn kind_in(
+        &mut self,
+        kind: CellKind,
+        ins: &[NetId],
+        domain: ClockDomain,
+    ) -> Vec<NetId> {
+        let cell = self.lib.id_of_kind(kind).expect("kind in library");
+        let (_, n_out, _) = kind.pins();
+        let outs: Vec<NetId> = (0..n_out).map(|_| self.net()).collect();
+        self.nl.push_inst(cell, ins, &outs, domain, self.region);
+        outs
+    }
+
+    /// Instantiate with caller-allocated output nets (needed for
+    /// registered feedback: allocate Q first, build next-state logic from
+    /// it, then place the flop driving Q).
+    pub fn inst_with_outs(
+        &mut self,
+        kind: CellKind,
+        ins: &[NetId],
+        outs: &[NetId],
+        domain: ClockDomain,
+    ) {
+        let cell = self.lib.id_of_kind(kind).expect("kind in library");
+        self.nl.push_inst(cell, ins, outs, domain, self.region);
+    }
+
+    /// Instantiate one of the custom hard macros.
+    pub fn macro_cell(
+        &mut self,
+        m: MacroKind,
+        ins: &[NetId],
+        domain: ClockDomain,
+    ) -> Vec<NetId> {
+        self.kind_in(CellKind::Macro(m), ins, domain)
+    }
+
+    // ---- combinational vocabulary ---------------------------------------
+
+    pub fn inv(&mut self, a: NetId) -> NetId {
+        self.kind(CellKind::Inv, &[a])[0]
+    }
+    pub fn buf(&mut self, a: NetId) -> NetId {
+        self.kind(CellKind::Buf, &[a])[0]
+    }
+    pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.kind(CellKind::And2, &[a, b])[0]
+    }
+    pub fn and3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.kind(CellKind::And3, &[a, b, c])[0]
+    }
+    pub fn or2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.kind(CellKind::Or2, &[a, b])[0]
+    }
+    pub fn or3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.kind(CellKind::Or3, &[a, b, c])[0]
+    }
+    pub fn nand2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.kind(CellKind::Nand2, &[a, b])[0]
+    }
+    pub fn nor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.kind(CellKind::Nor2, &[a, b])[0]
+    }
+    pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.kind(CellKind::Xor2, &[a, b])[0]
+    }
+    pub fn xnor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.kind(CellKind::Xnor2, &[a, b])[0]
+    }
+    pub fn xor3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.kind(CellKind::Xor3, &[a, b, c])[0]
+    }
+    pub fn maj3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.kind(CellKind::Maj3, &[a, b, c])[0]
+    }
+    /// `y = s ? d1 : d0` using the 12T standard mux.
+    pub fn mux2(&mut self, d0: NetId, d1: NetId, s: NetId) -> NetId {
+        self.kind(CellKind::Mux2, &[d0, d1, s])[0]
+    }
+
+    /// Wide OR as a balanced tree of OR2/OR3.
+    pub fn or_tree(&mut self, nets: &[NetId]) -> NetId {
+        match nets.len() {
+            0 => self.zero(),
+            1 => nets[0],
+            2 => self.or2(nets[0], nets[1]),
+            3 => self.or3(nets[0], nets[1], nets[2]),
+            n => {
+                let mid = n / 2;
+                let l = self.or_tree(&nets[..mid]);
+                let r = self.or_tree(&nets[mid..]);
+                self.or2(l, r)
+            }
+        }
+    }
+
+    /// Wide AND as a balanced tree.
+    pub fn and_tree(&mut self, nets: &[NetId]) -> NetId {
+        match nets.len() {
+            0 => self.one(),
+            1 => nets[0],
+            2 => self.and2(nets[0], nets[1]),
+            3 => self.and3(nets[0], nets[1], nets[2]),
+            n => {
+                let mid = n / 2;
+                let l = self.and_tree(&nets[..mid]);
+                let r = self.and_tree(&nets[mid..]);
+                self.and2(l, r)
+            }
+        }
+    }
+
+    // ---- sequential vocabulary ------------------------------------------
+
+    /// Plain D flop in `domain`.
+    pub fn dff(&mut self, d: NetId, domain: ClockDomain) -> NetId {
+        self.kind_in(CellKind::Dff, &[d], domain)[0]
+    }
+
+    /// D flop with async active-high reset.
+    pub fn dff_r(&mut self, d: NetId, rst: NetId, domain: ClockDomain) -> NetId {
+        self.kind_in(CellKind::DffR, &[d, rst], domain)[0]
+    }
+
+    /// Register bus.
+    pub fn reg_bus(&mut self, d: &[NetId], domain: ClockDomain) -> Vec<NetId> {
+        d.iter().map(|&n| self.dff(n, domain)).collect()
+    }
+
+    // ---- arithmetic generators -------------------------------------------
+
+    /// Full adder from library FA halves (XOR3 sum + MAJ3 carry), as Genus
+    /// maps ASAP7 ("Genus synthesizes the adder modules ... with ASAP7
+    /// Majority cells").
+    pub fn full_adder(&mut self, a: NetId, b: NetId, cin: NetId) -> (NetId, NetId) {
+        let sum = self.xor3(a, b, cin);
+        let carry = self.maj3(a, b, cin);
+        (sum, carry)
+    }
+
+    /// Half adder.
+    pub fn half_adder(&mut self, a: NetId, b: NetId) -> (NetId, NetId) {
+        (self.xor2(a, b), self.and2(a, b))
+    }
+
+    /// Ripple-carry adder: `a + b` (equal widths, LSB first); returns
+    /// (sum bits, carry out).  "Architectural use of ripple-carry adder
+    /// chain propagation provides noticeable optimization" (§II.C).
+    pub fn ripple_add(&mut self, a: &[NetId], b: &[NetId]) -> (Vec<NetId>, NetId) {
+        assert_eq!(a.len(), b.len());
+        let mut carry = self.zero();
+        let mut sum = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let (s, c) = self.full_adder(a[i], b[i], carry);
+            sum.push(s);
+            carry = c;
+        }
+        (sum, carry)
+    }
+
+    /// Popcount of `bits` as a carry-save adder tree (LSB-first result of
+    /// width `ceil(log2(n+1))`).  This is the parallel accumulative
+    /// counter's input reduction.
+    pub fn popcount(&mut self, bits: &[NetId]) -> Vec<NetId> {
+        // Recursive: split, add sub-counts with ripple carry.
+        match bits.len() {
+            0 => vec![self.zero()],
+            1 => vec![bits[0]],
+            2 => {
+                let (s, c) = self.half_adder(bits[0], bits[1]);
+                vec![s, c]
+            }
+            3 => {
+                let (s, c) = self.full_adder(bits[0], bits[1], bits[2]);
+                vec![s, c]
+            }
+            n => {
+                let mid = n / 2;
+                let mut l = self.popcount(&bits[..mid]);
+                let mut r = self.popcount(&bits[mid..]);
+                let w = l.len().max(r.len()) ;
+                let zero = self.zero();
+                l.resize(w, zero);
+                r.resize(w, zero);
+                let (mut s, c) = self.ripple_add(&l, &r);
+                s.push(c);
+                s
+            }
+        }
+    }
+
+    /// Unsigned comparator: `a >= b` (equal widths, LSB first), via a
+    /// borrow-ripple chain: geq = NOT(borrow_out of a - b).
+    pub fn geq(&mut self, a: &[NetId], b: &[NetId]) -> NetId {
+        assert_eq!(a.len(), b.len());
+        let mut borrow = self.zero();
+        for i in 0..a.len() {
+            // borrow' = (!a & b) | (!a & borrow) | (b & borrow)
+            //         = maj(!a, b, borrow)
+            let na = self.inv(a[i]);
+            borrow = self.maj3(na, b[i], borrow);
+        }
+        self.inv(borrow)
+    }
+
+    /// Unsigned `a < b` (strict), LSB first.
+    pub fn lt(&mut self, a: &[NetId], b: &[NetId]) -> NetId {
+        let geq = self.geq(a, b);
+        self.inv(geq)
+    }
+
+    /// Constant bus for `value` with `width` bits (LSB first).
+    pub fn const_bus(&mut self, value: u64, width: usize) -> Vec<NetId> {
+        (0..width)
+            .map(|i| if (value >> i) & 1 == 1 { self.one() } else { self.zero() })
+            .collect()
+    }
+
+    /// 3-bit saturating up/down counter next-state logic:
+    /// `next = sat(cur + inc - dec)` with inc/dec mutually exclusive in use.
+    /// Returns the 3 next-state nets.
+    pub fn sat_updown3(
+        &mut self,
+        cur: &[NetId; 3],
+        inc: NetId,
+        dec: NetId,
+    ) -> [NetId; 3] {
+        // increment: cur + 1 (half-adder chain)
+        let (i0, c0) = self.half_adder(cur[0], self.one());
+        let (i1, c1) = self.half_adder(cur[1], c0);
+        let i2 = self.xor2(cur[2], c1);
+        let inc_ovf = self.and3(cur[0], cur[1], cur[2]); // cur == 7
+        // decrement: cur - 1 (borrow chain)
+        let n0 = self.inv(cur[0]);
+        let d0 = n0;
+        let b0 = n0;
+        let d1 = self.xor2(cur[1], b0);
+        let nb1 = self.inv(cur[1]);
+        let b1 = self.and2(nb1, b0);
+        let d2 = self.xor2(cur[2], b1);
+        let nz0 = self.or3(cur[0], cur[1], cur[2]); // cur != 0
+        // select: inc (not at 7) -> inc value; dec -> dec value, but an
+        // asserted inc always blocks dec (matches ref.py's delta = inc-dec
+        // semantics: inc&dec cancel, and inc at saturation HOLDS).
+        let do_inc0 = self.inv(inc_ovf);
+        let do_inc = self.and2(inc, do_inc0);
+        let ninc = self.inv(inc);
+        let sel_dec = self.and3(dec, nz0, ninc);
+        let mut next = [self.zero(); 3];
+        let incv = [i0, i1, i2];
+        let decv = [d0, d1, d2];
+        for k in 0..3 {
+            let a = self.mux2(cur[k], incv[k], do_inc);
+            next[k] = self.mux2(a, decv[k], sel_dec);
+        }
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+
+    fn b(lib: &Library) -> Builder<'_> {
+        Builder::new("t", lib)
+    }
+
+    #[test]
+    fn or_and_trees_validate() {
+        let lib = Library::asap7_only();
+        let mut bd = b(&lib);
+        let ins = bd.input_bus("x", 9);
+        let o = bd.or_tree(&ins);
+        let a = bd.and_tree(&ins);
+        bd.output(o, "or");
+        bd.output(a, "and");
+        bd.finish().unwrap();
+    }
+
+    #[test]
+    fn popcount_width_is_logarithmic() {
+        let lib = Library::asap7_only();
+        for n in [1usize, 2, 3, 4, 7, 8, 15, 16, 64] {
+            let mut bd = b(&lib);
+            let ins = bd.input_bus("x", n);
+            let s = bd.popcount(&ins);
+            let want = (usize::BITS - n.leading_zeros()) as usize;
+            assert!(
+                s.len() >= want && s.len() <= want + 1,
+                "n={n} width={} want~{want}",
+                s.len()
+            );
+            for (i, &bit) in s.iter().enumerate() {
+                bd.output(bit, format!("s[{i}]"));
+            }
+            bd.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn adders_and_comparators_validate() {
+        let lib = Library::asap7_only();
+        let mut bd = b(&lib);
+        let a = bd.input_bus("a", 8);
+        let c = bd.input_bus("b", 8);
+        let (s, co) = bd.ripple_add(&a, &c);
+        let ge = bd.geq(&a, &c);
+        let lt = bd.lt(&a, &c);
+        for (i, &bit) in s.iter().enumerate() {
+            bd.output(bit, format!("s[{i}]"));
+        }
+        bd.output(co, "co");
+        bd.output(ge, "ge");
+        bd.output(lt, "lt");
+        bd.finish().unwrap();
+    }
+
+    #[test]
+    fn sat_updown_validates() {
+        let lib = Library::asap7_only();
+        let mut bd = b(&lib);
+        let cur_v = bd.input_bus("w", 3);
+        let cur = [cur_v[0], cur_v[1], cur_v[2]];
+        let inc = bd.input("inc");
+        let dec = bd.input("dec");
+        let next = bd.sat_updown3(&cur, inc, dec);
+        for (i, &n) in next.iter().enumerate() {
+            bd.output(n, format!("n[{i}]"));
+        }
+        bd.finish().unwrap();
+    }
+
+    #[test]
+    fn regions_nest() {
+        let lib = Library::asap7_only();
+        let mut bd = b(&lib);
+        let prev = bd.push("col0");
+        let prev2 = bd.push("syn0");
+        let x = bd.input("x");
+        let _ = bd.inv(x);
+        bd.pop(prev2);
+        bd.pop(prev);
+        let nl = bd.finish().unwrap();
+        let last = nl.insts.last().unwrap();
+        assert_eq!(nl.region_path(last.region), "top/col0/syn0");
+    }
+}

@@ -1,0 +1,256 @@
+//! The p×q TNN column (Fig. 1): the paper's benchmark unit.
+//!
+//! A column is q excitatory SRM0 neurons sharing p temporally-coded
+//! inputs, with WTA lateral inhibition and per-synapse STDP learning —
+//! assembled from the Figs. 2–13 macros exactly as §II.C describes:
+//!
+//! ```text
+//!  x[p] ──spike_gen──► pulse/count ──syn_output(w)──► up[p] ─┐
+//!                                                            ▼
+//!                  pac_adder popcount + accumulate + θ-compare ──► fire[q]
+//!                                                            │
+//!       WTA (priority + pulse2edge locks) ◄─────────────────┘
+//!        │ grants/locks
+//!        ▼
+//!  less_equal sample ─ stdp_case_gen ─ stabilize_func ─ incdec
+//!        └────────────► syn_weight_update (gclk) ──► w[p][q]
+//! ```
+//!
+//! Both flavours share this structure; the [`Flavor`] parameter selects
+//! per-module standard-cell vs custom-macro realizations (the Table I
+//! substitution).
+
+use crate::cells::CellKind;
+use crate::error::Result;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId, Netlist};
+
+use super::modules::edge2pulse::edge2pulse;
+use super::modules::incdec::incdec;
+use super::modules::less_equal::less_equal;
+use super::modules::mux::mux2;
+use super::modules::pac_adder::neuron_body;
+use super::modules::spike_gen::spike_gen;
+use super::modules::stabilize_func::stabilize_func;
+use super::modules::stdp_case_gen::stdp_case_gen;
+use super::modules::syn_output::syn_output;
+use super::modules::syn_weight_update::syn_weight_update;
+use super::modules::wta::wta;
+
+/// Per-synapse BRV input lanes (drive order within the 19-bit group):
+/// `[b_capture, b_backoff, b_search, stab_up[0..8], stab_dn[0..8]]`.
+pub const BRV_PER_SYN: usize = 19;
+
+/// Column geometry + elaboration parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnSpec {
+    /// Synapses per neuron (inputs).
+    pub p: usize,
+    /// Neurons.
+    pub q: usize,
+    /// Firing threshold (elaboration constant, as in the RTL).
+    pub theta: u64,
+}
+
+impl ColumnSpec {
+    /// The paper's three Table-I benchmark columns.  Thresholds follow
+    /// [2]'s sizing rule theta ≈ p/2 (half the inputs at mid weight).
+    pub fn benchmark(p: usize, q: usize) -> Self {
+        ColumnSpec { p, q, theta: (p as u64 * 7) / 4 }
+    }
+}
+
+/// Elaborated column ports (all primary I/O nets).
+pub struct ColumnPorts {
+    /// p input spike levels (rise at the encoded time, hold until grst).
+    pub x: Vec<NetId>,
+    /// Gamma-clock level (pulse high on the reset cycle of each wave).
+    pub gclk: NetId,
+    /// BRV lanes: `p*q*BRV_PER_SYN` bits, synapse-major
+    /// (`syn = j*q + i`, then the 19 lanes of that synapse).
+    pub brv: Vec<NetId>,
+    /// Pre-WTA fire levels per neuron.
+    pub fires: Vec<NetId>,
+    /// WTA grant pulses per neuron.
+    pub grants: Vec<NetId>,
+    /// Post-WTA latched spike levels per neuron.
+    pub locks: Vec<NetId>,
+    /// Weight register bits per synapse (`[j*q+i] -> [w0,w1,w2]`),
+    /// exposed for testbench readback.
+    pub weights: Vec<[NetId; 3]>,
+}
+
+/// Elaborate a column into `b`.
+pub fn column(b: &mut Builder<'_>, flavor: Flavor, spec: &ColumnSpec) -> ColumnPorts {
+    let (p, q) = (spec.p, spec.q);
+    let x = b.input_bus("x", p);
+    let gclk = b.input("gclk");
+    let brv = b.input_bus("brv", p * q * BRV_PER_SYN);
+
+    // Gamma reset strobe from the gclk level (Fig. 13).
+    let reg = b.push("ctl");
+    let grst = edge2pulse(b, flavor, gclk);
+    b.pop(reg);
+
+    // Input front-end: one spike_gen per input (Fig. 12).
+    let mut pulses = Vec::with_capacity(p);
+    let mut counts = Vec::with_capacity(p);
+    for j in 0..p {
+        let reg = b.push(format!("sg{j}"));
+        let sg = spike_gen(b, flavor, x[j], grst);
+        b.pop(reg);
+        pulses.push(sg.pulse);
+        counts.push(sg.count);
+    }
+
+    // Weight registers first (they feed both the RNL readout and STDP).
+    // inc/dec nets are allocated now and driven by the STDP logic below.
+    let mut incs = vec![NetId(0); p * q];
+    let mut decs = vec![NetId(0); p * q];
+    let mut weights = Vec::with_capacity(p * q);
+    for j in 0..p {
+        for i in 0..q {
+            let reg = b.push(format!("syn{j}_{i}"));
+            let inc = b.net();
+            let dec = b.net();
+            let w = syn_weight_update_feedthrough(b, flavor, inc, dec);
+            incs[j * q + i] = inc;
+            decs[j * q + i] = dec;
+            weights.push(w);
+            b.pop(reg);
+        }
+    }
+
+    // Neuron bodies: RNL readouts + parallel accumulative counters.
+    let mut fires = Vec::with_capacity(q);
+    for i in 0..q {
+        let reg = b.push(format!("neuron{i}"));
+        let ups: Vec<NetId> = (0..p)
+            .map(|j| {
+                syn_output(b, flavor, &counts[j], &weights[j * q + i], pulses[j])
+            })
+            .collect();
+        let body = neuron_body(b, flavor, &ups, spec.theta, grst);
+        fires.push(body.fire);
+        b.pop(reg);
+    }
+
+    // WTA inhibition.
+    let reg = b.push("wta");
+    let w = wta(b, flavor, &fires, grst);
+    b.pop(reg);
+
+    // STDP per synapse.
+    for j in 0..p {
+        for i in 0..q {
+            let reg = b.push(format!("stdp{j}_{i}"));
+            let syn = j * q + i;
+            let lanes = &brv[syn * BRV_PER_SYN..(syn + 1) * BRV_PER_SYN];
+            let (b_c, b_b, b_s) = (lanes[0], lanes[1], lanes[2]);
+            let stab_up_brv = &lanes[3..11];
+            let stab_dn_brv = &lanes[11..19];
+
+            // Timing sample: le = (x arrived no later than y), captured at
+            // the grant cycle through the less_equal macro (Fig. 5).
+            let le_q = b.net();
+            let le_comb = less_equal(b, flavor, x[j], w.grants[i]);
+            let le_d = mux2(b, flavor, le_q, le_comb, w.grants[i]);
+            b.inst_with_outs(CellKind::Dff, &[le_d], &[le_q], ClockDomain::Aclk);
+
+            // Case decode + stochastic gating + weight update strobes.
+            let cases = stdp_case_gen(b, flavor, x[j], w.locks[i], le_q);
+            let wbits = weights[syn];
+            let su = stabilize_func(b, flavor, stab_up_brv, &wbits);
+            let sd = stabilize_func(b, flavor, stab_dn_brv, &wbits);
+            let cap_g = b.and3(cases.capture, b_c, su);
+            let back_g = b.and3(cases.backoff, b_b, sd);
+            let srch_g = b.and2(cases.search, b_s);
+            let min_g = b.and3(cases.minus, b_b, sd);
+            let (inc, dec) = incdec(b, flavor, cap_g, back_g, srch_g, min_g);
+            // Drive the pre-allocated strobe nets.
+            b.inst_with_outs(CellKind::Buf, &[inc], &[incs[syn]], ClockDomain::Comb);
+            b.inst_with_outs(CellKind::Buf, &[dec], &[decs[syn]], ClockDomain::Comb);
+            b.pop(reg);
+        }
+    }
+
+    for (i, &f) in fires.iter().enumerate() {
+        b.output(f, format!("fire[{i}]"));
+    }
+    for (i, &g) in w.grants.iter().enumerate() {
+        b.output(g, format!("grant[{i}]"));
+    }
+    for (i, &l) in w.locks.iter().enumerate() {
+        b.output(l, format!("lock[{i}]"));
+    }
+
+    ColumnPorts {
+        x,
+        gclk,
+        brv,
+        fires,
+        grants: w.grants.clone(),
+        locks: w.locks.clone(),
+        weights,
+    }
+}
+
+/// Weight FSM with caller-visible inc/dec nets (wrapper that lets the
+/// RNL readout consume weights elaborated before the STDP logic exists).
+fn syn_weight_update_feedthrough(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    inc: NetId,
+    dec: NetId,
+) -> [NetId; 3] {
+    syn_weight_update(b, flavor, inc, dec)
+}
+
+/// Convenience: elaborate a standalone column netlist.
+pub fn build_column(
+    lib: &crate::cells::Library,
+    flavor: Flavor,
+    spec: &ColumnSpec,
+) -> Result<(Netlist, ColumnPorts)> {
+    let name = format!("column_{}x{}_{:?}", spec.p, spec.q, flavor);
+    let mut b = Builder::new(&name, lib);
+    let ports = column(&mut b, flavor, spec);
+    let nl = b.finish()?;
+    Ok((nl, ports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+
+    #[test]
+    fn small_column_validates_both_flavours() {
+        let lib = Library::with_macros();
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let spec = ColumnSpec { p: 4, q: 2, theta: 6 };
+            let (nl, ports) = build_column(&lib, flavor, &spec).unwrap();
+            assert_eq!(ports.x.len(), 4);
+            assert_eq!(ports.weights.len(), 8);
+            assert_eq!(ports.brv.len(), 8 * BRV_PER_SYN);
+            assert!(nl.insts.len() > 50);
+        }
+    }
+
+    #[test]
+    fn custom_column_uses_fewer_transistors() {
+        // The Table-I direction at elaboration level.
+        let lib = Library::with_macros();
+        let spec = ColumnSpec::benchmark(8, 4);
+        let (std_nl, _) = build_column(&lib, Flavor::Std, &spec).unwrap();
+        let (cus_nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let st = std_nl.census(&lib).transistors;
+        let ct = cus_nl.census(&lib).transistors;
+        assert!(ct < st, "custom {ct} !< std {st}");
+    }
+
+    #[test]
+    fn benchmark_spec_thresholds_scale_with_p() {
+        assert!(ColumnSpec::benchmark(1024, 16).theta
+            > ColumnSpec::benchmark(64, 8).theta);
+    }
+}

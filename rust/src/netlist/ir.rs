@@ -1,0 +1,373 @@
+//! Compact flat netlist IR.
+//!
+//! Sized for the largest Table-I column (1024x16 ≈ 0.6M instances): pin
+//! lists live in one shared pool and an [`Instance`] is 20 bytes.  Hierarchy
+//! is represented by *regions* (a tree of labels each instance is tagged
+//! with), which is what the per-macro census (`tnn7 layout-cmp`,
+//! `tnn7 complexity`) and the hierarchical PPA roll-up consume.
+
+use crate::cells::{CellId, Library};
+use crate::error::{Error, Result};
+
+/// Index of a net in a [`Netlist`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetId(pub u32);
+
+/// Index of a region label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RegionId(pub u32);
+
+/// Clock domain of a sequential instance.
+///
+/// TNN designs use two clocks (§II.C): the unit clock `aclk` for temporal
+/// encoding and the gamma clock `gclk` separating computational waves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClockDomain {
+    /// Combinational (no clock).
+    Comb,
+    /// Unit clock: state commits every simulator tick.
+    Aclk,
+    /// Gamma clock: state commits on end-of-wave ticks only.
+    Gclk,
+}
+
+/// One cell instance (compact: pins are a slice of the shared pool).
+#[derive(Debug, Clone, Copy)]
+pub struct Instance {
+    /// Library cell.
+    pub cell: CellId,
+    /// Offset of this instance's pins in [`Netlist::pins`]
+    /// (inputs first, then outputs).
+    pub pin_start: u32,
+    /// Input pin count.
+    pub n_ins: u8,
+    /// Output pin count.
+    pub n_outs: u8,
+    /// Clock domain (Comb for combinational cells).
+    pub domain: ClockDomain,
+    /// Region tag for census / roll-up.
+    pub region: RegionId,
+}
+
+/// A region label node (tree via `parent`).
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub name: String,
+    pub parent: Option<RegionId>,
+}
+
+/// Flat gate-level netlist.
+#[derive(Debug, Clone)]
+pub struct Netlist {
+    /// Design name.
+    pub name: String,
+    /// Number of nets (ids are dense).
+    n_nets: u32,
+    /// Optional net names (debug / VCD); indexed sparsely.
+    pub net_names: Vec<(NetId, String)>,
+    /// Shared pin pool; see [`Instance::pin_start`].
+    pub pins: Vec<NetId>,
+    /// All instances.
+    pub insts: Vec<Instance>,
+    /// Primary inputs.
+    pub inputs: Vec<NetId>,
+    /// Primary outputs.
+    pub outputs: Vec<NetId>,
+    /// Region label tree.
+    pub regions: Vec<Region>,
+    /// Constant-0 / constant-1 nets (driven by tie cells).
+    pub const0: NetId,
+    pub const1: NetId,
+}
+
+impl Netlist {
+    /// New netlist with tie-cell constants pre-created.
+    pub fn new(name: impl Into<String>, lib: &Library) -> Self {
+        let mut nl = Netlist {
+            name: name.into(),
+            n_nets: 0,
+            net_names: Vec::new(),
+            pins: Vec::new(),
+            insts: Vec::new(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            regions: vec![Region { name: "top".into(), parent: None }],
+            const0: NetId(0),
+            const1: NetId(0),
+        };
+        let c0 = nl.new_net();
+        let c1 = nl.new_net();
+        nl.const0 = c0;
+        nl.const1 = c1;
+        let tie0 = lib.id("TIELOx1").expect("tie cells in library");
+        let tie1 = lib.id("TIEHIx1").expect("tie cells in library");
+        nl.push_inst(tie0, &[], &[c0], ClockDomain::Comb, RegionId(0));
+        nl.push_inst(tie1, &[], &[c1], ClockDomain::Comb, RegionId(0));
+        nl
+    }
+
+    /// Allocate a fresh net.
+    pub fn new_net(&mut self) -> NetId {
+        let id = NetId(self.n_nets);
+        self.n_nets += 1;
+        id
+    }
+
+    /// Total net count.
+    pub fn n_nets(&self) -> usize {
+        self.n_nets as usize
+    }
+
+    /// Attach a debug name to a net.
+    pub fn name_net(&mut self, net: NetId, name: impl Into<String>) {
+        self.net_names.push((net, name.into()));
+    }
+
+    /// Add a region label under `parent`.
+    pub fn add_region(
+        &mut self,
+        name: impl Into<String>,
+        parent: RegionId,
+    ) -> RegionId {
+        let id = RegionId(self.regions.len() as u32);
+        self.regions.push(Region { name: name.into(), parent: Some(parent) });
+        id
+    }
+
+    /// Full path of a region ("top/col/syn_0_3/...").
+    pub fn region_path(&self, mut r: RegionId) -> String {
+        let mut parts = Vec::new();
+        loop {
+            let reg = &self.regions[r.0 as usize];
+            parts.push(reg.name.clone());
+            match reg.parent {
+                Some(p) => r = p,
+                None => break,
+            }
+        }
+        parts.reverse();
+        parts.join("/")
+    }
+
+    /// Append an instance.
+    pub fn push_inst(
+        &mut self,
+        cell: CellId,
+        ins: &[NetId],
+        outs: &[NetId],
+        domain: ClockDomain,
+        region: RegionId,
+    ) -> usize {
+        let pin_start = self.pins.len() as u32;
+        self.pins.extend_from_slice(ins);
+        self.pins.extend_from_slice(outs);
+        self.insts.push(Instance {
+            cell,
+            pin_start,
+            n_ins: ins.len() as u8,
+            n_outs: outs.len() as u8,
+            domain,
+            region,
+        });
+        self.insts.len() - 1
+    }
+
+    /// Input pins of instance `i`.
+    pub fn inst_ins(&self, i: usize) -> &[NetId] {
+        let inst = &self.insts[i];
+        let s = inst.pin_start as usize;
+        &self.pins[s..s + inst.n_ins as usize]
+    }
+
+    /// Output pins of instance `i`.
+    pub fn inst_outs(&self, i: usize) -> &[NetId] {
+        let inst = &self.insts[i];
+        let s = inst.pin_start as usize + inst.n_ins as usize;
+        &self.pins[s..s + inst.n_outs as usize]
+    }
+
+    /// Validate structural invariants: every net has exactly one driver
+    /// (tie/instance output or primary input), pin widths match the
+    /// library, and no net is read before existing.
+    pub fn validate(&self, lib: &Library) -> Result<()> {
+        let mut drivers = vec![0u8; self.n_nets()];
+        for &n in &self.inputs {
+            drivers[n.0 as usize] = drivers[n.0 as usize].saturating_add(1);
+        }
+        for i in 0..self.insts.len() {
+            let inst = &self.insts[i];
+            let cell = lib.cell(inst.cell);
+            let (ci, co, _) = cell.kind.pins();
+            if ci != inst.n_ins as usize || co != inst.n_outs as usize {
+                return Err(Error::netlist(format!(
+                    "inst {i} ({}) pin mismatch: has {}/{}, cell wants {ci}/{co}",
+                    cell.name, inst.n_ins, inst.n_outs
+                )));
+            }
+            let seq = cell.kind.is_sequential();
+            if seq && inst.domain == ClockDomain::Comb {
+                return Err(Error::netlist(format!(
+                    "sequential inst {i} ({}) in Comb domain",
+                    cell.name
+                )));
+            }
+            if !seq && inst.domain != ClockDomain::Comb {
+                return Err(Error::netlist(format!(
+                    "combinational inst {i} ({}) assigned a clock",
+                    cell.name
+                )));
+            }
+            for &o in self.inst_outs(i) {
+                drivers[o.0 as usize] = drivers[o.0 as usize].saturating_add(1);
+            }
+        }
+        for (n, &d) in drivers.iter().enumerate() {
+            if d == 0 {
+                // Undriven nets are only legal if also unread.
+                let read = self.insts.iter().enumerate().any(|(i, _)| {
+                    self.inst_ins(i).contains(&NetId(n as u32))
+                }) || self.outputs.contains(&NetId(n as u32));
+                if read {
+                    return Err(Error::netlist(format!(
+                        "net {n} is read but has no driver"
+                    )));
+                }
+            } else if d > 1 {
+                return Err(Error::netlist(format!(
+                    "net {n} has {d} drivers"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Census: per-cell instance counts, total transistors, total cells.
+    pub fn census(&self, lib: &Library) -> Census {
+        let mut per_cell = vec![0u64; lib.len()];
+        for inst in &self.insts {
+            per_cell[inst.cell] += 1;
+        }
+        let transistors = per_cell
+            .iter()
+            .enumerate()
+            .map(|(c, &n)| n * u64::from(lib.cell(c).transistors))
+            .sum();
+        Census {
+            cells: self.insts.len() as u64,
+            transistors,
+            nets: self.n_nets() as u64,
+            per_cell,
+        }
+    }
+}
+
+/// Elaboration census (for `tnn7 complexity`, Fig. 19's "32M gates /
+/// 128M transistors" claim).
+#[derive(Debug, Clone)]
+pub struct Census {
+    pub cells: u64,
+    pub transistors: u64,
+    pub nets: u64,
+    /// Instance count per library cell id.
+    pub per_cell: Vec<u64>,
+}
+
+impl Census {
+    /// Scale all counts by `k` (hierarchical roll-up of identical blocks).
+    pub fn scaled(&self, k: u64) -> Census {
+        Census {
+            cells: self.cells * k,
+            transistors: self.transistors * k,
+            nets: self.nets * k,
+            per_cell: self.per_cell.iter().map(|&n| n * k).collect(),
+        }
+    }
+
+    /// Merge another census into this one.
+    pub fn add(&mut self, other: &Census) {
+        self.cells += other.cells;
+        self.transistors += other.transistors;
+        self.nets += other.nets;
+        if self.per_cell.len() < other.per_cell.len() {
+            self.per_cell.resize(other.per_cell.len(), 0);
+        }
+        for (i, &n) in other.per_cell.iter().enumerate() {
+            self.per_cell[i] += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+
+    #[test]
+    fn new_netlist_has_tie_constants() {
+        let lib = Library::asap7_only();
+        let nl = Netlist::new("t", &lib);
+        assert_eq!(nl.insts.len(), 2);
+        assert!(nl.validate(&lib).is_ok());
+    }
+
+    #[test]
+    fn validate_catches_double_driver() {
+        let lib = Library::asap7_only();
+        let mut nl = Netlist::new("t", &lib);
+        let a = nl.new_net();
+        let inv = lib.id("INVx1").unwrap();
+        nl.inputs.push(a);
+        let y = nl.new_net();
+        nl.push_inst(inv, &[a], &[y], ClockDomain::Comb, RegionId(0));
+        nl.push_inst(inv, &[a], &[y], ClockDomain::Comb, RegionId(0));
+        assert!(nl.validate(&lib).is_err());
+    }
+
+    #[test]
+    fn validate_catches_undriven_read() {
+        let lib = Library::asap7_only();
+        let mut nl = Netlist::new("t", &lib);
+        let ghost = nl.new_net();
+        let y = nl.new_net();
+        let inv = lib.id("INVx1").unwrap();
+        nl.push_inst(inv, &[ghost], &[y], ClockDomain::Comb, RegionId(0));
+        assert!(nl.validate(&lib).is_err());
+    }
+
+    #[test]
+    fn validate_catches_domain_misuse() {
+        let lib = Library::asap7_only();
+        let mut nl = Netlist::new("t", &lib);
+        let a = nl.new_net();
+        nl.inputs.push(a);
+        let y = nl.new_net();
+        let inv = lib.id("INVx1").unwrap();
+        nl.push_inst(inv, &[a], &[y], ClockDomain::Aclk, RegionId(0));
+        assert!(nl.validate(&lib).is_err());
+    }
+
+    #[test]
+    fn census_counts_transistors() {
+        let lib = Library::asap7_only();
+        let mut nl = Netlist::new("t", &lib);
+        let a = nl.new_net();
+        nl.inputs.push(a);
+        let y = nl.new_net();
+        let inv = lib.id("INVx1").unwrap();
+        nl.push_inst(inv, &[a], &[y], ClockDomain::Comb, RegionId(0));
+        let c = nl.census(&lib);
+        assert_eq!(c.cells, 3); // 2 ties + inv
+        assert_eq!(c.transistors, 2 + 2 + 2);
+        let s = c.scaled(10);
+        assert_eq!(s.transistors, 60);
+    }
+
+    #[test]
+    fn region_paths_compose() {
+        let lib = Library::asap7_only();
+        let mut nl = Netlist::new("t", &lib);
+        let a = nl.add_region("col", RegionId(0));
+        let b = nl.add_region("syn", a);
+        assert_eq!(nl.region_path(b), "top/col/syn");
+    }
+}

@@ -1,0 +1,76 @@
+//! Multi-column layer roll-up.
+//!
+//! The paper assesses the multi-column/multi-layer prototype "using
+//! synaptic scaling" (§III.C): identical columns are characterized once
+//! and rolled up by count.  This module provides that hierarchy level —
+//! a layer is `cols` identical [`ColumnSpec`] columns plus its share of
+//! the gamma-clock distribution.
+
+use crate::cells::Library;
+use crate::error::Result;
+use crate::netlist::ir::Census;
+use crate::netlist::{Flavor, Netlist};
+
+use super::column::{build_column, ColumnPorts, ColumnSpec};
+
+/// A layer: `cols` identical columns.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerSpec {
+    /// Number of identical columns.
+    pub cols: usize,
+    /// Per-column geometry.
+    pub column: ColumnSpec,
+}
+
+impl LayerSpec {
+    /// Neurons in the layer.
+    pub fn neurons(&self) -> usize {
+        self.cols * self.column.q
+    }
+
+    /// Synapses in the layer.
+    pub fn synapses(&self) -> usize {
+        self.cols * self.column.p * self.column.q
+    }
+}
+
+/// One elaborated representative column + the scale factor.
+pub struct LayerModel {
+    pub spec: LayerSpec,
+    pub netlist: Netlist,
+    pub ports: ColumnPorts,
+    pub flavor: Flavor,
+}
+
+impl LayerModel {
+    /// Elaborate the representative column for this layer.
+    pub fn build(lib: &Library, flavor: Flavor, spec: LayerSpec) -> Result<Self> {
+        let (netlist, ports) = build_column(lib, flavor, &spec.column)?;
+        Ok(LayerModel { spec, netlist, ports, flavor })
+    }
+
+    /// Layer census = column census × cols (synaptic scaling).
+    pub fn census(&self, lib: &Library) -> Census {
+        self.netlist.census(lib).scaled(self.spec.cols as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts_scale_linearly() {
+        let lib = Library::with_macros();
+        let spec = LayerSpec {
+            cols: 5,
+            column: ColumnSpec { p: 4, q: 2, theta: 6 },
+        };
+        let m = LayerModel::build(&lib, Flavor::Std, spec).unwrap();
+        let col = m.netlist.census(&lib);
+        let lay = m.census(&lib);
+        assert_eq!(lay.transistors, col.transistors * 5);
+        assert_eq!(spec.neurons(), 10);
+        assert_eq!(spec.synapses(), 40);
+    }
+}

@@ -1,0 +1,43 @@
+//! Gate-level netlist IR and elaboration — the Genus-analogue.
+//!
+//! The paper's central experiment is a *netlist substitution*: the same TNN
+//! RTL implemented once with plain ASAP7 standard cells and once with the
+//! custom GDI macro extensions.  This module provides exactly that:
+//!
+//! * [`ir`] — a compact flat netlist IR (nets, cell instances, regions).
+//! * [`builder`] — elaboration helpers (gates, buses, registers, adders).
+//! * [`modules`] — one builder per paper macro (Figs. 2–13), each in BOTH
+//!   flavours: [`Flavor::Std`] elaborates ASAP7 gates, [`Flavor::Custom`]
+//!   instantiates the hard macro cell.
+//! * [`column`] — the p×q TNN column (synapses + neurons + WTA + STDP).
+//! * [`layer`] / [`prototype`] — hierarchical roll-up for the Fig. 19
+//!   2-layer prototype (synaptic scaling, as in the paper's §III.C).
+
+pub mod builder;
+pub mod column;
+pub mod ir;
+pub mod layer;
+pub mod modules;
+pub mod prototype;
+
+pub use builder::Builder;
+pub use ir::{ClockDomain, Instance, NetId, Netlist, RegionId};
+
+/// Implementation flavour of a module: the paper's two columns of Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Flavor {
+    /// Plain ASAP7 standard cells (what Genus elaborates from RTL).
+    Std,
+    /// The custom GDI macro extensions (the paper's contribution).
+    Custom,
+}
+
+impl Flavor {
+    /// Label used in reports ("Standard Cell-Based" / "Custom Macro-Based").
+    pub fn label(self) -> &'static str {
+        match self {
+            Flavor::Std => "Standard Cell-Based",
+            Flavor::Custom => "Custom Macro-Based",
+        }
+    }
+}

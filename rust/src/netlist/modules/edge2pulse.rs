@@ -1,0 +1,56 @@
+//! `edge2pulse` (Fig. 13): one-cycle pulse on a rising edge.
+//!
+//! Generates the gamma reset strobes (`grst`) from `gclk` "for performing
+//! essential computational reset between consecutive computational
+//! cycles", and the sample strobes for the STDP `less_equal` register.
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+/// Build edge2pulse; returns the pulse net.
+pub fn edge2pulse(b: &mut Builder<'_>, flavor: Flavor, d: NetId) -> NetId {
+    match flavor {
+        Flavor::Std => {
+            let prev = b.dff(d, ClockDomain::Aclk);
+            let nprev = b.inv(prev);
+            b.and2(d, nprev)
+        }
+        Flavor::Custom => {
+            b.macro_cell(MacroKind::Edge2Pulse, &[d], ClockDomain::Aclk)[0]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    fn module(b: &mut Builder<'_>, f: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let d = b.input("d");
+        let p = edge2pulse(b, f, d);
+        (vec![d], vec![p])
+    }
+
+    #[test]
+    fn flavours_equivalent_random() {
+        let stim = testutil::random_stimulus(1, 400, 0x9e37, 0);
+        testutil::assert_equiv(module, &stim).unwrap();
+    }
+
+    #[test]
+    fn emits_one_pulse_per_edge() {
+        use crate::cells::Library;
+        use crate::sim::Simulator;
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, Flavor::Std, module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        let pattern = [false, true, true, true, false, false, true, true];
+        let mut pulses = 0;
+        for v in pattern {
+            sim.tick(&[(nl.inputs[0], v)], false);
+            pulses += sim.get(nl.outputs[0]) as u32;
+        }
+        assert_eq!(pulses, 2);
+    }
+}

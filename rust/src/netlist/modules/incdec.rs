@@ -1,0 +1,57 @@
+//! `incdec` (Fig. 10): fold the BRV-gated STDP cases into the weight
+//! update strobes: `inc = capture_g | search_g`, `dec = backoff_g | minus_g`.
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+/// Build incdec; returns `(inc, dec)`.
+pub fn incdec(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    capture_g: NetId,
+    backoff_g: NetId,
+    search_g: NetId,
+    minus_g: NetId,
+) -> (NetId, NetId) {
+    match flavor {
+        Flavor::Std => {
+            (b.or2(capture_g, search_g), b.or2(backoff_g, minus_g))
+        }
+        Flavor::Custom => {
+            let o = b.macro_cell(
+                MacroKind::IncDec,
+                &[capture_g, backoff_g, search_g, minus_g],
+                ClockDomain::Comb,
+            );
+            (o[0], o[1])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    fn module(b: &mut Builder<'_>, flavor: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let c = b.input("cap");
+        let bk = b.input("back");
+        let s = b.input("srch");
+        let m = b.input("minus");
+        let (inc, dec) = incdec(b, flavor, c, bk, s, m);
+        (vec![c, bk, s, m], vec![inc, dec])
+    }
+
+    #[test]
+    fn flavours_equivalent_exhaustive() {
+        let stim: Vec<(Vec<bool>, bool)> = (0..16u8)
+            .map(|v| {
+                (
+                    (0..4).map(|i| v >> i & 1 == 1).collect::<Vec<_>>(),
+                    false,
+                )
+            })
+            .collect();
+        testutil::assert_equiv(module, &stim).unwrap();
+    }
+}

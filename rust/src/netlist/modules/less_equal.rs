@@ -1,0 +1,78 @@
+//! `less_equal` (Fig. 5 / Figs. 14–15): the WTA time comparator.
+//!
+//! On monotone spike *levels* (a net that rises at the spike time and
+//! stays high for the rest of the wave), "a spiked no later than b" is the
+//! pointwise implication `le = a | !b`: sampled at b's rising edge it
+//! yields exactly `t_a <= t_b`.  The paper's custom macro realizes this
+//! with a 4-transistor pass-gate network; the standard-cell twin is the
+//! INVx1 + OR2x2 pair Genus maps the expression to (Fig. 14 vs Fig. 15).
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+/// Build `le = a | !b` in the requested flavour.
+pub fn less_equal(b: &mut Builder<'_>, flavor: Flavor, a: NetId, bb: NetId) -> NetId {
+    match flavor {
+        Flavor::Std => {
+            let nb = b.inv(bb);
+            b.or2(a, nb)
+        }
+        Flavor::Custom => {
+            b.macro_cell(MacroKind::LessEqual, &[a, bb], ClockDomain::Comb)[0]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    fn module(
+        b: &mut Builder<'_>,
+        flavor: Flavor,
+    ) -> (Vec<NetId>, Vec<NetId>) {
+        let a = b.input("a");
+        let bb = b.input("b");
+        let le = less_equal(b, flavor, a, bb);
+        (vec![a, bb], vec![le])
+    }
+
+    #[test]
+    fn flavours_equivalent_exhaustive() {
+        let stim: Vec<(Vec<bool>, bool)> = (0..4u8)
+            .map(|v| (vec![v & 1 != 0, v & 2 != 0], false))
+            .collect();
+        testutil::assert_equiv(module, &stim).unwrap();
+    }
+
+    #[test]
+    fn truth_table_is_implication() {
+        use crate::cells::Library;
+        use crate::sim::Simulator;
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, Flavor::Custom, module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for (a, b, want) in [
+            (false, false, true),
+            (true, false, true),
+            (true, true, true),
+            (false, true, false),
+        ] {
+            sim.tick(&[(nl.inputs[0], a), (nl.inputs[1], b)], false);
+            assert_eq!(sim.get(nl.outputs[0]), want, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn custom_is_structurally_smaller() {
+        use crate::cells::Library;
+        let lib = Library::with_macros();
+        let std = testutil::build(&lib, Flavor::Std, module);
+        let cus = testutil::build(&lib, Flavor::Custom, module);
+        assert!(
+            cus.census(&lib).transistors < std.census(&lib).transistors,
+            "Fig. 14/15: custom less_equal must be smaller"
+        );
+    }
+}

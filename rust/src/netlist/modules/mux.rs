@@ -1,0 +1,103 @@
+//! 2:1 mux (Figs. 11 / 16–17) and the GDI mux tree.
+//!
+//! The paper's flagship cell comparison: the ASAP7 standard-cell mux is a
+//! 12-transistor static gate; the custom `mux2to1gdi` is a bare 2T GDI
+//! pair.  Seven of them compose the 8:1 multiplexing logic of
+//! `stabilize_func` (Fig. 18).
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+/// `y = s ? d1 : d0` in the requested flavour.
+pub fn mux2(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    d0: NetId,
+    d1: NetId,
+    s: NetId,
+) -> NetId {
+    match flavor {
+        Flavor::Std => b.mux2(d0, d1, s),
+        Flavor::Custom => {
+            b.macro_cell(MacroKind::Mux2Gdi, &[d0, d1, s], ClockDomain::Comb)[0]
+        }
+    }
+}
+
+/// 2^k : 1 mux tree from 2:1 muxes (sel LSB-first).  With
+/// `Flavor::Custom` this is the Fig. 18 construction (seven `mux2to1gdi`
+/// cells for 8:1).
+pub fn mux_tree(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    data: &[NetId],
+    sel: &[NetId],
+) -> NetId {
+    assert_eq!(data.len(), 1 << sel.len(), "mux tree width");
+    let mut level: Vec<NetId> = data.to_vec();
+    for &s in sel {
+        level = level
+            .chunks(2)
+            .map(|pair| mux2(b, flavor, pair[0], pair[1], s))
+            .collect();
+    }
+    level[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    fn module8(
+        b: &mut Builder<'_>,
+        flavor: Flavor,
+    ) -> (Vec<NetId>, Vec<NetId>) {
+        let data = b.input_bus("d", 8);
+        let sel = b.input_bus("s", 3);
+        let y = mux_tree(b, flavor, &data, &sel);
+        let mut ins = data;
+        ins.extend(sel);
+        (ins, vec![y])
+    }
+
+    #[test]
+    fn tree_flavours_equivalent_random() {
+        let stim = testutil::random_stimulus(11, 300, 0x5eed, 0);
+        testutil::assert_equiv(module8, &stim).unwrap();
+    }
+
+    #[test]
+    fn selects_every_lane() {
+        use crate::cells::Library;
+        use crate::sim::Simulator;
+        let lib = Library::with_macros();
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let nl = testutil::build(&lib, flavor, module8);
+            let mut sim = Simulator::new(&nl, &lib).unwrap();
+            for lane in 0..8usize {
+                let mut iv: Vec<_> = (0..8)
+                    .map(|i| (nl.inputs[i], i == lane))
+                    .collect();
+                for k in 0..3 {
+                    iv.push((nl.inputs[8 + k], lane >> k & 1 == 1));
+                }
+                sim.tick(&iv, false);
+                assert!(sim.get(nl.outputs[0]), "{flavor:?} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn custom_tree_is_7x_smaller_in_transistors() {
+        // Fig. 18: 7 GDI muxes ~ the complexity of ONE std mux.
+        use crate::cells::Library;
+        let lib = Library::with_macros();
+        let std = testutil::build(&lib, Flavor::Std, module8);
+        let cus = testutil::build(&lib, Flavor::Custom, module8);
+        let st = std.census(&lib).transistors;
+        let ct = cus.census(&lib).transistors;
+        // 7x12=84 vs 7x2=14 (+4T of ties in both).
+        assert!(ct * 4 < st, "custom {ct}T vs std {st}T");
+    }
+}

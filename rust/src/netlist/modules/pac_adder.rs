@@ -1,0 +1,253 @@
+//! `pac_adder` (Fig. 4) and the neuron body built from it.
+//!
+//! The SRM0 neuron body is a *parallel accumulative counter*: every unit
+//! cycle it adds the number of active `up` strobes (one per synapse whose
+//! RNL ramp is still rising) into a body-potential register and fires when
+//! the potential crosses theta.  Structurally: a popcount tree over the p
+//! `up` bits, a ripple-carry accumulate ("architectural use of
+//! ripple-carry adder chain propagation provides noticeable optimization"),
+//! and a threshold comparator.
+//!
+//! The adder slice is the paper's Fig. 4 single-bit adder: ASAP7 XOR3
+//! (sum) + MAJ3 (carry) in the std flavour — exactly what Genus infers —
+//! and the diffusion-shared `pac_adder` hard slice in the custom flavour.
+//! The threshold comparator has no macro in the paper's set and is
+//! synthesized from standard cells in both flavours.
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+/// One single-bit adder slice; returns `(sum, carry)`.
+pub fn adder_slice(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    a: NetId,
+    bb: NetId,
+    cin: NetId,
+) -> (NetId, NetId) {
+    match flavor {
+        Flavor::Std => b.full_adder(a, bb, cin),
+        Flavor::Custom => {
+            let o = b.macro_cell(
+                MacroKind::PacAdder,
+                &[a, bb, cin],
+                ClockDomain::Comb,
+            );
+            (o[0], o[1])
+        }
+    }
+}
+
+/// Ripple-carry add of equal-width buses from slices; returns (sum, cout).
+pub fn ripple_add(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    a: &[NetId],
+    bb: &[NetId],
+) -> (Vec<NetId>, NetId) {
+    assert_eq!(a.len(), bb.len());
+    let mut carry = b.zero();
+    let mut out = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let (s, c) = adder_slice(b, flavor, a[i], bb[i], carry);
+        out.push(s);
+        carry = c;
+    }
+    (out, carry)
+}
+
+/// Popcount of `bits` from adder slices (LSB-first).
+pub fn popcount(b: &mut Builder<'_>, flavor: Flavor, bits: &[NetId]) -> Vec<NetId> {
+    match bits.len() {
+        0 => vec![b.zero()],
+        1 => vec![bits[0]],
+        2 => {
+            let z = b.zero();
+            let (s, c) = adder_slice(b, flavor, bits[0], bits[1], z);
+            vec![s, c]
+        }
+        3 => {
+            let (s, c) = adder_slice(b, flavor, bits[0], bits[1], bits[2]);
+            vec![s, c]
+        }
+        n => {
+            let mid = n / 2;
+            let mut l = popcount(b, flavor, &bits[..mid]);
+            let mut r = popcount(b, flavor, &bits[mid..]);
+            let w = l.len().max(r.len());
+            let zero = b.zero();
+            l.resize(w, zero);
+            r.resize(w, zero);
+            let (mut s, c) = ripple_add(b, flavor, &l, &r);
+            s.push(c);
+            s
+        }
+    }
+}
+
+/// Neuron-body ports.
+pub struct NeuronBody {
+    /// Fires (level) the cycle the potential first reaches theta.
+    pub fire: NetId,
+    /// Current accumulator bits (debug / tests).
+    pub acc: Vec<NetId>,
+}
+
+/// Build the parallel accumulative counter + threshold compare.
+///
+/// `ups` are the p synapse strobes, `theta` the firing threshold
+/// (elaboration constant, as in the RTL), `grst` clears the accumulator
+/// between waves.  `fire` is combinational on the *incoming* sum so the
+/// spike is visible in the same unit cycle the potential crosses theta
+/// (matching `ref.py`).
+pub fn neuron_body(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    ups: &[NetId],
+    theta: u64,
+    grst: NetId,
+) -> NeuronBody {
+    let p = ups.len();
+    // Accumulator wide enough for the worst-case potential 7p.
+    let max_pot = 7 * p as u64;
+    let width = (64 - max_pot.leading_zeros()) as usize;
+    let pop = popcount(b, flavor, ups);
+
+    // Accumulator registers with feedback.
+    let acc: Vec<NetId> = (0..width).map(|_| b.net()).collect();
+    let zero = b.zero();
+    let mut pop_ext = pop.clone();
+    pop_ext.resize(width, zero);
+    let (total, _ovf) = ripple_add(b, flavor, &acc, &pop_ext);
+    let ngrst = b.inv(grst);
+    for k in 0..width {
+        let d = b.and2(total[k], ngrst);
+        b.inst_with_outs(
+            crate::cells::CellKind::Dff,
+            &[d],
+            &[acc[k]],
+            ClockDomain::Aclk,
+        );
+    }
+    // fire = (acc + pop) >= theta, combinational.
+    let theta_bus = b.const_bus(theta, width);
+    let fire = b.geq(&total, &theta_bus);
+    NeuronBody { fire, acc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+    use crate::cells::Library;
+    use crate::sim::Simulator;
+
+    fn slice_module(b: &mut Builder<'_>, f: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let a = b.input("a");
+        let x = b.input("b");
+        let c = b.input("cin");
+        let (s, co) = adder_slice(b, f, a, x, c);
+        (vec![a, x, c], vec![s, co])
+    }
+
+    #[test]
+    fn slice_flavours_equivalent_exhaustive() {
+        let stim: Vec<(Vec<bool>, bool)> = (0..8u8)
+            .map(|v| ((0..3).map(|i| v >> i & 1 == 1).collect(), false))
+            .collect();
+        testutil::assert_equiv(slice_module, &stim).unwrap();
+    }
+
+    fn pop9(b: &mut Builder<'_>, f: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let ins = b.input_bus("x", 9);
+        let s = popcount(b, f, &ins);
+        (ins, s)
+    }
+
+    #[test]
+    fn popcount_counts_correctly_both_flavours() {
+        let lib = Library::with_macros();
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let nl = testutil::build(&lib, flavor, pop9);
+            let mut sim = Simulator::new(&nl, &lib).unwrap();
+            for v in [0u16, 1, 0b101, 0b111111111, 0b10101, 0b110011] {
+                let iv: Vec<_> = (0..9)
+                    .map(|i| (nl.inputs[i], v >> i & 1 == 1))
+                    .collect();
+                sim.tick(&iv, false);
+                let got: u32 = nl
+                    .outputs
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &o)| (sim.get(o) as u32) << k)
+                    .sum();
+                assert_eq!(got, v.count_ones(), "{flavor:?} v={v:b}");
+            }
+        }
+    }
+
+    fn body_module(b: &mut Builder<'_>, f: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let ups = b.input_bus("up", 6);
+        let grst = b.input("grst");
+        let nb = neuron_body(b, f, &ups, 10, grst);
+        let mut ins = ups;
+        ins.push(grst);
+        (ins, vec![nb.fire])
+    }
+
+    #[test]
+    fn body_flavours_equivalent_random_waves() {
+        let mut stim = Vec::new();
+        for wave in 0..12 {
+            for c in 0..16 {
+                let mut bits: Vec<bool> =
+                    (0..6).map(|i| (wave * 31 + c * 7 + i) % 3 == 0).collect();
+                bits.push(c == 15); // grst on last cycle
+                stim.push((bits, false));
+            }
+        }
+        testutil::assert_equiv(body_module, &stim).unwrap();
+    }
+
+    #[test]
+    fn fires_when_potential_crosses_theta() {
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, Flavor::Std, body_module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        // 4 ups/cycle, theta=10 -> potential 4,8,12: fires on 3rd cycle.
+        let mut fire_cycle = None;
+        for c in 0..5 {
+            let mut iv: Vec<_> =
+                (0..6).map(|i| (nl.inputs[i], i < 4)).collect();
+            iv.push((nl.inputs[6], false));
+            sim.tick(&iv, false);
+            if fire_cycle.is_none() && sim.get(nl.outputs[0]) {
+                fire_cycle = Some(c);
+            }
+        }
+        assert_eq!(fire_cycle, Some(2));
+    }
+
+    #[test]
+    fn grst_clears_potential() {
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, Flavor::Custom, body_module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        // Accumulate 8, then reset, then verify fresh accumulation.
+        for _ in 0..2 {
+            let mut iv: Vec<_> = (0..6).map(|i| (nl.inputs[i], i < 4)).collect();
+            iv.push((nl.inputs[6], false));
+            sim.tick(&iv, false);
+        }
+        let mut iv: Vec<_> = (0..6).map(|i| (nl.inputs[i], false)).collect();
+        iv.push((nl.inputs[6], true)); // grst
+        sim.tick(&iv, false);
+        // Now 2 ups/cycle: should NOT fire within 4 cycles (8 < 10).
+        for _ in 0..4 {
+            let mut iv: Vec<_> = (0..6).map(|i| (nl.inputs[i], i < 2)).collect();
+            iv.push((nl.inputs[6], false));
+            sim.tick(&iv, false);
+            assert!(!sim.get(nl.outputs[0]));
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! `spike_gen` (Fig. 12): input spike edge → 8-cycle pulse + cycle count.
+//!
+//! The input is a monotone level that rises at the encoded spike time and
+//! stays high for the rest of the wave.  The module emits
+//! * `pulse` — high for exactly 8 unit cycles starting at the rise
+//!   ("8-cycle wide pulses for spikes required by syn_output"), and
+//! * `count[3]` — cycles elapsed since the rise (the RNL phase the
+//!   synapses compare their weight against).
+//!
+//! Implementation: a 4-bit saturating cycle counter enabled by
+//! `d & !count[3]`, cleared by `grst` between waves.
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+/// spike_gen ports.
+pub struct SpikeGenPorts {
+    /// 8-cycle wide spike pulse.
+    pub pulse: NetId,
+    /// Cycles since the spike (3 LSBs of the counter).
+    pub count: [NetId; 3],
+}
+
+/// Build spike_gen in the requested flavour.
+pub fn spike_gen(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    d: NetId,
+    grst: NetId,
+) -> SpikeGenPorts {
+    match flavor {
+        Flavor::Std => {
+            // 4-bit counter registers with feedback.
+            let q: Vec<NetId> = (0..4).map(|_| b.net()).collect();
+            let done = q[3];
+            let ndone = b.inv(done);
+            let en = b.and2(d, ndone);
+            // increment-by-en half-adder chain
+            let (s0, c0) = b.half_adder(q[0], en);
+            let (s1, c1) = b.half_adder(q[1], c0);
+            let (s2, c2) = b.half_adder(q[2], c1);
+            let s3 = b.xor2(q[3], c2);
+            // synchronous clear: d & !grst
+            let ngrst = b.inv(grst);
+            for (k, s) in [s0, s1, s2, s3].into_iter().enumerate() {
+                let dk = b.and2(s, ngrst);
+                b.inst_with_outs(
+                    crate::cells::CellKind::Dff,
+                    &[dk],
+                    &[q[k]],
+                    ClockDomain::Aclk,
+                );
+            }
+            SpikeGenPorts { pulse: en, count: [q[0], q[1], q[2]] }
+        }
+        Flavor::Custom => {
+            let o = b.macro_cell(
+                MacroKind::SpikeGen,
+                &[d, grst],
+                ClockDomain::Aclk,
+            );
+            SpikeGenPorts { pulse: o[0], count: [o[1], o[2], o[3]] }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+    use crate::cells::Library;
+    use crate::sim::Simulator;
+
+    fn module(b: &mut Builder<'_>, flavor: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let d = b.input("d");
+        let grst = b.input("grst");
+        let p = spike_gen(b, flavor, d, grst);
+        (vec![d, grst], vec![p.pulse, p.count[0], p.count[1], p.count[2]])
+    }
+
+    /// Wave stimulus: level rises at cycle `s`, wave of 17 cycles with
+    /// grst at the last cycle.
+    fn wave(s: usize) -> Vec<(Vec<bool>, bool)> {
+        (0..17)
+            .map(|c| (vec![c >= s && c < 16, c == 16], c == 15))
+            .collect()
+    }
+
+    #[test]
+    fn flavours_equivalent_all_spike_times() {
+        for s in 0..8 {
+            let mut stim = wave(s);
+            stim.extend(wave(7 - s)); // second wave after reset
+            testutil::assert_equiv(module, &stim).unwrap();
+        }
+    }
+
+    #[test]
+    fn pulse_is_exactly_eight_cycles_and_count_tracks() {
+        let lib = Library::with_macros();
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let nl = testutil::build(&lib, flavor, module);
+            let mut sim = Simulator::new(&nl, &lib).unwrap();
+            let s = 3usize;
+            let mut pulse_cycles = Vec::new();
+            for c in 0..17 {
+                sim.tick(
+                    &[(nl.inputs[0], c >= s && c < 16), (nl.inputs[1], c == 16)],
+                    c == 15,
+                );
+                if sim.get(nl.outputs[0]) {
+                    let cnt = (sim.get(nl.outputs[1]) as u8)
+                        | (sim.get(nl.outputs[2]) as u8) << 1
+                        | (sim.get(nl.outputs[3]) as u8) << 2;
+                    assert_eq!(cnt as usize, c - s, "{flavor:?} count");
+                    pulse_cycles.push(c);
+                }
+            }
+            assert_eq!(pulse_cycles, (s..s + 8).collect::<Vec<_>>(), "{flavor:?}");
+        }
+    }
+
+    #[test]
+    fn grst_clears_for_next_wave() {
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, Flavor::Std, module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        // Wave 1: spike at 0 (counter saturates); wave 2: spike at 2.
+        for c in 0..17 {
+            sim.tick(&[(nl.inputs[0], c < 16), (nl.inputs[1], c == 16)], c == 15);
+        }
+        let mut pulses = 0;
+        for c in 0..16 {
+            sim.tick(&[(nl.inputs[0], c >= 2), (nl.inputs[1], false)], false);
+            pulses += sim.get(nl.outputs[0]) as u32;
+        }
+        assert_eq!(pulses, 8, "counter must be clear after grst");
+    }
+}

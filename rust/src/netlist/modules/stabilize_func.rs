@@ -1,0 +1,65 @@
+//! `stabilize_func` (Figs. 9 / 18): weight-indexed BRV selection.
+//!
+//! Selects one of 8 Bernoulli lines by the 3-bit synaptic weight — the
+//! stabilization function of [2] that slows updates near the weight rails
+//! so STDP converges.  Functionally an 8:1 mux; the custom flavour is the
+//! paper's hard macro (seven `mux2to1gdi` cells, Fig. 18), the standard
+//! flavour is the 7×MUX2 tree Genus elaborates.
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+use super::mux;
+
+/// Build the 8:1 BRV select.  `brv` has 8 lines, `w` the 3 weight bits
+/// (LSB first).
+pub fn stabilize_func(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    brv: &[NetId],
+    w: &[NetId],
+) -> NetId {
+    assert_eq!(brv.len(), 8);
+    assert_eq!(w.len(), 3);
+    match flavor {
+        Flavor::Std => mux::mux_tree(b, Flavor::Std, brv, w),
+        Flavor::Custom => {
+            let mut ins = brv.to_vec();
+            ins.extend_from_slice(w);
+            b.macro_cell(MacroKind::StabilizeFunc, &ins, ClockDomain::Comb)[0]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    fn module(b: &mut Builder<'_>, flavor: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let brv = b.input_bus("brv", 8);
+        let w = b.input_bus("w", 3);
+        let y = stabilize_func(b, flavor, &brv, &w);
+        let mut ins = brv;
+        ins.extend(w);
+        (ins, vec![y])
+    }
+
+    #[test]
+    fn flavours_equivalent_random() {
+        let stim = testutil::random_stimulus(11, 400, 0xfeed, 0);
+        testutil::assert_equiv(module, &stim).unwrap();
+    }
+
+    #[test]
+    fn complexity_similar_to_single_std_mux() {
+        // Fig. 18's claim, at netlist level.
+        use crate::cells::Library;
+        let lib = Library::with_macros();
+        let cus = testutil::build(&lib, Flavor::Custom, module);
+        let t = cus.census(&lib).transistors;
+        let std_mux = lib.cell(lib.id("MUX2x1").unwrap()).transistors as u64;
+        // minus the 4T of tie cells present in every netlist
+        assert!(t - 4 <= 2 * std_mux, "{t}T vs mux {std_mux}T");
+    }
+}

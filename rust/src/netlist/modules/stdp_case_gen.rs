@@ -1,0 +1,96 @@
+//! `stdp_case_gen` (Fig. 8): decode the four STDP timing cases.
+//!
+//! Inputs are the end-of-wave levels `x` (input spiked), `y` (post-WTA
+//! output spiked) and `le` (input no later than output, from the
+//! `less_equal` sample register).  Outputs follow `ref.py`:
+//! capture = x·y·le, backoff = x·y·!le, search = x·!y, minus = !x·y.
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+/// Case outputs, in (capture, backoff, search, minus) order.
+pub struct StdpCases {
+    pub capture: NetId,
+    pub backoff: NetId,
+    pub search: NetId,
+    pub minus: NetId,
+}
+
+/// Build the case decoder in the requested flavour.
+pub fn stdp_case_gen(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    x: NetId,
+    y: NetId,
+    le: NetId,
+) -> StdpCases {
+    match flavor {
+        Flavor::Std => {
+            let nx = b.inv(x);
+            let ny = b.inv(y);
+            let nle = b.inv(le);
+            StdpCases {
+                capture: b.and3(x, y, le),
+                backoff: b.and3(x, y, nle),
+                search: b.and2(x, ny),
+                minus: b.and2(nx, y),
+            }
+        }
+        Flavor::Custom => {
+            let o = b.macro_cell(
+                MacroKind::StdpCaseGen,
+                &[x, y, le],
+                ClockDomain::Comb,
+            );
+            StdpCases {
+                capture: o[0],
+                backoff: o[1],
+                search: o[2],
+                minus: o[3],
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    fn module(b: &mut Builder<'_>, flavor: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let x = b.input("x");
+        let y = b.input("y");
+        let le = b.input("le");
+        let c = stdp_case_gen(b, flavor, x, y, le);
+        (vec![x, y, le], vec![c.capture, c.backoff, c.search, c.minus])
+    }
+
+    #[test]
+    fn flavours_equivalent_exhaustive() {
+        let stim: Vec<(Vec<bool>, bool)> = (0..8u8)
+            .map(|v| (vec![v & 1 != 0, v & 2 != 0, v & 4 != 0], false))
+            .collect();
+        testutil::assert_equiv(module, &stim).unwrap();
+    }
+
+    #[test]
+    fn cases_are_mutually_exclusive() {
+        use crate::cells::Library;
+        use crate::sim::Simulator;
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, Flavor::Std, module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for v in 0..8u8 {
+            let iv: Vec<_> = (0..3)
+                .map(|i| (nl.inputs[i], v >> i & 1 == 1))
+                .collect();
+            sim.tick(&iv, false);
+            let active: u32 = nl
+                .outputs
+                .iter()
+                .map(|&o| sim.get(o) as u32)
+                .sum();
+            assert!(active <= 1, "v={v}: {active} cases active");
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! `syn_output` (Fig. 3): the ramp-no-leak readout.
+//!
+//! A synapse contributes +1 to its neuron's parallel accumulative counter
+//! on every cycle where `count < weight` during the 8-cycle spike pulse:
+//! `up = pulse & (count < w)`.  Accumulated over cycles this is exactly
+//! the RNL response `min(t+1-s, w)` of `ref.py`.
+//!
+//! Std flavour: 3-bit magnitude comparator (borrow chain of F1 terms) +
+//! output AND, as Genus maps it.  Custom flavour: the GDI hard macro.
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+/// Build syn_output; returns the `up` strobe.
+pub fn syn_output(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    count: &[NetId; 3],
+    w: &[NetId; 3],
+    pulse: NetId,
+) -> NetId {
+    match flavor {
+        Flavor::Std => {
+            let lt = b.lt(&count[..], &w[..]);
+            b.and2(pulse, lt)
+        }
+        Flavor::Custom => {
+            b.macro_cell(
+                MacroKind::SynOutput,
+                &[count[0], count[1], count[2], w[0], w[1], w[2], pulse],
+                ClockDomain::Comb,
+            )[0]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    fn module(b: &mut Builder<'_>, flavor: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let c = b.input_bus("c", 3);
+        let w = b.input_bus("w", 3);
+        let p = b.input("pulse");
+        let up = syn_output(
+            b,
+            flavor,
+            &[c[0], c[1], c[2]],
+            &[w[0], w[1], w[2]],
+            p,
+        );
+        let mut ins = c;
+        ins.extend(w);
+        ins.push(p);
+        (ins, vec![up])
+    }
+
+    #[test]
+    fn flavours_equivalent_exhaustive() {
+        let stim: Vec<(Vec<bool>, bool)> = (0..128u8)
+            .map(|v| ((0..7).map(|i| v >> i & 1 == 1).collect(), false))
+            .collect();
+        testutil::assert_equiv(module, &stim).unwrap();
+    }
+
+    #[test]
+    fn up_matches_rnl_semantics() {
+        use crate::cells::Library;
+        use crate::sim::Simulator;
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, Flavor::Std, module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for c in 0..8u8 {
+            for w in 0..8u8 {
+                let mut iv = Vec::new();
+                for i in 0..3 {
+                    iv.push((nl.inputs[i], c >> i & 1 == 1));
+                }
+                for i in 0..3 {
+                    iv.push((nl.inputs[3 + i], w >> i & 1 == 1));
+                }
+                iv.push((nl.inputs[6], true));
+                sim.tick(&iv, false);
+                assert_eq!(sim.get(nl.outputs[0]), c < w, "c={c} w={w}");
+            }
+        }
+    }
+}

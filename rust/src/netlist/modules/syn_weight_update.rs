@@ -1,0 +1,106 @@
+//! `syn_weight_update` (Fig. 2): the 3-bit saturating weight FSM.
+//!
+//! Holds the synaptic weight and applies the STDP `inc`/`dec` strobes on
+//! the gamma-clock edge (end of computational wave).  `inc` has priority
+//! and both directions saturate — matching `ref.py`'s
+//! `clip(w + delta, 0, 7)` and the behavioral macro model in
+//! [`crate::sim::eval`].
+
+use crate::cells::MacroKind;
+use crate::netlist::{Builder, ClockDomain, Flavor, NetId};
+
+/// Build the weight FSM; returns the 3 weight bits (LSB first).
+pub fn syn_weight_update(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    inc: NetId,
+    dec: NetId,
+) -> [NetId; 3] {
+    match flavor {
+        Flavor::Std => {
+            let q = [b.net(), b.net(), b.net()];
+            let next = b.sat_updown3(&q, inc, dec);
+            for k in 0..3 {
+                b.inst_with_outs(
+                    crate::cells::CellKind::Dff,
+                    &[next[k]],
+                    &[q[k]],
+                    ClockDomain::Gclk,
+                );
+            }
+            q
+        }
+        Flavor::Custom => {
+            let o = b.macro_cell(
+                MacroKind::SynWeightUpdate,
+                &[inc, dec],
+                ClockDomain::Gclk,
+            );
+            [o[0], o[1], o[2]]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+    use crate::cells::Library;
+    use crate::sim::Simulator;
+
+    fn module(b: &mut Builder<'_>, flavor: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let inc = b.input("inc");
+        let dec = b.input("dec");
+        let w = syn_weight_update(b, flavor, inc, dec);
+        (vec![inc, dec], w.to_vec())
+    }
+
+    #[test]
+    fn flavours_equivalent_random_waves() {
+        // Strobes held across a short wave; commit on gamma edges.
+        let stim = testutil::random_stimulus(2, 600, 0xabcd, 4);
+        testutil::assert_equiv(module, &stim).unwrap();
+    }
+
+    fn read_w(sim: &Simulator<'_>, nl: &crate::netlist::Netlist) -> u8 {
+        (sim.get(nl.outputs[0]) as u8)
+            | (sim.get(nl.outputs[1]) as u8) << 1
+            | (sim.get(nl.outputs[2]) as u8) << 2
+    }
+
+    #[test]
+    fn saturating_walk_both_flavours() {
+        let lib = Library::with_macros();
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let nl = testutil::build(&lib, flavor, module);
+            let mut sim = Simulator::new(&nl, &lib).unwrap();
+            // 10 increments: must stop at 7.
+            for _ in 0..10 {
+                sim.tick(&[(nl.inputs[0], true), (nl.inputs[1], false)], true);
+            }
+            sim.tick(&[(nl.inputs[0], false), (nl.inputs[1], false)], false);
+            assert_eq!(read_w(&sim, &nl), 7, "{flavor:?} saturates high");
+            // 10 decrements: must stop at 0.
+            for _ in 0..10 {
+                sim.tick(&[(nl.inputs[0], false), (nl.inputs[1], true)], true);
+            }
+            sim.tick(&[(nl.inputs[0], false), (nl.inputs[1], false)], false);
+            assert_eq!(read_w(&sim, &nl), 0, "{flavor:?} saturates low");
+            // inc priority over dec.
+            sim.tick(&[(nl.inputs[0], true), (nl.inputs[1], true)], true);
+            sim.tick(&[(nl.inputs[0], false), (nl.inputs[1], false)], false);
+            assert_eq!(read_w(&sim, &nl), 1, "{flavor:?} inc wins");
+        }
+    }
+
+    #[test]
+    fn holds_without_gamma_edge() {
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, Flavor::Std, module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for _ in 0..5 {
+            sim.tick(&[(nl.inputs[0], true), (nl.inputs[1], false)], false);
+        }
+        assert_eq!(read_w(&sim, &nl), 0, "no commit without gclk");
+    }
+}

@@ -1,0 +1,167 @@
+//! Winner-Take-All inhibition (§II.C): pass the first spiking neuron's
+//! output intact, nullify the rest, break ties by lowest index.
+//!
+//! Temporal semantics make this a *first-arrival lock*: on the earliest
+//! cycle any `fire` level is high, the lowest-index firing neuron wins and
+//! its `pulse2edge` lock is set; the lock fans back as inhibition so no
+//! later (or same-cycle higher-index) neuron can ever be granted.  The
+//! earliest-arrival comparisons are the role the paper's pass-transistor
+//! `less_equal` macro plays in inhibition; the same-cycle tie-break is the
+//! priority chain.
+
+use crate::netlist::{Builder, Flavor, NetId};
+
+use super::pulse2edge::{pulse2edge, P2eVariant};
+
+/// WTA ports.
+pub struct WtaPorts {
+    /// One-cycle grant pulse per neuron (at its winning spike time).
+    pub grants: Vec<NetId>,
+    /// Latched post-WTA spike level per neuron (asserted until grst).
+    pub locks: Vec<NetId>,
+}
+
+/// Build the WTA over the q neuron `fires` levels.
+pub fn wta(
+    b: &mut Builder<'_>,
+    flavor: Flavor,
+    fires: &[NetId],
+    grst: NetId,
+) -> WtaPorts {
+    let q = fires.len();
+    // Lock registers (allocated up-front: they feed back as inhibition).
+    // Both flavours use the power-optimized pulse2edge (async reset) so
+    // inhibition takes effect identically.
+    let locks: Vec<NetId> = (0..q).map(|_| b.net()).collect();
+    let locked_any = b.or_tree(&locks);
+    let free = b.inv(locked_any);
+
+    let mut grants = Vec::with_capacity(q);
+    let mut prefix: Option<NetId> = None; // OR of fires[0..i]
+    for i in 0..q {
+        let grant = match prefix {
+            None => b.and2(fires[i], free),
+            Some(p) => {
+                let np = b.inv(p);
+                b.and3(fires[i], free, np)
+            }
+        };
+        grants.push(grant);
+        prefix = Some(match prefix {
+            None => fires[i],
+            Some(p) => b.or2(p, fires[i]),
+        });
+    }
+    // Latch grants into locks (drives the pre-allocated lock nets).
+    for i in 0..q {
+        let lock_out = pulse2edge(b, flavor, P2eVariant::PowerOpt, grants[i], grst);
+        // pulse2edge allocated its own output; alias it onto locks[i]
+        // through a buffer to keep single-driver invariants.
+        b.inst_with_outs(
+            crate::cells::CellKind::Buf,
+            &[lock_out],
+            &[locks[i]],
+            crate::netlist::ClockDomain::Comb,
+        );
+    }
+    WtaPorts { grants, locks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+    use crate::cells::Library;
+    use crate::sim::Simulator;
+
+    fn module(b: &mut Builder<'_>, f: Flavor) -> (Vec<NetId>, Vec<NetId>) {
+        let fires = b.input_bus("fire", 4);
+        let grst = b.input("grst");
+        let w = wta(b, f, &fires, grst);
+        let mut ins = fires;
+        ins.push(grst);
+        let mut outs = w.grants;
+        outs.extend(w.locks);
+        (ins, outs)
+    }
+
+    #[test]
+    fn flavours_equivalent_random_waves() {
+        let mut stim = Vec::new();
+        let mut seed = 0x77u64;
+        for _ in 0..30 {
+            let mut rise = [17usize; 4];
+            for r in rise.iter_mut() {
+                seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let v = (seed >> 33) % 20;
+                *r = v as usize; // >15 = never fires
+            }
+            for c in 0..17 {
+                let mut bits: Vec<bool> =
+                    (0..4).map(|i| c >= rise[i] && c < 16).collect();
+                bits.push(c == 16);
+                stim.push((bits, c == 15));
+            }
+        }
+        testutil::assert_equiv(module, &stim).unwrap();
+    }
+
+    /// Drive fires rising at `rise[i]`; return (winner, grant cycle).
+    fn run_wave(rise: &[usize; 4], flavor: Flavor) -> Option<(usize, usize)> {
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, flavor, module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        let mut won = None;
+        for c in 0..16 {
+            let mut iv: Vec<_> = (0..4)
+                .map(|i| (nl.inputs[i], c >= rise[i]))
+                .collect();
+            iv.push((nl.inputs[4], false));
+            sim.tick(&iv, false);
+            for i in 0..4 {
+                if sim.get(nl.outputs[i]) {
+                    assert!(won.is_none(), "double grant");
+                    won = Some((i, c));
+                }
+            }
+        }
+        won
+    }
+
+    #[test]
+    fn earliest_spike_wins() {
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            assert_eq!(run_wave(&[5, 2, 9, 4], flavor), Some((1, 2)), "{flavor:?}");
+        }
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            assert_eq!(run_wave(&[3, 3, 3, 3], flavor), Some((0, 3)), "{flavor:?}");
+        }
+    }
+
+    #[test]
+    fn no_fire_no_grant() {
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            assert_eq!(run_wave(&[17, 17, 17, 17], flavor), None, "{flavor:?}");
+        }
+    }
+
+    #[test]
+    fn at_most_one_winner_locked() {
+        let lib = Library::with_macros();
+        let nl = testutil::build(&lib, Flavor::Std, module);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for c in 0..16 {
+            let mut iv: Vec<_> =
+                (0..4).map(|i| (nl.inputs[i], c >= i + 2)).collect();
+            iv.push((nl.inputs[4], false));
+            sim.tick(&iv, false);
+        }
+        let locked: u32 =
+            (4..8).map(|k| sim.get(nl.outputs[k]) as u32).sum();
+        assert_eq!(locked, 1);
+    }
+}

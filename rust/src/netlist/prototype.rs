@@ -1,0 +1,106 @@
+//! The Fig. 19 2-layer TNN prototype.
+//!
+//! "625 32x12 columns in first layer, and 625 12x10 columns in second
+//! layer" — 13,750 neurons, 315,000 synapses, quoted at 32M gates /
+//! 128M transistors.  PPA is assessed by synaptic scaling of the two
+//! representative columns (exactly the paper's §III.C methodology).
+
+use crate::cells::Library;
+use crate::error::Result;
+use crate::netlist::ir::Census;
+use crate::netlist::Flavor;
+
+use super::column::ColumnSpec;
+use super::layer::{LayerModel, LayerSpec};
+
+/// Prototype geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct PrototypeSpec {
+    pub l1: LayerSpec,
+    pub l2: LayerSpec,
+}
+
+impl PrototypeSpec {
+    /// The paper's Fig. 19 prototype.
+    pub fn paper() -> Self {
+        PrototypeSpec {
+            l1: LayerSpec {
+                cols: 625,
+                column: ColumnSpec { p: 32, q: 12, theta: 56 },
+            },
+            l2: LayerSpec {
+                cols: 625,
+                column: ColumnSpec { p: 12, q: 10, theta: 21 },
+            },
+        }
+    }
+
+    /// Total neurons (paper: 13,750).
+    pub fn neurons(&self) -> usize {
+        self.l1.neurons() + self.l2.neurons()
+    }
+
+    /// Total synapses (paper: 315,000).
+    pub fn synapses(&self) -> usize {
+        self.l1.synapses() + self.l2.synapses()
+    }
+}
+
+/// Elaborated prototype model: two representative columns + scales.
+pub struct PrototypeModel {
+    pub spec: PrototypeSpec,
+    pub l1: LayerModel,
+    pub l2: LayerModel,
+}
+
+impl PrototypeModel {
+    /// Build both representative columns.
+    pub fn build(lib: &Library, flavor: Flavor, spec: PrototypeSpec) -> Result<Self> {
+        Ok(PrototypeModel {
+            spec,
+            l1: LayerModel::build(lib, flavor, spec.l1)?,
+            l2: LayerModel::build(lib, flavor, spec.l2)?,
+        })
+    }
+
+    /// Whole-prototype census (Fig. 19's complexity claim).
+    pub fn census(&self, lib: &Library) -> Census {
+        let mut c = self.l1.census(lib);
+        c.add(&self.l2.census(lib));
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry_matches_abstract() {
+        let s = PrototypeSpec::paper();
+        assert_eq!(s.neurons(), 13_750);
+        assert_eq!(s.synapses(), 315_000);
+    }
+
+    #[test]
+    fn prototype_census_is_sum_of_layers() {
+        let lib = Library::with_macros();
+        // Scaled-down spec for test speed; same structure.
+        let spec = PrototypeSpec {
+            l1: LayerSpec {
+                cols: 3,
+                column: ColumnSpec { p: 8, q: 3, theta: 10 },
+            },
+            l2: LayerSpec {
+                cols: 3,
+                column: ColumnSpec { p: 3, q: 2, theta: 4 },
+            },
+        };
+        let m = PrototypeModel::build(&lib, Flavor::Custom, spec).unwrap();
+        let c = m.census(&lib);
+        let c1 = m.l1.census(&lib);
+        let c2 = m.l2.census(&lib);
+        assert_eq!(c.transistors, c1.transistors + c2.transistors);
+        assert!(c.cells > 0);
+    }
+}

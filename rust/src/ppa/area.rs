@@ -1,0 +1,99 @@
+//! Placement-model area analysis.
+//!
+//! `die area = Σ cell area / UTILIZATION` — the standard post-placement
+//! roll-up.  Cell areas come from the characterized library (transistor
+//! count × diffusion-sharing discount × the calibrated area constant);
+//! utilization is applied uniformly to both flavours (DESIGN.md §5).
+
+use crate::cells::{Library, TechParams};
+use crate::netlist::ir::Census;
+use crate::netlist::Netlist;
+
+use super::UTILIZATION;
+
+/// Area result.
+#[derive(Debug, Clone, Copy)]
+pub struct AreaReport {
+    /// Σ placed cell area (µm²).
+    pub cell_um2: f64,
+    /// Die area after utilization (mm²).
+    pub die_mm2: f64,
+}
+
+/// Relative (unit-scale) aggregate for calibration.
+pub fn relative(nl: &Netlist, lib: &Library) -> f64 {
+    nl.insts
+        .iter()
+        .map(|i| lib.cell(i.cell).rel_area)
+        .sum::<f64>()
+        / UTILIZATION
+}
+
+/// Absolute area of a netlist.
+pub fn analyze(nl: &Netlist, lib: &Library, tech: &TechParams) -> AreaReport {
+    let cell_um2: f64 = nl
+        .insts
+        .iter()
+        .map(|i| tech.area_um2(lib.cell(i.cell)))
+        .sum();
+    AreaReport { cell_um2, die_mm2: cell_um2 / UTILIZATION * 1e-6 }
+}
+
+/// Area from a (possibly scaled) census — the hierarchical roll-up path
+/// used for layers and the Fig. 19 prototype.
+pub fn from_census(census: &Census, lib: &Library, tech: &TechParams) -> AreaReport {
+    let cell_um2: f64 = census
+        .per_cell
+        .iter()
+        .enumerate()
+        .map(|(c, &n)| n as f64 * tech.area_um2(lib.cell(c)))
+        .sum();
+    AreaReport { cell_um2, die_mm2: cell_um2 / UTILIZATION * 1e-6 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::Flavor;
+
+    #[test]
+    fn census_roll_up_matches_flat_analysis() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let spec = ColumnSpec { p: 8, q: 4, theta: 10 };
+        let (nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let flat = analyze(&nl, &lib, &tech);
+        let census = nl.census(&lib);
+        let rolled = from_census(&census, &lib, &tech);
+        assert!((flat.die_mm2 - rolled.die_mm2).abs() < 1e-12);
+        let x10 = from_census(&census.scaled(10), &lib, &tech);
+        assert!((x10.die_mm2 - 10.0 * flat.die_mm2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn custom_column_smaller_than_std() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let spec = ColumnSpec::benchmark(64, 8);
+        let (s, _) = build_column(&lib, Flavor::Std, &spec).unwrap();
+        let (c, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let sa = analyze(&s, &lib, &tech).die_mm2;
+        let ca = analyze(&c, &lib, &tech).die_mm2;
+        assert!(ca < sa, "custom {ca} !< std {sa}");
+    }
+
+    #[test]
+    fn area_grows_with_column_size() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let mut last = 0.0;
+        for (p, q) in [(8, 4), (64, 8), (128, 10)] {
+            let spec = ColumnSpec::benchmark(p, q);
+            let (nl, _) = build_column(&lib, Flavor::Std, &spec).unwrap();
+            let a = analyze(&nl, &lib, &tech).die_mm2;
+            assert!(a > last);
+            last = a;
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Energy-Delay Product (Table II's fourth column).
+//!
+//! `EDP = E · T = (P · T) · T` with the paper's units: power in mW,
+//! computation time in ns → EDP in nJ·ns
+//! (mW·ns² = 1e-3 J/s · 1e-18 s² = 1e-21 J·s = 1e-9 nJ · 1e-9 ns... the
+//! paper's Table II numbers confirm: 2.54 mW × 24.14 ns × 24.14 ns
+//! = 1.48 nJ·ns).
+
+/// EDP in nJ·ns from power (mW) and computation time (ns).
+pub fn edp_nj_ns(power_mw: f64, time_ns: f64) -> f64 {
+    power_mw * 1e-3 * time_ns * time_ns * 1e-9 / 1e-18 * 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_table2_arithmetic() {
+        // Std row: 2.54 mW, 24.14 ns -> 1.48 nJ-ns.
+        let e = edp_nj_ns(2.54, 24.14);
+        assert!((e - 1.48).abs() < 0.01, "{e}");
+        // Custom row: 1.69 mW, 19.15 ns -> 0.62 nJ-ns.
+        let e = edp_nj_ns(1.69, 19.15);
+        assert!((e - 0.62).abs() < 0.01, "{e}");
+    }
+
+    #[test]
+    fn edp_is_quadratic_in_delay() {
+        let base = edp_nj_ns(1.0, 10.0);
+        assert!((edp_nj_ns(1.0, 20.0) / base - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,35 @@
+//! Post-layout PPA analysis — the Innovus/Tempus/Voltus analogue.
+//!
+//! Rolls a netlist + switching activity + the characterized library up
+//! into the paper's three reported metrics (power, computation time,
+//! area) plus EDP:
+//!
+//! * [`timing`] — static timing analysis over cell arcs → minimum clock
+//!   period → per-wave computation time (Table I/II "Computation Time").
+//! * [`power`] — activity-based dynamic power + leakage (Table "Power").
+//! * [`area`] — placement model: Σ cell area / utilization ("Area").
+//! * [`edp`] — energy-delay product (Table II).
+//! * [`report`] — the paper-style result rows and pretty-printing.
+//! * [`scaling`] — the 45nm ([2] Tables IV/VI) comparison model.
+
+pub mod area;
+pub mod edp;
+pub mod power;
+pub mod report;
+pub mod scaling;
+pub mod timing;
+
+pub use report::{ColumnPpa, PpaRow};
+
+/// Unit cycles per computational wave: T_STEPS compute cycles + one STDP
+/// evaluation cycle + one gamma-reset cycle (see sim::testbench).
+pub const WAVE_CYCLES: u64 = crate::arch::T_STEPS as u64 + 2;
+
+/// Placement utilization (cell area / die area) used by the area model.
+/// 7nm digital blocks place at 60–75%; 0.68 is applied uniformly to both
+/// flavours so Table ratios are utilization-independent.
+pub const UTILIZATION: f64 = 0.68;
+
+/// Clock-tree energy per sequential commit, as a fraction of the cell's
+/// switching energy (clock pin + local buffer share).
+pub const CLOCK_PIN_FRAC: f64 = 0.30;

@@ -1,0 +1,163 @@
+//! Activity-based power analysis.
+//!
+//! `P = P_dyn + P_leak` with
+//! `P_dyn = (Σ_i toggles_i · E_i  +  Σ_seq commits_i · CLOCK_PIN_FRAC · E_i) / T_sim`
+//! where `E_i` is the characterized per-toggle switching energy of the
+//! driving cell and `T_sim = cycles × T_clk` the simulated wall time, and
+//! `P_leak = Σ_i leak_i`.  This mirrors what Voltus computes from a
+//! VCD + Liberty pair.
+
+use crate::cells::{Library, TechParams};
+use crate::netlist::Netlist;
+use crate::sim::Activity;
+
+use super::CLOCK_PIN_FRAC;
+
+/// Power result in µW, with the split the paper's flow would report.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerReport {
+    pub dynamic_uw: f64,
+    pub clock_uw: f64,
+    pub leakage_uw: f64,
+}
+
+impl PowerReport {
+    /// Total power in µW.
+    pub fn total_uw(&self) -> f64 {
+        self.dynamic_uw + self.clock_uw + self.leakage_uw
+    }
+}
+
+/// Relative (unit-scale) energy/leak aggregates, used by calibration.
+#[derive(Debug, Clone, Copy)]
+pub struct RelPower {
+    /// Σ toggles·rel_energy per second of simulated time at T_clk=1ps
+    /// — multiply by `energy_per_unit` to get power.
+    pub energy_rate: f64,
+    /// Σ rel_leak.
+    pub leak: f64,
+}
+
+/// Compute the relative aggregates from a finished simulation.
+///
+/// `clock_ps` is the clock period the design runs at (from STA).
+pub fn relative(
+    nl: &Netlist,
+    lib: &Library,
+    act: &Activity,
+    clock_ps: f64,
+) -> RelPower {
+    assert!(act.cycles > 0, "simulate before computing power");
+    let t_sim_s = act.cycles as f64 * clock_ps * 1e-12;
+    let mut toggle_energy = 0.0f64; // rel units
+    let mut leak = 0.0f64;
+    for (i, inst) in nl.insts.iter().enumerate() {
+        let cell = lib.cell(inst.cell);
+        toggle_energy += act.toggles[i] as f64 * cell.rel_energy;
+        toggle_energy +=
+            act.clock_ticks[i] as f64 * CLOCK_PIN_FRAC * cell.rel_energy;
+        leak += cell.rel_leak;
+    }
+    RelPower { energy_rate: toggle_energy / t_sim_s, leak }
+}
+
+/// Absolute power from activity + technology constants.
+pub fn analyze(
+    nl: &Netlist,
+    lib: &Library,
+    tech: &TechParams,
+    act: &Activity,
+    clock_ps: f64,
+) -> PowerReport {
+    assert!(act.cycles > 0, "simulate before computing power");
+    let t_sim_s = act.cycles as f64 * clock_ps * 1e-12;
+    let mut dyn_fj = 0.0f64;
+    let mut clk_fj = 0.0f64;
+    let mut leak_nw = 0.0f64;
+    for (i, inst) in nl.insts.iter().enumerate() {
+        let cell = lib.cell(inst.cell);
+        dyn_fj += act.toggles[i] as f64 * tech.energy_fj(cell);
+        clk_fj += act.clock_ticks[i] as f64
+            * CLOCK_PIN_FRAC
+            * tech.energy_fj(cell);
+        leak_nw += tech.leak_nw(cell);
+    }
+    // fJ / s = 1e-15 W; report µW (1e-6 W): factor 1e-9.
+    PowerReport {
+        dynamic_uw: dyn_fj * 1e-9 / t_sim_s,
+        clock_uw: clk_fj * 1e-9 / t_sim_s,
+        leakage_uw: leak_nw * 1e-3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+    use crate::netlist::Builder;
+    use crate::sim::Simulator;
+
+    fn toggler(lib: &Library) -> Netlist {
+        let mut b = Builder::new("t", lib);
+        let x = b.input("x");
+        let y = b.inv(x);
+        b.output(y, "y");
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn power_scales_with_activity() {
+        let lib = Library::asap7_only();
+        let nl = toggler(&lib);
+        let tech = TechParams::calibrated();
+        // Fast toggling.
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for i in 0..100 {
+            sim.tick(&[(nl.inputs[0], i % 2 == 0)], false);
+        }
+        let p_fast = analyze(&nl, &lib, &tech, &sim.activity, 1000.0);
+        // Slow toggling (1/10th).
+        let mut sim2 = Simulator::new(&nl, &lib).unwrap();
+        for i in 0..100 {
+            sim2.tick(&[(nl.inputs[0], (i / 10) % 2 == 0)], false);
+        }
+        let p_slow = analyze(&nl, &lib, &tech, &sim2.activity, 1000.0);
+        assert!(p_fast.dynamic_uw > 5.0 * p_slow.dynamic_uw);
+        // Leakage identical regardless of activity.
+        assert!((p_fast.leakage_uw - p_slow.leakage_uw).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faster_clock_means_more_power() {
+        let lib = Library::asap7_only();
+        let nl = toggler(&lib);
+        let tech = TechParams::calibrated();
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for i in 0..50 {
+            sim.tick(&[(nl.inputs[0], i % 2 == 0)], false);
+        }
+        let p1 = analyze(&nl, &lib, &tech, &sim.activity, 1000.0);
+        let p2 = analyze(&nl, &lib, &tech, &sim.activity, 500.0);
+        assert!((p2.dynamic_uw / p1.dynamic_uw - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relative_matches_absolute_under_unit_scales() {
+        let lib = Library::asap7_only();
+        let nl = toggler(&lib);
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for i in 0..64 {
+            sim.tick(&[(nl.inputs[0], i % 3 == 0)], false);
+        }
+        let rel = relative(&nl, &lib, &sim.activity, 700.0);
+        let tech = TechParams {
+            area_per_unit_um2: 1.0,
+            energy_per_unit_fj: 1.0,
+            leak_per_unit_nw: 1.0,
+            fo4_ps: 1.0,
+        };
+        let abs = analyze(&nl, &lib, &tech, &sim.activity, 700.0);
+        let rel_uw = rel.energy_rate * 1e-9 + rel.leak * 1e-3;
+        assert!((rel_uw - abs.total_uw()).abs() / rel_uw < 1e-9);
+    }
+}

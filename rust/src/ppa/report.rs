@@ -1,0 +1,173 @@
+//! Paper-style PPA rows and table rendering.
+//!
+//! [`ColumnPpa`] is the (power, computation time, area) triple of Table I;
+//! [`PpaRow`] adds labels and EDP for Table II.  `render_*` produce the
+//! exact row/column structure the paper prints, so bench output can be
+//! compared side-by-side with the published tables.
+
+use std::fmt::Write as _;
+
+use super::edp::edp_nj_ns;
+
+/// One measured design point (the paper's metric triple).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ColumnPpa {
+    pub power_uw: f64,
+    pub time_ns: f64,
+    pub area_mm2: f64,
+}
+
+impl ColumnPpa {
+    /// Scale power and area by a block count (synaptic scaling roll-up);
+    /// computation time is per-wave and does not scale with replication.
+    pub fn scaled(&self, k: f64) -> ColumnPpa {
+        ColumnPpa {
+            power_uw: self.power_uw * k,
+            time_ns: self.time_ns,
+            area_mm2: self.area_mm2 * k,
+        }
+    }
+
+    /// Combine two blocks operating concurrently (prototype layers): power
+    /// and area add; a full wave must traverse the slower pipeline stage.
+    pub fn compose_parallel(&self, other: &ColumnPpa) -> ColumnPpa {
+        ColumnPpa {
+            power_uw: self.power_uw + other.power_uw,
+            time_ns: self.time_ns.max(other.time_ns),
+            area_mm2: self.area_mm2 + other.area_mm2,
+        }
+    }
+
+    /// EDP in nJ·ns (power converted to mW).
+    pub fn edp_nj_ns(&self) -> f64 {
+        edp_nj_ns(self.power_uw * 1e-3, self.time_ns)
+    }
+}
+
+/// A labeled result row.
+#[derive(Debug, Clone)]
+pub struct PpaRow {
+    pub flavor: &'static str,
+    pub label: String,
+    pub ppa: ColumnPpa,
+    /// Paper value for side-by-side comparison, if known.
+    pub paper: Option<ColumnPpa>,
+}
+
+/// Render Table-I style rows (power µW / time ns / area mm²).
+pub fn render_table1(rows: &[PpaRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<22} {:>9} | {:>10} {:>10} | {:>10} {:>10} | {:>11} {:>11}",
+        "", "Column", "Power(uW)", "paper", "Time(ns)", "paper", "Area(mm2)", "paper"
+    );
+    let _ = writeln!(s, "{}", "-".repeat(104));
+    for r in rows {
+        let p = r.paper;
+        let fmt = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.3}"),
+            None => "-".to_string(),
+        };
+        let _ = writeln!(
+            s,
+            "{:<22} {:>9} | {:>10.3} {:>10} | {:>10.2} {:>10} | {:>11.4} {:>11}",
+            r.flavor,
+            r.label,
+            r.ppa.power_uw,
+            fmt(p.map(|p| p.power_uw)),
+            r.ppa.time_ns,
+            fmt(p.map(|p| p.time_ns)),
+            r.ppa.area_mm2,
+            fmt(p.map(|p| p.area_mm2)),
+        );
+    }
+    s
+}
+
+/// Render Table-II style rows (power mW / time ns / area mm² / EDP nJ·ns).
+pub fn render_table2(rows: &[PpaRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<22} | {:>10} {:>10} | {:>9} {:>9} | {:>10} {:>10} | {:>10} {:>10}",
+        "", "Power(mW)", "paper", "Time(ns)", "paper", "Area(mm2)", "paper", "EDP(nJ-ns)", "paper"
+    );
+    let _ = writeln!(s, "{}", "-".repeat(112));
+    for r in rows {
+        let fmt = |v: Option<f64>, d: usize| match v {
+            Some(x) => format!("{x:.d$}"),
+            None => "-".to_string(),
+        };
+        let p = r.paper;
+        let _ = writeln!(
+            s,
+            "{:<22} | {:>10.2} {:>10} | {:>9.2} {:>9} | {:>10.2} {:>10} | {:>10.2} {:>10}",
+            r.flavor,
+            r.ppa.power_uw * 1e-3,
+            fmt(p.map(|p| p.power_uw * 1e-3), 2),
+            r.ppa.time_ns,
+            fmt(p.map(|p| p.time_ns), 2),
+            r.ppa.area_mm2,
+            fmt(p.map(|p| p.area_mm2), 2),
+            r.ppa.edp_nj_ns(),
+            fmt(p.map(|p| p.edp_nj_ns()), 2),
+        );
+    }
+    s
+}
+
+/// Ratio line ("custom consumes X% less power ...") used by the benches.
+pub fn improvement_line(std: &ColumnPpa, custom: &ColumnPpa) -> String {
+    format!(
+        "custom vs std: power {:+.1}%  time {:+.1}%  area {:+.1}%  edp {:+.1}%",
+        (custom.power_uw / std.power_uw - 1.0) * 100.0,
+        (custom.time_ns / std.time_ns - 1.0) * 100.0,
+        (custom.area_mm2 / std.area_mm2 - 1.0) * 100.0,
+        (custom.edp_nj_ns() / std.edp_nj_ns() - 1.0) * 100.0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const STD: ColumnPpa =
+        ColumnPpa { power_uw: 3.89, time_ns: 26.92, area_mm2: 0.004 };
+    const CUS: ColumnPpa =
+        ColumnPpa { power_uw: 2.73, time_ns: 20.59, area_mm2: 0.003 };
+
+    #[test]
+    fn scaling_and_composition() {
+        let x = STD.scaled(625.0);
+        assert!((x.power_uw - 3.89 * 625.0).abs() < 1e-9);
+        assert!((x.time_ns - STD.time_ns).abs() < 1e-12);
+        let y = x.compose_parallel(&CUS.scaled(625.0));
+        assert!(y.area_mm2 > x.area_mm2);
+        assert!((y.time_ns - x.time_ns).abs() < 1e-12);
+    }
+
+    #[test]
+    fn renders_contain_all_fields() {
+        let rows = vec![
+            PpaRow {
+                flavor: "Standard Cell-Based",
+                label: "64x8".into(),
+                ppa: STD,
+                paper: Some(STD),
+            },
+            PpaRow {
+                flavor: "Custom Macro-Based",
+                label: "64x8".into(),
+                ppa: CUS,
+                paper: None,
+            },
+        ];
+        let t1 = render_table1(&rows);
+        assert!(t1.contains("64x8") && t1.contains("3.890"));
+        let t2 = render_table2(&rows);
+        assert!(t2.contains("EDP"));
+        let line = improvement_line(&STD, &CUS);
+        assert!(line.contains("power -29.8%"));
+    }
+}

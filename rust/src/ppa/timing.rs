@@ -1,0 +1,175 @@
+//! Static timing analysis: longest combinational path → minimum clock
+//! period → per-wave computation time.
+//!
+//! Single-corner STA over the worst-arc cell delays of the characterized
+//! library: arrival times propagate through the levelized netlist using
+//! the same combinational-sensitivity rules as the simulator; the minimum
+//! clock period is the worst (arrival at a sequential data input + setup),
+//! also checking primary outputs.  The paper's "computation time" per
+//! gamma cycle is then `WAVE_CYCLES × T_clk` (17 unit cycles: 15 RNL
+//! compute + STDP evaluate + gamma reset).
+
+use crate::cells::{Library, TechParams};
+use crate::error::Result;
+use crate::netlist::Netlist;
+use crate::sim::eval::comb_deps;
+use crate::sim::simulator::levelize;
+
+use super::WAVE_CYCLES;
+
+/// STA result.
+#[derive(Debug, Clone)]
+pub struct TimingReport {
+    /// Worst data arrival at any sequential input + setup (ps).
+    pub min_clock_ps: f64,
+    /// Computation time for one gamma wave (ns).
+    pub wave_ns: f64,
+    /// Instance index ending the critical path.
+    pub crit_endpoint: usize,
+    /// Number of instances on levels (sanity).
+    pub n_instances: usize,
+}
+
+/// Run STA on `nl`.
+pub fn analyze(nl: &Netlist, lib: &Library, tech: &TechParams) -> Result<TimingReport> {
+    let order = levelize(nl, lib)?;
+    let mut arrival = vec![0.0f64; nl.n_nets()];
+    // Pass 1: propagate arrivals in level order (primary inputs at t=0,
+    // sequential outputs launch at their clk->q delay).
+    for &oi in &order {
+        let i = oi as usize;
+        let inst = &nl.insts[i];
+        let cell = lib.cell(inst.cell);
+        let deps = comb_deps(cell.kind);
+        // Arrival at the cell = max over comb-sensitive inputs.
+        let mut t_in = 0.0f64;
+        for (pin, &n) in nl.inst_ins(i).iter().enumerate() {
+            if deps >> pin & 1 == 1 {
+                t_in = t_in.max(arrival[n.0 as usize]);
+            }
+        }
+        let t_out = t_in + tech.delay_ps(cell);
+        for &o in nl.inst_outs(i) {
+            arrival[o.0 as usize] = t_out;
+        }
+    }
+    // Pass 2: sequential endpoints.  Levelization orders seq cells as
+    // *sources*, so data-pin arrivals are only final after pass 1.
+    let mut worst = 0.0f64;
+    let mut endpoint = 0usize;
+    for (i, inst) in nl.insts.iter().enumerate() {
+        let cell = lib.cell(inst.cell);
+        if !cell.kind.is_sequential() {
+            continue;
+        }
+        let deps = comb_deps(cell.kind);
+        let setup = tech.setup_ps(cell);
+        for (pin, &n) in nl.inst_ins(i).iter().enumerate() {
+            if deps >> pin & 1 == 0 {
+                let slack_req = arrival[n.0 as usize] + setup;
+                if slack_req > worst {
+                    worst = slack_req;
+                    endpoint = i;
+                }
+            }
+        }
+        let _ = inst;
+    }
+    // Primary outputs are endpoints too.
+    for &o in &nl.outputs {
+        if arrival[o.0 as usize] > worst {
+            worst = arrival[o.0 as usize];
+        }
+    }
+    Ok(TimingReport {
+        min_clock_ps: worst,
+        wave_ns: worst * WAVE_CYCLES as f64 * 1e-3,
+        crit_endpoint: endpoint,
+        n_instances: order.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+    use crate::netlist::{Builder, ClockDomain};
+
+    #[test]
+    fn chain_delay_adds_up() {
+        let lib = Library::asap7_only();
+        let tech = TechParams::unit(); // delays in FO4 units
+        let mut b = Builder::new("c", &lib);
+        let x = b.input("x");
+        let mut n = x;
+        for _ in 0..5 {
+            n = b.inv(n);
+        }
+        let q = b.dff(n, ClockDomain::Aclk);
+        b.output(q, "q");
+        let nl = b.finish().unwrap();
+        let r = analyze(&nl, &lib, &tech).unwrap();
+        // 5 inverters * 0.60 + DFF setup 1.20 = 4.2 FO4-units.
+        assert!((r.min_clock_ps - (5.0 * 0.60 + 1.20)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dff_breaks_paths() {
+        // in -> 10 invs -> DFF -> 2 invs -> out: critical path is the
+        // 10-inv segment, not 12.
+        let lib = Library::asap7_only();
+        let tech = TechParams::unit();
+        let mut b = Builder::new("c", &lib);
+        let x = b.input("x");
+        let mut n = x;
+        for _ in 0..10 {
+            n = b.inv(n);
+        }
+        let q = b.dff(n, ClockDomain::Aclk);
+        let mut m = q;
+        for _ in 0..2 {
+            m = b.inv(m);
+        }
+        b.output(m, "y");
+        let nl = b.finish().unwrap();
+        let r = analyze(&nl, &lib, &tech).unwrap();
+        let seg1 = 10.0 * 0.60 + 1.20;
+        // segment 2 = clk->q (1.80) + 2 invs = 3.0 < seg1 = 7.2
+        assert!((r.min_clock_ps - seg1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_column_has_longer_critical_path() {
+        // The Table-I delay shape: computation time grows with p.
+        use crate::netlist::column::{build_column, ColumnSpec};
+        use crate::netlist::Flavor;
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let mut last = 0.0;
+        for p in [8usize, 32, 128] {
+            let spec = ColumnSpec::benchmark(p, 4);
+            let (nl, _) = build_column(&lib, Flavor::Std, &spec).unwrap();
+            let r = analyze(&nl, &lib, &tech).unwrap();
+            assert!(
+                r.min_clock_ps > last,
+                "p={p}: {} !> {last}",
+                r.min_clock_ps
+            );
+            last = r.min_clock_ps;
+        }
+    }
+
+    #[test]
+    fn custom_flavour_is_faster() {
+        use crate::netlist::column::{build_column, ColumnSpec};
+        use crate::netlist::Flavor;
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let spec = ColumnSpec::benchmark(64, 8);
+        let (s, _) = build_column(&lib, Flavor::Std, &spec).unwrap();
+        let (c, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let rs = analyze(&s, &lib, &tech).unwrap();
+        let rc = analyze(&c, &lib, &tech).unwrap();
+        assert!(rc.min_clock_ps < rs.min_clock_ps);
+    }
+}

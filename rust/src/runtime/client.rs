@@ -1,0 +1,155 @@
+//! The PJRT execution client.
+//!
+//! Wraps the `xla` crate: one CPU [`xla::PjRtClient`], a lazily-compiled
+//! executable per artifact (HLO text → `HloModuleProto::from_text_file` →
+//! `client.compile`), and a typed i32 execute with shape validation
+//! against the manifest.  This is the ONLY place python-built compute
+//! enters the rust request path.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::manifest::{ArtifactInfo, Manifest};
+
+/// Loaded runtime: PJRT client + compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PJRT client: {e}")))?;
+        Ok(Runtime { client, manifest, exes: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact's executable.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let info = self.manifest.get(name)?.clone();
+        let path = self.manifest.path_of(&info);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| {
+            Error::runtime(format!("parse {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {name}: {e}")))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` on i32 input tensors.
+    ///
+    /// `inputs[k]` must match the manifest's k-th declared shape; outputs
+    /// come back as flat i32 vectors (jax lowers with `return_tuple=True`,
+    /// so the single result literal is a tuple).
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[&[i32]],
+    ) -> Result<Vec<Vec<i32>>> {
+        self.compile(name)?;
+        let info = self.manifest.get(name)?.clone();
+        validate_shapes(&info, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&info.inputs)
+            .map(|(data, shape)| {
+                let dims: Vec<i64> =
+                    shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| Error::runtime(format!("reshape: {e}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let exe = self.exes.get(name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::runtime(format!("execute {name}: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("readback: {e}")))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| Error::runtime(format!("untuple: {e}")))?;
+        parts
+            .into_iter()
+            .map(|p| {
+                p.to_vec::<i32>()
+                    .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+            })
+            .collect()
+    }
+}
+
+fn validate_shapes(info: &ArtifactInfo, inputs: &[&[i32]]) -> Result<()> {
+    if inputs.len() != info.inputs.len() {
+        return Err(Error::runtime(format!(
+            "{}: {} inputs given, {} declared",
+            info.name,
+            inputs.len(),
+            info.inputs.len()
+        )));
+    }
+    for (k, (data, shape)) in inputs.iter().zip(&info.inputs).enumerate() {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            return Err(Error::runtime(format!(
+                "{}: input {k} has {} elements, shape {:?} wants {want}",
+                info.name,
+                data.len(),
+                shape
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_info() -> ArtifactInfo {
+        ArtifactInfo {
+            name: "t".into(),
+            kind: "col_fwd".into(),
+            file: "t.hlo.txt".into(),
+            batch: 2,
+            cols: 1,
+            p: 3,
+            q: 2,
+            inputs: vec![vec![2, 3], vec![3, 2], vec![1]],
+        }
+    }
+
+    #[test]
+    fn shape_validation_catches_mismatches() {
+        let info = fake_info();
+        let a = [0i32; 6];
+        let b = [0i32; 6];
+        let t = [5i32];
+        assert!(validate_shapes(&info, &[&a, &b, &t]).is_ok());
+        assert!(validate_shapes(&info, &[&a, &b]).is_err());
+        let short = [0i32; 5];
+        assert!(validate_shapes(&info, &[&short, &b, &t]).is_err());
+    }
+}

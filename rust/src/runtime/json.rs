@@ -1,0 +1,308 @@
+//! Minimal JSON parser for the artifact manifest (no serde offline).
+//!
+//! Supports the full JSON value grammar we emit from `aot.py`: objects,
+//! arrays, strings (with escapes), numbers, booleans, null.  Not a
+//! general-purpose library — just a strict, well-tested reader for
+//! trusted build artifacts.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Parse a complete JSON document.
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(Error::runtime("trailing JSON content"));
+        }
+        Ok(v)
+    }
+
+    /// Object field access.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Required typed accessors.
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(Error::runtime("expected JSON string")),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => Err(Error::runtime("expected JSON number")),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            return Err(Error::runtime("expected non-negative integer"));
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        let f = self.as_f64()?;
+        if f.fract() != 0.0 {
+            return Err(Error::runtime("expected integer"));
+        }
+        Ok(f as i64)
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => Err(Error::runtime("expected JSON array")),
+        }
+    }
+
+    /// `obj[key]` with an error naming the key.
+    pub fn field(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| Error::runtime(format!("missing field `{key}`")))
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| Error::runtime("unexpected end of JSON"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(Error::runtime(format!(
+                "expected `{}` at byte {}",
+                c as char, self.i
+            )))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(Error::runtime(format!("bad literal at byte {}", self.i)))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => {
+                    return Err(Error::runtime(format!(
+                        "expected , or }} got `{}`",
+                        c as char
+                    )))
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut a = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            a.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                c => {
+                    return Err(Error::runtime(format!(
+                        "expected , or ] got `{}`",
+                        c as char
+                    )))
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut bytes: Vec<u8> = Vec::new();
+        let done = loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => break bytes,
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    let ch = match e {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'b' => '\u{8}',
+                        b'f' => '\u{c}',
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(Error::runtime("bad \\u escape"));
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                    .map_err(|_| Error::runtime("bad \\u"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| Error::runtime("bad \\u"))?;
+                            self.i += 4;
+                            char::from_u32(cp)
+                                .ok_or_else(|| Error::runtime("bad \\u"))?
+                        }
+                        _ => return Err(Error::runtime("bad escape")),
+                    };
+                    let mut buf = [0u8; 4];
+                    bytes.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                }
+                _ => bytes.push(c),
+            }
+        };
+        String::from_utf8(done).map_err(|_| Error::runtime("invalid UTF-8 string"))
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| Error::runtime("bad number"))?;
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| Error::runtime(format!("bad number `{s}`")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_document() {
+        let doc = r#"{"a": [1, 2.5, -3], "b": {"c": "x\ny", "d": true},
+                      "e": null}"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.field("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.field("b").unwrap().field("c").unwrap().as_str().unwrap(),
+            "x\ny"
+        );
+        assert_eq!(j.field("e").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn parses_manifest_like_structure() {
+        let doc = r#"{"batch": 16, "artifacts": [
+            {"name": "l1_train", "p": 32, "q": 12,
+             "inputs": [[16,625,32],[625,32,12]]}]}"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.field("batch").unwrap().as_usize().unwrap(), 16);
+        let a = &j.field("artifacts").unwrap().as_arr().unwrap()[0];
+        assert_eq!(a.field("name").unwrap().as_str().unwrap(), "l1_train");
+        let shape = a.field("inputs").unwrap().as_arr().unwrap()[0]
+            .as_arr()
+            .unwrap();
+        assert_eq!(shape.len(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let j = Json::parse(r#""Aé""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "Aé");
+    }
+}

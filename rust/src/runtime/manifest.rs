@@ -1,0 +1,149 @@
+//! Artifact manifest: what `make artifacts` produced.
+//!
+//! Mirrors `python/compile/aot.py`'s `manifest.json`: architectural
+//! constants (validated against [`crate::arch`] at load — a drifted
+//! artifact set is an error, not a silent miscompute) and one entry per
+//! HLO program with its geometry and input shapes.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+use super::json::Json;
+
+/// One AOT-compiled program.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    /// Program kind: `col_fwd`, `col_train`, `layer_fwd`, `layer_train`.
+    pub kind: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: String,
+    pub batch: usize,
+    pub cols: usize,
+    pub p: usize,
+    pub q: usize,
+    /// Declared input shapes (for call-site validation).
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and validate architectural constants.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (dir recorded for artifact file resolution).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        // Architectural constants must match this binary.
+        let checks = [
+            ("inf", crate::arch::INF as i64),
+            ("t_in", crate::arch::T_IN as i64),
+            ("w_max", crate::arch::W_MAX as i64),
+            ("t_steps", crate::arch::T_STEPS as i64),
+            ("rand_scale", crate::arch::RAND_SCALE as i64),
+            ("n_params", crate::arch::N_PARAMS as i64),
+        ];
+        for (key, want) in checks {
+            let got = j.field(key)?.as_i64()?;
+            if got != want {
+                return Err(Error::runtime(format!(
+                    "manifest {key}={got} but binary expects {want}; \
+                     re-run `make artifacts`"
+                )));
+            }
+        }
+        let batch = j.field("batch")?.as_usize()?;
+        let mut artifacts = Vec::new();
+        for a in j.field("artifacts")?.as_arr()? {
+            let inputs = a
+                .field("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactInfo {
+                name: a.field("name")?.as_str()?.to_string(),
+                kind: a.field("kind")?.as_str()?.to_string(),
+                file: a.field("file")?.as_str()?.to_string(),
+                batch: a.field("batch")?.as_usize()?,
+                cols: a.field("cols")?.as_usize()?,
+                p: a.field("p")?.as_usize()?,
+                q: a.field("q")?.as_usize()?,
+                inputs,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), batch, artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::runtime(format!("no artifact `{name}`")))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(inf: i64) -> String {
+        format!(
+            r#"{{"batch": 16, "inf": {inf}, "t_in": 8, "w_max": 7,
+                "t_steps": 15, "rand_scale": 65536, "n_params": 19,
+                "artifacts": [
+                  {{"name": "col_fwd_8x4", "kind": "col_fwd",
+                    "file": "col_fwd_8x4.hlo.txt", "batch": 16, "cols": 1,
+                    "p": 8, "q": 4, "n_params": 19,
+                    "inputs": [[16,8],[8,4],[1]], "sha256": "x"}}]}}"#
+        )
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m =
+            Manifest::parse(&sample(1 << 30), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.batch, 16);
+        let a = m.get("col_fwd_8x4").unwrap();
+        assert_eq!(a.p, 8);
+        assert_eq!(a.inputs[0], vec![16, 8]);
+        assert!(m.get("nope").is_err());
+        assert!(m.path_of(a).ends_with("col_fwd_8x4.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_drifted_constants() {
+        let err = Manifest::parse(&sample(1 << 20), Path::new("/tmp"));
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("make artifacts"));
+    }
+}

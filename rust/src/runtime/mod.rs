@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only consumer of its output.  `artifacts/manifest.json` (parsed by the
+//! in-tree [`json`] module — no serde offline) describes every HLO-text
+//! program; [`client::Runtime`] compiles them on the PJRT CPU client and
+//! exposes a typed `execute` over i32 tensors.
+//!
+//! Interchange is HLO *text*, never serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod json;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactInfo, Manifest};

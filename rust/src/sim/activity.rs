@@ -1,0 +1,58 @@
+//! Per-instance switching-activity counters.
+//!
+//! [`Activity`] is filled by the simulator (output toggles + clock ticks
+//! per instance) and consumed by [`crate::ppa::power`]:
+//! `P_dyn = Σ_i toggles_i · E_cell(i) / T  +  Σ_seq ticks_i · E_clk(i) / T`.
+
+/// Switching-activity record for one simulation run.
+#[derive(Debug, Clone)]
+pub struct Activity {
+    /// Output toggles per instance.
+    pub toggles: Vec<u64>,
+    /// Clock commits per sequential instance (clock-pin energy).
+    pub clock_ticks: Vec<u64>,
+    /// Total aclk cycles simulated.
+    pub cycles: u64,
+}
+
+impl Activity {
+    /// Zeroed counters for `n` instances.
+    pub fn new(n: usize) -> Self {
+        Activity {
+            toggles: vec![0; n],
+            clock_ticks: vec![0; n],
+            cycles: 0,
+        }
+    }
+
+    /// Clear all counters.
+    pub fn reset(&mut self) {
+        self.toggles.iter_mut().for_each(|t| *t = 0);
+        self.clock_ticks.iter_mut().for_each(|t| *t = 0);
+        self.cycles = 0;
+    }
+
+    /// Mean output-toggle rate per instance per cycle.
+    pub fn mean_toggle_rate(&self) -> f64 {
+        if self.cycles == 0 || self.toggles.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.toggles.iter().sum();
+        total as f64 / (self.cycles as f64 * self.toggles.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_rate() {
+        let mut a = Activity::new(4);
+        a.cycles = 10;
+        a.toggles = vec![10, 0, 5, 5];
+        assert!((a.mean_toggle_rate() - 0.5).abs() < 1e-12);
+        a.reset();
+        assert_eq!(a.mean_toggle_rate(), 0.0);
+    }
+}

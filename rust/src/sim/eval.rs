@@ -1,0 +1,358 @@
+//! Pure cell semantics: the single source of truth for what every cell
+//! *does*.
+//!
+//! Three functions per cell kind:
+//! * [`eval_comb`] — output values from current input nets + current state.
+//! * [`next_state`] — sequential next-state from settled inputs + state.
+//! * [`comb_deps`] — which input pins the outputs depend on
+//!   *combinationally* (levelization must order only those; e.g. a plain
+//!   DFF's Q depends on no input, so Q→logic→D loops are legal).
+//!
+//! The behavioral models of the custom macros here are what the
+//! std-flavour gate builders in [`crate::netlist::modules`] are proven
+//! equivalent to (their unit tests sweep both through the simulator).
+
+use crate::cells::{CellKind, MacroKind};
+
+/// Evaluate combinational outputs.
+///
+/// `ins` are current net values, `state` the instance's current state
+/// bits, `outs` is written in pin order.
+pub fn eval_comb(kind: CellKind, ins: &[bool], state: &[bool], outs: &mut [bool]) {
+    use CellKind::*;
+    match kind {
+        Tie0 => outs[0] = false,
+        Tie1 => outs[0] = true,
+        Inv => outs[0] = !ins[0],
+        Buf => outs[0] = ins[0],
+        Nand2 => outs[0] = !(ins[0] & ins[1]),
+        Nand3 => outs[0] = !(ins[0] & ins[1] & ins[2]),
+        Nand4 => outs[0] = !(ins[0] & ins[1] & ins[2] & ins[3]),
+        Nor2 => outs[0] = !(ins[0] | ins[1]),
+        Nor3 => outs[0] = !(ins[0] | ins[1] | ins[2]),
+        And2 => outs[0] = ins[0] & ins[1],
+        And3 => outs[0] = ins[0] & ins[1] & ins[2],
+        Or2 => outs[0] = ins[0] | ins[1],
+        Or3 => outs[0] = ins[0] | ins[1] | ins[2],
+        Xor2 => outs[0] = ins[0] ^ ins[1],
+        Xnor2 => outs[0] = !(ins[0] ^ ins[1]),
+        Xor3 => outs[0] = ins[0] ^ ins[1] ^ ins[2],
+        Maj3 => {
+            outs[0] = (ins[0] & ins[1]) | (ins[1] & ins[2]) | (ins[0] & ins[2])
+        }
+        Aoi21 => outs[0] = !((ins[0] & ins[1]) | ins[2]),
+        Oai21 => outs[0] = !((ins[0] | ins[1]) & ins[2]),
+        Mux2 => outs[0] = if ins[2] { ins[1] } else { ins[0] },
+        Dff => outs[0] = state[0],
+        // Async active-high reset shows at Q immediately.
+        DffR => outs[0] = !ins[1] & state[0],
+        // Sync active-low reset: Q is just the state.
+        DffRn => outs[0] = state[0],
+        // Transparent-high latch.
+        Latch => outs[0] = if ins[1] { ins[0] } else { state[0] },
+        Macro(m) => eval_macro(m, ins, state, outs),
+    }
+}
+
+fn eval_macro(m: MacroKind, ins: &[bool], state: &[bool], outs: &mut [bool]) {
+    match m {
+        // Fig. 2: weight register drives its value; update is sequential.
+        MacroKind::SynWeightUpdate => {
+            outs[0] = state[0];
+            outs[1] = state[1];
+            outs[2] = state[2];
+        }
+        // Fig. 3: up = pulse & (count < weight), both 3-bit LSB-first.
+        MacroKind::SynOutput => {
+            let c = bits3(ins[0], ins[1], ins[2]);
+            let w = bits3(ins[3], ins[4], ins[5]);
+            outs[0] = ins[6] && c < w;
+        }
+        // Fig. 4: full-adder slice.
+        MacroKind::PacAdder => {
+            outs[0] = ins[0] ^ ins[1] ^ ins[2];
+            outs[1] = (ins[0] & ins[1]) | (ins[1] & ins[2]) | (ins[0] & ins[2]);
+        }
+        // Fig. 5: monotone-level "arrived no later": le = a | !b.
+        MacroKind::LessEqual => outs[0] = ins[0] | !ins[1],
+        // Fig. 6: async reset visible at output immediately.
+        MacroKind::Pulse2EdgePwr => outs[0] = !ins[1] & state[0],
+        // Fig. 7: sync reset; output is the registered level.
+        MacroKind::Pulse2EdgeArea => outs[0] = state[0],
+        // Fig. 8: the four STDP timing cases from (x, y, le).
+        MacroKind::StdpCaseGen => {
+            let (x, y, le) = (ins[0], ins[1], ins[2]);
+            outs[0] = x & y & le; // capture
+            outs[1] = x & y & !le; // backoff
+            outs[2] = x & !y; // search
+            outs[3] = !x & y; // minus
+        }
+        // Fig. 9: 8:1 BRV select by 3-bit weight (s LSB-first at ins[8..11]).
+        MacroKind::StabilizeFunc => {
+            let sel = bits3(ins[8], ins[9], ins[10]) as usize;
+            outs[0] = ins[sel];
+        }
+        // Fig. 10: inc = capture|search, dec = backoff|minus.
+        MacroKind::IncDec => {
+            outs[0] = ins[0] | ins[2];
+            outs[1] = ins[1] | ins[3];
+        }
+        // Fig. 11: GDI mux.
+        MacroKind::Mux2Gdi => outs[0] = if ins[2] { ins[1] } else { ins[0] },
+        // Fig. 13: one-cycle pulse on rising edge.
+        MacroKind::Edge2Pulse => outs[0] = ins[0] & !state[0],
+        // Fig. 12: pulse = d & count<8; count exported (3 LSBs).
+        MacroKind::SpikeGen => {
+            let done = state[3];
+            outs[0] = ins[0] & !done;
+            outs[1] = state[0];
+            outs[2] = state[1];
+            outs[3] = state[2];
+        }
+    }
+}
+
+/// Compute sequential next-state (called after combinational settle).
+pub fn next_state(kind: CellKind, ins: &[bool], state: &[bool], next: &mut [bool]) {
+    use CellKind::*;
+    match kind {
+        Dff => next[0] = ins[0],
+        DffR => next[0] = !ins[1] & ins[0],
+        DffRn => next[0] = ins[1] & ins[0],
+        Latch => next[0] = if ins[1] { ins[0] } else { state[0] },
+        Macro(m) => next_state_macro(m, ins, state, next),
+        _ => {}
+    }
+}
+
+fn next_state_macro(m: MacroKind, ins: &[bool], state: &[bool], next: &mut [bool]) {
+    match m {
+        MacroKind::SynWeightUpdate => {
+            let w = bits3(state[0], state[1], state[2]);
+            let (inc, dec) = (ins[0], ins[1]);
+            // inc has priority; saturate at [0, 7] — identical to the
+            // std-flavour sat_updown3 logic.
+            let nw = if inc && w < 7 {
+                w + 1
+            } else if dec && !inc && w > 0 {
+                w - 1
+            } else {
+                w
+            };
+            next[0] = nw & 1 != 0;
+            next[1] = nw & 2 != 0;
+            next[2] = nw & 4 != 0;
+        }
+        MacroKind::Pulse2EdgePwr | MacroKind::Pulse2EdgeArea => {
+            next[0] = !ins[1] & (state[0] | ins[0]);
+        }
+        MacroKind::Edge2Pulse => next[0] = ins[0],
+        MacroKind::SpikeGen => {
+            // 4-bit saturating cycle counter, cleared by rst (ins[1]);
+            // counts while the input level is high and count < 8.
+            let c = bits3(state[0], state[1], state[2]) + if state[3] { 8 } else { 0 };
+            let nc = if ins[1] {
+                0
+            } else if ins[0] && c < 8 {
+                c + 1
+            } else {
+                c
+            };
+            next[0] = nc & 1 != 0;
+            next[1] = nc & 2 != 0;
+            next[2] = nc & 4 != 0;
+            next[3] = nc & 8 != 0;
+        }
+        _ => {}
+    }
+}
+
+/// Bitmask of input pins that outputs depend on *combinationally*.
+pub fn comb_deps(kind: CellKind) -> u16 {
+    use CellKind::*;
+    match kind {
+        Tie0 | Tie1 => 0,
+        Dff | DffRn => 0,               // Q = state only
+        DffR => 0b10,                   // Q sees async rst (pin 1)
+        Latch => 0b11,                  // transparent path
+        Macro(m) => match m {
+            MacroKind::SynWeightUpdate => 0,
+            MacroKind::Pulse2EdgeArea => 0,
+            MacroKind::Pulse2EdgePwr => 0b10, // async rst
+            MacroKind::Edge2Pulse => 0b1,     // out = d & !prev
+            MacroKind::SpikeGen => 0b01,      // pulse = d & !done
+            _ => all_ins(kind),
+        },
+        _ => all_ins(kind),
+    }
+}
+
+fn all_ins(kind: CellKind) -> u16 {
+    let (n, _, _) = kind.pins();
+    ((1u32 << n) - 1) as u16
+}
+
+fn bits3(b0: bool, b1: bool, b2: bool) -> u8 {
+    (b0 as u8) | ((b1 as u8) << 1) | ((b2 as u8) << 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: CellKind, ins: &[bool], state: &[bool], n_out: usize) -> Vec<bool> {
+        let mut o = vec![false; n_out];
+        eval_comb(kind, ins, state, &mut o);
+        o
+    }
+
+    #[test]
+    fn basic_gates_truth_tables() {
+        for a in [false, true] {
+            for b in [false, true] {
+                assert_eq!(ev(CellKind::Nand2, &[a, b], &[], 1)[0], !(a & b));
+                assert_eq!(ev(CellKind::Xor2, &[a, b], &[], 1)[0], a ^ b);
+                assert_eq!(ev(CellKind::Nor2, &[a, b], &[], 1)[0], !(a | b));
+                for c in [false, true] {
+                    assert_eq!(
+                        ev(CellKind::Maj3, &[a, b, c], &[], 1)[0],
+                        (a & b) | (b & c) | (a & c)
+                    );
+                    assert_eq!(
+                        ev(CellKind::Xor3, &[a, b, c], &[], 1)[0],
+                        a ^ b ^ c
+                    );
+                    assert_eq!(
+                        ev(CellKind::Mux2, &[a, b, c], &[], 1)[0],
+                        if c { b } else { a }
+                    );
+                    assert_eq!(
+                        ev(CellKind::Aoi21, &[a, b, c], &[], 1)[0],
+                        !((a & b) | c)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_adder_macro_matches_arithmetic() {
+        for v in 0..8u8 {
+            let ins = [(v & 1) != 0, (v & 2) != 0, (v & 4) != 0];
+            let o = ev(CellKind::Macro(MacroKind::PacAdder), &ins, &[], 2);
+            let sum = (v & 1) + ((v >> 1) & 1) + ((v >> 2) & 1);
+            assert_eq!(o[0], sum & 1 != 0);
+            assert_eq!(o[1], sum >= 2);
+        }
+    }
+
+    #[test]
+    fn syn_output_compares_count_weight() {
+        for c in 0..8u8 {
+            for w in 0..8u8 {
+                let ins = [
+                    c & 1 != 0, c & 2 != 0, c & 4 != 0,
+                    w & 1 != 0, w & 2 != 0, w & 4 != 0,
+                    true,
+                ];
+                let o = ev(CellKind::Macro(MacroKind::SynOutput), &ins, &[], 1);
+                assert_eq!(o[0], c < w, "c={c} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn syn_weight_update_saturates() {
+        let m = CellKind::Macro(MacroKind::SynWeightUpdate);
+        let mut next = [false; 3];
+        // inc at w=7 holds
+        next_state(m, &[true, false], &[true, true, true], &mut next);
+        assert_eq!(next, [true, true, true]);
+        // dec at w=0 holds
+        next_state(m, &[false, true], &[false, false, false], &mut next);
+        assert_eq!(next, [false, false, false]);
+        // inc beats dec
+        next_state(m, &[true, true], &[true, false, false], &mut next);
+        assert_eq!(next, [false, true, false]); // 1 -> 2
+    }
+
+    #[test]
+    fn stabilize_func_selects_by_weight() {
+        let m = CellKind::Macro(MacroKind::StabilizeFunc);
+        for sel in 0..8usize {
+            let mut ins = vec![false; 11];
+            ins[sel] = true;
+            ins[8] = sel & 1 != 0;
+            ins[9] = sel & 2 != 0;
+            ins[10] = sel & 4 != 0;
+            assert!(ev(m, &ins, &[], 1)[0], "sel={sel}");
+        }
+    }
+
+    #[test]
+    fn spike_gen_counts_eight_cycles() {
+        let m = CellKind::Macro(MacroKind::SpikeGen);
+        let mut state = [false; 4];
+        let mut pulses = 0;
+        for _ in 0..20 {
+            let mut o = [false; 4];
+            eval_comb(m, &[true, false], &state, &mut o);
+            if o[0] {
+                pulses += 1;
+            }
+            let mut next = [false; 4];
+            next_state(m, &[true, false], &state, &mut next);
+            state = next;
+        }
+        assert_eq!(pulses, 8);
+        // reset clears the counter
+        let mut next = [false; 4];
+        next_state(m, &[false, true], &state, &mut next);
+        assert_eq!(next, [false; 4]);
+    }
+
+    #[test]
+    fn edge2pulse_single_cycle() {
+        let m = CellKind::Macro(MacroKind::Edge2Pulse);
+        let mut state = [false];
+        let mut seen = Vec::new();
+        for d in [false, true, true, true, false, true] {
+            let mut o = [false];
+            eval_comb(m, &[d], &state, &mut o);
+            seen.push(o[0]);
+            let mut n = [false];
+            next_state(m, &[d], &state, &mut n);
+            state = n;
+        }
+        assert_eq!(seen, vec![false, true, false, false, false, true]);
+    }
+
+    #[test]
+    fn pulse2edge_latches_until_reset() {
+        for m in [MacroKind::Pulse2EdgePwr, MacroKind::Pulse2EdgeArea] {
+            let k = CellKind::Macro(m);
+            let mut state = [false];
+            // pulse then hold
+            let mut n = [false];
+            next_state(k, &[true, false], &state, &mut n);
+            state = n;
+            let mut o = [false];
+            eval_comb(k, &[false, false], &state, &mut o);
+            assert!(o[0], "{m:?} holds");
+            // reset clears
+            next_state(k, &[false, true], &state, &mut n);
+            assert!(!n[0]);
+        }
+    }
+
+    #[test]
+    fn comb_deps_break_dff_feedback() {
+        assert_eq!(comb_deps(CellKind::Dff), 0);
+        assert_eq!(comb_deps(CellKind::DffR), 0b10);
+        assert_eq!(
+            comb_deps(CellKind::Macro(MacroKind::SynWeightUpdate)),
+            0
+        );
+        assert_eq!(comb_deps(CellKind::Nand2), 0b11);
+    }
+}

@@ -1,0 +1,27 @@
+//! Levelized cycle-accurate two-clock gate-level simulator.
+//!
+//! The Cadence-simulation analogue: executes a [`crate::netlist::Netlist`]
+//! cycle by cycle on the unit clock (`aclk`), with gamma-clock (`gclk`)
+//! domain state committing only on end-of-wave ticks, and counts per-net
+//! toggles — the switching-activity input to [`crate::ppa::power`].
+//!
+//! * [`eval`] — pure cell semantics: combinational output functions and
+//!   sequential next-state functions for every [`crate::cells::CellKind`],
+//!   including the behavioral models of the 11 custom macros.  These
+//!   definitions are the single source of truth the netlist *module
+//!   builders* are tested against (std-flavour gates ≡ macro behavior).
+//! * [`simulator`] — levelization (comb-sensitivity-aware topological
+//!   order), eval loop, commit, toggle counting.
+//! * [`activity`] — per-instance toggle/clock counters → activity factors.
+//! * [`testbench`] — drives TNN columns with encoded spike waves and
+//!   decodes spike times back out (the bridge to the golden model).
+//! * [`vcd`] — waveform dump for debugging.
+
+pub mod activity;
+pub mod eval;
+pub mod simulator;
+pub mod testbench;
+pub mod vcd;
+
+pub use activity::Activity;
+pub use simulator::Simulator;

@@ -1,0 +1,448 @@
+//! The levelized cycle-based simulator.
+//!
+//! Construction levelizes the netlist once: instances are topologically
+//! ordered by *combinational sensitivity* ([`super::eval::comb_deps`]),
+//! so registered feedback (Q → logic → D) is legal while true
+//! combinational loops are rejected.  Each [`Simulator::tick`] then:
+//!
+//! 1. applies primary-input values,
+//! 2. evaluates every instance once in level order (zero-delay settle),
+//! 3. counts per-net toggles against the previous cycle (the activity
+//!    source for [`crate::ppa::power`]),
+//! 4. computes next-state for all sequential instances and commits —
+//!    `aclk`-domain always, `gclk`-domain only when the tick is flagged
+//!    as a gamma edge.
+
+use crate::cells::Library;
+use crate::error::{Error, Result};
+use crate::netlist::{ClockDomain, NetId, Netlist};
+
+use super::activity::Activity;
+use super::eval::{comb_deps, eval_comb, next_state};
+
+/// Flat evaluation node: everything the hot loop needs for one instance,
+/// laid out contiguously in level order (avoids chasing `Instance` →
+/// `Library` indirections 20M times per big-column measurement).
+#[derive(Clone, Copy)]
+struct EvalNode {
+    kind: crate::cells::CellKind,
+    pin_start: u32,
+    state_off: u32,
+    n_ins: u8,
+    n_outs: u8,
+    n_state: u8,
+    /// Original instance index (activity attribution).
+    inst: u32,
+}
+
+/// Ready-to-run simulation instance over a netlist.
+pub struct Simulator<'n> {
+    nl: &'n Netlist,
+    lib: &'n Library,
+    /// Evaluation nodes in combinational level order.
+    nodes: Vec<EvalNode>,
+    /// Current net values.
+    values: Vec<bool>,
+    /// Per-instance state storage.
+    state: Vec<bool>,
+    next: Vec<bool>,
+    state_off: Vec<u32>,
+    /// Sequential instance indices (for the commit phase).
+    seq: Vec<u32>,
+    /// Activity counters.
+    pub activity: Activity,
+    cycle: u64,
+    scratch_ins: Vec<bool>,
+    scratch_outs: Vec<bool>,
+}
+
+/// Topologically order instances by combinational sensitivity.
+///
+/// Shared by the simulator and the STA ([`crate::ppa::timing`]); fails on
+/// true combinational cycles (registered feedback is fine).
+pub fn levelize(nl: &Netlist, lib: &Library) -> Result<Vec<u32>> {
+    let n_insts = nl.insts.len();
+    // Map: net -> driving instance; primary inputs stay u32::MAX (sources).
+    let mut driver_of: Vec<u32> = vec![u32::MAX; nl.n_nets()];
+    for i in 0..n_insts {
+        for &o in nl.inst_outs(i) {
+            driver_of[o.0 as usize] = i as u32;
+        }
+    }
+    let mut indeg = vec![0u32; n_insts];
+    let mut fanout: Vec<Vec<u32>> = vec![Vec::new(); n_insts];
+    for i in 0..n_insts {
+        let kind = lib.cell(nl.insts[i].cell).kind;
+        let deps = comb_deps(kind);
+        for (pin, &inp) in nl.inst_ins(i).iter().enumerate() {
+            if deps >> pin & 1 == 0 {
+                continue;
+            }
+            let d = driver_of[inp.0 as usize];
+            if d != u32::MAX {
+                fanout[d as usize].push(i as u32);
+                indeg[i] += 1;
+            }
+        }
+    }
+    let mut order = Vec::with_capacity(n_insts);
+    let mut queue: Vec<u32> = (0..n_insts as u32)
+        .filter(|&i| indeg[i as usize] == 0)
+        .collect();
+    while let Some(i) = queue.pop() {
+        order.push(i);
+        for &f in &fanout[i as usize] {
+            indeg[f as usize] -= 1;
+            if indeg[f as usize] == 0 {
+                queue.push(f);
+            }
+        }
+    }
+    if order.len() != n_insts {
+        return Err(Error::sim(format!(
+            "combinational cycle: {} of {} instances unordered",
+            n_insts - order.len(),
+            n_insts
+        )));
+    }
+    Ok(order)
+}
+
+impl<'n> Simulator<'n> {
+    /// Levelize and allocate. Fails on combinational cycles.
+    pub fn new(nl: &'n Netlist, lib: &'n Library) -> Result<Self> {
+        let n_insts = nl.insts.len();
+        let order = levelize(nl, lib)?;
+        // State allocation.
+        let mut state_off = vec![0u32; n_insts];
+        let mut total_state = 0u32;
+        let mut seq = Vec::new();
+        for i in 0..n_insts {
+            let kind = lib.cell(nl.insts[i].cell).kind;
+            let bits = kind.pins().2 as u32;
+            state_off[i] = total_state;
+            total_state += bits;
+            if bits > 0 {
+                seq.push(i as u32);
+            }
+        }
+        // Flatten the hot-loop metadata in level order.
+        let nodes = order
+            .iter()
+            .map(|&oi| {
+                let i = oi as usize;
+                let inst = nl.insts[i];
+                let kind = lib.cell(inst.cell).kind;
+                let (_, _, n_state) = kind.pins();
+                EvalNode {
+                    kind,
+                    pin_start: inst.pin_start,
+                    state_off: state_off[i],
+                    n_ins: inst.n_ins,
+                    n_outs: inst.n_outs,
+                    n_state: n_state as u8,
+                    inst: oi,
+                }
+            })
+            .collect();
+        Ok(Simulator {
+            nl,
+            lib,
+            nodes,
+            values: vec![false; nl.n_nets()],
+            state: vec![false; total_state as usize],
+            next: vec![false; total_state as usize],
+            state_off,
+            seq,
+            activity: Activity::new(n_insts),
+            cycle: 0,
+            scratch_ins: vec![false; 16],
+            scratch_outs: vec![false; 8],
+        })
+    }
+
+    /// Current value of a net.
+    pub fn get(&self, net: NetId) -> bool {
+        self.values[net.0 as usize]
+    }
+
+    /// Cycle counter.
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Peek at an instance's state bits (testing / debug).
+    pub fn inst_state(&self, inst: usize) -> &[bool] {
+        let off = self.state_off[inst] as usize;
+        let bits = self
+            .lib
+            .cell(self.nl.insts[inst].cell)
+            .kind
+            .pins()
+            .2;
+        &self.state[off..off + bits]
+    }
+
+    /// Reset all state and net values to 0 and clear the cycle counter
+    /// (activity counters are preserved; call `activity.reset()` too for
+    /// a fresh measurement).
+    pub fn reset(&mut self) {
+        self.values.iter_mut().for_each(|v| *v = false);
+        self.state.iter_mut().for_each(|v| *v = false);
+        self.cycle = 0;
+    }
+
+    /// Run one `aclk` cycle.
+    ///
+    /// `set_inputs` assigns the primary-input values for this cycle;
+    /// `gclk_edge` marks an end-of-wave tick (gamma-domain commit).
+    pub fn tick(&mut self, inputs: &[(NetId, bool)], gclk_edge: bool) {
+        for &(n, v) in inputs {
+            let old = self.values[n.0 as usize];
+            if old != v {
+                self.values[n.0 as usize] = v;
+            }
+        }
+        // Evaluate in level order, counting output toggles.  The flat
+        // node array + single-output fast path are the §Perf hot-loop
+        // optimizations (EXPERIMENTS.md §Perf L3).
+        let pins = &self.nl.pins;
+        for node in &self.nodes {
+            use crate::cells::CellKind as K;
+            let ps = node.pin_start as usize;
+            let n_in = node.n_ins as usize;
+            // Fast path: stateless 1-output gates evaluated inline.
+            let fast = match node.kind {
+                K::Inv => Some(!self.values[pins[ps].0 as usize]),
+                K::Buf => Some(self.values[pins[ps].0 as usize]),
+                K::And2 => Some(
+                    self.values[pins[ps].0 as usize]
+                        & self.values[pins[ps + 1].0 as usize],
+                ),
+                K::Or2 => Some(
+                    self.values[pins[ps].0 as usize]
+                        | self.values[pins[ps + 1].0 as usize],
+                ),
+                K::Nand2 => Some(
+                    !(self.values[pins[ps].0 as usize]
+                        & self.values[pins[ps + 1].0 as usize]),
+                ),
+                K::Xor2 => Some(
+                    self.values[pins[ps].0 as usize]
+                        ^ self.values[pins[ps + 1].0 as usize],
+                ),
+                K::And3 => Some(
+                    self.values[pins[ps].0 as usize]
+                        & self.values[pins[ps + 1].0 as usize]
+                        & self.values[pins[ps + 2].0 as usize],
+                ),
+                K::Xor3 => Some(
+                    self.values[pins[ps].0 as usize]
+                        ^ self.values[pins[ps + 1].0 as usize]
+                        ^ self.values[pins[ps + 2].0 as usize],
+                ),
+                K::Maj3 => {
+                    let a = self.values[pins[ps].0 as usize];
+                    let b = self.values[pins[ps + 1].0 as usize];
+                    let c = self.values[pins[ps + 2].0 as usize];
+                    Some((a & b) | (b & c) | (a & c))
+                }
+                K::Mux2 => {
+                    let s = self.values[pins[ps + 2].0 as usize];
+                    Some(self.values[pins[ps + (s as usize)].0 as usize])
+                }
+                _ => None,
+            };
+            if let Some(v) = fast {
+                let out_net = pins[ps + n_in].0 as usize;
+                if self.values[out_net] != v {
+                    self.values[out_net] = v;
+                    self.activity.toggles[node.inst as usize] += 1;
+                }
+                continue;
+            }
+            // General path (multi-output cells, sequential, macros).
+            let n_out = node.n_outs as usize;
+            let n_state = node.n_state as usize;
+            for k in 0..n_in {
+                self.scratch_ins[k] = self.values[pins[ps + k].0 as usize];
+            }
+            let off = node.state_off as usize;
+            {
+                let (ins, outs) = (
+                    &self.scratch_ins[..n_in],
+                    &mut self.scratch_outs[..n_out],
+                );
+                eval_comb(node.kind, ins, &self.state[off..off + n_state], outs);
+            }
+            let mut toggles = 0u32;
+            for k in 0..n_out {
+                let v = self.scratch_outs[k];
+                let slot = &mut self.values[pins[ps + n_in + k].0 as usize];
+                if *slot != v {
+                    *slot = v;
+                    toggles += 1;
+                }
+            }
+            if toggles > 0 {
+                self.activity.toggles[node.inst as usize] += u64::from(toggles);
+            }
+        }
+        // Next-state + commit per domain.
+        for &si in &self.seq {
+            let i = si as usize;
+            let inst = self.nl.insts[i];
+            let commit = match inst.domain {
+                ClockDomain::Aclk => true,
+                ClockDomain::Gclk => gclk_edge,
+                ClockDomain::Comb => false,
+            };
+            if !commit {
+                continue;
+            }
+            let kind = self.lib.cell(inst.cell).kind;
+            let (n_in, _, n_state) = kind.pins();
+            let ins_nets = self.nl.inst_ins(i);
+            for (k, &n) in ins_nets.iter().enumerate() {
+                self.scratch_ins[k] = self.values[n.0 as usize];
+            }
+            let off = self.state_off[i] as usize;
+            // Write next into `next`, then copy back (no aliasing).
+            {
+                let (cur, nxt) = (
+                    &self.state[off..off + n_state],
+                    &mut self.next[off..off + n_state],
+                );
+                next_state(kind, &self.scratch_ins[..n_in], cur, nxt);
+            }
+            self.state[off..off + n_state]
+                .copy_from_slice(&self.next[off..off + n_state]);
+            self.activity.clock_ticks[i] += 1;
+        }
+        self.cycle += 1;
+        self.activity.cycles += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::{CellKind, Library};
+    use crate::netlist::Builder;
+
+    #[test]
+    fn inverter_chain_settles_in_one_tick() {
+        let lib = Library::asap7_only();
+        let mut b = Builder::new("chain", &lib);
+        let x = b.input("x");
+        let mut n = x;
+        for _ in 0..10 {
+            n = b.inv(n);
+        }
+        b.output(n, "y");
+        let nl = b.finish().unwrap();
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        let y = nl.outputs[0];
+        sim.tick(&[(nl.inputs[0], true)], false);
+        assert!(sim.get(y)); // even number of inversions
+        sim.tick(&[(nl.inputs[0], false)], false);
+        assert!(!sim.get(y));
+    }
+
+    #[test]
+    fn registered_feedback_is_legal_toggle_flop() {
+        // q -> inv -> d: divide-by-two toggler.
+        let lib = Library::asap7_only();
+        let mut b = Builder::new("tff", &lib);
+        // manual feedback: allocate q net by building dff on a placeholder
+        let d = b.net();
+        let q = {
+            let cell = lib.id_of_kind(CellKind::Dff).unwrap();
+            let q = b.net();
+            b.nl.push_inst(
+                cell,
+                &[d],
+                &[q],
+                crate::netlist::ClockDomain::Aclk,
+                b.region(),
+            );
+            q
+        };
+        let nq = b.inv(q);
+        // tie d to nq by an identity buffer onto the SAME net is not
+        // possible in this IR; instead build dff input as buf(nq) -> d.
+        // Re-do: d net must be driven; use a Buf.
+        let cell = lib.id_of_kind(CellKind::Buf).unwrap();
+        b.nl.push_inst(
+            cell,
+            &[nq],
+            &[d],
+            crate::netlist::ClockDomain::Comb,
+            b.region(),
+        );
+        b.output(q, "q");
+        let nl = b.finish().unwrap();
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            sim.tick(&[], false);
+            seen.push(sim.get(q));
+        }
+        // Q is visible one cycle after the commit: 0,1,0,1.
+        assert_eq!(seen, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn combinational_cycle_is_rejected() {
+        let lib = Library::asap7_only();
+        let mut b = Builder::new("loop", &lib);
+        let a = b.net();
+        let y = {
+            let cell = lib.id_of_kind(CellKind::Inv).unwrap();
+            let y = b.net();
+            b.nl.push_inst(cell, &[a], &[y], crate::netlist::ClockDomain::Comb, b.region());
+            y
+        };
+        let cell = lib.id_of_kind(CellKind::Inv).unwrap();
+        b.nl.push_inst(cell, &[y], &[a], crate::netlist::ClockDomain::Comb, b.region());
+        let nl = b.nl;
+        assert!(Simulator::new(&nl, &lib).is_err());
+    }
+
+    #[test]
+    fn gclk_domain_commits_only_on_gamma_edge() {
+        let lib = Library::asap7_only();
+        let mut b = Builder::new("g", &lib);
+        let d = b.input("d");
+        let q = b.dff(d, crate::netlist::ClockDomain::Gclk);
+        b.output(q, "q");
+        let nl = b.finish().unwrap();
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        let din = nl.inputs[0];
+        sim.tick(&[(din, true)], false);
+        sim.tick(&[(din, true)], false);
+        assert!(!sim.get(q), "no commit before gamma edge");
+        sim.tick(&[(din, true)], true);
+        sim.tick(&[(din, false)], false);
+        assert!(sim.get(q), "gamma edge committed");
+    }
+
+    #[test]
+    fn toggle_counting_attributes_to_instances() {
+        let lib = Library::asap7_only();
+        let mut b = Builder::new("t", &lib);
+        let x = b.input("x");
+        let y = b.inv(x);
+        b.output(y, "y");
+        let nl = b.finish().unwrap();
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        let xin = nl.inputs[0];
+        for i in 0..10 {
+            sim.tick(&[(xin, i % 2 == 0)], false);
+        }
+        // Inverter output toggles every cycle except the first (nets
+        // power up at 0 and x=1 keeps the output at 0 on cycle 0).
+        let inv_idx = nl.insts.len() - 1;
+        assert_eq!(sim.activity.toggles[inv_idx], 9);
+    }
+}

@@ -1,0 +1,250 @@
+//! Column testbench: drive an elaborated TNN column through
+//! computational waves and decode spike times / weights back out.
+//!
+//! Wave protocol (WAVE_CYCLES = T_STEPS + 2 = 17 unit cycles):
+//!
+//! | cycles        | activity                                            |
+//! |---------------|-----------------------------------------------------|
+//! | 0 .. 14       | compute: input level `x[j]` rises at its encoded    |
+//! |               | spike time; RNL accumulation, threshold, WTA        |
+//! | 15            | STDP evaluate: BRV lanes driven, gamma-domain       |
+//! |               | commit (weight registers update)                    |
+//! | 16            | gamma reset: `gclk` level rises, edge2pulse emits   |
+//! |               | `grst`, per-wave state clears                       |
+//!
+//! The testbench records pre-WTA spike times (first cycle each `fire`
+//! level is high), post-WTA times (grant cycles) and the committed
+//! weights — the exact observables of the golden model, enabling
+//! bit-exact gate-vs-golden equivalence tests and activity extraction
+//! for Table I power.
+
+use crate::arch::T_STEPS;
+use crate::cells::Library;
+use crate::error::Result;
+use crate::netlist::column::{ColumnPorts, BRV_PER_SYN};
+use crate::netlist::{NetId, Netlist};
+use crate::tnn::stdp::{brv_lanes, RandPair, StdpParams};
+use crate::tnn::INF;
+
+use super::Simulator;
+
+/// Cycles per wave (keep in sync with ppa::WAVE_CYCLES).
+pub const WAVE_LEN: usize = T_STEPS as usize + 2;
+
+/// Result of one wave.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WaveResult {
+    /// Pre-WTA spike time per neuron (INF = none).
+    pub pre: Vec<i32>,
+    /// Post-WTA spike time per neuron.
+    pub post: Vec<i32>,
+    /// Weights after the gamma commit, row-major `w[j*q+i]`.
+    pub weights: Vec<i32>,
+}
+
+/// Testbench over a column netlist.
+pub struct ColumnTestbench<'n> {
+    nl: &'n Netlist,
+    ports: &'n ColumnPorts,
+    sim: Simulator<'n>,
+    p: usize,
+    q: usize,
+    inputs: Vec<(NetId, bool)>,
+}
+
+impl<'n> ColumnTestbench<'n> {
+    /// Attach to an elaborated column.
+    pub fn new(
+        nl: &'n Netlist,
+        ports: &'n ColumnPorts,
+        lib: &'n Library,
+    ) -> Result<Self> {
+        let sim = Simulator::new(nl, lib)?;
+        Ok(ColumnTestbench {
+            nl,
+            ports,
+            p: ports.x.len(),
+            q: ports.fires.len(),
+            sim,
+            inputs: Vec::new(),
+        })
+    }
+
+    /// Immutable access to the activity counters.
+    pub fn activity(&self) -> &super::Activity {
+        &self.sim.activity
+    }
+
+    /// Underlying netlist.
+    pub fn netlist(&self) -> &Netlist {
+        self.nl
+    }
+
+    /// Run one wave: `spike_times[p]` (INF = no spike, else 0..7),
+    /// `rand[p*q]` per-synapse BRV draw pairs, `params` the STDP config.
+    pub fn run_wave(
+        &mut self,
+        spike_times: &[i32],
+        rand: &[RandPair],
+        params: &StdpParams,
+    ) -> WaveResult {
+        assert_eq!(spike_times.len(), self.p);
+        assert_eq!(rand.len(), self.p * self.q);
+        let mut pre = vec![INF; self.q];
+        let mut post = vec![INF; self.q];
+
+        for cyc in 0..WAVE_LEN {
+            self.inputs.clear();
+            let compute = cyc < T_STEPS as usize;
+            let stdp_eval = cyc == T_STEPS as usize; // cycle 15
+            let reset = cyc == WAVE_LEN - 1; // cycle 16
+            // Input levels: high from the spike time through the STDP
+            // evaluation cycle, low on the reset cycle.
+            for j in 0..self.p {
+                let s = spike_times[j];
+                let high = !reset && s != INF && (cyc as i32) >= s;
+                self.inputs.push((self.ports.x[j], high));
+            }
+            self.inputs.push((self.ports.gclk, reset));
+            // BRV lanes valid on the STDP evaluation cycle.
+            for (syn, &pair) in rand.iter().enumerate() {
+                if stdp_eval {
+                    let lanes = brv_lanes(pair, params);
+                    for (k, &v) in lanes.iter().enumerate() {
+                        self.inputs
+                            .push((self.ports.brv[syn * BRV_PER_SYN + k], v));
+                    }
+                } else if cyc == 0 || reset {
+                    for k in 0..BRV_PER_SYN {
+                        self.inputs
+                            .push((self.ports.brv[syn * BRV_PER_SYN + k], false));
+                    }
+                }
+            }
+            self.sim.tick(&self.inputs, stdp_eval);
+            // Record spike times during the compute window.
+            if compute {
+                for i in 0..self.q {
+                    if pre[i] == INF && self.sim.get(self.ports.fires[i]) {
+                        pre[i] = cyc as i32;
+                    }
+                    if post[i] == INF && self.sim.get(self.ports.grants[i]) {
+                        post[i] = cyc as i32;
+                    }
+                }
+            }
+        }
+        WaveResult { pre, post, weights: self.read_weights() }
+    }
+
+    /// Read the committed weight registers.
+    pub fn read_weights(&self) -> Vec<i32> {
+        self.ports
+            .weights
+            .iter()
+            .map(|bits| {
+                (self.sim.get(bits[0]) as i32)
+                    | (self.sim.get(bits[1]) as i32) << 1
+                    | (self.sim.get(bits[2]) as i32) << 2
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::Flavor;
+    use crate::tnn::column::ColumnState;
+    use crate::tnn::stdp::stdp_step;
+    use crate::tnn::Lfsr16;
+
+    /// Gate-level column ≡ golden model over several learning waves —
+    /// THE cross-layer correctness theorem of this reproduction.
+    fn check_equivalence(flavor: Flavor, seed: u16, waves: usize) {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 6, q: 3, theta: 8 };
+        let (nl, ports) = build_column(&lib, flavor, &spec).unwrap();
+        let mut tb = ColumnTestbench::new(&nl, &ports, &lib).unwrap();
+        let mut golden = ColumnState::new(spec.p, spec.q, spec.theta as i32);
+        let params = StdpParams::default_training();
+        let mut lfsr = Lfsr16::new(seed);
+        let mut stim = Lfsr16::new(seed ^ 0x5a5a);
+
+        for wave in 0..waves {
+            // Random spike pattern (some inputs silent).
+            let s: Vec<i32> = (0..spec.p)
+                .map(|_| {
+                    let v = stim.next_u16();
+                    if v & 0x7 == 7 {
+                        INF
+                    } else {
+                        i32::from(v % 8)
+                    }
+                })
+                .collect();
+            let rand: Vec<RandPair> =
+                (0..spec.p * spec.q).map(|_| lfsr.draw_pair()).collect();
+
+            let hw = tb.run_wave(&s, &rand, &params);
+            let (pre_g, post_g) = golden.forward(&s);
+            stdp_step(&s, &post_g, &mut golden.weights, &rand, &params);
+
+            assert_eq!(hw.pre, pre_g, "{flavor:?} wave {wave}: pre");
+            assert_eq!(hw.post, post_g, "{flavor:?} wave {wave}: post");
+            assert_eq!(
+                hw.weights, golden.weights,
+                "{flavor:?} wave {wave}: weights"
+            );
+        }
+    }
+
+    #[test]
+    fn std_column_matches_golden_model() {
+        check_equivalence(Flavor::Std, 0xBEEF, 25);
+    }
+
+    #[test]
+    fn custom_column_matches_golden_model() {
+        check_equivalence(Flavor::Custom, 0xBEEF, 25);
+    }
+
+    #[test]
+    fn flavours_match_each_other_with_different_seed() {
+        check_equivalence(Flavor::Std, 0x1111, 10);
+        check_equivalence(Flavor::Custom, 0x1111, 10);
+    }
+
+    #[test]
+    fn weights_learn_a_repeated_pattern() {
+        // Present one pattern repeatedly: winner's active synapses
+        // strengthen (the STDP convergence property).
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 8, q: 2, theta: 6 };
+        let (nl, ports) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let mut tb = ColumnTestbench::new(&nl, &ports, &lib).unwrap();
+        let params = StdpParams::from_probs(
+            1.0,
+            1.0,
+            0.3,
+            [1.0; 8],
+            [1.0; 8],
+        );
+        let mut lfsr = Lfsr16::new(3);
+        let s: Vec<i32> = (0..8).map(|j| if j < 4 { 0 } else { INF }).collect();
+        let mut last = Vec::new();
+        for _ in 0..20 {
+            let rand: Vec<RandPair> =
+                (0..16).map(|_| lfsr.draw_pair()).collect();
+            last = tb.run_wave(&s, &rand, &params).weights;
+        }
+        // Active synapses (j<4) of some neuron must exceed inactive ones.
+        let active: i32 = (0..4).map(|j| last[j * 2]).sum();
+        let inactive: i32 = (4..8).map(|j| last[j * 2]).sum();
+        assert!(
+            active > inactive,
+            "active {active} !> inactive {inactive}: {last:?}"
+        );
+    }
+}

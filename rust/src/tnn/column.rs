@@ -1,0 +1,149 @@
+//! Golden column forward pass: RNL SRM0 neurons + 1-WTA.
+//!
+//! Mirrors `ref.column_fwd` exactly (integer semantics, INF sentinel,
+//! lowest-index tie-break).  Weights are row-major `w[j*q + i]` for
+//! synapse j → neuron i, matching both the HLO layout and the netlist
+//! testbench ordering.
+
+use crate::arch::{T_STEPS, W_MAX};
+
+use super::INF;
+
+/// Column forward for one sample.
+///
+/// `s[p]` input spike times (INF = none), `w[p*q]` weights in `[0,7]`
+/// row-major, `theta` >= 1.  Returns `(pre, post)` spike-time vectors of
+/// length q.
+pub fn column_fwd(s: &[i32], w: &[i32], q: usize, theta: i32) -> (Vec<i32>, Vec<i32>) {
+    let p = s.len();
+    debug_assert_eq!(w.len(), p * q);
+    let mut pre = vec![INF; q];
+    for t in 0..T_STEPS {
+        for i in 0..q {
+            if pre[i] != INF {
+                continue;
+            }
+            let mut rho = 0i64;
+            for j in 0..p {
+                let sj = s[j];
+                if sj == INF {
+                    continue;
+                }
+                let ramp = (t + 1 - sj).max(0);
+                rho += i64::from(ramp.min(w[j * q + i]).min(W_MAX));
+            }
+            if rho >= i64::from(theta) {
+                pre[i] = t;
+            }
+        }
+    }
+    // 1-WTA: earliest spike, lowest index on ties.
+    let mut post = vec![INF; q];
+    let mut winner = None;
+    for (i, &t) in pre.iter().enumerate() {
+        if t != INF {
+            match winner {
+                None => winner = Some((i, t)),
+                Some((_, bt)) if t < bt => winner = Some((i, t)),
+                _ => {}
+            }
+        }
+    }
+    if let Some((i, t)) = winner {
+        post[i] = t;
+    }
+    (pre, post)
+}
+
+/// Stateful golden column: weights + geometry (used by the gate-level
+/// equivalence testbench and the behavioral network).
+#[derive(Debug, Clone)]
+pub struct ColumnState {
+    pub p: usize,
+    pub q: usize,
+    pub theta: i32,
+    /// Row-major weights `w[j*q + i]`.
+    pub weights: Vec<i32>,
+}
+
+impl ColumnState {
+    /// All-zero weights (the hardware reset state).
+    pub fn new(p: usize, q: usize, theta: i32) -> Self {
+        ColumnState { p, q, theta, weights: vec![0; p * q] }
+    }
+
+    /// Uniform initial weights.
+    pub fn with_weight(p: usize, q: usize, theta: i32, w0: i32) -> Self {
+        ColumnState { p, q, theta, weights: vec![w0; p * q] }
+    }
+
+    /// Forward one sample.
+    pub fn forward(&self, s: &[i32]) -> (Vec<i32>, Vec<i32>) {
+        column_fwd(s, &self.weights, self.q, self.theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_input_no_spike() {
+        let s = vec![INF; 8];
+        let w = vec![7; 8 * 4];
+        let (pre, post) = column_fwd(&s, &w, 4, 1);
+        assert!(pre.iter().all(|&t| t == INF));
+        assert!(post.iter().all(|&t| t == INF));
+    }
+
+    #[test]
+    fn immediate_fire_at_t0() {
+        // 4 inputs at t=0 with w=1 give rho(0)=4.
+        let s = vec![0; 4];
+        let w = vec![1; 4 * 1];
+        let (pre, _) = column_fwd(&s, &w, 1, 4);
+        assert_eq!(pre[0], 0);
+    }
+
+    #[test]
+    fn ramp_accumulates_over_time() {
+        // 1 input at t=0, w=7, theta=5 -> fires at t=4 (rho(t)=t+1).
+        let s = vec![0];
+        let w = vec![7];
+        let (pre, _) = column_fwd(&s, &w, 1, 5);
+        assert_eq!(pre[0], 4);
+    }
+
+    #[test]
+    fn wta_keeps_earliest_lowest_index() {
+        // neuron 1 fires earlier than neuron 0.
+        let s = vec![0, 0];
+        // w[j*q+i]: neuron0 gets w=1, neuron1 gets w=7 (fires faster
+        // with theta=4: rho_1(t) = 2(t+1) -> t=1; rho_0 = 2 -> never).
+        let w = vec![1, 7, 1, 7];
+        let (pre, post) = column_fwd(&s, &w, 2, 4);
+        assert_eq!(pre[1], 1);
+        assert_eq!(post[1], 1);
+        assert_eq!(post[0], INF);
+    }
+
+    #[test]
+    fn tie_breaks_low_index() {
+        let s = vec![0, 0];
+        let w = vec![7, 7, 7, 7];
+        let (pre, post) = column_fwd(&s, &w, 2, 4);
+        assert_eq!(pre[0], pre[1]);
+        assert_ne!(post[0], INF);
+        assert_eq!(post[1], INF);
+    }
+
+    #[test]
+    fn late_spikes_delay_firing() {
+        let mut last = -1;
+        for s0 in 0..8 {
+            let (pre, _) = column_fwd(&[s0], &[7], 1, 3);
+            assert!(pre[0] > last);
+            last = pre[0];
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Sensory front-end: on/off-center filtering + 3-bit temporal encoding.
+//!
+//! Follows [2]'s MNIST pipeline: each pixel is passed through an
+//! on-center and an off-center difference-of-Gaussians-style filter
+//! (approximated by center-minus-surround on a 3×3 neighbourhood), and
+//! the filter response is encoded as a spike *time* in [0, 8): strong
+//! response → early spike, sub-threshold → no spike (INF).  Each layer-1
+//! column sees a receptive field of 4×4 pixels × 2 polarities = 32
+//! inputs; 25×25 = 625 overlapping receptive fields tile the 28×28 image.
+
+use crate::arch::T_IN;
+
+use super::INF;
+
+/// Image side (MNIST-like).
+pub const IMG: usize = 28;
+/// Receptive-field side.
+pub const RF: usize = 4;
+/// Receptive fields per image side (stride 1): 28 - 4 + 1 = 25.
+pub const GRID: usize = IMG - RF + 1;
+/// Layer-1 columns (= 625, the Fig. 19 prototype).
+pub const N_COLS: usize = GRID * GRID;
+/// Inputs per layer-1 column (4x4 RF × on/off polarity = 32).
+pub const COL_INPUTS: usize = RF * RF * 2;
+
+/// Center-surround filter responses: `(on, off)` images, values in
+/// [-1, 1] (positive = center brighter / darker than surround).
+pub fn center_surround(img: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(img.len(), IMG * IMG);
+    let mut on = vec![0.0f32; IMG * IMG];
+    let mut off = vec![0.0f32; IMG * IMG];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let c = img[y * IMG + x];
+            let mut sum = 0.0f32;
+            let mut n = 0.0f32;
+            for dy in -1i32..=1 {
+                for dx in -1i32..=1 {
+                    if dy == 0 && dx == 0 {
+                        continue;
+                    }
+                    let (ny, nx) = (y as i32 + dy, x as i32 + dx);
+                    if ny >= 0 && ny < IMG as i32 && nx >= 0 && nx < IMG as i32 {
+                        sum += img[ny as usize * IMG + nx as usize];
+                        n += 1.0;
+                    }
+                }
+            }
+            let surround = sum / n;
+            let resp = c - surround;
+            on[y * IMG + x] = resp.clamp(-1.0, 1.0);
+            off[y * IMG + x] = (-resp).clamp(-1.0, 1.0);
+        }
+    }
+    (on, off)
+}
+
+/// Encode a filter response into a 3-bit spike time: response ≥
+/// `threshold` spikes, stronger earlier; below threshold → INF.
+pub fn encode_response(resp: f32, threshold: f32) -> i32 {
+    if resp < threshold {
+        return INF;
+    }
+    // Map [threshold, 1] onto [T_IN-1, 0]: strongest -> t=0.
+    let norm = ((resp - threshold) / (1.0 - threshold)).clamp(0.0, 1.0);
+    let t = ((1.0 - norm) * (T_IN - 1) as f32).round() as i32;
+    t.clamp(0, T_IN - 1)
+}
+
+/// Full image → per-column spike vectors: `out[col][COL_INPUTS]`.
+///
+/// Input ordering within a column: the 16 on-center pixels of the RF
+/// (row-major), then the 16 off-center pixels.
+pub fn encode_image(img: &[f32], threshold: f32) -> Vec<Vec<i32>> {
+    let (on, off) = center_surround(img);
+    let mut cols = Vec::with_capacity(N_COLS);
+    for gy in 0..GRID {
+        for gx in 0..GRID {
+            let mut s = Vec::with_capacity(COL_INPUTS);
+            for py in 0..RF {
+                for px in 0..RF {
+                    let idx = (gy + py) * IMG + (gx + px);
+                    s.push(encode_response(on[idx], threshold));
+                }
+            }
+            for py in 0..RF {
+                for px in 0..RF {
+                    let idx = (gy + py) * IMG + (gx + px);
+                    s.push(encode_response(off[idx], threshold));
+                }
+            }
+            cols.push(s);
+        }
+    }
+    cols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_prototype() {
+        assert_eq!(N_COLS, 625);
+        assert_eq!(COL_INPUTS, 32);
+    }
+
+    #[test]
+    fn encode_maps_strength_to_time_monotonically() {
+        let thr = 0.05;
+        let mut last = T_IN;
+        for r in [0.05f32, 0.2, 0.5, 0.8, 1.0] {
+            let t = encode_response(r, thr);
+            assert!(t <= last, "stronger response must not spike later");
+            last = t;
+        }
+        assert_eq!(encode_response(0.0, thr), INF);
+        assert_eq!(encode_response(1.0, thr), 0);
+    }
+
+    #[test]
+    fn flat_image_produces_no_spikes() {
+        let img = vec![0.5f32; IMG * IMG];
+        let cols = encode_image(&img, 0.05);
+        assert_eq!(cols.len(), N_COLS);
+        assert!(cols.iter().all(|c| c.iter().all(|&s| s == INF)));
+    }
+
+    #[test]
+    fn edge_activates_on_and_off_cells() {
+        // Vertical step edge: bright left, dark right.
+        let mut img = vec![0.0f32; IMG * IMG];
+        for y in 0..IMG {
+            for x in 0..14 {
+                img[y * IMG + x] = 1.0;
+            }
+        }
+        let (on, off) = center_surround(&img);
+        // On-response positive just left of the edge, off just right.
+        let y = 14;
+        assert!(on[y * IMG + 13] > 0.0);
+        assert!(off[y * IMG + 14] > 0.0);
+        let cols = encode_image(&img, 0.05);
+        let spikes: usize = cols
+            .iter()
+            .map(|c| c.iter().filter(|&&s| s != INF).count())
+            .sum();
+        assert!(spikes > 100, "edges must spike ({spikes})");
+    }
+}

@@ -1,0 +1,97 @@
+//! 16-bit Fibonacci LFSR — the hardware Bernoulli-random-variable source.
+//!
+//! The RTL's BRV generator is a maximal-length 16-bit LFSR (taps
+//! 16,15,13,4 → polynomial x^16 + x^15 + x^13 + x^4 + 1, period 65535).
+//! The SAME stream drives all three execution paths — golden model,
+//! gate-level testbench, and the HLO pipeline (rust generates the `rand`
+//! input tensors) — so learned weights agree bit-for-bit everywhere.
+
+/// Maximal-length 16-bit Fibonacci LFSR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lfsr16 {
+    state: u16,
+}
+
+impl Lfsr16 {
+    /// Seed the LFSR (0 is mapped to 1: the all-zero state is absorbing).
+    pub fn new(seed: u16) -> Self {
+        Lfsr16 { state: if seed == 0 { 1 } else { seed } }
+    }
+
+    /// Advance one step and return the new 16-bit state.
+    pub fn next_u16(&mut self) -> u16 {
+        let s = self.state;
+        let bit = (s >> 15) ^ (s >> 14) ^ (s >> 12) ^ (s >> 3);
+        self.state = (s << 1) | (bit & 1);
+        self.state
+    }
+
+    /// A (r_case, r_stab) draw pair for one synapse update.
+    pub fn draw_pair(&mut self) -> (u16, u16) {
+        (self.next_u16(), self.next_u16())
+    }
+
+    /// Fill `out` with uniform u16 draws (as i32, matching the HLO input
+    /// dtype).
+    pub fn fill_i32(&mut self, out: &mut [i32]) {
+        for v in out.iter_mut() {
+            *v = i32::from(self.next_u16());
+        }
+    }
+
+    /// Current state (testing).
+    pub fn state(&self) -> u16 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn period_is_maximal() {
+        let mut l = Lfsr16::new(0xACE1);
+        let start = l.state();
+        let mut n = 0u32;
+        loop {
+            l.next_u16();
+            n += 1;
+            if l.state() == start {
+                break;
+            }
+            assert!(n <= 65535, "period too long");
+        }
+        assert_eq!(n, 65535);
+    }
+
+    #[test]
+    fn zero_seed_is_fixed_up() {
+        let mut l = Lfsr16::new(0);
+        assert_ne!(l.state(), 0);
+        for _ in 0..100 {
+            assert_ne!(l.next_u16(), 0u16.wrapping_sub(0) & 0);
+        }
+    }
+
+    #[test]
+    fn distribution_is_roughly_uniform() {
+        // Mean of 16-bit draws over the full period ≈ 32768.
+        let mut l = Lfsr16::new(1);
+        let mut sum = 0u64;
+        for _ in 0..65535 {
+            sum += u64::from(l.next_u16());
+        }
+        let mean = sum as f64 / 65535.0;
+        assert!((mean - 32768.0).abs() < 300.0, "mean {mean}");
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Lfsr16::new(42);
+        let mut b = Lfsr16::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.draw_pair(), b.draw_pair());
+        }
+    }
+}

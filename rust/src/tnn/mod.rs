@@ -1,0 +1,26 @@
+//! Golden behavioral TNN model.
+//!
+//! A direct rust mirror of `python/compile/kernels/ref.py` — the
+//! architectural semantics every other layer of the stack is tested
+//! against: the gate-level netlists (via [`crate::sim::testbench`]), the
+//! AOT-compiled HLO executables (via [`crate::runtime`] integration
+//! tests), and the training pipeline's cross-check mode.
+//!
+//! * [`lfsr`] — the 16-bit LFSR BRV source shared by all layers.
+//! * [`column`] — RNL column forward (SRM0 neurons + 1-WTA).
+//! * [`stdp`] — the four-case stochastic STDP rule with stabilization.
+//! * [`encoding`] — on/off-center filtering + 3-bit temporal encoding.
+//! * [`network`] — the 2-layer prototype with voting classification.
+
+pub mod column;
+pub mod encoding;
+pub mod lfsr;
+pub mod network;
+pub mod stdp;
+
+pub use column::{column_fwd, ColumnState};
+pub use lfsr::Lfsr16;
+pub use stdp::{stdp_step, StdpParams};
+
+/// "No spike" sentinel, identical to `ref.INF`.
+pub const INF: i32 = crate::arch::INF;

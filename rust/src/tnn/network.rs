@@ -1,0 +1,193 @@
+//! The 2-layer prototype as a behavioral network + voting classifier.
+//!
+//! Layer 1: 625 columns (32→12) over the encoded receptive fields.
+//! Layer 2: 625 columns (12→10), column c fed by layer-1 column c's
+//! post-WTA output (rebased into the input window, as `model.rebase_times`
+//! does).  Classification follows [2]: layer-2 neuron activity votes for
+//! classes; the neuron→class mapping is calibrated by label
+//! co-occurrence after unsupervised STDP training.
+
+use crate::arch::T_IN;
+
+use super::column::ColumnState;
+use super::lfsr::Lfsr16;
+use super::stdp::{stdp_step, StdpParams};
+use super::INF;
+
+/// One layer: per-column weights + shared geometry.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub columns: Vec<ColumnState>,
+}
+
+impl Layer {
+    /// `cols` columns of p×q at threshold theta, weights initialized to w0.
+    pub fn new(cols: usize, p: usize, q: usize, theta: i32, w0: i32) -> Self {
+        Layer {
+            columns: (0..cols)
+                .map(|_| ColumnState::with_weight(p, q, theta, w0))
+                .collect(),
+        }
+    }
+
+    /// Forward all columns: `s[col][p]` → (pre, post) `[col][q]`.
+    pub fn forward(&self, s: &[Vec<i32>]) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+        let mut pre = Vec::with_capacity(self.columns.len());
+        let mut post = Vec::with_capacity(self.columns.len());
+        for (c, col) in self.columns.iter().enumerate() {
+            let (a, b) = col.forward(&s[c]);
+            pre.push(a);
+            post.push(b);
+        }
+        (pre, post)
+    }
+
+    /// One STDP update across all columns (one sample), drawing BRVs from
+    /// `lfsr` in column-major synapse order — the same order the
+    /// coordinator fills the HLO `rand` tensor in.
+    pub fn learn(
+        &mut self,
+        s: &[Vec<i32>],
+        post: &[Vec<i32>],
+        params: &StdpParams,
+        lfsr: &mut Lfsr16,
+    ) {
+        for (c, col) in self.columns.iter_mut().enumerate() {
+            let n = col.p * col.q;
+            let rand: Vec<(u16, u16)> =
+                (0..n).map(|_| lfsr.draw_pair()).collect();
+            stdp_step(&s[c], &post[c], &mut col.weights, &rand, params);
+        }
+    }
+}
+
+/// Rebase post-WTA times into the next layer's input window
+/// (mirror of `model.rebase_times`).
+pub fn rebase(post: &[Vec<i32>]) -> Vec<Vec<i32>> {
+    post.iter()
+        .map(|col| {
+            col.iter()
+                .map(|&t| if t == INF { INF } else { t.clamp(0, T_IN - 1) })
+                .collect()
+        })
+        .collect()
+}
+
+/// The full 2-layer behavioral prototype.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub l1: Layer,
+    pub l2: Layer,
+    /// Vote weight of (column, neuron) → class, calibrated on labels.
+    pub class_map: Vec<Vec<[f32; 10]>>,
+}
+
+impl Network {
+    /// The Fig. 19 geometry with standard initial weights.
+    pub fn prototype(theta1: i32, theta2: i32, w0: i32) -> Self {
+        let l1 = Layer::new(super::encoding::N_COLS, 32, 12, theta1, w0);
+        let l2 = Layer::new(super::encoding::N_COLS, 12, 10, theta2, w0);
+        let class_map =
+            vec![vec![[0.0; 10]; 10]; super::encoding::N_COLS];
+        Network { l1, l2, class_map }
+    }
+
+    /// Forward an encoded sample through both layers; returns layer-2
+    /// post-WTA times `[col][10]`.
+    pub fn forward(&self, s1: &[Vec<i32>]) -> Vec<Vec<i32>> {
+        let (_, post1) = self.l1.forward(s1);
+        let s2 = rebase(&post1);
+        let (_, post2) = self.l2.forward(&s2);
+        post2
+    }
+
+    /// Accumulate label co-occurrence for the vote calibration.
+    pub fn calibrate(&mut self, post2: &[Vec<i32>], label: usize) {
+        for (c, col) in post2.iter().enumerate() {
+            for (i, &t) in col.iter().enumerate() {
+                if t != INF {
+                    self.class_map[c][i][label] += 1.0;
+                }
+            }
+        }
+    }
+
+    /// Classify from layer-2 spikes using the calibrated map: each firing
+    /// (column, neuron) votes its class distribution, earlier spikes
+    /// weighted higher.
+    pub fn classify(&self, post2: &[Vec<i32>]) -> usize {
+        let mut votes = [0.0f32; 10];
+        for (c, col) in post2.iter().enumerate() {
+            for (i, &t) in col.iter().enumerate() {
+                if t == INF {
+                    continue;
+                }
+                let w = 1.0 / (1.0 + t as f32);
+                let m = &self.class_map[c][i];
+                let total: f32 = m.iter().sum();
+                if total > 0.0 {
+                    for k in 0..10 {
+                        votes[k] += w * m[k] / total;
+                    }
+                }
+            }
+        }
+        votes
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rebase_clamps_and_preserves_inf() {
+        let post = vec![vec![0, 5, 9, 14, INF]];
+        let got = rebase(&post);
+        assert_eq!(got[0], vec![0, 5, 7, 7, INF]);
+    }
+
+    #[test]
+    fn layer_forward_shapes() {
+        let layer = Layer::new(3, 8, 4, 6, 3);
+        let s = vec![vec![0i32; 8]; 3];
+        let (pre, post) = layer.forward(&s);
+        assert_eq!(pre.len(), 3);
+        assert_eq!(pre[0].len(), 4);
+        // WTA: at most one post spike per column.
+        for col in &post {
+            assert!(col.iter().filter(|&&t| t != INF).count() <= 1);
+        }
+    }
+
+    #[test]
+    fn learning_changes_weights_deterministically() {
+        let mut a = Layer::new(2, 8, 4, 6, 3);
+        let mut b = a.clone();
+        let s = vec![vec![0i32; 8]; 2];
+        let params = StdpParams::default_training();
+        let (_, post) = a.forward(&s);
+        let mut l1 = Lfsr16::new(99);
+        let mut l2 = Lfsr16::new(99);
+        a.learn(&s, &post, &params, &mut l1);
+        b.learn(&s, &post, &params, &mut l2);
+        assert_eq!(a.columns[0].weights, b.columns[0].weights);
+        assert_ne!(a.columns[0].weights, vec![3; 32], "weights moved");
+    }
+
+    #[test]
+    fn classifier_learns_a_trivial_mapping() {
+        let mut net = Network::prototype(16, 4, 4);
+        // Fake calibration: column 0 neuron 0 always fires with class 7.
+        let mut post2 = vec![vec![INF; 10]; super::super::encoding::N_COLS];
+        post2[0][0] = 1;
+        net.calibrate(&post2, 7);
+        net.calibrate(&post2, 7);
+        assert_eq!(net.classify(&post2), 7);
+    }
+}

@@ -1,0 +1,210 @@
+//! Golden STDP: the four-case stochastic rule with weight-indexed
+//! stabilization — a bit-exact mirror of `ref.stdp_step`.
+
+use crate::arch::{N_PARAMS, RAND_SCALE, W_MAX};
+
+use super::INF;
+
+/// STDP probabilities as 16-bit fixed-point thresholds (r < thr fires).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StdpParams {
+    pub mu_capture: i32,
+    pub mu_backoff: i32,
+    pub mu_search: i32,
+    pub stab_up: [i32; 8],
+    pub stab_dn: [i32; 8],
+}
+
+impl StdpParams {
+    /// From probabilities in [0,1] (mirrors `ref.pack_params`).
+    pub fn from_probs(
+        mu_capture: f64,
+        mu_backoff: f64,
+        mu_search: f64,
+        stab_up: [f64; 8],
+        stab_dn: [f64; 8],
+    ) -> Self {
+        let t = |p: f64| (p * f64::from(RAND_SCALE)).round() as i32;
+        StdpParams {
+            mu_capture: t(mu_capture),
+            mu_backoff: t(mu_backoff),
+            mu_search: t(mu_search),
+            stab_up: stab_up.map(t),
+            stab_dn: stab_dn.map(t),
+        }
+    }
+
+    /// The training configuration used by the MNIST prototype: strong
+    /// capture, moderate backoff, weak search; stabilization slows updates
+    /// as weights approach the rails (the 8:1 mux table of Fig. 9).
+    pub fn default_training() -> Self {
+        StdpParams::from_probs(
+            0.9,
+            0.5,
+            0.05,
+            [1.0, 1.0, 0.75, 0.5, 0.5, 0.25, 0.25, 0.125],
+            [0.125, 0.25, 0.25, 0.5, 0.5, 0.75, 1.0, 1.0],
+        )
+    }
+
+    /// Flatten to the HLO params vector (layout of `ref.pack_params`).
+    pub fn to_vec(&self) -> Vec<i32> {
+        let mut v = Vec::with_capacity(N_PARAMS);
+        v.extend_from_slice(&[self.mu_capture, self.mu_backoff, self.mu_search]);
+        v.extend_from_slice(&self.stab_up);
+        v.extend_from_slice(&self.stab_dn);
+        v
+    }
+}
+
+/// Per-synapse BRV draws for one sample: `(r_case, r_stab)` in [0, 2^16).
+pub type RandPair = (u16, u16);
+
+/// One STDP update step over a column (one sample).
+///
+/// `s[p]` input times, `o[q]` post-WTA output times, `w[p*q]` row-major
+/// weights (updated in place), `rand[p*q]` per-synapse draw pairs.
+pub fn stdp_step(
+    s: &[i32],
+    o: &[i32],
+    w: &mut [i32],
+    rand: &[RandPair],
+    params: &StdpParams,
+) {
+    let p = s.len();
+    let q = o.len();
+    debug_assert_eq!(w.len(), p * q);
+    debug_assert_eq!(rand.len(), p * q);
+    for j in 0..p {
+        let x = s[j] != INF;
+        for i in 0..q {
+            let syn = j * q + i;
+            let y = o[i] != INF;
+            let sle = s[j] <= o[i];
+            let (r_case, r_stab) = rand[syn];
+            let (r_case, r_stab) = (i32::from(r_case), i32::from(r_stab));
+            let wv = w[syn].clamp(0, 7) as usize;
+            let su = params.stab_up[wv];
+            let sd = params.stab_dn[wv];
+
+            let capture =
+                x && y && sle && r_case < params.mu_capture && r_stab < su;
+            let backoff =
+                x && y && !sle && r_case < params.mu_backoff && r_stab < sd;
+            let search = x && !y && r_case < params.mu_search;
+            let minus = !x && y && r_case < params.mu_backoff && r_stab < sd;
+
+            let delta = i32::from(capture || search) - i32::from(backoff || minus);
+            w[syn] = (w[syn] + delta).clamp(0, W_MAX);
+        }
+    }
+}
+
+/// The 19 BRV lanes the gate-level testbench drives for one synapse, in
+/// [`crate::netlist::column::BRV_PER_SYN`] order:
+/// `[b_capture, b_backoff, b_search, stab_up[0..8], stab_dn[0..8]]`.
+pub fn brv_lanes(rand: RandPair, params: &StdpParams) -> [bool; 19] {
+    let (r_case, r_stab) = (i32::from(rand.0), i32::from(rand.1));
+    let mut lanes = [false; 19];
+    lanes[0] = r_case < params.mu_capture;
+    lanes[1] = r_case < params.mu_backoff;
+    lanes[2] = r_case < params.mu_search;
+    for k in 0..8 {
+        lanes[3 + k] = r_stab < params.stab_up[k];
+        lanes[11 + k] = r_stab < params.stab_dn[k];
+    }
+    lanes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_on() -> StdpParams {
+        StdpParams::from_probs(1.0, 1.0, 1.0, [1.0; 8], [1.0; 8])
+    }
+
+    #[test]
+    fn capture_increments() {
+        let mut w = vec![3];
+        stdp_step(&[0], &[5], &mut w, &[(0, 0)], &all_on());
+        assert_eq!(w[0], 4);
+    }
+
+    #[test]
+    fn backoff_decrements() {
+        let mut w = vec![3];
+        stdp_step(&[5], &[2], &mut w, &[(0, 0)], &all_on());
+        assert_eq!(w[0], 2);
+    }
+
+    #[test]
+    fn search_increments_without_output() {
+        let mut w = vec![3];
+        stdp_step(&[2], &[INF], &mut w, &[(0, 0)], &all_on());
+        assert_eq!(w[0], 4);
+    }
+
+    #[test]
+    fn minus_decrements_without_input() {
+        let mut w = vec![3];
+        stdp_step(&[INF], &[2], &mut w, &[(0, 0)], &all_on());
+        assert_eq!(w[0], 2);
+    }
+
+    #[test]
+    fn no_spikes_no_change() {
+        let mut w = vec![3];
+        stdp_step(&[INF], &[INF], &mut w, &[(0, 0)], &all_on());
+        assert_eq!(w[0], 3);
+    }
+
+    #[test]
+    fn saturation_both_rails() {
+        let mut w = vec![7, 0];
+        // synapse 0: capture at 7 (stays); synapse 1 (same input row,
+        // second neuron): minus? construct q=2: o=[5, 2], s=[0].
+        stdp_step(&[0], &[5, 0], &mut w, &[(0, 0), (0, 0)], &all_on());
+        assert_eq!(w[0], 7);
+        // s=0 <= o=0: capture -> 1
+        assert_eq!(w[1], 1);
+    }
+
+    #[test]
+    fn thresholds_gate_probabilistically() {
+        let p = StdpParams::from_probs(0.5, 0.0, 0.0, [1.0; 8], [1.0; 8]);
+        // r_case = 0x7FFF < 0.5*65536 = 32768 -> fires.
+        let mut w = vec![3];
+        stdp_step(&[0], &[5], &mut w, &[(0x7FFF, 0)], &p);
+        assert_eq!(w[0], 4);
+        // r_case = 0x8000 = 32768 not < 32768 -> holds.
+        let mut w = vec![3];
+        stdp_step(&[0], &[5], &mut w, &[(0x8000, 0)], &p);
+        assert_eq!(w[0], 3);
+    }
+
+    #[test]
+    fn brv_lanes_consistent_with_step() {
+        // lane semantics: selected stab lane by weight must reproduce the
+        // step's decision.
+        let params = StdpParams::default_training();
+        let mut lfsr = super::super::Lfsr16::new(7);
+        for _ in 0..200 {
+            let pair = lfsr.draw_pair();
+            let lanes = brv_lanes(pair, &params);
+            for wv in 0..8usize {
+                let su = i32::from(pair.1) < params.stab_up[wv];
+                assert_eq!(lanes[3 + wv], su);
+            }
+        }
+    }
+
+    #[test]
+    fn params_roundtrip_vec() {
+        let p = StdpParams::default_training();
+        let v = p.to_vec();
+        assert_eq!(v.len(), N_PARAMS);
+        assert_eq!(v[0], p.mu_capture);
+        assert_eq!(v[18], p.stab_dn[7]);
+    }
+}

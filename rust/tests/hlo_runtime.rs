@@ -1,0 +1,155 @@
+//! HLO runtime integration: the AOT artifacts vs the golden model.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! These tests prove that the python-built compute (Pallas kernels inside
+//! jax programs, lowered to HLO text) produces bit-identical results to
+//! the rust golden model when executed through the PJRT CPU client —
+//! the L1/L2 ⇄ L3 contract of the whole architecture.
+
+use std::path::Path;
+
+use tnn7::arch::INF;
+use tnn7::data::digits::XorShift;
+use tnn7::runtime::Runtime;
+use tnn7::tnn::column::column_fwd;
+use tnn7::tnn::stdp::{stdp_step, StdpParams};
+
+fn artifacts() -> Option<Runtime> {
+    let dir = Path::new("artifacts");
+    match Runtime::load(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            // Fail loudly in CI, but allow `cargo test` before artifacts
+            // exist to skip rather than error cryptically.
+            eprintln!("skipping HLO tests (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn rand_spikes(rng: &mut XorShift, n: usize) -> Vec<i32> {
+    (0..n)
+        .map(|_| {
+            let v = rng.next_u64();
+            if v & 7 == 7 {
+                INF
+            } else {
+                (v % 8) as i32
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn col_fwd_matches_golden_on_all_benchmark_sizes() {
+    let Some(mut rt) = artifacts() else { return };
+    let mut rng = XorShift::new(0xC0FFEE);
+    for (name, p, q, theta) in [
+        ("col_fwd_8x4", 8usize, 4usize, 6i32),
+        ("col_fwd_64x8", 64, 8, 40),
+        ("col_fwd_128x10", 128, 10, 60),
+        ("col_fwd_1024x16", 1024, 16, 300),
+    ] {
+        let b = rt.manifest.batch;
+        let s = rand_spikes(&mut rng, b * p);
+        let w: Vec<i32> = (0..p * q).map(|_| (rng.next_u64() % 8) as i32).collect();
+        let out = rt.execute(name, &[&s, &w, &[theta]]).unwrap();
+        let (pre, post) = (&out[0], &out[1]);
+        for bi in 0..b {
+            let sb = &s[bi * p..(bi + 1) * p];
+            let (pre_g, post_g) = column_fwd(sb, &w, q, theta);
+            assert_eq!(&pre[bi * q..(bi + 1) * q], &pre_g[..], "{name} pre b{bi}");
+            assert_eq!(
+                &post[bi * q..(bi + 1) * q],
+                &post_g[..],
+                "{name} post b{bi}"
+            );
+        }
+    }
+}
+
+#[test]
+fn col_train_matches_golden_including_weights() {
+    let Some(mut rt) = artifacts() else { return };
+    let mut rng = XorShift::new(0xBADDCAFE);
+    let (p, q, theta) = (64usize, 8usize, 40i32);
+    let b = rt.manifest.batch;
+    let params = StdpParams::default_training();
+    let params_vec = params.to_vec();
+    let mut w: Vec<i32> = vec![3; p * q];
+    // Several consecutive training steps: state must track exactly.
+    for step in 0..3 {
+        let s = rand_spikes(&mut rng, b * p);
+        let rand: Vec<i32> = (0..b * p * q * 2)
+            .map(|_| (rng.next_u64() & 0xFFFF) as i32)
+            .collect();
+        let out = rt
+            .execute("col_train_64x8", &[&s, &w, &[theta], &rand, &params_vec])
+            .unwrap();
+        let (post, new_w) = (&out[1], &out[2]);
+        // Golden: forward all with frozen w, then sequential updates.
+        let mut w_gold = w.clone();
+        for bi in 0..b {
+            let sb = &s[bi * p..(bi + 1) * p];
+            let (_, post_g) = column_fwd(sb, &w, q, theta);
+            assert_eq!(
+                &post[bi * q..(bi + 1) * q],
+                &post_g[..],
+                "step {step} post b{bi}"
+            );
+            let pairs: Vec<(u16, u16)> = (0..p * q)
+                .map(|k| {
+                    let base = (bi * p * q + k) * 2;
+                    (rand[base] as u16, rand[base + 1] as u16)
+                })
+                .collect();
+            stdp_step(sb, &post_g, &mut w_gold, &pairs, &params);
+        }
+        assert_eq!(new_w, &w_gold, "step {step} weights");
+        w = new_w.clone();
+    }
+}
+
+#[test]
+fn layer_fwd_matches_per_column_golden() {
+    let Some(mut rt) = artifacts() else { return };
+    let info = rt.manifest.get("l1_fwd").unwrap().clone();
+    let (b, c, p, q) = (info.batch, info.cols, info.p, info.q);
+    let mut rng = XorShift::new(42);
+    let s = rand_spikes(&mut rng, b * c * p);
+    let w: Vec<i32> =
+        (0..c * p * q).map(|_| (rng.next_u64() % 8) as i32).collect();
+    let theta = 20i32;
+    let out = rt.execute("l1_fwd", &[&s, &w, &[theta]]).unwrap();
+    let post = &out[1];
+    // Spot-check a deterministic subset of columns (full check lives in
+    // Pipeline::cross_check_batch; this keeps test time bounded).
+    for &ci in &[0usize, 1, 77, 311, 624] {
+        for bi in [0usize, b - 1] {
+            let sb: Vec<i32> =
+                (0..p).map(|j| s[(bi * c + ci) * p + j]).collect();
+            let wc: Vec<i32> =
+                (0..p * q).map(|k| w[ci * p * q + k]).collect();
+            let (_, post_g) = column_fwd(&sb, &wc, q, theta);
+            let got: Vec<i32> =
+                (0..q).map(|i| post[(bi * c + ci) * q + i]).collect();
+            assert_eq!(got, post_g, "col {ci} b {bi}");
+        }
+    }
+}
+
+#[test]
+fn manifest_constants_match_binary() {
+    let Some(rt) = artifacts() else { return };
+    assert_eq!(rt.manifest.batch, 16);
+    assert!(rt.manifest.get("l1_train").is_ok());
+    assert!(rt.manifest.get("l2_train").is_ok());
+    assert!(rt.manifest.get("does_not_exist").is_err());
+}
+
+#[test]
+fn execute_rejects_wrong_shapes() {
+    let Some(mut rt) = artifacts() else { return };
+    let bad = vec![0i32; 7];
+    assert!(rt.execute("col_fwd_8x4", &[&bad, &bad, &bad]).is_err());
+}

@@ -1,0 +1,304 @@
+//! Property-based invariant tests.
+//!
+//! The offline vendor set has no `proptest`, so these are seeded
+//! randomized sweeps with explicit case counts: every failure message
+//! carries the seed, making cases reproducible.  Each test states the
+//! invariant it defends.
+
+use tnn7::arch::{INF, T_STEPS, W_MAX};
+use tnn7::cells::Library;
+use tnn7::config::TnnConfig;
+use tnn7::data::digits::XorShift;
+use tnn7::netlist::column::{build_column, ColumnSpec};
+use tnn7::netlist::{Builder, Flavor};
+use tnn7::runtime::json::Json;
+use tnn7::sim::testbench::ColumnTestbench;
+use tnn7::sim::Simulator;
+use tnn7::tnn::column::column_fwd;
+use tnn7::tnn::stdp::{stdp_step, RandPair, StdpParams};
+use tnn7::tnn::Lfsr16;
+
+fn rng(seed: u64) -> XorShift {
+    XorShift::new(seed)
+}
+
+/// INVARIANT: WTA emits at most one winner, and it is the earliest
+/// pre-WTA spike with lowest-index tie-break.
+#[test]
+fn prop_wta_single_earliest_winner() {
+    for seed in 0..200u64 {
+        let mut r = rng(seed + 1);
+        let p = 1 + (r.next_u64() % 24) as usize;
+        let q = 1 + (r.next_u64() % 12) as usize;
+        let theta = 1 + (r.next_u64() % 30) as i32;
+        let s: Vec<i32> = (0..p)
+            .map(|_| {
+                if r.next_u64() & 3 == 0 {
+                    INF
+                } else {
+                    (r.next_u64() % 8) as i32
+                }
+            })
+            .collect();
+        let w: Vec<i32> =
+            (0..p * q).map(|_| (r.next_u64() % 8) as i32).collect();
+        let (pre, post) = column_fwd(&s, &w, q, theta);
+        let winners: Vec<usize> =
+            (0..q).filter(|&i| post[i] != INF).collect();
+        assert!(winners.len() <= 1, "seed {seed}: multiple winners");
+        if let Some(&win) = winners.first() {
+            let t_min = *pre.iter().min().unwrap();
+            assert_eq!(post[win], t_min, "seed {seed}: not earliest");
+            for i in 0..win {
+                assert!(pre[i] > t_min, "seed {seed}: tie-break broken");
+            }
+        } else {
+            assert!(pre.iter().all(|&t| t == INF), "seed {seed}");
+        }
+    }
+}
+
+/// INVARIANT: pre-WTA spike times are in [0, T_STEPS) ∪ {INF} and are
+/// monotone non-decreasing in theta.
+#[test]
+fn prop_spike_times_bounded_and_monotone_in_theta() {
+    for seed in 0..100u64 {
+        let mut r = rng(seed + 77);
+        let p = 2 + (r.next_u64() % 16) as usize;
+        let q = 1 + (r.next_u64() % 6) as usize;
+        let s: Vec<i32> =
+            (0..p).map(|_| (r.next_u64() % 8) as i32).collect();
+        let w: Vec<i32> =
+            (0..p * q).map(|_| (r.next_u64() % 8) as i32).collect();
+        let mut prev = vec![-1i32; q];
+        for theta in [1, 3, 8, 20, 50] {
+            let (pre, _) = column_fwd(&s, &w, q, theta);
+            for i in 0..q {
+                assert!(
+                    pre[i] == INF || (0..T_STEPS).contains(&pre[i]),
+                    "seed {seed}: out of range"
+                );
+                assert!(pre[i] >= prev[i], "seed {seed}: not monotone");
+                prev[i] = pre[i];
+            }
+        }
+    }
+}
+
+/// INVARIANT: STDP keeps weights in [0, W_MAX] and is a no-op when all
+/// thresholds are zero.
+#[test]
+fn prop_stdp_bounds_and_zero_freeze() {
+    let frozen = StdpParams::from_probs(0.0, 0.0, 0.0, [0.0; 8], [0.0; 8]);
+    let active = StdpParams::default_training();
+    for seed in 0..200u64 {
+        let mut r = rng(seed + 1000);
+        let p = 1 + (r.next_u64() % 12) as usize;
+        let q = 1 + (r.next_u64() % 8) as usize;
+        let s: Vec<i32> = (0..p)
+            .map(|_| if r.next_u64() & 1 == 0 { INF } else { (r.next_u64() % 8) as i32 })
+            .collect();
+        let o: Vec<i32> = (0..q)
+            .map(|_| if r.next_u64() & 1 == 0 { INF } else { (r.next_u64() % 15) as i32 })
+            .collect();
+        let mut w: Vec<i32> =
+            (0..p * q).map(|_| (r.next_u64() % 8) as i32).collect();
+        let w0 = w.clone();
+        let rand: Vec<RandPair> = (0..p * q)
+            .map(|_| (r.next_u64() as u16, r.next_u64() as u16))
+            .collect();
+        stdp_step(&s, &o, &mut w, &rand, &frozen);
+        assert_eq!(w, w0, "seed {seed}: frozen params changed weights");
+        stdp_step(&s, &o, &mut w, &rand, &active);
+        assert!(
+            w.iter().all(|&x| (0..=W_MAX).contains(&x)),
+            "seed {seed}: weight out of range"
+        );
+        // Per-synapse move is at most ±1 per wave.
+        assert!(
+            w.iter().zip(&w0).all(|(a, b)| (a - b).abs() <= 1),
+            "seed {seed}: step larger than 1"
+        );
+    }
+}
+
+/// INVARIANT: the gate-level column (both flavours) is bit-equivalent to
+/// the golden model across random geometries and learning waves.
+#[test]
+fn prop_gate_column_equals_golden_random_geometries() {
+    for seed in 0..6u64 {
+        let mut r = rng(seed * 991 + 5);
+        let p = 3 + (r.next_u64() % 8) as usize;
+        let q = 2 + (r.next_u64() % 4) as usize;
+        let theta = 2 + (r.next_u64() % (3 * p as u64)) as i32;
+        let spec = ColumnSpec { p, q, theta: theta as u64 };
+        let lib = Library::with_macros();
+        let params = StdpParams::default_training();
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let (nl, ports) = build_column(&lib, flavor, &spec).unwrap();
+            let mut tb = ColumnTestbench::new(&nl, &ports, &lib).unwrap();
+            let mut golden =
+                tnn7::tnn::column::ColumnState::new(p, q, theta);
+            let mut lfsr = Lfsr16::new((seed as u16).wrapping_mul(2741) | 1);
+            for wave in 0..8 {
+                let s: Vec<i32> = (0..p)
+                    .map(|_| {
+                        if r.next_u64() & 7 == 0 {
+                            INF
+                        } else {
+                            (r.next_u64() % 8) as i32
+                        }
+                    })
+                    .collect();
+                let rand: Vec<RandPair> =
+                    (0..p * q).map(|_| lfsr.draw_pair()).collect();
+                let hw = tb.run_wave(&s, &rand, &params);
+                let (pre_g, post_g) = golden.forward(&s);
+                stdp_step(&s, &post_g, &mut golden.weights, &rand, &params);
+                assert_eq!(hw.pre, pre_g, "seed {seed} {flavor:?} w{wave} p{p} q{q}");
+                assert_eq!(hw.post, post_g, "seed {seed} {flavor:?} w{wave}");
+                assert_eq!(
+                    hw.weights, golden.weights,
+                    "seed {seed} {flavor:?} w{wave}"
+                );
+            }
+        }
+    }
+}
+
+/// INVARIANT: popcount netlists count exactly, for random widths.
+#[test]
+fn prop_popcount_exact() {
+    let lib = Library::with_macros();
+    for seed in 0..30u64 {
+        let mut r = rng(seed + 31);
+        let n = 1 + (r.next_u64() % 40) as usize;
+        let mut b = Builder::new("pc", &lib);
+        let ins = b.input_bus("x", n);
+        let s = b.popcount(&ins);
+        for (i, &bit) in s.iter().enumerate() {
+            b.output(bit, format!("s{i}"));
+        }
+        let nl = b.finish().unwrap();
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for _ in 0..10 {
+            let v: Vec<bool> = (0..n).map(|_| r.next_u64() & 1 == 1).collect();
+            let iv: Vec<_> =
+                (0..n).map(|i| (nl.inputs[i], v[i])).collect();
+            sim.tick(&iv, false);
+            let got: u32 = nl
+                .outputs
+                .iter()
+                .enumerate()
+                .map(|(k, &o)| (sim.get(o) as u32) << k)
+                .sum();
+            let want = v.iter().filter(|&&x| x).count() as u32;
+            assert_eq!(got, want, "seed {seed} n {n}");
+        }
+    }
+}
+
+/// INVARIANT: geq/lt comparator netlists match integer comparison.
+#[test]
+fn prop_comparators_exact() {
+    let lib = Library::with_macros();
+    for seed in 0..20u64 {
+        let mut r = rng(seed + 321);
+        let w = 1 + (r.next_u64() % 12) as usize;
+        let mut b = Builder::new("cmp", &lib);
+        let a = b.input_bus("a", w);
+        let c = b.input_bus("b", w);
+        let ge = b.geq(&a, &c);
+        let lt = b.lt(&a, &c);
+        b.output(ge, "ge");
+        b.output(lt, "lt");
+        let nl = b.finish().unwrap();
+        let mut sim = Simulator::new(&nl, &lib).unwrap();
+        for _ in 0..20 {
+            let av = r.next_u64() & ((1 << w) - 1);
+            let bv = r.next_u64() & ((1 << w) - 1);
+            let mut iv = Vec::new();
+            for i in 0..w {
+                iv.push((nl.inputs[i], av >> i & 1 == 1));
+                iv.push((nl.inputs[w + i], bv >> i & 1 == 1));
+            }
+            sim.tick(&iv, false);
+            assert_eq!(sim.get(nl.outputs[0]), av >= bv, "seed {seed}");
+            assert_eq!(sim.get(nl.outputs[1]), av < bv, "seed {seed}");
+        }
+    }
+}
+
+/// INVARIANT: the JSON parser round-trips machine-generated documents
+/// and never panics on mutated ones.
+#[test]
+fn prop_json_robustness() {
+    let doc = r#"{"batch":16,"artifacts":[{"name":"x","p":32,"q":12,
+        "inputs":[[16,625,32],[625,32,12],[1]],"kind":"layer_fwd"}]}"#;
+    assert!(Json::parse(doc).is_ok());
+    let mut r = rng(99);
+    for _ in 0..500 {
+        // Random single-byte mutations must parse-or-error, never panic.
+        let mut bytes = doc.as_bytes().to_vec();
+        let i = (r.next_u64() as usize) % bytes.len();
+        bytes[i] = (r.next_u64() & 0x7F) as u8;
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(s);
+        }
+    }
+}
+
+/// INVARIANT: the TOML-subset parser never panics on mutated configs and
+/// unknown keys are always rejected.
+#[test]
+fn prop_config_robustness() {
+    let base = "[network]\ntheta1 = 20\n[training]\nmu_capture = 0.9\n";
+    assert!(TnnConfig::from_toml(base).is_ok());
+    let mut r = rng(123);
+    for _ in 0..500 {
+        let mut bytes = base.as_bytes().to_vec();
+        let i = (r.next_u64() as usize) % bytes.len();
+        bytes[i] = (r.next_u64() & 0x7F) as u8;
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = TnnConfig::from_toml(s);
+        }
+    }
+    assert!(TnnConfig::from_toml("[network]\nbogus_key = 1\n").is_err());
+}
+
+/// INVARIANT: LFSR stream is reproducible and hits both halves of its
+/// range at expected frequency (Bernoulli fairness of BRVs).
+#[test]
+fn prop_lfsr_fairness() {
+    for seed in 1..20u16 {
+        let mut l = Lfsr16::new(seed);
+        let mut below = 0u32;
+        const N: u32 = 20000;
+        for _ in 0..N {
+            if l.next_u16() < 32768 {
+                below += 1;
+            }
+        }
+        let frac = f64::from(below) / f64::from(N);
+        assert!(
+            (0.47..0.53).contains(&frac),
+            "seed {seed}: P(below mid) = {frac}"
+        );
+    }
+}
+
+/// INVARIANT: PPA is monotone in column size (more synapses never cost
+/// less area or leakage).
+#[test]
+fn prop_ppa_monotone_in_size() {
+    let lib = Library::with_macros();
+    let tech = tnn7::cells::TechParams::calibrated();
+    let mut last_area = 0.0;
+    for p in [4usize, 8, 16, 32] {
+        let spec = ColumnSpec::benchmark(p, 4);
+        let (nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let a = tnn7::ppa::area::analyze(&nl, &lib, &tech).die_mm2;
+        assert!(a > last_area, "p={p}");
+        last_area = a;
+    }
+}
