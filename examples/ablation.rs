@@ -14,8 +14,8 @@
 
 use tnn7::cells::{Library, TechParams};
 use tnn7::config::TnnConfig;
-use tnn7::coordinator::measure::measure_column;
 use tnn7::data::Dataset;
+use tnn7::flow::{measure_with, Target};
 use tnn7::netlist::column::{build_column, ColumnSpec};
 use tnn7::netlist::Flavor;
 use tnn7::ppa::scaling::{ratios, NodeScaling, COL_1024X16_45NM};
@@ -74,14 +74,20 @@ fn main() -> anyhow::Result<()> {
     for waves in [1usize, 2, 4, 8, 16, 32] {
         let mut c = cfg.clone();
         c.sim_waves = waves;
-        let m = measure_column(&lib, &tech, Flavor::Std, &spec, &c, &data)?;
+        let r = measure_with(
+            Target::column(Flavor::Std, spec),
+            &c,
+            &lib,
+            &tech,
+            &data,
+        )?;
         let delta = if last.is_nan() {
             "-".to_string()
         } else {
-            format!("{:+.1}%", (m.ppa.power_uw / last - 1.0) * 100.0)
+            format!("{:+.1}%", (r.total.power_uw / last - 1.0) * 100.0)
         };
-        println!("{:>8} {:>12.3} {:>10}", waves, m.ppa.power_uw, delta);
-        last = m.ppa.power_uw;
+        println!("{:>8} {:>12.3} {:>10}", waves, r.total.power_uw, delta);
+        last = r.total.power_uw;
     }
     println!("(default sim_waves = 8: within a few percent of the 32-wave\n\
               estimate at 4x less simulation time)\n");
@@ -90,15 +96,14 @@ fn main() -> anyhow::Result<()> {
     println!("== Ablation 3: first-order 45nm->7nm scaling vs measured ==");
     let model = NodeScaling::n45_to_7();
     let spec1024 = ColumnSpec::benchmark(1024, 16);
-    let m = measure_column(
+    let r = measure_with(
+        Target::column(Flavor::Custom, spec1024),
+        &cfg,
         &lib,
         &tech,
-        Flavor::Custom,
-        &spec1024,
-        &cfg,
         &data,
     )?;
-    let (rp, rt, ra) = ratios(&COL_1024X16_45NM, &m.ppa);
+    let (rp, rt, ra) = ratios(&COL_1024X16_45NM, &r.total);
     println!(
         "{:<26} {:>9} {:>9} {:>9}",
         "", "power", "time", "area"

@@ -14,8 +14,8 @@
 
 use tnn7::cells::{Library, TechParams};
 use tnn7::config::TnnConfig;
-use tnn7::coordinator::measure::measure_column;
 use tnn7::data::Dataset;
+use tnn7::flow::{measure_with, Target};
 use tnn7::netlist::column::ColumnSpec;
 use tnn7::netlist::Flavor;
 use tnn7::tnn::encoding::encode_image;
@@ -116,16 +116,20 @@ fn main() -> anyhow::Result<()> {
     );
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
-    let mut cfg = TnnConfig::default();
-    cfg.sim_waves = if quick { 2 } else { 4 };
+    let cfg = TnnConfig {
+        sim_waves: if quick { 2 } else { 4 },
+        ..TnnConfig::default()
+    };
     let data = Dataset::generate(8, 7);
     for q in [4usize, 8, 12, 16] {
         let spec = ColumnSpec::benchmark(32, q);
-        let m =
-            measure_column(&lib, &tech, Flavor::Custom, &spec, &cfg, &data)?;
+        // One flow run per design point — a sweep is just a loop over
+        // Targets.
+        let target = Target::column(Flavor::Custom, spec);
+        let r = measure_with(target, &cfg, &lib, &tech, &data)?;
         println!(
             "{:>6} {:>6} {:>12.3} {:>12.2} {:>12.5}",
-            32, q, m.ppa.power_uw, m.ppa.time_ns, m.ppa.area_mm2
+            32, q, r.total.power_uw, r.total.time_ns, r.total.area_mm2
         );
     }
     Ok(())

@@ -8,7 +8,7 @@
 //!
 //! Usage: cargo run --release --example macro_explorer
 
-use tnn7::cells::{CellKind, Library, MacroKind, TechParams};
+use tnn7::cells::{Library, MacroKind, TechParams};
 use tnn7::netlist::modules::{
     edge2pulse::edge2pulse,
     incdec::incdec,

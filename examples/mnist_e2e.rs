@@ -31,19 +31,21 @@ fn arg(name: &str) -> Option<String> {
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
-    let mut cfg = TnnConfig::default();
-    // Thresholds from the design_space sweep (see EXPERIMENTS.md).
-    cfg.theta1 = 20;
-    cfg.theta2 = 2;
-    cfg.w_init = 3;
-    cfg.train_samples = arg("--train")
-        .map(|v| v.parse())
-        .transpose()?
-        .unwrap_or(if quick { 64 } else { 320 });
-    cfg.test_samples = arg("--test")
-        .map(|v| v.parse())
-        .transpose()?
-        .unwrap_or(if quick { 32 } else { 160 });
+    let cfg = TnnConfig {
+        // Thresholds from the design_space sweep (see EXPERIMENTS.md).
+        theta1: 20,
+        theta2: 2,
+        w_init: 3,
+        train_samples: arg("--train")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(if quick { 64 } else { 320 }),
+        test_samples: arg("--test")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(if quick { 32 } else { 160 }),
+        ..TnnConfig::default()
+    };
 
     let train = Dataset::generate(cfg.train_samples, cfg.data_seed);
     let test = Dataset::generate(cfg.test_samples, cfg.data_seed + 1);

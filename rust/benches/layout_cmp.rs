@@ -2,44 +2,19 @@
 //! standard-cell realization of the same function, as structural metrics
 //! (transistors, area, energy, delay) instead of GDS screenshots.
 //!
+//! The comparison rows come from `tnn7::flow::compare`, the same module
+//! `tnn7 layout-cmp` prints — this bench adds the Fig. 18 GDI-tree
+//! construction and an elaboration-throughput timing.
+//!
 //! Run: cargo bench --bench layout_cmp
 
 #[path = "common/mod.rs"]
 mod common;
 
 use tnn7::cells::{gdi, Library, MacroKind, TechParams};
-use tnn7::netlist::modules::less_equal::less_equal;
-use tnn7::netlist::modules::mux::{mux2, mux_tree};
-use tnn7::netlist::modules::stabilize_func::stabilize_func;
+use tnn7::flow::compare;
+use tnn7::netlist::modules::mux::mux_tree;
 use tnn7::netlist::{Builder, Flavor, Netlist};
-
-fn build_le(lib: &Library, flavor: Flavor) -> Netlist {
-    let mut b = Builder::new("le", lib);
-    let a = b.input("a");
-    let x = b.input("b");
-    let y = less_equal(&mut b, flavor, a, x);
-    b.output(y, "le");
-    b.finish().unwrap()
-}
-
-fn build_mux(lib: &Library, flavor: Flavor) -> Netlist {
-    let mut b = Builder::new("mux", lib);
-    let d0 = b.input("d0");
-    let d1 = b.input("d1");
-    let s = b.input("s");
-    let y = mux2(&mut b, flavor, d0, d1, s);
-    b.output(y, "y");
-    b.finish().unwrap()
-}
-
-fn build_stab(lib: &Library, flavor: Flavor) -> Netlist {
-    let mut b = Builder::new("stab", lib);
-    let brv = b.input_bus("brv", 8);
-    let w = b.input_bus("w", 3);
-    let y = stabilize_func(&mut b, flavor, &brv, &w);
-    b.output(y, "y");
-    b.finish().unwrap()
-}
 
 fn build_stab_gdi_tree(lib: &Library) -> Netlist {
     // The Fig. 18 construction spelled out: 7 x mux2to1gdi.
@@ -51,48 +26,24 @@ fn build_stab_gdi_tree(lib: &Library) -> Netlist {
     b.finish().unwrap()
 }
 
-fn census_row(
-    fig: &str,
-    func: &str,
-    lib: &Library,
-    tech: &TechParams,
-    std_nl: &Netlist,
-    cus_nl: &Netlist,
-) {
-    let ties = 4; // every netlist carries TIELO+TIEHI (2T each)
-    let st = std_nl.census(lib).transistors - ties;
-    let ct = cus_nl.census(lib).transistors - ties;
-    let area = |nl: &Netlist| -> f64 {
-        nl.insts
-            .iter()
-            .map(|i| tech.area_um2(lib.cell(i.cell)))
-            .sum::<f64>()
-            - 2.0 * tech.area_um2(lib.cell(lib.id("TIELOx1").unwrap()))
-            - 0.0
-    };
-    println!(
-        "{fig:<12} {func:<18} std {st:>4} T / {:>8.4} um2   custom {ct:>4} T / {:>8.4} um2   ({:.1}x fewer T)",
-        area(std_nl),
-        area(cus_nl),
-        st as f64 / ct as f64
-    );
-}
-
 fn main() -> anyhow::Result<()> {
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
 
     println!("Figs. 14-18 — structural layout comparisons:\n");
-    // Fig. 14/15: less_equal.
-    let (s, c) = (build_le(&lib, Flavor::Std), build_le(&lib, Flavor::Custom));
-    census_row("Fig. 14/15", "less_equal", &lib, &tech, &s, &c);
-    // Fig. 16/17: 2:1 mux (paper: 12T std vs 2T GDI).
-    let (s, c) = (build_mux(&lib, Flavor::Std), build_mux(&lib, Flavor::Custom));
-    census_row("Fig. 16/17", "mux2to1", &lib, &tech, &s, &c);
-    // Fig. 18: stabilize_func.
-    let (s, c) =
-        (build_stab(&lib, Flavor::Std), build_stab(&lib, Flavor::Custom));
-    census_row("Fig. 18", "stabilize_func", &lib, &tech, &s, &c);
+    for r in compare::layout_comparisons(&lib, &tech, None)? {
+        println!(
+            "{:<12} {:<18} std {:>4} T / {:>8.4} um2   custom {:>4} T / {:>8.4} um2   ({:.1}x fewer T)",
+            r.figure,
+            r.function,
+            r.std_netlist_transistors,
+            r.std_netlist_area_um2,
+            r.custom_netlist_transistors,
+            r.custom_netlist_area_um2,
+            r.std_netlist_transistors as f64
+                / r.custom_netlist_transistors as f64
+        );
+    }
     let tree = build_stab_gdi_tree(&lib);
     let tree_t = tree.census(&lib).transistors - 4;
     let std_mux_t =
@@ -115,9 +66,13 @@ fn main() -> anyhow::Result<()> {
 
     // Timing: elaboration throughput of the comparison netlists.
     common::bench("layout_cmp/elaborate_all", 50, || {
-        let _ = build_le(&lib, Flavor::Std);
-        let _ = build_mux(&lib, Flavor::Custom);
-        let _ = build_stab(&lib, Flavor::Std);
+        let _ = compare::build_function(&lib, "less_equal", Flavor::Std)
+            .unwrap();
+        let _ = compare::build_function(&lib, "mux2to1", Flavor::Custom)
+            .unwrap();
+        let _ =
+            compare::build_function(&lib, "stabilize_func", Flavor::Std)
+                .unwrap();
     });
     Ok(())
 }

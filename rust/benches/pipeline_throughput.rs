@@ -2,7 +2,9 @@
 //!
 //! Times one batch of each AOT program on the PJRT CPU client: layer
 //! forward, fused layer train step, and the encode stage, reporting
-//! images/second.  Requires `make artifacts`.
+//! images/second plus the coordinator's JSON metrics artifact (the
+//! same shape `tnn7 train --metrics-json` writes).  Requires
+//! `make artifacts`.
 //!
 //! Run: cargo bench --bench pipeline_throughput
 
@@ -55,5 +57,10 @@ fn main() -> anyhow::Result<()> {
         pipe.forward_l2(&s2).expect("l2_fwd");
     });
     println!("      {:.2} images/s", b as f64 / st.mean_s);
+
+    println!(
+        "\ncoordinator metrics artifact:\n{}",
+        pipe.metrics.to_json().to_string_pretty()
+    );
     Ok(())
 }

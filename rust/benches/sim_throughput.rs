@@ -2,38 +2,48 @@
 //!
 //! Reports wave latency and gate-evaluations/second for the three
 //! Table-I columns — the quantity the whole Table I/II measurement
-//! pipeline is bounded by.
+//! pipeline is bounded by.  Netlists come from the flow `elaborate`
+//! stage; the wave loop is then driven by hand because this bench
+//! times a single `run_wave` rather than a whole pipeline.
 //!
 //! Run: cargo bench --bench sim_throughput
 
 #[path = "common/mod.rs"]
 mod common;
 
-use tnn7::cells::Library;
+use tnn7::cells::{Library, TechParams};
 use tnn7::config::TnnConfig;
 use tnn7::coordinator::activity_bridge::stimulus;
 use tnn7::data::Dataset;
-use tnn7::netlist::column::{build_column, ColumnSpec};
+use tnn7::flow::{table1_specs, Flow, FlowContext, Target};
 use tnn7::netlist::Flavor;
 use tnn7::sim::testbench::{ColumnTestbench, WAVE_LEN};
 use tnn7::tnn::stdp::RandPair;
-use tnn7::tnn::{Lfsr16, StdpParams};
+use tnn7::tnn::Lfsr16;
 
 fn main() -> anyhow::Result<()> {
-    let lib = Library::with_macros();
     let cfg = TnnConfig::default();
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
     let data = Dataset::generate(8, 3);
     let params = cfg.stdp_params();
 
-    for (label, p, q) in
-        [("64x8", 64usize, 8usize), ("128x10", 128, 10), ("1024x16", 1024, 16)]
-    {
+    for (label, spec) in table1_specs() {
         for flavor in [Flavor::Std, Flavor::Custom] {
-            let spec = ColumnSpec::benchmark(p, q);
-            let (nl, ports) = build_column(&lib, flavor, &spec)?;
-            let n_insts = nl.insts.len();
+            let mut ctx = FlowContext::with_parts(
+                Target::column(flavor, spec),
+                cfg.clone(),
+                lib.clone(),
+                tech,
+                data.clone(),
+            );
+            Flow::from_spec("elaborate")?.run(&mut ctx)?;
+            let unit = &ctx.elaborated[0];
+            let (p, q) = (spec.p, spec.q);
+            let n_insts = unit.netlist.insts.len();
             let stim = stimulus(&data, p, 4, cfg.encode_threshold as f32);
-            let mut tb = ColumnTestbench::new(&nl, &ports, &lib)?;
+            let mut tb =
+                ColumnTestbench::new(&unit.netlist, &unit.ports, &ctx.lib)?;
             let mut lfsr = Lfsr16::new(1);
             let rand: Vec<RandPair> =
                 (0..p * q).map(|_| lfsr.draw_pair()).collect();

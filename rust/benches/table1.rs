@@ -1,5 +1,6 @@
 //! Bench: regenerate the paper's Table I (three benchmark columns,
-//! standard vs custom) and time the measurement flow.
+//! standard vs custom) and time the measurement flow — driven through
+//! the staged `tnn7::flow` pipeline API.
 //!
 //! Run: cargo bench --bench table1
 
@@ -8,8 +9,8 @@ mod common;
 
 use tnn7::cells::{Library, TechParams};
 use tnn7::config::TnnConfig;
-use tnn7::coordinator::measure::{measure_column, table1_specs};
 use tnn7::data::Dataset;
+use tnn7::flow::{self, table1_specs, Target};
 use tnn7::netlist::Flavor;
 use tnn7::ppa::report::{improvement_line, render_table1, PpaRow};
 use tnn7::ppa::scaling;
@@ -29,34 +30,37 @@ fn paper(flavor: Flavor, label: &str) -> ColumnPpa {
 }
 
 fn main() -> anyhow::Result<()> {
+    let cfg = TnnConfig::default();
+    // Build the substrate once; measure_with still clones it per call
+    // (cheap next to a gate-level sim), but generation happens here.
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
-    let cfg = TnnConfig::default();
-    let data = Dataset::generate(8, cfg.data_seed);
+    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
 
     let mut rows = Vec::new();
     let mut measured = Vec::new();
     for flavor in [Flavor::Std, Flavor::Custom] {
         for (label, spec) in table1_specs() {
+            let target = Target::column(flavor, spec);
             let mut out = None;
             common::bench(
                 &format!("table1/{flavor:?}/{label}"),
                 if label == "1024x16" { 2 } else { 3 },
                 || {
                     out = Some(
-                        measure_column(&lib, &tech, flavor, &spec, &cfg, &data)
+                        flow::measure_with(target, &cfg, &lib, &tech, &data)
                             .expect("measure"),
                     );
                 },
             );
-            let m = out.unwrap();
+            let r = out.unwrap();
             rows.push(PpaRow {
                 flavor: flavor.label(),
                 label: label.to_string(),
-                ppa: m.ppa,
+                ppa: r.total,
                 paper: Some(paper(flavor, label)),
             });
-            measured.push((flavor, label, m.ppa));
+            measured.push((flavor, label, r.total));
         }
     }
 

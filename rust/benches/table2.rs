@@ -1,5 +1,7 @@
 //! Bench: regenerate the paper's Table II (Fig. 19 prototype PPA + EDP,
-//! standard vs custom, plus the 45nm Table VI comparison).
+//! standard vs custom, plus the 45nm Table VI comparison) — driven
+//! through the staged `tnn7::flow` pipeline API with a prototype
+//! [`Target`].
 //!
 //! Run: cargo bench --bench table2
 
@@ -8,18 +10,20 @@ mod common;
 
 use tnn7::cells::{Library, TechParams};
 use tnn7::config::TnnConfig;
-use tnn7::coordinator::measure::prototype_ppa;
 use tnn7::data::Dataset;
+use tnn7::flow::{self, Target};
 use tnn7::netlist::Flavor;
 use tnn7::ppa::report::{improvement_line, render_table2, PpaRow};
 use tnn7::ppa::scaling;
 use tnn7::ppa::ColumnPpa;
 
 fn main() -> anyhow::Result<()> {
+    let cfg = TnnConfig::default();
+    // Build the substrate once; measure_with still clones it per call
+    // (cheap next to a gate-level sim), but generation happens here.
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
-    let cfg = TnnConfig::default();
-    let data = Dataset::generate(8, cfg.data_seed);
+    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
 
     let paper = [
         (
@@ -34,25 +38,28 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let mut measured = Vec::new();
     for (flavor, paper_ppa) in paper {
+        let target = Target::prototype(flavor);
         let mut out = None;
         common::bench(&format!("table2/{flavor:?}/prototype"), 2, || {
             out = Some(
-                prototype_ppa(&lib, &tech, flavor, &cfg, &data)
-                    .expect("prototype ppa"),
+                flow::measure_with(target, &cfg, &lib, &tech, &data)
+                    .expect("prototype flow"),
             );
         });
-        let (total, m1, m2) = out.unwrap();
+        let r = out.unwrap();
+        let (m1, m2) = (&r.units[0], &r.units[1]);
         println!(
-            "  layer columns: L1(32x12) {:.2} uW / {:.5} mm2, L2(12x10) {:.2} uW / {:.5} mm2",
-            m1.ppa.power_uw, m1.ppa.area_mm2, m2.ppa.power_uw, m2.ppa.area_mm2
+            "  layer columns: L1({}) {:.2} uW / {:.5} mm2, L2({}) {:.2} uW / {:.5} mm2",
+            m1.label, m1.ppa.power_uw, m1.ppa.area_mm2,
+            m2.label, m2.ppa.power_uw, m2.ppa.area_mm2
         );
         rows.push(PpaRow {
             flavor: flavor.label(),
             label: "prototype".into(),
-            ppa: total,
+            ppa: r.total,
             paper: Some(paper_ppa),
         });
-        measured.push(total);
+        measured.push(r.total);
     }
 
     println!("\nTable II — prototype PPA + EDP (measured vs paper)\n");

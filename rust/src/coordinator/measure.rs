@@ -1,28 +1,26 @@
-//! The Table I / Table II measurement driver.
+//! Thin compatibility wrappers over [`crate::flow`].
 //!
-//! One function, [`measure_column`], runs the full Cadence-flow analogue
-//! for a column: elaborate (chosen flavour) → gate-level simulate with
-//! encoded-digit stimulus and live STDP (learning hardware active, as in
-//! the paper's benchmarks) → STA → activity-based power → placement-model
-//! area.  Table II composes two measured columns via synaptic scaling
-//! ([`prototype_ppa`]).
+//! The Table I / Table II measurement driver used to live here as
+//! hard-wired free functions; it is now the staged pipeline in
+//! [`crate::flow`] (`Elaborate → Sta → Simulate → Power → Area →
+//! Report`).  These wrappers keep the original signatures for callers
+//! that hold their own library/technology/dataset (integration tests,
+//! calibration), delegating every measurement to [`flow::measure_with`].
 
 use crate::cells::calibrate::Observation;
 use crate::cells::{Library, TechParams};
 use crate::config::TnnConfig;
 use crate::data::Dataset;
-use crate::error::Result;
-use crate::netlist::column::{build_column, ColumnSpec};
-use crate::netlist::prototype::PrototypeSpec;
+use crate::error::{Error, Result};
+use crate::flow::{self, Target, UnitReport};
+use crate::netlist::column::ColumnSpec;
 use crate::netlist::Flavor;
-use crate::ppa::{area, power, timing, ColumnPpa};
-use crate::sim::testbench::ColumnTestbench;
-use crate::tnn::stdp::RandPair;
-use crate::tnn::Lfsr16;
+use crate::ppa::ColumnPpa;
 
-use super::activity_bridge::stimulus;
+pub use crate::flow::{parse_geometry, table1_specs};
 
-/// Everything measured for one column design point.
+/// Everything measured for one column design point (the flow's
+/// [`UnitReport`], flattened to the historical field set).
 #[derive(Debug, Clone)]
 pub struct ColumnMeasurement {
     pub spec: ColumnSpec,
@@ -40,7 +38,22 @@ pub struct ColumnMeasurement {
     pub clock_ps: f64,
 }
 
-/// Run the full measurement for one column.
+fn unit_to_measurement(u: UnitReport, flavor: Flavor) -> ColumnMeasurement {
+    ColumnMeasurement {
+        spec: u.spec,
+        flavor,
+        ppa: u.ppa,
+        rel_area: u.rel_area,
+        rel_energy_rate: u.rel_energy_rate,
+        rel_leak: u.rel_leak,
+        rel_time: u.rel_time,
+        cells: u.cells,
+        transistors: u.transistors,
+        clock_ps: u.clock_ps,
+    }
+}
+
+/// Run the full measurement flow for one column.
 pub fn measure_column(
     lib: &Library,
     tech: &TechParams,
@@ -49,59 +62,18 @@ pub fn measure_column(
     cfg: &TnnConfig,
     data: &Dataset,
 ) -> Result<ColumnMeasurement> {
-    let (nl, ports) = build_column(lib, flavor, spec)?;
-
-    // STA first: the design runs at its own minimum clock.
-    let t = timing::analyze(&nl, lib, tech)?;
-    let clock_ps = t.min_clock_ps;
-
-    // Gate-level simulation with realistic stimulus + live STDP.
-    let stim = stimulus(data, spec.p, cfg.sim_waves, cfg.encode_threshold as f32);
-    let params = cfg.stdp_params();
-    let mut lfsr = Lfsr16::new(cfg.brv_seed);
-    let mut tb = ColumnTestbench::new(&nl, &ports, lib)?;
-    for s in &stim {
-        let rand: Vec<RandPair> =
-            (0..spec.p * spec.q).map(|_| lfsr.draw_pair()).collect();
-        tb.run_wave(s, &rand, &params);
-    }
-
-    let act = tb.activity();
-    let pw = power::analyze(&nl, lib, tech, act, clock_ps);
-    let ar = area::analyze(&nl, lib, tech);
-    let rel_pw = power::relative(&nl, lib, act, clock_ps);
-    let census = nl.census(lib);
-
-    Ok(ColumnMeasurement {
-        spec: *spec,
-        flavor,
-        ppa: ColumnPpa {
-            power_uw: pw.total_uw(),
-            time_ns: t.wave_ns,
-            area_mm2: ar.die_mm2,
-        },
-        rel_area: area::relative(&nl, lib),
-        rel_energy_rate: rel_pw.energy_rate,
-        rel_leak: rel_pw.leak,
-        rel_time: t.min_clock_ps / tech.fo4_ps * crate::ppa::WAVE_CYCLES as f64,
-        cells: census.cells,
-        transistors: census.transistors,
-        clock_ps,
-    })
-}
-
-/// The three Table-I benchmark geometries.
-pub fn table1_specs() -> [(&'static str, ColumnSpec); 3] {
-    [
-        ("64x8", ColumnSpec::benchmark(64, 8)),
-        ("128x10", ColumnSpec::benchmark(128, 10)),
-        ("1024x16", ColumnSpec::benchmark(1024, 16)),
-    ]
+    let target = Target::column(flavor, *spec);
+    let report = flow::measure_with(target, cfg, lib, tech, data)?;
+    let unit = report
+        .units
+        .into_iter()
+        .next()
+        .ok_or_else(|| Error::ppa("flow report has no units"))?;
+    Ok(unit_to_measurement(unit, flavor))
 }
 
 /// Table II: prototype PPA by synaptic scaling of the two layer columns.
-/// A full wave pipelines layer 1 then layer 2, so computation time is the
-/// max of the two stage times (they overlap across consecutive images).
+/// Returns (composed total, layer-1 column, layer-2 column).
 pub fn prototype_ppa(
     lib: &Library,
     tech: &TechParams,
@@ -109,14 +81,21 @@ pub fn prototype_ppa(
     cfg: &TnnConfig,
     data: &Dataset,
 ) -> Result<(ColumnPpa, ColumnMeasurement, ColumnMeasurement)> {
-    let spec = PrototypeSpec::paper();
-    let m1 = measure_column(lib, tech, flavor, &spec.l1.column, cfg, data)?;
-    let m2 = measure_column(lib, tech, flavor, &spec.l2.column, cfg, data)?;
-    let total = m1
-        .ppa
-        .scaled(spec.l1.cols as f64)
-        .compose_parallel(&m2.ppa.scaled(spec.l2.cols as f64));
-    Ok((total, m1, m2))
+    let target = Target::prototype(flavor);
+    let report = flow::measure_with(target, cfg, lib, tech, data)?;
+    let total = report.total;
+    let mut units = report.units.into_iter();
+    let m1 = units
+        .next()
+        .ok_or_else(|| Error::ppa("prototype flow missing layer-1 unit"))?;
+    let m2 = units
+        .next()
+        .ok_or_else(|| Error::ppa("prototype flow missing layer-2 unit"))?;
+    Ok((
+        total,
+        unit_to_measurement(m1, flavor),
+        unit_to_measurement(m2, flavor),
+    ))
 }
 
 /// Calibration observations: evaluate the model in RELATIVE units on the
@@ -130,7 +109,7 @@ pub fn calibration_observations(
     let unit = TechParams::unit();
     let mut out = Vec::new();
     for (label, power_uw, time_ns, area_mm2) in TABLE1_STD_ANCHORS {
-        let (p, q) = parse_geometry(label);
+        let (p, q) = parse_geometry(label)?;
         let spec = ColumnSpec::benchmark(p, q);
         let m = measure_column(lib, &unit, Flavor::Std, &spec, cfg, data)?;
         eprintln!(
@@ -151,12 +130,6 @@ pub fn calibration_observations(
     Ok(out)
 }
 
-/// "64x8" → (64, 8).
-pub fn parse_geometry(label: &str) -> (usize, usize) {
-    let (p, q) = label.split_once('x').expect("pxq label");
-    (p.parse().expect("p"), q.parse().expect("q"))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,8 +138,7 @@ mod tests {
     fn measurement_smoke_small_column() {
         let lib = Library::with_macros();
         let tech = TechParams::calibrated();
-        let mut cfg = TnnConfig::default();
-        cfg.sim_waves = 2;
+        let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
         let data = Dataset::generate(4, 5);
         let spec = ColumnSpec { p: 8, q: 4, theta: 10 };
         let m =
@@ -183,8 +155,7 @@ mod tests {
         // The Table-I direction, end to end through the real flow.
         let lib = Library::with_macros();
         let tech = TechParams::calibrated();
-        let mut cfg = TnnConfig::default();
-        cfg.sim_waves = 3;
+        let cfg = TnnConfig { sim_waves: 3, ..TnnConfig::default() };
         let data = Dataset::generate(4, 6);
         let spec = ColumnSpec { p: 16, q: 4, theta: 14 };
         let s = measure_column(&lib, &tech, Flavor::Std, &spec, &cfg, &data)
@@ -198,7 +169,21 @@ mod tests {
     }
 
     #[test]
-    fn parse_geometry_labels() {
-        assert_eq!(parse_geometry("1024x16"), (1024, 16));
+    fn prototype_total_composes_layers() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let data = Dataset::generate(4, 5);
+        let (total, m1, m2) =
+            prototype_ppa(&lib, &tech, Flavor::Custom, &cfg, &data)
+                .unwrap();
+        // Power/area add across the 625-replica layers; time is the max.
+        let expect = m1
+            .ppa
+            .scaled(625.0)
+            .compose_parallel(&m2.ppa.scaled(625.0));
+        assert!((total.power_uw - expect.power_uw).abs() < 1e-9);
+        assert!((total.area_mm2 - expect.area_mm2).abs() < 1e-12);
+        assert!((total.time_ns - expect.time_ns).abs() < 1e-12);
     }
 }

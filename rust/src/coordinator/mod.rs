@@ -5,8 +5,9 @@
 //!   layer-1 train (HLO) → layer-2 train (HLO) → vote calibration →
 //!   evaluation.  Python never runs here; the compute is the AOT
 //!   artifacts loaded by [`crate::runtime`].
-//! * [`measure`] — the Table I / Table II measurement driver: elaborate,
-//!   simulate with realistic encoded stimulus, STA + power + area.
+//! * [`measure`] — thin compatibility wrappers over [`crate::flow`],
+//!   the staged measurement pipeline (elaborate → sta → simulate →
+//!   power → area → report).
 //! * [`activity_bridge`] — derives gate-level stimulus from behavioral
 //!   spike statistics so prototype-scale power reflects the trained
 //!   network's real switching activity (the paper's §III.C methodology).

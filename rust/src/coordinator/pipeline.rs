@@ -21,6 +21,7 @@ use crate::config::TnnConfig;
 use crate::data::digits::XorShift;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::runtime::json::Json;
 use crate::runtime::Runtime;
 use crate::tnn::encoding::{encode_image, COL_INPUTS, N_COLS};
 use crate::tnn::INF;
@@ -47,6 +48,18 @@ impl Metrics {
         } else {
             0.0
         }
+    }
+
+    /// JSON artifact in the flow dump format (`tnn7 train
+    /// --metrics-json`, throughput dashboards).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batches", Json::int(self.batches as u64)),
+            ("images", Json::int(self.images as u64)),
+            ("exec_seconds", Json::num(self.exec_seconds)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("images_per_sec", Json::num(self.images_per_sec())),
+        ])
     }
 }
 

@@ -1,0 +1,242 @@
+//! Figs. 14–18 structural layout comparisons as flow artifacts.
+//!
+//! One row per compared function (`less_equal`, `mux2to1`,
+//! `stabilize_func`): the paper-quoted standard-cell reference, the
+//! characterized custom macro, and both flavours *elaborated through
+//! the real module builders* and counted from the netlist census.
+//! Shared by `tnn7 layout-cmp` and the `layout_cmp` bench, which used
+//! to duplicate this logic.
+
+use crate::cells::{gdi, Library, TechParams};
+use crate::error::{Error, Result};
+use crate::netlist::modules::less_equal::less_equal;
+use crate::netlist::modules::mux::mux2;
+use crate::netlist::modules::stabilize_func::stabilize_func;
+use crate::netlist::{Builder, Flavor, Netlist};
+use crate::runtime::json::Json;
+
+/// One Figs. 14–18 comparison row.
+#[derive(Debug, Clone)]
+pub struct MacroComparison {
+    /// Paper figure ("Fig. 14/15", …).
+    pub figure: &'static str,
+    /// Function name ("less_equal", …).
+    pub function: &'static str,
+    /// Custom macro cell name in the library.
+    pub cell_name: &'static str,
+    /// Paper-quoted standard-cell transistor count.
+    pub std_ref_transistors: u32,
+    /// Area implied by the paper-quoted count (T × area/unit).
+    pub std_ref_area_um2: f64,
+    /// The characterized custom macro cell.
+    pub macro_transistors: u32,
+    pub macro_area_um2: f64,
+    /// Std-flavour elaboration, tie cells excluded.
+    pub std_netlist_transistors: u64,
+    pub std_netlist_area_um2: f64,
+    /// Custom-flavour elaboration, tie cells excluded.
+    pub custom_netlist_transistors: u64,
+    pub custom_netlist_area_um2: f64,
+}
+
+/// The three compared functions: (figure, function, macro cell name).
+pub const COMPARISONS: [(&str, &str, &str); 3] = [
+    ("Fig. 14/15", "less_equal", "less_equal"),
+    ("Fig. 16/17", "mux2to1", "mux2to1gdi"),
+    ("Fig. 18", "stabilize_func", "stabilize_func"),
+];
+
+/// Elaborate `function` standalone in the given flavour.
+pub fn build_function(
+    lib: &Library,
+    function: &str,
+    flavor: Flavor,
+) -> Result<Netlist> {
+    let mut b = Builder::new(function, lib);
+    match function {
+        "less_equal" => {
+            let a = b.input("a");
+            let x = b.input("b");
+            let y = less_equal(&mut b, flavor, a, x);
+            b.output(y, "le");
+        }
+        "mux2to1" => {
+            let d0 = b.input("d0");
+            let d1 = b.input("d1");
+            let s = b.input("s");
+            let y = mux2(&mut b, flavor, d0, d1, s);
+            b.output(y, "y");
+        }
+        "stabilize_func" => {
+            let brv = b.input_bus("brv", 8);
+            let w = b.input_bus("w", 3);
+            let y = stabilize_func(&mut b, flavor, &brv, &w);
+            b.output(y, "y");
+        }
+        other => {
+            return Err(Error::netlist(format!(
+                "no standalone builder for function `{other}`"
+            )))
+        }
+    }
+    b.finish()
+}
+
+/// Transistors and placed area of a comparison netlist, excluding the
+/// TIELO/TIEHI constant drivers every netlist carries.
+fn netlist_cost(
+    nl: &Netlist,
+    lib: &Library,
+    tech: &TechParams,
+) -> Result<(u64, f64)> {
+    let ties: u64 = 4; // TIELO + TIEHI, 2T each
+    let t = nl.census(lib).transistors - ties;
+    let tie_area = tech.area_um2(lib.cell(lib.id("TIELOx1")?));
+    let area: f64 = nl
+        .insts
+        .iter()
+        .map(|i| tech.area_um2(lib.cell(i.cell)))
+        .sum::<f64>()
+        - 2.0 * tie_area;
+    Ok((t, area))
+}
+
+/// All Figs. 14–18 rows, optionally filtered by function or cell name.
+pub fn layout_comparisons(
+    lib: &Library,
+    tech: &TechParams,
+    filter: Option<&str>,
+) -> Result<Vec<MacroComparison>> {
+    let mut rows = Vec::new();
+    for (figure, function, cell_name) in COMPARISONS {
+        if let Some(f) = filter {
+            if f != function && f != cell_name {
+                continue;
+            }
+        }
+        let (std_ref_t, _desc) =
+            gdi::cmos_reference(function).ok_or_else(|| {
+                Error::cells(format!("no CMOS reference for {function}"))
+            })?;
+        let macro_cell = lib.cell(lib.id(cell_name)?);
+        let std_nl = build_function(lib, function, Flavor::Std)?;
+        let cus_nl = build_function(lib, function, Flavor::Custom)?;
+        let (std_t, std_area) = netlist_cost(&std_nl, lib, tech)?;
+        let (cus_t, cus_area) = netlist_cost(&cus_nl, lib, tech)?;
+        rows.push(MacroComparison {
+            figure,
+            function,
+            cell_name,
+            std_ref_transistors: std_ref_t,
+            std_ref_area_um2: f64::from(std_ref_t)
+                * tech.area_per_unit_um2,
+            macro_transistors: macro_cell.transistors,
+            macro_area_um2: tech.area_um2(macro_cell),
+            std_netlist_transistors: std_t,
+            std_netlist_area_um2: std_area,
+            custom_netlist_transistors: cus_t,
+            custom_netlist_area_um2: cus_area,
+        });
+    }
+    Ok(rows)
+}
+
+/// JSON artifact form of the comparison rows.
+pub fn to_json(rows: &[MacroComparison]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("figure", Json::str(r.figure)),
+                    ("function", Json::str(r.function)),
+                    ("cell", Json::str(r.cell_name)),
+                    (
+                        "std_ref_transistors",
+                        Json::int(u64::from(r.std_ref_transistors)),
+                    ),
+                    ("std_ref_area_um2", Json::num(r.std_ref_area_um2)),
+                    (
+                        "macro_transistors",
+                        Json::int(u64::from(r.macro_transistors)),
+                    ),
+                    ("macro_area_um2", Json::num(r.macro_area_um2)),
+                    (
+                        "std_netlist_transistors",
+                        Json::int(r.std_netlist_transistors),
+                    ),
+                    (
+                        "std_netlist_area_um2",
+                        Json::num(r.std_netlist_area_um2),
+                    ),
+                    (
+                        "custom_netlist_transistors",
+                        Json::int(r.custom_netlist_transistors),
+                    ),
+                    (
+                        "custom_netlist_area_um2",
+                        Json::num(r.custom_netlist_area_um2),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_rows_present_and_custom_wins() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let rows = layout_comparisons(&lib, &tech, None).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(
+                r.custom_netlist_transistors < r.std_netlist_transistors,
+                "{}: custom should use fewer transistors",
+                r.function
+            );
+            assert!(r.custom_netlist_area_um2 < r.std_netlist_area_um2);
+        }
+        // Fig. 17: the GDI mux is the famous 2T cell.
+        let mux = rows.iter().find(|r| r.function == "mux2to1").unwrap();
+        assert_eq!(mux.macro_transistors, 2);
+    }
+
+    #[test]
+    fn json_artifact_round_trips_field_names() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let rows = layout_comparisons(&lib, &tech, None).unwrap();
+        let text = to_json(&rows).to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        let arr = back.as_arr().unwrap();
+        assert_eq!(arr.len(), rows.len());
+        let r = &arr[0];
+        assert_eq!(
+            r.field("function").unwrap().as_str().unwrap(),
+            rows[0].function
+        );
+        assert!(
+            r.field("macro_transistors").unwrap().as_usize().unwrap() > 0
+        );
+        assert!(
+            r.field("std_netlist_area_um2").unwrap().as_f64().unwrap()
+                > 0.0
+        );
+    }
+
+    #[test]
+    fn filter_selects_one_row() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let rows =
+            layout_comparisons(&lib, &tech, Some("mux2to1")).unwrap();
+        assert_eq!(rows.len(), 1);
+        let rows =
+            layout_comparisons(&lib, &tech, Some("mux2to1gdi")).unwrap();
+        assert_eq!(rows.len(), 1);
+    }
+}

@@ -1,0 +1,574 @@
+//! The staged, inspectable design-flow pipeline — the Cadence-flow
+//! analogue as a first-class API.
+//!
+//! The paper's contribution *is* a flow: elaborate a TNN design in two
+//! flavours (std-cell vs custom GDI macros), simulate it for switching
+//! activity, then run STA/power/area to produce Tables I–II.  This
+//! module turns that flow into composable passes:
+//!
+//! ```text
+//! Elaborate → Sta → Simulate → Power → Area → Scale45 → Report
+//! ```
+//!
+//! * [`Stage`] — one pass: `run` reads/writes typed artifacts on a
+//!   [`FlowContext`], `dump` serializes what it produced to JSON (via
+//!   the serde-free [`crate::runtime::json`] writer).
+//! * [`Flow`] — an ordered stage list built from [`Flow::standard`],
+//!   [`Flow::from_spec`] (the CLI `--pipeline elaborate,sta,sim,ppa`
+//!   idiom) or manual composition; `run` executes the stages and, with
+//!   [`Flow::dump_dir`], writes one numbered artifact per stage
+//!   (`00_elaborate.json`, `01_sta.json`, …).
+//! * [`FlowContext`] — the [`Target`] descriptor (flavour × node ×
+//!   geometry) plus every intermediate artifact, inspectable between
+//!   stages.
+//! * [`measure`] — the one-call convenience the old
+//!   `coordinator::measure` free functions now wrap.
+//!
+//! Every future scaling direction (parallel design-point sweeps, cached
+//! stage artifacts, new targets) hangs off this API: a sweep is a loop
+//! over `Target`s, a cache is a stage that short-circuits `run`, a new
+//! design point is a new `Geometry`.
+
+pub mod compare;
+pub mod stages;
+pub mod target;
+
+pub use target::{
+    parse_geometry, table1_specs, Geometry, Target, TechNode, UnitPlan,
+};
+
+use std::path::PathBuf;
+
+use crate::cells::{Library, TechParams};
+use crate::config::TnnConfig;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::netlist::column::ColumnPorts;
+use crate::netlist::ir::Census;
+use crate::netlist::Netlist;
+use crate::ppa::area::AreaReport;
+use crate::ppa::power::{PowerReport, RelPower};
+use crate::ppa::report::ColumnPpa;
+use crate::ppa::scaling::NodeScaling;
+use crate::ppa::timing::TimingReport;
+use crate::runtime::json::Json;
+use crate::sim::Activity;
+
+/// One pass of the design flow.
+///
+/// Stages communicate only through the [`FlowContext`]: `run` checks its
+/// prerequisites' artifacts are present (returning a structured error
+/// naming the missing stage otherwise), computes, and stores its own.
+pub trait Stage {
+    /// Pipeline token naming the stage (`elaborate`, `sta`, …).
+    fn name(&self) -> &'static str;
+    /// One-line description (drives `--help` and docs).
+    fn description(&self) -> &'static str;
+    /// Execute the pass.
+    fn run(&self, ctx: &mut FlowContext) -> Result<()>;
+    /// JSON artifact describing what the pass produced.
+    fn dump(&self, ctx: &FlowContext) -> Json;
+}
+
+/// One elaborated unit of the target (a representative column).
+pub struct ElaboratedUnit {
+    pub plan: UnitPlan,
+    pub netlist: Netlist,
+    pub ports: ColumnPorts,
+    pub census: Census,
+}
+
+/// The 45nm-comparison artifact ([`stages::Scale45`]).
+#[derive(Debug, Clone)]
+pub struct Scale45Report {
+    /// Native 7nm composed PPA the comparison is made against (never
+    /// node-projected, even for 45nm targets).
+    pub measured: ColumnPpa,
+    /// Published 45nm anchor, when one exists for this geometry.
+    pub anchor: Option<(&'static str, ColumnPpa)>,
+    /// (power, time, area) ratios 45nm / measured, when anchored.
+    pub ratios: Option<(f64, f64, f64)>,
+    /// First-order constant-field model factors for sanity-checking.
+    pub model_power_factor: f64,
+    pub model_delay_factor: f64,
+    pub model_area_factor: f64,
+}
+
+/// Per-unit measurement in the final report (the old
+/// `ColumnMeasurement`, now per target unit).
+#[derive(Debug, Clone)]
+pub struct UnitReport {
+    pub label: String,
+    pub spec: crate::netlist::column::ColumnSpec,
+    pub replicas: u64,
+    /// Unreplicated single-unit PPA.
+    pub ppa: ColumnPpa,
+    /// Relative aggregates (calibration inputs).
+    pub rel_area: f64,
+    pub rel_energy_rate: f64,
+    pub rel_leak: f64,
+    pub rel_time: f64,
+    /// Census numbers.
+    pub cells: u64,
+    pub transistors: u64,
+    /// Minimum clock period (ps).
+    pub clock_ps: f64,
+}
+
+/// The composed result of a flow run ([`stages::Report`]).
+#[derive(Debug, Clone)]
+pub struct TargetReport {
+    pub target: Target,
+    pub units: Vec<UnitReport>,
+    /// Replica-scaled, parallel-composed target PPA (projected to the
+    /// target's [`TechNode`]).
+    pub total: ColumnPpa,
+}
+
+impl TargetReport {
+    /// JSON form of the report (also the `report` stage dump body).
+    pub fn to_json(&self) -> Json {
+        let units = self
+            .units
+            .iter()
+            .map(|u| {
+                Json::obj(vec![
+                    ("label", Json::str(u.label.clone())),
+                    ("p", Json::int(u.spec.p as u64)),
+                    ("q", Json::int(u.spec.q as u64)),
+                    ("theta", Json::int(u.spec.theta)),
+                    ("replicas", Json::int(u.replicas)),
+                    ("power_uw", Json::num(u.ppa.power_uw)),
+                    ("time_ns", Json::num(u.ppa.time_ns)),
+                    ("area_mm2", Json::num(u.ppa.area_mm2)),
+                    ("rel_area", Json::num(u.rel_area)),
+                    ("rel_energy_rate", Json::num(u.rel_energy_rate)),
+                    ("rel_leak", Json::num(u.rel_leak)),
+                    ("rel_time", Json::num(u.rel_time)),
+                    ("cells", Json::int(u.cells)),
+                    ("transistors", Json::int(u.transistors)),
+                    ("clock_ps", Json::num(u.clock_ps)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("target", Json::str(self.target.describe())),
+            ("flavor", Json::str(self.target.flavor.label())),
+            ("node", Json::str(self.target.node.label())),
+            ("units", Json::Arr(units)),
+            (
+                "total",
+                Json::obj(vec![
+                    ("power_uw", Json::num(self.total.power_uw)),
+                    ("time_ns", Json::num(self.total.time_ns)),
+                    ("area_mm2", Json::num(self.total.area_mm2)),
+                    ("edp_nj_ns", Json::num(self.total.edp_nj_ns())),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Everything a flow run reads and writes.
+///
+/// Inputs (`target`, `cfg`, `lib`, `tech`, `data`) are fixed at
+/// construction; artifact vectors run parallel to [`Target::units`] and
+/// are empty until their producing stage has run.
+pub struct FlowContext {
+    pub target: Target,
+    pub cfg: TnnConfig,
+    pub lib: Library,
+    pub tech: TechParams,
+    pub data: Dataset,
+    /// `elaborate` artifacts.
+    pub elaborated: Vec<ElaboratedUnit>,
+    /// `sta` artifacts.
+    pub timing: Vec<TimingReport>,
+    /// `simulate` artifacts (per-instance switching activity).
+    pub activity: Vec<Activity>,
+    /// Waves simulated by the last `simulate` run.
+    pub sim_waves_run: usize,
+    /// `power` artifacts.
+    pub power: Vec<PowerReport>,
+    pub rel_power: Vec<RelPower>,
+    /// `area` artifacts.
+    pub area: Vec<AreaReport>,
+    pub rel_area: Vec<f64>,
+    /// `scale45` artifact.
+    pub scale45: Option<Scale45Report>,
+    /// `report` artifact.
+    pub report: Option<TargetReport>,
+}
+
+impl FlowContext {
+    /// Context with default substrate: characterized macro library,
+    /// calibrated technology constants, and the config's dataset.
+    pub fn new(target: Target, cfg: TnnConfig) -> FlowContext {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+        FlowContext::with_parts(target, cfg, lib, tech, data)
+    }
+
+    /// Context with explicit substrate (calibration fits use unit-scale
+    /// [`TechParams`]; ablations substitute their own datasets).
+    pub fn with_parts(
+        target: Target,
+        cfg: TnnConfig,
+        lib: Library,
+        tech: TechParams,
+        data: Dataset,
+    ) -> FlowContext {
+        FlowContext {
+            target,
+            cfg,
+            lib,
+            tech,
+            data,
+            elaborated: Vec::new(),
+            timing: Vec::new(),
+            activity: Vec::new(),
+            sim_waves_run: 0,
+            power: Vec::new(),
+            rel_power: Vec::new(),
+            area: Vec::new(),
+            rel_area: Vec::new(),
+            scale45: None,
+            report: None,
+        }
+    }
+
+    /// Drop every artifact that depends on the named stage's output.
+    ///
+    /// Stages call this before storing fresh results, so re-running a
+    /// partial pipeline on a reused context (the advertised sweep /
+    /// inspect-between-stages usage) can never mix fresh upstream
+    /// artifacts with stale downstream ones — downstream stages simply
+    /// have to be re-run.
+    pub fn invalidate_downstream(&mut self, stage: &str) {
+        // Dependency chain: elaborate → {sta, simulate, area} → power
+        // → {scale45, report} (scale45/report also read sta/area).
+        let wipe_power = |ctx: &mut FlowContext| {
+            ctx.power.clear();
+            ctx.rel_power.clear();
+            ctx.scale45 = None;
+            ctx.report = None;
+        };
+        match stage {
+            "elaborate" => {
+                self.timing.clear();
+                self.activity.clear();
+                self.sim_waves_run = 0;
+                self.area.clear();
+                self.rel_area.clear();
+                wipe_power(self);
+            }
+            "sta" | "simulate" => wipe_power(self),
+            "power" | "area" => {
+                self.scale45 = None;
+                self.report = None;
+            }
+            _ => {}
+        }
+    }
+
+    /// Composed target-level PPA from the per-unit sta/power/area
+    /// artifacts: replica scaling then parallel composition, projected
+    /// to the target's tech node.
+    pub fn compose_total(&self) -> Result<ColumnPpa> {
+        Ok(self.project_node(self.compose_native()?))
+    }
+
+    /// The same composition in the native (7nm-measured) domain, with
+    /// no node projection — the baseline `scale45` ratios against
+    /// (projecting both sides would cancel the comparison).
+    pub fn compose_native(&self) -> Result<ColumnPpa> {
+        let units = self.target.units();
+        let mut total: Option<ColumnPpa> = None;
+        for (i, u) in units.iter().enumerate() {
+            let pw = self.power.get(i).ok_or_else(|| {
+                Error::ppa("composing PPA requires the `power` stage")
+            })?;
+            let t = self.timing.get(i).ok_or_else(|| {
+                Error::ppa("composing PPA requires the `sta` stage")
+            })?;
+            let ar = self.area.get(i).ok_or_else(|| {
+                Error::ppa("composing PPA requires the `area` stage")
+            })?;
+            let ppa = ColumnPpa {
+                power_uw: pw.total_uw(),
+                time_ns: t.wave_ns,
+                area_mm2: ar.die_mm2,
+            }
+            .scaled(u.replicas as f64);
+            total = Some(match total {
+                Some(acc) => acc.compose_parallel(&ppa),
+                None => ppa,
+            });
+        }
+        total.ok_or_else(|| Error::ppa("target has no units"))
+    }
+
+    /// Project a 7nm-measured PPA to the target's reporting node.
+    fn project_node(&self, ppa: ColumnPpa) -> ColumnPpa {
+        match self.target.node {
+            TechNode::N7 => ppa,
+            TechNode::N45 => {
+                let m = NodeScaling::n45_to_7();
+                ColumnPpa {
+                    power_uw: ppa.power_uw * m.power_factor(),
+                    time_ns: ppa.time_ns * m.delay_factor(),
+                    area_mm2: ppa.area_mm2 * m.area_factor(),
+                }
+            }
+        }
+    }
+
+    /// Replica-scaled (cells, transistors) census over all units — the
+    /// Fig. 19 complexity numbers for prototype targets.
+    pub fn total_census(&self) -> Result<(u64, u64)> {
+        if self.elaborated.is_empty() {
+            return Err(Error::ppa(
+                "census requires the `elaborate` stage",
+            ));
+        }
+        let mut cells = 0u64;
+        let mut transistors = 0u64;
+        for u in &self.elaborated {
+            cells += u.census.cells * u.plan.replicas;
+            transistors += u.census.transistors * u.plan.replicas;
+        }
+        Ok((cells, transistors))
+    }
+}
+
+/// An ordered, optionally-dumping stage pipeline.
+pub struct Flow {
+    stages: Vec<Box<dyn Stage>>,
+    dump_dir: Option<PathBuf>,
+}
+
+impl Default for Flow {
+    fn default() -> Self {
+        Flow::new()
+    }
+}
+
+impl Flow {
+    /// Empty flow for manual composition.
+    pub fn new() -> Flow {
+        Flow { stages: Vec::new(), dump_dir: None }
+    }
+
+    /// The full canonical pipeline:
+    /// `elaborate → sta → simulate → power → area → scale45 → report`.
+    pub fn standard() -> Flow {
+        Flow::from_spec("elaborate,sta,simulate,power,area,scale45,report")
+            .expect("canonical pipeline spec")
+    }
+
+    /// The measurement pipeline behind [`measure`] (no 45nm stage):
+    /// `elaborate → sta → simulate → power → area → report`.
+    pub fn measurement() -> Flow {
+        Flow::from_spec("elaborate,sta,simulate,power,area,report")
+            .expect("measurement pipeline spec")
+    }
+
+    /// Parse a `--pipeline` spec: comma-separated stage tokens.  `sim`
+    /// aliases `simulate`; `ppa` expands to `power,area,report`.
+    pub fn from_spec(spec: &str) -> Result<Flow> {
+        let mut flow = Flow::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            for stage in stages::make(tok)? {
+                flow.stages.push(stage);
+            }
+        }
+        if flow.stages.is_empty() {
+            return Err(Error::config("empty pipeline spec"));
+        }
+        flow.validate()?;
+        Ok(flow)
+    }
+
+    /// Append a stage (builder style).
+    pub fn with_stage(mut self, stage: Box<dyn Stage>) -> Flow {
+        self.stages.push(stage);
+        self
+    }
+
+    /// Write one numbered JSON artifact per stage into `dir`.
+    pub fn dump_dir(mut self, dir: impl Into<PathBuf>) -> Flow {
+        self.dump_dir = Some(dir.into());
+        self
+    }
+
+    /// Stage names, in execution order.
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.name()).collect()
+    }
+
+    /// Check every stage's prerequisites appear earlier in the list, so
+    /// misordered `--pipeline` specs fail before any work is done.
+    fn validate(&self) -> Result<()> {
+        let mut seen: Vec<&str> = Vec::new();
+        for s in &self.stages {
+            for req in stages::requires(s.name()) {
+                if !seen.contains(req) {
+                    return Err(Error::config(format!(
+                        "stage `{}` requires `{req}` earlier in the \
+                         pipeline (got: {})",
+                        s.name(),
+                        self.stage_names().join(","),
+                    )));
+                }
+            }
+            seen.push(s.name());
+        }
+        Ok(())
+    }
+
+    /// Run every stage in order.  With a dump dir, each stage's JSON
+    /// artifact is written as `NN_name.json` right after it runs, so a
+    /// failing pipeline still leaves the artifacts of the stages that
+    /// completed.
+    pub fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        if let Some(dir) = &self.dump_dir {
+            std::fs::create_dir_all(dir)?;
+        }
+        for (i, stage) in self.stages.iter().enumerate() {
+            stage.run(ctx)?;
+            if let Some(dir) = &self.dump_dir {
+                let path = dir.join(format!("{i:02}_{}.json", stage.name()));
+                std::fs::write(&path, stage.dump(ctx).to_string_pretty())?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Measure a target end-to-end with the default substrate and return
+/// the composed report — the one-call form of the flow API.
+pub fn measure(target: Target, cfg: &TnnConfig) -> Result<TargetReport> {
+    let mut ctx = FlowContext::new(target, cfg.clone());
+    Flow::measurement().run(&mut ctx)?;
+    ctx.report
+        .take()
+        .ok_or_else(|| Error::ppa("report stage produced no artifact"))
+}
+
+/// Measure with an explicit substrate (library / technology constants /
+/// dataset) — the form the `coordinator::measure` wrappers use.
+///
+/// The context owns its substrate, so the library and dataset are
+/// cloned per call; both are small (dozens of cells, a handful of
+/// 25×25 images) next to one gate-level simulation, but a future
+/// many-point sweep that wants zero-copy should share via borrowing
+/// stages or `Arc` rather than calling this in a tight loop.
+pub fn measure_with(
+    target: Target,
+    cfg: &TnnConfig,
+    lib: &Library,
+    tech: &TechParams,
+    data: &Dataset,
+) -> Result<TargetReport> {
+    let mut ctx = FlowContext::with_parts(
+        target,
+        cfg.clone(),
+        lib.clone(),
+        *tech,
+        data.clone(),
+    );
+    Flow::measurement().run(&mut ctx)?;
+    ctx.report
+        .take()
+        .ok_or_else(|| Error::ppa("report stage produced no artifact"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::column::ColumnSpec;
+    use crate::netlist::Flavor;
+
+    #[test]
+    fn pipeline_spec_parses_aliases_and_orders() {
+        let f = Flow::from_spec("elaborate,sta,sim,ppa").unwrap();
+        assert_eq!(
+            f.stage_names(),
+            vec!["elaborate", "sta", "simulate", "power", "area", "report"]
+        );
+        assert_eq!(
+            Flow::standard().stage_names(),
+            vec![
+                "elaborate",
+                "sta",
+                "simulate",
+                "power",
+                "area",
+                "scale45",
+                "report"
+            ]
+        );
+    }
+
+    #[test]
+    fn pipeline_spec_rejects_unknown_and_misordered() {
+        assert!(Flow::from_spec("elaborate,fuse").is_err());
+        assert!(Flow::from_spec("sta,elaborate").is_err());
+        assert!(Flow::from_spec("").is_err());
+        // power without simulate
+        assert!(Flow::from_spec("elaborate,sta,power").is_err());
+    }
+
+    #[test]
+    fn stage_prereq_errors_at_run_time_too() {
+        // A hand-built flow skips validate(); stages still guard.
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let target =
+            Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 });
+        let mut ctx = FlowContext::new(target, cfg);
+        let flow = Flow::new().with_stage(Box::new(stages::Sta));
+        assert!(flow.run(&mut ctx).is_err());
+    }
+
+    #[test]
+    fn rerun_partial_pipeline_invalidates_stale_downstream() {
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let target =
+            Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 });
+        let mut ctx = FlowContext::new(target, cfg);
+        Flow::measurement().run(&mut ctx).unwrap();
+        assert!(ctx.report.is_some());
+        assert!(!ctx.power.is_empty());
+        // Refresh only activity: everything downstream must be dropped,
+        // not silently mixed with the previous run's artifacts.
+        ctx.cfg.sim_waves = 2;
+        Flow::from_spec("elaborate,simulate")
+            .unwrap()
+            .run(&mut ctx)
+            .unwrap();
+        assert!(ctx.power.is_empty());
+        assert!(ctx.timing.is_empty());
+        assert!(ctx.report.is_none());
+        assert!(ctx.scale45.is_none());
+        assert!(ctx.compose_total().is_err());
+    }
+
+    #[test]
+    fn measure_composes_single_column() {
+        let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
+        let target =
+            Target::column(Flavor::Std, ColumnSpec { p: 8, q: 4, theta: 10 });
+        let r = measure(target, &cfg).unwrap();
+        assert_eq!(r.units.len(), 1);
+        assert!(r.total.power_uw > 0.0);
+        assert!(r.total.time_ns > 0.0);
+        assert!(r.total.area_mm2 > 0.0);
+        // one unit, one replica: total == unit ppa
+        assert_eq!(r.total.power_uw, r.units[0].ppa.power_uw);
+    }
+}

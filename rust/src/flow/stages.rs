@@ -1,0 +1,575 @@
+//! The canonical flow stages.
+//!
+//! Each stage is a small unit struct implementing [`Stage`]; the
+//! registry functions ([`all`], [`make`], [`requires`]) drive
+//! `--pipeline` parsing, dependency validation, and generated help
+//! text.  Stage semantics are byte-for-byte the old
+//! `coordinator::measure::measure_column` flow, split at its natural
+//! seams:
+//!
+//! | stage      | produces                       | consumes            |
+//! |------------|--------------------------------|---------------------|
+//! | `elaborate`| netlists + ports + census      | —                   |
+//! | `sta`      | min clock, wave time           | elaborate           |
+//! | `simulate` | switching activity             | elaborate           |
+//! | `power`    | dynamic/clock/leakage power    | sta, simulate       |
+//! | `area`     | placed / die area              | elaborate           |
+//! | `scale45`  | 45nm anchors + ratios          | sta, power, area    |
+//! | `report`   | composed [`TargetReport`]      | sta, power, area    |
+
+use crate::coordinator::activity_bridge::stimulus;
+use crate::error::{Error, Result};
+use crate::netlist::column::build_column;
+use crate::ppa::report::ColumnPpa;
+use crate::ppa::scaling::{self, NodeScaling};
+use crate::ppa::{area, power, timing};
+use crate::runtime::json::Json;
+use crate::sim::testbench::ColumnTestbench;
+use crate::tnn::stdp::RandPair;
+use crate::tnn::Lfsr16;
+
+use super::target::Geometry;
+use super::{
+    ElaboratedUnit, FlowContext, Scale45Report, Stage, TargetReport,
+    UnitReport,
+};
+
+/// All canonical stages in pipeline order (drives help text).
+pub fn all() -> Vec<Box<dyn Stage>> {
+    vec![
+        Box::new(Elaborate),
+        Box::new(Sta),
+        Box::new(Simulate),
+        Box::new(Power),
+        Box::new(Area),
+        Box::new(Scale45),
+        Box::new(Report),
+    ]
+}
+
+/// Resolve one `--pipeline` token to stage instances.  `sim` aliases
+/// `simulate`; the macro-token `ppa` expands to `power,area,report`.
+pub fn make(tok: &str) -> Result<Vec<Box<dyn Stage>>> {
+    Ok(match tok {
+        "elaborate" => vec![Box::new(Elaborate) as Box<dyn Stage>],
+        "sta" | "timing" => vec![Box::new(Sta)],
+        "simulate" | "sim" => vec![Box::new(Simulate)],
+        "power" => vec![Box::new(Power)],
+        "area" => vec![Box::new(Area)],
+        "scale45" => vec![Box::new(Scale45)],
+        "report" => vec![Box::new(Report)],
+        "ppa" => vec![Box::new(Power), Box::new(Area), Box::new(Report)],
+        other => {
+            return Err(Error::config(format!(
+                "unknown pipeline stage `{other}` (available: elaborate, \
+                 sta, simulate|sim, power, area, scale45, report, ppa)"
+            )))
+        }
+    })
+}
+
+/// Stages that must run before the named stage.
+pub fn requires(name: &str) -> &'static [&'static str] {
+    match name {
+        "sta" | "simulate" | "area" => &["elaborate"],
+        "power" => &["sta", "simulate"],
+        "scale45" | "report" => &["sta", "power", "area"],
+        _ => &[],
+    }
+}
+
+fn missing(stage: &str, req: &str) -> Error {
+    Error::ppa(format!(
+        "stage `{stage}` requires the `{req}` artifact — run `{req}` \
+         earlier in the pipeline"
+    ))
+}
+
+// ---------------------------------------------------------------------
+// elaborate
+
+/// Build the gate-level netlist for every unit of the target.
+pub struct Elaborate;
+
+impl Stage for Elaborate {
+    fn name(&self) -> &'static str {
+        "elaborate"
+    }
+
+    fn description(&self) -> &'static str {
+        "build gate-level netlists for every unit of the target \
+         (Genus analogue)"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        let units = ctx.target.units();
+        ctx.invalidate_downstream(self.name());
+        ctx.elaborated.clear();
+        for plan in units {
+            let (netlist, ports) =
+                build_column(&ctx.lib, ctx.target.flavor, &plan.spec)?;
+            let census = netlist.census(&ctx.lib);
+            ctx.elaborated.push(ElaboratedUnit {
+                plan,
+                netlist,
+                ports,
+                census,
+            });
+        }
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        let units = ctx
+            .elaborated
+            .iter()
+            .map(|u| {
+                Json::obj(vec![
+                    ("label", Json::str(u.plan.label())),
+                    ("p", Json::int(u.plan.spec.p as u64)),
+                    ("q", Json::int(u.plan.spec.q as u64)),
+                    ("theta", Json::int(u.plan.spec.theta)),
+                    ("replicas", Json::int(u.plan.replicas)),
+                    ("cells", Json::int(u.census.cells)),
+                    ("transistors", Json::int(u.census.transistors)),
+                    ("nets", Json::int(u.netlist.n_nets() as u64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("stage", Json::str(self.name())),
+            ("target", Json::str(ctx.target.describe())),
+            ("units", Json::Arr(units)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// sta
+
+/// Static timing analysis: minimum clock and per-wave time.
+pub struct Sta;
+
+impl Stage for Sta {
+    fn name(&self) -> &'static str {
+        "sta"
+    }
+
+    fn description(&self) -> &'static str {
+        "static timing analysis: minimum clock period and wave time \
+         (Tempus analogue)"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        if ctx.elaborated.is_empty() {
+            return Err(missing(self.name(), "elaborate"));
+        }
+        ctx.invalidate_downstream(self.name());
+        ctx.timing.clear();
+        for u in &ctx.elaborated {
+            let t = timing::analyze(&u.netlist, &ctx.lib, &ctx.tech)?;
+            ctx.timing.push(t);
+        }
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        let units = ctx
+            .timing
+            .iter()
+            .zip(&ctx.elaborated)
+            .map(|(t, u)| {
+                Json::obj(vec![
+                    ("label", Json::str(u.plan.label())),
+                    ("min_clock_ps", Json::num(t.min_clock_ps)),
+                    ("wave_ns", Json::num(t.wave_ns)),
+                    ("crit_endpoint", Json::int(t.crit_endpoint as u64)),
+                    ("n_instances", Json::int(t.n_instances as u64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("stage", Json::str(self.name())),
+            ("units", Json::Arr(units)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// simulate
+
+/// Gate-level simulation with encoded-digit stimulus and live STDP,
+/// producing per-instance switching activity.
+pub struct Simulate;
+
+impl Stage for Simulate {
+    fn name(&self) -> &'static str {
+        "simulate"
+    }
+
+    fn description(&self) -> &'static str {
+        "gate-level simulation with encoded stimulus and live STDP, \
+         counting per-net toggles"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        if ctx.elaborated.is_empty() {
+            return Err(missing(self.name(), "elaborate"));
+        }
+        ctx.invalidate_downstream(self.name());
+        let params = ctx.cfg.stdp_params();
+        let waves = ctx.cfg.sim_waves;
+        ctx.activity.clear();
+        for u in &ctx.elaborated {
+            let spec = u.plan.spec;
+            let stim = stimulus(
+                &ctx.data,
+                spec.p,
+                waves,
+                ctx.cfg.encode_threshold as f32,
+            );
+            let mut lfsr = Lfsr16::new(ctx.cfg.brv_seed);
+            let mut tb =
+                ColumnTestbench::new(&u.netlist, &u.ports, &ctx.lib)?;
+            for s in &stim {
+                let rand: Vec<RandPair> = (0..spec.p * spec.q)
+                    .map(|_| lfsr.draw_pair())
+                    .collect();
+                tb.run_wave(s, &rand, &params);
+            }
+            ctx.activity.push(tb.activity().clone());
+        }
+        ctx.sim_waves_run = waves;
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        let units = ctx
+            .activity
+            .iter()
+            .zip(&ctx.elaborated)
+            .map(|(a, u)| {
+                let toggles: u64 = a.toggles.iter().sum();
+                let ticks: u64 = a.clock_ticks.iter().sum();
+                Json::obj(vec![
+                    ("label", Json::str(u.plan.label())),
+                    ("cycles", Json::int(a.cycles)),
+                    ("toggles", Json::int(toggles)),
+                    ("clock_ticks", Json::int(ticks)),
+                    (
+                        "mean_toggle_rate",
+                        Json::num(a.mean_toggle_rate()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("stage", Json::str(self.name())),
+            ("waves", Json::int(ctx.sim_waves_run as u64)),
+            ("units", Json::Arr(units)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// power
+
+/// Activity-based power analysis (dynamic + clock + leakage).
+pub struct Power;
+
+impl Stage for Power {
+    fn name(&self) -> &'static str {
+        "power"
+    }
+
+    fn description(&self) -> &'static str {
+        "activity-based dynamic + clock + leakage power (Voltus \
+         analogue)"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        if ctx.elaborated.is_empty() {
+            return Err(missing(self.name(), "elaborate"));
+        }
+        ctx.invalidate_downstream(self.name());
+        ctx.power.clear();
+        ctx.rel_power.clear();
+        for (i, u) in ctx.elaborated.iter().enumerate() {
+            let t = ctx
+                .timing
+                .get(i)
+                .ok_or_else(|| missing("power", "sta"))?;
+            let act = ctx
+                .activity
+                .get(i)
+                .ok_or_else(|| missing("power", "simulate"))?;
+            let pw = power::analyze(
+                &u.netlist,
+                &ctx.lib,
+                &ctx.tech,
+                act,
+                t.min_clock_ps,
+            );
+            let rel =
+                power::relative(&u.netlist, &ctx.lib, act, t.min_clock_ps);
+            ctx.power.push(pw);
+            ctx.rel_power.push(rel);
+        }
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        let units = ctx
+            .power
+            .iter()
+            .zip(&ctx.elaborated)
+            .zip(&ctx.rel_power)
+            .map(|((pw, u), rel)| {
+                Json::obj(vec![
+                    ("label", Json::str(u.plan.label())),
+                    ("dynamic_uw", Json::num(pw.dynamic_uw)),
+                    ("clock_uw", Json::num(pw.clock_uw)),
+                    ("leakage_uw", Json::num(pw.leakage_uw)),
+                    ("total_uw", Json::num(pw.total_uw())),
+                    ("rel_energy_rate", Json::num(rel.energy_rate)),
+                    ("rel_leak", Json::num(rel.leak)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("stage", Json::str(self.name())),
+            ("units", Json::Arr(units)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// area
+
+/// Placement-model area analysis.
+pub struct Area;
+
+impl Stage for Area {
+    fn name(&self) -> &'static str {
+        "area"
+    }
+
+    fn description(&self) -> &'static str {
+        "placement-model area: placed cell area and die area after \
+         utilization"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        if ctx.elaborated.is_empty() {
+            return Err(missing(self.name(), "elaborate"));
+        }
+        ctx.invalidate_downstream(self.name());
+        ctx.area.clear();
+        ctx.rel_area.clear();
+        for u in &ctx.elaborated {
+            ctx.area.push(area::analyze(&u.netlist, &ctx.lib, &ctx.tech));
+            ctx.rel_area.push(area::relative(&u.netlist, &ctx.lib));
+        }
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        let units = ctx
+            .area
+            .iter()
+            .zip(&ctx.elaborated)
+            .zip(&ctx.rel_area)
+            .map(|((ar, u), rel)| {
+                Json::obj(vec![
+                    ("label", Json::str(u.plan.label())),
+                    ("cell_um2", Json::num(ar.cell_um2)),
+                    ("die_mm2", Json::num(ar.die_mm2)),
+                    ("rel_area", Json::num(*rel)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("stage", Json::str(self.name())),
+            ("units", Json::Arr(units)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// scale45
+
+/// 45nm comparison: published anchors where the paper quotes them, plus
+/// the first-order node-scaling model factors.
+pub struct Scale45;
+
+impl Scale45 {
+    /// The published 45nm anchor for a geometry, if the paper quotes
+    /// one (the 1024x16 column and the prototype).
+    fn anchor(ctx: &FlowContext) -> Option<(&'static str, ColumnPpa)> {
+        match ctx.target.geometry {
+            Geometry::Column(s) if s.p == 1024 && s.q == 16 => Some((
+                "45nm 1024x16 column (Table IV [2])",
+                scaling::COL_1024X16_45NM,
+            )),
+            Geometry::Prototype(_) => Some((
+                "45nm prototype (Table VI [2])",
+                scaling::PROTOTYPE_45NM,
+            )),
+            _ => None,
+        }
+    }
+}
+
+impl Stage for Scale45 {
+    fn name(&self) -> &'static str {
+        "scale45"
+    }
+
+    fn description(&self) -> &'static str {
+        "45nm comparison: published anchors and node-scaling model \
+         ratios (paper SIII.B)"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        // Ratio against the native 7nm composition: for a 45nm-node
+        // target, compose_total() projects the measurement up, and
+        // ratios of projected-vs-anchor would cancel the comparison.
+        let measured = ctx.compose_native()?;
+        let anchor = Scale45::anchor(ctx);
+        let ratios = anchor.map(|(_, a)| scaling::ratios(&a, &measured));
+        let m = NodeScaling::n45_to_7();
+        ctx.scale45 = Some(Scale45Report {
+            measured,
+            anchor,
+            ratios,
+            model_power_factor: m.power_factor(),
+            model_delay_factor: m.delay_factor(),
+            model_area_factor: m.area_factor(),
+        });
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        let mut fields = vec![("stage", Json::str(self.name()))];
+        if let Some(s) = &ctx.scale45 {
+            fields.push((
+                "measured",
+                Json::obj(vec![
+                    ("power_uw", Json::num(s.measured.power_uw)),
+                    ("time_ns", Json::num(s.measured.time_ns)),
+                    ("area_mm2", Json::num(s.measured.area_mm2)),
+                ]),
+            ));
+            match (&s.anchor, &s.ratios) {
+                (Some((name, a)), Some((rp, rt, ra))) => {
+                    fields.push(("anchor", Json::str(*name)));
+                    fields.push((
+                        "anchor_ppa",
+                        Json::obj(vec![
+                            ("power_uw", Json::num(a.power_uw)),
+                            ("time_ns", Json::num(a.time_ns)),
+                            ("area_mm2", Json::num(a.area_mm2)),
+                        ]),
+                    ));
+                    fields.push((
+                        "ratios",
+                        Json::obj(vec![
+                            ("power", Json::num(*rp)),
+                            ("time", Json::num(*rt)),
+                            ("area", Json::num(*ra)),
+                        ]),
+                    ));
+                }
+                _ => fields.push(("anchor", Json::Null)),
+            }
+            fields.push((
+                "model_factors",
+                Json::obj(vec![
+                    ("power", Json::num(s.model_power_factor)),
+                    ("delay", Json::num(s.model_delay_factor)),
+                    ("area", Json::num(s.model_area_factor)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+// ---------------------------------------------------------------------
+// report
+
+/// Compose per-unit artifacts into the final [`TargetReport`].
+pub struct Report;
+
+impl Stage for Report {
+    fn name(&self) -> &'static str {
+        "report"
+    }
+
+    fn description(&self) -> &'static str {
+        "compose per-unit artifacts into the final target PPA report"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        let total = ctx.compose_total()?;
+        let mut units = Vec::with_capacity(ctx.elaborated.len());
+        for (i, u) in ctx.elaborated.iter().enumerate() {
+            let t = ctx
+                .timing
+                .get(i)
+                .ok_or_else(|| missing("report", "sta"))?;
+            let pw = ctx
+                .power
+                .get(i)
+                .ok_or_else(|| missing("report", "power"))?;
+            let rel = ctx
+                .rel_power
+                .get(i)
+                .ok_or_else(|| missing("report", "power"))?;
+            let ar = ctx
+                .area
+                .get(i)
+                .ok_or_else(|| missing("report", "area"))?;
+            let rel_area = ctx
+                .rel_area
+                .get(i)
+                .copied()
+                .ok_or_else(|| missing("report", "area"))?;
+            units.push(UnitReport {
+                label: u.plan.label(),
+                spec: u.plan.spec,
+                replicas: u.plan.replicas,
+                ppa: ColumnPpa {
+                    power_uw: pw.total_uw(),
+                    time_ns: t.wave_ns,
+                    area_mm2: ar.die_mm2,
+                },
+                rel_area,
+                rel_energy_rate: rel.energy_rate,
+                rel_leak: rel.leak,
+                rel_time: t.min_clock_ps / ctx.tech.fo4_ps
+                    * crate::ppa::WAVE_CYCLES as f64,
+                cells: u.census.cells,
+                transistors: u.census.transistors,
+                clock_ps: t.min_clock_ps,
+            });
+        }
+        ctx.report =
+            Some(TargetReport { target: ctx.target, units, total });
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        match &ctx.report {
+            Some(r) => {
+                let mut m = match r.to_json() {
+                    Json::Obj(m) => m,
+                    _ => Default::default(),
+                };
+                m.insert("stage".to_string(), Json::str(self.name()));
+                Json::Obj(m)
+            }
+            None => Json::obj(vec![("stage", Json::str(self.name()))]),
+        }
+    }
+}

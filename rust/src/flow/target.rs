@@ -1,0 +1,235 @@
+//! First-class design-point descriptors for the flow API.
+//!
+//! A [`Target`] names *what* the flow measures: implementation flavour
+//! ([`Flavor`]) × technology node ([`TechNode`]) × geometry
+//! ([`Geometry`]: one column or the Fig. 19 prototype).  Targets expand
+//! into [`UnitPlan`]s — the representative columns the stages actually
+//! elaborate/simulate, each with its synaptic-scaling replica count
+//! (the paper's §III.C roll-up).
+
+use crate::error::{Error, Result};
+use crate::netlist::column::ColumnSpec;
+use crate::netlist::prototype::PrototypeSpec;
+use crate::netlist::Flavor;
+
+/// Technology node a target's PPA is reported in.
+///
+/// `N7` is the native calibrated model; `N45` projects the measured 7nm
+/// numbers back up through the first-order node-scaling model
+/// ([`crate::ppa::scaling::NodeScaling`]) for §III.B-style comparisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TechNode {
+    N7,
+    N45,
+}
+
+impl TechNode {
+    /// Human label ("7nm" / "45nm").
+    pub fn label(self) -> &'static str {
+        match self {
+            TechNode::N7 => "7nm",
+            TechNode::N45 => "45nm",
+        }
+    }
+
+    /// Parse "7nm" / "7" / "45nm" / "45".
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim() {
+            "7nm" | "7" => Ok(TechNode::N7),
+            "45nm" | "45" => Ok(TechNode::N45),
+            other => Err(Error::config(format!(
+                "unknown tech node `{other}` (supported: 7nm, 45nm)"
+            ))),
+        }
+    }
+}
+
+/// Geometry of the design under measurement.
+#[derive(Debug, Clone, Copy)]
+pub enum Geometry {
+    /// A single p×q TNN column (the Table I benchmark unit).
+    Column(ColumnSpec),
+    /// The 2-layer prototype: two representative columns, each
+    /// replicated by its layer's column count (Table II).
+    Prototype(PrototypeSpec),
+}
+
+impl Geometry {
+    /// Short label for reports ("64x8" / "prototype").
+    pub fn label(&self) -> String {
+        match self {
+            Geometry::Column(s) => format!("{}x{}", s.p, s.q),
+            Geometry::Prototype(_) => "prototype".to_string(),
+        }
+    }
+}
+
+/// One elaboratable unit of a target: a column geometry plus how many
+/// identical copies of it the target contains.
+#[derive(Debug, Clone, Copy)]
+pub struct UnitPlan {
+    pub spec: ColumnSpec,
+    pub replicas: u64,
+}
+
+impl UnitPlan {
+    /// "PxQ" geometry label.
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.spec.p, self.spec.q)
+    }
+}
+
+/// A full design point: flavour × node × geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct Target {
+    pub flavor: Flavor,
+    pub node: TechNode,
+    pub geometry: Geometry,
+}
+
+impl Target {
+    /// A single-column 7nm target.
+    pub fn column(flavor: Flavor, spec: ColumnSpec) -> Target {
+        Target { flavor, node: TechNode::N7, geometry: Geometry::Column(spec) }
+    }
+
+    /// The paper's Fig. 19 prototype at 7nm.
+    pub fn prototype(flavor: Flavor) -> Target {
+        Target {
+            flavor,
+            node: TechNode::N7,
+            geometry: Geometry::Prototype(PrototypeSpec::paper()),
+        }
+    }
+
+    /// Parse a `--target` descriptor: `FLAVOR[:NODE]`, e.g. `custom:7nm`,
+    /// `std:45nm`, or just `std` (node defaults to 7nm).
+    pub fn parse(desc: &str, geometry: Geometry) -> Result<Target> {
+        let (f, n) = match desc.split_once(':') {
+            Some((f, n)) => (f, Some(n)),
+            None => (desc, None),
+        };
+        let flavor = match f.trim() {
+            "std" | "standard" => Flavor::Std,
+            "custom" | "gdi" => Flavor::Custom,
+            other => {
+                return Err(Error::config(format!(
+                    "unknown flavor `{other}` (supported: std, custom)"
+                )))
+            }
+        };
+        let node = match n {
+            Some(n) => TechNode::parse(n)?,
+            None => TechNode::N7,
+        };
+        Ok(Target { flavor, node, geometry })
+    }
+
+    /// Short descriptor for logs ("custom:7nm 64x8").
+    pub fn describe(&self) -> String {
+        let flavor = match self.flavor {
+            Flavor::Std => "std",
+            Flavor::Custom => "custom",
+        };
+        format!("{flavor}:{} {}", self.node.label(), self.geometry.label())
+    }
+
+    /// The representative columns to elaborate, with replica counts.
+    pub fn units(&self) -> Vec<UnitPlan> {
+        match self.geometry {
+            Geometry::Column(spec) => vec![UnitPlan { spec, replicas: 1 }],
+            Geometry::Prototype(p) => vec![
+                UnitPlan { spec: p.l1.column, replicas: p.l1.cols as u64 },
+                UnitPlan { spec: p.l2.column, replicas: p.l2.cols as u64 },
+            ],
+        }
+    }
+}
+
+/// "64x8" → (64, 8), with structured errors (absorbed from the old
+/// `coordinator::measure::parse_geometry`, which exited the process).
+pub fn parse_geometry(label: &str) -> Result<(usize, usize)> {
+    let (p, q) = label.split_once('x').ok_or_else(|| {
+        Error::config(format!(
+            "bad geometry `{label}` (expected PxQ, e.g. 64x8)"
+        ))
+    })?;
+    let p: usize = p.trim().parse().map_err(|_| {
+        Error::config(format!("bad synapse count in geometry `{label}`"))
+    })?;
+    let q: usize = q.trim().parse().map_err(|_| {
+        Error::config(format!("bad neuron count in geometry `{label}`"))
+    })?;
+    if p == 0 || q == 0 {
+        return Err(Error::config(format!(
+            "geometry `{label}` must have non-zero dimensions"
+        )));
+    }
+    Ok((p, q))
+}
+
+/// The three Table-I benchmark geometries (moved from
+/// `coordinator::measure` so CLI/bench code needs only the flow API).
+pub fn table1_specs() -> [(&'static str, ColumnSpec); 3] {
+    [
+        ("64x8", ColumnSpec::benchmark(64, 8)),
+        ("128x10", ColumnSpec::benchmark(128, 10)),
+        ("1024x16", ColumnSpec::benchmark(1024, 16)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flavor_and_node() {
+        let g = Geometry::Column(ColumnSpec::benchmark(64, 8));
+        let t = Target::parse("custom:7nm", g).unwrap();
+        assert_eq!(t.flavor, Flavor::Custom);
+        assert_eq!(t.node, TechNode::N7);
+        let t = Target::parse("std", g).unwrap();
+        assert_eq!(t.flavor, Flavor::Std);
+        assert_eq!(t.node, TechNode::N7);
+        let t = Target::parse("std:45nm", g).unwrap();
+        assert_eq!(t.node, TechNode::N45);
+        assert_eq!(t.describe(), "std:45nm 64x8");
+    }
+
+    #[test]
+    fn rejects_bad_descriptors() {
+        let g = Geometry::Column(ColumnSpec::benchmark(8, 4));
+        assert!(Target::parse("cadence", g).is_err());
+        assert!(Target::parse("std:3nm", g).is_err());
+    }
+
+    #[test]
+    fn parse_geometry_labels() {
+        assert_eq!(parse_geometry("1024x16").unwrap(), (1024, 16));
+        assert_eq!(parse_geometry("8x4").unwrap(), (8, 4));
+        assert!(parse_geometry("64").is_err());
+        assert!(parse_geometry("ax8").is_err());
+        assert!(parse_geometry("64xb").is_err());
+        assert!(parse_geometry("0x8").is_err());
+    }
+
+    #[test]
+    fn column_target_has_one_unit() {
+        let t = Target::column(Flavor::Std, ColumnSpec::benchmark(64, 8));
+        let units = t.units();
+        assert_eq!(units.len(), 1);
+        assert_eq!(units[0].replicas, 1);
+        assert_eq!(units[0].label(), "64x8");
+    }
+
+    #[test]
+    fn prototype_target_expands_to_both_layers() {
+        let t = Target::prototype(Flavor::Custom);
+        let units = t.units();
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[0].label(), "32x12");
+        assert_eq!(units[0].replicas, 625);
+        assert_eq!(units[1].label(), "12x10");
+        assert_eq!(units[1].replicas, 625);
+    }
+}

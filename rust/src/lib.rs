@@ -24,6 +24,10 @@
 //!   tested against.
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); python never runs at runtime.
+//! * [`flow`] — the staged, inspectable design-flow pipeline
+//!   (`Elaborate → Sta → Simulate → Power → Area → Scale45 → Report`)
+//!   over first-class [`flow::Target`] descriptors, with per-stage JSON
+//!   dumps; the API every measurement path goes through.
 //! * [`coordinator`] — the training/eval pipeline (MNIST-like workload) and
 //!   the activity bridge that turns behavioral spike statistics into
 //!   prototype-scale power numbers.
@@ -39,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod flow;
 pub mod netlist;
 pub mod ppa;
 pub mod runtime;

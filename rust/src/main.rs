@@ -4,6 +4,7 @@
 //! §4 for the experiment index):
 //!
 //! ```text
+//! tnn7 flow --target F[:N] --col PxQ|--proto [...]   run the staged design flow
 //! tnn7 characterize [--lib FILE]      cell library table (+ .lib dump)
 //! tnn7 layout-cmp [MACRO]             Figs. 14-18 structural comparisons
 //! tnn7 complexity                     Fig. 19 gate/transistor census
@@ -13,14 +14,19 @@
 //! tnn7 simulate --col PxQ [...]       gate-sim one column, report PPA
 //! tnn7 train [--config FILE]          end-to-end HLO training + accuracy
 //! ```
+//!
+//! Every measurement path goes through [`tnn7::flow`]; `simulate` and
+//! the bench commands are thin presentations over the same pipeline
+//! that `flow --pipeline ... --dump-dir ...` exposes stage by stage.
 
 use std::path::Path;
 use std::process::ExitCode;
 
 use tnn7::cells::{calibrate, liberty, Library, TechParams};
 use tnn7::config::TnnConfig;
-use tnn7::coordinator::measure::{
-    measure_column, parse_geometry, prototype_ppa, table1_specs,
+use tnn7::flow::{
+    self, compare, parse_geometry, stages, table1_specs, Flow, FlowContext,
+    Geometry, Stage, Target,
 };
 use tnn7::coordinator::Pipeline;
 use tnn7::data::Dataset;
@@ -58,18 +64,27 @@ impl Args {
         }
     }
 
-    fn opt(&mut self, name: &str) -> Option<String> {
-        let i = self.rest.iter().position(|a| a == name)?;
+    /// `--key value` lookup.  A trailing `--key` without a value is a
+    /// structured error (it used to `exit(2)` mid-parse).
+    fn opt(&mut self, name: &str) -> anyhow::Result<Option<String>> {
+        let i = match self.rest.iter().position(|a| a == name) {
+            Some(i) => i,
+            None => return Ok(None),
+        };
         if i + 1 >= self.rest.len() {
-            eprintln!("{name} requires a value");
-            std::process::exit(2);
+            anyhow::bail!("{name} requires a value");
         }
         self.rest.remove(i);
-        Some(self.rest.remove(i))
+        Ok(Some(self.rest.remove(i)))
     }
 
     fn positional(&mut self) -> Option<String> {
         self.subcommand()
+    }
+
+    /// `--help`/`-h` anywhere in a subcommand's arguments.
+    fn help_requested(&mut self) -> bool {
+        self.flag("--help") || self.flag("-h")
     }
 
     fn finish(&self) -> anyhow::Result<()> {
@@ -82,7 +97,7 @@ impl Args {
 }
 
 fn load_config(args: &mut Args) -> anyhow::Result<TnnConfig> {
-    match args.opt("--config") {
+    match args.opt("--config")? {
         Some(path) => Ok(TnnConfig::load(Path::new(&path))?),
         None => Ok(TnnConfig::default()),
     }
@@ -102,6 +117,7 @@ fn run() -> anyhow::Result<()> {
     let mut args = Args::new();
     let sub = args.subcommand().unwrap_or_else(|| "help".into());
     match sub.as_str() {
+        "flow" => cmd_flow(&mut args),
         "characterize" => cmd_characterize(&mut args),
         "layout-cmp" => cmd_layout_cmp(&mut args),
         "complexity" => cmd_complexity(&mut args),
@@ -112,6 +128,7 @@ fn run() -> anyhow::Result<()> {
         "train" => cmd_train(&mut args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
+            println!("{}", pipeline_help());
             Ok(())
         }
         other => anyhow::bail!("unknown subcommand `{other}` (try help)"),
@@ -120,21 +137,147 @@ fn run() -> anyhow::Result<()> {
 
 const HELP: &str = "tnn7 — 7nm TNN co-design framework (paper reproduction)
 
-USAGE: tnn7 <SUBCOMMAND> [OPTIONS]
+USAGE: tnn7 <SUBCOMMAND> [OPTIONS]     (tnn7 <SUBCOMMAND> --help for details)
 
 SUBCOMMANDS:
+  flow --target F[:N] (--col PxQ | --proto) [--pipeline S,..] [--dump-dir D]
+                              run the staged design flow, dump per-stage JSON
   characterize [--lib FILE]   print the characterized cell library
-  layout-cmp [MACRO]          Figs. 14-18 custom-vs-std cell comparisons
+  layout-cmp [MACRO] [--json FILE]   Figs. 14-18 custom-vs-std comparisons
   complexity                  Fig. 19 prototype census (gates/transistors)
   calibrate                   fit the technology constants (DESIGN.md §5)
   bench-table1 [--with-45nm] [--waves N]   regenerate Table I
   bench-table2 [--waves N]                 regenerate Table II
   simulate --col PxQ [--flavor std|custom] [--waves N]
-  train [--config FILE] [--samples N] [--check]
+  train [--config FILE] [--samples N] [--check] [--metrics-json FILE]
 ";
 
+/// Generated from the stage registry, so help never drifts from the
+/// implemented pipeline.
+fn pipeline_help() -> String {
+    let mut s = String::from("FLOW STAGES (for --pipeline):\n");
+    for stage in stages::all() {
+        s.push_str(&format!(
+            "  {:<10} {}\n",
+            stage.name(),
+            stage.description()
+        ));
+    }
+    s.push_str(
+        "  aliases: sim = simulate, ppa = power,area,report\n",
+    );
+    s
+}
+
+fn help_flow() -> String {
+    format!(
+        "tnn7 flow — run the staged design flow on one target
+
+USAGE: tnn7 flow [OPTIONS]
+
+OPTIONS:
+  --target FLAVOR[:NODE]   std | custom, node 7nm (default) or 45nm
+  --col PxQ                single-column geometry (e.g. 32x12)
+  --proto                  the Fig. 19 2-layer prototype instead of --col
+  --pipeline S1,S2,..      stage list (default: full canonical pipeline)
+  --dump-dir DIR           write one numbered JSON artifact per stage
+  --waves N                simulated waves (default from config)
+  --config FILE            tnn7.toml configuration
+
+{}",
+        pipeline_help()
+    )
+}
+
+fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!("{}", help_flow());
+        return Ok(());
+    }
+    let target_desc =
+        args.opt("--target")?.unwrap_or_else(|| "std:7nm".into());
+    let proto = args.flag("--proto");
+    let col = args.opt("--col")?;
+    let pipeline = args.opt("--pipeline")?;
+    let dump_dir = args.opt("--dump-dir")?;
+    let mut cfg = load_config(args)?;
+    if let Some(w) = args.opt("--waves")? {
+        cfg.sim_waves = w.parse()?;
+    }
+    args.finish()?;
+
+    if proto && col.is_some() {
+        anyhow::bail!("--proto and --col are mutually exclusive");
+    }
+    let geometry = if proto {
+        Geometry::Prototype(PrototypeSpec::paper())
+    } else {
+        let col = col.ok_or_else(|| {
+            anyhow::anyhow!("--col PxQ or --proto required (see --help)")
+        })?;
+        let (p, q) = parse_geometry(&col)?;
+        Geometry::Column(ColumnSpec::benchmark(p, q))
+    };
+    let target = Target::parse(&target_desc, geometry)?;
+
+    let mut flow = match &pipeline {
+        Some(spec) => Flow::from_spec(spec)?,
+        None => Flow::standard(),
+    };
+    if let Some(dir) = &dump_dir {
+        flow = flow.dump_dir(dir);
+    }
+    let names = flow.stage_names();
+    println!(
+        "flow {} | stages: {}",
+        target.describe(),
+        names.join(" -> ")
+    );
+
+    let mut ctx = FlowContext::new(target, cfg);
+    flow.run(&mut ctx)?;
+
+    if let Some(r) = &ctx.report {
+        for u in &r.units {
+            println!(
+                "  unit {:>8} x{:<4} cells {:>8}  transistors {:>10}  \
+                 clock {:>7.1} ps",
+                u.label, u.replicas, u.cells, u.transistors, u.clock_ps
+            );
+        }
+        println!(
+            "  total: power {:.3} uW  time {:.2} ns  area {:.5} mm2  \
+             edp {:.3} nJ-ns",
+            r.total.power_uw,
+            r.total.time_ns,
+            r.total.area_mm2,
+            r.total.edp_nj_ns()
+        );
+    }
+    if let Some(s) = &ctx.scale45 {
+        if let (Some((name, _)), Some((rp, rt, ra))) =
+            (&s.anchor, &s.ratios)
+        {
+            println!(
+                "  vs {name}: power {rp:.0}x  time {rt:.1}x  area {ra:.0}x"
+            );
+        }
+    }
+    if let Some(dir) = &dump_dir {
+        println!("wrote {} stage artifacts to {dir}/", names.len());
+    }
+    Ok(())
+}
+
 fn cmd_characterize(args: &mut Args) -> anyhow::Result<()> {
-    let lib_out = args.opt("--lib");
+    if args.help_requested() {
+        println!(
+            "tnn7 characterize [--lib FILE] — print the characterized \
+             cell library; optionally emit a Liberty .lib file"
+        );
+        return Ok(());
+    }
+    let lib_out = args.opt("--lib")?;
     args.finish()?;
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
@@ -163,68 +306,99 @@ fn cmd_characterize(args: &mut Args) -> anyhow::Result<()> {
 }
 
 fn cmd_layout_cmp(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!(
+            "tnn7 layout-cmp [MACRO] [--json FILE] — Figs. 14-18 \
+             structural comparisons (all rows, or one function/cell by \
+             name); --json writes the rows as a flow-style artifact"
+        );
+        return Ok(());
+    }
+    let json_out = args.opt("--json")?;
     let which = args.positional();
     args.finish()?;
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
-    let rows: Vec<(&str, &str, &str)> = vec![
-        // (figure, function, custom macro cell)
-        ("Fig. 14/15", "less_equal", "less_equal"),
-        ("Fig. 16/17", "mux2to1", "mux2to1gdi"),
-        ("Fig. 18", "stabilize_func", "stabilize_func"),
-    ];
+    let rows =
+        compare::layout_comparisons(&lib, &tech, which.as_deref())?;
+    if rows.is_empty() {
+        anyhow::bail!(
+            "no comparison named `{}` (try less_equal, mux2to1, \
+             stabilize_func)",
+            which.unwrap_or_default()
+        );
+    }
+    if let Some(path) = &json_out {
+        std::fs::write(
+            path,
+            compare::to_json(&rows).to_string_pretty(),
+        )?;
+        println!("wrote {path}");
+    }
     println!(
         "{:<12} {:<16} {:>8} {:>8} {:>12} {:>12}",
         "figure", "function", "std T", "custom T", "std um2", "custom um2"
     );
-    for (fig, func, cell) in rows {
-        if let Some(w) = &which {
-            if w != func && w != cell {
-                continue;
-            }
-        }
-        let (std_t, _desc) = tnn7::cells::gdi::cmos_reference(func)
-            .ok_or_else(|| anyhow::anyhow!("no reference for {func}"))?;
-        let c = lib.cell(lib.id(cell)?);
-        let std_area = f64::from(std_t) * tech.area_per_unit_um2;
+    for r in rows {
         println!(
             "{:<12} {:<16} {:>8} {:>8} {:>12.4} {:>12.4}",
-            fig,
-            func,
-            std_t,
-            c.transistors,
-            std_area,
-            tech.area_um2(c)
+            r.figure,
+            r.function,
+            r.std_ref_transistors,
+            r.macro_transistors,
+            r.std_ref_area_um2,
+            r.macro_area_um2
         );
     }
     Ok(())
 }
 
 fn cmd_complexity(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!(
+            "tnn7 complexity — Fig. 19 prototype census (cells and \
+             transistors, both flavours) via the flow elaborate stage"
+        );
+        return Ok(());
+    }
     args.finish()?;
-    let lib = Library::with_macros();
     let spec = PrototypeSpec::paper();
     println!(
         "Fig. 19 prototype: {} neurons, {} synapses (paper: 13,750 / 315,000)",
         spec.neurons(),
         spec.synapses()
     );
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
     for flavor in [Flavor::Std, Flavor::Custom] {
-        let m = tnn7::netlist::prototype::PrototypeModel::build(
-            &lib, flavor, spec,
-        )?;
-        let c = m.census(&lib);
+        // elaborate-only pipeline: no simulation, so no dataset needed.
+        let mut ctx = FlowContext::with_parts(
+            Target::prototype(flavor),
+            TnnConfig::default(),
+            lib.clone(),
+            tech,
+            Dataset::generate(0, 0),
+        );
+        Flow::from_spec("elaborate")?.run(&mut ctx)?;
+        let (cells, transistors) = ctx.total_census()?;
         println!(
             "{:<22} {:>12} cells {:>13} transistors (paper: 32M gates / 128M T)",
             flavor.label(),
-            c.cells,
-            c.transistors
+            cells,
+            transistors
         );
     }
     Ok(())
 }
 
 fn cmd_calibrate(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!(
+            "tnn7 calibrate [--config FILE] — fit the four technology \
+             constants against the paper's Table I std-cell rows"
+        );
+        return Ok(());
+    }
     let cfg = load_config(args)?;
     args.finish()?;
     let lib = Library::with_macros();
@@ -267,9 +441,16 @@ fn paper_table1(flavor: Flavor, label: &str) -> Option<ColumnPpa> {
 }
 
 fn cmd_table1(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!(
+            "tnn7 bench-table1 [--with-45nm] [--waves N] [--config FILE] \
+             — regenerate Table I through the flow API"
+        );
+        return Ok(());
+    }
     let with_45 = args.flag("--with-45nm");
     let mut cfg = load_config(args)?;
-    if let Some(w) = args.opt("--waves") {
+    if let Some(w) = args.opt("--waves")? {
         cfg.sim_waves = w.parse()?;
     }
     args.finish()?;
@@ -280,14 +461,20 @@ fn cmd_table1(args: &mut Args) -> anyhow::Result<()> {
     let mut pairs = Vec::new();
     for flavor in [Flavor::Std, Flavor::Custom] {
         for (label, spec) in table1_specs() {
-            let m = measure_column(&lib, &tech, flavor, &spec, &cfg, &data)?;
+            let r = flow::measure_with(
+                Target::column(flavor, spec),
+                &cfg,
+                &lib,
+                &tech,
+                &data,
+            )?;
             rows.push(PpaRow {
                 flavor: flavor.label(),
                 label: label.to_string(),
-                ppa: m.ppa,
+                ppa: r.total,
                 paper: paper_table1(flavor, label),
             });
-            pairs.push((flavor, label, m.ppa));
+            pairs.push((flavor, label, r.total));
             eprintln!("  measured {flavor:?} {label}");
         }
     }
@@ -324,33 +511,46 @@ fn cmd_table1(args: &mut Args) -> anyhow::Result<()> {
 }
 
 fn cmd_table2(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!(
+            "tnn7 bench-table2 [--waves N] [--config FILE] — regenerate \
+             Table II (prototype PPA + EDP) through the flow API"
+        );
+        return Ok(());
+    }
     let mut cfg = load_config(args)?;
-    if let Some(w) = args.opt("--waves") {
+    if let Some(w) = args.opt("--waves")? {
         cfg.sim_waves = w.parse()?;
     }
     args.finish()?;
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
-    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
     let paper = [
         (Flavor::Std, ColumnPpa { power_uw: 2540.0, time_ns: 24.14, area_mm2: 2.36 }),
         (Flavor::Custom, ColumnPpa { power_uw: 1690.0, time_ns: 19.15, area_mm2: 1.56 }),
     ];
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
     let mut rows = Vec::new();
     let mut measured = Vec::new();
     for (flavor, paper_ppa) in paper {
-        let (total, m1, m2) = prototype_ppa(&lib, &tech, flavor, &cfg, &data)?;
+        let r = flow::measure_with(
+            Target::prototype(flavor),
+            &cfg,
+            &lib,
+            &tech,
+            &data,
+        )?;
         eprintln!(
             "  {flavor:?}: L1 col {:.2} uW, L2 col {:.2} uW",
-            m1.ppa.power_uw, m2.ppa.power_uw
+            r.units[0].ppa.power_uw, r.units[1].ppa.power_uw
         );
         rows.push(PpaRow {
             flavor: flavor.label(),
             label: "prototype".into(),
-            ppa: total,
+            ppa: r.total,
             paper: Some(paper_ppa),
         });
-        measured.push(total);
+        measured.push(r.total);
     }
     println!("\nTable II — prototype PPA + EDP (measured vs paper)\n");
     println!("{}", render_table2(&rows));
@@ -365,41 +565,54 @@ fn cmd_table2(args: &mut Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!(
+            "tnn7 simulate --col PxQ [--flavor std|custom] [--waves N] \
+             [--config FILE] — measure one column through the flow"
+        );
+        return Ok(());
+    }
     let col = args
-        .opt("--col")
+        .opt("--col")?
         .ok_or_else(|| anyhow::anyhow!("--col PxQ required"))?;
-    let flavor = match args.opt("--flavor").as_deref() {
+    let flavor = match args.opt("--flavor")?.as_deref() {
         Some("custom") => Flavor::Custom,
         Some("std") | None => Flavor::Std,
         Some(o) => anyhow::bail!("unknown flavor {o}"),
     };
     let mut cfg = load_config(args)?;
-    if let Some(w) = args.opt("--waves") {
+    if let Some(w) = args.opt("--waves")? {
         cfg.sim_waves = w.parse()?;
     }
     args.finish()?;
-    let (p, q) = parse_geometry(&col);
+    let (p, q) = parse_geometry(&col)?;
     let spec = ColumnSpec::benchmark(p, q);
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
-    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
-    let m = measure_column(&lib, &tech, flavor, &spec, &cfg, &data)?;
+    let r = flow::measure(Target::column(flavor, spec), &cfg)?;
+    let u = &r.units[0];
     println!("column {col} ({flavor:?}, theta={})", spec.theta);
-    println!("  cells        : {}", m.cells);
-    println!("  transistors  : {}", m.transistors);
-    println!("  min clock    : {:.1} ps", m.clock_ps);
-    println!("  power        : {:.3} uW", m.ppa.power_uw);
-    println!("  wave time    : {:.2} ns", m.ppa.time_ns);
-    println!("  area         : {:.5} mm2", m.ppa.area_mm2);
+    println!("  cells        : {}", u.cells);
+    println!("  transistors  : {}", u.transistors);
+    println!("  min clock    : {:.1} ps", u.clock_ps);
+    println!("  power        : {:.3} uW", u.ppa.power_uw);
+    println!("  wave time    : {:.2} ns", u.ppa.time_ns);
+    println!("  area         : {:.5} mm2", u.ppa.area_mm2);
     Ok(())
 }
 
 fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!(
+            "tnn7 train [--config FILE] [--samples N] [--check] \
+             [--metrics-json FILE] — end-to-end HLO training + accuracy"
+        );
+        return Ok(());
+    }
     let mut cfg = load_config(args)?;
-    if let Some(n) = args.opt("--samples") {
+    if let Some(n) = args.opt("--samples")? {
         cfg.train_samples = n.parse()?;
     }
     let check = args.flag("--check");
+    let metrics_json = args.opt("--metrics-json")?;
     args.finish()?;
     let train = Dataset::generate(cfg.train_samples, cfg.data_seed);
     let test = Dataset::generate(cfg.test_samples, cfg.data_seed + 1);
@@ -428,5 +641,9 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
         acc * 100.0,
         (test.len() / pipe.batch()) * pipe.batch()
     );
+    if let Some(path) = metrics_json {
+        std::fs::write(&path, metrics.to_json().to_string_pretty())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }

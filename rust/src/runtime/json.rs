@@ -1,9 +1,11 @@
-//! Minimal JSON parser for the artifact manifest (no serde offline).
+//! Minimal JSON reader/writer for build artifacts and flow dumps (no
+//! serde offline).
 //!
 //! Supports the full JSON value grammar we emit from `aot.py`: objects,
 //! arrays, strings (with escapes), numbers, booleans, null.  Not a
-//! general-purpose library — just a strict, well-tested reader for
-//! trusted build artifacts.
+//! general-purpose library — a strict, well-tested reader for trusted
+//! build artifacts plus the pretty-printer [`crate::flow`] uses for its
+//! per-stage dump files.
 
 use std::collections::BTreeMap;
 
@@ -84,6 +86,125 @@ impl Json {
         self.get(key)
             .ok_or_else(|| Error::runtime(format!("missing field `{key}`")))
     }
+
+    // ---- construction helpers (emitter side) -------------------------
+
+    /// String value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Floating-point number value.
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    /// Integer number value (stored as f64, exact below 2^53).
+    pub fn int(n: u64) -> Json {
+        Json::Num(n as f64)
+    }
+
+    /// Object from `(key, value)` pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )
+    }
+
+    // ---- writer ------------------------------------------------------
+
+    /// Pretty-print with two-space indentation and a trailing newline —
+    /// the format of the flow `--dump-dir` artifacts.
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => out.push_str(&fmt_num(*n)),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                if a.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn push_indent(out: &mut String, indent: usize) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+/// Format a number so `Json::parse` round-trips it; non-finite values
+/// (which JSON cannot represent) degrade to `null`.
+fn fmt_num(n: f64) -> String {
+    if !n.is_finite() {
+        return "null".into();
+    }
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -304,5 +425,31 @@ mod tests {
     fn unicode_escapes() {
         let j = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(j.as_str().unwrap(), "Aé");
+    }
+
+    #[test]
+    fn writer_round_trips() {
+        let doc = Json::obj(vec![
+            ("name", Json::str("64x8")),
+            ("power_uw", Json::num(3.894_5)),
+            ("cells", Json::int(1234)),
+            ("flags", Json::Arr(vec![Json::Bool(true), Json::Null])),
+            ("nested", Json::obj(vec![("k", Json::str("a\"b\nc"))])),
+            ("empty_arr", Json::Arr(vec![])),
+            ("empty_obj", Json::Obj(Default::default())),
+        ]);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+        // integers print without a fractional part
+        assert!(text.contains("\"cells\": 1234"));
+    }
+
+    #[test]
+    fn writer_degrades_non_finite_to_null() {
+        let text = Json::num(f64::NAN).to_string_pretty();
+        assert_eq!(text.trim(), "null");
+        let text = Json::num(f64::INFINITY).to_string_pretty();
+        assert_eq!(text.trim(), "null");
     }
 }

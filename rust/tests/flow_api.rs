@@ -1,0 +1,161 @@
+//! Flow API integration tests: target parsing, pipeline selection, and
+//! the golden-snapshot shape of the per-stage JSON dumps for a tiny
+//! 4x3 column.
+
+use tnn7::config::TnnConfig;
+use tnn7::flow::{parse_geometry, Flow, FlowContext, Target, TechNode};
+use tnn7::netlist::column::ColumnSpec;
+use tnn7::netlist::Flavor;
+use tnn7::runtime::json::Json;
+
+fn tiny_ctx() -> FlowContext {
+    let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
+    let spec = ColumnSpec { p: 4, q: 3, theta: 7 };
+    FlowContext::new(Target::column(Flavor::Custom, spec), cfg)
+}
+
+#[test]
+fn target_descriptor_round_trip() {
+    let (p, q) = parse_geometry("32x12").unwrap();
+    let t = Target::parse(
+        "custom:7nm",
+        tnn7::flow::Geometry::Column(ColumnSpec::benchmark(p, q)),
+    )
+    .unwrap();
+    assert_eq!(t.flavor, Flavor::Custom);
+    assert_eq!(t.node, TechNode::N7);
+    assert_eq!(t.describe(), "custom:7nm 32x12");
+}
+
+#[test]
+fn pipeline_stage_ordering_is_enforced() {
+    // The acceptance-criteria pipeline spells out to six stages.
+    let flow = Flow::from_spec("elaborate,sta,sim,ppa").unwrap();
+    assert_eq!(
+        flow.stage_names(),
+        vec!["elaborate", "sta", "simulate", "power", "area", "report"]
+    );
+    // Misordered and unknown specs fail before running anything.
+    assert!(Flow::from_spec("ppa,elaborate").is_err());
+    assert!(Flow::from_spec("elaborate,route").is_err());
+}
+
+#[test]
+fn golden_stage_dump_snapshot_tiny_column() {
+    let dir = std::env::temp_dir()
+        .join(format!("tnn7_flow_dumps_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut ctx = tiny_ctx();
+    let flow = Flow::from_spec("elaborate,sta,sim,ppa")
+        .unwrap()
+        .dump_dir(&dir);
+    flow.run(&mut ctx).unwrap();
+
+    // One numbered artifact per stage, in pipeline order.
+    let expected = [
+        "00_elaborate.json",
+        "01_sta.json",
+        "02_simulate.json",
+        "03_power.json",
+        "04_area.json",
+        "05_report.json",
+    ];
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    names.sort();
+    assert_eq!(names, expected);
+
+    let read = |name: &str| -> Json {
+        let text = std::fs::read_to_string(dir.join(name)).unwrap();
+        Json::parse(&text).unwrap()
+    };
+
+    // 00_elaborate: target + unit geometry + census.
+    let j = read("00_elaborate.json");
+    assert_eq!(j.field("stage").unwrap().as_str().unwrap(), "elaborate");
+    assert_eq!(
+        j.field("target").unwrap().as_str().unwrap(),
+        "custom:7nm 4x3"
+    );
+    let units = j.field("units").unwrap().as_arr().unwrap();
+    assert_eq!(units.len(), 1);
+    let u = &units[0];
+    assert_eq!(u.field("p").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(u.field("q").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(u.field("replicas").unwrap().as_usize().unwrap(), 1);
+    assert!(u.field("cells").unwrap().as_usize().unwrap() > 0);
+    assert!(u.field("transistors").unwrap().as_usize().unwrap() > 100);
+
+    // 01_sta: positive clock and wave time.
+    let j = read("01_sta.json");
+    let u = &j.field("units").unwrap().as_arr().unwrap()[0];
+    assert!(u.field("min_clock_ps").unwrap().as_f64().unwrap() > 0.0);
+    assert!(u.field("wave_ns").unwrap().as_f64().unwrap() > 0.0);
+
+    // 02_simulate: two waves of activity were recorded.
+    let j = read("02_simulate.json");
+    assert_eq!(j.field("waves").unwrap().as_usize().unwrap(), 2);
+    let u = &j.field("units").unwrap().as_arr().unwrap()[0];
+    assert!(u.field("cycles").unwrap().as_usize().unwrap() > 0);
+    assert!(u.field("toggles").unwrap().as_usize().unwrap() > 0);
+
+    // 03_power: the split adds up to the total.
+    let j = read("03_power.json");
+    let u = &j.field("units").unwrap().as_arr().unwrap()[0];
+    let total = u.field("total_uw").unwrap().as_f64().unwrap();
+    let parts = u.field("dynamic_uw").unwrap().as_f64().unwrap()
+        + u.field("clock_uw").unwrap().as_f64().unwrap()
+        + u.field("leakage_uw").unwrap().as_f64().unwrap();
+    assert!(total > 0.0);
+    assert!((total - parts).abs() < 1e-9 * total.max(1.0));
+
+    // 04_area: die area is positive and larger than zero cell area.
+    let j = read("04_area.json");
+    let u = &j.field("units").unwrap().as_arr().unwrap()[0];
+    assert!(u.field("cell_um2").unwrap().as_f64().unwrap() > 0.0);
+    assert!(u.field("die_mm2").unwrap().as_f64().unwrap() > 0.0);
+
+    // 05_report: composed totals present.
+    let j = read("05_report.json");
+    assert_eq!(j.field("stage").unwrap().as_str().unwrap(), "report");
+    let total = j.field("total").unwrap();
+    assert!(total.field("power_uw").unwrap().as_f64().unwrap() > 0.0);
+    assert!(total.field("time_ns").unwrap().as_f64().unwrap() > 0.0);
+    assert!(total.field("area_mm2").unwrap().as_f64().unwrap() > 0.0);
+    assert!(total.field("edp_nj_ns").unwrap().as_f64().unwrap() > 0.0);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flow_report_matches_measure_wrapper() {
+    // The coordinator wrapper is a thin shim over the same pipeline, so
+    // identical inputs must give identical numbers.
+    use tnn7::cells::{Library, TechParams};
+    use tnn7::coordinator::measure::measure_column;
+    use tnn7::data::Dataset;
+
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
+    let data = Dataset::generate(4, cfg.data_seed);
+    let spec = ColumnSpec { p: 8, q: 4, theta: 10 };
+
+    let m = measure_column(&lib, &tech, Flavor::Std, &spec, &cfg, &data)
+        .unwrap();
+    let r = tnn7::flow::measure_with(
+        Target::column(Flavor::Std, spec),
+        &cfg,
+        &lib,
+        &tech,
+        &data,
+    )
+    .unwrap();
+    assert_eq!(m.ppa.power_uw, r.total.power_uw);
+    assert_eq!(m.ppa.time_ns, r.total.time_ns);
+    assert_eq!(m.ppa.area_mm2, r.total.area_mm2);
+    assert_eq!(m.transistors, r.units[0].transistors);
+}

@@ -65,8 +65,7 @@ fn table1_direction_holds_for_all_columns() {
     // metrics on the benchmark geometries.
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
-    let mut cfg = TnnConfig::default();
-    cfg.sim_waves = 2;
+    let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
     let data = Dataset::generate(4, 1);
     for (label, spec) in table1_specs().into_iter().take(2) {
         let s = measure_column(&lib, &tech, Flavor::Std, &spec, &cfg, &data)
