@@ -62,7 +62,6 @@ fn main() -> anyhow::Result<()> {
         cfg.theta2
     );
 
-    let sim_waves = cfg.sim_waves;
     let mut pipe = Pipeline::new(cfg.clone())?;
 
     // Live HLO-vs-golden check on the first batch.
@@ -94,7 +93,16 @@ fn main() -> anyhow::Result<()> {
         let lib = Library::with_macros();
         let tech = TechParams::calibrated();
         let mut mcfg = cfg.clone();
-        mcfg.sim_waves = sim_waves;
+        // One packed pass over the full digit set: every training image
+        // becomes a stimulus wave, 64 lanes per simulator tick
+        // (DESIGN.md §7), so Table-II activity is measured under the
+        // whole corpus instead of the default 8-wave sample.
+        mcfg.sim_waves = train.len();
+        mcfg.sim_lanes = 64;
+        println!(
+            "simulating {} waves through the 64-lane packed engine ...",
+            mcfg.sim_waves
+        );
         let (std_ppa, _, _) =
             prototype_ppa(&lib, &tech, Flavor::Std, &mcfg, &train)?;
         let (cus_ppa, _, _) =

@@ -1,21 +1,70 @@
-//! Bench: end-to-end HLO pipeline throughput (the §Perf L2 hot path).
+//! Bench: end-to-end pipeline throughput.
 //!
-//! Times one batch of each AOT program on the PJRT CPU client: layer
-//! forward, fused layer train step, and the encode stage, reporting
-//! images/second plus the coordinator's JSON metrics artifact (the
-//! same shape `tnn7 train --metrics-json` writes).  Requires
-//! `make artifacts`.
+//! Two sections:
+//!
+//! 1. **Measurement flow, scalar vs packed** — times the full
+//!    `elaborate → sta → simulate → power → area → report` pipeline on
+//!    one column with `sim_lanes = 1` (scalar engine) and
+//!    `sim_lanes = 64` (word-packed engine), reporting the end-to-end
+//!    speedup the packed simulate stage buys.  Runs with no artifacts.
+//! 2. **HLO pipeline** — one batch of each AOT program on the PJRT CPU
+//!    client: layer forward, fused layer train step, and the encode
+//!    stage, reporting images/second plus the coordinator's JSON
+//!    metrics artifact (the same shape `tnn7 train --metrics-json`
+//!    writes).  Requires `make artifacts`.
 //!
 //! Run: cargo bench --bench pipeline_throughput
 
 #[path = "common/mod.rs"]
 mod common;
 
+use tnn7::cells::{Library, TechParams};
 use tnn7::config::TnnConfig;
 use tnn7::coordinator::Pipeline;
 use tnn7::data::Dataset;
+use tnn7::flow::{self, Target};
+use tnn7::netlist::column::ColumnSpec;
+use tnn7::netlist::Flavor;
+
+fn bench_measure_flow() -> anyhow::Result<()> {
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let data = Dataset::generate(8, 3);
+    let spec = ColumnSpec::benchmark(32, 12);
+    let mut mean = [0.0f64; 2];
+    for (i, lanes) in [1usize, 64].into_iter().enumerate() {
+        let cfg = TnnConfig {
+            sim_waves: 16,
+            sim_lanes: lanes,
+            ..TnnConfig::default()
+        };
+        let st = common::bench(
+            &format!("flow/measure/custom/32x12/lanes{lanes}"),
+            3,
+            || {
+                flow::measure_with(
+                    Target::column(Flavor::Custom, spec),
+                    &cfg,
+                    &lib,
+                    &tech,
+                    &data,
+                )
+                .expect("measure");
+            },
+        );
+        mean[i] = st.mean_s;
+    }
+    println!(
+        "      16-wave measurement pipeline: packed64 simulate is \
+         {:.1}x faster end-to-end",
+        mean[0] / mean[1]
+    );
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
+    bench_measure_flow()?;
+
     let cfg = TnnConfig::default();
     let data = Dataset::generate(16, cfg.data_seed);
     let mut pipe = match Pipeline::new(cfg) {

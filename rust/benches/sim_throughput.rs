@@ -1,66 +1,126 @@
-//! Bench: gate-level simulator throughput (the §Perf L3 hot path).
+//! Bench: gate-level simulator throughput, scalar vs word-packed.
 //!
-//! Reports wave latency and gate-evaluations/second for the three
-//! Table-I columns — the quantity the whole Table I/II measurement
-//! pipeline is bounded by.  Netlists come from the flow `elaborate`
-//! stage; the wave loop is then driven by hand because this bench
-//! times a single `run_wave` rather than a whole pipeline.
+//! The levelized simulator is the hot path of every Table I/II
+//! reproduction; this bench measures *stimulus waves per second*
+//! through both engines on the same elaborated netlists:
 //!
-//! Run: cargo bench --bench sim_throughput
+//! * scalar reference engine — one wave at a time (`run_wave`),
+//! * packed engine — 64 waves per pass (`run_wave_lanes`),
+//!
+//! for the two prototype layer columns and the three Table-I columns,
+//! in both flavours, and reports the packed:scalar speedup plus
+//! gate-evals/second.  The acceptance bar (ISSUE 2) is ≥8× waves/sec
+//! on the prototype column; the per-lane bit-equivalence of the two
+//! engines is proven by `tests/proptests.rs`, not here.
+//!
+//! Run:   cargo bench --bench sim_throughput
+//! Smoke: cargo bench --bench sim_throughput -- --smoke
+//!        (1 iteration, smallest column only — the CI regression guard)
 
 #[path = "common/mod.rs"]
 mod common;
 
-use tnn7::cells::{Library, TechParams};
+use tnn7::cells::Library;
 use tnn7::config::TnnConfig;
 use tnn7::coordinator::activity_bridge::stimulus;
 use tnn7::data::Dataset;
-use tnn7::flow::{table1_specs, Flow, FlowContext, Target};
+use tnn7::flow::table1_specs;
+use tnn7::netlist::column::{build_column, ColumnSpec};
+use tnn7::netlist::prototype::PrototypeSpec;
 use tnn7::netlist::Flavor;
-use tnn7::sim::testbench::{ColumnTestbench, WAVE_LEN};
+use tnn7::sim::packed::MAX_LANES;
+use tnn7::sim::testbench::{ColumnTestbench, PackedColumnTestbench, WAVE_LEN};
 use tnn7::tnn::stdp::RandPair;
 use tnn7::tnn::Lfsr16;
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let cfg = TnnConfig::default();
     let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
     let data = Dataset::generate(8, 3);
     let params = cfg.stdp_params();
 
+    // Design points, smallest first: prototype layer columns (the
+    // Table-II workload), then the Table-I benchmark columns.
+    let proto = PrototypeSpec::paper();
+    let mut points: Vec<(String, ColumnSpec)> = vec![
+        ("proto-l2".into(), proto.l2.column),
+        ("proto-l1".into(), proto.l1.column),
+    ];
     for (label, spec) in table1_specs() {
-        for flavor in [Flavor::Std, Flavor::Custom] {
-            let mut ctx = FlowContext::with_parts(
-                Target::column(flavor, spec),
-                cfg.clone(),
-                lib.clone(),
-                tech,
-                data.clone(),
-            );
-            Flow::from_spec("elaborate")?.run(&mut ctx)?;
-            let unit = &ctx.elaborated[0];
+        points.push((label.to_string(), spec));
+    }
+    if smoke {
+        points.truncate(1);
+    }
+
+    for (label, spec) in &points {
+        let flavors: &[Flavor] = if smoke {
+            &[Flavor::Custom]
+        } else {
+            &[Flavor::Std, Flavor::Custom]
+        };
+        for &flavor in flavors {
             let (p, q) = (spec.p, spec.q);
-            let n_insts = unit.netlist.insts.len();
-            let stim = stimulus(&data, p, 4, cfg.encode_threshold as f32);
-            let mut tb =
-                ColumnTestbench::new(&unit.netlist, &unit.ports, &ctx.lib)?;
+            let (nl, ports) = build_column(&lib, flavor, spec)?;
+            let n_insts = nl.insts.len();
+            let stim =
+                stimulus(&data, p, MAX_LANES, cfg.encode_threshold as f32);
             let mut lfsr = Lfsr16::new(1);
-            let rand: Vec<RandPair> =
-                (0..p * q).map(|_| lfsr.draw_pair()).collect();
+            let rands: Vec<Vec<RandPair>> = (0..MAX_LANES)
+                .map(|_| (0..p * q).map(|_| lfsr.draw_pair()).collect())
+                .collect();
+
+            // Scalar: one wave per iteration.
+            let iters = if smoke {
+                1
+            } else if p >= 1024 {
+                4
+            } else {
+                16
+            };
+            let mut tb = ColumnTestbench::new(&nl, &ports, &lib)?;
             let mut widx = 0usize;
-            let stats = common::bench(
-                &format!("sim/{flavor:?}/{label}"),
-                if p >= 1024 { 4 } else { 16 },
+            let scalar = common::bench(
+                &format!("sim/scalar/{flavor:?}/{label}"),
+                iters,
                 || {
-                    tb.run_wave(&stim[widx % stim.len()], &rand, &params);
+                    let w = widx % stim.len();
+                    tb.run_wave(&stim[w], &rands[w], &params);
                     widx += 1;
                 },
             );
-            let evals_per_s =
-                (n_insts * WAVE_LEN) as f64 / stats.mean_s;
+            let scalar_wps = 1.0 / scalar.mean_s;
+
+            // Packed: 64 waves per iteration (one full-lane pass).
+            let iters = if smoke {
+                1
+            } else if p >= 1024 {
+                2
+            } else {
+                8
+            };
+            let mut ptb =
+                PackedColumnTestbench::new(&nl, &ports, &lib, MAX_LANES)?;
+            let packed = common::bench(
+                &format!("sim/packed64/{flavor:?}/{label}"),
+                iters,
+                || {
+                    ptb.run_wave_lanes(&stim, &rands, &params);
+                },
+            );
+            let packed_wps = MAX_LANES as f64 / packed.mean_s;
+
             println!(
-                "      {n_insts} instances x {WAVE_LEN} cycles/wave -> {:.1} M gate-evals/s",
-                evals_per_s / 1e6
+                "      {n_insts} instances x {WAVE_LEN} cycles/wave | \
+                 scalar {:.1} waves/s ({:.1} M gate-evals/s) | \
+                 packed64 {:.1} waves/s ({:.1} M gate-evals/s) | \
+                 speedup {:.1}x",
+                scalar_wps,
+                (n_insts * WAVE_LEN) as f64 * scalar_wps / 1e6,
+                packed_wps,
+                (n_insts * WAVE_LEN) as f64 * packed_wps / 1e6,
+                packed_wps / scalar_wps
             );
         }
     }

@@ -11,8 +11,8 @@
 //! * power: `P_paper ≈ k_e · E_rate_rel + k_l · L_rel` (2 unknowns, 3 rows)
 //!
 //! The custom-macro rows, Table II, EDP and all 45nm ratios are then
-//! *predictions* — `tnn7 calibrate` prints the fit plus residuals, and
-//! EXPERIMENTS.md records them.
+//! *predictions* — `tnn7 calibrate` prints the fit plus residuals
+//! (DESIGN.md §5 describes this honest anchors-vs-predictions split).
 
 use super::characterize::TechParams;
 
@@ -131,8 +131,8 @@ pub fn fit(observations: &[Observation]) -> Fit {
         // fix the dynamic share of total power at the largest anchor to
         // DYN_SHARE and derive both constants.  0.35 minimizes the rms
         // residual over the three anchors while keeping a real
-        // activity-dependent term (EXPERIMENTS.md discusses the
-        // collinearity of the anchors).
+        // activity-dependent term (DESIGN.md §5 defends keeping the
+        // dynamic term despite the collinearity of the anchors).
         const DYN_SHARE: f64 = 0.35;
         let i_max = pows
             .iter()

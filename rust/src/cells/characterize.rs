@@ -49,8 +49,8 @@ impl TechParams {
     }
 
     /// Constants calibrated against the paper's Table I standard-cell rows
-    /// (the output of `tnn7 calibrate`; see EXPERIMENTS.md §Calibration
-    /// for fit residuals).
+    /// (the output of `tnn7 calibrate`, which also prints the fit
+    /// residuals; DESIGN.md §5 describes the fitting split).
     pub fn calibrated() -> Self {
         TechParams {
             area_per_unit_um2: 7.8366e-3,

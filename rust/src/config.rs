@@ -138,6 +138,9 @@ pub struct TnnConfig {
     pub mu_search: f64,
     /// Gate-level simulation waves per Table-I measurement.
     pub sim_waves: usize,
+    /// Stimulus lanes per simulator tick (1 = scalar reference engine,
+    /// 2..=64 = word-packed engine; see DESIGN.md §7).
+    pub sim_lanes: usize,
 }
 
 impl Default for TnnConfig {
@@ -156,6 +159,7 @@ impl Default for TnnConfig {
             mu_backoff: 0.5,
             mu_search: 0.05,
             sim_waves: 8,
+            sim_lanes: 1,
         }
     }
 }
@@ -188,7 +192,7 @@ impl TnnConfig {
                     "mu_search",
                 ],
             ),
-            ("sim", &["sim_waves"]),
+            ("sim", &["sim_waves", "sim_lanes"]),
         ])?;
         let mut c = TnnConfig::default();
         let geti = |v: &Value| -> Result<i64> {
@@ -246,6 +250,15 @@ impl TnnConfig {
         if let Some(v) = t.get("sim", "sim_waves") {
             c.sim_waves = geti(v)? as usize;
         }
+        if let Some(v) = t.get("sim", "sim_lanes") {
+            let lanes = geti(v)?;
+            if !(1..=64).contains(&lanes) {
+                return Err(Error::config(format!(
+                    "sim_lanes must be in 1..=64, got {lanes}"
+                )));
+            }
+            c.sim_lanes = lanes as usize;
+        }
         Ok(c)
     }
 
@@ -289,6 +302,7 @@ mu_capture = 0.75
 
 [sim]
 sim_waves = 3
+sim_lanes = 16
 "#;
         let c = TnnConfig::from_toml(text).unwrap();
         assert_eq!(c.artifacts_dir, "my_artifacts");
@@ -298,8 +312,17 @@ sim_waves = 3
         assert_eq!(c.train_samples, 100);
         assert!((c.mu_capture - 0.75).abs() < 1e-12);
         assert_eq!(c.sim_waves, 3);
+        assert_eq!(c.sim_lanes, 16);
         // untouched defaults survive
         assert_eq!(c.test_samples, TnnConfig::default().test_samples);
+    }
+
+    #[test]
+    fn rejects_out_of_range_lanes() {
+        assert!(TnnConfig::from_toml("[sim]\nsim_lanes = 0").is_err());
+        assert!(TnnConfig::from_toml("[sim]\nsim_lanes = 65").is_err());
+        let c = TnnConfig::from_toml("[sim]\nsim_lanes = 64").unwrap();
+        assert_eq!(c.sim_lanes, 64);
     }
 
     #[test]

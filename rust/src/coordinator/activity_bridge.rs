@@ -7,6 +7,12 @@
 //! encodings directly; larger benchmark columns (64, 128, 1024 inputs)
 //! tile multiple receptive fields, exactly how a bigger sensory column
 //! would aggregate more afferents.
+//!
+//! The stimulus vectors produced here are wave-ordered; the `simulate`
+//! stage either replays them one at a time (scalar engine) or chunks
+//! them with [`crate::sim::testbench::lane_batches`] and drives up to
+//! 64 per tick through the packed engine, aggregating per-lane
+//! activity into one [`crate::sim::Activity`] (DESIGN.md §7).
 
 use crate::data::Dataset;
 use crate::tnn::encoding::encode_image;
@@ -40,7 +46,7 @@ pub fn stimulus(data: &Dataset, p: usize, waves: usize, threshold: f32) -> Vec<V
     out
 }
 
-/// Input spike rate of a stimulus set (diagnostics + EXPERIMENTS.md).
+/// Input spike rate of a stimulus set (diagnostics).
 pub fn spike_rate(stim: &[Vec<i32>]) -> f64 {
     let total: usize = stim.iter().map(|s| s.len()).sum();
     let spikes: usize = stim

@@ -6,6 +6,18 @@
 //! Report`).  These wrappers keep the original signatures for callers
 //! that hold their own library/technology/dataset (integration tests,
 //! calibration), delegating every measurement to [`flow::measure_with`].
+//!
+//! The engine choice rides along in the config: `cfg.sim_lanes > 1`
+//! makes the `simulate` stage batch waves through the word-packed
+//! 64-lane engine, whose per-lane switching activity is aggregated
+//! into the same [`crate::sim::Activity`] shape the scalar engine
+//! produces.  The engines are bit-identical *for the same per-lane
+//! wave schedule*; note that raising `sim_lanes` also changes the
+//! schedule itself (waves that ran sequentially through one STDP
+//! weight state become lane-parallel, each lane carrying its own
+//! strided weight trajectory — DESIGN.md §7), so activity measured at
+//! different lane counts is statistically comparable, not
+//! bit-identical.
 
 use crate::cells::calibrate::Observation;
 use crate::cells::{Library, TechParams};
@@ -148,6 +160,25 @@ mod tests {
         assert!(m.ppa.time_ns > 0.0);
         assert!(m.ppa.area_mm2 > 0.0);
         assert!(m.transistors > 100);
+    }
+
+    #[test]
+    fn packed_lanes_flow_through_measurement() {
+        // Same wrapper, packed engine: a sane positive measurement.
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let cfg = TnnConfig {
+            sim_waves: 4,
+            sim_lanes: 4,
+            ..TnnConfig::default()
+        };
+        let data = Dataset::generate(4, 5);
+        let spec = ColumnSpec { p: 8, q: 4, theta: 10 };
+        let m =
+            measure_column(&lib, &tech, Flavor::Std, &spec, &cfg, &data)
+                .unwrap();
+        assert!(m.ppa.power_uw > 0.0);
+        assert!(m.ppa.time_ns > 0.0);
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! experiment needs from MNIST: 10 visually distinct classes, spatially
 //! local stroke structure for the receptive-field encoding, and
 //! intra-class variability for STDP generalization.  DESIGN.md §1
-//! documents the argument; EXPERIMENTS.md reports accuracy on this
-//! corpus next to the paper's MNIST numbers.
+//! documents the argument and why absolute accuracy is not comparable
+//! to the paper's MNIST number.
 
 pub mod digits;
 

@@ -27,7 +27,29 @@
 //! Every future scaling direction (parallel design-point sweeps, cached
 //! stage artifacts, new targets) hangs off this API: a sweep is a loop
 //! over `Target`s, a cache is a stage that short-circuits `run`, a new
-//! design point is a new `Geometry`.
+//! design point is a new `Geometry`, and the `simulate` stage already
+//! batches up to 64 stimulus waves per tick through the word-packed
+//! engine (`cfg.sim_lanes` / `tnn7 flow --lanes`; DESIGN.md §7).
+//!
+//! Build a target, run a partial pipeline, inspect the artifacts:
+//!
+//! ```
+//! use tnn7::config::TnnConfig;
+//! use tnn7::flow::{Flow, FlowContext, Target};
+//! use tnn7::netlist::column::ColumnSpec;
+//! use tnn7::netlist::Flavor;
+//!
+//! let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+//! let spec = ColumnSpec { p: 4, q: 2, theta: 4 };
+//! let mut ctx = FlowContext::new(Target::column(Flavor::Std, spec), cfg);
+//!
+//! // Elaborate the netlist and time it — no simulation, no power.
+//! Flow::from_spec("elaborate,sta").unwrap().run(&mut ctx).unwrap();
+//! assert_eq!(ctx.elaborated.len(), 1);
+//! assert!(ctx.elaborated[0].census.transistors > 0);
+//! assert!(ctx.timing[0].min_clock_ps > 0.0);
+//! assert!(ctx.report.is_none()); // report stage was not requested
+//! ```
 
 pub mod compare;
 pub mod stages;
@@ -188,6 +210,9 @@ pub struct FlowContext {
     pub activity: Vec<Activity>,
     /// Waves simulated by the last `simulate` run.
     pub sim_waves_run: usize,
+    /// Stimulus lanes used by the last `simulate` run (1 = scalar
+    /// engine, >1 = word-packed engine).
+    pub sim_lanes_run: usize,
     /// `power` artifacts.
     pub power: Vec<PowerReport>,
     pub rel_power: Vec<RelPower>,
@@ -229,6 +254,7 @@ impl FlowContext {
             timing: Vec::new(),
             activity: Vec::new(),
             sim_waves_run: 0,
+            sim_lanes_run: 0,
             power: Vec::new(),
             rel_power: Vec::new(),
             area: Vec::new(),
@@ -259,6 +285,7 @@ impl FlowContext {
                 self.timing.clear();
                 self.activity.clear();
                 self.sim_waves_run = 0;
+                self.sim_lanes_run = 0;
                 self.area.clear();
                 self.rel_area.clear();
                 wipe_power(self);
@@ -556,6 +583,28 @@ mod tests {
         assert!(ctx.report.is_none());
         assert!(ctx.scale45.is_none());
         assert!(ctx.compose_total().is_err());
+    }
+
+    #[test]
+    fn packed_simulate_stage_covers_every_wave() {
+        let cfg = TnnConfig {
+            sim_waves: 5,
+            sim_lanes: 4,
+            ..TnnConfig::default()
+        };
+        let target =
+            Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 });
+        let mut ctx = FlowContext::new(target, cfg);
+        Flow::from_spec("elaborate,simulate")
+            .unwrap()
+            .run(&mut ctx)
+            .unwrap();
+        assert_eq!(ctx.sim_lanes_run, 4);
+        // Aggregated lane-cycles = waves × wave length, independent of
+        // how the waves were packed (4 + 1 across two passes here).
+        let wave_len = crate::sim::testbench::WAVE_LEN as u64;
+        assert_eq!(ctx.activity[0].cycles, 5 * wave_len);
+        assert!(ctx.activity[0].toggles.iter().sum::<u64>() > 0);
     }
 
     #[test]

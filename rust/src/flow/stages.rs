@@ -3,9 +3,8 @@
 //! Each stage is a small unit struct implementing [`Stage`]; the
 //! registry functions ([`all`], [`make`], [`requires`]) drive
 //! `--pipeline` parsing, dependency validation, and generated help
-//! text.  Stage semantics are byte-for-byte the old
-//! `coordinator::measure::measure_column` flow, split at its natural
-//! seams:
+//! text.  The compatibility wrappers in [`crate::coordinator::measure`]
+//! run exactly this pipeline; the stage split is:
 //!
 //! | stage      | produces                       | consumes            |
 //! |------------|--------------------------------|---------------------|
@@ -24,7 +23,7 @@ use crate::ppa::report::ColumnPpa;
 use crate::ppa::scaling::{self, NodeScaling};
 use crate::ppa::{area, power, timing};
 use crate::runtime::json::Json;
-use crate::sim::testbench::ColumnTestbench;
+use crate::sim::testbench::{ColumnTestbench, PackedColumnTestbench};
 use crate::tnn::stdp::RandPair;
 use crate::tnn::Lfsr16;
 
@@ -200,6 +199,14 @@ impl Stage for Sta {
 
 /// Gate-level simulation with encoded-digit stimulus and live STDP,
 /// producing per-instance switching activity.
+///
+/// With `cfg.sim_lanes == 1` (the default) every wave runs through the
+/// scalar reference engine exactly as the original measurement flow
+/// did.  With `sim_lanes > 1` the word-packed engine drives up to 64
+/// waves per pass ([`PackedColumnTestbench`]); per-lane activity is
+/// aggregated by the engine itself, and each lane carries its own STDP
+/// weight state through its strided share of the wave list (the packed
+/// wave schedule, DESIGN.md §7).
 pub struct Simulate;
 
 impl Stage for Simulate {
@@ -209,7 +216,7 @@ impl Stage for Simulate {
 
     fn description(&self) -> &'static str {
         "gate-level simulation with encoded stimulus and live STDP, \
-         counting per-net toggles"
+         counting per-net toggles (scalar or word-packed engine)"
     }
 
     fn run(&self, ctx: &mut FlowContext) -> Result<()> {
@@ -219,6 +226,7 @@ impl Stage for Simulate {
         ctx.invalidate_downstream(self.name());
         let params = ctx.cfg.stdp_params();
         let waves = ctx.cfg.sim_waves;
+        let lanes = ctx.cfg.sim_lanes.clamp(1, 64);
         ctx.activity.clear();
         for u in &ctx.elaborated {
             let spec = u.plan.spec;
@@ -229,17 +237,33 @@ impl Stage for Simulate {
                 ctx.cfg.encode_threshold as f32,
             );
             let mut lfsr = Lfsr16::new(ctx.cfg.brv_seed);
-            let mut tb =
-                ColumnTestbench::new(&u.netlist, &u.ports, &ctx.lib)?;
-            for s in &stim {
-                let rand: Vec<RandPair> = (0..spec.p * spec.q)
-                    .map(|_| lfsr.draw_pair())
-                    .collect();
-                tb.run_wave(s, &rand, &params);
+            let rands: Vec<Vec<RandPair>> = (0..stim.len())
+                .map(|_| {
+                    (0..spec.p * spec.q)
+                        .map(|_| lfsr.draw_pair())
+                        .collect()
+                })
+                .collect();
+            if lanes > 1 {
+                let mut tb = PackedColumnTestbench::new(
+                    &u.netlist,
+                    &u.ports,
+                    &ctx.lib,
+                    lanes,
+                )?;
+                tb.run_waves(&stim, &rands, &params);
+                ctx.activity.push(tb.activity().clone());
+            } else {
+                let mut tb =
+                    ColumnTestbench::new(&u.netlist, &u.ports, &ctx.lib)?;
+                for (s, rand) in stim.iter().zip(&rands) {
+                    tb.run_wave(s, rand, &params);
+                }
+                ctx.activity.push(tb.activity().clone());
             }
-            ctx.activity.push(tb.activity().clone());
         }
         ctx.sim_waves_run = waves;
+        ctx.sim_lanes_run = lanes;
         Ok(())
     }
 
@@ -266,6 +290,7 @@ impl Stage for Simulate {
         Json::obj(vec![
             ("stage", Json::str(self.name())),
             ("waves", Json::int(ctx.sim_waves_run as u64)),
+            ("lanes", Json::int(ctx.sim_lanes_run as u64)),
             ("units", Json::Arr(units)),
         ])
     }

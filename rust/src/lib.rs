@@ -15,8 +15,10 @@
 //! * [`netlist`] — gate-level elaboration of every macro, column, layer and
 //!   the Fig. 19 prototype, in both *standard-cell* and *custom-macro*
 //!   flavours (the paper's comparison is exactly this netlist substitution).
-//! * [`sim`] — a levelized cycle-accurate two-clock gate-level simulator with
-//!   per-net toggle counting (the switching-activity source for power).
+//! * [`sim`] — levelized cycle-accurate two-clock gate-level simulation with
+//!   per-net toggle counting (the switching-activity source for power), as a
+//!   scalar reference engine plus a bit-identical word-packed engine that
+//!   evaluates 64 stimulus lanes per tick.
 //! * [`ppa`] — STA, activity-based power, placement-model area, EDP, and the
 //!   45nm↔7nm scaling model (Tables I & II, Figs. 14–18).
 //! * [`tnn`] — the golden behavioral TNN (RNL neurons, WTA, STDP, LFSR BRVs);
@@ -34,9 +36,10 @@
 //! * [`data`] — procedural MNIST-like digit corpus (the sandbox has no
 //!   dataset access; see DESIGN.md for the substitution argument).
 //!
-//! See `DESIGN.md` for the experiment index mapping every paper table and
-//! figure to a module and a bench target, and `EXPERIMENTS.md` for measured
-//! results.
+//! See `DESIGN.md` for the methodology, the experiment index mapping every
+//! paper table and figure to a module and a bench target, and the simulator
+//! internals (§7: the scalar reference engine vs the word-packed 64-lane
+//! engine).
 
 pub mod cells;
 pub mod config;

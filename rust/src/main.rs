@@ -141,7 +141,7 @@ USAGE: tnn7 <SUBCOMMAND> [OPTIONS]     (tnn7 <SUBCOMMAND> --help for details)
 
 SUBCOMMANDS:
   flow --target F[:N] (--col PxQ | --proto) [--pipeline S,..] [--dump-dir D]
-                              run the staged design flow, dump per-stage JSON
+       [--lanes N]            run the staged design flow, dump per-stage JSON
   characterize [--lib FILE]   print the characterized cell library
   layout-cmp [MACRO] [--json FILE]   Figs. 14-18 custom-vs-std comparisons
   complexity                  Fig. 19 prototype census (gates/transistors)
@@ -182,6 +182,9 @@ OPTIONS:
   --pipeline S1,S2,..      stage list (default: full canonical pipeline)
   --dump-dir DIR           write one numbered JSON artifact per stage
   --waves N                simulated waves (default from config)
+  --lanes N                stimulus lanes per simulator tick: 1 = scalar
+                           reference engine, 2..64 = word-packed engine
+                           (default from config; DESIGN.md §7)
   --config FILE            tnn7.toml configuration
 
 {}",
@@ -203,6 +206,13 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     let mut cfg = load_config(args)?;
     if let Some(w) = args.opt("--waves")? {
         cfg.sim_waves = w.parse()?;
+    }
+    if let Some(l) = args.opt("--lanes")? {
+        let lanes: usize = l.parse()?;
+        if !(1..=64).contains(&lanes) {
+            anyhow::bail!("--lanes must be in 1..=64, got {lanes}");
+        }
+        cfg.sim_lanes = lanes;
     }
     args.finish()?;
 
@@ -233,6 +243,12 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
         target.describe(),
         names.join(" -> ")
     );
+    if cfg.sim_lanes > 1 {
+        println!(
+            "  packed engine: {} stimulus lanes per tick",
+            cfg.sim_lanes
+        );
+    }
 
     let mut ctx = FlowContext::new(target, cfg);
     flow.run(&mut ctx)?;

@@ -1,6 +1,6 @@
 //! The PJRT execution client.
 //!
-//! Wraps the `xla` crate: one CPU [`xla::PjRtClient`], a lazily-compiled
+//! Wraps the `xla` crate: one CPU `xla::PjRtClient`, a lazily-compiled
 //! executable per artifact (HLO text → `HloModuleProto::from_text_file` →
 //! `client.compile`), and a typed i32 execute with shape validation
 //! against the manifest.  This is the ONLY place python-built compute

@@ -32,6 +32,27 @@ impl Activity {
         self.cycles = 0;
     }
 
+    /// Accumulate another run's counters into this one (same netlist).
+    ///
+    /// This is the per-lane aggregation rule of the packed engine made
+    /// explicit: the activity of a 64-lane packed run equals `merge`
+    /// over the 64 individual scalar runs — the equivalence the
+    /// scalar-vs-packed proptest asserts.
+    pub fn merge(&mut self, other: &Activity) {
+        assert_eq!(
+            self.toggles.len(),
+            other.toggles.len(),
+            "merging activity of different netlists"
+        );
+        for (t, o) in self.toggles.iter_mut().zip(&other.toggles) {
+            *t += o;
+        }
+        for (t, o) in self.clock_ticks.iter_mut().zip(&other.clock_ticks) {
+            *t += o;
+        }
+        self.cycles += other.cycles;
+    }
+
     /// Mean output-toggle rate per instance per cycle.
     pub fn mean_toggle_rate(&self) -> f64 {
         if self.cycles == 0 || self.toggles.is_empty() {
@@ -54,5 +75,21 @@ mod tests {
         assert!((a.mean_toggle_rate() - 0.5).abs() < 1e-12);
         a.reset();
         assert_eq!(a.mean_toggle_rate(), 0.0);
+    }
+
+    #[test]
+    fn merge_sums_counters() {
+        let mut a = Activity::new(2);
+        a.toggles = vec![1, 2];
+        a.clock_ticks = vec![3, 0];
+        a.cycles = 5;
+        let mut b = Activity::new(2);
+        b.toggles = vec![10, 20];
+        b.clock_ticks = vec![0, 7];
+        b.cycles = 11;
+        a.merge(&b);
+        assert_eq!(a.toggles, vec![11, 22]);
+        assert_eq!(a.clock_ticks, vec![3, 7]);
+        assert_eq!(a.cycles, 16);
     }
 }

@@ -1,16 +1,27 @@
 //! Pure cell semantics: the single source of truth for what every cell
 //! *does*.
 //!
-//! Three functions per cell kind:
-//! * [`eval_comb`] — output values from current input nets + current state.
-//! * [`next_state`] — sequential next-state from settled inputs + state.
-//! * [`comb_deps`] — which input pins the outputs depend on
-//!   *combinationally* (levelization must order only those; e.g. a plain
-//!   DFF's Q depends on no input, so Q→logic→D loops are legal).
+//! Two independent implementations live here (see DESIGN.md §7):
+//!
+//! * **Scalar reference** — [`eval_comb`] / [`next_state`] over `bool`s,
+//!   written in the most obvious style (branches, integer compares).
+//!   This is the correctness anchor everything else is tested against.
+//! * **Word-packed kernels** — [`eval_comb_packed`] /
+//!   [`next_state_packed`] over `u64` words, where bit `k` of every
+//!   word is simulation lane `k`.  These are branch-free bitwise
+//!   translations of the same functions, evaluating 64 independent
+//!   stimulus lanes per call; [`super::packed::PackedSimulator`] builds
+//!   its hot loop on them.
+//!
+//! Shared by both: [`comb_deps`] — which input pins the outputs depend
+//! on *combinationally* (levelization must order only those; e.g. a
+//! plain DFF's Q depends on no input, so Q→logic→D loops are legal).
 //!
 //! The behavioral models of the custom macros here are what the
 //! std-flavour gate builders in [`crate::netlist::modules`] are proven
-//! equivalent to (their unit tests sweep both through the simulator).
+//! equivalent to (their unit tests sweep both through the simulator),
+//! and the packed kernels are exhaustively swept against the scalar
+//! reference in this module's tests.
 
 use crate::cells::{CellKind, MacroKind};
 
@@ -196,6 +207,177 @@ fn bits3(b0: bool, b1: bool, b2: bool) -> u8 {
     (b0 as u8) | ((b1 as u8) << 1) | ((b2 as u8) << 2)
 }
 
+// ---------------------------------------------------------------------
+// Word-packed kernels: 64 lanes per u64, bit k = lane k.
+
+/// Branch-free 2:1 select per lane: `s ? a1 : a0`.
+#[inline(always)]
+fn sel(s: u64, a1: u64, a0: u64) -> u64 {
+    (s & a1) | (!s & a0)
+}
+
+/// Per-lane unsigned `a < b` over 3-bit LSB-first operands.
+#[inline(always)]
+fn lt3(a0: u64, a1: u64, a2: u64, b0: u64, b1: u64, b2: u64) -> u64 {
+    let e2 = !(a2 ^ b2);
+    let e1 = !(a1 ^ b1);
+    (!a2 & b2) | (e2 & ((!a1 & b1) | (e1 & !a0 & b0)))
+}
+
+/// Evaluate combinational outputs for 64 lanes at once.
+///
+/// Word-for-word the semantics of [`eval_comb`], applied independently
+/// to every bit position: `ins`/`state`/`outs` hold one `u64` per pin
+/// or state bit, with bit `k` carrying lane `k`'s value.
+pub fn eval_comb_packed(kind: CellKind, ins: &[u64], state: &[u64], outs: &mut [u64]) {
+    use CellKind::*;
+    match kind {
+        Tie0 => outs[0] = 0,
+        Tie1 => outs[0] = !0,
+        Inv => outs[0] = !ins[0],
+        Buf => outs[0] = ins[0],
+        Nand2 => outs[0] = !(ins[0] & ins[1]),
+        Nand3 => outs[0] = !(ins[0] & ins[1] & ins[2]),
+        Nand4 => outs[0] = !(ins[0] & ins[1] & ins[2] & ins[3]),
+        Nor2 => outs[0] = !(ins[0] | ins[1]),
+        Nor3 => outs[0] = !(ins[0] | ins[1] | ins[2]),
+        And2 => outs[0] = ins[0] & ins[1],
+        And3 => outs[0] = ins[0] & ins[1] & ins[2],
+        Or2 => outs[0] = ins[0] | ins[1],
+        Or3 => outs[0] = ins[0] | ins[1] | ins[2],
+        Xor2 => outs[0] = ins[0] ^ ins[1],
+        Xnor2 => outs[0] = !(ins[0] ^ ins[1]),
+        Xor3 => outs[0] = ins[0] ^ ins[1] ^ ins[2],
+        Maj3 => {
+            outs[0] = (ins[0] & ins[1]) | (ins[1] & ins[2]) | (ins[0] & ins[2])
+        }
+        Aoi21 => outs[0] = !((ins[0] & ins[1]) | ins[2]),
+        Oai21 => outs[0] = !((ins[0] | ins[1]) & ins[2]),
+        Mux2 => outs[0] = sel(ins[2], ins[1], ins[0]),
+        Dff => outs[0] = state[0],
+        DffR => outs[0] = !ins[1] & state[0],
+        DffRn => outs[0] = state[0],
+        Latch => outs[0] = sel(ins[1], ins[0], state[0]),
+        Macro(m) => eval_macro_packed(m, ins, state, outs),
+    }
+}
+
+fn eval_macro_packed(m: MacroKind, ins: &[u64], state: &[u64], outs: &mut [u64]) {
+    match m {
+        MacroKind::SynWeightUpdate => {
+            outs[0] = state[0];
+            outs[1] = state[1];
+            outs[2] = state[2];
+        }
+        MacroKind::SynOutput => {
+            outs[0] = ins[6]
+                & lt3(ins[0], ins[1], ins[2], ins[3], ins[4], ins[5]);
+        }
+        MacroKind::PacAdder => {
+            outs[0] = ins[0] ^ ins[1] ^ ins[2];
+            outs[1] = (ins[0] & ins[1]) | (ins[1] & ins[2]) | (ins[0] & ins[2]);
+        }
+        MacroKind::LessEqual => outs[0] = ins[0] | !ins[1],
+        MacroKind::Pulse2EdgePwr => outs[0] = !ins[1] & state[0],
+        MacroKind::Pulse2EdgeArea => outs[0] = state[0],
+        MacroKind::StdpCaseGen => {
+            let (x, y, le) = (ins[0], ins[1], ins[2]);
+            outs[0] = x & y & le;
+            outs[1] = x & y & !le;
+            outs[2] = x & !y;
+            outs[3] = !x & y;
+        }
+        MacroKind::StabilizeFunc => {
+            let (s0, s1, s2) = (ins[8], ins[9], ins[10]);
+            let mut acc = 0u64;
+            for (i, &d) in ins[..8].iter().enumerate() {
+                let m0 = if i & 1 != 0 { s0 } else { !s0 };
+                let m1 = if i & 2 != 0 { s1 } else { !s1 };
+                let m2 = if i & 4 != 0 { s2 } else { !s2 };
+                acc |= d & m0 & m1 & m2;
+            }
+            outs[0] = acc;
+        }
+        MacroKind::IncDec => {
+            outs[0] = ins[0] | ins[2];
+            outs[1] = ins[1] | ins[3];
+        }
+        MacroKind::Mux2Gdi => outs[0] = sel(ins[2], ins[1], ins[0]),
+        MacroKind::Edge2Pulse => outs[0] = ins[0] & !state[0],
+        MacroKind::SpikeGen => {
+            let done = state[3];
+            outs[0] = ins[0] & !done;
+            outs[1] = state[0];
+            outs[2] = state[1];
+            outs[3] = state[2];
+        }
+    }
+}
+
+/// Compute sequential next-state for 64 lanes at once (the packed
+/// counterpart of [`next_state`]).
+pub fn next_state_packed(kind: CellKind, ins: &[u64], state: &[u64], next: &mut [u64]) {
+    use CellKind::*;
+    match kind {
+        Dff => next[0] = ins[0],
+        DffR => next[0] = !ins[1] & ins[0],
+        DffRn => next[0] = ins[1] & ins[0],
+        Latch => next[0] = sel(ins[1], ins[0], state[0]),
+        Macro(m) => next_state_macro_packed(m, ins, state, next),
+        _ => {}
+    }
+}
+
+fn next_state_macro_packed(m: MacroKind, ins: &[u64], state: &[u64], next: &mut [u64]) {
+    match m {
+        MacroKind::SynWeightUpdate => {
+            // Saturating ±1 on a 3-bit counter, inc priority — the
+            // branch-free form of the scalar arithmetic.
+            let (w0, w1, w2) = (state[0], state[1], state[2]);
+            let (inc, dec) = (ins[0], ins[1]);
+            let at_max = w0 & w1 & w2;
+            let at_min = !(w0 | w1 | w2);
+            let up = inc & !at_max;
+            let down = dec & !inc & !at_min;
+            // +1 ripple.
+            let i0 = !w0;
+            let i1 = w1 ^ w0;
+            let i2 = w2 ^ (w1 & w0);
+            // -1 borrow ripple.
+            let d0 = !w0;
+            let d1 = w1 ^ !w0;
+            let d2 = w2 ^ (!w1 & !w0);
+            let hold = !(up | down);
+            next[0] = (up & i0) | (down & d0) | (hold & w0);
+            next[1] = (up & i1) | (down & d1) | (hold & w1);
+            next[2] = (up & i2) | (down & d2) | (hold & w2);
+        }
+        MacroKind::Pulse2EdgePwr | MacroKind::Pulse2EdgeArea => {
+            next[0] = !ins[1] & (state[0] | ins[0]);
+        }
+        MacroKind::Edge2Pulse => next[0] = ins[0],
+        MacroKind::SpikeGen => {
+            // 4-bit counter saturating at 8 (state[3] is the done bit),
+            // cleared by rst, counting while the input level is high.
+            let (s0, s1, s2, s3) = (state[0], state[1], state[2], state[3]);
+            let up = ins[0] & !s3;
+            let i0 = !s0;
+            let c0 = s0;
+            let i1 = s1 ^ c0;
+            let c1 = s1 & c0;
+            let i2 = s2 ^ c1;
+            let c2 = s2 & c1;
+            let i3 = s3 ^ c2;
+            let live = !ins[1];
+            next[0] = live & ((up & i0) | (!up & s0));
+            next[1] = live & ((up & i1) | (!up & s1));
+            next[2] = live & ((up & i2) | (!up & s2));
+            next[3] = live & ((up & i3) | (!up & s3));
+        }
+        _ => {}
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,6 +524,90 @@ mod tests {
             // reset clears
             next_state(k, &[false, true], &state, &mut n);
             assert!(!n[0]);
+        }
+    }
+
+    fn all_kinds() -> Vec<CellKind> {
+        use CellKind::*;
+        let mut v = vec![
+            Tie0, Tie1, Inv, Buf, Nand2, Nand3, Nand4, Nor2, Nor3, And2,
+            And3, Or2, Or3, Xor2, Xnor2, Xor3, Maj3, Aoi21, Oai21, Mux2,
+            Dff, DffR, DffRn, Latch,
+        ];
+        for m in [
+            MacroKind::SynWeightUpdate,
+            MacroKind::SynOutput,
+            MacroKind::PacAdder,
+            MacroKind::LessEqual,
+            MacroKind::Pulse2EdgePwr,
+            MacroKind::Pulse2EdgeArea,
+            MacroKind::StdpCaseGen,
+            MacroKind::StabilizeFunc,
+            MacroKind::IncDec,
+            MacroKind::Mux2Gdi,
+            MacroKind::Edge2Pulse,
+            MacroKind::SpikeGen,
+        ] {
+            v.push(Macro(m));
+        }
+        v
+    }
+
+    /// The packed kernels are a second, branch-free implementation of
+    /// the cell semantics; sweep EVERY (input, state) assignment of
+    /// every cell kind against the scalar reference, 64 cases per word.
+    #[test]
+    fn packed_kernels_match_scalar_reference_exhaustively() {
+        for kind in all_kinds() {
+            let (n_in, n_out, n_state) = kind.pins();
+            let bits = n_in + n_state;
+            let total: u64 = 1 << bits;
+            let mut case = 0u64;
+            while case < total {
+                let lanes = (total - case).min(64) as usize;
+                let mut wi = vec![0u64; n_in];
+                let mut ws = vec![0u64; n_state];
+                for l in 0..lanes {
+                    let a = case + l as u64;
+                    for (k, w) in wi.iter_mut().enumerate() {
+                        *w |= ((a >> k) & 1) << l;
+                    }
+                    for (k, w) in ws.iter_mut().enumerate() {
+                        *w |= ((a >> (n_in + k)) & 1) << l;
+                    }
+                }
+                let mut wo = vec![0u64; n_out];
+                let mut wn = vec![0u64; n_state];
+                eval_comb_packed(kind, &wi, &ws, &mut wo);
+                next_state_packed(kind, &wi, &ws, &mut wn);
+                for l in 0..lanes {
+                    let a = case + l as u64;
+                    let ins: Vec<bool> =
+                        (0..n_in).map(|k| (a >> k) & 1 == 1).collect();
+                    let st: Vec<bool> = (0..n_state)
+                        .map(|k| (a >> (n_in + k)) & 1 == 1)
+                        .collect();
+                    let mut outs = vec![false; n_out];
+                    eval_comb(kind, &ins, &st, &mut outs);
+                    let mut nx = vec![false; n_state];
+                    next_state(kind, &ins, &st, &mut nx);
+                    for k in 0..n_out {
+                        assert_eq!(
+                            wo[k] >> l & 1 == 1,
+                            outs[k],
+                            "{kind:?} case {a} out {k}"
+                        );
+                    }
+                    for k in 0..n_state {
+                        assert_eq!(
+                            wn[k] >> l & 1 == 1,
+                            nx[k],
+                            "{kind:?} case {a} next-state {k}"
+                        );
+                    }
+                }
+                case += lanes as u64;
+            }
         }
     }
 

@@ -1,27 +1,47 @@
-//! Levelized cycle-accurate two-clock gate-level simulator.
+//! Levelized cycle-accurate two-clock gate-level simulation.
 //!
 //! The Cadence-simulation analogue: executes a [`crate::netlist::Netlist`]
 //! cycle by cycle on the unit clock (`aclk`), with gamma-clock (`gclk`)
 //! domain state committing only on end-of-wave ticks, and counts per-net
 //! toggles — the switching-activity input to [`crate::ppa::power`].
+//! Two engines share one levelized evaluation plan and one activity
+//! accounting rule (DESIGN.md §7):
 //!
 //! * [`eval`] — pure cell semantics: combinational output functions and
 //!   sequential next-state functions for every [`crate::cells::CellKind`],
-//!   including the behavioral models of the 11 custom macros.  These
-//!   definitions are the single source of truth the netlist *module
-//!   builders* are tested against (std-flavour gates ≡ macro behavior).
+//!   including the behavioral models of the 11 custom macros, in both a
+//!   scalar-`bool` reference form and a branch-free word-packed (`u64`,
+//!   64 lanes) form.  The scalar definitions are the single source of
+//!   truth the netlist *module builders* are tested against
+//!   (std-flavour gates ≡ macro behavior), and the packed kernels are
+//!   exhaustively swept against the scalar ones.
 //! * [`simulator`] — levelization (comb-sensitivity-aware topological
-//!   order), eval loop, commit, toggle counting.
-//! * [`activity`] — per-instance toggle/clock counters → activity factors.
+//!   order) and the scalar reference engine [`Simulator`]: one stimulus
+//!   per tick, eval loop, commit, toggle counting.
+//! * [`packed`] — the production engine [`PackedSimulator`]: 64
+//!   independent stimulus lanes per tick over `u64` words, with
+//!   popcount toggle accounting that keeps aggregated activity equal to
+//!   the sum of the per-lane scalar runs.
+//! * [`engine`] — the [`SimEngine`] trait both engines implement; the
+//!   seam the scalar-vs-packed equivalence tests drive through.
+//! * [`activity`] — per-instance toggle/clock counters → activity
+//!   factors, with [`Activity::merge`] as the cross-lane/cross-run
+//!   aggregation rule.
 //! * [`testbench`] — drives TNN columns with encoded spike waves and
-//!   decodes spike times back out (the bridge to the golden model).
+//!   decodes spike times back out (the bridge to the golden model), in
+//!   scalar ([`testbench::ColumnTestbench`]) and lane-batched
+//!   ([`testbench::PackedColumnTestbench`]) forms.
 //! * [`vcd`] — waveform dump for debugging.
 
 pub mod activity;
+pub mod engine;
 pub mod eval;
+pub mod packed;
 pub mod simulator;
 pub mod testbench;
 pub mod vcd;
 
 pub use activity::Activity;
+pub use engine::SimEngine;
+pub use packed::PackedSimulator;
 pub use simulator::Simulator;

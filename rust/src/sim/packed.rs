@@ -1,0 +1,398 @@
+//! The word-packed 64-lane simulation engine.
+//!
+//! [`PackedSimulator`] evaluates up to 64 *independent stimulus lanes*
+//! per tick by storing every net, state bit, and next-state bit as one
+//! `u64` word (bit `k` = lane `k`) and running the branch-free kernels
+//! of [`super::eval::eval_comb_packed`] / [`super::eval::next_state_packed`]
+//! over the same levelized evaluation plan (`EvalPlan`, crate-internal)
+//! the scalar [`super::Simulator`] uses.  Per-lane semantics are
+//! bit-for-bit those
+//! of the scalar engine (DESIGN.md §7; the equivalence proptest in
+//! `tests/proptests.rs` is the correctness anchor):
+//!
+//! * **Lane independence** — lanes never exchange data; lane `k` of a
+//!   packed run equals a scalar run driven with lane `k`'s stimulus.
+//! * **Shared clocking** — all lanes advance on the same `aclk` tick
+//!   and see the same `gclk_edge` flag, which fits the TNN wave
+//!   protocol where the gamma edge falls on a fixed wave cycle.
+//! * **Activity equivalence** — toggle counters advance by
+//!   `popcount((old ^ new) & lane_mask)` per output net, and
+//!   `clock_ticks` / `cycles` by the active-lane count per commit/tick,
+//!   so a packed run's [`Activity`] equals the *sum* of the per-lane
+//!   scalar activities.  Inactive lanes (when fewer than 64 stimuli
+//!   remain) are masked out of every counter.
+
+use crate::cells::Library;
+use crate::error::{Error, Result};
+use crate::netlist::{ClockDomain, NetId, Netlist};
+
+use super::activity::Activity;
+use super::eval::{eval_comb_packed, next_state_packed};
+use super::simulator::{plan, EvalNode};
+
+/// Maximum number of lanes a packed engine can carry (bits per word).
+pub const MAX_LANES: usize = 64;
+
+/// Ready-to-run 64-lane simulation instance over a netlist.
+pub struct PackedSimulator<'n> {
+    nl: &'n Netlist,
+    lib: &'n Library,
+    /// Evaluation nodes in combinational level order.
+    nodes: Vec<EvalNode>,
+    /// Current net values, one word (64 lanes) per net.
+    values: Vec<u64>,
+    /// Per-instance state storage, one word per state bit.
+    state: Vec<u64>,
+    next: Vec<u64>,
+    state_off: Vec<u32>,
+    /// Sequential instance indices (for the commit phase).
+    seq: Vec<u32>,
+    /// Activity counters, aggregated over active lanes.
+    pub activity: Activity,
+    cycle: u64,
+    /// Lanes the engine was built for (counter/capacity bound).
+    lanes: usize,
+    /// Mask of currently-active lanes (counted in activity).
+    mask: u64,
+    scratch_ins: Vec<u64>,
+    scratch_outs: Vec<u64>,
+}
+
+fn mask_for(lanes: usize) -> u64 {
+    if lanes >= MAX_LANES {
+        !0
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
+impl<'n> PackedSimulator<'n> {
+    /// Levelize and allocate for `lanes` (1..=64) stimulus lanes.
+    /// Fails on combinational cycles or an out-of-range lane count.
+    pub fn new(nl: &'n Netlist, lib: &'n Library, lanes: usize) -> Result<Self> {
+        if !(1..=MAX_LANES).contains(&lanes) {
+            return Err(Error::sim(format!(
+                "packed engine supports 1..={MAX_LANES} lanes, got {lanes}"
+            )));
+        }
+        let p = plan(nl, lib)?;
+        Ok(PackedSimulator {
+            nl,
+            lib,
+            nodes: p.nodes,
+            values: vec![0; nl.n_nets()],
+            state: vec![0; p.total_state as usize],
+            next: vec![0; p.total_state as usize],
+            state_off: p.state_off,
+            seq: p.seq,
+            activity: Activity::new(nl.insts.len()),
+            cycle: 0,
+            lanes,
+            mask: mask_for(lanes),
+            scratch_ins: vec![0; 16],
+            scratch_outs: vec![0; 8],
+        })
+    }
+
+    /// Number of lanes the engine was built for.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Number of currently-active (activity-counted) lanes.
+    pub fn active_lanes(&self) -> usize {
+        self.mask.count_ones() as usize
+    }
+
+    /// Shrink the active-lane set to the first `n` lanes (`n ≤ lanes`),
+    /// e.g. for a final stimulus batch smaller than the lane width.
+    /// Inactive lanes keep simulating but are excluded from activity.
+    pub fn set_active_lanes(&mut self, n: usize) {
+        assert!(
+            (1..=self.lanes).contains(&n),
+            "active lanes 1..={}",
+            self.lanes
+        );
+        self.mask = mask_for(n);
+    }
+
+    /// Current value of a net in one lane.
+    pub fn get(&self, net: NetId, lane: usize) -> bool {
+        debug_assert!(lane < self.lanes);
+        self.values[net.0 as usize] >> lane & 1 == 1
+    }
+
+    /// Current value word of a net (bit `k` = lane `k`).
+    pub fn get_word(&self, net: NetId) -> u64 {
+        self.values[net.0 as usize]
+    }
+
+    /// Cycle counter (packed ticks, not lane-cycles; see
+    /// [`Activity::cycles`] for the aggregated count).
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Reset all state and net values to 0 in every lane, clear the
+    /// cycle counter, and restore the active-lane mask to the full
+    /// lane count (undoing any [`PackedSimulator::set_active_lanes`]
+    /// shrink).  Activity counters are preserved; call
+    /// `activity.reset()` too for a fresh measurement.
+    pub fn reset(&mut self) {
+        self.values.iter_mut().for_each(|v| *v = 0);
+        self.state.iter_mut().for_each(|v| *v = 0);
+        self.cycle = 0;
+        self.mask = mask_for(self.lanes);
+    }
+
+    /// Run one `aclk` cycle across all lanes.
+    ///
+    /// `inputs` assigns primary-input words (bit `k` = lane `k`) for
+    /// this cycle; `gclk_edge` marks an end-of-wave tick (gamma-domain
+    /// commit) shared by every lane.
+    pub fn tick(&mut self, inputs: &[(NetId, u64)], gclk_edge: bool) {
+        let mask = self.mask;
+        for &(n, w) in inputs {
+            self.values[n.0 as usize] = w;
+        }
+        // Evaluate in level order, counting per-lane output toggles.
+        // Mirrors the scalar hot loop: inline fast path for stateless
+        // 1-output gates, general path through the packed kernels.
+        let pins = &self.nl.pins;
+        for node in &self.nodes {
+            use crate::cells::CellKind as K;
+            let ps = node.pin_start as usize;
+            let n_in = node.n_ins as usize;
+            let fast = match node.kind {
+                K::Inv => Some(!self.values[pins[ps].0 as usize]),
+                K::Buf => Some(self.values[pins[ps].0 as usize]),
+                K::And2 => Some(
+                    self.values[pins[ps].0 as usize]
+                        & self.values[pins[ps + 1].0 as usize],
+                ),
+                K::Or2 => Some(
+                    self.values[pins[ps].0 as usize]
+                        | self.values[pins[ps + 1].0 as usize],
+                ),
+                K::Nand2 => Some(
+                    !(self.values[pins[ps].0 as usize]
+                        & self.values[pins[ps + 1].0 as usize]),
+                ),
+                K::Xor2 => Some(
+                    self.values[pins[ps].0 as usize]
+                        ^ self.values[pins[ps + 1].0 as usize],
+                ),
+                K::And3 => Some(
+                    self.values[pins[ps].0 as usize]
+                        & self.values[pins[ps + 1].0 as usize]
+                        & self.values[pins[ps + 2].0 as usize],
+                ),
+                K::Xor3 => Some(
+                    self.values[pins[ps].0 as usize]
+                        ^ self.values[pins[ps + 1].0 as usize]
+                        ^ self.values[pins[ps + 2].0 as usize],
+                ),
+                K::Maj3 => {
+                    let a = self.values[pins[ps].0 as usize];
+                    let b = self.values[pins[ps + 1].0 as usize];
+                    let c = self.values[pins[ps + 2].0 as usize];
+                    Some((a & b) | (b & c) | (a & c))
+                }
+                K::Mux2 => {
+                    let d0 = self.values[pins[ps].0 as usize];
+                    let d1 = self.values[pins[ps + 1].0 as usize];
+                    let s = self.values[pins[ps + 2].0 as usize];
+                    Some((s & d1) | (!s & d0))
+                }
+                _ => None,
+            };
+            if let Some(v) = fast {
+                let out_net = pins[ps + n_in].0 as usize;
+                let diff = (self.values[out_net] ^ v) & mask;
+                self.values[out_net] = v;
+                if diff != 0 {
+                    self.activity.toggles[node.inst as usize] +=
+                        u64::from(diff.count_ones());
+                }
+                continue;
+            }
+            // General path (multi-output cells, sequential, macros).
+            let n_out = node.n_outs as usize;
+            let n_state = node.n_state as usize;
+            for k in 0..n_in {
+                self.scratch_ins[k] = self.values[pins[ps + k].0 as usize];
+            }
+            let off = node.state_off as usize;
+            {
+                let (ins, outs) = (
+                    &self.scratch_ins[..n_in],
+                    &mut self.scratch_outs[..n_out],
+                );
+                eval_comb_packed(
+                    node.kind,
+                    ins,
+                    &self.state[off..off + n_state],
+                    outs,
+                );
+            }
+            let mut toggles = 0u32;
+            for k in 0..n_out {
+                let v = self.scratch_outs[k];
+                let slot = &mut self.values[pins[ps + n_in + k].0 as usize];
+                toggles += ((*slot ^ v) & mask).count_ones();
+                *slot = v;
+            }
+            if toggles > 0 {
+                self.activity.toggles[node.inst as usize] += u64::from(toggles);
+            }
+        }
+        // Next-state + commit per domain (shared edge across lanes).
+        let active = u64::from(mask.count_ones());
+        for &si in &self.seq {
+            let i = si as usize;
+            let inst = self.nl.insts[i];
+            let commit = match inst.domain {
+                ClockDomain::Aclk => true,
+                ClockDomain::Gclk => gclk_edge,
+                ClockDomain::Comb => false,
+            };
+            if !commit {
+                continue;
+            }
+            let kind = self.lib.cell(inst.cell).kind;
+            let (n_in, _, n_state) = kind.pins();
+            let ins_nets = self.nl.inst_ins(i);
+            for (k, &n) in ins_nets.iter().enumerate() {
+                self.scratch_ins[k] = self.values[n.0 as usize];
+            }
+            let off = self.state_off[i] as usize;
+            // Write next into `next`, then copy back (no aliasing).
+            {
+                let (cur, nxt) = (
+                    &self.state[off..off + n_state],
+                    &mut self.next[off..off + n_state],
+                );
+                next_state_packed(kind, &self.scratch_ins[..n_in], cur, nxt);
+            }
+            self.state[off..off + n_state]
+                .copy_from_slice(&self.next[off..off + n_state]);
+            self.activity.clock_ticks[i] += active;
+        }
+        self.cycle += 1;
+        self.activity.cycles += active;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+    use crate::netlist::Builder;
+    use crate::sim::Simulator;
+
+    /// Drive the same 3 stimulus streams through 3 scalar engines and
+    /// one 3-lane packed engine; values and activity must agree.
+    #[test]
+    fn packed_lanes_match_independent_scalar_runs() {
+        let lib = Library::asap7_only();
+        let mut b = Builder::new("mix", &lib);
+        let x0 = b.input("x0");
+        let x1 = b.input("x1");
+        let a = b.xor2(x0, x1);
+        let n = b.nand2(a, x0);
+        let q = b.dff(n, crate::netlist::ClockDomain::Aclk);
+        let g = b.dff(a, crate::netlist::ClockDomain::Gclk);
+        let y = b.and2(q, g);
+        b.output(y, "y");
+        let nl = b.finish().unwrap();
+
+        const LANES: usize = 3;
+        let mut packed = PackedSimulator::new(&nl, &lib, LANES).unwrap();
+        let mut scalars: Vec<Simulator> = (0..LANES)
+            .map(|_| Simulator::new(&nl, &lib).unwrap())
+            .collect();
+
+        // Deterministic per-lane stimulus + a gamma edge every 5 ticks.
+        let mut rng = 0x1234_5678_9abc_def0u64;
+        for t in 0..40u32 {
+            let gamma = t % 5 == 4;
+            let mut w0 = 0u64;
+            let mut w1 = 0u64;
+            for l in 0..LANES {
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let v0 = rng >> 17 & 1 == 1;
+                let v1 = rng >> 43 & 1 == 1;
+                w0 |= (v0 as u64) << l;
+                w1 |= (v1 as u64) << l;
+                scalars[l].tick(
+                    &[(nl.inputs[0], v0), (nl.inputs[1], v1)],
+                    gamma,
+                );
+            }
+            packed.tick(&[(nl.inputs[0], w0), (nl.inputs[1], w1)], gamma);
+            for (l, s) in scalars.iter().enumerate() {
+                for net in 0..nl.n_nets() {
+                    let id = crate::netlist::NetId(net as u32);
+                    assert_eq!(
+                        packed.get(id, l),
+                        s.get(id),
+                        "tick {t} lane {l} net {net}"
+                    );
+                }
+            }
+        }
+        let mut toggles = vec![0u64; nl.insts.len()];
+        let mut ticks = vec![0u64; nl.insts.len()];
+        let mut cycles = 0;
+        for s in &scalars {
+            for i in 0..nl.insts.len() {
+                toggles[i] += s.activity.toggles[i];
+                ticks[i] += s.activity.clock_ticks[i];
+            }
+            cycles += s.activity.cycles;
+        }
+        assert_eq!(packed.activity.toggles, toggles);
+        assert_eq!(packed.activity.clock_ticks, ticks);
+        assert_eq!(packed.activity.cycles, cycles);
+    }
+
+    /// Masked-out lanes contribute nothing to any activity counter.
+    #[test]
+    fn inactive_lanes_are_excluded_from_activity() {
+        let lib = Library::asap7_only();
+        let mut b = Builder::new("t", &lib);
+        let x = b.input("x");
+        let y = b.inv(x);
+        b.output(y, "y");
+        let nl = b.finish().unwrap();
+        let mut packed = PackedSimulator::new(&nl, &lib, 8).unwrap();
+        packed.set_active_lanes(2);
+        assert_eq!(packed.active_lanes(), 2);
+        // Toggle all 8 lanes every tick; only 2 lanes may count.
+        for t in 0..10u64 {
+            let w = if t % 2 == 0 { !0u64 } else { 0 };
+            packed.tick(&[(nl.inputs[0], w)], false);
+        }
+        assert_eq!(packed.activity.cycles, 20);
+        // Inverter output toggles every cycle except the first, in each
+        // of the 2 active lanes (same argument as the scalar test).
+        let inv_idx = nl.insts.len() - 1;
+        assert_eq!(packed.activity.toggles[inv_idx], 18);
+        // reset() restores the full active-lane set.
+        packed.reset();
+        assert_eq!(packed.active_lanes(), 8);
+    }
+
+    #[test]
+    fn lane_count_bounds_are_enforced() {
+        let lib = Library::asap7_only();
+        let mut b = Builder::new("t", &lib);
+        let x = b.input("x");
+        let y = b.inv(x);
+        b.output(y, "y");
+        let nl = b.finish().unwrap();
+        assert!(PackedSimulator::new(&nl, &lib, 0).is_err());
+        assert!(PackedSimulator::new(&nl, &lib, 65).is_err());
+        assert!(PackedSimulator::new(&nl, &lib, 64).is_ok());
+    }
+}

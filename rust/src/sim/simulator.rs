@@ -1,4 +1,4 @@
-//! The levelized cycle-based simulator.
+//! The levelized cycle-based simulator (scalar reference engine).
 //!
 //! Construction levelizes the netlist once: instances are topologically
 //! ordered by *combinational sensitivity* ([`super::eval::comb_deps`]),
@@ -12,6 +12,33 @@
 //! 4. computes next-state for all sequential instances and commits —
 //!    `aclk`-domain always, `gclk`-domain only when the tick is flagged
 //!    as a gamma edge.
+//!
+//! This engine evaluates one stimulus per tick and is kept as the
+//! plainly-written reference; [`super::packed::PackedSimulator`] runs
+//! 64 lanes per tick over the same levelized evaluation plan
+//! (`EvalPlan`, crate-internal) and is tested bit-for-bit against this
+//! one (DESIGN.md §7).  Both implement [`super::SimEngine`].
+//!
+//! ```
+//! use tnn7::cells::Library;
+//! use tnn7::netlist::Builder;
+//! use tnn7::sim::Simulator;
+//!
+//! let lib = Library::asap7_only();
+//! let mut b = Builder::new("demo", &lib);
+//! let x = b.input("x");
+//! let y = b.inv(x);
+//! b.output(y, "y");
+//! let nl = b.finish().unwrap();
+//!
+//! let mut sim = Simulator::new(&nl, &lib).unwrap();
+//! sim.tick(&[(nl.inputs[0], true)], false);
+//! assert!(!sim.get(nl.outputs[0])); // nets power up at 0: no toggle yet
+//! sim.tick(&[(nl.inputs[0], false)], false);
+//! assert!(sim.get(nl.outputs[0]));
+//! assert_eq!(sim.activity.cycles, 2);
+//! assert_eq!(sim.activity.toggles.iter().sum::<u64>(), 1);
+//! ```
 
 use crate::cells::Library;
 use crate::error::{Error, Result};
@@ -24,15 +51,64 @@ use super::eval::{comb_deps, eval_comb, next_state};
 /// laid out contiguously in level order (avoids chasing `Instance` →
 /// `Library` indirections 20M times per big-column measurement).
 #[derive(Clone, Copy)]
-struct EvalNode {
-    kind: crate::cells::CellKind,
-    pin_start: u32,
-    state_off: u32,
-    n_ins: u8,
-    n_outs: u8,
-    n_state: u8,
+pub(crate) struct EvalNode {
+    pub(crate) kind: crate::cells::CellKind,
+    pub(crate) pin_start: u32,
+    pub(crate) state_off: u32,
+    pub(crate) n_ins: u8,
+    pub(crate) n_outs: u8,
+    pub(crate) n_state: u8,
     /// Original instance index (activity attribution).
-    inst: u32,
+    pub(crate) inst: u32,
+}
+
+/// Levelized evaluation plan shared by the scalar and packed engines:
+/// flat nodes in level order plus the state-bit layout.
+pub(crate) struct EvalPlan {
+    pub(crate) nodes: Vec<EvalNode>,
+    pub(crate) state_off: Vec<u32>,
+    /// Sequential instance indices (for the commit phase).
+    pub(crate) seq: Vec<u32>,
+    pub(crate) total_state: u32,
+}
+
+/// Build the shared [`EvalPlan`] for a netlist (levelize + flatten).
+pub(crate) fn plan(nl: &Netlist, lib: &Library) -> Result<EvalPlan> {
+    let n_insts = nl.insts.len();
+    let order = levelize(nl, lib)?;
+    // State allocation.
+    let mut state_off = vec![0u32; n_insts];
+    let mut total_state = 0u32;
+    let mut seq = Vec::new();
+    for i in 0..n_insts {
+        let kind = lib.cell(nl.insts[i].cell).kind;
+        let bits = kind.pins().2 as u32;
+        state_off[i] = total_state;
+        total_state += bits;
+        if bits > 0 {
+            seq.push(i as u32);
+        }
+    }
+    // Flatten the hot-loop metadata in level order.
+    let nodes = order
+        .iter()
+        .map(|&oi| {
+            let i = oi as usize;
+            let inst = nl.insts[i];
+            let kind = lib.cell(inst.cell).kind;
+            let (_, _, n_state) = kind.pins();
+            EvalNode {
+                kind,
+                pin_start: inst.pin_start,
+                state_off: state_off[i],
+                n_ins: inst.n_ins,
+                n_outs: inst.n_outs,
+                n_state: n_state as u8,
+                inst: oi,
+            }
+        })
+        .collect();
+    Ok(EvalPlan { nodes, state_off, seq, total_state })
 }
 
 /// Ready-to-run simulation instance over a netlist.
@@ -112,48 +188,16 @@ impl<'n> Simulator<'n> {
     /// Levelize and allocate. Fails on combinational cycles.
     pub fn new(nl: &'n Netlist, lib: &'n Library) -> Result<Self> {
         let n_insts = nl.insts.len();
-        let order = levelize(nl, lib)?;
-        // State allocation.
-        let mut state_off = vec![0u32; n_insts];
-        let mut total_state = 0u32;
-        let mut seq = Vec::new();
-        for i in 0..n_insts {
-            let kind = lib.cell(nl.insts[i].cell).kind;
-            let bits = kind.pins().2 as u32;
-            state_off[i] = total_state;
-            total_state += bits;
-            if bits > 0 {
-                seq.push(i as u32);
-            }
-        }
-        // Flatten the hot-loop metadata in level order.
-        let nodes = order
-            .iter()
-            .map(|&oi| {
-                let i = oi as usize;
-                let inst = nl.insts[i];
-                let kind = lib.cell(inst.cell).kind;
-                let (_, _, n_state) = kind.pins();
-                EvalNode {
-                    kind,
-                    pin_start: inst.pin_start,
-                    state_off: state_off[i],
-                    n_ins: inst.n_ins,
-                    n_outs: inst.n_outs,
-                    n_state: n_state as u8,
-                    inst: oi,
-                }
-            })
-            .collect();
+        let p = plan(nl, lib)?;
         Ok(Simulator {
             nl,
             lib,
-            nodes,
+            nodes: p.nodes,
             values: vec![false; nl.n_nets()],
-            state: vec![false; total_state as usize],
-            next: vec![false; total_state as usize],
-            state_off,
-            seq,
+            state: vec![false; p.total_state as usize],
+            next: vec![false; p.total_state as usize],
+            state_off: p.state_off,
+            seq: p.seq,
             activity: Activity::new(n_insts),
             cycle: 0,
             scratch_ins: vec![false; 16],
@@ -204,8 +248,8 @@ impl<'n> Simulator<'n> {
             }
         }
         // Evaluate in level order, counting output toggles.  The flat
-        // node array + single-output fast path are the §Perf hot-loop
-        // optimizations (EXPERIMENTS.md §Perf L3).
+        // node array + single-output fast path are the scalar hot-loop
+        // optimizations (DESIGN.md §7 discusses the engine lineup).
         let pins = &self.nl.pins;
         for node in &self.nodes {
             use crate::cells::CellKind as K;

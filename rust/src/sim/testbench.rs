@@ -17,6 +17,13 @@
 //! weights — the exact observables of the golden model, enabling
 //! bit-exact gate-vs-golden equivalence tests and activity extraction
 //! for Table I power.
+//!
+//! Two drivers share the wave protocol: [`ColumnTestbench`] replays
+//! one wave at a time on the scalar engine, and
+//! [`PackedColumnTestbench`] batches up to 64 waves per pass on the
+//! word-packed engine ([`lane_batches`] chunks a wave list so lane `l`
+//! carries waves `l`, `l+lanes`, … with its own STDP weight state; see
+//! DESIGN.md §7).
 
 use crate::arch::T_STEPS;
 use crate::cells::Library;
@@ -26,6 +33,7 @@ use crate::netlist::{NetId, Netlist};
 use crate::tnn::stdp::{brv_lanes, RandPair, StdpParams};
 use crate::tnn::INF;
 
+use super::packed::{PackedSimulator, MAX_LANES};
 use super::Simulator;
 
 /// Cycles per wave (keep in sync with ppa::WAVE_CYCLES).
@@ -151,6 +159,206 @@ impl<'n> ColumnTestbench<'n> {
     }
 }
 
+/// Iterate a stimulus set in lane-sized batches.
+///
+/// Yields `(first_wave_index, chunk)` pairs of at most `lanes` waves
+/// (clamped to `1..=`[`MAX_LANES`]).  Feeding consecutive chunks to
+/// [`PackedColumnTestbench::run_wave_lanes`] gives every lane a strided
+/// subsequence of the waves (lane `l` sees waves `l`, `l+lanes`, …), so
+/// per-lane state such as STDP weights evolves sequentially *within*
+/// each lane.
+pub fn lane_batches<'a>(
+    stim: &'a [Vec<i32>],
+    lanes: usize,
+) -> impl Iterator<Item = (usize, &'a [Vec<i32>])> + 'a {
+    let lanes = lanes.clamp(1, MAX_LANES);
+    stim.chunks(lanes)
+        .enumerate()
+        .map(move |(c, chunk)| (c * lanes, chunk))
+}
+
+/// Lane-batched testbench over a column netlist: the packed-engine
+/// counterpart of [`ColumnTestbench`], driving up to 64 waves per pass.
+pub struct PackedColumnTestbench<'n> {
+    nl: &'n Netlist,
+    ports: &'n ColumnPorts,
+    sim: PackedSimulator<'n>,
+    p: usize,
+    q: usize,
+    inputs: Vec<(NetId, u64)>,
+}
+
+impl<'n> PackedColumnTestbench<'n> {
+    /// Attach to an elaborated column with `lanes` (1..=64) stimulus
+    /// lanes.
+    pub fn new(
+        nl: &'n Netlist,
+        ports: &'n ColumnPorts,
+        lib: &'n Library,
+        lanes: usize,
+    ) -> Result<Self> {
+        let sim = PackedSimulator::new(nl, lib, lanes)?;
+        Ok(PackedColumnTestbench {
+            nl,
+            ports,
+            p: ports.x.len(),
+            q: ports.fires.len(),
+            sim,
+            inputs: Vec::new(),
+        })
+    }
+
+    /// Immutable access to the aggregated activity counters.
+    pub fn activity(&self) -> &super::Activity {
+        &self.sim.activity
+    }
+
+    /// Underlying netlist.
+    pub fn netlist(&self) -> &Netlist {
+        self.nl
+    }
+
+    /// Lane capacity of the underlying engine.
+    pub fn lanes(&self) -> usize {
+        self.sim.lanes()
+    }
+
+    /// Run one wave across `k ≤ lanes` stimuli in parallel: lane `l`
+    /// is driven by `spike_times[l]` / `rand[l]`, exactly the schedule
+    /// of [`ColumnTestbench::run_wave`], and gets its own
+    /// [`WaveResult`].  Lanes `k..` are masked out of activity.
+    pub fn run_wave_lanes(
+        &mut self,
+        spike_times: &[Vec<i32>],
+        rand: &[Vec<RandPair>],
+        params: &StdpParams,
+    ) -> Vec<WaveResult> {
+        let k = spike_times.len();
+        assert!(
+            (1..=self.sim.lanes()).contains(&k),
+            "1..={} waves per pass",
+            self.sim.lanes()
+        );
+        assert_eq!(rand.len(), k);
+        for s in spike_times {
+            assert_eq!(s.len(), self.p);
+        }
+        for r in rand {
+            assert_eq!(r.len(), self.p * self.q);
+        }
+        self.sim.set_active_lanes(k);
+        let mut pre = vec![vec![INF; self.q]; k];
+        let mut post = vec![vec![INF; self.q]; k];
+
+        for cyc in 0..WAVE_LEN {
+            self.inputs.clear();
+            let compute = cyc < T_STEPS as usize;
+            let stdp_eval = cyc == T_STEPS as usize; // cycle 15
+            let reset = cyc == WAVE_LEN - 1; // cycle 16
+            // Input levels, one word per input: bit l = lane l's level.
+            for j in 0..self.p {
+                let mut w = 0u64;
+                if !reset {
+                    for (l, s) in spike_times.iter().enumerate() {
+                        let t = s[j];
+                        if t != INF && (cyc as i32) >= t {
+                            w |= 1 << l;
+                        }
+                    }
+                }
+                self.inputs.push((self.ports.x[j], w));
+            }
+            self.inputs
+                .push((self.ports.gclk, if reset { !0u64 } else { 0 }));
+            // BRV lanes valid on the STDP evaluation cycle.
+            if stdp_eval {
+                for syn in 0..self.p * self.q {
+                    let mut words = [0u64; BRV_PER_SYN];
+                    for (l, r) in rand.iter().enumerate() {
+                        let lanes = brv_lanes(r[syn], params);
+                        for (b, &v) in lanes.iter().enumerate() {
+                            words[b] |= (v as u64) << l;
+                        }
+                    }
+                    for (b, &w) in words.iter().enumerate() {
+                        self.inputs
+                            .push((self.ports.brv[syn * BRV_PER_SYN + b], w));
+                    }
+                }
+            } else if cyc == 0 || reset {
+                for syn in 0..self.p * self.q {
+                    for b in 0..BRV_PER_SYN {
+                        self.inputs
+                            .push((self.ports.brv[syn * BRV_PER_SYN + b], 0));
+                    }
+                }
+            }
+            self.sim.tick(&self.inputs, stdp_eval);
+            // Record spike times during the compute window.
+            if compute {
+                for (l, (pre_l, post_l)) in
+                    pre.iter_mut().zip(post.iter_mut()).enumerate()
+                {
+                    for i in 0..self.q {
+                        if pre_l[i] == INF
+                            && self.sim.get(self.ports.fires[i], l)
+                        {
+                            pre_l[i] = cyc as i32;
+                        }
+                        if post_l[i] == INF
+                            && self.sim.get(self.ports.grants[i], l)
+                        {
+                            post_l[i] = cyc as i32;
+                        }
+                    }
+                }
+            }
+        }
+        pre.into_iter()
+            .zip(post)
+            .enumerate()
+            .map(|(l, (pre, post))| WaveResult {
+                pre,
+                post,
+                weights: self.read_weights(l),
+            })
+            .collect()
+    }
+
+    /// Run a whole stimulus set through lane-sized batches
+    /// ([`lane_batches`]): chunk `c` drives waves `c*lanes ..` in
+    /// parallel, so lane `l` carries its weight state through waves
+    /// `l`, `l+lanes`, … — the packed wave schedule (DESIGN.md §7).
+    /// Returns one [`WaveResult`] per wave, in wave order.
+    pub fn run_waves(
+        &mut self,
+        stim: &[Vec<i32>],
+        rand: &[Vec<RandPair>],
+        params: &StdpParams,
+    ) -> Vec<WaveResult> {
+        assert_eq!(stim.len(), rand.len());
+        let lanes = self.sim.lanes();
+        let mut out = Vec::with_capacity(stim.len());
+        for ((_, s), r) in lane_batches(stim, lanes).zip(rand.chunks(lanes)) {
+            out.extend(self.run_wave_lanes(s, r, params));
+        }
+        out
+    }
+
+    /// Read the committed weight registers of one lane.
+    pub fn read_weights(&self, lane: usize) -> Vec<i32> {
+        self.ports
+            .weights
+            .iter()
+            .map(|bits| {
+                (self.sim.get(bits[0], lane) as i32)
+                    | (self.sim.get(bits[1], lane) as i32) << 1
+                    | (self.sim.get(bits[2], lane) as i32) << 2
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +422,101 @@ mod tests {
     fn flavours_match_each_other_with_different_seed() {
         check_equivalence(Flavor::Std, 0x1111, 10);
         check_equivalence(Flavor::Custom, 0x1111, 10);
+    }
+
+    fn random_waves(
+        spec: &ColumnSpec,
+        n: usize,
+        seed: u16,
+    ) -> (Vec<Vec<i32>>, Vec<Vec<RandPair>>) {
+        let mut stim = Lfsr16::new(seed ^ 0x5a5a);
+        let mut lfsr = Lfsr16::new(seed);
+        let waves = (0..n)
+            .map(|_| {
+                (0..spec.p)
+                    .map(|_| {
+                        let v = stim.next_u16();
+                        if v & 0x7 == 7 {
+                            INF
+                        } else {
+                            i32::from(v % 8)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let rands = (0..n)
+            .map(|_| {
+                (0..spec.p * spec.q).map(|_| lfsr.draw_pair()).collect()
+            })
+            .collect();
+        (waves, rands)
+    }
+
+    /// A single-lane packed testbench replays the exact scalar wave
+    /// schedule: identical results AND identical activity counters,
+    /// live STDP included.
+    #[test]
+    fn packed_single_lane_matches_scalar_sequence() {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 5, q: 3, theta: 7 };
+        let (nl, ports) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let params = StdpParams::default_training();
+        let (waves, rands) = random_waves(&spec, 6, 0x1d0b);
+
+        let mut tb = ColumnTestbench::new(&nl, &ports, &lib).unwrap();
+        let scalar: Vec<WaveResult> = waves
+            .iter()
+            .zip(&rands)
+            .map(|(s, r)| tb.run_wave(s, r, &params))
+            .collect();
+
+        let mut ptb =
+            PackedColumnTestbench::new(&nl, &ports, &lib, 1).unwrap();
+        let packed = ptb.run_waves(&waves, &rands, &params);
+
+        assert_eq!(scalar, packed);
+        assert_eq!(tb.activity().toggles, ptb.activity().toggles);
+        assert_eq!(tb.activity().clock_ticks, ptb.activity().clock_ticks);
+        assert_eq!(tb.activity().cycles, ptb.activity().cycles);
+    }
+
+    /// One multi-lane pass equals the same waves run through
+    /// independent single-wave scalar testbenches, lane for lane —
+    /// results and summed activity.
+    #[test]
+    fn packed_parallel_lanes_match_independent_scalar_runs() {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 6, q: 3, theta: 8 };
+        let (nl, ports) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let params = StdpParams::default_training();
+        let (waves, rands) = random_waves(&spec, 5, 0x77a1);
+
+        let mut ptb =
+            PackedColumnTestbench::new(&nl, &ports, &lib, 8).unwrap();
+        let packed = ptb.run_wave_lanes(&waves, &rands, &params);
+
+        let mut total = crate::sim::Activity::new(nl.insts.len());
+        for (l, (s, r)) in waves.iter().zip(&rands).enumerate() {
+            let mut tb = ColumnTestbench::new(&nl, &ports, &lib).unwrap();
+            let res = tb.run_wave(s, r, &params);
+            assert_eq!(res, packed[l], "lane {l}");
+            total.merge(tb.activity());
+        }
+        assert_eq!(total.toggles, ptb.activity().toggles);
+        assert_eq!(total.clock_ticks, ptb.activity().clock_ticks);
+        assert_eq!(total.cycles, ptb.activity().cycles);
+    }
+
+    #[test]
+    fn lane_batches_chunk_and_index() {
+        let stim: Vec<Vec<i32>> = (0..10).map(|i| vec![i]).collect();
+        let got: Vec<(usize, usize)> = lane_batches(&stim, 4)
+            .map(|(base, chunk)| (base, chunk.len()))
+            .collect();
+        assert_eq!(got, vec![(0, 4), (4, 4), (8, 2)]);
+        // Clamped to at least one lane.
+        assert_eq!(lane_batches(&stim, 0).count(), 10);
     }
 
     #[test]

@@ -10,10 +10,10 @@ use tnn7::cells::Library;
 use tnn7::config::TnnConfig;
 use tnn7::data::digits::XorShift;
 use tnn7::netlist::column::{build_column, ColumnSpec};
-use tnn7::netlist::{Builder, Flavor};
+use tnn7::netlist::{Builder, ClockDomain, Flavor, NetId, Netlist};
 use tnn7::runtime::json::Json;
-use tnn7::sim::testbench::ColumnTestbench;
-use tnn7::sim::Simulator;
+use tnn7::sim::testbench::{ColumnTestbench, PackedColumnTestbench};
+use tnn7::sim::{Activity, PackedSimulator, Simulator};
 use tnn7::tnn::column::column_fwd;
 use tnn7::tnn::stdp::{stdp_step, RandPair, StdpParams};
 use tnn7::tnn::Lfsr16;
@@ -162,6 +162,169 @@ fn prop_gate_column_equals_golden_random_geometries() {
                     "seed {seed} {flavor:?} w{wave}"
                 );
             }
+        }
+    }
+}
+
+/// Random feed-forward netlist mixing combinational gates with
+/// aclk- and gclk-domain registers (no combinational cycles possible
+/// by construction).
+fn random_netlist(lib: &Library, seed: u64) -> Netlist {
+    let mut r = rng(seed);
+    let mut b = Builder::new("rnd", lib);
+    let n_in = 2 + (r.next_u64() % 5) as usize;
+    let mut pool: Vec<NetId> =
+        (0..n_in).map(|i| b.input(format!("x{i}"))).collect();
+    let ops = 10 + (r.next_u64() % 40) as usize;
+    for _ in 0..ops {
+        let a = pool[(r.next_u64() as usize) % pool.len()];
+        let c = pool[(r.next_u64() as usize) % pool.len()];
+        let d = pool[(r.next_u64() as usize) % pool.len()];
+        let n = match r.next_u64() % 8 {
+            0 => b.inv(a),
+            1 => b.and2(a, c),
+            2 => b.or2(a, c),
+            3 => b.xor2(a, c),
+            4 => b.maj3(a, c, d),
+            5 => b.mux2(a, c, d),
+            6 => b.dff(a, ClockDomain::Aclk),
+            _ => b.dff(a, ClockDomain::Gclk),
+        };
+        pool.push(n);
+    }
+    let y = *pool.last().unwrap();
+    b.output(y, "y");
+    b.finish().unwrap()
+}
+
+/// INVARIANT: the word-packed engine is bit-identical, lane for lane,
+/// to independent scalar runs on random netlists and random stimuli —
+/// every net value every tick, and the aggregated toggle / clock-tick
+/// / cycle counters — including randomly gamma-edge-flagged ticks.
+#[test]
+fn prop_packed_engine_equals_scalar_lanes() {
+    let lib = Library::asap7_only();
+    for seed in 0..10u64 {
+        let mut r = rng(seed * 7919 + 13);
+        let nl = random_netlist(&lib, seed + 500);
+        let lanes = 1 + (r.next_u64() % 64) as usize;
+        let mut packed = PackedSimulator::new(&nl, &lib, lanes).unwrap();
+        let mut scalars: Vec<Simulator> = (0..lanes)
+            .map(|_| Simulator::new(&nl, &lib).unwrap())
+            .collect();
+        for t in 0..30u32 {
+            let gamma = r.next_u64() & 3 == 0;
+            let words: Vec<(NetId, u64)> =
+                nl.inputs.iter().map(|&n| (n, r.next_u64())).collect();
+            for (l, s) in scalars.iter_mut().enumerate() {
+                let iv: Vec<(NetId, bool)> = words
+                    .iter()
+                    .map(|&(n, w)| (n, w >> l & 1 == 1))
+                    .collect();
+                s.tick(&iv, gamma);
+            }
+            packed.tick(&words, gamma);
+            for (l, s) in scalars.iter().enumerate() {
+                for net in 0..nl.n_nets() {
+                    let id = NetId(net as u32);
+                    assert_eq!(
+                        packed.get(id, l),
+                        s.get(id),
+                        "seed {seed} tick {t} lane {l} net {net}"
+                    );
+                }
+            }
+        }
+        let mut total = Activity::new(nl.insts.len());
+        for s in &scalars {
+            total.merge(&s.activity);
+        }
+        assert_eq!(total.toggles, packed.activity.toggles, "seed {seed}");
+        assert_eq!(
+            total.clock_ticks, packed.activity.clock_ticks,
+            "seed {seed}"
+        );
+        assert_eq!(total.cycles, packed.activity.cycles, "seed {seed}");
+    }
+}
+
+/// INVARIANT: the packed column testbench's wave schedule (lane `l`
+/// carries waves `l`, `l+lanes`, … with live STDP) is bit-identical —
+/// spike times, weights, AND activity counters — to running each
+/// lane's strided wave subsequence through a scalar testbench,
+/// including the gamma-edge-flagged STDP-evaluation tick of every wave
+/// and a final partial batch that exercises the lane mask.
+#[test]
+fn prop_packed_column_schedule_matches_strided_scalar() {
+    let lib = Library::with_macros();
+    let spec = ColumnSpec { p: 5, q: 3, theta: 7 };
+    let params = StdpParams::default_training();
+    for flavor in [Flavor::Std, Flavor::Custom] {
+        let (nl, ports) = build_column(&lib, flavor, &spec).unwrap();
+        for seed in 0..3u16 {
+            let n = 10;
+            let lanes = 4; // chunks of 4, 4, 2
+            let mut stim =
+                Lfsr16::new((seed.wrapping_mul(311) ^ 0x5a5a) | 1);
+            let mut lfsr = Lfsr16::new(seed.wrapping_mul(977) | 1);
+            let waves: Vec<Vec<i32>> = (0..n)
+                .map(|_| {
+                    (0..spec.p)
+                        .map(|_| {
+                            let v = stim.next_u16();
+                            if v & 0x7 == 7 {
+                                INF
+                            } else {
+                                i32::from(v % 8)
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let rands: Vec<Vec<RandPair>> = (0..n)
+                .map(|_| {
+                    (0..spec.p * spec.q)
+                        .map(|_| lfsr.draw_pair())
+                        .collect()
+                })
+                .collect();
+
+            let mut ptb =
+                PackedColumnTestbench::new(&nl, &ports, &lib, lanes)
+                    .unwrap();
+            let packed = ptb.run_waves(&waves, &rands, &params);
+            assert_eq!(packed.len(), n);
+
+            let mut total = Activity::new(nl.insts.len());
+            for l in 0..lanes {
+                let mut tb =
+                    ColumnTestbench::new(&nl, &ports, &lib).unwrap();
+                let mut w = l;
+                while w < n {
+                    let res = tb.run_wave(&waves[w], &rands[w], &params);
+                    assert_eq!(
+                        res, packed[w],
+                        "{flavor:?} seed {seed} wave {w}"
+                    );
+                    w += lanes;
+                }
+                total.merge(tb.activity());
+            }
+            assert_eq!(
+                total.toggles,
+                ptb.activity().toggles,
+                "{flavor:?} seed {seed}: toggle counts"
+            );
+            assert_eq!(
+                total.clock_ticks,
+                ptb.activity().clock_ticks,
+                "{flavor:?} seed {seed}: clock ticks"
+            );
+            assert_eq!(
+                total.cycles,
+                ptb.activity().cycles,
+                "{flavor:?} seed {seed}: cycles"
+            );
         }
     }
 }
