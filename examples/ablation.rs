@@ -15,6 +15,7 @@
 use tnn7::cells::{Library, TechParams};
 use tnn7::config::TnnConfig;
 use tnn7::data::Dataset;
+use tnn7::flow::compare::{run_sweep, SweepJob};
 use tnn7::flow::{measure_with, Target};
 use tnn7::netlist::column::{build_column, ColumnSpec};
 use tnn7::netlist::Flavor;
@@ -67,20 +68,35 @@ fn main() -> anyhow::Result<()> {
     println!(" term is what lets Table I respond to real workloads)\n");
 
     // ---- 2. wave-count convergence ------------------------------------
+    // The six wave counts are independent measurements of the same
+    // target, so they run concurrently through the sweep executor;
+    // deltas are computed from the in-order results afterwards.
     println!("== Ablation 2: power-estimate convergence vs simulated waves ==");
     println!("{:>8} {:>12} {:>10}", "waves", "power uW", "delta");
     let data = Dataset::generate(32, cfg.data_seed);
+    let wave_counts = [1usize, 2, 4, 8, 16, 32];
+    let jobs: Vec<SweepJob> = wave_counts
+        .iter()
+        .map(|&waves| {
+            let mut c = cfg.clone();
+            c.sim_waves = waves;
+            SweepJob {
+                label: format!("{waves} waves"),
+                target: Target::column(Flavor::Std, spec),
+                cfg: c,
+            }
+        })
+        .collect();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4);
     let mut last = f64::NAN;
-    for waves in [1usize, 2, 4, 8, 16, 32] {
-        let mut c = cfg.clone();
-        c.sim_waves = waves;
-        let r = measure_with(
-            Target::column(Flavor::Std, spec),
-            &c,
-            &lib,
-            &tech,
-            &data,
-        )?;
+    for (&waves, res) in wave_counts
+        .iter()
+        .zip(run_sweep(&jobs, &lib, &tech, &data, threads))
+    {
+        let r = res.report?;
         let delta = if last.is_nan() {
             "-".to_string()
         } else {

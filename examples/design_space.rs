@@ -9,13 +9,17 @@
 //! 2. **Column-geometry PPA sweep** — neurons-per-column vs area/power
 //!    (gate-level, via the measurement driver) for a fixed input count:
 //!    the hardware cost curve the threshold choice trades against.
+//!    The design points run concurrently through the flow's parallel
+//!    sweep executor (`--threads N`, default: up to 4 cores).
 //!
 //! Usage: cargo run --release --example design_space [-- --quick]
+//!        [--threads N]
 
 use tnn7::cells::{Library, TechParams};
 use tnn7::config::TnnConfig;
 use tnn7::data::Dataset;
-use tnn7::flow::{measure_with, Target};
+use tnn7::flow::compare::{run_sweep, SweepJob};
+use tnn7::flow::Target;
 use tnn7::netlist::column::ColumnSpec;
 use tnn7::netlist::Flavor;
 use tnn7::tnn::encoding::encode_image;
@@ -109,7 +113,16 @@ fn main() -> anyhow::Result<()> {
         best.0 * 100.0
     );
 
-    println!("\n== Column-geometry PPA sweep (gate-level, custom flavour) ==");
+    let threads = arg_value("--threads").unwrap_or_else(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(4)
+    });
+    println!(
+        "\n== Column-geometry PPA sweep (gate-level, custom flavour, \
+         {threads} threads) =="
+    );
     println!(
         "{:>6} {:>6} {:>12} {:>12} {:>12}",
         "p", "q", "power uW", "time ns", "area mm2"
@@ -121,16 +134,32 @@ fn main() -> anyhow::Result<()> {
         ..TnnConfig::default()
     };
     let data = Dataset::generate(8, 7);
-    for q in [4usize, 8, 12, 16] {
-        let spec = ColumnSpec::benchmark(32, q);
-        // One flow run per design point — a sweep is just a loop over
-        // Targets.
-        let target = Target::column(Flavor::Custom, spec);
-        let r = measure_with(target, &cfg, &lib, &tech, &data)?;
+    // One flow run per design point — a sweep is a job list handed to
+    // the parallel executor; reports come back in job order,
+    // bit-identical to the serial loop.
+    let qs = [4usize, 8, 12, 16];
+    let jobs: Vec<SweepJob> = qs
+        .iter()
+        .map(|&q| {
+            let spec = ColumnSpec::benchmark(32, q);
+            SweepJob::of(Target::column(Flavor::Custom, spec), &cfg)
+        })
+        .collect();
+    for (&q, res) in
+        qs.iter().zip(run_sweep(&jobs, &lib, &tech, &data, threads))
+    {
+        let r = res.report?;
         println!(
             "{:>6} {:>6} {:>12.3} {:>12.2} {:>12.5}",
             32, q, r.total.power_uw, r.total.time_ns, r.total.area_mm2
         );
     }
     Ok(())
+}
+
+/// `--name N` lookup over the raw argv (tiny example-local parser).
+fn arg_value(name: &str) -> Option<usize> {
+    let args: Vec<String> = std::env::args().collect();
+    let i = args.iter().position(|a| a == name)?;
+    args.get(i + 1)?.parse().ok()
 }

@@ -4,6 +4,15 @@
 
 use std::time::Instant;
 
+/// `--name N` lookup over the raw argv (shared by the bench binaries;
+/// not every bench uses it, hence the allow).
+#[allow(dead_code)]
+pub fn arg_value(name: &str) -> Option<usize> {
+    let args: Vec<String> = std::env::args().collect();
+    let i = args.iter().position(|a| a == name)?;
+    args.get(i + 1)?.parse().ok()
+}
+
 /// Timing summary of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchStats {

@@ -2,18 +2,22 @@
 //!
 //! Two sections:
 //!
-//! 1. **Measurement flow, scalar vs packed** — times the full
-//!    `elaborate → sta → simulate → power → area → report` pipeline on
-//!    one column with `sim_lanes = 1` (scalar engine) and
-//!    `sim_lanes = 64` (word-packed engine), reporting the end-to-end
-//!    speedup the packed simulate stage buys.  Runs with no artifacts.
+//! 1. **Measurement flow: scalar vs packed vs threaded** — times the
+//!    full `elaborate → sta → simulate → power → area → report`
+//!    pipeline on one column with `sim_lanes = 1` (scalar engine),
+//!    `sim_lanes = 64` (word-packed engine), and `sim_lanes = 64` +
+//!    `sim_threads = 4` (thread-parallel packed wave schedule),
+//!    reporting end-to-end speedups.  Runs with no artifacts, and
+//!    writes the machine-readable `BENCH_pipeline.json` (per point:
+//!    lanes, threads, seconds, speedup vs the scalar flow) so the perf
+//!    trajectory is tracked across PRs.
 //! 2. **HLO pipeline** — one batch of each AOT program on the PJRT CPU
 //!    client: layer forward, fused layer train step, and the encode
 //!    stage, reporting images/second plus the coordinator's JSON
 //!    metrics artifact (the same shape `tnn7 train --metrics-json`
 //!    writes).  Requires `make artifacts`.
 //!
-//! Run: cargo bench --bench pipeline_throughput
+//! Run: cargo bench --bench pipeline_throughput [-- --threads N]
 
 #[path = "common/mod.rs"]
 mod common;
@@ -25,21 +29,26 @@ use tnn7::data::Dataset;
 use tnn7::flow::{self, Target};
 use tnn7::netlist::column::ColumnSpec;
 use tnn7::netlist::Flavor;
+use tnn7::runtime::json::Json;
 
-fn bench_measure_flow() -> anyhow::Result<()> {
+fn bench_measure_flow(threads: usize) -> anyhow::Result<()> {
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
     let data = Dataset::generate(8, 3);
     let spec = ColumnSpec::benchmark(32, 12);
-    let mut mean = [0.0f64; 2];
-    for (i, lanes) in [1usize, 64].into_iter().enumerate() {
+    let points = [(1usize, 1usize), (64, 1), (64, threads)];
+    let mut mean = [0.0f64; 3];
+    for (i, (lanes, sim_threads)) in points.into_iter().enumerate() {
         let cfg = TnnConfig {
             sim_waves: 16,
             sim_lanes: lanes,
+            sim_threads,
             ..TnnConfig::default()
         };
         let st = common::bench(
-            &format!("flow/measure/custom/32x12/lanes{lanes}"),
+            &format!(
+                "flow/measure/custom/32x12/lanes{lanes}t{sim_threads}"
+            ),
             3,
             || {
                 flow::measure_with(
@@ -56,14 +65,35 @@ fn bench_measure_flow() -> anyhow::Result<()> {
     }
     println!(
         "      16-wave measurement pipeline: packed64 simulate is \
-         {:.1}x faster end-to-end",
-        mean[0] / mean[1]
+         {:.1}x faster end-to-end, {:.1}x with {threads} threads",
+        mean[0] / mean[1],
+        mean[0] / mean[2],
     );
+    let json_points: Vec<Json> = points
+        .into_iter()
+        .zip(mean)
+        .map(|((lanes, sim_threads), s)| {
+            Json::obj(vec![
+                ("lanes", Json::int(lanes as u64)),
+                ("threads", Json::int(sim_threads as u64)),
+                ("mean_s", Json::num(s)),
+                ("speedup_vs_scalar", Json::num(mean[0] / s)),
+            ])
+        })
+        .collect();
+    let out = Json::obj(vec![
+        ("bench", Json::str("pipeline_throughput")),
+        ("waves", Json::int(16)),
+        ("column", Json::str("32x12")),
+        ("points", Json::Arr(json_points)),
+    ]);
+    std::fs::write("BENCH_pipeline.json", out.to_string_pretty())?;
+    println!("wrote BENCH_pipeline.json");
     Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
-    bench_measure_flow()?;
+    bench_measure_flow(common::arg_value("--threads").unwrap_or(4).max(2))?;
 
     let cfg = TnnConfig::default();
     let data = Dataset::generate(16, cfg.data_seed);

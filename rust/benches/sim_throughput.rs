@@ -1,20 +1,28 @@
-//! Bench: gate-level simulator throughput, scalar vs word-packed.
+//! Bench: gate-level simulator throughput — scalar vs word-packed vs
+//! thread-parallel.
 //!
 //! The levelized simulator is the hot path of every Table I/II
 //! reproduction; this bench measures *stimulus waves per second*
-//! through both engines on the same elaborated netlists:
+//! through three execution modes on the same elaborated netlists:
 //!
 //! * scalar reference engine — one wave at a time (`run_wave`),
 //! * packed engine — 64 waves per pass (`run_wave_lanes`),
+//! * thread-parallel packed schedule — `run_waves_parallel` at 1
+//!   thread and at `--threads N` (default 4), construction included in
+//!   both so the speedup column is apples-to-apples,
 //!
-//! for the two prototype layer columns and the three Table-I columns,
-//! in both flavours, and reports the packed:scalar speedup plus
-//! gate-evals/second.  The acceptance bar (ISSUE 2) is ≥8× waves/sec
-//! on the prototype column; the per-lane bit-equivalence of the two
-//! engines is proven by `tests/proptests.rs`, not here.
+//! plus a **sharded-engine** section: a multi-column layer netlist
+//! (columns + voter) driven tick-for-tick through `PackedSimulator`
+//! and through `ShardedSimulator` (one worker per column shard, with
+//! quiescence gating), reporting ticks/second.
 //!
-//! Run:   cargo bench --bench sim_throughput
-//! Smoke: cargo bench --bench sim_throughput -- --smoke
+//! Results also land in `BENCH_sim.json` (waves/sec, lanes, threads,
+//! speedups vs scalar and vs 1 thread) so the perf trajectory is
+//! machine-readable across PRs.  The cross-engine bit-equivalence is
+//! proven by `tests/proptests.rs`, not here.
+//!
+//! Run:   cargo bench --bench sim_throughput [-- --threads N]
+//! Smoke: cargo bench --bench sim_throughput -- --smoke [--threads N]
 //!        (1 iteration, smallest column only — the CI regression guard)
 
 #[path = "common/mod.rs"]
@@ -25,16 +33,22 @@ use tnn7::config::TnnConfig;
 use tnn7::coordinator::activity_bridge::stimulus;
 use tnn7::data::Dataset;
 use tnn7::flow::table1_specs;
-use tnn7::netlist::column::{build_column, ColumnSpec};
+use tnn7::netlist::column::{build_column, ColumnSpec, BRV_PER_SYN};
+use tnn7::netlist::layer::{build_layer_netlist, LayerSpec};
 use tnn7::netlist::prototype::PrototypeSpec;
 use tnn7::netlist::Flavor;
+use tnn7::runtime::json::Json;
 use tnn7::sim::packed::MAX_LANES;
-use tnn7::sim::testbench::{ColumnTestbench, PackedColumnTestbench, WAVE_LEN};
+use tnn7::sim::testbench::{
+    run_waves_parallel, ColumnTestbench, PackedColumnTestbench, WAVE_LEN,
+};
+use tnn7::sim::{PackedSimulator, ShardedSimulator, SimTick};
 use tnn7::tnn::stdp::RandPair;
 use tnn7::tnn::Lfsr16;
 
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = common::arg_value("--threads").unwrap_or(4).max(1);
     let cfg = TnnConfig::default();
     let lib = Library::with_macros();
     let data = Dataset::generate(8, 3);
@@ -54,6 +68,7 @@ fn main() -> anyhow::Result<()> {
         points.truncate(1);
     }
 
+    let mut json_points: Vec<Json> = Vec::new();
     for (label, spec) in &points {
         let flavors: &[Flavor] = if smoke {
             &[Flavor::Custom]
@@ -111,18 +126,170 @@ fn main() -> anyhow::Result<()> {
             );
             let packed_wps = MAX_LANES as f64 / packed.mean_s;
 
+            // Thread-parallel packed schedule: 2 full chunks (128
+            // waves) per call so testbench construction — included at
+            // every thread count — is amortized the same way.
+            let mt_waves = 2 * MAX_LANES;
+            let mt_stim =
+                stimulus(&data, p, mt_waves, cfg.encode_threshold as f32);
+            let mt_rands: Vec<Vec<RandPair>> = (0..mt_waves)
+                .map(|_| (0..p * q).map(|_| lfsr.draw_pair()).collect())
+                .collect();
+            let iters = if smoke { 1 } else { 2 };
+            let mut wps_by_threads = [0.0f64; 2];
+            for (slot, t) in [1usize, threads].into_iter().enumerate() {
+                let st = common::bench(
+                    &format!("sim/waves-mt{t}/{flavor:?}/{label}"),
+                    iters,
+                    || {
+                        run_waves_parallel(
+                            &nl, &ports, &lib, MAX_LANES, t, &mt_stim,
+                            &mt_rands, &params,
+                        )
+                        .expect("parallel waves");
+                    },
+                );
+                wps_by_threads[slot] = mt_waves as f64 / st.mean_s;
+            }
+
             println!(
                 "      {n_insts} instances x {WAVE_LEN} cycles/wave | \
                  scalar {:.1} waves/s ({:.1} M gate-evals/s) | \
                  packed64 {:.1} waves/s ({:.1} M gate-evals/s) | \
-                 speedup {:.1}x",
+                 speedup {:.1}x | threads {}: {:.1} -> {:.1} waves/s \
+                 ({:.2}x)",
                 scalar_wps,
                 (n_insts * WAVE_LEN) as f64 * scalar_wps / 1e6,
                 packed_wps,
                 (n_insts * WAVE_LEN) as f64 * packed_wps / 1e6,
-                packed_wps / scalar_wps
+                packed_wps / scalar_wps,
+                threads,
+                wps_by_threads[0],
+                wps_by_threads[1],
+                wps_by_threads[1] / wps_by_threads[0],
             );
+            json_points.push(Json::obj(vec![
+                ("point", Json::str(label.clone())),
+                ("flavor", Json::str(format!("{flavor:?}"))),
+                ("instances", Json::int(n_insts as u64)),
+                ("lanes", Json::int(MAX_LANES as u64)),
+                ("threads", Json::int(threads as u64)),
+                ("scalar_wps", Json::num(scalar_wps)),
+                ("packed_wps", Json::num(packed_wps)),
+                ("threads1_wps", Json::num(wps_by_threads[0])),
+                ("threadsN_wps", Json::num(wps_by_threads[1])),
+                (
+                    "speedup_packed_vs_scalar",
+                    Json::num(packed_wps / scalar_wps),
+                ),
+                (
+                    "speedup_mt_vs_1t",
+                    Json::num(wps_by_threads[1] / wps_by_threads[0]),
+                ),
+            ]));
         }
     }
+
+    // ---- sharded engine on a multi-column layer netlist ---------------
+    // Columns + voter, driven with a sparse wave-shaped tick schedule:
+    // the packed engine evaluates every instance every tick, the
+    // sharded engine runs one worker per column shard with quiescence
+    // gating (bit-identical activity; proven in tests/proptests.rs).
+    let col = if smoke {
+        ColumnSpec { p: 4, q: 2, theta: 6 }
+    } else {
+        proto.l2.column
+    };
+    let cols = threads.max(2);
+    let lspec = LayerSpec { cols, column: col };
+    let (lnl, lports) =
+        build_layer_netlist(&lib, Flavor::Custom, &lspec)?;
+    let n_waves = if smoke { 2 } else { 8 };
+    let mut rng = Lfsr16::new(0x51ED);
+    let mut schedule: Vec<SimTick> = Vec::new();
+    for _ in 0..n_waves {
+        for cyc in 0..WAVE_LEN {
+            let mut inputs = Vec::new();
+            for cp in &lports.columns {
+                for (j, &x) in cp.x.iter().enumerate() {
+                    // Sparse input levels: most columns idle per wave.
+                    let t_spike = rng.next_u16() % 23;
+                    let high = cyc >= t_spike as usize + 7 && j % 3 == 0;
+                    inputs.push((x, if high { !0u64 } else { 0 }));
+                }
+                inputs.push((
+                    cp.gclk,
+                    if cyc == WAVE_LEN - 1 { !0u64 } else { 0 },
+                ));
+                for (k, &b) in cp.brv.iter().enumerate() {
+                    if k % BRV_PER_SYN == 0 {
+                        inputs.push((
+                            b,
+                            if cyc == WAVE_LEN - 2 { !0u64 } else { 0 },
+                        ));
+                    }
+                }
+            }
+            schedule.push(SimTick {
+                inputs,
+                gclk_edge: cyc == WAVE_LEN - 2,
+            });
+        }
+    }
+    let ticks = schedule.len();
+    let iters = if smoke { 1 } else { 3 };
+
+    let mut pk = PackedSimulator::new(&lnl, &lib, MAX_LANES)?;
+    let packed_t = common::bench(
+        &format!("sim/sharded-base/packed/{cols}col"),
+        iters,
+        || {
+            for t in &schedule {
+                pk.tick(&t.inputs, t.gclk_edge);
+            }
+        },
+    );
+    let mut sh =
+        ShardedSimulator::new(&lnl, &lib, MAX_LANES, threads, &[])?;
+    let shards = sh.shard_count();
+    let sharded_t = common::bench(
+        &format!("sim/sharded/{cols}col/{shards}w"),
+        iters,
+        || {
+            sh.run_ticks(&schedule);
+        },
+    );
+    let packed_tps = ticks as f64 / packed_t.mean_s;
+    let sharded_tps = ticks as f64 / sharded_t.mean_s;
+    println!(
+        "      layer {} cols x {} insts | packed {:.0} ticks/s | \
+         sharded({} workers) {:.0} ticks/s | speedup {:.2}x",
+        cols,
+        lnl.insts.len(),
+        packed_tps,
+        shards,
+        sharded_tps,
+        sharded_tps / packed_tps,
+    );
+    let sharded_json = Json::obj(vec![
+        ("netlist", Json::str(format!("layer_{cols}x{}x{}", col.p, col.q))),
+        ("instances", Json::int(lnl.insts.len() as u64)),
+        ("shards", Json::int(shards as u64)),
+        ("threads", Json::int(threads as u64)),
+        ("packed_tps", Json::num(packed_tps)),
+        ("sharded_tps", Json::num(sharded_tps)),
+        ("speedup", Json::num(sharded_tps / packed_tps)),
+    ]);
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("sim_throughput")),
+        ("smoke", if smoke { Json::int(1) } else { Json::int(0) }),
+        ("lanes", Json::int(MAX_LANES as u64)),
+        ("threads", Json::int(threads as u64)),
+        ("points", Json::Arr(json_points)),
+        ("sharded", sharded_json),
+    ]);
+    std::fs::write("BENCH_sim.json", out.to_string_pretty())?;
+    println!("wrote BENCH_sim.json");
     Ok(())
 }

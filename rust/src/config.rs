@@ -141,6 +141,10 @@ pub struct TnnConfig {
     /// Stimulus lanes per simulator tick (1 = scalar reference engine,
     /// 2..=64 = word-packed engine; see DESIGN.md §7).
     pub sim_lanes: usize,
+    /// Worker threads for the `simulate` stage's packed wave schedule
+    /// and for parallel target sweeps (1 = serial; DESIGN.md §8).
+    /// Thread count never changes measured activity — only wall time.
+    pub sim_threads: usize,
 }
 
 impl Default for TnnConfig {
@@ -160,6 +164,7 @@ impl Default for TnnConfig {
             mu_search: 0.05,
             sim_waves: 8,
             sim_lanes: 1,
+            sim_threads: 1,
         }
     }
 }
@@ -192,7 +197,7 @@ impl TnnConfig {
                     "mu_search",
                 ],
             ),
-            ("sim", &["sim_waves", "sim_lanes"]),
+            ("sim", &["sim_waves", "sim_lanes", "sim_threads"]),
         ])?;
         let mut c = TnnConfig::default();
         let geti = |v: &Value| -> Result<i64> {
@@ -259,6 +264,15 @@ impl TnnConfig {
             }
             c.sim_lanes = lanes as usize;
         }
+        if let Some(v) = t.get("sim", "sim_threads") {
+            let threads = geti(v)?;
+            if threads < 1 {
+                return Err(Error::config(format!(
+                    "sim_threads must be >= 1, got {threads}"
+                )));
+            }
+            c.sim_threads = threads as usize;
+        }
         Ok(c)
     }
 
@@ -303,6 +317,7 @@ mu_capture = 0.75
 [sim]
 sim_waves = 3
 sim_lanes = 16
+sim_threads = 4
 "#;
         let c = TnnConfig::from_toml(text).unwrap();
         assert_eq!(c.artifacts_dir, "my_artifacts");
@@ -313,8 +328,17 @@ sim_lanes = 16
         assert!((c.mu_capture - 0.75).abs() < 1e-12);
         assert_eq!(c.sim_waves, 3);
         assert_eq!(c.sim_lanes, 16);
+        assert_eq!(c.sim_threads, 4);
         // untouched defaults survive
         assert_eq!(c.test_samples, TnnConfig::default().test_samples);
+    }
+
+    #[test]
+    fn rejects_out_of_range_threads() {
+        assert!(TnnConfig::from_toml("[sim]\nsim_threads = 0").is_err());
+        assert!(TnnConfig::from_toml("[sim]\nsim_threads = -3").is_err());
+        let c = TnnConfig::from_toml("[sim]\nsim_threads = 8").unwrap();
+        assert_eq!(c.sim_threads, 8);
     }
 
     #[test]

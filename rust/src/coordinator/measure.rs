@@ -17,7 +17,9 @@
 //! weight state become lane-parallel, each lane carrying its own
 //! strided weight trajectory — DESIGN.md §7), so activity measured at
 //! different lane counts is statistically comparable, not
-//! bit-identical.
+//! bit-identical.  `cfg.sim_threads`, by contrast, only cuts the lane
+//! axis of that schedule across worker threads (DESIGN.md §8):
+//! measurements at any thread count are bit-identical.
 
 use crate::cells::calibrate::Observation;
 use crate::cells::{Library, TechParams};

@@ -1,19 +1,35 @@
-//! Figs. 14–18 structural layout comparisons as flow artifacts.
+//! Design-point comparisons as flow artifacts: the Figs. 14–18
+//! structural layout rows, and the parallel target-sweep executor.
 //!
-//! One row per compared function (`less_equal`, `mux2to1`,
+//! Layout rows: one per compared function (`less_equal`, `mux2to1`,
 //! `stabilize_func`): the paper-quoted standard-cell reference, the
 //! characterized custom macro, and both flavours *elaborated through
 //! the real module builders* and counted from the netlist census.
 //! Shared by `tnn7 layout-cmp` and the `layout_cmp` bench, which used
 //! to duplicate this logic.
+//!
+//! Sweeps: [`run_sweep`] executes N [`SweepJob`]s (target × config)
+//! concurrently on a scoped worker pool — the engine behind
+//! `tnn7 flow --targets`, `bench-table1/2 --threads`, and the
+//! `design_space` / `ablation` examples.  Each job runs the ordinary
+//! measurement pipeline via [`super::measure_with`], so a parallel
+//! sweep returns bit-identical reports to the serial loop it replaces,
+//! in job order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
 
 use crate::cells::{gdi, Library, TechParams};
+use crate::config::TnnConfig;
+use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::netlist::modules::less_equal::less_equal;
 use crate::netlist::modules::mux::mux2;
 use crate::netlist::modules::stabilize_func::stabilize_func;
 use crate::netlist::{Builder, Flavor, Netlist};
 use crate::runtime::json::Json;
+
+use super::{measure_with, Target, TargetReport};
 
 /// One Figs. 14–18 comparison row.
 #[derive(Debug, Clone)]
@@ -182,6 +198,94 @@ pub fn to_json(rows: &[MacroComparison]) -> Json {
     )
 }
 
+// ---------------------------------------------------------------------
+// Parallel target sweeps
+
+/// One design point of a sweep: a target plus the config to measure it
+/// under (sweeps may vary either axis — flavour/geometry or e.g.
+/// `sim_waves`).
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    /// Row label for reports.
+    pub label: String,
+    pub target: Target,
+    pub cfg: TnnConfig,
+}
+
+impl SweepJob {
+    /// Job labeled with the target's own descriptor.
+    pub fn of(target: Target, cfg: &TnnConfig) -> SweepJob {
+        SweepJob { label: target.describe(), target, cfg: cfg.clone() }
+    }
+}
+
+/// One sweep outcome, in job order.
+#[derive(Debug)]
+pub struct SweepResult {
+    pub label: String,
+    pub target: Target,
+    pub report: Result<TargetReport>,
+}
+
+/// Measure every job through the standard pipeline on up to `threads`
+/// worker threads (scoped, no extra dependencies).
+///
+/// Workers claim jobs from a shared atomic cursor, so long design
+/// points (1024x16) overlap with short ones instead of serializing
+/// behind them.  Results come back in **job order** regardless of
+/// completion order, and each report is bit-identical to what a serial
+/// [`measure_with`] loop would produce — parallelism here is across
+/// independent design points, never inside one measurement's activity
+/// accounting.  A failing job reports its own error without aborting
+/// the rest of the sweep.
+///
+/// Callers typically set each job's `cfg.sim_threads` to 1: the sweep
+/// already spends the thread budget across jobs, and stacking per-job
+/// wave threads on top would oversubscribe the machine (workers ×
+/// inner threads).
+pub fn run_sweep(
+    jobs: &[SweepJob],
+    lib: &Library,
+    tech: &TechParams,
+    data: &Dataset,
+    threads: usize,
+) -> Vec<SweepResult> {
+    let threads = threads.max(1).min(jobs.len().max(1));
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Result<TargetReport>)>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let job = &jobs[i];
+                let report =
+                    measure_with(job.target, &job.cfg, lib, tech, data);
+                if tx.send((i, report)).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+    let mut slots = (0..jobs.len()).map(|_| None).collect::<Vec<_>>();
+    for (i, report) in rx {
+        slots[i] = Some(report);
+    }
+    jobs.iter()
+        .zip(slots)
+        .map(|(job, slot)| SweepResult {
+            label: job.label.clone(),
+            target: job.target,
+            report: slot.expect("every claimed job reports"),
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +330,36 @@ mod tests {
             r.field("std_netlist_area_um2").unwrap().as_f64().unwrap()
                 > 0.0
         );
+    }
+
+    /// A parallel sweep returns, in job order, exactly the reports the
+    /// serial loop would produce.
+    #[test]
+    fn parallel_sweep_matches_serial_measurements() {
+        use crate::netlist::column::ColumnSpec;
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let data = Dataset::generate(4, 5);
+        let jobs: Vec<SweepJob> = [(4usize, 2usize), (6, 3), (8, 4)]
+            .iter()
+            .map(|&(p, q)| {
+                let spec = ColumnSpec { p, q, theta: (p + q) as u64 };
+                SweepJob::of(Target::column(Flavor::Std, spec), &cfg)
+            })
+            .collect();
+        let results = run_sweep(&jobs, &lib, &tech, &data, 3);
+        assert_eq!(results.len(), 3);
+        for (job, res) in jobs.iter().zip(&results) {
+            assert_eq!(job.label, res.label);
+            let serial =
+                measure_with(job.target, &job.cfg, &lib, &tech, &data)
+                    .unwrap();
+            let got = res.report.as_ref().unwrap();
+            assert_eq!(got.total.power_uw, serial.total.power_uw);
+            assert_eq!(got.total.time_ns, serial.total.time_ns);
+            assert_eq!(got.total.area_mm2, serial.total.area_mm2);
+        }
     }
 
     #[test]

@@ -24,12 +24,14 @@
 //! * [`measure`] — the one-call convenience the old
 //!   `coordinator::measure` free functions now wrap.
 //!
-//! Every future scaling direction (parallel design-point sweeps, cached
-//! stage artifacts, new targets) hangs off this API: a sweep is a loop
-//! over `Target`s, a cache is a stage that short-circuits `run`, a new
-//! design point is a new `Geometry`, and the `simulate` stage already
+//! Every future scaling direction (cached stage artifacts, new
+//! targets) hangs off this API: a cache is a stage that short-circuits
+//! `run`, a new design point is a new `Geometry`, the `simulate` stage
 //! batches up to 64 stimulus waves per tick through the word-packed
-//! engine (`cfg.sim_lanes` / `tnn7 flow --lanes`; DESIGN.md §7).
+//! engine and cuts the lane axis across worker threads
+//! (`cfg.sim_lanes` / `--lanes`, `cfg.sim_threads` / `--threads`;
+//! DESIGN.md §7–8), and design-point sweeps run N targets concurrently
+//! through [`compare::run_sweep`].
 //!
 //! Build a target, run a partial pipeline, inspect the artifacts:
 //!
@@ -213,6 +215,9 @@ pub struct FlowContext {
     /// Stimulus lanes used by the last `simulate` run (1 = scalar
     /// engine, >1 = word-packed engine).
     pub sim_lanes_run: usize,
+    /// Worker threads used by the last `simulate` run (thread count
+    /// never changes the measured activity, only wall time).
+    pub sim_threads_run: usize,
     /// `power` artifacts.
     pub power: Vec<PowerReport>,
     pub rel_power: Vec<RelPower>,
@@ -255,6 +260,7 @@ impl FlowContext {
             activity: Vec::new(),
             sim_waves_run: 0,
             sim_lanes_run: 0,
+            sim_threads_run: 0,
             power: Vec::new(),
             rel_power: Vec::new(),
             area: Vec::new(),
@@ -286,6 +292,7 @@ impl FlowContext {
                 self.activity.clear();
                 self.sim_waves_run = 0;
                 self.sim_lanes_run = 0;
+                self.sim_threads_run = 0;
                 self.area.clear();
                 self.rel_area.clear();
                 wipe_power(self);
@@ -605,6 +612,37 @@ mod tests {
         let wave_len = crate::sim::testbench::WAVE_LEN as u64;
         assert_eq!(ctx.activity[0].cycles, 5 * wave_len);
         assert!(ctx.activity[0].toggles.iter().sum::<u64>() > 0);
+    }
+
+    /// The simulate stage produces bit-identical activity at every
+    /// thread count (threads cut the lane axis, never the schedule).
+    #[test]
+    fn threaded_simulate_stage_is_bit_identical() {
+        let mk = |threads: usize| {
+            let cfg = TnnConfig {
+                sim_waves: 5,
+                sim_lanes: 4,
+                sim_threads: threads,
+                ..TnnConfig::default()
+            };
+            let target = Target::column(
+                Flavor::Std,
+                ColumnSpec { p: 4, q: 2, theta: 4 },
+            );
+            let mut ctx = FlowContext::new(target, cfg);
+            Flow::from_spec("elaborate,simulate")
+                .unwrap()
+                .run(&mut ctx)
+                .unwrap();
+            ctx
+        };
+        let a = mk(1);
+        let b = mk(3);
+        assert_eq!(a.sim_threads_run, 1);
+        assert_eq!(b.sim_threads_run, 3);
+        assert_eq!(a.activity[0].toggles, b.activity[0].toggles);
+        assert_eq!(a.activity[0].clock_ticks, b.activity[0].clock_ticks);
+        assert_eq!(a.activity[0].cycles, b.activity[0].cycles);
     }
 
     #[test]

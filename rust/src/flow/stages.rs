@@ -23,7 +23,9 @@ use crate::ppa::report::ColumnPpa;
 use crate::ppa::scaling::{self, NodeScaling};
 use crate::ppa::{area, power, timing};
 use crate::runtime::json::Json;
-use crate::sim::testbench::{ColumnTestbench, PackedColumnTestbench};
+use crate::sim::testbench::{
+    run_waves_parallel, ColumnTestbench, PackedColumnTestbench,
+};
 use crate::tnn::stdp::RandPair;
 use crate::tnn::Lfsr16;
 
@@ -206,7 +208,10 @@ impl Stage for Sta {
 /// waves per pass ([`PackedColumnTestbench`]); per-lane activity is
 /// aggregated by the engine itself, and each lane carries its own STDP
 /// weight state through its strided share of the wave list (the packed
-/// wave schedule, DESIGN.md §7).
+/// wave schedule, DESIGN.md §7).  With `cfg.sim_threads > 1` the lane
+/// axis of that schedule is additionally cut across worker threads
+/// ([`run_waves_parallel`]) — the measured activity is bit-identical at
+/// every thread count, only wall time changes (DESIGN.md §8).
 pub struct Simulate;
 
 impl Stage for Simulate {
@@ -227,6 +232,7 @@ impl Stage for Simulate {
         let params = ctx.cfg.stdp_params();
         let waves = ctx.cfg.sim_waves;
         let lanes = ctx.cfg.sim_lanes.clamp(1, 64);
+        let threads = ctx.cfg.sim_threads.max(1);
         ctx.activity.clear();
         for u in &ctx.elaborated {
             let spec = u.plan.spec;
@@ -244,7 +250,19 @@ impl Stage for Simulate {
                         .collect()
                 })
                 .collect();
-            if lanes > 1 {
+            if lanes > 1 && threads > 1 {
+                let (_results, activity) = run_waves_parallel(
+                    &u.netlist,
+                    &u.ports,
+                    &ctx.lib,
+                    lanes,
+                    threads,
+                    &stim,
+                    &rands,
+                    &params,
+                )?;
+                ctx.activity.push(activity);
+            } else if lanes > 1 {
                 let mut tb = PackedColumnTestbench::new(
                     &u.netlist,
                     &u.ports,
@@ -264,6 +282,7 @@ impl Stage for Simulate {
         }
         ctx.sim_waves_run = waves;
         ctx.sim_lanes_run = lanes;
+        ctx.sim_threads_run = if lanes > 1 { threads.min(lanes) } else { 1 };
         Ok(())
     }
 
@@ -291,6 +310,7 @@ impl Stage for Simulate {
             ("stage", Json::str(self.name())),
             ("waves", Json::int(ctx.sim_waves_run as u64)),
             ("lanes", Json::int(ctx.sim_lanes_run as u64)),
+            ("threads", Json::int(ctx.sim_threads_run as u64)),
             ("units", Json::Arr(units)),
         ])
     }

@@ -17,8 +17,10 @@
 //!   flavours (the paper's comparison is exactly this netlist substitution).
 //! * [`sim`] — levelized cycle-accurate two-clock gate-level simulation with
 //!   per-net toggle counting (the switching-activity source for power), as a
-//!   scalar reference engine plus a bit-identical word-packed engine that
-//!   evaluates 64 stimulus lanes per tick.
+//!   scalar reference engine, a bit-identical word-packed engine that
+//!   evaluates 64 stimulus lanes per tick, and a thread-parallel sharded
+//!   engine running one quiescence-gated shard per worker over the
+//!   column-aligned partition of [`netlist::partition`].
 //! * [`ppa`] — STA, activity-based power, placement-model area, EDP, and the
 //!   45nm↔7nm scaling model (Tables I & II, Figs. 14–18).
 //! * [`tnn`] — the golden behavioral TNN (RNL neurons, WTA, STDP, LFSR BRVs);
@@ -29,7 +31,9 @@
 //! * [`flow`] — the staged, inspectable design-flow pipeline
 //!   (`Elaborate → Sta → Simulate → Power → Area → Scale45 → Report`)
 //!   over first-class [`flow::Target`] descriptors, with per-stage JSON
-//!   dumps; the API every measurement path goes through.
+//!   dumps and parallel multi-target sweeps
+//!   ([`flow::compare::run_sweep`]); the API every measurement path goes
+//!   through.
 //! * [`coordinator`] — the training/eval pipeline (MNIST-like workload) and
 //!   the activity bridge that turns behavioral spike statistics into
 //!   prototype-scale power numbers.
@@ -37,9 +41,11 @@
 //!   dataset access; see DESIGN.md for the substitution argument).
 //!
 //! See `DESIGN.md` for the methodology, the experiment index mapping every
-//! paper table and figure to a module and a bench target, and the simulator
+//! paper table and figure to a module and a bench target, the simulator
 //! internals (§7: the scalar reference engine vs the word-packed 64-lane
-//! engine).
+//! engine), and the parallel execution model (§8: lane sharding, column
+//! sharding with boundary-net exchange, quiescence gating, parallel
+//! sweeps).
 
 pub mod cells;
 pub mod config;

@@ -141,13 +141,15 @@ USAGE: tnn7 <SUBCOMMAND> [OPTIONS]     (tnn7 <SUBCOMMAND> --help for details)
 
 SUBCOMMANDS:
   flow --target F[:N] (--col PxQ | --proto) [--pipeline S,..] [--dump-dir D]
-       [--lanes N]            run the staged design flow, dump per-stage JSON
+       [--lanes N] [--threads N]   run the staged design flow, dump per-stage
+                                   JSON; --targets A,B,.. sweeps several
+                                   targets concurrently
   characterize [--lib FILE]   print the characterized cell library
   layout-cmp [MACRO] [--json FILE]   Figs. 14-18 custom-vs-std comparisons
   complexity                  Fig. 19 prototype census (gates/transistors)
   calibrate                   fit the technology constants (DESIGN.md §5)
-  bench-table1 [--with-45nm] [--waves N]   regenerate Table I
-  bench-table2 [--waves N]                 regenerate Table II
+  bench-table1 [--with-45nm] [--waves N] [--threads N]   regenerate Table I
+  bench-table2 [--waves N] [--threads N]                 regenerate Table II
   simulate --col PxQ [--flavor std|custom] [--waves N]
   train [--config FILE] [--samples N] [--check] [--metrics-json FILE]
 ";
@@ -177,6 +179,10 @@ USAGE: tnn7 flow [OPTIONS]
 
 OPTIONS:
   --target FLAVOR[:NODE]   std | custom, node 7nm (default) or 45nm
+  --targets A,B,..         comma list of FLAVOR[:NODE] descriptors: run the
+                           measurement pipeline for every target concurrently
+                           (parallel sweep; excludes --target/--pipeline/
+                           --dump-dir)
   --col PxQ                single-column geometry (e.g. 32x12)
   --proto                  the Fig. 19 2-layer prototype instead of --col
   --pipeline S1,S2,..      stage list (default: full canonical pipeline)
@@ -185,6 +191,10 @@ OPTIONS:
   --lanes N                stimulus lanes per simulator tick: 1 = scalar
                            reference engine, 2..64 = word-packed engine
                            (default from config; DESIGN.md §7)
+  --threads N              worker threads for the packed wave schedule and
+                           for --targets sweeps; activity and PPA numbers
+                           are identical at every thread count
+                           (default from config; DESIGN.md §8)
   --config FILE            tnn7.toml configuration
 
 {}",
@@ -197,8 +207,8 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
         println!("{}", help_flow());
         return Ok(());
     }
-    let target_desc =
-        args.opt("--target")?.unwrap_or_else(|| "std:7nm".into());
+    let target_desc = args.opt("--target")?;
+    let targets_desc = args.opt("--targets")?;
     let proto = args.flag("--proto");
     let col = args.opt("--col")?;
     let pipeline = args.opt("--pipeline")?;
@@ -214,6 +224,13 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
         }
         cfg.sim_lanes = lanes;
     }
+    if let Some(t) = args.opt("--threads")? {
+        let threads: usize = t.parse()?;
+        if threads < 1 {
+            anyhow::bail!("--threads must be >= 1, got {threads}");
+        }
+        cfg.sim_threads = threads;
+    }
     args.finish()?;
 
     if proto && col.is_some() {
@@ -228,7 +245,23 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
         let (p, q) = parse_geometry(&col)?;
         Geometry::Column(ColumnSpec::benchmark(p, q))
     };
-    let target = Target::parse(&target_desc, geometry)?;
+
+    // Parallel multi-target sweep mode.
+    if let Some(list) = targets_desc {
+        if target_desc.is_some() || pipeline.is_some() || dump_dir.is_some()
+        {
+            anyhow::bail!(
+                "--targets runs the fixed measurement pipeline for every \
+                 listed target; it excludes --target, --pipeline, and \
+                 --dump-dir"
+            );
+        }
+        return cmd_flow_sweep(&list, geometry, &cfg);
+    }
+    let target = Target::parse(
+        target_desc.as_deref().unwrap_or("std:7nm"),
+        geometry,
+    )?;
 
     let mut flow = match &pipeline {
         Some(spec) => Flow::from_spec(spec)?,
@@ -248,6 +281,12 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
             "  packed engine: {} stimulus lanes per tick",
             cfg.sim_lanes
         );
+        if cfg.sim_threads > 1 {
+            println!(
+                "  wave schedule cut across {} worker threads",
+                cfg.sim_threads
+            );
+        }
     }
 
     let mut ctx = FlowContext::new(target, cfg);
@@ -281,6 +320,66 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     }
     if let Some(dir) = &dump_dir {
         println!("wrote {} stage artifacts to {dir}/", names.len());
+    }
+    Ok(())
+}
+
+/// `tnn7 flow --targets A,B,..`: measure every listed target through
+/// the standard pipeline concurrently and print one summary row each.
+fn cmd_flow_sweep(
+    list: &str,
+    geometry: Geometry,
+    cfg: &TnnConfig,
+) -> anyhow::Result<()> {
+    // In sweep mode --threads parallelizes ACROSS targets; each job
+    // simulates single-threaded so the thread budget is not squared
+    // (sweep workers × per-job wave threads would oversubscribe).
+    let mut job_cfg = cfg.clone();
+    job_cfg.sim_threads = 1;
+    let jobs = list
+        .split(',')
+        .map(str::trim)
+        .filter(|d| !d.is_empty())
+        .map(|d| {
+            Target::parse(d, geometry)
+                .map(|t| compare::SweepJob::of(t, &job_cfg))
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    if jobs.is_empty() {
+        anyhow::bail!("--targets needs at least one FLAVOR[:NODE] entry");
+    }
+    let threads = cfg.sim_threads.max(1);
+    println!(
+        "flow sweep: {} targets on {} threads ({} waves, {} lanes)",
+        jobs.len(),
+        threads.min(jobs.len()),
+        cfg.sim_waves,
+        cfg.sim_lanes
+    );
+    let lib = Library::with_macros();
+    let tech = TechParams::calibrated();
+    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+    let results = compare::run_sweep(&jobs, &lib, &tech, &data, threads);
+    let mut failed = false;
+    for r in &results {
+        match &r.report {
+            Ok(rep) => println!(
+                "  {:<18} power {:>10.3} uW  time {:>8.2} ns  \
+                 area {:>9.5} mm2  edp {:>9.3} nJ-ns",
+                r.label,
+                rep.total.power_uw,
+                rep.total.time_ns,
+                rep.total.area_mm2,
+                rep.total.edp_nj_ns()
+            ),
+            Err(e) => {
+                failed = true;
+                println!("  {:<18} FAILED: {e}", r.label);
+            }
+        }
+    }
+    if failed {
+        anyhow::bail!("one or more sweep targets failed");
     }
     Ok(())
 }
@@ -459,8 +558,9 @@ fn paper_table1(flavor: Flavor, label: &str) -> Option<ColumnPpa> {
 fn cmd_table1(args: &mut Args) -> anyhow::Result<()> {
     if args.help_requested() {
         println!(
-            "tnn7 bench-table1 [--with-45nm] [--waves N] [--config FILE] \
-             — regenerate Table I through the flow API"
+            "tnn7 bench-table1 [--with-45nm] [--waves N] [--threads N] \
+             [--config FILE] — regenerate Table I through the flow API \
+             (the six design points run as a parallel sweep)"
         );
         return Ok(());
     }
@@ -469,21 +569,47 @@ fn cmd_table1(args: &mut Args) -> anyhow::Result<()> {
     if let Some(w) = args.opt("--waves")? {
         cfg.sim_waves = w.parse()?;
     }
+    if let Some(t) = args.opt("--threads")? {
+        let threads: usize = t.parse()?;
+        if threads < 1 {
+            anyhow::bail!("--threads must be >= 1, got {threads}");
+        }
+        cfg.sim_threads = threads;
+    }
     args.finish()?;
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
     let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
-    let mut rows = Vec::new();
-    let mut pairs = Vec::new();
+    // The 6 Table-I design points as one parallel sweep (numbers are
+    // bit-identical to the serial loop; only wall time changes).
+    // --threads parallelizes across design points, so each job
+    // simulates single-threaded (no worker × wave-thread squaring).
+    let mut job_cfg = cfg.clone();
+    job_cfg.sim_threads = 1;
+    let mut jobs = Vec::new();
     for flavor in [Flavor::Std, Flavor::Custom] {
         for (label, spec) in table1_specs() {
-            let r = flow::measure_with(
-                Target::column(flavor, spec),
-                &cfg,
-                &lib,
-                &tech,
-                &data,
-            )?;
+            jobs.push(compare::SweepJob {
+                label: format!("{flavor:?} {label}"),
+                target: Target::column(flavor, spec),
+                cfg: job_cfg.clone(),
+            });
+        }
+    }
+    let sweep = compare::run_sweep(
+        &jobs,
+        &lib,
+        &tech,
+        &data,
+        cfg.sim_threads.max(1),
+    );
+    let mut rows = Vec::new();
+    let mut pairs = Vec::new();
+    let mut sweep_it = sweep.into_iter();
+    for flavor in [Flavor::Std, Flavor::Custom] {
+        for (label, _spec) in table1_specs() {
+            let res = sweep_it.next().expect("one result per job");
+            let r = res.report?;
             rows.push(PpaRow {
                 flavor: flavor.label(),
                 label: label.to_string(),
@@ -529,14 +655,22 @@ fn cmd_table1(args: &mut Args) -> anyhow::Result<()> {
 fn cmd_table2(args: &mut Args) -> anyhow::Result<()> {
     if args.help_requested() {
         println!(
-            "tnn7 bench-table2 [--waves N] [--config FILE] — regenerate \
-             Table II (prototype PPA + EDP) through the flow API"
+            "tnn7 bench-table2 [--waves N] [--threads N] [--config FILE] \
+             — regenerate Table II (prototype PPA + EDP) through the \
+             flow API (both flavours run as a parallel sweep)"
         );
         return Ok(());
     }
     let mut cfg = load_config(args)?;
     if let Some(w) = args.opt("--waves")? {
         cfg.sim_waves = w.parse()?;
+    }
+    if let Some(t) = args.opt("--threads")? {
+        let threads: usize = t.parse()?;
+        if threads < 1 {
+            anyhow::bail!("--threads must be >= 1, got {threads}");
+        }
+        cfg.sim_threads = threads;
     }
     args.finish()?;
     let paper = [
@@ -546,16 +680,27 @@ fn cmd_table2(args: &mut Args) -> anyhow::Result<()> {
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
     let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+    // --threads parallelizes across the two flavours; each job
+    // simulates single-threaded (no worker × wave-thread squaring).
+    let mut job_cfg = cfg.clone();
+    job_cfg.sim_threads = 1;
+    let jobs: Vec<compare::SweepJob> = paper
+        .iter()
+        .map(|&(flavor, _)| {
+            compare::SweepJob::of(Target::prototype(flavor), &job_cfg)
+        })
+        .collect();
+    let sweep = compare::run_sweep(
+        &jobs,
+        &lib,
+        &tech,
+        &data,
+        cfg.sim_threads.max(1),
+    );
     let mut rows = Vec::new();
     let mut measured = Vec::new();
-    for (flavor, paper_ppa) in paper {
-        let r = flow::measure_with(
-            Target::prototype(flavor),
-            &cfg,
-            &lib,
-            &tech,
-            &data,
-        )?;
+    for ((flavor, paper_ppa), res) in paper.into_iter().zip(sweep) {
+        let r = res.report?;
         eprintln!(
             "  {flavor:?}: L1 col {:.2} uW, L2 col {:.2} uW",
             r.units[0].ppa.power_uw, r.units[1].ppa.power_uw

@@ -5,13 +5,25 @@
 //! and rolled up by count.  This module provides that hierarchy level —
 //! a layer is `cols` identical [`ColumnSpec`] columns plus its share of
 //! the gamma-clock distribution.
+//!
+//! Two granularities coexist:
+//!
+//! * [`LayerModel`] — the synaptic-scaling roll-up (one representative
+//!   column × `cols`), which is what Table II measurement uses.
+//! * [`build_layer_netlist`] — a *flat multi-column netlist*: `cols`
+//!   real columns elaborated side by side, each under its own `colK`
+//!   region, joined by a voter/output block that ORs the post-WTA lock
+//!   levels across columns.  This is the workload the column-aligned
+//!   partitioner ([`super::partition`]) cuts into thread-parallel
+//!   shards: every column is an independent shard and the voter is the
+//!   boundary-exchanged tail (DESIGN.md §8).
 
 use crate::cells::Library;
 use crate::error::Result;
 use crate::netlist::ir::Census;
-use crate::netlist::{Flavor, Netlist};
+use crate::netlist::{Flavor, NetId, Netlist};
 
-use super::column::{build_column, ColumnPorts, ColumnSpec};
+use super::column::{build_column, column, ColumnPorts, ColumnSpec};
 
 /// A layer: `cols` identical columns.
 #[derive(Debug, Clone, Copy)]
@@ -55,6 +67,59 @@ impl LayerModel {
     }
 }
 
+/// Ports of a flat multi-column layer netlist.
+pub struct LayerNetlistPorts {
+    /// Per-column ports, in column order (each with its own `x`,
+    /// `gclk`, and `brv` primary inputs).
+    pub columns: Vec<ColumnPorts>,
+    /// Voter outputs: per neuron index, the OR across columns of that
+    /// neuron's post-WTA lock level.
+    pub votes: Vec<NetId>,
+    /// OR over all vote nets (the "some neuron spiked" flag).
+    pub any_fire: NetId,
+}
+
+/// Elaborate `spec.cols` real columns plus a voter/output block into
+/// one flat netlist.
+///
+/// Each column lives under its own top-level `colK` region and touches
+/// only its own primary inputs, so the netlist is embarrassingly
+/// parallel up to the voter — the shape
+/// [`super::partition::partition`] cuts along, one shard per column
+/// with the voter in the boundary-exchanged tail.
+pub fn build_layer_netlist(
+    lib: &Library,
+    flavor: Flavor,
+    spec: &LayerSpec,
+) -> Result<(Netlist, LayerNetlistPorts)> {
+    assert!(spec.cols >= 1, "a layer needs at least one column");
+    let name = format!(
+        "layer_{}x{}x{}_{flavor:?}",
+        spec.cols, spec.column.p, spec.column.q
+    );
+    let mut b = super::Builder::new(&name, lib);
+    let mut columns = Vec::with_capacity(spec.cols);
+    for k in 0..spec.cols {
+        let reg = b.push(format!("col{k}"));
+        columns.push(column(&mut b, flavor, &spec.column));
+        b.pop(reg);
+    }
+    let reg = b.push("voter");
+    let mut votes = Vec::with_capacity(spec.column.q);
+    for i in 0..spec.column.q {
+        let locks: Vec<NetId> =
+            columns.iter().map(|c| c.locks[i]).collect();
+        let v = b.or_tree(&locks);
+        b.output(v, format!("vote[{i}]"));
+        votes.push(v);
+    }
+    let any_fire = b.or_tree(&votes);
+    b.output(any_fire, "any_fire");
+    b.pop(reg);
+    let nl = b.finish()?;
+    Ok((nl, LayerNetlistPorts { columns, votes, any_fire }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,5 +137,29 @@ mod tests {
         assert_eq!(lay.transistors, col.transistors * 5);
         assert_eq!(spec.neurons(), 10);
         assert_eq!(spec.synapses(), 40);
+    }
+
+    #[test]
+    fn flat_layer_netlist_validates_and_scales() {
+        let lib = Library::with_macros();
+        let col = ColumnSpec { p: 4, q: 2, theta: 6 };
+        let spec = LayerSpec { cols: 3, column: col };
+        let (nl, ports) =
+            build_layer_netlist(&lib, Flavor::Custom, &spec).unwrap();
+        assert_eq!(ports.columns.len(), 3);
+        assert_eq!(ports.votes.len(), 2);
+        // Roughly 3 columns' worth of instances plus the voter.
+        let (single, _) =
+            build_column(&lib, Flavor::Custom, &col).unwrap();
+        assert!(nl.insts.len() > 3 * (single.insts.len() - 2));
+        // Each column keeps its own input set.
+        assert_eq!(
+            nl.inputs.len(),
+            3 * single.inputs.len(),
+            "per-column x/gclk/brv inputs"
+        );
+        // Region tags are column-aligned for the partitioner.
+        let path = nl.region_path(nl.insts[5].region);
+        assert!(path.starts_with("top/col0"), "{path}");
     }
 }

@@ -11,17 +11,23 @@
 //!   instantiates the hard macro cell.
 //! * [`column`] — the p×q TNN column (synapses + neurons + WTA + STDP).
 //! * [`layer`] / [`prototype`] — hierarchical roll-up for the Fig. 19
-//!   2-layer prototype (synaptic scaling, as in the paper's §III.C).
+//!   2-layer prototype (synaptic scaling, as in the paper's §III.C),
+//!   plus the flat multi-column layer netlist
+//!   ([`layer::build_layer_netlist`]) the sharded simulator runs.
+//! * [`partition`] — the column-aligned head/shards/tail partitioner
+//!   behind [`crate::sim::ShardedSimulator`] (DESIGN.md §8).
 
 pub mod builder;
 pub mod column;
 pub mod ir;
 pub mod layer;
 pub mod modules;
+pub mod partition;
 pub mod prototype;
 
 pub use builder::Builder;
 pub use ir::{ClockDomain, Instance, NetId, Netlist, RegionId};
+pub use partition::{partition, Partition};
 
 /// Implementation flavour of a module: the paper's two columns of Table I.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -1,0 +1,430 @@
+//! Column-aligned netlist partitioning for multi-core simulation.
+//!
+//! [`partition`] cuts a netlist into the three-phase execution shape
+//! the sharded simulator ([`crate::sim::ShardedSimulator`]) runs:
+//!
+//! * **head** — the zero-input constant drivers (tie cells).  They are
+//!   evaluated first each tick and their outputs are broadcast to every
+//!   other part, exactly like primary inputs.
+//! * **shards** — groups of instances that read *only* global nets
+//!   (primary inputs and head outputs) besides their own.  Shards never
+//!   observe each other's nets, so they can be evaluated on separate
+//!   threads with no intra-tick synchronization.
+//! * **tail** — everything downstream of a shard: instances that read
+//!   nets driven by another group (the voter / output layer of a
+//!   multi-column netlist).  The tail is evaluated after all shards
+//!   finish, from the *boundary nets* the shards publish.
+//!
+//! The cut is **column-aligned**: candidate groups are the top-level
+//! region children (`top/col3/...` → group `col3`), which is how the
+//! multi-column layer netlist ([`super::layer::build_layer_netlist`])
+//! tags its columns.  Instances elaborated directly in the root region
+//! become singleton groups, so the partitioner still works (it just
+//! finds finer atoms) on netlists without region structure.
+//!
+//! A group is shard-eligible exactly when it has no incoming
+//! inter-group dependency: any net driven by group A and read by group
+//! B (any pin, combinational or sequential) is an edge A→B, and every
+//! group with an in-edge is demoted to the tail.  This is conservative
+//! — mutually-dependent groups (a cycle) all have in-edges and all land
+//! in the tail, where the ordinary levelized evaluation handles their
+//! coupling — and it is what makes the three-phase schedule bit-exact:
+//! a shard's inputs are fully settled before it runs, and the tail sees
+//! every boundary net post-settle, so each instance is evaluated once
+//! per tick with exactly the values the single-thread engine would
+//! produce (DESIGN.md §8).
+
+use crate::cells::Library;
+use crate::error::{Error, Result};
+use crate::netlist::{NetId, Netlist};
+
+/// Result of [`partition`]: instance sets per part plus the boundary.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Zero-input constant drivers, evaluated before the shards.
+    pub head: Vec<u32>,
+    /// Parallel instance groups (each sorted ascending).  May be empty
+    /// (`max_shards <= 1` or no shard-eligible group).
+    pub shards: Vec<Vec<u32>>,
+    /// Instances evaluated after the boundary exchange (sorted).
+    pub tail: Vec<u32>,
+    /// Nets driven inside a shard and read by the tail, in ascending
+    /// net order — the values exchanged at the tick barrier.
+    pub boundary: Vec<NetId>,
+    /// Shard-eligible groups found before bin-packing (diagnostics:
+    /// the available parallelism, independent of `max_shards`).
+    pub source_atoms: usize,
+}
+
+impl Partition {
+    /// Total instances across all parts (must equal the netlist's).
+    pub fn n_insts(&self) -> usize {
+        self.head.len()
+            + self.tail.len()
+            + self.shards.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Check the structural invariants the sharded simulator relies on:
+    /// every instance in exactly one part, and no shard instance reads
+    /// a net driven outside the global set and its own shard.
+    pub fn validate(&self, nl: &Netlist) -> Result<()> {
+        let n = nl.insts.len();
+        const UNASSIGNED: u32 = u32::MAX;
+        const HEAD: u32 = u32::MAX - 1;
+        const TAIL: u32 = u32::MAX - 2;
+        let mut part = vec![UNASSIGNED; n];
+        let set = |list: &[u32], tag: u32, part: &mut Vec<u32>| {
+            for &i in list {
+                if part[i as usize] != UNASSIGNED {
+                    return Err(Error::netlist(format!(
+                        "instance {i} assigned to two parts"
+                    )));
+                }
+                part[i as usize] = tag;
+            }
+            Ok(())
+        };
+        set(&self.head, HEAD, &mut part)?;
+        set(&self.tail, TAIL, &mut part)?;
+        for (s, insts) in self.shards.iter().enumerate() {
+            set(insts, s as u32, &mut part)?;
+        }
+        if part.iter().any(|&p| p == UNASSIGNED) {
+            return Err(Error::netlist("partition does not cover netlist"));
+        }
+        // Net ownership: primary inputs and head outputs are global.
+        let mut owner = vec![UNASSIGNED; nl.n_nets()];
+        let mut global = vec![false; nl.n_nets()];
+        for &i in &nl.inputs {
+            global[i.0 as usize] = true;
+        }
+        for i in 0..n {
+            for &o in nl.inst_outs(i) {
+                if part[i] == HEAD {
+                    global[o.0 as usize] = true;
+                } else {
+                    owner[o.0 as usize] = part[i];
+                }
+            }
+        }
+        for i in 0..n {
+            if part[i] >= TAIL {
+                continue; // head reads nothing; tail may read anything
+            }
+            for &inp in nl.inst_ins(i) {
+                let ni = inp.0 as usize;
+                if global[ni] || owner[ni] == UNASSIGNED {
+                    continue;
+                }
+                if owner[ni] != part[i] {
+                    return Err(Error::netlist(format!(
+                        "shard {} instance {i} reads net {} owned by \
+                         part {}",
+                        part[i], ni, owner[ni]
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Map every region to its top-level ancestor (the child of the root
+/// region on its parent path), or `None` for the root itself.
+fn top_children(nl: &Netlist) -> Vec<Option<u32>> {
+    let n = nl.regions.len();
+    let mut top: Vec<Option<u32>> = vec![None; n];
+    for (r, slot) in top.iter_mut().enumerate() {
+        let mut cur = r as u32;
+        let mut child = None;
+        while let Some(p) = nl.regions[cur as usize].parent {
+            child = Some(cur);
+            cur = p.0;
+        }
+        *slot = child;
+    }
+    top
+}
+
+/// Partition `nl` into head / at most `max_shards` shards / tail.
+///
+/// `max_shards <= 1` puts every non-head instance in the tail (the
+/// serial, still quiescence-gated schedule).  The function never fails
+/// on a valid netlist — a netlist with no parallel structure simply
+/// yields empty shards.
+pub fn partition(
+    nl: &Netlist,
+    lib: &Library,
+    max_shards: usize,
+) -> Result<Partition> {
+    let _ = lib; // pin widths already flattened into the instances
+    let n = nl.insts.len();
+    let n_nets = nl.n_nets();
+
+    // --- classify instances into head / candidate groups --------------
+    const HEAD: u32 = u32::MAX;
+    let top = top_children(nl);
+    // Group key per region top-child, allocated lazily; root-region
+    // instances get fresh singleton groups.
+    let mut region_group: Vec<u32> = vec![u32::MAX; nl.regions.len()];
+    let mut group_of: Vec<u32> = vec![HEAD; n];
+    let mut n_groups: u32 = 0;
+    let mut head = Vec::new();
+    for i in 0..n {
+        if nl.insts[i].n_ins == 0 {
+            head.push(i as u32);
+            continue;
+        }
+        let g = match top[nl.insts[i].region.0 as usize] {
+            Some(r) => {
+                if region_group[r as usize] == u32::MAX {
+                    region_group[r as usize] = n_groups;
+                    n_groups += 1;
+                }
+                region_group[r as usize]
+            }
+            None => {
+                let g = n_groups;
+                n_groups += 1;
+                g
+            }
+        };
+        group_of[i] = g;
+    }
+
+    // --- global nets and drivers ---------------------------------------
+    let mut global = vec![false; n_nets];
+    for &i in &nl.inputs {
+        global[i.0 as usize] = true;
+    }
+    for &h in &head {
+        for &o in nl.inst_outs(h as usize) {
+            global[o.0 as usize] = true;
+        }
+    }
+    let mut driver: Vec<u32> = vec![u32::MAX; n_nets];
+    for i in 0..n {
+        for &o in nl.inst_outs(i) {
+            driver[o.0 as usize] = i as u32;
+        }
+    }
+
+    // --- inter-group edges → shard eligibility -------------------------
+    // A group with any incoming edge (it reads a net driven by another
+    // group) cannot be a shard; cycles demote all members.
+    let mut has_in_edge = vec![false; n_groups as usize];
+    for i in 0..n {
+        if group_of[i] == HEAD {
+            continue;
+        }
+        for &inp in nl.inst_ins(i) {
+            let ni = inp.0 as usize;
+            if global[ni] {
+                continue;
+            }
+            let d = driver[ni];
+            if d == u32::MAX || group_of[d as usize] == HEAD {
+                continue;
+            }
+            if group_of[d as usize] != group_of[i] {
+                has_in_edge[group_of[i] as usize] = true;
+            }
+        }
+    }
+
+    // --- collect atoms and bin-pack into shards ------------------------
+    let mut atom_insts: Vec<Vec<u32>> =
+        vec![Vec::new(); n_groups as usize];
+    let mut tail = Vec::new();
+    for i in 0..n {
+        let g = group_of[i];
+        if g == HEAD {
+            continue;
+        }
+        if has_in_edge[g as usize] {
+            tail.push(i as u32);
+        } else {
+            atom_insts[g as usize].push(i as u32);
+        }
+    }
+    let mut atoms: Vec<Vec<u32>> = atom_insts
+        .into_iter()
+        .filter(|a| !a.is_empty())
+        .collect();
+    let source_atoms = atoms.len();
+
+    let n_bins = if max_shards <= 1 { 0 } else { max_shards.min(atoms.len()) };
+    let mut shards: Vec<Vec<u32>> = vec![Vec::new(); n_bins];
+    if n_bins == 0 {
+        for a in atoms.drain(..) {
+            tail.extend(a);
+        }
+    } else {
+        // Largest atom first into the least-loaded bin.
+        atoms.sort_by_key(|a| std::cmp::Reverse(a.len()));
+        for a in atoms.drain(..) {
+            let bin = (0..n_bins)
+                .min_by_key(|&b| shards[b].len())
+                .expect("n_bins > 0");
+            shards[bin].extend(a);
+        }
+        shards.retain(|s| !s.is_empty());
+        for s in &mut shards {
+            s.sort_unstable();
+        }
+    }
+    tail.sort_unstable();
+
+    // --- boundary: shard-driven nets read by the tail ------------------
+    let mut in_shard = vec![false; n];
+    for s in &shards {
+        for &i in s {
+            in_shard[i as usize] = true;
+        }
+    }
+    let mut is_boundary = vec![false; n_nets];
+    for &i in &tail {
+        for &inp in nl.inst_ins(i as usize) {
+            let ni = inp.0 as usize;
+            if global[ni] {
+                continue;
+            }
+            let d = driver[ni];
+            if d != u32::MAX && in_shard[d as usize] {
+                is_boundary[ni] = true;
+            }
+        }
+    }
+    let boundary: Vec<NetId> = (0..n_nets)
+        .filter(|&ni| is_boundary[ni])
+        .map(|ni| NetId(ni as u32))
+        .collect();
+
+    let part = Partition { head, shards, tail, boundary, source_atoms };
+    debug_assert_eq!(part.n_insts(), n);
+    Ok(part)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+    use crate::netlist::layer::build_layer_netlist;
+    use crate::netlist::column::ColumnSpec;
+    use crate::netlist::layer::LayerSpec;
+    use crate::netlist::{Builder, ClockDomain, Flavor};
+
+    /// Boundary-heavy hand-built netlist: 4 region-tagged blocks each
+    /// driving several nets consumed by a join block.
+    fn boundary_heavy(lib: &Library) -> Netlist {
+        let mut b = Builder::new("bh", lib);
+        let x0 = b.input("x0");
+        let x1 = b.input("x1");
+        let mut feeds = Vec::new();
+        for k in 0..4 {
+            let reg = b.push(format!("col{k}"));
+            let a = b.xor2(x0, x1);
+            let c = b.and2(a, x0);
+            let q = b.dff(c, ClockDomain::Aclk);
+            let d = b.or2(q, a);
+            // Three nets cross into the join block.
+            feeds.push(a);
+            feeds.push(q);
+            feeds.push(d);
+            b.pop(reg);
+        }
+        let reg = b.push("voter");
+        let v = b.or_tree(&feeds);
+        let vq = b.dff(v, ClockDomain::Gclk);
+        b.output(vq, "v");
+        b.pop(reg);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn column_blocks_become_shards_and_voter_becomes_tail() {
+        let lib = Library::asap7_only();
+        let nl = boundary_heavy(&lib);
+        let p = partition(&nl, &lib, 4).unwrap();
+        p.validate(&nl).unwrap();
+        assert_eq!(p.n_insts(), nl.insts.len());
+        assert_eq!(p.head.len(), 2, "TIELO + TIEHI");
+        assert_eq!(p.source_atoms, 4);
+        assert_eq!(p.shards.len(), 4);
+        // Each block contributes its 3 crossing nets to the boundary.
+        assert_eq!(p.boundary.len(), 12);
+        assert!(!p.tail.is_empty(), "voter instances in the tail");
+        // Every boundary net is driven by a shard and read by the tail.
+        let shard_insts: Vec<u32> =
+            p.shards.iter().flatten().copied().collect();
+        for &bnet in &p.boundary {
+            let driven = shard_insts.iter().any(|&i| {
+                nl.inst_outs(i as usize).contains(&bnet)
+            });
+            let read = p.tail.iter().any(|&i| {
+                nl.inst_ins(i as usize).contains(&bnet)
+            });
+            assert!(driven && read, "net {bnet:?}");
+        }
+    }
+
+    #[test]
+    fn fewer_bins_than_atoms_balances_by_size() {
+        let lib = Library::asap7_only();
+        let nl = boundary_heavy(&lib);
+        let p = partition(&nl, &lib, 2).unwrap();
+        p.validate(&nl).unwrap();
+        assert_eq!(p.shards.len(), 2);
+        // 4 equal atoms over 2 bins → 2 atoms each.
+        assert_eq!(p.shards[0].len(), p.shards[1].len());
+    }
+
+    #[test]
+    fn single_thread_partition_is_all_tail() {
+        let lib = Library::asap7_only();
+        let nl = boundary_heavy(&lib);
+        let p = partition(&nl, &lib, 1).unwrap();
+        p.validate(&nl).unwrap();
+        assert!(p.shards.is_empty());
+        assert!(p.boundary.is_empty());
+        assert_eq!(p.tail.len(), nl.insts.len() - 2);
+    }
+
+    #[test]
+    fn layer_netlist_partitions_per_column() {
+        let lib = Library::with_macros();
+        let spec = LayerSpec {
+            cols: 3,
+            column: ColumnSpec { p: 4, q: 2, theta: 6 },
+        };
+        let (nl, _ports) =
+            build_layer_netlist(&lib, Flavor::Custom, &spec).unwrap();
+        let p = partition(&nl, &lib, 8).unwrap();
+        p.validate(&nl).unwrap();
+        // One atom per column; the voter reads every column's locks.
+        assert_eq!(p.source_atoms, 3);
+        assert_eq!(p.shards.len(), 3);
+        assert!(!p.tail.is_empty());
+        assert!(!p.boundary.is_empty());
+    }
+
+    #[test]
+    fn region_free_netlist_still_partitions() {
+        // Instances in the root region become singleton groups; two
+        // independent gates reading only primary inputs are sources.
+        let lib = Library::asap7_only();
+        let mut b = Builder::new("flat", &lib);
+        let x = b.input("x");
+        let y = b.input("y");
+        let a = b.and2(x, y);
+        let o = b.or2(x, y);
+        let j = b.xor2(a, o); // reads both → tail
+        b.output(j, "j");
+        let nl = b.finish().unwrap();
+        let p = partition(&nl, &lib, 2).unwrap();
+        p.validate(&nl).unwrap();
+        assert_eq!(p.source_atoms, 2);
+        assert_eq!(p.tail.len(), 1);
+        assert_eq!(p.boundary.len(), 2);
+    }
+}

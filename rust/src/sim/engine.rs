@@ -1,11 +1,13 @@
 //! The common engine interface over the scalar and packed simulators.
 //!
-//! [`SimEngine`] is the lane-oriented contract both engines satisfy:
+//! [`SimEngine`] is the lane-oriented contract every engine satisfies:
 //! the scalar [`Simulator`] is the single-lane reference
-//! implementation, [`PackedSimulator`] the 64-lane production engine.
-//! Code written against the trait (testbenches, equivalence tests,
-//! benches) runs unchanged on either, which is what makes the
-//! scalar-vs-packed equivalence tests possible (DESIGN.md §7).
+//! implementation, [`PackedSimulator`] the 64-lane production engine,
+//! and [`super::ShardedSimulator`] the thread-parallel sharded engine
+//! (implemented in [`super::sharded`]).  Code written against the
+//! trait (testbenches, equivalence tests, benches) runs unchanged on
+//! any of them, which is what makes the cross-engine equivalence tests
+//! possible (DESIGN.md §7–8).
 //!
 //! Method names are chosen not to collide with the engines' inherent
 //! APIs: `tick_lanes` takes word-packed inputs (bit `k` = lane `k`;
@@ -53,9 +55,14 @@ impl SimEngine for Simulator<'_> {
     }
 
     fn tick_lanes(&mut self, inputs: &[(NetId, u64)], gclk_edge: bool) {
-        let scalar: Vec<(NetId, bool)> =
-            inputs.iter().map(|&(n, w)| (n, w & 1 == 1)).collect();
+        // Reuse the simulator's scratch buffer instead of collecting a
+        // fresh Vec every tick (taken out and restored around `tick`,
+        // which borrows `self` mutably).
+        let mut scalar = std::mem::take(&mut self.lane_scratch);
+        scalar.clear();
+        scalar.extend(inputs.iter().map(|&(n, w)| (n, w & 1 == 1)));
         self.tick(&scalar, gclk_edge);
+        self.lane_scratch = scalar;
     }
 
     fn lane_value(&self, net: NetId, lane: usize) -> bool {

@@ -22,8 +22,14 @@
 //!   independent stimulus lanes per tick over `u64` words, with
 //!   popcount toggle accounting that keeps aggregated activity equal to
 //!   the sum of the per-lane scalar runs.
-//! * [`engine`] — the [`SimEngine`] trait both engines implement; the
-//!   seam the scalar-vs-packed equivalence tests drive through.
+//! * [`sharded`] — the thread-parallel [`ShardedSimulator`]: the
+//!   column-aligned partition of [`crate::netlist::partition`] run as
+//!   one quiescence-gated packed shard per worker thread, with a
+//!   boundary-net exchange into the tail (voter/output) part and
+//!   activity aggregation bit-identical to the packed engine
+//!   (DESIGN.md §8).
+//! * [`engine`] — the [`SimEngine`] trait all engines implement; the
+//!   seam the cross-engine equivalence tests drive through.
 //! * [`activity`] — per-instance toggle/clock counters → activity
 //!   factors, with [`Activity::merge`] as the cross-lane/cross-run
 //!   aggregation rule.
@@ -37,6 +43,7 @@ pub mod activity;
 pub mod engine;
 pub mod eval;
 pub mod packed;
+pub mod sharded;
 pub mod simulator;
 pub mod testbench;
 pub mod vcd;
@@ -44,4 +51,5 @@ pub mod vcd;
 pub use activity::Activity;
 pub use engine::SimEngine;
 pub use packed::PackedSimulator;
+pub use sharded::{ShardedSimulator, SimTick};
 pub use simulator::Simulator;

@@ -1,0 +1,920 @@
+//! The thread-parallel sharded simulation engine.
+//!
+//! [`ShardedSimulator`] runs the column-aligned partition produced by
+//! [`crate::netlist::partition`] as a three-phase tick on
+//! `std::thread::scope` worker threads (no external dependencies):
+//!
+//! 1. **head** — the coordinating thread evaluates the zero-input
+//!    constant drivers and broadcasts their outputs together with the
+//!    tick's primary-input words to every shard.
+//! 2. **shards** — one worker per shard evaluates its instances in
+//!    level order and commits its own sequential state, then publishes
+//!    the settled words of its *boundary nets* (tail-read nets, primary
+//!    outputs, and any caller-watched nets).
+//! 3. **tail** — the coordinating thread applies the published
+//!    boundary words and evaluates the join logic (the voter/output
+//!    layer of a multi-column netlist).
+//!
+//! Every instance is evaluated exactly once per tick with exactly the
+//! values the single-thread [`super::PackedSimulator`] would produce —
+//! shards read only global and own nets, the tail reads boundary nets
+//! post-settle — and each part counts toggles with the same
+//! `popcount((old ^ new) & mask)` rule, so the aggregated
+//! [`Activity`] is **bit-identical** to the packed engine's
+//! (`prop_sharded_engine_equals_packed_single_thread` in
+//! `tests/proptests.rs` is the correctness anchor; DESIGN.md §8).
+//!
+//! Each part is additionally **quiescence-gated**: nodes are grouped
+//! by combinational depth, and a level is skipped whenever none of the
+//! nets its nodes depend on combinationally (including committed state)
+//! changed since the level last ran.  Skipping is exact, not
+//! approximate — a level with unchanged inputs and state reproduces its
+//! stored outputs and contributes zero toggles, so gated and ungated
+//! runs have identical counters.  On sparse temporal-coding stimulus,
+//! where most columns sit idle between spikes, whole shards go quiet
+//! for most of a wave.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::cells::Library;
+use crate::error::{Error, Result};
+use crate::netlist::partition::partition;
+use crate::netlist::{ClockDomain, NetId, Netlist};
+
+use super::activity::Activity;
+use super::eval::{comb_deps, eval_comb_packed, next_state_packed};
+use super::packed::MAX_LANES;
+use super::simulator::{comb_levels, plan, EvalNode};
+
+/// One scheduled simulator tick: primary-input words plus the shared
+/// gamma-edge flag.
+#[derive(Debug, Clone)]
+pub struct SimTick {
+    /// Primary-input assignments (bit `k` = lane `k`).
+    pub inputs: Vec<(NetId, u64)>,
+    /// End-of-wave flag shared by every lane (gamma-domain commit).
+    pub gclk_edge: bool,
+}
+
+/// Read-only view handed to [`ShardedSimulator::run_ticks_observe`]
+/// after each tick completes.
+///
+/// Valid for every net the coordinating thread holds: primary inputs,
+/// head (tie) outputs, published boundary nets — which always include
+/// the netlist's primary outputs and the constructor's watch list —
+/// and tail-driven nets.  Reading an unpublished shard-internal net
+/// returns its stale pre-run value.
+pub struct MainView<'a> {
+    values: &'a [u64],
+}
+
+impl MainView<'_> {
+    /// Current value word of a net (bit `k` = lane `k`).
+    pub fn word(&self, net: NetId) -> u64 {
+        self.values[net.0 as usize]
+    }
+
+    /// Current value of a net in one lane.
+    pub fn get(&self, net: NetId, lane: usize) -> bool {
+        self.word(net) >> lane & 1 == 1
+    }
+}
+
+/// Work order sent to a shard worker for one tick.
+#[derive(Clone)]
+struct Job {
+    inputs: Arc<Vec<(NetId, u64)>>,
+    gclk_edge: bool,
+    mask: u64,
+}
+
+fn mask_for(lanes: usize) -> u64 {
+    if lanes >= MAX_LANES {
+        !0
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
+/// Mark every level that combinationally reads `net` as dirty.
+fn mark(dirty: &mut [bool], off: &[u32], lvls: &[u32], net: usize) {
+    for &b in &lvls[off[net] as usize..off[net + 1] as usize] {
+        dirty[b as usize] = true;
+    }
+}
+
+/// One partition part: a quiescence-gated packed evaluator over a
+/// subset of the netlist's instances.
+struct PartSim<'n> {
+    nl: &'n Netlist,
+    lib: &'n Library,
+    /// This part's nodes, sorted by combinational depth.
+    nodes: Vec<EvalNode>,
+    /// Node-range boundaries per depth level (`len = n_levels + 1`).
+    level_start: Vec<u32>,
+    /// Per-level dirty flags; a clean level is skipped wholesale.
+    dirty: Vec<bool>,
+    /// Global instance index → this part's level index.
+    bucket_of_inst: Vec<u32>,
+    /// CSR: net → levels of this part that comb-read it.
+    reader_off: Vec<u32>,
+    reader_lvls: Vec<u32>,
+    /// Net is read by any pin (comb or sequential) of this part.
+    reads_any: Vec<bool>,
+    /// Full-size net/state images (only this part's slots are live).
+    values: Vec<u64>,
+    state: Vec<u64>,
+    next: Vec<u64>,
+    state_off: Vec<u32>,
+    /// This part's sequential instances.
+    seq: Vec<u32>,
+    /// Full-size counters; `cycles` stays 0 (counted once globally).
+    activity: Activity,
+    scratch_ins: Vec<u64>,
+    scratch_outs: Vec<u64>,
+}
+
+impl<'n> PartSim<'n> {
+    fn new(
+        nl: &'n Netlist,
+        lib: &'n Library,
+        insts: &[u32],
+        levels: &[u32],
+        state_off: Vec<u32>,
+        total_state: u32,
+    ) -> PartSim<'n> {
+        let n_insts = nl.insts.len();
+        let n_nets = nl.n_nets();
+        let mut ids: Vec<u32> = insts.to_vec();
+        ids.sort_unstable_by_key(|&i| (levels[i as usize], i));
+
+        let mut nodes = Vec::with_capacity(ids.len());
+        let mut level_start: Vec<u32> = Vec::new();
+        let mut bucket_of_inst = vec![u32::MAX; n_insts];
+        let mut seq = Vec::new();
+        let mut last_level = u32::MAX;
+        for (k, &i) in ids.iter().enumerate() {
+            let iu = i as usize;
+            let inst = nl.insts[iu];
+            let kind = lib.cell(inst.cell).kind;
+            let (_, _, n_state) = kind.pins();
+            if levels[iu] != last_level || level_start.is_empty() {
+                level_start.push(k as u32);
+                last_level = levels[iu];
+            }
+            bucket_of_inst[iu] = level_start.len() as u32 - 1;
+            if n_state > 0 {
+                seq.push(i);
+            }
+            nodes.push(EvalNode {
+                kind,
+                pin_start: inst.pin_start,
+                state_off: state_off[iu],
+                n_ins: inst.n_ins,
+                n_outs: inst.n_outs,
+                n_state: n_state as u8,
+                inst: i,
+            });
+        }
+        level_start.push(ids.len() as u32);
+        let n_levels = level_start.len() - 1;
+
+        let mut reads_any = vec![false; n_nets];
+        let mut pairs: Vec<(u32, u32)> = Vec::new();
+        for node in &nodes {
+            let bucket = bucket_of_inst[node.inst as usize];
+            let deps = comb_deps(node.kind);
+            for pin in 0..node.n_ins as usize {
+                let net = nl.pins[node.pin_start as usize + pin].0;
+                reads_any[net as usize] = true;
+                if deps >> pin & 1 == 1 {
+                    pairs.push((net, bucket));
+                }
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut reader_off = vec![0u32; n_nets + 1];
+        for &(n, _) in &pairs {
+            reader_off[n as usize + 1] += 1;
+        }
+        for i in 0..n_nets {
+            reader_off[i + 1] += reader_off[i];
+        }
+        let reader_lvls: Vec<u32> =
+            pairs.iter().map(|&(_, b)| b).collect();
+
+        PartSim {
+            nl,
+            lib,
+            nodes,
+            level_start,
+            dirty: vec![true; n_levels],
+            bucket_of_inst,
+            reader_off,
+            reader_lvls,
+            reads_any,
+            values: vec![0; n_nets],
+            state: vec![0; total_state as usize],
+            next: vec![0; total_state as usize],
+            state_off,
+            seq,
+            activity: Activity::new(n_insts),
+            scratch_ins: vec![0; 16],
+            scratch_outs: vec![0; 8],
+        }
+    }
+
+    /// Apply input words.  With `filter`, nets no pin of this part
+    /// reads are skipped (shards); without, every word is stored (the
+    /// tail, which also serves observation reads).
+    fn apply_inputs(&mut self, inputs: &[(NetId, u64)], filter: bool) {
+        let PartSim {
+            reads_any, values, dirty, reader_off, reader_lvls, ..
+        } = self;
+        for &(n, w) in inputs {
+            let ni = n.0 as usize;
+            if filter && !reads_any[ni] {
+                continue;
+            }
+            if values[ni] != w {
+                values[ni] = w;
+                mark(dirty, reader_off, reader_lvls, ni);
+            }
+        }
+    }
+
+    /// Apply published boundary words (always stored).
+    fn apply_words(&mut self, nets: &[NetId], words: &[u64]) {
+        let PartSim { values, dirty, reader_off, reader_lvls, .. } = self;
+        for (&n, &w) in nets.iter().zip(words) {
+            let ni = n.0 as usize;
+            if values[ni] != w {
+                values[ni] = w;
+                mark(dirty, reader_off, reader_lvls, ni);
+            }
+        }
+    }
+
+    /// Evaluate dirty levels in depth order, then compute and commit
+    /// next-state per clock domain — one engine tick for this part.
+    fn settle_commit(&mut self, gclk_edge: bool, mask: u64) {
+        let PartSim {
+            nl,
+            lib,
+            nodes,
+            level_start,
+            dirty,
+            bucket_of_inst,
+            reader_off,
+            reader_lvls,
+            values,
+            state,
+            next,
+            state_off,
+            seq,
+            activity,
+            scratch_ins,
+            scratch_outs,
+            ..
+        } = self;
+        let pins = &nl.pins;
+        let n_levels = dirty.len();
+        for b in 0..n_levels {
+            if !dirty[b] {
+                continue;
+            }
+            dirty[b] = false;
+            let start = level_start[b] as usize;
+            let end = level_start[b + 1] as usize;
+            for node in &nodes[start..end] {
+                use crate::cells::CellKind as K;
+                let ps = node.pin_start as usize;
+                let n_in = node.n_ins as usize;
+                // Inline fast path for stateless 1-output gates,
+                // mirroring the packed engine's hot loop.
+                let fast = match node.kind {
+                    K::Inv => Some(!values[pins[ps].0 as usize]),
+                    K::Buf => Some(values[pins[ps].0 as usize]),
+                    K::And2 => Some(
+                        values[pins[ps].0 as usize]
+                            & values[pins[ps + 1].0 as usize],
+                    ),
+                    K::Or2 => Some(
+                        values[pins[ps].0 as usize]
+                            | values[pins[ps + 1].0 as usize],
+                    ),
+                    K::Nand2 => Some(
+                        !(values[pins[ps].0 as usize]
+                            & values[pins[ps + 1].0 as usize]),
+                    ),
+                    K::Xor2 => Some(
+                        values[pins[ps].0 as usize]
+                            ^ values[pins[ps + 1].0 as usize],
+                    ),
+                    K::And3 => Some(
+                        values[pins[ps].0 as usize]
+                            & values[pins[ps + 1].0 as usize]
+                            & values[pins[ps + 2].0 as usize],
+                    ),
+                    K::Xor3 => Some(
+                        values[pins[ps].0 as usize]
+                            ^ values[pins[ps + 1].0 as usize]
+                            ^ values[pins[ps + 2].0 as usize],
+                    ),
+                    K::Maj3 => {
+                        let a = values[pins[ps].0 as usize];
+                        let b = values[pins[ps + 1].0 as usize];
+                        let c = values[pins[ps + 2].0 as usize];
+                        Some((a & b) | (b & c) | (a & c))
+                    }
+                    K::Mux2 => {
+                        let d0 = values[pins[ps].0 as usize];
+                        let d1 = values[pins[ps + 1].0 as usize];
+                        let s = values[pins[ps + 2].0 as usize];
+                        Some((s & d1) | (!s & d0))
+                    }
+                    _ => None,
+                };
+                if let Some(v) = fast {
+                    let out_net = pins[ps + n_in].0 as usize;
+                    let diff = (values[out_net] ^ v) & mask;
+                    if values[out_net] != v {
+                        values[out_net] = v;
+                        mark(dirty, reader_off, reader_lvls, out_net);
+                    }
+                    if diff != 0 {
+                        activity.toggles[node.inst as usize] +=
+                            u64::from(diff.count_ones());
+                    }
+                    continue;
+                }
+                // General path (multi-output cells, sequential, macros).
+                let n_out = node.n_outs as usize;
+                let n_state = node.n_state as usize;
+                for k in 0..n_in {
+                    scratch_ins[k] = values[pins[ps + k].0 as usize];
+                }
+                let off = node.state_off as usize;
+                {
+                    let (ins, outs) = (
+                        &scratch_ins[..n_in],
+                        &mut scratch_outs[..n_out],
+                    );
+                    eval_comb_packed(
+                        node.kind,
+                        ins,
+                        &state[off..off + n_state],
+                        outs,
+                    );
+                }
+                let mut toggles = 0u32;
+                for k in 0..n_out {
+                    let v = scratch_outs[k];
+                    let out_net = pins[ps + n_in + k].0 as usize;
+                    toggles += ((values[out_net] ^ v) & mask).count_ones();
+                    if values[out_net] != v {
+                        values[out_net] = v;
+                        mark(dirty, reader_off, reader_lvls, out_net);
+                    }
+                }
+                if toggles > 0 {
+                    activity.toggles[node.inst as usize] +=
+                        u64::from(toggles);
+                }
+            }
+        }
+        // Next-state + commit per domain (shared edge across lanes).
+        // An actual state change re-arms the owner's level so its eval
+        // output is recomputed next tick.
+        let active = u64::from(mask.count_ones());
+        for &si in seq.iter() {
+            let i = si as usize;
+            let inst = nl.insts[i];
+            let commit = match inst.domain {
+                ClockDomain::Aclk => true,
+                ClockDomain::Gclk => gclk_edge,
+                ClockDomain::Comb => false,
+            };
+            if !commit {
+                continue;
+            }
+            let kind = lib.cell(inst.cell).kind;
+            let (n_in, _, n_state) = kind.pins();
+            for (k, &nn) in nl.inst_ins(i).iter().enumerate() {
+                scratch_ins[k] = values[nn.0 as usize];
+            }
+            let off = state_off[i] as usize;
+            {
+                let (cur, nxt) = (
+                    &state[off..off + n_state],
+                    &mut next[off..off + n_state],
+                );
+                next_state_packed(kind, &scratch_ins[..n_in], cur, nxt);
+            }
+            if state[off..off + n_state] != next[off..off + n_state] {
+                state[off..off + n_state]
+                    .copy_from_slice(&next[off..off + n_state]);
+                dirty[bucket_of_inst[i] as usize] = true;
+            }
+            activity.clock_ticks[i] += active;
+        }
+    }
+
+    /// Zero values and state; re-arm every level.
+    fn reset(&mut self) {
+        self.values.iter_mut().for_each(|v| *v = 0);
+        self.state.iter_mut().for_each(|v| *v = 0);
+        self.dirty.iter_mut().for_each(|d| *d = true);
+    }
+}
+
+/// Thread-parallel sharded simulation instance over a netlist.
+pub struct ShardedSimulator<'n> {
+    nl: &'n Netlist,
+    head: PartSim<'n>,
+    shards: Vec<PartSim<'n>>,
+    tail: PartSim<'n>,
+    /// Per shard: the nets it publishes at the tick barrier.
+    publish: Vec<Vec<NetId>>,
+    /// Head (tie) outputs, broadcast with the primary inputs.
+    head_outs: Vec<NetId>,
+    /// Net → holder of its settled value: 0 tail, 1 head, 2+s shard s.
+    owner: Vec<u32>,
+    source_atoms: usize,
+    lanes: usize,
+    mask: u64,
+    cycle: u64,
+    /// Lane-cycles accumulated since the last activity fold.
+    cycles_pending: u64,
+    /// Aggregated counters (parts are drained into this after every
+    /// run, so it is always the complete bit-identical total).
+    agg: Activity,
+}
+
+impl<'n> ShardedSimulator<'n> {
+    /// Partition, levelize, and allocate for `lanes` (1..=64) stimulus
+    /// lanes and at most `threads` shard workers.  `watch` nets are
+    /// published every tick in addition to the netlist's primary
+    /// outputs (for mid-run observation through [`MainView`]).
+    pub fn new(
+        nl: &'n Netlist,
+        lib: &'n Library,
+        lanes: usize,
+        threads: usize,
+        watch: &[NetId],
+    ) -> Result<Self> {
+        if !(1..=MAX_LANES).contains(&lanes) {
+            return Err(Error::sim(format!(
+                "sharded engine supports 1..={MAX_LANES} lanes, got {lanes}"
+            )));
+        }
+        if threads < 1 {
+            return Err(Error::sim(format!(
+                "sharded engine needs threads >= 1, got {threads}"
+            )));
+        }
+        let part = partition(nl, lib, threads)?;
+        let levels = comb_levels(nl, lib)?;
+        let p = plan(nl, lib)?;
+        let state_off = p.state_off;
+        let total_state = p.total_state;
+
+        let head = PartSim::new(
+            nl, lib, &part.head, &levels, state_off.clone(), total_state,
+        );
+        let tail = PartSim::new(
+            nl, lib, &part.tail, &levels, state_off.clone(), total_state,
+        );
+        let shards: Vec<PartSim<'n>> = part
+            .shards
+            .iter()
+            .map(|s| {
+                PartSim::new(
+                    nl, lib, s, &levels, state_off.clone(), total_state,
+                )
+            })
+            .collect();
+
+        let n_nets = nl.n_nets();
+        let mut want = vec![false; n_nets];
+        for &b in &part.boundary {
+            want[b.0 as usize] = true;
+        }
+        for &o in &nl.outputs {
+            want[o.0 as usize] = true;
+        }
+        for &w in watch {
+            want[w.0 as usize] = true;
+        }
+        let mut owner = vec![0u32; n_nets];
+        let mut head_outs = Vec::new();
+        for &h in &part.head {
+            for &o in nl.inst_outs(h as usize) {
+                owner[o.0 as usize] = 1;
+                head_outs.push(o);
+            }
+        }
+        let mut publish = Vec::with_capacity(part.shards.len());
+        for (s, insts) in part.shards.iter().enumerate() {
+            let mut pubs = Vec::new();
+            for &i in insts {
+                for &o in nl.inst_outs(i as usize) {
+                    owner[o.0 as usize] = s as u32 + 2;
+                    if want[o.0 as usize] {
+                        pubs.push(o);
+                    }
+                }
+            }
+            pubs.sort_unstable();
+            publish.push(pubs);
+        }
+
+        Ok(ShardedSimulator {
+            nl,
+            head,
+            shards,
+            tail,
+            publish,
+            head_outs,
+            owner,
+            source_atoms: part.source_atoms,
+            lanes,
+            mask: mask_for(lanes),
+            cycle: 0,
+            cycles_pending: 0,
+            agg: Activity::new(nl.insts.len()),
+        })
+    }
+
+    /// Number of lanes the engine was built for.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Underlying netlist.
+    pub fn netlist(&self) -> &Netlist {
+        self.nl
+    }
+
+    /// Worker shards actually running (≤ the requested thread count).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard-eligible groups the partitioner found (the available
+    /// parallelism, independent of the requested thread count).
+    pub fn source_atoms(&self) -> usize {
+        self.source_atoms
+    }
+
+    /// Number of currently-active (activity-counted) lanes.
+    pub fn active_lanes(&self) -> usize {
+        self.mask.count_ones() as usize
+    }
+
+    /// Shrink the active-lane set to the first `n` lanes (`n ≤ lanes`);
+    /// inactive lanes keep simulating but are excluded from activity.
+    pub fn set_active_lanes(&mut self, n: usize) {
+        assert!(
+            (1..=self.lanes).contains(&n),
+            "active lanes 1..={}",
+            self.lanes
+        );
+        self.mask = mask_for(n);
+    }
+
+    /// Ticks executed since construction or the last reset.
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Current value of a net in one lane (valid for every net; reads
+    /// the part that owns the net's settled value).
+    pub fn get(&self, net: NetId, lane: usize) -> bool {
+        debug_assert!(lane < self.lanes);
+        let ni = net.0 as usize;
+        let word = match self.owner[ni] {
+            0 => self.tail.values[ni],
+            1 => self.head.values[ni],
+            o => self.shards[o as usize - 2].values[ni],
+        };
+        word >> lane & 1 == 1
+    }
+
+    /// Reset all state and net values to 0 in every lane, clear the
+    /// cycle counter, and restore the full active-lane mask.  Activity
+    /// counters are preserved, as in the other engines.
+    pub fn reset(&mut self) {
+        self.head.reset();
+        for s in &mut self.shards {
+            s.reset();
+        }
+        self.tail.reset();
+        self.cycle = 0;
+        self.mask = mask_for(self.lanes);
+    }
+
+    /// Run a tick schedule (no observation).
+    pub fn run_ticks(&mut self, ticks: &[SimTick]) {
+        self.run_ticks_observe(ticks, |_, _| {});
+    }
+
+    /// Run a tick schedule inside one thread scope, invoking `observe`
+    /// on the coordinating thread after each tick completes.
+    ///
+    /// This is the hot entry point: the shard workers persist across
+    /// the whole schedule, so thread-spawn cost is amortized over every
+    /// tick of a wave batch.  [`SimEngine::tick_lanes`] wraps a
+    /// single-tick schedule for trait-driven callers.
+    pub fn run_ticks_observe<F>(&mut self, ticks: &[SimTick], mut observe: F)
+    where
+        F: FnMut(usize, &MainView<'_>),
+    {
+        if ticks.is_empty() {
+            return;
+        }
+        let mask = self.mask;
+        let active = u64::from(mask.count_ones());
+        let head = &mut self.head;
+        let tail = &mut self.tail;
+        let shards = &mut self.shards;
+        let publish = &self.publish;
+        let head_outs = &self.head_outs;
+        let n_shards = shards.len();
+        let mut cycle = self.cycle;
+        let mut pending = 0u64;
+
+        std::thread::scope(|scope| {
+            let (res_tx, res_rx) = mpsc::channel::<(usize, Vec<u64>)>();
+            let mut job_txs: Vec<mpsc::Sender<Job>> =
+                Vec::with_capacity(n_shards);
+            for (s, (shard, pub_nets)) in
+                shards.iter_mut().zip(publish.iter()).enumerate()
+            {
+                let (tx, rx) = mpsc::channel::<Job>();
+                job_txs.push(tx);
+                let res_tx = res_tx.clone();
+                scope.spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        shard.apply_inputs(&job.inputs, true);
+                        shard.settle_commit(job.gclk_edge, job.mask);
+                        let out: Vec<u64> = pub_nets
+                            .iter()
+                            .map(|n| shard.values[n.0 as usize])
+                            .collect();
+                        if res_tx.send((s, out)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(res_tx);
+
+            for (t, tick) in ticks.iter().enumerate() {
+                head.settle_commit(tick.gclk_edge, mask);
+                let mut broadcast = Vec::with_capacity(
+                    tick.inputs.len() + head_outs.len(),
+                );
+                broadcast.extend_from_slice(&tick.inputs);
+                for &hn in head_outs {
+                    broadcast.push((hn, head.values[hn.0 as usize]));
+                }
+                let job = Job {
+                    inputs: Arc::new(broadcast),
+                    gclk_edge: tick.gclk_edge,
+                    mask,
+                };
+                for tx in &job_txs {
+                    tx.send(job.clone()).expect("shard worker alive");
+                }
+                tail.apply_inputs(&job.inputs, false);
+                for _ in 0..n_shards {
+                    let (s, words) =
+                        res_rx.recv().expect("shard worker result");
+                    tail.apply_words(&publish[s], &words);
+                }
+                tail.settle_commit(tick.gclk_edge, mask);
+                cycle += 1;
+                pending += active;
+                let view = MainView { values: &tail.values };
+                observe(t, &view);
+            }
+            drop(job_txs);
+        });
+
+        self.cycle = cycle;
+        self.cycles_pending += pending;
+        self.fold();
+    }
+
+    /// Drain the per-part counters into the aggregate, so
+    /// [`ShardedSimulator::activity`] always returns complete totals
+    /// and external resets through `activity_mut` stay consistent.
+    fn fold(&mut self) {
+        self.agg.merge(&self.head.activity);
+        self.head.activity.reset();
+        for s in &mut self.shards {
+            self.agg.merge(&s.activity);
+            s.activity.reset();
+        }
+        self.agg.merge(&self.tail.activity);
+        self.tail.activity.reset();
+        self.agg.cycles += self.cycles_pending;
+        self.cycles_pending = 0;
+    }
+
+    /// Aggregated switching-activity counters.
+    pub fn activity(&self) -> &Activity {
+        &self.agg
+    }
+
+    /// Mutable access to the aggregated counters.
+    pub fn activity_mut(&mut self) -> &mut Activity {
+        &mut self.agg
+    }
+}
+
+impl super::SimEngine for ShardedSimulator<'_> {
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn tick_lanes(&mut self, inputs: &[(NetId, u64)], gclk_edge: bool) {
+        // One-tick schedule: correct but spawn-per-tick; batch callers
+        // should use `run_ticks` directly.
+        let tick = SimTick { inputs: inputs.to_vec(), gclk_edge };
+        self.run_ticks(std::slice::from_ref(&tick));
+    }
+
+    fn lane_value(&self, net: NetId, lane: usize) -> bool {
+        self.get(net, lane)
+    }
+
+    fn activity(&self) -> &Activity {
+        &self.agg
+    }
+
+    fn activity_mut(&mut self) -> &mut Activity {
+        &mut self.agg
+    }
+
+    fn ticks(&self) -> u64 {
+        self.cycle
+    }
+
+    fn reset_state(&mut self) {
+        self.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+    use crate::netlist::{Builder, ClockDomain};
+    use crate::sim::{PackedSimulator, SimEngine};
+
+    /// Three independent blocks + a joining voter, region-tagged the
+    /// way the partitioner cuts.
+    fn blocks_and_voter(lib: &Library) -> Netlist {
+        let mut b = Builder::new("bv", lib);
+        let x0 = b.input("x0");
+        let x1 = b.input("x1");
+        let mut outs = Vec::new();
+        for k in 0..3 {
+            let reg = b.push(format!("col{k}"));
+            let a = b.xor2(x0, x1);
+            let n = b.nand2(a, x0);
+            let q = b.dff(n, ClockDomain::Aclk);
+            let g = b.dff(a, ClockDomain::Gclk);
+            let y = b.and2(q, g);
+            outs.push(y);
+            b.pop(reg);
+        }
+        let reg = b.push("voter");
+        let v = b.or_tree(&outs);
+        let vq = b.dff(v, ClockDomain::Aclk);
+        b.output(vq, "v");
+        b.pop(reg);
+        b.finish().unwrap()
+    }
+
+    /// Sharded vs packed: every net, every lane, every tick, and the
+    /// aggregated activity — on a boundary-exchanging netlist.
+    #[test]
+    fn sharded_matches_packed_engine_on_voter_netlist() {
+        let lib = Library::asap7_only();
+        let nl = blocks_and_voter(&lib);
+        for threads in [1usize, 2, 3, 8] {
+            let mut sh =
+                ShardedSimulator::new(&nl, &lib, 8, threads, &[]).unwrap();
+            let mut pk = PackedSimulator::new(&nl, &lib, 8).unwrap();
+            assert_eq!(sh.source_atoms(), 3);
+            let mut rng = 0x9e37_79b9_7f4a_7c15u64;
+            for t in 0..25u32 {
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let gamma = rng >> 60 & 3 == 0;
+                let w0 = rng;
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let w1 = rng;
+                let inputs =
+                    [(nl.inputs[0], w0), (nl.inputs[1], w1)];
+                sh.tick_lanes(&inputs, gamma);
+                pk.tick(&inputs, gamma);
+                for net in 0..nl.n_nets() {
+                    let id = NetId(net as u32);
+                    for lane in 0..8 {
+                        assert_eq!(
+                            sh.get(id, lane),
+                            pk.get(id, lane),
+                            "threads {threads} tick {t} net {net} \
+                             lane {lane}"
+                        );
+                    }
+                }
+            }
+            assert_eq!(sh.activity().toggles, pk.activity.toggles);
+            assert_eq!(sh.activity().clock_ticks, pk.activity.clock_ticks);
+            assert_eq!(sh.activity().cycles, pk.activity.cycles);
+        }
+    }
+
+    /// Quiescence gating is exact: holding the inputs constant, the
+    /// gated engine's counters keep matching the ungated packed
+    /// engine's (levels are skipped only when they provably cannot
+    /// toggle).
+    #[test]
+    fn quiescent_stretch_keeps_counters_identical() {
+        let lib = Library::asap7_only();
+        let nl = blocks_and_voter(&lib);
+        let mut sh = ShardedSimulator::new(&nl, &lib, 4, 2, &[]).unwrap();
+        let mut pk = PackedSimulator::new(&nl, &lib, 4).unwrap();
+        let inputs = [(nl.inputs[0], 0b1010u64), (nl.inputs[1], 0b0110u64)];
+        for t in 0..30u32 {
+            let gamma = t % 5 == 4;
+            sh.tick_lanes(&inputs, gamma);
+            pk.tick(&inputs, gamma);
+        }
+        assert_eq!(sh.activity().toggles, pk.activity.toggles);
+        assert_eq!(sh.activity().clock_ticks, pk.activity.clock_ticks);
+        assert_eq!(sh.activity().cycles, pk.activity.cycles);
+        assert_eq!(sh.cycle(), 30);
+    }
+
+    /// Batched `run_ticks` equals per-tick trait driving, and the
+    /// observer view exposes primary outputs after every tick.
+    #[test]
+    fn run_ticks_batch_matches_single_ticks_and_observes() {
+        let lib = Library::asap7_only();
+        let nl = blocks_and_voter(&lib);
+        let ticks: Vec<SimTick> = (0..12u64)
+            .map(|t| SimTick {
+                inputs: vec![
+                    (nl.inputs[0], t.wrapping_mul(0x5DEECE66D)),
+                    (nl.inputs[1], !t),
+                ],
+                gclk_edge: t % 4 == 3,
+            })
+            .collect();
+
+        let mut a = ShardedSimulator::new(&nl, &lib, 4, 2, &[]).unwrap();
+        let mut seen = Vec::new();
+        a.run_ticks_observe(&ticks, |t, view| {
+            seen.push((t, view.get(nl.outputs[0], 1)));
+        });
+        assert_eq!(seen.len(), 12);
+        assert_eq!(seen[11].0, 11);
+
+        let mut b = ShardedSimulator::new(&nl, &lib, 4, 2, &[]).unwrap();
+        let mut trace = Vec::new();
+        for tick in &ticks {
+            b.tick_lanes(&tick.inputs, tick.gclk_edge);
+            trace.push(b.get(nl.outputs[0], 1));
+        }
+        // The observer saw exactly the per-tick output trace.
+        for (t, &(seen_t, v)) in seen.iter().enumerate() {
+            assert_eq!(t, seen_t);
+            assert_eq!(v, trace[t], "observer trace tick {t}");
+        }
+        assert_eq!(a.activity().toggles, b.activity().toggles);
+        assert_eq!(a.activity().cycles, b.activity().cycles);
+        for net in 0..nl.n_nets() {
+            let id = NetId(net as u32);
+            assert_eq!(a.get(id, 2), b.get(id, 2), "net {net}");
+        }
+    }
+
+    #[test]
+    fn lane_and_thread_bounds_are_enforced() {
+        let lib = Library::asap7_only();
+        let nl = blocks_and_voter(&lib);
+        assert!(ShardedSimulator::new(&nl, &lib, 0, 2, &[]).is_err());
+        assert!(ShardedSimulator::new(&nl, &lib, 65, 2, &[]).is_err());
+        assert!(ShardedSimulator::new(&nl, &lib, 8, 0, &[]).is_err());
+        let sh = ShardedSimulator::new(&nl, &lib, 64, 16, &[]).unwrap();
+        // Only 3 column atoms exist, so at most 3 workers run.
+        assert_eq!(sh.shard_count(), 3);
+    }
+}

@@ -130,6 +130,9 @@ pub struct Simulator<'n> {
     cycle: u64,
     scratch_ins: Vec<bool>,
     scratch_outs: Vec<bool>,
+    /// Reused input buffer for the [`super::SimEngine`] lane shim
+    /// (avoids a fresh `Vec` per `tick_lanes` call).
+    pub(crate) lane_scratch: Vec<(NetId, bool)>,
 }
 
 /// Topologically order instances by combinational sensitivity.
@@ -184,6 +187,39 @@ pub fn levelize(nl: &Netlist, lib: &Library) -> Result<Vec<u32>> {
     Ok(order)
 }
 
+/// Combinational depth of every instance: 0 for instances whose
+/// outputs depend on no driven comb-sensitive input, else 1 + the max
+/// depth over those drivers.  Shared with the sharded engine, whose
+/// quiescence gating skips whole depth levels per tick (DESIGN.md §8).
+pub(crate) fn comb_levels(nl: &Netlist, lib: &Library) -> Result<Vec<u32>> {
+    let order = levelize(nl, lib)?;
+    let n = nl.insts.len();
+    let mut driver_of: Vec<u32> = vec![u32::MAX; nl.n_nets()];
+    for i in 0..n {
+        for &o in nl.inst_outs(i) {
+            driver_of[o.0 as usize] = i as u32;
+        }
+    }
+    let mut level = vec![0u32; n];
+    for &oi in &order {
+        let i = oi as usize;
+        let kind = lib.cell(nl.insts[i].cell).kind;
+        let deps = comb_deps(kind);
+        let mut l = 0u32;
+        for (pin, &inp) in nl.inst_ins(i).iter().enumerate() {
+            if deps >> pin & 1 == 0 {
+                continue;
+            }
+            let d = driver_of[inp.0 as usize];
+            if d != u32::MAX {
+                l = l.max(level[d as usize] + 1);
+            }
+        }
+        level[i] = l;
+    }
+    Ok(level)
+}
+
 impl<'n> Simulator<'n> {
     /// Levelize and allocate. Fails on combinational cycles.
     pub fn new(nl: &'n Netlist, lib: &'n Library) -> Result<Self> {
@@ -202,6 +238,7 @@ impl<'n> Simulator<'n> {
             cycle: 0,
             scratch_ins: vec![false; 16],
             scratch_outs: vec![false; 8],
+            lane_scratch: Vec::new(),
         })
     }
 

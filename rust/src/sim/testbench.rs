@@ -23,7 +23,9 @@
 //! [`PackedColumnTestbench`] batches up to 64 waves per pass on the
 //! word-packed engine ([`lane_batches`] chunks a wave list so lane `l`
 //! carries waves `l`, `l+lanes`, … with its own STDP weight state; see
-//! DESIGN.md §7).
+//! DESIGN.md §7).  [`run_waves_parallel`] additionally cuts the lane
+//! axis across worker threads — bit-identical to the single-thread
+//! packed schedule, because lanes never exchange data (DESIGN.md §8).
 
 use crate::arch::T_STEPS;
 use crate::cells::Library;
@@ -359,6 +361,97 @@ impl<'n> PackedColumnTestbench<'n> {
     }
 }
 
+/// Run a whole stimulus set through the packed wave schedule on
+/// `threads` worker threads, bit-identically to a single-thread
+/// [`PackedColumnTestbench::run_waves`] with the same `lanes`.
+///
+/// The canonical schedule assigns wave `w` to chunk `w / lanes`, lane
+/// `w % lanes`, and lanes never exchange data — so the lane axis can be
+/// cut across threads: worker `t` owns a contiguous lane range and runs
+/// its own packed engine over *its lanes of every chunk*.  Each lane
+/// still carries its strided wave subsequence (`l`, `l+lanes`, …) with
+/// live STDP state, exactly as in the single-thread schedule, so
+/// per-wave results are identical and the merged [`Activity`] — a sum
+/// over lanes either way — is **bit-identical**, independent of the
+/// thread count (DESIGN.md §8).  Returns one [`WaveResult`] per wave in
+/// wave order plus the aggregated activity.
+#[allow(clippy::too_many_arguments)] // mirrors run_wave's argument set + execution knobs
+pub fn run_waves_parallel(
+    nl: &Netlist,
+    ports: &ColumnPorts,
+    lib: &Library,
+    lanes: usize,
+    threads: usize,
+    stim: &[Vec<i32>],
+    rand: &[Vec<RandPair>],
+    params: &StdpParams,
+) -> Result<(Vec<WaveResult>, super::Activity)> {
+    assert_eq!(stim.len(), rand.len());
+    let lanes = lanes.clamp(1, MAX_LANES);
+    let threads = threads.max(1).min(lanes);
+    let n = stim.len();
+    if threads == 1 || n == 0 {
+        let mut tb = PackedColumnTestbench::new(nl, ports, lib, lanes)?;
+        let results = tb.run_waves(stim, rand, params);
+        return Ok((results, tb.activity().clone()));
+    }
+    // Lane ranges: the first `lanes % threads` workers get one extra.
+    let base = lanes / threads;
+    let extra = lanes % threads;
+    let mut out: Vec<Option<WaveResult>> = (0..n).map(|_| None).collect();
+    let mut activity = super::Activity::new(nl.insts.len());
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(threads);
+        let mut lo = 0usize;
+        for t in 0..threads {
+            let width = base + usize::from(t < extra);
+            let my_lo = lo;
+            lo += width;
+            type WorkerOut =
+                (Vec<(usize, Vec<WaveResult>)>, super::Activity);
+            handles.push(scope.spawn(move || -> Result<WorkerOut> {
+                let mut tb =
+                    PackedColumnTestbench::new(nl, ports, lib, width)?;
+                let mut parts: Vec<(usize, Vec<WaveResult>)> = Vec::new();
+                let mut chunk = 0usize;
+                loop {
+                    let s0 = chunk * lanes + my_lo;
+                    if s0 >= n {
+                        break;
+                    }
+                    let e0 = (s0 + width).min(n);
+                    let res = tb.run_wave_lanes(
+                        &stim[s0..e0],
+                        &rand[s0..e0],
+                        params,
+                    );
+                    parts.push((s0, res));
+                    chunk += 1;
+                }
+                Ok((parts, tb.activity().clone()))
+            }));
+        }
+        for h in handles {
+            let worker = h.join().map_err(|_| {
+                crate::error::Error::sim("wave worker panicked")
+            })?;
+            let (parts, act) = worker?;
+            activity.merge(&act);
+            for (s0, res) in parts {
+                for (k, r) in res.into_iter().enumerate() {
+                    out[s0 + k] = Some(r);
+                }
+            }
+        }
+        Ok(())
+    })?;
+    let results = out
+        .into_iter()
+        .map(|o| o.expect("every wave covered by a lane range"))
+        .collect();
+    Ok((results, activity))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -506,6 +599,46 @@ mod tests {
         assert_eq!(total.toggles, ptb.activity().toggles);
         assert_eq!(total.clock_ticks, ptb.activity().clock_ticks);
         assert_eq!(total.cycles, ptb.activity().cycles);
+    }
+
+    /// The thread-parallel wave executor is bit-identical — results and
+    /// activity — to the single-thread packed schedule at every thread
+    /// count, including a final partial chunk.
+    #[test]
+    fn parallel_waves_match_single_thread_schedule() {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 5, q: 3, theta: 7 };
+        let (nl, ports) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let params = StdpParams::default_training();
+        let (waves, rands) = random_waves(&spec, 11, 0x2f3d);
+        let lanes = 6;
+
+        let mut tb =
+            PackedColumnTestbench::new(&nl, &ports, &lib, lanes).unwrap();
+        let canonical = tb.run_waves(&waves, &rands, &params);
+
+        for threads in [1usize, 2, 3, 6, 16] {
+            let (results, activity) = run_waves_parallel(
+                &nl, &ports, &lib, lanes, threads, &waves, &rands, &params,
+            )
+            .unwrap();
+            assert_eq!(results, canonical, "threads {threads}");
+            assert_eq!(
+                activity.toggles,
+                tb.activity().toggles,
+                "threads {threads}: toggles"
+            );
+            assert_eq!(
+                activity.clock_ticks,
+                tb.activity().clock_ticks,
+                "threads {threads}: clock ticks"
+            );
+            assert_eq!(
+                activity.cycles,
+                tb.activity().cycles,
+                "threads {threads}: cycles"
+            );
+        }
     }
 
     #[test]

@@ -13,7 +13,9 @@ use tnn7::netlist::column::{build_column, ColumnSpec};
 use tnn7::netlist::{Builder, ClockDomain, Flavor, NetId, Netlist};
 use tnn7::runtime::json::Json;
 use tnn7::sim::testbench::{ColumnTestbench, PackedColumnTestbench};
-use tnn7::sim::{Activity, PackedSimulator, Simulator};
+use tnn7::sim::{
+    Activity, PackedSimulator, ShardedSimulator, SimEngine, Simulator,
+};
 use tnn7::tnn::column::column_fwd;
 use tnn7::tnn::stdp::{stdp_step, RandPair, StdpParams};
 use tnn7::tnn::Lfsr16;
@@ -326,6 +328,105 @@ fn prop_packed_column_schedule_matches_strided_scalar() {
                 "{flavor:?} seed {seed}: cycles"
             );
         }
+    }
+}
+
+/// Random multi-block netlist: `blocks` independent region-tagged
+/// random blocks reading only the shared primary inputs, joined by a
+/// voter block — the shape the column-aligned partitioner cuts into
+/// shards plus a boundary-exchanged tail.
+fn random_sharded_netlist(
+    lib: &Library,
+    seed: u64,
+    blocks: usize,
+) -> Netlist {
+    let mut r = rng(seed);
+    let mut b = Builder::new("shard_rnd", lib);
+    let n_in = 2 + (r.next_u64() % 4) as usize;
+    let inputs: Vec<NetId> =
+        (0..n_in).map(|i| b.input(format!("x{i}"))).collect();
+    let mut block_outs = Vec::new();
+    for k in 0..blocks {
+        let reg = b.push(format!("col{k}"));
+        let mut pool = inputs.clone();
+        let ops = 6 + (r.next_u64() % 20) as usize;
+        for _ in 0..ops {
+            let a = pool[(r.next_u64() as usize) % pool.len()];
+            let c = pool[(r.next_u64() as usize) % pool.len()];
+            let d = pool[(r.next_u64() as usize) % pool.len()];
+            let n = match r.next_u64() % 8 {
+                0 => b.inv(a),
+                1 => b.and2(a, c),
+                2 => b.or2(a, c),
+                3 => b.xor2(a, c),
+                4 => b.maj3(a, c, d),
+                5 => b.mux2(a, c, d),
+                6 => b.dff(a, ClockDomain::Aclk),
+                _ => b.dff(a, ClockDomain::Gclk),
+            };
+            pool.push(n);
+        }
+        block_outs.push(*pool.last().unwrap());
+        b.pop(reg);
+    }
+    let reg = b.push("voter");
+    let v = b.or_tree(&block_outs);
+    let q = b.dff(v, ClockDomain::Gclk);
+    b.output(q, "y");
+    b.pop(reg);
+    b.finish().unwrap()
+}
+
+/// INVARIANT: the thread-parallel sharded engine is bit-identical to
+/// the single-thread packed engine on random multi-block netlists at
+/// random lane and shard counts — every net value in every lane every
+/// tick, and the aggregated toggle / clock-tick / cycle counters
+/// (therefore identical downstream power numbers).
+#[test]
+fn prop_sharded_engine_equals_packed_single_thread() {
+    let lib = Library::asap7_only();
+    for seed in 0..8u64 {
+        let mut r = rng(seed * 6151 + 7);
+        let blocks = 2 + (seed as usize % 4);
+        let nl = random_sharded_netlist(&lib, seed + 900, blocks);
+        let lanes = 1 + (r.next_u64() % 64) as usize;
+        let shards = 1 + (r.next_u64() % 6) as usize;
+        let mut sh =
+            ShardedSimulator::new(&nl, &lib, lanes, shards, &[]).unwrap();
+        let mut pk = PackedSimulator::new(&nl, &lib, lanes).unwrap();
+        for t in 0..30u32 {
+            let gamma = r.next_u64() & 3 == 0;
+            let words: Vec<(NetId, u64)> =
+                nl.inputs.iter().map(|&n| (n, r.next_u64())).collect();
+            sh.tick_lanes(&words, gamma);
+            pk.tick(&words, gamma);
+            for net in 0..nl.n_nets() {
+                let id = NetId(net as u32);
+                for l in 0..lanes {
+                    assert_eq!(
+                        sh.lane_value(id, l),
+                        pk.get(id, l),
+                        "seed {seed} tick {t} net {net} lane {l} \
+                         ({blocks} blocks, {shards} shards)"
+                    );
+                }
+            }
+        }
+        assert_eq!(
+            sh.activity().toggles,
+            pk.activity.toggles,
+            "seed {seed}: toggles"
+        );
+        assert_eq!(
+            sh.activity().clock_ticks,
+            pk.activity.clock_ticks,
+            "seed {seed}: clock ticks"
+        );
+        assert_eq!(
+            sh.activity().cycles,
+            pk.activity.cycles,
+            "seed {seed}: cycles"
+        );
     }
 }
 
