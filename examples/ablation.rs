@@ -12,7 +12,8 @@
 //!
 //! Usage: cargo run --release --example ablation
 
-use tnn7::cells::{Library, TechParams};
+use std::sync::Arc;
+
 use tnn7::config::TnnConfig;
 use tnn7::data::Dataset;
 use tnn7::flow::compare::{run_sweep, SweepJob};
@@ -22,23 +23,28 @@ use tnn7::netlist::Flavor;
 use tnn7::ppa::scaling::{ratios, NodeScaling, COL_1024X16_45NM};
 use tnn7::ppa::{power, timing};
 use tnn7::sim::testbench::ColumnTestbench;
+use tnn7::tech::{TechRegistry, ASAP7_TNN7};
 use tnn7::tnn::stdp::RandPair;
-use tnn7::tnn::{Lfsr16, StdpParams};
+use tnn7::tnn::Lfsr16;
 
 fn main() -> anyhow::Result<()> {
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
+    // One registry: every measurement below shares the same Arc'd
+    // characterized library through the asap7-tnn7 backend.
+    let registry = TechRegistry::builtin();
+    let techctx = registry.get(ASAP7_TNN7)?;
+    let lib = techctx.library();
+    let tech = *techctx.params();
     let cfg = TnnConfig::default();
     let spec = ColumnSpec::benchmark(64, 8);
 
     // ---- 1. stimulus density vs power --------------------------------
     println!("== Ablation 1: input spike density vs column power (64x8 std) ==");
     println!("{:>10} {:>12} {:>14}", "density", "power uW", "dyn share");
-    let (nl, ports) = build_column(&lib, Flavor::Std, &spec)?;
-    let t = timing::analyze(&nl, &lib, &tech)?;
+    let (nl, ports) = build_column(lib, Flavor::Std, &spec)?;
+    let t = timing::analyze(&nl, lib, &tech)?;
     let params = cfg.stdp_params();
     for density in [0.0f64, 0.25, 0.5, 0.75, 1.0] {
-        let mut tb = ColumnTestbench::new(&nl, &ports, &lib)?;
+        let mut tb = ColumnTestbench::new(&nl, &ports, lib)?;
         let mut lfsr = Lfsr16::new(7);
         for wave in 0..6 {
             let s: Vec<i32> = (0..spec.p)
@@ -56,7 +62,7 @@ fn main() -> anyhow::Result<()> {
                 (0..spec.p * spec.q).map(|_| lfsr.draw_pair()).collect();
             tb.run_wave(&s, &rand, &params);
         }
-        let pw = power::analyze(&nl, &lib, &tech, tb.activity(), t.min_clock_ps);
+        let pw = power::analyze(&nl, lib, &tech, tb.activity(), t.min_clock_ps);
         println!(
             "{:>9.0}% {:>12.3} {:>13.1}%",
             density * 100.0,
@@ -73,7 +79,7 @@ fn main() -> anyhow::Result<()> {
     // deltas are computed from the in-order results afterwards.
     println!("== Ablation 2: power-estimate convergence vs simulated waves ==");
     println!("{:>8} {:>12} {:>10}", "waves", "power uW", "delta");
-    let data = Dataset::generate(32, cfg.data_seed);
+    let data = Arc::new(Dataset::generate(32, cfg.data_seed));
     let wave_counts = [1usize, 2, 4, 8, 16, 32];
     let jobs: Vec<SweepJob> = wave_counts
         .iter()
@@ -94,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     let mut last = f64::NAN;
     for (&waves, res) in wave_counts
         .iter()
-        .zip(run_sweep(&jobs, &lib, &tech, &data, threads))
+        .zip(run_sweep(&jobs, &registry, &data, threads))
     {
         let r = res.report?;
         let delta = if last.is_nan() {
@@ -115,8 +121,7 @@ fn main() -> anyhow::Result<()> {
     let r = measure_with(
         Target::column(Flavor::Custom, spec1024),
         &cfg,
-        &lib,
-        &tech,
+        &techctx,
         &data,
     )?;
     let (rp, rt, ra) = ratios(&COL_1024X16_45NM, &r.total);

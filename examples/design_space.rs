@@ -15,11 +15,13 @@
 //! Usage: cargo run --release --example design_space [-- --quick]
 //!        [--threads N]
 
-use tnn7::cells::{Library, TechParams};
+use std::sync::Arc;
+
 use tnn7::config::TnnConfig;
 use tnn7::data::Dataset;
 use tnn7::flow::compare::{run_sweep, SweepJob};
 use tnn7::flow::Target;
+use tnn7::tech::TechRegistry;
 use tnn7::netlist::column::ColumnSpec;
 use tnn7::netlist::Flavor;
 use tnn7::tnn::encoding::encode_image;
@@ -127,13 +129,14 @@ fn main() -> anyhow::Result<()> {
         "{:>6} {:>6} {:>12} {:>12} {:>12}",
         "p", "q", "power uW", "time ns", "area mm2"
     );
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
+    // One registry: all design points share the one characterized
+    // asap7-tnn7 library behind an Arc.
+    let registry = TechRegistry::builtin();
     let cfg = TnnConfig {
         sim_waves: if quick { 2 } else { 4 },
         ..TnnConfig::default()
     };
-    let data = Dataset::generate(8, 7);
+    let data = Arc::new(Dataset::generate(8, 7));
     // One flow run per design point — a sweep is a job list handed to
     // the parallel executor; reports come back in job order,
     // bit-identical to the serial loop.
@@ -146,7 +149,7 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     for (&q, res) in
-        qs.iter().zip(run_sweep(&jobs, &lib, &tech, &data, threads))
+        qs.iter().zip(run_sweep(&jobs, &registry, &data, threads))
     {
         let r = res.report?;
         println!(

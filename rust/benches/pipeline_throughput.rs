@@ -22,19 +22,21 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use tnn7::cells::{Library, TechParams};
+use std::sync::Arc;
+
 use tnn7::config::TnnConfig;
 use tnn7::coordinator::Pipeline;
 use tnn7::data::Dataset;
 use tnn7::flow::{self, Target};
 use tnn7::netlist::column::ColumnSpec;
+use tnn7::tech::{TechRegistry, ASAP7_TNN7};
 use tnn7::netlist::Flavor;
 use tnn7::runtime::json::Json;
 
 fn bench_measure_flow(threads: usize) -> anyhow::Result<()> {
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
-    let data = Dataset::generate(8, 3);
+    let registry = TechRegistry::builtin();
+    let tech = registry.get(ASAP7_TNN7)?;
+    let data = Arc::new(Dataset::generate(8, 3));
     let spec = ColumnSpec::benchmark(32, 12);
     let points = [(1usize, 1usize), (64, 1), (64, threads)];
     let mut mean = [0.0f64; 3];
@@ -54,7 +56,6 @@ fn bench_measure_flow(threads: usize) -> anyhow::Result<()> {
                 flow::measure_with(
                     Target::column(Flavor::Custom, spec),
                     &cfg,
-                    &lib,
                     &tech,
                     &data,
                 )

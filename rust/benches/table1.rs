@@ -7,11 +7,13 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use tnn7::cells::{Library, TechParams};
+use std::sync::Arc;
+
 use tnn7::config::TnnConfig;
 use tnn7::data::Dataset;
 use tnn7::flow::{self, table1_specs, Target};
 use tnn7::netlist::Flavor;
+use tnn7::tech::{TechRegistry, ASAP7_TNN7};
 use tnn7::ppa::report::{improvement_line, render_table1, PpaRow};
 use tnn7::ppa::scaling;
 use tnn7::ppa::ColumnPpa;
@@ -31,11 +33,11 @@ fn paper(flavor: Flavor, label: &str) -> ColumnPpa {
 
 fn main() -> anyhow::Result<()> {
     let cfg = TnnConfig::default();
-    // Build the substrate once; measure_with still clones it per call
-    // (cheap next to a gate-level sim), but generation happens here.
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
-    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+    // Characterize the substrate once in the registry; every measured
+    // point shares the same Arc'd library — no per-call cloning.
+    let registry = TechRegistry::builtin();
+    let tech = registry.get(ASAP7_TNN7)?;
+    let data = Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
 
     let mut rows = Vec::new();
     let mut measured = Vec::new();
@@ -48,8 +50,13 @@ fn main() -> anyhow::Result<()> {
                 if label == "1024x16" { 2 } else { 3 },
                 || {
                     out = Some(
-                        flow::measure_with(target, &cfg, &lib, &tech, &data)
-                            .expect("measure"),
+                        flow::measure_with(
+                            target.clone(),
+                            &cfg,
+                            &tech,
+                            &data,
+                        )
+                        .expect("measure"),
                     );
                 },
             );

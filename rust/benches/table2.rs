@@ -8,22 +8,24 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use tnn7::cells::{Library, TechParams};
+use std::sync::Arc;
+
 use tnn7::config::TnnConfig;
 use tnn7::data::Dataset;
 use tnn7::flow::{self, Target};
 use tnn7::netlist::Flavor;
+use tnn7::tech::{TechRegistry, ASAP7_TNN7};
 use tnn7::ppa::report::{improvement_line, render_table2, PpaRow};
 use tnn7::ppa::scaling;
 use tnn7::ppa::ColumnPpa;
 
 fn main() -> anyhow::Result<()> {
     let cfg = TnnConfig::default();
-    // Build the substrate once; measure_with still clones it per call
-    // (cheap next to a gate-level sim), but generation happens here.
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
-    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+    // Characterize the substrate once in the registry; both flavours
+    // share the same Arc'd library — no per-call cloning.
+    let registry = TechRegistry::builtin();
+    let tech = registry.get(ASAP7_TNN7)?;
+    let data = Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
 
     let paper = [
         (
@@ -42,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         let mut out = None;
         common::bench(&format!("table2/{flavor:?}/prototype"), 2, || {
             out = Some(
-                flow::measure_with(target, &cfg, &lib, &tech, &data)
+                flow::measure_with(target.clone(), &cfg, &tech, &data)
                     .expect("prototype flow"),
             );
         });

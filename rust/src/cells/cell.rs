@@ -92,6 +92,11 @@ impl MacroKind {
         }
     }
 
+    /// Macro kind from its canonical cell name.
+    pub fn from_name(name: &str) -> Option<MacroKind> {
+        MacroKind::ALL.into_iter().find(|m| m.name() == name)
+    }
+
     /// Canonical cell name (the paper's macro name).
     pub fn name(self) -> &'static str {
         match self {
@@ -176,6 +181,80 @@ impl CellKind {
     /// True for cells with state (clocked by their instance's domain).
     pub fn is_sequential(self) -> bool {
         self.pins().2 > 0
+    }
+
+    /// Stable text token for Liberty interchange (`nand2`,
+    /// `macro:spike_gen`, …); inverse of [`CellKind::from_token`].
+    pub fn token(self) -> String {
+        use CellKind::*;
+        match self {
+            Tie0 => "tie0".into(),
+            Tie1 => "tie1".into(),
+            Inv => "inv".into(),
+            Buf => "buf".into(),
+            Nand2 => "nand2".into(),
+            Nand3 => "nand3".into(),
+            Nand4 => "nand4".into(),
+            Nor2 => "nor2".into(),
+            Nor3 => "nor3".into(),
+            And2 => "and2".into(),
+            And3 => "and3".into(),
+            Or2 => "or2".into(),
+            Or3 => "or3".into(),
+            Xor2 => "xor2".into(),
+            Xnor2 => "xnor2".into(),
+            Xor3 => "xor3".into(),
+            Maj3 => "maj3".into(),
+            Aoi21 => "aoi21".into(),
+            Oai21 => "oai21".into(),
+            Mux2 => "mux2".into(),
+            Dff => "dff".into(),
+            DffR => "dffr".into(),
+            DffRn => "dffrn".into(),
+            Latch => "latch".into(),
+            Macro(m) => format!("macro:{}", m.name()),
+        }
+    }
+
+    /// Parse a [`CellKind::token`] back to the kind.
+    pub fn from_token(tok: &str) -> Result<CellKind> {
+        use CellKind::*;
+        if let Some(name) = tok.strip_prefix("macro:") {
+            return MacroKind::from_name(name).map(Macro).ok_or_else(|| {
+                Error::cells(format!("unknown macro kind `{name}`"))
+            });
+        }
+        Ok(match tok {
+            "tie0" => Tie0,
+            "tie1" => Tie1,
+            "inv" => Inv,
+            "buf" => Buf,
+            "nand2" => Nand2,
+            "nand3" => Nand3,
+            "nand4" => Nand4,
+            "nor2" => Nor2,
+            "nor3" => Nor3,
+            "and2" => And2,
+            "and3" => And3,
+            "or2" => Or2,
+            "or3" => Or3,
+            "xor2" => Xor2,
+            "xnor2" => Xnor2,
+            "xor3" => Xor3,
+            "maj3" => Maj3,
+            "aoi21" => Aoi21,
+            "oai21" => Oai21,
+            "mux2" => Mux2,
+            "dff" => Dff,
+            "dffr" => DffR,
+            "dffrn" => DffRn,
+            "latch" => Latch,
+            other => {
+                return Err(Error::cells(format!(
+                    "unknown cell kind token `{other}`"
+                )))
+            }
+        })
     }
 }
 
@@ -339,6 +418,22 @@ mod tests {
         for c in lib.cells() {
             assert_eq!(c.kind.is_sequential(), c.kind.pins().2 > 0, "{}", c.name);
         }
+    }
+
+    #[test]
+    fn kind_token_round_trips_every_kind() {
+        let lib = Library::with_macros();
+        for c in lib.cells() {
+            let tok = c.kind.token();
+            assert_eq!(CellKind::from_token(&tok).unwrap(), c.kind, "{tok}");
+        }
+        assert!(CellKind::from_token("quantum").is_err());
+        assert!(CellKind::from_token("macro:flux_cap").is_err());
+        assert_eq!(
+            MacroKind::from_name("spike_gen"),
+            Some(MacroKind::SpikeGen)
+        );
+        assert_eq!(MacroKind::from_name("nope"), None);
     }
 
     #[test]

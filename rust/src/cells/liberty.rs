@@ -4,15 +4,21 @@
 //! module provides the same artifact for inspection and tooling
 //! interoperability (`tnn7 characterize --lib out.lib`).  The dialect is a
 //! small, self-consistent subset: one `cell` group per cell with `area`,
-//! `cell_leakage_power`, `switching_energy`, `transistors`, and a single
-//! worst-arc `timing` group.  `parse` round-trips everything `emit`
-//! writes (tested below).
+//! `cell_leakage_power`, `switching_energy`, `transistors`, a `cell_kind`
+//! simulation-semantics token ([`super::cell::CellKind::token`]), setup
+//! for sequential cells, and a single worst-arc `timing` group.
+//!
+//! Numeric fields are written with Rust's shortest-round-trip float
+//! formatting, so `parse` recovers *bit-identical* values: a library
+//! emitted and reloaded through the `liberty-file` technology backend
+//! ([`crate::tech`]) reports exactly the PPA of the in-memory library
+//! it came from.
 
 use std::fmt::Write as _;
 
 use crate::error::{Error, Result};
 
-use super::cell::{Library, MacroKind};
+use super::cell::{CellKind, Library, MacroKind};
 use super::characterize::TechParams;
 
 /// Render the library as `.lib`-style text with absolute units.
@@ -24,29 +30,31 @@ pub fn emit(lib: &Library, tech: &TechParams, lib_name: &str) -> String {
     let _ = writeln!(s, "  leakage_power_unit : \"1nW\";");
     let _ = writeln!(s, "  capacitive_energy_unit : \"1fJ\";");
     let _ = writeln!(s, "  area_unit : \"1um2\";");
+    let _ = writeln!(s, "  nom_voltage : 0.7;");
     for cell in lib.cells() {
         let _ = writeln!(s, "  cell ({}) {{", cell.name);
-        let _ = writeln!(s, "    area : {:.5};", tech.area_um2(cell));
+        let _ = writeln!(s, "    area : {};", tech.area_um2(cell));
         let _ = writeln!(
             s,
-            "    cell_leakage_power : {:.5};",
+            "    cell_leakage_power : {};",
             tech.leak_nw(cell)
         );
         let _ = writeln!(
             s,
-            "    switching_energy : {:.5};",
+            "    switching_energy : {};",
             tech.energy_fj(cell)
         );
         let _ = writeln!(s, "    transistors : {};", cell.transistors);
+        let _ = writeln!(s, "    cell_kind : \"{}\";", cell.kind.token());
         if cell.is_custom_macro {
             let _ = writeln!(s, "    user_function_class : \"tnn_gdi_macro\";");
         }
         if cell.kind.is_sequential() {
             let _ = writeln!(s, "    ff (IQ) {{ }}");
-            let _ = writeln!(s, "    setup : {:.5};", tech.setup_ps(cell));
+            let _ = writeln!(s, "    setup : {};", tech.setup_ps(cell));
         }
         let _ = writeln!(s, "    timing () {{");
-        let _ = writeln!(s, "      cell_rise : {:.5};", tech.delay_ps(cell));
+        let _ = writeln!(s, "      cell_rise : {};", tech.delay_ps(cell));
         let _ = writeln!(s, "    }}");
         let _ = writeln!(s, "  }}");
     }
@@ -63,35 +71,60 @@ pub struct LibertyCell {
     pub energy_fj: f64,
     pub transistors: u32,
     pub delay_ps: f64,
+    /// Setup requirement (sequential cells; 0 otherwise).
+    pub setup_ps: f64,
+    /// Simulation semantics, when the file carries the tnn7
+    /// `cell_kind` attribute (required by the `liberty-file` backend).
+    pub kind: Option<CellKind>,
     pub is_macro: bool,
 }
 
-/// Parse the dialect emitted by [`emit`].
-pub fn parse(text: &str) -> Result<Vec<LibertyCell>> {
-    let mut out = Vec::new();
+/// A parsed `.lib` library: header metadata plus the cell entries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LibertyLibrary {
+    /// The `library (NAME)` header.
+    pub name: String,
+    /// `nom_voltage` header, defaulting to the paper's 0.7 V corner.
+    pub voltage_v: f64,
+    pub cells: Vec<LibertyCell>,
+}
+
+/// Parse the dialect emitted by [`emit`], keeping header metadata.
+pub fn parse_library(text: &str) -> Result<LibertyLibrary> {
+    let mut name = String::new();
+    let mut voltage_v = 0.7f64;
+    let mut cells = Vec::new();
     let mut cur: Option<LibertyCell> = None;
     for raw in text.lines() {
         let line = raw.trim();
-        if let Some(rest) = line.strip_prefix("cell (") {
-            let name = rest
+        let field = |l: &str, key: &str| -> Option<String> {
+            l.strip_prefix(key)
+                .and_then(|r| r.strip_prefix(" : "))
+                .map(|v| v.trim_end_matches(';').trim_matches('"').to_string())
+        };
+        if let Some(rest) = line.strip_prefix("library (") {
+            name = rest
+                .split(')')
+                .next()
+                .ok_or_else(|| Error::cells("malformed library header"))?
+                .to_string();
+        } else if let Some(rest) = line.strip_prefix("cell (") {
+            let cell_name = rest
                 .split(')')
                 .next()
                 .ok_or_else(|| Error::cells("malformed cell header"))?;
             cur = Some(LibertyCell {
-                name: name.to_string(),
+                name: cell_name.to_string(),
                 area_um2: 0.0,
                 leak_nw: 0.0,
                 energy_fj: 0.0,
                 transistors: 0,
                 delay_ps: 0.0,
+                setup_ps: 0.0,
+                kind: None,
                 is_macro: false,
             });
         } else if let Some(c) = cur.as_mut() {
-            let field = |l: &str, key: &str| -> Option<String> {
-                l.strip_prefix(key)
-                    .and_then(|r| r.strip_prefix(" : "))
-                    .map(|v| v.trim_end_matches(';').trim_matches('"').to_string())
-            };
             if let Some(v) = field(line, "area") {
                 c.area_um2 = v.parse().map_err(|_| Error::cells("bad area"))?;
             } else if let Some(v) = field(line, "cell_leakage_power") {
@@ -101,25 +134,35 @@ pub fn parse(text: &str) -> Result<Vec<LibertyCell>> {
             } else if let Some(v) = field(line, "transistors") {
                 c.transistors =
                     v.parse().map_err(|_| Error::cells("bad transistors"))?;
+            } else if let Some(v) = field(line, "cell_kind") {
+                c.kind = Some(CellKind::from_token(&v)?);
+            } else if let Some(v) = field(line, "setup") {
+                c.setup_ps =
+                    v.parse().map_err(|_| Error::cells("bad setup"))?;
             } else if let Some(v) = field(line, "cell_rise") {
                 c.delay_ps = v.parse().map_err(|_| Error::cells("bad delay"))?;
             } else if line.contains("tnn_gdi_macro") {
                 c.is_macro = true;
-            } else if line == "}" {
-                // Either closes a timing group or the cell; a cell entry is
-                // complete once it has an area — push on the *second* close.
-                // Simpler: detect cell close by next "cell (" or EOF; handle
-                // by pushing when we see "  }" at cell indent.
             }
+            // The cell group closes at cell indent ("  }"); inner
+            // groups (timing, ff) close deeper and fall through.
             if raw.starts_with("  }") {
-                out.push(cur.take().unwrap());
+                cells.push(cur.take().unwrap());
             }
+        } else if let Some(v) = field(line, "nom_voltage") {
+            voltage_v =
+                v.parse().map_err(|_| Error::cells("bad nom_voltage"))?;
         }
     }
-    if out.is_empty() {
+    if cells.is_empty() {
         return Err(Error::cells("no cells parsed"));
     }
-    Ok(out)
+    Ok(LibertyLibrary { name, voltage_v, cells })
+}
+
+/// Parse the dialect emitted by [`emit`] (cell entries only).
+pub fn parse(text: &str) -> Result<Vec<LibertyCell>> {
+    Ok(parse_library(text)?.cells)
 }
 
 /// Sanity report comparing custom macros against same-function standard
@@ -153,13 +196,25 @@ mod tests {
         let lib = Library::with_macros();
         let tech = TechParams::calibrated();
         let text = emit(&lib, &tech, "tnn7_rvt_tt_0p7v");
-        let parsed = parse(&text).unwrap();
-        assert_eq!(parsed.len(), lib.len());
-        for (p, c) in parsed.iter().zip(lib.cells()) {
+        let parsed = parse_library(&text).unwrap();
+        assert_eq!(parsed.name, "tnn7_rvt_tt_0p7v");
+        assert_eq!(parsed.voltage_v, 0.7);
+        assert_eq!(parsed.cells.len(), lib.len());
+        for (p, c) in parsed.cells.iter().zip(lib.cells()) {
             assert_eq!(p.name, c.name);
             assert_eq!(p.transistors, c.transistors);
-            assert!((p.area_um2 - tech.area_um2(c)).abs() < 1e-4);
+            assert_eq!(p.kind, Some(c.kind), "{}", c.name);
             assert_eq!(p.is_macro, c.is_custom_macro);
+            // Shortest-round-trip formatting: exact equality.
+            assert_eq!(p.area_um2, tech.area_um2(c), "{}", c.name);
+            assert_eq!(p.leak_nw, tech.leak_nw(c));
+            assert_eq!(p.energy_fj, tech.energy_fj(c));
+            assert_eq!(p.delay_ps, tech.delay_ps(c));
+            if c.kind.is_sequential() {
+                assert_eq!(p.setup_ps, tech.setup_ps(c));
+            } else {
+                assert_eq!(p.setup_ps, 0.0);
+            }
         }
     }
 

@@ -21,6 +21,8 @@
 //! axis of that schedule across worker threads (DESIGN.md §8):
 //! measurements at any thread count are bit-identical.
 
+use std::sync::Arc;
+
 use crate::cells::calibrate::Observation;
 use crate::cells::{Library, TechParams};
 use crate::config::TnnConfig;
@@ -30,8 +32,16 @@ use crate::flow::{self, Target, UnitReport};
 use crate::netlist::column::ColumnSpec;
 use crate::netlist::Flavor;
 use crate::ppa::ColumnPpa;
+use crate::tech::TechContext;
 
 pub use crate::flow::{parse_geometry, table1_specs};
+
+/// Wrap caller-held substrate parts in an ad-hoc technology backend —
+/// the shim that keeps the historical `(lib, tech)` signatures working
+/// over the backend-based flow API.
+fn adhoc_tech(lib: &Library, tech: &TechParams) -> TechContext {
+    TechContext::from_parts("coordinator", "7nm", lib.clone(), *tech)
+}
 
 /// Everything measured for one column design point (the flow's
 /// [`UnitReport`], flattened to the historical field set).
@@ -77,7 +87,12 @@ pub fn measure_column(
     data: &Dataset,
 ) -> Result<ColumnMeasurement> {
     let target = Target::column(flavor, *spec);
-    let report = flow::measure_with(target, cfg, lib, tech, data)?;
+    let report = flow::measure_with(
+        target,
+        cfg,
+        &adhoc_tech(lib, tech),
+        &Arc::new(data.clone()),
+    )?;
     let unit = report
         .units
         .into_iter()
@@ -96,7 +111,12 @@ pub fn prototype_ppa(
     data: &Dataset,
 ) -> Result<(ColumnPpa, ColumnMeasurement, ColumnMeasurement)> {
     let target = Target::prototype(flavor);
-    let report = flow::measure_with(target, cfg, lib, tech, data)?;
+    let report = flow::measure_with(
+        target,
+        cfg,
+        &adhoc_tech(lib, tech),
+        &Arc::new(data.clone()),
+    )?;
     let total = report.total;
     let mut units = report.units.into_iter();
     let m1 = units

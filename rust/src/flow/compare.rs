@@ -11,13 +11,16 @@
 //! Sweeps: [`run_sweep`] executes N [`SweepJob`]s (target × config)
 //! concurrently on a scoped worker pool — the engine behind
 //! `tnn7 flow --targets`, `bench-table1/2 --threads`, and the
-//! `design_space` / `ablation` examples.  Each job runs the ordinary
-//! measurement pipeline via [`super::measure_with`], so a parallel
-//! sweep returns bit-identical reports to the serial loop it replaces,
-//! in job order.
+//! `design_space` / `ablation` examples.  Each job resolves its
+//! target's technology backend through the shared [`TechRegistry`]
+//! (one `Arc` clone — every job on the same backend reuses a single
+//! characterized library, no per-job re-characterization) and runs the
+//! ordinary measurement pipeline via [`super::measure_with`], so a
+//! parallel sweep returns bit-identical reports to the serial loop it
+//! replaces, in job order.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 use crate::cells::{gdi, Library, TechParams};
 use crate::config::TnnConfig;
@@ -28,6 +31,7 @@ use crate::netlist::modules::mux::mux2;
 use crate::netlist::modules::stabilize_func::stabilize_func;
 use crate::netlist::{Builder, Flavor, Netlist};
 use crate::runtime::json::Json;
+use crate::tech::TechRegistry;
 
 use super::{measure_with, Target, TargetReport};
 
@@ -232,12 +236,15 @@ pub struct SweepResult {
 ///
 /// Workers claim jobs from a shared atomic cursor, so long design
 /// points (1024x16) overlap with short ones instead of serializing
-/// behind them.  Results come back in **job order** regardless of
-/// completion order, and each report is bit-identical to what a serial
-/// [`measure_with`] loop would produce — parallelism here is across
-/// independent design points, never inside one measurement's activity
-/// accounting.  A failing job reports its own error without aborting
-/// the rest of the sweep.
+/// behind them.  Each job's technology backend resolves through the
+/// shared `registry` — an `Arc` clone of a library characterized once
+/// at registration, never re-characterized per job.  Results come back
+/// in **job order** regardless of completion order, and each report is
+/// bit-identical to what a serial [`measure_with`] loop would produce —
+/// parallelism here is across independent design points, never inside
+/// one measurement's activity accounting.  A failing job (including an
+/// unknown backend name) reports its own error without aborting the
+/// rest of the sweep.
 ///
 /// Callers typically set each job's `cfg.sim_threads` to 1: the sweep
 /// already spends the thread budget across jobs, and stacking per-job
@@ -245,9 +252,8 @@ pub struct SweepResult {
 /// inner threads).
 pub fn run_sweep(
     jobs: &[SweepJob],
-    lib: &Library,
-    tech: &TechParams,
-    data: &Dataset,
+    registry: &TechRegistry,
+    data: &Arc<Dataset>,
     threads: usize,
 ) -> Vec<SweepResult> {
     let threads = threads.max(1).min(jobs.len().max(1));
@@ -264,7 +270,14 @@ pub fn run_sweep(
                 }
                 let job = &jobs[i];
                 let report =
-                    measure_with(job.target, &job.cfg, lib, tech, data);
+                    registry.get(job.target.tech.as_str()).and_then(|tech| {
+                        measure_with(
+                            job.target.clone(),
+                            &job.cfg,
+                            &tech,
+                            data,
+                        )
+                    });
                 if tx.send((i, report)).is_err() {
                     break;
                 }
@@ -280,7 +293,7 @@ pub fn run_sweep(
         .zip(slots)
         .map(|(job, slot)| SweepResult {
             label: job.label.clone(),
-            target: job.target,
+            target: job.target.clone(),
             report: slot.expect("every claimed job reports"),
         })
         .collect()
@@ -333,14 +346,14 @@ mod tests {
     }
 
     /// A parallel sweep returns, in job order, exactly the reports the
-    /// serial loop would produce.
+    /// serial loop would produce — resolving backends through one
+    /// shared registry.
     #[test]
     fn parallel_sweep_matches_serial_measurements() {
         use crate::netlist::column::ColumnSpec;
-        let lib = Library::with_macros();
-        let tech = TechParams::calibrated();
+        let registry = TechRegistry::builtin();
         let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
-        let data = Dataset::generate(4, 5);
+        let data = Arc::new(Dataset::generate(4, 5));
         let jobs: Vec<SweepJob> = [(4usize, 2usize), (6, 3), (8, 4)]
             .iter()
             .map(|&(p, q)| {
@@ -348,18 +361,43 @@ mod tests {
                 SweepJob::of(Target::column(Flavor::Std, spec), &cfg)
             })
             .collect();
-        let results = run_sweep(&jobs, &lib, &tech, &data, 3);
+        let results = run_sweep(&jobs, &registry, &data, 3);
         assert_eq!(results.len(), 3);
+        let tech = registry.get(crate::tech::ASAP7_TNN7).unwrap();
         for (job, res) in jobs.iter().zip(&results) {
             assert_eq!(job.label, res.label);
-            let serial =
-                measure_with(job.target, &job.cfg, &lib, &tech, &data)
-                    .unwrap();
+            let serial = measure_with(
+                job.target.clone(),
+                &job.cfg,
+                &tech,
+                &data,
+            )
+            .unwrap();
             let got = res.report.as_ref().unwrap();
             assert_eq!(got.total.power_uw, serial.total.power_uw);
             assert_eq!(got.total.time_ns, serial.total.time_ns);
             assert_eq!(got.total.area_mm2, serial.total.area_mm2);
         }
+    }
+
+    /// A job naming an unregistered backend fails alone, without
+    /// aborting the rest of the sweep.
+    #[test]
+    fn sweep_reports_unknown_backend_per_job() {
+        use crate::netlist::column::ColumnSpec;
+        let registry = TechRegistry::builtin();
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let data = Arc::new(Dataset::generate(4, 5));
+        let spec = ColumnSpec { p: 4, q: 2, theta: 4 };
+        let good = SweepJob::of(Target::column(Flavor::Std, spec), &cfg);
+        let bad = SweepJob::of(
+            Target::column(Flavor::Std, spec)
+                .with_tech(crate::tech::BackendId::new("no-such")),
+            &cfg,
+        );
+        let results = run_sweep(&[good, bad], &registry, &data, 2);
+        assert!(results[0].report.is_ok());
+        assert!(results[1].report.is_err());
     }
 
     #[test]

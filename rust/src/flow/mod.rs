@@ -7,7 +7,7 @@
 //! module turns that flow into composable passes:
 //!
 //! ```text
-//! Elaborate → Sta → Simulate → Power → Area → Scale45 → Report
+//! Elaborate → Sta → Simulate → Power → Area → Report
 //! ```
 //!
 //! * [`Stage`] — one pass: `run` reads/writes typed artifacts on a
@@ -16,22 +16,25 @@
 //! * [`Flow`] — an ordered stage list built from [`Flow::standard`],
 //!   [`Flow::from_spec`] (the CLI `--pipeline elaborate,sta,sim,ppa`
 //!   idiom) or manual composition; `run` executes the stages and, with
-//!   [`Flow::dump_dir`], writes one numbered artifact per stage
-//!   (`00_elaborate.json`, `01_sta.json`, …).
-//! * [`FlowContext`] — the [`Target`] descriptor (flavour × node ×
-//!   geometry) plus every intermediate artifact, inspectable between
-//!   stages.
+//!   [`Flow::dump_dir`], writes one JSON artifact per stage, named
+//!   `NN_stage.BACKEND.json` so sweeps over several technologies into
+//!   one directory never collide.
+//! * [`FlowContext`] — the [`Target`] descriptor (flavour × technology
+//!   backend × geometry), the resolved [`TechContext`] handle, and
+//!   every intermediate artifact, inspectable between stages.
 //! * [`measure`] — the one-call convenience the old
 //!   `coordinator::measure` free functions now wrap.
 //!
-//! Every future scaling direction (cached stage artifacts, new
-//! targets) hangs off this API: a cache is a stage that short-circuits
-//! `run`, a new design point is a new `Geometry`, the `simulate` stage
-//! batches up to 64 stimulus waves per tick through the word-packed
-//! engine and cuts the lane axis across worker threads
-//! (`cfg.sim_lanes` / `--lanes`, `cfg.sim_threads` / `--threads`;
-//! DESIGN.md §7–8), and design-point sweeps run N targets concurrently
-//! through [`compare::run_sweep`].
+//! The technology substrate is pluggable: a target names a backend
+//! ([`crate::tech::BackendId`]) resolved through the
+//! [`crate::tech::TechRegistry`] — `asap7-tnn7` (the default),
+//! `asap7-baseline`, `n45-projected` (reports through the node-scaling
+//! projection that used to be the bolt-on `scale45` stage), or any
+//! `.lib` file loaded as a `liberty-file` backend.  Stages consume the
+//! backend through one [`TechContext`] handle instead of `(lib, tech)`
+//! pairs, so comparing the paper's Table I flavours is just the
+//! two-point case of sweeping registered technologies
+//! ([`compare::run_sweep`]).
 //!
 //! Build a target, run a partial pipeline, inspect the artifacts:
 //!
@@ -43,7 +46,8 @@
 //!
 //! let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
 //! let spec = ColumnSpec { p: 4, q: 2, theta: 4 };
-//! let mut ctx = FlowContext::new(Target::column(Flavor::Std, spec), cfg);
+//! let mut ctx =
+//!     FlowContext::new(Target::column(Flavor::Std, spec), cfg).unwrap();
 //!
 //! // Elaborate the netlist and time it — no simulation, no power.
 //! Flow::from_spec("elaborate,sta").unwrap().run(&mut ctx).unwrap();
@@ -58,10 +62,11 @@ pub mod stages;
 pub mod target;
 
 pub use target::{
-    parse_geometry, table1_specs, Geometry, Target, TechNode, UnitPlan,
+    parse_geometry, table1_specs, Geometry, Target, UnitPlan,
 };
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::cells::{Library, TechParams};
 use crate::config::TnnConfig;
@@ -73,10 +78,10 @@ use crate::netlist::Netlist;
 use crate::ppa::area::AreaReport;
 use crate::ppa::power::{PowerReport, RelPower};
 use crate::ppa::report::ColumnPpa;
-use crate::ppa::scaling::NodeScaling;
 use crate::ppa::timing::TimingReport;
 use crate::runtime::json::Json;
 use crate::sim::Activity;
+use crate::tech::TechContext;
 
 /// One pass of the design flow.
 ///
@@ -100,22 +105,6 @@ pub struct ElaboratedUnit {
     pub netlist: Netlist,
     pub ports: ColumnPorts,
     pub census: Census,
-}
-
-/// The 45nm-comparison artifact ([`stages::Scale45`]).
-#[derive(Debug, Clone)]
-pub struct Scale45Report {
-    /// Native 7nm composed PPA the comparison is made against (never
-    /// node-projected, even for 45nm targets).
-    pub measured: ColumnPpa,
-    /// Published 45nm anchor, when one exists for this geometry.
-    pub anchor: Option<(&'static str, ColumnPpa)>,
-    /// (power, time, area) ratios 45nm / measured, when anchored.
-    pub ratios: Option<(f64, f64, f64)>,
-    /// First-order constant-field model factors for sanity-checking.
-    pub model_power_factor: f64,
-    pub model_delay_factor: f64,
-    pub model_area_factor: f64,
 }
 
 /// Per-unit measurement in the final report (the old
@@ -143,9 +132,13 @@ pub struct UnitReport {
 #[derive(Debug, Clone)]
 pub struct TargetReport {
     pub target: Target,
+    /// Name of the technology backend the flow actually measured with.
+    pub tech_name: String,
+    /// Node label the totals are reported in.
+    pub node_label: String,
     pub units: Vec<UnitReport>,
-    /// Replica-scaled, parallel-composed target PPA (projected to the
-    /// target's [`TechNode`]).
+    /// Replica-scaled, parallel-composed target PPA, projected to the
+    /// backend's reporting node ([`crate::tech::TechBackend::project`]).
     pub total: ColumnPpa,
 }
 
@@ -178,7 +171,8 @@ impl TargetReport {
         Json::obj(vec![
             ("target", Json::str(self.target.describe())),
             ("flavor", Json::str(self.target.flavor.label())),
-            ("node", Json::str(self.target.node.label())),
+            ("tech", Json::str(self.tech_name.clone())),
+            ("node", Json::str(self.node_label.clone())),
             ("units", Json::Arr(units)),
             (
                 "total",
@@ -195,15 +189,17 @@ impl TargetReport {
 
 /// Everything a flow run reads and writes.
 ///
-/// Inputs (`target`, `cfg`, `lib`, `tech`, `data`) are fixed at
-/// construction; artifact vectors run parallel to [`Target::units`] and
-/// are empty until their producing stage has run.
+/// Inputs (`target`, `cfg`, `tech`, `data`) are fixed at construction;
+/// artifact vectors run parallel to [`Target::units`] and are empty
+/// until their producing stage has run.  The technology substrate is a
+/// shared [`TechContext`] handle — contexts that measure on the same
+/// backend share one characterized library.
 pub struct FlowContext {
     pub target: Target,
     pub cfg: TnnConfig,
-    pub lib: Library,
-    pub tech: TechParams,
-    pub data: Dataset,
+    /// The resolved technology backend (library + constants + node).
+    pub tech: TechContext,
+    pub data: Arc<Dataset>,
     /// `elaborate` artifacts.
     pub elaborated: Vec<ElaboratedUnit>,
     /// `sta` artifacts.
@@ -224,35 +220,34 @@ pub struct FlowContext {
     /// `area` artifacts.
     pub area: Vec<AreaReport>,
     pub rel_area: Vec<f64>,
-    /// `scale45` artifact.
-    pub scale45: Option<Scale45Report>,
     /// `report` artifact.
     pub report: Option<TargetReport>,
 }
 
 impl FlowContext {
-    /// Context with default substrate: characterized macro library,
-    /// calibrated technology constants, and the config's dataset.
-    pub fn new(target: Target, cfg: TnnConfig) -> FlowContext {
-        let lib = Library::with_macros();
-        let tech = TechParams::calibrated();
-        let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
-        FlowContext::with_parts(target, cfg, lib, tech, data)
+    /// Context with the target's technology backend resolved
+    /// standalone (only the named backend is characterized — built-in
+    /// names plus `.lib` paths) and the config's dataset.  Sweeps
+    /// share a [`crate::tech::TechRegistry`] and use
+    /// [`FlowContext::with_tech`] instead.
+    pub fn new(target: Target, cfg: TnnConfig) -> Result<FlowContext> {
+        let tech = crate::tech::resolve_standalone(target.tech.as_str())?;
+        let data =
+            Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
+        Ok(FlowContext::with_tech(target, cfg, tech, data))
     }
 
-    /// Context with explicit substrate (calibration fits use unit-scale
-    /// [`TechParams`]; ablations substitute their own datasets).
-    pub fn with_parts(
+    /// Context with an explicit resolved backend and dataset — the
+    /// zero-copy form sweeps use (both are shared handles).
+    pub fn with_tech(
         target: Target,
         cfg: TnnConfig,
-        lib: Library,
-        tech: TechParams,
-        data: Dataset,
+        tech: TechContext,
+        data: Arc<Dataset>,
     ) -> FlowContext {
         FlowContext {
             target,
             cfg,
-            lib,
             tech,
             data,
             elaborated: Vec::new(),
@@ -265,9 +260,23 @@ impl FlowContext {
             rel_power: Vec::new(),
             area: Vec::new(),
             rel_area: Vec::new(),
-            scale45: None,
             report: None,
         }
+    }
+
+    /// Context from explicit substrate parts (calibration fits use
+    /// unit-scale [`TechParams`]; ablations substitute their own
+    /// datasets).  Wraps the parts in an ad-hoc backend.
+    pub fn with_parts(
+        target: Target,
+        cfg: TnnConfig,
+        lib: Library,
+        params: TechParams,
+        data: Dataset,
+    ) -> FlowContext {
+        let tech =
+            TechContext::from_parts("ad-hoc", "7nm", lib, params);
+        FlowContext::with_tech(target, cfg, tech, Arc::new(data))
     }
 
     /// Drop every artifact that depends on the named stage's output.
@@ -279,11 +288,10 @@ impl FlowContext {
     /// have to be re-run.
     pub fn invalidate_downstream(&mut self, stage: &str) {
         // Dependency chain: elaborate → {sta, simulate, area} → power
-        // → {scale45, report} (scale45/report also read sta/area).
+        // → report (report also reads sta/area).
         let wipe_power = |ctx: &mut FlowContext| {
             ctx.power.clear();
             ctx.rel_power.clear();
-            ctx.scale45 = None;
             ctx.report = None;
         };
         match stage {
@@ -299,7 +307,6 @@ impl FlowContext {
             }
             "sta" | "simulate" => wipe_power(self),
             "power" | "area" => {
-                self.scale45 = None;
                 self.report = None;
             }
             _ => {}
@@ -308,13 +315,13 @@ impl FlowContext {
 
     /// Composed target-level PPA from the per-unit sta/power/area
     /// artifacts: replica scaling then parallel composition, projected
-    /// to the target's tech node.
+    /// to the backend's reporting node.
     pub fn compose_total(&self) -> Result<ColumnPpa> {
-        Ok(self.project_node(self.compose_native()?))
+        Ok(self.tech.project(self.compose_native()?))
     }
 
-    /// The same composition in the native (7nm-measured) domain, with
-    /// no node projection — the baseline `scale45` ratios against
+    /// The same composition in the native (as-measured) domain, with no
+    /// node projection — what anchor comparisons ratio against
     /// (projecting both sides would cancel the comparison).
     pub fn compose_native(&self) -> Result<ColumnPpa> {
         let units = self.target.units();
@@ -341,21 +348,6 @@ impl FlowContext {
             });
         }
         total.ok_or_else(|| Error::ppa("target has no units"))
-    }
-
-    /// Project a 7nm-measured PPA to the target's reporting node.
-    fn project_node(&self, ppa: ColumnPpa) -> ColumnPpa {
-        match self.target.node {
-            TechNode::N7 => ppa,
-            TechNode::N45 => {
-                let m = NodeScaling::n45_to_7();
-                ColumnPpa {
-                    power_uw: ppa.power_uw * m.power_factor(),
-                    time_ns: ppa.time_ns * m.delay_factor(),
-                    area_mm2: ppa.area_mm2 * m.area_factor(),
-                }
-            }
-        }
     }
 
     /// Replica-scaled (cells, transistors) census over all units — the
@@ -395,17 +387,21 @@ impl Flow {
     }
 
     /// The full canonical pipeline:
-    /// `elaborate → sta → simulate → power → area → scale45 → report`.
+    /// `elaborate → sta → simulate → power → area → report`.
+    ///
+    /// (The old trailing `scale45` stage is gone: 45nm comparisons are
+    /// now the `n45-projected` technology backend, and anchor-ratio
+    /// reporting lives with the benches/CLI that present it.)
     pub fn standard() -> Flow {
-        Flow::from_spec("elaborate,sta,simulate,power,area,scale45,report")
+        Flow::from_spec("elaborate,sta,simulate,power,area,report")
             .expect("canonical pipeline spec")
     }
 
-    /// The measurement pipeline behind [`measure`] (no 45nm stage):
-    /// `elaborate → sta → simulate → power → area → report`.
+    /// The measurement pipeline behind [`measure`] — since the node
+    /// projection moved into the technology backend this is the same
+    /// stage list as [`Flow::standard`].
     pub fn measurement() -> Flow {
-        Flow::from_spec("elaborate,sta,simulate,power,area,report")
-            .expect("measurement pipeline spec")
+        Flow::standard()
     }
 
     /// Parse a `--pipeline` spec: comma-separated stage tokens.  `sim`
@@ -434,7 +430,8 @@ impl Flow {
         self
     }
 
-    /// Write one numbered JSON artifact per stage into `dir`.
+    /// Write one JSON artifact per stage into `dir`, named
+    /// `NN_stage.BACKEND.json`.
     pub fn dump_dir(mut self, dir: impl Into<PathBuf>) -> Flow {
         self.dump_dir = Some(dir.into());
         self
@@ -466,9 +463,10 @@ impl Flow {
     }
 
     /// Run every stage in order.  With a dump dir, each stage's JSON
-    /// artifact is written as `NN_name.json` right after it runs, so a
-    /// failing pipeline still leaves the artifacts of the stages that
-    /// completed.
+    /// artifact is written as `NN_name.BACKEND.json` right after it
+    /// runs, so a failing pipeline still leaves the artifacts of the
+    /// stages that completed — and sweeps over several technology
+    /// backends into one directory never collide.
     pub fn run(&self, ctx: &mut FlowContext) -> Result<()> {
         if let Some(dir) = &self.dump_dir {
             std::fs::create_dir_all(dir)?;
@@ -476,7 +474,11 @@ impl Flow {
         for (i, stage) in self.stages.iter().enumerate() {
             stage.run(ctx)?;
             if let Some(dir) = &self.dump_dir {
-                let path = dir.join(format!("{i:02}_{}.json", stage.name()));
+                let backend = sanitize_component(ctx.tech.name());
+                let path = dir.join(format!(
+                    "{i:02}_{}.{backend}.json",
+                    stage.name()
+                ));
                 std::fs::write(&path, stage.dump(ctx).to_string_pretty())?;
             }
         }
@@ -484,37 +486,42 @@ impl Flow {
     }
 }
 
-/// Measure a target end-to-end with the default substrate and return
-/// the composed report — the one-call form of the flow API.
+/// Make a backend name safe as a filename component (`.lib` paths
+/// contain separators).
+fn sanitize_component(name: &str) -> String {
+    name.chars()
+        .map(|c| if c == '/' || c == '\\' || c == ':' { '_' } else { c })
+        .collect()
+}
+
+/// Measure a target end-to-end, resolving its technology backend
+/// through the built-in registry, and return the composed report — the
+/// one-call form of the flow API.
 pub fn measure(target: Target, cfg: &TnnConfig) -> Result<TargetReport> {
-    let mut ctx = FlowContext::new(target, cfg.clone());
+    let mut ctx = FlowContext::new(target, cfg.clone())?;
     Flow::measurement().run(&mut ctx)?;
     ctx.report
         .take()
         .ok_or_else(|| Error::ppa("report stage produced no artifact"))
 }
 
-/// Measure with an explicit substrate (library / technology constants /
-/// dataset) — the form the `coordinator::measure` wrappers use.
+/// Measure with an explicit resolved backend and shared dataset — the
+/// form sweeps and the `coordinator::measure` wrappers use.
 ///
-/// The context owns its substrate, so the library and dataset are
-/// cloned per call; both are small (dozens of cells, a handful of
-/// 25×25 images) next to one gate-level simulation, but a future
-/// many-point sweep that wants zero-copy should share via borrowing
-/// stages or `Arc` rather than calling this in a tight loop.
+/// Both substrate handles are `Arc`-shared: N concurrent measurements
+/// on one backend reuse a single characterized library, with no
+/// per-call cloning or re-characterization.
 pub fn measure_with(
     target: Target,
     cfg: &TnnConfig,
-    lib: &Library,
-    tech: &TechParams,
-    data: &Dataset,
+    tech: &TechContext,
+    data: &Arc<Dataset>,
 ) -> Result<TargetReport> {
-    let mut ctx = FlowContext::with_parts(
+    let mut ctx = FlowContext::with_tech(
         target,
         cfg.clone(),
-        lib.clone(),
-        *tech,
-        data.clone(),
+        tech.clone(),
+        Arc::clone(data),
     );
     Flow::measurement().run(&mut ctx)?;
     ctx.report
@@ -537,15 +544,7 @@ mod tests {
         );
         assert_eq!(
             Flow::standard().stage_names(),
-            vec![
-                "elaborate",
-                "sta",
-                "simulate",
-                "power",
-                "area",
-                "scale45",
-                "report"
-            ]
+            vec!["elaborate", "sta", "simulate", "power", "area", "report"]
         );
     }
 
@@ -554,6 +553,9 @@ mod tests {
         assert!(Flow::from_spec("elaborate,fuse").is_err());
         assert!(Flow::from_spec("sta,elaborate").is_err());
         assert!(Flow::from_spec("").is_err());
+        // The old scale45 stage no longer exists; the n45-projected
+        // backend replaces it.
+        assert!(Flow::from_spec("elaborate,sta,scale45").is_err());
         // power without simulate
         assert!(Flow::from_spec("elaborate,sta,power").is_err());
     }
@@ -564,9 +566,18 @@ mod tests {
         let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
         let target =
             Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 });
-        let mut ctx = FlowContext::new(target, cfg);
+        let mut ctx = FlowContext::new(target, cfg).unwrap();
         let flow = Flow::new().with_stage(Box::new(stages::Sta));
         assert!(flow.run(&mut ctx).is_err());
+    }
+
+    #[test]
+    fn unknown_backend_fails_at_context_construction() {
+        let cfg = TnnConfig::default();
+        let target =
+            Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 })
+                .with_tech(crate::tech::BackendId::new("no-such-tech"));
+        assert!(FlowContext::new(target, cfg).is_err());
     }
 
     #[test]
@@ -574,7 +585,7 @@ mod tests {
         let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
         let target =
             Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 });
-        let mut ctx = FlowContext::new(target, cfg);
+        let mut ctx = FlowContext::new(target, cfg).unwrap();
         Flow::measurement().run(&mut ctx).unwrap();
         assert!(ctx.report.is_some());
         assert!(!ctx.power.is_empty());
@@ -588,7 +599,6 @@ mod tests {
         assert!(ctx.power.is_empty());
         assert!(ctx.timing.is_empty());
         assert!(ctx.report.is_none());
-        assert!(ctx.scale45.is_none());
         assert!(ctx.compose_total().is_err());
     }
 
@@ -601,7 +611,7 @@ mod tests {
         };
         let target =
             Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 });
-        let mut ctx = FlowContext::new(target, cfg);
+        let mut ctx = FlowContext::new(target, cfg).unwrap();
         Flow::from_spec("elaborate,simulate")
             .unwrap()
             .run(&mut ctx)
@@ -629,7 +639,7 @@ mod tests {
                 Flavor::Std,
                 ColumnSpec { p: 4, q: 2, theta: 4 },
             );
-            let mut ctx = FlowContext::new(target, cfg);
+            let mut ctx = FlowContext::new(target, cfg).unwrap();
             Flow::from_spec("elaborate,simulate")
                 .unwrap()
                 .run(&mut ctx)
@@ -652,10 +662,22 @@ mod tests {
             Target::column(Flavor::Std, ColumnSpec { p: 8, q: 4, theta: 10 });
         let r = measure(target, &cfg).unwrap();
         assert_eq!(r.units.len(), 1);
+        assert_eq!(r.tech_name, crate::tech::ASAP7_TNN7);
+        assert_eq!(r.node_label, "7nm");
         assert!(r.total.power_uw > 0.0);
         assert!(r.total.time_ns > 0.0);
         assert!(r.total.area_mm2 > 0.0);
         // one unit, one replica: total == unit ppa
         assert_eq!(r.total.power_uw, r.units[0].ppa.power_uw);
+    }
+
+    #[test]
+    fn dump_filenames_carry_backend_names() {
+        assert_eq!(sanitize_component("asap7-tnn7"), "asap7-tnn7");
+        assert_eq!(sanitize_component("out/my.lib"), "out_my.lib");
+        assert_eq!(
+            sanitize_component("liberty-file:x/y.lib"),
+            "liberty-file_x_y.lib"
+        );
     }
 }

@@ -13,14 +13,20 @@
 //! | `simulate` | switching activity             | elaborate           |
 //! | `power`    | dynamic/clock/leakage power    | sta, simulate       |
 //! | `area`     | placed / die area              | elaborate           |
-//! | `scale45`  | 45nm anchors + ratios          | sta, power, area    |
 //! | `report`   | composed [`TargetReport`]      | sta, power, area    |
+//!
+//! Every stage pulls its substrate — the characterized library and the
+//! technology constants — from the context's [`crate::tech::TechContext`]
+//! handle; node projection (the old `scale45` stage) is the backend's
+//! [`crate::tech::TechBackend::project`], applied when the `report`
+//! stage composes totals.
 
+use crate::cells::{CellKind, MacroKind};
 use crate::coordinator::activity_bridge::stimulus;
 use crate::error::{Error, Result};
 use crate::netlist::column::build_column;
+use crate::netlist::Flavor;
 use crate::ppa::report::ColumnPpa;
-use crate::ppa::scaling::{self, NodeScaling};
 use crate::ppa::{area, power, timing};
 use crate::runtime::json::Json;
 use crate::sim::testbench::{
@@ -29,10 +35,8 @@ use crate::sim::testbench::{
 use crate::tnn::stdp::RandPair;
 use crate::tnn::Lfsr16;
 
-use super::target::Geometry;
 use super::{
-    ElaboratedUnit, FlowContext, Scale45Report, Stage, TargetReport,
-    UnitReport,
+    ElaboratedUnit, FlowContext, Stage, TargetReport, UnitReport,
 };
 
 /// All canonical stages in pipeline order (drives help text).
@@ -43,7 +47,6 @@ pub fn all() -> Vec<Box<dyn Stage>> {
         Box::new(Simulate),
         Box::new(Power),
         Box::new(Area),
-        Box::new(Scale45),
         Box::new(Report),
     ]
 }
@@ -57,13 +60,12 @@ pub fn make(tok: &str) -> Result<Vec<Box<dyn Stage>>> {
         "simulate" | "sim" => vec![Box::new(Simulate)],
         "power" => vec![Box::new(Power)],
         "area" => vec![Box::new(Area)],
-        "scale45" => vec![Box::new(Scale45)],
         "report" => vec![Box::new(Report)],
         "ppa" => vec![Box::new(Power), Box::new(Area), Box::new(Report)],
         other => {
             return Err(Error::config(format!(
                 "unknown pipeline stage `{other}` (available: elaborate, \
-                 sta, simulate|sim, power, area, scale45, report, ppa)"
+                 sta, simulate|sim, power, area, report, ppa)"
             )))
         }
     })
@@ -74,7 +76,7 @@ pub fn requires(name: &str) -> &'static [&'static str] {
     match name {
         "sta" | "simulate" | "area" => &["elaborate"],
         "power" => &["sta", "simulate"],
-        "scale45" | "report" => &["sta", "power", "area"],
+        "report" => &["sta", "power", "area"],
         _ => &[],
     }
 }
@@ -103,13 +105,39 @@ impl Stage for Elaborate {
     }
 
     fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        // Custom-flavour elaboration instantiates the 11 GDI macros;
+        // check the backend's library carries them up front so a
+        // macro-less backend (asap7-baseline, a foreign .lib) fails
+        // with a structured error instead of a builder panic.
+        if ctx.target.flavor == Flavor::Custom {
+            for m in MacroKind::ALL {
+                if ctx
+                    .tech
+                    .library()
+                    .id_of_kind(CellKind::Macro(m))
+                    .is_err()
+                {
+                    return Err(Error::cells(format!(
+                        "technology backend `{}` has no `{}` macro — \
+                         custom-flavour targets need the full custom \
+                         GDI macro set (use asap7-tnn7 or a \
+                         tnn7-dialect .lib)",
+                        ctx.tech.name(),
+                        m.name()
+                    )));
+                }
+            }
+        }
         let units = ctx.target.units();
         ctx.invalidate_downstream(self.name());
         ctx.elaborated.clear();
         for plan in units {
-            let (netlist, ports) =
-                build_column(&ctx.lib, ctx.target.flavor, &plan.spec)?;
-            let census = netlist.census(&ctx.lib);
+            let (netlist, ports) = build_column(
+                ctx.tech.library(),
+                ctx.target.flavor,
+                &plan.spec,
+            )?;
+            let census = netlist.census(ctx.tech.library());
             ctx.elaborated.push(ElaboratedUnit {
                 plan,
                 netlist,
@@ -140,6 +168,7 @@ impl Stage for Elaborate {
         Json::obj(vec![
             ("stage", Json::str(self.name())),
             ("target", Json::str(ctx.target.describe())),
+            ("tech", Json::str(ctx.tech.name())),
             ("units", Json::Arr(units)),
         ])
     }
@@ -168,7 +197,11 @@ impl Stage for Sta {
         ctx.invalidate_downstream(self.name());
         ctx.timing.clear();
         for u in &ctx.elaborated {
-            let t = timing::analyze(&u.netlist, &ctx.lib, &ctx.tech)?;
+            let t = timing::analyze(
+                &u.netlist,
+                ctx.tech.library(),
+                ctx.tech.params(),
+            )?;
             ctx.timing.push(t);
         }
         Ok(())
@@ -254,7 +287,7 @@ impl Stage for Simulate {
                 let (_results, activity) = run_waves_parallel(
                     &u.netlist,
                     &u.ports,
-                    &ctx.lib,
+                    ctx.tech.library(),
                     lanes,
                     threads,
                     &stim,
@@ -266,14 +299,17 @@ impl Stage for Simulate {
                 let mut tb = PackedColumnTestbench::new(
                     &u.netlist,
                     &u.ports,
-                    &ctx.lib,
+                    ctx.tech.library(),
                     lanes,
                 )?;
                 tb.run_waves(&stim, &rands, &params);
                 ctx.activity.push(tb.activity().clone());
             } else {
-                let mut tb =
-                    ColumnTestbench::new(&u.netlist, &u.ports, &ctx.lib)?;
+                let mut tb = ColumnTestbench::new(
+                    &u.netlist,
+                    &u.ports,
+                    ctx.tech.library(),
+                )?;
                 for (s, rand) in stim.iter().zip(&rands) {
                     tb.run_wave(s, rand, &params);
                 }
@@ -350,13 +386,17 @@ impl Stage for Power {
                 .ok_or_else(|| missing("power", "simulate"))?;
             let pw = power::analyze(
                 &u.netlist,
-                &ctx.lib,
-                &ctx.tech,
+                ctx.tech.library(),
+                ctx.tech.params(),
                 act,
                 t.min_clock_ps,
             );
-            let rel =
-                power::relative(&u.netlist, &ctx.lib, act, t.min_clock_ps);
+            let rel = power::relative(
+                &u.netlist,
+                ctx.tech.library(),
+                act,
+                t.min_clock_ps,
+            );
             ctx.power.push(pw);
             ctx.rel_power.push(rel);
         }
@@ -412,8 +452,13 @@ impl Stage for Area {
         ctx.area.clear();
         ctx.rel_area.clear();
         for u in &ctx.elaborated {
-            ctx.area.push(area::analyze(&u.netlist, &ctx.lib, &ctx.tech));
-            ctx.rel_area.push(area::relative(&u.netlist, &ctx.lib));
+            ctx.area.push(area::analyze(
+                &u.netlist,
+                ctx.tech.library(),
+                ctx.tech.params(),
+            ));
+            ctx.rel_area
+                .push(area::relative(&u.netlist, ctx.tech.library()));
         }
         Ok(())
     }
@@ -441,106 +486,6 @@ impl Stage for Area {
 }
 
 // ---------------------------------------------------------------------
-// scale45
-
-/// 45nm comparison: published anchors where the paper quotes them, plus
-/// the first-order node-scaling model factors.
-pub struct Scale45;
-
-impl Scale45 {
-    /// The published 45nm anchor for a geometry, if the paper quotes
-    /// one (the 1024x16 column and the prototype).
-    fn anchor(ctx: &FlowContext) -> Option<(&'static str, ColumnPpa)> {
-        match ctx.target.geometry {
-            Geometry::Column(s) if s.p == 1024 && s.q == 16 => Some((
-                "45nm 1024x16 column (Table IV [2])",
-                scaling::COL_1024X16_45NM,
-            )),
-            Geometry::Prototype(_) => Some((
-                "45nm prototype (Table VI [2])",
-                scaling::PROTOTYPE_45NM,
-            )),
-            _ => None,
-        }
-    }
-}
-
-impl Stage for Scale45 {
-    fn name(&self) -> &'static str {
-        "scale45"
-    }
-
-    fn description(&self) -> &'static str {
-        "45nm comparison: published anchors and node-scaling model \
-         ratios (paper SIII.B)"
-    }
-
-    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
-        // Ratio against the native 7nm composition: for a 45nm-node
-        // target, compose_total() projects the measurement up, and
-        // ratios of projected-vs-anchor would cancel the comparison.
-        let measured = ctx.compose_native()?;
-        let anchor = Scale45::anchor(ctx);
-        let ratios = anchor.map(|(_, a)| scaling::ratios(&a, &measured));
-        let m = NodeScaling::n45_to_7();
-        ctx.scale45 = Some(Scale45Report {
-            measured,
-            anchor,
-            ratios,
-            model_power_factor: m.power_factor(),
-            model_delay_factor: m.delay_factor(),
-            model_area_factor: m.area_factor(),
-        });
-        Ok(())
-    }
-
-    fn dump(&self, ctx: &FlowContext) -> Json {
-        let mut fields = vec![("stage", Json::str(self.name()))];
-        if let Some(s) = &ctx.scale45 {
-            fields.push((
-                "measured",
-                Json::obj(vec![
-                    ("power_uw", Json::num(s.measured.power_uw)),
-                    ("time_ns", Json::num(s.measured.time_ns)),
-                    ("area_mm2", Json::num(s.measured.area_mm2)),
-                ]),
-            ));
-            match (&s.anchor, &s.ratios) {
-                (Some((name, a)), Some((rp, rt, ra))) => {
-                    fields.push(("anchor", Json::str(*name)));
-                    fields.push((
-                        "anchor_ppa",
-                        Json::obj(vec![
-                            ("power_uw", Json::num(a.power_uw)),
-                            ("time_ns", Json::num(a.time_ns)),
-                            ("area_mm2", Json::num(a.area_mm2)),
-                        ]),
-                    ));
-                    fields.push((
-                        "ratios",
-                        Json::obj(vec![
-                            ("power", Json::num(*rp)),
-                            ("time", Json::num(*rt)),
-                            ("area", Json::num(*ra)),
-                        ]),
-                    ));
-                }
-                _ => fields.push(("anchor", Json::Null)),
-            }
-            fields.push((
-                "model_factors",
-                Json::obj(vec![
-                    ("power", Json::num(s.model_power_factor)),
-                    ("delay", Json::num(s.model_delay_factor)),
-                    ("area", Json::num(s.model_area_factor)),
-                ]),
-            ));
-        }
-        Json::obj(fields)
-    }
-}
-
-// ---------------------------------------------------------------------
 // report
 
 /// Compose per-unit artifacts into the final [`TargetReport`].
@@ -552,11 +497,13 @@ impl Stage for Report {
     }
 
     fn description(&self) -> &'static str {
-        "compose per-unit artifacts into the final target PPA report"
+        "compose per-unit artifacts into the final target PPA report \
+         (projected to the backend's reporting node)"
     }
 
     fn run(&self, ctx: &mut FlowContext) -> Result<()> {
         let total = ctx.compose_total()?;
+        let fo4_ps = ctx.tech.params().fo4_ps;
         let mut units = Vec::with_capacity(ctx.elaborated.len());
         for (i, u) in ctx.elaborated.iter().enumerate() {
             let t = ctx
@@ -592,15 +539,20 @@ impl Stage for Report {
                 rel_area,
                 rel_energy_rate: rel.energy_rate,
                 rel_leak: rel.leak,
-                rel_time: t.min_clock_ps / ctx.tech.fo4_ps
+                rel_time: t.min_clock_ps / fo4_ps
                     * crate::ppa::WAVE_CYCLES as f64,
                 cells: u.census.cells,
                 transistors: u.census.transistors,
                 clock_ps: t.min_clock_ps,
             });
         }
-        ctx.report =
-            Some(TargetReport { target: ctx.target, units, total });
+        ctx.report = Some(TargetReport {
+            target: ctx.target.clone(),
+            tech_name: ctx.tech.name().to_string(),
+            node_label: ctx.tech.node_label().to_string(),
+            units,
+            total,
+        });
         Ok(())
     }
 

@@ -1,9 +1,10 @@
 //! First-class design-point descriptors for the flow API.
 //!
 //! A [`Target`] names *what* the flow measures: implementation flavour
-//! ([`Flavor`]) × technology node ([`TechNode`]) × geometry
-//! ([`Geometry`]: one column or the Fig. 19 prototype).  Targets expand
-//! into [`UnitPlan`]s — the representative columns the stages actually
+//! ([`Flavor`]) × technology backend ([`BackendId`], resolved through
+//! the [`crate::tech::TechRegistry`]) × geometry ([`Geometry`]: one
+//! column or the Fig. 19 prototype).  Targets expand into
+//! [`UnitPlan`]s — the representative columns the stages actually
 //! elaborate/simulate, each with its synaptic-scaling replica count
 //! (the paper's §III.C roll-up).
 
@@ -11,38 +12,7 @@ use crate::error::{Error, Result};
 use crate::netlist::column::ColumnSpec;
 use crate::netlist::prototype::PrototypeSpec;
 use crate::netlist::Flavor;
-
-/// Technology node a target's PPA is reported in.
-///
-/// `N7` is the native calibrated model; `N45` projects the measured 7nm
-/// numbers back up through the first-order node-scaling model
-/// ([`crate::ppa::scaling::NodeScaling`]) for §III.B-style comparisons.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum TechNode {
-    N7,
-    N45,
-}
-
-impl TechNode {
-    /// Human label ("7nm" / "45nm").
-    pub fn label(self) -> &'static str {
-        match self {
-            TechNode::N7 => "7nm",
-            TechNode::N45 => "45nm",
-        }
-    }
-
-    /// Parse "7nm" / "7" / "45nm" / "45".
-    pub fn parse(s: &str) -> Result<Self> {
-        match s.trim() {
-            "7nm" | "7" => Ok(TechNode::N7),
-            "45nm" | "45" => Ok(TechNode::N45),
-            other => Err(Error::config(format!(
-                "unknown tech node `{other}` (supported: 7nm, 45nm)"
-            ))),
-        }
-    }
-}
+use crate::tech::BackendId;
 
 /// Geometry of the design under measurement.
 #[derive(Debug, Clone, Copy)]
@@ -58,7 +28,7 @@ impl Geometry {
     /// Short label for reports ("64x8" / "prototype").
     pub fn label(&self) -> String {
         match self {
-            Geometry::Column(s) => format!("{}x{}", s.p, s.q),
+            Geometry::Column(s) => s.label(),
             Geometry::Prototype(_) => "prototype".to_string(),
         }
     }
@@ -73,65 +43,84 @@ pub struct UnitPlan {
 }
 
 impl UnitPlan {
-    /// "PxQ" geometry label.
+    /// "PxQ" geometry label (shared [`ColumnSpec::label`] formatting).
     pub fn label(&self) -> String {
-        format!("{}x{}", self.spec.p, self.spec.q)
+        self.spec.label()
     }
 }
 
-/// A full design point: flavour × node × geometry.
-#[derive(Debug, Clone, Copy)]
+/// A full design point: flavour × technology backend × geometry.
+#[derive(Debug, Clone)]
 pub struct Target {
     pub flavor: Flavor,
-    pub node: TechNode,
+    /// Name of the technology backend measurements resolve through.
+    pub tech: BackendId,
     pub geometry: Geometry,
 }
 
 impl Target {
-    /// A single-column 7nm target.
+    /// A single-column target on the default (`asap7-tnn7`) backend.
     pub fn column(flavor: Flavor, spec: ColumnSpec) -> Target {
-        Target { flavor, node: TechNode::N7, geometry: Geometry::Column(spec) }
+        Target {
+            flavor,
+            tech: BackendId::default(),
+            geometry: Geometry::Column(spec),
+        }
     }
 
-    /// The paper's Fig. 19 prototype at 7nm.
+    /// The paper's Fig. 19 prototype on the default backend.
     pub fn prototype(flavor: Flavor) -> Target {
         Target {
             flavor,
-            node: TechNode::N7,
+            tech: BackendId::default(),
             geometry: Geometry::Prototype(PrototypeSpec::paper()),
         }
     }
 
-    /// Parse a `--target` descriptor: `FLAVOR[:NODE]`, e.g. `custom:7nm`,
-    /// `std:45nm`, or just `std` (node defaults to 7nm).
+    /// The same target on another technology backend.
+    pub fn with_tech(mut self, tech: BackendId) -> Target {
+        self.tech = tech;
+        self
+    }
+
+    /// Parse a `--target` descriptor: `FLAVOR[:TECH]`, e.g. `custom`,
+    /// `std:asap7-baseline`, `baseline:n45-projected`, or the legacy
+    /// node forms `custom:7nm` / `std:45nm` (which canonicalize to the
+    /// matching backend).  TECH defaults to `asap7-tnn7`.
     pub fn parse(desc: &str, geometry: Geometry) -> Result<Target> {
-        let (f, n) = match desc.split_once(':') {
-            Some((f, n)) => (f, Some(n)),
+        let (f, t) = match desc.split_once(':') {
+            Some((f, t)) => (f, Some(t)),
             None => (desc, None),
         };
         let flavor = match f.trim() {
-            "std" | "standard" => Flavor::Std,
+            "std" | "standard" | "baseline" => Flavor::Std,
             "custom" | "gdi" => Flavor::Custom,
             other => {
                 return Err(Error::config(format!(
-                    "unknown flavor `{other}` (supported: std, custom)"
+                    "unknown flavor `{other}` (supported: std|baseline, \
+                     custom|gdi)"
                 )))
             }
         };
-        let node = match n {
-            Some(n) => TechNode::parse(n)?,
-            None => TechNode::N7,
+        let tech = match t {
+            Some(t) if t.trim().is_empty() => {
+                return Err(Error::config(format!(
+                    "empty tech in target `{desc}`"
+                )))
+            }
+            Some(t) => BackendId::new(t),
+            None => BackendId::default(),
         };
-        Ok(Target { flavor, node, geometry })
+        Ok(Target { flavor, tech, geometry })
     }
 
-    /// Short descriptor for logs ("custom:7nm 64x8").
+    /// Short descriptor for logs ("custom:asap7-tnn7 64x8").
     pub fn describe(&self) -> String {
         let flavor = match self.flavor {
             Flavor::Std => "std",
             Flavor::Custom => "custom",
         };
-        format!("{flavor}:{} {}", self.node.label(), self.geometry.label())
+        format!("{flavor}:{} {}", self.tech, self.geometry.label())
     }
 
     /// The representative columns to elaborate, with replica counts.
@@ -181,26 +170,36 @@ pub fn table1_specs() -> [(&'static str, ColumnSpec); 3] {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tech::{ASAP7_TNN7, N45_PROJECTED};
 
     #[test]
-    fn parses_flavor_and_node() {
+    fn parses_flavor_and_backend() {
         let g = Geometry::Column(ColumnSpec::benchmark(64, 8));
-        let t = Target::parse("custom:7nm", g).unwrap();
+        let t = Target::parse("custom:asap7-tnn7", g).unwrap();
         assert_eq!(t.flavor, Flavor::Custom);
-        assert_eq!(t.node, TechNode::N7);
+        assert_eq!(t.tech.as_str(), ASAP7_TNN7);
         let t = Target::parse("std", g).unwrap();
         assert_eq!(t.flavor, Flavor::Std);
-        assert_eq!(t.node, TechNode::N7);
+        assert_eq!(t.tech.as_str(), ASAP7_TNN7);
+        // "baseline" is a flavor alias (CI sweep idiom), not a backend.
+        let t = Target::parse("baseline", g).unwrap();
+        assert_eq!(t.flavor, Flavor::Std);
+        // Legacy node descriptors canonicalize to backends.
         let t = Target::parse("std:45nm", g).unwrap();
-        assert_eq!(t.node, TechNode::N45);
-        assert_eq!(t.describe(), "std:45nm 64x8");
+        assert_eq!(t.tech.as_str(), N45_PROJECTED);
+        assert_eq!(t.describe(), "std:n45-projected 64x8");
+        let t = Target::parse("custom:7nm", g).unwrap();
+        assert_eq!(t.tech.as_str(), ASAP7_TNN7);
+        // .lib paths pass through verbatim.
+        let t = Target::parse("std:out/my.lib", g).unwrap();
+        assert_eq!(t.tech.as_str(), "out/my.lib");
     }
 
     #[test]
     fn rejects_bad_descriptors() {
         let g = Geometry::Column(ColumnSpec::benchmark(8, 4));
         assert!(Target::parse("cadence", g).is_err());
-        assert!(Target::parse("std:3nm", g).is_err());
+        assert!(Target::parse("std:", g).is_err());
     }
 
     #[test]
@@ -220,6 +219,8 @@ mod tests {
         assert_eq!(units.len(), 1);
         assert_eq!(units[0].replicas, 1);
         assert_eq!(units[0].label(), "64x8");
+        // UnitPlan and Geometry share one label formatting.
+        assert_eq!(units[0].label(), t.geometry.label());
     }
 
     #[test]

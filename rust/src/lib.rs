@@ -23,15 +23,21 @@
 //!   column-aligned partition of [`netlist::partition`].
 //! * [`ppa`] — STA, activity-based power, placement-model area, EDP, and the
 //!   45nm↔7nm scaling model (Tables I & II, Figs. 14–18).
+//! * [`tech`] — pluggable technology backends: one [`tech::TechBackend`]
+//!   trait bundling the characterized library, the scale constants, node
+//!   metadata, and node-scaling projection, with a [`tech::TechRegistry`]
+//!   resolving backends by name (`asap7-baseline`, `asap7-tnn7`,
+//!   `n45-projected`, or any `.lib` file as a `liberty-file` backend).
 //! * [`tnn`] — the golden behavioral TNN (RNL neurons, WTA, STDP, LFSR BRVs);
 //!   the oracle both the gate-level netlists and the HLO executables are
 //!   tested against.
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); python never runs at runtime.
 //! * [`flow`] — the staged, inspectable design-flow pipeline
-//!   (`Elaborate → Sta → Simulate → Power → Area → Scale45 → Report`)
-//!   over first-class [`flow::Target`] descriptors, with per-stage JSON
-//!   dumps and parallel multi-target sweeps
+//!   (`Elaborate → Sta → Simulate → Power → Area → Report`) over
+//!   first-class [`flow::Target`] descriptors (flavour × technology
+//!   backend × geometry), with per-stage JSON dumps and parallel
+//!   multi-target / multi-technology sweeps
 //!   ([`flow::compare::run_sweep`]); the API every measurement path goes
 //!   through.
 //! * [`coordinator`] — the training/eval pipeline (MNIST-like workload) and
@@ -57,6 +63,7 @@ pub mod netlist;
 pub mod ppa;
 pub mod runtime;
 pub mod sim;
+pub mod tech;
 pub mod tnn;
 
 pub use error::{Error, Result};

@@ -21,6 +21,7 @@
 
 use std::path::Path;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use tnn7::cells::{calibrate, liberty, Library, TechParams};
 use tnn7::config::TnnConfig;
@@ -36,6 +37,7 @@ use tnn7::netlist::Flavor;
 use tnn7::ppa::report::{improvement_line, render_table1, render_table2, PpaRow};
 use tnn7::ppa::scaling;
 use tnn7::ppa::ColumnPpa;
+use tnn7::tech::{self, TechContext, TechRegistry};
 
 /// Tiny argv helper (no clap offline): `--key value` and flags.
 struct Args {
@@ -140,10 +142,12 @@ const HELP: &str = "tnn7 — 7nm TNN co-design framework (paper reproduction)
 USAGE: tnn7 <SUBCOMMAND> [OPTIONS]     (tnn7 <SUBCOMMAND> --help for details)
 
 SUBCOMMANDS:
-  flow --target F[:N] (--col PxQ | --proto) [--pipeline S,..] [--dump-dir D]
-       [--lanes N] [--threads N]   run the staged design flow, dump per-stage
-                                   JSON; --targets A,B,.. sweeps several
-                                   targets concurrently
+  flow --target F (--col PxQ | --proto) [--tech T1,T2,..] [--pipeline S,..]
+       [--dump-dir D] [--lanes N] [--threads N] [--smoke]
+                              run the staged design flow on one or more
+                              technology backends (names or .lib paths),
+                              dump per-stage JSON; --targets A,B,.. sweeps
+                              several flavours × technologies concurrently
   characterize [--lib FILE]   print the characterized cell library
   layout-cmp [MACRO] [--json FILE]   Figs. 14-18 custom-vs-std comparisons
   complexity                  Fig. 19 prototype census (gates/transistors)
@@ -173,20 +177,31 @@ fn pipeline_help() -> String {
 
 fn help_flow() -> String {
     format!(
-        "tnn7 flow — run the staged design flow on one target
+        "tnn7 flow — run the staged design flow on one or more targets
 
 USAGE: tnn7 flow [OPTIONS]
 
 OPTIONS:
-  --target FLAVOR[:NODE]   std | custom, node 7nm (default) or 45nm
-  --targets A,B,..         comma list of FLAVOR[:NODE] descriptors: run the
-                           measurement pipeline for every target concurrently
-                           (parallel sweep; excludes --target/--pipeline/
-                           --dump-dir)
+  --target FLAVOR[:TECH]   flavour std|baseline or custom|gdi, optionally
+                           pinned to a technology backend (legacy node
+                           forms 7nm/45nm canonicalize to backends)
+  --targets A,B,..         comma list of FLAVOR[:TECH] descriptors: run the
+                           measurement pipeline for every flavour × --tech
+                           combination concurrently (parallel sweep;
+                           excludes --target/--pipeline/--dump-dir)
+  --tech T1,T2,..          technology backends to measure on: registered
+                           names (asap7-baseline, asap7-tnn7, n45-projected)
+                           or .lib file paths loaded as liberty-file
+                           backends (default: asap7-tnn7); with --target,
+                           runs the full pipeline once per backend
   --col PxQ                single-column geometry (e.g. 32x12)
   --proto                  the Fig. 19 2-layer prototype instead of --col
   --pipeline S1,S2,..      stage list (default: full canonical pipeline)
-  --dump-dir DIR           write one numbered JSON artifact per stage
+  --dump-dir DIR           write one JSON artifact per stage, named
+                           NN_stage.BACKEND.json (multi-tech runs into one
+                           directory never collide)
+  --smoke                  quick smoke run: at most 2 waves, geometry
+                           defaults to 8x4 when --col/--proto are omitted
   --waves N                simulated waves (default from config)
   --lanes N                stimulus lanes per simulator tick: 1 = scalar
                            reference engine, 2..64 = word-packed engine
@@ -197,9 +212,40 @@ OPTIONS:
                            (default from config; DESIGN.md §8)
   --config FILE            tnn7.toml configuration
 
-{}",
+{}{}",
+        backend_help(),
         pipeline_help()
     )
+}
+
+/// Generated from the built-in registry, so the backend list in help
+/// never drifts from what `--tech` actually resolves.
+fn backend_help() -> String {
+    let mut s = String::from(
+        "BUILT-IN TECHNOLOGY BACKENDS (for --tech; .lib paths also \
+         accepted):\n",
+    );
+    for ctx in TechRegistry::builtin().contexts() {
+        s.push_str(&format!("  {}\n", ctx.backend().describe()));
+    }
+    s
+}
+
+/// The paper's published 45nm anchor for a geometry, if one exists (the
+/// 1024x16 column and the prototype) — printed as ratios against the
+/// natively measured PPA after a full pipeline run.
+fn anchor_for(geometry: &Geometry) -> Option<(&'static str, ColumnPpa)> {
+    match geometry {
+        Geometry::Column(s) if s.p == 1024 && s.q == 16 => Some((
+            "45nm 1024x16 column (Table IV [2])",
+            scaling::COL_1024X16_45NM,
+        )),
+        Geometry::Prototype(_) => Some((
+            "45nm prototype (Table VI [2])",
+            scaling::PROTOTYPE_45NM,
+        )),
+        _ => None,
+    }
 }
 
 fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
@@ -209,6 +255,8 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     }
     let target_desc = args.opt("--target")?;
     let targets_desc = args.opt("--targets")?;
+    let tech_desc = args.opt("--tech")?;
+    let smoke = args.flag("--smoke");
     let proto = args.flag("--proto");
     let col = args.opt("--col")?;
     let pipeline = args.opt("--pipeline")?;
@@ -232,21 +280,42 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
         cfg.sim_threads = threads;
     }
     args.finish()?;
+    if smoke {
+        cfg.sim_waves = cfg.sim_waves.min(2);
+    }
 
     if proto && col.is_some() {
         anyhow::bail!("--proto and --col are mutually exclusive");
     }
     let geometry = if proto {
         Geometry::Prototype(PrototypeSpec::paper())
-    } else {
-        let col = col.ok_or_else(|| {
-            anyhow::anyhow!("--col PxQ or --proto required (see --help)")
-        })?;
+    } else if let Some(col) = col {
         let (p, q) = parse_geometry(&col)?;
         Geometry::Column(ColumnSpec::benchmark(p, q))
+    } else if smoke {
+        Geometry::Column(ColumnSpec::benchmark(8, 4))
+    } else {
+        anyhow::bail!("--col PxQ or --proto required (see --help)");
     };
 
-    // Parallel multi-target sweep mode.
+    // Resolve the technology backends to measure on.  Named backends
+    // come from the built-in registry; `.lib` paths load liberty-file
+    // backends and register under the path.
+    let mut registry = TechRegistry::builtin();
+    let techs: Vec<TechContext> = match &tech_desc {
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| registry.resolve(s))
+            .collect::<Result<_, _>>()?,
+        None => Vec::new(),
+    };
+    if tech_desc.is_some() && techs.is_empty() {
+        anyhow::bail!("--tech needs at least one backend name or .lib path");
+    }
+
+    // Parallel multi-flavour sweep mode.
     if let Some(list) = targets_desc {
         if target_desc.is_some() || pipeline.is_some() || dump_dir.is_some()
         {
@@ -256,78 +325,108 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
                  --dump-dir"
             );
         }
-        return cmd_flow_sweep(&list, geometry, &cfg);
+        return cmd_flow_sweep(&list, &techs, &mut registry, geometry, &cfg);
     }
-    let target = Target::parse(
-        target_desc.as_deref().unwrap_or("std:7nm"),
-        geometry,
-    )?;
 
-    let mut flow = match &pipeline {
-        Some(spec) => Flow::from_spec(spec)?,
-        None => Flow::standard(),
+    let desc = target_desc.as_deref().unwrap_or("std");
+    if tech_desc.is_some() && desc.contains(':') {
+        anyhow::bail!(
+            "give the technology either in --target FLAVOR:TECH or via \
+             --tech, not both"
+        );
+    }
+    let base = Target::parse(desc, geometry)?;
+    let runs: Vec<TechContext> = if techs.is_empty() {
+        vec![registry.resolve(base.tech.as_str())?]
+    } else {
+        techs
     };
-    if let Some(dir) = &dump_dir {
-        flow = flow.dump_dir(dir);
-    }
-    let names = flow.stage_names();
-    println!(
-        "flow {} | stages: {}",
-        target.describe(),
-        names.join(" -> ")
-    );
-    if cfg.sim_lanes > 1 {
-        println!(
-            "  packed engine: {} stimulus lanes per tick",
-            cfg.sim_lanes
-        );
-        if cfg.sim_threads > 1 {
-            println!(
-                "  wave schedule cut across {} worker threads",
-                cfg.sim_threads
-            );
-        }
-    }
 
-    let mut ctx = FlowContext::new(target, cfg);
-    flow.run(&mut ctx)?;
-
-    if let Some(r) = &ctx.report {
-        for u in &r.units {
-            println!(
-                "  unit {:>8} x{:<4} cells {:>8}  transistors {:>10}  \
-                 clock {:>7.1} ps",
-                u.label, u.replicas, u.cells, u.transistors, u.clock_ps
-            );
+    let data =
+        Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
+    let mut n_artifacts = 0usize;
+    for techctx in &runs {
+        let target = base.clone().with_tech(techctx.id());
+        let mut flow = match &pipeline {
+            Some(spec) => Flow::from_spec(spec)?,
+            None => Flow::standard(),
+        };
+        if let Some(dir) = &dump_dir {
+            flow = flow.dump_dir(dir);
         }
+        let names = flow.stage_names();
+        n_artifacts += names.len();
         println!(
-            "  total: power {:.3} uW  time {:.2} ns  area {:.5} mm2  \
-             edp {:.3} nJ-ns",
-            r.total.power_uw,
-            r.total.time_ns,
-            r.total.area_mm2,
-            r.total.edp_nj_ns()
+            "flow {} [{}] | stages: {}",
+            target.describe(),
+            techctx.node_label(),
+            names.join(" -> ")
         );
-    }
-    if let Some(s) = &ctx.scale45 {
-        if let (Some((name, _)), Some((rp, rt, ra))) =
-            (&s.anchor, &s.ratios)
-        {
+        if cfg.sim_lanes > 1 {
             println!(
-                "  vs {name}: power {rp:.0}x  time {rt:.1}x  area {ra:.0}x"
+                "  packed engine: {} stimulus lanes per tick",
+                cfg.sim_lanes
             );
+            if cfg.sim_threads > 1 {
+                println!(
+                    "  wave schedule cut across {} worker threads",
+                    cfg.sim_threads
+                );
+            }
+        }
+
+        let mut ctx = FlowContext::with_tech(
+            target,
+            cfg.clone(),
+            techctx.clone(),
+            Arc::clone(&data),
+        );
+        flow.run(&mut ctx)?;
+
+        if let Some(r) = &ctx.report {
+            for u in &r.units {
+                println!(
+                    "  unit {:>8} x{:<4} cells {:>8}  transistors {:>10}  \
+                     clock {:>7.1} ps",
+                    u.label, u.replicas, u.cells, u.transistors, u.clock_ps
+                );
+            }
+            println!(
+                "  total ({}): power {:.3} uW  time {:.2} ns  \
+                 area {:.5} mm2  edp {:.3} nJ-ns",
+                r.node_label,
+                r.total.power_uw,
+                r.total.time_ns,
+                r.total.area_mm2,
+                r.total.edp_nj_ns()
+            );
+            // Published 45nm anchors ratio against the native
+            // (unprojected) measurement, exactly as the old scale45
+            // stage did.
+            if let Some((name, anchor)) = anchor_for(&ctx.target.geometry)
+            {
+                let native = ctx.compose_native()?;
+                let (rp, rt, ra) = scaling::ratios(&anchor, &native);
+                println!(
+                    "  vs {name}: power {rp:.0}x  time {rt:.1}x  \
+                     area {ra:.0}x"
+                );
+            }
         }
     }
     if let Some(dir) = &dump_dir {
-        println!("wrote {} stage artifacts to {dir}/", names.len());
+        println!("wrote {n_artifacts} stage artifacts to {dir}/");
     }
     Ok(())
 }
 
-/// `tnn7 flow --targets A,B,..`: measure every listed target through
-/// the standard pipeline concurrently and print one summary row each.
+/// `tnn7 flow --targets A,B,.. [--tech T1,T2,..]`: measure every
+/// flavour × technology combination through the standard pipeline
+/// concurrently and print one summary row each.
 fn cmd_flow_sweep(
     list: &str,
+    techs: &[TechContext],
+    registry: &mut TechRegistry,
     geometry: Geometry,
     cfg: &TnnConfig,
 ) -> anyhow::Result<()> {
@@ -336,17 +435,31 @@ fn cmd_flow_sweep(
     // (sweep workers × per-job wave threads would oversubscribe).
     let mut job_cfg = cfg.clone();
     job_cfg.sim_threads = 1;
-    let jobs = list
-        .split(',')
-        .map(str::trim)
-        .filter(|d| !d.is_empty())
-        .map(|d| {
-            Target::parse(d, geometry)
-                .map(|t| compare::SweepJob::of(t, &job_cfg))
-        })
-        .collect::<Result<Vec<_>, _>>()?;
+    let mut jobs = Vec::new();
+    for d in list.split(',').map(str::trim).filter(|d| !d.is_empty()) {
+        let base = Target::parse(d, geometry)?;
+        if techs.is_empty() {
+            // No --tech: each descriptor carries (or defaults) its own
+            // technology; .lib paths load and register here.
+            registry.resolve(base.tech.as_str())?;
+            jobs.push(compare::SweepJob::of(base, &job_cfg));
+        } else {
+            if d.contains(':') {
+                anyhow::bail!(
+                    "give the technology either in --targets FLAVOR:TECH \
+                     entries or via --tech, not both (got `{d}`)"
+                );
+            }
+            for t in techs {
+                jobs.push(compare::SweepJob::of(
+                    base.clone().with_tech(t.id()),
+                    &job_cfg,
+                ));
+            }
+        }
+    }
     if jobs.is_empty() {
-        anyhow::bail!("--targets needs at least one FLAVOR[:NODE] entry");
+        anyhow::bail!("--targets needs at least one FLAVOR[:TECH] entry");
     }
     let threads = cfg.sim_threads.max(1);
     println!(
@@ -356,15 +469,14 @@ fn cmd_flow_sweep(
         cfg.sim_waves,
         cfg.sim_lanes
     );
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
-    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
-    let results = compare::run_sweep(&jobs, &lib, &tech, &data, threads);
+    let data =
+        Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
+    let results = compare::run_sweep(&jobs, registry, &data, threads);
     let mut failed = false;
     for r in &results {
         match &r.report {
             Ok(rep) => println!(
-                "  {:<18} power {:>10.3} uW  time {:>8.2} ns  \
+                "  {:<28} power {:>10.3} uW  time {:>8.2} ns  \
                  area {:>9.5} mm2  edp {:>9.3} nJ-ns",
                 r.label,
                 rep.total.power_uw,
@@ -374,7 +486,7 @@ fn cmd_flow_sweep(
             ),
             Err(e) => {
                 failed = true;
-                println!("  {:<18} FAILED: {e}", r.label);
+                println!("  {:<28} FAILED: {e}", r.label);
             }
         }
     }
@@ -483,16 +595,16 @@ fn cmd_complexity(args: &mut Args) -> anyhow::Result<()> {
         spec.neurons(),
         spec.synapses()
     );
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
+    let registry = TechRegistry::builtin();
+    let techctx = registry.get(tech::ASAP7_TNN7)?;
+    let data = Arc::new(Dataset::generate(0, 0));
     for flavor in [Flavor::Std, Flavor::Custom] {
         // elaborate-only pipeline: no simulation, so no dataset needed.
-        let mut ctx = FlowContext::with_parts(
+        let mut ctx = FlowContext::with_tech(
             Target::prototype(flavor),
             TnnConfig::default(),
-            lib.clone(),
-            tech,
-            Dataset::generate(0, 0),
+            techctx.clone(),
+            Arc::clone(&data),
         );
         Flow::from_spec("elaborate")?.run(&mut ctx)?;
         let (cells, transistors) = ctx.total_census()?;
@@ -577,9 +689,12 @@ fn cmd_table1(args: &mut Args) -> anyhow::Result<()> {
         cfg.sim_threads = threads;
     }
     args.finish()?;
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
-    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+    // One registry for the whole bench: the asap7-tnn7 library is
+    // characterized exactly once and Arc-shared by every design point
+    // (the old path cloned the library per measurement).
+    let registry = TechRegistry::builtin();
+    let data =
+        Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
     // The 6 Table-I design points as one parallel sweep (numbers are
     // bit-identical to the serial loop; only wall time changes).
     // --threads parallelizes across design points, so each job
@@ -598,8 +713,7 @@ fn cmd_table1(args: &mut Args) -> anyhow::Result<()> {
     }
     let sweep = compare::run_sweep(
         &jobs,
-        &lib,
-        &tech,
+        &registry,
         &data,
         cfg.sim_threads.max(1),
     );
@@ -677,9 +791,10 @@ fn cmd_table2(args: &mut Args) -> anyhow::Result<()> {
         (Flavor::Std, ColumnPpa { power_uw: 2540.0, time_ns: 24.14, area_mm2: 2.36 }),
         (Flavor::Custom, ColumnPpa { power_uw: 1690.0, time_ns: 19.15, area_mm2: 1.56 }),
     ];
-    let lib = Library::with_macros();
-    let tech = TechParams::calibrated();
-    let data = Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed);
+    // One registry: both flavours share the one characterized library.
+    let registry = TechRegistry::builtin();
+    let data =
+        Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
     // --threads parallelizes across the two flavours; each job
     // simulates single-threaded (no worker × wave-thread squaring).
     let mut job_cfg = cfg.clone();
@@ -692,8 +807,7 @@ fn cmd_table2(args: &mut Args) -> anyhow::Result<()> {
         .collect();
     let sweep = compare::run_sweep(
         &jobs,
-        &lib,
-        &tech,
+        &registry,
         &data,
         cfg.sim_threads.max(1),
     );

@@ -57,6 +57,12 @@ impl ColumnSpec {
     pub fn benchmark(p: usize, q: usize) -> Self {
         ColumnSpec { p, q, theta: (p as u64 * 7) / 4 }
     }
+
+    /// The canonical "PxQ" geometry label — the one formatting shared
+    /// by reports, dump artifacts, and target descriptors.
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.p, self.q)
+    }
 }
 
 /// Elaborated column ports (all primary I/O nets).

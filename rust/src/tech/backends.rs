@@ -1,0 +1,311 @@
+//! The built-in [`TechBackend`] implementations.
+//!
+//! * [`StaticBackend`] — a self-contained (library, params, node)
+//!   bundle; covers `asap7-baseline`, `asap7-tnn7`, ad-hoc test
+//!   backends, and libraries loaded from `.lib` files.
+//! * [`ProjectedBackend`] — wraps another backend and reports its
+//!   natively measured PPA through a [`NodeScaling`] projection
+//!   (`n45-projected`).
+//! * [`from_liberty_text`] / [`load_liberty`] — the `liberty-file`
+//!   backend kind: construct a [`StaticBackend`] from any `.lib` in the
+//!   dialect [`crate::cells::liberty::emit`] writes.  Absolute units
+//!   are baked into the per-cell quantities with unit scale constants,
+//!   so an emitted-then-reloaded library reports bit-identical PPA to
+//!   the in-memory backend it came from.
+
+use std::path::Path;
+
+use crate::cells::cell::Cell;
+use crate::cells::{liberty, Library, TechParams};
+use crate::error::{Error, Result};
+use crate::ppa::report::ColumnPpa;
+use crate::ppa::scaling::NodeScaling;
+
+use super::{TechBackend, TechContext, ASAP7_BASELINE, ASAP7_TNN7, N45_PROJECTED};
+
+/// A self-contained backend: owns its library, scale constants, and
+/// node metadata.
+pub struct StaticBackend {
+    name: String,
+    node_label: String,
+    voltage_v: f64,
+    lib: Library,
+    params: TechParams,
+}
+
+impl StaticBackend {
+    /// Bundle explicit parts into a backend.
+    pub fn new(
+        name: impl Into<String>,
+        node_label: impl Into<String>,
+        voltage_v: f64,
+        lib: Library,
+        params: TechParams,
+    ) -> StaticBackend {
+        StaticBackend {
+            name: name.into(),
+            node_label: node_label.into(),
+            voltage_v,
+            lib,
+            params,
+        }
+    }
+}
+
+impl TechBackend for StaticBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn node_label(&self) -> &str {
+        &self.node_label
+    }
+
+    fn voltage_v(&self) -> f64 {
+        self.voltage_v
+    }
+
+    fn library(&self) -> &Library {
+        &self.lib
+    }
+
+    fn params(&self) -> &TechParams {
+        &self.params
+    }
+}
+
+/// A backend that measures in another backend's library and reports in
+/// a different node through a [`NodeScaling`] projection.
+pub struct ProjectedBackend {
+    name: String,
+    node_label: String,
+    voltage_v: f64,
+    inner: TechContext,
+    scaling: NodeScaling,
+}
+
+impl ProjectedBackend {
+    /// Wrap `inner` behind a scaling projection.
+    pub fn new(
+        name: impl Into<String>,
+        node_label: impl Into<String>,
+        voltage_v: f64,
+        inner: TechContext,
+        scaling: NodeScaling,
+    ) -> ProjectedBackend {
+        ProjectedBackend {
+            name: name.into(),
+            node_label: node_label.into(),
+            voltage_v,
+            inner,
+            scaling,
+        }
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &TechContext {
+        &self.inner
+    }
+}
+
+impl TechBackend for ProjectedBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn node_label(&self) -> &str {
+        &self.node_label
+    }
+
+    fn voltage_v(&self) -> f64 {
+        self.voltage_v
+    }
+
+    fn library(&self) -> &Library {
+        self.inner.library()
+    }
+
+    fn params(&self) -> &TechParams {
+        self.inner.params()
+    }
+
+    fn scaling(&self) -> Option<NodeScaling> {
+        Some(self.scaling)
+    }
+
+    /// Apply the scaling factors exactly as the pre-refactor 45nm
+    /// target node did (same factors, same operation order), so
+    /// projected reports stay bit-identical across the redesign.
+    fn project(&self, ppa: ColumnPpa) -> ColumnPpa {
+        let m = self.scaling;
+        ColumnPpa {
+            power_uw: ppa.power_uw * m.power_factor(),
+            time_ns: ppa.time_ns * m.delay_factor(),
+            area_mm2: ppa.area_mm2 * m.area_factor(),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{} [{}] = {} × NodeScaling",
+            self.name,
+            self.node_label,
+            self.inner.name()
+        )
+    }
+}
+
+/// `asap7-baseline`: the plain ASAP7 RVT subset (standard-cell flavour
+/// only — custom-macro targets fail elaboration honestly).
+pub fn asap7_baseline() -> StaticBackend {
+    StaticBackend::new(
+        ASAP7_BASELINE,
+        "7nm",
+        0.7,
+        Library::asap7_only(),
+        TechParams::calibrated(),
+    )
+}
+
+/// `asap7-tnn7`: ASAP7 plus the paper's 11 custom GDI macros — the
+/// default technology, characterization-identical to the substrate
+/// every pre-redesign measurement used.
+pub fn asap7_tnn7() -> StaticBackend {
+    StaticBackend::new(
+        ASAP7_TNN7,
+        "7nm",
+        0.7,
+        Library::with_macros(),
+        TechParams::calibrated(),
+    )
+}
+
+/// `n45-projected`: measure in `inner` (normally `asap7-tnn7`), report
+/// through the first-order 45nm↔7nm scaling model.
+pub fn n45_projected(inner: TechContext) -> ProjectedBackend {
+    ProjectedBackend::new(
+        N45_PROJECTED,
+        "45nm",
+        1.0,
+        inner,
+        NodeScaling::n45_to_7(),
+    )
+}
+
+/// Construct a `liberty-file` backend from `.lib` text in the dialect
+/// [`crate::cells::liberty::emit`] writes (cell kinds and setup times
+/// included).  Per-cell quantities carry the file's absolute units;
+/// the scale constants are unit, so PPA equals the file verbatim.
+pub fn from_liberty_text(
+    name: impl Into<String>,
+    text: &str,
+) -> Result<StaticBackend> {
+    let name = name.into();
+    let parsed = liberty::parse_library(text)?;
+    let mut lib = Library::new();
+    for c in &parsed.cells {
+        let kind = c.kind.ok_or_else(|| {
+            Error::cells(format!(
+                "cell `{}` has no cell_kind attribute — the liberty-file \
+                 backend needs the tnn7 dialect written by `tnn7 \
+                 characterize --lib`",
+                c.name
+            ))
+        })?;
+        if lib.id(&c.name).is_ok() {
+            return Err(Error::cells(format!(
+                "duplicate cell `{}` in liberty file `{name}`",
+                c.name
+            )));
+        }
+        let cell = Cell {
+            name: c.name.clone(),
+            kind,
+            transistors: c.transistors,
+            rel_area: c.area_um2,
+            rel_energy: c.energy_fj,
+            rel_leak: c.leak_nw,
+            rel_delay: c.delay_ps,
+            rel_setup: c.setup_ps,
+            is_custom_macro: c.is_macro,
+        };
+        cell.validate()?;
+        lib.add(cell);
+    }
+    Ok(StaticBackend::new(
+        name,
+        "as-characterized",
+        parsed.voltage_v,
+        lib,
+        TechParams::unit(),
+    ))
+}
+
+/// Load a `liberty-file` backend from disk; the backend's registry
+/// name is the path as given.
+pub fn load_liberty(path: &Path) -> Result<StaticBackend> {
+    let text = std::fs::read_to_string(path)?;
+    from_liberty_text(path.display().to_string(), &text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_backends_have_expected_shapes() {
+        let base = asap7_baseline();
+        let tnn7 = asap7_tnn7();
+        assert!(base.library().len() < tnn7.library().len());
+        assert!(base.library().id("mux2to1gdi").is_err());
+        assert!(tnn7.library().id("mux2to1gdi").is_ok());
+        assert_eq!(base.voltage_v(), 0.7);
+    }
+
+    #[test]
+    fn n45_projection_applies_scaling_factors_exactly() {
+        let inner = TechContext::new(asap7_tnn7());
+        let n45 = n45_projected(inner);
+        assert_eq!(n45.node_label(), "45nm");
+        let m = NodeScaling::n45_to_7();
+        let ppa = ColumnPpa { power_uw: 2.0, time_ns: 3.0, area_mm2: 5.0 };
+        let p = n45.project(ppa);
+        assert_eq!(p.power_uw, 2.0 * m.power_factor());
+        assert_eq!(p.time_ns, 3.0 * m.delay_factor());
+        assert_eq!(p.area_mm2, 5.0 * m.area_factor());
+        // library/params delegate to the wrapped backend
+        assert!(n45.library().id("mux2to1gdi").is_ok());
+        assert_eq!(*n45.params(), TechParams::calibrated());
+    }
+
+    #[test]
+    fn liberty_backend_round_trips_every_cell_quantity() {
+        let lib = Library::with_macros();
+        let params = TechParams::calibrated();
+        let text = liberty::emit(&lib, &params, "roundtrip");
+        let back = from_liberty_text("mem.lib", &text).unwrap();
+        assert_eq!(back.library().len(), lib.len());
+        assert_eq!(back.node_label(), "as-characterized");
+        for (orig, got) in lib.cells().iter().zip(back.library().cells()) {
+            assert_eq!(orig.name, got.name);
+            assert_eq!(orig.kind, got.kind, "{}", orig.name);
+            assert_eq!(orig.transistors, got.transistors);
+            assert_eq!(orig.is_custom_macro, got.is_custom_macro);
+            // Absolute quantities are exact: emit prints the shortest
+            // round-trip float, params are unit on reload.
+            let p = back.params();
+            assert_eq!(p.area_um2(got), params.area_um2(orig), "{}", orig.name);
+            assert_eq!(p.energy_fj(got), params.energy_fj(orig));
+            assert_eq!(p.leak_nw(got), params.leak_nw(orig));
+            assert_eq!(p.delay_ps(got), params.delay_ps(orig));
+            assert_eq!(p.setup_ps(got), params.setup_ps(orig));
+        }
+    }
+
+    #[test]
+    fn liberty_backend_rejects_kindless_files() {
+        // A minimal foreign .lib without the tnn7 cell_kind attribute.
+        let text = "library (x) {\n  cell (A) {\n    area : 1;\n  }\n}\n";
+        assert!(from_liberty_text("x", text).is_err());
+    }
+}

@@ -1,0 +1,279 @@
+//! First-class technology backends: pluggable cell libraries behind one
+//! trait.
+//!
+//! The paper's contribution is a *library* — a custom 7nm macro suite
+//! layered on ASAP7, with 45nm comparisons — and its follow-ups (TNN7,
+//! the TNN design framework) treat the cell library as a swappable
+//! input to one design flow.  This module makes that the code's shape
+//! too: everything PPA and elaboration used to pull from three places
+//! (the characterized [`Library`], the [`TechParams`] constants, and
+//! the node-scaling projection that was hard-wired into the flow as a
+//! `TechNode` enum) is bundled behind one [`TechBackend`] trait, and
+//! backends are resolved by name through a [`TechRegistry`]:
+//!
+//! * [`TechBackend`] — the trait: identity (`name`, `node_label`,
+//!   `voltage_v`), the characterized [`Library`], the [`TechParams`]
+//!   scale constants, and the node projection applied to natively
+//!   measured PPA ([`TechBackend::project`], identity unless the
+//!   backend wraps another node).
+//! * [`TechContext`] — a cheaply-cloneable `Arc<dyn TechBackend>`
+//!   handle; the one value the flow stages carry instead of
+//!   `(lib, tech)` pairs.  Sweeps that share a context share one
+//!   characterized library — no per-job re-characterization.
+//! * [`TechRegistry`] — name → backend resolution, including loading
+//!   `.lib` files on demand via [`backends::load_liberty`].
+//!
+//! Four built-in backends ship (see [`backends`]):
+//!
+//! | name             | library                    | node  | projection |
+//! |------------------|----------------------------|-------|------------|
+//! | `asap7-baseline` | ASAP7 RVT subset only      | 7nm   | identity   |
+//! | `asap7-tnn7`     | ASAP7 + 11 custom macros   | 7nm   | identity   |
+//! | `n45-projected`  | wraps `asap7-tnn7`         | 45nm  | [`NodeScaling::n45_to_7`] |
+//! | `liberty-file`   | parsed from any tnn7 `.lib`| as characterized | identity |
+//!
+//! `n45-projected` replaces the old bolt-on `scale45` flow stage: the
+//! 45nm comparison is now just a backend whose [`TechBackend::project`]
+//! applies the first-order scaling model to the natively composed PPA —
+//! bit-identical to what the pre-refactor 45nm target node produced.
+//! Comparing the paper's Table I flavours is the degenerate case of
+//! sweeping any set of registered technologies, including user-supplied
+//! libraries (`tnn7 flow --tech path/to/own.lib`).
+//!
+//! See DESIGN.md §9 for the trait contract and how to add a backend.
+
+pub mod backends;
+pub mod registry;
+
+pub use backends::{
+    asap7_baseline, asap7_tnn7, from_liberty_text, load_liberty,
+    n45_projected, ProjectedBackend, StaticBackend,
+};
+pub use registry::{resolve_standalone, TechRegistry};
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::cells::{Library, TechParams};
+use crate::ppa::report::ColumnPpa;
+use crate::ppa::scaling::NodeScaling;
+
+/// Registry name of the plain-ASAP7 built-in backend.
+pub const ASAP7_BASELINE: &str = "asap7-baseline";
+/// Registry name of the ASAP7 + custom-macro built-in backend (the
+/// default technology everywhere).
+pub const ASAP7_TNN7: &str = "asap7-tnn7";
+/// Registry name of the 45nm node-projection backend.
+pub const N45_PROJECTED: &str = "n45-projected";
+
+/// Map legacy node descriptors to backend names (`std:45nm` targets
+/// keep working) and strip the explicit `liberty-file:` prefix —
+/// liberty backends register under the bare path, so both spec forms
+/// resolve to the same entry.  Registered names and bare `.lib` paths
+/// pass through untouched.
+pub fn canonical_name(name: &str) -> &str {
+    let name = name.trim();
+    if let Some(path) = name.strip_prefix("liberty-file:") {
+        return path;
+    }
+    match name {
+        "7nm" | "7" => ASAP7_TNN7,
+        "45nm" | "45" => N45_PROJECTED,
+        other => other,
+    }
+}
+
+/// Name of a registered technology backend, as carried by a
+/// [`crate::flow::Target`].  Legacy node aliases (`7nm`, `45nm`) are
+/// canonicalized at construction.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BackendId(String);
+
+impl BackendId {
+    /// Id from a backend name, `.lib` path, or legacy node alias.
+    pub fn new(name: impl AsRef<str>) -> BackendId {
+        BackendId(canonical_name(name.as_ref()).to_string())
+    }
+
+    /// The backend name this id resolves through the registry.
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl Default for BackendId {
+    fn default() -> Self {
+        BackendId(ASAP7_TNN7.to_string())
+    }
+}
+
+impl fmt::Display for BackendId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// A technology backend: one characterized cell library plus the
+/// metadata and projection needed to report PPA in its node.
+///
+/// Implementations must be cheap to *borrow from* (the flow queries
+/// `library()`/`params()` per stage) and are shared across sweep
+/// worker threads behind an `Arc` — hence `Send + Sync`.
+pub trait TechBackend: Send + Sync {
+    /// Registry name (`asap7-tnn7`, a `.lib` path, …).
+    fn name(&self) -> &str;
+
+    /// Human node label (`7nm`, `45nm`, `as-characterized`).
+    fn node_label(&self) -> &str;
+
+    /// Nominal supply voltage in volts (0.7 for the paper's corner).
+    fn voltage_v(&self) -> f64;
+
+    /// The characterized cell library elaboration and PPA consume.
+    fn library(&self) -> &Library;
+
+    /// The technology scale constants mapping the library's relative
+    /// quantities to absolute µm² / fJ / nW / ps.
+    fn params(&self) -> &TechParams;
+
+    /// The node-scaling model behind [`TechBackend::project`], if this
+    /// backend reports in a different node than it measures in.
+    fn scaling(&self) -> Option<NodeScaling> {
+        None
+    }
+
+    /// Project natively measured PPA into this backend's reporting
+    /// node.  Identity for native backends; wrapping backends apply
+    /// their [`NodeScaling`] factors.
+    fn project(&self, ppa: ColumnPpa) -> ColumnPpa {
+        ppa
+    }
+
+    /// One-line description for `--help` and docs.
+    fn describe(&self) -> String {
+        format!("{} [{}]", self.name(), self.node_label())
+    }
+}
+
+/// Shared handle to a [`TechBackend`] — the one value the flow carries
+/// instead of `(lib, tech)` pairs.
+///
+/// Cloning is an `Arc` bump: a registry, N sweep workers, and M flow
+/// contexts all share the same characterized library.
+#[derive(Clone)]
+pub struct TechContext {
+    backend: Arc<dyn TechBackend>,
+}
+
+impl TechContext {
+    /// Wrap a backend implementation.
+    pub fn new(backend: impl TechBackend + 'static) -> TechContext {
+        TechContext { backend: Arc::new(backend) }
+    }
+
+    /// Ad-hoc backend from explicit parts (calibration fits use
+    /// unit-scale [`TechParams`]; tests substitute their own libraries).
+    pub fn from_parts(
+        name: impl Into<String>,
+        node_label: impl Into<String>,
+        lib: Library,
+        params: TechParams,
+    ) -> TechContext {
+        TechContext::new(StaticBackend::new(name, node_label, 0.7, lib, params))
+    }
+
+    /// Borrow the backend as a trait object.
+    pub fn backend(&self) -> &dyn TechBackend {
+        &*self.backend
+    }
+
+    /// Backend name.
+    pub fn name(&self) -> &str {
+        self.backend.name()
+    }
+
+    /// Node label.
+    pub fn node_label(&self) -> &str {
+        self.backend.node_label()
+    }
+
+    /// Supply voltage (V).
+    pub fn voltage_v(&self) -> f64 {
+        self.backend.voltage_v()
+    }
+
+    /// The backend's characterized library.
+    pub fn library(&self) -> &Library {
+        self.backend.library()
+    }
+
+    /// The backend's technology constants.
+    pub fn params(&self) -> &TechParams {
+        self.backend.params()
+    }
+
+    /// The backend's node-scaling model, if any.
+    pub fn scaling(&self) -> Option<NodeScaling> {
+        self.backend.scaling()
+    }
+
+    /// Project natively measured PPA to the backend's reporting node.
+    pub fn project(&self, ppa: ColumnPpa) -> ColumnPpa {
+        self.backend.project(ppa)
+    }
+
+    /// The [`BackendId`] targets use to name this backend.
+    pub fn id(&self) -> BackendId {
+        BackendId::new(self.backend.name())
+    }
+}
+
+impl fmt::Debug for TechContext {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TechContext")
+            .field("name", &self.backend.name())
+            .field("node", &self.backend.node_label())
+            .field("cells", &self.backend.library().len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_id_canonicalizes_legacy_aliases() {
+        assert_eq!(BackendId::new("7nm").as_str(), ASAP7_TNN7);
+        assert_eq!(BackendId::new("45").as_str(), N45_PROJECTED);
+        assert_eq!(BackendId::new("asap7-baseline").as_str(), ASAP7_BASELINE);
+        assert_eq!(BackendId::new("out.lib").as_str(), "out.lib");
+        // The explicit liberty-file: prefix canonicalizes to the bare
+        // path the registry registers the backend under.
+        assert_eq!(
+            BackendId::new("liberty-file:/tmp/x.lib").as_str(),
+            "/tmp/x.lib"
+        );
+        assert_eq!(BackendId::default().as_str(), ASAP7_TNN7);
+    }
+
+    #[test]
+    fn context_shares_one_library_across_clones() {
+        let ctx = TechContext::new(asap7_tnn7());
+        let other = ctx.clone();
+        assert!(std::ptr::eq(ctx.library(), other.library()));
+        assert_eq!(ctx.name(), ASAP7_TNN7);
+        assert_eq!(ctx.node_label(), "7nm");
+        assert!(ctx.scaling().is_none());
+    }
+
+    #[test]
+    fn identity_projection_by_default() {
+        let ctx = TechContext::new(asap7_baseline());
+        let ppa = ColumnPpa { power_uw: 1.0, time_ns: 2.0, area_mm2: 3.0 };
+        let p = ctx.project(ppa);
+        assert_eq!(p.power_uw, 1.0);
+        assert_eq!(p.time_ns, 2.0);
+        assert_eq!(p.area_mm2, 3.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Name → backend resolution.
+//!
+//! A [`TechRegistry`] owns one [`TechContext`] per registered backend;
+//! every lookup hands out an `Arc` clone of the same characterized
+//! library, so a sweep over N targets on the same technology
+//! characterizes it exactly once.  `.lib` paths resolve by loading a
+//! `liberty-file` backend on first use and registering it under the
+//! path, making user-supplied libraries first-class sweep axes.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::{backends, canonical_name, TechContext};
+
+/// The set of resolvable technology backends.
+pub struct TechRegistry {
+    contexts: Vec<TechContext>,
+}
+
+impl TechRegistry {
+    /// An empty registry (tests compose their own backends).
+    pub fn empty() -> TechRegistry {
+        TechRegistry { contexts: Vec::new() }
+    }
+
+    /// The built-in set: `asap7-baseline`, `asap7-tnn7`, and
+    /// `n45-projected` wrapping `asap7-tnn7`.  Each library is
+    /// characterized once, here.
+    pub fn builtin() -> TechRegistry {
+        let mut r = TechRegistry::empty();
+        let tnn7 = TechContext::new(backends::asap7_tnn7());
+        r.contexts.push(TechContext::new(backends::asap7_baseline()));
+        r.contexts.push(tnn7.clone());
+        r.contexts.push(TechContext::new(backends::n45_projected(tnn7)));
+        r
+    }
+
+    /// Register a backend; its name must be unique.
+    pub fn register(&mut self, ctx: TechContext) -> Result<()> {
+        if self.contexts.iter().any(|c| c.name() == ctx.name()) {
+            return Err(Error::config(format!(
+                "technology backend `{}` is already registered",
+                ctx.name()
+            )));
+        }
+        self.contexts.push(ctx);
+        Ok(())
+    }
+
+    /// Look a backend up by name (legacy node aliases `7nm`/`45nm` and
+    /// the `liberty-file:` prefix canonicalize first).
+    ///
+    /// `get` never touches the filesystem: `.lib` paths must have been
+    /// loaded with [`TechRegistry::resolve`] first (sweep callers
+    /// resolve every job's backend before handing the registry to
+    /// [`crate::flow::compare::run_sweep`]).
+    pub fn get(&self, name: &str) -> Result<TechContext> {
+        let canon = canonical_name(name);
+        self.contexts
+            .iter()
+            .find(|c| c.name() == canon)
+            .cloned()
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "unknown technology backend `{name}` (registered: {}; \
+                     `.lib` paths load via TechRegistry::resolve / the \
+                     --tech flag)",
+                    self.names().join(", ")
+                ))
+            })
+    }
+
+    /// Resolve a `--tech` spec: a registered name, a legacy node alias,
+    /// or a `.lib` path (`liberty-file:PATH`, any spec ending in
+    /// `.lib`, or an unregistered name that is an existing file),
+    /// loading and registering the file on first use.
+    pub fn resolve(&mut self, spec: &str) -> Result<TechContext> {
+        let spec = spec.trim();
+        let explicit = spec.strip_prefix("liberty-file:");
+        let bare = explicit.unwrap_or(spec);
+        if let Ok(existing) = self.get(bare) {
+            return Ok(existing);
+        }
+        // Not a registered name: treat as a liberty file when marked as
+        // one (prefix or .lib suffix) or when it names a real file —
+        // covers `liberty-file:` paths whose extension isn't .lib after
+        // BackendId canonicalization stripped the prefix.
+        let is_lib = explicit.is_some()
+            || bare.ends_with(".lib")
+            || Path::new(bare).is_file();
+        if is_lib {
+            let ctx =
+                TechContext::new(backends::load_liberty(Path::new(bare))?);
+            self.register(ctx.clone())?;
+            return Ok(ctx);
+        }
+        self.get(bare)
+    }
+
+    /// All registered backends.
+    pub fn contexts(&self) -> &[TechContext] {
+        &self.contexts
+    }
+
+    /// Registered backend names, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.contexts.iter().map(|c| c.name()).collect()
+    }
+}
+
+impl Default for TechRegistry {
+    fn default() -> Self {
+        TechRegistry::builtin()
+    }
+}
+
+/// Resolve one spec to a backend *without* materializing the whole
+/// builtin registry — only the named backend's library is
+/// characterized.  Used by one-off contexts
+/// ([`crate::flow::FlowContext::new`]); sweeps and the CLI keep a
+/// shared [`TechRegistry`] instead so repeated lookups reuse one
+/// library.
+pub fn resolve_standalone(spec: &str) -> Result<TechContext> {
+    let spec = spec.trim();
+    let bare = spec.strip_prefix("liberty-file:").unwrap_or(spec);
+    match canonical_name(bare) {
+        super::ASAP7_BASELINE => {
+            Ok(TechContext::new(backends::asap7_baseline()))
+        }
+        super::ASAP7_TNN7 => Ok(TechContext::new(backends::asap7_tnn7())),
+        super::N45_PROJECTED => {
+            let inner = TechContext::new(backends::asap7_tnn7());
+            Ok(TechContext::new(backends::n45_projected(inner)))
+        }
+        path if path.ends_with(".lib") || Path::new(path).is_file() => Ok(
+            TechContext::new(backends::load_liberty(Path::new(path))?),
+        ),
+        other => Err(Error::config(format!(
+            "unknown technology backend `{other}` (built-in: {}, {}, {}; \
+             or a `.lib` path)",
+            super::ASAP7_BASELINE,
+            super::ASAP7_TNN7,
+            super::N45_PROJECTED
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ASAP7_BASELINE, ASAP7_TNN7, N45_PROJECTED};
+    use super::*;
+    use crate::cells::{liberty, Library, TechParams};
+
+    #[test]
+    fn builtin_names_and_alias_lookup() {
+        let r = TechRegistry::builtin();
+        assert_eq!(
+            r.names(),
+            vec![ASAP7_BASELINE, ASAP7_TNN7, N45_PROJECTED]
+        );
+        assert_eq!(r.get("7nm").unwrap().name(), ASAP7_TNN7);
+        assert_eq!(r.get("45nm").unwrap().name(), N45_PROJECTED);
+        assert!(r.get("intel4").is_err());
+    }
+
+    #[test]
+    fn builtin_backends_share_libraries_not_copies() {
+        let r = TechRegistry::builtin();
+        let a = r.get(ASAP7_TNN7).unwrap();
+        let b = r.get(ASAP7_TNN7).unwrap();
+        assert!(std::ptr::eq(a.library(), b.library()));
+        // n45 wraps the same characterized tnn7 library.
+        let n45 = r.get(N45_PROJECTED).unwrap();
+        assert!(std::ptr::eq(a.library(), n45.library()));
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let mut r = TechRegistry::builtin();
+        let dup = TechContext::from_parts(
+            ASAP7_TNN7,
+            "7nm",
+            Library::asap7_only(),
+            TechParams::calibrated(),
+        );
+        assert!(r.register(dup).is_err());
+    }
+
+    #[test]
+    fn standalone_resolution_builds_only_named_backend() {
+        assert_eq!(resolve_standalone("7nm").unwrap().name(), ASAP7_TNN7);
+        assert_eq!(
+            resolve_standalone(ASAP7_BASELINE).unwrap().name(),
+            ASAP7_BASELINE
+        );
+        assert_eq!(
+            resolve_standalone(N45_PROJECTED).unwrap().node_label(),
+            "45nm"
+        );
+        assert!(resolve_standalone("bogus").is_err());
+        assert!(resolve_standalone("/nope/x.lib").is_err());
+    }
+
+    #[test]
+    fn resolve_loads_and_caches_lib_files() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "tnn7_registry_{}.lib",
+            std::process::id()
+        ));
+        let lib = Library::with_macros();
+        let text =
+            liberty::emit(&lib, &TechParams::calibrated(), "tmp_reg");
+        std::fs::write(&path, text).unwrap();
+        let spec = path.display().to_string();
+
+        let mut r = TechRegistry::builtin();
+        let a = r.resolve(&spec).unwrap();
+        assert_eq!(a.name(), spec);
+        assert_eq!(a.library().len(), lib.len());
+        // Second resolve reuses the registered backend.
+        let b = r.resolve(&spec).unwrap();
+        assert!(std::ptr::eq(a.library(), b.library()));
+        // And the prefixed form hits the same entry.
+        let c = r.resolve(&format!("liberty-file:{spec}")).unwrap();
+        assert!(std::ptr::eq(a.library(), c.library()));
+
+        assert!(r.resolve("/nonexistent/nowhere.lib").is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -3,15 +3,16 @@
 //! 4x3 column.
 
 use tnn7::config::TnnConfig;
-use tnn7::flow::{parse_geometry, Flow, FlowContext, Target, TechNode};
+use tnn7::flow::{parse_geometry, Flow, FlowContext, Target};
 use tnn7::netlist::column::ColumnSpec;
 use tnn7::netlist::Flavor;
 use tnn7::runtime::json::Json;
+use tnn7::tech::ASAP7_TNN7;
 
 fn tiny_ctx() -> FlowContext {
     let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
     let spec = ColumnSpec { p: 4, q: 3, theta: 7 };
-    FlowContext::new(Target::column(Flavor::Custom, spec), cfg)
+    FlowContext::new(Target::column(Flavor::Custom, spec), cfg).unwrap()
 }
 
 #[test]
@@ -23,8 +24,9 @@ fn target_descriptor_round_trip() {
     )
     .unwrap();
     assert_eq!(t.flavor, Flavor::Custom);
-    assert_eq!(t.node, TechNode::N7);
-    assert_eq!(t.describe(), "custom:7nm 32x12");
+    // Legacy node descriptors canonicalize to registry backends.
+    assert_eq!(t.tech.as_str(), ASAP7_TNN7);
+    assert_eq!(t.describe(), "custom:asap7-tnn7 32x12");
 }
 
 #[test]
@@ -52,14 +54,15 @@ fn golden_stage_dump_snapshot_tiny_column() {
         .dump_dir(&dir);
     flow.run(&mut ctx).unwrap();
 
-    // One numbered artifact per stage, in pipeline order.
+    // One artifact per stage, in pipeline order, carrying the backend
+    // name so multi-technology sweeps into one directory never collide.
     let expected = [
-        "00_elaborate.json",
-        "01_sta.json",
-        "02_simulate.json",
-        "03_power.json",
-        "04_area.json",
-        "05_report.json",
+        "00_elaborate.asap7-tnn7.json",
+        "01_sta.asap7-tnn7.json",
+        "02_simulate.asap7-tnn7.json",
+        "03_power.asap7-tnn7.json",
+        "04_area.asap7-tnn7.json",
+        "05_report.asap7-tnn7.json",
     ];
     let mut names: Vec<String> = std::fs::read_dir(&dir)
         .unwrap()
@@ -74,12 +77,13 @@ fn golden_stage_dump_snapshot_tiny_column() {
     };
 
     // 00_elaborate: target + unit geometry + census.
-    let j = read("00_elaborate.json");
+    let j = read("00_elaborate.asap7-tnn7.json");
     assert_eq!(j.field("stage").unwrap().as_str().unwrap(), "elaborate");
     assert_eq!(
         j.field("target").unwrap().as_str().unwrap(),
-        "custom:7nm 4x3"
+        "custom:asap7-tnn7 4x3"
     );
+    assert_eq!(j.field("tech").unwrap().as_str().unwrap(), "asap7-tnn7");
     let units = j.field("units").unwrap().as_arr().unwrap();
     assert_eq!(units.len(), 1);
     let u = &units[0];
@@ -90,20 +94,20 @@ fn golden_stage_dump_snapshot_tiny_column() {
     assert!(u.field("transistors").unwrap().as_usize().unwrap() > 100);
 
     // 01_sta: positive clock and wave time.
-    let j = read("01_sta.json");
+    let j = read("01_sta.asap7-tnn7.json");
     let u = &j.field("units").unwrap().as_arr().unwrap()[0];
     assert!(u.field("min_clock_ps").unwrap().as_f64().unwrap() > 0.0);
     assert!(u.field("wave_ns").unwrap().as_f64().unwrap() > 0.0);
 
     // 02_simulate: two waves of activity were recorded.
-    let j = read("02_simulate.json");
+    let j = read("02_simulate.asap7-tnn7.json");
     assert_eq!(j.field("waves").unwrap().as_usize().unwrap(), 2);
     let u = &j.field("units").unwrap().as_arr().unwrap()[0];
     assert!(u.field("cycles").unwrap().as_usize().unwrap() > 0);
     assert!(u.field("toggles").unwrap().as_usize().unwrap() > 0);
 
     // 03_power: the split adds up to the total.
-    let j = read("03_power.json");
+    let j = read("03_power.asap7-tnn7.json");
     let u = &j.field("units").unwrap().as_arr().unwrap()[0];
     let total = u.field("total_uw").unwrap().as_f64().unwrap();
     let parts = u.field("dynamic_uw").unwrap().as_f64().unwrap()
@@ -113,14 +117,16 @@ fn golden_stage_dump_snapshot_tiny_column() {
     assert!((total - parts).abs() < 1e-9 * total.max(1.0));
 
     // 04_area: die area is positive and larger than zero cell area.
-    let j = read("04_area.json");
+    let j = read("04_area.asap7-tnn7.json");
     let u = &j.field("units").unwrap().as_arr().unwrap()[0];
     assert!(u.field("cell_um2").unwrap().as_f64().unwrap() > 0.0);
     assert!(u.field("die_mm2").unwrap().as_f64().unwrap() > 0.0);
 
-    // 05_report: composed totals present.
-    let j = read("05_report.json");
+    // 05_report: composed totals present, tagged with backend + node.
+    let j = read("05_report.asap7-tnn7.json");
     assert_eq!(j.field("stage").unwrap().as_str().unwrap(), "report");
+    assert_eq!(j.field("tech").unwrap().as_str().unwrap(), "asap7-tnn7");
+    assert_eq!(j.field("node").unwrap().as_str().unwrap(), "7nm");
     let total = j.field("total").unwrap();
     assert!(total.field("power_uw").unwrap().as_f64().unwrap() > 0.0);
     assert!(total.field("time_ns").unwrap().as_f64().unwrap() > 0.0);
@@ -134,9 +140,11 @@ fn golden_stage_dump_snapshot_tiny_column() {
 fn flow_report_matches_measure_wrapper() {
     // The coordinator wrapper is a thin shim over the same pipeline, so
     // identical inputs must give identical numbers.
+    use std::sync::Arc;
     use tnn7::cells::{Library, TechParams};
     use tnn7::coordinator::measure::measure_column;
     use tnn7::data::Dataset;
+    use tnn7::tech::TechRegistry;
 
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
@@ -146,12 +154,16 @@ fn flow_report_matches_measure_wrapper() {
 
     let m = measure_column(&lib, &tech, Flavor::Std, &spec, &cfg, &data)
         .unwrap();
+    // The registry's asap7-tnn7 backend is the same substrate the
+    // wrapper bundles ad hoc: identical characterized library, same
+    // calibrated constants.
+    let registry = TechRegistry::builtin();
+    let techctx = registry.get(ASAP7_TNN7).unwrap();
     let r = tnn7::flow::measure_with(
         Target::column(Flavor::Std, spec),
         &cfg,
-        &lib,
-        &tech,
-        &data,
+        &techctx,
+        &Arc::new(data),
     )
     .unwrap();
     assert_eq!(m.ppa.power_uw, r.total.power_uw);
