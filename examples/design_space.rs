@@ -11,6 +11,11 @@
 //!    the hardware cost curve the threshold choice trades against.
 //!    The design points run concurrently through the flow's parallel
 //!    sweep executor (`--threads N`, default: up to 4 cores).
+//! 3. **Utilization/aspect sweep** — the physical-design axis: one
+//!    column placed at several floorplan utilization and aspect-ratio
+//!    targets (the `place` stage, DESIGN.md §10), showing how die
+//!    area, wirelength, and wire-aware PPA move as the floorplan
+//!    tightens or stretches.
 //!
 //! Usage: cargo run --release --example design_space [-- --quick]
 //!        [--threads N]
@@ -155,6 +160,54 @@ fn main() -> anyhow::Result<()> {
         println!(
             "{:>6} {:>6} {:>12.3} {:>12.2} {:>12.5}",
             32, q, r.total.power_uw, r.total.time_ns, r.total.area_mm2
+        );
+    }
+
+    println!(
+        "\n== Utilization / aspect sweep (placed 32x8 column, custom \
+         flavour, {threads} threads) =="
+    );
+    println!(
+        "{:>6} {:>7} {:>12} {:>12} {:>12} {:>12}",
+        "util", "aspect", "die mm2", "hpwl mm", "power uW", "time ns"
+    );
+    let utils = if quick { vec![0.6, 0.8] } else { vec![0.6, 0.7, 0.8] };
+    let aspects: Vec<f64> =
+        if quick { vec![1.0] } else { vec![1.0, 2.0] };
+    let points: Vec<(f64, f64)> = utils
+        .iter()
+        .flat_map(|&u| aspects.iter().map(move |&a| (u, a)))
+        .collect();
+    let spec = ColumnSpec::benchmark(32, 8);
+    let jobs: Vec<SweepJob> = points
+        .iter()
+        .map(|&(u, a)| {
+            let cfg = TnnConfig {
+                place: true,
+                place_util: u,
+                place_aspect: a,
+                ..cfg.clone()
+            };
+            SweepJob {
+                label: format!("u{u:.2} a{a:.2}"),
+                target: Target::column(Flavor::Custom, spec),
+                cfg,
+            }
+        })
+        .collect();
+    for (&(u, a), res) in
+        points.iter().zip(run_sweep(&jobs, &registry, &data, threads))
+    {
+        let r = res.report?;
+        let placed = r.units[0].placed.expect("placed pipeline ran");
+        println!(
+            "{:>6.2} {:>7.2} {:>12.6} {:>12.3} {:>12.3} {:>12.2}",
+            u,
+            a,
+            r.total.area_mm2,
+            placed.hpwl_mm,
+            r.total.power_uw,
+            r.total.time_ns
         );
     }
     Ok(())

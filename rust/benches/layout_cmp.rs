@@ -4,7 +4,10 @@
 //!
 //! The comparison rows come from `tnn7::flow::compare`, the same module
 //! `tnn7 layout-cmp` prints — this bench adds the Fig. 18 GDI-tree
-//! construction and an elaboration-throughput timing.
+//! construction, an elaboration-throughput timing, and the placed-area
+//! / HPWL columns from the physical-design model (`tnn7::phys`).
+//! Results also land in `BENCH_layout.json` (machine-readable, same
+//! family as BENCH_sim/BENCH_pipeline).
 //!
 //! Run: cargo bench --bench layout_cmp
 
@@ -15,6 +18,8 @@ use tnn7::cells::{gdi, Library, MacroKind, TechParams};
 use tnn7::flow::compare;
 use tnn7::netlist::modules::mux::mux_tree;
 use tnn7::netlist::{Builder, Flavor, Netlist};
+use tnn7::runtime::json::Json;
+use tnn7::tech::WireParams;
 
 fn build_stab_gdi_tree(lib: &Library) -> Netlist {
     // The Fig. 18 construction spelled out: 7 x mux2to1gdi.
@@ -29,9 +34,11 @@ fn build_stab_gdi_tree(lib: &Library) -> Netlist {
 fn main() -> anyhow::Result<()> {
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
+    let wire = WireParams::asap7();
 
     println!("Figs. 14-18 — structural layout comparisons:\n");
-    for r in compare::layout_comparisons(&lib, &tech, None)? {
+    let rows = compare::layout_comparisons(&lib, &tech, &wire, None)?;
+    for r in &rows {
         println!(
             "{:<12} {:<18} std {:>4} T / {:>8.4} um2   custom {:>4} T / {:>8.4} um2   ({:.1}x fewer T)",
             r.figure,
@@ -42,6 +49,25 @@ fn main() -> anyhow::Result<()> {
             r.custom_netlist_area_um2,
             r.std_netlist_transistors as f64
                 / r.custom_netlist_transistors as f64
+        );
+    }
+    println!("\nplaced realizations (row placement, util 0.68, square):\n");
+    println!(
+        "{:<18} {:>14} {:>14} {:>12} {:>12}",
+        "function",
+        "std placed um2",
+        "cus placed um2",
+        "std hpwl um",
+        "cus hpwl um"
+    );
+    for r in &rows {
+        println!(
+            "{:<18} {:>14.4} {:>14.4} {:>12.3} {:>12.3}",
+            r.function,
+            r.std_placed_um2,
+            r.custom_placed_um2,
+            r.std_hpwl_um,
+            r.custom_hpwl_um
         );
     }
     let tree = build_stab_gdi_tree(&lib);
@@ -74,5 +100,43 @@ fn main() -> anyhow::Result<()> {
             compare::build_function(&lib, "stabilize_func", Flavor::Std)
                 .unwrap();
     });
+
+    // Machine-readable artifact (BENCH_sim/BENCH_pipeline family).
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("figure", Json::str(r.figure)),
+                ("function", Json::str(r.function)),
+                (
+                    "std_netlist_transistors",
+                    Json::int(r.std_netlist_transistors),
+                ),
+                (
+                    "custom_netlist_transistors",
+                    Json::int(r.custom_netlist_transistors),
+                ),
+                (
+                    "std_netlist_area_um2",
+                    Json::num(r.std_netlist_area_um2),
+                ),
+                (
+                    "custom_netlist_area_um2",
+                    Json::num(r.custom_netlist_area_um2),
+                ),
+                ("std_placed_um2", Json::num(r.std_placed_um2)),
+                ("custom_placed_um2", Json::num(r.custom_placed_um2)),
+                ("std_hpwl_um", Json::num(r.std_hpwl_um)),
+                ("custom_hpwl_um", Json::num(r.custom_hpwl_um)),
+            ])
+        })
+        .collect();
+    let out = Json::obj(vec![
+        ("bench", Json::str("layout_cmp")),
+        ("wire", Json::str("asap7")),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    std::fs::write("BENCH_layout.json", out.to_string_pretty())?;
+    println!("wrote BENCH_layout.json");
     Ok(())
 }

@@ -145,6 +145,15 @@ pub struct TnnConfig {
     /// and for parallel target sweeps (1 = serial; DESIGN.md §8).
     /// Thread count never changes measured activity — only wall time.
     pub sim_threads: usize,
+    /// Run the physical-design `place` stage (floorplan + placement +
+    /// wire-aware PPA; `tnn7 flow --place`, DESIGN.md §10).
+    pub place: bool,
+    /// Floorplan target utilization in (0, 1].
+    pub place_util: f64,
+    /// Floorplan aspect ratio (width / height), > 0.
+    pub place_aspect: f64,
+    /// Placement RNG seed — same seed ⇒ bit-identical placement.
+    pub place_seed: u64,
 }
 
 impl Default for TnnConfig {
@@ -165,6 +174,10 @@ impl Default for TnnConfig {
             sim_waves: 8,
             sim_lanes: 1,
             sim_threads: 1,
+            place: false,
+            place_util: 0.70,
+            place_aspect: 1.0,
+            place_seed: 1,
         }
     }
 }
@@ -198,6 +211,10 @@ impl TnnConfig {
                 ],
             ),
             ("sim", &["sim_waves", "sim_lanes", "sim_threads"]),
+            (
+                "place",
+                &["enabled", "utilization", "aspect", "seed"],
+            ),
         ])?;
         let mut c = TnnConfig::default();
         let geti = |v: &Value| -> Result<i64> {
@@ -273,6 +290,43 @@ impl TnnConfig {
             }
             c.sim_threads = threads as usize;
         }
+        if let Some(v) = t.get("place", "enabled") {
+            match v {
+                Value::Bool(b) => c.place = *b,
+                _ => {
+                    return Err(Error::config(
+                        "place.enabled must be a boolean",
+                    ))
+                }
+            }
+        }
+        if let Some(v) = t.get("place", "utilization") {
+            let u = getf(v)?;
+            if !(u > 0.0 && u <= 1.0) {
+                return Err(Error::config(format!(
+                    "place.utilization must be in (0, 1], got {u}"
+                )));
+            }
+            c.place_util = u;
+        }
+        if let Some(v) = t.get("place", "aspect") {
+            let a = getf(v)?;
+            if !(a > 0.0 && a.is_finite()) {
+                return Err(Error::config(format!(
+                    "place.aspect must be positive, got {a}"
+                )));
+            }
+            c.place_aspect = a;
+        }
+        if let Some(v) = t.get("place", "seed") {
+            let s = geti(v)?;
+            if s < 0 {
+                return Err(Error::config(format!(
+                    "place.seed must be non-negative, got {s}"
+                )));
+            }
+            c.place_seed = s as u64;
+        }
         Ok(c)
     }
 
@@ -347,6 +401,33 @@ sim_threads = 4
         assert!(TnnConfig::from_toml("[sim]\nsim_lanes = 65").is_err());
         let c = TnnConfig::from_toml("[sim]\nsim_lanes = 64").unwrap();
         assert_eq!(c.sim_lanes, 64);
+    }
+
+    #[test]
+    fn parses_and_validates_place_section() {
+        let c = TnnConfig::from_toml(
+            "[place]\nenabled = true\nutilization = 0.6\naspect = 2.0\nseed = 9",
+        )
+        .unwrap();
+        assert!(c.place);
+        assert!((c.place_util - 0.6).abs() < 1e-12);
+        assert!((c.place_aspect - 2.0).abs() < 1e-12);
+        assert_eq!(c.place_seed, 9);
+        // Defaults: place off, util 0.70, square die.
+        let d = TnnConfig::default();
+        assert!(!d.place);
+        assert!((d.place_util - 0.70).abs() < 1e-12);
+        assert!((d.place_aspect - 1.0).abs() < 1e-12);
+        // Out-of-range values are rejected.
+        assert!(
+            TnnConfig::from_toml("[place]\nutilization = 0.0").is_err()
+        );
+        assert!(
+            TnnConfig::from_toml("[place]\nutilization = 1.5").is_err()
+        );
+        assert!(TnnConfig::from_toml("[place]\naspect = -1.0").is_err());
+        assert!(TnnConfig::from_toml("[place]\nseed = -4").is_err());
+        assert!(TnnConfig::from_toml("[place]\nenabled = 3").is_err());
     }
 
     #[test]

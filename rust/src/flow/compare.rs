@@ -30,8 +30,9 @@ use crate::netlist::modules::less_equal::less_equal;
 use crate::netlist::modules::mux::mux2;
 use crate::netlist::modules::stabilize_func::stabilize_func;
 use crate::netlist::{Builder, Flavor, Netlist};
+use crate::phys::{self, FloorplanSpec, PlacerConfig};
 use crate::runtime::json::Json;
-use crate::tech::TechRegistry;
+use crate::tech::{TechRegistry, WireParams};
 
 use super::{measure_with, Target, TargetReport};
 
@@ -57,6 +58,12 @@ pub struct MacroComparison {
     /// Custom-flavour elaboration, tie cells excluded.
     pub custom_netlist_transistors: u64,
     pub custom_netlist_area_um2: f64,
+    /// Placed realization (row placement of the elaborated netlist):
+    /// die area and total HPWL, both flavours.
+    pub std_placed_um2: f64,
+    pub std_hpwl_um: f64,
+    pub custom_placed_um2: f64,
+    pub custom_hpwl_um: f64,
 }
 
 /// The three compared functions: (figure, function, macro cell name).
@@ -121,10 +128,36 @@ fn netlist_cost(
     Ok((t, area))
 }
 
+/// Place one comparison netlist and return (placed die µm², HPWL µm).
+/// Uses the flow's default utilization and a square die — these rows
+/// compare flavours, so both sides see identical floorplan settings.
+fn placed_cost(
+    nl: &Netlist,
+    lib: &Library,
+    tech: &TechParams,
+    wire: &WireParams,
+) -> Result<(f64, f64)> {
+    let spec =
+        FloorplanSpec::new(crate::ppa::UTILIZATION, 1.0, wire);
+    let pl = phys::place::place(
+        nl,
+        lib,
+        tech,
+        &spec,
+        &PlacerConfig::default(),
+    )?;
+    let wires = phys::wire::extract(&pl, wire);
+    Ok((pl.die_mm2() * 1e6, wires.total_hpwl_mm * 1e3))
+}
+
 /// All Figs. 14–18 rows, optionally filtered by function or cell name.
+/// `wire` sets the wire/row technology the placed columns use
+/// (normally the measuring backend's
+/// [`crate::tech::TechBackend::wire_params`]).
 pub fn layout_comparisons(
     lib: &Library,
     tech: &TechParams,
+    wire: &WireParams,
     filter: Option<&str>,
 ) -> Result<Vec<MacroComparison>> {
     let mut rows = Vec::new();
@@ -143,6 +176,10 @@ pub fn layout_comparisons(
         let cus_nl = build_function(lib, function, Flavor::Custom)?;
         let (std_t, std_area) = netlist_cost(&std_nl, lib, tech)?;
         let (cus_t, cus_area) = netlist_cost(&cus_nl, lib, tech)?;
+        let (std_placed, std_hpwl) =
+            placed_cost(&std_nl, lib, tech, wire)?;
+        let (cus_placed, cus_hpwl) =
+            placed_cost(&cus_nl, lib, tech, wire)?;
         rows.push(MacroComparison {
             figure,
             function,
@@ -156,6 +193,10 @@ pub fn layout_comparisons(
             std_netlist_area_um2: std_area,
             custom_netlist_transistors: cus_t,
             custom_netlist_area_um2: cus_area,
+            std_placed_um2: std_placed,
+            std_hpwl_um: std_hpwl,
+            custom_placed_um2: cus_placed,
+            custom_hpwl_um: cus_hpwl,
         });
     }
     Ok(rows)
@@ -196,6 +237,13 @@ pub fn to_json(rows: &[MacroComparison]) -> Json {
                         "custom_netlist_area_um2",
                         Json::num(r.custom_netlist_area_um2),
                     ),
+                    ("std_placed_um2", Json::num(r.std_placed_um2)),
+                    ("std_hpwl_um", Json::num(r.std_hpwl_um)),
+                    (
+                        "custom_placed_um2",
+                        Json::num(r.custom_placed_um2),
+                    ),
+                    ("custom_hpwl_um", Json::num(r.custom_hpwl_um)),
                 ])
             })
             .collect(),
@@ -307,7 +355,8 @@ mod tests {
     fn all_rows_present_and_custom_wins() {
         let lib = Library::with_macros();
         let tech = TechParams::calibrated();
-        let rows = layout_comparisons(&lib, &tech, None).unwrap();
+        let wire = WireParams::asap7();
+        let rows = layout_comparisons(&lib, &tech, &wire, None).unwrap();
         assert_eq!(rows.len(), 3);
         for r in &rows {
             assert!(
@@ -316,6 +365,18 @@ mod tests {
                 r.function
             );
             assert!(r.custom_netlist_area_um2 < r.std_netlist_area_um2);
+            // Placed realizations carry the same ordering, and every
+            // multi-cell netlist has wire to route.
+            assert!(r.std_placed_um2 > 0.0);
+            assert!(r.custom_placed_um2 > 0.0);
+            assert!(
+                r.custom_placed_um2 <= r.std_placed_um2,
+                "{}: placed custom {} !<= std {}",
+                r.function,
+                r.custom_placed_um2,
+                r.std_placed_um2
+            );
+            assert!(r.std_hpwl_um >= 0.0 && r.custom_hpwl_um >= 0.0);
         }
         // Fig. 17: the GDI mux is the famous 2T cell.
         let mux = rows.iter().find(|r| r.function == "mux2to1").unwrap();
@@ -326,7 +387,8 @@ mod tests {
     fn json_artifact_round_trips_field_names() {
         let lib = Library::with_macros();
         let tech = TechParams::calibrated();
-        let rows = layout_comparisons(&lib, &tech, None).unwrap();
+        let wire = WireParams::asap7();
+        let rows = layout_comparisons(&lib, &tech, &wire, None).unwrap();
         let text = to_json(&rows).to_string_pretty();
         let back = Json::parse(&text).unwrap();
         let arr = back.as_arr().unwrap();
@@ -342,6 +404,12 @@ mod tests {
         assert!(
             r.field("std_netlist_area_um2").unwrap().as_f64().unwrap()
                 > 0.0
+        );
+        assert!(
+            r.field("std_placed_um2").unwrap().as_f64().unwrap() > 0.0
+        );
+        assert!(
+            r.field("custom_hpwl_um").unwrap().as_f64().unwrap() >= 0.0
         );
     }
 
@@ -404,11 +472,14 @@ mod tests {
     fn filter_selects_one_row() {
         let lib = Library::with_macros();
         let tech = TechParams::calibrated();
+        let wire = WireParams::asap7();
         let rows =
-            layout_comparisons(&lib, &tech, Some("mux2to1")).unwrap();
+            layout_comparisons(&lib, &tech, &wire, Some("mux2to1"))
+                .unwrap();
         assert_eq!(rows.len(), 1);
         let rows =
-            layout_comparisons(&lib, &tech, Some("mux2to1gdi")).unwrap();
+            layout_comparisons(&lib, &tech, &wire, Some("mux2to1gdi"))
+                .unwrap();
         assert_eq!(rows.len(), 1);
     }
 }

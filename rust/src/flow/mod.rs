@@ -75,6 +75,7 @@ use crate::error::{Error, Result};
 use crate::netlist::column::ColumnPorts;
 use crate::netlist::ir::Census;
 use crate::netlist::Netlist;
+use crate::phys::{Placement, WireModel};
 use crate::ppa::area::AreaReport;
 use crate::ppa::power::{PowerReport, RelPower};
 use crate::ppa::report::ColumnPpa;
@@ -107,6 +108,24 @@ pub struct ElaboratedUnit {
     pub census: Census,
 }
 
+/// Physical-design summary of one placed unit (present when the flow
+/// ran its `place` stage).
+#[derive(Debug, Clone, Copy)]
+pub struct PlacedSummary {
+    /// Die outline (µm).
+    pub die_w_um: f64,
+    pub die_h_um: f64,
+    /// Standard-cell row count.
+    pub rows: u64,
+    /// Total half-perimeter wirelength (mm).
+    pub hpwl_mm: f64,
+    /// Total wire capacitance (fF).
+    pub wire_cap_ff: f64,
+    /// Utilization / aspect targets the floorplan was built for.
+    pub util: f64,
+    pub aspect: f64,
+}
+
 /// Per-unit measurement in the final report (the old
 /// `ColumnMeasurement`, now per target unit).
 #[derive(Debug, Clone)]
@@ -124,8 +143,10 @@ pub struct UnitReport {
     /// Census numbers.
     pub cells: u64,
     pub transistors: u64,
-    /// Minimum clock period (ps).
+    /// Minimum clock period (ps) — wire-aware when the flow placed.
     pub clock_ps: f64,
+    /// Physical-design summary (`place` stage ran), else `None`.
+    pub placed: Option<PlacedSummary>,
 }
 
 /// The composed result of a flow run ([`stages::Report`]).
@@ -149,7 +170,7 @@ impl TargetReport {
             .units
             .iter()
             .map(|u| {
-                Json::obj(vec![
+                let mut j = Json::obj(vec![
                     ("label", Json::str(u.label.clone())),
                     ("p", Json::int(u.spec.p as u64)),
                     ("q", Json::int(u.spec.q as u64)),
@@ -165,7 +186,22 @@ impl TargetReport {
                     ("cells", Json::int(u.cells)),
                     ("transistors", Json::int(u.transistors)),
                     ("clock_ps", Json::num(u.clock_ps)),
-                ])
+                ]);
+                if let (Json::Obj(m), Some(p)) = (&mut j, &u.placed) {
+                    m.insert(
+                        "placed".to_string(),
+                        Json::obj(vec![
+                            ("die_w_um", Json::num(p.die_w_um)),
+                            ("die_h_um", Json::num(p.die_h_um)),
+                            ("rows", Json::int(p.rows)),
+                            ("hpwl_mm", Json::num(p.hpwl_mm)),
+                            ("wire_cap_ff", Json::num(p.wire_cap_ff)),
+                            ("util", Json::num(p.util)),
+                            ("aspect", Json::num(p.aspect)),
+                        ]),
+                    );
+                }
+                j
             })
             .collect();
         Json::obj(vec![
@@ -204,6 +240,12 @@ pub struct FlowContext {
     pub elaborated: Vec<ElaboratedUnit>,
     /// `sta` artifacts.
     pub timing: Vec<TimingReport>,
+    /// `place` artifacts: legalized placements, extracted wire
+    /// models, and the wire-aware STA results (empty unless the
+    /// pipeline includes the optional `place` stage).
+    pub placement: Vec<Placement>,
+    pub wires: Vec<WireModel>,
+    pub wire_timing: Vec<TimingReport>,
     /// `simulate` artifacts (per-instance switching activity).
     pub activity: Vec<Activity>,
     /// Waves simulated by the last `simulate` run.
@@ -252,6 +294,9 @@ impl FlowContext {
             data,
             elaborated: Vec::new(),
             timing: Vec::new(),
+            placement: Vec::new(),
+            wires: Vec::new(),
+            wire_timing: Vec::new(),
             activity: Vec::new(),
             sim_waves_run: 0,
             sim_lanes_run: 0,
@@ -287,16 +332,23 @@ impl FlowContext {
     /// artifacts with stale downstream ones — downstream stages simply
     /// have to be re-run.
     pub fn invalidate_downstream(&mut self, stage: &str) {
-        // Dependency chain: elaborate → {sta, simulate, area} → power
-        // → report (report also reads sta/area).
+        // Dependency chain: elaborate → sta → [place] → {simulate,
+        // area} → power → report (report also reads sta/area; place
+        // feeds wire-aware corrections into area, power, and report).
         let wipe_power = |ctx: &mut FlowContext| {
             ctx.power.clear();
             ctx.rel_power.clear();
             ctx.report = None;
         };
+        let wipe_place = |ctx: &mut FlowContext| {
+            ctx.placement.clear();
+            ctx.wires.clear();
+            ctx.wire_timing.clear();
+        };
         match stage {
             "elaborate" => {
                 self.timing.clear();
+                wipe_place(self);
                 self.activity.clear();
                 self.sim_waves_run = 0;
                 self.sim_lanes_run = 0;
@@ -305,12 +357,31 @@ impl FlowContext {
                 self.rel_area.clear();
                 wipe_power(self);
             }
-            "sta" | "simulate" => wipe_power(self),
+            "sta" => {
+                wipe_place(self);
+                wipe_power(self);
+            }
+            "place" => {
+                wipe_place(self);
+                // Area consults the placement; it must not survive a
+                // re-place.
+                self.area.clear();
+                self.rel_area.clear();
+                wipe_power(self);
+            }
+            "simulate" => wipe_power(self),
             "power" | "area" => {
                 self.report = None;
             }
             _ => {}
         }
+    }
+
+    /// The timing artifact downstream stages should consume: the
+    /// wire-aware result when the `place` stage produced one, else the
+    /// plain `sta` result.
+    pub fn timing_for(&self, i: usize) -> Option<&TimingReport> {
+        self.wire_timing.get(i).or_else(|| self.timing.get(i))
     }
 
     /// Composed target-level PPA from the per-unit sta/power/area
@@ -330,7 +401,7 @@ impl FlowContext {
             let pw = self.power.get(i).ok_or_else(|| {
                 Error::ppa("composing PPA requires the `power` stage")
             })?;
-            let t = self.timing.get(i).ok_or_else(|| {
+            let t = self.timing_for(i).ok_or_else(|| {
                 Error::ppa("composing PPA requires the `sta` stage")
             })?;
             let ar = self.area.get(i).ok_or_else(|| {
@@ -402,6 +473,27 @@ impl Flow {
     /// stage list as [`Flow::standard`].
     pub fn measurement() -> Flow {
         Flow::standard()
+    }
+
+    /// The physical-design pipeline: the canonical stages with the
+    /// optional `place` stage between `sta` and `simulate`
+    /// (`tnn7 flow --place`).  Area, power, and timing downstream are
+    /// wire-aware (DESIGN.md §10).
+    pub fn placed() -> Flow {
+        Flow::from_spec("elaborate,sta,place,simulate,power,area,report")
+            .expect("canonical placed pipeline spec")
+    }
+
+    /// The measurement pipeline a config asks for: [`Flow::placed`]
+    /// when `cfg.place` is set, else [`Flow::measurement`] — the
+    /// selector [`measure`]/[`measure_with`] (and therefore every
+    /// sweep job) routes through.
+    pub fn measurement_for(cfg: &TnnConfig) -> Flow {
+        if cfg.place {
+            Flow::placed()
+        } else {
+            Flow::measurement()
+        }
     }
 
     /// Parse a `--pipeline` spec: comma-separated stage tokens.  `sim`
@@ -499,7 +591,7 @@ fn sanitize_component(name: &str) -> String {
 /// one-call form of the flow API.
 pub fn measure(target: Target, cfg: &TnnConfig) -> Result<TargetReport> {
     let mut ctx = FlowContext::new(target, cfg.clone())?;
-    Flow::measurement().run(&mut ctx)?;
+    Flow::measurement_for(cfg).run(&mut ctx)?;
     ctx.report
         .take()
         .ok_or_else(|| Error::ppa("report stage produced no artifact"))
@@ -523,7 +615,7 @@ pub fn measure_with(
         tech.clone(),
         Arc::clone(data),
     );
-    Flow::measurement().run(&mut ctx)?;
+    Flow::measurement_for(cfg).run(&mut ctx)?;
     ctx.report
         .take()
         .ok_or_else(|| Error::ppa("report stage produced no artifact"))
@@ -653,6 +745,96 @@ mod tests {
         assert_eq!(a.activity[0].toggles, b.activity[0].toggles);
         assert_eq!(a.activity[0].clock_ticks, b.activity[0].clock_ticks);
         assert_eq!(a.activity[0].cycles, b.activity[0].cycles);
+    }
+
+    #[test]
+    fn placed_pipeline_produces_wire_aware_artifacts() {
+        let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
+        let target =
+            Target::column(Flavor::Custom, ColumnSpec { p: 6, q: 3, theta: 9 });
+        // Reference: the census-only pipeline.
+        let mut dry = FlowContext::new(target.clone(), cfg.clone()).unwrap();
+        Flow::standard().run(&mut dry).unwrap();
+        // Placed: same target through the physical-design pipeline.
+        let mut wet = FlowContext::new(target, cfg).unwrap();
+        Flow::placed().run(&mut wet).unwrap();
+        assert_eq!(wet.placement.len(), 1);
+        assert_eq!(wet.wires.len(), 1);
+        assert_eq!(wet.wire_timing.len(), 1);
+        wet.placement[0].validate().unwrap();
+        assert!(wet.wires[0].total_hpwl_mm > 0.0);
+        // Wire power is attributed and the clock slows down.
+        assert!(wet.power[0].wire_uw > 0.0);
+        assert!(
+            wet.wire_timing[0].min_clock_ps > dry.timing[0].min_clock_ps
+        );
+        // Area is the placed die outline and the report carries the
+        // physical summary.
+        assert!(
+            (wet.area[0].die_mm2 - wet.placement[0].die_mm2()).abs()
+                < 1e-15
+        );
+        let r = wet.report.as_ref().unwrap();
+        let p = r.units[0].placed.expect("placed summary");
+        assert!(p.hpwl_mm > 0.0);
+        assert_eq!(p.rows, wet.placement[0].floorplan.rows.len() as u64);
+        assert_eq!(r.units[0].clock_ps, wet.wire_timing[0].min_clock_ps);
+        // The census-only pipeline is untouched: no placed summary,
+        // zero wire power.
+        assert!(dry.report.as_ref().unwrap().units[0].placed.is_none());
+        assert_eq!(dry.power[0].wire_uw, 0.0);
+        // Wire delay lengthens the reported wave time.
+        assert!(
+            wet.report.as_ref().unwrap().total.time_ns
+                > dry.report.as_ref().unwrap().total.time_ns
+        );
+    }
+
+    #[test]
+    fn placed_pipeline_selected_by_config() {
+        let cfg = TnnConfig {
+            sim_waves: 1,
+            place: true,
+            ..TnnConfig::default()
+        };
+        assert_eq!(
+            Flow::measurement_for(&cfg).stage_names(),
+            vec![
+                "elaborate",
+                "sta",
+                "place",
+                "simulate",
+                "power",
+                "area",
+                "report"
+            ]
+        );
+        let target =
+            Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 });
+        let r = measure(target, &cfg).unwrap();
+        assert!(r.units[0].placed.is_some());
+        // Place requires sta earlier in the pipeline.
+        assert!(Flow::from_spec("elaborate,place").is_err());
+        assert!(Flow::from_spec("place").is_err());
+    }
+
+    #[test]
+    fn rerun_sta_invalidates_place_artifacts() {
+        let cfg = TnnConfig {
+            sim_waves: 1,
+            place: true,
+            ..TnnConfig::default()
+        };
+        let target =
+            Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 });
+        let mut ctx = FlowContext::new(target, cfg).unwrap();
+        Flow::placed().run(&mut ctx).unwrap();
+        assert!(!ctx.placement.is_empty());
+        Flow::from_spec("elaborate,sta").unwrap().run(&mut ctx).unwrap();
+        assert!(ctx.placement.is_empty());
+        assert!(ctx.wires.is_empty());
+        assert!(ctx.wire_timing.is_empty());
+        assert!(ctx.report.is_none());
     }
 
     #[test]

@@ -10,10 +10,18 @@
 //! |------------|--------------------------------|---------------------|
 //! | `elaborate`| netlists + ports + census      | —                   |
 //! | `sta`      | min clock, wave time           | elaborate           |
+//! | `place`    | placement + wire model + wire-aware STA (optional) | elaborate, sta |
 //! | `simulate` | switching activity             | elaborate           |
-//! | `power`    | dynamic/clock/leakage power    | sta, simulate       |
+//! | `power`    | dynamic/clock/leakage/wire power | sta, simulate     |
 //! | `area`     | placed / die area              | elaborate           |
 //! | `report`   | composed [`TargetReport`]      | sta, power, area    |
+//!
+//! `place` is not part of the default pipeline ([`super::Flow::standard`]
+//! stays census-only and bit-identical to earlier releases); the
+//! physical-design pipeline is [`super::Flow::placed`] / `tnn7 flow
+//! --place`.  When it runs, `power` adds the wire switching split,
+//! `area` reports the placed die outline, and `power`/`report` consume
+//! the wire-aware timing through [`super::FlowContext::timing_for`].
 //!
 //! Every stage pulls its substrate — the characterized library and the
 //! technology constants — from the context's [`crate::tech::TechContext`]
@@ -26,6 +34,7 @@ use crate::coordinator::activity_bridge::stimulus;
 use crate::error::{Error, Result};
 use crate::netlist::column::build_column;
 use crate::netlist::Flavor;
+use crate::phys::{self, FloorplanSpec, PlacerConfig};
 use crate::ppa::report::ColumnPpa;
 use crate::ppa::{area, power, timing};
 use crate::runtime::json::Json;
@@ -39,11 +48,14 @@ use super::{
     ElaboratedUnit, FlowContext, Stage, TargetReport, UnitReport,
 };
 
-/// All canonical stages in pipeline order (drives help text).
+/// All canonical stages in pipeline order (drives help text).  `place`
+/// is listed (and orderable) here but only included in a pipeline on
+/// request ([`super::Flow::placed`]).
 pub fn all() -> Vec<Box<dyn Stage>> {
     vec![
         Box::new(Elaborate),
         Box::new(Sta),
+        Box::new(Place),
         Box::new(Simulate),
         Box::new(Power),
         Box::new(Area),
@@ -57,6 +69,7 @@ pub fn make(tok: &str) -> Result<Vec<Box<dyn Stage>>> {
     Ok(match tok {
         "elaborate" => vec![Box::new(Elaborate) as Box<dyn Stage>],
         "sta" | "timing" => vec![Box::new(Sta)],
+        "place" => vec![Box::new(Place)],
         "simulate" | "sim" => vec![Box::new(Simulate)],
         "power" => vec![Box::new(Power)],
         "area" => vec![Box::new(Area)],
@@ -65,7 +78,7 @@ pub fn make(tok: &str) -> Result<Vec<Box<dyn Stage>>> {
         other => {
             return Err(Error::config(format!(
                 "unknown pipeline stage `{other}` (available: elaborate, \
-                 sta, simulate|sim, power, area, report, ppa)"
+                 sta, place, simulate|sim, power, area, report, ppa)"
             )))
         }
     })
@@ -75,6 +88,7 @@ pub fn make(tok: &str) -> Result<Vec<Box<dyn Stage>>> {
 pub fn requires(name: &str) -> &'static [&'static str] {
     match name {
         "sta" | "simulate" | "area" => &["elaborate"],
+        "place" => &["elaborate", "sta"],
         "power" => &["sta", "simulate"],
         "report" => &["sta", "power", "area"],
         _ => &[],
@@ -230,6 +244,137 @@ impl Stage for Sta {
 }
 
 // ---------------------------------------------------------------------
+// place
+
+/// Physical design: floorplan, row placement, wire extraction, and
+/// wire-aware STA (Innovus placement analogue).
+///
+/// For every unit: derive a [`crate::phys::Floorplan`] from the
+/// config's utilization/aspect targets and the backend's row height,
+/// run the deterministic seeded placer
+/// ([`crate::phys::place::place`]), extract the per-net wire model
+/// through the backend's [`crate::tech::WireParams`], and re-run STA
+/// with the Elmore-style wire delays.  Downstream, `power` adds the
+/// wire switching split, `area` reports the placed die outline, and
+/// `report` composes with the wire-aware clock.
+pub struct Place;
+
+impl Stage for Place {
+    fn name(&self) -> &'static str {
+        "place"
+    }
+
+    fn description(&self) -> &'static str {
+        "floorplan + seeded row placement + wire extraction; makes \
+         downstream PPA wire-aware (Innovus analogue)"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        if ctx.elaborated.is_empty() {
+            return Err(missing(self.name(), "elaborate"));
+        }
+        if ctx.timing.is_empty() {
+            return Err(missing(self.name(), "sta"));
+        }
+        ctx.invalidate_downstream(self.name());
+        let wire = ctx.tech.wire_params();
+        let fspec = FloorplanSpec::new(
+            ctx.cfg.place_util,
+            ctx.cfg.place_aspect,
+            &wire,
+        );
+        let pcfg = PlacerConfig {
+            seed: ctx.cfg.place_seed,
+            ..PlacerConfig::default()
+        };
+        for u in &ctx.elaborated {
+            // (place() runs Placement::validate() before returning.)
+            let pl = phys::place::place(
+                &u.netlist,
+                ctx.tech.library(),
+                ctx.tech.params(),
+                &fspec,
+                &pcfg,
+            )?;
+            let wires = phys::wire::extract(&pl, &wire);
+            let t = phys::ppa_hooks::wire_timing(
+                &u.netlist,
+                ctx.tech.library(),
+                ctx.tech.params(),
+                &wires,
+            )?;
+            ctx.placement.push(pl);
+            ctx.wires.push(wires);
+            ctx.wire_timing.push(t);
+        }
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        const BINS: usize = 8;
+        let units = ctx
+            .placement
+            .iter()
+            .zip(&ctx.wires)
+            .zip(&ctx.wire_timing)
+            .zip(&ctx.elaborated)
+            .map(|(((pl, wires), t), u)| {
+                let cong = phys::congestion_map(pl, BINS);
+                let max = cong.iter().copied().max().unwrap_or(0);
+                let mean = if cong.is_empty() {
+                    0.0
+                } else {
+                    cong.iter().sum::<u64>() as f64
+                        / cong.len() as f64
+                };
+                Json::obj(vec![
+                    ("label", Json::str(u.plan.label())),
+                    ("die_w_um", Json::num(pl.floorplan.die_w_um)),
+                    ("die_h_um", Json::num(pl.floorplan.die_h_um)),
+                    ("die_mm2", Json::num(pl.die_mm2())),
+                    (
+                        "rows",
+                        Json::int(pl.floorplan.rows.len() as u64),
+                    ),
+                    ("hpwl_mm", Json::num(wires.total_hpwl_mm)),
+                    (
+                        "wire_cap_ff",
+                        Json::num(wires.total_cap_ff),
+                    ),
+                    (
+                        "wire_min_clock_ps",
+                        Json::num(t.min_clock_ps),
+                    ),
+                    (
+                        "congestion",
+                        Json::obj(vec![
+                            ("bins", Json::int(BINS as u64)),
+                            ("max", Json::int(max)),
+                            ("mean", Json::num(mean)),
+                            (
+                                "counts",
+                                Json::Arr(
+                                    cong.iter()
+                                        .map(|&c| Json::int(c))
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("stage", Json::str(self.name())),
+            ("util", Json::num(ctx.cfg.place_util)),
+            ("aspect", Json::num(ctx.cfg.place_aspect)),
+            ("seed", Json::int(ctx.cfg.place_seed)),
+            ("units", Json::Arr(units)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
 // simulate
 
 /// Gate-level simulation with encoded-digit stimulus and live STDP,
@@ -373,33 +518,43 @@ impl Stage for Power {
             return Err(missing(self.name(), "elaborate"));
         }
         ctx.invalidate_downstream(self.name());
-        ctx.power.clear();
-        ctx.rel_power.clear();
+        let mut powers = Vec::with_capacity(ctx.elaborated.len());
+        let mut rels = Vec::with_capacity(ctx.elaborated.len());
         for (i, u) in ctx.elaborated.iter().enumerate() {
+            // Wire-aware clock period when the place stage ran.
             let t = ctx
-                .timing
-                .get(i)
+                .timing_for(i)
                 .ok_or_else(|| missing("power", "sta"))?;
             let act = ctx
                 .activity
                 .get(i)
                 .ok_or_else(|| missing("power", "simulate"))?;
-            let pw = power::analyze(
+            let mut pw = power::analyze(
                 &u.netlist,
                 ctx.tech.library(),
                 ctx.tech.params(),
                 act,
                 t.min_clock_ps,
             );
+            if let Some(wires) = ctx.wires.get(i) {
+                pw.wire_uw = phys::ppa_hooks::wire_power_uw(
+                    &u.netlist,
+                    act,
+                    wires,
+                    t.min_clock_ps,
+                );
+            }
             let rel = power::relative(
                 &u.netlist,
                 ctx.tech.library(),
                 act,
                 t.min_clock_ps,
             );
-            ctx.power.push(pw);
-            ctx.rel_power.push(rel);
+            powers.push(pw);
+            rels.push(rel);
         }
+        ctx.power = powers;
+        ctx.rel_power = rels;
         Ok(())
     }
 
@@ -415,6 +570,7 @@ impl Stage for Power {
                     ("dynamic_uw", Json::num(pw.dynamic_uw)),
                     ("clock_uw", Json::num(pw.clock_uw)),
                     ("leakage_uw", Json::num(pw.leakage_uw)),
+                    ("wire_uw", Json::num(pw.wire_uw)),
                     ("total_uw", Json::num(pw.total_uw())),
                     ("rel_energy_rate", Json::num(rel.energy_rate)),
                     ("rel_leak", Json::num(rel.leak)),
@@ -449,17 +605,24 @@ impl Stage for Area {
             return Err(missing(self.name(), "elaborate"));
         }
         ctx.invalidate_downstream(self.name());
-        ctx.area.clear();
-        ctx.rel_area.clear();
-        for u in &ctx.elaborated {
-            ctx.area.push(area::analyze(
-                &u.netlist,
-                ctx.tech.library(),
-                ctx.tech.params(),
-            ));
-            ctx.rel_area
-                .push(area::relative(&u.netlist, ctx.tech.library()));
+        let mut areas = Vec::with_capacity(ctx.elaborated.len());
+        let mut rels = Vec::with_capacity(ctx.elaborated.len());
+        for (i, u) in ctx.elaborated.iter().enumerate() {
+            // Placed die outline when the place stage ran; else the
+            // census roll-up (Σ cell / UTILIZATION).
+            let ar = match ctx.placement.get(i) {
+                Some(pl) => phys::ppa_hooks::placed_area(pl),
+                None => area::analyze(
+                    &u.netlist,
+                    ctx.tech.library(),
+                    ctx.tech.params(),
+                ),
+            };
+            areas.push(ar);
+            rels.push(area::relative(&u.netlist, ctx.tech.library()));
         }
+        ctx.area = areas;
+        ctx.rel_area = rels;
         Ok(())
     }
 
@@ -507,8 +670,7 @@ impl Stage for Report {
         let mut units = Vec::with_capacity(ctx.elaborated.len());
         for (i, u) in ctx.elaborated.iter().enumerate() {
             let t = ctx
-                .timing
-                .get(i)
+                .timing_for(i)
                 .ok_or_else(|| missing("report", "sta"))?;
             let pw = ctx
                 .power
@@ -527,6 +689,19 @@ impl Stage for Report {
                 .get(i)
                 .copied()
                 .ok_or_else(|| missing("report", "area"))?;
+            let placed = match (ctx.placement.get(i), ctx.wires.get(i))
+            {
+                (Some(pl), Some(wires)) => Some(super::PlacedSummary {
+                    die_w_um: pl.floorplan.die_w_um,
+                    die_h_um: pl.floorplan.die_h_um,
+                    rows: pl.floorplan.rows.len() as u64,
+                    hpwl_mm: wires.total_hpwl_mm,
+                    wire_cap_ff: wires.total_cap_ff,
+                    util: pl.floorplan.utilization,
+                    aspect: pl.floorplan.aspect,
+                }),
+                _ => None,
+            };
             units.push(UnitReport {
                 label: u.plan.label(),
                 spec: u.plan.spec,
@@ -544,6 +719,7 @@ impl Stage for Report {
                 cells: u.census.cells,
                 transistors: u.census.transistors,
                 clock_ps: t.min_clock_ps,
+                placed,
             });
         }
         ctx.report = Some(TargetReport {

@@ -23,6 +23,10 @@
 //!   column-aligned partition of [`netlist::partition`].
 //! * [`ppa`] — STA, activity-based power, placement-model area, EDP, and the
 //!   45nm↔7nm scaling model (Tables I & II, Figs. 14–18).
+//! * [`phys`] — physical design: floorplanning (die outline, cell rows,
+//!   keep-outs), deterministic seeded row placement minimizing HPWL, and
+//!   the per-net wire RC model behind the flow's wire-aware PPA
+//!   corrections (the optional `place` stage; DESIGN.md §10).
 //! * [`tech`] — pluggable technology backends: one [`tech::TechBackend`]
 //!   trait bundling the characterized library, the scale constants, node
 //!   metadata, and node-scaling projection, with a [`tech::TechRegistry`]
@@ -60,6 +64,7 @@ pub mod data;
 pub mod error;
 pub mod flow;
 pub mod netlist;
+pub mod phys;
 pub mod ppa;
 pub mod runtime;
 pub mod sim;

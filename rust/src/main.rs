@@ -143,11 +143,14 @@ USAGE: tnn7 <SUBCOMMAND> [OPTIONS]     (tnn7 <SUBCOMMAND> --help for details)
 
 SUBCOMMANDS:
   flow --target F (--col PxQ | --proto) [--tech T1,T2,..] [--pipeline S,..]
+       [--place] [--util U1,U2,..] [--aspect A1,A2,..]
        [--dump-dir D] [--lanes N] [--threads N] [--smoke]
                               run the staged design flow on one or more
                               technology backends (names or .lib paths),
                               dump per-stage JSON; --targets A,B,.. sweeps
-                              several flavours × technologies concurrently
+                              several flavours × technologies concurrently;
+                              --place adds the physical-design stage
+                              (floorplan, row placement, wire-aware PPA)
   characterize [--lib FILE]   print the characterized cell library
   layout-cmp [MACRO] [--json FILE]   Figs. 14-18 custom-vs-std comparisons
   complexity                  Fig. 19 prototype census (gates/transistors)
@@ -196,7 +199,18 @@ OPTIONS:
                            runs the full pipeline once per backend
   --col PxQ                single-column geometry (e.g. 32x12)
   --proto                  the Fig. 19 2-layer prototype instead of --col
-  --pipeline S1,S2,..      stage list (default: full canonical pipeline)
+  --place                  insert the physical-design stage between sta and
+                           simulate: floorplan + seeded row placement + wire
+                           extraction; area/power/timing become wire-aware
+                           (DESIGN.md §10)
+  --util U1,U2,..          floorplan target utilization(s) in (0, 1]; more
+                           than one value sweeps the utilization axis
+                           (implies --place; default from config: 0.70)
+  --aspect A1,A2,..        die aspect ratio(s) width/height (implies
+                           --place; default 1.0)
+  --pipeline S1,S2,..      stage list (default: full canonical pipeline, or
+                           the placed pipeline with --place; the two are
+                           mutually exclusive)
   --dump-dir DIR           write one JSON artifact per stage, named
                            NN_stage.BACKEND.json (multi-tech runs into one
                            directory never collide)
@@ -261,6 +275,9 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     let col = args.opt("--col")?;
     let pipeline = args.opt("--pipeline")?;
     let dump_dir = args.opt("--dump-dir")?;
+    let place_flag = args.flag("--place");
+    let util_desc = args.opt("--util")?;
+    let aspect_desc = args.opt("--aspect")?;
     let mut cfg = load_config(args)?;
     if let Some(w) = args.opt("--waves")? {
         cfg.sim_waves = w.parse()?;
@@ -282,6 +299,37 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     args.finish()?;
     if smoke {
         cfg.sim_waves = cfg.sim_waves.min(2);
+    }
+
+    // --util/--aspect imply the physical-design stage; each accepts a
+    // comma list forming a sweep axis (cross product when both).
+    let place_cli =
+        place_flag || util_desc.is_some() || aspect_desc.is_some();
+    if place_cli {
+        cfg.place = true;
+    }
+    let utils = parse_f64_list("--util", &util_desc, cfg.place_util)?;
+    let aspects =
+        parse_f64_list("--aspect", &aspect_desc, cfg.place_aspect)?;
+    for &u in &utils {
+        if !(u > 0.0 && u <= 1.0) {
+            anyhow::bail!("--util values must be in (0, 1], got {u}");
+        }
+    }
+    for &a in &aspects {
+        if !(a > 0.0 && a.is_finite()) {
+            anyhow::bail!("--aspect values must be positive, got {a}");
+        }
+    }
+    // Only the CLI flags conflict with an explicit stage list; a
+    // config-file `[place] enabled = true` just stops selecting the
+    // default pipeline (the explicit --pipeline wins).
+    if place_cli && pipeline.is_some() {
+        anyhow::bail!(
+            "--place/--util/--aspect select the placed pipeline; with \
+             an explicit --pipeline, list the `place` stage yourself \
+             instead"
+        );
     }
 
     if proto && col.is_some() {
@@ -325,7 +373,15 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
                  --dump-dir"
             );
         }
-        return cmd_flow_sweep(&list, &techs, &mut registry, geometry, &cfg);
+        return cmd_flow_sweep(
+            &list,
+            &techs,
+            &mut registry,
+            geometry,
+            &cfg,
+            &utils,
+            &aspects,
+        );
     }
 
     let desc = target_desc.as_deref().unwrap_or("std");
@@ -342,13 +398,36 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
         techs
     };
 
+    if dump_dir.is_some() && utils.len() * aspects.len() > 1 {
+        anyhow::bail!(
+            "--dump-dir artifacts are named NN_stage.BACKEND.json; a \
+             multi---util/--aspect run into one directory would \
+             collide — dump one design point at a time"
+        );
+    }
     let data =
         Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
+    // One pipeline run per technology × utilization × aspect point
+    // (one point unless --util/--aspect were given lists).
+    let phys_points: Vec<(f64, f64)> = utils
+        .iter()
+        .flat_map(|&u| aspects.iter().map(move |&a| (u, a)))
+        .collect();
+    let run_points: Vec<(&TechContext, f64, f64)> = runs
+        .iter()
+        .flat_map(|t| {
+            phys_points.iter().map(move |&(u, a)| (t, u, a))
+        })
+        .collect();
     let mut n_artifacts = 0usize;
-    for techctx in &runs {
+    for (techctx, util, aspect) in run_points {
+        let mut cfg = cfg.clone();
+        cfg.place_util = util;
+        cfg.place_aspect = aspect;
         let target = base.clone().with_tech(techctx.id());
         let mut flow = match &pipeline {
             Some(spec) => Flow::from_spec(spec)?,
+            None if cfg.place => Flow::placed(),
             None => Flow::standard(),
         };
         if let Some(dir) = &dump_dir {
@@ -362,6 +441,13 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
             techctx.node_label(),
             names.join(" -> ")
         );
+        if cfg.place {
+            println!(
+                "  physical design: util {util:.2}  aspect {aspect:.2}  \
+                 seed {}",
+                cfg.place_seed
+            );
+        }
         if cfg.sim_lanes > 1 {
             println!(
                 "  packed engine: {} stimulus lanes per tick",
@@ -384,12 +470,30 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
         flow.run(&mut ctx)?;
 
         if let Some(r) = &ctx.report {
-            for u in &r.units {
+            for (i, u) in r.units.iter().enumerate() {
                 println!(
                     "  unit {:>8} x{:<4} cells {:>8}  transistors {:>10}  \
                      clock {:>7.1} ps",
                     u.label, u.replicas, u.cells, u.transistors, u.clock_ps
                 );
+                if let Some(p) = &u.placed {
+                    let wire_uw = ctx
+                        .power
+                        .get(i)
+                        .map(|pw| pw.wire_uw)
+                        .unwrap_or(0.0);
+                    println!(
+                        "       placed: die {:.1} x {:.1} um ({} rows)  \
+                         HPWL {:.3} mm  wire cap {:.1} fF  wire power \
+                         {:.4} uW",
+                        p.die_w_um,
+                        p.die_h_um,
+                        p.rows,
+                        p.hpwl_mm,
+                        p.wire_cap_ff,
+                        wire_uw
+                    );
+                }
             }
             println!(
                 "  total ({}): power {:.3} uW  time {:.2} ns  \
@@ -420,8 +524,33 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `tnn7 flow --targets A,B,.. [--tech T1,T2,..]`: measure every
-/// flavour × technology combination through the standard pipeline
+/// Parse a comma-separated float list option; `default` when absent.
+fn parse_f64_list(
+    name: &str,
+    desc: &Option<String>,
+    default: f64,
+) -> anyhow::Result<Vec<f64>> {
+    let Some(list) = desc else {
+        return Ok(vec![default]);
+    };
+    let vals: Vec<f64> = list
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("{name}: bad number `{s}`"))
+        })
+        .collect::<Result<_, _>>()?;
+    if vals.is_empty() {
+        anyhow::bail!("{name} needs at least one value");
+    }
+    Ok(vals)
+}
+
+/// `tnn7 flow --targets A,B,.. [--tech T1,T2,..] [--util U1,U2,..]`:
+/// measure every flavour × technology (× utilization × aspect, with
+/// `--place`) combination through the measurement pipeline
 /// concurrently and print one summary row each.
 fn cmd_flow_sweep(
     list: &str,
@@ -429,20 +558,46 @@ fn cmd_flow_sweep(
     registry: &mut TechRegistry,
     geometry: Geometry,
     cfg: &TnnConfig,
+    utils: &[f64],
+    aspects: &[f64],
 ) -> anyhow::Result<()> {
     // In sweep mode --threads parallelizes ACROSS targets; each job
     // simulates single-threaded so the thread budget is not squared
     // (sweep workers × per-job wave threads would oversubscribe).
     let mut job_cfg = cfg.clone();
     job_cfg.sim_threads = 1;
+    // The physical-design axes: one job per utilization × aspect point
+    // (a single point when --util/--aspect are not swept).
+    let phys_points: Vec<(f64, f64)> = utils
+        .iter()
+        .flat_map(|&u| aspects.iter().map(move |&a| (u, a)))
+        .collect();
+    let label_phys = cfg.place && phys_points.len() > 1;
     let mut jobs = Vec::new();
+    let mut push_jobs = |base: Target, job_cfg: &TnnConfig| {
+        for &(u, a) in &phys_points {
+            let mut cfg = job_cfg.clone();
+            cfg.place_util = u;
+            cfg.place_aspect = a;
+            let label = if label_phys {
+                format!("{} u{u:.2} a{a:.2}", base.describe())
+            } else {
+                base.describe()
+            };
+            jobs.push(compare::SweepJob {
+                label,
+                target: base.clone(),
+                cfg,
+            });
+        }
+    };
     for d in list.split(',').map(str::trim).filter(|d| !d.is_empty()) {
         let base = Target::parse(d, geometry)?;
         if techs.is_empty() {
             // No --tech: each descriptor carries (or defaults) its own
             // technology; .lib paths load and register here.
             registry.resolve(base.tech.as_str())?;
-            jobs.push(compare::SweepJob::of(base, &job_cfg));
+            push_jobs(base, &job_cfg);
         } else {
             if d.contains(':') {
                 anyhow::bail!(
@@ -451,10 +606,7 @@ fn cmd_flow_sweep(
                 );
             }
             for t in techs {
-                jobs.push(compare::SweepJob::of(
-                    base.clone().with_tech(t.id()),
-                    &job_cfg,
-                ));
+                push_jobs(base.clone().with_tech(t.id()), &job_cfg);
             }
         }
     }
@@ -546,8 +698,13 @@ fn cmd_layout_cmp(args: &mut Args) -> anyhow::Result<()> {
     args.finish()?;
     let lib = Library::with_macros();
     let tech = TechParams::calibrated();
-    let rows =
-        compare::layout_comparisons(&lib, &tech, which.as_deref())?;
+    let wire = tech::WireParams::asap7();
+    let rows = compare::layout_comparisons(
+        &lib,
+        &tech,
+        &wire,
+        which.as_deref(),
+    )?;
     if rows.is_empty() {
         anyhow::bail!(
             "no comparison named `{}` (try less_equal, mux2to1, \
@@ -563,18 +720,27 @@ fn cmd_layout_cmp(args: &mut Args) -> anyhow::Result<()> {
         println!("wrote {path}");
     }
     println!(
-        "{:<12} {:<16} {:>8} {:>8} {:>12} {:>12}",
-        "figure", "function", "std T", "custom T", "std um2", "custom um2"
+        "{:<12} {:<16} {:>8} {:>8} {:>12} {:>12} {:>12} {:>10}",
+        "figure",
+        "function",
+        "std T",
+        "custom T",
+        "std um2",
+        "custom um2",
+        "placed um2",
+        "hpwl um"
     );
     for r in rows {
         println!(
-            "{:<12} {:<16} {:>8} {:>8} {:>12.4} {:>12.4}",
+            "{:<12} {:<16} {:>8} {:>8} {:>12.4} {:>12.4} {:>12.4} {:>10.3}",
             r.figure,
             r.function,
             r.std_ref_transistors,
             r.macro_transistors,
             r.std_ref_area_um2,
-            r.macro_area_um2
+            r.macro_area_um2,
+            r.custom_placed_um2,
+            r.custom_hpwl_um
         );
     }
     Ok(())

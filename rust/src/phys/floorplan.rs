@@ -1,0 +1,325 @@
+//! Floorplanning: die outline, standard-cell rows, and keep-out
+//! regions.
+//!
+//! A [`Floorplan`] is derived from the total placeable cell area, a
+//! target utilization, and an aspect ratio: `core = cell_area / util`,
+//! `w = sqrt(core × aspect)`, `h = sqrt(core / aspect)`, with the
+//! height quantized up to a whole number of standard-cell rows of the
+//! backend's row height ([`crate::tech::WireParams::row_height_um`]).
+//! Macro keep-out regions ([`Rect`]) subtract usable span from the
+//! rows they overlap, splitting each affected row into placement
+//! [`Span`] segments — the slots the legalizer in
+//! [`super::place`] packs cells into.
+
+use crate::error::{Error, Result};
+
+/// Floorplan construction parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FloorplanSpec {
+    /// Target placement utilization (cell area / core area), in (0, 1].
+    pub utilization: f64,
+    /// Die aspect ratio width/height, > 0.
+    pub aspect: f64,
+    /// Standard-cell row height (µm).
+    pub row_height_um: f64,
+}
+
+impl FloorplanSpec {
+    /// Spec from a technology's wire/row parameters at the given
+    /// utilization and aspect targets.
+    pub fn new(
+        utilization: f64,
+        aspect: f64,
+        wire: &crate::tech::WireParams,
+    ) -> FloorplanSpec {
+        FloorplanSpec {
+            utilization,
+            aspect,
+            row_height_um: wire.row_height_um,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(self.utilization > 0.0 && self.utilization <= 1.0) {
+            return Err(Error::ppa(format!(
+                "floorplan utilization must be in (0, 1], got {}",
+                self.utilization
+            )));
+        }
+        if !(self.aspect > 0.0 && self.aspect.is_finite()) {
+            return Err(Error::ppa(format!(
+                "floorplan aspect ratio must be positive, got {}",
+                self.aspect
+            )));
+        }
+        if !(self.row_height_um > 0.0) {
+            return Err(Error::ppa(format!(
+                "row height must be positive, got {}",
+                self.row_height_um
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// An axis-aligned keep-out rectangle (µm), e.g. a hard-macro
+/// footprint or a reserved clock spine.
+#[derive(Debug, Clone, Copy)]
+pub struct Rect {
+    pub x0_um: f64,
+    pub y0_um: f64,
+    pub x1_um: f64,
+    pub y1_um: f64,
+}
+
+/// A usable horizontal span of one row, `[x0, x1)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub x0_um: f64,
+    pub x1_um: f64,
+}
+
+impl Span {
+    /// Usable width (µm).
+    pub fn width_um(&self) -> f64 {
+        self.x1_um - self.x0_um
+    }
+}
+
+/// One standard-cell row: a y position plus its usable spans (full die
+/// width minus any keep-out overlaps).
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Bottom edge of the row (µm).
+    pub y_um: f64,
+    /// Usable placement spans, left to right, non-overlapping.
+    pub spans: Vec<Span>,
+}
+
+impl Row {
+    /// Vertical center of the row (cell centers sit here).
+    pub fn center_y(&self, row_height_um: f64) -> f64 {
+        self.y_um + row_height_um / 2.0
+    }
+
+    /// Total usable width (µm).
+    pub fn usable_um(&self) -> f64 {
+        self.spans.iter().map(Span::width_um).sum()
+    }
+}
+
+/// Die outline + row grid + keep-outs.
+#[derive(Debug, Clone)]
+pub struct Floorplan {
+    /// Die width (µm).
+    pub die_w_um: f64,
+    /// Die height (µm) — always `rows.len() × row_height_um`.
+    pub die_h_um: f64,
+    /// Row height (µm).
+    pub row_height_um: f64,
+    /// Target utilization the outline was sized for.
+    pub utilization: f64,
+    /// Aspect ratio the outline was sized for.
+    pub aspect: f64,
+    /// Standard-cell rows, bottom to top.
+    pub rows: Vec<Row>,
+    /// Keep-out regions already subtracted from the rows.
+    pub keepouts: Vec<Rect>,
+}
+
+impl Floorplan {
+    /// Floorplan for `cell_um2` of placeable cell area.  `max_cell_w_um`
+    /// widens the die if a single cell would not fit a row (degenerate
+    /// tiny-netlist case).
+    pub fn for_area(
+        cell_um2: f64,
+        max_cell_w_um: f64,
+        spec: &FloorplanSpec,
+    ) -> Result<Floorplan> {
+        spec.validate()?;
+        if !(cell_um2 > 0.0) {
+            return Err(Error::ppa(
+                "floorplan needs positive placeable cell area",
+            ));
+        }
+        let core_um2 = cell_um2 / spec.utilization;
+        let mut die_w = (core_um2 * spec.aspect).sqrt();
+        if die_w < max_cell_w_um {
+            die_w = max_cell_w_um;
+        }
+        let ideal_h = core_um2 / die_w;
+        let n_rows = (ideal_h / spec.row_height_um).ceil().max(1.0) as usize;
+        let rows = (0..n_rows)
+            .map(|r| Row {
+                y_um: r as f64 * spec.row_height_um,
+                spans: vec![Span { x0_um: 0.0, x1_um: die_w }],
+            })
+            .collect::<Vec<_>>();
+        Ok(Floorplan {
+            die_w_um: die_w,
+            die_h_um: n_rows as f64 * spec.row_height_um,
+            row_height_um: spec.row_height_um,
+            utilization: spec.utilization,
+            aspect: spec.aspect,
+            rows,
+            keepouts: Vec::new(),
+        })
+    }
+
+    /// Subtract a keep-out rectangle from every row it overlaps,
+    /// splitting their usable spans.  Slivers narrower than 1% of a row
+    /// height are dropped (unplaceable).
+    pub fn add_keepout(&mut self, rect: Rect) {
+        let min_sliver = self.row_height_um * 0.01;
+        for row in &mut self.rows {
+            let ry0 = row.y_um;
+            let ry1 = row.y_um + self.row_height_um;
+            if rect.y1_um <= ry0 || rect.y0_um >= ry1 {
+                continue;
+            }
+            let mut next = Vec::with_capacity(row.spans.len() + 1);
+            for s in &row.spans {
+                if rect.x1_um <= s.x0_um || rect.x0_um >= s.x1_um {
+                    next.push(*s);
+                    continue;
+                }
+                let left = Span { x0_um: s.x0_um, x1_um: rect.x0_um };
+                let right = Span { x0_um: rect.x1_um, x1_um: s.x1_um };
+                if left.width_um() > min_sliver {
+                    next.push(left);
+                }
+                if right.width_um() > min_sliver {
+                    next.push(right);
+                }
+            }
+            row.spans = next;
+        }
+        self.keepouts.push(rect);
+    }
+
+    /// Append a fresh full-width row on top (legalizer overflow path:
+    /// row quantization can leave slightly less capacity than the cell
+    /// list needs).  Grows the die height.
+    pub fn push_overflow_row(&mut self) {
+        let y = self.rows.len() as f64 * self.row_height_um;
+        self.rows.push(Row {
+            y_um: y,
+            spans: vec![Span { x0_um: 0.0, x1_um: self.die_w_um }],
+        });
+        self.die_h_um = self.rows.len() as f64 * self.row_height_um;
+    }
+
+    /// Die area (mm²).
+    pub fn die_mm2(&self) -> f64 {
+        self.die_w_um * self.die_h_um * 1e-6
+    }
+
+    /// Total usable placement capacity (µm²) across all rows.
+    pub fn capacity_um2(&self) -> f64 {
+        self.rows
+            .iter()
+            .map(|r| r.usable_um() * self.row_height_um)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::WireParams;
+
+    fn spec() -> FloorplanSpec {
+        FloorplanSpec::new(0.7, 1.0, &WireParams::asap7())
+    }
+
+    #[test]
+    fn outline_matches_utilization_and_aspect() {
+        let fp = Floorplan::for_area(700.0, 1.0, &spec()).unwrap();
+        // core = 1000 µm²; square-ish die, height row-quantized up.
+        assert!(fp.die_w_um >= 31.0 && fp.die_w_um <= 33.0);
+        assert!(fp.die_h_um >= fp.die_w_um - fp.row_height_um);
+        assert!((fp.die_h_um / fp.row_height_um).fract().abs() < 1e-9);
+        // Capacity covers the cell area with the utilization margin.
+        assert!(fp.capacity_um2() >= 700.0);
+        // Wide aspect: w/h ≈ 4 (up to row quantization).
+        let wide = Floorplan::for_area(
+            700.0,
+            1.0,
+            &FloorplanSpec { aspect: 4.0, ..spec() },
+        )
+        .unwrap();
+        let ratio = wide.die_w_um / wide.die_h_um;
+        assert!(ratio > 2.5 && ratio < 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn die_width_never_below_widest_cell() {
+        let fp = Floorplan::for_area(10.0, 50.0, &spec()).unwrap();
+        assert!(fp.die_w_um >= 50.0);
+    }
+
+    #[test]
+    fn keepout_splits_row_spans() {
+        let mut fp = Floorplan::for_area(700.0, 1.0, &spec()).unwrap();
+        let before = fp.capacity_um2();
+        let rect = Rect {
+            x0_um: 10.0,
+            y0_um: 0.0,
+            x1_um: 20.0,
+            y1_um: fp.row_height_um * 2.5,
+        };
+        fp.add_keepout(rect);
+        // First three rows lose a 10 µm span; rows above are intact.
+        for (r, row) in fp.rows.iter().enumerate() {
+            if r < 3 {
+                assert_eq!(row.spans.len(), 2, "row {r}");
+                assert!(
+                    (row.usable_um() - (fp.die_w_um - 10.0)).abs() < 1e-9
+                );
+            } else {
+                assert_eq!(row.spans.len(), 1, "row {r}");
+            }
+        }
+        assert!(fp.capacity_um2() < before);
+        assert_eq!(fp.keepouts.len(), 1);
+    }
+
+    #[test]
+    fn overflow_row_grows_die() {
+        let mut fp = Floorplan::for_area(700.0, 1.0, &spec()).unwrap();
+        let rows = fp.rows.len();
+        let h = fp.die_h_um;
+        fp.push_overflow_row();
+        assert_eq!(fp.rows.len(), rows + 1);
+        assert!((fp.die_h_um - (h + fp.row_height_um)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let w = WireParams::asap7();
+        assert!(Floorplan::for_area(
+            100.0,
+            1.0,
+            &FloorplanSpec::new(0.0, 1.0, &w)
+        )
+        .is_err());
+        assert!(Floorplan::for_area(
+            100.0,
+            1.0,
+            &FloorplanSpec::new(1.5, 1.0, &w)
+        )
+        .is_err());
+        assert!(Floorplan::for_area(
+            100.0,
+            1.0,
+            &FloorplanSpec::new(0.7, 0.0, &w)
+        )
+        .is_err());
+        assert!(Floorplan::for_area(
+            0.0,
+            1.0,
+            &FloorplanSpec::new(0.7, 1.0, &w)
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! Physical design: floorplanning, row placement, and the wire model
+//! behind wire-aware PPA.
+//!
+//! The paper's headline numbers (1.56 mm² / 1.69 mW for the Fig. 19
+//! prototype) are *post-layout* results, and its follow-ups treat
+//! place-and-route as a first-class stage (TNN7's placed-and-routed
+//! macro comparisons, arXiv 2205.07410; the TNN design framework's PnR
+//! stage, arXiv 2205.14248).  This module closes the same gap for the
+//! reproduction: instead of a pure census sum of cell areas with zero
+//! wire contribution, a design can be floorplanned, placed, and
+//! charged for its wires:
+//!
+//! * [`floorplan`] — die outline from target utilization + aspect
+//!   ratio, standard-cell rows at the backend's row height, macro
+//!   keep-out regions splitting rows into usable spans.
+//! * [`place`] — deterministic seeded placement: cluster-seeded
+//!   initial placement by netlist hierarchy, greedy width-matched swap
+//!   refinement minimizing half-perimeter wirelength, legal by
+//!   construction with a from-scratch
+//!   [`place::Placement::validate`] invariant check.
+//! * [`wire`] — per-net HPWL → wire capacitance / resistance /
+//!   Elmore-style delay through the backend's per-node
+//!   [`crate::tech::WireParams`] (asap7 vs n45-projected see
+//!   different wire RC), plus a grid congestion estimate.
+//! * [`ppa_hooks`] — the corrections fed back into [`crate::ppa`]:
+//!   placed die area into the area report, wire switching power
+//!   (activity × wire energy) into the power split, and wire-delay
+//!   STA into the timing report.
+//!
+//! The flow exposes all of this as the optional `place` stage between
+//! `sta` and `simulate` (`tnn7 flow --place --util 0.7 --aspect 1.0`),
+//! with a per-stage JSON dump carrying die dimensions, total HPWL, and
+//! the congestion histogram.  DESIGN.md §10 documents the model and
+//! what is (and is not) calibrated against the paper's numbers.
+
+pub mod floorplan;
+pub mod place;
+pub mod ppa_hooks;
+pub mod wire;
+
+pub use floorplan::{Floorplan, FloorplanSpec, Rect};
+pub use place::{Placement, PlacerConfig};
+pub use wire::{congestion_map, NetWire, WireModel};

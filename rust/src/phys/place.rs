@@ -1,0 +1,551 @@
+//! Deterministic seeded row placement.
+//!
+//! Three phases, all reproducible from one seed:
+//!
+//! 1. **Cluster-seeded initial placement** — instances are ordered by
+//!    their netlist hierarchy cluster (the top-level region each
+//!    instance is tagged with: `sg3`, `syn7_2`, `wta`, …) and packed
+//!    into the floorplan's row spans in serpentine order, so cells of
+//!    one module land next to each other, exactly like a
+//!    hierarchy-guided initial placement.
+//! 2. **Greedy HPWL refinement** — seeded random width-matched cell
+//!    swaps, accepted only when they reduce total half-perimeter
+//!    wirelength; the per-pass HPWL trace is recorded and is
+//!    non-increasing by construction.
+//! 3. **Legalization by construction** — cells only ever occupy row
+//!    spans (keep-outs excluded) with no overlap; width-matched swaps
+//!    preserve legality, and [`Placement::validate`] re-checks the
+//!    invariants from scratch.
+
+use crate::cells::{Library, TechParams};
+use crate::data::digits::XorShift;
+use crate::error::{Error, Result};
+use crate::netlist::ir::RegionId;
+use crate::netlist::Netlist;
+
+use super::floorplan::{Floorplan, FloorplanSpec};
+
+/// Nets with more pins than this are kept out of swap-delta
+/// evaluation (their bbox is effectively placement-invariant and
+/// re-scanning them per candidate swap is the placer's only
+/// super-linear cost).
+const MAX_SWAP_NET_PINS: usize = 256;
+
+/// Placement engine parameters (all defaulted; the flow only exposes
+/// the seed).
+#[derive(Debug, Clone, Copy)]
+pub struct PlacerConfig {
+    /// RNG seed — same seed ⇒ bit-identical placement and HPWL.
+    pub seed: u64,
+    /// Refinement passes over the design.
+    pub passes: usize,
+    /// Swap attempts per cell per pass.
+    pub swaps_per_cell: usize,
+    /// Hard cap on swap attempts per pass (keeps huge netlists
+    /// CI-friendly).
+    pub max_swaps_per_pass: usize,
+}
+
+impl Default for PlacerConfig {
+    fn default() -> Self {
+        PlacerConfig {
+            seed: 1,
+            passes: 2,
+            swaps_per_cell: 8,
+            max_swaps_per_pass: 200_000,
+        }
+    }
+}
+
+/// A legalized row placement of one netlist.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// Cell-center x per instance (µm).
+    pub x_um: Vec<f64>,
+    /// Cell-center y per instance (µm) — always its row's center.
+    pub y_um: Vec<f64>,
+    /// Placement width per instance (µm) = cell area / row height.
+    pub width_um: Vec<f64>,
+    /// Row index per instance.
+    pub row_of: Vec<u32>,
+    /// The floorplan placed into (possibly grown by overflow rows).
+    pub floorplan: Floorplan,
+    /// Per-net instance terminals ([`net_instances`]), computed once
+    /// here and reused by the wire model and congestion map.
+    pub net_pins: Vec<Vec<u32>>,
+    /// Total half-perimeter wirelength (µm), const nets excluded.
+    pub hpwl_um: f64,
+    /// HPWL trace: initial placement, then after each refinement
+    /// pass.  Non-increasing (greedy acceptance).
+    pub pass_hpwl_um: Vec<f64>,
+}
+
+/// Per-net instance terminals (deduped, ascending), with the tie-cell
+/// constant nets mapped to empty pin lists: const0/const1 are locally
+/// replicated in real layouts, so routing one giant constant net would
+/// be pure model noise.  Shared with [`super::wire`].
+pub fn net_instances(nl: &Netlist) -> Vec<Vec<u32>> {
+    let mut pins: Vec<Vec<u32>> = vec![Vec::new(); nl.n_nets()];
+    for i in 0..nl.insts.len() {
+        for &n in nl.inst_ins(i).iter().chain(nl.inst_outs(i)) {
+            pins[n.0 as usize].push(i as u32);
+        }
+    }
+    for (n, list) in pins.iter_mut().enumerate() {
+        if n == nl.const0.0 as usize || n == nl.const1.0 as usize {
+            list.clear();
+            continue;
+        }
+        list.sort_unstable();
+        list.dedup();
+    }
+    pins
+}
+
+/// The hierarchy cluster of a region: the ancestor directly below the
+/// root (or the root itself for top-level instances).
+fn top_cluster(nl: &Netlist, mut r: RegionId) -> u32 {
+    loop {
+        let reg = &nl.regions[r.0 as usize];
+        match reg.parent {
+            None => return r.0,
+            Some(p) if nl.regions[p.0 as usize].parent.is_none() => {
+                return r.0
+            }
+            Some(p) => r = p,
+        }
+    }
+}
+
+/// Bounding box `(x0, x1, y0, y1)` of a net's instance terminals;
+/// `None` for nets with < 2 terminals (nothing to route).
+pub fn net_bbox(
+    pins: &[u32],
+    x: &[f64],
+    y: &[f64],
+) -> Option<(f64, f64, f64, f64)> {
+    if pins.len() < 2 {
+        return None;
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &i in pins {
+        let (px, py) = (x[i as usize], y[i as usize]);
+        x0 = x0.min(px);
+        x1 = x1.max(px);
+        y0 = y0.min(py);
+        y1 = y1.max(py);
+    }
+    Some((x0, x1, y0, y1))
+}
+
+/// HPWL of one net over instance centers; nets with < 2 terminals
+/// contribute nothing.
+fn net_hpwl(pins: &[u32], x: &[f64], y: &[f64]) -> f64 {
+    match net_bbox(pins, x, y) {
+        Some((x0, x1, y0, y1)) => (x1 - x0) + (y1 - y0),
+        None => 0.0,
+    }
+}
+
+/// Place `nl` into a floorplan derived from the spec (row count from
+/// the netlist's own cell area).  The one-call form the flow uses.
+pub fn place(
+    nl: &Netlist,
+    lib: &Library,
+    tech: &TechParams,
+    spec: &FloorplanSpec,
+    cfg: &PlacerConfig,
+) -> Result<Placement> {
+    let widths: Vec<f64> = nl
+        .insts
+        .iter()
+        .map(|i| tech.area_um2(lib.cell(i.cell)) / spec.row_height_um)
+        .collect();
+    let cell_um2: f64 =
+        widths.iter().map(|w| w * spec.row_height_um).sum();
+    let max_w = widths.iter().cloned().fold(0.0f64, f64::max);
+    let fp = Floorplan::for_area(cell_um2, max_w, spec)?;
+    place_into(nl, lib, tech, fp, cfg)
+}
+
+/// Place `nl` into an explicit floorplan (keep-outs already applied).
+pub fn place_into(
+    nl: &Netlist,
+    lib: &Library,
+    tech: &TechParams,
+    mut fp: Floorplan,
+    cfg: &PlacerConfig,
+) -> Result<Placement> {
+    let n = nl.insts.len();
+    if n == 0 {
+        return Err(Error::ppa("cannot place an empty netlist"));
+    }
+    let widths: Vec<f64> = nl
+        .insts
+        .iter()
+        .map(|i| tech.area_um2(lib.cell(i.cell)) / fp.row_height_um)
+        .collect();
+    // A cell wider than the die can never legalize — the overflow-row
+    // path would append full-width rows forever.  ([`place`] sizes the
+    // die around the widest cell; explicit floorplans must too.)
+    let max_w = widths.iter().cloned().fold(0.0f64, f64::max);
+    if max_w > fp.die_w_um + 1e-9 {
+        return Err(Error::ppa(format!(
+            "floorplan die width {:.3} µm is narrower than the widest \
+             cell ({max_w:.3} µm) — widen the die or lower the row \
+             height",
+            fp.die_w_um
+        )));
+    }
+
+    // Phase 1: cluster order, then serpentine row packing.
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let clusters: Vec<u32> = nl
+        .insts
+        .iter()
+        .map(|i| top_cluster(nl, i.region))
+        .collect();
+    order.sort_by_key(|&i| (clusters[i as usize], i));
+
+    let mut x_um = vec![0.0f64; n];
+    let mut y_um = vec![0.0f64; n];
+    let mut row_of = vec![0u32; n];
+    let mut it = order.iter().copied().peekable();
+    let mut row = 0usize;
+    'rows: loop {
+        if it.peek().is_none() {
+            break;
+        }
+        if row >= fp.rows.len() {
+            fp.push_overflow_row();
+        }
+        let rev = row % 2 == 1;
+        let y = fp.rows[row].center_y(fp.row_height_um);
+        let mut spans = fp.rows[row].spans.clone();
+        if rev {
+            spans.reverse();
+        }
+        for span in &spans {
+            // Soft fill target spreads whitespace; the hard bound is
+            // the span itself.
+            let target = span.width_um() * fp.utilization;
+            let mut used = 0.0f64;
+            while let Some(&i) = it.peek() {
+                let w = widths[i as usize];
+                if used + w > span.width_um() + 1e-9 {
+                    break; // cell does not fit this span at all
+                }
+                it.next();
+                let x = if rev {
+                    span.x1_um - used - w / 2.0
+                } else {
+                    span.x0_um + used + w / 2.0
+                };
+                x_um[i as usize] = x;
+                y_um[i as usize] = y;
+                row_of[i as usize] = row as u32;
+                used += w;
+                if used >= target {
+                    break;
+                }
+            }
+            if it.peek().is_none() {
+                break 'rows;
+            }
+        }
+        row += 1;
+    }
+
+    // Phase 2: greedy width-matched swap refinement.
+    let pins = net_instances(nl);
+    let mut inst_nets: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (net, list) in pins.iter().enumerate() {
+        for &i in list {
+            inst_nets[i as usize].push(net as u32);
+        }
+    }
+    for nets in &mut inst_nets {
+        nets.dedup(); // pins per net are ascending ⇒ already grouped
+    }
+    let mut total: f64 =
+        pins.iter().map(|p| net_hpwl(p, &x_um, &y_um)).sum();
+    let mut pass_hpwl = vec![total];
+    let mut rng = XorShift::new(cfg.seed);
+    let attempts =
+        (n * cfg.swaps_per_cell).min(cfg.max_swaps_per_pass);
+    for _pass in 0..cfg.passes {
+        for _ in 0..attempts {
+            let a = (rng.next_u64() as usize) % n;
+            let mut b = a;
+            for _ in 0..8 {
+                let cand = (rng.next_u64() as usize) % n;
+                if cand != a
+                    && widths[cand].to_bits() == widths[a].to_bits()
+                {
+                    b = cand;
+                    break;
+                }
+            }
+            if b == a {
+                continue;
+            }
+            let swap_ok = |i: usize| {
+                inst_nets[i].iter().all(|&net| {
+                    pins[net as usize].len() <= MAX_SWAP_NET_PINS
+                })
+            };
+            if !swap_ok(a) || !swap_ok(b) {
+                continue;
+            }
+            // Delta over the union of incident nets (exact: no other
+            // net moves).
+            let mut delta = 0.0f64;
+            for &net in &inst_nets[a] {
+                delta -= net_hpwl(&pins[net as usize], &x_um, &y_um);
+            }
+            for &net in &inst_nets[b] {
+                if !inst_nets[a].contains(&net) {
+                    delta -=
+                        net_hpwl(&pins[net as usize], &x_um, &y_um);
+                }
+            }
+            x_um.swap(a, b);
+            y_um.swap(a, b);
+            for &net in &inst_nets[a] {
+                delta += net_hpwl(&pins[net as usize], &x_um, &y_um);
+            }
+            for &net in &inst_nets[b] {
+                if !inst_nets[a].contains(&net) {
+                    delta +=
+                        net_hpwl(&pins[net as usize], &x_um, &y_um);
+                }
+            }
+            if delta < -1e-12 {
+                row_of.swap(a, b);
+                total += delta;
+            } else {
+                // Reject: restore.
+                x_um.swap(a, b);
+                y_um.swap(a, b);
+            }
+        }
+        pass_hpwl.push(total);
+    }
+
+    let placement = Placement {
+        x_um,
+        y_um,
+        width_um: widths,
+        row_of,
+        floorplan: fp,
+        net_pins: pins,
+        hpwl_um: total,
+        pass_hpwl_um: pass_hpwl,
+    };
+    placement.validate()?;
+    Ok(placement)
+}
+
+impl Placement {
+    /// Placed die area (mm²).
+    pub fn die_mm2(&self) -> f64 {
+        self.floorplan.die_mm2()
+    }
+
+    /// Check the legalization invariants from scratch: every cell is
+    /// row-aligned (its y is its row's center), lies fully inside one
+    /// usable span of that row (in-bounds, outside keep-outs), and no
+    /// two cells of a row overlap.
+    pub fn validate(&self) -> Result<()> {
+        const EPS: f64 = 1e-6;
+        let fp = &self.floorplan;
+        let n = self.x_um.len();
+        let mut by_row: Vec<Vec<u32>> = vec![Vec::new(); fp.rows.len()];
+        for i in 0..n {
+            let r = self.row_of[i] as usize;
+            let row = fp.rows.get(r).ok_or_else(|| {
+                Error::ppa(format!(
+                    "placement: inst {i} on nonexistent row {r}"
+                ))
+            })?;
+            if (self.y_um[i] - row.center_y(fp.row_height_um)).abs()
+                > EPS
+            {
+                return Err(Error::ppa(format!(
+                    "placement: inst {i} not row-aligned (y {} vs row \
+                     center {})",
+                    self.y_um[i],
+                    row.center_y(fp.row_height_um)
+                )));
+            }
+            let (lo, hi) = (
+                self.x_um[i] - self.width_um[i] / 2.0,
+                self.x_um[i] + self.width_um[i] / 2.0,
+            );
+            let inside = row.spans.iter().any(|s| {
+                lo >= s.x0_um - EPS && hi <= s.x1_um + EPS
+            });
+            if !inside {
+                return Err(Error::ppa(format!(
+                    "placement: inst {i} [{lo}, {hi}] outside every \
+                     span of row {r}"
+                )));
+            }
+            by_row[r].push(i as u32);
+        }
+        for (r, insts) in by_row.iter_mut().enumerate() {
+            insts.sort_by(|&a, &b| {
+                self.x_um[a as usize]
+                    .partial_cmp(&self.x_um[b as usize])
+                    .expect("finite placement coordinates")
+            });
+            for w in insts.windows(2) {
+                let (a, b) = (w[0] as usize, w[1] as usize);
+                let a_hi = self.x_um[a] + self.width_um[a] / 2.0;
+                let b_lo = self.x_um[b] - self.width_um[b] / 2.0;
+                if a_hi > b_lo + EPS {
+                    return Err(Error::ppa(format!(
+                        "placement: insts {a} and {b} overlap on row \
+                         {r} ({a_hi} > {b_lo})"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::Flavor;
+    use crate::ppa::UTILIZATION;
+    use crate::tech::WireParams;
+
+    fn place_column(
+        p: usize,
+        q: usize,
+        flavor: Flavor,
+        seed: u64,
+    ) -> Placement {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let spec = ColumnSpec { p, q, theta: (p + q) as u64 };
+        let (nl, _) = build_column(&lib, flavor, &spec).unwrap();
+        let fspec = FloorplanSpec::new(
+            UTILIZATION,
+            1.0,
+            &WireParams::asap7(),
+        );
+        place(
+            &nl,
+            &lib,
+            &tech,
+            &fspec,
+            &PlacerConfig { seed, ..PlacerConfig::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn placement_is_legal_and_covers_every_cell() {
+        let pl = place_column(8, 4, Flavor::Custom, 7);
+        pl.validate().unwrap();
+        assert!(pl.hpwl_um > 0.0);
+        // Placed cell area over die area lands near the target
+        // utilization (row quantization costs a little).
+        let cell_um2: f64 = pl
+            .width_um
+            .iter()
+            .map(|w| w * pl.floorplan.row_height_um)
+            .sum();
+        let ratio = cell_um2 / (pl.die_mm2() * 1e6);
+        assert!(
+            ratio > 0.4 && ratio <= UTILIZATION + 1e-9,
+            "placed utilization {ratio}"
+        );
+    }
+
+    #[test]
+    fn refinement_never_increases_hpwl() {
+        let pl = place_column(8, 4, Flavor::Std, 3);
+        assert_eq!(
+            pl.pass_hpwl_um.len(),
+            PlacerConfig::default().passes + 1
+        );
+        for w in pl.pass_hpwl_um.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "HPWL increased: {w:?}");
+        }
+        assert!(
+            (pl.hpwl_um - *pl.pass_hpwl_um.last().unwrap()).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let a = place_column(6, 3, Flavor::Custom, 42);
+        let b = place_column(6, 3, Flavor::Custom, 42);
+        assert_eq!(a.x_um, b.x_um);
+        assert_eq!(a.y_um, b.y_um);
+        assert_eq!(a.row_of, b.row_of);
+        assert_eq!(a.hpwl_um.to_bits(), b.hpwl_um.to_bits());
+    }
+
+    #[test]
+    fn keepout_floorplan_stays_legal() {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let spec = ColumnSpec { p: 6, q: 3, theta: 9 };
+        let (nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let fspec =
+            FloorplanSpec::new(0.6, 1.0, &WireParams::asap7());
+        let widths: f64 = nl
+            .insts
+            .iter()
+            .map(|i| tech.area_um2(lib.cell(i.cell)))
+            .sum();
+        let mut fp =
+            Floorplan::for_area(widths, 1.0, &fspec).unwrap();
+        // Block out a central macro-sized rectangle.
+        fp.add_keepout(super::super::floorplan::Rect {
+            x0_um: fp.die_w_um * 0.3,
+            y0_um: 0.0,
+            x1_um: fp.die_w_um * 0.5,
+            y1_um: fp.die_h_um * 0.5,
+        });
+        let pl = place_into(
+            &nl,
+            &lib,
+            &tech,
+            fp,
+            &PlacerConfig::default(),
+        )
+        .unwrap();
+        pl.validate().unwrap();
+        // No cell center inside the keep-out.
+        let ko = pl.floorplan.keepouts[0];
+        for i in 0..pl.x_um.len() {
+            let inside = pl.x_um[i] > ko.x0_um
+                && pl.x_um[i] < ko.x1_um
+                && pl.y_um[i] > ko.y0_um
+                && pl.y_um[i] < ko.y1_um;
+            assert!(!inside, "inst {i} inside keep-out");
+        }
+    }
+
+    #[test]
+    fn const_nets_are_excluded_from_wiring() {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 4, q: 2, theta: 4 };
+        let (nl, _) =
+            build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let pins = net_instances(&nl);
+        assert!(pins[nl.const0.0 as usize].is_empty());
+        assert!(pins[nl.const1.0 as usize].is_empty());
+        // Some real net has at least two terminals.
+        assert!(pins.iter().any(|p| p.len() >= 2));
+    }
+}

@@ -1,0 +1,161 @@
+//! Wire-aware PPA corrections: where the physical-design model feeds
+//! back into [`crate::ppa`].
+//!
+//! * **Area** — [`placed_area`] replaces the census roll-up
+//!   (`Σ cell / UTILIZATION`) with the placed floorplan's actual die
+//!   outline (row-quantized, keep-outs included).
+//! * **Power** — [`wire_power_uw`] charges each driver toggle the
+//!   switching energy of its output nets' wire load (activity ×
+//!   per-net wire energy, reusing the simulator's per-instance toggle
+//!   counts), reported as the `wire_uw` split of
+//!   [`crate::ppa::power::PowerReport`].
+//! * **Timing** — [`wire_timing`] re-runs STA with the per-net
+//!   Elmore-style wire delays added after every driving cell
+//!   ([`crate::ppa::timing::analyze_with_wire`]).
+
+use crate::cells::{Library, TechParams};
+use crate::error::Result;
+use crate::netlist::Netlist;
+use crate::ppa::area::AreaReport;
+use crate::ppa::timing::{analyze_with_wire, TimingReport};
+use crate::sim::Activity;
+
+use super::place::Placement;
+use super::wire::WireModel;
+
+/// Area report from a placed floorplan: `cell_um2` is the summed
+/// placed cell area, `die_mm2` the actual (row-quantized) die outline.
+pub fn placed_area(pl: &Placement) -> AreaReport {
+    let cell_um2: f64 = pl
+        .width_um
+        .iter()
+        .map(|w| w * pl.floorplan.row_height_um)
+        .sum();
+    AreaReport { cell_um2, die_mm2: pl.die_mm2() }
+}
+
+/// Wire switching power (µW): every output toggle of instance `i`
+/// switches the wire load of its output nets.
+///
+/// `clock_ps` is the (wire-aware) clock period the design runs at;
+/// the time base matches [`crate::ppa::power::analyze`] so the split
+/// composes into one total.
+pub fn wire_power_uw(
+    nl: &Netlist,
+    act: &Activity,
+    wires: &WireModel,
+    clock_ps: f64,
+) -> f64 {
+    assert!(act.cycles > 0, "simulate before computing wire power");
+    let t_sim_s = act.cycles as f64 * clock_ps * 1e-12;
+    let mut fj = 0.0f64;
+    for i in 0..nl.insts.len() {
+        if act.toggles[i] == 0 {
+            continue;
+        }
+        let e: f64 = nl
+            .inst_outs(i)
+            .iter()
+            .map(|o| wires.nets[o.0 as usize].energy_fj)
+            .sum();
+        fj += act.toggles[i] as f64 * e;
+    }
+    // fJ / s = 1e-15 W; report µW: factor 1e-9.
+    fj * 1e-9 / t_sim_s
+}
+
+/// Wire-aware STA: the ordinary analysis with each net's wire delay
+/// added after its driving cell.
+pub fn wire_timing(
+    nl: &Netlist,
+    lib: &Library,
+    tech: &TechParams,
+    wires: &WireModel,
+) -> Result<TimingReport> {
+    analyze_with_wire(nl, lib, tech, &wires.net_delay_ps())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::Flavor;
+    use crate::phys::floorplan::FloorplanSpec;
+    use crate::phys::place::{place, PlacerConfig};
+    use crate::phys::wire::extract;
+    use crate::ppa::timing;
+    use crate::sim::testbench::ColumnTestbench;
+    use crate::tech::WireParams;
+    use crate::tnn::stdp::RandPair;
+    use crate::tnn::{Lfsr16, StdpParams};
+
+    fn fixture() -> (Netlist, Placement, WireModel, Library, TechParams)
+    {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let spec = ColumnSpec { p: 6, q: 3, theta: 9 };
+        let (nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let fspec =
+            FloorplanSpec::new(0.7, 1.0, &WireParams::asap7());
+        let pl = place(&nl, &lib, &tech, &fspec, &PlacerConfig::default())
+            .unwrap();
+        let wires = extract(&pl, &WireParams::asap7());
+        (nl, pl, wires, lib, tech)
+    }
+
+    #[test]
+    fn placed_die_close_to_census_die() {
+        let (nl, pl, _w, lib, tech) = fixture();
+        let census = crate::ppa::area::analyze(&nl, &lib, &tech);
+        let placed = placed_area(&pl);
+        assert!(
+            (placed.cell_um2 - census.cell_um2).abs()
+                < 1e-6 * census.cell_um2
+        );
+        // Same order of magnitude; row quantization and whitespace
+        // keep it within 2x of the census estimate.
+        let ratio = placed.die_mm2 / census.die_mm2;
+        assert!(ratio > 0.5 && ratio < 2.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn wire_delay_slows_the_clock_wire_power_positive() {
+        let (nl, pl, wires, lib, tech) = fixture();
+        let dry = timing::analyze(&nl, &lib, &tech).unwrap();
+        let wet = wire_timing(&nl, &lib, &tech, &wires).unwrap();
+        assert!(wet.min_clock_ps > dry.min_clock_ps);
+        assert!(wet.wave_ns > dry.wave_ns);
+
+        // Simulate a couple of waves for real toggle counts.
+        let spec = ColumnSpec { p: 6, q: 3, theta: 9 };
+        let (nl2, ports) =
+            build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let mut tb = ColumnTestbench::new(&nl2, &ports, &lib).unwrap();
+        let params = StdpParams::default_training();
+        let mut lfsr = Lfsr16::new(0xACE1);
+        for w in 0..3 {
+            let s: Vec<i32> =
+                (0..spec.p).map(|j| ((j + w) % 8) as i32).collect();
+            let rand: Vec<RandPair> = (0..spec.p * spec.q)
+                .map(|_| lfsr.draw_pair())
+                .collect();
+            tb.run_wave(&s, &rand, &params);
+        }
+        let p = wire_power_uw(
+            &nl2,
+            tb.activity(),
+            &wires,
+            wet.min_clock_ps,
+        );
+        assert!(p > 0.0, "wire power {p}");
+        // Wire power halves when the clock period doubles (same
+        // charge over twice the time).
+        let p2 = wire_power_uw(
+            &nl2,
+            tb.activity(),
+            &wires,
+            wet.min_clock_ps * 2.0,
+        );
+        assert!((p2 * 2.0 - p).abs() < 1e-9 * p);
+    }
+}

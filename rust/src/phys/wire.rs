@@ -1,0 +1,212 @@
+//! Placement-driven wire model: per-net HPWL → capacitance,
+//! resistance, and Elmore-style delay.
+//!
+//! Each net's routed length is estimated as its half-perimeter
+//! wirelength over the placed instance terminals (the standard
+//! pre-route estimator).  The technology's [`WireParams`] then give:
+//!
+//! * `cap_ff = hpwl_mm × cap_ff_per_mm` — the physical load the net
+//!   adds (reported per net and in total);
+//! * `energy_fj = hpwl_mm × energy_fj_per_mm` — switching energy per
+//!   output toggle in the library's fitted energy scale (consumed by
+//!   [`super::ppa_hooks::wire_power_uw`]);
+//! * `delay_ps = hpwl_mm × delay_ps_per_mm + 0.345 × R_wire × C_wire`
+//!   — a linear driver-loading term plus the distributed-RC Elmore
+//!   term (`0.69 × R × C / 2`, Ω·fF = 10⁻³ ps), consumed by the
+//!   wire-aware STA ([`crate::ppa::timing::analyze_with_wire`]).
+//!
+//! Tie-cell constant nets are excluded throughout (see
+//! [`super::place::net_instances`]); the per-net terminal lists are
+//! computed once by the placer and reused here
+//! ([`super::place::Placement::net_pins`]).
+
+use crate::tech::WireParams;
+
+use super::place::{net_bbox, Placement};
+
+/// Wire quantities for one net.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NetWire {
+    /// Half-perimeter wirelength (mm).
+    pub hpwl_mm: f64,
+    /// Wire capacitance (fF).
+    pub cap_ff: f64,
+    /// Wire resistance (Ω).
+    pub res_ohm: f64,
+    /// Switching energy per driver toggle (fJ, fitted scale).
+    pub energy_fj: f64,
+    /// Elmore-style wire delay added after the driving cell (ps).
+    pub delay_ps: f64,
+}
+
+/// The extracted wire model of one placed netlist.
+#[derive(Debug, Clone)]
+pub struct WireModel {
+    /// Per-net quantities, indexed by `NetId`.
+    pub nets: Vec<NetWire>,
+    /// Σ HPWL (mm).
+    pub total_hpwl_mm: f64,
+    /// Σ wire capacitance (fF).
+    pub total_cap_ff: f64,
+    /// The wire parameters used.
+    pub params: WireParams,
+}
+
+impl WireModel {
+    /// Per-net wire delay vector (ps), the STA input.
+    pub fn net_delay_ps(&self) -> Vec<f64> {
+        self.nets.iter().map(|n| n.delay_ps).collect()
+    }
+}
+
+/// Extract the wire model from a placement.
+pub fn extract(pl: &Placement, params: &WireParams) -> WireModel {
+    let mut nets = Vec::with_capacity(pl.net_pins.len());
+    let mut total_hpwl = 0.0f64;
+    let mut total_cap = 0.0f64;
+    for p in &pl.net_pins {
+        let Some((x0, x1, y0, y1)) = net_bbox(p, &pl.x_um, &pl.y_um)
+        else {
+            nets.push(NetWire::default());
+            continue;
+        };
+        let hpwl_mm = ((x1 - x0) + (y1 - y0)) * 1e-3;
+        let cap_ff = hpwl_mm * params.cap_ff_per_mm;
+        let res_ohm = hpwl_mm * params.res_ohm_per_mm;
+        let energy_fj = hpwl_mm * params.energy_fj_per_mm;
+        let delay_ps = hpwl_mm * params.delay_ps_per_mm
+            + 0.345 * res_ohm * cap_ff * 1e-3;
+        total_hpwl += hpwl_mm;
+        total_cap += cap_ff;
+        nets.push(NetWire {
+            hpwl_mm,
+            cap_ff,
+            res_ohm,
+            energy_fj,
+            delay_ps,
+        });
+    }
+    WireModel {
+        nets,
+        total_hpwl_mm: total_hpwl,
+        total_cap_ff: total_cap,
+        params: *params,
+    }
+}
+
+/// Routing-congestion estimate: a `g × g` grid over the die where
+/// each bin counts the net bounding boxes overlapping it (row-major,
+/// bottom-left first).  The histogram the `place` stage dumps.
+pub fn congestion_map(pl: &Placement, g: usize) -> Vec<u64> {
+    let g = g.max(1);
+    let mut bins = vec![0u64; g * g];
+    let (dw, dh) =
+        (pl.floorplan.die_w_um, pl.floorplan.die_h_um);
+    if dw <= 0.0 || dh <= 0.0 {
+        return bins;
+    }
+    let clamp = |v: f64, n: usize| -> usize {
+        (v.max(0.0) as usize).min(n - 1)
+    };
+    for p in &pl.net_pins {
+        let Some((x0, x1, y0, y1)) = net_bbox(p, &pl.x_um, &pl.y_um)
+        else {
+            continue;
+        };
+        let bx0 = clamp(x0 / dw * g as f64, g);
+        let bx1 = clamp(x1 / dw * g as f64, g);
+        let by0 = clamp(y0 / dh * g as f64, g);
+        let by1 = clamp(y1 / dh * g as f64, g);
+        for by in by0..=by1 {
+            for bx in bx0..=bx1 {
+                bins[by * g + bx] += 1;
+            }
+        }
+    }
+    bins
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::{Library, TechParams};
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::Flavor;
+    use crate::phys::floorplan::FloorplanSpec;
+    use crate::phys::place::{place, PlacerConfig};
+
+    fn placed() -> Placement {
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let spec = ColumnSpec { p: 6, q: 3, theta: 9 };
+        let (nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let fspec = FloorplanSpec::new(
+            0.7,
+            1.0,
+            &crate::tech::WireParams::asap7(),
+        );
+        place(&nl, &lib, &tech, &fspec, &PlacerConfig::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn extraction_scales_with_wire_params() {
+        let pl = placed();
+        let w7 = extract(&pl, &crate::tech::WireParams::asap7());
+        assert!(w7.total_hpwl_mm > 0.0);
+        assert!(w7.total_cap_ff > 0.0);
+        assert!(
+            (w7.total_cap_ff
+                - w7.total_hpwl_mm * w7.params.cap_ff_per_mm)
+                .abs()
+                < 1e-9
+        );
+        // Same placement, 45nm wire stack: same HPWL, different RC.
+        let w45 = extract(&pl, &crate::tech::WireParams::n45());
+        assert!(
+            (w45.total_hpwl_mm - w7.total_hpwl_mm).abs() < 1e-12
+        );
+        assert!(w45.total_cap_ff > w7.total_cap_ff);
+        // Per-net delays are finite and non-negative.
+        for n in &w7.nets {
+            assert!(n.delay_ps >= 0.0 && n.delay_ps.is_finite());
+        }
+    }
+
+    #[test]
+    fn two_terminal_net_is_exact() {
+        let pl = placed();
+        let w = extract(&pl, &crate::tech::WireParams::asap7());
+        let net = pl
+            .net_pins
+            .iter()
+            .position(|p| p.len() == 2)
+            .expect("a 2-terminal net exists");
+        let (a, b) = (
+            pl.net_pins[net][0] as usize,
+            pl.net_pins[net][1] as usize,
+        );
+        let manual = ((pl.x_um[a] - pl.x_um[b]).abs()
+            + (pl.y_um[a] - pl.y_um[b]).abs())
+            * 1e-3;
+        assert!((w.nets[net].hpwl_mm - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn congestion_counts_every_multi_terminal_net() {
+        let pl = placed();
+        let routed = pl
+            .net_pins
+            .iter()
+            .filter(|p| p.len() >= 2)
+            .count() as u64;
+        // On a 1x1 grid every routed net lands in the single bin.
+        let one = congestion_map(&pl, 1);
+        assert_eq!(one, vec![routed]);
+        // Finer grid: total count only grows (bbox spans bins).
+        let g8 = congestion_map(&pl, 8);
+        assert_eq!(g8.len(), 64);
+        assert!(g8.iter().sum::<u64>() >= routed);
+        assert!(g8.iter().any(|&c| c > 0));
+    }
+}

@@ -19,12 +19,17 @@ pub struct PowerReport {
     pub dynamic_uw: f64,
     pub clock_uw: f64,
     pub leakage_uw: f64,
+    /// Wire switching power, attributed by the physical-design model
+    /// ([`crate::phys::ppa_hooks::wire_power_uw`]).  Zero unless the
+    /// flow ran its `place` stage — the census-only path has no wire
+    /// information.
+    pub wire_uw: f64,
 }
 
 impl PowerReport {
     /// Total power in µW.
     pub fn total_uw(&self) -> f64 {
-        self.dynamic_uw + self.clock_uw + self.leakage_uw
+        self.dynamic_uw + self.clock_uw + self.leakage_uw + self.wire_uw
     }
 }
 
@@ -87,6 +92,7 @@ pub fn analyze(
         dynamic_uw: dyn_fj * 1e-9 / t_sim_s,
         clock_uw: clk_fj * 1e-9 / t_sim_s,
         leakage_uw: leak_nw * 1e-3,
+        wire_uw: 0.0,
     }
 }
 

@@ -30,8 +30,35 @@ pub struct TimingReport {
     pub n_instances: usize,
 }
 
-/// Run STA on `nl`.
+/// Run STA on `nl` with zero wire delay (the pre-placement estimate).
 pub fn analyze(nl: &Netlist, lib: &Library, tech: &TechParams) -> Result<TimingReport> {
+    analyze_impl(nl, lib, tech, None)
+}
+
+/// Wire-aware STA: `wire_ps[net]` is added to the arrival of every net
+/// after its driving cell (the Elmore-style term the physical-design
+/// model extracts from a placement — [`crate::phys::wire`]).  With an
+/// all-zero vector this is exactly [`analyze`].
+pub fn analyze_with_wire(
+    nl: &Netlist,
+    lib: &Library,
+    tech: &TechParams,
+    wire_ps: &[f64],
+) -> Result<TimingReport> {
+    assert_eq!(
+        wire_ps.len(),
+        nl.n_nets(),
+        "one wire delay per net required"
+    );
+    analyze_impl(nl, lib, tech, Some(wire_ps))
+}
+
+fn analyze_impl(
+    nl: &Netlist,
+    lib: &Library,
+    tech: &TechParams,
+    wire_ps: Option<&[f64]>,
+) -> Result<TimingReport> {
     let order = levelize(nl, lib)?;
     let mut arrival = vec![0.0f64; nl.n_nets()];
     // Pass 1: propagate arrivals in level order (primary inputs at t=0,
@@ -50,7 +77,8 @@ pub fn analyze(nl: &Netlist, lib: &Library, tech: &TechParams) -> Result<TimingR
         }
         let t_out = t_in + tech.delay_ps(cell);
         for &o in nl.inst_outs(i) {
-            arrival[o.0 as usize] = t_out;
+            arrival[o.0 as usize] = t_out
+                + wire_ps.map_or(0.0, |w| w[o.0 as usize]);
         }
     }
     // Pass 2: sequential endpoints.  Levelization orders seq cells as
@@ -157,6 +185,25 @@ mod tests {
             );
             last = r.min_clock_ps;
         }
+    }
+
+    #[test]
+    fn zero_wire_matches_plain_analysis() {
+        use crate::netlist::column::{build_column, ColumnSpec};
+        use crate::netlist::Flavor;
+        let lib = Library::with_macros();
+        let tech = TechParams::calibrated();
+        let spec = ColumnSpec::benchmark(8, 4);
+        let (nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        let dry = analyze(&nl, &lib, &tech).unwrap();
+        let zero = vec![0.0f64; nl.n_nets()];
+        let wet = analyze_with_wire(&nl, &lib, &tech, &zero).unwrap();
+        assert_eq!(dry.min_clock_ps, wet.min_clock_ps);
+        assert_eq!(dry.crit_endpoint, wet.crit_endpoint);
+        // Uniform positive wire delay can only lengthen the path.
+        let ones = vec![1.0f64; nl.n_nets()];
+        let slow = analyze_with_wire(&nl, &lib, &tech, &ones).unwrap();
+        assert!(slow.min_clock_ps > dry.min_clock_ps);
     }
 
     #[test]

@@ -133,6 +133,14 @@ impl TechBackend for ProjectedBackend {
         Some(self.scaling)
     }
 
+    /// Wire RC of the *reporting* node: the placement runs on the
+    /// native library's cell geometry, but the wire stack (row height,
+    /// RC per mm, energy/delay slopes) is the projected node's — the
+    /// first-order cross-node model DESIGN.md §10 describes.
+    fn wire_params(&self) -> super::WireParams {
+        super::WireParams::n45()
+    }
+
     /// Apply the scaling factors exactly as the pre-refactor 45nm
     /// target node did (same factors, same operation order), so
     /// projected reports stay bit-identical across the redesign.

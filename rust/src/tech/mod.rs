@@ -113,6 +113,60 @@ impl fmt::Display for BackendId {
     }
 }
 
+/// Per-node wire and row geometry parameters — the physical-design
+/// substrate [`crate::phys`] pulls from a backend (floorplan row
+/// height, wire RC, and the wire-energy/delay slopes the placed-design
+/// PPA corrections use).
+///
+/// Lengths are in mm so the per-net half-perimeter wirelengths the
+/// placer produces multiply in directly.  `energy_fj_per_mm` is
+/// expressed in the same *fitted* energy scale as the cell library
+/// (the calibrated constants absorb the paper's post-layout wiring, so
+/// the wire term is a differential attribution, not an independent
+/// physical extraction — DESIGN.md §10).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireParams {
+    /// Standard-cell row height (µm) — sets the floorplan row grid and
+    /// converts cell areas to placement widths.
+    pub row_height_um: f64,
+    /// Physical wire capacitance per mm of routed net (fF/mm).
+    pub cap_ff_per_mm: f64,
+    /// Physical wire resistance per mm of routed net (Ω/mm).
+    pub res_ohm_per_mm: f64,
+    /// Wire switching energy per output toggle per mm of net, in the
+    /// library's fitted energy scale (fJ/mm).
+    pub energy_fj_per_mm: f64,
+    /// Driver-loading delay slope: extra driver delay per mm of driven
+    /// net (ps/mm), the linear term of the Elmore model.
+    pub delay_ps_per_mm: f64,
+}
+
+impl WireParams {
+    /// 7nm (ASAP7-like) wire stack: 270nm rows (7.5-track), fine-pitch
+    /// high-resistance metal.
+    pub fn asap7() -> WireParams {
+        WireParams {
+            row_height_um: 0.27,
+            cap_ff_per_mm: 200.0,
+            res_ohm_per_mm: 40_000.0,
+            energy_fj_per_mm: 0.40,
+            delay_ps_per_mm: 800.0,
+        }
+    }
+
+    /// 45nm wire stack: tall rows, fatter/less-resistive wires, more
+    /// capacitance and a slower driver-loading slope per mm.
+    pub fn n45() -> WireParams {
+        WireParams {
+            row_height_um: 1.40,
+            cap_ff_per_mm: 240.0,
+            res_ohm_per_mm: 2_500.0,
+            energy_fj_per_mm: 0.90,
+            delay_ps_per_mm: 1_600.0,
+        }
+    }
+}
+
 /// A technology backend: one characterized cell library plus the
 /// metadata and projection needed to report PPA in its node.
 ///
@@ -135,6 +189,14 @@ pub trait TechBackend: Send + Sync {
     /// The technology scale constants mapping the library's relative
     /// quantities to absolute µm² / fJ / nW / ps.
     fn params(&self) -> &TechParams;
+
+    /// Wire and row parameters for the physical-design model
+    /// ([`crate::phys`]).  Defaults to the 7nm ASAP7-like stack;
+    /// backends reporting in another node override this so asap7 vs
+    /// n45-projected see different wire RC.
+    fn wire_params(&self) -> WireParams {
+        WireParams::asap7()
+    }
 
     /// The node-scaling model behind [`TechBackend::project`], if this
     /// backend reports in a different node than it measures in.
@@ -212,6 +274,11 @@ impl TechContext {
         self.backend.params()
     }
 
+    /// The backend's wire/row parameters (physical-design model).
+    pub fn wire_params(&self) -> WireParams {
+        self.backend.wire_params()
+    }
+
     /// The backend's node-scaling model, if any.
     pub fn scaling(&self) -> Option<NodeScaling> {
         self.backend.scaling()
@@ -265,6 +332,22 @@ mod tests {
         assert_eq!(ctx.name(), ASAP7_TNN7);
         assert_eq!(ctx.node_label(), "7nm");
         assert!(ctx.scaling().is_none());
+    }
+
+    #[test]
+    fn wire_params_differ_per_node() {
+        let native = TechContext::new(asap7_tnn7());
+        assert_eq!(native.wire_params(), WireParams::asap7());
+        let n45 = TechContext::new(n45_projected(native.clone()));
+        assert_eq!(n45.wire_params(), WireParams::n45());
+        assert!(
+            n45.wire_params().row_height_um
+                > native.wire_params().row_height_um
+        );
+        assert!(
+            n45.wire_params().res_ohm_per_mm
+                < native.wire_params().res_ohm_per_mm
+        );
     }
 
     #[test]

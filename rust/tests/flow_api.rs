@@ -49,20 +49,22 @@ fn golden_stage_dump_snapshot_tiny_column() {
     let _ = std::fs::remove_dir_all(&dir);
 
     let mut ctx = tiny_ctx();
-    let flow = Flow::from_spec("elaborate,sta,sim,ppa")
+    let flow = Flow::from_spec("elaborate,sta,place,sim,ppa")
         .unwrap()
         .dump_dir(&dir);
     flow.run(&mut ctx).unwrap();
 
     // One artifact per stage, in pipeline order, carrying the backend
     // name so multi-technology sweeps into one directory never collide.
+    // The place stage slots into the same NN_stage.BACKEND.json scheme.
     let expected = [
         "00_elaborate.asap7-tnn7.json",
         "01_sta.asap7-tnn7.json",
-        "02_simulate.asap7-tnn7.json",
-        "03_power.asap7-tnn7.json",
-        "04_area.asap7-tnn7.json",
-        "05_report.asap7-tnn7.json",
+        "02_place.asap7-tnn7.json",
+        "03_simulate.asap7-tnn7.json",
+        "04_power.asap7-tnn7.json",
+        "05_area.asap7-tnn7.json",
+        "06_report.asap7-tnn7.json",
     ];
     let mut names: Vec<String> = std::fs::read_dir(&dir)
         .unwrap()
@@ -96,37 +98,71 @@ fn golden_stage_dump_snapshot_tiny_column() {
     // 01_sta: positive clock and wave time.
     let j = read("01_sta.asap7-tnn7.json");
     let u = &j.field("units").unwrap().as_arr().unwrap()[0];
-    assert!(u.field("min_clock_ps").unwrap().as_f64().unwrap() > 0.0);
+    let dry_clock = u.field("min_clock_ps").unwrap().as_f64().unwrap();
+    assert!(dry_clock > 0.0);
     assert!(u.field("wave_ns").unwrap().as_f64().unwrap() > 0.0);
 
-    // 02_simulate: two waves of activity were recorded.
-    let j = read("02_simulate.asap7-tnn7.json");
+    // 02_place: die dims, HPWL, congestion histogram, wire-aware clock.
+    let j = read("02_place.asap7-tnn7.json");
+    assert_eq!(j.field("stage").unwrap().as_str().unwrap(), "place");
+    assert!(j.field("util").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.field("aspect").unwrap().as_f64().unwrap() > 0.0);
+    let u = &j.field("units").unwrap().as_arr().unwrap()[0];
+    let die_w = u.field("die_w_um").unwrap().as_f64().unwrap();
+    let die_h = u.field("die_h_um").unwrap().as_f64().unwrap();
+    let die_mm2 = u.field("die_mm2").unwrap().as_f64().unwrap();
+    assert!(die_w > 0.0 && die_h > 0.0);
+    assert!((die_mm2 - die_w * die_h * 1e-6).abs() < 1e-12);
+    assert!(u.field("rows").unwrap().as_usize().unwrap() > 0);
+    assert!(u.field("hpwl_mm").unwrap().as_f64().unwrap() > 0.0);
+    let wet_clock =
+        u.field("wire_min_clock_ps").unwrap().as_f64().unwrap();
+    assert!(wet_clock > dry_clock, "wire delay must slow the clock");
+    let cong = u.field("congestion").unwrap();
+    let bins = cong.field("bins").unwrap().as_usize().unwrap();
+    let counts = cong.field("counts").unwrap().as_arr().unwrap();
+    assert_eq!(counts.len(), bins * bins);
+    assert!(cong.field("max").unwrap().as_usize().unwrap() > 0);
+
+    // 03_simulate: two waves of activity were recorded.
+    let j = read("03_simulate.asap7-tnn7.json");
     assert_eq!(j.field("waves").unwrap().as_usize().unwrap(), 2);
     let u = &j.field("units").unwrap().as_arr().unwrap()[0];
     assert!(u.field("cycles").unwrap().as_usize().unwrap() > 0);
     assert!(u.field("toggles").unwrap().as_usize().unwrap() > 0);
 
-    // 03_power: the split adds up to the total.
-    let j = read("03_power.asap7-tnn7.json");
+    // 04_power: the split (wire included) adds up to the total.
+    let j = read("04_power.asap7-tnn7.json");
     let u = &j.field("units").unwrap().as_arr().unwrap()[0];
     let total = u.field("total_uw").unwrap().as_f64().unwrap();
+    let wire_uw = u.field("wire_uw").unwrap().as_f64().unwrap();
     let parts = u.field("dynamic_uw").unwrap().as_f64().unwrap()
         + u.field("clock_uw").unwrap().as_f64().unwrap()
-        + u.field("leakage_uw").unwrap().as_f64().unwrap();
+        + u.field("leakage_uw").unwrap().as_f64().unwrap()
+        + wire_uw;
     assert!(total > 0.0);
+    assert!(wire_uw > 0.0, "placed run must attribute wire power");
     assert!((total - parts).abs() < 1e-9 * total.max(1.0));
 
-    // 04_area: die area is positive and larger than zero cell area.
-    let j = read("04_area.asap7-tnn7.json");
+    // 05_area: the placed die outline (matches the place artifact).
+    let j = read("05_area.asap7-tnn7.json");
     let u = &j.field("units").unwrap().as_arr().unwrap()[0];
     assert!(u.field("cell_um2").unwrap().as_f64().unwrap() > 0.0);
-    assert!(u.field("die_mm2").unwrap().as_f64().unwrap() > 0.0);
+    let area_die = u.field("die_mm2").unwrap().as_f64().unwrap();
+    assert!((area_die - die_mm2).abs() < 1e-15);
 
-    // 05_report: composed totals present, tagged with backend + node.
-    let j = read("05_report.asap7-tnn7.json");
+    // 06_report: composed totals present, tagged with backend + node,
+    // with the per-unit physical summary.
+    let j = read("06_report.asap7-tnn7.json");
     assert_eq!(j.field("stage").unwrap().as_str().unwrap(), "report");
     assert_eq!(j.field("tech").unwrap().as_str().unwrap(), "asap7-tnn7");
     assert_eq!(j.field("node").unwrap().as_str().unwrap(), "7nm");
+    let u = &j.field("units").unwrap().as_arr().unwrap()[0];
+    let placed = u.field("placed").unwrap();
+    assert!((placed.field("die_w_um").unwrap().as_f64().unwrap() - die_w)
+        .abs()
+        < 1e-12);
+    assert!(placed.field("hpwl_mm").unwrap().as_f64().unwrap() > 0.0);
     let total = j.field("total").unwrap();
     assert!(total.field("power_uw").unwrap().as_f64().unwrap() > 0.0);
     assert!(total.field("time_ns").unwrap().as_f64().unwrap() > 0.0);

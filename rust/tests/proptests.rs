@@ -551,6 +551,123 @@ fn prop_lfsr_fairness() {
     }
 }
 
+/// INVARIANT: for random column netlists (both flavours), the seeded
+/// placer always produces a legal placement — no cell overlaps,
+/// row-aligned y coordinates, every cell in-bounds inside a usable row
+/// span — and a strictly positive wirelength.
+#[test]
+fn prop_placement_legal_random_columns() {
+    use tnn7::phys::place::{place, PlacerConfig};
+    use tnn7::phys::FloorplanSpec;
+    use tnn7::tech::WireParams;
+    let lib = Library::with_macros();
+    let tech = tnn7::cells::TechParams::calibrated();
+    for seed in 0..6u64 {
+        let mut r = rng(seed * 733 + 11);
+        let p = 2 + (r.next_u64() % 8) as usize;
+        let q = 1 + (r.next_u64() % 5) as usize;
+        let spec = ColumnSpec { p, q, theta: (p + q) as u64 };
+        // Random-but-valid floorplan knobs.
+        let util = 0.5 + (r.next_u64() % 5) as f64 * 0.1; // 0.5..0.9
+        let aspect = 0.5 + (r.next_u64() % 8) as f64 * 0.5; // 0.5..4.0
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let (nl, _) = build_column(&lib, flavor, &spec).unwrap();
+            let fspec = FloorplanSpec::new(
+                util,
+                aspect,
+                &WireParams::asap7(),
+            );
+            let pl = place(
+                &nl,
+                &lib,
+                &tech,
+                &fspec,
+                &PlacerConfig { seed, ..PlacerConfig::default() },
+            )
+            .unwrap();
+            pl.validate().unwrap_or_else(|e| {
+                panic!("seed {seed} {flavor:?} p{p} q{q}: {e}")
+            });
+            assert!(pl.hpwl_um > 0.0, "seed {seed} {flavor:?}");
+            assert_eq!(pl.x_um.len(), nl.insts.len());
+        }
+    }
+}
+
+/// INVARIANT: placement is deterministic — the same seed produces a
+/// bit-identical placement (coordinates, row assignment, HPWL).
+#[test]
+fn prop_placement_deterministic_same_seed() {
+    use tnn7::phys::place::{place, PlacerConfig};
+    use tnn7::phys::FloorplanSpec;
+    use tnn7::tech::WireParams;
+    let lib = Library::with_macros();
+    let tech = tnn7::cells::TechParams::calibrated();
+    let spec = ColumnSpec { p: 7, q: 3, theta: 10 };
+    let (nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+    let fspec = FloorplanSpec::new(0.7, 1.0, &WireParams::asap7());
+    for seed in [1u64, 17, 0xDEAD] {
+        let cfg = PlacerConfig { seed, ..PlacerConfig::default() };
+        let a = place(&nl, &lib, &tech, &fspec, &cfg).unwrap();
+        let b = place(&nl, &lib, &tech, &fspec, &cfg).unwrap();
+        let bits =
+            |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.x_um), bits(&b.x_um), "seed {seed}");
+        assert_eq!(bits(&a.y_um), bits(&b.y_um), "seed {seed}");
+        assert_eq!(a.row_of, b.row_of, "seed {seed}");
+        assert_eq!(
+            a.hpwl_um.to_bits(),
+            b.hpwl_um.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(bits(&a.pass_hpwl_um), bits(&b.pass_hpwl_um));
+    }
+}
+
+/// INVARIANT: greedy refinement never increases HPWL — the recorded
+/// per-pass trace is non-increasing from the initial placement on.
+#[test]
+fn prop_placement_hpwl_never_increases() {
+    use tnn7::phys::place::{place, PlacerConfig};
+    use tnn7::phys::FloorplanSpec;
+    use tnn7::tech::WireParams;
+    let lib = Library::with_macros();
+    let tech = tnn7::cells::TechParams::calibrated();
+    for seed in 0..5u64 {
+        let mut r = rng(seed + 4242);
+        let p = 3 + (r.next_u64() % 6) as usize;
+        let q = 2 + (r.next_u64() % 4) as usize;
+        let spec = ColumnSpec { p, q, theta: (2 * p) as u64 };
+        let (nl, _) = build_column(&lib, Flavor::Std, &spec).unwrap();
+        let fspec =
+            FloorplanSpec::new(0.7, 1.0, &WireParams::asap7());
+        let pl = place(
+            &nl,
+            &lib,
+            &tech,
+            &fspec,
+            &PlacerConfig {
+                seed,
+                passes: 4,
+                ..PlacerConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(pl.pass_hpwl_um.len(), 5);
+        for w in pl.pass_hpwl_um.windows(2) {
+            assert!(
+                w[1] <= w[0] + 1e-9,
+                "seed {seed}: HPWL increased {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+        assert!(
+            (pl.hpwl_um - pl.pass_hpwl_um.last().unwrap()).abs() < 1e-9
+        );
+    }
+}
+
 /// INVARIANT: PPA is monotone in column size (more synapses never cost
 /// less area or leakage).
 #[test]
