@@ -1,0 +1,143 @@
+//! Bench: `tnn7 serve` request throughput, cold vs warm, plus dedup
+//! effectiveness under concurrent duplicate load.
+//!
+//! Spawns the daemon in-process on an ephemeral port and drives it
+//! with the same one-shot HTTP client the integration tests use:
+//!
+//! 1. **cold** — distinct design points (every request misses the
+//!    cache and runs the full pipeline);
+//! 2. **warm** — the same design point repeated (every request is
+//!    `executed=0`, served from the memory tier);
+//! 3. **dedup** — N concurrent identical requests against a
+//!    slowed-down leader, measuring how many computations were saved.
+//!
+//! Writes the machine-readable `BENCH_serve.json` (req/sec per mode,
+//! warm/cold speedup, dedup join count) so CI tracks the serving-path
+//! perf trajectory across PRs.
+//!
+//! Run: cargo bench --bench serve_throughput [-- --smoke]
+
+use std::time::Instant;
+
+use tnn7::runtime::json::Json;
+use tnn7::serve::http::fetch;
+use tnn7::serve::{ServeConfig, Server};
+
+fn flow_body(p: usize, q: usize, waves: usize) -> String {
+    format!(
+        r#"{{"target": "custom", "col": "{p}x{q}", "waves": {waves}}}"#
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // Smoke mode keeps CI fast; the full run uses bigger columns and
+    // more repeats for stabler means.
+    let (cold_points, warm_reps, waves): (usize, usize, usize) =
+        if smoke { (4, 20, 2) } else { (8, 200, 8) };
+
+    let handle = Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 4,
+        queue: 256,
+        ..ServeConfig::default()
+    })
+    .expect("bench server");
+    let addr = handle.addr();
+
+    // 1. Cold: distinct geometries, every request a full pipeline.
+    let t0 = Instant::now();
+    for i in 0..cold_points {
+        let r = fetch(addr, "POST", "/flow", &flow_body(8 + i, 4, waves))
+            .expect("cold request");
+        assert_eq!(r.status, 200, "cold: {}", r.body);
+    }
+    let cold_s = t0.elapsed().as_secs_f64();
+    let cold_rps = cold_points as f64 / cold_s;
+    println!(
+        "bench serve/cold   {cold_points:>4} reqs  {cold_s:>8.3} s  \
+         {cold_rps:>10.1} req/s"
+    );
+
+    // 2. Warm: one of the now-cached points, repeated.
+    let warm_body = flow_body(8, 4, waves);
+    let t0 = Instant::now();
+    for _ in 0..warm_reps {
+        let r = fetch(addr, "POST", "/flow", &warm_body)
+            .expect("warm request");
+        assert_eq!(r.status, 200);
+        assert_eq!(
+            r.header("X-Tnn7-Cache").map(|h| h.starts_with("executed=0")),
+            Some(true),
+            "warm requests must be all-cache"
+        );
+    }
+    let warm_s = t0.elapsed().as_secs_f64();
+    let warm_rps = warm_reps as f64 / warm_s;
+    println!(
+        "bench serve/warm   {warm_reps:>4} reqs  {warm_s:>8.3} s  \
+         {warm_rps:>10.1} req/s"
+    );
+    println!(
+        "      warm serving is {:.1}x the cold request rate",
+        warm_rps / cold_rps
+    );
+    handle.shutdown();
+    handle.join();
+
+    // 3. Dedup: a fresh (cold-cache) server whose leader holds each
+    //    flow briefly, hammered with concurrent identical requests.
+    let handle = Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 8,
+        queue: 256,
+        debug_flow_delay_ms: 200,
+        ..ServeConfig::default()
+    })
+    .expect("dedup server");
+    let addr = handle.addr();
+    let dup_clients = if smoke { 6 } else { 16 };
+    let body = flow_body(9, 4, waves);
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..dup_clients)
+        .map(|_| {
+            let body = body.clone();
+            std::thread::spawn(move || {
+                fetch(addr, "POST", "/flow", &body).expect("dedup request")
+            })
+        })
+        .collect();
+    let responses: Vec<_> =
+        joins.into_iter().map(|t| t.join().unwrap()).collect();
+    let dedup_s = t0.elapsed().as_secs_f64();
+    let joined = responses
+        .iter()
+        .filter(|r| r.header("X-Tnn7-Dedup") == Some("joined"))
+        .count();
+    for r in &responses {
+        assert_eq!(r.status, 200);
+    }
+    println!(
+        "bench serve/dedup  {dup_clients:>4} concurrent duplicates  \
+         {dedup_s:>8.3} s  {joined} joined one leader"
+    );
+    handle.shutdown();
+    handle.join();
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        ("waves", Json::int(waves as u64)),
+        ("cold_requests", Json::int(cold_points as u64)),
+        ("cold_req_per_s", Json::num(cold_rps)),
+        ("warm_requests", Json::int(warm_reps as u64)),
+        ("warm_req_per_s", Json::num(warm_rps)),
+        ("warm_speedup", Json::num(warm_rps / cold_rps)),
+        ("dedup_clients", Json::int(dup_clients as u64)),
+        ("dedup_joined", Json::int(joined as u64)),
+        ("dedup_wall_s", Json::num(dedup_s)),
+    ]);
+    std::fs::write("BENCH_serve.json", out.to_string_pretty())?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}

@@ -154,6 +154,19 @@ pub struct TnnConfig {
     pub place_aspect: f64,
     /// Placement RNG seed — same seed ⇒ bit-identical placement.
     pub place_seed: u64,
+    /// `tnn7 serve` bind address.
+    pub serve_addr: String,
+    /// Daemon worker threads (each runs one flow at a time).
+    pub serve_threads: usize,
+    /// Bounded request queue depth; overflow answers 503.
+    pub serve_queue: usize,
+    /// Enable the content-addressed stage cache for batch `tnn7 flow`
+    /// runs (the daemon always caches; DESIGN.md §11).
+    pub cache_enabled: bool,
+    /// Disk tier directory ("" = memory tier only).
+    pub cache_dir: String,
+    /// Memory-tier capacity in stage snapshots (LRU beyond this).
+    pub cache_mem_entries: usize,
 }
 
 impl Default for TnnConfig {
@@ -178,6 +191,12 @@ impl Default for TnnConfig {
             place_util: 0.70,
             place_aspect: 1.0,
             place_seed: 1,
+            serve_addr: "127.0.0.1:7411".into(),
+            serve_threads: 4,
+            serve_queue: 64,
+            cache_enabled: false,
+            cache_dir: String::new(),
+            cache_mem_entries: 256,
         }
     }
 }
@@ -215,6 +234,8 @@ impl TnnConfig {
                 "place",
                 &["enabled", "utilization", "aspect", "seed"],
             ),
+            ("serve", &["addr", "threads", "queue"]),
+            ("cache", &["enabled", "dir", "mem_entries"]),
         ])?;
         let mut c = TnnConfig::default();
         let geti = |v: &Value| -> Result<i64> {
@@ -327,6 +348,63 @@ impl TnnConfig {
             }
             c.place_seed = s as u64;
         }
+        if let Some(v) = t.get("serve", "addr") {
+            match v {
+                Value::Str(s) => c.serve_addr = s.clone(),
+                _ => {
+                    return Err(Error::config(
+                        "serve.addr must be a string",
+                    ))
+                }
+            }
+        }
+        if let Some(v) = t.get("serve", "threads") {
+            let n = geti(v)?;
+            if n < 1 {
+                return Err(Error::config(format!(
+                    "serve.threads must be >= 1, got {n}"
+                )));
+            }
+            c.serve_threads = n as usize;
+        }
+        if let Some(v) = t.get("serve", "queue") {
+            let n = geti(v)?;
+            if n < 1 {
+                return Err(Error::config(format!(
+                    "serve.queue must be >= 1, got {n}"
+                )));
+            }
+            c.serve_queue = n as usize;
+        }
+        if let Some(v) = t.get("cache", "enabled") {
+            match v {
+                Value::Bool(b) => c.cache_enabled = *b,
+                _ => {
+                    return Err(Error::config(
+                        "cache.enabled must be a boolean",
+                    ))
+                }
+            }
+        }
+        if let Some(v) = t.get("cache", "dir") {
+            match v {
+                Value::Str(s) => c.cache_dir = s.clone(),
+                _ => {
+                    return Err(Error::config(
+                        "cache.dir must be a string",
+                    ))
+                }
+            }
+        }
+        if let Some(v) = t.get("cache", "mem_entries") {
+            let n = geti(v)?;
+            if n < 1 {
+                return Err(Error::config(format!(
+                    "cache.mem_entries must be >= 1, got {n}"
+                )));
+            }
+            c.cache_mem_entries = n as usize;
+        }
         Ok(c)
     }
 
@@ -428,6 +506,38 @@ sim_threads = 4
         assert!(TnnConfig::from_toml("[place]\naspect = -1.0").is_err());
         assert!(TnnConfig::from_toml("[place]\nseed = -4").is_err());
         assert!(TnnConfig::from_toml("[place]\nenabled = 3").is_err());
+    }
+
+    #[test]
+    fn parses_and_validates_serve_and_cache_sections() {
+        let c = TnnConfig::from_toml(
+            "[serve]\naddr = \"0.0.0.0:8080\"\nthreads = 2\nqueue = 16\n\
+             [cache]\nenabled = true\ndir = \"/tmp/tnn7-cache\"\nmem_entries = 32",
+        )
+        .unwrap();
+        assert_eq!(c.serve_addr, "0.0.0.0:8080");
+        assert_eq!(c.serve_threads, 2);
+        assert_eq!(c.serve_queue, 16);
+        assert!(c.cache_enabled);
+        assert_eq!(c.cache_dir, "/tmp/tnn7-cache");
+        assert_eq!(c.cache_mem_entries, 32);
+        // Defaults: local bind, cache off, memory tier only.
+        let d = TnnConfig::default();
+        assert_eq!(d.serve_addr, "127.0.0.1:7411");
+        assert_eq!(d.serve_threads, 4);
+        assert_eq!(d.serve_queue, 64);
+        assert!(!d.cache_enabled);
+        assert!(d.cache_dir.is_empty());
+        assert_eq!(d.cache_mem_entries, 256);
+        // Out-of-range values are rejected.
+        assert!(TnnConfig::from_toml("[serve]\nthreads = 0").is_err());
+        assert!(TnnConfig::from_toml("[serve]\nqueue = 0").is_err());
+        assert!(TnnConfig::from_toml("[serve]\naddr = 7411").is_err());
+        assert!(
+            TnnConfig::from_toml("[cache]\nmem_entries = 0").is_err()
+        );
+        assert!(TnnConfig::from_toml("[cache]\nenabled = 1").is_err());
+        assert!(TnnConfig::from_toml("[cache]\ndir = true").is_err());
     }
 
     #[test]

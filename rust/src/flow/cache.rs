@@ -1,0 +1,857 @@
+//! Content-addressed stage cache for the flow pipeline (DESIGN.md §11).
+//!
+//! Every stage output is addressed by a stable 64-bit key derived from
+//! everything that can change the output, and nothing that cannot:
+//!
+//! ```text
+//! K_elaborate = fnv("tnn7-cache-v1|stage=elaborate|tech=<fp>|target=<fp>|cfg=<subset>")
+//! K_stage     = fnv("tnn7-cache-v1|stage=<name>|tech=<fp>|nh=<netlist-hash>|cfg=<subset>|prev=<K_prev>")
+//! ```
+//!
+//! * `tech` is a fingerprint of the resolved technology backend — its
+//!   name, node, voltage, fitted [`crate::cells::TechParams`],
+//!   [`crate::tech::WireParams`], and every characterized cell — so a
+//!   `.lib` file whose contents changed can never alias a stale entry.
+//! * `nh` is a structural hash of the elaborated netlists
+//!   ([`netlist_hash`]), making downstream keys content-addressed
+//!   rather than merely config-addressed.
+//! * `cfg` is the *stage-relevant* config subset ([`config_subset`]):
+//!   the place stage keys on its floorplan/seed knobs, the simulate
+//!   stage on its stimulus/STDP knobs — and deliberately **not** on
+//!   `sim_lanes`/`sim_threads`, which are proven (proptests in
+//!   `rust/tests/proptests.rs`) to never change measured activity.
+//! * `prev` chains the keys, so a stage's key pins down its entire
+//!   upstream pipeline, including which optional stages (place) ran.
+//!
+//! Storage is two-tier.  The **memory tier** holds typed artifact
+//! snapshots ([`StageSnapshot`]) that restore directly into a
+//! [`FlowContext`], plus the canonical dump bytes; it is LRU-bounded.
+//! The **disk tier** stores only the dump bytes, in the existing
+//! `NN_stage.BACKEND.json` dump format under one directory per key, so
+//! a warm cache directory is also a browsable dump archive.  Disk
+//! entries cannot rebuild typed artifacts, so they are consulted only
+//! when the *entire* requested pipeline hits — the cross-process replay
+//! case — and otherwise execution fills the gaps while memory hits are
+//! still honored (see [`super::Flow::run_cached`]).
+//!
+//! All hashing is FNV-1a 64 over canonical byte strings (floats as
+//! IEEE-754 bit patterns) — deterministic across processes, platforms,
+//! and hash-map iteration orders.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data::Dataset;
+use crate::flow::{ElaboratedUnit, FlowContext, Target, TargetReport};
+use crate::phys::{Placement, WireModel};
+use crate::ppa::area::AreaReport;
+use crate::ppa::power::{PowerReport, RelPower};
+use crate::ppa::timing::TimingReport;
+use crate::runtime::json::Json;
+use crate::sim::Activity;
+use crate::tech::TechContext;
+
+/// Version tag mixed into every key: bump to invalidate all caches
+/// when key derivation or artifact semantics change.
+pub const KEY_VERSION: &str = "tnn7-cache-v1";
+
+/// Stage names the cache knows how to key and snapshot.  Pipelines
+/// containing any other stage bypass the cache entirely.
+pub const CACHEABLE_STAGES: [&str; 7] =
+    ["elaborate", "sta", "place", "simulate", "power", "area", "report"];
+
+// ---- FNV-1a 64 ------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over a byte string — the cache's one hash function.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a 64 writer (canonical byte encodings only).
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(FNV_OFFSET)
+    }
+    pub fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+    pub fn str(&mut self, s: &str) {
+        // Length-prefix so ("ab","c") never collides with ("a","bc").
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+    pub fn u8(&mut self, v: u8) {
+        self.bytes(&[v]);
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+// ---- fingerprints ---------------------------------------------------
+
+/// Fingerprint of a resolved technology backend: everything a stage
+/// can observe through its [`TechContext`] handle.
+pub fn tech_fingerprint(tech: &TechContext) -> u64 {
+    let mut h = Fnv::new();
+    h.str(tech.name());
+    h.str(tech.node_label());
+    h.f64(tech.voltage_v());
+    let p = tech.params();
+    h.f64(p.area_per_unit_um2);
+    h.f64(p.energy_per_unit_fj);
+    h.f64(p.leak_per_unit_nw);
+    h.f64(p.fo4_ps);
+    let w = tech.wire_params();
+    h.f64(w.row_height_um);
+    h.f64(w.cap_ff_per_mm);
+    h.f64(w.res_ohm_per_mm);
+    h.f64(w.energy_fj_per_mm);
+    h.f64(w.delay_ps_per_mm);
+    let lib = tech.library();
+    h.usize(lib.len());
+    for cell in lib.cells() {
+        h.str(&cell.name);
+        h.u32(cell.transistors);
+        h.f64(cell.rel_area);
+        h.f64(cell.rel_energy);
+        h.f64(cell.rel_leak);
+        h.f64(cell.rel_delay);
+        h.f64(cell.rel_setup);
+        h.u8(cell.is_custom_macro as u8);
+    }
+    h.finish()
+}
+
+/// Canonical descriptor of what the elaborate stage will build:
+/// flavour plus every unit's full geometry (p, q, theta, replicas).
+/// [`Target::describe`] omits theta, so it is not reused here.
+pub fn target_fingerprint(target: &Target) -> String {
+    let mut s = format!("{:?}", target.flavor);
+    for u in target.units() {
+        s.push_str(&format!(
+            ";{}x{}t{}r{}",
+            u.spec.p, u.spec.q, u.spec.theta, u.replicas
+        ));
+    }
+    s
+}
+
+/// Structural hash of the elaborated units — the `nh` component of
+/// every downstream key.  Covers unit plans, instance lists, pin
+/// connectivity, and I/O, so any change to elaboration output changes
+/// every downstream key.
+pub fn netlist_hash(units: &[ElaboratedUnit]) -> u64 {
+    let mut h = Fnv::new();
+    h.usize(units.len());
+    for u in units {
+        h.usize(u.plan.spec.p);
+        h.usize(u.plan.spec.q);
+        h.u64(u.plan.spec.theta);
+        h.u64(u.plan.replicas);
+        let nl = &u.netlist;
+        h.str(&nl.name);
+        h.usize(nl.n_nets());
+        h.u32(nl.const0.0);
+        h.u32(nl.const1.0);
+        h.usize(nl.inputs.len());
+        for n in &nl.inputs {
+            h.u32(n.0);
+        }
+        h.usize(nl.outputs.len());
+        for n in &nl.outputs {
+            h.u32(n.0);
+        }
+        h.usize(nl.insts.len());
+        for inst in &nl.insts {
+            h.usize(inst.cell);
+            h.u32(inst.pin_start);
+            h.u8(inst.n_ins);
+            h.u8(inst.n_outs);
+            h.u8(inst.domain as u8);
+        }
+        h.usize(nl.pins.len());
+        for n in &nl.pins {
+            h.u32(n.0);
+        }
+        h.u64(u.census.cells);
+        h.u64(u.census.transistors);
+        h.u64(u.census.nets);
+    }
+    h.finish()
+}
+
+/// Content fingerprint of a stimulus dataset (images + labels).  The
+/// simulate stage keys on this rather than `data_seed` alone, because
+/// contexts built with [`FlowContext::with_parts`] can carry arbitrary
+/// datasets.
+pub fn dataset_fingerprint(data: &Dataset) -> u64 {
+    let mut h = Fnv::new();
+    h.usize(data.images.len());
+    for img in &data.images {
+        h.usize(img.len());
+        for &px in img {
+            h.f32(px);
+        }
+    }
+    h.usize(data.labels.len());
+    for &l in &data.labels {
+        h.usize(l);
+    }
+    h.finish()
+}
+
+/// The stage-relevant config subset, as a canonical string (floats as
+/// bit-pattern hex).  Keys deliberately exclude anything proven not to
+/// affect the stage's output: `sim_lanes`/`sim_threads` only change
+/// wall time, never measured activity.
+pub fn config_subset(stage: &str, ctx: &FlowContext) -> String {
+    let cfg = &ctx.cfg;
+    match stage {
+        "place" => format!(
+            "util={:016x};aspect={:016x};seed={}",
+            cfg.place_util.to_bits(),
+            cfg.place_aspect.to_bits(),
+            cfg.place_seed
+        ),
+        "simulate" => format!(
+            "waves={};thr={:016x};brv={};muc={:016x};mub={:016x};\
+             mus={:016x};data={:016x}",
+            cfg.sim_waves,
+            cfg.encode_threshold.to_bits(),
+            cfg.brv_seed,
+            cfg.mu_capture.to_bits(),
+            cfg.mu_backoff.to_bits(),
+            cfg.mu_search.to_bits(),
+            dataset_fingerprint(&ctx.data)
+        ),
+        // elaborate keys on the target fingerprint; sta/power/area/
+        // report are pure functions of upstream artifacts + tech.
+        _ => String::new(),
+    }
+}
+
+/// Key of the `elaborate` stage (the chain root).
+pub fn elaborate_key(ctx: &FlowContext) -> u64 {
+    fnv1a64(
+        format!(
+            "{KEY_VERSION}|stage=elaborate|tech={:016x}|target={}|cfg={}",
+            tech_fingerprint(&ctx.tech),
+            target_fingerprint(&ctx.target),
+            config_subset("elaborate", ctx)
+        )
+        .as_bytes(),
+    )
+}
+
+/// Key of a downstream stage, chained on the previous stage's key and
+/// the elaborated-netlist hash.
+pub fn downstream_key(
+    stage: &str,
+    ctx: &FlowContext,
+    nh: u64,
+    prev: u64,
+) -> u64 {
+    fnv1a64(
+        format!(
+            "{KEY_VERSION}|stage={stage}|tech={:016x}|nh={nh:016x}|\
+             cfg={}|prev={prev:016x}",
+            tech_fingerprint(&ctx.tech),
+            config_subset(stage, ctx)
+        )
+        .as_bytes(),
+    )
+}
+
+// ---- typed snapshots (memory tier payload) --------------------------
+
+/// A typed copy of one stage's artifacts, restorable into a fresh
+/// [`FlowContext`] with full fidelity (bit-identical to re-executing).
+pub enum StageSnapshot {
+    Elaborate { units: Vec<ElaboratedUnit>, netlist_hash: u64 },
+    Sta { timing: Vec<TimingReport> },
+    Place {
+        placement: Vec<Placement>,
+        wires: Vec<WireModel>,
+        wire_timing: Vec<TimingReport>,
+    },
+    Simulate {
+        activity: Vec<Activity>,
+        waves: usize,
+        lanes: usize,
+        threads: usize,
+    },
+    Power { power: Vec<PowerReport>, rel_power: Vec<RelPower> },
+    Area { area: Vec<AreaReport>, rel_area: Vec<f64> },
+    Report { report: TargetReport },
+}
+
+impl StageSnapshot {
+    /// Snapshot the named stage's artifacts out of a context that just
+    /// ran it.  `None` when the stage is unknown or its artifacts are
+    /// missing.
+    pub fn take(stage: &str, ctx: &FlowContext) -> Option<StageSnapshot> {
+        match stage {
+            "elaborate" => Some(StageSnapshot::Elaborate {
+                units: ctx.elaborated.iter().map(clone_unit).collect(),
+                netlist_hash: ctx.netlist_hash?,
+            }),
+            "sta" => Some(StageSnapshot::Sta { timing: ctx.timing.clone() }),
+            "place" => Some(StageSnapshot::Place {
+                placement: ctx.placement.clone(),
+                wires: ctx.wires.clone(),
+                wire_timing: ctx.wire_timing.clone(),
+            }),
+            "simulate" => Some(StageSnapshot::Simulate {
+                activity: ctx.activity.clone(),
+                waves: ctx.sim_waves_run,
+                lanes: ctx.sim_lanes_run,
+                threads: ctx.sim_threads_run,
+            }),
+            "power" => Some(StageSnapshot::Power {
+                power: ctx.power.clone(),
+                rel_power: ctx.rel_power.clone(),
+            }),
+            "area" => Some(StageSnapshot::Area {
+                area: ctx.area.clone(),
+                rel_area: ctx.rel_area.clone(),
+            }),
+            "report" => Some(StageSnapshot::Report {
+                report: ctx.report.clone()?,
+            }),
+            _ => None,
+        }
+    }
+
+    /// The stage this snapshot belongs to.
+    pub fn stage(&self) -> &'static str {
+        match self {
+            StageSnapshot::Elaborate { .. } => "elaborate",
+            StageSnapshot::Sta { .. } => "sta",
+            StageSnapshot::Place { .. } => "place",
+            StageSnapshot::Simulate { .. } => "simulate",
+            StageSnapshot::Power { .. } => "power",
+            StageSnapshot::Area { .. } => "area",
+            StageSnapshot::Report { .. } => "report",
+        }
+    }
+
+    /// Restore into `ctx` exactly as if the stage had just run: stale
+    /// downstream artifacts are invalidated first, then the snapshot's
+    /// artifacts are installed.
+    pub fn restore(&self, ctx: &mut FlowContext) {
+        ctx.invalidate_downstream(self.stage());
+        match self {
+            StageSnapshot::Elaborate { units, netlist_hash } => {
+                ctx.elaborated = units.iter().map(clone_unit).collect();
+                ctx.netlist_hash = Some(*netlist_hash);
+            }
+            StageSnapshot::Sta { timing } => {
+                ctx.timing = timing.clone();
+            }
+            StageSnapshot::Place { placement, wires, wire_timing } => {
+                ctx.placement = placement.clone();
+                ctx.wires = wires.clone();
+                ctx.wire_timing = wire_timing.clone();
+            }
+            StageSnapshot::Simulate { activity, waves, lanes, threads } => {
+                ctx.activity = activity.clone();
+                ctx.sim_waves_run = *waves;
+                ctx.sim_lanes_run = *lanes;
+                ctx.sim_threads_run = *threads;
+            }
+            StageSnapshot::Power { power, rel_power } => {
+                ctx.power = power.clone();
+                ctx.rel_power = rel_power.clone();
+            }
+            StageSnapshot::Area { area, rel_area } => {
+                ctx.area = area.clone();
+                ctx.rel_area = rel_area.clone();
+            }
+            StageSnapshot::Report { report } => {
+                ctx.report = Some(report.clone());
+            }
+        }
+    }
+}
+
+fn clone_unit(u: &ElaboratedUnit) -> ElaboratedUnit {
+    ElaboratedUnit {
+        plan: u.plan,
+        netlist: u.netlist.clone(),
+        ports: u.ports.clone(),
+        census: u.census.clone(),
+    }
+}
+
+// ---- the cache ------------------------------------------------------
+
+/// Cache construction parameters.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Memory-tier capacity (stage entries, LRU-evicted).
+    pub mem_entries: usize,
+    /// Disk-tier root; `None` disables the disk tier.
+    pub dir: Option<PathBuf>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { mem_entries: 256, dir: None }
+    }
+}
+
+struct MemEntry {
+    snap: Arc<StageSnapshot>,
+    dump: Arc<String>,
+    last_used: u64,
+}
+
+struct MemTier {
+    map: HashMap<u64, MemEntry>,
+    tick: u64,
+}
+
+/// The two-tier content-addressed stage cache.  Thread-safe: one
+/// instance is shared by every daemon worker and sweep thread.
+pub struct StageCache {
+    mem: Mutex<MemTier>,
+    mem_cap: usize,
+    dir: Option<PathBuf>,
+    mem_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    disk_writes: AtomicU64,
+}
+
+impl StageCache {
+    pub fn new(cfg: CacheConfig) -> StageCache {
+        StageCache {
+            mem: Mutex::new(MemTier { map: HashMap::new(), tick: 0 }),
+            mem_cap: cfg.mem_entries.max(1),
+            dir: cfg.dir,
+            mem_hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            disk_writes: AtomicU64::new(0),
+        }
+    }
+
+    /// In-memory cache with no disk tier (the daemon default when no
+    /// `--cache-dir` is given).
+    pub fn in_memory(mem_entries: usize) -> StageCache {
+        StageCache::new(CacheConfig { mem_entries, dir: None })
+    }
+
+    /// Disk-tier root, if configured.
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Look up a typed snapshot in the memory tier (bumps LRU
+    /// recency; does not touch hit/miss counters — the flow records
+    /// final per-stage outcomes via [`StageCache::note`]).
+    pub fn probe_mem(
+        &self,
+        key: u64,
+    ) -> Option<(Arc<StageSnapshot>, Arc<String>)> {
+        let mut tier = self.mem.lock().unwrap();
+        tier.tick += 1;
+        let tick = tier.tick;
+        let e = tier.map.get_mut(&key)?;
+        e.last_used = tick;
+        Some((Arc::clone(&e.snap), Arc::clone(&e.dump)))
+    }
+
+    /// Read a dump from the disk tier.  Unreadable or missing entries
+    /// are plain misses; I/O problems never fail the flow.
+    pub fn probe_disk(
+        &self,
+        key: u64,
+        index: usize,
+        stage: &str,
+        backend: &str,
+    ) -> Option<String> {
+        let path = self.disk_path(key, index, stage, backend)?;
+        std::fs::read_to_string(path).ok()
+    }
+
+    /// Store a stage result in both tiers.
+    pub fn store(
+        &self,
+        key: u64,
+        snap: StageSnapshot,
+        dump: &Arc<String>,
+        index: usize,
+        backend: &str,
+    ) {
+        let stage = snap.stage();
+        {
+            let mut tier = self.mem.lock().unwrap();
+            tier.tick += 1;
+            let tick = tier.tick;
+            tier.map.insert(
+                key,
+                MemEntry {
+                    snap: Arc::new(snap),
+                    dump: Arc::clone(dump),
+                    last_used: tick,
+                },
+            );
+            while tier.map.len() > self.mem_cap {
+                if let Some((&victim, _)) =
+                    tier.map.iter().min_by_key(|(_, e)| e.last_used)
+                {
+                    tier.map.remove(&victim);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        self.write_disk(key, index, stage, backend, dump);
+    }
+
+    /// Write the dump bytes to the disk tier (atomic temp + rename so
+    /// concurrent readers never observe a partial file).
+    fn write_disk(
+        &self,
+        key: u64,
+        index: usize,
+        stage: &str,
+        backend: &str,
+        dump: &str,
+    ) {
+        let Some(path) = self.disk_path(key, index, stage, backend) else {
+            return;
+        };
+        let Some(parent) = path.parent() else { return };
+        if std::fs::create_dir_all(parent).is_err() {
+            return;
+        }
+        let tmp = parent.join(format!(".tmp.{}", std::process::id()));
+        if std::fs::write(&tmp, dump).is_ok()
+            && std::fs::rename(&tmp, &path).is_ok()
+        {
+            self.disk_writes.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+
+    /// `<dir>/<key>/NN_stage.BACKEND.json` — one directory per key,
+    /// holding the stage dump in the flow's existing dump format.
+    fn disk_path(
+        &self,
+        key: u64,
+        index: usize,
+        stage: &str,
+        backend: &str,
+    ) -> Option<PathBuf> {
+        let dir = self.dir.as_ref()?;
+        Some(
+            dir.join(format!("{key:016x}"))
+                .join(format!("{index:02}_{stage}.{backend}.json")),
+        )
+    }
+
+    /// Record a stage's final outcome in the hit/miss counters.
+    pub fn note(&self, outcome: super::StageOutcome) {
+        let c = match outcome {
+            super::StageOutcome::MemHit => &self.mem_hits,
+            super::StageOutcome::DiskHit => &self.disk_hits,
+            super::StageOutcome::Executed => &self.misses,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Counter snapshot: (mem_hits, disk_hits, misses).
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.mem_hits.load(Ordering::Relaxed),
+            self.disk_hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// JSON counter block for `/stats` and the CLI summary line.
+    pub fn stats_json(&self) -> Json {
+        let tier = self.mem.lock().unwrap();
+        Json::obj(vec![
+            (
+                "mem_hits",
+                Json::int(self.mem_hits.load(Ordering::Relaxed)),
+            ),
+            (
+                "disk_hits",
+                Json::int(self.disk_hits.load(Ordering::Relaxed)),
+            ),
+            ("misses", Json::int(self.misses.load(Ordering::Relaxed))),
+            (
+                "evictions",
+                Json::int(self.evictions.load(Ordering::Relaxed)),
+            ),
+            (
+                "disk_writes",
+                Json::int(self.disk_writes.load(Ordering::Relaxed)),
+            ),
+            ("mem_entries", Json::int(tier.map.len() as u64)),
+            ("mem_capacity", Json::int(self.mem_cap as u64)),
+            (
+                "disk_dir",
+                match &self.dir {
+                    Some(d) => Json::str(d.display().to_string()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TnnConfig;
+    use crate::flow::{Flow, FlowContext};
+    use crate::netlist::column::ColumnSpec;
+    use crate::netlist::Flavor;
+
+    fn ctx_for(cfg: TnnConfig) -> FlowContext {
+        let spec = ColumnSpec { p: 4, q: 2, theta: 4 };
+        FlowContext::new(Target::column(Flavor::Std, spec), cfg).unwrap()
+    }
+
+    /// FNV-1a 64 golden vectors (computed independently of this
+    /// implementation).  The hash function is the spec of the on-disk
+    /// key space: if these change, every cache directory invalidates.
+    #[test]
+    fn fnv_golden_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"tnn7-cache-v1"), 0x1d48_a20c_8c3d_d503);
+        assert_eq!(fnv1a64(b"elaborate"), 0xae17_96da_8628_f29a);
+    }
+
+    /// The config-subset strings are part of the key spec: exact
+    /// golden bytes for the default config (bit-pattern hex floats).
+    #[test]
+    fn config_subset_golden_strings() {
+        let ctx = ctx_for(TnnConfig {
+            sim_waves: 2,
+            ..TnnConfig::default()
+        });
+        assert_eq!(config_subset("elaborate", &ctx), "");
+        assert_eq!(config_subset("sta", &ctx), "");
+        assert_eq!(
+            config_subset("place", &ctx),
+            "util=3fe6666666666666;aspect=3ff0000000000000;seed=1"
+        );
+        let sim = config_subset("simulate", &ctx);
+        assert!(sim.starts_with(
+            "waves=2;thr=3fa47ae147ae147b;brv=44257;\
+             muc=3feccccccccccccd;mub=3fe0000000000000;\
+             mus=3fa999999999999a;data="
+        ));
+    }
+
+    /// Same config in two independently-built contexts ⇒ same keys —
+    /// the cross-process stability property (nothing in the derivation
+    /// depends on process state, addresses, or map iteration order).
+    #[test]
+    fn keys_stable_across_contexts() {
+        let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
+        let a = ctx_for(cfg.clone());
+        let b = ctx_for(cfg);
+        assert_eq!(tech_fingerprint(&a.tech), tech_fingerprint(&b.tech));
+        assert_eq!(elaborate_key(&a), elaborate_key(&b));
+        let nh = 0xdead_beef_0123_4567;
+        let ka = downstream_key("sta", &a, nh, elaborate_key(&a));
+        let kb = downstream_key("sta", &b, nh, elaborate_key(&b));
+        assert_eq!(ka, kb);
+    }
+
+    #[test]
+    fn keys_separate_what_must_differ() {
+        let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
+        let base = ctx_for(cfg.clone());
+        let k0 = elaborate_key(&base);
+
+        // Different geometry/theta ⇒ different elaborate key.
+        let other = FlowContext::new(
+            Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 5 }),
+            cfg.clone(),
+        )
+        .unwrap();
+        assert_ne!(k0, elaborate_key(&other));
+
+        // Different flavour ⇒ different elaborate key.
+        let cus = FlowContext::new(
+            Target::column(
+                Flavor::Custom,
+                ColumnSpec { p: 4, q: 2, theta: 4 },
+            ),
+            cfg.clone(),
+        )
+        .unwrap();
+        assert_ne!(k0, elaborate_key(&cus));
+
+        // Simulate config changes move the simulate key but not sta's.
+        let mut warm = ctx_for(cfg);
+        warm.cfg.brv_seed = 0x1234;
+        assert_eq!(elaborate_key(&base), elaborate_key(&warm));
+        let nh = 7;
+        assert_eq!(
+            downstream_key("sta", &base, nh, k0),
+            downstream_key("sta", &warm, nh, k0)
+        );
+        assert_ne!(
+            downstream_key("simulate", &base, nh, k0),
+            downstream_key("simulate", &warm, nh, k0)
+        );
+
+        // Lanes/threads are execution details: same simulate key.
+        let mut lanes = ctx_for(TnnConfig {
+            sim_waves: 2,
+            ..TnnConfig::default()
+        });
+        lanes.cfg.sim_lanes = 8;
+        lanes.cfg.sim_threads = 4;
+        assert_eq!(
+            downstream_key("simulate", &base, nh, k0),
+            downstream_key("simulate", &lanes, nh, k0)
+        );
+    }
+
+    #[test]
+    fn netlist_hash_tracks_structure() {
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let mut a = ctx_for(cfg.clone());
+        Flow::from_spec("elaborate").unwrap().run(&mut a).unwrap();
+        let ha = netlist_hash(&a.elaborated);
+        assert_eq!(Some(ha), a.netlist_hash);
+
+        // Re-elaborating the same target reproduces the hash.
+        let mut b = ctx_for(cfg.clone());
+        Flow::from_spec("elaborate").unwrap().run(&mut b).unwrap();
+        assert_eq!(ha, netlist_hash(&b.elaborated));
+
+        // A different geometry hashes differently.
+        let mut c = FlowContext::new(
+            Target::column(Flavor::Std, ColumnSpec { p: 4, q: 3, theta: 4 }),
+            cfg,
+        )
+        .unwrap();
+        Flow::from_spec("elaborate").unwrap().run(&mut c).unwrap();
+        assert_ne!(ha, netlist_hash(&c.elaborated));
+    }
+
+    #[test]
+    fn mem_tier_hit_miss_and_lru_eviction() {
+        let cache = StageCache::in_memory(2);
+        assert!(cache.probe_mem(1).is_none());
+        let dump = Arc::new("{}\n".to_string());
+        let snap = |t: Vec<TimingReport>| StageSnapshot::Sta { timing: t };
+        cache.store(1, snap(vec![]), &dump, 1, "asap7-tnn7");
+        cache.store(2, snap(vec![]), &dump, 1, "asap7-tnn7");
+        assert!(cache.probe_mem(1).is_some());
+        assert!(cache.probe_mem(2).is_some());
+        // Touch 1 so 2 is the LRU victim when 3 arrives.
+        assert!(cache.probe_mem(1).is_some());
+        cache.store(3, snap(vec![]), &dump, 1, "asap7-tnn7");
+        assert!(cache.probe_mem(2).is_none());
+        assert!(cache.probe_mem(1).is_some());
+        assert!(cache.probe_mem(3).is_some());
+        let stats = cache.stats_json();
+        assert_eq!(
+            stats.field("evictions").unwrap().as_usize().unwrap(),
+            1
+        );
+        assert_eq!(
+            stats.field("mem_entries").unwrap().as_usize().unwrap(),
+            2
+        );
+    }
+
+    #[test]
+    fn disk_tier_round_trips_dump_bytes() {
+        let dir = std::env::temp_dir()
+            .join(format!("tnn7_cache_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = StageCache::new(CacheConfig {
+            mem_entries: 4,
+            dir: Some(dir.clone()),
+        });
+        let dump = Arc::new("{\n  \"stage\": \"sta\"\n}\n".to_string());
+        cache.store(
+            0xabcd,
+            StageSnapshot::Sta { timing: vec![] },
+            &dump,
+            1,
+            "asap7-tnn7",
+        );
+        // The on-disk layout is the flow dump scheme under the key.
+        let path = dir
+            .join(format!("{:016x}", 0xabcd_u64))
+            .join("01_sta.asap7-tnn7.json");
+        assert!(path.is_file());
+        assert_eq!(
+            cache.probe_disk(0xabcd, 1, "sta", "asap7-tnn7").as_deref(),
+            Some(dump.as_str())
+        );
+        // Wrong key / index / stage / backend: all misses.
+        assert!(cache.probe_disk(0xabce, 1, "sta", "asap7-tnn7").is_none());
+        assert!(cache.probe_disk(0xabcd, 2, "sta", "asap7-tnn7").is_none());
+        assert!(cache
+            .probe_disk(0xabcd, 1, "place", "asap7-tnn7")
+            .is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshot_restores_are_typed_and_invalidating() {
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let mut ctx = ctx_for(cfg.clone());
+        Flow::measurement().run(&mut ctx).unwrap();
+        let snap = StageSnapshot::take("sta", &ctx).unwrap();
+        // Restoring sta on the measured context wipes downstream
+        // power/report (like a re-run would) but keeps elaborate.
+        snap.restore(&mut ctx);
+        assert!(!ctx.elaborated.is_empty());
+        assert!(!ctx.timing.is_empty());
+        assert!(ctx.power.is_empty());
+        assert!(ctx.report.is_none());
+    }
+}

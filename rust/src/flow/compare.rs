@@ -34,7 +34,8 @@ use crate::phys::{self, FloorplanSpec, PlacerConfig};
 use crate::runtime::json::Json;
 use crate::tech::{TechRegistry, WireParams};
 
-use super::{measure_with, Target, TargetReport};
+use super::cache::StageCache;
+use super::{measure_cached, measure_with, Target, TargetReport};
 
 /// One Figs. 14–18 comparison row.
 #[derive(Debug, Clone)]
@@ -304,6 +305,20 @@ pub fn run_sweep(
     data: &Arc<Dataset>,
     threads: usize,
 ) -> Vec<SweepResult> {
+    run_sweep_cached(jobs, registry, data, threads, None)
+}
+
+/// [`run_sweep`] with an optional shared stage cache: jobs that share
+/// upstream stages (same target, different place/simulate knobs)
+/// restore them from the memory tier instead of recomputing — the
+/// batch counterpart of the daemon's warm path.
+pub fn run_sweep_cached(
+    jobs: &[SweepJob],
+    registry: &TechRegistry,
+    data: &Arc<Dataset>,
+    threads: usize,
+    cache: Option<&StageCache>,
+) -> Vec<SweepResult> {
     let threads = threads.max(1).min(jobs.len().max(1));
     let next = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<(usize, Result<TargetReport>)>();
@@ -317,15 +332,33 @@ pub fn run_sweep(
                     break;
                 }
                 let job = &jobs[i];
-                let report =
-                    registry.get(job.target.tech.as_str()).and_then(|tech| {
-                        measure_with(
-                            job.target.clone(),
-                            &job.cfg,
-                            &tech,
-                            data,
-                        )
-                    });
+                // A panicking job (bad dataset, degenerate geometry)
+                // must not take down its worker thread — and with it
+                // the whole sweep, or the daemon driving it.  Catch
+                // the unwind and report it as this job's own error.
+                let report = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        registry
+                            .get(job.target.tech.as_str())
+                            .and_then(|tech| {
+                                measure_cached(
+                                    job.target.clone(),
+                                    &job.cfg,
+                                    &tech,
+                                    data,
+                                    cache,
+                                )
+                                .map(|(report, _trace)| report)
+                            })
+                    }),
+                )
+                .unwrap_or_else(|payload| {
+                    Err(Error::runtime(format!(
+                        "sweep job `{}` panicked: {}",
+                        job.label,
+                        panic_message(payload.as_ref())
+                    )))
+                });
                 if tx.send((i, report)).is_err() {
                     break;
                 }
@@ -345,6 +378,18 @@ pub fn run_sweep(
             report: slot.expect("every claimed job reports"),
         })
         .collect()
+}
+
+/// Best-effort text of a panic payload (`panic!("…")` carries a `&str`
+/// or a formatted `String`; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
 }
 
 #[cfg(test)]
@@ -466,6 +511,67 @@ mod tests {
         let results = run_sweep(&[good, bad], &registry, &data, 2);
         assert!(results[0].report.is_ok());
         assert!(results[1].report.is_err());
+    }
+
+    /// A job that panics mid-measurement (here: the stimulus encoder's
+    /// non-empty-dataset assertion) surfaces as that job's own
+    /// structured error; the sweep still returns normally and sibling
+    /// jobs are unaffected.
+    #[test]
+    fn sweep_contains_panicking_job() {
+        use crate::netlist::column::ColumnSpec;
+        let registry = TechRegistry::builtin();
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let data = Arc::new(Dataset { images: vec![], labels: vec![] });
+        let spec = ColumnSpec { p: 4, q: 2, theta: 4 };
+        let job = SweepJob::of(Target::column(Flavor::Std, spec), &cfg);
+        let results = run_sweep(&[job], &registry, &data, 1);
+        assert_eq!(results.len(), 1);
+        let err = results[0].report.as_ref().unwrap_err().to_string();
+        assert!(
+            err.contains("panicked"),
+            "expected structured panic report, got: {err}"
+        );
+        assert!(err.contains(&results[0].label));
+    }
+
+    /// Sweeping with a shared cache returns the same reports as the
+    /// uncached sweep, and a second pass over the same jobs is served
+    /// from memory.
+    #[test]
+    fn cached_sweep_matches_and_warms() {
+        use super::super::cache::CacheConfig;
+        use crate::netlist::column::ColumnSpec;
+        let registry = TechRegistry::builtin();
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let data = Arc::new(Dataset::generate(4, 5));
+        let jobs: Vec<SweepJob> = [(4usize, 2usize), (6, 3)]
+            .iter()
+            .map(|&(p, q)| {
+                let spec = ColumnSpec { p, q, theta: (p + q) as u64 };
+                SweepJob::of(Target::column(Flavor::Std, spec), &cfg)
+            })
+            .collect();
+        let cache = StageCache::in_memory(64);
+        let cold = run_sweep_cached(&jobs, &registry, &data, 2, Some(&cache));
+        let plain = run_sweep(&jobs, &registry, &data, 2);
+        for (c, p) in cold.iter().zip(&plain) {
+            let (c, p) =
+                (c.report.as_ref().unwrap(), p.report.as_ref().unwrap());
+            assert_eq!(c.total.power_uw, p.total.power_uw);
+            assert_eq!(c.total.area_mm2, p.total.area_mm2);
+        }
+        let (_, _, misses_after_cold) = cache.counters();
+        let warm = run_sweep_cached(&jobs, &registry, &data, 2, Some(&cache));
+        let (mem_hits, _, misses_after_warm) = cache.counters();
+        assert_eq!(misses_after_warm, misses_after_cold, "warm pass re-executed stages");
+        assert!(mem_hits >= jobs.len() as u64);
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(
+                c.report.as_ref().unwrap().total.power_uw,
+                w.report.as_ref().unwrap().total.power_uw
+            );
+        }
     }
 
     #[test]

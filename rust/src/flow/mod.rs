@@ -57,6 +57,7 @@
 //! assert!(ctx.report.is_none()); // report stage was not requested
 //! ```
 
+pub mod cache;
 pub mod compare;
 pub mod stages;
 pub mod target;
@@ -67,6 +68,7 @@ pub use target::{
 
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::cells::{Library, TechParams};
 use crate::config::TnnConfig;
@@ -238,6 +240,9 @@ pub struct FlowContext {
     pub data: Arc<Dataset>,
     /// `elaborate` artifacts.
     pub elaborated: Vec<ElaboratedUnit>,
+    /// Structural hash of `elaborated` ([`cache::netlist_hash`]) — the
+    /// content-address every downstream cache key chains on.
+    pub netlist_hash: Option<u64>,
     /// `sta` artifacts.
     pub timing: Vec<TimingReport>,
     /// `place` artifacts: legalized placements, extracted wire
@@ -293,6 +298,7 @@ impl FlowContext {
             tech,
             data,
             elaborated: Vec::new(),
+            netlist_hash: None,
             timing: Vec::new(),
             placement: Vec::new(),
             wires: Vec::new(),
@@ -347,6 +353,7 @@ impl FlowContext {
         };
         match stage {
             "elaborate" => {
+                self.netlist_hash = None;
                 self.timing.clear();
                 wipe_place(self);
                 self.activity.clear();
@@ -560,19 +567,252 @@ impl Flow {
     /// stages that completed — and sweeps over several technology
     /// backends into one directory never collide.
     pub fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        self.run_cached(ctx, None).map(|_| ())
+    }
+
+    /// Run the pipeline consulting a content-addressed stage cache
+    /// (DESIGN.md §11), returning a per-stage [`FlowTrace`].
+    ///
+    /// Memory-tier hits restore typed artifacts and are equivalent to
+    /// executing the stage.  Disk-tier entries hold only dump bytes,
+    /// so they are served **only** when the entire pipeline hits (the
+    /// cross-process replay: zero stages execute, responses are the
+    /// cached bytes verbatim); any miss demotes disk hits to
+    /// execution, with memory hits still honored — which is exactly
+    /// the incremental re-run: changing only the simulate config
+    /// mem-hits elaborate/sta and re-executes simulate and later.
+    ///
+    /// Caching engages only for pipelines of unique, known stages
+    /// starting at `elaborate`; anything else (or `cache: None`) runs
+    /// uncached.
+    pub fn run_cached(
+        &self,
+        ctx: &mut FlowContext,
+        cache: Option<&cache::StageCache>,
+    ) -> Result<FlowTrace> {
+        self.run_cached_inner(ctx, cache, true)
+    }
+
+    /// [`Flow::run_cached`] with the full-disk-replay path disabled:
+    /// every stage either memory-restores or executes, so the context
+    /// ends fully populated (typed report included).  The form
+    /// [`measure_cached`] and cached sweeps use.
+    pub fn run_cached_typed(
+        &self,
+        ctx: &mut FlowContext,
+        cache: Option<&cache::StageCache>,
+    ) -> Result<FlowTrace> {
+        self.run_cached_inner(ctx, cache, false)
+    }
+
+    fn run_cached_inner(
+        &self,
+        ctx: &mut FlowContext,
+        cache: Option<&cache::StageCache>,
+        allow_disk_replay: bool,
+    ) -> Result<FlowTrace> {
         if let Some(dir) = &self.dump_dir {
             std::fs::create_dir_all(dir)?;
         }
-        for (i, stage) in self.stages.iter().enumerate() {
-            stage.run(ctx)?;
-            if let Some(dir) = &self.dump_dir {
-                let backend = sanitize_component(ctx.tech.name());
-                let path = dir.join(format!(
-                    "{i:02}_{}.{backend}.json",
-                    stage.name()
-                ));
-                std::fs::write(&path, stage.dump(ctx).to_string_pretty())?;
+        let backend = sanitize_component(ctx.tech.name());
+        let names = self.stage_names();
+        let cache = cache.filter(|_| cacheable_pipeline(&names));
+        let mut trace = FlowTrace { stages: Vec::new() };
+
+        // Uncached: execute everything, dump only what dump_dir needs.
+        let Some(cache) = cache else {
+            for (i, stage) in self.stages.iter().enumerate() {
+                let t0 = Instant::now();
+                stage.run(ctx)?;
+                let micros = t0.elapsed().as_micros();
+                if self.dump_dir.is_some() {
+                    self.write_dump(
+                        i,
+                        stage.name(),
+                        &backend,
+                        &stage.dump(ctx).to_string_pretty(),
+                    )?;
+                }
+                trace.stages.push(StageTrace {
+                    name: stage.name(),
+                    outcome: StageOutcome::Executed,
+                    micros,
+                    key: None,
+                    dump: None,
+                });
             }
+            return Ok(trace);
+        };
+
+        // Resolve the elaborate key (the chain root) and the netlist
+        // hash — available without executing iff elaborate hits.
+        let k0 = cache::elaborate_key(ctx);
+        let mem0 = cache.probe_mem(k0);
+        let nh_hit = match &mem0 {
+            Some((snap, _)) => match &**snap {
+                cache::StageSnapshot::Elaborate { netlist_hash, .. } => {
+                    Some(*netlist_hash)
+                }
+                _ => None,
+            },
+            None => None,
+        };
+        let disk0 = if mem0.is_none() && allow_disk_replay {
+            cache.probe_disk(k0, 0, "elaborate", &backend)
+        } else {
+            None
+        };
+        let nh_disk = disk0.as_ref().and_then(|d| parse_netlist_hash(d));
+
+        enum Resolved {
+            Mem(Arc<cache::StageSnapshot>, Arc<String>),
+            Disk(String),
+            Exec,
+        }
+
+        // Plan each stage's resolution.  With the netlist hash in hand
+        // every downstream key is computable up front; otherwise
+        // elaborate must execute and downstream keys are derived as
+        // the chain progresses (handled by the Exec arm below).
+        let mut plan: Vec<(Option<u64>, Resolved)> = Vec::new();
+        let root = match (mem0, nh_hit, disk0, nh_disk) {
+            (Some((snap, dump)), Some(nh), _, _) => {
+                plan.push((Some(k0), Resolved::Mem(snap, dump)));
+                Some(nh)
+            }
+            (None, _, Some(dump), Some(nh)) => {
+                plan.push((Some(k0), Resolved::Disk(dump)));
+                Some(nh)
+            }
+            _ => {
+                plan.push((Some(k0), Resolved::Exec));
+                None
+            }
+        };
+        match root {
+            Some(nh) => {
+                let mut prev = k0;
+                for (i, stage) in
+                    self.stages.iter().enumerate().skip(1)
+                {
+                    let key = cache::downstream_key(
+                        stage.name(),
+                        ctx,
+                        nh,
+                        prev,
+                    );
+                    let r = match cache.probe_mem(key) {
+                        Some((snap, dump)) => Resolved::Mem(snap, dump),
+                        None if allow_disk_replay => match cache
+                            .probe_disk(key, i, stage.name(), &backend)
+                        {
+                            Some(bytes) => Resolved::Disk(bytes),
+                            None => Resolved::Exec,
+                        },
+                        None => Resolved::Exec,
+                    };
+                    plan.push((Some(key), r));
+                    prev = key;
+                }
+            }
+            None => {
+                for _ in 1..self.stages.len() {
+                    plan.push((None, Resolved::Exec));
+                }
+            }
+        }
+
+        // Disk entries carry bytes, not typed artifacts: honor them
+        // only when the whole pipeline hits; otherwise demote to
+        // execution (memory hits stay valid — they restore artifacts
+        // the executed stages need).
+        let full_replay = allow_disk_replay
+            && plan.iter().all(|(_, r)| !matches!(r, Resolved::Exec));
+        if !full_replay {
+            for (_, r) in plan.iter_mut() {
+                if matches!(r, Resolved::Disk(_)) {
+                    *r = Resolved::Exec;
+                }
+            }
+        } else {
+            // Nothing will execute or restore before the first mem
+            // hit, so stale artifacts from a previous run on this
+            // context must not survive into the replayed state.
+            ctx.invalidate_downstream("elaborate");
+            ctx.elaborated.clear();
+        }
+
+        let mut prev_key = k0;
+        let mut nh = None;
+        for (i, stage) in self.stages.iter().enumerate() {
+            let (planned_key, resolved) = &plan[i];
+            let key = match planned_key {
+                Some(k) => *k,
+                // Keys after an executed elaborate: chain on the hash
+                // the execution produced.
+                None => cache::downstream_key(
+                    stage.name(),
+                    ctx,
+                    nh.ok_or_else(|| {
+                        Error::runtime(
+                            "cache chain broken: elaborate produced no \
+                             netlist hash",
+                        )
+                    })?,
+                    prev_key,
+                ),
+            };
+            let t0 = Instant::now();
+            let (outcome, dump) = match resolved {
+                Resolved::Mem(snap, dump) => {
+                    snap.restore(ctx);
+                    (StageOutcome::MemHit, Arc::clone(dump))
+                }
+                Resolved::Disk(bytes) => {
+                    (StageOutcome::DiskHit, Arc::new(bytes.clone()))
+                }
+                Resolved::Exec => {
+                    stage.run(ctx)?;
+                    let dump =
+                        Arc::new(stage.dump(ctx).to_string_pretty());
+                    if let Some(snap) =
+                        cache::StageSnapshot::take(stage.name(), ctx)
+                    {
+                        cache.store(key, snap, &dump, i, &backend);
+                    }
+                    (StageOutcome::Executed, dump)
+                }
+            };
+            if stage.name() == "elaborate" {
+                nh = ctx.netlist_hash.or(nh_disk);
+            }
+            cache.note(outcome);
+            if self.dump_dir.is_some() {
+                self.write_dump(i, stage.name(), &backend, &dump)?;
+            }
+            trace.stages.push(StageTrace {
+                name: stage.name(),
+                outcome,
+                micros: t0.elapsed().as_micros(),
+                key: Some(key),
+                dump: Some(dump),
+            });
+            prev_key = key;
+        }
+        Ok(trace)
+    }
+
+    fn write_dump(
+        &self,
+        index: usize,
+        stage: &str,
+        backend: &str,
+        dump: &str,
+    ) -> Result<()> {
+        if let Some(dir) = &self.dump_dir {
+            let path =
+                dir.join(format!("{index:02}_{stage}.{backend}.json"));
+            std::fs::write(&path, dump)?;
         }
         Ok(())
     }
@@ -580,10 +820,104 @@ impl Flow {
 
 /// Make a backend name safe as a filename component (`.lib` paths
 /// contain separators).
-fn sanitize_component(name: &str) -> String {
+pub(crate) fn sanitize_component(name: &str) -> String {
     name.chars()
         .map(|c| if c == '/' || c == '\\' || c == ':' { '_' } else { c })
         .collect()
+}
+
+/// Caching engages only for pipelines the key chain can describe:
+/// unique, known stages rooted at `elaborate`.
+fn cacheable_pipeline(names: &[&'static str]) -> bool {
+    if names.first() != Some(&"elaborate") {
+        return false;
+    }
+    if !names.iter().all(|n| cache::CACHEABLE_STAGES.contains(n)) {
+        return false;
+    }
+    let mut sorted = names.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    sorted.len() == names.len()
+}
+
+/// Recover the netlist hash a cached elaborate dump embeds (the
+/// `netlist_hash` hex field [`stages::Elaborate`] writes).
+fn parse_netlist_hash(dump: &str) -> Option<u64> {
+    let j = Json::parse(dump).ok()?;
+    let hex = j.field("netlist_hash").ok()?.as_str().ok()?.to_string();
+    u64::from_str_radix(&hex, 16).ok()
+}
+
+/// How one stage of a [`Flow::run_cached`] run was satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageOutcome {
+    /// The stage ran (cache miss, or caching disabled/bypassed).
+    Executed,
+    /// Typed artifacts restored from the memory tier.
+    MemHit,
+    /// Dump bytes served from the disk tier (full-replay runs only).
+    DiskHit,
+}
+
+/// Per-stage record of a flow run: outcome, wall time, cache key, and
+/// the canonical dump bytes (cached runs always carry dumps; plain
+/// uncached runs skip serialization).
+pub struct StageTrace {
+    pub name: &'static str,
+    pub outcome: StageOutcome,
+    pub micros: u128,
+    pub key: Option<u64>,
+    pub dump: Option<Arc<String>>,
+}
+
+/// The full per-stage trace [`Flow::run_cached`] returns.
+pub struct FlowTrace {
+    pub stages: Vec<StageTrace>,
+}
+
+impl FlowTrace {
+    fn count(&self, o: StageOutcome) -> usize {
+        self.stages.iter().filter(|s| s.outcome == o).count()
+    }
+
+    /// Stages that actually executed (the daemon's "0 re-executed"
+    /// acceptance counter).
+    pub fn executed(&self) -> usize {
+        self.count(StageOutcome::Executed)
+    }
+
+    pub fn mem_hits(&self) -> usize {
+        self.count(StageOutcome::MemHit)
+    }
+
+    pub fn disk_hits(&self) -> usize {
+        self.count(StageOutcome::DiskHit)
+    }
+
+    /// Total wall time across stages (µs).
+    pub fn total_micros(&self) -> u128 {
+        self.stages.iter().map(|s| s.micros).sum()
+    }
+
+    /// Dump bytes of the named stage, if recorded.
+    pub fn dump_for(&self, name: &str) -> Option<Arc<String>> {
+        self.stages
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.dump.clone())
+    }
+
+    /// The compact `executed=N mem=N disk=N` summary used by the CLI
+    /// and the daemon's `X-Tnn7-Cache` response header.
+    pub fn cache_line(&self) -> String {
+        format!(
+            "executed={} mem={} disk={}",
+            self.executed(),
+            self.mem_hits(),
+            self.disk_hits()
+        )
+    }
 }
 
 /// Measure a target end-to-end, resolving its technology backend
@@ -619,6 +953,32 @@ pub fn measure_with(
     ctx.report
         .take()
         .ok_or_else(|| Error::ppa("report stage produced no artifact"))
+}
+
+/// [`measure_with`] consulting a shared stage cache: repeated and
+/// overlapping measurements (daemon traffic, `--utils`/`--aspects`
+/// sweeps) restore unchanged upstream stages from the memory tier
+/// instead of recomputing them.
+pub fn measure_cached(
+    target: Target,
+    cfg: &TnnConfig,
+    tech: &TechContext,
+    data: &Arc<Dataset>,
+    cache: Option<&cache::StageCache>,
+) -> Result<(TargetReport, FlowTrace)> {
+    let mut ctx = FlowContext::with_tech(
+        target,
+        cfg.clone(),
+        tech.clone(),
+        Arc::clone(data),
+    );
+    let trace =
+        Flow::measurement_for(cfg).run_cached_typed(&mut ctx, cache)?;
+    let report = ctx
+        .report
+        .take()
+        .ok_or_else(|| Error::ppa("report stage produced no artifact"))?;
+    Ok((report, trace))
 }
 
 #[cfg(test)]
@@ -851,6 +1211,178 @@ mod tests {
         assert!(r.total.area_mm2 > 0.0);
         // one unit, one replica: total == unit ppa
         assert_eq!(r.total.power_uw, r.units[0].ppa.power_uw);
+    }
+
+    fn tiny_target() -> Target {
+        Target::column(Flavor::Std, ColumnSpec { p: 4, q: 2, theta: 4 })
+    }
+
+    #[test]
+    fn warm_cache_executes_zero_stages_and_matches_bytes() {
+        let cache = cache::StageCache::in_memory(64);
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+
+        let mut cold = FlowContext::new(tiny_target(), cfg.clone()).unwrap();
+        let t1 = Flow::measurement()
+            .run_cached(&mut cold, Some(&cache))
+            .unwrap();
+        assert_eq!(t1.executed(), 6);
+        assert_eq!(t1.mem_hits() + t1.disk_hits(), 0);
+
+        let mut warm = FlowContext::new(tiny_target(), cfg).unwrap();
+        let t2 = Flow::measurement()
+            .run_cached(&mut warm, Some(&cache))
+            .unwrap();
+        assert_eq!(t2.executed(), 0, "{}", t2.cache_line());
+        assert_eq!(t2.mem_hits(), 6);
+        // Typed artifacts restored, and the dump bytes are identical
+        // to the cold path's.
+        assert!(warm.report.is_some());
+        for name in ["elaborate", "sta", "simulate", "power", "area", "report"]
+        {
+            assert_eq!(
+                t1.dump_for(name).unwrap(),
+                t2.dump_for(name).unwrap(),
+                "stage {name} bytes differ"
+            );
+        }
+        assert_eq!(
+            warm.report.as_ref().unwrap().total.power_uw,
+            cold.report.as_ref().unwrap().total.power_uw
+        );
+    }
+
+    #[test]
+    fn changing_simulate_config_reruns_only_simulate_and_later() {
+        let cache = cache::StageCache::in_memory(64);
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let mut cold = FlowContext::new(tiny_target(), cfg.clone()).unwrap();
+        Flow::measurement()
+            .run_cached(&mut cold, Some(&cache))
+            .unwrap();
+
+        let changed = TnnConfig { sim_waves: 2, ..cfg };
+        let mut ctx = FlowContext::new(tiny_target(), changed).unwrap();
+        let t = Flow::measurement()
+            .run_cached_typed(&mut ctx, Some(&cache))
+            .unwrap();
+        let outcome = |name: &str| {
+            t.stages.iter().find(|s| s.name == name).unwrap().outcome
+        };
+        assert_eq!(outcome("elaborate"), StageOutcome::MemHit);
+        assert_eq!(outcome("sta"), StageOutcome::MemHit);
+        assert_eq!(outcome("simulate"), StageOutcome::Executed);
+        assert_eq!(outcome("power"), StageOutcome::Executed);
+        assert_eq!(outcome("area"), StageOutcome::Executed);
+        assert_eq!(outcome("report"), StageOutcome::Executed);
+        assert_eq!(ctx.sim_waves_run, 2);
+        assert!(ctx.report.is_some());
+    }
+
+    #[test]
+    fn disk_tier_replays_across_cache_instances() {
+        let dir = std::env::temp_dir()
+            .join(format!("tnn7_cache_disk_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let mk_cache = || {
+            cache::StageCache::new(cache::CacheConfig {
+                mem_entries: 64,
+                dir: Some(dir.clone()),
+            })
+        };
+
+        let first = mk_cache();
+        let mut cold = FlowContext::new(tiny_target(), cfg.clone()).unwrap();
+        let t1 = Flow::measurement()
+            .run_cached(&mut cold, Some(&first))
+            .unwrap();
+        assert_eq!(t1.executed(), 6);
+
+        // A fresh cache over the same directory models a restarted
+        // process: the memory tier is empty, the disk tier replays the
+        // entire chain byte-for-byte with zero execution.
+        let second = mk_cache();
+        let mut warm = FlowContext::new(tiny_target(), cfg.clone()).unwrap();
+        let t2 = Flow::measurement()
+            .run_cached(&mut warm, Some(&second))
+            .unwrap();
+        assert_eq!(t2.executed(), 0, "{}", t2.cache_line());
+        assert_eq!(t2.disk_hits(), 6);
+        assert_eq!(
+            t1.dump_for("report").unwrap(),
+            t2.dump_for("report").unwrap()
+        );
+
+        // The typed path never trusts bytes it cannot restore: with a
+        // cold memory tier it re-executes instead of byte-replaying,
+        // and still produces the same report dump.
+        let third = mk_cache();
+        let mut typed = FlowContext::new(tiny_target(), cfg).unwrap();
+        let t3 = Flow::measurement()
+            .run_cached_typed(&mut typed, Some(&third))
+            .unwrap();
+        assert_eq!(t3.executed(), 6);
+        assert!(typed.report.is_some());
+        assert_eq!(
+            t1.dump_for("report").unwrap(),
+            t3.dump_for("report").unwrap()
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn measure_cached_matches_uncached_measurement() {
+        use crate::tech::TechRegistry;
+        let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
+        let registry = TechRegistry::builtin();
+        let tech = registry.get(crate::tech::ASAP7_TNN7).unwrap();
+        let data = Arc::new(crate::data::Dataset::generate(4, cfg.data_seed));
+        let cache = cache::StageCache::in_memory(32);
+
+        let plain =
+            measure_with(tiny_target(), &cfg, &tech, &data).unwrap();
+        let (c1, t1) =
+            measure_cached(tiny_target(), &cfg, &tech, &data, Some(&cache))
+                .unwrap();
+        let (c2, t2) =
+            measure_cached(tiny_target(), &cfg, &tech, &data, Some(&cache))
+                .unwrap();
+        assert_eq!(t1.executed(), 6);
+        assert_eq!(t2.executed(), 0, "{}", t2.cache_line());
+        // Bit-identical totals through every path.
+        assert_eq!(plain.total.power_uw.to_bits(), c1.total.power_uw.to_bits());
+        assert_eq!(c1.total.power_uw.to_bits(), c2.total.power_uw.to_bits());
+        assert_eq!(c1.total.time_ns.to_bits(), c2.total.time_ns.to_bits());
+        assert_eq!(c1.total.area_mm2.to_bits(), c2.total.area_mm2.to_bits());
+    }
+
+    #[test]
+    fn placed_and_unplaced_chains_do_not_alias() {
+        // The key chain encodes which optional stages ran: a placed
+        // pipeline must never serve artifacts cached by an unplaced
+        // one (their area/power differ).
+        let cache = cache::StageCache::in_memory(64);
+        let cfg = TnnConfig { sim_waves: 1, ..TnnConfig::default() };
+        let mut flat = FlowContext::new(tiny_target(), cfg.clone()).unwrap();
+        Flow::measurement()
+            .run_cached(&mut flat, Some(&cache))
+            .unwrap();
+        let mut placed = FlowContext::new(tiny_target(), cfg).unwrap();
+        let t = Flow::placed()
+            .run_cached_typed(&mut placed, Some(&cache))
+            .unwrap();
+        // elaborate and sta are shared prefixes; everything at and
+        // after the diverging `place` stage re-executes.
+        let outcome = |name: &str| {
+            t.stages.iter().find(|s| s.name == name).unwrap().outcome
+        };
+        assert_eq!(outcome("elaborate"), StageOutcome::MemHit);
+        assert_eq!(outcome("sta"), StageOutcome::MemHit);
+        assert_eq!(outcome("place"), StageOutcome::Executed);
+        assert_eq!(outcome("power"), StageOutcome::Executed);
+        assert!(placed.report.as_ref().unwrap().units[0].placed.is_some());
+        assert!(flat.report.as_ref().unwrap().units[0].placed.is_none());
     }
 
     #[test]

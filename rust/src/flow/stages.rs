@@ -159,6 +159,8 @@ impl Stage for Elaborate {
                 census,
             });
         }
+        ctx.netlist_hash =
+            Some(crate::flow::cache::netlist_hash(&ctx.elaborated));
         Ok(())
     }
 
@@ -179,12 +181,22 @@ impl Stage for Elaborate {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("stage", Json::str(self.name())),
             ("target", Json::str(ctx.target.describe())),
             ("tech", Json::str(ctx.tech.name())),
             ("units", Json::Arr(units)),
-        ])
+        ]);
+        // The content address downstream cache keys chain on — hex,
+        // because JSON numbers cannot hold a full u64 exactly.  Also
+        // how a cold process recovers the hash from a disk-tier entry.
+        if let (Json::Obj(m), Some(nh)) = (&mut j, ctx.netlist_hash) {
+            m.insert(
+                "netlist_hash".to_string(),
+                Json::str(format!("{nh:016x}")),
+            );
+        }
+        j
     }
 }
 

@@ -44,6 +44,11 @@
 //!   multi-target / multi-technology sweeps
 //!   ([`flow::compare::run_sweep`]); the API every measurement path goes
 //!   through.
+//! * [`serve`] — flow-as-a-service: the `tnn7 serve` daemon exposing the
+//!   flow pipeline over a hand-rolled HTTP/JSON API, backed by the
+//!   content-addressed stage cache ([`flow::cache`]), with in-flight
+//!   request deduplication, a bounded request queue, and graceful
+//!   drain on shutdown (DESIGN.md §11).
 //! * [`coordinator`] — the training/eval pipeline (MNIST-like workload) and
 //!   the activity bridge that turns behavioral spike statistics into
 //!   prototype-scale power numbers.
@@ -67,6 +72,7 @@ pub mod netlist;
 pub mod phys;
 pub mod ppa;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tech;
 pub mod tnn;

@@ -13,6 +13,7 @@
 //! tnn7 bench-table2                   Table II (prototype PPA + EDP)
 //! tnn7 simulate --col PxQ [...]       gate-sim one column, report PPA
 //! tnn7 train [--config FILE]          end-to-end HLO training + accuracy
+//! tnn7 serve [--addr A] [...]         flow-as-a-service HTTP daemon
 //! ```
 //!
 //! Every measurement path goes through [`tnn7::flow`]; `simulate` and
@@ -25,6 +26,7 @@ use std::sync::Arc;
 
 use tnn7::cells::{calibrate, liberty, Library, TechParams};
 use tnn7::config::TnnConfig;
+use tnn7::flow::cache::{CacheConfig, StageCache};
 use tnn7::flow::{
     self, compare, parse_geometry, stages, table1_specs, Flow, FlowContext,
     Geometry, Stage, Target,
@@ -37,6 +39,8 @@ use tnn7::netlist::Flavor;
 use tnn7::ppa::report::{improvement_line, render_table1, render_table2, PpaRow};
 use tnn7::ppa::scaling;
 use tnn7::ppa::ColumnPpa;
+use tnn7::runtime::json::Json;
+use tnn7::serve::{ServeConfig, Server};
 use tnn7::tech::{self, TechContext, TechRegistry};
 
 /// Tiny argv helper (no clap offline): `--key value` and flags.
@@ -128,6 +132,7 @@ fn run() -> anyhow::Result<()> {
         "bench-table2" => cmd_table2(&mut args),
         "simulate" => cmd_simulate(&mut args),
         "train" => cmd_train(&mut args),
+        "serve" => cmd_serve(&mut args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             println!("{}", pipeline_help());
@@ -159,6 +164,9 @@ SUBCOMMANDS:
   bench-table2 [--waves N] [--threads N]                 regenerate Table II
   simulate --col PxQ [--flavor std|custom] [--waves N]
   train [--config FILE] [--samples N] [--check] [--metrics-json FILE]
+  serve [--addr HOST:PORT] [--threads N] [--queue N] [--cache-dir D]
+        [--mem-entries N]   flow-as-a-service daemon with a
+                            content-addressed stage cache (DESIGN.md §11)
 ";
 
 /// Generated from the stage registry, so help never drifts from the
@@ -214,6 +222,12 @@ OPTIONS:
   --dump-dir DIR           write one JSON artifact per stage, named
                            NN_stage.BACKEND.json (multi-tech runs into one
                            directory never collide)
+  --cache-dir DIR          consult the content-addressed stage cache with a
+                           disk tier rooted at DIR: unchanged upstream
+                           stages replay instead of re-executing across
+                           runs and sweeps (DESIGN.md §11; `[cache]
+                           enabled = true` in the config gives the
+                           memory tier alone)
   --smoke                  quick smoke run: at most 2 waves, geometry
                            defaults to 8x4 when --col/--proto are omitted
   --waves N                simulated waves (default from config)
@@ -275,6 +289,7 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     let col = args.opt("--col")?;
     let pipeline = args.opt("--pipeline")?;
     let dump_dir = args.opt("--dump-dir")?;
+    let cache_dir = args.opt("--cache-dir")?;
     let place_flag = args.flag("--place");
     let util_desc = args.opt("--util")?;
     let aspect_desc = args.opt("--aspect")?;
@@ -300,6 +315,26 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     if smoke {
         cfg.sim_waves = cfg.sim_waves.min(2);
     }
+
+    // `--cache-dir` turns caching on with a disk tier; `[cache]
+    // enabled = true` alone gives the in-process memory tier (useful
+    // for --util/--aspect sweeps sharing elaborate/sta).
+    if let Some(dir) = &cache_dir {
+        cfg.cache_enabled = true;
+        cfg.cache_dir = dir.clone();
+    }
+    let cache: Option<StageCache> = if cfg.cache_enabled {
+        Some(StageCache::new(CacheConfig {
+            mem_entries: cfg.cache_mem_entries,
+            dir: if cfg.cache_dir.is_empty() {
+                None
+            } else {
+                Some(cfg.cache_dir.clone().into())
+            },
+        }))
+    } else {
+        None
+    };
 
     // --util/--aspect imply the physical-design stage; each accepts a
     // comma list forming a sweep axis (cross product when both).
@@ -381,6 +416,7 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
             &cfg,
             &utils,
             &aspects,
+            cache.as_ref(),
         );
     }
 
@@ -467,7 +503,19 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
             techctx.clone(),
             Arc::clone(&data),
         );
-        flow.run(&mut ctx)?;
+        let trace = flow.run_cached(&mut ctx, cache.as_ref())?;
+        if cache.is_some() {
+            println!("  cache: {}", trace.cache_line());
+        }
+
+        // A full-pipeline disk replay serves the cached dump bytes
+        // without rebuilding typed artifacts: the context stays empty
+        // and the totals come from the report artifact itself.
+        if ctx.report.is_none() && trace.executed() == 0 {
+            if let Some(dump) = trace.dump_for("report") {
+                print_replayed_total(&dump)?;
+            }
+        }
 
         if let Some(r) = &ctx.report {
             for (i, u) in r.units.iter().enumerate() {
@@ -524,6 +572,25 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Print the total-PPA summary out of a replayed report artifact: a
+/// full-pipeline disk replay (cache hit across processes) serves dump
+/// bytes without reconstructing the typed [`flow::TargetReport`], so
+/// the summary line is read back from the JSON itself.
+fn print_replayed_total(dump: &str) -> anyhow::Result<()> {
+    let j = Json::parse(dump)?;
+    let total = j.field("total")?;
+    println!(
+        "  total ({}): power {:.3} uW  time {:.2} ns  \
+         area {:.5} mm2  edp {:.3} nJ-ns  [replayed]",
+        j.field("node")?.as_str()?,
+        total.field("power_uw")?.as_f64()?,
+        total.field("time_ns")?.as_f64()?,
+        total.field("area_mm2")?.as_f64()?,
+        total.field("edp_nj_ns")?.as_f64()?,
+    );
+    Ok(())
+}
+
 /// Parse a comma-separated float list option; `default` when absent.
 fn parse_f64_list(
     name: &str,
@@ -560,6 +627,7 @@ fn cmd_flow_sweep(
     cfg: &TnnConfig,
     utils: &[f64],
     aspects: &[f64],
+    cache: Option<&StageCache>,
 ) -> anyhow::Result<()> {
     // In sweep mode --threads parallelizes ACROSS targets; each job
     // simulates single-threaded so the thread budget is not squared
@@ -623,7 +691,8 @@ fn cmd_flow_sweep(
     );
     let data =
         Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
-    let results = compare::run_sweep(&jobs, registry, &data, threads);
+    let results =
+        compare::run_sweep_cached(&jobs, registry, &data, threads, cache);
     let mut failed = false;
     for r in &results {
         match &r.report {
@@ -641,6 +710,12 @@ fn cmd_flow_sweep(
                 println!("  {:<28} FAILED: {e}", r.label);
             }
         }
+    }
+    if let Some(cache) = cache {
+        let (mem, disk, misses) = cache.counters();
+        println!(
+            "  cache: mem hits {mem}  disk hits {disk}  misses {misses}"
+        );
     }
     if failed {
         anyhow::bail!("one or more sweep targets failed");
@@ -1086,5 +1161,105 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
         std::fs::write(&path, metrics.to_json().to_string_pretty())?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+fn help_serve() -> String {
+    "tnn7 serve — flow-as-a-service HTTP daemon (DESIGN.md §11)
+
+Keeps the characterized technology backends and the content-addressed
+stage cache warm across requests: repeated design-point queries are
+served entirely from cache, and changed queries re-run only the stages
+whose inputs changed.
+
+USAGE: tnn7 serve [OPTIONS]
+
+OPTIONS:
+  --addr HOST:PORT   bind address (default 127.0.0.1:7411; port 0
+                     picks an ephemeral port and prints it)
+  --threads N        worker threads, one request each (default 4)
+  --queue N          bounded request queue depth; overflow answers
+                     503 + Retry-After inline (default 64)
+  --cache-dir DIR    add the disk cache tier rooted at DIR so warm
+                     state survives daemon restarts (default: memory
+                     tier only)
+  --mem-entries N    memory-tier capacity in stage entries, LRU
+                     (default 256)
+  --config FILE      tnn7.toml ([serve] and [cache] sections supply
+                     the same settings; CLI flags win)
+
+HTTP API (one request per connection, JSON bodies):
+  POST /flow      measure a design point, e.g.
+                  {\"target\": \"custom\", \"col\": \"64x8\", \"waves\": 8}
+                  response body = the report-stage artifact, plus
+                  X-Tnn7-Cache: executed=N mem=N disk=N and
+                  X-Tnn7-Dedup: leader|joined headers
+  GET  /stats     request/cache/stage-timing counters
+  GET  /healthz   liveness probe
+  POST /shutdown  drain queued requests, then exit
+"
+    .to_string()
+}
+
+fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!("{}", help_serve());
+        return Ok(());
+    }
+    let addr = args.opt("--addr")?;
+    let threads = args.opt("--threads")?;
+    let queue = args.opt("--queue")?;
+    let cache_dir = args.opt("--cache-dir")?;
+    let mem_entries = args.opt("--mem-entries")?;
+    let cfg = load_config(args)?;
+    args.finish()?;
+
+    let mut serve = ServeConfig::from_config(&cfg);
+    if let Some(a) = addr {
+        serve.addr = a;
+    }
+    if let Some(t) = threads {
+        let t: usize = t.parse()?;
+        if t < 1 {
+            anyhow::bail!("--threads must be >= 1, got {t}");
+        }
+        serve.threads = t;
+    }
+    if let Some(q) = queue {
+        let q: usize = q.parse()?;
+        if q < 1 {
+            anyhow::bail!("--queue must be >= 1, got {q}");
+        }
+        serve.queue = q;
+    }
+    if let Some(d) = cache_dir {
+        serve.cache.dir = Some(d.into());
+    }
+    if let Some(m) = mem_entries {
+        let m: usize = m.parse()?;
+        if m < 1 {
+            anyhow::bail!("--mem-entries must be >= 1, got {m}");
+        }
+        serve.cache.mem_entries = m;
+    }
+
+    let disk = serve
+        .cache
+        .dir
+        .as_deref()
+        .map(|p| p.display().to_string())
+        .unwrap_or_else(|| "off".into());
+    let handle = Server::spawn(serve.clone())?;
+    println!("tnn7 serve listening on http://{}", handle.addr());
+    println!(
+        "  workers {}  queue {}  cache: {} mem entries, disk {}",
+        serve.threads.max(1),
+        serve.queue.max(1),
+        serve.cache.mem_entries,
+        disk
+    );
+    println!("  POST /flow  GET /stats  GET /healthz  POST /shutdown");
+    handle.join();
+    println!("tnn7 serve: drained and stopped");
     Ok(())
 }

@@ -66,6 +66,7 @@ impl ColumnSpec {
 }
 
 /// Elaborated column ports (all primary I/O nets).
+#[derive(Debug, Clone)]
 pub struct ColumnPorts {
     /// p input spike levels (rise at the encoded time, hold until grst).
     pub x: Vec<NetId>,

@@ -6,6 +6,26 @@
 //! general-purpose library — a strict, well-tested reader for trusted
 //! build artifacts plus the pretty-printer [`crate::flow`] uses for its
 //! per-stage dump files.
+//!
+//! # Canonical serialization
+//!
+//! Both writers ([`Json::to_string_pretty`] and
+//! [`Json::to_string_compact`]) are *canonical*: the same [`Json`]
+//! value always serializes to the same bytes, across runs and across
+//! processes.  The flow's content-addressed stage cache
+//! ([`crate::flow::cache`]) and its golden dump artifacts depend on
+//! this, so the guarantees are explicit:
+//!
+//! * **Stable key order** — objects are [`BTreeMap`]s, so keys emit in
+//!   sorted order regardless of insertion order.
+//! * **Shortest-round-trip floats** — numbers go through [`fmt_num`]:
+//!   integer-valued magnitudes below 2^53 print as integers, everything
+//!   else uses Rust's shortest-representation `{}` formatting for
+//!   `f64`, which is guaranteed to parse back to the identical bit
+//!   pattern.  Non-finite values (unrepresentable in JSON) degrade to
+//!   `null`.
+//! * **Deterministic escapes** — strings escape the same characters the
+//!   same way every time.
 
 use std::collections::BTreeMap;
 
@@ -120,6 +140,47 @@ impl Json {
         self.write(&mut out, 0);
         out.push('\n');
         out
+    }
+
+    /// Single-line canonical form: no whitespace, sorted keys, the
+    /// same number/escape rules as the pretty writer.  This is the
+    /// serialization hashed into cache keys and HTTP request
+    /// fingerprints, where every byte must be deterministic.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => out.push_str(&fmt_num(*n)),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
     }
 
     fn write(&self, out: &mut String, indent: usize) {
@@ -451,5 +512,50 @@ mod tests {
         assert_eq!(text.trim(), "null");
         let text = Json::num(f64::INFINITY).to_string_pretty();
         assert_eq!(text.trim(), "null");
+    }
+
+    #[test]
+    fn compact_writer_round_trips_and_sorts_keys() {
+        let doc = Json::obj(vec![
+            ("zeta", Json::num(0.1)),
+            ("alpha", Json::num(-7.0)),
+            ("mid", Json::Arr(vec![Json::str("a b"), Json::Bool(false)])),
+        ]);
+        let text = doc.to_string_compact();
+        // Insertion order was z, a, m — output must be sorted.
+        assert_eq!(text, r#"{"alpha":-7,"mid":["a b",false],"zeta":0.1}"#);
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn compact_and_pretty_agree_on_number_formatting() {
+        for n in [0.1, 1.0 / 3.0, 2.5e-7, 1e14, -0.0, 42.0, 6.02e23] {
+            let c = Json::num(n).to_string_compact();
+            let p = Json::num(n).to_string_pretty();
+            assert_eq!(c, p.trim());
+        }
+    }
+
+    #[test]
+    fn serialization_is_byte_stable() {
+        // Same logical value, different construction order and float
+        // provenance — the bytes must not vary.  Cache keys hash this.
+        let a = Json::obj(vec![
+            ("x", Json::num(0.1f64 + 0.2f64)),
+            ("y", Json::str("wave")),
+        ]);
+        let b = Json::obj(vec![
+            ("y", Json::str("wave")),
+            ("x", Json::num(0.30000000000000004f64)),
+        ]);
+        assert_eq!(a.to_string_compact(), b.to_string_compact());
+        assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+        // Shortest round-trip: parsing the emitted text reproduces the
+        // exact bit pattern.
+        let text = a.to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        let x = back.field("x").unwrap().as_f64().unwrap();
+        assert_eq!(x.to_bits(), (0.1f64 + 0.2f64).to_bits());
+        assert_eq!(back.to_string_compact(), text);
     }
 }

@@ -1,0 +1,366 @@
+//! The daemon's request schema: a [`FlowQuery`] names one design point
+//! to measure, in the same vocabulary as the `tnn7 flow` CLI.
+//!
+//! ```json
+//! {"target": "custom", "tech": "asap7-tnn7", "col": "64x8",
+//!  "waves": 8, "lanes": 4, "threads": 2,
+//!  "place": true, "util": 0.7, "aspect": 1.0}
+//! ```
+//!
+//! Parsing is strict: unknown fields are rejected (the same typo
+//! safety as the TOML config), and the technology must resolve through
+//! the server's built-in registry — a network request can never name a
+//! `.lib` filesystem path.
+//!
+//! [`FlowQuery::fingerprint`] is the canonical identity used for
+//! in-flight request deduplication.  It deliberately excludes
+//! `lanes`/`threads` (execution details proven not to change measured
+//! activity), so two clients asking for the same design point at
+//! different parallelism settings share one computation.
+
+use crate::config::TnnConfig;
+use crate::error::{Error, Result};
+use crate::flow::cache::Fnv;
+use crate::flow::{parse_geometry, Geometry, Target};
+use crate::netlist::column::ColumnSpec;
+use crate::netlist::Flavor;
+use crate::runtime::json::Json;
+use crate::tech::{BackendId, TechRegistry};
+
+/// One parsed, validated `/flow` request.
+#[derive(Debug, Clone)]
+pub struct FlowQuery {
+    pub flavor: Flavor,
+    /// Canonical backend name (post registry resolution).
+    pub tech: String,
+    pub geometry: Geometry,
+    pub waves: usize,
+    pub lanes: usize,
+    pub threads: usize,
+    pub place: bool,
+    pub util: f64,
+    pub aspect: f64,
+}
+
+impl FlowQuery {
+    /// Parse a request body, resolving and validating the technology
+    /// against `registry` (daemon requests are restricted to built-in
+    /// backends).
+    pub fn parse(body: &str, registry: &TechRegistry) -> Result<FlowQuery> {
+        let j = Json::parse(body)
+            .map_err(|e| Error::config(format!("bad JSON body: {e}")))?;
+        let obj = match &j {
+            Json::Obj(m) => m,
+            _ => {
+                return Err(Error::config(
+                    "request body must be a JSON object",
+                ))
+            }
+        };
+        const KNOWN: [&str; 10] = [
+            "target", "tech", "col", "proto", "waves", "lanes",
+            "threads", "place", "util", "aspect",
+        ];
+        for k in obj.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                return Err(Error::config(format!(
+                    "unknown field `{k}` (known: {})",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+
+        let flavor = match j.field("target")?.as_str()? {
+            "std" | "standard" | "baseline" => Flavor::Std,
+            "custom" | "gdi" => Flavor::Custom,
+            other => {
+                return Err(Error::config(format!(
+                    "unknown target flavor `{other}` (std|custom)"
+                )))
+            }
+        };
+
+        let tech_req = match j.get("tech") {
+            Some(v) => v.as_str()?.to_string(),
+            None => BackendId::default().as_str().to_string(),
+        };
+        // Resolve now: unknown backends fail the request, and the
+        // canonical name makes `7nm` and `asap7-tnn7` one identity.
+        let tech = registry.get(&tech_req)?.name().to_string();
+
+        let proto = match j.get("proto") {
+            Some(Json::Bool(b)) => *b,
+            Some(_) => {
+                return Err(Error::config("`proto` must be a boolean"))
+            }
+            None => false,
+        };
+        let geometry = match (j.get("col"), proto) {
+            (Some(_), true) => {
+                return Err(Error::config(
+                    "`col` and `proto` are mutually exclusive",
+                ))
+            }
+            (Some(v), false) => {
+                let (p, q) = parse_geometry(v.as_str()?)?;
+                Geometry::Column(ColumnSpec::benchmark(p, q))
+            }
+            (None, true) => match Target::prototype(flavor).geometry {
+                g @ Geometry::Prototype(_) => g,
+                _ => unreachable!("prototype target has prototype geometry"),
+            },
+            (None, false) => {
+                Geometry::Column(ColumnSpec::benchmark(64, 8))
+            }
+        };
+
+        let d = TnnConfig::default();
+        let get_count = |key: &str, default: usize| -> Result<usize> {
+            match j.get(key) {
+                Some(v) => {
+                    let n = v.as_usize().map_err(|_| {
+                        Error::config(format!(
+                            "`{key}` must be a non-negative integer"
+                        ))
+                    })?;
+                    if n == 0 {
+                        return Err(Error::config(format!(
+                            "`{key}` must be >= 1"
+                        )));
+                    }
+                    Ok(n)
+                }
+                None => Ok(default),
+            }
+        };
+        let waves = get_count("waves", d.sim_waves)?;
+        let lanes = get_count("lanes", d.sim_lanes)?;
+        if lanes > 64 {
+            return Err(Error::config(format!(
+                "`lanes` must be in 1..=64, got {lanes}"
+            )));
+        }
+        let threads = get_count("threads", d.sim_threads)?;
+
+        let place = match j.get("place") {
+            Some(Json::Bool(b)) => *b,
+            Some(_) => {
+                return Err(Error::config("`place` must be a boolean"))
+            }
+            None => false,
+        };
+        let util = match j.get("util") {
+            Some(v) => v.as_f64()?,
+            None => d.place_util,
+        };
+        if !(util > 0.0 && util <= 1.0) {
+            return Err(Error::config(format!(
+                "`util` must be in (0, 1], got {util}"
+            )));
+        }
+        let aspect = match j.get("aspect") {
+            Some(v) => v.as_f64()?,
+            None => d.place_aspect,
+        };
+        if !(aspect > 0.0 && aspect.is_finite()) {
+            return Err(Error::config(format!(
+                "`aspect` must be positive, got {aspect}"
+            )));
+        }
+
+        Ok(FlowQuery {
+            flavor,
+            tech,
+            geometry,
+            waves,
+            lanes,
+            threads,
+            place,
+            util,
+            aspect,
+        })
+    }
+
+    /// The design-point target this query measures.
+    pub fn target(&self) -> Target {
+        Target {
+            flavor: self.flavor,
+            tech: BackendId::new(&self.tech),
+            geometry: self.geometry,
+        }
+    }
+
+    /// The measurement config this query implies (defaults for
+    /// everything it does not name).
+    pub fn config(&self) -> TnnConfig {
+        TnnConfig {
+            sim_waves: self.waves,
+            sim_lanes: self.lanes,
+            sim_threads: self.threads,
+            place: self.place,
+            place_util: self.util,
+            place_aspect: self.aspect,
+            ..TnnConfig::default()
+        }
+    }
+
+    /// Canonical identity for in-flight deduplication.  Excludes
+    /// `lanes`/`threads`: they change wall time, never results, so
+    /// concurrent duplicates at different parallelism settings join
+    /// one computation.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.str("tnn7-serve-v1");
+        h.str(match self.flavor {
+            Flavor::Std => "std",
+            Flavor::Custom => "custom",
+        });
+        h.str(&self.tech);
+        match &self.geometry {
+            Geometry::Column(s) => {
+                h.u8(0);
+                h.usize(s.p);
+                h.usize(s.q);
+                h.u64(s.theta);
+            }
+            Geometry::Prototype(_) => h.u8(1),
+        }
+        h.usize(self.waves);
+        h.u8(self.place as u8);
+        h.f64(self.util);
+        h.f64(self.aspect);
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> TechRegistry {
+        TechRegistry::builtin()
+    }
+
+    #[test]
+    fn parses_full_query() {
+        let q = FlowQuery::parse(
+            r#"{"target": "custom", "tech": "asap7-baseline",
+                "col": "8x4", "waves": 2, "lanes": 4, "threads": 2,
+                "place": true, "util": 0.6, "aspect": 2.0}"#,
+            &reg(),
+        )
+        .unwrap();
+        assert_eq!(q.flavor, Flavor::Custom);
+        assert_eq!(q.tech, "asap7-baseline");
+        match q.geometry {
+            Geometry::Column(s) => {
+                assert_eq!((s.p, s.q), (8, 4));
+                assert_eq!(s.theta, ColumnSpec::benchmark(8, 4).theta);
+            }
+            _ => panic!("expected column geometry"),
+        }
+        assert_eq!((q.waves, q.lanes, q.threads), (2, 4, 2));
+        assert!(q.place);
+        let cfg = q.config();
+        assert_eq!(cfg.sim_waves, 2);
+        assert!((cfg.place_util - 0.6).abs() < 1e-12);
+        assert_eq!(q.target().describe(), "custom:asap7-baseline 8x4");
+    }
+
+    #[test]
+    fn defaults_match_cli_defaults() {
+        let q =
+            FlowQuery::parse(r#"{"target": "std"}"#, &reg()).unwrap();
+        let d = TnnConfig::default();
+        assert_eq!(q.waves, d.sim_waves);
+        assert_eq!(q.lanes, d.sim_lanes);
+        assert!(!q.place);
+        assert_eq!(q.tech, crate::tech::ASAP7_TNN7);
+        match q.geometry {
+            Geometry::Column(s) => assert_eq!((s.p, s.q), (64, 8)),
+            _ => panic!("expected default 64x8 column"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_queries() {
+        let r = reg();
+        // Unknown field (typo safety).
+        assert!(FlowQuery::parse(
+            r#"{"target": "std", "wavez": 2}"#,
+            &r
+        )
+        .is_err());
+        // Unregistered backend, including filesystem paths.
+        assert!(FlowQuery::parse(
+            r#"{"target": "std", "tech": "out/evil.lib"}"#,
+            &r
+        )
+        .is_err());
+        // col and proto at once.
+        assert!(FlowQuery::parse(
+            r#"{"target": "std", "col": "8x4", "proto": true}"#,
+            &r
+        )
+        .is_err());
+        // Range errors.
+        assert!(
+            FlowQuery::parse(r#"{"target": "std", "waves": 0}"#, &r)
+                .is_err()
+        );
+        assert!(
+            FlowQuery::parse(r#"{"target": "std", "lanes": 65}"#, &r)
+                .is_err()
+        );
+        assert!(
+            FlowQuery::parse(r#"{"target": "std", "util": 1.5}"#, &r)
+                .is_err()
+        );
+        // Not an object / not JSON.
+        assert!(FlowQuery::parse("[1,2]", &r).is_err());
+        assert!(FlowQuery::parse("not json", &r).is_err());
+        assert!(FlowQuery::parse(r#"{"target": "vhdl"}"#, &r).is_err());
+    }
+
+    #[test]
+    fn fingerprint_ignores_lanes_and_threads_only() {
+        let r = reg();
+        let base = FlowQuery::parse(
+            r#"{"target": "std", "col": "8x4", "waves": 2}"#,
+            &r,
+        )
+        .unwrap();
+        let parallel = FlowQuery::parse(
+            r#"{"target": "std", "col": "8x4", "waves": 2,
+                "lanes": 8, "threads": 4}"#,
+            &r,
+        )
+        .unwrap();
+        assert_eq!(base.fingerprint(), parallel.fingerprint());
+
+        for different in [
+            r#"{"target": "custom", "col": "8x4", "waves": 2}"#,
+            r#"{"target": "std", "col": "8x5", "waves": 2}"#,
+            r#"{"target": "std", "col": "8x4", "waves": 3}"#,
+            r#"{"target": "std", "col": "8x4", "waves": 2, "place": true}"#,
+            r#"{"target": "std", "col": "8x4", "waves": 2,
+                "tech": "n45-projected"}"#,
+            r#"{"target": "std", "proto": true, "waves": 2}"#,
+        ] {
+            let q = FlowQuery::parse(different, &r).unwrap();
+            assert_ne!(
+                base.fingerprint(),
+                q.fingerprint(),
+                "{different} must not alias the base query"
+            );
+        }
+
+        // Canonical tech aliases share one identity.
+        let alias = FlowQuery::parse(
+            r#"{"target": "std", "col": "8x4", "waves": 2, "tech": "7nm"}"#,
+            &r,
+        )
+        .unwrap();
+        assert_eq!(base.fingerprint(), alias.fingerprint());
+    }
+}

@@ -1,0 +1,457 @@
+//! The `tnn7 serve` daemon: a persistent flow service over a bounded
+//! worker pool, with content-addressed stage caching and in-flight
+//! request deduplication (DESIGN.md §11).
+//!
+//! Architecture (std-only, no async runtime):
+//!
+//! ```text
+//!  accept thread ──try_send──► bounded queue ──► N worker threads
+//!       │ (full ⇒ inline 503 + Retry-After)        │
+//!       │                                          ├─ parse + route
+//!       └─ polls the shutdown flag                 ├─ dedup map (join
+//!                                                  │  identical in-flight
+//!                                                  │  queries)
+//!                                                  └─ Flow::run_cached
+//!                                                     against the shared
+//!                                                     StageCache
+//! ```
+//!
+//! Shutdown is graceful by construction: the accept thread stops
+//! accepting and drops the queue sender; workers drain every request
+//! already queued, then exit when the channel closes.
+
+use std::collections::{BTreeMap, HashMap};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::TnnConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::flow::cache::{CacheConfig, StageCache};
+use crate::flow::{Flow, FlowContext};
+use crate::runtime::json::Json;
+use crate::tech::TechRegistry;
+
+use super::api::FlowQuery;
+use super::http::{read_request, Request, Response};
+
+/// How often the accept loop polls the shutdown flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Per-connection socket read timeout (a stalled client must not pin a
+/// worker forever).
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Daemon construction parameters (the `[serve]`/`[cache]` config
+/// sections plus CLI overrides).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port — the test
+    /// and bench idiom).
+    pub addr: String,
+    /// Worker threads; each runs one request at a time.
+    pub threads: usize,
+    /// Bounded request queue depth; overflow answers 503 inline.
+    pub queue: usize,
+    /// Stage-cache sizing (memory tier + optional disk tier).
+    pub cache: CacheConfig,
+    /// Test hook: hold each *leader* `/flow` request this long before
+    /// running the flow, so concurrent duplicates deterministically
+    /// pile onto the dedup map.  0 (the default) in production.
+    pub debug_flow_delay_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let d = TnnConfig::default();
+        ServeConfig {
+            addr: d.serve_addr,
+            threads: d.serve_threads,
+            queue: d.serve_queue,
+            cache: CacheConfig::default(),
+            debug_flow_delay_ms: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Daemon settings from a parsed config file (`[serve]` and
+    /// `[cache]` sections; the daemon always caches, so `cache.dir`
+    /// simply adds the disk tier).
+    pub fn from_config(cfg: &TnnConfig) -> ServeConfig {
+        ServeConfig {
+            addr: cfg.serve_addr.clone(),
+            threads: cfg.serve_threads,
+            queue: cfg.serve_queue,
+            cache: CacheConfig {
+                mem_entries: cfg.cache_mem_entries,
+                dir: if cfg.cache_dir.is_empty() {
+                    None
+                } else {
+                    Some(cfg.cache_dir.clone().into())
+                },
+            },
+            debug_flow_delay_ms: 0,
+        }
+    }
+}
+
+/// One in-flight `/flow` computation followers can join: the leader
+/// fills `slot` and broadcasts on `cv`.
+struct InFlight {
+    slot: Mutex<Option<Response>>,
+    cv: Condvar,
+}
+
+/// Shared daemon state: registry, cache, dedup map, counters.
+struct ServerState {
+    registry: TechRegistry,
+    cache: StageCache,
+    /// Stimulus datasets by (sample count, seed) — generated once,
+    /// shared by every worker (mirrors [`FlowContext::new`]).
+    datasets: Mutex<HashMap<(usize, u64), Arc<Dataset>>>,
+    inflight: Mutex<HashMap<u64, Arc<InFlight>>>,
+    shutdown: AtomicBool,
+    requests: AtomicU64,
+    flow_requests: AtomicU64,
+    errors: AtomicU64,
+    overloads: AtomicU64,
+    dedup_joins: AtomicU64,
+    flow_micros: AtomicU64,
+    /// Per-stage (runs, total µs) aggregates across all requests.
+    stage_times: Mutex<BTreeMap<&'static str, (u64, u64)>>,
+    debug_flow_delay_ms: u64,
+}
+
+impl ServerState {
+    fn stats_json(&self) -> Json {
+        let stages = {
+            let times = self.stage_times.lock().unwrap();
+            Json::Obj(
+                times
+                    .iter()
+                    .map(|(name, (runs, micros))| {
+                        (
+                            name.to_string(),
+                            Json::obj(vec![
+                                ("runs", Json::int(*runs)),
+                                ("micros_total", Json::int(*micros)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            (
+                "requests",
+                Json::int(self.requests.load(Ordering::Relaxed)),
+            ),
+            (
+                "flow_requests",
+                Json::int(self.flow_requests.load(Ordering::Relaxed)),
+            ),
+            ("errors", Json::int(self.errors.load(Ordering::Relaxed))),
+            (
+                "overloads",
+                Json::int(self.overloads.load(Ordering::Relaxed)),
+            ),
+            (
+                "dedup_joins",
+                Json::int(self.dedup_joins.load(Ordering::Relaxed)),
+            ),
+            (
+                "flow_micros_total",
+                Json::int(self.flow_micros.load(Ordering::Relaxed)),
+            ),
+            ("stages", stages),
+            ("cache", self.cache.stats_json()),
+            (
+                "inflight",
+                Json::int(self.inflight.lock().unwrap().len() as u64),
+            ),
+            (
+                "shutting_down",
+                Json::Bool(self.shutdown.load(Ordering::SeqCst)),
+            ),
+        ])
+    }
+}
+
+/// The daemon entry point: [`Server::spawn`] binds, starts the worker
+/// pool, and returns a [`ServerHandle`] for the caller to await.
+pub struct Server;
+
+impl Server {
+    /// Bind `cfg.addr`, start the accept loop and worker pool, and
+    /// return immediately.  The CLI calls this and then
+    /// [`ServerHandle::join`]; tests and benches keep the handle to
+    /// query the ephemeral port and trigger shutdown.
+    pub fn spawn(cfg: ServeConfig) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+
+        let state = Arc::new(ServerState {
+            registry: TechRegistry::builtin(),
+            cache: StageCache::new(cfg.cache.clone()),
+            datasets: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            requests: AtomicU64::new(0),
+            flow_requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            overloads: AtomicU64::new(0),
+            dedup_joins: AtomicU64::new(0),
+            flow_micros: AtomicU64::new(0),
+            stage_times: Mutex::new(BTreeMap::new()),
+            debug_flow_delay_ms: cfg.debug_flow_delay_ms,
+        });
+
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(cfg.queue.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..cfg.threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let state = Arc::clone(&state);
+                std::thread::spawn(move || worker_loop(&rx, &state))
+            })
+            .collect();
+        let accept = {
+            let state = Arc::clone(&state);
+            std::thread::spawn(move || accept_loop(&listener, tx, &state))
+        };
+        Ok(ServerHandle { addr, state, accept, workers })
+    }
+}
+
+/// A running daemon: its bound address and the threads to await.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    accept: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request shutdown (same effect as `POST /shutdown`): stop
+    /// accepting, drain queued work, exit.
+    pub fn shutdown(&self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the accept loop and every worker have exited.
+    pub fn join(self) {
+        let _ = self.accept.join();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    tx: SyncSender<TcpStream>,
+    state: &ServerState,
+) {
+    loop {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+                match tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(mut stream)) => {
+                        // Bounded-queue overflow: answer on the accept
+                        // thread so the client gets a structured 503
+                        // instead of an unexplained stall.
+                        state.overloads.fetch_add(1, Ordering::Relaxed);
+                        let _ = Response::error(
+                            503,
+                            "request queue is full, retry shortly",
+                        )
+                        .with_header("Retry-After", "1")
+                        .write_to(&mut stream);
+                    }
+                    Err(TrySendError::Disconnected(_)) => break,
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    // Dropping `tx` here closes the queue: workers finish what is
+    // already queued, then exit — the graceful drain.
+}
+
+fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, state: &ServerState) {
+    loop {
+        let conn = rx.lock().unwrap().recv();
+        match conn {
+            Ok(mut stream) => {
+                state.requests.fetch_add(1, Ordering::Relaxed);
+                let resp = match read_request(&stream) {
+                    Ok(req) => route(state, &req),
+                    Err(e) => Response::error(400, &e.to_string()),
+                };
+                if resp.status >= 400 {
+                    state.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = resp.write_to(&mut stream);
+            }
+            Err(_) => break, // channel closed: shutdown drain complete
+        }
+    }
+}
+
+fn route(state: &ServerState, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(
+            200,
+            Json::obj(vec![("status", Json::str("ok"))])
+                .to_string_pretty(),
+        ),
+        ("GET", "/stats") => {
+            Response::json(200, state.stats_json().to_string_pretty())
+        }
+        ("POST", "/shutdown") => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            Response::json(
+                200,
+                Json::obj(vec![(
+                    "status",
+                    Json::str("draining and shutting down"),
+                )])
+                .to_string_pretty(),
+            )
+        }
+        ("POST", "/flow") => handle_flow(state, &req.body),
+        ("GET" | "POST", path) => Response::error(
+            404,
+            &format!(
+                "unknown path `{path}` (POST /flow, GET /stats, \
+                 GET /healthz, POST /shutdown)"
+            ),
+        ),
+        (method, _) => Response::error(
+            405,
+            &format!("unsupported method `{method}`"),
+        ),
+    }
+}
+
+fn handle_flow(state: &ServerState, body: &str) -> Response {
+    let query = match FlowQuery::parse(body, &state.registry) {
+        Ok(q) => q,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    let fp = query.fingerprint();
+
+    // Dedup: one leader computes, identical concurrent queries join
+    // and receive the exact same response (same body Arc).
+    let (inflight, leader) = {
+        let mut map = state.inflight.lock().unwrap();
+        match map.get(&fp) {
+            Some(inf) => (Arc::clone(inf), false),
+            None => {
+                let inf = Arc::new(InFlight {
+                    slot: Mutex::new(None),
+                    cv: Condvar::new(),
+                });
+                map.insert(fp, Arc::clone(&inf));
+                (inf, true)
+            }
+        }
+    };
+
+    if !leader {
+        state.dedup_joins.fetch_add(1, Ordering::Relaxed);
+        let mut slot = inflight.slot.lock().unwrap();
+        while slot.is_none() {
+            slot = inflight.cv.wait(slot).unwrap();
+        }
+        return slot
+            .clone()
+            .expect("slot filled before broadcast")
+            .with_header("X-Tnn7-Dedup", "joined");
+    }
+
+    if state.debug_flow_delay_ms > 0 {
+        std::thread::sleep(Duration::from_millis(
+            state.debug_flow_delay_ms,
+        ));
+    }
+    // A panicking flow must still wake followers (with a 500), never
+    // leave them blocked on the condvar.
+    let resp = catch_unwind(AssertUnwindSafe(|| run_flow(state, &query)))
+        .unwrap_or_else(|_| {
+            Response::error(500, "flow execution panicked")
+        });
+    {
+        let mut slot = inflight.slot.lock().unwrap();
+        *slot = Some(resp.clone());
+        inflight.cv.notify_all();
+    }
+    state.inflight.lock().unwrap().remove(&fp);
+    resp.with_header("X-Tnn7-Dedup", "leader")
+}
+
+fn run_flow(state: &ServerState, query: &FlowQuery) -> Response {
+    state.flow_requests.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    let cfg = query.config();
+    let tech = match state.registry.get(&query.tech) {
+        Ok(t) => t,
+        Err(e) => return Response::error(500, &e.to_string()),
+    };
+    let data = {
+        let key = (cfg.sim_waves.max(4), cfg.data_seed);
+        let mut sets = state.datasets.lock().unwrap();
+        Arc::clone(sets.entry(key).or_insert_with(|| {
+            Arc::new(Dataset::generate(key.0, key.1))
+        }))
+    };
+    let mut ctx =
+        FlowContext::with_tech(query.target(), cfg.clone(), tech, data);
+    let trace = match Flow::measurement_for(&cfg)
+        .run_cached(&mut ctx, Some(&state.cache))
+    {
+        Ok(t) => t,
+        Err(e) => return Response::error(500, &e.to_string()),
+    };
+    {
+        let mut times = state.stage_times.lock().unwrap();
+        for s in &trace.stages {
+            let e = times.entry(s.name).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += s.micros as u64;
+        }
+    }
+    state
+        .flow_micros
+        .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    let Some(body) = trace.dump_for("report") else {
+        return Response::error(
+            500,
+            "flow produced no report artifact",
+        );
+    };
+    Response { status: 200, headers: Vec::new(), body }
+        .with_header("X-Tnn7-Cache", trace.cache_line())
+}

@@ -1,0 +1,308 @@
+//! Minimal HTTP/1.1 reader/writer for the `tnn7 serve` daemon.
+//!
+//! No dependency budget means no hyper: this is a strict, small subset
+//! — one request per connection (`Connection: close`), request line +
+//! headers + optional `Content-Length` body, bounded at 1 MiB.  It is
+//! deliberately not a general HTTP implementation; it parses exactly
+//! what the daemon's API needs and answers everything else with a
+//! structured error response.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+/// Largest request body the daemon accepts.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Largest request head (request line + headers) the daemon accepts.
+const MAX_HEAD_BYTES: usize = 16 << 10;
+
+/// A parsed request: method, path, and the (possibly empty) body.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read one request from the stream.  The caller sets read timeouts;
+/// malformed or oversized requests return structured errors the
+/// connection handler converts into 400 responses.
+pub fn read_request(stream: &TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| Error::runtime("empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| Error::runtime("request line has no path"))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or_else(|| Error::runtime("request line has no version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(Error::runtime(format!(
+            "unsupported protocol `{version}`"
+        )));
+    }
+
+    let mut content_length = 0usize;
+    let mut head_bytes = line.len();
+    loop {
+        let mut h = String::new();
+        let n = reader.read_line(&mut h)?;
+        if n == 0 {
+            return Err(Error::runtime("connection closed mid-headers"));
+        }
+        head_bytes += n;
+        if head_bytes > MAX_HEAD_BYTES {
+            return Err(Error::runtime("request head too large"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().map_err(|_| {
+                        Error::runtime(format!(
+                            "bad Content-Length `{}`",
+                            value.trim()
+                        ))
+                    })?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(Error::runtime(format!(
+            "request body too large ({content_length} bytes, max \
+             {MAX_BODY_BYTES})"
+        )));
+    }
+
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body)
+        .map_err(|_| Error::runtime("request body is not UTF-8"))?;
+    Ok(Request { method, path, body })
+}
+
+/// An outgoing response.  The body is `Arc`-shared so deduplicated
+/// requests serve the exact same bytes without copying.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    /// Extra headers beyond the always-present Content-Type /
+    /// Content-Length / Connection set.
+    pub headers: Vec<(String, String)>,
+    pub body: Arc<String>,
+}
+
+impl Response {
+    /// A JSON response with the given status.
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            headers: Vec::new(),
+            body: Arc::new(body.into()),
+        }
+    }
+
+    /// A structured error body: `{"error": "..."}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        let body = crate::runtime::json::Json::obj(vec![(
+            "error",
+            crate::runtime::json::Json::str(msg),
+        )])
+        .to_string_pretty();
+        Response::json(status, body)
+    }
+
+    /// Builder-style extra header.
+    pub fn with_header(
+        mut self,
+        name: impl Into<String>,
+        value: impl Into<String>,
+    ) -> Response {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    /// Serialize onto the stream.  Write errors are returned so the
+    /// worker can count them, but a closed peer is not a daemon error.
+    pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\n",
+            self.status,
+            status_text(self.status)
+        );
+        head.push_str("Content-Type: application/json\r\n");
+        head.push_str(&format!(
+            "Content-Length: {}\r\n",
+            self.body.len()
+        ));
+        head.push_str("Connection: close\r\n");
+        for (name, value) in &self.headers {
+            head.push_str(&format!("{name}: {value}\r\n"));
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(self.body.as_bytes())?;
+        stream.flush()
+    }
+}
+
+/// A one-shot HTTP client for the daemon's own API — what the
+/// integration tests and the `serve_throughput` bench drive requests
+/// with (no curl dependency inside the test suite).
+pub fn fetch(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<FetchedResponse> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    stream.write_all(
+        format!(
+            "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )?;
+    let mut raw = String::new();
+    BufReader::new(stream).read_to_string(&mut raw)?;
+    let (head, resp_body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| Error::runtime("response has no header break"))?;
+    let mut lines = head.lines();
+    let status_line = lines
+        .next()
+        .ok_or_else(|| Error::runtime("empty response"))?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            Error::runtime(format!("bad status line `{status_line}`"))
+        })?;
+    let headers = lines
+        .filter_map(|l| {
+            l.split_once(':').map(|(n, v)| {
+                (n.trim().to_ascii_lowercase(), v.trim().to_string())
+            })
+        })
+        .collect();
+    Ok(FetchedResponse {
+        status,
+        headers,
+        body: resp_body.to_string(),
+    })
+}
+
+/// A response read back by [`fetch`], headers lower-cased.
+#[derive(Debug, Clone)]
+pub struct FetchedResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl FetchedResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Round-trip a request and response over a real local socket pair.
+    #[test]
+    fn parses_request_and_writes_response() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let req = read_request(&stream).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/flow");
+            assert_eq!(req.body, "{\"a\":1}");
+            let mut stream = stream;
+            Response::json(200, "{}")
+                .with_header("X-Tnn7-Cache", "executed=0 mem=6 disk=0")
+                .write_to(&mut stream)
+                .unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        // Header-name case must not matter.
+        c.write_all(
+            b"POST /flow HTTP/1.1\r\ncOnTeNt-LeNgTh: 7\r\n\r\n{\"a\":1}",
+        )
+        .unwrap();
+        let mut reply = String::new();
+        c.read_to_string(&mut reply).unwrap();
+        t.join().unwrap();
+        assert!(reply.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(reply.contains("X-Tnn7-Cache: executed=0 mem=6 disk=0"));
+        assert!(reply.contains("Connection: close"));
+        assert!(reply.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn rejects_oversized_and_malformed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        for raw in [
+            format!(
+                "POST /flow HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                MAX_BODY_BYTES + 1
+            ),
+            "POST /flow HTTP/1.1\r\nContent-Length: nope\r\n\r\n"
+                .to_string(),
+            "GARBAGE\r\n\r\n".to_string(),
+            "GET /x SPDY/3\r\n\r\n".to_string(),
+        ] {
+            let t = std::thread::spawn({
+                let listener = listener.try_clone().unwrap();
+                move || {
+                    let (stream, _) = listener.accept().unwrap();
+                    read_request(&stream).is_err()
+                }
+            });
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(raw.as_bytes()).unwrap();
+            drop(c);
+            assert!(t.join().unwrap(), "request should be rejected: {raw:?}");
+        }
+    }
+}

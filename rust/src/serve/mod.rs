@@ -1,0 +1,42 @@
+//! Flow-as-a-service: the `tnn7 serve` daemon (DESIGN.md §11).
+//!
+//! The flow pipeline ([`crate::flow`]) is a library; this module makes
+//! it a persistent service.  A daemon process keeps the characterized
+//! technology backends, stimulus datasets, and — crucially — the
+//! content-addressed stage cache ([`crate::flow::cache`]) warm across
+//! requests, so interactive design-space exploration pays elaboration
+//! and simulation once per distinct design point instead of once per
+//! invocation.
+//!
+//! Everything is hand-rolled on `std::net` (no new dependencies):
+//!
+//! * [`http`] — a strict HTTP/1.1 subset: one request per connection,
+//!   bounded body, structured error responses.
+//! * [`api`] — the [`FlowQuery`] request schema with typo-safe
+//!   parsing and the canonical dedup fingerprint.
+//! * [`daemon`] — the [`Server`]: nonblocking accept loop, bounded
+//!   queue with inline 503 overload responses, worker-thread pool,
+//!   in-flight deduplication, `/stats` counters, graceful drain on
+//!   shutdown.
+//!
+//! ## HTTP API
+//!
+//! | Route            | Meaning                                        |
+//! |------------------|------------------------------------------------|
+//! | `POST /flow`     | Measure a design point; body = [`FlowQuery`]   |
+//! | `GET /stats`     | Request/cache/stage-timing counters            |
+//! | `GET /healthz`   | Liveness probe                                 |
+//! | `POST /shutdown` | Drain queued work and exit                     |
+//!
+//! `/flow` responses carry the report-stage dump verbatim as the body
+//! (byte-identical whether computed or replayed from cache) plus two
+//! diagnostic headers: `X-Tnn7-Cache: executed=N mem=N disk=N` (how the
+//! pipeline was satisfied) and `X-Tnn7-Dedup: leader|joined` (whether
+//! this request computed or joined an identical in-flight one).
+
+pub mod api;
+pub mod daemon;
+pub mod http;
+
+pub use api::FlowQuery;
+pub use daemon::{ServeConfig, Server, ServerHandle};

@@ -1,0 +1,329 @@
+//! Integration tests for the `tnn7 serve` daemon and the stage cache
+//! (DESIGN.md §11): a real server on an ephemeral port, driven through
+//! the same one-shot HTTP client the bench uses.
+//!
+//! The acceptance criteria live here: a repeated identical query is
+//! served entirely from cache (`executed=0`, asserted via the
+//! `X-Tnn7-Cache` header) with a byte-identical body, and changing
+//! only the simulate config re-runs only simulate-and-later.
+
+use std::sync::Arc;
+
+use tnn7::config::TnnConfig;
+use tnn7::data::digits::XorShift;
+use tnn7::data::Dataset;
+use tnn7::flow::cache::StageCache;
+use tnn7::flow::{self, Target};
+use tnn7::netlist::column::ColumnSpec;
+use tnn7::netlist::Flavor;
+use tnn7::runtime::json::Json;
+use tnn7::serve::http::fetch;
+use tnn7::serve::{ServeConfig, Server, ServerHandle};
+use tnn7::tech::TechRegistry;
+
+/// A tiny-column query body: cheap enough that the whole suite runs in
+/// seconds, real enough to exercise all six stages.
+const TINY: &str = r#"{"target": "custom", "col": "8x4", "waves": 2}"#;
+
+fn spawn(threads: usize, queue: usize, delay_ms: u64) -> ServerHandle {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads,
+        queue,
+        debug_flow_delay_ms: delay_ms,
+        ..ServeConfig::default()
+    };
+    Server::spawn(cfg).expect("server spawns on an ephemeral port")
+}
+
+fn stop(handle: ServerHandle) {
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn repeated_query_is_all_cache_and_byte_identical() {
+    let h = spawn(2, 16, 0);
+    let cold = fetch(h.addr(), "POST", "/flow", TINY).unwrap();
+    assert_eq!(cold.status, 200, "cold body: {}", cold.body);
+    assert_eq!(
+        cold.header("X-Tnn7-Cache").unwrap(),
+        "executed=6 mem=0 disk=0",
+        "cold run executes the full 6-stage pipeline"
+    );
+    assert_eq!(cold.header("X-Tnn7-Dedup"), Some("leader"));
+    // The body is the report artifact with real totals.
+    let j = Json::parse(&cold.body).unwrap();
+    assert_eq!(j.field("stage").unwrap().as_str().unwrap(), "report");
+    let total = j.field("total").unwrap();
+    assert!(total.field("power_uw").unwrap().as_f64().unwrap() > 0.0);
+
+    // THE acceptance criterion: the repeat executes zero stages and
+    // serves the exact same bytes.
+    let warm = fetch(h.addr(), "POST", "/flow", TINY).unwrap();
+    assert_eq!(warm.status, 200);
+    assert_eq!(
+        warm.header("X-Tnn7-Cache").unwrap(),
+        "executed=0 mem=6 disk=0",
+        "warm run must be served entirely from the memory tier"
+    );
+    assert_eq!(warm.body, cold.body, "cached reply must be byte-identical");
+
+    // lanes/threads are execution details: they join the same cache
+    // chain and the same bytes.
+    let parallel = fetch(
+        h.addr(),
+        "POST",
+        "/flow",
+        r#"{"target": "custom", "col": "8x4", "waves": 2,
+            "lanes": 4, "threads": 2}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        parallel.header("X-Tnn7-Cache").unwrap(),
+        "executed=0 mem=6 disk=0"
+    );
+    assert_eq!(parallel.body, cold.body);
+    stop(h);
+}
+
+#[test]
+fn changing_simulate_config_reruns_only_downstream() {
+    let h = spawn(2, 16, 0);
+    let a = fetch(h.addr(), "POST", "/flow", TINY).unwrap();
+    assert_eq!(a.status, 200);
+
+    // Same netlist, different simulate config: elaborate and sta
+    // replay from memory, simulate/power/area/report re-execute.
+    let b = fetch(
+        h.addr(),
+        "POST",
+        "/flow",
+        r#"{"target": "custom", "col": "8x4", "waves": 3}"#,
+    )
+    .unwrap();
+    assert_eq!(b.status, 200);
+    assert_eq!(
+        b.header("X-Tnn7-Cache").unwrap(),
+        "executed=4 mem=2 disk=0",
+        "a waves change must re-run only simulate-and-later"
+    );
+    assert_ne!(b.body, a.body, "different waves measure differently");
+    stop(h);
+}
+
+#[test]
+fn concurrent_duplicates_share_one_computation() {
+    // A long leader delay so the followers deterministically arrive
+    // while the computation is in flight.
+    let h = spawn(4, 16, 500);
+    let addr = h.addr();
+    let first =
+        std::thread::spawn(move || fetch(addr, "POST", "/flow", TINY).unwrap());
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let followers: Vec<_> = (0..2)
+        .map(|_| {
+            std::thread::spawn(move || {
+                fetch(addr, "POST", "/flow", TINY).unwrap()
+            })
+        })
+        .collect();
+    let mut responses = vec![first.join().unwrap()];
+    responses.extend(followers.into_iter().map(|t| t.join().unwrap()));
+
+    let leaders = responses
+        .iter()
+        .filter(|r| r.header("X-Tnn7-Dedup") == Some("leader"))
+        .count();
+    let joined = responses
+        .iter()
+        .filter(|r| r.header("X-Tnn7-Dedup") == Some("joined"))
+        .count();
+    assert_eq!((leaders, joined), (1, 2), "one leader, two joiners");
+    for r in &responses {
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, responses[0].body, "all duplicates share bytes");
+    }
+
+    let stats = fetch(addr, "GET", "/stats", "").unwrap();
+    let j = Json::parse(&stats.body).unwrap();
+    assert_eq!(j.field("dedup_joins").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(j.field("flow_requests").unwrap().as_usize().unwrap(), 1);
+    stop(h);
+}
+
+#[test]
+fn overload_answers_inline_503_with_retry_after() {
+    // One worker, queue depth one: request 1 occupies the worker (held
+    // by the debug delay), request 2 fills the queue, request 3 must
+    // get an inline 503 from the accept thread.
+    let h = spawn(1, 1, 700);
+    let addr = h.addr();
+    let r1 =
+        std::thread::spawn(move || fetch(addr, "POST", "/flow", TINY).unwrap());
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let r2 =
+        std::thread::spawn(move || fetch(addr, "POST", "/flow", TINY).unwrap());
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let r3 = fetch(addr, "POST", "/flow", TINY).unwrap();
+    assert_eq!(r3.status, 503, "overflow must be answered inline");
+    assert_eq!(r3.header("Retry-After"), Some("1"));
+    assert!(r3.body.contains("queue is full"));
+
+    // The queued requests still complete normally.
+    assert_eq!(r1.join().unwrap().status, 200);
+    assert_eq!(r2.join().unwrap().status, 200);
+    let stats = fetch(addr, "GET", "/stats", "").unwrap();
+    let j = Json::parse(&stats.body).unwrap();
+    assert!(j.field("overloads").unwrap().as_usize().unwrap() >= 1);
+    stop(h);
+}
+
+#[test]
+fn disk_tier_replays_across_daemon_restarts() {
+    let dir = std::env::temp_dir()
+        .join(format!("tnn7_serve_disk_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = |addr: &str| ServeConfig {
+        addr: addr.into(),
+        cache: tnn7::flow::cache::CacheConfig {
+            mem_entries: 64,
+            dir: Some(dir.clone()),
+        },
+        ..ServeConfig::default()
+    };
+
+    let a = Server::spawn(cfg("127.0.0.1:0")).unwrap();
+    let cold = fetch(a.addr(), "POST", "/flow", TINY).unwrap();
+    assert_eq!(cold.status, 200);
+    stop(a);
+
+    // A fresh daemon process-equivalent: empty memory tier, same disk
+    // root. The whole pipeline replays from disk, bytes identical.
+    let b = Server::spawn(cfg("127.0.0.1:0")).unwrap();
+    let replay = fetch(b.addr(), "POST", "/flow", TINY).unwrap();
+    assert_eq!(replay.status, 200);
+    assert_eq!(
+        replay.header("X-Tnn7-Cache").unwrap(),
+        "executed=0 mem=0 disk=6",
+        "cold-start daemon must replay the full pipeline from disk"
+    );
+    assert_eq!(replay.body, cold.body);
+    stop(b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn routes_stats_health_and_errors() {
+    let h = spawn(2, 16, 0);
+    let addr = h.addr();
+
+    let health = fetch(addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(health.status, 200);
+    assert!(health.body.contains("\"ok\""));
+
+    let stats = fetch(addr, "GET", "/stats", "").unwrap();
+    let j = Json::parse(&stats.body).unwrap();
+    for key in [
+        "requests",
+        "flow_requests",
+        "errors",
+        "overloads",
+        "dedup_joins",
+        "stages",
+        "cache",
+        "inflight",
+    ] {
+        assert!(j.get(key).is_some(), "stats must carry `{key}`");
+    }
+
+    // Structured client errors, counted.
+    let bad = fetch(addr, "POST", "/flow", "{\"wavez\": 1}").unwrap();
+    assert_eq!(bad.status, 400);
+    assert!(bad.body.contains("error"));
+    let missing = fetch(addr, "GET", "/nope", "").unwrap();
+    assert_eq!(missing.status, 404);
+    let method = fetch(addr, "DELETE", "/flow", "").unwrap();
+    assert_eq!(method.status, 405);
+    let stats = fetch(addr, "GET", "/stats", "").unwrap();
+    let j = Json::parse(&stats.body).unwrap();
+    assert!(j.field("errors").unwrap().as_usize().unwrap() >= 3);
+    stop(h);
+}
+
+#[test]
+fn post_shutdown_drains_and_exits() {
+    let h = spawn(2, 16, 0);
+    let addr = h.addr();
+    assert_eq!(fetch(addr, "POST", "/flow", TINY).unwrap().status, 200);
+    let bye = fetch(addr, "POST", "/shutdown", "").unwrap();
+    assert_eq!(bye.status, 200);
+    assert!(bye.body.contains("draining"));
+    // A hung drain would hang the test here — joining IS the assertion.
+    h.join();
+}
+
+/// PROPERTY: for random small design points, the cached measurement is
+/// bit-identical to the uncached one, cold and warm — and the warm run
+/// executes zero stages.  Seeded sweep; the seed is in every message.
+#[test]
+fn prop_warm_and_cold_cached_runs_match_uncached() {
+    let registry = TechRegistry::builtin();
+    let tech = registry.get(tnn7::tech::ASAP7_TNN7).unwrap();
+    for seed in 0..6u64 {
+        let mut r = XorShift::new(seed + 31);
+        let p = 4 + (r.next_u64() % 12) as usize;
+        let q = 2 + (r.next_u64() % 4) as usize;
+        let waves = 2 + (r.next_u64() % 2) as usize;
+        let cfg = TnnConfig {
+            sim_waves: waves,
+            ..TnnConfig::default()
+        };
+        let data = Arc::new(Dataset::generate(waves.max(4), cfg.data_seed));
+        let target =
+            Target::column(Flavor::Custom, ColumnSpec::benchmark(p, q));
+
+        let plain =
+            flow::measure_with(target.clone(), &cfg, &tech, &data).unwrap();
+        let cache = StageCache::in_memory(64);
+        let (cold, cold_trace) = flow::measure_cached(
+            target.clone(),
+            &cfg,
+            &tech,
+            &data,
+            Some(&cache),
+        )
+        .unwrap();
+        let (warm, warm_trace) =
+            flow::measure_cached(target, &cfg, &tech, &data, Some(&cache))
+                .unwrap();
+
+        for (name, got) in [("cold", &cold), ("warm", &warm)] {
+            assert_eq!(
+                got.total.power_uw.to_bits(),
+                plain.total.power_uw.to_bits(),
+                "seed {seed} {p}x{q} w{waves}: {name} power differs"
+            );
+            assert_eq!(
+                got.total.time_ns.to_bits(),
+                plain.total.time_ns.to_bits(),
+                "seed {seed} {p}x{q} w{waves}: {name} time differs"
+            );
+            assert_eq!(
+                got.total.area_mm2.to_bits(),
+                plain.total.area_mm2.to_bits(),
+                "seed {seed} {p}x{q} w{waves}: {name} area differs"
+            );
+        }
+        assert_eq!(
+            cold_trace.executed(),
+            cold_trace.stages.len(),
+            "seed {seed}: cold run executes everything"
+        );
+        assert_eq!(
+            warm_trace.executed(),
+            0,
+            "seed {seed}: warm run executes nothing"
+        );
+    }
+}
