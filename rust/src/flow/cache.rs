@@ -44,7 +44,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::Dataset;
-use crate::flow::{ElaboratedUnit, FlowContext, Target, TargetReport};
+use crate::flow::{
+    ElaboratedUnit, ExportedUnit, FlowContext, Target, TargetReport,
+};
 use crate::phys::{Placement, WireModel};
 use crate::ppa::area::AreaReport;
 use crate::ppa::power::{PowerReport, RelPower};
@@ -59,8 +61,16 @@ pub const KEY_VERSION: &str = "tnn7-cache-v1";
 
 /// Stage names the cache knows how to key and snapshot.  Pipelines
 /// containing any other stage bypass the cache entirely.
-pub const CACHEABLE_STAGES: [&str; 7] =
-    ["elaborate", "sta", "place", "simulate", "power", "area", "report"];
+pub const CACHEABLE_STAGES: [&str; 8] = [
+    "elaborate",
+    "sta",
+    "place",
+    "simulate",
+    "power",
+    "area",
+    "report",
+    "export",
+];
 
 // ---- FNV-1a 64 ------------------------------------------------------
 
@@ -259,7 +269,9 @@ pub fn config_subset(stage: &str, ctx: &FlowContext) -> String {
             dataset_fingerprint(&ctx.data)
         ),
         // elaborate keys on the target fingerprint; sta/power/area/
-        // report are pure functions of upstream artifacts + tech.
+        // report/export are pure functions of upstream artifacts +
+        // tech (export is a deterministic lowering of the elaborated
+        // netlists, so the chained netlist hash covers it).
         _ => String::new(),
     }
 }
@@ -317,6 +329,7 @@ pub enum StageSnapshot {
     Power { power: Vec<PowerReport>, rel_power: Vec<RelPower> },
     Area { area: Vec<AreaReport>, rel_area: Vec<f64> },
     Report { report: TargetReport },
+    Export { exported: Vec<ExportedUnit> },
 }
 
 impl StageSnapshot {
@@ -352,6 +365,9 @@ impl StageSnapshot {
             "report" => Some(StageSnapshot::Report {
                 report: ctx.report.clone()?,
             }),
+            "export" => Some(StageSnapshot::Export {
+                exported: ctx.exported.clone(),
+            }),
             _ => None,
         }
     }
@@ -366,6 +382,7 @@ impl StageSnapshot {
             StageSnapshot::Power { .. } => "power",
             StageSnapshot::Area { .. } => "area",
             StageSnapshot::Report { .. } => "report",
+            StageSnapshot::Export { .. } => "export",
         }
     }
 
@@ -403,6 +420,9 @@ impl StageSnapshot {
             }
             StageSnapshot::Report { report } => {
                 ctx.report = Some(report.clone());
+            }
+            StageSnapshot::Export { exported } => {
+                ctx.exported = exported.clone();
             }
         }
     }

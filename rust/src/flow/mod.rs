@@ -128,6 +128,16 @@ pub struct PlacedSummary {
     pub aspect: f64,
 }
 
+/// One unit's interchange artifacts (the optional `export` stage):
+/// the BLIF and flat structural Verilog lowering of its elaborated
+/// netlist ([`crate::interop`], DESIGN.md §12).
+#[derive(Debug, Clone)]
+pub struct ExportedUnit {
+    pub label: String,
+    pub blif: String,
+    pub verilog: String,
+}
+
 /// Per-unit measurement in the final report (the old
 /// `ColumnMeasurement`, now per target unit).
 #[derive(Debug, Clone)]
@@ -269,6 +279,9 @@ pub struct FlowContext {
     pub rel_area: Vec<f64>,
     /// `report` artifact.
     pub report: Option<TargetReport>,
+    /// `export` artifacts (empty unless the pipeline includes the
+    /// optional `export` stage).
+    pub exported: Vec<ExportedUnit>,
 }
 
 impl FlowContext {
@@ -312,6 +325,7 @@ impl FlowContext {
             area: Vec::new(),
             rel_area: Vec::new(),
             report: None,
+            exported: Vec::new(),
         }
     }
 
@@ -362,6 +376,7 @@ impl FlowContext {
                 self.sim_threads_run = 0;
                 self.area.clear();
                 self.rel_area.clear();
+                self.exported.clear();
                 wipe_power(self);
             }
             "sta" => {

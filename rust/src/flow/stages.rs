@@ -15,6 +15,7 @@
 //! | `power`    | dynamic/clock/leakage/wire power | sta, simulate     |
 //! | `area`     | placed / die area              | elaborate           |
 //! | `report`   | composed [`TargetReport`]      | sta, power, area    |
+//! | `export`   | BLIF + Verilog interchange text (optional) | elaborate |
 //!
 //! `place` is not part of the default pipeline ([`super::Flow::standard`]
 //! stays census-only and bit-identical to earlier releases); the
@@ -32,6 +33,7 @@
 use crate::cells::{CellKind, MacroKind};
 use crate::coordinator::activity_bridge::stimulus;
 use crate::error::{Error, Result};
+use crate::interop;
 use crate::netlist::column::build_column;
 use crate::netlist::Flavor;
 use crate::phys::{self, FloorplanSpec, PlacerConfig};
@@ -49,8 +51,8 @@ use super::{
 };
 
 /// All canonical stages in pipeline order (drives help text).  `place`
-/// is listed (and orderable) here but only included in a pipeline on
-/// request ([`super::Flow::placed`]).
+/// and `export` are listed (and orderable) here but only included in a
+/// pipeline on request ([`super::Flow::placed`], `tnn7 flow --export`).
 pub fn all() -> Vec<Box<dyn Stage>> {
     vec![
         Box::new(Elaborate),
@@ -60,6 +62,7 @@ pub fn all() -> Vec<Box<dyn Stage>> {
         Box::new(Power),
         Box::new(Area),
         Box::new(Report),
+        Box::new(Export),
     ]
 }
 
@@ -74,11 +77,13 @@ pub fn make(tok: &str) -> Result<Vec<Box<dyn Stage>>> {
         "power" => vec![Box::new(Power)],
         "area" => vec![Box::new(Area)],
         "report" => vec![Box::new(Report)],
+        "export" => vec![Box::new(Export)],
         "ppa" => vec![Box::new(Power), Box::new(Area), Box::new(Report)],
         other => {
             return Err(Error::config(format!(
                 "unknown pipeline stage `{other}` (available: elaborate, \
-                 sta, place, simulate|sim, power, area, report, ppa)"
+                 sta, place, simulate|sim, power, area, report, export, \
+                 ppa)"
             )))
         }
     })
@@ -87,7 +92,7 @@ pub fn make(tok: &str) -> Result<Vec<Box<dyn Stage>>> {
 /// Stages that must run before the named stage.
 pub fn requires(name: &str) -> &'static [&'static str] {
     match name {
-        "sta" | "simulate" | "area" => &["elaborate"],
+        "sta" | "simulate" | "area" | "export" => &["elaborate"],
         "place" => &["elaborate", "sta"],
         "power" => &["sta", "simulate"],
         "report" => &["sta", "power", "area"],
@@ -756,5 +761,98 @@ impl Stage for Report {
             }
             None => Json::obj(vec![("stage", Json::str(self.name()))]),
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// export
+
+/// Lower every elaborated unit to interchange text: BLIF (with
+/// truth-table library models) and flat structural Verilog
+/// ([`crate::interop`], DESIGN.md §12).
+///
+/// The stage verifies its own output on the spot: each BLIF export is
+/// re-imported and re-exported, and anything short of a byte fixpoint
+/// is a structured error — a flow that completes `export` has proven
+/// its interchange artifacts reconstruct the netlist exactly.  The
+/// stage is pure (deterministic text from the elaborated netlists), so
+/// it is cacheable; the dump records sizes and FNV-1a fingerprints
+/// rather than megabytes of text — `tnn7 export` / `tnn7 flow
+/// --export` write the full artifacts to files.
+pub struct Export;
+
+impl Stage for Export {
+    fn name(&self) -> &'static str {
+        "export"
+    }
+
+    fn description(&self) -> &'static str {
+        "lower elaborated netlists to BLIF + structural Verilog, \
+         round-trip-checked (write-out via tnn7 export / flow --export)"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        if ctx.elaborated.is_empty() {
+            return Err(missing(self.name(), "elaborate"));
+        }
+        ctx.invalidate_downstream(self.name());
+        ctx.exported.clear();
+        let lib = ctx.tech.library();
+        let mut exported = Vec::with_capacity(ctx.elaborated.len());
+        for u in &ctx.elaborated {
+            let blif = interop::export_blif(&u.netlist, lib);
+            let back = interop::import_blif(&blif, lib)?;
+            if interop::export_blif(&back, lib) != blif {
+                return Err(Error::netlist(format!(
+                    "export: BLIF re-import of `{}` is not a byte \
+                     fixpoint",
+                    u.plan.label()
+                )));
+            }
+            exported.push(super::ExportedUnit {
+                label: u.plan.label(),
+                blif,
+                verilog: interop::export_verilog(&u.netlist, lib),
+            });
+        }
+        ctx.exported = exported;
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        let units = ctx
+            .exported
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("label", Json::str(e.label.clone())),
+                    ("blif_bytes", Json::int(e.blif.len() as u64)),
+                    (
+                        "blif_fnv",
+                        Json::str(format!(
+                            "{:016x}",
+                            interop::text_digest(&e.blif)
+                        )),
+                    ),
+                    (
+                        "verilog_bytes",
+                        Json::int(e.verilog.len() as u64),
+                    ),
+                    (
+                        "verilog_fnv",
+                        Json::str(format!(
+                            "{:016x}",
+                            interop::text_digest(&e.verilog)
+                        )),
+                    ),
+                    ("roundtrip", Json::str("byte-fixpoint")),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("stage", Json::str(self.name())),
+            ("format_version", Json::int(interop::FORMAT_VERSION as u64)),
+            ("units", Json::Arr(units)),
+        ])
     }
 }

@@ -1,0 +1,578 @@
+//! BLIF export / import of gate-level netlists.
+//!
+//! The export has two parts (DESIGN.md §12):
+//!
+//! 1. A **top model** holding the structural netlist: `.inputs` /
+//!    `.outputs` in port order and one `.subckt` per instance in
+//!    original instance order (tie cells included), so per-instance
+//!    activity counters line up after a round trip.  Connectivity uses
+//!    canonical `n<id>` identifiers; human-readable net names and the
+//!    region tree ride in `#`-comment sidebands that external tools
+//!    skip but [`import_blif`] replays.
+//! 2. **Library models**, one per distinct (cell, clock-domain) pair,
+//!    sorted by model name.  Bodies are enumerated from the simulator's
+//!    own cell semantics ([`crate::sim::eval`]): `.names` ON-set covers
+//!    in minterm order for every output, and per-state-bit `.latch`
+//!    lines plus next-state `.names` covers for sequential cells.  An
+//!    external tool reading the file therefore simulates exactly what
+//!    our engines simulate.
+//!
+//! [`import_blif`] parses the top model only (the library bodies are
+//! derived data), reconstructs the `Netlist` instance by instance, and
+//! validates it.  Export → import → export is a byte fixpoint; the
+//! conformance suite proves re-imported netlists re-simulate
+//! bit-identically on the scalar, packed, and sharded engines.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::cells::{CellId, CellKind, Library};
+use crate::error::{Error, Result};
+use crate::netlist::{ClockDomain, NetId, Netlist, RegionId};
+use crate::sim::eval::{eval_comb, next_state};
+
+use super::{
+    domain_suffix, net_ident, parse_net_ident, sanitize_ident,
+    FORMAT_VERSION,
+};
+
+/// BLIF model name of a (cell, domain) pair: the library cell name,
+/// suffixed with the clock domain for sequential instances.
+fn model_name(lib: &Library, cell: CellId, domain: ClockDomain) -> String {
+    format!("{}{}", lib.cell(cell).name, domain_suffix(domain))
+}
+
+/// Export a netlist to BLIF text (byte-stable: same netlist, same
+/// bytes).
+pub fn export_blif(nl: &Netlist, lib: &Library) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# tnn7 blif {FORMAT_VERSION}");
+    let _ = writeln!(s, "# design {}", nl.name);
+    let _ = writeln!(s, "# nets {}", nl.n_nets());
+    let _ = writeln!(s, ".model {}", sanitize_ident(&nl.name));
+    let _ = writeln!(s, ".inputs{}", ident_list(&nl.inputs));
+    let _ = writeln!(s, ".outputs{}", ident_list(&nl.outputs));
+    for (net, name) in &nl.net_names {
+        let _ = writeln!(s, "# name {} {name}", net_ident(*net));
+    }
+    for (id, r) in nl.regions.iter().enumerate().skip(1) {
+        let parent = r.parent.map_or(0, |p| p.0);
+        let _ = writeln!(s, "# region {id} {parent} {}", r.name);
+    }
+    let mut models: BTreeMap<String, (CellId, ClockDomain)> =
+        BTreeMap::new();
+    let mut cur_region = RegionId(0);
+    for (i, inst) in nl.insts.iter().enumerate() {
+        if inst.region != cur_region {
+            cur_region = inst.region;
+            let _ = writeln!(s, "# at {}", cur_region.0);
+        }
+        let mname = model_name(lib, inst.cell, inst.domain);
+        let mut line = format!(".subckt {mname}");
+        for (j, &n) in nl.inst_ins(i).iter().enumerate() {
+            let _ = write!(line, " i{j}={}", net_ident(n));
+        }
+        for (j, &n) in nl.inst_outs(i).iter().enumerate() {
+            let _ = write!(line, " o{j}={}", net_ident(n));
+        }
+        s.push_str(&line);
+        s.push('\n');
+        models.entry(mname).or_insert((inst.cell, inst.domain));
+    }
+    s.push_str(".end\n");
+    for (mname, (cell, _)) in &models {
+        s.push('\n');
+        write_model(&mut s, mname, lib.cell(*cell).kind);
+    }
+    s
+}
+
+/// `" n2 n3 n4"` (leading space per entry; empty string for no nets).
+fn ident_list(nets: &[NetId]) -> String {
+    let mut s = String::new();
+    for &n in nets {
+        let _ = write!(s, " {}", net_ident(n));
+    }
+    s
+}
+
+/// Emit one library model: ports, latches, and truth-table covers
+/// enumerated from the scalar cell semantics.  Support variables are
+/// the cell inputs `i0..` followed by the state bits `st0..`; minterm
+/// bit `j` is variable `j`, rows are the ON-set in increasing minterm
+/// order.
+fn write_model(s: &mut String, mname: &str, kind: CellKind) {
+    let (ci, co, ns) = kind.pins();
+    let _ = writeln!(s, ".model {mname}");
+    let mut inputs = String::new();
+    for j in 0..ci {
+        let _ = write!(inputs, " i{j}");
+    }
+    let _ = writeln!(s, ".inputs{inputs}");
+    let mut outputs = String::new();
+    for j in 0..co {
+        let _ = write!(outputs, " o{j}");
+    }
+    let _ = writeln!(s, ".outputs{outputs}");
+    for k in 0..ns {
+        let _ = writeln!(s, ".latch nx{k} st{k} 0");
+    }
+    let bits = ci + ns;
+    let mut support = String::new();
+    for j in 0..ci {
+        let _ = write!(support, "i{j} ");
+    }
+    for k in 0..ns {
+        let _ = write!(support, "st{k} ");
+    }
+    let mut ins = vec![false; ci];
+    let mut state = vec![false; ns];
+    let mut table = |f: &mut dyn FnMut(&[bool], &[bool]) -> bool,
+                     target: &str,
+                     s: &mut String| {
+        let _ = writeln!(s, ".names {support}{target}");
+        for a in 0u32..1 << bits {
+            for (j, v) in ins.iter_mut().enumerate() {
+                *v = a >> j & 1 == 1;
+            }
+            for (k, v) in state.iter_mut().enumerate() {
+                *v = a >> (ci + k) & 1 == 1;
+            }
+            if f(&ins, &state) {
+                let mut row = String::with_capacity(bits + 2);
+                for j in 0..bits {
+                    row.push(if a >> j & 1 == 1 { '1' } else { '0' });
+                }
+                if bits > 0 {
+                    row.push(' ');
+                }
+                row.push('1');
+                s.push_str(&row);
+                s.push('\n');
+            }
+        }
+    };
+    for k in 0..co {
+        let mut f = |ins: &[bool], st: &[bool]| {
+            let mut outs = vec![false; co];
+            eval_comb(kind, ins, st, &mut outs);
+            outs[k]
+        };
+        table(&mut f, &format!("o{k}"), s);
+    }
+    for k in 0..ns {
+        let mut f = |ins: &[bool], st: &[bool]| {
+            let mut next = vec![false; ns];
+            next_state(kind, ins, st, &mut next);
+            next[k]
+        };
+        table(&mut f, &format!("nx{k}"), s);
+    }
+    s.push_str(".end\n");
+}
+
+/// Resolve a BLIF model name back to a library cell and clock domain.
+fn resolve_model(
+    lib: &Library,
+    model: &str,
+) -> Result<(CellId, ClockDomain)> {
+    for (suffix, dom) in
+        [("_aclk", ClockDomain::Aclk), ("_gclk", ClockDomain::Gclk)]
+    {
+        if let Some(base) = model.strip_suffix(suffix) {
+            if let Ok(id) = lib.id(base) {
+                if lib.cell(id).kind.is_sequential() {
+                    return Ok((id, dom));
+                }
+            }
+        }
+    }
+    let id = lib.id(model).map_err(|_| {
+        Error::netlist(format!("blif import: unknown model `{model}`"))
+    })?;
+    if lib.cell(id).kind.is_sequential() {
+        return Err(Error::netlist(format!(
+            "blif import: sequential model `{model}` lacks a \
+             _aclk/_gclk domain suffix"
+        )));
+    }
+    Ok((id, ClockDomain::Comb))
+}
+
+/// Re-import a [`export_blif`] text into a bit-identical [`Netlist`].
+///
+/// Only the top model is parsed — library model bodies are derived
+/// data whose semantics already live in `lib`.  The reconstructed
+/// netlist is [`Netlist::validate`]d before it is returned.
+pub fn import_blif(text: &str, lib: &Library) -> Result<Netlist> {
+    let mut design: Option<String> = None;
+    let mut declared_nets: Option<usize> = None;
+    let mut nl: Option<Netlist> = None;
+    let mut inputs: Vec<NetId> = Vec::new();
+    let mut outputs: Vec<NetId> = Vec::new();
+    let mut cur_region = RegionId(0);
+    let mut inst_idx = 0usize;
+    let err =
+        |line_no: usize, msg: String| -> Error {
+            Error::netlist(format!("blif import: line {line_no}: {msg}"))
+        };
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line_no = ln + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let comment = comment.trim_start();
+            if let Some(rest) = comment.strip_prefix("design ") {
+                design = Some(rest.to_string());
+            } else if let Some(rest) = comment.strip_prefix("nets ") {
+                declared_nets = Some(rest.trim().parse().map_err(|_| {
+                    err(line_no, format!("bad net count `{rest}`"))
+                })?);
+            } else if let Some(rest) = comment.strip_prefix("name ") {
+                let nl = nl.as_mut().ok_or_else(|| {
+                    err(line_no, "# name before .model".into())
+                })?;
+                let (net_tok, name) =
+                    rest.split_once(' ').ok_or_else(|| {
+                        err(line_no, format!("bad name line `{rest}`"))
+                    })?;
+                let net = parse_net(net_tok, nl, line_no)?;
+                nl.name_net(net, name);
+            } else if let Some(rest) = comment.strip_prefix("region ") {
+                let nl = nl.as_mut().ok_or_else(|| {
+                    err(line_no, "# region before .model".into())
+                })?;
+                let mut it = rest.splitn(3, ' ');
+                let (id, parent, name) =
+                    match (it.next(), it.next(), it.next()) {
+                        (Some(i), Some(p), Some(n)) => (i, p, n),
+                        _ => {
+                            return Err(err(
+                                line_no,
+                                format!("bad region line `{rest}`"),
+                            ))
+                        }
+                    };
+                let id: u32 = id.parse().map_err(|_| {
+                    err(line_no, format!("bad region id `{id}`"))
+                })?;
+                let parent: u32 = parent.parse().map_err(|_| {
+                    err(line_no, format!("bad region parent `{parent}`"))
+                })?;
+                if parent as usize >= nl.regions.len() {
+                    return Err(err(
+                        line_no,
+                        format!("region parent {parent} not yet defined"),
+                    ));
+                }
+                let got = nl.add_region(name, RegionId(parent));
+                if got.0 != id {
+                    return Err(err(
+                        line_no,
+                        format!(
+                            "region ids out of order: declared {id}, \
+                             assigned {}",
+                            got.0
+                        ),
+                    ));
+                }
+            } else if let Some(rest) = comment.strip_prefix("at ") {
+                let nl = nl.as_ref().ok_or_else(|| {
+                    err(line_no, "# at before .model".into())
+                })?;
+                let id: u32 = rest.trim().parse().map_err(|_| {
+                    err(line_no, format!("bad region marker `{rest}`"))
+                })?;
+                if id as usize >= nl.regions.len() {
+                    return Err(err(
+                        line_no,
+                        format!("region marker {id} undefined"),
+                    ));
+                }
+                cur_region = RegionId(id);
+            }
+            // Other comments (format banner, ...) are ignored.
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let head = toks.next().unwrap_or("");
+        match head {
+            ".model" => {
+                if nl.is_some() {
+                    // Library models start after the top `.end`; the
+                    // loop breaks there, so a second `.model` here
+                    // means a malformed file.
+                    return Err(err(
+                        line_no,
+                        "unexpected second .model before .end".into(),
+                    ));
+                }
+                let fallback =
+                    toks.next().unwrap_or("imported").to_string();
+                let name = design.clone().unwrap_or(fallback);
+                let mut fresh = Netlist::new(name, lib);
+                let total = declared_nets.unwrap_or(0);
+                while fresh.n_nets() < total {
+                    fresh.new_net();
+                }
+                nl = Some(fresh);
+            }
+            ".inputs" | ".outputs" => {
+                let netlist = nl.as_mut().ok_or_else(|| {
+                    err(line_no, format!("{head} before .model"))
+                })?;
+                let mut nets = Vec::new();
+                for tok in toks {
+                    nets.push(parse_net(tok, netlist, line_no)?);
+                }
+                if head == ".inputs" {
+                    inputs = nets;
+                } else {
+                    outputs = nets;
+                }
+            }
+            ".subckt" => {
+                let netlist = nl.as_mut().ok_or_else(|| {
+                    err(line_no, ".subckt before .model".into())
+                })?;
+                let model = toks.next().ok_or_else(|| {
+                    err(line_no, ".subckt without a model name".into())
+                })?;
+                let (cell, domain) = resolve_model(lib, model)
+                    .map_err(|e| err(line_no, e.to_string()))?;
+                let (ci, co, _) = lib.cell(cell).kind.pins();
+                let mut ins: Vec<Option<NetId>> = vec![None; ci];
+                let mut outs: Vec<Option<NetId>> = vec![None; co];
+                for tok in toks {
+                    let (pin, net_tok) =
+                        tok.split_once('=').ok_or_else(|| {
+                            err(line_no, format!("bad binding `{tok}`"))
+                        })?;
+                    let net = parse_net(net_tok, netlist, line_no)?;
+                    let slot = pin_slot(pin, &mut ins, &mut outs)
+                        .ok_or_else(|| {
+                            err(
+                                line_no,
+                                format!("bad pin `{pin}` on `{model}`"),
+                            )
+                        })?;
+                    if slot.replace(net).is_some() {
+                        return Err(err(
+                            line_no,
+                            format!("pin `{pin}` bound twice"),
+                        ));
+                    }
+                }
+                let unwrap_pins = |v: Vec<Option<NetId>>| -> Result<Vec<NetId>> {
+                    v.into_iter()
+                        .collect::<Option<Vec<_>>>()
+                        .ok_or_else(|| {
+                            err(
+                                line_no,
+                                format!("`{model}` missing pin bindings"),
+                            )
+                        })
+                };
+                let ins = unwrap_pins(ins)?;
+                let outs = unwrap_pins(outs)?;
+                let kind = lib.cell(cell).kind;
+                if matches!(kind, CellKind::Tie0 | CellKind::Tie1) {
+                    // Netlist::new pre-creates the two tie instances;
+                    // the export includes them for completeness.
+                    let expect = usize::from(kind == CellKind::Tie1);
+                    if inst_idx != expect
+                        || outs != [NetId(expect as u32)]
+                    {
+                        return Err(err(
+                            line_no,
+                            format!(
+                                "tie instance out of place (inst \
+                                 {inst_idx}, outs {outs:?})"
+                            ),
+                        ));
+                    }
+                } else {
+                    netlist.push_inst(cell, &ins, &outs, domain, cur_region);
+                }
+                inst_idx += 1;
+            }
+            ".end" => break,
+            ".names" | ".latch" => {
+                return Err(err(
+                    line_no,
+                    format!(
+                        "`{head}` inside the top model — tnn7 BLIF \
+                         keeps logic in library models"
+                    ),
+                ));
+            }
+            _ => {
+                return Err(err(
+                    line_no,
+                    format!("unrecognized construct `{head}`"),
+                ));
+            }
+        }
+    }
+
+    let mut netlist = nl.ok_or_else(|| {
+        Error::netlist("blif import: no .model found".to_string())
+    })?;
+    netlist.inputs = inputs;
+    netlist.outputs = outputs;
+    netlist.validate(lib)?;
+    Ok(netlist)
+}
+
+/// Parse `n<id>` and bounds-check it against the allocated nets.
+fn parse_net(tok: &str, nl: &Netlist, line_no: usize) -> Result<NetId> {
+    let net = parse_net_ident(tok).ok_or_else(|| {
+        Error::netlist(format!(
+            "blif import: line {line_no}: bad net identifier `{tok}`"
+        ))
+    })?;
+    if net.0 as usize >= nl.n_nets() {
+        return Err(Error::netlist(format!(
+            "blif import: line {line_no}: net {tok} beyond the \
+             declared net count {}",
+            nl.n_nets()
+        )));
+    }
+    Ok(net)
+}
+
+/// Locate the binding slot of a mangled pin name (`i3` / `o0`).
+fn pin_slot<'a>(
+    pin: &str,
+    ins: &'a mut [Option<NetId>],
+    outs: &'a mut [Option<NetId>],
+) -> Option<&'a mut Option<NetId>> {
+    let (dir, idx) = pin.split_at(1);
+    let idx: usize = idx.parse().ok()?;
+    match dir {
+        "i" => ins.get_mut(idx),
+        "o" => outs.get_mut(idx),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+
+    fn sample(lib: &Library) -> Netlist {
+        let mut b = Builder::new("blif_sample", lib);
+        let a = b.input("a");
+        let c = b.input("b");
+        let reg = b.push("blk");
+        let x = b.nand2(a, c);
+        let q = b.dff(x, ClockDomain::Aclk);
+        let g = b.dff(q, ClockDomain::Gclk);
+        b.pop(reg);
+        let y = b.xor2(g, a);
+        b.output(y, "y");
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn export_import_is_a_byte_fixpoint() {
+        let lib = Library::asap7_only();
+        let nl = sample(&lib);
+        let text = export_blif(&nl, &lib);
+        let back = import_blif(&text, &lib).unwrap();
+        assert_eq!(export_blif(&back, &lib), text);
+        // Structure survives exactly.
+        assert_eq!(back.name, nl.name);
+        assert_eq!(back.n_nets(), nl.n_nets());
+        assert_eq!(back.inputs, nl.inputs);
+        assert_eq!(back.outputs, nl.outputs);
+        assert_eq!(back.net_names, nl.net_names);
+        assert_eq!(back.insts.len(), nl.insts.len());
+        assert_eq!(back.pins, nl.pins);
+        for (a, b) in back.insts.iter().zip(&nl.insts) {
+            assert_eq!(a.cell, b.cell);
+            assert_eq!(a.domain, b.domain);
+            assert_eq!(a.region, b.region);
+        }
+        assert_eq!(back.regions.len(), nl.regions.len());
+    }
+
+    #[test]
+    fn domains_survive_the_round_trip() {
+        let lib = Library::asap7_only();
+        let nl = sample(&lib);
+        let back =
+            import_blif(&export_blif(&nl, &lib), &lib).unwrap();
+        let domains: Vec<ClockDomain> =
+            back.insts.iter().map(|i| i.domain).collect();
+        let want: Vec<ClockDomain> =
+            nl.insts.iter().map(|i| i.domain).collect();
+        assert_eq!(domains, want);
+    }
+
+    #[test]
+    fn model_bodies_enumerate_the_cell_semantics() {
+        let mut s = String::new();
+        write_model(&mut s, "NAND2x1", CellKind::Nand2);
+        // ON-set of !(a&b) in minterm order: 00, 10, 01.
+        assert_eq!(
+            s,
+            ".model NAND2x1\n.inputs i0 i1\n.outputs o0\n\
+             .names i0 i1 o0\n00 1\n10 1\n01 1\n.end\n"
+        );
+        let mut d = String::new();
+        write_model(&mut d, "DFFx_aclk", CellKind::Dff);
+        assert_eq!(
+            d,
+            ".model DFFx_aclk\n.inputs i0\n.outputs o0\n\
+             .latch nx0 st0 0\n\
+             .names i0 st0 o0\n01 1\n11 1\n\
+             .names i0 st0 nx0\n10 1\n11 1\n.end\n"
+        );
+        // Constant drivers: tie0 has an empty cover, tie1 the
+        // single-line constant-1 cover.
+        let mut t0 = String::new();
+        write_model(&mut t0, "TIELOx1", CellKind::Tie0);
+        assert_eq!(
+            t0,
+            ".model TIELOx1\n.inputs\n.outputs o0\n.names o0\n.end\n"
+        );
+        let mut t1 = String::new();
+        write_model(&mut t1, "TIEHIx1", CellKind::Tie1);
+        assert_eq!(
+            t1,
+            ".model TIEHIx1\n.inputs\n.outputs o0\n.names o0\n1\n.end\n"
+        );
+    }
+
+    #[test]
+    fn import_rejects_malformed_text() {
+        let lib = Library::asap7_only();
+        let nl = sample(&lib);
+        let text = export_blif(&nl, &lib);
+        assert!(import_blif("", &lib).is_err());
+        assert!(import_blif(".model x\n.end\n", &lib).is_err());
+        // Unknown model name.
+        let bad = text.replace(".subckt NAND2x1", ".subckt WARP9x1");
+        assert!(import_blif(&bad, &lib).is_err());
+        // Net id beyond the declared count.
+        let bad = text.replace("# nets ", "# bad ");
+        assert!(import_blif(&bad, &lib).is_err());
+    }
+
+    #[test]
+    fn sequential_model_requires_domain_suffix() {
+        let lib = Library::asap7_only();
+        let dff = lib.id_of_kind(CellKind::Dff).unwrap();
+        let name = &lib.cell(dff).name;
+        assert!(resolve_model(&lib, name).is_err());
+        let (cell, dom) =
+            resolve_model(&lib, &format!("{name}_gclk")).unwrap();
+        assert_eq!(cell, dff);
+        assert_eq!(dom, ClockDomain::Gclk);
+    }
+}

@@ -32,6 +32,11 @@
 //!   metadata, and node-scaling projection, with a [`tech::TechRegistry`]
 //!   resolving backends by name (`asap7-baseline`, `asap7-tnn7`,
 //!   `n45-projected`, or any `.lib` file as a `liberty-file` backend).
+//! * [`interop`] — netlist/waveform interchange with external EDA tools:
+//!   BLIF export with a bit-identical re-importer, flat structural
+//!   Verilog export, and VCD emit/ingest turning recorded waveforms
+//!   into replayable cross-engine stimulus (the `export` flow stage and
+//!   the `tnn7 export` / `tnn7 replay` subcommands; DESIGN.md §12).
 //! * [`tnn`] — the golden behavioral TNN (RNL neurons, WTA, STDP, LFSR BRVs);
 //!   the oracle both the gate-level netlists and the HLO executables are
 //!   tested against.
@@ -68,6 +73,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod flow;
+pub mod interop;
 pub mod netlist;
 pub mod phys;
 pub mod ppa;

@@ -5,6 +5,8 @@
 //!
 //! ```text
 //! tnn7 flow --target F[:N] --col PxQ|--proto [...]   run the staged design flow
+//! tnn7 export --col PxQ|--proto --out DIR [...]      BLIF/Verilog/VCD export
+//! tnn7 replay --vcd FILE --col PxQ [...]             re-simulate a recording
 //! tnn7 characterize [--lib FILE]      cell library table (+ .lib dump)
 //! tnn7 layout-cmp [MACRO]             Figs. 14-18 structural comparisons
 //! tnn7 complexity                     Fig. 19 gate/transistor census
@@ -33,7 +35,8 @@ use tnn7::flow::{
 };
 use tnn7::coordinator::Pipeline;
 use tnn7::data::Dataset;
-use tnn7::netlist::column::ColumnSpec;
+use tnn7::interop;
+use tnn7::netlist::column::{build_column, ColumnSpec, BRV_PER_SYN};
 use tnn7::netlist::prototype::PrototypeSpec;
 use tnn7::netlist::Flavor;
 use tnn7::ppa::report::{improvement_line, render_table1, render_table2, PpaRow};
@@ -41,7 +44,10 @@ use tnn7::ppa::scaling;
 use tnn7::ppa::ColumnPpa;
 use tnn7::runtime::json::Json;
 use tnn7::serve::{ServeConfig, Server};
+use tnn7::sim::{PackedSimulator, ShardedSimulator, Simulator};
 use tnn7::tech::{self, TechContext, TechRegistry};
+use tnn7::tnn::stdp::{RandPair, StdpParams};
+use tnn7::tnn::INF;
 
 /// Tiny argv helper (no clap offline): `--key value` and flags.
 struct Args {
@@ -124,6 +130,8 @@ fn run() -> anyhow::Result<()> {
     let sub = args.subcommand().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "flow" => cmd_flow(&mut args),
+        "export" => cmd_export(&mut args),
+        "replay" => cmd_replay(&mut args),
         "characterize" => cmd_characterize(&mut args),
         "layout-cmp" => cmd_layout_cmp(&mut args),
         "complexity" => cmd_complexity(&mut args),
@@ -148,14 +156,26 @@ USAGE: tnn7 <SUBCOMMAND> [OPTIONS]     (tnn7 <SUBCOMMAND> --help for details)
 
 SUBCOMMANDS:
   flow --target F (--col PxQ | --proto) [--tech T1,T2,..] [--pipeline S,..]
-       [--place] [--util U1,U2,..] [--aspect A1,A2,..]
+       [--place] [--util U1,U2,..] [--aspect A1,A2,..] [--export]
        [--dump-dir D] [--lanes N] [--threads N] [--smoke]
                               run the staged design flow on one or more
                               technology backends (names or .lib paths),
                               dump per-stage JSON; --targets A,B,.. sweeps
                               several flavours × technologies concurrently;
                               --place adds the physical-design stage
-                              (floorplan, row placement, wire-aware PPA)
+                              (floorplan, row placement, wire-aware PPA);
+                              --export adds the interop export stage
+  export --target F (--col PxQ | --proto) --out DIR [--vcd] [--lanes N]
+         [--waves N] [--seed S]
+                              lower the elaborated netlist to BLIF +
+                              structural Verilog files (re-import checked
+                              bit-identical); --vcd also records a seeded
+                              packed wave run per unit (DESIGN.md §12)
+  replay --vcd FILE --col PxQ [--target F] [--engine scalar|packed|sharded]
+         [--threads N] [--out FILE]
+                              re-ingest a recorded VCD as stimulus, re-run
+                              it on any engine, and assert toggle counts
+                              (byte-identical recording on a match)
   characterize [--lib FILE]   print the characterized cell library
   layout-cmp [MACRO] [--json FILE]   Figs. 14-18 custom-vs-std comparisons
   complexity                  Fig. 19 prototype census (gates/transistors)
@@ -219,6 +239,11 @@ OPTIONS:
   --pipeline S1,S2,..      stage list (default: full canonical pipeline, or
                            the placed pipeline with --place; the two are
                            mutually exclusive)
+  --export                 append the interop export stage: lower every
+                           elaborated unit to BLIF + structural Verilog,
+                           check the BLIF re-import is bit-identical, and
+                           (with --dump-dir) write LABEL.BACKEND.blif/.v
+                           next to the stage artifacts (DESIGN.md §12)
   --dump-dir DIR           write one JSON artifact per stage, named
                            NN_stage.BACKEND.json (multi-tech runs into one
                            directory never collide)
@@ -291,6 +316,7 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     let dump_dir = args.opt("--dump-dir")?;
     let cache_dir = args.opt("--cache-dir")?;
     let place_flag = args.flag("--place");
+    let export_flag = args.flag("--export");
     let util_desc = args.opt("--util")?;
     let aspect_desc = args.opt("--aspect")?;
     let mut cfg = load_config(args)?;
@@ -400,12 +426,15 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
 
     // Parallel multi-flavour sweep mode.
     if let Some(list) = targets_desc {
-        if target_desc.is_some() || pipeline.is_some() || dump_dir.is_some()
+        if target_desc.is_some()
+            || pipeline.is_some()
+            || dump_dir.is_some()
+            || export_flag
         {
             anyhow::bail!(
                 "--targets runs the fixed measurement pipeline for every \
-                 listed target; it excludes --target, --pipeline, and \
-                 --dump-dir"
+                 listed target; it excludes --target, --pipeline, \
+                 --dump-dir, and --export"
             );
         }
         return cmd_flow_sweep(
@@ -466,6 +495,11 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
             None if cfg.place => Flow::placed(),
             None => Flow::standard(),
         };
+        if export_flag && !flow.stage_names().contains(&"export") {
+            for stage in stages::make("export")? {
+                flow = flow.with_stage(stage);
+            }
+        }
         if let Some(dir) = &dump_dir {
             flow = flow.dump_dir(dir);
         }
@@ -506,6 +540,33 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
         let trace = flow.run_cached(&mut ctx, cache.as_ref())?;
         if cache.is_some() {
             println!("  cache: {}", trace.cache_line());
+        }
+
+        if export_flag && !ctx.exported.is_empty() {
+            println!(
+                "  export: {} unit(s) lowered to BLIF + structural \
+                 Verilog (re-import checked bit-identical)",
+                ctx.exported.len()
+            );
+            if let Some(dir) = &dump_dir {
+                for eu in &ctx.exported {
+                    let stem = format!(
+                        "{}.{}",
+                        interop::sanitize_ident(&eu.label),
+                        techctx.id()
+                    );
+                    let dir = Path::new(dir);
+                    std::fs::write(
+                        dir.join(format!("{stem}.blif")),
+                        &eu.blif,
+                    )?;
+                    std::fs::write(
+                        dir.join(format!("{stem}.v")),
+                        &eu.verilog,
+                    )?;
+                    println!("    wrote {stem}.blif / {stem}.v");
+                }
+            }
         }
 
         // A full-pipeline disk replay serves the cached dump bytes
@@ -613,6 +674,354 @@ fn parse_f64_list(
         anyhow::bail!("{name} needs at least one value");
     }
     Ok(vals)
+}
+
+fn help_export() -> String {
+    "tnn7 export — lower elaborated netlists to external EDA formats
+
+Runs the elaborate + export flow stages and writes one BLIF and one
+structural Verilog file per target unit; the export stage checks
+inline that re-importing the BLIF reconstructs a bit-identical
+netlist.  With --vcd it additionally records a seeded packed wave run
+of every unit to a VCD file that `tnn7 replay` (or any waveform
+viewer) can consume.  DESIGN.md §12 documents the formats and the
+identifier mangling.
+
+USAGE: tnn7 export [OPTIONS] --out DIR
+
+OPTIONS:
+  --target FLAVOR[:TECH]   flavour std|baseline or custom|gdi, optionally
+                           pinned to a technology backend (default std)
+  --tech T                 technology backend name or .lib path
+                           (default: the target's backend)
+  --col PxQ                single-column geometry (e.g. 32x12)
+  --proto                  the Fig. 19 2-layer prototype instead of --col
+  --out DIR                output directory; files are named
+                           LABEL.BACKEND.blif / .v / .vcd
+  --vcd                    also record a seeded packed wave run per unit
+  --lanes N                stimulus lanes for the VCD recording, 1..=64
+                           (default 4)
+  --waves N                waves to record into the VCD (default 2)
+  --seed S                 stimulus seed for the VCD recording (default 7)
+  --config FILE            tnn7.toml configuration
+"
+    .to_string()
+}
+
+/// Deterministic xorshift64 word stream for `export --vcd` stimulus.
+fn xorshift64(state: &mut u64) -> u64 {
+    let mut s = *state;
+    s ^= s << 13;
+    s ^= s >> 7;
+    s ^= s << 17;
+    *state = s;
+    s
+}
+
+/// Seeded random wave stimulus in the testbench idiom: spike times
+/// uniform over [0, 8) with 1-in-8 "no spike", BRV thresholds uniform
+/// 16-bit.
+fn random_wave_stimulus(
+    p: usize,
+    n_syn: usize,
+    lanes: usize,
+    state: &mut u64,
+) -> (Vec<Vec<i32>>, Vec<Vec<RandPair>>) {
+    let spikes = (0..lanes)
+        .map(|_| {
+            (0..p)
+                .map(|_| {
+                    let v = xorshift64(state);
+                    if v & 7 == 7 {
+                        INF
+                    } else {
+                        (v % 8) as i32
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let rand = (0..lanes)
+        .map(|_| {
+            (0..n_syn)
+                .map(|_| {
+                    let v = xorshift64(state);
+                    (v as u16, (v >> 16) as u16)
+                })
+                .collect()
+        })
+        .collect();
+    (spikes, rand)
+}
+
+fn cmd_export(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!("{}", help_export());
+        return Ok(());
+    }
+    let target_desc = args.opt("--target")?;
+    let tech_desc = args.opt("--tech")?;
+    let col = args.opt("--col")?;
+    let proto = args.flag("--proto");
+    let out = args
+        .opt("--out")?
+        .ok_or_else(|| anyhow::anyhow!("--out DIR required (see --help)"))?;
+    let vcd = args.flag("--vcd");
+    let lanes: usize = match args.opt("--lanes")? {
+        Some(l) => l.parse()?,
+        None => 4,
+    };
+    if !(1..=64).contains(&lanes) {
+        anyhow::bail!("--lanes must be in 1..=64, got {lanes}");
+    }
+    let waves: usize = match args.opt("--waves")? {
+        Some(w) => w.parse()?,
+        None => 2,
+    };
+    let seed: u64 = match args.opt("--seed")? {
+        Some(s) => s.parse()?,
+        None => 7,
+    };
+    let cfg = load_config(args)?;
+    args.finish()?;
+
+    if proto && col.is_some() {
+        anyhow::bail!("--proto and --col are mutually exclusive");
+    }
+    let geometry = if proto {
+        Geometry::Prototype(PrototypeSpec::paper())
+    } else if let Some(col) = col {
+        let (p, q) = parse_geometry(&col)?;
+        Geometry::Column(ColumnSpec::benchmark(p, q))
+    } else {
+        anyhow::bail!("--col PxQ or --proto required (see --help)");
+    };
+
+    let desc = target_desc.as_deref().unwrap_or("std");
+    if tech_desc.is_some() && desc.contains(':') {
+        anyhow::bail!(
+            "give the technology either in --target FLAVOR:TECH or via \
+             --tech, not both"
+        );
+    }
+    let base = Target::parse(desc, geometry)?;
+    let mut registry = TechRegistry::builtin();
+    let techctx = match &tech_desc {
+        Some(name) => registry.resolve(name)?,
+        None => registry.resolve(base.tech.as_str())?,
+    };
+    let target = base.with_tech(techctx.id());
+
+    let data =
+        Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
+    let mut ctx = FlowContext::with_tech(
+        target,
+        cfg.clone(),
+        techctx.clone(),
+        Arc::clone(&data),
+    );
+    println!(
+        "export {} [{}] -> {}/",
+        ctx.target.describe(),
+        techctx.node_label(),
+        out
+    );
+    Flow::from_spec("elaborate,export")?.run(&mut ctx)?;
+
+    std::fs::create_dir_all(&out)?;
+    let dir = Path::new(&out);
+    for eu in &ctx.exported {
+        let stem =
+            format!("{}.{}", interop::sanitize_ident(&eu.label), techctx.id());
+        std::fs::write(dir.join(format!("{stem}.blif")), &eu.blif)?;
+        std::fs::write(dir.join(format!("{stem}.v")), &eu.verilog)?;
+        println!(
+            "  {stem}.blif  {:>8} bytes  fnv {:016x}",
+            eu.blif.len(),
+            interop::text_digest(&eu.blif)
+        );
+        println!(
+            "  {stem}.v     {:>8} bytes  fnv {:016x}",
+            eu.verilog.len(),
+            interop::text_digest(&eu.verilog)
+        );
+    }
+
+    if vcd {
+        let lib = techctx.library();
+        let params = StdpParams::default_training();
+        let mut state = seed | 1;
+        for eu in &ctx.elaborated {
+            let p = eu.ports.x.len();
+            let n_syn = eu.ports.brv.len() / BRV_PER_SYN;
+            let mut ticks = Vec::new();
+            for _ in 0..waves.max(1) {
+                let (spikes, rand) =
+                    random_wave_stimulus(p, n_syn, lanes, &mut state);
+                ticks.extend(interop::vcd::column_wave_ticks(
+                    &eu.ports, &spikes, &rand, &params,
+                ));
+            }
+            let mut sim = PackedSimulator::new(&eu.netlist, lib, lanes)?;
+            let text = interop::record_engine(&mut sim, &eu.netlist, &ticks);
+            let stem = format!(
+                "{}.{}",
+                interop::sanitize_ident(&eu.plan.label()),
+                techctx.id()
+            );
+            std::fs::write(dir.join(format!("{stem}.vcd")), &text)?;
+            println!(
+                "  {stem}.vcd   {:>8} bytes  ({} waves x {} lanes, \
+                 {} ticks)",
+                text.len(),
+                waves.max(1),
+                lanes,
+                ticks.len()
+            );
+        }
+    }
+    println!(
+        "exported {} unit(s); BLIF re-import checked bit-identical",
+        ctx.exported.len()
+    );
+    Ok(())
+}
+
+fn help_replay() -> String {
+    "tnn7 replay — re-ingest a recorded VCD as simulator stimulus
+
+Parses a VCD recorded by `tnn7 export --vcd` (or any writer using the
+same lane-scope convention), converts it back into a packed stimulus
+schedule, drives it through a freshly built engine, and re-records the
+run.  A recording that replays on the same design is byte-identical —
+the strongest possible equal-toggle-counts statement — and the command
+fails if any per-var toggle count differs.  Replaying a recording from
+one engine or flavour on another is the conformance suite's
+cross-engine check (DESIGN.md §12).
+
+USAGE: tnn7 replay --vcd FILE --col PxQ [OPTIONS]
+
+OPTIONS:
+  --vcd FILE               the recording to replay (required)
+  --col PxQ                column geometry the recording was made from
+  --target FLAVOR[:TECH]   flavour/backend to rebuild the netlist with
+                           (default std; a different flavour than the
+                           recording exercises cross-flavour equivalence)
+  --tech T                 technology backend name or .lib path
+  --engine E               scalar | packed | sharded (default packed;
+                           scalar accepts 1-lane recordings only)
+  --threads N              shard workers for --engine sharded (default 2)
+  --out FILE               write the re-recorded VCD
+  --config FILE            tnn7.toml configuration
+"
+    .to_string()
+}
+
+fn cmd_replay(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!("{}", help_replay());
+        return Ok(());
+    }
+    let vcd_path = args
+        .opt("--vcd")?
+        .ok_or_else(|| anyhow::anyhow!("--vcd FILE required (see --help)"))?;
+    let col = args
+        .opt("--col")?
+        .ok_or_else(|| anyhow::anyhow!("--col PxQ required (see --help)"))?;
+    let target_desc = args.opt("--target")?;
+    let tech_desc = args.opt("--tech")?;
+    let engine = args.opt("--engine")?.unwrap_or_else(|| "packed".into());
+    let threads: usize = match args.opt("--threads")? {
+        Some(t) => t.parse()?,
+        None => 2,
+    };
+    let out = args.opt("--out")?;
+    let _cfg = load_config(args)?;
+    args.finish()?;
+
+    let text = std::fs::read_to_string(&vcd_path)?;
+    let doc = interop::parse_vcd(&text)?;
+    println!(
+        "replay {}: design `{}`  {} lanes  {} ticks  {} vars",
+        vcd_path, doc.design, doc.lanes, doc.ticks, doc.vars.len()
+    );
+
+    let (p, q) = parse_geometry(&col)?;
+    let spec = ColumnSpec::benchmark(p, q);
+    let desc = target_desc.as_deref().unwrap_or("std");
+    if tech_desc.is_some() && desc.contains(':') {
+        anyhow::bail!(
+            "give the technology either in --target FLAVOR:TECH or via \
+             --tech, not both"
+        );
+    }
+    let base = Target::parse(desc, Geometry::Column(spec))?;
+    let mut registry = TechRegistry::builtin();
+    let techctx = match &tech_desc {
+        Some(name) => registry.resolve(name)?,
+        None => registry.resolve(base.tech.as_str())?,
+    };
+    let lib = techctx.library();
+    let (nl, _ports) = build_column(lib, base.flavor, &spec)?;
+    let ticks = doc.stimulus(&nl)?;
+
+    let replayed = match engine.as_str() {
+        "scalar" => {
+            if doc.lanes != 1 {
+                anyhow::bail!(
+                    "the scalar engine replays 1-lane recordings only \
+                     (this one has {} lanes)",
+                    doc.lanes
+                );
+            }
+            let mut sim = Simulator::new(&nl, lib)?;
+            interop::record_engine(&mut sim, &nl, &ticks)
+        }
+        "packed" => {
+            let mut sim = PackedSimulator::new(&nl, lib, doc.lanes)?;
+            interop::record_engine(&mut sim, &nl, &ticks)
+        }
+        "sharded" => {
+            let mut sim =
+                ShardedSimulator::new(&nl, lib, doc.lanes, threads.max(1), &[])?;
+            interop::record_engine(&mut sim, &nl, &ticks)
+        }
+        other => anyhow::bail!(
+            "unknown engine `{other}` (scalar | packed | sharded)"
+        ),
+    };
+
+    let redoc = interop::parse_vcd(&replayed)?;
+    let toggles: u64 = doc.toggles().iter().sum();
+    let retoggles: u64 = redoc.toggles().iter().sum();
+    println!(
+        "  {} engine: {} ticks re-simulated, {} toggles recorded \
+         (original {})",
+        engine,
+        ticks.len(),
+        retoggles,
+        toggles
+    );
+    if let Some(path) = &out {
+        std::fs::write(path, &replayed)?;
+        println!("  wrote {path}");
+    }
+    if replayed == text {
+        println!("  round-trip: byte-identical recording");
+    } else if redoc.toggles() == doc.toggles() {
+        println!(
+            "  round-trip: toggle counts identical per var (text differs \
+             in headers only — cross-design replay)"
+        );
+    } else {
+        anyhow::bail!(
+            "replay diverged: per-var toggle counts differ from the \
+             recording ({} vs {} total)",
+            retoggles,
+            toggles
+        );
+    }
+    Ok(())
 }
 
 /// `tnn7 flow --targets A,B,.. [--tech T1,T2,..] [--util U1,U2,..]`:

@@ -1,107 +1,76 @@
-//! The PJRT execution client.
+//! The PJRT execution client (backend-less build).
 //!
-//! Wraps the `xla` crate: one CPU `xla::PjRtClient`, a lazily-compiled
-//! executable per artifact (HLO text → `HloModuleProto::from_text_file` →
-//! `client.compile`), and a typed i32 execute with shape validation
-//! against the manifest.  This is the ONLY place python-built compute
-//! enters the rust request path.
+//! The original workflow executed the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) through an `xla`-crate PJRT CPU client.  That
+//! native backend is not part of the offline vendor set, so this build
+//! keeps the typed API — manifest loading and declared-shape validation
+//! included — while [`Runtime::compile`] / [`Runtime::execute`] return a
+//! structured [`Error::runtime`] instead of running HLO.  Everything the
+//! HLO programs compute is covered natively by the golden behavioral
+//! model in [`crate::tnn`]; `tests/hlo_runtime.rs` pins the golden model
+//! against the manifest contract so a future backend can slot back in
+//! behind the same signatures.
 
-use std::collections::HashMap;
 use std::path::Path;
 
 use crate::error::{Error, Result};
 
 use super::manifest::{ArtifactInfo, Manifest};
 
-/// Loaded runtime: PJRT client + compiled executables.
+/// Error message every execution path reports in this build.
+pub const NO_BACKEND: &str =
+    "built without a PJRT/XLA backend: HLO artifacts can be validated \
+     but not executed (the golden model in tnn7::tnn covers the same \
+     programs natively)";
+
+/// Loaded runtime: parsed manifest, no executables in this build.
 pub struct Runtime {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
-    /// Create a CPU runtime over an artifacts directory.
+    /// Create a runtime over an artifacts directory.  Succeeds whenever
+    /// the manifest parses and its architectural constants match this
+    /// binary; execution attempts then fail with [`NO_BACKEND`].
     pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::runtime(format!("PJRT client: {e}")))?;
-        Ok(Runtime { client, manifest, exes: HashMap::new() })
+        Ok(Runtime { manifest })
     }
 
     /// Platform string (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "none (no PJRT backend)".to_string()
     }
 
-    /// Compile (and cache) an artifact's executable.
+    /// Compile an artifact's executable.  Validates the artifact exists
+    /// in the manifest, then reports the missing backend.
     pub fn compile(&mut self, name: &str) -> Result<()> {
-        if self.exes.contains_key(name) {
-            return Ok(());
-        }
-        let info = self.manifest.get(name)?.clone();
-        let path = self.manifest.path_of(&info);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
-        )
-        .map_err(|e| {
-            Error::runtime(format!("parse {}: {e}", path.display()))
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::runtime(format!("compile {name}: {e}")))?;
-        self.exes.insert(name.to_string(), exe);
-        Ok(())
+        let _info = self.manifest.get(name)?;
+        Err(Error::runtime(format!("compile {name}: {NO_BACKEND}")))
     }
 
     /// Execute artifact `name` on i32 input tensors.
     ///
-    /// `inputs[k]` must match the manifest's k-th declared shape; outputs
-    /// come back as flat i32 vectors (jax lowers with `return_tuple=True`,
-    /// so the single result literal is a tuple).
+    /// `inputs[k]` must match the manifest's k-th declared shape; shape
+    /// mismatches are reported before the missing backend so call-site
+    /// bugs surface as shape errors exactly as they did with a live
+    /// client.
     pub fn execute(
         &mut self,
         name: &str,
         inputs: &[&[i32]],
     ) -> Result<Vec<Vec<i32>>> {
-        self.compile(name)?;
         let info = self.manifest.get(name)?.clone();
         validate_shapes(&info, inputs)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .zip(&info.inputs)
-            .map(|(data, shape)| {
-                let dims: Vec<i64> =
-                    shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data)
-                    .reshape(&dims)
-                    .map_err(|e| Error::runtime(format!("reshape: {e}")))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let exe = self.exes.get(name).expect("compiled above");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::runtime(format!("execute {name}: {e}")))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::runtime(format!("readback: {e}")))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| Error::runtime(format!("untuple: {e}")))?;
-        parts
-            .into_iter()
-            .map(|p| {
-                p.to_vec::<i32>()
-                    .map_err(|e| Error::runtime(format!("to_vec: {e}")))
-            })
-            .collect()
+        Err(Error::runtime(format!("execute {name}: {NO_BACKEND}")))
     }
 }
 
-fn validate_shapes(info: &ArtifactInfo, inputs: &[&[i32]]) -> Result<()> {
+/// Check `inputs` against the manifest's declared shapes.
+pub fn validate_shapes(
+    info: &ArtifactInfo,
+    inputs: &[&[i32]],
+) -> Result<()> {
     if inputs.len() != info.inputs.len() {
         return Err(Error::runtime(format!(
             "{}: {} inputs given, {} declared",
@@ -151,5 +120,38 @@ mod tests {
         assert!(validate_shapes(&info, &[&a, &b]).is_err());
         let short = [0i32; 5];
         assert!(validate_shapes(&info, &[&short, &b, &t]).is_err());
+    }
+
+    #[test]
+    fn execution_reports_the_missing_backend_after_validation() {
+        let text = format!(
+            r#"{{"inf": {}, "t_in": {}, "w_max": {}, "t_steps": {},
+                "rand_scale": {}, "n_params": {}, "batch": 2,
+                "artifacts": [{{"name": "t", "kind": "col_fwd",
+                  "file": "t.hlo.txt", "batch": 2, "cols": 1,
+                  "p": 3, "q": 2,
+                  "inputs": [[2, 3], [3, 2], [1]]}}]}}"#,
+            crate::arch::INF,
+            crate::arch::T_IN,
+            crate::arch::W_MAX,
+            crate::arch::T_STEPS,
+            crate::arch::RAND_SCALE,
+            crate::arch::N_PARAMS,
+        );
+        let manifest =
+            Manifest::parse(&text, Path::new("artifacts")).unwrap();
+        let mut rt = Runtime { manifest };
+        assert!(rt.platform().contains("no PJRT"));
+        // Shape errors win over the missing backend.
+        let bad = [0i32; 5];
+        let e = rt.execute("t", &[&bad]).unwrap_err().to_string();
+        assert!(e.contains("1 inputs given"), "{e}");
+        // Well-shaped calls report the backend.
+        let (a, b, th) = ([0i32; 6], [0i32; 6], [5i32]);
+        let e = rt.execute("t", &[&a, &b, &th]).unwrap_err().to_string();
+        assert!(e.contains("without a PJRT/XLA backend"), "{e}");
+        let e = rt.compile("t").unwrap_err().to_string();
+        assert!(e.contains("without a PJRT/XLA backend"), "{e}");
+        assert!(rt.compile("missing").unwrap_err().to_string().contains("missing"));
     }
 }

@@ -1,14 +1,17 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifact manifest.
 //!
 //! Python runs once at build time (`make artifacts`); this module is the
 //! only consumer of its output.  `artifacts/manifest.json` (parsed by the
 //! in-tree [`json`] module — no serde offline) describes every HLO-text
-//! program; [`client::Runtime`] compiles them on the PJRT CPU client and
-//! exposes a typed `execute` over i32 tensors.
+//! program; [`client::Runtime`] exposes a typed `execute` over i32
+//! tensors with shape validation against the manifest.
 //!
-//! Interchange is HLO *text*, never serialized protos: jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! This build carries no native PJRT/XLA backend (it is not in the
+//! offline vendor set), so execution attempts return a structured
+//! runtime error ([`client::NO_BACKEND`]) after validation; the golden
+//! behavioral model in [`crate::tnn`] computes the same programs
+//! natively and `tests/hlo_runtime.rs` pins the contract between the
+//! two, keeping the signatures stable for a future live client.
 
 pub mod client;
 pub mod json;

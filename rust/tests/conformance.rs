@@ -1,0 +1,537 @@
+//! Differential conformance suite for the interop layer (DESIGN.md
+//! §12): every netlist flavour × technology backend must survive
+//! export → re-import → re-simulate **bit-identically** on the scalar,
+//! packed, and sharded engines; VCD recorded by one engine must replay
+//! into another with identical bytes and toggle counts; and the pure
+//! [`column_wave_ticks`] schedule is pinned against the inline
+//! testbench so the two descriptions of the wave protocol can never
+//! drift.  Golden byte snapshots for the three builtin backends live
+//! under `tests/golden/interop/` (regenerate with `TNN7_BLESS=1`).
+
+use std::path::{Path, PathBuf};
+
+use tnn7::arch::T_STEPS;
+use tnn7::config::TnnConfig;
+use tnn7::flow::cache::StageCache;
+use tnn7::flow::{Flow, FlowContext, Target};
+use tnn7::interop::vcd::column_wave_ticks;
+use tnn7::interop::{
+    export_blif, export_verilog, import_blif, parse_vcd, record_engine,
+    text_digest,
+};
+use tnn7::netlist::column::{build_column, ColumnPorts, ColumnSpec};
+use tnn7::netlist::layer::{build_layer_netlist, LayerSpec};
+use tnn7::netlist::{Builder, Flavor, NetId, Netlist};
+use tnn7::runtime::json::Json;
+use tnn7::sim::testbench::{PackedColumnTestbench, WAVE_LEN};
+use tnn7::sim::{
+    PackedSimulator, ShardedSimulator, SimEngine, SimTick, Simulator,
+};
+use tnn7::tech::{
+    resolve_standalone, ASAP7_BASELINE, ASAP7_TNN7, N45_PROJECTED,
+};
+use tnn7::tnn::stdp::{RandPair, StdpParams};
+use tnn7::tnn::INF;
+
+/// Builtin backends with the column flavours their libraries can
+/// elaborate (the baseline library carries no custom macros).
+fn backend_flavors() -> [(&'static str, &'static [Flavor]); 3] {
+    [
+        (ASAP7_BASELINE, &[Flavor::Std][..]),
+        (ASAP7_TNN7, &[Flavor::Std, Flavor::Custom][..]),
+        (N45_PROJECTED, &[Flavor::Std, Flavor::Custom][..]),
+    ]
+}
+
+fn xorshift(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x
+}
+
+/// Random per-lane wave stimulus in the testbench's encoding: spike
+/// times in `[0, 8)` with 1-in-8 "never spikes" (`INF`), and one raw
+/// 16-bit pair per synapse for the Bernoulli random vector generator.
+#[allow(clippy::type_complexity)]
+fn wave_stimulus(
+    p: usize,
+    q: usize,
+    lanes: usize,
+    state: &mut u64,
+) -> (Vec<Vec<i32>>, Vec<Vec<RandPair>>) {
+    let stim = (0..lanes)
+        .map(|_| {
+            (0..p)
+                .map(|_| {
+                    let v = xorshift(state);
+                    if v & 7 == 7 {
+                        INF
+                    } else {
+                        (v % 8) as i32
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let rand = (0..lanes)
+        .map(|_| {
+            (0..p * q)
+                .map(|_| {
+                    let v = xorshift(state);
+                    (v as u16, (v >> 16) as u16)
+                })
+                .collect()
+        })
+        .collect();
+    (stim, rand)
+}
+
+/// `waves` consecutive random waves as one flat schedule (weights
+/// carry across wave boundaries, exactly as in training).
+fn wave_schedule(
+    ports: &ColumnPorts,
+    q: usize,
+    waves: usize,
+    lanes: usize,
+    state: &mut u64,
+) -> Vec<SimTick> {
+    let params = StdpParams::default_training();
+    let p = ports.x.len();
+    let mut ticks = Vec::with_capacity(waves * WAVE_LEN);
+    for _ in 0..waves {
+        let (stim, rand) = wave_stimulus(p, q, lanes, state);
+        ticks.extend(column_wave_ticks(ports, &stim, &rand, &params));
+    }
+    ticks
+}
+
+/// Committed 3-bit weight register of one lane, read through the port
+/// map (valid on any engine that can observe arbitrary nets).
+fn read_weights<E: SimEngine>(
+    eng: &E,
+    ports: &ColumnPorts,
+    lane: usize,
+) -> Vec<i32> {
+    ports
+        .weights
+        .iter()
+        .map(|bits| {
+            (eng.lane_value(bits[0], lane) as i32)
+                | (eng.lane_value(bits[1], lane) as i32) << 1
+                | (eng.lane_value(bits[2], lane) as i32) << 2
+        })
+        .collect()
+}
+
+/// Assert two engines agree on **every** net in **every** lane.
+fn assert_nets_identical<A: SimEngine, B: SimEngine>(
+    a: &A,
+    b: &B,
+    nl: &Netlist,
+    what: &str,
+) {
+    assert_eq!(a.lanes(), b.lanes());
+    for id in 0..nl.n_nets() as u32 {
+        for l in 0..a.lanes() {
+            assert_eq!(
+                a.lane_value(NetId(id), l),
+                b.lane_value(NetId(id), l),
+                "{what}: net n{id} lane {l} diverged"
+            );
+        }
+    }
+}
+
+/// Tentpole headline: for every backend × flavour, a column netlist
+/// exported to BLIF, re-imported, and re-simulated is bit-identical to
+/// the original — on the packed engine (8 lanes, full-state compare +
+/// byte-identical VCD + identical activity) and the scalar engine.
+#[test]
+fn blif_roundtrip_resimulates_bit_identically() {
+    for (backend, flavors) in backend_flavors() {
+        let tech = resolve_standalone(backend).unwrap();
+        let lib = tech.library();
+        for &flavor in flavors {
+            let spec = ColumnSpec { p: 4, q: 3, theta: 7 };
+            let (nl, ports) = build_column(lib, flavor, &spec).unwrap();
+            let text = export_blif(&nl, lib);
+            let back = import_blif(&text, lib).unwrap();
+            assert_eq!(
+                export_blif(&back, lib),
+                text,
+                "{backend}/{flavor:?}: export→import→export fixpoint"
+            );
+
+            let mut state = 0x7a11_ad00 ^ text_digest(backend);
+            let ticks =
+                wave_schedule(&ports, spec.q, 2, 8, &mut state);
+
+            // Packed, 8 lanes: drive original and re-import through the
+            // same schedule; recordings, full net state, per-lane
+            // weights, and per-instance activity all match exactly.
+            let mut p1 = PackedSimulator::new(&nl, lib, 8).unwrap();
+            let mut p2 = PackedSimulator::new(&back, lib, 8).unwrap();
+            let v1 = record_engine(&mut p1, &nl, &ticks);
+            let v2 = record_engine(&mut p2, &back, &ticks);
+            assert_eq!(v1, v2, "{backend}/{flavor:?}: packed VCD");
+            assert_nets_identical(&p1, &p2, &nl, backend);
+            for l in 0..8 {
+                assert_eq!(
+                    read_weights(&p1, &ports, l),
+                    read_weights(&p2, &ports, l),
+                    "{backend}/{flavor:?}: lane {l} weights"
+                );
+            }
+            assert_eq!(p1.activity().toggles, p2.activity().toggles);
+            assert_eq!(
+                p1.activity().clock_ticks,
+                p2.activity().clock_ticks
+            );
+            assert_eq!(p1.activity().cycles, p2.activity().cycles);
+
+            // Scalar: lane-0 of the same program, byte-identical VCD.
+            let scalar: Vec<SimTick> = ticks
+                .iter()
+                .map(|t| SimTick {
+                    inputs: t
+                        .inputs
+                        .iter()
+                        .map(|&(n, w)| (n, w & 1))
+                        .collect(),
+                    gclk_edge: t.gclk_edge,
+                })
+                .collect();
+            let mut s1 = Simulator::new(&nl, lib).unwrap();
+            let mut s2 = Simulator::new(&back, lib).unwrap();
+            assert_eq!(
+                record_engine(&mut s1, &nl, &scalar),
+                record_engine(&mut s2, &back, &scalar),
+                "{backend}/{flavor:?}: scalar VCD"
+            );
+            assert_nets_identical(&s1, &s2, &nl, backend);
+        }
+    }
+}
+
+/// The sharded engine closes the loop on a multi-column layer netlist
+/// (region-tagged columns are its partition seams): the re-imported
+/// netlist re-simulates bit-identically there too.
+#[test]
+fn blif_roundtrip_resimulates_on_the_sharded_engine() {
+    let tech = resolve_standalone(ASAP7_TNN7).unwrap();
+    let lib = tech.library();
+    let spec = LayerSpec {
+        cols: 2,
+        column: ColumnSpec { p: 3, q: 2, theta: 5 },
+    };
+    let (nl, ports) =
+        build_layer_netlist(lib, Flavor::Custom, &spec).unwrap();
+    let text = export_blif(&nl, lib);
+    let back = import_blif(&text, lib).unwrap();
+    assert_eq!(export_blif(&back, lib), text);
+
+    // Per-column wave schedules merged tick-by-tick into one layer
+    // schedule (the columns share the wave clock).
+    let mut state = 0x5eed_cafe_f00du64;
+    let per_col: Vec<Vec<SimTick>> = ports
+        .columns
+        .iter()
+        .map(|cp| wave_schedule(cp, spec.column.q, 2, 4, &mut state))
+        .collect();
+    let mut ticks = per_col[0].clone();
+    for col in &per_col[1..] {
+        for (t, extra) in ticks.iter_mut().zip(col) {
+            assert_eq!(t.gclk_edge, extra.gclk_edge);
+            t.inputs.extend(extra.inputs.iter().copied());
+        }
+    }
+
+    let mut a = ShardedSimulator::new(&nl, lib, 4, 2, &[]).unwrap();
+    let mut b = ShardedSimulator::new(&back, lib, 4, 2, &[]).unwrap();
+    let va = record_engine(&mut a, &nl, &ticks);
+    let vb = record_engine(&mut b, &back, &ticks);
+    assert_eq!(va, vb, "sharded VCD of original vs re-import");
+    assert_nets_identical(&a, &b, &nl, "sharded layer");
+    assert_eq!(a.activity().toggles, b.activity().toggles);
+    assert_eq!(a.activity().cycles, b.activity().cycles);
+
+    // The recording watched the layer's voter outputs; votes toggled.
+    let doc = parse_vcd(&va).unwrap();
+    assert_eq!(doc.lanes, 4);
+    assert_eq!(doc.ticks, ticks.len());
+    assert!(
+        doc.toggles().iter().sum::<u64>() > 0,
+        "layer waves produced no observable switching"
+    );
+}
+
+/// Satellite (d): a 64-lane packed recording re-ingested as stimulus
+/// replays **byte-identically** on a fresh packed engine *and* on the
+/// sharded engine — identical toggle counts per var and identical
+/// committed weights (the classification-relevant state) per lane.
+#[test]
+fn vcd_replay_crosses_engines_at_64_lanes() {
+    let tech = resolve_standalone(ASAP7_TNN7).unwrap();
+    let lib = tech.library();
+    let spec = ColumnSpec { p: 4, q: 3, theta: 7 };
+    let (nl, ports) = build_column(lib, Flavor::Custom, &spec).unwrap();
+    let mut state = 0xdead_beef_1234_5678u64;
+    let ticks = wave_schedule(&ports, spec.q, 2, 64, &mut state);
+
+    let mut rec = PackedSimulator::new(&nl, lib, 64).unwrap();
+    let text = record_engine(&mut rec, &nl, &ticks);
+    let doc = parse_vcd(&text).unwrap();
+    assert_eq!((doc.lanes, doc.ticks), (64, ticks.len()));
+    // Wave outputs made it into the recording.
+    assert!(doc.var_index("lane0", "fire[0]").is_some());
+    assert!(doc.var_index("lane63", "grant[2]").is_some());
+
+    let replay = doc.stimulus(&nl).unwrap();
+    assert_eq!(replay.len(), ticks.len());
+
+    let mut packed = PackedSimulator::new(&nl, lib, 64).unwrap();
+    let again = record_engine(&mut packed, &nl, &replay);
+    assert_eq!(text, again, "packed replay must re-record identically");
+
+    let mut sharded =
+        ShardedSimulator::new(&nl, lib, 64, 3, &[]).unwrap();
+    let cross = record_engine(&mut sharded, &nl, &replay);
+    assert_eq!(text, cross, "sharded replay must re-record identically");
+    assert_eq!(parse_vcd(&cross).unwrap().toggles(), doc.toggles());
+
+    // Classification outputs: the weights every engine committed agree
+    // lane-for-lane with the engine that produced the recording.
+    for l in 0..64 {
+        let w = read_weights(&rec, &ports, l);
+        assert_eq!(w, read_weights(&packed, &ports, l), "lane {l}");
+        assert_eq!(w, read_weights(&sharded, &ports, l), "lane {l}");
+    }
+}
+
+/// Drift guard: [`column_wave_ticks`] (the wave protocol as data) and
+/// `PackedColumnTestbench::run_wave_lanes` (the wave protocol inline)
+/// drive byte-for-byte the same program — same spike times, same
+/// committed weights, and the same per-instance activity counters over
+/// a 3-wave training run, for both flavours.
+#[test]
+fn wave_schedule_matches_the_inline_testbench() {
+    let tech = resolve_standalone(ASAP7_TNN7).unwrap();
+    let lib = tech.library();
+    let params = StdpParams::default_training();
+    let lanes = 8;
+    for flavor in [Flavor::Std, Flavor::Custom] {
+        let spec = ColumnSpec { p: 5, q: 3, theta: 9 };
+        let (nl, ports) = build_column(lib, flavor, &spec).unwrap();
+        let mut tb =
+            PackedColumnTestbench::new(&nl, &ports, lib, lanes).unwrap();
+        let mut sim = PackedSimulator::new(&nl, lib, lanes).unwrap();
+        let mut state = 0x0dd_ba11 ^ (flavor as u64 + 1);
+        for wave in 0..3 {
+            let (stim, rand) =
+                wave_stimulus(spec.p, spec.q, lanes, &mut state);
+            let results = tb.run_wave_lanes(&stim, &rand, &params);
+
+            let ticks = column_wave_ticks(&ports, &stim, &rand, &params);
+            assert_eq!(ticks.len(), WAVE_LEN);
+            let mut pre = vec![vec![INF; spec.q]; lanes];
+            let mut post = vec![vec![INF; spec.q]; lanes];
+            for (cyc, tick) in ticks.iter().enumerate() {
+                sim.tick(&tick.inputs, tick.gclk_edge);
+                if cyc < T_STEPS as usize {
+                    for (l, (pre_l, post_l)) in
+                        pre.iter_mut().zip(post.iter_mut()).enumerate()
+                    {
+                        for i in 0..spec.q {
+                            if pre_l[i] == INF
+                                && sim.get(ports.fires[i], l)
+                            {
+                                pre_l[i] = cyc as i32;
+                            }
+                            if post_l[i] == INF
+                                && sim.get(ports.grants[i], l)
+                            {
+                                post_l[i] = cyc as i32;
+                            }
+                        }
+                    }
+                }
+            }
+            for (l, res) in results.iter().enumerate() {
+                assert_eq!(
+                    res.pre, pre[l],
+                    "{flavor:?} wave {wave} lane {l}: pre spikes"
+                );
+                assert_eq!(
+                    res.post, post[l],
+                    "{flavor:?} wave {wave} lane {l}: post spikes"
+                );
+                assert_eq!(
+                    res.weights,
+                    read_weights(&sim, &ports, l),
+                    "{flavor:?} wave {wave} lane {l}: weights"
+                );
+            }
+        }
+        // Whole-run activity: identical stimulus ⇒ identical counters.
+        let a = tb.activity();
+        let b = SimEngine::activity(&sim);
+        assert_eq!(a.toggles, b.toggles, "{flavor:?}: toggles");
+        assert_eq!(a.clock_ticks, b.clock_ticks, "{flavor:?}");
+        assert_eq!(a.cycles, b.cycles, "{flavor:?}");
+    }
+}
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/interop")
+}
+
+/// Satellite (c): committed byte snapshots of all three interchange
+/// formats for every builtin backend.  The design is a tiny two-gate
+/// netlist whose name carries the backend, so each snapshot pins the
+/// full export path (headers, identifier mangling, model bodies,
+/// change-only VCD emission) byte-for-byte.  `TNN7_BLESS=1` rewrites
+/// the snapshots from the current exporters.
+#[test]
+fn golden_interchange_snapshots_are_byte_stable() {
+    let dir = golden_dir();
+    let bless = std::env::var_os("TNN7_BLESS").is_some();
+    if bless {
+        std::fs::create_dir_all(&dir).unwrap();
+    }
+    for (backend, _) in backend_flavors() {
+        let tech = resolve_standalone(backend).unwrap();
+        let lib = tech.library();
+        let name = format!("golden_{}", backend.replace('-', "_"));
+        let mut b = Builder::new(&name, lib);
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.nand2(a, c);
+        let y = b.xor2(x, a);
+        b.output(y, "y");
+        let nl = b.finish().unwrap();
+
+        let blif = export_blif(&nl, lib);
+        let verilog = export_verilog(&nl, lib);
+        let ticks: Vec<SimTick> = [(0u64, 0u64), (1, 0), (1, 1), (0, 1)]
+            .iter()
+            .map(|&(va, vb)| SimTick {
+                inputs: vec![(a, va), (c, vb)],
+                gclk_edge: false,
+            })
+            .collect();
+        let mut sim = PackedSimulator::new(&nl, lib, 1).unwrap();
+        let vcd = record_engine(&mut sim, &nl, &ticks);
+
+        for (ext, text) in
+            [("blif", &blif), ("v", &verilog), ("vcd", &vcd)]
+        {
+            let path = dir.join(format!("{backend}.{ext}"));
+            if bless {
+                std::fs::write(&path, text).unwrap();
+                continue;
+            }
+            let want =
+                std::fs::read_to_string(&path).unwrap_or_else(|e| {
+                    panic!(
+                        "missing golden {} ({e}); regenerate with \
+                         TNN7_BLESS=1 cargo test",
+                        path.display()
+                    )
+                });
+            assert_eq!(
+                text,
+                &want,
+                "golden {} drifted (TNN7_BLESS=1 regenerates)",
+                path.display()
+            );
+        }
+
+        // The snapshots themselves satisfy the interop contracts.
+        let back = import_blif(&blif, lib).unwrap();
+        assert_eq!(export_blif(&back, lib), blif);
+        let doc = parse_vcd(&vcd).unwrap();
+        assert_eq!((doc.lanes, doc.ticks), (1, 4));
+        assert_eq!(doc.design, name);
+        // y = nand(a,b) ^ a over the four input patterns.
+        let yv = doc.var_index("lane0", "y").unwrap();
+        let got: Vec<bool> =
+            (0..4).map(|t| doc.samples[t][yv]).collect();
+        assert_eq!(got, [true, false, true, true]);
+    }
+}
+
+/// The optional `export` flow stage: opt-in only, dumps sizes and
+/// FNV fingerprints (not megabytes of text), and participates in the
+/// stage cache like any other pure stage.
+#[test]
+fn export_stage_dumps_fingerprints_and_caches() {
+    // Opt-in: the standard pipelines never include it.
+    assert!(!Flow::standard().stage_names().contains(&"export"));
+    assert!(!Flow::placed().stage_names().contains(&"export"));
+
+    let cfg = TnnConfig { sim_waves: 2, ..TnnConfig::default() };
+    let spec = ColumnSpec { p: 4, q: 3, theta: 7 };
+    let target = || Target::column(Flavor::Custom, spec);
+    let dir = std::env::temp_dir()
+        .join(format!("tnn7_conformance_dumps_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut ctx = FlowContext::new(target(), cfg.clone()).unwrap();
+    let flow =
+        Flow::from_spec("elaborate,export").unwrap().dump_dir(&dir);
+    flow.run(&mut ctx).unwrap();
+    assert_eq!(ctx.exported.len(), 1);
+    let e = &ctx.exported[0];
+    assert!(e.blif.starts_with("# tnn7 blif 1\n"));
+    assert!(e.verilog.starts_with("// tnn7 structural verilog 1\n"));
+
+    let text = std::fs::read_to_string(
+        dir.join("01_export.asap7-tnn7.json"),
+    )
+    .unwrap();
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.field("stage").unwrap().as_str().unwrap(), "export");
+    assert_eq!(
+        j.field("format_version").unwrap().as_usize().unwrap(),
+        1
+    );
+    let units = j.field("units").unwrap().as_arr().unwrap();
+    assert_eq!(units.len(), 1);
+    let u = &units[0];
+    assert_eq!(u.field("label").unwrap().as_str().unwrap(), e.label);
+    assert_eq!(
+        u.field("blif_bytes").unwrap().as_usize().unwrap(),
+        e.blif.len()
+    );
+    let want_fnv = format!("{:016x}", text_digest(&e.blif));
+    assert_eq!(
+        u.field("blif_fnv").unwrap().as_str().unwrap(),
+        want_fnv.as_str()
+    );
+    assert_eq!(
+        u.field("verilog_bytes").unwrap().as_usize().unwrap(),
+        e.verilog.len()
+    );
+    assert_eq!(
+        u.field("roundtrip").unwrap().as_str().unwrap(),
+        "byte-fixpoint"
+    );
+
+    // Cache: a second context replays both stages from memory and
+    // restores identical export artifacts.
+    let cache = StageCache::in_memory(32);
+    let flow2 = Flow::from_spec("elaborate,export").unwrap();
+    let mut c1 = FlowContext::new(target(), cfg.clone()).unwrap();
+    let t1 = flow2.run_cached(&mut c1, Some(&cache)).unwrap();
+    assert_eq!(t1.executed(), 2);
+    let mut c2 = FlowContext::new(target(), cfg).unwrap();
+    let t2 = flow2.run_cached(&mut c2, Some(&cache)).unwrap();
+    assert_eq!((t2.executed(), t2.mem_hits()), (0, 2));
+    assert_eq!(c2.exported[0].blif, c1.exported[0].blif);
+    assert_eq!(c2.exported[0].verilog, c1.exported[0].verilog);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,31 +1,22 @@
-//! HLO runtime integration: the AOT artifacts vs the golden model.
+//! HLO runtime contract: the manifest format and the golden model.
 //!
-//! Requires `make artifacts` (the Makefile `test` target guarantees it).
-//! These tests prove that the python-built compute (Pallas kernels inside
-//! jax programs, lowered to HLO text) produces bit-identical results to
-//! the rust golden model when executed through the PJRT CPU client —
-//! the L1/L2 ⇄ L3 contract of the whole architecture.
+//! The original seed executed AOT-compiled JAX/Pallas artifacts through
+//! a PJRT CPU client and diffed them against the golden model.  This
+//! build has no native XLA backend (see `runtime::client::NO_BACKEND`),
+//! so the executable half of that contract is pinned from the other
+//! side: the manifest format (architectural-constant validation, shape
+//! declarations) is tested directly, the stub client's behavior is
+//! pinned so a future live client slots in behind the same signatures,
+//! and the golden programs the artifacts encode (`column_fwd`,
+//! `stdp_step`) are property-tested natively.
 
 use std::path::Path;
 
-use tnn7::arch::INF;
+use tnn7::arch::{INF, N_PARAMS, RAND_SCALE, T_IN, T_STEPS, W_MAX};
 use tnn7::data::digits::XorShift;
-use tnn7::runtime::Runtime;
+use tnn7::runtime::{Manifest, Runtime};
 use tnn7::tnn::column::column_fwd;
-use tnn7::tnn::stdp::{stdp_step, StdpParams};
-
-fn artifacts() -> Option<Runtime> {
-    let dir = Path::new("artifacts");
-    match Runtime::load(dir) {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            // Fail loudly in CI, but allow `cargo test` before artifacts
-            // exist to skip rather than error cryptically.
-            eprintln!("skipping HLO tests (run `make artifacts`): {e}");
-            None
-        }
-    }
-}
+use tnn7::tnn::stdp::{stdp_step, RandPair, StdpParams};
 
 fn rand_spikes(rng: &mut XorShift, n: usize) -> Vec<i32> {
     (0..n)
@@ -40,116 +31,121 @@ fn rand_spikes(rng: &mut XorShift, n: usize) -> Vec<i32> {
         .collect()
 }
 
-#[test]
-fn col_fwd_matches_golden_on_all_benchmark_sizes() {
-    let Some(mut rt) = artifacts() else { return };
-    let mut rng = XorShift::new(0xC0FFEE);
-    for (name, p, q, theta) in [
-        ("col_fwd_8x4", 8usize, 4usize, 6i32),
-        ("col_fwd_64x8", 64, 8, 40),
-        ("col_fwd_128x10", 128, 10, 60),
-        ("col_fwd_1024x16", 1024, 16, 300),
-    ] {
-        let b = rt.manifest.batch;
-        let s = rand_spikes(&mut rng, b * p);
-        let w: Vec<i32> = (0..p * q).map(|_| (rng.next_u64() % 8) as i32).collect();
-        let out = rt.execute(name, &[&s, &w, &[theta]]).unwrap();
-        let (pre, post) = (&out[0], &out[1]);
-        for bi in 0..b {
-            let sb = &s[bi * p..(bi + 1) * p];
-            let (pre_g, post_g) = column_fwd(sb, &w, q, theta);
-            assert_eq!(&pre[bi * q..(bi + 1) * q], &pre_g[..], "{name} pre b{bi}");
-            assert_eq!(
-                &post[bi * q..(bi + 1) * q],
-                &post_g[..],
-                "{name} post b{bi}"
-            );
-        }
-    }
+fn manifest_text(inf: i64) -> String {
+    format!(
+        r#"{{"inf": {inf}, "t_in": {T_IN}, "w_max": {W_MAX},
+            "t_steps": {T_STEPS}, "rand_scale": {RAND_SCALE},
+            "n_params": {N_PARAMS}, "batch": 16,
+            "artifacts": [{{"name": "col_fwd_8x4", "kind": "col_fwd",
+              "file": "col_fwd_8x4.hlo.txt", "batch": 16, "cols": 1,
+              "p": 8, "q": 4,
+              "inputs": [[16, 8], [8, 4], [1]]}}]}}"#
+    )
 }
 
 #[test]
-fn col_train_matches_golden_including_weights() {
-    let Some(mut rt) = artifacts() else { return };
-    let mut rng = XorShift::new(0xBADDCAFE);
-    let (p, q, theta) = (64usize, 8usize, 40i32);
-    let b = rt.manifest.batch;
-    let params = StdpParams::default_training();
-    let params_vec = params.to_vec();
-    let mut w: Vec<i32> = vec![3; p * q];
-    // Several consecutive training steps: state must track exactly.
-    for step in 0..3 {
-        let s = rand_spikes(&mut rng, b * p);
-        let rand: Vec<i32> = (0..b * p * q * 2)
-            .map(|_| (rng.next_u64() & 0xFFFF) as i32)
-            .collect();
-        let out = rt
-            .execute("col_train_64x8", &[&s, &w, &[theta], &rand, &params_vec])
+fn manifest_contract_validates_architectural_constants() {
+    let dir = Path::new("artifacts");
+    let m = Manifest::parse(&manifest_text(INF as i64), dir).unwrap();
+    assert_eq!(m.batch, 16);
+    let info = m.get("col_fwd_8x4").unwrap();
+    assert_eq!((info.p, info.q), (8, 4));
+    assert_eq!(info.inputs, vec![vec![16, 8], vec![8, 4], vec![1]]);
+    assert!(m.get("does_not_exist").is_err());
+    // A drifted artifact set is an error, not a silent miscompute.
+    let err = Manifest::parse(&manifest_text(INF as i64 - 1), dir)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("re-run `make artifacts`"), "{err}");
+}
+
+#[test]
+fn stub_client_validates_shapes_then_reports_the_backend() {
+    let manifest =
+        Manifest::parse(&manifest_text(INF as i64), Path::new("artifacts"))
             .unwrap();
-        let (post, new_w) = (&out[1], &out[2]);
-        // Golden: forward all with frozen w, then sequential updates.
-        let mut w_gold = w.clone();
-        for bi in 0..b {
-            let sb = &s[bi * p..(bi + 1) * p];
-            let (_, post_g) = column_fwd(sb, &w, q, theta);
-            assert_eq!(
-                &post[bi * q..(bi + 1) * q],
-                &post_g[..],
-                "step {step} post b{bi}"
+    let mut rt = Runtime { manifest };
+    let s = vec![0i32; 16 * 8];
+    let w = vec![0i32; 8 * 4];
+    // Wrong shapes surface as shape errors exactly as with a live
+    // client ...
+    let err = rt.execute("col_fwd_8x4", &[&s, &w]).unwrap_err().to_string();
+    assert!(err.contains("2 inputs given"), "{err}");
+    // ... well-formed calls report the missing backend.
+    let err = rt
+        .execute("col_fwd_8x4", &[&s, &w, &[6]])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("without a PJRT/XLA backend"), "{err}");
+}
+
+#[test]
+fn loading_absent_artifacts_is_a_structured_error() {
+    // The repo tracks no artifacts/ directory; if one is ever added the
+    // stub must still load its manifest and refuse execution cleanly.
+    match Runtime::load(Path::new("artifacts")) {
+        Err(e) => {
+            assert!(e.to_string().contains("manifest.json"), "{e}")
+        }
+        Ok(mut rt) => {
+            let err =
+                rt.compile("col_fwd_8x4").unwrap_err().to_string();
+            assert!(err.contains("backend"), "{err}");
+        }
+    }
+}
+
+#[test]
+fn col_fwd_golden_is_deterministic_and_theta_monotone() {
+    let mut rng = XorShift::new(0xC0FFEE);
+    for (p, q) in [(8usize, 4usize), (64, 8), (128, 10)] {
+        let s = rand_spikes(&mut rng, p);
+        let w: Vec<i32> =
+            (0..p * q).map(|_| (rng.next_u64() % 8) as i32).collect();
+        let theta = (p / 2) as i32;
+        let (pre, post) = column_fwd(&s, &w, q, theta);
+        assert_eq!(pre, column_fwd(&s, &w, q, theta).0, "deterministic");
+        assert_eq!(pre.len(), q);
+        assert_eq!(post.len(), q);
+        // Spike times live in [0, T_STEPS) or are INF, and raising the
+        // threshold can only delay (or kill) each neuron's first spike.
+        let (pre_hi, _) = column_fwd(&s, &w, q, theta + 3);
+        for i in 0..q {
+            assert!(pre[i] == INF || (0..T_STEPS).contains(&pre[i]));
+            assert!(pre_hi[i] >= pre[i], "neuron {i} fired earlier");
+        }
+        // WTA: at most one winner, and it spikes no earlier than its
+        // own pre time.
+        let winners = post.iter().filter(|&&t| t != INF).count();
+        assert!(winners <= 1, "{winners} winners");
+        for i in 0..q {
+            assert!(post[i] == INF || post[i] >= pre[i]);
+        }
+    }
+}
+
+#[test]
+fn stdp_step_golden_saturates_weights_in_range() {
+    let mut rng = XorShift::new(0xBADDCAFE);
+    let (p, q) = (16usize, 4usize);
+    let params = StdpParams::default_training();
+    assert_eq!(params.to_vec().len(), N_PARAMS);
+    let mut w: Vec<i32> = (0..p * q).map(|_| (rng.next_u64() % 8) as i32).collect();
+    for step in 0..10 {
+        let s = rand_spikes(&mut rng, p);
+        let (_, post) = column_fwd(&s, &w, q, (p / 2) as i32);
+        let pairs: Vec<RandPair> = (0..p * q)
+            .map(|_| {
+                let v = rng.next_u64();
+                (v as u16, (v >> 16) as u16)
+            })
+            .collect();
+        stdp_step(&s, &post, &mut w, &pairs, &params);
+        for (k, &wk) in w.iter().enumerate() {
+            assert!(
+                (0..=W_MAX).contains(&wk),
+                "step {step}: w[{k}] = {wk} out of [0, {W_MAX}]"
             );
-            let pairs: Vec<(u16, u16)> = (0..p * q)
-                .map(|k| {
-                    let base = (bi * p * q + k) * 2;
-                    (rand[base] as u16, rand[base + 1] as u16)
-                })
-                .collect();
-            stdp_step(sb, &post_g, &mut w_gold, &pairs, &params);
-        }
-        assert_eq!(new_w, &w_gold, "step {step} weights");
-        w = new_w.clone();
-    }
-}
-
-#[test]
-fn layer_fwd_matches_per_column_golden() {
-    let Some(mut rt) = artifacts() else { return };
-    let info = rt.manifest.get("l1_fwd").unwrap().clone();
-    let (b, c, p, q) = (info.batch, info.cols, info.p, info.q);
-    let mut rng = XorShift::new(42);
-    let s = rand_spikes(&mut rng, b * c * p);
-    let w: Vec<i32> =
-        (0..c * p * q).map(|_| (rng.next_u64() % 8) as i32).collect();
-    let theta = 20i32;
-    let out = rt.execute("l1_fwd", &[&s, &w, &[theta]]).unwrap();
-    let post = &out[1];
-    // Spot-check a deterministic subset of columns (full check lives in
-    // Pipeline::cross_check_batch; this keeps test time bounded).
-    for &ci in &[0usize, 1, 77, 311, 624] {
-        for bi in [0usize, b - 1] {
-            let sb: Vec<i32> =
-                (0..p).map(|j| s[(bi * c + ci) * p + j]).collect();
-            let wc: Vec<i32> =
-                (0..p * q).map(|k| w[ci * p * q + k]).collect();
-            let (_, post_g) = column_fwd(&sb, &wc, q, theta);
-            let got: Vec<i32> =
-                (0..q).map(|i| post[(bi * c + ci) * q + i]).collect();
-            assert_eq!(got, post_g, "col {ci} b {bi}");
         }
     }
-}
-
-#[test]
-fn manifest_constants_match_binary() {
-    let Some(rt) = artifacts() else { return };
-    assert_eq!(rt.manifest.batch, 16);
-    assert!(rt.manifest.get("l1_train").is_ok());
-    assert!(rt.manifest.get("l2_train").is_ok());
-    assert!(rt.manifest.get("does_not_exist").is_err());
-}
-
-#[test]
-fn execute_rejects_wrong_shapes() {
-    let Some(mut rt) = artifacts() else { return };
-    let bad = vec![0i32; 7];
-    assert!(rt.execute("col_fwd_8x4", &[&bad, &bad, &bad]).is_err());
 }

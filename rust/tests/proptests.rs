@@ -668,6 +668,105 @@ fn prop_placement_hpwl_never_increases() {
     }
 }
 
+/// INVARIANT: export → BLIF → re-import reconstructs a netlist that
+/// simulates bit-identically on all three engines — every net, every
+/// lane, every tick, plus the aggregated toggle / clock-tick / cycle
+/// counters — and the export is a byte fixpoint of the round trip.
+#[test]
+fn prop_reimported_netlist_simulates_identically() {
+    use tnn7::interop::{export_blif, import_blif};
+    let lib = Library::asap7_only();
+    for seed in 0..6u64 {
+        let mut r = rng(seed * 3571 + 17);
+        let nl = random_netlist(&lib, seed + 2500);
+        let blif = export_blif(&nl, &lib);
+        let nl2 = import_blif(&blif, &lib).unwrap();
+        assert_eq!(
+            export_blif(&nl2, &lib),
+            blif,
+            "seed {seed}: re-export is not a byte fixpoint"
+        );
+        let lanes = 1 + (r.next_u64() % 64) as usize;
+        let mut pk1 = PackedSimulator::new(&nl, &lib, lanes).unwrap();
+        let mut pk2 = PackedSimulator::new(&nl2, &lib, lanes).unwrap();
+        let mut sc1 = Simulator::new(&nl, &lib).unwrap();
+        let mut sc2 = Simulator::new(&nl2, &lib).unwrap();
+        for t in 0..30u32 {
+            let gamma = r.next_u64() & 3 == 0;
+            let words: Vec<(NetId, u64)> =
+                nl.inputs.iter().map(|&n| (n, r.next_u64())).collect();
+            pk1.tick(&words, gamma);
+            pk2.tick(&words, gamma);
+            let iv: Vec<(NetId, bool)> =
+                words.iter().map(|&(n, w)| (n, w & 1 == 1)).collect();
+            sc1.tick(&iv, gamma);
+            sc2.tick(&iv, gamma);
+            for net in 0..nl.n_nets() {
+                let id = NetId(net as u32);
+                for l in 0..lanes {
+                    assert_eq!(
+                        pk1.get(id, l),
+                        pk2.get(id, l),
+                        "seed {seed} tick {t} net {net} lane {l}"
+                    );
+                }
+                assert_eq!(
+                    sc1.get(id),
+                    sc2.get(id),
+                    "seed {seed} tick {t} net {net} (scalar)"
+                );
+            }
+        }
+        assert_eq!(
+            pk1.activity.toggles, pk2.activity.toggles,
+            "seed {seed}: toggles"
+        );
+        assert_eq!(pk1.activity.clock_ticks, pk2.activity.clock_ticks);
+        assert_eq!(pk1.activity.cycles, pk2.activity.cycles);
+        assert_eq!(sc1.activity.toggles, sc2.activity.toggles);
+    }
+    // The sharded engine over the region-blocked generator: re-import
+    // preserves the region tree byte-for-byte, so the column-aligned
+    // partitioner cuts identical shards on both sides.
+    for seed in 0..4u64 {
+        let mut r = rng(seed * 9013 + 3);
+        let blocks = 2 + (seed as usize % 3);
+        let nl = random_sharded_netlist(&lib, seed + 3100, blocks);
+        let blif = export_blif(&nl, &lib);
+        let nl2 = import_blif(&blif, &lib).unwrap();
+        let lanes = 1 + (r.next_u64() % 64) as usize;
+        let shards = 1 + (r.next_u64() % 4) as usize;
+        let mut sh1 =
+            ShardedSimulator::new(&nl, &lib, lanes, shards, &[]).unwrap();
+        let mut sh2 =
+            ShardedSimulator::new(&nl2, &lib, lanes, shards, &[]).unwrap();
+        for t in 0..20u32 {
+            let gamma = r.next_u64() & 3 == 0;
+            let words: Vec<(NetId, u64)> =
+                nl.inputs.iter().map(|&n| (n, r.next_u64())).collect();
+            sh1.tick_lanes(&words, gamma);
+            sh2.tick_lanes(&words, gamma);
+            for net in 0..nl.n_nets() {
+                let id = NetId(net as u32);
+                for l in 0..lanes {
+                    assert_eq!(
+                        sh1.lane_value(id, l),
+                        sh2.lane_value(id, l),
+                        "seed {seed} tick {t} net {net} lane {l} \
+                         ({blocks} blocks, {shards} shards)"
+                    );
+                }
+            }
+        }
+        assert_eq!(
+            sh1.activity().toggles,
+            sh2.activity().toggles,
+            "seed {seed}: sharded toggles"
+        );
+        assert_eq!(sh1.activity().cycles, sh2.activity().cycles);
+    }
+}
+
 /// INVARIANT: PPA is monotone in column size (more synapses never cost
 /// less area or leakage).
 #[test]
