@@ -154,6 +154,16 @@ pub struct TnnConfig {
     pub place_aspect: f64,
     /// Placement RNG seed — same seed ⇒ bit-identical placement.
     pub place_seed: u64,
+    /// Run the fault-injection `faults` stage (`tnn7 flow --faults`,
+    /// DESIGN.md §13).
+    pub faults: bool,
+    /// Fault classes to sweep, comma-separated
+    /// ([`crate::fault::FaultClass::parse`] tokens).
+    pub faults_classes: String,
+    /// Fault rates to sweep, comma-separated non-negative floats.
+    pub faults_rates: String,
+    /// Campaign sampling seeds, comma-separated unsigned integers.
+    pub faults_seeds: String,
     /// `tnn7 serve` bind address.
     pub serve_addr: String,
     /// Daemon worker threads (each runs one flow at a time).
@@ -191,6 +201,10 @@ impl Default for TnnConfig {
             place_util: 0.70,
             place_aspect: 1.0,
             place_seed: 1,
+            faults: false,
+            faults_classes: "stuck0,stuck1,seu".into(),
+            faults_rates: "0,0.02".into(),
+            faults_seeds: "1".into(),
             serve_addr: "127.0.0.1:7411".into(),
             serve_threads: 4,
             serve_queue: 64,
@@ -233,6 +247,10 @@ impl TnnConfig {
             (
                 "place",
                 &["enabled", "utilization", "aspect", "seed"],
+            ),
+            (
+                "faults",
+                &["enabled", "classes", "rates", "seeds"],
             ),
             ("serve", &["addr", "threads", "queue"]),
             ("cache", &["enabled", "dir", "mem_entries"]),
@@ -348,6 +366,35 @@ impl TnnConfig {
             }
             c.place_seed = s as u64;
         }
+        if let Some(v) = t.get("faults", "enabled") {
+            match v {
+                Value::Bool(b) => c.faults = *b,
+                _ => {
+                    return Err(Error::config(
+                        "faults.enabled must be a boolean",
+                    ))
+                }
+            }
+        }
+        for (key, field) in [
+            ("classes", &mut c.faults_classes as &mut String),
+            ("rates", &mut c.faults_rates),
+            ("seeds", &mut c.faults_seeds),
+        ] {
+            if let Some(v) = t.get("faults", key) {
+                match v {
+                    Value::Str(s) => *field = s.clone(),
+                    _ => {
+                        return Err(Error::config(format!(
+                            "faults.{key} must be a string"
+                        )))
+                    }
+                }
+            }
+        }
+        // Validate the campaign grammar up front — a bad class token
+        // should fail at config load, not mid-flow.
+        c.fault_spec()?;
         if let Some(v) = t.get("serve", "addr") {
             match v {
                 Value::Str(s) => c.serve_addr = s.clone(),
@@ -406,6 +453,15 @@ impl TnnConfig {
             c.cache_mem_entries = n as usize;
         }
         Ok(c)
+    }
+
+    /// Campaign grid parsed from the `[faults]` class/rate/seed lists.
+    pub fn fault_spec(&self) -> Result<crate::fault::CampaignSpec> {
+        crate::fault::CampaignSpec::parse(
+            &self.faults_classes,
+            &self.faults_rates,
+            &self.faults_seeds,
+        )
     }
 
     /// STDP parameters from the configured probabilities.
@@ -538,6 +594,40 @@ sim_threads = 4
         );
         assert!(TnnConfig::from_toml("[cache]\nenabled = 1").is_err());
         assert!(TnnConfig::from_toml("[cache]\ndir = true").is_err());
+    }
+
+    #[test]
+    fn parses_and_validates_faults_section() {
+        let c = TnnConfig::from_toml(
+            "[faults]\nenabled = true\nclasses = \"sa0,glitch\"\n\
+             rates = \"0,0.1\"\nseeds = \"7,8\"",
+        )
+        .unwrap();
+        assert!(c.faults);
+        let spec = c.fault_spec().unwrap();
+        assert_eq!(spec.rates, vec![0.0, 0.1]);
+        assert_eq!(spec.seeds, vec![7, 8]);
+        // Defaults: stage off, smoke-ish grid that parses cleanly.
+        let d = TnnConfig::default();
+        assert!(!d.faults);
+        assert!(d.fault_spec().is_ok());
+        // Bad grammar fails at config load, not mid-flow.
+        assert!(TnnConfig::from_toml(
+            "[faults]\nclasses = \"meltdown\""
+        )
+        .is_err());
+        assert!(
+            TnnConfig::from_toml("[faults]\nrates = \"-1\"").is_err()
+        );
+        assert!(
+            TnnConfig::from_toml("[faults]\nseeds = \"\"").is_err()
+        );
+        assert!(
+            TnnConfig::from_toml("[faults]\nenabled = 1").is_err()
+        );
+        assert!(
+            TnnConfig::from_toml("[faults]\nclasses = 3").is_err()
+        );
     }
 
     #[test]

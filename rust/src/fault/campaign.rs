@@ -1,0 +1,457 @@
+//! Seeded fault campaigns: sweep class × rate × seed over a column's
+//! MNIST stimulus and measure degradation against the fault-free run.
+//!
+//! [`run_campaign`] re-runs the exact `simulate`-stage wave schedule —
+//! same stimulus, same BRV draws, same engine selection by
+//! `(lanes, threads)` — once fault-free as the baseline and once per
+//! campaign point with the compiled overlay/program installed.  Every
+//! metric is deterministic: compilation depends only on the point and
+//! the netlist ([`super::model`]), and injection placement is keyed by
+//! global wave index, so a point reproduces bit-identically on the
+//! scalar, packed and thread-parallel engines.  A `rate = 0` point
+//! compiles to an empty overlay and empty schedule and is therefore
+//! bit-identical to the baseline *by construction* — the campaign
+//! reports check exactly that (`bit_identical`).
+
+use crate::cells::Library;
+use crate::error::Result;
+use crate::netlist::column::ColumnPorts;
+use crate::netlist::Netlist;
+use crate::sim::testbench::{
+    run_waves_parallel, run_waves_parallel_faulted, ColumnTestbench,
+    PackedColumnTestbench, WaveResult,
+};
+use crate::sim::Activity;
+use crate::tnn::stdp::{RandPair, StdpParams};
+
+use super::model::{
+    compile_with_sites, fault_sites, CampaignPoint, CompiledFaults,
+    FaultClass,
+};
+
+/// The sweep grid of a campaign: the cross product of classes, rates
+/// and seeds is run as individual [`CampaignPoint`]s.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSpec {
+    /// Fault classes to sweep.
+    pub classes: Vec<FaultClass>,
+    /// Fault rates to sweep (0 is the built-in identity check).
+    pub rates: Vec<f64>,
+    /// Sampling seeds to sweep.
+    pub seeds: Vec<u64>,
+}
+
+impl CampaignSpec {
+    /// The CI smoke grid: stuck-at-0/1 + SEU at a zero and a small
+    /// nonzero rate, one seed — 6 points, seconds of runtime.
+    pub fn smoke() -> Self {
+        CampaignSpec {
+            classes: vec![
+                FaultClass::Stuck0,
+                FaultClass::Stuck1,
+                FaultClass::Seu,
+            ],
+            rates: vec![0.0, 0.02],
+            seeds: vec![1],
+        }
+    }
+
+    /// Parse a grid from comma-separated token lists (the shared
+    /// grammar of the `[faults]` config section and the `tnn7 faults`
+    /// CLI flags): `classes` are [`FaultClass::parse`] tokens, `rates`
+    /// finite non-negative floats, `seeds` unsigned integers.
+    pub fn parse(
+        classes: &str,
+        rates: &str,
+        seeds: &str,
+    ) -> Result<Self> {
+        fn toks(s: &str) -> impl Iterator<Item = &str> {
+            s.split(',').map(str::trim).filter(|t| !t.is_empty())
+        }
+        let classes: Vec<FaultClass> =
+            toks(classes).map(FaultClass::parse).collect::<Result<_>>()?;
+        let rates: Vec<f64> = toks(rates)
+            .map(|t| match t.parse::<f64>() {
+                Ok(r) if r.is_finite() && r >= 0.0 => Ok(r),
+                _ => Err(crate::error::Error::config(format!(
+                    "fault rate `{t}` is not a finite non-negative \
+                     number"
+                ))),
+            })
+            .collect::<Result<_>>()?;
+        let seeds: Vec<u64> = toks(seeds)
+            .map(|t| {
+                t.parse::<u64>().map_err(|_| {
+                    crate::error::Error::config(format!(
+                        "fault seed `{t}` is not an unsigned integer"
+                    ))
+                })
+            })
+            .collect::<Result<_>>()?;
+        if classes.is_empty() || rates.is_empty() || seeds.is_empty() {
+            return Err(crate::error::Error::config(
+                "fault campaign needs at least one class, one rate and \
+                 one seed",
+            ));
+        }
+        Ok(CampaignSpec { classes, rates, seeds })
+    }
+
+    /// Expand the grid into sweep points (class-major, then rate, then
+    /// seed — the report order).
+    pub fn points(&self) -> Vec<CampaignPoint> {
+        let mut out =
+            Vec::with_capacity(self.classes.len() * self.rates.len() * self.seeds.len());
+        for &class in &self.classes {
+            for &rate in &self.rates {
+                for &seed in &self.seeds {
+                    out.push(CampaignPoint { class, rate, seed });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Measured outcome of one campaign point.
+#[derive(Debug, Clone)]
+pub struct PointReport {
+    /// The swept point.
+    pub point: CampaignPoint,
+    /// Faults actually injected (static sites + scheduled events).
+    pub injections: usize,
+    /// Fraction of waves whose post-WTA spike vector matches the
+    /// fault-free run.
+    pub accuracy: f64,
+    /// Summed |Δweight| against the fault-free run, over all waves.
+    pub weight_l1: u64,
+    /// Total toggles under fault.
+    pub toggles: u64,
+    /// Faulted results + activity are byte-equal to the baseline.
+    pub bit_identical: bool,
+    /// Order-independent digest of the per-wave results.
+    pub fingerprint: u64,
+    /// Switching activity under fault (power is derived downstream).
+    pub activity: Activity,
+}
+
+/// One unit's campaign: the fault-free baseline plus every point.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    /// Waves per run.
+    pub waves: usize,
+    /// Injectable combinational sites (cell outputs).
+    pub net_sites: usize,
+    /// Injectable sequential sites (state instances).
+    pub seq_sites: usize,
+    /// Fault-free toggles.
+    pub base_toggles: u64,
+    /// Fault-free result digest.
+    pub base_fingerprint: u64,
+    /// Fault-free switching activity.
+    pub base_activity: Activity,
+    /// Per-point outcomes, in [`CampaignSpec::points`] order.
+    pub points: Vec<PointReport>,
+}
+
+/// Order-independent-free digest of a wave-result list (FNV over the
+/// pre/post spike times and weights, in wave order).
+pub fn fingerprint(results: &[WaveResult]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for r in results {
+        for xs in [&r.pre, &r.post, &r.weights] {
+            for &v in xs {
+                h ^= u64::from(v as u32);
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+    }
+    h
+}
+
+/// One full wave-schedule run with the `simulate` stage's engine
+/// selection: `(lanes > 1, threads > 1)` → thread-parallel packed,
+/// `lanes > 1` → packed, else scalar.
+#[allow(clippy::too_many_arguments)] // the simulate-stage argument set + the campaign
+fn run_schedule(
+    nl: &Netlist,
+    ports: &ColumnPorts,
+    lib: &Library,
+    lanes: usize,
+    threads: usize,
+    stim: &[Vec<i32>],
+    rands: &[Vec<RandPair>],
+    params: &StdpParams,
+    faults: Option<&CompiledFaults>,
+) -> Result<(Vec<WaveResult>, Activity)> {
+    if lanes > 1 && threads > 1 {
+        return match faults {
+            Some(f) => run_waves_parallel_faulted(
+                nl, ports, lib, lanes, threads, stim, rands, params, f,
+            ),
+            None => run_waves_parallel(
+                nl, ports, lib, lanes, threads, stim, rands, params,
+            ),
+        };
+    }
+    if lanes > 1 {
+        let mut tb = PackedColumnTestbench::new(nl, ports, lib, lanes)?;
+        let results = match faults {
+            Some(f) => {
+                tb.install_faults(f.overlay.clone());
+                tb.run_waves_faulted(stim, rands, params, &f.program)
+            }
+            None => tb.run_waves(stim, rands, params),
+        };
+        return Ok((results, tb.activity().clone()));
+    }
+    let mut tb = ColumnTestbench::new(nl, ports, lib)?;
+    if let Some(f) = faults {
+        tb.install_faults(f.overlay.clone());
+    }
+    let results = stim
+        .iter()
+        .zip(rands)
+        .enumerate()
+        .map(|(w, (s, r))| match faults {
+            Some(f) => tb.run_wave_faulted(w as u32, s, r, params, &f.program),
+            None => tb.run_wave(s, r, params),
+        })
+        .collect();
+    Ok((results, tb.activity().clone()))
+}
+
+/// Run a campaign over one elaborated column.
+#[allow(clippy::too_many_arguments)] // the simulate-stage argument set + the campaign
+pub fn run_campaign(
+    nl: &Netlist,
+    ports: &ColumnPorts,
+    lib: &Library,
+    spec: &CampaignSpec,
+    stim: &[Vec<i32>],
+    rands: &[Vec<RandPair>],
+    params: &StdpParams,
+    lanes: usize,
+    threads: usize,
+) -> Result<CampaignReport> {
+    let sites = fault_sites(nl, lib);
+    let waves = stim.len();
+    let (base, base_activity) = run_schedule(
+        nl, ports, lib, lanes, threads, stim, rands, params, None,
+    )?;
+    let base_toggles: u64 = base_activity.toggles.iter().sum();
+    let base_fingerprint = fingerprint(&base);
+
+    let mut points = Vec::new();
+    for point in spec.points() {
+        let compiled = compile_with_sites(nl, &sites, &point, waves);
+        let (results, activity) = run_schedule(
+            nl,
+            ports,
+            lib,
+            lanes,
+            threads,
+            stim,
+            rands,
+            params,
+            Some(&compiled),
+        )?;
+        let matching = results
+            .iter()
+            .zip(&base)
+            .filter(|(r, b)| r.post == b.post)
+            .count();
+        let accuracy = if waves == 0 {
+            1.0
+        } else {
+            matching as f64 / waves as f64
+        };
+        let weight_l1: u64 = results
+            .iter()
+            .zip(&base)
+            .map(|(r, b)| {
+                r.weights
+                    .iter()
+                    .zip(&b.weights)
+                    .map(|(&w, &v)| w.abs_diff(v) as u64)
+                    .sum::<u64>()
+            })
+            .sum();
+        let toggles: u64 = activity.toggles.iter().sum();
+        let bit_identical = results == base
+            && activity.toggles == base_activity.toggles
+            && activity.clock_ticks == base_activity.clock_ticks;
+        points.push(PointReport {
+            point,
+            injections: compiled.injections,
+            accuracy,
+            weight_l1,
+            toggles,
+            bit_identical,
+            fingerprint: fingerprint(&results),
+            activity,
+        });
+    }
+    Ok(CampaignReport {
+        waves,
+        net_sites: sites.outs.len(),
+        seq_sites: sites.seq.len(),
+        base_toggles,
+        base_fingerprint,
+        base_activity,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::Flavor;
+    use crate::tnn::{Lfsr16, INF};
+
+    fn fixture() -> (Library, Netlist, ColumnPorts) {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 4, q: 2, theta: 6 };
+        let (nl, ports) = build_column(&lib, Flavor::Std, &spec).unwrap();
+        (lib, nl, ports)
+    }
+
+    fn waves(p: usize, q: usize, n: usize) -> (Vec<Vec<i32>>, Vec<Vec<RandPair>>) {
+        let mut stim = Lfsr16::new(0x5a5a);
+        let mut lfsr = Lfsr16::new(0x1234);
+        let s = (0..n)
+            .map(|_| {
+                (0..p)
+                    .map(|_| {
+                        let v = stim.next_u16();
+                        if v & 0x7 == 7 {
+                            INF
+                        } else {
+                            i32::from(v % 8)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let r = (0..n)
+            .map(|_| (0..p * q).map(|_| lfsr.draw_pair()).collect())
+            .collect();
+        (s, r)
+    }
+
+    #[test]
+    fn zero_rate_points_are_bit_identical_on_every_engine() {
+        let (lib, nl, ports) = fixture();
+        let params = StdpParams::default_training();
+        let (stim, rands) = waves(4, 2, 6);
+        let spec = CampaignSpec {
+            classes: FaultClass::ALL.to_vec(),
+            rates: vec![0.0],
+            seeds: vec![9],
+        };
+        for (lanes, threads) in [(1, 1), (4, 1), (4, 2)] {
+            let rep = run_campaign(
+                &nl, &ports, &lib, &spec, &stim, &rands, &params, lanes,
+                threads,
+            )
+            .unwrap();
+            for p in &rep.points {
+                assert!(
+                    p.bit_identical,
+                    "lanes {lanes} threads {threads} {}",
+                    p.point.class.label()
+                );
+                assert_eq!(p.accuracy, 1.0);
+                assert_eq!(p.weight_l1, 0);
+                assert_eq!(p.toggles, rep.base_toggles);
+                assert_eq!(p.fingerprint, rep.base_fingerprint);
+            }
+        }
+    }
+
+    #[test]
+    fn campaign_is_deterministic_across_engines_and_threads() {
+        let (lib, nl, ports) = fixture();
+        let params = StdpParams::default_training();
+        let (stim, rands) = waves(4, 2, 5);
+        let spec = CampaignSpec {
+            classes: FaultClass::ALL.to_vec(),
+            rates: vec![0.2],
+            seeds: vec![3],
+        };
+        let runs: Vec<CampaignReport> = [(1usize, 1usize), (4, 1), (4, 3)]
+            .iter()
+            .map(|&(lanes, threads)| {
+                run_campaign(
+                    &nl, &ports, &lib, &spec, &stim, &rands, &params,
+                    lanes, threads,
+                )
+                .unwrap()
+            })
+            .collect();
+        for r in &runs[1..] {
+            assert_eq!(r.base_fingerprint, runs[0].base_fingerprint);
+            for (a, b) in r.points.iter().zip(&runs[0].points) {
+                assert_eq!(
+                    a.fingerprint,
+                    b.fingerprint,
+                    "{} rate {}",
+                    a.point.class.label(),
+                    a.point.rate
+                );
+                assert_eq!(a.injections, b.injections);
+                assert_eq!(a.toggles, b.toggles);
+                assert_eq!(a.weight_l1, b.weight_l1);
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_stuck_faults_degrade_the_column() {
+        let (lib, nl, ports) = fixture();
+        let params = StdpParams::default_training();
+        let (stim, rands) = waves(4, 2, 6);
+        let spec = CampaignSpec {
+            classes: vec![FaultClass::Stuck1],
+            rates: vec![0.5],
+            seeds: vec![1],
+        };
+        let rep = run_campaign(
+            &nl, &ports, &lib, &spec, &stim, &rands, &params, 1, 1,
+        )
+        .unwrap();
+        let p = &rep.points[0];
+        assert!(p.injections > 0);
+        // Forcing half of all cell outputs high cannot go unnoticed.
+        assert!(!p.bit_identical);
+        assert_ne!(p.fingerprint, rep.base_fingerprint);
+    }
+
+    #[test]
+    fn smoke_grid_has_the_advertised_shape() {
+        let spec = CampaignSpec::smoke();
+        let pts = spec.points();
+        assert_eq!(pts.len(), 6);
+        assert!(pts.iter().any(|p| p.rate == 0.0));
+        assert!(pts.iter().any(|p| p.rate > 0.0));
+    }
+
+    #[test]
+    fn spec_parse_round_trips_and_rejects_garbage() {
+        let s =
+            CampaignSpec::parse("sa0, stuck1 ,seu", "0, 0.05", "1,42")
+                .unwrap();
+        assert_eq!(
+            s.classes,
+            vec![FaultClass::Stuck0, FaultClass::Stuck1, FaultClass::Seu]
+        );
+        assert_eq!(s.rates, vec![0.0, 0.05]);
+        assert_eq!(s.seeds, vec![1, 42]);
+        assert!(CampaignSpec::parse("meltdown", "0", "1").is_err());
+        assert!(CampaignSpec::parse("seu", "-0.1", "1").is_err());
+        assert!(CampaignSpec::parse("seu", "nan", "1").is_err());
+        assert!(CampaignSpec::parse("seu", "0.1", "-3").is_err());
+        assert!(CampaignSpec::parse("", "0.1", "1").is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Deterministic fault injection and resilience campaigns.
+//!
+//! The subsystem has three layers (DESIGN.md §13):
+//!
+//! * [`overlay`] — the engine-facing mechanism: a per-net
+//!   [`FaultOverlay`] of lane masks every simulation engine consults at
+//!   its write sites.  The shared eval kernels in [`crate::sim::eval`]
+//!   are untouched; the scalar, packed and sharded engines each force
+//!   stored values through [`FaultOverlay::force`] and apply queued
+//!   [`SeuFlip`]s after sequential commit.
+//! * [`model`] — the sampling layer: [`FaultClass`] enumeration,
+//!   injectable-site discovery ([`fault_sites`]), and seeded
+//!   compilation of a [`CampaignPoint`] into a [`CompiledFaults`]
+//!   (static overlay + wave-keyed transient [`FaultProgram`]).
+//!   Compilation is a pure function of `(netlist, point, waves)`, so a
+//!   seeded campaign reproduces bit-identically on every engine and
+//!   thread count.
+//! * [`campaign`] — the sweep driver: [`run_campaign`] replays the
+//!   `simulate` stage's wave schedule per [`CampaignSpec`] grid point
+//!   and reports accuracy / weight drift / toggle deltas against the
+//!   fault-free baseline, feeding the `faults` flow stage and the
+//!   `tnn7 faults` subcommand.
+
+pub mod campaign;
+pub mod model;
+pub mod overlay;
+
+pub use campaign::{
+    fingerprint, run_campaign, CampaignReport, CampaignSpec, PointReport,
+};
+pub use model::{
+    compile, compile_with_sites, fault_sites, CampaignPoint, CompiledFaults,
+    FaultClass, FaultProgram, FaultSites,
+};
+pub use overlay::{FaultOverlay, SeuFlip};

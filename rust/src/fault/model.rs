@@ -1,0 +1,414 @@
+//! Fault classes, site enumeration and deterministic campaign sampling.
+//!
+//! A campaign point is `(class, rate, seed)`.  Compilation is a pure
+//! function of the point, the netlist and the wave count: the same
+//! point always yields the same [`CompiledFaults`], independent of
+//! engine, lane count and thread count — which is what makes seeded
+//! campaigns reproducible across all three simulators.
+//!
+//! * **Structural classes** (stuck-at-0/1, delay) sample
+//!   `floor(rate × sites)` distinct cell-output nets and afflict *all*
+//!   lanes: lanes are time-multiplexed waves over the same physical
+//!   gates, so a silicon defect is wave-invariant.
+//! * **Transient classes** (SEU, glitch) sample
+//!   `floor(rate × waves × sites)` events keyed by *global wave index*
+//!   and in-wave cycle; the wave→lane placement of each engine decides
+//!   which lane word the event lands in, so the injection is identical
+//!   whether the wave runs on the scalar engine, a packed lane, or a
+//!   worker thread's lane range.
+//!
+//! Tie-cell constant nets ([`Netlist::const0`]/[`Netlist::const1`]) are
+//! excluded from the site list: a stuck-at at the tied polarity is a
+//! no-op by construction, and the opposite polarity would model a
+//! broken tie cell rather than a logic defect.
+
+use crate::arch::T_STEPS;
+use crate::cells::Library;
+use crate::error::{Error, Result};
+use crate::netlist::{NetId, Netlist};
+
+use super::overlay::FaultOverlay;
+
+/// Fault class of a campaign point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultClass {
+    /// Output stuck at logic 0.
+    Stuck0,
+    /// Output stuck at logic 1.
+    Stuck1,
+    /// Transient bit-flip in committed sequential state.
+    Seu,
+    /// One-tick transport delay on a cell output.
+    Delay,
+    /// Single-tick XOR pulse on a cell output.
+    Glitch,
+}
+
+impl FaultClass {
+    /// Every class, in report order.
+    pub const ALL: [FaultClass; 5] = [
+        FaultClass::Stuck0,
+        FaultClass::Stuck1,
+        FaultClass::Seu,
+        FaultClass::Delay,
+        FaultClass::Glitch,
+    ];
+
+    /// Stable token used in configs, CLI flags and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultClass::Stuck0 => "stuck0",
+            FaultClass::Stuck1 => "stuck1",
+            FaultClass::Seu => "seu",
+            FaultClass::Delay => "delay",
+            FaultClass::Glitch => "glitch",
+        }
+    }
+
+    /// Parse a class token (the inverse of [`FaultClass::label`]).
+    pub fn parse(tok: &str) -> Result<FaultClass> {
+        match tok {
+            "stuck0" | "sa0" => Ok(FaultClass::Stuck0),
+            "stuck1" | "sa1" => Ok(FaultClass::Stuck1),
+            "seu" => Ok(FaultClass::Seu),
+            "delay" => Ok(FaultClass::Delay),
+            "glitch" => Ok(FaultClass::Glitch),
+            other => Err(Error::config(format!(
+                "unknown fault class `{other}` (expected one of \
+                 stuck0, stuck1, seu, delay, glitch)"
+            ))),
+        }
+    }
+}
+
+/// One campaign sweep point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CampaignPoint {
+    /// Fault class to inject.
+    pub class: FaultClass,
+    /// Site rate (structural) / per-wave-per-site event rate (transient).
+    pub rate: f64,
+    /// Sampling seed; same seed ⇒ same fault set.
+    pub seed: u64,
+}
+
+/// Injectable sites of a netlist.
+#[derive(Debug, Clone)]
+pub struct FaultSites {
+    /// Cell-output nets (constant tie nets excluded).
+    pub outs: Vec<NetId>,
+    /// Sequential instances as `(inst, state_bits)`.
+    pub seq: Vec<(u32, u8)>,
+}
+
+/// Enumerate the injectable sites of `nl`.
+pub fn fault_sites(nl: &Netlist, lib: &Library) -> FaultSites {
+    let mut outs = Vec::new();
+    let mut seq = Vec::new();
+    for i in 0..nl.insts.len() {
+        for &o in nl.inst_outs(i) {
+            if o != nl.const0 && o != nl.const1 {
+                outs.push(o);
+            }
+        }
+        let kind = lib.cell(nl.insts[i].cell).kind;
+        let (_, _, n_state) = kind.pins();
+        if n_state > 0 {
+            seq.push((i as u32, n_state as u8));
+        }
+    }
+    FaultSites { outs, seq }
+}
+
+/// Transient event schedule keyed by `(global wave, in-wave cycle)`.
+///
+/// Engines never see this type: the testbench looks events up per wave
+/// per cycle and translates them into lane-masked engine calls.
+#[derive(Debug, Clone, Default)]
+pub struct FaultProgram {
+    /// Sorted `(wave, cycle, net)` glitch pulses.
+    glitches: Vec<(u32, u16, NetId)>,
+    /// Sorted `(wave, cycle, inst, bit)` state upsets.
+    seus: Vec<(u32, u16, u32, u8)>,
+}
+
+impl FaultProgram {
+    /// True when no transient event is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.glitches.is_empty() && self.seus.is_empty()
+    }
+
+    /// Scheduled event count.
+    pub fn len(&self) -> usize {
+        self.glitches.len() + self.seus.len()
+    }
+
+    /// Glitch pulses scheduled for `(wave, cycle)`.
+    pub fn glitches_at(
+        &self,
+        wave: u32,
+        cycle: u16,
+    ) -> impl Iterator<Item = NetId> + '_ {
+        let lo = self
+            .glitches
+            .partition_point(|e| (e.0, e.1) < (wave, cycle));
+        self.glitches[lo..]
+            .iter()
+            .take_while(move |e| (e.0, e.1) == (wave, cycle))
+            .map(|e| e.2)
+    }
+
+    /// SEUs scheduled for `(wave, cycle)` as `(inst, bit)` pairs.
+    pub fn seus_at(
+        &self,
+        wave: u32,
+        cycle: u16,
+    ) -> impl Iterator<Item = (u32, u8)> + '_ {
+        let lo = self.seus.partition_point(|e| (e.0, e.1) < (wave, cycle));
+        self.seus[lo..]
+            .iter()
+            .take_while(move |e| (e.0, e.1) == (wave, cycle))
+            .map(|e| (e.2, e.3))
+    }
+}
+
+/// A compiled campaign point: static overlay + transient schedule.
+#[derive(Debug, Clone, Default)]
+pub struct CompiledFaults {
+    /// Static stuck/delay masks (engines clone this per simulator).
+    pub overlay: FaultOverlay,
+    /// Transient SEU/glitch events.
+    pub program: FaultProgram,
+    /// Total injections: static sites + scheduled events.
+    pub injections: usize,
+}
+
+/// `xorshift64` step, the crate's seeded-sweep idiom.
+fn xorshift64(s: &mut u64) -> u64 {
+    *s ^= *s << 13;
+    *s ^= *s >> 7;
+    *s ^= *s << 17;
+    *s
+}
+
+/// Derive a nonzero RNG stream from a campaign point.
+fn stream(point: &CampaignPoint) -> u64 {
+    let class = match point.class {
+        FaultClass::Stuck0 => 1u64,
+        FaultClass::Stuck1 => 2,
+        FaultClass::Seu => 3,
+        FaultClass::Delay => 4,
+        FaultClass::Glitch => 5,
+    };
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in [point.seed, class, point.rate.to_bits()] {
+        h ^= w;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    if h == 0 {
+        0x9e37_79b9_7f4a_7c15
+    } else {
+        h
+    }
+}
+
+/// Sample `count` distinct indices out of `0..n` (partial Fisher–Yates).
+fn sample_indices(n: usize, count: usize, rng: &mut u64) -> Vec<usize> {
+    let count = count.min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    for k in 0..count {
+        let j = k + (xorshift64(rng) as usize) % (n - k);
+        idx.swap(k, j);
+    }
+    idx.truncate(count);
+    idx
+}
+
+/// Compile a campaign point against a netlist for a `waves`-wave run.
+///
+/// `rate = 0` compiles to an empty overlay and schedule, so a zero-rate
+/// point is bit-identical to the fault-free run by construction.
+pub fn compile(
+    nl: &Netlist,
+    lib: &Library,
+    point: &CampaignPoint,
+    waves: usize,
+) -> CompiledFaults {
+    let sites = fault_sites(nl, lib);
+    compile_with_sites(nl, &sites, point, waves)
+}
+
+/// [`compile`] with a pre-enumerated site list (campaign loops reuse it).
+pub fn compile_with_sites(
+    nl: &Netlist,
+    sites: &FaultSites,
+    point: &CampaignPoint,
+    waves: usize,
+) -> CompiledFaults {
+    let mut overlay = FaultOverlay::new(nl.n_nets());
+    let mut program = FaultProgram::default();
+    let mut rng = stream(point);
+    // Transient events land anywhere in the compute + STDP-evaluate
+    // window (cycles 0..=T_STEPS); the reset cycle is excluded — state
+    // is about to clear, so an upset there is unobservable by design.
+    let cycles = T_STEPS as usize + 1;
+    match point.class {
+        FaultClass::Stuck0 | FaultClass::Stuck1 | FaultClass::Delay => {
+            let n = sites.outs.len();
+            let count = (point.rate * n as f64).floor() as usize;
+            for i in sample_indices(n, count, &mut rng) {
+                let net = sites.outs[i];
+                match point.class {
+                    FaultClass::Stuck0 => overlay.add_stuck0(net, !0),
+                    FaultClass::Stuck1 => overlay.add_stuck1(net, !0),
+                    _ => overlay.add_delay(net, !0),
+                }
+            }
+        }
+        FaultClass::Glitch => {
+            let n = sites.outs.len();
+            let count =
+                (point.rate * waves as f64 * n as f64).floor() as usize;
+            let mut ev = Vec::with_capacity(count);
+            if n > 0 && waves > 0 {
+                for _ in 0..count {
+                    let w = (xorshift64(&mut rng) as usize % waves) as u32;
+                    let c = (xorshift64(&mut rng) as usize % cycles) as u16;
+                    let net = sites.outs
+                        [xorshift64(&mut rng) as usize % n];
+                    ev.push((w, c, net));
+                }
+            }
+            ev.sort_unstable_by_key(|e| (e.0, e.1, (e.2).0));
+            program.glitches = ev;
+        }
+        FaultClass::Seu => {
+            let n = sites.seq.len();
+            let count =
+                (point.rate * waves as f64 * n as f64).floor() as usize;
+            let mut ev = Vec::with_capacity(count);
+            if n > 0 && waves > 0 {
+                for _ in 0..count {
+                    let w = (xorshift64(&mut rng) as usize % waves) as u32;
+                    let c = (xorshift64(&mut rng) as usize % cycles) as u16;
+                    let (inst, bits) =
+                        sites.seq[xorshift64(&mut rng) as usize % n];
+                    let bit =
+                        (xorshift64(&mut rng) as usize % bits as usize) as u8;
+                    ev.push((w, c, inst, bit));
+                }
+            }
+            ev.sort_unstable();
+            program.seus = ev;
+        }
+    }
+    let injections = overlay.statics() + program.len();
+    CompiledFaults { overlay, program, injections }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::Flavor;
+
+    fn column() -> (Library, Netlist) {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 4, q: 2, theta: 6 };
+        let (nl, _) = build_column(&lib, Flavor::Std, &spec).unwrap();
+        (lib, nl)
+    }
+
+    #[test]
+    fn sites_exclude_constant_nets() {
+        let (lib, nl) = column();
+        let sites = fault_sites(&nl, &lib);
+        assert!(!sites.outs.is_empty());
+        assert!(!sites.seq.is_empty());
+        assert!(!sites.outs.contains(&nl.const0));
+        assert!(!sites.outs.contains(&nl.const1));
+    }
+
+    #[test]
+    fn zero_rate_compiles_to_nothing() {
+        let (lib, nl) = column();
+        for class in FaultClass::ALL {
+            let point = CampaignPoint { class, rate: 0.0, seed: 7 };
+            let c = compile(&nl, &lib, &point, 8);
+            assert_eq!(c.injections, 0, "{}", class.label());
+            assert!(c.overlay.is_empty());
+            assert!(c.program.is_empty());
+        }
+    }
+
+    #[test]
+    fn same_seed_compiles_identically() {
+        let (lib, nl) = column();
+        for class in FaultClass::ALL {
+            let point = CampaignPoint { class, rate: 0.1, seed: 42 };
+            let a = compile(&nl, &lib, &point, 6);
+            let b = compile(&nl, &lib, &point, 6);
+            assert_eq!(a.injections, b.injections);
+            assert_eq!(a.program.glitches, b.program.glitches);
+            assert_eq!(a.program.seus, b.program.seus);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (lib, nl) = column();
+        let a = compile(
+            &nl,
+            &lib,
+            &CampaignPoint { class: FaultClass::Seu, rate: 0.5, seed: 1 },
+            8,
+        );
+        let b = compile(
+            &nl,
+            &lib,
+            &CampaignPoint { class: FaultClass::Seu, rate: 0.5, seed: 2 },
+            8,
+        );
+        assert!(a.injections > 0);
+        assert_ne!(a.program.seus, b.program.seus);
+    }
+
+    #[test]
+    fn structural_rate_scales_site_count() {
+        let (lib, nl) = column();
+        let sites = fault_sites(&nl, &lib);
+        let point = CampaignPoint {
+            class: FaultClass::Stuck1,
+            rate: 0.25,
+            seed: 9,
+        };
+        let c = compile(&nl, &lib, &point, 4);
+        assert_eq!(c.injections, (0.25 * sites.outs.len() as f64) as usize);
+    }
+
+    #[test]
+    fn program_lookup_finds_scheduled_events() {
+        let prog = FaultProgram {
+            glitches: vec![
+                (0, 3, NetId(5)),
+                (1, 2, NetId(6)),
+                (1, 2, NetId(9)),
+            ],
+            seus: vec![(2, 15, 4, 1)],
+        };
+        let at: Vec<NetId> = prog.glitches_at(1, 2).collect();
+        assert_eq!(at, vec![NetId(6), NetId(9)]);
+        assert_eq!(prog.glitches_at(1, 3).count(), 0);
+        let s: Vec<(u32, u8)> = prog.seus_at(2, 15).collect();
+        assert_eq!(s, vec![(4, 1)]);
+        assert_eq!(prog.len(), 4);
+    }
+
+    #[test]
+    fn class_tokens_round_trip() {
+        for class in FaultClass::ALL {
+            assert_eq!(FaultClass::parse(class.label()).unwrap(), class);
+        }
+        assert!(FaultClass::parse("meltdown").is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! Forced-value fault overlay applied at simulator write sites.
+//!
+//! A [`FaultOverlay`] is a per-net set of lane masks the engines consult
+//! every time a cell output is stored: the shared levelized
+//! [`crate::sim::simulator::EvalPlan`] kernels stay untouched and every
+//! engine (scalar, packed, sharded) forces the *stored* value through
+//! [`FaultOverlay::force`] at its write sites.  Lane mask bit `l`
+//! afflicts packed lane `l`; the scalar engine uses bit 0.
+//!
+//! Composition order at a write site (DESIGN.md §13):
+//!
+//! 1. **delay** — a one-tick transport fault: the stored value on
+//!    delayed lanes is the *previous* tick's raw value (`stored(t) =
+//!    raw(t-1)`), tracked by a per-net shadow word.  A net that never
+//!    changes is unaffected, so delay faults perturb timing-sensitive
+//!    races without freezing logic.
+//! 2. **glitch** — a single-tick XOR pulse installed for exactly one
+//!    tick via [`FaultOverlay::add_glitch`] and cleared by
+//!    [`FaultOverlay::end_tick`].
+//! 3. **stuck-at** — `(v | stuck1) & !stuck0`; stuck-at-0 dominates
+//!    when both masks cover a lane.
+//!
+//! SEU events are not net forces: they flip committed sequential state
+//! bits *after* the tick's gamma/aclk commit (queued via
+//! [`FaultOverlay::push_seu`], drained by the engine), so the upset
+//! propagates into the next tick's combinational evaluation exactly
+//! like a real single-event upset in a latch.
+
+use crate::netlist::NetId;
+
+/// One queued SEU: flip state bit `bit` of sequential instance `inst`
+/// on the lanes in `lanes`, after the current tick's commit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeuFlip {
+    /// Instance index in the netlist.
+    pub inst: u32,
+    /// State bit within the instance's state window.
+    pub bit: u8,
+    /// Lane mask (bit 0 for the scalar engine).
+    pub lanes: u64,
+}
+
+/// Per-net fault masks + transient event queues for one engine.
+#[derive(Debug, Clone, Default)]
+pub struct FaultOverlay {
+    stuck0: Vec<u64>,
+    stuck1: Vec<u64>,
+    delay: Vec<u64>,
+    dshadow: Vec<u64>,
+    glitch: Vec<u64>,
+    /// Nets with a live glitch mask (for O(k) clearing).
+    glitch_nets: Vec<u32>,
+    /// SEUs queued for the current tick's post-commit phase.
+    pending_seus: Vec<SeuFlip>,
+    /// Count of static fault sites (stuck + delay lanes-nets).
+    statics: usize,
+}
+
+impl FaultOverlay {
+    /// Empty overlay over `n_nets` nets (forces nothing).
+    pub fn new(n_nets: usize) -> Self {
+        FaultOverlay {
+            stuck0: vec![0; n_nets],
+            stuck1: vec![0; n_nets],
+            delay: vec![0; n_nets],
+            dshadow: vec![0; n_nets],
+            glitch: vec![0; n_nets],
+            glitch_nets: Vec::new(),
+            pending_seus: Vec::new(),
+            statics: 0,
+        }
+    }
+
+    /// Net capacity this overlay was sized for.
+    pub fn n_nets(&self) -> usize {
+        self.stuck0.len()
+    }
+
+    /// Number of static (stuck/delay) fault sites installed.
+    pub fn statics(&self) -> usize {
+        self.statics
+    }
+
+    /// True when no static fault is installed and no transient event is
+    /// live — forcing is then the identity on every net.
+    pub fn is_empty(&self) -> bool {
+        self.statics == 0
+            && self.glitch_nets.is_empty()
+            && self.pending_seus.is_empty()
+    }
+
+    /// Stuck-at-0 on `lanes` of `net`.
+    pub fn add_stuck0(&mut self, net: NetId, lanes: u64) {
+        self.stuck0[net.0 as usize] |= lanes;
+        self.statics += 1;
+    }
+
+    /// Stuck-at-1 on `lanes` of `net`.
+    pub fn add_stuck1(&mut self, net: NetId, lanes: u64) {
+        self.stuck1[net.0 as usize] |= lanes;
+        self.statics += 1;
+    }
+
+    /// One-tick transport delay on `lanes` of `net`.
+    pub fn add_delay(&mut self, net: NetId, lanes: u64) {
+        self.delay[net.0 as usize] |= lanes;
+        self.statics += 1;
+    }
+
+    /// Install a single-tick XOR glitch on `lanes` of `net`; cleared by
+    /// [`FaultOverlay::end_tick`].
+    pub fn add_glitch(&mut self, net: NetId, lanes: u64) {
+        let n = net.0 as usize;
+        if self.glitch[n] == 0 && lanes != 0 {
+            self.glitch_nets.push(net.0);
+        }
+        self.glitch[n] ^= lanes;
+    }
+
+    /// Queue an SEU for the current tick's post-commit phase.
+    pub fn push_seu(&mut self, seu: SeuFlip) {
+        self.pending_seus.push(seu);
+    }
+
+    /// Drain the queued SEUs (engine applies them to committed state).
+    pub fn take_seus(&mut self) -> Vec<SeuFlip> {
+        std::mem::take(&mut self.pending_seus)
+    }
+
+    /// Clear all live glitch masks (end of the glitched tick).
+    pub fn end_tick(&mut self) {
+        for &n in &self.glitch_nets {
+            self.glitch[n as usize] = 0;
+        }
+        self.glitch_nets.clear();
+    }
+
+    /// Force the stored value of `net`: raw word in, faulted word out.
+    ///
+    /// Must be called exactly once per net write per tick (the delay
+    /// shadow advances on each call).
+    #[inline]
+    pub fn force(&mut self, net: usize, raw: u64) -> u64 {
+        let mut v = raw;
+        let d = self.delay[net];
+        if d != 0 {
+            v = (raw & !d) | (self.dshadow[net] & d);
+            self.dshadow[net] = raw;
+        }
+        v ^= self.glitch[net];
+        (v | self.stuck1[net]) & !self.stuck0[net]
+    }
+
+    /// Scalar-engine variant of [`FaultOverlay::force`] (lane bit 0).
+    #[inline]
+    pub fn force_bool(&mut self, net: usize, raw: bool) -> bool {
+        self.force(net, u64::from(raw)) & 1 != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_overlay_is_identity() {
+        let mut f = FaultOverlay::new(4);
+        assert!(f.is_empty());
+        for net in 0..4 {
+            for raw in [0u64, !0, 0x5555_5555_5555_5555] {
+                assert_eq!(f.force(net, raw), raw);
+            }
+        }
+    }
+
+    #[test]
+    fn stuck_masks_force_lanes() {
+        let mut f = FaultOverlay::new(2);
+        f.add_stuck0(NetId(0), 0b01);
+        f.add_stuck1(NetId(0), 0b10);
+        assert_eq!(f.statics(), 2);
+        assert_eq!(f.force(0, 0b00), 0b10);
+        assert_eq!(f.force(0, 0b11), 0b10);
+        // Other nets untouched.
+        assert_eq!(f.force(1, 0b11), 0b11);
+    }
+
+    #[test]
+    fn stuck0_dominates_stuck1() {
+        let mut f = FaultOverlay::new(1);
+        f.add_stuck0(NetId(0), 1);
+        f.add_stuck1(NetId(0), 1);
+        assert_eq!(f.force(0, 0), 0);
+        assert_eq!(f.force(0, 1), 0);
+    }
+
+    #[test]
+    fn delay_substitutes_previous_raw_value() {
+        let mut f = FaultOverlay::new(1);
+        f.add_delay(NetId(0), 1);
+        // stored(t) = raw(t-1); the shadow starts at 0.
+        assert_eq!(f.force(0, 1), 0);
+        assert_eq!(f.force(0, 1), 1);
+        assert_eq!(f.force(0, 0), 1);
+        assert_eq!(f.force(0, 0), 0);
+    }
+
+    #[test]
+    fn glitch_lives_exactly_one_tick() {
+        let mut f = FaultOverlay::new(1);
+        f.add_glitch(NetId(0), 0b100);
+        assert!(!f.is_empty());
+        assert_eq!(f.force(0, 0), 0b100);
+        f.end_tick();
+        assert!(f.is_empty());
+        assert_eq!(f.force(0, 0), 0);
+    }
+
+    #[test]
+    fn seus_queue_and_drain() {
+        let mut f = FaultOverlay::new(1);
+        f.push_seu(SeuFlip { inst: 3, bit: 1, lanes: 0b10 });
+        let drained = f.take_seus();
+        assert_eq!(drained, vec![SeuFlip { inst: 3, bit: 1, lanes: 0b10 }]);
+        assert!(f.take_seus().is_empty());
+    }
+}

@@ -28,8 +28,12 @@
 //! [`FlowContext`], plus the canonical dump bytes; it is LRU-bounded.
 //! The **disk tier** stores only the dump bytes, in the existing
 //! `NN_stage.BACKEND.json` dump format under one directory per key, so
-//! a warm cache directory is also a browsable dump archive.  Disk
-//! entries cannot rebuild typed artifacts, so they are consulted only
+//! a warm cache directory is also a browsable dump archive.  Every
+//! dump carries a `.fnv` checksum sidecar; a load whose bytes fail
+//! verification (truncated write, bit rot, hand edit) is moved into
+//! `quarantine/` with a warning and treated as a miss, so corruption
+//! degrades to recomputation rather than a crash or a wrong answer.
+//! Disk entries cannot rebuild typed artifacts, so they are consulted only
 //! when the *entire* requested pipeline hits — the cross-process replay
 //! case — and otherwise execution fills the gaps while memory hits are
 //! still honored (see [`super::Flow::run_cached`]).
@@ -44,6 +48,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::Dataset;
+use crate::fault::CampaignReport;
 use crate::flow::{
     ElaboratedUnit, ExportedUnit, FlowContext, Target, TargetReport,
 };
@@ -61,7 +66,7 @@ pub const KEY_VERSION: &str = "tnn7-cache-v1";
 
 /// Stage names the cache knows how to key and snapshot.  Pipelines
 /// containing any other stage bypass the cache entirely.
-pub const CACHEABLE_STAGES: [&str; 8] = [
+pub const CACHEABLE_STAGES: [&str; 9] = [
     "elaborate",
     "sta",
     "place",
@@ -70,6 +75,7 @@ pub const CACHEABLE_STAGES: [&str; 8] = [
     "area",
     "report",
     "export",
+    "faults",
 ];
 
 // ---- FNV-1a 64 ------------------------------------------------------
@@ -268,6 +274,42 @@ pub fn config_subset(stage: &str, ctx: &FlowContext) -> String {
             cfg.mu_search.to_bits(),
             dataset_fingerprint(&ctx.data)
         ),
+        // Fault campaigns replay the simulate schedule (same stimulus
+        // and STDP knobs) and add the seeded sweep grid.  The grid is
+        // keyed on the *parsed* spec so whitespace variants of the
+        // token lists alias the same entry; lanes/threads stay
+        // excluded — campaign metrics are engine-invariant (proptests).
+        "faults" => {
+            let grid = match cfg.fault_spec() {
+                Ok(s) => format!(
+                    "classes={};rates={};seeds={}",
+                    s.classes
+                        .iter()
+                        .map(|c| c.label())
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    s.rates
+                        .iter()
+                        .map(|r| format!("{:016x}", r.to_bits()))
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    s.seeds
+                        .iter()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join(","),
+                ),
+                // Unparsable grids fail the stage before it stores
+                // anything; key on the raw text for completeness.
+                Err(_) => format!(
+                    "classes={};rates={};seeds={}",
+                    cfg.faults_classes,
+                    cfg.faults_rates,
+                    cfg.faults_seeds
+                ),
+            };
+            format!("{};{grid}", config_subset("simulate", ctx))
+        }
         // elaborate keys on the target fingerprint; sta/power/area/
         // report/export are pure functions of upstream artifacts +
         // tech (export is a deterministic lowering of the elaborated
@@ -330,6 +372,7 @@ pub enum StageSnapshot {
     Area { area: Vec<AreaReport>, rel_area: Vec<f64> },
     Report { report: TargetReport },
     Export { exported: Vec<ExportedUnit> },
+    Faults { reports: Vec<CampaignReport> },
 }
 
 impl StageSnapshot {
@@ -368,6 +411,9 @@ impl StageSnapshot {
             "export" => Some(StageSnapshot::Export {
                 exported: ctx.exported.clone(),
             }),
+            "faults" => Some(StageSnapshot::Faults {
+                reports: ctx.fault_reports.clone(),
+            }),
             _ => None,
         }
     }
@@ -383,6 +429,7 @@ impl StageSnapshot {
             StageSnapshot::Area { .. } => "area",
             StageSnapshot::Report { .. } => "report",
             StageSnapshot::Export { .. } => "export",
+            StageSnapshot::Faults { .. } => "faults",
         }
     }
 
@@ -423,6 +470,9 @@ impl StageSnapshot {
             }
             StageSnapshot::Export { exported } => {
                 ctx.exported = exported.clone();
+            }
+            StageSnapshot::Faults { reports } => {
+                ctx.fault_reports = reports.clone();
             }
         }
     }
@@ -476,6 +526,15 @@ pub struct StageCache {
     misses: AtomicU64,
     evictions: AtomicU64,
     disk_writes: AtomicU64,
+    quarantined: AtomicU64,
+}
+
+/// Checksum sidecar of a disk-tier dump: `<dump>.fnv`, holding the
+/// hex FNV-1a 64 of the dump bytes.
+fn sidecar_path(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".fnv");
+    PathBuf::from(s)
 }
 
 impl StageCache {
@@ -489,6 +548,7 @@ impl StageCache {
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             disk_writes: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
         }
     }
 
@@ -518,8 +578,14 @@ impl StageCache {
         Some((Arc::clone(&e.snap), Arc::clone(&e.dump)))
     }
 
-    /// Read a dump from the disk tier.  Unreadable or missing entries
-    /// are plain misses; I/O problems never fail the flow.
+    /// Read a dump from the disk tier, verifying the sidecar content
+    /// checksum.  Missing entries are plain misses; entries whose
+    /// bytes do not match their recorded FNV (truncated writes, bit
+    /// rot, hand edits) — or that have no verifiable checksum at all —
+    /// are moved into the tier's `quarantine/` directory and reported
+    /// as misses, so the flow recomputes instead of serving (or
+    /// crashing on) corrupt artifacts.  I/O problems never fail the
+    /// flow.
     pub fn probe_disk(
         &self,
         key: u64,
@@ -528,7 +594,53 @@ impl StageCache {
         backend: &str,
     ) -> Option<String> {
         let path = self.disk_path(key, index, stage, backend)?;
-        std::fs::read_to_string(path).ok()
+        let body = std::fs::read_to_string(&path).ok()?;
+        let want = std::fs::read_to_string(sidecar_path(&path))
+            .ok()
+            .and_then(|s| u64::from_str_radix(s.trim(), 16).ok());
+        match want {
+            Some(w) if w == fnv1a64(body.as_bytes()) => Some(body),
+            _ => {
+                self.quarantine(&path, key, want.is_none());
+                None
+            }
+        }
+    }
+
+    /// Move a failed-verification entry (dump + sidecar) into
+    /// `<dir>/quarantine/` so it stops shadowing the key but stays
+    /// inspectable.  Removal is the fallback when the rename fails
+    /// (e.g. cross-device) — the entry must not be served again.
+    fn quarantine(&self, path: &Path, key: u64, missing_sum: bool) {
+        let n = self.quarantined.fetch_add(1, Ordering::Relaxed);
+        if let (Some(dir), Some(name)) =
+            (self.dir.as_ref(), path.file_name().and_then(|s| s.to_str()))
+        {
+            let qdir = dir.join("quarantine");
+            let _ = std::fs::create_dir_all(&qdir);
+            for (src, suffix) in
+                [(path.to_path_buf(), ""), (sidecar_path(path), ".fnv")]
+            {
+                if !src.exists() {
+                    continue;
+                }
+                let dst =
+                    qdir.join(format!("{key:016x}.{n}_{name}{suffix}"));
+                if std::fs::rename(&src, &dst).is_err() {
+                    let _ = std::fs::remove_file(&src);
+                }
+            }
+            eprintln!(
+                "tnn7: cache: quarantined disk entry {} ({}) — \
+                 recomputing",
+                path.display(),
+                if missing_sum {
+                    "no verifiable checksum"
+                } else {
+                    "content checksum mismatch"
+                }
+            );
+        }
     }
 
     /// Store a stage result in both tiers.
@@ -565,8 +677,11 @@ impl StageCache {
         self.write_disk(key, index, stage, backend, dump);
     }
 
-    /// Write the dump bytes to the disk tier (atomic temp + rename so
-    /// concurrent readers never observe a partial file).
+    /// Write the dump bytes plus their checksum sidecar to the disk
+    /// tier (atomic temp + rename per file so concurrent readers never
+    /// observe a partial file).  The sidecar lands first: a crash
+    /// between the two writes leaves a sidecar without a dump (a plain
+    /// miss), never an unverifiable dump.
     fn write_disk(
         &self,
         key: u64,
@@ -582,13 +697,24 @@ impl StageCache {
         if std::fs::create_dir_all(parent).is_err() {
             return;
         }
-        let tmp = parent.join(format!(".tmp.{}", std::process::id()));
-        if std::fs::write(&tmp, dump).is_ok()
-            && std::fs::rename(&tmp, &path).is_ok()
+        let write_atomic = |target: &Path, bytes: &str| -> bool {
+            let tmp = parent.join(format!(
+                ".tmp.{}.{}",
+                std::process::id(),
+                target.file_name().and_then(|s| s.to_str()).unwrap_or("x")
+            ));
+            let ok = std::fs::write(&tmp, bytes).is_ok()
+                && std::fs::rename(&tmp, target).is_ok();
+            if !ok {
+                let _ = std::fs::remove_file(&tmp);
+            }
+            ok
+        };
+        let sum = format!("{:016x}\n", fnv1a64(dump.as_bytes()));
+        if write_atomic(&sidecar_path(&path), &sum)
+            && write_atomic(&path, dump)
         {
             self.disk_writes.fetch_add(1, Ordering::Relaxed);
-        } else {
-            let _ = std::fs::remove_file(&tmp);
         }
     }
 
@@ -647,6 +773,10 @@ impl StageCache {
             (
                 "disk_writes",
                 Json::int(self.disk_writes.load(Ordering::Relaxed)),
+            ),
+            (
+                "quarantined",
+                Json::int(self.quarantined.load(Ordering::Relaxed)),
             ),
             ("mem_entries", Json::int(tier.map.len() as u64)),
             ("mem_capacity", Json::int(self.mem_cap as u64)),
@@ -857,6 +987,76 @@ mod tests {
         assert!(cache
             .probe_disk(0xabcd, 1, "place", "asap7-tnn7")
             .is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_disk_entries_are_quarantined_not_served() {
+        let dir = std::env::temp_dir().join(format!(
+            "tnn7_cache_quarantine_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = StageCache::new(CacheConfig {
+            mem_entries: 4,
+            dir: Some(dir.clone()),
+        });
+        let dump =
+            Arc::new("{\n  \"stage\": \"sta\",\n  \"x\": 1\n}\n".to_string());
+        let store = |c: &StageCache| {
+            c.store(
+                0x77,
+                StageSnapshot::Sta { timing: vec![] },
+                &dump,
+                1,
+                "asap7-tnn7",
+            )
+        };
+        store(&cache);
+        let path = dir
+            .join(format!("{:016x}", 0x77_u64))
+            .join("01_sta.asap7-tnn7.json");
+        assert!(path.is_file());
+        assert!(sidecar_path(&path).is_file());
+
+        // Truncate the dump mid-file: the probe must refuse it, move
+        // both files to quarantine/, and report a miss.
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(cache
+            .probe_disk(0x77, 1, "sta", "asap7-tnn7")
+            .is_none());
+        assert!(!path.exists());
+        assert!(!sidecar_path(&path).exists());
+        let quarantined: Vec<_> = std::fs::read_dir(dir.join("quarantine"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(quarantined.len(), 2, "{quarantined:?}");
+        assert!(quarantined
+            .iter()
+            .all(|n| n.contains("01_sta.asap7-tnn7.json")));
+
+        // A sidecar-less dump (pre-checksum layout / lost sidecar) is
+        // unverifiable: also quarantined, also a miss.
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &*dump).unwrap();
+        assert!(cache
+            .probe_disk(0x77, 1, "sta", "asap7-tnn7")
+            .is_none());
+        assert!(!path.exists());
+
+        // Recovery: re-storing the entry makes it servable again.
+        store(&cache);
+        assert_eq!(
+            cache.probe_disk(0x77, 1, "sta", "asap7-tnn7").as_deref(),
+            Some(dump.as_str())
+        );
+        let stats = cache.stats_json();
+        assert_eq!(
+            stats.field("quarantined").unwrap().as_usize().unwrap(),
+            2
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

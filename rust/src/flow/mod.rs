@@ -282,6 +282,9 @@ pub struct FlowContext {
     /// `export` artifacts (empty unless the pipeline includes the
     /// optional `export` stage).
     pub exported: Vec<ExportedUnit>,
+    /// `faults` artifacts (per-unit fault-campaign reports; empty
+    /// unless the pipeline includes the optional `faults` stage).
+    pub fault_reports: Vec<crate::fault::CampaignReport>,
 }
 
 impl FlowContext {
@@ -326,6 +329,7 @@ impl FlowContext {
             rel_area: Vec::new(),
             report: None,
             exported: Vec::new(),
+            fault_reports: Vec::new(),
         }
     }
 
@@ -377,10 +381,14 @@ impl FlowContext {
                 self.area.clear();
                 self.rel_area.clear();
                 self.exported.clear();
+                self.fault_reports.clear();
                 wipe_power(self);
             }
+            // Fault campaigns report power degradation against the
+            // sta clock, so they cannot outlive a re-timed netlist.
             "sta" => {
                 wipe_place(self);
+                self.fault_reports.clear();
                 wipe_power(self);
             }
             "place" => {
@@ -509,12 +517,18 @@ impl Flow {
     /// The measurement pipeline a config asks for: [`Flow::placed`]
     /// when `cfg.place` is set, else [`Flow::measurement`] — the
     /// selector [`measure`]/[`measure_with`] (and therefore every
-    /// sweep job) routes through.
+    /// sweep job) routes through.  `cfg.faults` appends the
+    /// fault-campaign stage after the canonical report (DESIGN.md §13).
     pub fn measurement_for(cfg: &TnnConfig) -> Flow {
-        if cfg.place {
+        let flow = if cfg.place {
             Flow::placed()
         } else {
             Flow::measurement()
+        };
+        if cfg.faults {
+            flow.with_stage(Box::new(stages::Faults))
+        } else {
+            flow
         }
     }
 

@@ -16,13 +16,19 @@
 //! | `area`     | placed / die area              | elaborate           |
 //! | `report`   | composed [`TargetReport`]      | sta, power, area    |
 //! | `export`   | BLIF + Verilog interchange text (optional) | elaborate |
+//! | `faults`   | fault-campaign degradation curves (optional) | elaborate, sta |
 //!
 //! `place` is not part of the default pipeline ([`super::Flow::standard`]
 //! stays census-only and bit-identical to earlier releases); the
 //! physical-design pipeline is [`super::Flow::placed`] / `tnn7 flow
-//! --place`.  When it runs, `power` adds the wire switching split,
-//! `area` reports the placed die outline, and `power`/`report` consume
-//! the wire-aware timing through [`super::FlowContext::timing_for`].
+//! --place`.  When `place` runs, `power` adds the wire switching
+//! split, `area` reports the placed die outline, and `power`/`report`
+//! consume the wire-aware timing through
+//! [`super::FlowContext::timing_for`].  `faults` is likewise opt-in
+//! (`tnn7 flow --faults` / `tnn7 faults`): it replays the `simulate`
+//! wave schedule per [`crate::fault::CampaignSpec`] grid point and
+//! reports accuracy / toggle / power degradation against the
+//! fault-free baseline (DESIGN.md §13).
 //!
 //! Every stage pulls its substrate — the characterized library and the
 //! technology constants — from the context's [`crate::tech::TechContext`]
@@ -33,6 +39,7 @@
 use crate::cells::{CellKind, MacroKind};
 use crate::coordinator::activity_bridge::stimulus;
 use crate::error::{Error, Result};
+use crate::fault;
 use crate::interop;
 use crate::netlist::column::build_column;
 use crate::netlist::Flavor;
@@ -63,6 +70,7 @@ pub fn all() -> Vec<Box<dyn Stage>> {
         Box::new(Area),
         Box::new(Report),
         Box::new(Export),
+        Box::new(Faults),
     ]
 }
 
@@ -78,12 +86,13 @@ pub fn make(tok: &str) -> Result<Vec<Box<dyn Stage>>> {
         "area" => vec![Box::new(Area)],
         "report" => vec![Box::new(Report)],
         "export" => vec![Box::new(Export)],
+        "faults" => vec![Box::new(Faults)],
         "ppa" => vec![Box::new(Power), Box::new(Area), Box::new(Report)],
         other => {
             return Err(Error::config(format!(
                 "unknown pipeline stage `{other}` (available: elaborate, \
                  sta, place, simulate|sim, power, area, report, export, \
-                 ppa)"
+                 faults, ppa)"
             )))
         }
     })
@@ -93,7 +102,7 @@ pub fn make(tok: &str) -> Result<Vec<Box<dyn Stage>>> {
 pub fn requires(name: &str) -> &'static [&'static str] {
     match name {
         "sta" | "simulate" | "area" | "export" => &["elaborate"],
-        "place" => &["elaborate", "sta"],
+        "place" | "faults" => &["elaborate", "sta"],
         "power" => &["sta", "simulate"],
         "report" => &["sta", "power", "area"],
         _ => &[],
@@ -852,6 +861,181 @@ impl Stage for Export {
         Json::obj(vec![
             ("stage", Json::str(self.name())),
             ("format_version", Json::int(interop::FORMAT_VERSION as u64)),
+            ("units", Json::Arr(units)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// faults
+
+/// Fault-injection campaigns: sweep class × rate × seed over the
+/// `simulate` wave schedule and report degradation curves.
+///
+/// For every elaborated unit the stage re-derives the exact `simulate`
+/// stimulus and BRV draws, runs [`crate::fault::run_campaign`] with the
+/// configured engine selection (`sim_lanes`/`sim_threads` — campaign
+/// metrics are engine- and thread-invariant), and stores per-point
+/// accuracy / weight-drift / toggle deltas against the fault-free
+/// baseline.  The dump derives power per point from the faulted
+/// switching activity at the *base* STA clock (`sta` artifact; the
+/// campaign never needs `place` or `simulate` to have run), so the
+/// accuracy-vs-rate curves carry a power-degradation axis for free
+/// (DESIGN.md §13).
+pub struct Faults;
+
+impl Stage for Faults {
+    fn name(&self) -> &'static str {
+        "faults"
+    }
+
+    fn description(&self) -> &'static str {
+        "seeded fault-injection campaigns (stuck-at / SEU / delay / \
+         glitch): accuracy, toggle and power degradation vs rate"
+    }
+
+    fn run(&self, ctx: &mut FlowContext) -> Result<()> {
+        if ctx.elaborated.is_empty() {
+            return Err(missing(self.name(), "elaborate"));
+        }
+        if ctx.timing.is_empty() {
+            return Err(missing(self.name(), "sta"));
+        }
+        ctx.invalidate_downstream(self.name());
+        let spec = ctx.cfg.fault_spec()?;
+        let params = ctx.cfg.stdp_params();
+        let waves = ctx.cfg.sim_waves;
+        let lanes = ctx.cfg.sim_lanes.clamp(1, 64);
+        let threads = ctx.cfg.sim_threads.max(1);
+        let mut reports = Vec::with_capacity(ctx.elaborated.len());
+        for u in &ctx.elaborated {
+            let cspec = u.plan.spec;
+            let stim = stimulus(
+                &ctx.data,
+                cspec.p,
+                waves,
+                ctx.cfg.encode_threshold as f32,
+            );
+            let mut lfsr = Lfsr16::new(ctx.cfg.brv_seed);
+            let rands: Vec<Vec<RandPair>> = (0..stim.len())
+                .map(|_| {
+                    (0..cspec.p * cspec.q)
+                        .map(|_| lfsr.draw_pair())
+                        .collect()
+                })
+                .collect();
+            reports.push(fault::run_campaign(
+                &u.netlist,
+                &u.ports,
+                ctx.tech.library(),
+                &spec,
+                &stim,
+                &rands,
+                &params,
+                lanes,
+                threads,
+            )?);
+        }
+        ctx.fault_reports = reports;
+        Ok(())
+    }
+
+    fn dump(&self, ctx: &FlowContext) -> Json {
+        // Power per point: the faulted activity priced at the base STA
+        // clock.  `run` guarantees timing exists; a cache-restored
+        // context re-runs `sta` first for the same reason.
+        let power_at = |i: usize,
+                        act: &crate::sim::Activity|
+         -> Option<f64> {
+            let t = ctx.timing.get(i)?;
+            let u = ctx.elaborated.get(i)?;
+            Some(
+                power::analyze(
+                    &u.netlist,
+                    ctx.tech.library(),
+                    ctx.tech.params(),
+                    act,
+                    t.min_clock_ps,
+                )
+                .total_uw(),
+            )
+        };
+        let units = ctx
+            .fault_reports
+            .iter()
+            .zip(&ctx.elaborated)
+            .enumerate()
+            .map(|(i, (rep, u))| {
+                let base_uw = power_at(i, &rep.base_activity);
+                let points = rep
+                    .points
+                    .iter()
+                    .map(|p| {
+                        let uw = power_at(i, &p.activity);
+                        let delta_pct = match (uw, base_uw) {
+                            (Some(a), Some(b)) if b > 0.0 => {
+                                Json::num((a / b - 1.0) * 100.0)
+                            }
+                            _ => Json::Null,
+                        };
+                        Json::obj(vec![
+                            ("class", Json::str(p.point.class.label())),
+                            ("rate", Json::num(p.point.rate)),
+                            ("seed", Json::int(p.point.seed)),
+                            (
+                                "injections",
+                                Json::int(p.injections as u64),
+                            ),
+                            ("accuracy", Json::num(p.accuracy)),
+                            ("weight_l1", Json::int(p.weight_l1)),
+                            ("toggles", Json::int(p.toggles)),
+                            (
+                                "bit_identical",
+                                Json::Bool(p.bit_identical),
+                            ),
+                            (
+                                "fingerprint",
+                                Json::str(format!(
+                                    "{:016x}",
+                                    p.fingerprint
+                                )),
+                            ),
+                            (
+                                "power_uw",
+                                uw.map_or(Json::Null, Json::num),
+                            ),
+                            ("power_delta_pct", delta_pct),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("label", Json::str(u.plan.label())),
+                    ("waves", Json::int(rep.waves as u64)),
+                    ("net_sites", Json::int(rep.net_sites as u64)),
+                    ("seq_sites", Json::int(rep.seq_sites as u64)),
+                    ("base_toggles", Json::int(rep.base_toggles)),
+                    (
+                        "base_fingerprint",
+                        Json::str(format!(
+                            "{:016x}",
+                            rep.base_fingerprint
+                        )),
+                    ),
+                    (
+                        "base_power_uw",
+                        base_uw.map_or(Json::Null, Json::num),
+                    ),
+                    ("points", Json::Arr(points)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("stage", Json::str(self.name())),
+            ("classes", Json::str(ctx.cfg.faults_classes.clone())),
+            ("rates", Json::str(ctx.cfg.faults_rates.clone())),
+            ("seeds", Json::str(ctx.cfg.faults_seeds.clone())),
+            ("lanes", Json::int(ctx.cfg.sim_lanes.clamp(1, 64) as u64)),
+            ("threads", Json::int(ctx.cfg.sim_threads.max(1) as u64)),
             ("units", Json::Arr(units)),
         ])
     }

@@ -240,6 +240,18 @@ impl VcdDoc {
     }
 }
 
+/// Engines pack stimulus lanes into a `u64`, so no valid recording
+/// carries more; hostile metadata must never size an allocation.
+const MAX_LANES: usize = 64;
+
+/// Upper bound on materialized ticks: fill-forward expansion is
+/// O(ticks × vars), so a few bytes of hostile input (`#999999999999`)
+/// must not turn into gigabytes of samples.
+const MAX_TICKS: usize = 1 << 22;
+
+/// Upper bound on the `ticks × vars` sample matrix (bools).
+const MAX_SAMPLE_CELLS: usize = 1 << 28;
+
 /// Parse VCD text into a [`VcdDoc`].
 ///
 /// Accepts the subset our writer emits plus enough of IEEE 1364 to
@@ -247,6 +259,9 @@ impl VcdDoc {
 /// commands are skipped to their `$end`, `b0`/`b1` vector changes on
 /// scalar vars are accepted, and anything multi-bit, `x`/`z`-valued,
 /// real, or string is a structured error (our engines are two-valued).
+/// Malformed input — truncated headers or bodies, out-of-range tnn7
+/// metadata, changes on undeclared ids — is always a structured
+/// [`Error`], never a panic or an unbounded allocation.
 pub fn parse_vcd(text: &str) -> Result<VcdDoc> {
     let mut toks = text.split_whitespace().peekable();
     let mut design = String::new();
@@ -255,6 +270,7 @@ pub fn parse_vcd(text: &str) -> Result<VcdDoc> {
     let mut scope: Vec<String> = Vec::new();
     let mut vars: Vec<VcdVar> = Vec::new();
     let mut by_code: HashMap<String, usize> = HashMap::new();
+    let mut saw_enddefinitions = false;
 
     // Declaration section.
     while let Some(tok) = toks.next() {
@@ -267,9 +283,17 @@ pub fn parse_vcd(text: &str) -> Result<VcdDoc> {
                     if let Some(v) = t.strip_prefix("design=") {
                         design = v.to_string();
                     } else if let Some(v) = t.strip_prefix("lanes=") {
-                        lanes = v.parse().ok();
+                        lanes = Some(v.parse().map_err(|_| {
+                            Error::sim(format!(
+                                "vcd: bad lanes metadata `{t}`"
+                            ))
+                        })?);
                     } else if let Some(v) = t.strip_prefix("ticks=") {
-                        ticks_meta = v.parse().ok();
+                        ticks_meta = Some(v.parse().map_err(|_| {
+                            Error::sim(format!(
+                                "vcd: bad ticks metadata `{t}`"
+                            ))
+                        })?);
                     }
                 }
             }
@@ -313,6 +337,7 @@ pub fn parse_vcd(text: &str) -> Result<VcdDoc> {
             }
             "$enddefinitions" => {
                 skip_to_end(&mut toks)?;
+                saw_enddefinitions = true;
                 break;
             }
             // $timescale, $date, $version, ... — skip to their $end.
@@ -323,6 +348,21 @@ pub fn parse_vcd(text: &str) -> Result<VcdDoc> {
                 )))
             }
         }
+    }
+    // A file that runs out before `$enddefinitions` is a truncated
+    // header — without this check it would parse as an empty document.
+    if !saw_enddefinitions {
+        return Err(Error::sim(
+            "vcd: truncated header — no $enddefinitions before end of \
+             input"
+                .to_string(),
+        ));
+    }
+    let lanes = lanes.unwrap_or(1);
+    if !(1..=MAX_LANES).contains(&lanes) {
+        return Err(Error::sim(format!(
+            "vcd: metadata lanes={lanes} out of range 1..={MAX_LANES}"
+        )));
     }
 
     // Value-change section: collect (tick, var, value) events.
@@ -395,14 +435,47 @@ pub fn parse_vcd(text: &str) -> Result<VcdDoc> {
         }
     }
 
-    let ticks = ticks_meta.unwrap_or(if events.is_empty() {
-        0
-    } else {
-        max_t + 1
-    });
-    if max_t >= ticks.max(1) && !events.is_empty() {
+    // Reconcile the declared tick count with what the body actually
+    // recorded: a declared count short of the last timestamp means a
+    // corrupt header, one far beyond it means a truncated body — both
+    // are structured errors, and neither may size the sample matrix.
+    let last = if events.is_empty() { None } else { Some(max_t) };
+    let ticks = match (ticks_meta, last) {
+        (Some(n), Some(m)) => {
+            if n <= m {
+                return Err(Error::sim(format!(
+                    "vcd: timestamp #{m} beyond declared tick count {n}"
+                )));
+            }
+            if n > m + 1 {
+                return Err(Error::sim(format!(
+                    "vcd: metadata declares {n} ticks but the last \
+                     timestamp is #{m} — truncated body?"
+                )));
+            }
+            n
+        }
+        (Some(n), None) => {
+            if n > 0 {
+                return Err(Error::sim(format!(
+                    "vcd: metadata declares {n} ticks but the value \
+                     section is empty — truncated body?"
+                )));
+            }
+            0
+        }
+        (None, Some(m)) => m + 1,
+        (None, None) => 0,
+    };
+    if ticks > MAX_TICKS {
         return Err(Error::sim(format!(
-            "vcd: timestamp #{max_t} beyond declared tick count {ticks}"
+            "vcd: {ticks} ticks exceeds the reader bound {MAX_TICKS}"
+        )));
+    }
+    if ticks.saturating_mul(vars.len()) > MAX_SAMPLE_CELLS {
+        return Err(Error::sim(format!(
+            "vcd: {ticks} ticks x {} vars exceeds the sample bound",
+            vars.len()
         )));
     }
     let mut samples = Vec::with_capacity(ticks);
@@ -608,5 +681,67 @@ mod tests {
             (0..4).map(|t| doc.samples[t][0]).collect();
         assert_eq!(col, vec![true, true, true, false]);
         assert_eq!(doc.toggles(), vec![1]);
+    }
+
+    /// Truncated or hostile input is a structured error, never a
+    /// panic, a silent empty document, or an unbounded allocation.
+    #[test]
+    fn parser_rejects_truncated_and_hostile_input() {
+        let err = |text: &str, needle: &str| {
+            let e = parse_vcd(text).unwrap_err().to_string();
+            assert!(e.contains(needle), "`{text}` -> `{e}`");
+        };
+        // Header cut off before $enddefinitions — previously parsed
+        // as an empty document.
+        err(
+            "$scope module top $end\n$var wire 1 ! a $end\n",
+            "$enddefinitions",
+        );
+        err("", "$enddefinitions");
+        // tnn7 metadata that is malformed or would size allocations.
+        err(
+            "$comment tnn7 vcd v1 lanes=abc $end\n\
+             $enddefinitions $end\n",
+            "bad lanes metadata",
+        );
+        err(
+            "$comment tnn7 vcd v1 ticks=99999999999999999999999 $end\n\
+             $enddefinitions $end\n",
+            "bad ticks metadata",
+        );
+        err(
+            "$comment tnn7 vcd v1 lanes=1000 $end\n\
+             $enddefinitions $end\n",
+            "lanes=1000 out of range",
+        );
+        // Body truncated against the declared tick count.
+        let head = "$comment tnn7 vcd v1 design=d lanes=1 ticks=8 \
+                    $end\n$scope module top $end\n\
+                    $var wire 1 ! a $end\n$upscope $end\n\
+                    $enddefinitions $end\n";
+        err(
+            &format!("{head}#0\n1!\n#1\n0!\n"),
+            "truncated body",
+        );
+        err(head, "truncated body");
+        // A timestamp past the declared count (corrupt header).
+        err(
+            &format!("{head}#0\n1!\n#9\n0!\n"),
+            "beyond declared tick count",
+        );
+        // A huge timestamp must not materialize a huge sample matrix.
+        let noticks = "$scope module top $end\n\
+                       $var wire 1 ! a $end\n$upscope $end\n\
+                       $enddefinitions $end\n";
+        err(
+            &format!("{noticks}#0\n1!\n#419430500\n0!\n"),
+            "exceeds the reader bound",
+        );
+        // Changes on ids that were never declared.
+        err(&format!("{noticks}#0\n1\"\n"), "undeclared id");
+        err(&format!("{noticks}#0\nb1 \"\n"), "undeclared id");
+        // Truncated $scope / $var declarations.
+        err("$scope module", "unterminated $scope");
+        err("$var wire 1", "truncated $var");
     }
 }

@@ -37,6 +37,13 @@
 //!   Verilog export, and VCD emit/ingest turning recorded waveforms
 //!   into replayable cross-engine stimulus (the `export` flow stage and
 //!   the `tnn7 export` / `tnn7 replay` subcommands; DESIGN.md §12).
+//! * [`fault`] — deterministic fault-injection campaigns: stuck-at /
+//!   delay / glitch forcing on cell outputs and SEU state flips,
+//!   applied as a write-site overlay shared by all three engines
+//!   (scalar, packed, sharded) without forking the eval kernels, with
+//!   seeded class × rate × seed sweeps reporting accuracy / toggle /
+//!   power degradation (the `faults` flow stage and `tnn7 faults`
+//!   subcommand; DESIGN.md §13).
 //! * [`tnn`] — the golden behavioral TNN (RNL neurons, WTA, STDP, LFSR BRVs);
 //!   the oracle both the gate-level netlists and the HLO executables are
 //!   tested against.
@@ -72,6 +79,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod fault;
 pub mod flow;
 pub mod interop;
 pub mod netlist;

@@ -7,6 +7,7 @@
 //! tnn7 flow --target F[:N] --col PxQ|--proto [...]   run the staged design flow
 //! tnn7 export --col PxQ|--proto --out DIR [...]      BLIF/Verilog/VCD export
 //! tnn7 replay --vcd FILE --col PxQ [...]             re-simulate a recording
+//! tnn7 faults --col PxQ|--proto [--smoke] [...]      fault-injection campaigns
 //! tnn7 characterize [--lib FILE]      cell library table (+ .lib dump)
 //! tnn7 layout-cmp [MACRO]             Figs. 14-18 structural comparisons
 //! tnn7 complexity                     Fig. 19 gate/transistor census
@@ -132,6 +133,7 @@ fn run() -> anyhow::Result<()> {
         "flow" => cmd_flow(&mut args),
         "export" => cmd_export(&mut args),
         "replay" => cmd_replay(&mut args),
+        "faults" => cmd_faults(&mut args),
         "characterize" => cmd_characterize(&mut args),
         "layout-cmp" => cmd_layout_cmp(&mut args),
         "complexity" => cmd_complexity(&mut args),
@@ -176,6 +178,15 @@ SUBCOMMANDS:
                               re-ingest a recorded VCD as stimulus, re-run
                               it on any engine, and assert toggle counts
                               (byte-identical recording on a match)
+  faults --target F (--col PxQ | --proto) [--tech T] [--smoke]
+         [--classes C1,..] [--rates R1,..] [--seeds S1,..] [--waves N]
+         [--lanes N] [--threads N] [--dump-dir D] [--cache-dir D]
+         [--out FILE]
+                              seeded fault-injection campaigns: sweep
+                              class x rate x seed, report accuracy /
+                              toggle / power degradation vs the
+                              fault-free baseline (DESIGN.md \u{a7}13);
+                              --out writes BENCH_faults.json
   characterize [--lib FILE]   print the characterized cell library
   layout-cmp [MACRO] [--json FILE]   Figs. 14-18 custom-vs-std comparisons
   complexity                  Fig. 19 prototype census (gates/transistors)
@@ -244,6 +255,12 @@ OPTIONS:
                            check the BLIF re-import is bit-identical, and
                            (with --dump-dir) write LABEL.BACKEND.blif/.v
                            next to the stage artifacts (DESIGN.md §12)
+  --faults                 append the fault-injection campaign stage: sweep
+                           the configured class x rate x seed grid and
+                           report accuracy / toggle / power degradation
+                           against the fault-free baseline (equivalent to
+                           `[faults] enabled = true`; `tnn7 faults` is the
+                           dedicated front-end; DESIGN.md §13)
   --dump-dir DIR           write one JSON artifact per stage, named
                            NN_stage.BACKEND.json (multi-tech runs into one
                            directory never collide)
@@ -317,6 +334,7 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     let cache_dir = args.opt("--cache-dir")?;
     let place_flag = args.flag("--place");
     let export_flag = args.flag("--export");
+    let faults_flag = args.flag("--faults");
     let util_desc = args.opt("--util")?;
     let aspect_desc = args.opt("--aspect")?;
     let mut cfg = load_config(args)?;
@@ -340,6 +358,15 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     args.finish()?;
     if smoke {
         cfg.sim_waves = cfg.sim_waves.min(2);
+    }
+    // `--faults` behaves like `[faults] enabled = true` in the config:
+    // the campaign stage is appended after the canonical pipeline, so
+    // the default six measurement stages are untouched.
+    if faults_flag {
+        cfg.faults = true;
+    }
+    if cfg.faults {
+        cfg.fault_spec()?;
     }
 
     // `--cache-dir` turns caching on with a disk tier; `[cache]
@@ -500,6 +527,11 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
                 flow = flow.with_stage(stage);
             }
         }
+        if cfg.faults && !flow.stage_names().contains(&"faults") {
+            for stage in stages::make("faults")? {
+                flow = flow.with_stage(stage);
+            }
+        }
         if let Some(dir) = &dump_dir {
             flow = flow.dump_dir(dir);
         }
@@ -566,6 +598,25 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
                     )?;
                     println!("    wrote {stem}.blif / {stem}.v");
                 }
+            }
+        }
+
+        if !ctx.fault_reports.is_empty() {
+            for (rep, u) in ctx.fault_reports.iter().zip(&ctx.elaborated)
+            {
+                let perturbed = rep
+                    .points
+                    .iter()
+                    .filter(|p| !p.bit_identical)
+                    .count();
+                println!(
+                    "  faults {}: {} campaign points over {} sites, \
+                     {} perturbed vs baseline",
+                    u.plan.label(),
+                    rep.points.len(),
+                    rep.net_sites + rep.seq_sites,
+                    perturbed
+                );
             }
         }
 
@@ -1020,6 +1071,265 @@ fn cmd_replay(args: &mut Args) -> anyhow::Result<()> {
             retoggles,
             toggles
         );
+    }
+    Ok(())
+}
+
+fn help_faults() -> String {
+    "tnn7 faults — seeded fault-injection campaigns against a design
+
+Runs the elaborate + sta + faults flow stages: every campaign point
+(fault class x rate x seed) re-simulates the full stimulus under a
+deterministic fault overlay and is scored against the fault-free
+baseline — classification accuracy (fraction of waves whose post-WTA
+spike vector matches), summed |dW|, toggle count, and power priced at
+the base STA clock.  Zero-rate points are bit-identical to the plain
+simulate stage on every engine.  DESIGN.md §13 documents the fault
+model and the artifact schema.
+
+USAGE: tnn7 faults (--col PxQ | --proto) [OPTIONS]
+
+OPTIONS:
+  --target FLAVOR[:TECH]   flavour std|baseline or custom|gdi (default std)
+  --tech T                 technology backend or .lib path
+                           (default: asap7-tnn7)
+  --col PxQ                single-column geometry (e.g. 32x12)
+  --proto                  the Fig. 19 2-layer prototype instead of --col
+  --smoke                  quick campaign: at most 2 waves, geometry
+                           defaults to 8x4, grid stuck0,stuck1,seu x
+                           rates 0,0.02 x seed 1 (explicit --classes/
+                           --rates/--seeds still override)
+  --classes C1,..          fault classes: stuck0|sa0, stuck1|sa1, seu,
+                           delay, glitch (default from config)
+  --rates R1,..            fault rates in [0, 1]; rate 0 is the control
+                           point (default from config)
+  --seeds S1,..            campaign PRNG seeds (default from config)
+  --waves N                simulated waves (default from config)
+  --lanes N                stimulus lanes per tick (1 = scalar engine,
+                           2..64 = packed; results are engine-invariant)
+  --threads N              worker threads for the packed wave schedule;
+                           results are identical at every thread count
+  --dump-dir DIR           write the stage artifacts, including
+                           NN_faults.BACKEND.json
+  --cache-dir DIR          consult the content-addressed stage cache
+                           (campaign grid is part of the key; lanes and
+                           threads are not)
+  --out FILE               write the campaign report JSON (the faults
+                           stage artifact) to FILE, e.g.
+                           BENCH_faults.json
+  --config FILE            tnn7.toml configuration
+"
+    .to_string()
+}
+
+fn cmd_faults(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!("{}", help_faults());
+        return Ok(());
+    }
+    let target_desc = args.opt("--target")?;
+    let tech_desc = args.opt("--tech")?;
+    let smoke = args.flag("--smoke");
+    let proto = args.flag("--proto");
+    let col = args.opt("--col")?;
+    let classes = args.opt("--classes")?;
+    let rates = args.opt("--rates")?;
+    let seeds = args.opt("--seeds")?;
+    let dump_dir = args.opt("--dump-dir")?;
+    let cache_dir = args.opt("--cache-dir")?;
+    let out = args.opt("--out")?;
+    let mut cfg = load_config(args)?;
+    if let Some(w) = args.opt("--waves")? {
+        cfg.sim_waves = w.parse()?;
+    }
+    if let Some(l) = args.opt("--lanes")? {
+        let lanes: usize = l.parse()?;
+        if !(1..=64).contains(&lanes) {
+            anyhow::bail!("--lanes must be in 1..=64, got {lanes}");
+        }
+        cfg.sim_lanes = lanes;
+    }
+    if let Some(t) = args.opt("--threads")? {
+        let threads: usize = t.parse()?;
+        if threads < 1 {
+            anyhow::bail!("--threads must be >= 1, got {threads}");
+        }
+        cfg.sim_threads = threads;
+    }
+    args.finish()?;
+
+    if smoke {
+        cfg.sim_waves = cfg.sim_waves.min(2);
+        // The smoke grid matches `CampaignSpec::smoke()`: both
+        // stuck-at polarities plus SEU, a zero-rate control point,
+        // one seed.
+        cfg.faults_classes = "stuck0,stuck1,seu".to_string();
+        cfg.faults_rates = "0,0.02".to_string();
+        cfg.faults_seeds = "1".to_string();
+    }
+    if let Some(v) = classes {
+        cfg.faults_classes = v;
+    }
+    if let Some(v) = rates {
+        cfg.faults_rates = v;
+    }
+    if let Some(v) = seeds {
+        cfg.faults_seeds = v;
+    }
+    cfg.faults = true;
+    // Validate the grid before elaborating anything.
+    let spec = cfg.fault_spec()?;
+
+    if proto && col.is_some() {
+        anyhow::bail!("--proto and --col are mutually exclusive");
+    }
+    let geometry = if proto {
+        Geometry::Prototype(PrototypeSpec::paper())
+    } else if let Some(col) = col {
+        let (p, q) = parse_geometry(&col)?;
+        Geometry::Column(ColumnSpec::benchmark(p, q))
+    } else if smoke {
+        Geometry::Column(ColumnSpec::benchmark(8, 4))
+    } else {
+        anyhow::bail!("--col PxQ or --proto required (see --help)");
+    };
+
+    let desc = target_desc.as_deref().unwrap_or("std");
+    if tech_desc.is_some() && desc.contains(':') {
+        anyhow::bail!(
+            "give the technology either in --target FLAVOR:TECH or via \
+             --tech, not both"
+        );
+    }
+    let base = Target::parse(desc, geometry)?;
+    let mut registry = TechRegistry::builtin();
+    let techctx = match &tech_desc {
+        Some(name) => registry.resolve(name)?,
+        None => registry.resolve(base.tech.as_str())?,
+    };
+    let target = base.with_tech(techctx.id());
+
+    if let Some(dir) = &cache_dir {
+        cfg.cache_enabled = true;
+        cfg.cache_dir = dir.clone();
+    }
+    let cache: Option<StageCache> = if cfg.cache_enabled {
+        Some(StageCache::new(CacheConfig {
+            mem_entries: cfg.cache_mem_entries,
+            dir: if cfg.cache_dir.is_empty() {
+                None
+            } else {
+                Some(cfg.cache_dir.clone().into())
+            },
+        }))
+    } else {
+        None
+    };
+
+    let mut flow = Flow::from_spec("elaborate,sta,faults")?;
+    if let Some(dir) = &dump_dir {
+        flow = flow.dump_dir(dir);
+    }
+    println!(
+        "fault campaign {} [{}] | {} classes x {} rates x {} seeds = \
+         {} points/unit, {} waves",
+        target.describe(),
+        techctx.node_label(),
+        spec.classes.len(),
+        spec.rates.len(),
+        spec.seeds.len(),
+        spec.classes.len() * spec.rates.len() * spec.seeds.len(),
+        cfg.sim_waves
+    );
+
+    let data =
+        Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
+    let mut ctx = FlowContext::with_tech(
+        target,
+        cfg.clone(),
+        techctx.clone(),
+        Arc::clone(&data),
+    );
+    let trace = flow.run_cached(&mut ctx, cache.as_ref())?;
+    if cache.is_some() {
+        println!("  cache: {}", trace.cache_line());
+    }
+
+    // A full disk replay serves cached dump bytes without rebuilding
+    // the typed campaign reports — print (and write) from the JSON.
+    if ctx.fault_reports.is_empty() && trace.executed() == 0 {
+        if let Some(dump) = trace.dump_for("faults") {
+            print_replayed_faults(&dump)?;
+            if let Some(path) = &out {
+                std::fs::write(path, dump.as_bytes())?;
+                println!("wrote {path}");
+            }
+            return Ok(());
+        }
+    }
+
+    for (rep, u) in ctx.fault_reports.iter().zip(&ctx.elaborated) {
+        println!(
+            "  unit {}: {} net sites + {} seq sites, base toggles {}",
+            u.plan.label(),
+            rep.net_sites,
+            rep.seq_sites,
+            rep.base_toggles
+        );
+        for p in &rep.points {
+            let d_toggle = if rep.base_toggles > 0 {
+                (p.toggles as f64 / rep.base_toggles as f64 - 1.0)
+                    * 100.0
+            } else {
+                0.0
+            };
+            println!(
+                "    {:<6} rate {:<6} seed {:<4} inj {:>5}  acc \
+                 {:>5.1}%  d-toggle {:>+7.2}%  dW {:>6}{}",
+                p.point.class.label(),
+                p.point.rate,
+                p.point.seed,
+                p.injections,
+                p.accuracy * 100.0,
+                d_toggle,
+                p.weight_l1,
+                if p.bit_identical { "  [bit-identical]" } else { "" }
+            );
+        }
+    }
+    if let Some(path) = &out {
+        std::fs::write(path, stages::Faults.dump(&ctx).to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    if let Some(dir) = &dump_dir {
+        println!("wrote stage artifacts to {dir}/");
+    }
+    Ok(())
+}
+
+/// Per-point summary out of a replayed faults artifact (full-pipeline
+/// disk cache hit: dump bytes exist, typed reports were not rebuilt).
+fn print_replayed_faults(dump: &str) -> anyhow::Result<()> {
+    let j = Json::parse(dump)?;
+    for u in j.field("units")?.as_arr()? {
+        println!(
+            "  unit {}: {} net sites + {} seq sites, base toggles {} \
+             [replayed]",
+            u.field("label")?.as_str()?,
+            u.field("net_sites")?.as_usize()?,
+            u.field("seq_sites")?.as_usize()?,
+            u.field("base_toggles")?.as_usize()?,
+        );
+        for p in u.field("points")?.as_arr()? {
+            println!(
+                "    {:<6} rate {:<6} seed {:<4} inj {:>5}  acc {:>5.1}%",
+                p.field("class")?.as_str()?,
+                p.field("rate")?.as_f64()?,
+                p.field("seed")?.as_i64()?,
+                p.field("injections")?.as_usize()?,
+                p.field("accuracy")?.as_f64()? * 100.0,
+            );
+        }
     }
     Ok(())
 }

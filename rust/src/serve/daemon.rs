@@ -44,8 +44,14 @@ use super::http::{read_request, Request, Response};
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
 
 /// Per-connection socket read timeout (a stalled client must not pin a
-/// worker forever).
+/// worker forever).  [`super::http::REQUEST_DEADLINE`] additionally
+/// bounds the whole request parse across reads.
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Per-connection socket write timeout: a client that stops draining
+/// its receive window mid-response costs a worker at most this long
+/// before the write errors out and the connection is dropped.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Daemon construction parameters (the `[serve]`/`[cache]` config
 /// sections plus CLI overrides).
@@ -121,6 +127,8 @@ struct ServerState {
     flow_requests: AtomicU64,
     errors: AtomicU64,
     overloads: AtomicU64,
+    /// Responses cut off by the write timeout (client stopped reading).
+    stalled_writes: AtomicU64,
     dedup_joins: AtomicU64,
     flow_micros: AtomicU64,
     /// Per-stage (runs, total µs) aggregates across all requests.
@@ -160,6 +168,10 @@ impl ServerState {
             (
                 "overloads",
                 Json::int(self.overloads.load(Ordering::Relaxed)),
+            ),
+            (
+                "stalled_writes",
+                Json::int(self.stalled_writes.load(Ordering::Relaxed)),
             ),
             (
                 "dedup_joins",
@@ -207,6 +219,7 @@ impl Server {
             flow_requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             overloads: AtomicU64::new(0),
+            stalled_writes: AtomicU64::new(0),
             dedup_joins: AtomicU64::new(0),
             flow_micros: AtomicU64::new(0),
             stage_times: Mutex::new(BTreeMap::new()),
@@ -271,6 +284,7 @@ fn accept_loop(
         match listener.accept() {
             Ok((stream, _)) => {
                 let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
                 match tx.try_send(stream) {
                     Ok(()) => {}
                     Err(TrySendError::Full(mut stream)) => {
@@ -308,12 +322,27 @@ fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, state: &ServerState) {
                 state.requests.fetch_add(1, Ordering::Relaxed);
                 let resp = match read_request(&stream) {
                     Ok(req) => route(state, &req),
-                    Err(e) => Response::error(400, &e.to_string()),
+                    // Parse errors carry their status: 413 for an
+                    // oversized body, 408 for a blown deadline, 400
+                    // for malformed requests.
+                    Err(e) => Response::error(e.status, &e.msg),
                 };
                 if resp.status >= 400 {
                     state.errors.fetch_add(1, Ordering::Relaxed);
                 }
-                let _ = resp.write_to(&mut stream);
+                if let Err(e) = resp.write_to(&mut stream) {
+                    use std::io::ErrorKind;
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut
+                    ) {
+                        // The write timeout fired: a stalled client
+                        // was cut off rather than pinning the worker.
+                        state
+                            .stalled_writes
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                }
             }
             Err(_) => break, // channel closed: shutdown drain complete
         }

@@ -11,7 +11,10 @@
 //! Everything is hand-rolled on `std::net` (no new dependencies):
 //!
 //! * [`http`] — a strict HTTP/1.1 subset: one request per connection,
-//!   bounded body, structured error responses.
+//!   bounded body (413 beyond the limit), a wall-clock request
+//!   deadline (408 — per-read socket timeouts alone cannot stop a
+//!   trickling client), structured error responses, and a retrying
+//!   fetch client with capped, seeded-jitter exponential backoff.
 //! * [`api`] — the [`FlowQuery`] request schema with typo-safe
 //!   parsing and the canonical dedup fingerprint.
 //! * [`daemon`] — the [`Server`]: nonblocking accept loop, bounded

@@ -24,6 +24,7 @@
 
 use crate::cells::Library;
 use crate::error::{Error, Result};
+use crate::fault::{FaultOverlay, SeuFlip};
 use crate::netlist::{ClockDomain, NetId, Netlist};
 
 use super::activity::Activity;
@@ -56,6 +57,9 @@ pub struct PackedSimulator<'n> {
     mask: u64,
     scratch_ins: Vec<u64>,
     scratch_outs: Vec<u64>,
+    /// Optional fault overlay forcing stored output values per lane
+    /// ([`crate::fault`]); `None` keeps the hot loop fault-free.
+    faults: Option<Box<FaultOverlay>>,
 }
 
 fn mask_for(lanes: usize) -> u64 {
@@ -91,6 +95,7 @@ impl<'n> PackedSimulator<'n> {
             mask: mask_for(lanes),
             scratch_ins: vec![0; 16],
             scratch_outs: vec![0; 8],
+            faults: None,
         })
     }
 
@@ -143,6 +148,44 @@ impl<'n> PackedSimulator<'n> {
         self.state.iter_mut().for_each(|v| *v = 0);
         self.cycle = 0;
         self.mask = mask_for(self.lanes);
+    }
+
+    /// Install a fault overlay: every cell-output store is forced
+    /// through it from the next tick on, per lane.
+    pub fn install_faults(&mut self, overlay: FaultOverlay) {
+        assert_eq!(overlay.n_nets(), self.nl.n_nets(), "overlay size");
+        self.faults = Some(Box::new(overlay));
+    }
+
+    /// Remove the fault overlay (back to the fault-free hot loop).
+    pub fn clear_faults(&mut self) {
+        self.faults = None;
+    }
+
+    /// Schedule transient faults for the next [`PackedSimulator::tick`]:
+    /// single-tick XOR glitches on nets and post-commit SEU state
+    /// flips, each restricted to the currently-active lane mask.
+    /// Installs an empty overlay on demand.
+    pub fn set_tick_faults(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+    ) {
+        if self.faults.is_none() {
+            self.faults = Some(Box::new(FaultOverlay::new(self.nl.n_nets())));
+        }
+        let mask = self.mask;
+        let f = self.faults.as_deref_mut().expect("just installed");
+        for &(net, lanes) in glitches {
+            if lanes & mask != 0 {
+                f.add_glitch(net, lanes & mask);
+            }
+        }
+        for &seu in seus {
+            if seu.lanes & mask != 0 {
+                f.push_seu(SeuFlip { lanes: seu.lanes & mask, ..seu });
+            }
+        }
     }
 
     /// Run one `aclk` cycle across all lanes.
@@ -208,6 +251,10 @@ impl<'n> PackedSimulator<'n> {
             };
             if let Some(v) = fast {
                 let out_net = pins[ps + n_in].0 as usize;
+                let v = match self.faults.as_deref_mut() {
+                    Some(f) => f.force(out_net, v),
+                    None => v,
+                };
                 let diff = (self.values[out_net] ^ v) & mask;
                 self.values[out_net] = v;
                 if diff != 0 {
@@ -237,8 +284,12 @@ impl<'n> PackedSimulator<'n> {
             }
             let mut toggles = 0u32;
             for k in 0..n_out {
-                let v = self.scratch_outs[k];
-                let slot = &mut self.values[pins[ps + n_in + k].0 as usize];
+                let mut v = self.scratch_outs[k];
+                let out_net = pins[ps + n_in + k].0 as usize;
+                if let Some(f) = self.faults.as_deref_mut() {
+                    v = f.force(out_net, v);
+                }
+                let slot = &mut self.values[out_net];
                 toggles += ((*slot ^ v) & mask).count_ones();
                 *slot = v;
             }
@@ -277,6 +328,21 @@ impl<'n> PackedSimulator<'n> {
             self.state[off..off + n_state]
                 .copy_from_slice(&self.next[off..off + n_state]);
             self.activity.clock_ticks[i] += active;
+        }
+        // Post-commit fault phase: queued SEUs flip committed state
+        // bits per lane (visible from the next tick's evaluation) and
+        // one-tick glitch pulses retire.
+        if let Some(f) = self.faults.as_deref_mut() {
+            for seu in f.take_seus() {
+                let i = seu.inst as usize;
+                let bits =
+                    self.lib.cell(self.nl.insts[i].cell).kind.pins().2;
+                if (seu.bit as usize) < bits {
+                    let off = self.state_off[i] as usize;
+                    self.state[off + seu.bit as usize] ^= seu.lanes;
+                }
+            }
+            f.end_tick();
         }
         self.cycle += 1;
         self.activity.cycles += active;

@@ -39,6 +39,7 @@ use std::sync::Arc;
 
 use crate::cells::Library;
 use crate::error::{Error, Result};
+use crate::fault::{FaultOverlay, SeuFlip};
 use crate::netlist::partition::partition;
 use crate::netlist::{ClockDomain, NetId, Netlist};
 
@@ -87,6 +88,16 @@ struct Job {
     inputs: Arc<Vec<(NetId, u64)>>,
     gclk_edge: bool,
     mask: u64,
+    /// Transient fault events for this tick (each part applies only
+    /// the events it owns).
+    faults: Option<Arc<TickFaults>>,
+}
+
+/// Transient fault events staged for exactly one tick.
+#[derive(Debug, Default)]
+struct TickFaults {
+    glitches: Vec<(NetId, u64)>,
+    seus: Vec<SeuFlip>,
 }
 
 fn mask_for(lanes: usize) -> u64 {
@@ -133,6 +144,11 @@ struct PartSim<'n> {
     activity: Activity,
     scratch_ins: Vec<u64>,
     scratch_outs: Vec<u64>,
+    /// Net → this part's level driving it (`u32::MAX` = not driven
+    /// here); used to route fault events to their owning part.
+    driver_level: Vec<u32>,
+    /// Installed fault overlay (`None` keeps the hot path fault-free).
+    faults: Option<Box<FaultOverlay>>,
 }
 
 impl<'n> PartSim<'n> {
@@ -181,6 +197,7 @@ impl<'n> PartSim<'n> {
         let n_levels = level_start.len() - 1;
 
         let mut reads_any = vec![false; n_nets];
+        let mut driver_level = vec![u32::MAX; n_nets];
         let mut pairs: Vec<(u32, u32)> = Vec::new();
         for node in &nodes {
             let bucket = bucket_of_inst[node.inst as usize];
@@ -191,6 +208,9 @@ impl<'n> PartSim<'n> {
                 if deps >> pin & 1 == 1 {
                     pairs.push((net, bucket));
                 }
+            }
+            for &o in nl.inst_outs(node.inst as usize) {
+                driver_level[o.0 as usize] = bucket;
             }
         }
         pairs.sort_unstable();
@@ -223,6 +243,57 @@ impl<'n> PartSim<'n> {
             activity: Activity::new(n_insts),
             scratch_ins: vec![0; 16],
             scratch_outs: vec![0; 8],
+            driver_level,
+            faults: None,
+        }
+    }
+
+    /// Install a fault overlay (the part forces only its own writes).
+    fn install_faults(&mut self, overlay: FaultOverlay) {
+        self.faults = Some(Box::new(overlay));
+    }
+
+    /// Remove the fault overlay.
+    fn clear_faults(&mut self) {
+        self.faults = None;
+    }
+
+    /// Stage the transient fault events of one tick that this part
+    /// owns: glitches on nets it drives (re-arming the driver's level)
+    /// and SEUs on sequential instances it evaluates.
+    fn stage_tick_faults(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+        mask: u64,
+    ) {
+        let owns = glitches.iter().any(|&(n, l)| {
+            l & mask != 0 && self.driver_level[n.0 as usize] != u32::MAX
+        }) || seus.iter().any(|s| {
+            s.lanes & mask != 0
+                && self.bucket_of_inst[s.inst as usize] != u32::MAX
+        });
+        if !owns {
+            return;
+        }
+        if self.faults.is_none() {
+            self.faults =
+                Some(Box::new(FaultOverlay::new(self.nl.n_nets())));
+        }
+        let f = self.faults.as_deref_mut().expect("just installed");
+        for &(net, lanes) in glitches {
+            let lvl = self.driver_level[net.0 as usize];
+            if lanes & mask != 0 && lvl != u32::MAX {
+                f.add_glitch(net, lanes & mask);
+                self.dirty[lvl as usize] = true;
+            }
+        }
+        for &seu in seus {
+            if seu.lanes & mask != 0
+                && self.bucket_of_inst[seu.inst as usize] != u32::MAX
+            {
+                f.push_seu(SeuFlip { lanes: seu.lanes & mask, ..seu });
+            }
         }
     }
 
@@ -277,6 +348,7 @@ impl<'n> PartSim<'n> {
             activity,
             scratch_ins,
             scratch_outs,
+            faults,
             ..
         } = self;
         let pins = &nl.pins;
@@ -339,6 +411,19 @@ impl<'n> PartSim<'n> {
                 };
                 if let Some(v) = fast {
                     let out_net = pins[ps + n_in].0 as usize;
+                    // A forced value that diverges from the raw eval
+                    // re-arms this level so the site is re-forced next
+                    // tick (keeps delay shadows and releases current).
+                    let v = match faults.as_deref_mut() {
+                        Some(f) => {
+                            let fv = f.force(out_net, v);
+                            if fv != v {
+                                dirty[b] = true;
+                            }
+                            fv
+                        }
+                        None => v,
+                    };
                     let diff = (values[out_net] ^ v) & mask;
                     if values[out_net] != v {
                         values[out_net] = v;
@@ -371,8 +456,15 @@ impl<'n> PartSim<'n> {
                 }
                 let mut toggles = 0u32;
                 for k in 0..n_out {
-                    let v = scratch_outs[k];
+                    let mut v = scratch_outs[k];
                     let out_net = pins[ps + n_in + k].0 as usize;
+                    if let Some(f) = faults.as_deref_mut() {
+                        let fv = f.force(out_net, v);
+                        if fv != v {
+                            dirty[b] = true;
+                        }
+                        v = fv;
+                    }
                     toggles += ((values[out_net] ^ v) & mask).count_ones();
                     if values[out_net] != v {
                         values[out_net] = v;
@@ -420,6 +512,24 @@ impl<'n> PartSim<'n> {
             }
             activity.clock_ticks[i] += active;
         }
+        // SEUs land after the commit (visible next tick), exactly as
+        // in the scalar/packed engines; the upset instance's level is
+        // re-armed so the flip propagates.
+        if let Some(f) = faults.as_deref_mut() {
+            for seu in f.take_seus() {
+                let i = seu.inst as usize;
+                if bucket_of_inst[i] == u32::MAX {
+                    continue;
+                }
+                let bits = lib.cell(nl.insts[i].cell).kind.pins().2;
+                if (seu.bit as usize) < bits {
+                    let off = state_off[i] as usize;
+                    state[off + seu.bit as usize] ^= seu.lanes;
+                    dirty[bucket_of_inst[i] as usize] = true;
+                }
+            }
+            f.end_tick();
+        }
     }
 
     /// Zero values and state; re-arm every level.
@@ -448,6 +558,9 @@ pub struct ShardedSimulator<'n> {
     cycle: u64,
     /// Lane-cycles accumulated since the last activity fold.
     cycles_pending: u64,
+    /// Transient fault events staged for the first tick of the next
+    /// `run_ticks` call.
+    staged_faults: Option<Arc<TickFaults>>,
     /// Aggregated counters (parts are drained into this after every
     /// run, so it is always the complete bit-identical total).
     agg: Activity,
@@ -544,8 +657,62 @@ impl<'n> ShardedSimulator<'n> {
             mask: mask_for(lanes),
             cycle: 0,
             cycles_pending: 0,
+            staged_faults: None,
             agg: Activity::new(nl.insts.len()),
         })
+    }
+
+    /// Install a fault overlay; every part receives a clone and forces
+    /// only the nets it writes, so per-net overlay state (the delay
+    /// shadow) advances exactly once per tick, on the owner part.
+    pub fn install_faults(&mut self, overlay: FaultOverlay) {
+        assert_eq!(overlay.n_nets(), self.nl.n_nets(), "overlay size");
+        self.head.install_faults(overlay.clone());
+        for s in &mut self.shards {
+            s.install_faults(overlay.clone());
+        }
+        self.tail.install_faults(overlay);
+    }
+
+    /// Remove all fault overlays and discard staged events.
+    pub fn clear_faults(&mut self) {
+        self.head.clear_faults();
+        for s in &mut self.shards {
+            s.clear_faults();
+        }
+        self.tail.clear_faults();
+        self.staged_faults = None;
+    }
+
+    /// Stage transient fault events (single-tick glitches, post-commit
+    /// SEUs) for the **first tick of the next run**; the per-tick
+    /// [`super::SimEngine::tick_lanes`] driver therefore applies them
+    /// to exactly the tick it is about to run.  Events on inactive
+    /// lanes are dropped.
+    pub fn set_tick_faults(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+    ) {
+        let mask = self.mask;
+        let tf = TickFaults {
+            glitches: glitches
+                .iter()
+                .filter(|&&(_, l)| l & mask != 0)
+                .map(|&(n, l)| (n, l & mask))
+                .collect(),
+            seus: seus
+                .iter()
+                .filter(|s| s.lanes & mask != 0)
+                .map(|s| SeuFlip { lanes: s.lanes & mask, ..*s })
+                .collect(),
+        };
+        self.staged_faults =
+            if tf.glitches.is_empty() && tf.seus.is_empty() {
+                None
+            } else {
+                Some(Arc::new(tf))
+            };
     }
 
     /// Number of lanes the engine was built for.
@@ -637,6 +804,7 @@ impl<'n> ShardedSimulator<'n> {
         }
         let mask = self.mask;
         let active = u64::from(mask.count_ones());
+        let staged = self.staged_faults.take();
         let head = &mut self.head;
         let tail = &mut self.tail;
         let shards = &mut self.shards;
@@ -659,6 +827,13 @@ impl<'n> ShardedSimulator<'n> {
                 scope.spawn(move || {
                     while let Ok(job) = rx.recv() {
                         shard.apply_inputs(&job.inputs, true);
+                        if let Some(tf) = &job.faults {
+                            shard.stage_tick_faults(
+                                &tf.glitches,
+                                &tf.seus,
+                                job.mask,
+                            );
+                        }
                         shard.settle_commit(job.gclk_edge, job.mask);
                         let out: Vec<u64> = pub_nets
                             .iter()
@@ -673,6 +848,11 @@ impl<'n> ShardedSimulator<'n> {
             drop(res_tx);
 
             for (t, tick) in ticks.iter().enumerate() {
+                let tf = if t == 0 { staged.clone() } else { None };
+                if let Some(tf) = &tf {
+                    head.stage_tick_faults(&tf.glitches, &tf.seus, mask);
+                    tail.stage_tick_faults(&tf.glitches, &tf.seus, mask);
+                }
                 head.settle_commit(tick.gclk_edge, mask);
                 let mut broadcast = Vec::with_capacity(
                     tick.inputs.len() + head_outs.len(),
@@ -685,6 +865,7 @@ impl<'n> ShardedSimulator<'n> {
                     inputs: Arc::new(broadcast),
                     gclk_edge: tick.gclk_edge,
                     mask,
+                    faults: tf,
                 };
                 for tx in &job_txs {
                     tx.send(job.clone()).expect("shard worker alive");
@@ -838,6 +1019,66 @@ mod tests {
             assert_eq!(sh.activity().toggles, pk.activity.toggles);
             assert_eq!(sh.activity().clock_ticks, pk.activity.clock_ticks);
             assert_eq!(sh.activity().cycles, pk.activity.cycles);
+        }
+    }
+
+    /// Faulted runs stay bit-identical to the packed engine: static
+    /// stuck/delay masks force at part write sites with quiescence
+    /// re-arming, and staged glitch/SEU events land on the owning part
+    /// of the right tick.
+    #[test]
+    fn faulted_sharded_matches_faulted_packed() {
+        let lib = Library::asap7_only();
+        let nl = blocks_and_voter(&lib);
+        let sites = crate::fault::fault_sites(&nl, &lib);
+        let net_a = sites.outs[0];
+        let net_b = sites.outs[sites.outs.len() / 2];
+        let net_c = *sites.outs.last().unwrap();
+        let (seu_inst, seu_bit) = sites.seq[0];
+        for threads in [1usize, 3] {
+            let mut overlay = FaultOverlay::new(nl.n_nets());
+            overlay.add_stuck0(net_a, !0);
+            overlay.add_stuck1(net_b, 0b1010);
+            overlay.add_delay(net_c, !0);
+            let mut sh =
+                ShardedSimulator::new(&nl, &lib, 8, threads, &[]).unwrap();
+            let mut pk = PackedSimulator::new(&nl, &lib, 8).unwrap();
+            sh.install_faults(overlay.clone());
+            pk.install_faults(overlay);
+            let mut rng = 0x1234_5678_9abc_def0u64;
+            for t in 0..25u32 {
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let gamma = rng >> 60 & 3 == 0;
+                let w0 = rng;
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let w1 = rng;
+                if t == 10 {
+                    let g = [(net_b, 0b0101u64)];
+                    let s = [SeuFlip {
+                        inst: seu_inst,
+                        bit: seu_bit,
+                        lanes: 0b11,
+                    }];
+                    sh.set_tick_faults(&g, &s);
+                    pk.set_tick_faults(&g, &s);
+                }
+                let inputs = [(nl.inputs[0], w0), (nl.inputs[1], w1)];
+                sh.tick_lanes(&inputs, gamma);
+                pk.tick(&inputs, gamma);
+                for net in 0..nl.n_nets() {
+                    let id = NetId(net as u32);
+                    for lane in 0..8 {
+                        assert_eq!(
+                            sh.get(id, lane),
+                            pk.get(id, lane),
+                            "threads {threads} tick {t} net {net} \
+                             lane {lane}"
+                        );
+                    }
+                }
+            }
+            assert_eq!(sh.activity().toggles, pk.activity.toggles);
+            assert_eq!(sh.activity().clock_ticks, pk.activity.clock_ticks);
         }
     }
 

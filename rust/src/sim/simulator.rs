@@ -42,6 +42,7 @@
 
 use crate::cells::Library;
 use crate::error::{Error, Result};
+use crate::fault::{FaultOverlay, SeuFlip};
 use crate::netlist::{ClockDomain, NetId, Netlist};
 
 use super::activity::Activity;
@@ -133,6 +134,10 @@ pub struct Simulator<'n> {
     /// Reused input buffer for the [`super::SimEngine`] lane shim
     /// (avoids a fresh `Vec` per `tick_lanes` call).
     pub(crate) lane_scratch: Vec<(NetId, bool)>,
+    /// Optional fault overlay forcing stored output values
+    /// ([`crate::fault`], lane bit 0); `None` keeps the hot loop
+    /// fault-free.
+    faults: Option<Box<FaultOverlay>>,
 }
 
 /// Topologically order instances by combinational sensitivity.
@@ -239,6 +244,7 @@ impl<'n> Simulator<'n> {
             scratch_ins: vec![false; 16],
             scratch_outs: vec![false; 8],
             lane_scratch: Vec::new(),
+            faults: None,
         })
     }
 
@@ -271,6 +277,43 @@ impl<'n> Simulator<'n> {
         self.values.iter_mut().for_each(|v| *v = false);
         self.state.iter_mut().for_each(|v| *v = false);
         self.cycle = 0;
+    }
+
+    /// Install a fault overlay: every cell-output store is forced
+    /// through it from the next tick on (lane mask bit 0).
+    pub fn install_faults(&mut self, overlay: FaultOverlay) {
+        assert_eq!(overlay.n_nets(), self.nl.n_nets(), "overlay size");
+        self.faults = Some(Box::new(overlay));
+    }
+
+    /// Remove the fault overlay (back to the fault-free hot loop).
+    pub fn clear_faults(&mut self) {
+        self.faults = None;
+    }
+
+    /// Schedule transient faults for the next [`Simulator::tick`]:
+    /// single-tick XOR glitches on nets and post-commit SEU state
+    /// flips.  Lane masks with bit 0 clear are ignored (this engine is
+    /// lane 0).  Installs an empty overlay on demand.
+    pub fn set_tick_faults(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+    ) {
+        if self.faults.is_none() {
+            self.faults = Some(Box::new(FaultOverlay::new(self.nl.n_nets())));
+        }
+        let f = self.faults.as_deref_mut().expect("just installed");
+        for &(net, lanes) in glitches {
+            if lanes & 1 != 0 {
+                f.add_glitch(net, 1);
+            }
+        }
+        for &seu in seus {
+            if seu.lanes & 1 != 0 {
+                f.push_seu(seu);
+            }
+        }
     }
 
     /// Run one `aclk` cycle.
@@ -336,6 +379,10 @@ impl<'n> Simulator<'n> {
             };
             if let Some(v) = fast {
                 let out_net = pins[ps + n_in].0 as usize;
+                let v = match self.faults.as_deref_mut() {
+                    Some(f) => f.force_bool(out_net, v),
+                    None => v,
+                };
                 if self.values[out_net] != v {
                     self.values[out_net] = v;
                     self.activity.toggles[node.inst as usize] += 1;
@@ -358,8 +405,12 @@ impl<'n> Simulator<'n> {
             }
             let mut toggles = 0u32;
             for k in 0..n_out {
-                let v = self.scratch_outs[k];
-                let slot = &mut self.values[pins[ps + n_in + k].0 as usize];
+                let mut v = self.scratch_outs[k];
+                let out_net = pins[ps + n_in + k].0 as usize;
+                if let Some(f) = self.faults.as_deref_mut() {
+                    v = f.force_bool(out_net, v);
+                }
+                let slot = &mut self.values[out_net];
                 if *slot != v {
                     *slot = v;
                     toggles += 1;
@@ -399,6 +450,24 @@ impl<'n> Simulator<'n> {
             self.state[off..off + n_state]
                 .copy_from_slice(&self.next[off..off + n_state]);
             self.activity.clock_ticks[i] += 1;
+        }
+        // Post-commit fault phase: queued SEUs flip committed state
+        // bits (visible from the next tick's evaluation) and one-tick
+        // glitch pulses retire.
+        if let Some(f) = self.faults.as_deref_mut() {
+            for seu in f.take_seus() {
+                if seu.lanes & 1 == 0 {
+                    continue;
+                }
+                let i = seu.inst as usize;
+                let bits =
+                    self.lib.cell(self.nl.insts[i].cell).kind.pins().2;
+                if (seu.bit as usize) < bits {
+                    let off = self.state_off[i] as usize;
+                    self.state[off + seu.bit as usize] ^= true;
+                }
+            }
+            f.end_tick();
         }
         self.cycle += 1;
         self.activity.cycles += 1;

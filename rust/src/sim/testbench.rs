@@ -30,6 +30,7 @@
 use crate::arch::T_STEPS;
 use crate::cells::Library;
 use crate::error::Result;
+use crate::fault::{CompiledFaults, FaultProgram, SeuFlip};
 use crate::netlist::column::{ColumnPorts, BRV_PER_SYN};
 use crate::netlist::{NetId, Netlist};
 use crate::tnn::stdp::{brv_lanes, RandPair, StdpParams};
@@ -90,6 +91,12 @@ impl<'n> ColumnTestbench<'n> {
         self.nl
     }
 
+    /// Install a fault overlay on the underlying engine (static
+    /// stuck/delay masks; lane bit 0 is the live one).
+    pub fn install_faults(&mut self, overlay: crate::fault::FaultOverlay) {
+        self.sim.install_faults(overlay);
+    }
+
     /// Run one wave: `spike_times[p]` (INF = no spike, else 0..7),
     /// `rand[p*q]` per-synapse BRV draw pairs, `params` the STDP config.
     pub fn run_wave(
@@ -97,6 +104,31 @@ impl<'n> ColumnTestbench<'n> {
         spike_times: &[i32],
         rand: &[RandPair],
         params: &StdpParams,
+    ) -> WaveResult {
+        self.run_wave_inner(spike_times, rand, params, None)
+    }
+
+    /// [`ColumnTestbench::run_wave`] under a transient fault schedule:
+    /// `wave` is this wave's global index into the campaign's
+    /// [`FaultProgram`], whose events for `(wave, cycle)` are staged
+    /// before the matching tick.
+    pub fn run_wave_faulted(
+        &mut self,
+        wave: u32,
+        spike_times: &[i32],
+        rand: &[RandPair],
+        params: &StdpParams,
+        program: &FaultProgram,
+    ) -> WaveResult {
+        self.run_wave_inner(spike_times, rand, params, Some((wave, program)))
+    }
+
+    fn run_wave_inner(
+        &mut self,
+        spike_times: &[i32],
+        rand: &[RandPair],
+        params: &StdpParams,
+        fault: Option<(u32, &FaultProgram)>,
     ) -> WaveResult {
         assert_eq!(spike_times.len(), self.p);
         assert_eq!(rand.len(), self.p * self.q);
@@ -131,6 +163,9 @@ impl<'n> ColumnTestbench<'n> {
                     }
                 }
             }
+            if let Some((wave, prog)) = fault {
+                stage_scalar_events(&mut self.sim, wave, cyc as u16, prog);
+            }
             self.sim.tick(&self.inputs, stdp_eval);
             // Record spike times during the compute window.
             if compute {
@@ -159,6 +194,56 @@ impl<'n> ColumnTestbench<'n> {
             })
             .collect()
     }
+}
+
+/// Stage the scalar engine's transient fault events for `(wave, cycle)`.
+fn stage_scalar_events(
+    sim: &mut Simulator<'_>,
+    wave: u32,
+    cycle: u16,
+    prog: &FaultProgram,
+) {
+    if prog.is_empty() {
+        return;
+    }
+    let glitches: Vec<(NetId, u64)> =
+        prog.glitches_at(wave, cycle).map(|n| (n, 1)).collect();
+    let seus: Vec<SeuFlip> = prog
+        .seus_at(wave, cycle)
+        .map(|(inst, bit)| SeuFlip { inst, bit, lanes: 1 })
+        .collect();
+    if !glitches.is_empty() || !seus.is_empty() {
+        sim.set_tick_faults(&glitches, &seus);
+    }
+}
+
+/// Collect the lane-masked transient events of cycle `cycle` for lanes
+/// `0..k`, lane `l` carrying global wave `base_wave + l` (the packed
+/// wave→lane placement — the same on every engine and thread count).
+fn lane_events(
+    base_wave: u32,
+    k: usize,
+    cycle: u16,
+    prog: &FaultProgram,
+) -> (Vec<(NetId, u64)>, Vec<SeuFlip>) {
+    let mut glitches: Vec<(NetId, u64)> = Vec::new();
+    let mut seus: Vec<SeuFlip> = Vec::new();
+    for l in 0..k {
+        let w = base_wave + l as u32;
+        for n in prog.glitches_at(w, cycle) {
+            match glitches.iter_mut().find(|(g, _)| *g == n) {
+                Some((_, m)) => *m |= 1 << l,
+                None => glitches.push((n, 1 << l)),
+            }
+        }
+        for (inst, bit) in prog.seus_at(w, cycle) {
+            match seus.iter_mut().find(|s| s.inst == inst && s.bit == bit) {
+                Some(s) => s.lanes |= 1 << l,
+                None => seus.push(SeuFlip { inst, bit, lanes: 1 << l }),
+            }
+        }
+    }
+    (glitches, seus)
 }
 
 /// Iterate a stimulus set in lane-sized batches.
@@ -225,6 +310,12 @@ impl<'n> PackedColumnTestbench<'n> {
         self.sim.lanes()
     }
 
+    /// Install a fault overlay on the underlying engine (static
+    /// stuck/delay masks shared by all lanes).
+    pub fn install_faults(&mut self, overlay: crate::fault::FaultOverlay) {
+        self.sim.install_faults(overlay);
+    }
+
     /// Run one wave across `k ≤ lanes` stimuli in parallel: lane `l`
     /// is driven by `spike_times[l]` / `rand[l]`, exactly the schedule
     /// of [`ColumnTestbench::run_wave`], and gets its own
@@ -234,6 +325,36 @@ impl<'n> PackedColumnTestbench<'n> {
         spike_times: &[Vec<i32>],
         rand: &[Vec<RandPair>],
         params: &StdpParams,
+    ) -> Vec<WaveResult> {
+        self.run_wave_lanes_inner(spike_times, rand, params, None)
+    }
+
+    /// [`PackedColumnTestbench::run_wave_lanes`] under a transient
+    /// fault schedule: lane `l` carries global wave `base_wave + l`,
+    /// and the [`FaultProgram`]'s events for those waves are staged
+    /// lane-masked before the matching tick.
+    pub fn run_wave_lanes_faulted(
+        &mut self,
+        base_wave: u32,
+        spike_times: &[Vec<i32>],
+        rand: &[Vec<RandPair>],
+        params: &StdpParams,
+        program: &FaultProgram,
+    ) -> Vec<WaveResult> {
+        self.run_wave_lanes_inner(
+            spike_times,
+            rand,
+            params,
+            Some((base_wave, program)),
+        )
+    }
+
+    fn run_wave_lanes_inner(
+        &mut self,
+        spike_times: &[Vec<i32>],
+        rand: &[Vec<RandPair>],
+        params: &StdpParams,
+        fault: Option<(u32, &FaultProgram)>,
     ) -> Vec<WaveResult> {
         let k = spike_times.len();
         assert!(
@@ -295,6 +416,14 @@ impl<'n> PackedColumnTestbench<'n> {
                     }
                 }
             }
+            if let Some((base, prog)) = fault {
+                if !prog.is_empty() {
+                    let (g, s) = lane_events(base, k, cyc as u16, prog);
+                    if !g.is_empty() || !s.is_empty() {
+                        self.sim.set_tick_faults(&g, &s);
+                    }
+                }
+            }
             self.sim.tick(&self.inputs, stdp_eval);
             // Record spike times during the compute window.
             if compute {
@@ -347,6 +476,29 @@ impl<'n> PackedColumnTestbench<'n> {
         out
     }
 
+    /// [`PackedColumnTestbench::run_waves`] under a transient fault
+    /// schedule: chunk `c`'s first wave index (`c*lanes`) keys the
+    /// lookup, so event placement matches the scalar wave order.
+    pub fn run_waves_faulted(
+        &mut self,
+        stim: &[Vec<i32>],
+        rand: &[Vec<RandPair>],
+        params: &StdpParams,
+        program: &FaultProgram,
+    ) -> Vec<WaveResult> {
+        assert_eq!(stim.len(), rand.len());
+        let lanes = self.sim.lanes();
+        let mut out = Vec::with_capacity(stim.len());
+        for ((base, s), r) in
+            lane_batches(stim, lanes).zip(rand.chunks(lanes))
+        {
+            out.extend(
+                self.run_wave_lanes_faulted(base as u32, s, r, params, program),
+            );
+        }
+        out
+    }
+
     /// Read the committed weight registers of one lane.
     pub fn read_weights(&self, lane: usize) -> Vec<i32> {
         self.ports
@@ -386,13 +538,65 @@ pub fn run_waves_parallel(
     rand: &[Vec<RandPair>],
     params: &StdpParams,
 ) -> Result<(Vec<WaveResult>, super::Activity)> {
+    run_waves_parallel_inner(
+        nl, ports, lib, lanes, threads, stim, rand, params, None,
+    )
+}
+
+/// [`run_waves_parallel`] under a compiled fault campaign: every worker
+/// installs a clone of the static overlay, and transient events are
+/// staged by global wave index — so the faulted results are identical
+/// at every thread count, too.
+#[allow(clippy::too_many_arguments)] // run_waves_parallel's set + the campaign
+pub fn run_waves_parallel_faulted(
+    nl: &Netlist,
+    ports: &ColumnPorts,
+    lib: &Library,
+    lanes: usize,
+    threads: usize,
+    stim: &[Vec<i32>],
+    rand: &[Vec<RandPair>],
+    params: &StdpParams,
+    faults: &CompiledFaults,
+) -> Result<(Vec<WaveResult>, super::Activity)> {
+    run_waves_parallel_inner(
+        nl,
+        ports,
+        lib,
+        lanes,
+        threads,
+        stim,
+        rand,
+        params,
+        Some(faults),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_waves_parallel_inner(
+    nl: &Netlist,
+    ports: &ColumnPorts,
+    lib: &Library,
+    lanes: usize,
+    threads: usize,
+    stim: &[Vec<i32>],
+    rand: &[Vec<RandPair>],
+    params: &StdpParams,
+    faults: Option<&CompiledFaults>,
+) -> Result<(Vec<WaveResult>, super::Activity)> {
     assert_eq!(stim.len(), rand.len());
     let lanes = lanes.clamp(1, MAX_LANES);
     let threads = threads.max(1).min(lanes);
     let n = stim.len();
     if threads == 1 || n == 0 {
         let mut tb = PackedColumnTestbench::new(nl, ports, lib, lanes)?;
-        let results = tb.run_waves(stim, rand, params);
+        let results = match faults {
+            Some(f) => {
+                tb.install_faults(f.overlay.clone());
+                tb.run_waves_faulted(stim, rand, params, &f.program)
+            }
+            None => tb.run_waves(stim, rand, params),
+        };
         return Ok((results, tb.activity().clone()));
     }
     // Lane ranges: the first `lanes % threads` workers get one extra.
@@ -412,19 +616,33 @@ pub fn run_waves_parallel(
             handles.push(scope.spawn(move || -> Result<WorkerOut> {
                 let mut tb =
                     PackedColumnTestbench::new(nl, ports, lib, width)?;
+                if let Some(f) = faults {
+                    tb.install_faults(f.overlay.clone());
+                }
                 let mut parts: Vec<(usize, Vec<WaveResult>)> = Vec::new();
                 let mut chunk = 0usize;
                 loop {
+                    // Worker lane j of this chunk carries global wave
+                    // s0 + j — the key transient events are placed by.
                     let s0 = chunk * lanes + my_lo;
                     if s0 >= n {
                         break;
                     }
                     let e0 = (s0 + width).min(n);
-                    let res = tb.run_wave_lanes(
-                        &stim[s0..e0],
-                        &rand[s0..e0],
-                        params,
-                    );
+                    let res = match faults {
+                        Some(f) => tb.run_wave_lanes_faulted(
+                            s0 as u32,
+                            &stim[s0..e0],
+                            &rand[s0..e0],
+                            params,
+                            &f.program,
+                        ),
+                        None => tb.run_wave_lanes(
+                            &stim[s0..e0],
+                            &rand[s0..e0],
+                            params,
+                        ),
+                    };
                     parts.push((s0, res));
                     chunk += 1;
                 }

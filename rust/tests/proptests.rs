@@ -767,6 +767,195 @@ fn prop_reimported_netlist_simulates_identically() {
     }
 }
 
+/// Random column-wave stimulus + BRV schedules for fault-campaign
+/// properties.
+#[allow(clippy::type_complexity)]
+fn campaign_stimulus(
+    spec: &ColumnSpec,
+    n: usize,
+    seed: u16,
+) -> (Vec<Vec<i32>>, Vec<Vec<RandPair>>) {
+    let mut stim = Lfsr16::new((seed.wrapping_mul(311) ^ 0x5a5a) | 1);
+    let mut lfsr = Lfsr16::new(seed.wrapping_mul(977) | 1);
+    let waves: Vec<Vec<i32>> = (0..n)
+        .map(|_| {
+            (0..spec.p)
+                .map(|_| {
+                    let v = stim.next_u16();
+                    if v & 0x7 == 7 {
+                        INF
+                    } else {
+                        i32::from(v % 8)
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let rands: Vec<Vec<RandPair>> = (0..n)
+        .map(|_| {
+            (0..spec.p * spec.q).map(|_| lfsr.draw_pair()).collect()
+        })
+        .collect();
+    (waves, rands)
+}
+
+/// INVARIANT: a rate-0 campaign point of ANY fault class is
+/// bit-identical to the fault-free baseline on all three engines —
+/// same wave results (fingerprint), same toggle count, accuracy 1.0,
+/// zero injections.
+#[test]
+fn prop_fault_campaign_zero_rate_bit_identical_all_engines() {
+    use tnn7::fault::{run_campaign, CampaignSpec, FaultClass};
+    let lib = Library::with_macros();
+    let params = StdpParams::default_training();
+    for seed in 0..2u64 {
+        let mut r = rng(seed * 577 + 29);
+        let p = 3 + (r.next_u64() % 5) as usize;
+        let q = 2 + (r.next_u64() % 3) as usize;
+        let spec = ColumnSpec { p, q, theta: (p + 2) as u64 };
+        let (nl, ports) =
+            build_column(&lib, Flavor::Std, &spec).unwrap();
+        let (waves, rands) =
+            campaign_stimulus(&spec, 6, seed as u16 + 3);
+        let cspec = CampaignSpec {
+            classes: FaultClass::ALL.to_vec(),
+            rates: vec![0.0],
+            seeds: vec![1, 9],
+        };
+        let mut base_fp: Option<u64> = None;
+        // Scalar, packed single-thread, sharded multi-thread.
+        for (lanes, threads) in [(1, 1), (4, 1), (4, 3)] {
+            let rep = run_campaign(
+                &nl, &ports, &lib, &cspec, &waves, &rands, &params,
+                lanes, threads,
+            )
+            .unwrap();
+            // The fault-free baseline itself is engine-invariant.
+            let fp = *base_fp.get_or_insert(rep.base_fingerprint);
+            assert_eq!(
+                rep.base_fingerprint, fp,
+                "seed {seed} lanes {lanes} threads {threads}: baseline \
+                 diverged across engines"
+            );
+            for pt in &rep.points {
+                let label = pt.point.class.label();
+                assert_eq!(
+                    pt.injections, 0,
+                    "seed {seed} {label}: rate 0 injected faults"
+                );
+                assert!(
+                    pt.bit_identical,
+                    "seed {seed} lanes {lanes} threads {threads} \
+                     {label}: rate 0 not bit-identical"
+                );
+                assert_eq!(pt.fingerprint, rep.base_fingerprint);
+                assert_eq!(pt.toggles, rep.base_toggles);
+                assert_eq!(pt.accuracy, 1.0);
+                assert_eq!(pt.weight_l1, 0);
+            }
+        }
+    }
+}
+
+/// INVARIANT: a seeded campaign is deterministic across engines and
+/// thread counts — every point's fingerprint, injection count,
+/// accuracy, |dW| and toggle total is identical whether the schedule
+/// ran scalar, packed, or sharded at any thread count.
+#[test]
+fn prop_fault_campaign_deterministic_across_engines_and_threads() {
+    use tnn7::fault::{run_campaign, CampaignSpec, FaultClass};
+    let lib = Library::with_macros();
+    let params = StdpParams::default_training();
+    let spec = ColumnSpec { p: 6, q: 3, theta: 8 };
+    let (nl, ports) = build_column(&lib, Flavor::Std, &spec).unwrap();
+    let (waves, rands) = campaign_stimulus(&spec, 8, 41);
+    let cspec = CampaignSpec {
+        classes: FaultClass::ALL.to_vec(),
+        rates: vec![0.05, 0.25],
+        seeds: vec![3, 11],
+    };
+    let golden = run_campaign(
+        &nl, &ports, &lib, &cspec, &waves, &rands, &params, 1, 1,
+    )
+    .unwrap();
+    for (lanes, threads) in [(2, 1), (8, 1), (8, 2), (8, 5)] {
+        let rep = run_campaign(
+            &nl, &ports, &lib, &cspec, &waves, &rands, &params, lanes,
+            threads,
+        )
+        .unwrap();
+        assert_eq!(rep.base_fingerprint, golden.base_fingerprint);
+        assert_eq!(rep.base_toggles, golden.base_toggles);
+        assert_eq!(rep.points.len(), golden.points.len());
+        for (pt, g) in rep.points.iter().zip(&golden.points) {
+            let ctx = format!(
+                "lanes {lanes} threads {threads} {} rate {} seed {}",
+                g.point.class.label(),
+                g.point.rate,
+                g.point.seed
+            );
+            assert_eq!(pt.point.class, g.point.class, "{ctx}");
+            assert_eq!(pt.injections, g.injections, "{ctx}");
+            assert_eq!(pt.fingerprint, g.fingerprint, "{ctx}");
+            assert_eq!(pt.accuracy, g.accuracy, "{ctx}");
+            assert_eq!(pt.weight_l1, g.weight_l1, "{ctx}");
+            assert_eq!(pt.toggles, g.toggles, "{ctx}");
+            assert_eq!(pt.bit_identical, g.bit_identical, "{ctx}");
+        }
+    }
+}
+
+/// INVARIANT: stuck-at faults pinning a const-tied net to its tied
+/// polarity are no-ops — and the campaign site enumerator never offers
+/// the tie nets as injection sites in the first place.
+#[test]
+fn prop_stuck_faults_on_const_tied_nets_are_noops() {
+    use tnn7::fault::{fault_sites, FaultOverlay};
+    let lib = Library::with_macros();
+    let params = StdpParams::default_training();
+    for (seed, flavor) in
+        [(0u64, Flavor::Std), (1, Flavor::Custom)]
+    {
+        let mut r = rng(seed * 449 + 97);
+        let p = 3 + (r.next_u64() % 5) as usize;
+        let q = 2 + (r.next_u64() % 3) as usize;
+        let spec = ColumnSpec { p, q, theta: (p + 1) as u64 };
+        let (nl, ports) = build_column(&lib, flavor, &spec).unwrap();
+
+        let sites = fault_sites(&nl, &lib);
+        assert!(
+            !sites.outs.contains(&nl.const0)
+                && !sites.outs.contains(&nl.const1),
+            "{flavor:?}: tie nets offered as fault sites"
+        );
+
+        // Pin the ties to the value they already carry: stuck-at-0 on
+        // const0, stuck-at-1 on const1, in every lane.
+        let mut ov = FaultOverlay::new(nl.n_nets());
+        ov.add_stuck0(nl.const0, !0);
+        ov.add_stuck1(nl.const1, !0);
+
+        let mut clean =
+            ColumnTestbench::new(&nl, &ports, &lib).unwrap();
+        let mut faulted =
+            ColumnTestbench::new(&nl, &ports, &lib).unwrap();
+        faulted.install_faults(ov);
+        let (waves, rands) =
+            campaign_stimulus(&spec, 6, seed as u16 + 19);
+        for (w, (s, rand)) in waves.iter().zip(&rands).enumerate() {
+            let a = clean.run_wave(s, rand, &params);
+            let b = faulted.run_wave(s, rand, &params);
+            assert_eq!(a, b, "{flavor:?} wave {w}: tied stuck-at \
+                 perturbed the run");
+        }
+        assert_eq!(
+            clean.activity().toggles,
+            faulted.activity().toggles,
+            "{flavor:?}: toggle counts"
+        );
+    }
+}
+
 /// INVARIANT: PPA is monotone in column size (more synapses never cost
 /// less area or leakage).
 #[test]

@@ -17,7 +17,9 @@ use tnn7::flow::{self, Target};
 use tnn7::netlist::column::ColumnSpec;
 use tnn7::netlist::Flavor;
 use tnn7::runtime::json::Json;
-use tnn7::serve::http::fetch;
+use tnn7::serve::http::{
+    fetch, fetch_with_retry, RetryPolicy, MAX_BODY_BYTES,
+};
 use tnn7::serve::{ServeConfig, Server, ServerHandle};
 use tnn7::tech::TechRegistry;
 
@@ -229,6 +231,7 @@ fn routes_stats_health_and_errors() {
         "flow_requests",
         "errors",
         "overloads",
+        "stalled_writes",
         "dedup_joins",
         "stages",
         "cache",
@@ -261,6 +264,82 @@ fn post_shutdown_drains_and_exits() {
     assert!(bye.body.contains("draining"));
     // A hung drain would hang the test here — joining IS the assertion.
     h.join();
+}
+
+/// A request whose declared body exceeds the daemon's bound is refused
+/// with a structured 413 before any body byte is read — a live-daemon
+/// check of the `read_request` limit, not just the unit test.
+#[test]
+fn oversized_request_body_answered_with_inline_413() {
+    use std::io::{Read as _, Write as _};
+    let h = spawn(2, 16, 0);
+    let mut c = std::net::TcpStream::connect(h.addr()).unwrap();
+    c.set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    // Declare a body one byte past the limit — and never send it.  The
+    // daemon must answer from the headers alone and close.
+    c.write_all(
+        format!(
+            "POST /flow HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut raw = String::new();
+    c.read_to_string(&mut raw).unwrap();
+    assert!(
+        raw.starts_with("HTTP/1.1 413 "),
+        "oversized request must get an inline 413, got: {raw}"
+    );
+    assert!(raw.contains("too large"), "{raw}");
+
+    // The daemon is still healthy afterwards.
+    let ok = fetch(h.addr(), "GET", "/healthz", "").unwrap();
+    assert_eq!(ok.status, 200);
+    stop(h);
+}
+
+/// The retrying client turns a transient overload (inline 503 with
+/// Retry-After) into an eventual 200 once the queue drains — the
+/// end-to-end pairing of the daemon's backpressure and the client's
+/// backoff.
+#[test]
+fn retry_client_rides_out_queue_overload() {
+    // One worker, queue depth one, a leader slow enough that the
+    // retry client's first attempts see a full queue.
+    let h = spawn(1, 1, 500);
+    let addr = h.addr();
+    let r1 =
+        std::thread::spawn(move || fetch(addr, "POST", "/flow", TINY).unwrap());
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let r2 =
+        std::thread::spawn(move || fetch(addr, "POST", "/flow", TINY).unwrap());
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    // Plain fetch would see the inline 503 here; the retry client
+    // sleeps through it (Retry-After capped at max_delay_ms) and
+    // lands once the worker frees up.
+    let policy = RetryPolicy {
+        attempts: 8,
+        base_delay_ms: 50,
+        max_delay_ms: 300,
+        jitter_seed: 7,
+    };
+    let resp =
+        fetch_with_retry(addr, "POST", "/flow", TINY, &policy).unwrap();
+    assert_eq!(
+        resp.status, 200,
+        "retry client must outlast the overload: {}",
+        resp.body
+    );
+
+    assert_eq!(r1.join().unwrap().status, 200);
+    assert_eq!(r2.join().unwrap().status, 200);
+    let stats = fetch(addr, "GET", "/stats", "").unwrap();
+    let j = Json::parse(&stats.body).unwrap();
+    assert!(j.field("overloads").unwrap().as_usize().unwrap() >= 1);
+    stop(h);
 }
 
 /// PROPERTY: for random small design points, the cached measurement is
