@@ -1,0 +1,230 @@
+//! Bench: compiled tape engine vs the packed interpreter.
+//!
+//! The compiled backend lowers the elaborated netlist to word-level IR,
+//! runs the optimization pipeline (fold, dce, coalesce, resched), and
+//! emits a flat branch-free op tape.  This bench measures *stimulus
+//! waves per second* through:
+//!
+//! * packed interpreter — 64 waves per pass (`run_wave_lanes`), the
+//!   prior fastest engine and the bit-exactness oracle,
+//! * compiled tape, unoptimized (`--passes none`) — isolates the tape
+//!   loop itself from the pass pipeline's contribution,
+//! * compiled tape, full pipeline — the shipped configuration; the
+//!   acceptance target is **>= 3x** the packed interpreter,
+//! * thread-parallel packed vs compiled (`run_waves_parallel*` at
+//!   `--threads N`, default 4), construction included in both.
+//!
+//! Results land in `BENCH_compile.json`: waves/sec per engine, the
+//! speedup columns, and the per-pass reduction counts
+//! (`ops_before`/`ops_after`/`rewritten` per pass) so op-count
+//! regressions are machine-visible across PRs.  Cross-engine
+//! bit-equivalence is proven by `tests/ir_passes.rs`, not here.
+//!
+//! Run:   cargo bench --bench compile_throughput [-- --threads N]
+//! Smoke: cargo bench --bench compile_throughput -- --smoke
+
+#[path = "common/mod.rs"]
+mod common;
+
+use tnn7::cells::Library;
+use tnn7::config::TnnConfig;
+use tnn7::coordinator::activity_bridge::stimulus;
+use tnn7::data::Dataset;
+use tnn7::flow::table1_specs;
+use tnn7::ir::PassManager;
+use tnn7::netlist::column::{build_column, ColumnSpec};
+use tnn7::netlist::prototype::PrototypeSpec;
+use tnn7::netlist::Flavor;
+use tnn7::runtime::json::Json;
+use tnn7::sim::packed::MAX_LANES;
+use tnn7::sim::testbench::{
+    run_waves_parallel, run_waves_parallel_compiled,
+    CompiledColumnTestbench, PackedColumnTestbench, WAVE_LEN,
+};
+use tnn7::tnn::stdp::RandPair;
+use tnn7::tnn::Lfsr16;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = common::arg_value("--threads").unwrap_or(4).max(1);
+    let cfg = TnnConfig::default();
+    let lib = Library::with_macros();
+    let data = Dataset::generate(8, 3);
+    let params = cfg.stdp_params();
+    let pm_all = PassManager::all();
+    let pm_none = PassManager::none();
+
+    // Design points, smallest first: the prototype layer columns, then
+    // the Table-I benchmark columns.
+    let proto = PrototypeSpec::paper();
+    let mut points: Vec<(String, ColumnSpec)> = vec![
+        ("proto-l2".into(), proto.l2.column),
+        ("proto-l1".into(), proto.l1.column),
+    ];
+    for (label, spec) in table1_specs() {
+        points.push((label.to_string(), spec));
+    }
+    if smoke {
+        points.truncate(1);
+    }
+
+    let mut json_points: Vec<Json> = Vec::new();
+    let mut worst_speedup = f64::INFINITY;
+    for (label, spec) in &points {
+        let flavors: &[Flavor] = if smoke {
+            &[Flavor::Custom]
+        } else {
+            &[Flavor::Std, Flavor::Custom]
+        };
+        for &flavor in flavors {
+            let (p, q) = (spec.p, spec.q);
+            let (nl, ports) = build_column(&lib, flavor, spec)?;
+            let n_insts = nl.insts.len();
+            let stim =
+                stimulus(&data, p, MAX_LANES, cfg.encode_threshold as f32);
+            let mut lfsr = Lfsr16::new(1);
+            let rands: Vec<Vec<RandPair>> = (0..MAX_LANES)
+                .map(|_| (0..p * q).map(|_| lfsr.draw_pair()).collect())
+                .collect();
+            let iters = if smoke {
+                1
+            } else if p >= 1024 {
+                2
+            } else {
+                8
+            };
+
+            // Packed interpreter: the baseline engine.
+            let mut ptb =
+                PackedColumnTestbench::new(&nl, &ports, &lib, MAX_LANES)?;
+            let packed = common::bench(
+                &format!("compile/packed64/{flavor:?}/{label}"),
+                iters,
+                || {
+                    ptb.run_wave_lanes(&stim, &rands, &params);
+                },
+            );
+            let packed_wps = MAX_LANES as f64 / packed.mean_s;
+
+            // Compiled tape, unoptimized: the tape loop alone.
+            let mut rtb = CompiledColumnTestbench::with_passes(
+                &nl, &ports, &lib, MAX_LANES, &pm_none,
+            )?;
+            let ops_raw = rtb.engine().n_ops();
+            let raw = common::bench(
+                &format!("compile/tape-none/{flavor:?}/{label}"),
+                iters,
+                || {
+                    rtb.run_wave_lanes(&stim, &rands, &params);
+                },
+            );
+            let raw_wps = MAX_LANES as f64 / raw.mean_s;
+
+            // Compiled tape, full pipeline: the shipped engine.
+            let mut ctb = CompiledColumnTestbench::with_passes(
+                &nl, &ports, &lib, MAX_LANES, &pm_all,
+            )?;
+            let ops_opt = ctb.engine().n_ops();
+            let pass_stats: Vec<Json> = ctb
+                .engine()
+                .pass_stats()
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("pass", Json::str(s.pass)),
+                        ("ops_before", Json::int(s.ops_before as u64)),
+                        ("ops_after", Json::int(s.ops_after as u64)),
+                        ("rewritten", Json::int(s.rewritten as u64)),
+                    ])
+                })
+                .collect();
+            let compiled = common::bench(
+                &format!("compile/tape-all/{flavor:?}/{label}"),
+                iters,
+                || {
+                    ctb.run_wave_lanes(&stim, &rands, &params);
+                },
+            );
+            let compiled_wps = MAX_LANES as f64 / compiled.mean_s;
+
+            // Thread-parallel, construction included in both engines.
+            let mt_waves = 2 * MAX_LANES;
+            let mt_stim =
+                stimulus(&data, p, mt_waves, cfg.encode_threshold as f32);
+            let mt_rands: Vec<Vec<RandPair>> = (0..mt_waves)
+                .map(|_| (0..p * q).map(|_| lfsr.draw_pair()).collect())
+                .collect();
+            let iters = if smoke { 1 } else { 2 };
+            let mt_packed = common::bench(
+                &format!("compile/waves-mt{threads}/packed/{flavor:?}/{label}"),
+                iters,
+                || {
+                    run_waves_parallel(
+                        &nl, &ports, &lib, MAX_LANES, threads, &mt_stim,
+                        &mt_rands, &params,
+                    )
+                    .expect("parallel waves");
+                },
+            );
+            let mt_compiled = common::bench(
+                &format!(
+                    "compile/waves-mt{threads}/compiled/{flavor:?}/{label}"
+                ),
+                iters,
+                || {
+                    run_waves_parallel_compiled(
+                        &nl, &ports, &lib, MAX_LANES, threads, &mt_stim,
+                        &mt_rands, &params, &pm_all, None,
+                    )
+                    .expect("parallel compiled waves");
+                },
+            );
+            let mt_packed_wps = mt_waves as f64 / mt_packed.mean_s;
+            let mt_compiled_wps = mt_waves as f64 / mt_compiled.mean_s;
+
+            let speedup = compiled_wps / packed_wps;
+            worst_speedup = worst_speedup.min(speedup);
+            println!(
+                "      {n_insts} instances x {WAVE_LEN} cycles/wave | \
+                 ops {ops_raw} -> {ops_opt} | \
+                 packed64 {packed_wps:.1} waves/s | \
+                 tape(none) {raw_wps:.1} | tape(all) {compiled_wps:.1} \
+                 ({speedup:.2}x vs packed) | mt{threads} \
+                 {mt_packed_wps:.1} -> {mt_compiled_wps:.1} waves/s"
+            );
+            json_points.push(Json::obj(vec![
+                ("point", Json::str(label.clone())),
+                ("flavor", Json::str(format!("{flavor:?}"))),
+                ("instances", Json::int(n_insts as u64)),
+                ("lanes", Json::int(MAX_LANES as u64)),
+                ("threads", Json::int(threads as u64)),
+                ("ops_unoptimized", Json::int(ops_raw as u64)),
+                ("ops_optimized", Json::int(ops_opt as u64)),
+                ("passes", Json::Arr(pass_stats)),
+                ("packed_wps", Json::num(packed_wps)),
+                ("compiled_none_wps", Json::num(raw_wps)),
+                ("compiled_wps", Json::num(compiled_wps)),
+                ("mt_packed_wps", Json::num(mt_packed_wps)),
+                ("mt_compiled_wps", Json::num(mt_compiled_wps)),
+                ("speedup_compiled_vs_packed", Json::num(speedup)),
+                (
+                    "speedup_mt_compiled_vs_mt_packed",
+                    Json::num(mt_compiled_wps / mt_packed_wps),
+                ),
+            ]));
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("compile_throughput")),
+        ("smoke", if smoke { Json::int(1) } else { Json::int(0) }),
+        ("lanes", Json::int(MAX_LANES as u64)),
+        ("threads", Json::int(threads as u64)),
+        ("target_speedup", Json::num(3.0)),
+        ("worst_speedup", Json::num(worst_speedup)),
+        ("points", Json::Arr(json_points)),
+    ]);
+    std::fs::write("BENCH_compile.json", out.to_string_pretty())?;
+    println!("wrote BENCH_compile.json (worst speedup {worst_speedup:.2}x)");
+    Ok(())
+}

@@ -145,6 +145,15 @@ pub struct TnnConfig {
     /// and for parallel target sweeps (1 = serial; DESIGN.md §8).
     /// Thread count never changes measured activity — only wall time.
     pub sim_threads: usize,
+    /// Simulation engine for the `simulate`/`faults` wave schedules:
+    /// `auto` (interpreter selection by lanes/threads), `scalar`,
+    /// `packed`, or `compiled` (optimized tape; DESIGN.md §14).
+    /// Engine choice never changes results — only wall time.
+    pub sim_engine: String,
+    /// IR pass pipeline for the compiled engine: `all`, `none`, or a
+    /// comma-separated ordered subset of
+    /// `fold`, `dce`, `coalesce`, `resched`.
+    pub sim_passes: String,
     /// Run the physical-design `place` stage (floorplan + placement +
     /// wire-aware PPA; `tnn7 flow --place`, DESIGN.md §10).
     pub place: bool,
@@ -197,6 +206,8 @@ impl Default for TnnConfig {
             sim_waves: 8,
             sim_lanes: 1,
             sim_threads: 1,
+            sim_engine: "auto".into(),
+            sim_passes: "all".into(),
             place: false,
             place_util: 0.70,
             place_aspect: 1.0,
@@ -243,7 +254,16 @@ impl TnnConfig {
                     "mu_search",
                 ],
             ),
-            ("sim", &["sim_waves", "sim_lanes", "sim_threads"]),
+            (
+                "sim",
+                &[
+                    "sim_waves",
+                    "sim_lanes",
+                    "sim_threads",
+                    "sim_engine",
+                    "sim_passes",
+                ],
+            ),
             (
                 "place",
                 &["enabled", "utilization", "aspect", "seed"],
@@ -329,6 +349,30 @@ impl TnnConfig {
             }
             c.sim_threads = threads as usize;
         }
+        if let Some(v) = t.get("sim", "sim_engine") {
+            match v {
+                Value::Str(s) => c.sim_engine = s.clone(),
+                _ => {
+                    return Err(Error::config(
+                        "sim_engine must be a string",
+                    ))
+                }
+            }
+        }
+        if let Some(v) = t.get("sim", "sim_passes") {
+            match v {
+                Value::Str(s) => c.sim_passes = s.clone(),
+                _ => {
+                    return Err(Error::config(
+                        "sim_passes must be a string",
+                    ))
+                }
+            }
+        }
+        // Validate engine/pipeline tokens up front — a typo should
+        // fail at config load, not mid-flow.
+        c.validate_engine()?;
+        c.pass_manager()?;
         if let Some(v) = t.get("place", "enabled") {
             match v {
                 Value::Bool(b) => c.place = *b,
@@ -453,6 +497,22 @@ impl TnnConfig {
             c.cache_mem_entries = n as usize;
         }
         Ok(c)
+    }
+
+    /// Validate the `sim_engine` token.
+    pub fn validate_engine(&self) -> Result<()> {
+        match self.sim_engine.as_str() {
+            "auto" | "scalar" | "packed" | "compiled" => Ok(()),
+            other => Err(Error::config(format!(
+                "sim_engine must be one of auto, scalar, packed, \
+                 compiled — got `{other}`"
+            ))),
+        }
+    }
+
+    /// Pass pipeline parsed from `sim_passes`.
+    pub fn pass_manager(&self) -> Result<crate::ir::PassManager> {
+        crate::ir::PassManager::parse(&self.sim_passes)
     }
 
     /// Campaign grid parsed from the `[faults]` class/rate/seed lists.
@@ -628,6 +688,34 @@ sim_threads = 4
         assert!(
             TnnConfig::from_toml("[faults]\nclasses = 3").is_err()
         );
+    }
+
+    #[test]
+    fn parses_and_validates_engine_and_passes() {
+        let c = TnnConfig::from_toml(
+            "[sim]\nsim_engine = \"compiled\"\nsim_passes = \"fold,dce\"",
+        )
+        .unwrap();
+        assert_eq!(c.sim_engine, "compiled");
+        assert_eq!(c.pass_manager().unwrap().canonical(), "fold,dce");
+        // Defaults: auto engine, full pipeline.
+        let d = TnnConfig::default();
+        assert_eq!(d.sim_engine, "auto");
+        assert_eq!(
+            d.pass_manager().unwrap().canonical(),
+            "fold,dce,coalesce,resched"
+        );
+        // Typos fail at config load, not mid-flow.
+        assert!(TnnConfig::from_toml(
+            "[sim]\nsim_engine = \"warp-drive\""
+        )
+        .is_err());
+        assert!(TnnConfig::from_toml(
+            "[sim]\nsim_passes = \"fold,fold\""
+        )
+        .is_err());
+        assert!(TnnConfig::from_toml("[sim]\nsim_engine = 3").is_err());
+        assert!(TnnConfig::from_toml("[sim]\nsim_passes = 3").is_err());
     }
 
     #[test]

@@ -15,11 +15,13 @@
 
 use crate::cells::Library;
 use crate::error::Result;
+use crate::ir::{lower, PassManager};
 use crate::netlist::column::ColumnPorts;
 use crate::netlist::Netlist;
 use crate::sim::testbench::{
-    run_waves_parallel, run_waves_parallel_faulted, ColumnTestbench,
-    PackedColumnTestbench, WaveResult,
+    run_waves_parallel, run_waves_parallel_compiled,
+    run_waves_parallel_faulted, ColumnTestbench, PackedColumnTestbench,
+    WaveResult,
 };
 use crate::sim::Activity;
 use crate::tnn::stdp::{RandPair, StdpParams};
@@ -169,14 +171,61 @@ pub fn fingerprint(results: &[WaveResult]) -> u64 {
     h
 }
 
-/// One full wave-schedule run with the `simulate` stage's engine
-/// selection: `(lanes > 1, threads > 1)` → thread-parallel packed,
-/// `lanes > 1` → packed, else scalar.
+/// Engine selection for campaign wave schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CampaignEngine {
+    /// Interpreter selection by `(lanes, threads)`: thread-parallel
+    /// packed, packed, or scalar — the historical default.
+    Auto,
+    /// Compiled tape engine (full pass pipeline, thread-parallel over
+    /// lanes).  A point whose forced fault sites were optimized away
+    /// falls back to [`CampaignEngine::Auto`] for that run, with a
+    /// structured warning on stderr — results stay bit-identical
+    /// either way.
+    Compiled,
+}
+
+/// Fault sites of `faults` the optimized IR can no longer force
+/// faithfully (static overlay nets + scheduled glitch nets whose write
+/// site was folded away).  SEUs always survive — sequential state is
+/// never optimized out.
+fn lost_sites(
+    nl: &Netlist,
+    lib: &Library,
+    pm: &PassManager,
+    faults: &CompiledFaults,
+) -> Result<Vec<usize>> {
+    let mut ir = lower(nl, lib)?;
+    pm.run(&mut ir);
+    let mut lost: Vec<usize> = faults
+        .overlay
+        .static_nets()
+        .filter(|&n| ir.fault_site_lost(n))
+        .chain(
+            faults
+                .program
+                .glitch_nets()
+                .map(|n| n.0 as usize)
+                .filter(|&n| ir.fault_site_lost(n)),
+        )
+        .collect();
+    lost.sort_unstable();
+    lost.dedup();
+    Ok(lost)
+}
+
+/// One full wave-schedule run.  With [`CampaignEngine::Auto`], the
+/// `simulate` stage's interpreter selection applies:
+/// `(lanes > 1, threads > 1)` → thread-parallel packed, `lanes > 1` →
+/// packed, else scalar.  [`CampaignEngine::Compiled`] runs the compiled
+/// tape engine at any lane/thread count, prechecking fault-site
+/// survival first.
 #[allow(clippy::too_many_arguments)] // the simulate-stage argument set + the campaign
 fn run_schedule(
     nl: &Netlist,
     ports: &ColumnPorts,
     lib: &Library,
+    engine: CampaignEngine,
     lanes: usize,
     threads: usize,
     stim: &[Vec<i32>],
@@ -184,6 +233,39 @@ fn run_schedule(
     params: &StdpParams,
     faults: Option<&CompiledFaults>,
 ) -> Result<(Vec<WaveResult>, Activity)> {
+    if engine == CampaignEngine::Compiled {
+        let pm = PassManager::all();
+        let lost = match faults {
+            Some(f) => lost_sites(nl, lib, &pm, f)?,
+            None => Vec::new(),
+        };
+        if lost.is_empty() {
+            let (results, activity, _stats) = run_waves_parallel_compiled(
+                nl, ports, lib, lanes, threads, stim, rands, params, &pm,
+                faults,
+            )?;
+            return Ok((results, activity));
+        }
+        eprintln!(
+            "warning: faults: engine=compiled cannot force {} fault \
+             site(s) (first: net {}): falling back to the interpreter \
+             schedule for this run",
+            lost.len(),
+            lost[0],
+        );
+        return run_schedule(
+            nl,
+            ports,
+            lib,
+            CampaignEngine::Auto,
+            lanes,
+            threads,
+            stim,
+            rands,
+            params,
+            faults,
+        );
+    }
     if lanes > 1 && threads > 1 {
         return match faults {
             Some(f) => run_waves_parallel_faulted(
@@ -198,7 +280,7 @@ fn run_schedule(
         let mut tb = PackedColumnTestbench::new(nl, ports, lib, lanes)?;
         let results = match faults {
             Some(f) => {
-                tb.install_faults(f.overlay.clone());
+                tb.install_faults(f.overlay.clone())?;
                 tb.run_waves_faulted(stim, rands, params, &f.program)
             }
             None => tb.run_waves(stim, rands, params),
@@ -233,11 +315,12 @@ pub fn run_campaign(
     params: &StdpParams,
     lanes: usize,
     threads: usize,
+    engine: CampaignEngine,
 ) -> Result<CampaignReport> {
     let sites = fault_sites(nl, lib);
     let waves = stim.len();
     let (base, base_activity) = run_schedule(
-        nl, ports, lib, lanes, threads, stim, rands, params, None,
+        nl, ports, lib, engine, lanes, threads, stim, rands, params, None,
     )?;
     let base_toggles: u64 = base_activity.toggles.iter().sum();
     let base_fingerprint = fingerprint(&base);
@@ -249,6 +332,7 @@ pub fn run_campaign(
             nl,
             ports,
             lib,
+            engine,
             lanes,
             threads,
             stim,
@@ -350,22 +434,24 @@ mod tests {
             rates: vec![0.0],
             seeds: vec![9],
         };
-        for (lanes, threads) in [(1, 1), (4, 1), (4, 2)] {
-            let rep = run_campaign(
-                &nl, &ports, &lib, &spec, &stim, &rands, &params, lanes,
-                threads,
-            )
-            .unwrap();
-            for p in &rep.points {
-                assert!(
-                    p.bit_identical,
-                    "lanes {lanes} threads {threads} {}",
-                    p.point.class.label()
-                );
-                assert_eq!(p.accuracy, 1.0);
-                assert_eq!(p.weight_l1, 0);
-                assert_eq!(p.toggles, rep.base_toggles);
-                assert_eq!(p.fingerprint, rep.base_fingerprint);
+        for engine in [CampaignEngine::Auto, CampaignEngine::Compiled] {
+            for (lanes, threads) in [(1, 1), (4, 1), (4, 2)] {
+                let rep = run_campaign(
+                    &nl, &ports, &lib, &spec, &stim, &rands, &params,
+                    lanes, threads, engine,
+                )
+                .unwrap();
+                for p in &rep.points {
+                    assert!(
+                        p.bit_identical,
+                        "{engine:?} lanes {lanes} threads {threads} {}",
+                        p.point.class.label()
+                    );
+                    assert_eq!(p.accuracy, 1.0);
+                    assert_eq!(p.weight_l1, 0);
+                    assert_eq!(p.toggles, rep.base_toggles);
+                    assert_eq!(p.fingerprint, rep.base_fingerprint);
+                }
             }
         }
     }
@@ -380,16 +466,22 @@ mod tests {
             rates: vec![0.2],
             seeds: vec![3],
         };
-        let runs: Vec<CampaignReport> = [(1usize, 1usize), (4, 1), (4, 3)]
-            .iter()
-            .map(|&(lanes, threads)| {
-                run_campaign(
-                    &nl, &ports, &lib, &spec, &stim, &rands, &params,
-                    lanes, threads,
-                )
-                .unwrap()
-            })
-            .collect();
+        let runs: Vec<CampaignReport> = [
+            (1usize, 1usize, CampaignEngine::Auto),
+            (4, 1, CampaignEngine::Auto),
+            (4, 3, CampaignEngine::Auto),
+            (4, 1, CampaignEngine::Compiled),
+            (4, 3, CampaignEngine::Compiled),
+        ]
+        .iter()
+        .map(|&(lanes, threads, engine)| {
+            run_campaign(
+                &nl, &ports, &lib, &spec, &stim, &rands, &params, lanes,
+                threads, engine,
+            )
+            .unwrap()
+        })
+        .collect();
         for r in &runs[1..] {
             assert_eq!(r.base_fingerprint, runs[0].base_fingerprint);
             for (a, b) in r.points.iter().zip(&runs[0].points) {
@@ -419,6 +511,7 @@ mod tests {
         };
         let rep = run_campaign(
             &nl, &ports, &lib, &spec, &stim, &rands, &params, 1, 1,
+            CampaignEngine::Auto,
         )
         .unwrap();
         let p = &rep.points[0];

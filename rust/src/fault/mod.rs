@@ -26,7 +26,8 @@ pub mod model;
 pub mod overlay;
 
 pub use campaign::{
-    fingerprint, run_campaign, CampaignReport, CampaignSpec, PointReport,
+    fingerprint, run_campaign, CampaignEngine, CampaignReport, CampaignSpec,
+    PointReport,
 };
 pub use model::{
     compile, compile_with_sites, fault_sites, CampaignPoint, CompiledFaults,

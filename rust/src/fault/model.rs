@@ -143,6 +143,13 @@ impl FaultProgram {
         self.glitches.len() + self.seus.len()
     }
 
+    /// Every net a glitch is scheduled on (any wave/cycle) — the
+    /// compiled-engine precheck walks these against the optimized IR's
+    /// surviving write sites before accepting the program.
+    pub fn glitch_nets(&self) -> impl Iterator<Item = NetId> + '_ {
+        self.glitches.iter().map(|e| e.2)
+    }
+
     /// Glitch pulses scheduled for `(wave, cycle)`.
     pub fn glitches_at(
         &self,

@@ -107,6 +107,16 @@ impl FaultOverlay {
         self.statics += 1;
     }
 
+    /// Nets carrying any static (stuck/delay) mask.  Engines that
+    /// rewrite write sites (the compiled tape) check these against the
+    /// surviving sites before accepting an overlay: a static fault on a
+    /// net whose producer was folded away has nowhere to force.
+    pub fn static_nets(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.stuck0.len()).filter(move |&n| {
+            self.stuck0[n] | self.stuck1[n] | self.delay[n] != 0
+        })
+    }
+
     /// Install a single-tick XOR glitch on `lanes` of `net`; cleared by
     /// [`FaultOverlay::end_tick`].
     pub fn add_glitch(&mut self, net: NetId, lanes: u64) {

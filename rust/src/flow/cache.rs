@@ -4,8 +4,8 @@
 //! everything that can change the output, and nothing that cannot:
 //!
 //! ```text
-//! K_elaborate = fnv("tnn7-cache-v1|stage=elaborate|tech=<fp>|target=<fp>|cfg=<subset>")
-//! K_stage     = fnv("tnn7-cache-v1|stage=<name>|tech=<fp>|nh=<netlist-hash>|cfg=<subset>|prev=<K_prev>")
+//! K_elaborate = fnv("tnn7-cache-v2|stage=elaborate|tech=<fp>|target=<fp>|cfg=<subset>")
+//! K_stage     = fnv("tnn7-cache-v2|stage=<name>|tech=<fp>|nh=<netlist-hash>|cfg=<subset>|prev=<K_prev>")
 //! ```
 //!
 //! * `tech` is a fingerprint of the resolved technology backend — its
@@ -17,7 +17,8 @@
 //!   rather than merely config-addressed.
 //! * `cfg` is the *stage-relevant* config subset ([`config_subset`]):
 //!   the place stage keys on its floorplan/seed knobs, the simulate
-//!   stage on its stimulus/STDP knobs — and deliberately **not** on
+//!   stage on its stimulus/STDP knobs plus the engine/pass-pipeline
+//!   request (`sim_engine`/`sim_passes`) — and deliberately **not** on
 //!   `sim_lanes`/`sim_threads`, which are proven (proptests in
 //!   `rust/tests/proptests.rs`) to never change measured activity.
 //! * `prev` chains the keys, so a stage's key pins down its entire
@@ -61,8 +62,11 @@ use crate::sim::Activity;
 use crate::tech::TechContext;
 
 /// Version tag mixed into every key: bump to invalidate all caches
-/// when key derivation or artifact semantics change.
-pub const KEY_VERSION: &str = "tnn7-cache-v1";
+/// when key derivation or artifact semantics change.  v2: the
+/// simulate subset gained the engine/pass-pipeline request and the
+/// Simulate snapshot carries the engine, passes, and result
+/// fingerprints.
+pub const KEY_VERSION: &str = "tnn7-cache-v2";
 
 /// Stage names the cache knows how to key and snapshot.  Pipelines
 /// containing any other stage bypass the cache entirely.
@@ -263,16 +267,28 @@ pub fn config_subset(stage: &str, ctx: &FlowContext) -> String {
             cfg.place_aspect.to_bits(),
             cfg.place_seed
         ),
+        // The engine/pass request is part of the key even though every
+        // engine is proven bit-identical: a cached entry must replay
+        // under the engine the caller asked for (and record it in its
+        // dump), and pass-pipeline bugs must never hide behind a cache
+        // hit from another pipeline.  The requested engine token is
+        // keyed verbatim (`auto` ≠ `packed`); the pass string is keyed
+        // in canonical form so `all` and `fold,dce,coalesce,resched`
+        // alias the same entry.
         "simulate" => format!(
             "waves={};thr={:016x};brv={};muc={:016x};mub={:016x};\
-             mus={:016x};data={:016x}",
+             mus={:016x};data={:016x};engine={};passes={}",
             cfg.sim_waves,
             cfg.encode_threshold.to_bits(),
             cfg.brv_seed,
             cfg.mu_capture.to_bits(),
             cfg.mu_backoff.to_bits(),
             cfg.mu_search.to_bits(),
-            dataset_fingerprint(&ctx.data)
+            dataset_fingerprint(&ctx.data),
+            cfg.sim_engine,
+            cfg.pass_manager()
+                .map(|pm| pm.canonical())
+                .unwrap_or_else(|_| cfg.sim_passes.clone())
         ),
         // Fault campaigns replay the simulate schedule (same stimulus
         // and STDP knobs) and add the seeded sweep grid.  The grid is
@@ -367,6 +383,9 @@ pub enum StageSnapshot {
         waves: usize,
         lanes: usize,
         threads: usize,
+        engine: String,
+        passes: String,
+        fingerprints: Vec<u64>,
     },
     Power { power: Vec<PowerReport>, rel_power: Vec<RelPower> },
     Area { area: Vec<AreaReport>, rel_area: Vec<f64> },
@@ -396,6 +415,9 @@ impl StageSnapshot {
                 waves: ctx.sim_waves_run,
                 lanes: ctx.sim_lanes_run,
                 threads: ctx.sim_threads_run,
+                engine: ctx.sim_engine_run.clone(),
+                passes: ctx.sim_passes_run.clone(),
+                fingerprints: ctx.sim_fingerprints.clone(),
             }),
             "power" => Some(StageSnapshot::Power {
                 power: ctx.power.clone(),
@@ -451,11 +473,22 @@ impl StageSnapshot {
                 ctx.wires = wires.clone();
                 ctx.wire_timing = wire_timing.clone();
             }
-            StageSnapshot::Simulate { activity, waves, lanes, threads } => {
+            StageSnapshot::Simulate {
+                activity,
+                waves,
+                lanes,
+                threads,
+                engine,
+                passes,
+                fingerprints,
+            } => {
                 ctx.activity = activity.clone();
                 ctx.sim_waves_run = *waves;
                 ctx.sim_lanes_run = *lanes;
                 ctx.sim_threads_run = *threads;
+                ctx.sim_engine_run = engine.clone();
+                ctx.sim_passes_run = passes.clone();
+                ctx.sim_fingerprints = fingerprints.clone();
             }
             StageSnapshot::Power { power, rel_power } => {
                 ctx.power = power.clone();
@@ -811,7 +844,7 @@ mod tests {
     fn fnv_golden_vectors() {
         assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
-        assert_eq!(fnv1a64(b"tnn7-cache-v1"), 0x1d48_a20c_8c3d_d503);
+        assert_eq!(fnv1a64(b"tnn7-cache-v2"), 0x1d48_a30c_8c3d_d6b6);
         assert_eq!(fnv1a64(b"elaborate"), 0xae17_96da_8628_f29a);
     }
 
@@ -835,6 +868,12 @@ mod tests {
              muc=3feccccccccccccd;mub=3fe0000000000000;\
              mus=3fa999999999999a;data="
         ));
+        // Engine request keyed verbatim; pass request in canonical
+        // form (the default `all` expands to the full pipeline).
+        assert!(
+            sim.ends_with(";engine=auto;passes=fold,dce,coalesce,resched"),
+            "{sim}"
+        );
     }
 
     /// Same config in two independently-built contexts ⇒ same keys —
@@ -902,6 +941,44 @@ mod tests {
         assert_eq!(
             downstream_key("simulate", &base, nh, k0),
             downstream_key("simulate", &lanes, nh, k0)
+        );
+
+        // The engine and pass-pipeline requests are keyed: a compiled
+        // entry can never answer a packed request (or vice versa), and
+        // different pipelines never alias.
+        let mut eng = ctx_for(TnnConfig {
+            sim_waves: 2,
+            ..TnnConfig::default()
+        });
+        eng.cfg.sim_engine = "compiled".to_string();
+        assert_ne!(
+            downstream_key("simulate", &base, nh, k0),
+            downstream_key("simulate", &eng, nh, k0)
+        );
+        let mut pass = ctx_for(TnnConfig {
+            sim_waves: 2,
+            ..TnnConfig::default()
+        });
+        pass.cfg.sim_passes = "fold,dce".to_string();
+        assert_ne!(
+            downstream_key("simulate", &base, nh, k0),
+            downstream_key("simulate", &pass, nh, k0)
+        );
+        // ...but spelling the canonical pipeline out aliases `all`.
+        let mut spelled = ctx_for(TnnConfig {
+            sim_waves: 2,
+            ..TnnConfig::default()
+        });
+        spelled.cfg.sim_passes = "fold,dce,coalesce,resched".to_string();
+        assert_eq!(
+            downstream_key("simulate", &base, nh, k0),
+            downstream_key("simulate", &spelled, nh, k0)
+        );
+        // The faults subset embeds the simulate subset, so the engine
+        // request moves the faults key too.
+        assert_ne!(
+            downstream_key("faults", &base, nh, k0),
+            downstream_key("faults", &eng, nh, k0)
         );
     }
 

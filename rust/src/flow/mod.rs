@@ -271,6 +271,17 @@ pub struct FlowContext {
     /// Worker threads used by the last `simulate` run (thread count
     /// never changes the measured activity, only wall time).
     pub sim_threads_run: usize,
+    /// Engine that executed the last `simulate` run (`scalar`,
+    /// `packed`, or `compiled` — the resolved engine, not the
+    /// requested token).
+    pub sim_engine_run: String,
+    /// Canonical pass pipeline of the last `simulate` run (empty for
+    /// interpreter engines, which run the netlist unoptimized).
+    pub sim_passes_run: String,
+    /// Per-unit result fingerprints ([`crate::fault::fingerprint`])
+    /// of the last `simulate` run — the cross-engine equivalence
+    /// witness (identical for every engine/pass pipeline).
+    pub sim_fingerprints: Vec<u64>,
     /// `power` artifacts.
     pub power: Vec<PowerReport>,
     pub rel_power: Vec<RelPower>,
@@ -323,6 +334,9 @@ impl FlowContext {
             sim_waves_run: 0,
             sim_lanes_run: 0,
             sim_threads_run: 0,
+            sim_engine_run: String::new(),
+            sim_passes_run: String::new(),
+            sim_fingerprints: Vec::new(),
             power: Vec::new(),
             rel_power: Vec::new(),
             area: Vec::new(),
@@ -378,6 +392,9 @@ impl FlowContext {
                 self.sim_waves_run = 0;
                 self.sim_lanes_run = 0;
                 self.sim_threads_run = 0;
+                self.sim_engine_run.clear();
+                self.sim_passes_run.clear();
+                self.sim_fingerprints.clear();
                 self.area.clear();
                 self.rel_area.clear();
                 self.exported.clear();

@@ -39,7 +39,7 @@
 use crate::cells::{CellKind, MacroKind};
 use crate::coordinator::activity_bridge::stimulus;
 use crate::error::{Error, Result};
-use crate::fault;
+use crate::fault::{self, CampaignEngine};
 use crate::interop;
 use crate::netlist::column::build_column;
 use crate::netlist::Flavor;
@@ -48,7 +48,8 @@ use crate::ppa::report::ColumnPpa;
 use crate::ppa::{area, power, timing};
 use crate::runtime::json::Json;
 use crate::sim::testbench::{
-    run_waves_parallel, ColumnTestbench, PackedColumnTestbench,
+    run_waves_parallel, run_waves_parallel_compiled, ColumnTestbench,
+    PackedColumnTestbench,
 };
 use crate::tnn::stdp::RandPair;
 use crate::tnn::Lfsr16;
@@ -406,16 +407,22 @@ impl Stage for Place {
 /// Gate-level simulation with encoded-digit stimulus and live STDP,
 /// producing per-instance switching activity.
 ///
-/// With `cfg.sim_lanes == 1` (the default) every wave runs through the
-/// scalar reference engine exactly as the original measurement flow
-/// did.  With `sim_lanes > 1` the word-packed engine drives up to 64
-/// waves per pass ([`PackedColumnTestbench`]); per-lane activity is
-/// aggregated by the engine itself, and each lane carries its own STDP
-/// weight state through its strided share of the wave list (the packed
-/// wave schedule, DESIGN.md §7).  With `cfg.sim_threads > 1` the lane
-/// axis of that schedule is additionally cut across worker threads
-/// ([`run_waves_parallel`]) — the measured activity is bit-identical at
-/// every thread count, only wall time changes (DESIGN.md §8).
+/// `cfg.sim_engine` selects the engine.  The default, `auto`, keeps
+/// the historical branching: with `cfg.sim_lanes == 1` every wave runs
+/// through the scalar reference engine exactly as the original
+/// measurement flow did; with `sim_lanes > 1` the word-packed engine
+/// drives up to 64 waves per pass ([`PackedColumnTestbench`]) — each
+/// lane carries its own STDP weight state through its strided share of
+/// the wave list (the packed wave schedule, DESIGN.md §7) — and with
+/// `cfg.sim_threads > 1` the lane axis of that schedule is additionally
+/// cut across worker threads ([`run_waves_parallel`]).  `scalar` and
+/// `packed` force those engines; `compiled` lowers the netlist through
+/// the optimizing IR pipeline of `cfg.sim_passes` and runs the op-tape
+/// engine ([`run_waves_parallel_compiled`], DESIGN.md §14).  Every
+/// engine is bit-identical at every lane/thread count — the stage
+/// records a result fingerprint per unit as the witness — so the cache
+/// keys on the engine/pass request only to keep replays honest, and
+/// only wall time changes between engines.
 pub struct Simulate;
 
 impl Stage for Simulate {
@@ -437,7 +444,26 @@ impl Stage for Simulate {
         let waves = ctx.cfg.sim_waves;
         let lanes = ctx.cfg.sim_lanes.clamp(1, 64);
         let threads = ctx.cfg.sim_threads.max(1);
+        // Resolve `auto` to what actually runs (the historical
+        // lanes-based branching); explicit tokens force their engine.
+        let engine = match ctx.cfg.sim_engine.as_str() {
+            "auto" => {
+                if lanes > 1 {
+                    "packed"
+                } else {
+                    "scalar"
+                }
+            }
+            other => other,
+        };
+        let pm = ctx.cfg.pass_manager()?;
+        let passes = if engine == "compiled" {
+            pm.canonical()
+        } else {
+            String::new()
+        };
         ctx.activity.clear();
+        ctx.sim_fingerprints.clear();
         for u in &ctx.elaborated {
             let spec = u.plan.spec;
             let stim = stimulus(
@@ -454,8 +480,24 @@ impl Stage for Simulate {
                         .collect()
                 })
                 .collect();
-            if lanes > 1 && threads > 1 {
-                let (_results, activity) = run_waves_parallel(
+            let (results, activity) = match engine {
+                "compiled" => {
+                    let (results, activity, _stats) =
+                        run_waves_parallel_compiled(
+                            &u.netlist,
+                            &u.ports,
+                            ctx.tech.library(),
+                            lanes,
+                            threads,
+                            &stim,
+                            &rands,
+                            &params,
+                            &pm,
+                            None,
+                        )?;
+                    (results, activity)
+                }
+                "packed" if threads > 1 => run_waves_parallel(
                     &u.netlist,
                     &u.ports,
                     ctx.tech.library(),
@@ -464,32 +506,48 @@ impl Stage for Simulate {
                     &stim,
                     &rands,
                     &params,
-                )?;
-                ctx.activity.push(activity);
-            } else if lanes > 1 {
-                let mut tb = PackedColumnTestbench::new(
-                    &u.netlist,
-                    &u.ports,
-                    ctx.tech.library(),
-                    lanes,
-                )?;
-                tb.run_waves(&stim, &rands, &params);
-                ctx.activity.push(tb.activity().clone());
-            } else {
-                let mut tb = ColumnTestbench::new(
-                    &u.netlist,
-                    &u.ports,
-                    ctx.tech.library(),
-                )?;
-                for (s, rand) in stim.iter().zip(&rands) {
-                    tb.run_wave(s, rand, &params);
+                )?,
+                "packed" => {
+                    let mut tb = PackedColumnTestbench::new(
+                        &u.netlist,
+                        &u.ports,
+                        ctx.tech.library(),
+                        lanes,
+                    )?;
+                    let results = tb.run_waves(&stim, &rands, &params);
+                    (results, tb.activity().clone())
                 }
-                ctx.activity.push(tb.activity().clone());
-            }
+                _ => {
+                    let mut tb = ColumnTestbench::new(
+                        &u.netlist,
+                        &u.ports,
+                        ctx.tech.library(),
+                    )?;
+                    let results: Vec<_> = stim
+                        .iter()
+                        .zip(&rands)
+                        .map(|(s, rand)| tb.run_wave(s, rand, &params))
+                        .collect();
+                    (results, tb.activity().clone())
+                }
+            };
+            let fp = fault::fingerprint(&results);
+            println!(
+                "tnn7: simulate: unit={} engine={engine} passes={passes} \
+                 fingerprint={fp:016x}",
+                u.plan.label()
+            );
+            ctx.activity.push(activity);
+            ctx.sim_fingerprints.push(fp);
         }
         ctx.sim_waves_run = waves;
-        ctx.sim_lanes_run = lanes;
-        ctx.sim_threads_run = if lanes > 1 { threads.min(lanes) } else { 1 };
+        ctx.sim_lanes_run = if engine == "scalar" { 1 } else { lanes };
+        ctx.sim_threads_run = match engine {
+            "scalar" => 1,
+            _ => threads.min(lanes.max(1)),
+        };
+        ctx.sim_engine_run = engine.to_string();
+        ctx.sim_passes_run = passes;
         Ok(())
     }
 
@@ -498,10 +556,11 @@ impl Stage for Simulate {
             .activity
             .iter()
             .zip(&ctx.elaborated)
-            .map(|(a, u)| {
+            .enumerate()
+            .map(|(i, (a, u))| {
                 let toggles: u64 = a.toggles.iter().sum();
                 let ticks: u64 = a.clock_ticks.iter().sum();
-                Json::obj(vec![
+                let mut fields = vec![
                     ("label", Json::str(u.plan.label())),
                     ("cycles", Json::int(a.cycles)),
                     ("toggles", Json::int(toggles)),
@@ -510,7 +569,16 @@ impl Stage for Simulate {
                         "mean_toggle_rate",
                         Json::num(a.mean_toggle_rate()),
                     ),
-                ])
+                ];
+                // The engine-invariance witness: identical for every
+                // engine and pass pipeline (tested in ir_passes.rs).
+                if let Some(fp) = ctx.sim_fingerprints.get(i) {
+                    fields.push((
+                        "fingerprint",
+                        Json::str(format!("{fp:016x}")),
+                    ));
+                }
+                Json::obj(fields)
             })
             .collect();
         Json::obj(vec![
@@ -518,6 +586,8 @@ impl Stage for Simulate {
             ("waves", Json::int(ctx.sim_waves_run as u64)),
             ("lanes", Json::int(ctx.sim_lanes_run as u64)),
             ("threads", Json::int(ctx.sim_threads_run as u64)),
+            ("engine", Json::str(ctx.sim_engine_run.clone())),
+            ("passes", Json::str(ctx.sim_passes_run.clone())),
             ("units", Json::Arr(units)),
         ])
     }
@@ -907,6 +977,14 @@ impl Stage for Faults {
         let waves = ctx.cfg.sim_waves;
         let lanes = ctx.cfg.sim_lanes.clamp(1, 64);
         let threads = ctx.cfg.sim_threads.max(1);
+        // `compiled` opts the campaign into the tape engine (with the
+        // interpreter fallback for optimized-away fault sites); every
+        // other token keeps the campaign's own lanes/threads choice.
+        let engine = if ctx.cfg.sim_engine == "compiled" {
+            CampaignEngine::Compiled
+        } else {
+            CampaignEngine::Auto
+        };
         let mut reports = Vec::with_capacity(ctx.elaborated.len());
         for u in &ctx.elaborated {
             let cspec = u.plan.spec;
@@ -934,6 +1012,7 @@ impl Stage for Faults {
                 &params,
                 lanes,
                 threads,
+                engine,
             )?);
         }
         ctx.fault_reports = reports;

@@ -10,12 +10,15 @@
 //!    region tree ride in `#`-comment sidebands that external tools
 //!    skip but [`import_blif`] replays.
 //! 2. **Library models**, one per distinct (cell, clock-domain) pair,
-//!    sorted by model name.  Bodies are enumerated from the simulator's
-//!    own cell semantics ([`crate::sim::eval`]): `.names` ON-set covers
-//!    in minterm order for every output, and per-state-bit `.latch`
-//!    lines plus next-state `.names` covers for sequential cells.  An
-//!    external tool reading the file therefore simulates exactly what
-//!    our engines simulate.
+//!    sorted by model name.  Simple-gate bodies come straight from the
+//!    single-source truth tables ([`crate::sim::tables::comb_truth`] —
+//!    the same ON-sets the eval kernels and the IR lowering use);
+//!    macro and sequential bodies are enumerated from the scalar cell
+//!    semantics ([`crate::sim::eval`]).  Either way: `.names` ON-set
+//!    covers in minterm order for every output, and per-state-bit
+//!    `.latch` lines plus next-state `.names` covers for sequential
+//!    cells.  An external tool reading the file therefore simulates
+//!    exactly what our engines simulate.
 //!
 //! [`import_blif`] parses the top model only (the library bodies are
 //! derived data), reconstructs the `Netlist` instance by instance, and
@@ -30,6 +33,7 @@ use crate::cells::{CellId, CellKind, Library};
 use crate::error::{Error, Result};
 use crate::netlist::{ClockDomain, NetId, Netlist, RegionId};
 use crate::sim::eval::{eval_comb, next_state};
+use crate::sim::tables::comb_truth;
 
 use super::{
     domain_suffix, net_ident, parse_net_ident, sanitize_ident,
@@ -96,11 +100,12 @@ fn ident_list(nets: &[NetId]) -> String {
     s
 }
 
-/// Emit one library model: ports, latches, and truth-table covers
-/// enumerated from the scalar cell semantics.  Support variables are
-/// the cell inputs `i0..` followed by the state bits `st0..`; minterm
-/// bit `j` is variable `j`, rows are the ON-set in increasing minterm
-/// order.
+/// Emit one library model: ports, latches, and truth-table covers.
+/// Simple gates read their ON-set directly from the single-source
+/// tables ([`comb_truth`]); macros and sequential cells are enumerated
+/// from the scalar semantics.  Support variables are the cell inputs
+/// `i0..` followed by the state bits `st0..`; minterm bit `j` is
+/// variable `j`, rows are the ON-set in increasing minterm order.
 fn write_model(s: &mut String, mname: &str, kind: CellKind) {
     let (ci, co, ns) = kind.pins();
     let _ = writeln!(s, ".model {mname}");
@@ -124,6 +129,32 @@ fn write_model(s: &mut String, mname: &str, kind: CellKind) {
     }
     for k in 0..ns {
         let _ = write!(support, "st{k} ");
+    }
+    if ns == 0 {
+        if let Some(t) = comb_truth(kind) {
+            // Single-source path: the shared ON-set, minterm order —
+            // byte-identical to enumerating the eval kernels (which
+            // dispatch through the very same table).
+            debug_assert_eq!(co, 1);
+            debug_assert_eq!(usize::from(t.n_ins), ci);
+            let _ = writeln!(s, ".names {support}o0");
+            for a in 0usize..1 << bits {
+                if t.eval(a) {
+                    let mut row = String::with_capacity(bits + 2);
+                    for j in 0..bits {
+                        row.push(if a >> j & 1 == 1 { '1' } else { '0' });
+                    }
+                    if bits > 0 {
+                        row.push(' ');
+                    }
+                    row.push('1');
+                    s.push_str(&row);
+                    s.push('\n');
+                }
+            }
+            s.push_str(".end\n");
+            return;
+        }
     }
     let mut ins = vec![false; ci];
     let mut state = vec![false; ns];

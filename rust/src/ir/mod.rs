@@ -1,0 +1,415 @@
+//! Word-level netlist IR: the compile step between an elaborated
+//! [`Netlist`] and the tape engine in [`crate::sim::compiled`].
+//!
+//! [`lower`] turns every instance into exactly one *op*: simple
+//! combinational cells become [`Body::Gate`] ops over the closed opcode
+//! set [`Gate`] (derived from the single-source truth tables in
+//! [`crate::sim::tables`]); wide macros and the combinational face of
+//! sequential cells become [`Body::Wide`] ops evaluated through the
+//! packed kernels; sequential commits are recorded separately as
+//! [`SeqOp`]s.  Slots are netlist net ids — the IR never renumbers, so
+//! values, faults and activity stay addressable by `NetId`/instance
+//! exactly as in the interpreters.
+//!
+//! The optimization passes in [`passes`] rewrite the op list while
+//! preserving *observable* semantics bit-for-bit: every net value
+//! between ticks, every spike/weight, and the per-instance
+//! toggle/clock-tick activity counters (DESIGN.md §14).  Constant
+//! folding specializes consumers of tie-rooted constant cones,
+//! dead-cell elimination retires constant ops into a one-shot prologue
+//! (with the same first-tick toggle credit the interpreters produce),
+//! coalescing fuses fanout-free producers into their single consumer
+//! (both outputs still written, both instances still credited), and
+//! rescheduling sorts ops within a level for locality.
+
+pub mod passes;
+
+pub use passes::{PassId, PassManager, PassStats};
+
+use crate::cells::{CellKind, Library};
+use crate::error::Result;
+use crate::netlist::{ClockDomain, Netlist};
+use crate::sim::eval::comb_deps;
+use crate::sim::simulator::{comb_levels, plan};
+use crate::sim::tables::{gate_for, Gate};
+
+/// Operand capacity of a [`Body::Gate`] op (`Nand4`).
+pub const MAX_GATE_INS: usize = 4;
+/// Input capacity of a [`Body::Wide`] op (`StabilizeFunc` has 11).
+pub const MAX_WIDE_INS: usize = 11;
+/// Output capacity of any op (`StdpCaseGen`/`SpikeGen` have 4).
+pub const MAX_OUTS: usize = 4;
+/// Input capacity of a [`SeqOp`] (no sequential cell reads more than 2).
+pub const MAX_SEQ_INS: usize = 2;
+
+/// A simple-gate op: one opcode, up to four operand slots, one output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GateOp {
+    /// Opcode (its arity says how many `ins` are live).
+    pub g: Gate,
+    /// Operand slots (net ids), unused entries zero.
+    pub ins: [u32; MAX_GATE_INS],
+    /// Output slot.
+    pub out: u32,
+    /// Source instance (activity attribution).
+    pub inst: u32,
+}
+
+impl GateOp {
+    /// Live operand slots.
+    pub fn ins(&self) -> &[u32] {
+        &self.ins[..self.g.n_ins()]
+    }
+}
+
+/// A wide op: macro or sequential-cell combinational evaluation through
+/// [`crate::sim::eval::eval_comb_packed`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WideOp {
+    /// Cell kind (drives the packed kernel dispatch).
+    pub kind: CellKind,
+    /// Input pin count.
+    pub n_ins: u8,
+    /// Output pin count.
+    pub n_outs: u8,
+    /// State bit count (0 for pure macros).
+    pub n_state: u8,
+    /// Input slots in pin order.
+    pub ins: [u32; MAX_WIDE_INS],
+    /// Output slots in pin order.
+    pub outs: [u32; MAX_OUTS],
+    /// State word offset (valid when `n_state > 0`).
+    pub state_off: u32,
+    /// Source instance.
+    pub inst: u32,
+}
+
+/// Op body: what one evaluation-phase step computes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Body {
+    /// One simple gate.
+    Gate(GateOp),
+    /// A fanout-free producer fused into its single consumer: the first
+    /// gate executes and writes its output slot, then the second (which
+    /// may read it).  Both writes count toggles against their own
+    /// instances, so fusion is invisible to activity accounting.
+    Fused(GateOp, GateOp),
+    /// A wide macro / sequential-Q evaluation.
+    Wide(WideOp),
+}
+
+/// One comb-phase op at its topological level.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IrOp {
+    /// Combinational depth (ops execute in ascending level order).
+    pub level: u32,
+    /// What to compute.
+    pub body: Body,
+}
+
+impl IrOp {
+    /// Slots whose *combinational* change must re-trigger this op
+    /// (the quiescence-gating dependency set).
+    pub fn dep_slots(&self, out: &mut Vec<u32>) {
+        out.clear();
+        match &self.body {
+            Body::Gate(g) => out.extend_from_slice(g.ins()),
+            Body::Fused(a, b) => {
+                out.extend_from_slice(a.ins());
+                for &s in b.ins() {
+                    if s != a.out {
+                        out.push(s);
+                    }
+                }
+            }
+            Body::Wide(w) => {
+                let deps = comb_deps(w.kind);
+                for (i, &s) in w.ins[..w.n_ins as usize].iter().enumerate() {
+                    if deps >> i & 1 == 1 {
+                        out.push(s);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Slots every input pin reads (comb or not) — the primary-input
+    /// relevance filter.
+    pub fn read_slots(&self, out: &mut Vec<u32>) {
+        out.clear();
+        match &self.body {
+            Body::Gate(g) => out.extend_from_slice(g.ins()),
+            Body::Fused(a, b) => {
+                out.extend_from_slice(a.ins());
+                out.extend_from_slice(b.ins());
+            }
+            Body::Wide(w) => out.extend_from_slice(&w.ins[..w.n_ins as usize]),
+        }
+    }
+
+    /// Output slots this op writes, with their owning instances.
+    pub fn out_slots(&self, out: &mut Vec<(u32, u32)>) {
+        out.clear();
+        match &self.body {
+            Body::Gate(g) => out.push((g.out, g.inst)),
+            Body::Fused(a, b) => {
+                out.push((a.out, a.inst));
+                out.push((b.out, b.inst));
+            }
+            Body::Wide(w) => {
+                for &s in &w.outs[..w.n_outs as usize] {
+                    out.push((s, w.inst));
+                }
+            }
+        }
+    }
+}
+
+/// A sequential commit record (executed after the comb phase settles,
+/// in the instance's clock domain).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeqOp {
+    /// Cell kind (drives `next_state_packed`).
+    pub kind: CellKind,
+    /// Source instance.
+    pub inst: u32,
+    /// Input slots in pin order.
+    pub ins: [u32; MAX_SEQ_INS],
+    /// Input pin count.
+    pub n_ins: u8,
+    /// State word offset.
+    pub state_off: u32,
+    /// State bit count.
+    pub n_state: u8,
+    /// Commit domain (`Aclk` every tick, `Gclk` on gamma edges).
+    pub domain: ClockDomain,
+    /// Level of the instance's comb op (re-armed when state changes).
+    pub level: u32,
+}
+
+/// A constant cell retired by dead-cell elimination: its slot is
+/// written once per reset by the engine prologue, crediting the same
+/// first-tick toggles the interpreters count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConstCell {
+    /// Output slot.
+    pub slot: u32,
+    /// Constant value.
+    pub value: bool,
+    /// Source instance (toggle attribution).
+    pub inst: u32,
+}
+
+/// The word-level IR of one netlist.
+#[derive(Debug, Clone)]
+pub struct WordIr {
+    /// Slot count (== `Netlist::n_nets`; slots are net ids).
+    pub n_slots: usize,
+    /// Instance count (activity arrays).
+    pub n_insts: usize,
+    /// Comb-phase ops, ascending level, stable within a level.
+    pub ops: Vec<IrOp>,
+    /// Level count (`max level + 1`).
+    pub n_levels: usize,
+    /// Sequential commit records.
+    pub seqs: Vec<SeqOp>,
+    /// Constant cells retired into the reset prologue.
+    pub consts: Vec<ConstCell>,
+    /// Per slot: `true` when a forced fault on the slot could no longer
+    /// propagate as in the interpreters — its producer was retired into
+    /// the reset prologue (dce) or its constant value was substituted
+    /// into specialized consumers that no longer read it (fold).
+    /// Engines must refuse static faults and glitches on such slots and
+    /// the caller falls back to an interpreter (DESIGN.md §14).
+    pub folded: Vec<bool>,
+    /// Total packed state words.
+    pub total_state: usize,
+    /// Per instance: state word offset (dense, from the eval plan).
+    pub state_off: Vec<u32>,
+    /// Per instance: state bit count.
+    pub state_bits: Vec<u8>,
+}
+
+impl WordIr {
+    /// Comb-phase op count (the quantity passes reduce).
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when a static fault or glitch on `net` could no longer be
+    /// forced faithfully by the tape (producer retired into the
+    /// prologue, or consumers specialized against its constant value).
+    pub fn fault_site_lost(&self, net: usize) -> bool {
+        self.folded[net]
+    }
+
+    /// Re-sort ops by `(level, original position)` — callers mutate
+    /// levels (coalescing) and rely on this to restore invariants.
+    fn resort(&mut self) {
+        self.ops.sort_by_key(|op| op.level);
+        self.n_levels = self
+            .ops
+            .iter()
+            .map(|op| op.level as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(self.seqs.iter().map(|s| s.level as usize + 1).max().unwrap_or(0));
+    }
+}
+
+/// Lower an elaborated netlist to the unoptimized word-level IR.
+///
+/// One op per instance, at the instance's combinational level, in a
+/// deterministic `(level, instance)` order — the same schedule the
+/// interpreters evaluate, so the unoptimized IR is trivially
+/// bit-identical to them.
+pub fn lower(nl: &Netlist, lib: &Library) -> Result<WordIr> {
+    let levels = comb_levels(nl, lib)?;
+    let p = plan(nl, lib)?;
+    let n_insts = nl.insts.len();
+    let mut ops = Vec::with_capacity(n_insts);
+    let mut seqs = Vec::new();
+    let mut state_bits = vec![0u8; n_insts];
+    for i in 0..n_insts {
+        let kind = lib.cell(nl.insts[i].cell).kind;
+        let (n_in, n_out, n_state) = kind.pins();
+        let ins = nl.inst_ins(i);
+        let outs = nl.inst_outs(i);
+        state_bits[i] = n_state as u8;
+        if n_state > 0 {
+            debug_assert!(n_in <= MAX_SEQ_INS);
+            let mut sin = [0u32; MAX_SEQ_INS];
+            for (k, &n) in ins.iter().enumerate() {
+                sin[k] = n.0;
+            }
+            seqs.push(SeqOp {
+                kind,
+                inst: i as u32,
+                ins: sin,
+                n_ins: n_in as u8,
+                state_off: p.state_off[i],
+                n_state: n_state as u8,
+                domain: nl.insts[i].domain,
+                level: levels[i],
+            });
+        }
+        let body = match gate_for(kind) {
+            Some(g) if n_state == 0 => {
+                debug_assert_eq!(n_out, 1);
+                let mut gin = [0u32; MAX_GATE_INS];
+                for (k, &n) in ins.iter().enumerate() {
+                    gin[k] = n.0;
+                }
+                Body::Gate(GateOp { g, ins: gin, out: outs[0].0, inst: i as u32 })
+            }
+            _ => {
+                debug_assert!(n_in <= MAX_WIDE_INS && n_out <= MAX_OUTS);
+                let mut win = [0u32; MAX_WIDE_INS];
+                for (k, &n) in ins.iter().enumerate() {
+                    win[k] = n.0;
+                }
+                let mut wout = [0u32; MAX_OUTS];
+                for (k, &n) in outs.iter().enumerate() {
+                    wout[k] = n.0;
+                }
+                Body::Wide(WideOp {
+                    kind,
+                    n_ins: n_in as u8,
+                    n_outs: n_out as u8,
+                    n_state: n_state as u8,
+                    ins: win,
+                    outs: wout,
+                    state_off: p.state_off[i],
+                    inst: i as u32,
+                })
+            }
+        };
+        ops.push(IrOp { level: levels[i], body });
+    }
+    let mut ir = WordIr {
+        n_slots: nl.n_nets(),
+        n_insts,
+        ops,
+        n_levels: 0,
+        seqs,
+        consts: Vec::new(),
+        folded: vec![false; nl.n_nets()],
+        total_state: p.total_state as usize,
+        state_off: p.state_off,
+        state_bits,
+    };
+    ir.resort();
+    Ok(ir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::Flavor;
+
+    fn column() -> (Library, Netlist) {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 4, q: 2, theta: 6 };
+        let (nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        (lib, nl)
+    }
+
+    #[test]
+    fn lowering_covers_every_instance_once() {
+        let (lib, nl) = column();
+        let ir = lower(&nl, &lib).unwrap();
+        assert_eq!(ir.n_ops(), nl.insts.len());
+        assert_eq!(ir.n_slots, nl.n_nets());
+        let mut seen = vec![0usize; nl.insts.len()];
+        let mut outs = Vec::new();
+        for op in &ir.ops {
+            op.out_slots(&mut outs);
+            match &op.body {
+                Body::Gate(g) => seen[g.inst as usize] += 1,
+                Body::Fused(..) => unreachable!("no fusion at lowering"),
+                Body::Wide(w) => seen[w.inst as usize] += 1,
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+        // Every sequential instance also has a commit record.
+        let n_seq = (0..nl.insts.len())
+            .filter(|&i| lib.cell(nl.insts[i].cell).kind.pins().2 > 0)
+            .count();
+        assert_eq!(ir.seqs.len(), n_seq);
+    }
+
+    #[test]
+    fn levels_are_ascending_and_deps_precede_ops() {
+        let (lib, nl) = column();
+        let ir = lower(&nl, &lib).unwrap();
+        let mut lvl = 0;
+        for op in &ir.ops {
+            assert!(op.level >= lvl);
+            lvl = op.level;
+        }
+        // A comb dependency must be written at a strictly lower level
+        // (or be a primary input / seq-state slot).
+        let mut writer_level = vec![u32::MAX; ir.n_slots];
+        let mut outs = Vec::new();
+        for op in &ir.ops {
+            op.out_slots(&mut outs);
+            for &(s, _) in &outs {
+                writer_level[s as usize] = op.level;
+            }
+        }
+        let mut deps = Vec::new();
+        for op in &ir.ops {
+            op.dep_slots(&mut deps);
+            for &d in &deps {
+                let wl = writer_level[d as usize];
+                assert!(
+                    wl == u32::MAX || wl < op.level,
+                    "dep slot {d} written at level {wl} >= {}",
+                    op.level
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,542 @@
+//! Named, ordered, individually-toggleable IR optimization passes.
+//!
+//! Every pass preserves observable semantics bit-for-bit — net values
+//! between ticks, spikes/weights, *and* per-instance activity counters
+//! — on every lane/thread count (the per-pass proptests in
+//! `tests/ir_passes.rs` enforce this against the packed interpreter):
+//!
+//! * **fold** — tie/const folding: propagates tie-rooted constants
+//!   through simple gates by truth-table cofactoring over the closed
+//!   opcode set ([`crate::sim::tables`]).  Ops are *specialized*, never
+//!   removed, so every write site survives — but a specialized consumer
+//!   no longer reads the constant slot, so a fault forced onto that
+//!   slot could not reach it any more; every substituted source slot is
+//!   therefore flagged as a lost fault site
+//!   ([`WordIr::fault_site_lost`]) and engines refuse overlays touching
+//!   it.
+//! * **dce** — dead-cell elimination: retires ops that compute a
+//!   constant into the engine's one-shot reset prologue.  The prologue
+//!   credits the producing instance the same first-tick toggles the
+//!   interpreters count (constant cones settle on the first tick after
+//!   reset there too).  Cells whose output genuinely toggles are never
+//!   removed, even when unread — their activity is observable.
+//! * **coalesce** — fanout-free gate coalescing: a simple gate whose
+//!   output is read by exactly one pin of exactly one other simple
+//!   gate is fused into that consumer under a cost model
+//!   ([`FUSE_MAX_INS`]).  Both outputs are still written and credited,
+//!   so values, faults and activity are unchanged; the fused pair just
+//!   evaluates back-to-back with one scheduling step.
+//! * **resched** — level re-scheduling: sorts ops *within* each level
+//!   (levels are dependency-free internally) by opcode and operand
+//!   locality, improving branch-prediction and cache behavior of the
+//!   tape loop.  Pure reordering of independent ops — exact by
+//!   construction.
+
+use crate::error::{Error, Result};
+use crate::sim::tables::{from_truth, reduce, Gate};
+
+use super::{Body, ConstCell, GateOp, WordIr, MAX_GATE_INS};
+
+/// Coalescing cost model: fuse only when the pair reads at most this
+/// many operand slots in total.  Keeps a fused op at one cache line of
+/// slot indices (Inv/Buf into anything, 2-input into up-to-3-input).
+pub const FUSE_MAX_INS: usize = 5;
+
+/// A pass name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassId {
+    /// Tie/const folding.
+    Fold,
+    /// Dead-cell elimination.
+    Dce,
+    /// Fanout-free gate coalescing.
+    Coalesce,
+    /// Within-level re-scheduling.
+    Resched,
+}
+
+impl PassId {
+    /// Every pass, in the canonical `all` order.
+    pub const ALL: [PassId; 4] =
+        [PassId::Fold, PassId::Dce, PassId::Coalesce, PassId::Resched];
+
+    /// Stable token used in configs, CLI flags, cache keys and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            PassId::Fold => "fold",
+            PassId::Dce => "dce",
+            PassId::Coalesce => "coalesce",
+            PassId::Resched => "resched",
+        }
+    }
+
+    /// Parse a pass token (the inverse of [`PassId::label`]).
+    pub fn parse(tok: &str) -> Result<PassId> {
+        match tok {
+            "fold" => Ok(PassId::Fold),
+            "dce" => Ok(PassId::Dce),
+            "coalesce" => Ok(PassId::Coalesce),
+            "resched" => Ok(PassId::Resched),
+            other => Err(Error::config(format!(
+                "unknown pass `{other}` (expected one of fold, dce, \
+                 coalesce, resched, or `all` / `none`)"
+            ))),
+        }
+    }
+}
+
+/// What one pass did to the op list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PassStats {
+    /// Pass token.
+    pub pass: &'static str,
+    /// Comb-phase op count before the pass.
+    pub ops_before: usize,
+    /// Comb-phase op count after the pass.
+    pub ops_after: usize,
+    /// Pass-specific rewrite count: specialized ops (fold), retired
+    /// cells (dce), fused pairs (coalesce), reordered ops (resched).
+    pub rewritten: usize,
+}
+
+/// An ordered, validated pass pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassManager {
+    seq: Vec<PassId>,
+}
+
+impl PassManager {
+    /// The full pipeline (`fold,dce,coalesce,resched`).
+    pub fn all() -> PassManager {
+        PassManager { seq: PassId::ALL.to_vec() }
+    }
+
+    /// The empty pipeline (unoptimized IR).
+    pub fn none() -> PassManager {
+        PassManager { seq: Vec::new() }
+    }
+
+    /// Parse a pipeline spec: `all`, `none`, or a comma-separated
+    /// ordered list of pass names (duplicates rejected).
+    pub fn parse(spec: &str) -> Result<PassManager> {
+        match spec.trim() {
+            "all" => Ok(PassManager::all()),
+            "none" => Ok(PassManager::none()),
+            "" => Err(Error::config(
+                "empty pass pipeline (use `all` or `none`)".to_string(),
+            )),
+            list => {
+                let mut seq = Vec::new();
+                for tok in list.split(',') {
+                    let id = PassId::parse(tok.trim())?;
+                    if seq.contains(&id) {
+                        return Err(Error::config(format!(
+                            "duplicate pass `{}` in pipeline",
+                            id.label()
+                        )));
+                    }
+                    seq.push(id);
+                }
+                Ok(PassManager { seq })
+            }
+        }
+    }
+
+    /// Canonical spec string (stable across parses; cache-key input).
+    pub fn canonical(&self) -> String {
+        if self.seq.is_empty() {
+            "none".to_string()
+        } else {
+            self.seq
+                .iter()
+                .map(|p| p.label())
+                .collect::<Vec<_>>()
+                .join(",")
+        }
+    }
+
+    /// The ordered pass list.
+    pub fn passes(&self) -> &[PassId] {
+        &self.seq
+    }
+
+    /// This pipeline with one pass removed (the sharded backend drops
+    /// `coalesce`: fusion must not cross partition boundaries).
+    pub fn without(&self, id: PassId) -> PassManager {
+        PassManager {
+            seq: self.seq.iter().copied().filter(|&p| p != id).collect(),
+        }
+    }
+
+    /// Run the pipeline in order, returning per-pass statistics.
+    pub fn run(&self, ir: &mut WordIr) -> Vec<PassStats> {
+        let mut stats = Vec::with_capacity(self.seq.len());
+        for &id in &self.seq {
+            let ops_before = ir.n_ops();
+            let rewritten = match id {
+                PassId::Fold => fold(ir),
+                PassId::Dce => dce(ir),
+                PassId::Coalesce => coalesce(ir),
+                PassId::Resched => resched(ir),
+            };
+            stats.push(PassStats {
+                pass: id.label(),
+                ops_before,
+                ops_after: ir.n_ops(),
+                rewritten,
+            });
+        }
+        stats
+    }
+}
+
+/// Is this gate a constant producer?
+fn const_value(g: Gate) -> Option<bool> {
+    match g {
+        Gate::Const0 => Some(false),
+        Gate::Const1 => Some(true),
+        _ => None,
+    }
+}
+
+/// Tie/const folding — specialize simple gates against the constant
+/// slots reaching them.  Ops are processed in level order so constants
+/// propagate through whole tie-rooted cones in one sweep.  Wide and
+/// sequential ops are never folded (state keeps their outputs live),
+/// and lookup failures keep the original op — both are safe fallbacks.
+///
+/// Every constant slot actually substituted into a rewrite is flagged
+/// in `WordIr::folded`: its specialized consumers no longer read it, so
+/// a fault forced there would silently stop propagating.  Flagging
+/// makes engines reject such overlays instead (DESIGN.md §14).
+fn fold(ir: &mut WordIr) -> usize {
+    let n_slots = ir.n_slots;
+    let WordIr { ops, consts, folded, .. } = ir;
+    let mut cv: Vec<Option<bool>> = vec![None; n_slots];
+    for c in consts.iter() {
+        cv[c.slot as usize] = Some(c.value);
+    }
+    let mut rewritten = 0;
+    let mut used: Vec<u32> = Vec::new();
+    for op in ops.iter_mut() {
+        let g = match &mut op.body {
+            Body::Gate(g) => g,
+            _ => continue,
+        };
+        if let Some(v) = const_value(g.g) {
+            cv[g.out as usize] = Some(v);
+            continue;
+        }
+        if !g.ins().iter().any(|&s| cv[s as usize].is_some()) {
+            continue;
+        }
+        let mut t = g.g.truth();
+        let mut ins: Vec<u32> = g.ins().to_vec();
+        used.clear();
+        while let Some(p) =
+            ins.iter().position(|&s| cv[s as usize].is_some())
+        {
+            t = t.cofactor(p, cv[ins[p] as usize].unwrap());
+            used.push(ins[p]);
+            ins.remove(p);
+        }
+        t = reduce(t, &mut ins);
+        if let Some((ng, perm)) = from_truth(&t) {
+            let mut nins = [0u32; MAX_GATE_INS];
+            for (k, &p) in perm.iter().take(ng.n_ins()).enumerate() {
+                nins[k] = ins[p];
+            }
+            g.g = ng;
+            g.ins = nins;
+            rewritten += 1;
+            for &s in &used {
+                folded[s as usize] = true;
+            }
+            if let Some(v) = const_value(ng) {
+                cv[g.out as usize] = Some(v);
+            }
+        }
+    }
+    rewritten
+}
+
+/// Dead-cell elimination — retire constant ops into the reset
+/// prologue.  Only `Const0`/`Const1` gate ops qualify: anything whose
+/// output can toggle stays, because its toggles are observable.
+fn dce(ir: &mut WordIr) -> usize {
+    let mut removed = 0;
+    let consts = &mut ir.consts;
+    let folded = &mut ir.folded;
+    ir.ops.retain(|op| {
+        let g = match &op.body {
+            Body::Gate(g) => g,
+            _ => return true,
+        };
+        match const_value(g.g) {
+            Some(value) => {
+                consts.push(ConstCell { slot: g.out, value, inst: g.inst });
+                folded[g.out as usize] = true;
+                removed += 1;
+                false
+            }
+            None => true,
+        }
+    });
+    removed
+}
+
+/// Fanout-free gate coalescing — fuse a simple gate read by exactly
+/// one pin of exactly one other simple gate into that consumer, when
+/// the pair's total operand count fits the cost model.  The producer's
+/// write moves to the consumer's level (still inside the same tick's
+/// settle, before anything can observe it — slots are only read
+/// between ticks or by this very consumer).
+fn coalesce(ir: &mut WordIr) -> usize {
+    let n = ir.ops.len();
+    let mut reads = vec![0u32; ir.n_slots];
+    let mut reader_op = vec![u32::MAX; ir.n_slots];
+    let mut buf = Vec::new();
+    for (oi, op) in ir.ops.iter().enumerate() {
+        op.read_slots(&mut buf);
+        for &s in &buf {
+            reads[s as usize] += 1;
+            reader_op[s as usize] = oi as u32;
+        }
+    }
+    // Sequential commit reads block fusion of their producer: the
+    // consumer must be a comb op, not a state commit.
+    for s in &ir.seqs {
+        for &slot in &s.ins[..s.n_ins as usize] {
+            reads[slot as usize] += 1;
+            reader_op[slot as usize] = u32::MAX;
+        }
+    }
+    let mut removed = vec![false; n];
+    let mut fused = 0;
+    for oi in 0..n {
+        let g = match &ir.ops[oi].body {
+            Body::Gate(g) => *g,
+            _ => continue,
+        };
+        if const_value(g.g).is_some() {
+            continue; // dce's job; fusing a constant wins nothing
+        }
+        if reads[g.out as usize] != 1 {
+            continue;
+        }
+        let ci = reader_op[g.out as usize];
+        if ci == u32::MAX || removed[ci as usize] {
+            continue;
+        }
+        let h = match &ir.ops[ci as usize].body {
+            Body::Gate(h) => *h,
+            _ => continue,
+        };
+        if g.g.n_ins() + h.g.n_ins() > FUSE_MAX_INS {
+            continue;
+        }
+        let level = ir.ops[ci as usize].level;
+        ir.ops[ci as usize].body = Body::Fused(g, h);
+        ir.ops[ci as usize].level = level;
+        removed[oi] = true;
+        fused += 1;
+    }
+    if fused > 0 {
+        let mut keep = removed.iter().map(|&r| !r);
+        ir.ops.retain(|_| keep.next().unwrap());
+    }
+    fused
+}
+
+/// Within-level re-scheduling — stable-sort each level's ops by body
+/// shape, opcode and first operand slot.  Groups identical opcodes for
+/// branch prediction and walks operands in roughly ascending slot
+/// order for cache locality.
+fn resched(ir: &mut WordIr) -> usize {
+    fn key(op: &super::IrOp) -> (u8, u8, u32) {
+        match &op.body {
+            Body::Gate(g) => (0, g.g as u8, g.ins[0]),
+            Body::Fused(a, _) => (1, a.g as u8, a.ins[0]),
+            Body::Wide(w) => (2, w.n_ins, w.ins[0]),
+        }
+    }
+    let mut moved = 0;
+    let mut s = 0;
+    while s < ir.ops.len() {
+        let lvl = ir.ops[s].level;
+        let mut e = s;
+        while e < ir.ops.len() && ir.ops[e].level == lvl {
+            e += 1;
+        }
+        let before: Vec<(u8, u8, u32)> = ir.ops[s..e].iter().map(key).collect();
+        ir.ops[s..e].sort_by_key(key);
+        for (i, op) in ir.ops[s..e].iter().enumerate() {
+            if key(op) != before[i] {
+                moved += 1;
+            }
+        }
+        s = e;
+    }
+    moved
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Library;
+    use crate::ir::lower;
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::{Flavor, NetId};
+
+    fn column_ir() -> WordIr {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 4, q: 2, theta: 6 };
+        let (nl, _) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+        lower(&nl, &lib).unwrap()
+    }
+
+    #[test]
+    fn parse_accepts_all_none_and_ordered_lists() {
+        assert_eq!(PassManager::parse("all").unwrap().canonical(), "fold,dce,coalesce,resched");
+        assert_eq!(PassManager::parse("none").unwrap().canonical(), "none");
+        assert_eq!(
+            PassManager::parse(" dce , fold ").unwrap().canonical(),
+            "dce,fold"
+        );
+        assert!(PassManager::parse("fold,fold").is_err());
+        assert!(PassManager::parse("inline").is_err());
+        assert!(PassManager::parse("").is_err());
+    }
+
+    #[test]
+    fn without_drops_exactly_one_pass() {
+        let pm = PassManager::all().without(PassId::Coalesce);
+        assert_eq!(pm.canonical(), "fold,dce,resched");
+    }
+
+    #[test]
+    fn full_pipeline_reduces_ops_and_reports_stats() {
+        let mut ir = column_ir();
+        let before = ir.n_ops();
+        let stats = PassManager::all().run(&mut ir);
+        assert_eq!(stats.len(), 4);
+        for s in &stats {
+            assert!(s.ops_after <= s.ops_before, "{}", s.pass);
+        }
+        // The column has tie fanout: dce must retire at least the tie
+        // cells themselves, and coalescing must find fanout-free pairs.
+        let dce = stats.iter().find(|s| s.pass == "dce").unwrap();
+        assert!(dce.rewritten >= 2, "ties retired: {}", dce.rewritten);
+        assert!(ir.n_ops() < before);
+        assert_eq!(ir.consts.len(), dce.rewritten);
+        // Retired slots are flagged as lost fault sites.
+        for c in &ir.consts {
+            assert!(ir.fault_site_lost(c.slot as usize));
+        }
+    }
+
+    #[test]
+    fn fold_specializes_but_never_removes() {
+        let mut ir = column_ir();
+        let before = ir.n_ops();
+        let stats = PassManager::parse("fold").unwrap().run(&mut ir);
+        assert_eq!(ir.n_ops(), before);
+        assert!(stats[0].rewritten > 0);
+        assert!(ir.consts.is_empty());
+        // Substituted constant slots (the ties at least) are flagged:
+        // their specialized consumers no longer read them, so a fault
+        // forced there could not propagate.
+        assert!(ir.folded.iter().any(|&f| f));
+        // But every op still exists and every slot is still written:
+        // no flag on a slot a surviving op writes *and* others read.
+        let mut outs = Vec::new();
+        let mut writers = vec![false; ir.n_slots];
+        for op in &ir.ops {
+            op.out_slots(&mut outs);
+            for &(s, _) in &outs {
+                writers[s as usize] = true;
+            }
+        }
+        for c in &ir.consts {
+            writers[c.slot as usize] = true;
+        }
+        for (s, &f) in ir.folded.iter().enumerate() {
+            if f {
+                assert!(writers[s], "flagged slot {s} lost its writer");
+            }
+        }
+    }
+
+    #[test]
+    fn coalesce_respects_the_cost_model() {
+        let mut ir = column_ir();
+        PassManager::parse("coalesce").unwrap().run(&mut ir);
+        for op in &ir.ops {
+            if let Body::Fused(a, b) = &op.body {
+                assert!(a.g.n_ins() + b.g.n_ins() <= FUSE_MAX_INS);
+                // The internal net stays written (site preservation).
+                assert_ne!(a.out, b.out);
+            }
+        }
+    }
+
+    #[test]
+    fn seq_fed_producers_are_never_fused() {
+        let mut ir = column_ir();
+        let seq_ins: Vec<u32> = ir
+            .seqs
+            .iter()
+            .flat_map(|s| s.ins[..s.n_ins as usize].to_vec())
+            .collect();
+        PassManager::parse("coalesce").unwrap().run(&mut ir);
+        let mut outs = Vec::new();
+        for op in &ir.ops {
+            if let Body::Fused(a, _) = &op.body {
+                assert!(
+                    !seq_ins.contains(&a.out),
+                    "fused producer feeds a sequential commit"
+                );
+            }
+            op.out_slots(&mut outs);
+        }
+    }
+
+    #[test]
+    fn resched_keeps_levels_and_op_multiset() {
+        let mut ir = column_ir();
+        let mut before: Vec<(u32, String)> = ir
+            .ops
+            .iter()
+            .map(|op| (op.level, format!("{:?}", op.body)))
+            .collect();
+        PassManager::parse("resched").unwrap().run(&mut ir);
+        let mut after: Vec<(u32, String)> = ir
+            .ops
+            .iter()
+            .map(|op| (op.level, format!("{:?}", op.body)))
+            .collect();
+        before.sort();
+        after.sort();
+        assert_eq!(before, after);
+        let mut lvl = 0;
+        for op in &ir.ops {
+            assert!(op.level >= lvl);
+            lvl = op.level;
+        }
+    }
+
+    #[test]
+    fn net_ids_stay_stable_through_the_pipeline() {
+        let mut ir = column_ir();
+        let n_slots = ir.n_slots;
+        PassManager::all().run(&mut ir);
+        let mut buf = Vec::new();
+        for op in &ir.ops {
+            op.read_slots(&mut buf);
+            for &s in &buf {
+                assert!((s as usize) < n_slots);
+            }
+        }
+        let _ = NetId(0); // slots are net ids by construction
+    }
+}

@@ -18,9 +18,16 @@
 //! * [`sim`] — levelized cycle-accurate two-clock gate-level simulation with
 //!   per-net toggle counting (the switching-activity source for power), as a
 //!   scalar reference engine, a bit-identical word-packed engine that
-//!   evaluates 64 stimulus lanes per tick, and a thread-parallel sharded
+//!   evaluates 64 stimulus lanes per tick, a thread-parallel sharded
 //!   engine running one quiescence-gated shard per worker over the
-//!   column-aligned partition of [`netlist::partition`].
+//!   column-aligned partition of [`netlist::partition`], and a compiled
+//!   tape engine executing the optimized IR of [`ir`].
+//! * [`ir`] — the word-level netlist IR and optimizing pass framework
+//!   ([`ir::PassManager`]: tie/const folding, dead-cell elimination,
+//!   fanout-free coalescing, level re-scheduling), lowered from the
+//!   elaborated netlist and compiled to the straight-line op tape of
+//!   [`sim::compiled`] (`--engine compiled --passes ...`;
+//!   DESIGN.md §14).
 //! * [`ppa`] — STA, activity-based power, placement-model area, EDP, and the
 //!   45nm↔7nm scaling model (Tables I & II, Figs. 14–18).
 //! * [`phys`] — physical design: floorplanning (die outline, cell rows,
@@ -82,6 +89,7 @@ pub mod error;
 pub mod fault;
 pub mod flow;
 pub mod interop;
+pub mod ir;
 pub mod netlist;
 pub mod phys;
 pub mod ppa;

@@ -45,7 +45,10 @@ use tnn7::ppa::scaling;
 use tnn7::ppa::ColumnPpa;
 use tnn7::runtime::json::Json;
 use tnn7::serve::{ServeConfig, Server};
-use tnn7::sim::{PackedSimulator, ShardedSimulator, Simulator};
+use tnn7::ir::PassManager;
+use tnn7::sim::{
+    CompiledSimulator, PackedSimulator, ShardedSimulator, Simulator,
+};
 use tnn7::tech::{self, TechContext, TechRegistry};
 use tnn7::tnn::stdp::{RandPair, StdpParams};
 use tnn7::tnn::INF;
@@ -160,6 +163,7 @@ SUBCOMMANDS:
   flow --target F (--col PxQ | --proto) [--tech T1,T2,..] [--pipeline S,..]
        [--place] [--util U1,U2,..] [--aspect A1,A2,..] [--export]
        [--dump-dir D] [--lanes N] [--threads N] [--smoke]
+       [--engine auto|scalar|packed|compiled] [--passes P1,P2,..]
                               run the staged design flow on one or more
                               technology backends (names or .lib paths),
                               dump per-stage JSON; --targets A,B,.. sweeps
@@ -173,7 +177,8 @@ SUBCOMMANDS:
                               structural Verilog files (re-import checked
                               bit-identical); --vcd also records a seeded
                               packed wave run per unit (DESIGN.md §12)
-  replay --vcd FILE --col PxQ [--target F] [--engine scalar|packed|sharded]
+  replay --vcd FILE --col PxQ [--target F]
+         [--engine scalar|packed|sharded|compiled|compiled-sharded]
          [--threads N] [--out FILE]
                               re-ingest a recorded VCD as stimulus, re-run
                               it on any engine, and assert toggle counts
@@ -280,6 +285,16 @@ OPTIONS:
                            for --targets sweeps; activity and PPA numbers
                            are identical at every thread count
                            (default from config; DESIGN.md §8)
+  --engine E               simulation engine: auto | scalar | packed |
+                           compiled (default auto: scalar at 1 lane, else
+                           packed; compiled lowers the netlist through the
+                           optimizing IR passes into a flat op tape —
+                           results are bit-identical on every engine;
+                           DESIGN.md §14)
+  --passes P1,P2,..        IR pass pipeline for --engine compiled: `all`,
+                           `none`, or a subset of fold,dce,coalesce,
+                           resched (default all; selection only — the
+                           run order is fixed)
   --config FILE            tnn7.toml configuration
 
 {}{}",
@@ -354,6 +369,14 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
             anyhow::bail!("--threads must be >= 1, got {threads}");
         }
         cfg.sim_threads = threads;
+    }
+    if let Some(e) = args.opt("--engine")? {
+        cfg.sim_engine = e;
+        cfg.validate_engine()?;
+    }
+    if let Some(p) = args.opt("--passes")? {
+        cfg.sim_passes = p;
+        cfg.pass_manager()?;
     }
     args.finish()?;
     if smoke {
@@ -959,9 +982,13 @@ OPTIONS:
                            (default std; a different flavour than the
                            recording exercises cross-flavour equivalence)
   --tech T                 technology backend name or .lib path
-  --engine E               scalar | packed | sharded (default packed;
-                           scalar accepts 1-lane recordings only)
-  --threads N              shard workers for --engine sharded (default 2)
+  --engine E               scalar | packed | sharded | compiled |
+                           compiled-sharded (default packed; scalar
+                           accepts 1-lane recordings only; the compiled
+                           engines run the optimized op tape and must
+                           stay byte-identical too, DESIGN.md §14)
+  --threads N              shard workers for the sharded engines
+                           (default 2)
   --out FILE               write the re-recorded VCD
   --config FILE            tnn7.toml configuration
 "
@@ -1037,8 +1064,24 @@ fn cmd_replay(args: &mut Args) -> anyhow::Result<()> {
                 ShardedSimulator::new(&nl, lib, doc.lanes, threads.max(1), &[])?;
             interop::record_engine(&mut sim, &nl, &ticks)
         }
+        "compiled" => {
+            let mut sim = CompiledSimulator::new(&nl, lib, doc.lanes)?;
+            interop::record_engine(&mut sim, &nl, &ticks)
+        }
+        "compiled-sharded" => {
+            let (mut sim, _stats) = ShardedSimulator::new_compiled(
+                &nl,
+                lib,
+                doc.lanes,
+                threads.max(1),
+                &[],
+                &PassManager::all(),
+            )?;
+            interop::record_engine(&mut sim, &nl, &ticks)
+        }
         other => anyhow::bail!(
-            "unknown engine `{other}` (scalar | packed | sharded)"
+            "unknown engine `{other}` (scalar | packed | sharded | \
+             compiled | compiled-sharded)"
         ),
     };
 
@@ -1109,6 +1152,11 @@ OPTIONS:
                            2..64 = packed; results are engine-invariant)
   --threads N              worker threads for the packed wave schedule;
                            results are identical at every thread count
+  --engine E               auto | scalar | packed | compiled: `compiled`
+                           runs campaign points on the optimized op tape,
+                           falling back to the interpreters for points
+                           whose fault sites the passes optimized away
+                           (DESIGN.md §14)
   --dump-dir DIR           write the stage artifacts, including
                            NN_faults.BACKEND.json
   --cache-dir DIR          consult the content-addressed stage cache
@@ -1155,6 +1203,10 @@ fn cmd_faults(args: &mut Args) -> anyhow::Result<()> {
             anyhow::bail!("--threads must be >= 1, got {threads}");
         }
         cfg.sim_threads = threads;
+    }
+    if let Some(e) = args.opt("--engine")? {
+        cfg.sim_engine = e;
+        cfg.validate_engine()?;
     }
     args.finish()?;
 

@@ -4,6 +4,7 @@
 //! ```json
 //! {"target": "custom", "tech": "asap7-tnn7", "col": "64x8",
 //!  "waves": 8, "lanes": 4, "threads": 2,
+//!  "engine": "compiled", "passes": "all",
 //!  "place": true, "util": 0.7, "aspect": 1.0}
 //! ```
 //!
@@ -37,6 +38,13 @@ pub struct FlowQuery {
     pub waves: usize,
     pub lanes: usize,
     pub threads: usize,
+    /// Requested simulation engine (`auto`/`scalar`/`packed`/
+    /// `compiled`) — part of the request identity, because the stage
+    /// dump records which engine produced it.
+    pub engine: String,
+    /// Requested IR pass pipeline (compiled engine only; canonical
+    /// form is the identity, so `all` aliases the spelled-out list).
+    pub passes: String,
     pub place: bool,
     pub util: f64,
     pub aspect: f64,
@@ -57,9 +65,9 @@ impl FlowQuery {
                 ))
             }
         };
-        const KNOWN: [&str; 10] = [
+        const KNOWN: [&str; 12] = [
             "target", "tech", "col", "proto", "waves", "lanes",
-            "threads", "place", "util", "aspect",
+            "threads", "engine", "passes", "place", "util", "aspect",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -142,6 +150,24 @@ impl FlowQuery {
         }
         let threads = get_count("threads", d.sim_threads)?;
 
+        let engine = match j.get("engine") {
+            Some(v) => v.as_str()?.to_string(),
+            None => d.sim_engine.clone(),
+        };
+        let passes = match j.get("passes") {
+            Some(v) => v.as_str()?.to_string(),
+            None => d.sim_passes.clone(),
+        };
+        // Reuse the config-load validators so the daemon rejects the
+        // exact same tokens the CLI would.
+        let probe = TnnConfig {
+            sim_engine: engine.clone(),
+            sim_passes: passes.clone(),
+            ..TnnConfig::default()
+        };
+        probe.validate_engine()?;
+        probe.pass_manager()?;
+
         let place = match j.get("place") {
             Some(Json::Bool(b)) => *b,
             Some(_) => {
@@ -175,6 +201,8 @@ impl FlowQuery {
             waves,
             lanes,
             threads,
+            engine,
+            passes,
             place,
             util,
             aspect,
@@ -197,6 +225,8 @@ impl FlowQuery {
             sim_waves: self.waves,
             sim_lanes: self.lanes,
             sim_threads: self.threads,
+            sim_engine: self.engine.clone(),
+            sim_passes: self.passes.clone(),
             place: self.place,
             place_util: self.util,
             place_aspect: self.aspect,
@@ -226,6 +256,15 @@ impl FlowQuery {
             Geometry::Prototype(_) => h.u8(1),
         }
         h.usize(self.waves);
+        // Engine verbatim, passes canonical — mirroring the stage
+        // cache's simulate subset, so dedup and cache agree on what
+        // counts as "the same request".
+        h.str(&self.engine);
+        h.str(
+            &crate::ir::PassManager::parse(&self.passes)
+                .map(|pm| pm.canonical())
+                .unwrap_or_else(|_| self.passes.clone()),
+        );
         h.u8(self.place as u8);
         h.f64(self.util);
         h.f64(self.aspect);
@@ -260,6 +299,8 @@ mod tests {
             _ => panic!("expected column geometry"),
         }
         assert_eq!((q.waves, q.lanes, q.threads), (2, 4, 2));
+        assert_eq!(q.engine, "auto");
+        assert_eq!(q.passes, "all");
         assert!(q.place);
         let cfg = q.config();
         assert_eq!(cfg.sim_waves, 2);
@@ -316,6 +357,27 @@ mod tests {
             FlowQuery::parse(r#"{"target": "std", "util": 1.5}"#, &r)
                 .is_err()
         );
+        // Engine/pass tokens are validated like the CLI validates
+        // them.
+        assert!(FlowQuery::parse(
+            r#"{"target": "std", "engine": "warp-drive"}"#,
+            &r
+        )
+        .is_err());
+        assert!(FlowQuery::parse(
+            r#"{"target": "std", "passes": "fold,fold"}"#,
+            &r
+        )
+        .is_err());
+        let q = FlowQuery::parse(
+            r#"{"target": "std", "engine": "compiled",
+                "passes": "fold,dce"}"#,
+            &r,
+        )
+        .unwrap();
+        assert_eq!(q.engine, "compiled");
+        assert_eq!(q.passes, "fold,dce");
+        assert_eq!(q.config().sim_engine, "compiled");
         // Not an object / not JSON.
         assert!(FlowQuery::parse("[1,2]", &r).is_err());
         assert!(FlowQuery::parse("not json", &r).is_err());
@@ -346,6 +408,10 @@ mod tests {
             r#"{"target": "std", "col": "8x4", "waves": 2,
                 "tech": "n45-projected"}"#,
             r#"{"target": "std", "proto": true, "waves": 2}"#,
+            r#"{"target": "std", "col": "8x4", "waves": 2,
+                "engine": "compiled"}"#,
+            r#"{"target": "std", "col": "8x4", "waves": 2,
+                "passes": "fold,dce"}"#,
         ] {
             let q = FlowQuery::parse(different, &r).unwrap();
             assert_ne!(
@@ -362,5 +428,15 @@ mod tests {
         )
         .unwrap();
         assert_eq!(base.fingerprint(), alias.fingerprint());
+
+        // The pass pipeline hashes in canonical form: `all` and the
+        // spelled-out full pipeline are one identity.
+        let spelled = FlowQuery::parse(
+            r#"{"target": "std", "col": "8x4", "waves": 2,
+                "passes": "fold,dce,coalesce,resched"}"#,
+            &r,
+        )
+        .unwrap();
+        assert_eq!(base.fingerprint(), spelled.fingerprint());
     }
 }

@@ -133,11 +133,44 @@ struct ServerState {
     flow_micros: AtomicU64,
     /// Per-stage (runs, total µs) aggregates across all requests.
     stage_times: Mutex<BTreeMap<&'static str, (u64, u64)>>,
+    /// Requests per requested engine kind (`auto`/`scalar`/`packed`/
+    /// `compiled`), counting dedup joins too — what clients asked for.
+    engine_requests: Mutex<BTreeMap<String, u64>>,
+    /// Requests per canonical pass pipeline (so `all` and the
+    /// spelled-out list aggregate into one row).
+    pass_requests: Mutex<BTreeMap<String, u64>>,
     debug_flow_delay_ms: u64,
 }
 
 impl ServerState {
+    fn count_engine(&self, query: &FlowQuery) {
+        *self
+            .engine_requests
+            .lock()
+            .unwrap()
+            .entry(query.engine.clone())
+            .or_insert(0) += 1;
+        let canonical = crate::ir::PassManager::parse(&query.passes)
+            .map(|pm| pm.canonical())
+            .unwrap_or_else(|_| query.passes.clone());
+        *self
+            .pass_requests
+            .lock()
+            .unwrap()
+            .entry(canonical)
+            .or_insert(0) += 1;
+    }
+
     fn stats_json(&self) -> Json {
+        let count_map = |m: &Mutex<BTreeMap<String, u64>>| {
+            Json::Obj(
+                m.lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::int(*v)))
+                    .collect(),
+            )
+        };
         let stages = {
             let times = self.stage_times.lock().unwrap();
             Json::Obj(
@@ -182,6 +215,8 @@ impl ServerState {
                 Json::int(self.flow_micros.load(Ordering::Relaxed)),
             ),
             ("stages", stages),
+            ("engine_requests", count_map(&self.engine_requests)),
+            ("pass_requests", count_map(&self.pass_requests)),
             ("cache", self.cache.stats_json()),
             (
                 "inflight",
@@ -223,6 +258,8 @@ impl Server {
             dedup_joins: AtomicU64::new(0),
             flow_micros: AtomicU64::new(0),
             stage_times: Mutex::new(BTreeMap::new()),
+            engine_requests: Mutex::new(BTreeMap::new()),
+            pass_requests: Mutex::new(BTreeMap::new()),
             debug_flow_delay_ms: cfg.debug_flow_delay_ms,
         });
 
@@ -390,6 +427,7 @@ fn handle_flow(state: &ServerState, body: &str) -> Response {
         Ok(q) => q,
         Err(e) => return Response::error(400, &e.to_string()),
     };
+    state.count_engine(&query);
     let fp = query.fingerprint();
 
     // Dedup: one leader computes, identical concurrent queries join

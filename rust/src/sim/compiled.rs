@@ -1,0 +1,1019 @@
+//! The compiled tape engine: the optimized word-level IR of
+//! [`crate::ir`] flattened into a straight-line op tape.
+//!
+//! [`Tape`] copies everything it needs out of a [`WordIr`] — op list,
+//! level schedule, dependency CSR, sequential commit records, retired
+//! constants — into a self-contained (lifetime-free) structure, then
+//! executes ticks with the exact discipline of the interpreters
+//! (DESIGN.md §14):
+//!
+//! * **Branch-free gate ops** — every [`Body::Gate`] /
+//!   [`Body::Fused`] step is one [`eval_gate_word`] dispatch over up to
+//!   four `u64` operand words; wide macros and sequential-Q evaluations
+//!   go through the same packed kernels the interpreters use.
+//! * **Quiescence gating** — ops are grouped by combinational level
+//!   with per-level dirty flags and a net→reader-level CSR, exactly as
+//!   in the sharded engine's parts: a level whose combinational inputs
+//!   and state did not change is skipped, which is exact (unchanged
+//!   inputs reproduce the stored outputs and zero toggles).
+//! * **Reset prologue** — constants retired by dead-cell elimination
+//!   are written once on the first tick after reset, crediting the
+//!   producing instance `popcount((old ^ new) & mask)` toggles — the
+//!   same first-tick settle the interpreters count for constant cones.
+//! * **Activity** — toggles are counted per instance with the shared
+//!   `popcount((old ^ new) & mask)` rule at every (forced) write, and
+//!   `clock_ticks` per commit; a compiled run's [`Activity`] is
+//!   bit-identical to the packed engine's.
+//! * **Fault-site preservation** — the fault overlay forces values at
+//!   the tape's write sites just like the interpreters.  Slots whose
+//!   write site was optimized away ([`WordIr::fault_site_lost`]) can no
+//!   longer be forced faithfully: [`CompiledSimulator::install_faults`]
+//!   returns an error for static faults on them (callers fall back to
+//!   an interpreter), and scheduling a glitch there panics — campaign
+//!   drivers precheck via [`CompiledSimulator::fault_site_lost`].
+//!
+//! [`CompiledSimulator`] wraps one full-netlist tape behind the
+//! [`SimEngine`] trait; the sharded engine builds one part-filtered
+//! tape per shard through [`Tape::for_part`].
+
+use crate::cells::Library;
+use crate::error::{Error, Result};
+use crate::fault::{FaultOverlay, SeuFlip};
+use crate::ir::{
+    lower, Body, ConstCell, GateOp, PassManager, PassStats, WideOp, WordIr,
+    MAX_SEQ_INS,
+};
+use crate::netlist::{ClockDomain, NetId, Netlist};
+
+use super::activity::Activity;
+use super::engine::SimEngine;
+use super::eval::{eval_comb_packed, next_state_packed};
+use super::packed::MAX_LANES;
+use super::tables::eval_gate_word;
+
+/// One flattened tape step (a copy of the IR op body).
+#[derive(Debug, Clone)]
+enum TapeOp {
+    /// One simple gate.
+    Gate(GateOp),
+    /// A fused producer/consumer pair (both outputs written).
+    Fused(GateOp, GateOp),
+    /// A wide macro / sequential-Q evaluation.
+    Wide(WideOp),
+}
+
+/// One sequential commit record of the tape.
+#[derive(Debug, Clone)]
+struct TapeSeq {
+    kind: crate::cells::CellKind,
+    inst: u32,
+    ins: [u32; MAX_SEQ_INS],
+    n_ins: u8,
+    state_off: u32,
+    n_state: u8,
+    domain: ClockDomain,
+    /// Level bucket of the instance's comb op (re-armed on state change).
+    bucket: u32,
+}
+
+fn mask_for(lanes: usize) -> u64 {
+    if lanes >= MAX_LANES {
+        !0
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
+/// Mark every level bucket that combinationally reads `slot` as dirty.
+fn mark(dirty: &mut [bool], off: &[u32], lvls: &[u32], slot: usize) {
+    for &b in &lvls[off[slot] as usize..off[slot + 1] as usize] {
+        dirty[b as usize] = true;
+    }
+}
+
+/// A compiled, self-contained, quiescence-gated op tape.
+///
+/// Holds owned copies of everything a tick needs (no netlist borrow),
+/// so tapes can be built once from a shared [`WordIr`] and moved into
+/// worker threads.  Slot indices are netlist net ids throughout.
+pub struct Tape {
+    /// Flattened ops, grouped by ascending level bucket.
+    ops: Vec<TapeOp>,
+    /// Op-range boundaries per level bucket (`len = n_buckets + 1`).
+    level_start: Vec<u32>,
+    /// Per-bucket dirty flags; a clean bucket is skipped wholesale.
+    dirty: Vec<bool>,
+    /// Global instance index → level bucket (`u32::MAX` = no op here).
+    bucket_of_inst: Vec<u32>,
+    /// CSR: slot → buckets that comb-read it.
+    reader_off: Vec<u32>,
+    reader_lvls: Vec<u32>,
+    /// Slot is read by any pin of this tape.
+    reads_any: Vec<bool>,
+    /// Slot → bucket writing it (`u32::MAX` = not written here).
+    driver_level: Vec<u32>,
+    /// Slots whose fault site was optimized away (see [`WordIr`]).
+    folded: Vec<bool>,
+    /// Current slot values (bit `k` = lane `k`).
+    values: Vec<u64>,
+    /// Packed per-instance state.
+    state: Vec<u64>,
+    next: Vec<u64>,
+    state_off: Vec<u32>,
+    state_bits: Vec<u8>,
+    /// Sequential commit records of this tape.
+    seqs: Vec<TapeSeq>,
+    /// Retired constants, written by the reset prologue.
+    consts: Vec<ConstCell>,
+    /// Prologue already ran since the last reset.
+    primed: bool,
+    /// Per-instance counters (`cycles` is counted by the wrapper).
+    activity: Activity,
+    scratch_ins: [u64; 16],
+    scratch_outs: [u64; 8],
+    faults: Option<Box<FaultOverlay>>,
+}
+
+impl Tape {
+    /// Compile the whole IR into one tape.
+    pub fn new(ir: &WordIr) -> Tape {
+        Tape::for_part(ir, None)
+    }
+
+    /// Compile the subset of `ir` whose instances `keep` selects (the
+    /// sharded engine builds one tape per partition part; `None` keeps
+    /// everything).  Retired constants credit their prologue toggles
+    /// only on the tape that owns the producing instance.
+    pub(crate) fn for_part(ir: &WordIr, keep: Option<&[bool]>) -> Tape {
+        let included = |inst: u32| keep.map_or(true, |k| k[inst as usize]);
+        let n_slots = ir.n_slots;
+
+        let mut ops: Vec<TapeOp> = Vec::new();
+        let mut level_start: Vec<u32> = Vec::new();
+        let mut bucket_of_inst = vec![u32::MAX; ir.n_insts];
+        let mut last_level = u32::MAX;
+        let mut reads_any = vec![false; n_slots];
+        let mut driver_level = vec![u32::MAX; n_slots];
+        let mut pairs: Vec<(u32, u32)> = Vec::new();
+        let mut buf = Vec::new();
+        let mut outs = Vec::new();
+        for op in &ir.ops {
+            let inst = match &op.body {
+                Body::Gate(g) => g.inst,
+                Body::Fused(a, b) => {
+                    debug_assert!(
+                        included(a.inst) == included(b.inst),
+                        "fused pair split across parts"
+                    );
+                    a.inst
+                }
+                Body::Wide(w) => w.inst,
+            };
+            if !included(inst) {
+                continue;
+            }
+            if op.level != last_level || level_start.is_empty() {
+                level_start.push(ops.len() as u32);
+                last_level = op.level;
+            }
+            let bucket = level_start.len() as u32 - 1;
+            op.dep_slots(&mut buf);
+            for &s in &buf {
+                pairs.push((s, bucket));
+            }
+            op.read_slots(&mut buf);
+            for &s in &buf {
+                reads_any[s as usize] = true;
+            }
+            op.out_slots(&mut outs);
+            for &(s, i) in &outs {
+                driver_level[s as usize] = bucket;
+                bucket_of_inst[i as usize] = bucket;
+            }
+            ops.push(match &op.body {
+                Body::Gate(g) => TapeOp::Gate(*g),
+                Body::Fused(a, b) => TapeOp::Fused(*a, *b),
+                Body::Wide(w) => TapeOp::Wide(w.clone()),
+            });
+        }
+        level_start.push(ops.len() as u32);
+        let n_buckets = level_start.len() - 1;
+
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut reader_off = vec![0u32; n_slots + 1];
+        for &(s, _) in &pairs {
+            reader_off[s as usize + 1] += 1;
+        }
+        for i in 0..n_slots {
+            reader_off[i + 1] += reader_off[i];
+        }
+        let reader_lvls: Vec<u32> = pairs.iter().map(|&(_, b)| b).collect();
+
+        let seqs: Vec<TapeSeq> = ir
+            .seqs
+            .iter()
+            .filter(|s| included(s.inst))
+            .map(|s| TapeSeq {
+                kind: s.kind,
+                inst: s.inst,
+                ins: s.ins,
+                n_ins: s.n_ins,
+                state_off: s.state_off,
+                n_state: s.n_state,
+                domain: s.domain,
+                bucket: bucket_of_inst[s.inst as usize],
+            })
+            .collect();
+        debug_assert!(
+            seqs.iter().all(|s| s.bucket != u32::MAX),
+            "sequential instance without a comb op"
+        );
+        let consts: Vec<ConstCell> = ir
+            .consts
+            .iter()
+            .filter(|c| included(c.inst))
+            .copied()
+            .collect();
+
+        Tape {
+            ops,
+            level_start,
+            dirty: vec![true; n_buckets],
+            bucket_of_inst,
+            reader_off,
+            reader_lvls,
+            reads_any,
+            driver_level,
+            folded: ir.folded.clone(),
+            values: vec![0; n_slots],
+            state: vec![0; ir.total_state],
+            next: vec![0; ir.total_state],
+            state_off: ir.state_off.clone(),
+            state_bits: ir.state_bits.clone(),
+            seqs,
+            consts,
+            primed: false,
+            activity: Activity::new(ir.n_insts),
+            scratch_ins: [0; 16],
+            scratch_outs: [0; 8],
+            faults: None,
+        }
+    }
+
+    /// Slot (net) count.
+    pub fn n_slots(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Tape op count (post-optimization; the bench-reported quantity).
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when a fault on `net` has no live forcing site here.
+    pub fn fault_site_lost(&self, net: usize) -> bool {
+        self.folded[net]
+    }
+
+    /// Current value word of a slot.
+    pub(crate) fn word(&self, slot: usize) -> u64 {
+        self.values[slot]
+    }
+
+    /// All slot values (the sharded observer view borrows this).
+    pub(crate) fn values(&self) -> &[u64] {
+        &self.values
+    }
+
+    /// Per-instance counters (`cycles` owned by the driving wrapper).
+    pub(crate) fn activity(&self) -> &Activity {
+        &self.activity
+    }
+
+    pub(crate) fn activity_mut(&mut self) -> &mut Activity {
+        &mut self.activity
+    }
+
+    /// Install a fault overlay.  Panics when a static site was folded
+    /// away — [`CompiledSimulator::install_faults`] and the campaign
+    /// driver precheck via [`Tape::fault_site_lost`] and fall back to
+    /// an interpreter instead of ever hitting this.
+    pub(crate) fn install_faults(&mut self, overlay: FaultOverlay) {
+        assert_eq!(overlay.n_nets(), self.values.len(), "overlay size");
+        if let Some(n) =
+            overlay.static_nets().find(|&n| self.folded[n])
+        {
+            panic!(
+                "static fault on net {n}: write site folded away \
+                 (precheck with fault_site_lost / use an interpreter)"
+            );
+        }
+        self.faults = Some(Box::new(overlay));
+    }
+
+    pub(crate) fn clear_faults(&mut self) {
+        self.faults = None;
+    }
+
+    /// Stage the transient fault events of one tick that this tape
+    /// owns, mirroring the sharded parts: glitches re-arm the driving
+    /// bucket, SEUs queue for the post-commit phase.  A glitch on a
+    /// folded slot panics (no write site left to force it at).
+    pub(crate) fn stage_tick_faults(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+        mask: u64,
+    ) {
+        for &(n, l) in glitches {
+            assert!(
+                l & mask == 0 || !self.folded[n.0 as usize],
+                "glitch on net {}: write site folded away \
+                 (precheck with fault_site_lost / use an interpreter)",
+                n.0
+            );
+        }
+        let owns = glitches.iter().any(|&(n, l)| {
+            l & mask != 0 && self.driver_level[n.0 as usize] != u32::MAX
+        }) || seus.iter().any(|s| {
+            s.lanes & mask != 0
+                && self.bucket_of_inst[s.inst as usize] != u32::MAX
+        });
+        if !owns {
+            return;
+        }
+        if self.faults.is_none() {
+            self.faults =
+                Some(Box::new(FaultOverlay::new(self.values.len())));
+        }
+        let f = self.faults.as_deref_mut().expect("just installed");
+        for &(net, lanes) in glitches {
+            let lvl = self.driver_level[net.0 as usize];
+            if lanes & mask != 0 && lvl != u32::MAX {
+                f.add_glitch(net, lanes & mask);
+                self.dirty[lvl as usize] = true;
+            }
+        }
+        for &seu in seus {
+            if seu.lanes & mask != 0
+                && self.bucket_of_inst[seu.inst as usize] != u32::MAX
+            {
+                f.push_seu(SeuFlip { lanes: seu.lanes & mask, ..seu });
+            }
+        }
+    }
+
+    /// Apply input words.  With `filter`, slots no pin of this tape
+    /// reads are skipped (shard tapes); without, every word is stored.
+    pub(crate) fn apply_inputs(
+        &mut self,
+        inputs: &[(NetId, u64)],
+        filter: bool,
+    ) {
+        let Tape { reads_any, values, dirty, reader_off, reader_lvls, .. } =
+            self;
+        for &(n, w) in inputs {
+            let ni = n.0 as usize;
+            if filter && !reads_any[ni] {
+                continue;
+            }
+            if values[ni] != w {
+                values[ni] = w;
+                mark(dirty, reader_off, reader_lvls, ni);
+            }
+        }
+    }
+
+    /// Apply published boundary words (always stored; sharded use).
+    pub(crate) fn apply_words(&mut self, nets: &[NetId], words: &[u64]) {
+        let Tape { values, dirty, reader_off, reader_lvls, .. } = self;
+        for (&n, &w) in nets.iter().zip(words) {
+            let ni = n.0 as usize;
+            if values[ni] != w {
+                values[ni] = w;
+                mark(dirty, reader_off, reader_lvls, ni);
+            }
+        }
+    }
+
+    /// Run the prologue (first tick after reset), the gated tape, the
+    /// per-domain sequential commit and the post-commit fault phase —
+    /// one engine tick.  Mirrors the sharded parts' `settle_commit`
+    /// step for step, so gated and ungated runs are bit-identical.
+    pub(crate) fn settle_commit(&mut self, gclk_edge: bool, mask: u64) {
+        let Tape {
+            ops,
+            level_start,
+            dirty,
+            bucket_of_inst,
+            reader_off,
+            reader_lvls,
+            values,
+            state,
+            next,
+            state_off,
+            state_bits,
+            seqs,
+            consts,
+            primed,
+            activity,
+            scratch_ins,
+            scratch_outs,
+            faults,
+            ..
+        } = self;
+
+        // Forced-write + toggle-count discipline shared by every write
+        // site below: force through the overlay (a diverging force
+        // re-arms the bucket so the site is re-forced next tick), count
+        // masked toggles, store and wake readers on any change.
+        macro_rules! store {
+            ($b:expr, $out:expr, $inst:expr, $raw:expr) => {{
+                let out: usize = $out;
+                let raw: u64 = $raw;
+                let v = match faults.as_deref_mut() {
+                    Some(f) => {
+                        let fv = f.force(out, raw);
+                        if fv != raw {
+                            dirty[$b] = true;
+                        }
+                        fv
+                    }
+                    None => raw,
+                };
+                let diff = (values[out] ^ v) & mask;
+                if values[out] != v {
+                    values[out] = v;
+                    mark(dirty, reader_off, reader_lvls, out);
+                }
+                if diff != 0 {
+                    activity.toggles[$inst] += u64::from(diff.count_ones());
+                }
+            }};
+        }
+
+        // Reset prologue: retired constants settle exactly once, with
+        // the same first-tick toggle credit the interpreters count for
+        // constant cones (overlays never touch these slots — folded
+        // statics and glitches are rejected at installation).
+        if !*primed {
+            *primed = true;
+            for c in consts.iter() {
+                let w = if c.value { !0u64 } else { 0 };
+                let slot = c.slot as usize;
+                let diff = (values[slot] ^ w) & mask;
+                if values[slot] != w {
+                    values[slot] = w;
+                    mark(dirty, reader_off, reader_lvls, slot);
+                }
+                if diff != 0 {
+                    activity.toggles[c.inst as usize] +=
+                        u64::from(diff.count_ones());
+                }
+            }
+        }
+
+        // The tape proper: dirty buckets in depth order.
+        for b in 0..dirty.len() {
+            if !dirty[b] {
+                continue;
+            }
+            dirty[b] = false;
+            let start = level_start[b] as usize;
+            let end = level_start[b + 1] as usize;
+            for op in &ops[start..end] {
+                match op {
+                    TapeOp::Gate(g) => {
+                        let x = [
+                            values[g.ins[0] as usize],
+                            values[g.ins[1] as usize],
+                            values[g.ins[2] as usize],
+                            values[g.ins[3] as usize],
+                        ];
+                        let v = eval_gate_word(g.g, x);
+                        store!(b, g.out as usize, g.inst as usize, v);
+                    }
+                    TapeOp::Fused(a, c) => {
+                        let x = [
+                            values[a.ins[0] as usize],
+                            values[a.ins[1] as usize],
+                            values[a.ins[2] as usize],
+                            values[a.ins[3] as usize],
+                        ];
+                        let v = eval_gate_word(a.g, x);
+                        store!(b, a.out as usize, a.inst as usize, v);
+                        // The consumer reads the *stored* (possibly
+                        // forced) producer value, as the interpreters do.
+                        let y = [
+                            values[c.ins[0] as usize],
+                            values[c.ins[1] as usize],
+                            values[c.ins[2] as usize],
+                            values[c.ins[3] as usize],
+                        ];
+                        let w = eval_gate_word(c.g, y);
+                        store!(b, c.out as usize, c.inst as usize, w);
+                    }
+                    TapeOp::Wide(w) => {
+                        let n_in = w.n_ins as usize;
+                        let n_out = w.n_outs as usize;
+                        let ns = w.n_state as usize;
+                        for k in 0..n_in {
+                            scratch_ins[k] = values[w.ins[k] as usize];
+                        }
+                        let off = w.state_off as usize;
+                        eval_comb_packed(
+                            w.kind,
+                            &scratch_ins[..n_in],
+                            &state[off..off + ns],
+                            &mut scratch_outs[..n_out],
+                        );
+                        for k in 0..n_out {
+                            store!(
+                                b,
+                                w.outs[k] as usize,
+                                w.inst as usize,
+                                scratch_outs[k]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // Next-state + commit per domain; a state change re-arms the
+        // owner's bucket so its Q output is recomputed next tick.
+        let active = u64::from(mask.count_ones());
+        let mut sins = [0u64; MAX_SEQ_INS];
+        for s in seqs.iter() {
+            let commit = match s.domain {
+                ClockDomain::Aclk => true,
+                ClockDomain::Gclk => gclk_edge,
+                ClockDomain::Comb => false,
+            };
+            if !commit {
+                continue;
+            }
+            let n_in = s.n_ins as usize;
+            for k in 0..n_in {
+                sins[k] = values[s.ins[k] as usize];
+            }
+            let off = s.state_off as usize;
+            let ns = s.n_state as usize;
+            {
+                let (cur, nxt) =
+                    (&state[off..off + ns], &mut next[off..off + ns]);
+                next_state_packed(s.kind, &sins[..n_in], cur, nxt);
+            }
+            if state[off..off + ns] != next[off..off + ns] {
+                state[off..off + ns]
+                    .copy_from_slice(&next[off..off + ns]);
+                dirty[s.bucket as usize] = true;
+            }
+            activity.clock_ticks[s.inst as usize] += active;
+        }
+
+        // SEUs land after the commit (visible next tick); the upset
+        // instance's bucket is re-armed so the flip propagates.
+        if let Some(f) = faults.as_deref_mut() {
+            for seu in f.take_seus() {
+                let i = seu.inst as usize;
+                if bucket_of_inst[i] == u32::MAX {
+                    continue;
+                }
+                if (seu.bit as usize) < state_bits[i] as usize {
+                    let off = state_off[i] as usize;
+                    state[off + seu.bit as usize] ^= seu.lanes;
+                    dirty[bucket_of_inst[i] as usize] = true;
+                }
+            }
+            f.end_tick();
+        }
+    }
+
+    /// Zero values and state; re-arm every bucket and the prologue.
+    pub(crate) fn reset(&mut self) {
+        self.values.iter_mut().for_each(|v| *v = 0);
+        self.state.iter_mut().for_each(|v| *v = 0);
+        self.dirty.iter_mut().for_each(|d| *d = true);
+        self.primed = false;
+    }
+}
+
+/// Compiled-tape simulation instance over a netlist: lower → optimize
+/// → flatten, then tick like the packed engine (bit-identically).
+pub struct CompiledSimulator {
+    tape: Tape,
+    stats: Vec<PassStats>,
+    passes: String,
+    lanes: usize,
+    mask: u64,
+    cycle: u64,
+}
+
+impl CompiledSimulator {
+    /// Compile `nl` with the full pass pipeline for `lanes` (1..=64)
+    /// stimulus lanes.
+    pub fn new(
+        nl: &Netlist,
+        lib: &Library,
+        lanes: usize,
+    ) -> Result<CompiledSimulator> {
+        CompiledSimulator::with_passes(nl, lib, lanes, &PassManager::all())
+    }
+
+    /// Compile `nl` with an explicit pass pipeline.
+    pub fn with_passes(
+        nl: &Netlist,
+        lib: &Library,
+        lanes: usize,
+        pm: &PassManager,
+    ) -> Result<CompiledSimulator> {
+        let mut ir = lower(nl, lib)?;
+        let stats = pm.run(&mut ir);
+        CompiledSimulator::from_ir(&ir, stats, pm.canonical(), lanes)
+    }
+
+    /// Build from an already-optimized IR (parallel drivers compile the
+    /// IR once and build one tape per worker).
+    pub fn from_ir(
+        ir: &WordIr,
+        stats: Vec<PassStats>,
+        passes: String,
+        lanes: usize,
+    ) -> Result<CompiledSimulator> {
+        if !(1..=MAX_LANES).contains(&lanes) {
+            return Err(Error::sim(format!(
+                "compiled engine supports 1..={MAX_LANES} lanes, got {lanes}"
+            )));
+        }
+        Ok(CompiledSimulator {
+            tape: Tape::new(ir),
+            stats,
+            passes,
+            lanes,
+            mask: mask_for(lanes),
+            cycle: 0,
+        })
+    }
+
+    /// Number of lanes the engine was built for.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Number of currently-active (activity-counted) lanes.
+    pub fn active_lanes(&self) -> usize {
+        self.mask.count_ones() as usize
+    }
+
+    /// Shrink the active-lane set to the first `n` lanes (`n ≤ lanes`);
+    /// inactive lanes keep simulating but are excluded from activity.
+    pub fn set_active_lanes(&mut self, n: usize) {
+        assert!(
+            (1..=self.lanes).contains(&n),
+            "active lanes 1..={}",
+            self.lanes
+        );
+        self.mask = mask_for(n);
+    }
+
+    /// Per-pass statistics of the compile.
+    pub fn pass_stats(&self) -> &[PassStats] {
+        &self.stats
+    }
+
+    /// Canonical pass-pipeline spec this engine was compiled with.
+    pub fn passes(&self) -> &str {
+        &self.passes
+    }
+
+    /// Tape op count after optimization.
+    pub fn n_ops(&self) -> usize {
+        self.tape.n_ops()
+    }
+
+    /// True when a fault on `net` could not be forced faithfully here
+    /// (the campaign precheck; installation would be refused).
+    pub fn fault_site_lost(&self, net: NetId) -> bool {
+        self.tape.fault_site_lost(net.0 as usize)
+    }
+
+    /// True when every static site of `overlay` still has a live
+    /// forcing site ([`CompiledSimulator::install_faults`] would
+    /// succeed).
+    pub fn supports_overlay(&self, overlay: &FaultOverlay) -> bool {
+        overlay.static_nets().all(|n| !self.tape.fault_site_lost(n))
+    }
+
+    /// Install a fault overlay, or refuse it when a static site was
+    /// optimized away (the caller falls back to an interpreter).
+    pub fn install_faults(&mut self, overlay: FaultOverlay) -> Result<()> {
+        if overlay.n_nets() != self.tape.n_slots() {
+            return Err(Error::sim(format!(
+                "fault overlay sized for {} nets, netlist has {}",
+                overlay.n_nets(),
+                self.tape.n_slots()
+            )));
+        }
+        if let Some(n) = overlay
+            .static_nets()
+            .find(|&n| self.tape.fault_site_lost(n))
+        {
+            return Err(Error::sim(format!(
+                "compiled engine cannot force net {n}: its write site \
+                 was optimized away (run with fewer passes or an \
+                 interpreter engine)"
+            )));
+        }
+        self.tape.install_faults(overlay);
+        Ok(())
+    }
+
+    /// Remove the fault overlay.
+    pub fn clear_faults(&mut self) {
+        self.tape.clear_faults();
+    }
+
+    /// Schedule transient faults for the next tick (glitches and
+    /// post-commit SEUs, restricted to active lanes).  Panics on a
+    /// glitch whose write site was optimized away — precheck with
+    /// [`CompiledSimulator::fault_site_lost`].
+    pub fn set_tick_faults(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+    ) {
+        self.tape.stage_tick_faults(glitches, seus, self.mask);
+    }
+
+    /// Current value of a net in one lane.
+    pub fn get(&self, net: NetId, lane: usize) -> bool {
+        debug_assert!(lane < self.lanes);
+        self.tape.word(net.0 as usize) >> lane & 1 == 1
+    }
+
+    /// Current value word of a net (bit `k` = lane `k`).
+    pub fn get_word(&self, net: NetId) -> u64 {
+        self.tape.word(net.0 as usize)
+    }
+
+    /// Ticks executed since construction or the last reset.
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Reset all state and net values to 0, clear the cycle counter,
+    /// re-arm the prologue, and restore the full active-lane mask.
+    /// Activity counters are preserved, as in the other engines.
+    pub fn reset(&mut self) {
+        self.tape.reset();
+        self.cycle = 0;
+        self.mask = mask_for(self.lanes);
+    }
+
+    /// Aggregated switching-activity counters.
+    pub fn activity(&self) -> &Activity {
+        self.tape.activity()
+    }
+
+    /// Run one `aclk` cycle across all lanes (packed-tick semantics).
+    pub fn tick(&mut self, inputs: &[(NetId, u64)], gclk_edge: bool) {
+        self.tape.apply_inputs(inputs, false);
+        self.tape.settle_commit(gclk_edge, self.mask);
+        self.cycle += 1;
+        self.tape.activity_mut().cycles +=
+            u64::from(self.mask.count_ones());
+    }
+}
+
+impl SimEngine for CompiledSimulator {
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn tick_lanes(&mut self, inputs: &[(NetId, u64)], gclk_edge: bool) {
+        self.tick(inputs, gclk_edge);
+    }
+
+    fn lane_value(&self, net: NetId, lane: usize) -> bool {
+        self.get(net, lane)
+    }
+
+    fn activity(&self) -> &Activity {
+        self.tape.activity()
+    }
+
+    fn activity_mut(&mut self) -> &mut Activity {
+        self.tape.activity_mut()
+    }
+
+    fn ticks(&self) -> u64 {
+        self.cycle
+    }
+
+    fn reset_state(&mut self) {
+        self.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::fault_sites;
+    use crate::netlist::column::{build_column, ColumnSpec};
+    use crate::netlist::Flavor;
+    use crate::sim::PackedSimulator;
+
+    fn column(flavor: Flavor) -> (Library, Netlist) {
+        let lib = Library::with_macros();
+        let spec = ColumnSpec { p: 4, q: 2, theta: 6 };
+        let (nl, _) = build_column(&lib, flavor, &spec).unwrap();
+        (lib, nl)
+    }
+
+    fn drive_both(
+        nl: &Netlist,
+        cs: &mut CompiledSimulator,
+        pk: &mut PackedSimulator,
+        ticks: u32,
+        seed: u64,
+    ) {
+        let mut rng = seed;
+        for t in 0..ticks {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let gamma = rng >> 60 & 3 == 0;
+            let inputs: Vec<(NetId, u64)> = nl
+                .inputs
+                .iter()
+                .map(|&n| {
+                    rng = rng
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1);
+                    (n, rng)
+                })
+                .collect();
+            cs.tick(&inputs, gamma);
+            pk.tick(&inputs, gamma);
+            for net in 0..nl.n_nets() {
+                let id = NetId(net as u32);
+                for lane in 0..cs.lanes() {
+                    assert_eq!(
+                        cs.get(id, lane),
+                        pk.get(id, lane),
+                        "tick {t} net {net} lane {lane}"
+                    );
+                }
+            }
+        }
+        assert_eq!(cs.activity().toggles, pk.activity.toggles);
+        assert_eq!(cs.activity().clock_ticks, pk.activity.clock_ticks);
+        assert_eq!(cs.activity().cycles, pk.activity.cycles);
+    }
+
+    /// Fully-optimized tape vs the packed interpreter: every net, every
+    /// lane, every tick, and the complete activity — both flavours.
+    #[test]
+    fn compiled_matches_packed_on_columns() {
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let (lib, nl) = column(flavor);
+            let mut cs = CompiledSimulator::new(&nl, &lib, 8).unwrap();
+            let mut pk = PackedSimulator::new(&nl, &lib, 8).unwrap();
+            assert!(cs.n_ops() < nl.insts.len(), "passes reduced ops");
+            drive_both(&nl, &mut cs, &mut pk, 40, 0x9e37_79b9_7f4a_7c15);
+        }
+    }
+
+    /// The unoptimized tape (passes = none) is also bit-identical.
+    #[test]
+    fn unoptimized_tape_matches_packed() {
+        let (lib, nl) = column(Flavor::Custom);
+        let mut cs = CompiledSimulator::with_passes(
+            &nl,
+            &lib,
+            4,
+            &PassManager::none(),
+        )
+        .unwrap();
+        assert_eq!(cs.n_ops(), nl.insts.len());
+        assert_eq!(cs.passes(), "none");
+        let mut pk = PackedSimulator::new(&nl, &lib, 4).unwrap();
+        drive_both(&nl, &mut cs, &mut pk, 30, 0x1234_5678_9abc_def0);
+    }
+
+    /// Static + transient faults stay bit-identical when every site
+    /// survives (coalesce/resched keep all write sites).
+    #[test]
+    fn faulted_compiled_matches_faulted_packed() {
+        let (lib, nl) = column(Flavor::Custom);
+        let pm = PassManager::parse("coalesce,resched").unwrap();
+        let mut cs =
+            CompiledSimulator::with_passes(&nl, &lib, 8, &pm).unwrap();
+        let mut pk = PackedSimulator::new(&nl, &lib, 8).unwrap();
+        let sites = fault_sites(&nl, &lib);
+        let net_a = sites.outs[0];
+        let net_b = sites.outs[sites.outs.len() / 2];
+        let net_c = *sites.outs.last().unwrap();
+        let (seu_inst, seu_bit) = sites.seq[0];
+        let mut overlay = FaultOverlay::new(nl.n_nets());
+        overlay.add_stuck0(net_a, !0);
+        overlay.add_stuck1(net_b, 0b1010);
+        overlay.add_delay(net_c, !0);
+        cs.install_faults(overlay.clone()).unwrap();
+        pk.install_faults(overlay);
+        let mut rng = 0xfeed_beef_dead_cafeu64;
+        for t in 0..30u32 {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let gamma = rng >> 60 & 3 == 0;
+            if t == 12 {
+                let g = [(net_b, 0b0101u64)];
+                let s = [SeuFlip {
+                    inst: seu_inst,
+                    bit: seu_bit,
+                    lanes: 0b11,
+                }];
+                cs.set_tick_faults(&g, &s);
+                pk.set_tick_faults(&g, &s);
+            }
+            let inputs: Vec<(NetId, u64)> = nl
+                .inputs
+                .iter()
+                .map(|&n| {
+                    rng = rng
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1);
+                    (n, rng)
+                })
+                .collect();
+            cs.tick(&inputs, gamma);
+            pk.tick(&inputs, gamma);
+            for net in 0..nl.n_nets() {
+                let id = NetId(net as u32);
+                for lane in 0..8 {
+                    assert_eq!(
+                        cs.get(id, lane),
+                        pk.get(id, lane),
+                        "tick {t} net {net} lane {lane}"
+                    );
+                }
+            }
+        }
+        assert_eq!(cs.activity().toggles, pk.activity.toggles);
+        assert_eq!(cs.activity().clock_ticks, pk.activity.clock_ticks);
+    }
+
+    /// A static fault on an optimized-away site is refused (the caller
+    /// falls back to an interpreter), and the lost site is visible
+    /// through the precheck.
+    #[test]
+    fn folded_static_sites_are_rejected() {
+        let (lib, nl) = column(Flavor::Custom);
+        let mut ir = lower(&nl, &lib).unwrap();
+        let pm = PassManager::all();
+        let stats = pm.run(&mut ir);
+        let lost = ir.consts[0].slot;
+        let mut cs =
+            CompiledSimulator::from_ir(&ir, stats, pm.canonical(), 4)
+                .unwrap();
+        assert!(cs.fault_site_lost(NetId(lost)));
+        let mut overlay = FaultOverlay::new(nl.n_nets());
+        overlay.add_stuck1(NetId(lost), !0);
+        assert!(!cs.supports_overlay(&overlay));
+        assert!(cs.install_faults(overlay).is_err());
+        // A supported overlay still installs.
+        let sites = fault_sites(&nl, &lib);
+        let live = sites
+            .outs
+            .iter()
+            .find(|&&n| !cs.fault_site_lost(n))
+            .copied()
+            .unwrap();
+        let mut ok = FaultOverlay::new(nl.n_nets());
+        ok.add_stuck0(live, 1);
+        assert!(cs.supports_overlay(&ok));
+        cs.install_faults(ok).unwrap();
+    }
+
+    /// Reset re-arms the prologue: a second measurement window counts
+    /// the constant cones' first-tick toggles again, like the packed
+    /// engine does.
+    #[test]
+    fn reset_reprimes_the_prologue() {
+        let (lib, nl) = column(Flavor::Custom);
+        let mut cs = CompiledSimulator::new(&nl, &lib, 4).unwrap();
+        let mut pk = PackedSimulator::new(&nl, &lib, 4).unwrap();
+        drive_both(&nl, &mut cs, &mut pk, 10, 0xabcd_ef01_2345_6789);
+        cs.reset();
+        pk.reset();
+        assert_eq!(cs.cycle(), 0);
+        drive_both(&nl, &mut cs, &mut pk, 10, 0x0f0f_0f0f_0f0f_0f0f);
+    }
+
+    #[test]
+    fn lane_count_bounds_are_enforced() {
+        let (lib, nl) = column(Flavor::Std);
+        assert!(CompiledSimulator::new(&nl, &lib, 0).is_err());
+        assert!(CompiledSimulator::new(&nl, &lib, 65).is_err());
+        assert!(CompiledSimulator::new(&nl, &lib, 64).is_ok());
+    }
+}

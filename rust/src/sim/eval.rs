@@ -22,8 +22,15 @@
 //! equivalent to (their unit tests sweep both through the simulator),
 //! and the packed kernels are exhaustively swept against the scalar
 //! reference in this module's tests.
+//!
+//! Simple combinational kinds (one output, no state) are not written
+//! out per-kind here: both the scalar and the packed path route them
+//! through the single-source truth tables in [`super::tables`], the
+//! same definitions the BLIF writer and the IR lowering consume.
 
 use crate::cells::{CellKind, MacroKind};
+
+use super::tables;
 
 /// Evaluate combinational outputs.
 ///
@@ -31,29 +38,11 @@ use crate::cells::{CellKind, MacroKind};
 /// bits, `outs` is written in pin order.
 pub fn eval_comb(kind: CellKind, ins: &[bool], state: &[bool], outs: &mut [bool]) {
     use CellKind::*;
+    if let Some(g) = tables::gate_for(kind) {
+        outs[0] = tables::eval_gate_scalar(g, ins);
+        return;
+    }
     match kind {
-        Tie0 => outs[0] = false,
-        Tie1 => outs[0] = true,
-        Inv => outs[0] = !ins[0],
-        Buf => outs[0] = ins[0],
-        Nand2 => outs[0] = !(ins[0] & ins[1]),
-        Nand3 => outs[0] = !(ins[0] & ins[1] & ins[2]),
-        Nand4 => outs[0] = !(ins[0] & ins[1] & ins[2] & ins[3]),
-        Nor2 => outs[0] = !(ins[0] | ins[1]),
-        Nor3 => outs[0] = !(ins[0] | ins[1] | ins[2]),
-        And2 => outs[0] = ins[0] & ins[1],
-        And3 => outs[0] = ins[0] & ins[1] & ins[2],
-        Or2 => outs[0] = ins[0] | ins[1],
-        Or3 => outs[0] = ins[0] | ins[1] | ins[2],
-        Xor2 => outs[0] = ins[0] ^ ins[1],
-        Xnor2 => outs[0] = !(ins[0] ^ ins[1]),
-        Xor3 => outs[0] = ins[0] ^ ins[1] ^ ins[2],
-        Maj3 => {
-            outs[0] = (ins[0] & ins[1]) | (ins[1] & ins[2]) | (ins[0] & ins[2])
-        }
-        Aoi21 => outs[0] = !((ins[0] & ins[1]) | ins[2]),
-        Oai21 => outs[0] = !((ins[0] | ins[1]) & ins[2]),
-        Mux2 => outs[0] = if ins[2] { ins[1] } else { ins[0] },
         Dff => outs[0] = state[0],
         // Async active-high reset shows at Q immediately.
         DffR => outs[0] = !ins[1] & state[0],
@@ -62,6 +51,7 @@ pub fn eval_comb(kind: CellKind, ins: &[bool], state: &[bool], outs: &mut [bool]
         // Transparent-high latch.
         Latch => outs[0] = if ins[1] { ins[0] } else { state[0] },
         Macro(m) => eval_macro(m, ins, state, outs),
+        _ => unreachable!("{kind:?} is covered by the gate tables"),
     }
 }
 
@@ -84,8 +74,12 @@ fn eval_macro(m: MacroKind, ins: &[bool], state: &[bool], outs: &mut [bool]) {
             outs[0] = ins[0] ^ ins[1] ^ ins[2];
             outs[1] = (ins[0] & ins[1]) | (ins[1] & ins[2]) | (ins[0] & ins[2]);
         }
-        // Fig. 5: monotone-level "arrived no later": le = a | !b.
-        MacroKind::LessEqual => outs[0] = ins[0] | !ins[1],
+        // Fig. 5 (LessEqual) and Fig. 11 (Mux2Gdi) are pure gates and
+        // never reach here — `eval_comb` dispatches them through the
+        // shared truth tables.
+        MacroKind::LessEqual | MacroKind::Mux2Gdi => {
+            unreachable!("{m:?} is covered by the gate tables")
+        }
         // Fig. 6: async reset visible at output immediately.
         MacroKind::Pulse2EdgePwr => outs[0] = !ins[1] & state[0],
         // Fig. 7: sync reset; output is the registered level.
@@ -108,8 +102,6 @@ fn eval_macro(m: MacroKind, ins: &[bool], state: &[bool], outs: &mut [bool]) {
             outs[0] = ins[0] | ins[2];
             outs[1] = ins[1] | ins[3];
         }
-        // Fig. 11: GDI mux.
-        MacroKind::Mux2Gdi => outs[0] = if ins[2] { ins[1] } else { ins[0] },
         // Fig. 13: one-cycle pulse on rising edge.
         MacroKind::Edge2Pulse => outs[0] = ins[0] & !state[0],
         // Fig. 12: pulse = d & count<8; count exported (3 LSBs).
@@ -231,34 +223,21 @@ fn lt3(a0: u64, a1: u64, a2: u64, b0: u64, b1: u64, b2: u64) -> u64 {
 /// or state bit, with bit `k` carrying lane `k`'s value.
 pub fn eval_comb_packed(kind: CellKind, ins: &[u64], state: &[u64], outs: &mut [u64]) {
     use CellKind::*;
-    match kind {
-        Tie0 => outs[0] = 0,
-        Tie1 => outs[0] = !0,
-        Inv => outs[0] = !ins[0],
-        Buf => outs[0] = ins[0],
-        Nand2 => outs[0] = !(ins[0] & ins[1]),
-        Nand3 => outs[0] = !(ins[0] & ins[1] & ins[2]),
-        Nand4 => outs[0] = !(ins[0] & ins[1] & ins[2] & ins[3]),
-        Nor2 => outs[0] = !(ins[0] | ins[1]),
-        Nor3 => outs[0] = !(ins[0] | ins[1] | ins[2]),
-        And2 => outs[0] = ins[0] & ins[1],
-        And3 => outs[0] = ins[0] & ins[1] & ins[2],
-        Or2 => outs[0] = ins[0] | ins[1],
-        Or3 => outs[0] = ins[0] | ins[1] | ins[2],
-        Xor2 => outs[0] = ins[0] ^ ins[1],
-        Xnor2 => outs[0] = !(ins[0] ^ ins[1]),
-        Xor3 => outs[0] = ins[0] ^ ins[1] ^ ins[2],
-        Maj3 => {
-            outs[0] = (ins[0] & ins[1]) | (ins[1] & ins[2]) | (ins[0] & ins[2])
+    if let Some(g) = tables::gate_for(kind) {
+        let mut x = [0u64; 4];
+        for (w, &v) in x.iter_mut().zip(ins.iter()) {
+            *w = v;
         }
-        Aoi21 => outs[0] = !((ins[0] & ins[1]) | ins[2]),
-        Oai21 => outs[0] = !((ins[0] | ins[1]) & ins[2]),
-        Mux2 => outs[0] = sel(ins[2], ins[1], ins[0]),
+        outs[0] = tables::eval_gate_word(g, x);
+        return;
+    }
+    match kind {
         Dff => outs[0] = state[0],
         DffR => outs[0] = !ins[1] & state[0],
         DffRn => outs[0] = state[0],
         Latch => outs[0] = sel(ins[1], ins[0], state[0]),
         Macro(m) => eval_macro_packed(m, ins, state, outs),
+        _ => unreachable!("{kind:?} is covered by the gate tables"),
     }
 }
 
@@ -277,7 +256,9 @@ fn eval_macro_packed(m: MacroKind, ins: &[u64], state: &[u64], outs: &mut [u64])
             outs[0] = ins[0] ^ ins[1] ^ ins[2];
             outs[1] = (ins[0] & ins[1]) | (ins[1] & ins[2]) | (ins[0] & ins[2]);
         }
-        MacroKind::LessEqual => outs[0] = ins[0] | !ins[1],
+        MacroKind::LessEqual | MacroKind::Mux2Gdi => {
+            unreachable!("{m:?} is covered by the gate tables")
+        }
         MacroKind::Pulse2EdgePwr => outs[0] = !ins[1] & state[0],
         MacroKind::Pulse2EdgeArea => outs[0] = state[0],
         MacroKind::StdpCaseGen => {
@@ -302,7 +283,6 @@ fn eval_macro_packed(m: MacroKind, ins: &[u64], state: &[u64], outs: &mut [u64])
             outs[0] = ins[0] | ins[2];
             outs[1] = ins[1] | ins[3];
         }
-        MacroKind::Mux2Gdi => outs[0] = sel(ins[2], ins[1], ins[0]),
         MacroKind::Edge2Pulse => outs[0] = ins[0] & !state[0],
         MacroKind::SpikeGen => {
             let done = state[3];

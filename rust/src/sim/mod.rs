@@ -28,6 +28,13 @@
 //!   boundary-net exchange into the tail (voter/output) part and
 //!   activity aggregation bit-identical to the packed engine
 //!   (DESIGN.md §8).
+//! * [`tables`] — the single-source combinational truth tables: one
+//!   ON-set definition per simple cell kind, shared by the eval
+//!   kernels, the BLIF `.names` writer and the IR lowering, plus the
+//!   closed tape-opcode set [`tables::Gate`].
+//! * [`compiled`] — the compiled tape engine [`CompiledSimulator`]:
+//!   the optimized word-level IR of [`crate::ir`] flattened into a
+//!   straight-line, quiescence-gated op tape (DESIGN.md §14).
 //! * [`engine`] — the [`SimEngine`] trait all engines implement; the
 //!   seam the cross-engine equivalence tests drive through.
 //! * [`activity`] — per-instance toggle/clock counters → activity
@@ -36,20 +43,24 @@
 //! * [`testbench`] — drives TNN columns with encoded spike waves and
 //!   decodes spike times back out (the bridge to the golden model), in
 //!   scalar ([`testbench::ColumnTestbench`]) and lane-batched
-//!   ([`testbench::PackedColumnTestbench`]) forms.
+//!   ([`testbench::WordTestbench`], generic over packed or compiled
+//!   engines) forms.
 //! * [`vcd`] — waveform dump for debugging.
 
 pub mod activity;
+pub mod compiled;
 pub mod engine;
 pub mod eval;
 pub mod packed;
 pub mod sharded;
 pub mod simulator;
+pub mod tables;
 pub mod testbench;
 pub mod vcd;
 
 pub use activity::Activity;
+pub use compiled::CompiledSimulator;
 pub use engine::SimEngine;
 pub use packed::PackedSimulator;
-pub use sharded::{ShardedSimulator, SimTick};
+pub use sharded::{ShardedSimulator, SimTick, TickPart};
 pub use simulator::Simulator;

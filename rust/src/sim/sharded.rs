@@ -40,10 +40,12 @@ use std::sync::Arc;
 use crate::cells::Library;
 use crate::error::{Error, Result};
 use crate::fault::{FaultOverlay, SeuFlip};
-use crate::netlist::partition::partition;
+use crate::ir::{lower, PassId, PassManager, PassStats};
+use crate::netlist::partition::{partition, Partition};
 use crate::netlist::{ClockDomain, NetId, Netlist};
 
 use super::activity::Activity;
+use super::compiled::Tape;
 use super::eval::{comb_deps, eval_comb_packed, next_state_packed};
 use super::packed::MAX_LANES;
 use super::simulator::{comb_levels, plan, EvalNode};
@@ -540,12 +542,134 @@ impl<'n> PartSim<'n> {
     }
 }
 
+/// One partition part runnable on a shard worker thread: the seam that
+/// lets [`ShardedSimulator`] drive either interpreted parts
+/// ([`PartSim`], the default) or compiled tapes
+/// ([`super::compiled::Tape`], one per part) through the identical
+/// three-phase tick protocol.
+pub trait TickPart: Send {
+    /// Install a fault overlay (the part forces only its own writes).
+    fn install_faults(&mut self, overlay: FaultOverlay);
+    /// Remove the fault overlay.
+    fn clear_faults(&mut self);
+    /// Stage this tick's transient events the part owns.
+    fn stage_tick_faults(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+        mask: u64,
+    );
+    /// Apply input words (`filter` skips nets no pin here reads).
+    fn apply_inputs(&mut self, inputs: &[(NetId, u64)], filter: bool);
+    /// Apply published boundary words (always stored).
+    fn apply_words(&mut self, nets: &[NetId], words: &[u64]);
+    /// Evaluate dirty levels and commit sequential state — one tick.
+    fn settle_commit(&mut self, gclk_edge: bool, mask: u64);
+    /// Zero values and state; re-arm everything.
+    fn reset(&mut self);
+    /// Full-size net-value image (only this part's slots are live).
+    fn values(&self) -> &[u64];
+    /// Per-instance counters (drained by the coordinator's fold).
+    fn activity_mut(&mut self) -> &mut Activity;
+}
+
+impl TickPart for PartSim<'_> {
+    fn install_faults(&mut self, overlay: FaultOverlay) {
+        PartSim::install_faults(self, overlay);
+    }
+
+    fn clear_faults(&mut self) {
+        PartSim::clear_faults(self);
+    }
+
+    fn stage_tick_faults(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+        mask: u64,
+    ) {
+        PartSim::stage_tick_faults(self, glitches, seus, mask);
+    }
+
+    fn apply_inputs(&mut self, inputs: &[(NetId, u64)], filter: bool) {
+        PartSim::apply_inputs(self, inputs, filter);
+    }
+
+    fn apply_words(&mut self, nets: &[NetId], words: &[u64]) {
+        PartSim::apply_words(self, nets, words);
+    }
+
+    fn settle_commit(&mut self, gclk_edge: bool, mask: u64) {
+        PartSim::settle_commit(self, gclk_edge, mask);
+    }
+
+    fn reset(&mut self) {
+        PartSim::reset(self);
+    }
+
+    fn values(&self) -> &[u64] {
+        &self.values
+    }
+
+    fn activity_mut(&mut self) -> &mut Activity {
+        &mut self.activity
+    }
+}
+
+impl TickPart for Tape {
+    fn install_faults(&mut self, overlay: FaultOverlay) {
+        Tape::install_faults(self, overlay);
+    }
+
+    fn clear_faults(&mut self) {
+        Tape::clear_faults(self);
+    }
+
+    fn stage_tick_faults(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+        mask: u64,
+    ) {
+        Tape::stage_tick_faults(self, glitches, seus, mask);
+    }
+
+    fn apply_inputs(&mut self, inputs: &[(NetId, u64)], filter: bool) {
+        Tape::apply_inputs(self, inputs, filter);
+    }
+
+    fn apply_words(&mut self, nets: &[NetId], words: &[u64]) {
+        Tape::apply_words(self, nets, words);
+    }
+
+    fn settle_commit(&mut self, gclk_edge: bool, mask: u64) {
+        Tape::settle_commit(self, gclk_edge, mask);
+    }
+
+    fn reset(&mut self) {
+        Tape::reset(self);
+    }
+
+    fn values(&self) -> &[u64] {
+        Tape::values(self)
+    }
+
+    fn activity_mut(&mut self) -> &mut Activity {
+        Tape::activity_mut(self)
+    }
+}
+
 /// Thread-parallel sharded simulation instance over a netlist.
-pub struct ShardedSimulator<'n> {
+///
+/// Generic over the per-part engine `P`: interpreted [`PartSim`]s by
+/// default ([`ShardedSimulator::new`]) or one compiled [`Tape`] per
+/// part ([`ShardedSimulator::new_compiled`]); the tick protocol and
+/// activity accounting are shared and bit-identical.
+pub struct ShardedSimulator<'n, P: TickPart = PartSim<'n>> {
     nl: &'n Netlist,
-    head: PartSim<'n>,
-    shards: Vec<PartSim<'n>>,
-    tail: PartSim<'n>,
+    head: P,
+    shards: Vec<P>,
+    tail: P,
     /// Per shard: the nets it publishes at the tick barrier.
     publish: Vec<Vec<NetId>>,
     /// Head (tie) outputs, broadcast with the primary inputs.
@@ -566,7 +690,22 @@ pub struct ShardedSimulator<'n> {
     agg: Activity,
 }
 
-impl<'n> ShardedSimulator<'n> {
+/// Validate lane/thread counts shared by both constructors.
+fn check_dims(lanes: usize, threads: usize) -> Result<()> {
+    if !(1..=MAX_LANES).contains(&lanes) {
+        return Err(Error::sim(format!(
+            "sharded engine supports 1..={MAX_LANES} lanes, got {lanes}"
+        )));
+    }
+    if threads < 1 {
+        return Err(Error::sim(format!(
+            "sharded engine needs threads >= 1, got {threads}"
+        )));
+    }
+    Ok(())
+}
+
+impl<'n> ShardedSimulator<'n, PartSim<'n>> {
     /// Partition, levelize, and allocate for `lanes` (1..=64) stimulus
     /// lanes and at most `threads` shard workers.  `watch` nets are
     /// published every tick in addition to the netlist's primary
@@ -578,16 +717,7 @@ impl<'n> ShardedSimulator<'n> {
         threads: usize,
         watch: &[NetId],
     ) -> Result<Self> {
-        if !(1..=MAX_LANES).contains(&lanes) {
-            return Err(Error::sim(format!(
-                "sharded engine supports 1..={MAX_LANES} lanes, got {lanes}"
-            )));
-        }
-        if threads < 1 {
-            return Err(Error::sim(format!(
-                "sharded engine needs threads >= 1, got {threads}"
-            )));
-        }
+        check_dims(lanes, threads)?;
         let part = partition(nl, lib, threads)?;
         let levels = comb_levels(nl, lib)?;
         let p = plan(nl, lib)?;
@@ -610,6 +740,69 @@ impl<'n> ShardedSimulator<'n> {
             })
             .collect();
 
+        Ok(Self::assemble(nl, &part, watch, head, shards, tail, lanes))
+    }
+}
+
+impl<'n> ShardedSimulator<'n, Tape> {
+    /// Like [`ShardedSimulator::new`], but every partition part runs a
+    /// compiled [`Tape`]: the whole netlist is lowered to word-level IR
+    /// once, optimized by `pm` **minus the coalesce pass** (a fused
+    /// producer/consumer pair may not straddle a partition boundary),
+    /// and each part compiles the instances it owns.  Returns the
+    /// per-pass statistics of the shared optimization run.
+    pub fn new_compiled(
+        nl: &'n Netlist,
+        lib: &Library,
+        lanes: usize,
+        threads: usize,
+        watch: &[NetId],
+        pm: &PassManager,
+    ) -> Result<(Self, Vec<PassStats>)> {
+        check_dims(lanes, threads)?;
+        let part = partition(nl, lib, threads)?;
+        let mut ir = lower(nl, lib)?;
+        let stats = pm.without(PassId::Coalesce).run(&mut ir);
+
+        let mut keep = vec![false; ir.n_insts];
+        let mut tape_for = |insts: &[u32]| {
+            keep.iter_mut().for_each(|k| *k = false);
+            for &i in insts {
+                keep[i as usize] = true;
+            }
+            Tape::for_part(&ir, Some(&keep))
+        };
+        let head = tape_for(&part.head);
+        let shards: Vec<Tape> =
+            part.shards.iter().map(|s| tape_for(s)).collect();
+        let tail = tape_for(&part.tail);
+
+        let sim = Self::assemble(nl, &part, watch, head, shards, tail, lanes);
+        Ok((sim, stats))
+    }
+
+    /// True when a forced fault on `net` can no longer be represented
+    /// faithfully by the compiled tapes (the pass pipeline folded its
+    /// write site or specialized its readers); callers must check this
+    /// before installing overlays or staging glitches, and fall back to
+    /// an interpreter engine when it fires.
+    pub fn fault_site_lost(&self, net: NetId) -> bool {
+        self.tail.fault_site_lost(net.0 as usize)
+    }
+}
+
+impl<'n, P: TickPart> ShardedSimulator<'n, P> {
+    /// Shared back half of the constructors: net-ownership, head
+    /// broadcast, and shard publication wiring over the partition.
+    fn assemble(
+        nl: &'n Netlist,
+        part: &Partition,
+        watch: &[NetId],
+        head: P,
+        shards: Vec<P>,
+        tail: P,
+        lanes: usize,
+    ) -> Self {
         let n_nets = nl.n_nets();
         let mut want = vec![false; n_nets];
         for &b in &part.boundary {
@@ -644,7 +837,7 @@ impl<'n> ShardedSimulator<'n> {
             publish.push(pubs);
         }
 
-        Ok(ShardedSimulator {
+        ShardedSimulator {
             nl,
             head,
             shards,
@@ -659,7 +852,7 @@ impl<'n> ShardedSimulator<'n> {
             cycles_pending: 0,
             staged_faults: None,
             agg: Activity::new(nl.insts.len()),
-        })
+        }
     }
 
     /// Install a fault overlay; every part receives a clone and forces
@@ -763,9 +956,9 @@ impl<'n> ShardedSimulator<'n> {
         debug_assert!(lane < self.lanes);
         let ni = net.0 as usize;
         let word = match self.owner[ni] {
-            0 => self.tail.values[ni],
-            1 => self.head.values[ni],
-            o => self.shards[o as usize - 2].values[ni],
+            0 => self.tail.values()[ni],
+            1 => self.head.values()[ni],
+            o => self.shards[o as usize - 2].values()[ni],
         };
         word >> lane & 1 == 1
     }
@@ -835,9 +1028,10 @@ impl<'n> ShardedSimulator<'n> {
                             );
                         }
                         shard.settle_commit(job.gclk_edge, job.mask);
+                        let vals = shard.values();
                         let out: Vec<u64> = pub_nets
                             .iter()
-                            .map(|n| shard.values[n.0 as usize])
+                            .map(|n| vals[n.0 as usize])
                             .collect();
                         if res_tx.send((s, out)).is_err() {
                             break;
@@ -859,7 +1053,7 @@ impl<'n> ShardedSimulator<'n> {
                 );
                 broadcast.extend_from_slice(&tick.inputs);
                 for &hn in head_outs {
-                    broadcast.push((hn, head.values[hn.0 as usize]));
+                    broadcast.push((hn, head.values()[hn.0 as usize]));
                 }
                 let job = Job {
                     inputs: Arc::new(broadcast),
@@ -879,7 +1073,7 @@ impl<'n> ShardedSimulator<'n> {
                 tail.settle_commit(tick.gclk_edge, mask);
                 cycle += 1;
                 pending += active;
-                let view = MainView { values: &tail.values };
+                let view = MainView { values: tail.values() };
                 observe(t, &view);
             }
             drop(job_txs);
@@ -894,14 +1088,14 @@ impl<'n> ShardedSimulator<'n> {
     /// [`ShardedSimulator::activity`] always returns complete totals
     /// and external resets through `activity_mut` stay consistent.
     fn fold(&mut self) {
-        self.agg.merge(&self.head.activity);
-        self.head.activity.reset();
+        self.agg.merge(self.head.activity_mut());
+        self.head.activity_mut().reset();
         for s in &mut self.shards {
-            self.agg.merge(&s.activity);
-            s.activity.reset();
+            self.agg.merge(s.activity_mut());
+            s.activity_mut().reset();
         }
-        self.agg.merge(&self.tail.activity);
-        self.tail.activity.reset();
+        self.agg.merge(self.tail.activity_mut());
+        self.tail.activity_mut().reset();
         self.agg.cycles += self.cycles_pending;
         self.cycles_pending = 0;
     }
@@ -917,7 +1111,7 @@ impl<'n> ShardedSimulator<'n> {
     }
 }
 
-impl super::SimEngine for ShardedSimulator<'_> {
+impl<P: TickPart> super::SimEngine for ShardedSimulator<'_, P> {
     fn lanes(&self) -> usize {
         self.lanes
     }
@@ -1002,6 +1196,53 @@ mod tests {
                 let w1 = rng;
                 let inputs =
                     [(nl.inputs[0], w0), (nl.inputs[1], w1)];
+                sh.tick_lanes(&inputs, gamma);
+                pk.tick(&inputs, gamma);
+                for net in 0..nl.n_nets() {
+                    let id = NetId(net as u32);
+                    for lane in 0..8 {
+                        assert_eq!(
+                            sh.get(id, lane),
+                            pk.get(id, lane),
+                            "threads {threads} tick {t} net {net} \
+                             lane {lane}"
+                        );
+                    }
+                }
+            }
+            assert_eq!(sh.activity().toggles, pk.activity.toggles);
+            assert_eq!(sh.activity().clock_ticks, pk.activity.clock_ticks);
+            assert_eq!(sh.activity().cycles, pk.activity.cycles);
+        }
+    }
+
+    /// Compiled-sharded (one optimized tape per partition part) vs
+    /// packed: every net, every lane, every tick, plus activity.  The
+    /// coalesce pass must be dropped automatically — fused pairs may
+    /// not straddle a partition boundary.
+    #[test]
+    fn compiled_sharded_matches_packed_engine() {
+        let lib = Library::asap7_only();
+        let nl = blocks_and_voter(&lib);
+        let pm = crate::ir::PassManager::all();
+        for threads in [1usize, 3] {
+            let (mut sh, stats) = ShardedSimulator::new_compiled(
+                &nl, &lib, 8, threads, &[], &pm,
+            )
+            .unwrap();
+            assert!(
+                stats.iter().all(|s| s.pass != "coalesce"),
+                "coalesce must be dropped for sharded tapes"
+            );
+            let mut pk = PackedSimulator::new(&nl, &lib, 8).unwrap();
+            let mut rng = 0x9e37_79b9_7f4a_7c15u64;
+            for t in 0..25u32 {
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let gamma = rng >> 60 & 3 == 0;
+                let w0 = rng;
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let w1 = rng;
+                let inputs = [(nl.inputs[0], w0), (nl.inputs[1], w1)];
                 sh.tick_lanes(&inputs, gamma);
                 pk.tick(&inputs, gamma);
                 for net in 0..nl.n_nets() {

@@ -1,0 +1,515 @@
+//! Single-source combinational truth tables.
+//!
+//! Every place that needs to know what a simple combinational cell
+//! *computes* — the scalar/packed kernels in [`super::eval`], the BLIF
+//! `.names` covers in [`crate::interop::blif`], and the word-level IR
+//! lowering in [`crate::ir`] — derives it from one definition here:
+//! [`Gate::truth`].  A [`Truth`] is an ON-set bitmask over input
+//! minterms (input `j` contributes bit `j` of the minterm index), so a
+//! table is a single `u16` for up to four inputs.
+//!
+//! [`Gate`] is the closed opcode set of the compiled tape engine
+//! ([`crate::sim::compiled`]).  *Closed* means: cofactoring any gate's
+//! truth table against a constant input — after dropping inputs the
+//! residue no longer depends on — lands back in the set (possibly with
+//! reordered operands).  The IR constant-folding pass relies on this:
+//! it specializes ops with [`Truth::cofactor`] + [`from_truth`] and
+//! never has to invent an op the tape cannot execute.  Closure is
+//! enforced by an exhaustive test below, not by convention.
+
+use crate::cells::{CellKind, MacroKind};
+
+/// Truth table of a combinational function of up to 4 inputs.
+///
+/// Bit `m` of `on` is the output for the input minterm `m`, where input
+/// `j` contributes bit `j` of `m` (input 0 is the least-significant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Truth {
+    /// Input count (0..=4).
+    pub n_ins: u8,
+    /// ON-set mask over the `2^n_ins` minterms.
+    pub on: u16,
+}
+
+impl Truth {
+    /// Build a table, masking `on` to the valid minterm range.
+    pub fn new(n_ins: u8, on: u16) -> Truth {
+        assert!(n_ins <= 4, "truth tables cover at most 4 inputs");
+        let full = if n_ins == 4 { !0 } else { (1u16 << (1 << n_ins)) - 1 };
+        Truth { n_ins, on: on & full }
+    }
+
+    /// Output for one minterm.
+    #[inline]
+    pub fn eval(&self, minterm: usize) -> bool {
+        (self.on >> minterm) & 1 == 1
+    }
+
+    /// Restrict input `pos` to the constant `val` (one fewer input).
+    pub fn cofactor(&self, pos: usize, val: bool) -> Truth {
+        let n = self.n_ins as usize;
+        assert!(pos < n);
+        let mut on = 0u16;
+        for m in 0..1usize << (n - 1) {
+            // Re-expand the reduced minterm with `val` inserted at `pos`.
+            let low = m & ((1 << pos) - 1);
+            let high = (m >> pos) << (pos + 1);
+            let full = low | high | ((val as usize) << pos);
+            if self.eval(full) {
+                on |= 1 << m;
+            }
+        }
+        Truth::new(self.n_ins - 1, on)
+    }
+
+    /// Does the output depend on input `pos` at all?
+    pub fn depends_on(&self, pos: usize) -> bool {
+        self.cofactor(pos, false) != self.cofactor(pos, true)
+    }
+}
+
+/// Drop inputs the function does not depend on, removing the matching
+/// entries of the caller's operand list in lock-step.
+pub fn reduce<T>(mut t: Truth, ins: &mut Vec<T>) -> Truth {
+    let mut pos = 0;
+    while pos < t.n_ins as usize {
+        if t.depends_on(pos) {
+            pos += 1;
+        } else {
+            t = t.cofactor(pos, false);
+            ins.remove(pos);
+        }
+    }
+    t
+}
+
+/// Opcode set of the compiled tape engine: every simple combinational
+/// cell, plus the operand-negated 2-input forms that cofactoring can
+/// produce (`AndN2` = `a & !b`, `OrN2` = `a | !b`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gate {
+    /// Constant 0 (lowered `Tie0`).
+    Const0,
+    /// Constant 1 (lowered `Tie1`).
+    Const1,
+    /// `a`
+    Buf,
+    /// `!a`
+    Inv,
+    /// `a & b`
+    And2,
+    /// `!(a & b)`
+    Nand2,
+    /// `a | b`
+    Or2,
+    /// `!(a | b)`
+    Nor2,
+    /// `a ^ b`
+    Xor2,
+    /// `!(a ^ b)`
+    Xnor2,
+    /// `a & !b`
+    AndN2,
+    /// `a | !b` (also the `LessEqual` macro)
+    OrN2,
+    /// `a & b & c`
+    And3,
+    /// `!(a & b & c)`
+    Nand3,
+    /// `a | b | c`
+    Or3,
+    /// `!(a | b | c)`
+    Nor3,
+    /// `a ^ b ^ c`
+    Xor3,
+    /// `(a & b) | (b & c) | (a & c)`
+    Maj3,
+    /// `!((a & b) | c)`
+    Aoi21,
+    /// `!((a | b) & c)`
+    Oai21,
+    /// `s ? d1 : d0` with operands `(d0, d1, s)` (also `Mux2Gdi`)
+    Mux2,
+    /// `!(a & b & c & d)`
+    Nand4,
+}
+
+impl Gate {
+    /// Every opcode, in a fixed canonical order ([`from_truth`] prefers
+    /// earlier entries).
+    pub const ALL: [Gate; 22] = [
+        Gate::Const0,
+        Gate::Const1,
+        Gate::Buf,
+        Gate::Inv,
+        Gate::And2,
+        Gate::Nand2,
+        Gate::Or2,
+        Gate::Nor2,
+        Gate::Xor2,
+        Gate::Xnor2,
+        Gate::AndN2,
+        Gate::OrN2,
+        Gate::And3,
+        Gate::Nand3,
+        Gate::Or3,
+        Gate::Nor3,
+        Gate::Xor3,
+        Gate::Maj3,
+        Gate::Aoi21,
+        Gate::Oai21,
+        Gate::Mux2,
+        Gate::Nand4,
+    ];
+
+    /// The defining truth table — the single source every consumer
+    /// derives from.
+    pub fn truth(self) -> Truth {
+        let (n, on) = match self {
+            Gate::Const0 => (0, 0b0),
+            Gate::Const1 => (0, 0b1),
+            Gate::Buf => (1, 0b10),
+            Gate::Inv => (1, 0b01),
+            Gate::And2 => (2, 0x8),
+            Gate::Nand2 => (2, 0x7),
+            Gate::Or2 => (2, 0xE),
+            Gate::Nor2 => (2, 0x1),
+            Gate::Xor2 => (2, 0x6),
+            Gate::Xnor2 => (2, 0x9),
+            Gate::AndN2 => (2, 0x2),
+            Gate::OrN2 => (2, 0xB),
+            Gate::And3 => (3, 0x80),
+            Gate::Nand3 => (3, 0x7F),
+            Gate::Or3 => (3, 0xFE),
+            Gate::Nor3 => (3, 0x01),
+            Gate::Xor3 => (3, 0x96),
+            Gate::Maj3 => (3, 0xE8),
+            Gate::Aoi21 => (3, 0x07),
+            Gate::Oai21 => (3, 0x1F),
+            Gate::Mux2 => (3, 0xCA),
+            Gate::Nand4 => (4, 0x7FFF),
+        };
+        Truth::new(n, on)
+    }
+
+    /// Input count.
+    #[inline]
+    pub fn n_ins(self) -> usize {
+        self.truth().n_ins as usize
+    }
+
+    /// Stable token (bench reports, debug output).
+    pub fn label(self) -> &'static str {
+        match self {
+            Gate::Const0 => "const0",
+            Gate::Const1 => "const1",
+            Gate::Buf => "buf",
+            Gate::Inv => "inv",
+            Gate::And2 => "and2",
+            Gate::Nand2 => "nand2",
+            Gate::Or2 => "or2",
+            Gate::Nor2 => "nor2",
+            Gate::Xor2 => "xor2",
+            Gate::Xnor2 => "xnor2",
+            Gate::AndN2 => "andn2",
+            Gate::OrN2 => "orn2",
+            Gate::And3 => "and3",
+            Gate::Nand3 => "nand3",
+            Gate::Or3 => "or3",
+            Gate::Nor3 => "nor3",
+            Gate::Xor3 => "xor3",
+            Gate::Maj3 => "maj3",
+            Gate::Aoi21 => "aoi21",
+            Gate::Oai21 => "oai21",
+            Gate::Mux2 => "mux2",
+            Gate::Nand4 => "nand4",
+        }
+    }
+}
+
+/// The opcode a simple combinational cell lowers to, with operands in
+/// pin order.  `None` for sequential cells and the wide macros.
+pub fn gate_for(kind: CellKind) -> Option<Gate> {
+    use CellKind::*;
+    Some(match kind {
+        Tie0 => Gate::Const0,
+        Tie1 => Gate::Const1,
+        Inv => Gate::Inv,
+        Buf => Gate::Buf,
+        Nand2 => Gate::Nand2,
+        Nand3 => Gate::Nand3,
+        Nand4 => Gate::Nand4,
+        Nor2 => Gate::Nor2,
+        Nor3 => Gate::Nor3,
+        And2 => Gate::And2,
+        And3 => Gate::And3,
+        Or2 => Gate::Or2,
+        Or3 => Gate::Or3,
+        Xor2 => Gate::Xor2,
+        Xnor2 => Gate::Xnor2,
+        Xor3 => Gate::Xor3,
+        Maj3 => Gate::Maj3,
+        Aoi21 => Gate::Aoi21,
+        Oai21 => Gate::Oai21,
+        Mux2 => Gate::Mux2,
+        Macro(MacroKind::LessEqual) => Gate::OrN2,
+        Macro(MacroKind::Mux2Gdi) => Gate::Mux2,
+        _ => return None,
+    })
+}
+
+/// Truth table of a simple combinational cell (see [`gate_for`]).
+pub fn comb_truth(kind: CellKind) -> Option<Truth> {
+    gate_for(kind).map(Gate::truth)
+}
+
+/// Recognize a truth table as an opcode plus an operand order.
+///
+/// Returns `(g, perm)` such that operand `k` of `g` is the caller's
+/// input `perm[k]`; `perm` entries beyond the gate's arity are unused.
+/// Inputs the table does not depend on must already be dropped (see
+/// [`reduce`]).  The search prefers earlier [`Gate::ALL`] entries and
+/// the identity operand order, so recognition is deterministic.
+pub fn from_truth(t: &Truth) -> Option<(Gate, [usize; 4])> {
+    let n = t.n_ins as usize;
+    for g in Gate::ALL {
+        let gt = g.truth();
+        if gt.n_ins != t.n_ins {
+            continue;
+        }
+        for perm in permutations(n) {
+            // Candidate matches when feeding caller input `perm[k]` to
+            // gate operand `k` reproduces `t` on every minterm.
+            let mut ok = true;
+            for m in 0..1usize << n {
+                let mut gm = 0usize;
+                for (k, &p) in perm.iter().take(n).enumerate() {
+                    gm |= ((m >> p) & 1) << k;
+                }
+                if gt.eval(gm) != t.eval(m) {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                return Some((g, perm));
+            }
+        }
+    }
+    None
+}
+
+/// All operand orders of `n <= 4` inputs, identity first.
+fn permutations(n: usize) -> Vec<[usize; 4]> {
+    let mut out = Vec::new();
+    let mut cur = [0usize; 4];
+    let mut used = [false; 4];
+    fn rec(
+        n: usize,
+        depth: usize,
+        cur: &mut [usize; 4],
+        used: &mut [bool; 4],
+        out: &mut Vec<[usize; 4]>,
+    ) {
+        if depth == n {
+            out.push(*cur);
+            return;
+        }
+        for v in 0..n {
+            if !used[v] {
+                used[v] = true;
+                cur[depth] = v;
+                rec(n, depth + 1, cur, used, out);
+                used[v] = false;
+            }
+        }
+    }
+    if n == 0 {
+        out.push(cur);
+    } else {
+        rec(n, 0, &mut cur, &mut used, &mut out);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Word kernels: 64 lanes per u64, bit k = lane k.
+
+/// Evaluate a gate over packed lane words (unused operands ignored).
+///
+/// Branch-free per opcode; the tape engine's inner loop compiles each
+/// arm to a handful of bitwise ops.
+#[inline(always)]
+pub fn eval_gate_word(g: Gate, x: [u64; 4]) -> u64 {
+    let [a, b, c, d] = x;
+    match g {
+        Gate::Const0 => 0,
+        Gate::Const1 => !0,
+        Gate::Buf => a,
+        Gate::Inv => !a,
+        Gate::And2 => a & b,
+        Gate::Nand2 => !(a & b),
+        Gate::Or2 => a | b,
+        Gate::Nor2 => !(a | b),
+        Gate::Xor2 => a ^ b,
+        Gate::Xnor2 => !(a ^ b),
+        Gate::AndN2 => a & !b,
+        Gate::OrN2 => a | !b,
+        Gate::And3 => a & b & c,
+        Gate::Nand3 => !(a & b & c),
+        Gate::Or3 => a | b | c,
+        Gate::Nor3 => !(a | b | c),
+        Gate::Xor3 => a ^ b ^ c,
+        Gate::Maj3 => (a & b) | (b & c) | (a & c),
+        Gate::Aoi21 => !((a & b) | c),
+        Gate::Oai21 => !((a | b) & c),
+        Gate::Mux2 => (c & b) | (!c & a),
+        Gate::Nand4 => !(a & b & c & d),
+    }
+}
+
+/// Scalar gate evaluation via the word kernel (tests, BLIF covers).
+pub fn eval_gate_scalar(g: Gate, ins: &[bool]) -> bool {
+    let mut x = [0u64; 4];
+    for (w, &v) in x.iter_mut().zip(ins.iter()) {
+        *w = if v { !0 } else { 0 };
+    }
+    eval_gate_word(g, x) & 1 == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The word kernel is a second implementation of every opcode;
+    /// sweep it against the defining truth table on every minterm.
+    #[test]
+    fn word_kernels_match_truth_tables_exhaustively() {
+        for g in Gate::ALL {
+            let t = g.truth();
+            let n = t.n_ins as usize;
+            for m in 0..1usize << n {
+                let ins: Vec<bool> = (0..n).map(|j| (m >> j) & 1 == 1).collect();
+                assert_eq!(
+                    eval_gate_scalar(g, &ins),
+                    t.eval(m),
+                    "{} minterm {m}",
+                    g.label()
+                );
+            }
+        }
+    }
+
+    /// `comb_truth` must agree with the scalar cell reference for every
+    /// kind it covers — this anchors the single-source claim.
+    #[test]
+    fn comb_truth_matches_eval_comb_reference() {
+        use crate::sim::eval::eval_comb;
+        for kind in [
+            CellKind::Tie0,
+            CellKind::Tie1,
+            CellKind::Inv,
+            CellKind::Buf,
+            CellKind::Nand2,
+            CellKind::Nand3,
+            CellKind::Nand4,
+            CellKind::Nor2,
+            CellKind::Nor3,
+            CellKind::And2,
+            CellKind::And3,
+            CellKind::Or2,
+            CellKind::Or3,
+            CellKind::Xor2,
+            CellKind::Xnor2,
+            CellKind::Xor3,
+            CellKind::Maj3,
+            CellKind::Aoi21,
+            CellKind::Oai21,
+            CellKind::Mux2,
+            CellKind::Macro(MacroKind::LessEqual),
+            CellKind::Macro(MacroKind::Mux2Gdi),
+        ] {
+            let t = comb_truth(kind).expect("simple comb kind");
+            let (n_in, n_out, n_state) = kind.pins();
+            assert_eq!(n_out, 1, "{kind:?}");
+            assert_eq!(n_state, 0, "{kind:?}");
+            assert_eq!(t.n_ins as usize, n_in, "{kind:?}");
+            for m in 0..1usize << n_in {
+                let ins: Vec<bool> =
+                    (0..n_in).map(|j| (m >> j) & 1 == 1).collect();
+                let mut outs = [false];
+                eval_comb(kind, &ins, &[], &mut outs);
+                assert_eq!(t.eval(m), outs[0], "{kind:?} minterm {m}");
+            }
+        }
+        assert!(comb_truth(CellKind::Dff).is_none());
+        assert!(comb_truth(CellKind::Macro(MacroKind::SynOutput)).is_none());
+    }
+
+    #[test]
+    fn from_truth_recognizes_every_gate_identically() {
+        for g in Gate::ALL {
+            let (rg, perm) = from_truth(&g.truth()).expect("in set");
+            assert_eq!(rg, g, "{}", g.label());
+            for (k, &p) in perm.iter().take(g.n_ins()).enumerate() {
+                assert_eq!(k, p, "{} identity order", g.label());
+            }
+        }
+    }
+
+    #[test]
+    fn from_truth_handles_swapped_negated_operands() {
+        // !a & b — AndN2 with swapped operands.
+        let (g, perm) = from_truth(&Truth::new(2, 0x4)).unwrap();
+        assert_eq!(g, Gate::AndN2);
+        assert_eq!(&perm[..2], &[1, 0]);
+        // !a | b — OrN2 with swapped operands.
+        let (g, perm) = from_truth(&Truth::new(2, 0xD)).unwrap();
+        assert_eq!(g, Gate::OrN2);
+        assert_eq!(&perm[..2], &[1, 0]);
+    }
+
+    /// The opcode set is closed under constant cofactoring: whatever a
+    /// constant input reduces a gate to (after dropping inputs the
+    /// residue ignores) is again a gate.  The fold pass depends on it.
+    #[test]
+    fn gate_set_is_closed_under_cofactoring() {
+        for g in Gate::ALL {
+            let t = g.truth();
+            for pos in 0..t.n_ins as usize {
+                for val in [false, true] {
+                    let mut ins: Vec<usize> =
+                        (0..t.n_ins as usize - 1).collect();
+                    let r = reduce(t.cofactor(pos, val), &mut ins);
+                    assert!(
+                        from_truth(&r).is_some(),
+                        "{} cofactor pos={pos} val={val} escapes the set",
+                        g.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cofactor_and_dependence_basics() {
+        let mux = Gate::Mux2.truth();
+        // s = 1 selects d1; s = 0 selects d0.
+        assert_eq!(mux.cofactor(2, true), Truth::new(2, 0xC)); // = d1
+        assert_eq!(mux.cofactor(2, false), Truth::new(2, 0xA)); // = d0
+        assert!(mux.depends_on(0) && mux.depends_on(1) && mux.depends_on(2));
+        // Aoi21 with a = 0 ignores b: residue reduces to Inv(c).
+        let mut ins = vec!["b", "c"];
+        let r = reduce(Gate::Aoi21.truth().cofactor(0, false), &mut ins);
+        assert_eq!(ins, vec!["c"]);
+        assert_eq!(from_truth(&r).unwrap().0, Gate::Inv);
+    }
+
+    #[test]
+    fn reduce_drops_constant_functions_to_arity_zero() {
+        let mut ins = vec![7u32, 9];
+        let r = reduce(Truth::new(2, 0xF), &mut ins);
+        assert!(ins.is_empty());
+        assert_eq!(from_truth(&r).unwrap().0, Gate::Const1);
+    }
+}

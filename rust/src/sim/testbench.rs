@@ -19,23 +19,28 @@
 //! for Table I power.
 //!
 //! Two drivers share the wave protocol: [`ColumnTestbench`] replays
-//! one wave at a time on the scalar engine, and
-//! [`PackedColumnTestbench`] batches up to 64 waves per pass on the
-//! word-packed engine ([`lane_batches`] chunks a wave list so lane `l`
-//! carries waves `l`, `l+lanes`, … with its own STDP weight state; see
-//! DESIGN.md §7).  [`run_waves_parallel`] additionally cuts the lane
-//! axis across worker threads — bit-identical to the single-thread
-//! packed schedule, because lanes never exchange data (DESIGN.md §8).
+//! one wave at a time on the scalar engine, and the lane-batched
+//! [`WordTestbench`] batches up to 64 waves per pass on any word-level
+//! engine implementing [`LaneEngine`] — the packed interpreter
+//! ([`PackedColumnTestbench`]) or the compiled tape engine
+//! ([`CompiledColumnTestbench`]), bit-identically.  [`lane_batches`]
+//! chunks a wave list so lane `l` carries waves `l`, `l+lanes`, … with
+//! its own STDP weight state (DESIGN.md §7).  [`run_waves_parallel`]
+//! and [`run_waves_parallel_compiled`] additionally cut the lane axis
+//! across worker threads — bit-identical to the single-thread schedule,
+//! because lanes never exchange data (DESIGN.md §8).
 
 use crate::arch::T_STEPS;
 use crate::cells::Library;
 use crate::error::Result;
-use crate::fault::{CompiledFaults, FaultProgram, SeuFlip};
+use crate::fault::{CompiledFaults, FaultOverlay, FaultProgram, SeuFlip};
+use crate::ir::{lower, PassManager, PassStats};
 use crate::netlist::column::{ColumnPorts, BRV_PER_SYN};
 use crate::netlist::{NetId, Netlist};
 use crate::tnn::stdp::{brv_lanes, RandPair, StdpParams};
 use crate::tnn::INF;
 
+use super::compiled::CompiledSimulator;
 use super::packed::{PackedSimulator, MAX_LANES};
 use super::Simulator;
 
@@ -250,7 +255,7 @@ fn lane_events(
 ///
 /// Yields `(first_wave_index, chunk)` pairs of at most `lanes` waves
 /// (clamped to `1..=`[`MAX_LANES`]).  Feeding consecutive chunks to
-/// [`PackedColumnTestbench::run_wave_lanes`] gives every lane a strided
+/// [`WordTestbench::run_wave_lanes`] gives every lane a strided
 /// subsequence of the waves (lane `l` sees waves `l`, `l+lanes`, …), so
 /// per-lane state such as STDP weights evolves sequentially *within*
 /// each lane.
@@ -264,40 +269,185 @@ pub fn lane_batches<'a>(
         .map(move |(c, chunk)| (c * lanes, chunk))
 }
 
-/// Lane-batched testbench over a column netlist: the packed-engine
-/// counterpart of [`ColumnTestbench`], driving up to 64 waves per pass.
-pub struct PackedColumnTestbench<'n> {
+/// Word-level lane-parallel engine the lane-batched testbench can
+/// drive: the seam that lets [`WordTestbench`] run the identical wave
+/// schedule on the packed interpreter or the compiled tape engine.
+pub trait LaneEngine {
+    /// Lane capacity the engine was built for.
+    fn lanes(&self) -> usize;
+    /// Shrink the activity-counted lane set to the first `n` lanes.
+    fn set_active_lanes(&mut self, n: usize);
+    /// Run one `aclk` cycle across all lanes.
+    fn tick(&mut self, inputs: &[(NetId, u64)], gclk_edge: bool);
+    /// Current value of a net in one lane.
+    fn get(&self, net: NetId, lane: usize) -> bool;
+    /// Aggregated switching-activity counters.
+    fn activity(&self) -> &super::Activity;
+    /// Install a static fault overlay, or refuse it when the engine
+    /// cannot force a site faithfully (compiled tapes after folding).
+    fn install_overlay(&mut self, overlay: FaultOverlay) -> Result<()>;
+    /// Stage transient events (glitches, SEUs) for the next tick.
+    fn stage_tick_events(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+    );
+}
+
+impl LaneEngine for PackedSimulator<'_> {
+    fn lanes(&self) -> usize {
+        PackedSimulator::lanes(self)
+    }
+
+    fn set_active_lanes(&mut self, n: usize) {
+        PackedSimulator::set_active_lanes(self, n);
+    }
+
+    fn tick(&mut self, inputs: &[(NetId, u64)], gclk_edge: bool) {
+        PackedSimulator::tick(self, inputs, gclk_edge);
+    }
+
+    fn get(&self, net: NetId, lane: usize) -> bool {
+        PackedSimulator::get(self, net, lane)
+    }
+
+    fn activity(&self) -> &super::Activity {
+        &self.activity
+    }
+
+    fn install_overlay(&mut self, overlay: FaultOverlay) -> Result<()> {
+        PackedSimulator::install_faults(self, overlay);
+        Ok(())
+    }
+
+    fn stage_tick_events(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+    ) {
+        PackedSimulator::set_tick_faults(self, glitches, seus);
+    }
+}
+
+impl LaneEngine for CompiledSimulator {
+    fn lanes(&self) -> usize {
+        CompiledSimulator::lanes(self)
+    }
+
+    fn set_active_lanes(&mut self, n: usize) {
+        CompiledSimulator::set_active_lanes(self, n);
+    }
+
+    fn tick(&mut self, inputs: &[(NetId, u64)], gclk_edge: bool) {
+        CompiledSimulator::tick(self, inputs, gclk_edge);
+    }
+
+    fn get(&self, net: NetId, lane: usize) -> bool {
+        CompiledSimulator::get(self, net, lane)
+    }
+
+    fn activity(&self) -> &super::Activity {
+        CompiledSimulator::activity(self)
+    }
+
+    fn install_overlay(&mut self, overlay: FaultOverlay) -> Result<()> {
+        CompiledSimulator::install_faults(self, overlay)
+    }
+
+    fn stage_tick_events(
+        &mut self,
+        glitches: &[(NetId, u64)],
+        seus: &[SeuFlip],
+    ) {
+        CompiledSimulator::set_tick_faults(self, glitches, seus);
+    }
+}
+
+/// Lane-batched testbench over a column netlist: the word-level
+/// counterpart of [`ColumnTestbench`], driving up to 64 waves per pass
+/// on any [`LaneEngine`].
+pub struct WordTestbench<'n, E: LaneEngine> {
     nl: &'n Netlist,
     ports: &'n ColumnPorts,
-    sim: PackedSimulator<'n>,
+    sim: E,
     p: usize,
     q: usize,
     inputs: Vec<(NetId, u64)>,
 }
 
+/// [`WordTestbench`] over the packed interpreter.
+pub type PackedColumnTestbench<'n> = WordTestbench<'n, PackedSimulator<'n>>;
+
+/// [`WordTestbench`] over the compiled tape engine.
+pub type CompiledColumnTestbench<'n> = WordTestbench<'n, CompiledSimulator>;
+
 impl<'n> PackedColumnTestbench<'n> {
     /// Attach to an elaborated column with `lanes` (1..=64) stimulus
-    /// lanes.
+    /// lanes on the packed interpreter.
     pub fn new(
         nl: &'n Netlist,
         ports: &'n ColumnPorts,
         lib: &'n Library,
         lanes: usize,
     ) -> Result<Self> {
-        let sim = PackedSimulator::new(nl, lib, lanes)?;
-        Ok(PackedColumnTestbench {
+        Ok(WordTestbench::attach(nl, ports, PackedSimulator::new(nl, lib, lanes)?))
+    }
+}
+
+impl<'n> CompiledColumnTestbench<'n> {
+    /// Attach to an elaborated column with `lanes` (1..=64) stimulus
+    /// lanes on the compiled tape engine (full pass pipeline).
+    pub fn new(
+        nl: &'n Netlist,
+        ports: &'n ColumnPorts,
+        lib: &Library,
+        lanes: usize,
+    ) -> Result<Self> {
+        Ok(WordTestbench::attach(
+            nl,
+            ports,
+            CompiledSimulator::new(nl, lib, lanes)?,
+        ))
+    }
+
+    /// Like [`CompiledColumnTestbench::new`] with an explicit pass
+    /// pipeline.
+    pub fn with_passes(
+        nl: &'n Netlist,
+        ports: &'n ColumnPorts,
+        lib: &Library,
+        lanes: usize,
+        pm: &PassManager,
+    ) -> Result<Self> {
+        Ok(WordTestbench::attach(
+            nl,
+            ports,
+            CompiledSimulator::with_passes(nl, lib, lanes, pm)?,
+        ))
+    }
+}
+
+impl<'n, E: LaneEngine> WordTestbench<'n, E> {
+    /// Attach a prebuilt engine to its elaborated column.
+    pub fn attach(nl: &'n Netlist, ports: &'n ColumnPorts, sim: E) -> Self {
+        WordTestbench {
             nl,
             ports,
             p: ports.x.len(),
             q: ports.fires.len(),
             sim,
             inputs: Vec::new(),
-        })
+        }
     }
 
     /// Immutable access to the aggregated activity counters.
     pub fn activity(&self) -> &super::Activity {
-        &self.sim.activity
+        self.sim.activity()
+    }
+
+    /// Underlying engine.
+    pub fn engine(&self) -> &E {
+        &self.sim
     }
 
     /// Underlying netlist.
@@ -311,9 +461,14 @@ impl<'n> PackedColumnTestbench<'n> {
     }
 
     /// Install a fault overlay on the underlying engine (static
-    /// stuck/delay masks shared by all lanes).
-    pub fn install_faults(&mut self, overlay: crate::fault::FaultOverlay) {
-        self.sim.install_faults(overlay);
+    /// stuck/delay masks shared by all lanes).  Fails when the engine
+    /// cannot force a site faithfully — the compiled engine after a
+    /// site was folded away; callers then fall back to an interpreter.
+    pub fn install_faults(
+        &mut self,
+        overlay: crate::fault::FaultOverlay,
+    ) -> Result<()> {
+        self.sim.install_overlay(overlay)
     }
 
     /// Run one wave across `k ≤ lanes` stimuli in parallel: lane `l`
@@ -329,7 +484,7 @@ impl<'n> PackedColumnTestbench<'n> {
         self.run_wave_lanes_inner(spike_times, rand, params, None)
     }
 
-    /// [`PackedColumnTestbench::run_wave_lanes`] under a transient
+    /// [`WordTestbench::run_wave_lanes`] under a transient
     /// fault schedule: lane `l` carries global wave `base_wave + l`,
     /// and the [`FaultProgram`]'s events for those waves are staged
     /// lane-masked before the matching tick.
@@ -420,7 +575,7 @@ impl<'n> PackedColumnTestbench<'n> {
                 if !prog.is_empty() {
                     let (g, s) = lane_events(base, k, cyc as u16, prog);
                     if !g.is_empty() || !s.is_empty() {
-                        self.sim.set_tick_faults(&g, &s);
+                        self.sim.stage_tick_events(&g, &s);
                     }
                 }
             }
@@ -476,7 +631,7 @@ impl<'n> PackedColumnTestbench<'n> {
         out
     }
 
-    /// [`PackedColumnTestbench::run_waves`] under a transient fault
+    /// [`WordTestbench::run_waves`] under a transient fault
     /// schedule: chunk `c`'s first wave index (`c*lanes`) keys the
     /// lookup, so event placement matches the scalar wave order.
     pub fn run_waves_faulted(
@@ -515,7 +670,7 @@ impl<'n> PackedColumnTestbench<'n> {
 
 /// Run a whole stimulus set through the packed wave schedule on
 /// `threads` worker threads, bit-identically to a single-thread
-/// [`PackedColumnTestbench::run_waves`] with the same `lanes`.
+/// [`WordTestbench::run_waves`] with the same `lanes`.
 ///
 /// The canonical schedule assigns wave `w` to chunk `w / lanes`, lane
 /// `w % lanes`, and lanes never exchange data — so the lane axis can be
@@ -539,7 +694,15 @@ pub fn run_waves_parallel(
     params: &StdpParams,
 ) -> Result<(Vec<WaveResult>, super::Activity)> {
     run_waves_parallel_inner(
-        nl, ports, lib, lanes, threads, stim, rand, params, None,
+        nl,
+        ports,
+        lanes,
+        threads,
+        stim,
+        rand,
+        params,
+        None,
+        |w| PackedSimulator::new(nl, lib, w),
     )
 }
 
@@ -562,18 +725,27 @@ pub fn run_waves_parallel_faulted(
     run_waves_parallel_inner(
         nl,
         ports,
-        lib,
         lanes,
         threads,
         stim,
         rand,
         params,
         Some(faults),
+        |w| PackedSimulator::new(nl, lib, w),
     )
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_waves_parallel_inner(
+/// [`run_waves_parallel`] on the compiled tape engine: the netlist is
+/// lowered and optimized by `pm` **once**, then every worker compiles
+/// its own tape from the shared IR — so thread counts only change who
+/// executes which lanes, never the tape.  Returns the per-wave results,
+/// the aggregated activity, and the pass statistics of the shared
+/// optimization run.  With `faults`, installation fails (no silent
+/// fallback) when a forced site was optimized away — precheck with
+/// [`CompiledSimulator::fault_site_lost`] and use an interpreter
+/// engine for such campaigns.
+#[allow(clippy::too_many_arguments)] // run_waves_parallel's set + the pipeline
+pub fn run_waves_parallel_compiled(
     nl: &Netlist,
     ports: &ColumnPorts,
     lib: &Library,
@@ -582,17 +754,52 @@ fn run_waves_parallel_inner(
     stim: &[Vec<i32>],
     rand: &[Vec<RandPair>],
     params: &StdpParams,
+    pm: &PassManager,
     faults: Option<&CompiledFaults>,
-) -> Result<(Vec<WaveResult>, super::Activity)> {
+) -> Result<(Vec<WaveResult>, super::Activity, Vec<PassStats>)> {
+    let mut ir = lower(nl, lib)?;
+    let stats = pm.run(&mut ir);
+    let ir = &ir;
+    let passes = pm.canonical();
+    let (results, activity) = run_waves_parallel_inner(
+        nl,
+        ports,
+        lanes,
+        threads,
+        stim,
+        rand,
+        params,
+        faults,
+        |w| CompiledSimulator::from_ir(ir, Vec::new(), passes.clone(), w),
+    )?;
+    Ok((results, activity, stats))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_waves_parallel_inner<E, F>(
+    nl: &Netlist,
+    ports: &ColumnPorts,
+    lanes: usize,
+    threads: usize,
+    stim: &[Vec<i32>],
+    rand: &[Vec<RandPair>],
+    params: &StdpParams,
+    faults: Option<&CompiledFaults>,
+    make: F,
+) -> Result<(Vec<WaveResult>, super::Activity)>
+where
+    E: LaneEngine,
+    F: Fn(usize) -> Result<E> + Sync,
+{
     assert_eq!(stim.len(), rand.len());
     let lanes = lanes.clamp(1, MAX_LANES);
     let threads = threads.max(1).min(lanes);
     let n = stim.len();
     if threads == 1 || n == 0 {
-        let mut tb = PackedColumnTestbench::new(nl, ports, lib, lanes)?;
+        let mut tb = WordTestbench::attach(nl, ports, make(lanes)?);
         let results = match faults {
             Some(f) => {
-                tb.install_faults(f.overlay.clone());
+                tb.install_faults(f.overlay.clone())?;
                 tb.run_waves_faulted(stim, rand, params, &f.program)
             }
             None => tb.run_waves(stim, rand, params),
@@ -604,6 +811,7 @@ fn run_waves_parallel_inner(
     let extra = lanes % threads;
     let mut out: Vec<Option<WaveResult>> = (0..n).map(|_| None).collect();
     let mut activity = super::Activity::new(nl.insts.len());
+    let make = &make;
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::with_capacity(threads);
         let mut lo = 0usize;
@@ -614,10 +822,9 @@ fn run_waves_parallel_inner(
             type WorkerOut =
                 (Vec<(usize, Vec<WaveResult>)>, super::Activity);
             handles.push(scope.spawn(move || -> Result<WorkerOut> {
-                let mut tb =
-                    PackedColumnTestbench::new(nl, ports, lib, width)?;
+                let mut tb = WordTestbench::attach(nl, ports, make(width)?);
                 if let Some(f) = faults {
-                    tb.install_faults(f.overlay.clone());
+                    tb.install_faults(f.overlay.clone())?;
                 }
                 let mut parts: Vec<(usize, Vec<WaveResult>)> = Vec::new();
                 let mut chunk = 0usize;

@@ -1,0 +1,456 @@
+//! Semantics-preservation properties of the IR pass framework and the
+//! compiled tape engine (DESIGN.md §14).
+//!
+//! Every pass — alone and composed into the full pipeline — must be
+//! bit-exact against the packed interpreter: net values every tick,
+//! spikes/weights of every wave, and the aggregated activity counters,
+//! at any lane/thread/shard count.  The interpreters are the oracle;
+//! the compiled engine never gets to be "close".
+//!
+//! Like `tests/proptests.rs`, these are seeded randomized sweeps (the
+//! offline vendor set has no `proptest`): failure messages carry the
+//! seed, making every case reproducible.
+
+use tnn7::arch::INF;
+use tnn7::cells::Library;
+use tnn7::data::digits::XorShift;
+use tnn7::fault::{
+    fingerprint, run_campaign, CampaignEngine, CampaignSpec, FaultClass,
+};
+use tnn7::ir::PassManager;
+use tnn7::netlist::column::{build_column, ColumnSpec};
+use tnn7::netlist::{Builder, ClockDomain, Flavor, NetId, Netlist};
+use tnn7::sim::testbench::{
+    run_waves_parallel, run_waves_parallel_compiled, ColumnTestbench,
+    CompiledColumnTestbench, PackedColumnTestbench,
+};
+use tnn7::sim::{CompiledSimulator, PackedSimulator, ShardedSimulator};
+use tnn7::tnn::stdp::{RandPair, StdpParams};
+use tnn7::tnn::Lfsr16;
+
+/// Every pipeline the properties sweep: each pass alone, the empty
+/// pipeline, the canonical full pipeline, and one partial composition.
+const PIPELINES: [&str; 7] =
+    ["none", "fold", "dce", "coalesce", "resched", "fold,dce", "all"];
+
+fn rng(seed: u64) -> XorShift {
+    XorShift::new(seed)
+}
+
+/// Random feed-forward netlist mixing combinational gates with aclk-
+/// and gclk-domain registers (same shape as the proptests generator:
+/// no combinational cycles by construction).
+fn random_netlist(lib: &Library, seed: u64) -> Netlist {
+    let mut r = rng(seed);
+    let mut b = Builder::new("rnd", lib);
+    let n_in = 2 + (r.next_u64() % 5) as usize;
+    let mut pool: Vec<NetId> =
+        (0..n_in).map(|i| b.input(format!("x{i}"))).collect();
+    let ops = 10 + (r.next_u64() % 40) as usize;
+    for _ in 0..ops {
+        let a = pool[(r.next_u64() as usize) % pool.len()];
+        let c = pool[(r.next_u64() as usize) % pool.len()];
+        let d = pool[(r.next_u64() as usize) % pool.len()];
+        let n = match r.next_u64() % 8 {
+            0 => b.inv(a),
+            1 => b.and2(a, c),
+            2 => b.or2(a, c),
+            3 => b.xor2(a, c),
+            4 => b.maj3(a, c, d),
+            5 => b.mux2(a, c, d),
+            6 => b.dff(a, ClockDomain::Aclk),
+            _ => b.dff(a, ClockDomain::Gclk),
+        };
+        pool.push(n);
+    }
+    let y = *pool.last().unwrap();
+    b.output(y, "y");
+    b.finish().unwrap()
+}
+
+/// Random column-wave stimulus + BRV schedules (the proptests shape).
+#[allow(clippy::type_complexity)]
+fn column_stimulus(
+    spec: &ColumnSpec,
+    n: usize,
+    seed: u16,
+) -> (Vec<Vec<i32>>, Vec<Vec<RandPair>>) {
+    let mut stim = Lfsr16::new((seed.wrapping_mul(311) ^ 0x5a5a) | 1);
+    let mut lfsr = Lfsr16::new(seed.wrapping_mul(977) | 1);
+    let waves: Vec<Vec<i32>> = (0..n)
+        .map(|_| {
+            (0..spec.p)
+                .map(|_| {
+                    let v = stim.next_u16();
+                    if v & 0x7 == 7 {
+                        INF
+                    } else {
+                        i32::from(v % 8)
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let rands: Vec<Vec<RandPair>> = (0..n)
+        .map(|_| (0..spec.p * spec.q).map(|_| lfsr.draw_pair()).collect())
+        .collect();
+    (waves, rands)
+}
+
+/// INVARIANT: each pass alone (and the full pipeline) preserves every
+/// net value on every lane on every tick, plus the aggregated activity
+/// counters, on random register-mixing netlists — the compiled tape vs
+/// the packed interpreter.
+#[test]
+fn prop_each_pass_bit_identical_per_net_on_random_netlists() {
+    let lib = Library::asap7_only();
+    for seed in 0..6u64 {
+        let nl = random_netlist(&lib, seed + 4200);
+        for spec in PIPELINES {
+            let pm = PassManager::parse(spec).unwrap();
+            let mut r = rng(seed * 131 + 7);
+            let lanes = 1 + (r.next_u64() % 64) as usize;
+            let mut tape =
+                CompiledSimulator::with_passes(&nl, &lib, lanes, &pm)
+                    .unwrap();
+            let mut packed =
+                PackedSimulator::new(&nl, &lib, lanes).unwrap();
+            for t in 0..30u32 {
+                let gamma = r.next_u64() & 3 == 0;
+                let words: Vec<(NetId, u64)> = nl
+                    .inputs
+                    .iter()
+                    .map(|&n| (n, r.next_u64()))
+                    .collect();
+                tape.tick(&words, gamma);
+                packed.tick(&words, gamma);
+                for net in 0..nl.n_nets() {
+                    let id = NetId(net as u32);
+                    for l in 0..lanes {
+                        assert_eq!(
+                            tape.get(id, l),
+                            packed.get(id, l),
+                            "seed {seed} passes `{spec}` tick {t} \
+                             net {net} lane {l}"
+                        );
+                    }
+                }
+            }
+            assert_eq!(
+                tape.activity().toggles,
+                packed.activity.toggles,
+                "seed {seed} passes `{spec}`: toggles"
+            );
+            assert_eq!(
+                tape.activity().clock_ticks,
+                packed.activity.clock_ticks,
+                "seed {seed} passes `{spec}`: clock ticks"
+            );
+            assert_eq!(
+                tape.activity().cycles,
+                packed.activity.cycles,
+                "seed {seed} passes `{spec}`: cycles"
+            );
+        }
+    }
+}
+
+/// INVARIANT: on full learning columns (both flavours), every pipeline
+/// reproduces the packed testbench bit-for-bit — spike times, committed
+/// weights, result fingerprints, activity, and the final state of every
+/// net on every lane.
+#[test]
+fn prop_column_testbench_compiled_equals_packed_per_pass() {
+    let lib = Library::with_macros();
+    let params = StdpParams::default_training();
+    for seed in 0..2u64 {
+        let mut r = rng(seed * 733 + 11);
+        let p = 3 + (r.next_u64() % 5) as usize;
+        let q = 2 + (r.next_u64() % 3) as usize;
+        let spec = ColumnSpec { p, q, theta: (p + 1) as u64 };
+        let (waves, rands) = column_stimulus(&spec, 7, seed as u16 + 40);
+        let lanes = 3; // 7 waves over 3 lanes: exercises a partial batch
+        for flavor in [Flavor::Std, Flavor::Custom] {
+            let (nl, ports) = build_column(&lib, flavor, &spec).unwrap();
+            let mut packed =
+                PackedColumnTestbench::new(&nl, &ports, &lib, lanes)
+                    .unwrap();
+            let base = packed.run_waves(&waves, &rands, &params);
+            for pspec in PIPELINES {
+                let pm = PassManager::parse(pspec).unwrap();
+                let mut tape = CompiledColumnTestbench::with_passes(
+                    &nl, &ports, &lib, lanes, &pm,
+                )
+                .unwrap();
+                let got = tape.run_waves(&waves, &rands, &params);
+                assert_eq!(got.len(), base.len());
+                for (w, (g, b)) in got.iter().zip(&base).enumerate() {
+                    assert_eq!(
+                        g.pre, b.pre,
+                        "seed {seed} {flavor:?} `{pspec}` wave {w}: pre"
+                    );
+                    assert_eq!(
+                        g.post, b.post,
+                        "seed {seed} {flavor:?} `{pspec}` wave {w}: post"
+                    );
+                    assert_eq!(
+                        g.weights, b.weights,
+                        "seed {seed} {flavor:?} `{pspec}` wave {w}: w"
+                    );
+                }
+                assert_eq!(
+                    fingerprint(&got),
+                    fingerprint(&base),
+                    "seed {seed} {flavor:?} `{pspec}`: fingerprint"
+                );
+                assert_eq!(
+                    tape.activity().toggles,
+                    packed.activity().toggles,
+                    "seed {seed} {flavor:?} `{pspec}`: toggles"
+                );
+                // Final committed state: every net, every lane.
+                for net in 0..nl.n_nets() {
+                    let id = NetId(net as u32);
+                    for l in 0..lanes {
+                        assert_eq!(
+                            tape.engine().get(id, l),
+                            packed.engine().get(id, l),
+                            "seed {seed} {flavor:?} `{pspec}` \
+                             net {net} lane {l}: final state"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// INVARIANT: the thread-parallel compiled runner matches the packed
+/// parallel runner AND the scalar testbench at every (lanes, threads)
+/// combination — thread counts change who executes which lanes, never
+/// the results.
+#[test]
+fn prop_parallel_compiled_matches_packed_and_scalar_any_dims() {
+    let lib = Library::with_macros();
+    let params = StdpParams::default_training();
+    let spec = ColumnSpec { p: 5, q: 3, theta: 7 };
+    let (waves, rands) = column_stimulus(&spec, 9, 77);
+    let pm = PassManager::all();
+    for flavor in [Flavor::Std, Flavor::Custom] {
+        let (nl, ports) = build_column(&lib, flavor, &spec).unwrap();
+        // Scalar ground truth.
+        let mut scalar = ColumnTestbench::new(&nl, &ports, &lib).unwrap();
+        let truth: Vec<_> = waves
+            .iter()
+            .zip(&rands)
+            .map(|(s, rand)| scalar.run_wave(s, rand, &params))
+            .collect();
+        let truth_fp = fingerprint(&truth);
+        for (lanes, threads) in [(1, 1), (4, 1), (4, 3), (8, 2)] {
+            let (pk, pk_act) = run_waves_parallel(
+                &nl, &ports, &lib, lanes, threads, &waves, &rands,
+                &params,
+            )
+            .unwrap();
+            let (cp, cp_act, stats) = run_waves_parallel_compiled(
+                &nl, &ports, &lib, lanes, threads, &waves, &rands,
+                &params, &pm, None,
+            )
+            .unwrap();
+            assert_eq!(
+                fingerprint(&pk),
+                truth_fp,
+                "{flavor:?} {lanes}x{threads}: packed vs scalar"
+            );
+            assert_eq!(
+                fingerprint(&cp),
+                truth_fp,
+                "{flavor:?} {lanes}x{threads}: compiled vs scalar"
+            );
+            assert_eq!(
+                cp_act.toggles, pk_act.toggles,
+                "{flavor:?} {lanes}x{threads}: toggles"
+            );
+            assert_eq!(cp_act.clock_ticks, pk_act.clock_ticks);
+            assert_eq!(cp_act.cycles, pk_act.cycles);
+            // The shared optimization ran the full pipeline once.
+            assert_eq!(stats.len(), pm.passes().len());
+        }
+    }
+}
+
+/// Random multi-block netlist with a voter (the region tree gives the
+/// column-aligned partitioner real shard boundaries to cut).
+fn random_blocked_netlist(
+    lib: &Library,
+    seed: u64,
+    blocks: usize,
+) -> Netlist {
+    let mut r = rng(seed);
+    let mut b = Builder::new("shard_rnd", lib);
+    let n_in = 2 + (r.next_u64() % 4) as usize;
+    let inputs: Vec<NetId> =
+        (0..n_in).map(|i| b.input(format!("x{i}"))).collect();
+    let mut block_outs = Vec::new();
+    for k in 0..blocks {
+        let reg = b.push(format!("col{k}"));
+        let mut pool = inputs.clone();
+        let ops = 6 + (r.next_u64() % 20) as usize;
+        for _ in 0..ops {
+            let a = pool[(r.next_u64() as usize) % pool.len()];
+            let c = pool[(r.next_u64() as usize) % pool.len()];
+            let d = pool[(r.next_u64() as usize) % pool.len()];
+            let n = match r.next_u64() % 8 {
+                0 => b.inv(a),
+                1 => b.and2(a, c),
+                2 => b.or2(a, c),
+                3 => b.xor2(a, c),
+                4 => b.maj3(a, c, d),
+                5 => b.mux2(a, c, d),
+                6 => b.dff(a, ClockDomain::Aclk),
+                _ => b.dff(a, ClockDomain::Gclk),
+            };
+            pool.push(n);
+        }
+        block_outs.push(*pool.last().unwrap());
+        b.pop(reg);
+    }
+    let reg = b.push("voter");
+    let v = b.or_tree(&block_outs);
+    let q = b.dff(v, ClockDomain::Gclk);
+    b.output(q, "y");
+    b.pop(reg);
+    b.finish().unwrap()
+}
+
+/// INVARIANT: the compiled-sharded engine (per-partition tapes, no
+/// coalescing across boundaries) is bit-identical per net/lane/tick to
+/// the packed interpreter at any shard count, on random multi-block
+/// netlists with registers.
+#[test]
+fn prop_compiled_sharded_matches_packed_per_net() {
+    let lib = Library::asap7_only();
+    let pm = PassManager::all();
+    for seed in 0..6u64 {
+        let mut r = rng(seed * 271 + 3);
+        let blocks = 2 + (seed as usize % 4);
+        let nl = random_blocked_netlist(&lib, seed + 8600, blocks);
+        let lanes = 1 + (r.next_u64() % 64) as usize;
+        let shards = 1 + (r.next_u64() % 6) as usize;
+        let (mut sh, stats) = ShardedSimulator::new_compiled(
+            &nl, &lib, lanes, shards, &[], &pm,
+        )
+        .unwrap();
+        // The sharded backend must have dropped coalesce, nothing else.
+        assert_eq!(stats.len(), pm.passes().len() - 1);
+        assert!(stats.iter().all(|s| s.pass != "coalesce"));
+        let mut pk = PackedSimulator::new(&nl, &lib, lanes).unwrap();
+        for t in 0..30u32 {
+            let gamma = r.next_u64() & 3 == 0;
+            let words: Vec<(NetId, u64)> =
+                nl.inputs.iter().map(|&n| (n, r.next_u64())).collect();
+            sh.tick_lanes(&words, gamma);
+            pk.tick(&words, gamma);
+            for net in 0..nl.n_nets() {
+                let id = NetId(net as u32);
+                for l in 0..lanes {
+                    assert_eq!(
+                        sh.lane_value(id, l),
+                        pk.get(id, l),
+                        "seed {seed} tick {t} net {net} lane {l} \
+                         ({shards} shards)"
+                    );
+                }
+            }
+        }
+        assert_eq!(sh.activity().toggles, pk.activity.toggles);
+        assert_eq!(sh.activity().clock_ticks, pk.activity.clock_ticks);
+        assert_eq!(sh.activity().cycles, pk.activity.cycles);
+    }
+}
+
+/// INVARIANT: a rate-0 fault campaign on the compiled engine is
+/// bit-identical to the interpreter campaign — same baseline
+/// fingerprint, every point bit-identical with zero injections, same
+/// toggle totals (the fault overlay machinery itself perturbs nothing).
+#[test]
+fn prop_zero_rate_campaign_compiled_matches_auto() {
+    let lib = Library::with_macros();
+    let params = StdpParams::default_training();
+    let spec = ColumnSpec { p: 4, q: 2, theta: 6 };
+    let (nl, ports) = build_column(&lib, Flavor::Std, &spec).unwrap();
+    let (waves, rands) = column_stimulus(&spec, 6, 9);
+    let cspec = CampaignSpec {
+        classes: FaultClass::ALL.to_vec(),
+        rates: vec![0.0],
+        seeds: vec![1, 9],
+    };
+    for (lanes, threads) in [(1, 1), (4, 2)] {
+        let auto = run_campaign(
+            &nl, &ports, &lib, &cspec, &waves, &rands, &params, lanes,
+            threads, CampaignEngine::Auto,
+        )
+        .unwrap();
+        let comp = run_campaign(
+            &nl, &ports, &lib, &cspec, &waves, &rands, &params, lanes,
+            threads, CampaignEngine::Compiled,
+        )
+        .unwrap();
+        assert_eq!(
+            comp.base_fingerprint, auto.base_fingerprint,
+            "{lanes}x{threads}: baseline diverged"
+        );
+        assert_eq!(comp.base_toggles, auto.base_toggles);
+        assert_eq!(comp.points.len(), auto.points.len());
+        for (c, a) in comp.points.iter().zip(&auto.points) {
+            let label = c.point.class.label();
+            assert_eq!(c.injections, 0, "{label}: rate 0 injected");
+            assert!(
+                c.bit_identical,
+                "{lanes}x{threads} {label}: not bit-identical"
+            );
+            assert_eq!(c.fingerprint, a.fingerprint, "{label}");
+            assert_eq!(c.toggles, a.toggles, "{label}");
+            assert_eq!(c.accuracy, a.accuracy, "{label}");
+            assert_eq!(c.weight_l1, a.weight_l1, "{label}");
+        }
+    }
+}
+
+/// Per-pass statistics of a real column: fold specializes without
+/// removing, dce retires the tie cells, the op count never grows, and
+/// the engine reports the pipeline it ran.
+#[test]
+fn pass_stats_report_real_reductions() {
+    let lib = Library::with_macros();
+    let spec = ColumnSpec { p: 6, q: 3, theta: 8 };
+    let (nl, _ports) = build_column(&lib, Flavor::Custom, &spec).unwrap();
+    let sim = CompiledSimulator::new(&nl, &lib, 4).unwrap();
+    assert_eq!(sim.passes(), "fold,dce,coalesce,resched");
+    let stats = sim.pass_stats();
+    assert_eq!(stats.len(), 4);
+    for s in stats {
+        assert!(
+            s.ops_after <= s.ops_before,
+            "pass {} grew the op list",
+            s.pass
+        );
+    }
+    let by = |name: &str| stats.iter().find(|s| s.pass == name).unwrap();
+    assert_eq!(by("fold").ops_after, by("fold").ops_before);
+    assert!(by("fold").rewritten > 0, "ties must specialize consumers");
+    assert!(by("dce").rewritten >= 2, "ties must retire");
+    assert!(
+        by("coalesce").rewritten > 0,
+        "a real column has fanout-free pairs"
+    );
+    // The optimized tape is strictly smaller than the unoptimized one.
+    let raw = CompiledSimulator::with_passes(
+        &nl,
+        &lib,
+        4,
+        &PassManager::none(),
+    )
+    .unwrap();
+    assert!(sim.n_ops() < raw.n_ops());
+}

@@ -805,7 +805,9 @@ fn campaign_stimulus(
 /// zero injections.
 #[test]
 fn prop_fault_campaign_zero_rate_bit_identical_all_engines() {
-    use tnn7::fault::{run_campaign, CampaignSpec, FaultClass};
+    use tnn7::fault::{
+        run_campaign, CampaignEngine, CampaignSpec, FaultClass,
+    };
     let lib = Library::with_macros();
     let params = StdpParams::default_training();
     for seed in 0..2u64 {
@@ -827,7 +829,7 @@ fn prop_fault_campaign_zero_rate_bit_identical_all_engines() {
         for (lanes, threads) in [(1, 1), (4, 1), (4, 3)] {
             let rep = run_campaign(
                 &nl, &ports, &lib, &cspec, &waves, &rands, &params,
-                lanes, threads,
+                lanes, threads, CampaignEngine::Auto,
             )
             .unwrap();
             // The fault-free baseline itself is engine-invariant.
@@ -863,7 +865,9 @@ fn prop_fault_campaign_zero_rate_bit_identical_all_engines() {
 /// ran scalar, packed, or sharded at any thread count.
 #[test]
 fn prop_fault_campaign_deterministic_across_engines_and_threads() {
-    use tnn7::fault::{run_campaign, CampaignSpec, FaultClass};
+    use tnn7::fault::{
+        run_campaign, CampaignEngine, CampaignSpec, FaultClass,
+    };
     let lib = Library::with_macros();
     let params = StdpParams::default_training();
     let spec = ColumnSpec { p: 6, q: 3, theta: 8 };
@@ -876,12 +880,13 @@ fn prop_fault_campaign_deterministic_across_engines_and_threads() {
     };
     let golden = run_campaign(
         &nl, &ports, &lib, &cspec, &waves, &rands, &params, 1, 1,
+        CampaignEngine::Auto,
     )
     .unwrap();
     for (lanes, threads) in [(2, 1), (8, 1), (8, 2), (8, 5)] {
         let rep = run_campaign(
             &nl, &ports, &lib, &cspec, &waves, &rands, &params, lanes,
-            threads,
+            threads, CampaignEngine::Auto,
         )
         .unwrap();
         assert_eq!(rep.base_fingerprint, golden.base_fingerprint);

@@ -114,6 +114,166 @@ fn changing_simulate_config_reruns_only_downstream() {
     stop(h);
 }
 
+/// Engine kind and pass pipeline are part of the simulate cache key: a
+/// `compiled` request never rides a `packed`/`auto` entry (and vice
+/// versa), a pass-pipeline change re-runs simulate-and-later, and the
+/// canonical pass form (`all` vs the spelled-out list) aliases one
+/// entry.  Because every engine is bit-identical, the recomputed
+/// report bytes still match — the key separates *provenance*, not
+/// results.
+#[test]
+fn engine_and_pass_requests_key_the_cache() {
+    let h = spawn(2, 16, 0);
+    let cold = fetch(h.addr(), "POST", "/flow", TINY).unwrap();
+    assert_eq!(cold.status, 200, "cold body: {}", cold.body);
+    assert_eq!(
+        cold.header("X-Tnn7-Cache").unwrap(),
+        "executed=6 mem=0 disk=0"
+    );
+
+    // Same design point on the compiled engine: elaborate/sta replay
+    // from memory, simulate-and-later must re-execute.
+    let compiled_body = r#"{"target": "custom", "col": "8x4",
+        "waves": 2, "engine": "compiled"}"#;
+    let compiled = fetch(h.addr(), "POST", "/flow", compiled_body).unwrap();
+    assert_eq!(compiled.status, 200, "{}", compiled.body);
+    assert_eq!(
+        compiled.header("X-Tnn7-Cache").unwrap(),
+        "executed=4 mem=2 disk=0",
+        "an engine change must re-run simulate-and-later"
+    );
+    assert_eq!(
+        compiled.body, cold.body,
+        "engines are bit-identical: recomputation reproduces the bytes"
+    );
+
+    // Repeat compiled request: fully cached now.
+    let warm = fetch(h.addr(), "POST", "/flow", compiled_body).unwrap();
+    assert_eq!(
+        warm.header("X-Tnn7-Cache").unwrap(),
+        "executed=0 mem=6 disk=0"
+    );
+
+    // A different pass pipeline under the same engine is a different
+    // simulate entry.
+    let pruned = fetch(
+        h.addr(),
+        "POST",
+        "/flow",
+        r#"{"target": "custom", "col": "8x4", "waves": 2,
+            "engine": "compiled", "passes": "fold,dce"}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        pruned.header("X-Tnn7-Cache").unwrap(),
+        "executed=4 mem=2 disk=0",
+        "a pass-pipeline change must re-run simulate-and-later"
+    );
+    assert_eq!(pruned.body, cold.body);
+
+    // ...but the canonical spelling of the full pipeline aliases the
+    // `all` entry exactly.
+    let spelled = fetch(
+        h.addr(),
+        "POST",
+        "/flow",
+        r#"{"target": "custom", "col": "8x4", "waves": 2,
+            "engine": "compiled",
+            "passes": "fold,dce,coalesce,resched"}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        spelled.header("X-Tnn7-Cache").unwrap(),
+        "executed=0 mem=6 disk=0",
+        "canonical pass spelling must alias the `all` entry"
+    );
+    assert_eq!(spelled.body, cold.body);
+
+    // /stats reports the per-request engine and pass-pipeline mix.
+    let stats = fetch(h.addr(), "GET", "/stats", "").unwrap();
+    let j = Json::parse(&stats.body).unwrap();
+    let engines = j.field("engine_requests").unwrap();
+    assert_eq!(engines.field("auto").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(
+        engines.field("compiled").unwrap().as_usize().unwrap(),
+        4
+    );
+    let passes = j.field("pass_requests").unwrap();
+    assert_eq!(
+        passes
+            .field("fold,dce,coalesce,resched")
+            .unwrap()
+            .as_usize()
+            .unwrap(),
+        4,
+        "`all` and the spelled-out pipeline aggregate into one row"
+    );
+    assert_eq!(
+        passes.field("fold,dce").unwrap().as_usize().unwrap(),
+        1
+    );
+    stop(h);
+}
+
+/// Disk-tier flavour of the same property: a restarted daemon replays
+/// a same-engine pipeline from disk, but an engine change finds no
+/// entry for its chain (the disk tier only answers whole-pipeline
+/// hits) and recomputes — never serving another engine's artifacts.
+#[test]
+fn disk_tier_keys_on_the_engine_request() {
+    let dir = std::env::temp_dir()
+        .join(format!("tnn7_serve_engine_disk_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = |addr: &str| ServeConfig {
+        addr: addr.into(),
+        cache: tnn7::flow::cache::CacheConfig {
+            mem_entries: 64,
+            dir: Some(dir.clone()),
+        },
+        ..ServeConfig::default()
+    };
+
+    let a = Server::spawn(cfg("127.0.0.1:0")).unwrap();
+    let cold = fetch(a.addr(), "POST", "/flow", TINY).unwrap();
+    assert_eq!(cold.status, 200);
+    stop(a);
+
+    let b = Server::spawn(cfg("127.0.0.1:0")).unwrap();
+    // Same request: whole pipeline replays from disk.
+    let replay = fetch(b.addr(), "POST", "/flow", TINY).unwrap();
+    assert_eq!(
+        replay.header("X-Tnn7-Cache").unwrap(),
+        "executed=0 mem=0 disk=6"
+    );
+    assert_eq!(replay.body, cold.body);
+    // Engine change: its simulate key differs, so the requested chain
+    // has no complete disk entry.  Disk hits are whole-pipeline-only
+    // (and never populate the memory tier), so the daemon recomputes
+    // everything rather than serve the packed chain's artifacts.
+    let compiled_body = r#"{"target": "custom", "col": "8x4",
+        "waves": 2, "engine": "compiled"}"#;
+    let compiled = fetch(b.addr(), "POST", "/flow", compiled_body).unwrap();
+    assert_eq!(compiled.status, 200, "{}", compiled.body);
+    assert_eq!(
+        compiled.header("X-Tnn7-Cache").unwrap(),
+        "executed=6 mem=0 disk=0",
+        "a compiled request must not ride the auto entry's disk chain"
+    );
+    assert_eq!(compiled.body, cold.body);
+    // The compiled chain is now durable under its own keys: a third
+    // daemon replays it from disk without touching the auto entry.
+    stop(b);
+    let c = Server::spawn(cfg("127.0.0.1:0")).unwrap();
+    let replay_c = fetch(c.addr(), "POST", "/flow", compiled_body).unwrap();
+    assert_eq!(
+        replay_c.header("X-Tnn7-Cache").unwrap(),
+        "executed=0 mem=0 disk=6"
+    );
+    assert_eq!(replay_c.body, cold.body);
+    stop(c);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn concurrent_duplicates_share_one_computation() {
     // A long leader delay so the followers deterministically arrive
@@ -234,6 +394,8 @@ fn routes_stats_health_and_errors() {
         "stalled_writes",
         "dedup_joins",
         "stages",
+        "engine_requests",
+        "pass_requests",
         "cache",
         "inflight",
     ] {
