@@ -1,8 +1,17 @@
 //! Shared bench harness (criterion is not in the offline vendor set, so
 //! benches are plain binaries built with `harness = false` using this
 //! helper: warmup + N timed iterations, mean / stddev / min reporting).
+//!
+//! It also owns the committed perf trajectory: [`append_baseline`]
+//! appends one summary entry per bench headline number to
+//! `BENCH_baseline.json` at the workspace root (bench name, engine,
+//! threads, waves/sec, git rev, CI flag), so regressions are visible
+//! as history in the file's diff rather than only in CI artifacts.
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use tnn7::runtime::json::Json;
 
 /// `--name N` lookup over the raw argv (shared by the bench binaries;
 /// not every bench uses it, hence the allow).
@@ -70,4 +79,90 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchStats {
     };
     stats.report();
     stats
+}
+
+/// The committed perf-trajectory file at the workspace root.
+pub const BASELINE_FILE: &str = "BENCH_baseline.json";
+
+/// Append one headline entry to the committed [`BASELINE_FILE`]
+/// trajectory.  Failures never fail the bench — a missing file (e.g.
+/// running from outside the repo) just skips the entry with a note.
+#[allow(dead_code)]
+pub fn append_baseline(
+    bench: &str,
+    engine: &str,
+    threads: usize,
+    waves_per_sec: f64,
+) {
+    match try_append_baseline(bench, engine, threads, waves_per_sec) {
+        Ok(path) => {
+            println!("  baseline: appended {bench} to {}", path.display())
+        }
+        Err(e) => eprintln!("  baseline: {e} (entry skipped)"),
+    }
+}
+
+fn try_append_baseline(
+    bench: &str,
+    engine: &str,
+    threads: usize,
+    waves_per_sec: f64,
+) -> anyhow::Result<PathBuf> {
+    let path = find_baseline().ok_or_else(|| {
+        anyhow::anyhow!("{BASELINE_FILE} not found in cwd or parents")
+    })?;
+    let doc = Json::parse(&std::fs::read_to_string(&path)?)?;
+    let mut entries = doc.field("entries")?.as_arr()?.to_vec();
+    entries.push(Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("engine", Json::str(engine)),
+        ("threads", Json::int(threads as u64)),
+        ("waves_per_sec", Json::num(waves_per_sec)),
+        ("rev", Json::str(git_rev())),
+        ("ci", Json::int(u64::from(std::env::var_os("CI").is_some()))),
+    ]));
+    let out = Json::obj(vec![
+        ("schema", doc.field("schema")?.clone()),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(&path, out.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Locate the committed baseline: the benches run with whatever cwd
+/// `cargo bench` was invoked from, so walk a few ancestors.
+fn find_baseline() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    for _ in 0..4 {
+        let cand = dir.join(BASELINE_FILE);
+        if cand.is_file() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    None
+}
+
+/// Short git revision for trajectory entries: `GITHUB_SHA` in CI,
+/// `git rev-parse` locally, `unknown` outside a checkout.
+fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if sha.len() >= 12 {
+            return sha[..12].to_string();
+        }
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
 }

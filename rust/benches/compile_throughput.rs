@@ -184,6 +184,13 @@ fn main() -> anyhow::Result<()> {
 
             let speedup = compiled_wps / packed_wps;
             worst_speedup = worst_speedup.min(speedup);
+            // Perf trajectory entry for the compiled-engine headline.
+            common::append_baseline(
+                &format!("compile/tape-all/{flavor:?}/{label}"),
+                "compiled",
+                1,
+                compiled_wps,
+            );
             println!(
                 "      {n_insts} instances x {WAVE_LEN} cycles/wave | \
                  ops {ops_raw} -> {ops_opt} | \

@@ -168,6 +168,26 @@ fn main() -> anyhow::Result<()> {
                 wps_by_threads[1],
                 wps_by_threads[1] / wps_by_threads[0],
             );
+            // Perf trajectory: one entry per engine headline so the
+            // committed baseline diff shows regressions across PRs.
+            common::append_baseline(
+                &format!("sim/scalar/{flavor:?}/{label}"),
+                "scalar",
+                1,
+                scalar_wps,
+            );
+            common::append_baseline(
+                &format!("sim/packed64/{flavor:?}/{label}"),
+                "packed",
+                1,
+                packed_wps,
+            );
+            common::append_baseline(
+                &format!("sim/waves-mt{threads}/{flavor:?}/{label}"),
+                "packed",
+                threads,
+                wps_by_threads[1],
+            );
             json_points.push(Json::obj(vec![
                 ("point", Json::str(label.clone())),
                 ("flavor", Json::str(format!("{flavor:?}"))),
@@ -270,6 +290,12 @@ fn main() -> anyhow::Result<()> {
         shards,
         sharded_tps,
         sharded_tps / packed_tps,
+    );
+    common::append_baseline(
+        &format!("sim/sharded/{cols}col/{shards}w"),
+        "sharded",
+        threads,
+        sharded_tps,
     );
     let sharded_json = Json::obj(vec![
         ("netlist", Json::str(format!("layer_{cols}x{}x{}", col.p, col.q))),

@@ -246,6 +246,14 @@ fn run_schedule(
             )?;
             return Ok((results, activity));
         }
+        crate::obs::global()
+            .counter(
+                "tnn7_fault_fallback_total",
+                "Campaign runs demoted from the compiled engine to the \
+                 interpreter schedule (fault site optimized away)",
+                &[],
+            )
+            .inc();
         eprintln!(
             "warning: faults: engine=compiled cannot force {} fault \
              site(s) (first: net {}): falling back to the interpreter \
@@ -319,14 +327,31 @@ pub fn run_campaign(
 ) -> Result<CampaignReport> {
     let sites = fault_sites(nl, lib);
     let waves = stim.len();
-    let (base, base_activity) = run_schedule(
-        nl, ports, lib, engine, lanes, threads, stim, rands, params, None,
-    )?;
+    let mut csp = crate::obs::span("faults.campaign");
+    csp.attr("points", spec.points().len());
+    csp.attr("waves", waves);
+    let (base, base_activity) = {
+        let mut sp = crate::obs::span("faults.point");
+        sp.attr("point", "baseline");
+        run_schedule(
+            nl, ports, lib, engine, lanes, threads, stim, rands, params,
+            None,
+        )?
+    };
     let base_toggles: u64 = base_activity.toggles.iter().sum();
     let base_fingerprint = fingerprint(&base);
 
+    let point_counter = crate::obs::global().counter(
+        "tnn7_fault_points_total",
+        "Campaign sweep points executed",
+        &[],
+    );
     let mut points = Vec::new();
     for point in spec.points() {
+        let mut sp = crate::obs::span("faults.point");
+        sp.attr("class", point.class.label());
+        sp.attr("rate", point.rate);
+        sp.attr("seed", point.seed);
         let compiled = compile_with_sites(nl, &sites, &point, waves);
         let (results, activity) = run_schedule(
             nl,
@@ -340,6 +365,8 @@ pub fn run_campaign(
             params,
             Some(&compiled),
         )?;
+        point_counter.inc();
+        drop(sp);
         let matching = results
             .iter()
             .zip(&base)

@@ -45,7 +45,6 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::Dataset;
@@ -554,12 +553,16 @@ pub struct StageCache {
     mem: Mutex<MemTier>,
     mem_cap: usize,
     dir: Option<PathBuf>,
-    mem_hits: AtomicU64,
-    disk_hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
-    disk_writes: AtomicU64,
-    quarantined: AtomicU64,
+    // Counters are obs-registry series: the instance that constructed
+    // us (e.g. the serve daemon) reads the same atomics through its
+    // `/metrics` exposition, so cache stats can never drift from the
+    // cache.
+    mem_hits: Arc<crate::obs::Counter>,
+    disk_hits: Arc<crate::obs::Counter>,
+    misses: Arc<crate::obs::Counter>,
+    evictions: Arc<crate::obs::Counter>,
+    disk_writes: Arc<crate::obs::Counter>,
+    quarantined: Arc<crate::obs::Counter>,
 }
 
 /// Checksum sidecar of a disk-tier dump: `<dump>.fnv`, holding the
@@ -571,17 +574,55 @@ fn sidecar_path(path: &Path) -> PathBuf {
 }
 
 impl StageCache {
+    /// Cache with a private metrics registry — per-instance counters,
+    /// exactly the pre-obs behavior.  Components that expose metrics
+    /// (the serve daemon) use [`StageCache::with_registry`] instead.
     pub fn new(cfg: CacheConfig) -> StageCache {
+        StageCache::with_registry(cfg, &crate::obs::Registry::new())
+    }
+
+    /// Cache whose counters are series in `obs`, under
+    /// `tnn7_cache_hits_total{tier=...}` / `tnn7_cache_misses_total`
+    /// / `tnn7_cache_evictions_total` / `tnn7_cache_disk_writes_total`
+    /// / `tnn7_cache_quarantined_total`.
+    pub fn with_registry(
+        cfg: CacheConfig,
+        obs: &crate::obs::Registry,
+    ) -> StageCache {
         StageCache {
             mem: Mutex::new(MemTier { map: HashMap::new(), tick: 0 }),
             mem_cap: cfg.mem_entries.max(1),
             dir: cfg.dir,
-            mem_hits: AtomicU64::new(0),
-            disk_hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-            disk_writes: AtomicU64::new(0),
-            quarantined: AtomicU64::new(0),
+            mem_hits: obs.counter(
+                "tnn7_cache_hits_total",
+                "Stage cache hits by tier",
+                &[("tier", "mem")],
+            ),
+            disk_hits: obs.counter(
+                "tnn7_cache_hits_total",
+                "Stage cache hits by tier",
+                &[("tier", "disk")],
+            ),
+            misses: obs.counter(
+                "tnn7_cache_misses_total",
+                "Stage cache misses (stage executed)",
+                &[],
+            ),
+            evictions: obs.counter(
+                "tnn7_cache_evictions_total",
+                "Memory-tier LRU evictions",
+                &[],
+            ),
+            disk_writes: obs.counter(
+                "tnn7_cache_disk_writes_total",
+                "Disk-tier dump+sidecar writes",
+                &[],
+            ),
+            quarantined: obs.counter(
+                "tnn7_cache_quarantined_total",
+                "Disk-tier entries quarantined on failed verification",
+                &[],
+            ),
         }
     }
 
@@ -645,7 +686,7 @@ impl StageCache {
     /// inspectable.  Removal is the fallback when the rename fails
     /// (e.g. cross-device) — the entry must not be served again.
     fn quarantine(&self, path: &Path, key: u64, missing_sum: bool) {
-        let n = self.quarantined.fetch_add(1, Ordering::Relaxed);
+        let n = self.quarantined.inc_fetch();
         if let (Some(dir), Some(name)) =
             (self.dir.as_ref(), path.file_name().and_then(|s| s.to_str()))
         {
@@ -703,7 +744,7 @@ impl StageCache {
                     tier.map.iter().min_by_key(|(_, e)| e.last_used)
                 {
                     tier.map.remove(&victim);
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    self.evictions.inc();
                 }
             }
         }
@@ -747,7 +788,7 @@ impl StageCache {
         if write_atomic(&sidecar_path(&path), &sum)
             && write_atomic(&path, dump)
         {
-            self.disk_writes.fetch_add(1, Ordering::Relaxed);
+            self.disk_writes.inc();
         }
     }
 
@@ -774,43 +815,24 @@ impl StageCache {
             super::StageOutcome::DiskHit => &self.disk_hits,
             super::StageOutcome::Executed => &self.misses,
         };
-        c.fetch_add(1, Ordering::Relaxed);
+        c.inc();
     }
 
     /// Counter snapshot: (mem_hits, disk_hits, misses).
     pub fn counters(&self) -> (u64, u64, u64) {
-        (
-            self.mem_hits.load(Ordering::Relaxed),
-            self.disk_hits.load(Ordering::Relaxed),
-            self.misses.load(Ordering::Relaxed),
-        )
+        (self.mem_hits.get(), self.disk_hits.get(), self.misses.get())
     }
 
     /// JSON counter block for `/stats` and the CLI summary line.
     pub fn stats_json(&self) -> Json {
         let tier = self.mem.lock().unwrap();
         Json::obj(vec![
-            (
-                "mem_hits",
-                Json::int(self.mem_hits.load(Ordering::Relaxed)),
-            ),
-            (
-                "disk_hits",
-                Json::int(self.disk_hits.load(Ordering::Relaxed)),
-            ),
-            ("misses", Json::int(self.misses.load(Ordering::Relaxed))),
-            (
-                "evictions",
-                Json::int(self.evictions.load(Ordering::Relaxed)),
-            ),
-            (
-                "disk_writes",
-                Json::int(self.disk_writes.load(Ordering::Relaxed)),
-            ),
-            (
-                "quarantined",
-                Json::int(self.quarantined.load(Ordering::Relaxed)),
-            ),
+            ("mem_hits", Json::int(self.mem_hits.get())),
+            ("disk_hits", Json::int(self.disk_hits.get())),
+            ("misses", Json::int(self.misses.get())),
+            ("evictions", Json::int(self.evictions.get())),
+            ("disk_writes", Json::int(self.disk_writes.get())),
+            ("quarantined", Json::int(self.quarantined.get())),
             ("mem_entries", Json::int(tier.map.len() as u64)),
             ("mem_capacity", Json::int(self.mem_cap as u64)),
             (

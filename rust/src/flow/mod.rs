@@ -68,7 +68,6 @@ pub use target::{
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::cells::{Library, TechParams};
 use crate::config::TnnConfig;
@@ -296,6 +295,11 @@ pub struct FlowContext {
     /// `faults` artifacts (per-unit fault-campaign reports; empty
     /// unless the pipeline includes the optional `faults` stage).
     pub fault_reports: Vec<crate::fault::CampaignReport>,
+    /// Metrics registry this run reports into.  Defaults to the
+    /// process-wide [`crate::obs::global`] registry; the serve daemon
+    /// substitutes its per-instance registry so `/metrics` and
+    /// `/stats` account exactly the requests that daemon served.
+    pub obs: Arc<crate::obs::Registry>,
 }
 
 impl FlowContext {
@@ -344,6 +348,7 @@ impl FlowContext {
             report: None,
             exported: Vec::new(),
             fault_reports: Vec::new(),
+            obs: crate::obs::global(),
         }
     }
 
@@ -360,6 +365,39 @@ impl FlowContext {
         let tech =
             TechContext::from_parts("ad-hoc", "7nm", lib, params);
         FlowContext::with_tech(target, cfg, tech, Arc::new(data))
+    }
+
+    /// Record one stage completion in the context's metrics registry
+    /// (runs, cumulative micros, and per-outcome counts, labeled by
+    /// stage).  The daemon's `/stats` "stages" section is derived
+    /// from exactly these counters.
+    pub fn note_stage(
+        &self,
+        stage: &'static str,
+        outcome: StageOutcome,
+        micros: u128,
+    ) {
+        self.obs
+            .counter(
+                "tnn7_flow_stage_runs_total",
+                "Flow stage completions by any outcome",
+                &[("stage", stage)],
+            )
+            .inc();
+        self.obs
+            .counter(
+                "tnn7_flow_stage_micros_total",
+                "Cumulative flow stage wall time, microseconds",
+                &[("stage", stage)],
+            )
+            .add(micros as u64);
+        self.obs
+            .counter(
+                "tnn7_flow_stage_outcomes_total",
+                "Flow stage completions by cache outcome",
+                &[("stage", stage), ("outcome", outcome.label())],
+            )
+            .inc();
     }
 
     /// Drop every artifact that depends on the named stage's output.
@@ -668,9 +706,20 @@ impl Flow {
         // Uncached: execute everything, dump only what dump_dir needs.
         let Some(cache) = cache else {
             for (i, stage) in self.stages.iter().enumerate() {
-                let t0 = Instant::now();
+                // The span guard is the single timing source: its
+                // measurement becomes both the trace record and the
+                // FlowTrace micros, so `--trace` output and stage
+                // reports can never disagree.
+                let mut sp = crate::obs::span("flow.stage");
+                sp.attr("stage", stage.name());
+                sp.attr("outcome", StageOutcome::Executed.label());
                 stage.run(ctx)?;
-                let micros = t0.elapsed().as_micros();
+                let micros = sp.finish_micros();
+                ctx.note_stage(
+                    stage.name(),
+                    StageOutcome::Executed,
+                    micros,
+                );
                 if self.dump_dir.is_some() {
                     self.write_dump(
                         i,
@@ -808,7 +857,8 @@ impl Flow {
                     prev_key,
                 ),
             };
-            let t0 = Instant::now();
+            let mut sp = crate::obs::span("flow.stage");
+            sp.attr("stage", stage.name());
             let (outcome, dump) = match resolved {
                 Resolved::Mem(snap, dump) => {
                     snap.restore(ctx);
@@ -836,10 +886,13 @@ impl Flow {
             if self.dump_dir.is_some() {
                 self.write_dump(i, stage.name(), &backend, &dump)?;
             }
+            sp.attr("outcome", outcome.label());
+            let micros = sp.finish_micros();
+            ctx.note_stage(stage.name(), outcome, micros);
             trace.stages.push(StageTrace {
                 name: stage.name(),
                 outcome,
-                micros: t0.elapsed().as_micros(),
+                micros,
                 key: Some(key),
                 dump: Some(dump),
             });
@@ -904,6 +957,17 @@ pub enum StageOutcome {
     MemHit,
     /// Dump bytes served from the disk tier (full-replay runs only).
     DiskHit,
+}
+
+impl StageOutcome {
+    /// Stable label used for metric labels and span attributes.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StageOutcome::Executed => "executed",
+            StageOutcome::MemHit => "mem_hit",
+            StageOutcome::DiskHit => "disk_hit",
+        }
+    }
 }
 
 /// Per-stage record of a flow run: outcome, wall time, cache key, and

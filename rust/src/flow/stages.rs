@@ -480,6 +480,11 @@ impl Stage for Simulate {
                         .collect()
                 })
                 .collect();
+            let mut sp = crate::obs::span("sim.unit");
+            sp.attr("unit", u.plan.label());
+            sp.attr("engine", engine);
+            sp.attr("waves", waves);
+            sp.attr("lanes", lanes);
             let (results, activity) = match engine {
                 "compiled" => {
                     let (results, activity, _stats) =
@@ -531,6 +536,7 @@ impl Stage for Simulate {
                     (results, tb.activity().clone())
                 }
             };
+            drop(sp);
             let fp = fault::fingerprint(&results);
             println!(
                 "tnn7: simulate: unit={} engine={engine} passes={passes} \
@@ -540,6 +546,23 @@ impl Stage for Simulate {
             ctx.activity.push(activity);
             ctx.sim_fingerprints.push(fp);
         }
+        // One batched flush per stage run (never per tick): waves and
+        // engine ticks by resolved engine.
+        let ticks: u64 = ctx.activity.iter().map(|a| a.cycles).sum();
+        ctx.obs
+            .counter(
+                "tnn7_sim_waves_total",
+                "Stimulus waves simulated, by resolved engine",
+                &[("engine", engine)],
+            )
+            .add((waves * ctx.elaborated.len()) as u64);
+        ctx.obs
+            .counter(
+                "tnn7_sim_ticks_total",
+                "Engine ticks executed, by resolved engine",
+                &[("engine", engine)],
+            )
+            .add(ticks);
         ctx.sim_waves_run = waves;
         ctx.sim_lanes_run = if engine == "scalar" { 1 } else { lanes };
         ctx.sim_threads_run = match engine {

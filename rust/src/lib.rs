@@ -68,6 +68,12 @@
 //!   content-addressed stage cache ([`flow::cache`]), with in-flight
 //!   request deduplication, a bounded request queue, and graceful
 //!   drain on shutdown (DESIGN.md §11).
+//! * [`obs`] — the unified observability layer: a process/instance
+//!   metrics registry (counters, gauges, log-bucket histograms)
+//!   rendered as Prometheus text by the daemon's `GET /metrics`, and
+//!   a hierarchical span tracer behind `tnn7 flow --trace` /
+//!   `tnn7 profile`, instrumented through flow, cache, serve, fault,
+//!   and all four sim engines (DESIGN.md §15).
 //! * [`coordinator`] — the training/eval pipeline (MNIST-like workload) and
 //!   the activity bridge that turns behavioral spike statistics into
 //!   prototype-scale power numbers.
@@ -91,6 +97,7 @@ pub mod flow;
 pub mod interop;
 pub mod ir;
 pub mod netlist;
+pub mod obs;
 pub mod phys;
 pub mod ppa;
 pub mod runtime;

@@ -17,6 +17,7 @@
 //! tnn7 simulate --col PxQ [...]       gate-sim one column, report PPA
 //! tnn7 train [--config FILE]          end-to-end HLO training + accuracy
 //! tnn7 serve [--addr A] [...]         flow-as-a-service HTTP daemon
+//! tnn7 profile [--col PxQ] [...]      traced flow run + hot-span table
 //! ```
 //!
 //! Every measurement path goes through [`tnn7::flow`]; `simulate` and
@@ -146,6 +147,7 @@ fn run() -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&mut args),
         "train" => cmd_train(&mut args),
         "serve" => cmd_serve(&mut args),
+        "profile" => cmd_profile(&mut args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             println!("{}", pipeline_help());
@@ -164,6 +166,7 @@ SUBCOMMANDS:
        [--place] [--util U1,U2,..] [--aspect A1,A2,..] [--export]
        [--dump-dir D] [--lanes N] [--threads N] [--smoke]
        [--engine auto|scalar|packed|compiled] [--passes P1,P2,..]
+       [--trace FILE]
                               run the staged design flow on one or more
                               technology backends (names or .lib paths),
                               dump per-stage JSON; --targets A,B,.. sweeps
@@ -202,7 +205,12 @@ SUBCOMMANDS:
   train [--config FILE] [--samples N] [--check] [--metrics-json FILE]
   serve [--addr HOST:PORT] [--threads N] [--queue N] [--cache-dir D]
         [--mem-entries N]   flow-as-a-service daemon with a
-                            content-addressed stage cache (DESIGN.md §11)
+                            content-addressed stage cache (DESIGN.md §11);
+                            exposes GET /metrics (Prometheus text)
+  profile [--col PxQ | --proto] [--target F] [--top N] [--trace FILE]
+                            run the measurement pipeline with span
+                            tracing on and print the hot-span
+                            self/total-time table (DESIGN.md §15)
 ";
 
 /// Generated from the stage registry, so help never drifts from the
@@ -295,6 +303,11 @@ OPTIONS:
                            `none`, or a subset of fold,dce,coalesce,
                            resched (default all; selection only — the
                            run order is fixed)
+  --trace FILE             record hierarchical spans for the whole run
+                           and write them as Chrome trace-event JSON
+                           (open in Perfetto or chrome://tracing; every
+                           executed stage, sim worker, and shard gets a
+                           span; DESIGN.md §15)
   --config FILE            tnn7.toml configuration
 
 {}{}",
@@ -347,6 +360,7 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     let pipeline = args.opt("--pipeline")?;
     let dump_dir = args.opt("--dump-dir")?;
     let cache_dir = args.opt("--cache-dir")?;
+    let trace_out = args.opt("--trace")?;
     let place_flag = args.flag("--place");
     let export_flag = args.flag("--export");
     let faults_flag = args.flag("--faults");
@@ -411,6 +425,12 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     } else {
         None
     };
+
+    // `--trace` flips the global span recorder on for the whole run;
+    // span sites cost two `Instant::now()` calls when it stays off.
+    if trace_out.is_some() {
+        tnn7::obs::set_tracing(true);
+    }
 
     // --util/--aspect imply the physical-design stage; each accepts a
     // comma list forming a sweep axis (cross product when both).
@@ -487,7 +507,7 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
                  --dump-dir, and --export"
             );
         }
-        return cmd_flow_sweep(
+        cmd_flow_sweep(
             &list,
             &techs,
             &mut registry,
@@ -496,7 +516,9 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
             &utils,
             &aspects,
             cache.as_ref(),
-        );
+        )?;
+        write_trace(&trace_out)?;
+        return Ok(());
     }
 
     let desc = target_desc.as_deref().unwrap_or("std");
@@ -704,6 +726,24 @@ fn cmd_flow(args: &mut Args) -> anyhow::Result<()> {
     if let Some(dir) = &dump_dir {
         println!("wrote {n_artifacts} stage artifacts to {dir}/");
     }
+    write_trace(&trace_out)?;
+    Ok(())
+}
+
+/// Drain the recorded spans and write them as Chrome trace-event
+/// JSON (`--trace FILE`); a no-op when the flag was not given.
+fn write_trace(path: &Option<String>) -> anyhow::Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    let spans = tnn7::obs::take_spans();
+    std::fs::write(
+        path,
+        tnn7::obs::chrome_trace(&spans).to_string_pretty(),
+    )?;
+    println!(
+        "wrote {} spans to {path} (Chrome trace-event JSON; load in \
+         Perfetto)",
+        spans.len()
+    );
     Ok(())
 }
 
@@ -1965,7 +2005,10 @@ HTTP API (one request per connection, JSON bodies):
                   response body = the report-stage artifact, plus
                   X-Tnn7-Cache: executed=N mem=N disk=N and
                   X-Tnn7-Dedup: leader|joined headers
-  GET  /stats     request/cache/stage-timing counters
+  GET  /stats     request/cache/stage-timing counters (JSON view over
+                  the same registry /metrics renders)
+  GET  /metrics   Prometheus text exposition of every daemon counter,
+                  gauge, and latency histogram (DESIGN.md §15)
   GET  /healthz   liveness probe
   POST /shutdown  drain queued requests, then exit
 "
@@ -2029,8 +2072,98 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
         serve.cache.mem_entries,
         disk
     );
-    println!("  POST /flow  GET /stats  GET /healthz  POST /shutdown");
+    println!(
+        "  POST /flow  GET /stats  GET /metrics  GET /healthz  \
+         POST /shutdown"
+    );
     handle.join();
     println!("tnn7 serve: drained and stopped");
+    Ok(())
+}
+
+fn cmd_profile(args: &mut Args) -> anyhow::Result<()> {
+    if args.help_requested() {
+        println!(
+            "tnn7 profile [--col PxQ | --proto] [--target F] [--waves N] \
+             [--lanes N] [--threads N] [--engine E] [--top N] \
+             [--trace FILE] [--config FILE] — run the measurement \
+             pipeline with span tracing enabled and print the hot-span \
+             self-time/total-time table (DESIGN.md §15); geometry \
+             defaults to the 8x4 smoke column"
+        );
+        return Ok(());
+    }
+    let target_desc = args.opt("--target")?;
+    let proto = args.flag("--proto");
+    let col = args.opt("--col")?;
+    let top: usize = match args.opt("--top")? {
+        Some(t) => t.parse()?,
+        None => 12,
+    };
+    let trace_out = args.opt("--trace")?;
+    let mut cfg = load_config(args)?;
+    if let Some(w) = args.opt("--waves")? {
+        cfg.sim_waves = w.parse()?;
+    }
+    if let Some(l) = args.opt("--lanes")? {
+        let lanes: usize = l.parse()?;
+        if !(1..=64).contains(&lanes) {
+            anyhow::bail!("--lanes must be in 1..=64, got {lanes}");
+        }
+        cfg.sim_lanes = lanes;
+    }
+    if let Some(t) = args.opt("--threads")? {
+        let threads: usize = t.parse()?;
+        if threads < 1 {
+            anyhow::bail!("--threads must be >= 1, got {threads}");
+        }
+        cfg.sim_threads = threads;
+    }
+    if let Some(e) = args.opt("--engine")? {
+        cfg.sim_engine = e;
+        cfg.validate_engine()?;
+    }
+    args.finish()?;
+    if proto && col.is_some() {
+        anyhow::bail!("--proto and --col are mutually exclusive");
+    }
+    let geometry = if proto {
+        Geometry::Prototype(PrototypeSpec::paper())
+    } else if let Some(col) = col {
+        let (p, q) = parse_geometry(&col)?;
+        Geometry::Column(ColumnSpec::benchmark(p, q))
+    } else {
+        Geometry::Column(ColumnSpec::benchmark(8, 4))
+    };
+    let mut registry = TechRegistry::builtin();
+    let base =
+        Target::parse(target_desc.as_deref().unwrap_or("std"), geometry)?;
+    let techctx = registry.resolve(base.tech.as_str())?;
+    let target = base.with_tech(techctx.id());
+    let data =
+        Arc::new(Dataset::generate(cfg.sim_waves.max(4), cfg.data_seed));
+    tnn7::obs::set_tracing(true);
+    let mut ctx = FlowContext::with_tech(
+        target,
+        cfg.clone(),
+        techctx.clone(),
+        Arc::clone(&data),
+    );
+    println!(
+        "profiling flow {} [{}] ...\n",
+        ctx.target.describe(),
+        techctx.node_label()
+    );
+    Flow::standard().run(&mut ctx)?;
+    let spans = tnn7::obs::take_spans();
+    let rows = tnn7::obs::profile(&spans);
+    print!("{}", tnn7::obs::profile_table(&rows, top));
+    if let Some(path) = &trace_out {
+        std::fs::write(
+            path,
+            tnn7::obs::chrome_trace(&spans).to_string_pretty(),
+        )?;
+        println!("\nwrote {} spans to {path}", spans.len());
+    }
     Ok(())
 }

@@ -1,0 +1,209 @@
+//! Span exports: Chrome trace-event JSON and the self-time profile
+//! table.
+//!
+//! The Chrome format is the `chrome://tracing` / Perfetto "JSON
+//! object" flavour: a `traceEvents` array of complete (`"ph": "X"`)
+//! events with microsecond timestamps.  Every span becomes one event
+//! carrying its attributes (plus span/parent ids) in `args`, and a
+//! metadata event names the process, so a flow trace drops straight
+//! into Perfetto with stages on the main thread and sim workers on
+//! their own rows.
+//!
+//! The profile view aggregates spans by site name: *total* time is
+//! the sum of span durations; *self* time subtracts the duration of
+//! each span's direct children, so a stage that spends its life
+//! waiting on instrumented sub-work shows near-zero self time.  This
+//! is the `tnn7 profile` hot-span table.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use crate::obs::trace::SpanRecord;
+use crate::runtime::json::Json;
+
+/// Render spans as a Chrome trace-event JSON document.
+pub fn chrome_trace(spans: &[SpanRecord]) -> Json {
+    let mut events = Vec::with_capacity(spans.len() + 1);
+    events.push(Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::int(1)),
+        ("tid", Json::int(0)),
+        (
+            "args",
+            Json::obj(vec![("name", Json::str("tnn7"))]),
+        ),
+    ]));
+    for s in spans {
+        let mut args = BTreeMap::new();
+        args.insert("span_id".to_string(), Json::int(s.id));
+        args.insert("parent".to_string(), Json::int(s.parent));
+        for (k, v) in &s.attrs {
+            args.insert((*k).to_string(), Json::str(v.clone()));
+        }
+        events.push(Json::obj(vec![
+            ("name", Json::str(s.name)),
+            ("cat", Json::str("tnn7")),
+            ("ph", Json::str("X")),
+            ("ts", Json::int(s.start_us)),
+            ("dur", Json::int(s.dur_us)),
+            ("pid", Json::int(1)),
+            ("tid", Json::int(s.tid)),
+            ("args", Json::Obj(args)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// One row of the aggregated profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileRow {
+    /// Span site name.
+    pub name: &'static str,
+    /// Number of spans recorded at this site.
+    pub count: u64,
+    /// Sum of span durations, microseconds.
+    pub total_us: u64,
+    /// Total minus time spent in direct child spans, microseconds.
+    pub self_us: u64,
+}
+
+/// Aggregate spans into per-site rows, hottest self-time first.
+pub fn profile(spans: &[SpanRecord]) -> Vec<ProfileRow> {
+    // Sum each span's direct children so self-time can be derived
+    // without re-walking the forest per row.
+    let mut child_us: HashMap<u64, u64> = HashMap::new();
+    for s in spans {
+        if s.parent != 0 {
+            *child_us.entry(s.parent).or_insert(0) += s.dur_us;
+        }
+    }
+    let mut rows: BTreeMap<&'static str, ProfileRow> = BTreeMap::new();
+    for s in spans {
+        let children = child_us.get(&s.id).copied().unwrap_or(0);
+        let row = rows.entry(s.name).or_insert_with(|| ProfileRow {
+            name: s.name,
+            count: 0,
+            total_us: 0,
+            self_us: 0,
+        });
+        row.count += 1;
+        row.total_us += s.dur_us;
+        // Clamp: a child can report marginally more time than its
+        // parent when both round to microseconds.
+        row.self_us += s.dur_us.saturating_sub(children);
+    }
+    let mut out: Vec<ProfileRow> = rows.into_values().collect();
+    out.sort_by(|a, b| {
+        b.self_us.cmp(&a.self_us).then(a.name.cmp(b.name))
+    });
+    out
+}
+
+/// Format profile rows as the fixed-width table `tnn7 profile`
+/// prints.
+pub fn profile_table(rows: &[ProfileRow], top: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>7} {:>12} {:>12} {:>6}\n",
+        "span", "count", "self(us)", "total(us)", "self%"
+    ));
+    let grand: u64 = rows.iter().map(|r| r.self_us).sum();
+    for r in rows.iter().take(top) {
+        let pct = if grand == 0 {
+            0.0
+        } else {
+            100.0 * r.self_us as f64 / grand as f64
+        };
+        out.push_str(&format!(
+            "{:<28} {:>7} {:>12} {:>12} {:>5.1}%\n",
+            r.name, r.count, r.self_us, r.total_us, pct
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(
+        name: &'static str,
+        id: u64,
+        parent: u64,
+        start_us: u64,
+        dur_us: u64,
+    ) -> SpanRecord {
+        SpanRecord {
+            name,
+            id,
+            parent,
+            tid: 1,
+            start_us,
+            dur_us,
+            attrs: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let mut a = rec("flow.stage", 1, 0, 0, 100);
+        a.attrs.push(("stage", "sta".to_string()));
+        let spans = vec![a, rec("sim.worker", 2, 1, 10, 50)];
+        let doc = chrome_trace(&spans);
+        let events = doc.field("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3, "metadata + 2 spans");
+        let ev = &events[1];
+        assert_eq!(ev.field("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(ev.field("ts").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(ev.field("dur").unwrap().as_usize().unwrap(), 100);
+        let args = ev.field("args").unwrap();
+        assert_eq!(args.field("stage").unwrap().as_str().unwrap(), "sta");
+        // Round-trips through the parser (what the CI smoke step does).
+        let text = doc.to_string_pretty();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn profile_self_vs_total() {
+        // parent (100us) -> child (60us) -> grandchild (10us), plus a
+        // second lone parent span of 40us.
+        let spans = vec![
+            rec("parent", 1, 0, 0, 100),
+            rec("child", 2, 1, 10, 60),
+            rec("grandchild", 3, 2, 20, 10),
+            rec("parent", 4, 0, 200, 40),
+        ];
+        let rows = profile(&spans);
+        let get = |n: &str| {
+            rows.iter().find(|r| r.name == n).expect("row").clone()
+        };
+        let parent = get("parent");
+        assert_eq!(parent.count, 2);
+        assert_eq!(parent.total_us, 140);
+        assert_eq!(parent.self_us, 80, "100-60 plus lone 40");
+        let child = get("child");
+        assert_eq!(child.self_us, 50);
+        assert_eq!(child.total_us, 60);
+        assert_eq!(get("grandchild").self_us, 10);
+        // Hottest self-time first.
+        assert_eq!(rows[0].name, "parent");
+        let table = profile_table(&rows, 10);
+        assert!(table.contains("self(us)"));
+        assert!(table.contains("parent"));
+    }
+
+    #[test]
+    fn profile_clamps_rounding() {
+        // Child reports 1us more than its parent; self time clamps
+        // to zero instead of wrapping.
+        let spans =
+            vec![rec("p", 1, 0, 0, 10), rec("c", 2, 1, 0, 11)];
+        let rows = profile(&spans);
+        let p = rows.iter().find(|r| r.name == "p").unwrap();
+        assert_eq!(p.self_us, 0);
+    }
+}

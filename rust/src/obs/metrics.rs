@@ -1,0 +1,540 @@
+//! Process-wide metrics: counters, gauges, and fixed-bucket
+//! histograms behind a [`Registry`].
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Hot-path cost is one atomic RMW.** Registration (name + label
+//!    lookup under a mutex) happens once, at construction time of the
+//!    instrumented component; the returned [`Arc<Counter>`] /
+//!    [`Arc<Gauge>`] / [`Arc<Histogram>`] handle is then pure
+//!    `fetch_add` with `Relaxed` ordering — no lock, no allocation,
+//!    no formatting.  Relaxed is sound because metric reads are
+//!    statistical: exposition never synchronizes-with increments.
+//! 2. **Zero dependencies.** The exposition format is Prometheus
+//!    text 0.0.4, rendered by hand; the JSON views reuse
+//!    [`crate::runtime::json::Json`].
+//! 3. **Instantiable, not only global.** A process-wide registry
+//!    ([`super::global`]) serves the CLI; the serve daemon and unit
+//!    tests construct private registries so concurrent daemons in one
+//!    test process cannot pollute each other's exact counts.
+//!
+//! Histograms use fixed log-scale buckets: powers of two from
+//! 1 µs to 2^24 µs (≈16.8 s), plus `+Inf`.  Power-of-two bounds make
+//! bucket selection a `leading_zeros` instruction instead of a search,
+//! and every registry in the process shares one bucket layout so
+//! series are always comparable.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::json::Json;
+
+/// Number of finite histogram buckets (`le = 2^0 .. 2^24`).
+pub const FINITE_BUCKETS: usize = 25;
+/// Total buckets including the `+Inf` overflow slot.
+pub const TOTAL_BUCKETS: usize = FINITE_BUCKETS + 1;
+
+/// Upper bound (inclusive) of finite bucket `i`, in the histogram's
+/// native unit (by convention microseconds everywhere in this repo).
+pub fn bucket_bound(i: usize) -> u64 {
+    1u64 << i
+}
+
+/// Index of the bucket a raw observation lands in.
+///
+/// Observations `<= 1` land in bucket 0; otherwise the bucket is the
+/// position of the highest set bit of `v - 1` plus one, clamped into
+/// the `+Inf` slot.  This gives half-open power-of-two ranges:
+/// bucket 1 covers `(1, 2]`, bucket 2 covers `(2, 4]`, and so on.
+pub fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        let b = (64 - (v - 1).leading_zeros()) as usize;
+        b.min(FINITE_BUCKETS)
+    }
+}
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by one, returning the previous value (atomic unique
+    /// sequence numbers, e.g. quarantine file suffixes).
+    pub fn inc_fetch(&self) -> u64 {
+        self.v.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Increment by `n` (batch flush from a private tally).
+    pub fn add(&self, n: u64) {
+        if n != 0 {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (queue depths, in-flight counts).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    /// Set to an absolute value.
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Decrement by one.
+    pub fn dec(&self) {
+        self.v.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed log-scale histogram (see module docs for the bucket layout).
+///
+/// Buckets store *per-bucket* counts; the cumulative `le` form
+/// Prometheus wants is computed at exposition time, so `observe` is a
+/// single `fetch_add` on the owning bucket plus one on the sum.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; TOTAL_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one observation (microseconds by repo convention).
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket (non-cumulative) counts, for tests and JSON views.
+    pub fn bucket_counts(&self) -> [u64; TOTAL_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+/// What a registered series holds.
+#[derive(Debug, Clone)]
+enum Value {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Value {
+    fn kind(&self) -> &'static str {
+        match self {
+            Value::Counter(_) => "counter",
+            Value::Gauge(_) => "gauge",
+            Value::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// One labeled series inside a family.
+#[derive(Debug)]
+struct Series {
+    labels: Vec<(String, String)>,
+    value: Value,
+}
+
+/// All series sharing one metric name.
+#[derive(Debug)]
+struct Family {
+    help: String,
+    /// Keyed by the canonical rendered label string, so lookup and
+    /// exposition order agree.
+    series: BTreeMap<String, Series>,
+}
+
+/// A set of named metric families.  See the module docs for the
+/// global-vs-instance policy.
+#[derive(Debug, Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+/// Canonical label key: sorted `k=v` pairs joined by `\x1f` (a byte
+/// that cannot appear in a sane label), empty for the unlabeled
+/// series.
+fn label_key(labels: &[(String, String)]) -> String {
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}\x1f{v}")).collect();
+    parts.sort();
+    parts.join("\x1f\x1f")
+}
+
+fn own_labels(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut v: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, val)| (k.to_string(), val.to_string()))
+        .collect();
+    v.sort();
+    v
+}
+
+/// Escape a label value for the text exposition format.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a `{k="v",...}` block; extra pairs are appended after the
+/// series labels (used for histogram `le`).
+fn render_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+impl Registry {
+    /// Fresh, empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Value,
+    ) -> Value {
+        let labels = own_labels(labels);
+        let key = label_key(&labels);
+        let mut fams = self.families.lock().expect("metrics registry lock");
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            series: BTreeMap::new(),
+        });
+        let series = fam
+            .series
+            .entry(key)
+            .or_insert_with(|| Series { labels, value: make() });
+        series.value.clone()
+    }
+
+    /// Get-or-create a counter series.  Registering the same
+    /// (name, labels) twice returns the same underlying counter, so
+    /// independently constructed components share one series.
+    ///
+    /// Panics if the name is already registered with a different
+    /// metric kind — that is a programming error, not a runtime
+    /// condition.
+    pub fn counter(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Counter> {
+        match self.register(name, help, labels, || {
+            Value::Counter(Arc::new(Counter::default()))
+        }) {
+            Value::Counter(c) => c,
+            other => panic!(
+                "metric `{name}` already registered as {}",
+                other.kind()
+            ),
+        }
+    }
+
+    /// Get-or-create a gauge series (see [`Registry::counter`]).
+    pub fn gauge(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Gauge> {
+        match self.register(name, help, labels, || {
+            Value::Gauge(Arc::new(Gauge::default()))
+        }) {
+            Value::Gauge(g) => g,
+            other => panic!(
+                "metric `{name}` already registered as {}",
+                other.kind()
+            ),
+        }
+    }
+
+    /// Get-or-create a histogram series (see [`Registry::counter`]).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Histogram> {
+        match self.register(name, help, labels, || {
+            Value::Histogram(Arc::new(Histogram::default()))
+        }) {
+            Value::Histogram(h) => h,
+            other => panic!(
+                "metric `{name}` already registered as {}",
+                other.kind()
+            ),
+        }
+    }
+
+    /// Value of one counter series, 0 if never registered.  Used by
+    /// the daemon's `/stats` view so JSON and `/metrics` can never
+    /// disagree.
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        let key = label_key(&own_labels(labels));
+        let fams = self.families.lock().expect("metrics registry lock");
+        match fams.get(name).and_then(|f| f.series.get(&key)) {
+            Some(Series { value: Value::Counter(c), .. }) => c.get(),
+            _ => 0,
+        }
+    }
+
+    /// All series of one counter family as `(labels, value)` rows,
+    /// sorted by label key.  Powers map-shaped `/stats` sections
+    /// (per-engine and per-pass request counts).
+    pub fn counter_series(
+        &self,
+        name: &str,
+    ) -> Vec<(Vec<(String, String)>, u64)> {
+        let fams = self.families.lock().expect("metrics registry lock");
+        let mut out = Vec::new();
+        if let Some(fam) = fams.get(name) {
+            for s in fam.series.values() {
+                if let Value::Counter(c) = &s.value {
+                    out.push((s.labels.clone(), c.get()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// (0.0.4): `# HELP` / `# TYPE` per family, one line per series,
+    /// cumulative `_bucket`/`_sum`/`_count` for histograms.  Families
+    /// and series are emitted in sorted order so the output is
+    /// deterministic and snapshot-testable.
+    pub fn prometheus_text(&self) -> String {
+        let fams = self.families.lock().expect("metrics registry lock");
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            let kind = match fam.series.values().next() {
+                Some(s) => s.value.kind(),
+                None => continue,
+            };
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            for s in fam.series.values() {
+                match &s.value {
+                    Value::Counter(c) => {
+                        out.push_str(&format!(
+                            "{name}{} {}\n",
+                            render_labels(&s.labels, None),
+                            c.get()
+                        ));
+                    }
+                    Value::Gauge(g) => {
+                        out.push_str(&format!(
+                            "{name}{} {}\n",
+                            render_labels(&s.labels, None),
+                            g.get()
+                        ));
+                    }
+                    Value::Histogram(h) => {
+                        let counts = h.bucket_counts();
+                        let mut cum = 0u64;
+                        for (i, c) in counts.iter().enumerate() {
+                            cum += c;
+                            let le = if i < FINITE_BUCKETS {
+                                bucket_bound(i).to_string()
+                            } else {
+                                "+Inf".to_string()
+                            };
+                            out.push_str(&format!(
+                                "{name}_bucket{} {cum}\n",
+                                render_labels(&s.labels, Some(("le", &le))),
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{name}_sum{} {}\n",
+                            render_labels(&s.labels, None),
+                            h.sum()
+                        ));
+                        out.push_str(&format!(
+                            "{name}_count{} {cum}\n",
+                            render_labels(&s.labels, None),
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot of every counter and gauge (histograms are
+    /// summarized as `{sum, count}`), for debugging and the profile
+    /// subcommand's footer.
+    pub fn snapshot_json(&self) -> Json {
+        let fams = self.families.lock().expect("metrics registry lock");
+        let mut root = BTreeMap::new();
+        for (name, fam) in fams.iter() {
+            let mut rows = Vec::new();
+            for s in fam.series.values() {
+                let mut row = BTreeMap::new();
+                for (k, v) in &s.labels {
+                    row.insert(k.clone(), Json::str(v));
+                }
+                match &s.value {
+                    Value::Counter(c) => {
+                        row.insert("value".into(), Json::int(c.get()));
+                    }
+                    Value::Gauge(g) => {
+                        row.insert(
+                            "value".into(),
+                            Json::Num(g.get() as f64),
+                        );
+                    }
+                    Value::Histogram(h) => {
+                        row.insert("sum".into(), Json::int(h.sum()));
+                        row.insert("count".into(), Json::int(h.count()));
+                    }
+                }
+                rows.push(Json::Obj(row));
+            }
+            root.insert(name.clone(), Json::Arr(rows));
+        }
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        // Each finite bound lands in its own bucket; bound+1 spills
+        // into the next.
+        for i in 1..FINITE_BUCKETS {
+            assert_eq!(bucket_index(bucket_bound(i)), i, "bound {i}");
+            assert_eq!(
+                bucket_index(bucket_bound(i) + 1),
+                (i + 1).min(FINITE_BUCKETS),
+                "bound {i} + 1"
+            );
+        }
+        assert_eq!(bucket_index(u64::MAX), FINITE_BUCKETS);
+    }
+
+    #[test]
+    fn counter_identity_and_kinds() {
+        let r = Registry::new();
+        let a = r.counter("x_total", "x", &[("stage", "sta")]);
+        let b = r.counter("x_total", "x", &[("stage", "sta")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(r.counter_value("x_total", &[("stage", "sta")]), 3);
+        assert_eq!(r.counter_value("x_total", &[("stage", "other")]), 0);
+        assert_eq!(r.counter_value("absent", &[]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("x", "x", &[]);
+        let _ = r.gauge("x", "x", &[]);
+    }
+
+    #[test]
+    fn label_order_is_canonical() {
+        let r = Registry::new();
+        let a = r.counter("y", "y", &[("b", "2"), ("a", "1")]);
+        let b = r.counter("y", "y", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn histogram_sum_count() {
+        let h = Histogram::default();
+        for v in [0, 1, 2, 100, 1 << 30] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1 + 2 + 100 + (1 << 30));
+        let counts = h.bucket_counts();
+        assert_eq!(counts[0], 2); // 0 and 1
+        assert_eq!(counts[1], 1); // 2
+        assert_eq!(counts[bucket_index(100)], 1);
+        assert_eq!(counts[FINITE_BUCKETS], 1); // +Inf
+    }
+}

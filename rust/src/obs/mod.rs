@@ -1,0 +1,52 @@
+//! Unified observability: metrics registry, span tracer, and their
+//! exposition formats.
+//!
+//! This module is the measurement substrate for the whole pipeline.
+//! Every layer reports through it instead of keeping private tallies:
+//!
+//! * **Metrics** ([`metrics`]) — counters, gauges, and log-bucket
+//!   histograms in a [`Registry`].  The process-wide [`global`]
+//!   registry serves CLI runs; the serve daemon owns a registry per
+//!   instance (injected into its flow contexts and stage cache), so
+//!   `GET /metrics` and the `/stats` JSON view read the *same*
+//!   atomics and can never drift apart — and so concurrent daemons
+//!   inside one test process keep exact, independent counts.
+//! * **Spans** ([`trace`]) — a guard-based hierarchical tracer with
+//!   bounded per-thread rings.  Flow stages, serve requests, fault
+//!   campaigns, and sim workers time themselves through one span
+//!   guard each; `FlowTrace` micros are the guard's own measurement,
+//!   so the trace and the stage report always agree.
+//! * **Exports** ([`export`]) — Chrome trace-event JSON
+//!   (`tnn7 flow --trace out.json`, loadable in Perfetto) and the
+//!   self-time/total-time table behind `tnn7 profile`.  The registry
+//!   renders itself as Prometheus text for the daemon's
+//!   `GET /metrics`.
+//!
+//! Overhead budget: with tracing disabled a span site costs two
+//! `Instant::now()` calls and one relaxed atomic load; a counter
+//! increment is one relaxed `fetch_add`.  Nothing here runs per tick
+//! or per gate — engines batch their tallies locally and flush once
+//! per run (see `sim::sharded` and `sim::compiled`), which keeps the
+//! measured overhead on the `sim_throughput` smoke bench below the
+//! 2% acceptance budget.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+use std::sync::{Arc, OnceLock};
+
+pub use export::{chrome_trace, profile, profile_table, ProfileRow};
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use trace::{
+    set_tracing, snapshot_spans, span, take_spans, tracing_enabled,
+    SpanGuard, SpanRecord,
+};
+
+static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+
+/// The process-wide registry used by CLI entry points and any
+/// component not constructed with an explicit registry.
+pub fn global() -> Arc<Registry> {
+    GLOBAL.get_or_init(|| Arc::new(Registry::new())).clone()
+}

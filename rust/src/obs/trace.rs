@@ -1,0 +1,352 @@
+//! Hierarchical span tracing with bounded per-thread ring buffers.
+//!
+//! A [`SpanGuard`] measures one region of work: it captures
+//! `Instant::now()` at construction and, when dropped (or explicitly
+//! [`SpanGuard::finish_micros`]ed), records name, start, duration,
+//! parent span, thread, and `key=value` attributes.
+//!
+//! **Two-speed design.**  Tracing is globally off by default.  A
+//! disabled guard still measures elapsed time (one `Instant::now()`
+//! at each end — the flow layer uses that single measurement as the
+//! source for `FlowTrace` micros, so traced and untraced runs report
+//! identical timing), but it allocates nothing, touches no
+//! thread-local state beyond one atomic load, and records nothing.
+//! That keeps the enabled-but-unsampled cost well under the 2%
+//! budget on the simulator smoke bench, where spans only wrap whole
+//! waves runs and shard workers, never per-tick work.
+//!
+//! **Storage.**  Each thread lazily registers one [`Ring`] — a
+//! mutex-guarded `Vec` bounded at [`RING_CAP`] records — in a global
+//! list.  Only the owning thread writes to its ring, so the mutex is
+//! uncontended except during a drain.  Rings outlive their threads
+//! (the registry holds an `Arc`), which matters because scoped sim
+//! workers exit before the CLI collects the trace.  When a ring is
+//! full new records are counted in `dropped` rather than pushed, so
+//! a runaway span site degrades the trace instead of memory.
+//!
+//! Parentage is a per-thread stack of active span ids: spans are
+//! strictly LIFO within a thread (guards are scope-bound), and
+//! cross-thread work simply starts a new root per worker — the
+//! Chrome-trace view groups by thread id, which is how Perfetto
+//! renders fork/join parallelism anyway.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity, in span records.
+pub const RING_CAP: usize = 1 << 16;
+
+/// One completed span.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Static site name, e.g. `"flow.stage"` or `"sim.shard"`.
+    pub name: &'static str,
+    /// Unique id (process-wide, never 0).
+    pub id: u64,
+    /// Enclosing span's id on the same thread, 0 for roots.
+    pub parent: u64,
+    /// Small dense thread id assigned by this module (not the OS tid).
+    pub tid: u64,
+    /// Start offset from the process trace epoch, microseconds.
+    pub start_us: u64,
+    /// Duration, microseconds.
+    pub dur_us: u64,
+    /// Attributes attached via [`SpanGuard::attr`].
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+/// One thread's bounded span buffer.
+#[derive(Debug)]
+struct Ring {
+    buf: Mutex<Vec<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static RINGS: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+struct Local {
+    ring: Arc<Ring>,
+    tid: u64,
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Local>> = const { RefCell::new(None) };
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Turn span recording on or off, process-wide.  Guards check this
+/// once at construction; spans already in flight keep the mode they
+/// started with.
+pub fn set_tracing(on: bool) {
+    // Pin the epoch before the first recorded span so timestamps are
+    // small positive offsets.
+    epoch();
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether span recording is currently on.
+pub fn tracing_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Total records discarded because a thread's ring was full.
+pub fn dropped_total() -> u64 {
+    let rings = RINGS.lock().expect("trace ring registry lock");
+    rings.iter().map(|r| r.dropped.load(Ordering::Relaxed)).sum()
+}
+
+fn with_local<T>(f: impl FnOnce(&mut Local) -> T) -> T {
+    LOCAL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let local = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Ring {
+                buf: Mutex::new(Vec::new()),
+                dropped: AtomicU64::new(0),
+            });
+            let mut rings =
+                RINGS.lock().expect("trace ring registry lock");
+            rings.push(ring.clone());
+            Local {
+                ring,
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                stack: Vec::new(),
+            }
+        });
+        f(local)
+    })
+}
+
+/// Start a span.  Cheap when tracing is off (see module docs); the
+/// returned guard records on drop.
+pub fn span(name: &'static str) -> SpanGuard {
+    let active = ENABLED.load(Ordering::Relaxed);
+    let (id, parent, tid) = if active {
+        with_local(|local| {
+            let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+            let parent = local.stack.last().copied().unwrap_or(0);
+            local.stack.push(id);
+            (id, parent, local.tid)
+        })
+    } else {
+        (0, 0, 0)
+    };
+    SpanGuard {
+        name,
+        start: Instant::now(),
+        id,
+        parent,
+        tid,
+        attrs: Vec::new(),
+        active,
+        done: false,
+    }
+}
+
+/// Live span handle; records itself when dropped.
+#[derive(Debug)]
+pub struct SpanGuard {
+    name: &'static str,
+    start: Instant,
+    id: u64,
+    parent: u64,
+    tid: u64,
+    attrs: Vec<(&'static str, String)>,
+    active: bool,
+    done: bool,
+}
+
+impl SpanGuard {
+    /// Attach a `key=value` attribute.  No-op (and no allocation)
+    /// when the span is not being recorded.
+    pub fn attr(&mut self, key: &'static str, value: impl ToString) {
+        if self.active {
+            self.attrs.push((key, value.to_string()));
+        }
+    }
+
+    /// Elapsed time so far, microseconds.
+    pub fn elapsed_micros(&self) -> u128 {
+        self.start.elapsed().as_micros()
+    }
+
+    /// Finish now and return the measured duration in microseconds.
+    /// This is the single timing source the flow layer feeds into
+    /// `FlowTrace`, so trace spans and stage micros can never
+    /// disagree.
+    pub fn finish_micros(mut self) -> u128 {
+        let us = self.start.elapsed().as_micros();
+        self.record();
+        us
+    }
+
+    fn record(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        if !self.active {
+            return;
+        }
+        let start_us =
+            self.start.duration_since(epoch()).as_micros() as u64;
+        let rec = SpanRecord {
+            name: self.name,
+            id: self.id,
+            parent: self.parent,
+            tid: self.tid,
+            start_us,
+            dur_us: self.start.elapsed().as_micros() as u64,
+            attrs: std::mem::take(&mut self.attrs),
+        };
+        with_local(|local| {
+            // Pop our own id; tolerate (and repair) unbalanced drops
+            // rather than corrupting later parentage.
+            while let Some(top) = local.stack.pop() {
+                if top == self.id {
+                    break;
+                }
+            }
+            let mut buf =
+                local.ring.buf.lock().expect("trace ring lock");
+            if buf.len() < RING_CAP {
+                buf.push(rec);
+            } else {
+                local.ring.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.record();
+    }
+}
+
+fn collect(drain: bool) -> Vec<SpanRecord> {
+    let rings = RINGS.lock().expect("trace ring registry lock");
+    let mut out = Vec::new();
+    for ring in rings.iter() {
+        let mut buf = ring.buf.lock().expect("trace ring lock");
+        if drain {
+            out.append(&mut buf);
+        } else {
+            out.extend(buf.iter().cloned());
+        }
+    }
+    out.sort_by_key(|r| (r.start_us, r.id));
+    out
+}
+
+/// Drain all recorded spans (every thread's ring), sorted by start
+/// time.  The rings are left empty.
+pub fn take_spans() -> Vec<SpanRecord> {
+    collect(true)
+}
+
+/// Copy all recorded spans without draining (test helper).
+pub fn snapshot_spans() -> Vec<SpanRecord> {
+    collect(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is process-global; tests that toggle it
+    // serialize on this lock and run their spans on dedicated
+    // threads, filtering collected records by that thread's spans,
+    // so parallel test threads cannot interleave parentage.
+    static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+    fn on_fresh_thread<T: Send>(f: impl FnOnce() -> T + Send) -> T {
+        std::thread::scope(|s| s.spawn(f).join().expect("test thread"))
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing_but_still_time() {
+        let _g = TEST_GUARD.lock().unwrap();
+        set_tracing(false);
+        let sp = span("idle.unique");
+        let us = sp.finish_micros();
+        assert!(us < 10_000_000, "sane elapsed measurement");
+        let ghosts = snapshot_spans()
+            .iter()
+            .filter(|r| r.name == "idle.unique")
+            .count();
+        assert_eq!(ghosts, 0, "disabled span must not be recorded");
+    }
+
+    #[test]
+    fn nesting_and_parentage() {
+        let _g = TEST_GUARD.lock().unwrap();
+        set_tracing(true);
+        let ids = on_fresh_thread(|| {
+            let outer = span("outer");
+            let mid_id;
+            {
+                let mut mid = span("mid");
+                mid.attr("k", "v");
+                {
+                    let _inner = span("inner");
+                }
+                mid_id = snapshot_spans()
+                    .iter()
+                    .find(|r| r.name == "inner")
+                    .map(|r| r.parent)
+                    .unwrap_or(0);
+                drop(mid);
+            }
+            let sibling = span("sibling");
+            drop(sibling);
+            drop(outer);
+            mid_id
+        });
+        set_tracing(false);
+        let spans = take_spans();
+        let find = |n: &str| {
+            spans
+                .iter()
+                .find(|r| r.name == n)
+                .unwrap_or_else(|| panic!("span {n} missing"))
+        };
+        let outer = find("outer");
+        let mid = find("mid");
+        let inner = find("inner");
+        let sibling = find("sibling");
+        assert_eq!(outer.parent, 0, "outer is a root");
+        assert_eq!(mid.parent, outer.id);
+        assert_eq!(inner.parent, mid.id);
+        assert_eq!(sibling.parent, outer.id);
+        assert_eq!(ids, mid.id, "inner recorded mid as parent");
+        assert_eq!(mid.attrs, vec![("k", "v".to_string())]);
+        // All spans ran on the same (fresh) thread.
+        assert_eq!(outer.tid, inner.tid);
+        assert_eq!(outer.tid, sibling.tid);
+    }
+
+    #[test]
+    fn spans_survive_worker_thread_exit() {
+        let _g = TEST_GUARD.lock().unwrap();
+        set_tracing(true);
+        on_fresh_thread(|| {
+            let _sp = span("worker.unit");
+        });
+        set_tracing(false);
+        let spans = take_spans();
+        assert!(
+            spans.iter().any(|r| r.name == "worker.unit"),
+            "record outlives its thread"
+        );
+    }
+}

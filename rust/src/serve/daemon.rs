@@ -20,10 +20,10 @@
 //! accepting and drops the queue sender; workers drain every request
 //! already queued, then exit when the channel closes.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -34,6 +34,7 @@ use crate::data::Dataset;
 use crate::error::Result;
 use crate::flow::cache::{CacheConfig, StageCache};
 use crate::flow::{Flow, FlowContext};
+use crate::obs::{Counter, Gauge};
 use crate::runtime::json::Json;
 use crate::tech::TechRegistry;
 
@@ -114,109 +115,162 @@ struct InFlight {
     cv: Condvar,
 }
 
-/// Shared daemon state: registry, cache, dedup map, counters.
+/// Shared daemon state: tech registry, cache, dedup map, and the
+/// per-daemon metrics registry.
+///
+/// Every counter the daemon exposes lives in `obs` — `/stats` is a
+/// JSON *view* over the same registry `/metrics` renders, so the two
+/// exposures cannot drift (the pre-registry daemon kept a private
+/// duplicate counter set that did).  Hot-path handles are registered
+/// once at spawn and shared by the workers.
 struct ServerState {
     registry: TechRegistry,
+    /// The daemon's metrics registry — the single source of truth for
+    /// `/stats` and `/metrics`.  Per-daemon (not the process global),
+    /// so concurrent daemons in one test process stay isolated.
+    obs: Arc<crate::obs::Registry>,
     cache: StageCache,
     /// Stimulus datasets by (sample count, seed) — generated once,
     /// shared by every worker (mirrors [`FlowContext::new`]).
     datasets: Mutex<HashMap<(usize, u64), Arc<Dataset>>>,
     inflight: Mutex<HashMap<u64, Arc<InFlight>>>,
     shutdown: AtomicBool,
-    requests: AtomicU64,
-    flow_requests: AtomicU64,
-    errors: AtomicU64,
-    overloads: AtomicU64,
+    requests: Arc<Counter>,
+    flow_runs: Arc<Counter>,
+    errors: Arc<Counter>,
+    overloads: Arc<Counter>,
     /// Responses cut off by the write timeout (client stopped reading).
-    stalled_writes: AtomicU64,
-    dedup_joins: AtomicU64,
-    flow_micros: AtomicU64,
-    /// Per-stage (runs, total µs) aggregates across all requests.
-    stage_times: Mutex<BTreeMap<&'static str, (u64, u64)>>,
-    /// Requests per requested engine kind (`auto`/`scalar`/`packed`/
-    /// `compiled`), counting dedup joins too — what clients asked for.
-    engine_requests: Mutex<BTreeMap<String, u64>>,
-    /// Requests per canonical pass pipeline (so `all` and the
-    /// spelled-out list aggregate into one row).
-    pass_requests: Mutex<BTreeMap<String, u64>>,
+    stalled_writes: Arc<Counter>,
+    dedup_joins: Arc<Counter>,
+    flow_micros: Arc<Counter>,
+    /// Connections accepted but not yet picked up by a worker.
+    queue_depth: Arc<Gauge>,
     debug_flow_delay_ms: u64,
 }
 
 impl ServerState {
     fn count_engine(&self, query: &FlowQuery) {
-        *self
-            .engine_requests
-            .lock()
-            .unwrap()
-            .entry(query.engine.clone())
-            .or_insert(0) += 1;
+        self.obs
+            .counter(
+                "tnn7_serve_engine_requests_total",
+                "Flow requests by requested engine kind (dedup joins \
+                 included)",
+                &[("engine", query.engine.as_str())],
+            )
+            .inc();
         let canonical = crate::ir::PassManager::parse(&query.passes)
             .map(|pm| pm.canonical())
             .unwrap_or_else(|_| query.passes.clone());
-        *self
-            .pass_requests
-            .lock()
-            .unwrap()
-            .entry(canonical)
-            .or_insert(0) += 1;
+        self.obs
+            .counter(
+                "tnn7_serve_pass_requests_total",
+                "Flow requests by canonical pass pipeline",
+                &[("passes", canonical.as_str())],
+            )
+            .inc();
     }
 
+    /// Count one routed request against its endpoint and record its
+    /// handling latency.
+    fn observe_endpoint(&self, path: &str, micros: u64) {
+        let endpoint = match path {
+            "/flow" | "/stats" | "/healthz" | "/metrics"
+            | "/shutdown" => path,
+            _ => "other",
+        };
+        self.obs
+            .counter(
+                "tnn7_serve_endpoint_requests_total",
+                "Requests routed, by endpoint",
+                &[("endpoint", endpoint)],
+            )
+            .inc();
+        self.obs
+            .histogram(
+                "tnn7_serve_request_micros",
+                "Request handling latency, microseconds",
+                &[("endpoint", endpoint)],
+            )
+            .observe(micros);
+    }
+
+    /// Collapse a labeled counter family into `{label_value: count}`.
+    fn label_map(&self, name: &str, label: &str) -> Json {
+        Json::Obj(
+            self.obs
+                .counter_series(name)
+                .into_iter()
+                .filter_map(|(labels, v)| {
+                    labels
+                        .into_iter()
+                        .find(|(k, _)| k == label)
+                        .map(|(_, lv)| (lv, Json::int(v)))
+                })
+                .collect(),
+        )
+    }
+
+    /// The `/stats` body, derived entirely from the metrics registry
+    /// (plus the two pieces of live state that are not counters: the
+    /// in-flight dedup map and the shutdown flag).
     fn stats_json(&self) -> Json {
-        let count_map = |m: &Mutex<BTreeMap<String, u64>>| {
-            Json::Obj(
-                m.lock()
-                    .unwrap()
-                    .iter()
-                    .map(|(k, v)| (k.clone(), Json::int(*v)))
-                    .collect(),
-            )
-        };
-        let stages = {
-            let times = self.stage_times.lock().unwrap();
-            Json::Obj(
-                times
-                    .iter()
-                    .map(|(name, (runs, micros))| {
-                        (
-                            name.to_string(),
-                            Json::obj(vec![
-                                ("runs", Json::int(*runs)),
-                                ("micros_total", Json::int(*micros)),
-                            ]),
-                        )
-                    })
-                    .collect(),
-            )
-        };
+        let mut stages: std::collections::BTreeMap<String, (u64, u64)> =
+            std::collections::BTreeMap::new();
+        for (labels, v) in
+            self.obs.counter_series("tnn7_flow_stage_runs_total")
+        {
+            if let Some((_, s)) =
+                labels.into_iter().find(|(k, _)| k == "stage")
+            {
+                stages.entry(s).or_insert((0, 0)).0 = v;
+            }
+        }
+        for (labels, v) in
+            self.obs.counter_series("tnn7_flow_stage_micros_total")
+        {
+            if let Some((_, s)) =
+                labels.into_iter().find(|(k, _)| k == "stage")
+            {
+                stages.entry(s).or_insert((0, 0)).1 = v;
+            }
+        }
+        let stages = Json::Obj(
+            stages
+                .into_iter()
+                .map(|(name, (runs, micros))| {
+                    (
+                        name,
+                        Json::obj(vec![
+                            ("runs", Json::int(runs)),
+                            ("micros_total", Json::int(micros)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         Json::obj(vec![
-            (
-                "requests",
-                Json::int(self.requests.load(Ordering::Relaxed)),
-            ),
-            (
-                "flow_requests",
-                Json::int(self.flow_requests.load(Ordering::Relaxed)),
-            ),
-            ("errors", Json::int(self.errors.load(Ordering::Relaxed))),
-            (
-                "overloads",
-                Json::int(self.overloads.load(Ordering::Relaxed)),
-            ),
-            (
-                "stalled_writes",
-                Json::int(self.stalled_writes.load(Ordering::Relaxed)),
-            ),
-            (
-                "dedup_joins",
-                Json::int(self.dedup_joins.load(Ordering::Relaxed)),
-            ),
-            (
-                "flow_micros_total",
-                Json::int(self.flow_micros.load(Ordering::Relaxed)),
-            ),
+            ("requests", Json::int(self.requests.get())),
+            ("flow_requests", Json::int(self.flow_runs.get())),
+            ("errors", Json::int(self.errors.get())),
+            ("overloads", Json::int(self.overloads.get())),
+            ("stalled_writes", Json::int(self.stalled_writes.get())),
+            ("dedup_joins", Json::int(self.dedup_joins.get())),
+            ("flow_micros_total", Json::int(self.flow_micros.get())),
             ("stages", stages),
-            ("engine_requests", count_map(&self.engine_requests)),
-            ("pass_requests", count_map(&self.pass_requests)),
+            (
+                "engine_requests",
+                self.label_map(
+                    "tnn7_serve_engine_requests_total",
+                    "engine",
+                ),
+            ),
+            (
+                "pass_requests",
+                self.label_map(
+                    "tnn7_serve_pass_requests_total",
+                    "passes",
+                ),
+            ),
             ("cache", self.cache.stats_json()),
             (
                 "inflight",
@@ -244,22 +298,54 @@ impl Server {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
 
+        let obs = Arc::new(crate::obs::Registry::new());
         let state = Arc::new(ServerState {
             registry: TechRegistry::builtin(),
-            cache: StageCache::new(cfg.cache.clone()),
+            cache: StageCache::with_registry(cfg.cache.clone(), &obs),
             datasets: Mutex::new(HashMap::new()),
             inflight: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
-            requests: AtomicU64::new(0),
-            flow_requests: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            overloads: AtomicU64::new(0),
-            stalled_writes: AtomicU64::new(0),
-            dedup_joins: AtomicU64::new(0),
-            flow_micros: AtomicU64::new(0),
-            stage_times: Mutex::new(BTreeMap::new()),
-            engine_requests: Mutex::new(BTreeMap::new()),
-            pass_requests: Mutex::new(BTreeMap::new()),
+            requests: obs.counter(
+                "tnn7_serve_requests_total",
+                "Connections handled by the worker pool",
+                &[],
+            ),
+            flow_runs: obs.counter(
+                "tnn7_serve_flow_runs_total",
+                "Flow executions run by dedup leaders",
+                &[],
+            ),
+            errors: obs.counter(
+                "tnn7_serve_errors_total",
+                "Responses with status >= 400",
+                &[],
+            ),
+            overloads: obs.counter(
+                "tnn7_serve_overloads_total",
+                "Connections refused with 503 (request queue full)",
+                &[],
+            ),
+            stalled_writes: obs.counter(
+                "tnn7_serve_stalled_writes_total",
+                "Responses cut off by the write timeout",
+                &[],
+            ),
+            dedup_joins: obs.counter(
+                "tnn7_serve_dedup_joins_total",
+                "Flow requests joined onto an identical in-flight query",
+                &[],
+            ),
+            flow_micros: obs.counter(
+                "tnn7_serve_flow_micros_total",
+                "Cumulative leader flow wall time, microseconds",
+                &[],
+            ),
+            queue_depth: obs.gauge(
+                "tnn7_serve_queue_depth",
+                "Accepted connections waiting for a worker",
+                &[],
+            ),
+            obs,
             debug_flow_delay_ms: cfg.debug_flow_delay_ms,
         });
 
@@ -323,12 +409,12 @@ fn accept_loop(
                 let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
                 let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
                 match tx.try_send(stream) {
-                    Ok(()) => {}
+                    Ok(()) => state.queue_depth.inc(),
                     Err(TrySendError::Full(mut stream)) => {
                         // Bounded-queue overflow: answer on the accept
                         // thread so the client gets a structured 503
                         // instead of an unexplained stall.
-                        state.overloads.fetch_add(1, Ordering::Relaxed);
+                        state.overloads.inc();
                         let _ = Response::error(
                             503,
                             "request queue is full, retry shortly",
@@ -356,16 +442,25 @@ fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, state: &ServerState) {
         let conn = rx.lock().unwrap().recv();
         match conn {
             Ok(mut stream) => {
-                state.requests.fetch_add(1, Ordering::Relaxed);
+                state.queue_depth.dec();
+                state.requests.inc();
                 let resp = match read_request(&stream) {
-                    Ok(req) => route(state, &req),
+                    Ok(req) => {
+                        let t0 = Instant::now();
+                        let resp = route(state, &req);
+                        state.observe_endpoint(
+                            &req.path,
+                            t0.elapsed().as_micros() as u64,
+                        );
+                        resp
+                    }
                     // Parse errors carry their status: 413 for an
                     // oversized body, 408 for a blown deadline, 400
                     // for malformed requests.
                     Err(e) => Response::error(e.status, &e.msg),
                 };
                 if resp.status >= 400 {
-                    state.errors.fetch_add(1, Ordering::Relaxed);
+                    state.errors.inc();
                 }
                 if let Err(e) = resp.write_to(&mut stream) {
                     use std::io::ErrorKind;
@@ -375,9 +470,7 @@ fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, state: &ServerState) {
                     ) {
                         // The write timeout fired: a stalled client
                         // was cut off rather than pinning the worker.
-                        state
-                            .stalled_writes
-                            .fetch_add(1, Ordering::Relaxed);
+                        state.stalled_writes.inc();
                     }
                 }
             }
@@ -396,6 +489,9 @@ fn route(state: &ServerState, req: &Request) -> Response {
         ("GET", "/stats") => {
             Response::json(200, state.stats_json().to_string_pretty())
         }
+        ("GET", "/metrics") => {
+            Response::text(200, state.obs.prometheus_text())
+        }
         ("POST", "/shutdown") => {
             state.shutdown.store(true, Ordering::SeqCst);
             Response::json(
@@ -412,7 +508,7 @@ fn route(state: &ServerState, req: &Request) -> Response {
             404,
             &format!(
                 "unknown path `{path}` (POST /flow, GET /stats, \
-                 GET /healthz, POST /shutdown)"
+                 GET /metrics, GET /healthz, POST /shutdown)"
             ),
         ),
         (method, _) => Response::error(
@@ -448,7 +544,7 @@ fn handle_flow(state: &ServerState, body: &str) -> Response {
     };
 
     if !leader {
-        state.dedup_joins.fetch_add(1, Ordering::Relaxed);
+        state.dedup_joins.inc();
         let mut slot = inflight.slot.lock().unwrap();
         while slot.is_none() {
             slot = inflight.cv.wait(slot).unwrap();
@@ -480,8 +576,10 @@ fn handle_flow(state: &ServerState, body: &str) -> Response {
 }
 
 fn run_flow(state: &ServerState, query: &FlowQuery) -> Response {
-    state.flow_requests.fetch_add(1, Ordering::Relaxed);
-    let t0 = Instant::now();
+    state.flow_runs.inc();
+    let mut sp = crate::obs::span("serve.flow");
+    sp.attr("tech", &query.tech);
+    sp.attr("engine", &query.engine);
     let cfg = query.config();
     let tech = match state.registry.get(&query.tech) {
         Ok(t) => t,
@@ -496,29 +594,27 @@ fn run_flow(state: &ServerState, query: &FlowQuery) -> Response {
     };
     let mut ctx =
         FlowContext::with_tech(query.target(), cfg.clone(), tech, data);
+    // Point the flow's stage accounting at this daemon's registry, so
+    // per-stage runs/micros land next to the serve counters.
+    ctx.obs = Arc::clone(&state.obs);
     let trace = match Flow::measurement_for(&cfg)
         .run_cached(&mut ctx, Some(&state.cache))
     {
         Ok(t) => t,
         Err(e) => return Response::error(500, &e.to_string()),
     };
-    {
-        let mut times = state.stage_times.lock().unwrap();
-        for s in &trace.stages {
-            let e = times.entry(s.name).or_insert((0, 0));
-            e.0 += 1;
-            e.1 += s.micros as u64;
-        }
-    }
-    state
-        .flow_micros
-        .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    state.flow_micros.add(sp.finish_micros() as u64);
     let Some(body) = trace.dump_for("report") else {
         return Response::error(
             500,
             "flow produced no report artifact",
         );
     };
-    Response { status: 200, headers: Vec::new(), body }
-        .with_header("X-Tnn7-Cache", trace.cache_line())
+    Response {
+        status: 200,
+        headers: Vec::new(),
+        content_type: "application/json",
+        body,
+    }
+    .with_header("X-Tnn7-Cache", trace.cache_line())
 }

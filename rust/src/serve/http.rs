@@ -177,6 +177,8 @@ pub struct Response {
     /// Extra headers beyond the always-present Content-Type /
     /// Content-Length / Connection set.
     pub headers: Vec<(String, String)>,
+    /// Content-Type header value.
+    pub content_type: &'static str,
     pub body: Arc<String>,
 }
 
@@ -186,6 +188,17 @@ impl Response {
         Response {
             status,
             headers: Vec::new(),
+            content_type: "application/json",
+            body: Arc::new(body.into()),
+        }
+    }
+
+    /// A plain-text response (Prometheus exposition format).
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            headers: Vec::new(),
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
             body: Arc::new(body.into()),
         }
     }
@@ -218,7 +231,10 @@ impl Response {
             self.status,
             status_text(self.status)
         );
-        head.push_str("Content-Type: application/json\r\n");
+        head.push_str(&format!(
+            "Content-Type: {}\r\n",
+            self.content_type
+        ));
         head.push_str(&format!(
             "Content-Length: {}\r\n",
             self.body.len()

@@ -129,6 +129,14 @@ pub struct Tape {
     primed: bool,
     /// Per-instance counters (`cycles` is counted by the wrapper).
     activity: Activity,
+    /// Observability tallies since the last [`Tape::obs_drain`]:
+    /// level buckets evaluated / skipped by quiescence gating, and
+    /// ops retired.  Plain integers bumped inside the tick loop and
+    /// flushed to the metrics registry once per run by the owning
+    /// engine — per-tick work never touches an atomic.
+    obs_levels_eval: u64,
+    obs_levels_skip: u64,
+    obs_ops_retired: u64,
     scratch_ins: [u64; 16],
     scratch_outs: [u64; 8],
     faults: Option<Box<FaultOverlay>>,
@@ -255,10 +263,27 @@ impl Tape {
             consts,
             primed: false,
             activity: Activity::new(ir.n_insts),
+            obs_levels_eval: 0,
+            obs_levels_skip: 0,
+            obs_ops_retired: 0,
             scratch_ins: [0; 16],
             scratch_outs: [0; 8],
             faults: None,
         }
+    }
+
+    /// Take and reset the quiescence/throughput tallies:
+    /// `(levels_evaluated, levels_skipped, ops_retired)`.
+    pub(crate) fn obs_drain(&mut self) -> (u64, u64, u64) {
+        let out = (
+            self.obs_levels_eval,
+            self.obs_levels_skip,
+            self.obs_ops_retired,
+        );
+        self.obs_levels_eval = 0;
+        self.obs_levels_skip = 0;
+        self.obs_ops_retired = 0;
+        out
     }
 
     /// Slot (net) count.
@@ -418,6 +443,9 @@ impl Tape {
             consts,
             primed,
             activity,
+            obs_levels_eval,
+            obs_levels_skip,
+            obs_ops_retired,
             scratch_ins,
             scratch_outs,
             faults,
@@ -477,11 +505,14 @@ impl Tape {
         // The tape proper: dirty buckets in depth order.
         for b in 0..dirty.len() {
             if !dirty[b] {
+                *obs_levels_skip += 1;
                 continue;
             }
+            *obs_levels_eval += 1;
             dirty[b] = false;
             let start = level_start[b] as usize;
             let end = level_start[b + 1] as usize;
+            *obs_ops_retired += (end - start) as u64;
             for op in &ops[start..end] {
                 match op {
                     TapeOp::Gate(g) => {
@@ -600,6 +631,38 @@ impl Tape {
     }
 }
 
+/// Record drained tape tallies in a metrics registry: the
+/// quiescence-skip ratio (`tnn7_sim_levels_total{outcome=...}`) and
+/// ops retired (`tnn7_sim_tape_ops_total`), labeled by engine so the
+/// standalone compiled engine and the sharded engine's per-part tapes
+/// stay distinguishable.
+pub(crate) fn flush_tape_obs(
+    obs: &crate::obs::Registry,
+    engine: &str,
+    eval: u64,
+    skip: u64,
+    ops: u64,
+) {
+    obs.counter(
+        "tnn7_sim_levels_total",
+        "Level buckets visited, by quiescence-gating outcome",
+        &[("engine", engine), ("outcome", "evaluated")],
+    )
+    .add(eval);
+    obs.counter(
+        "tnn7_sim_levels_total",
+        "Level buckets visited, by quiescence-gating outcome",
+        &[("engine", engine), ("outcome", "skipped")],
+    )
+    .add(skip);
+    obs.counter(
+        "tnn7_sim_tape_ops_total",
+        "Compiled-tape ops retired",
+        &[("engine", engine)],
+    )
+    .add(ops);
+}
+
 /// Compiled-tape simulation instance over a netlist: lower → optimize
 /// → flatten, then tick like the packed engine (bit-identically).
 pub struct CompiledSimulator {
@@ -691,6 +754,13 @@ impl CompiledSimulator {
     /// Tape op count after optimization.
     pub fn n_ops(&self) -> usize {
         self.tape.n_ops()
+    }
+
+    /// Drain the tape's quiescence/throughput tallies into `obs`
+    /// (one batched flush per run; see [`flush_tape_obs`]).
+    pub fn obs_flush(&mut self, obs: &crate::obs::Registry) {
+        let (eval, skip, ops) = self.tape.obs_drain();
+        flush_tape_obs(obs, "compiled", eval, skip, ops);
     }
 
     /// True when a fault on `net` could not be forced faithfully here

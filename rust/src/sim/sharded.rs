@@ -151,6 +151,12 @@ struct PartSim<'n> {
     driver_level: Vec<u32>,
     /// Installed fault overlay (`None` keeps the hot path fault-free).
     faults: Option<Box<FaultOverlay>>,
+    /// Observability tallies — plain integers bumped on the hot path
+    /// and drained once per run by the coordinator: levels evaluated,
+    /// levels skipped by quiescence gating, node evals retired.
+    obs_levels_eval: u64,
+    obs_levels_skip: u64,
+    obs_ops_retired: u64,
 }
 
 impl<'n> PartSim<'n> {
@@ -247,7 +253,23 @@ impl<'n> PartSim<'n> {
             scratch_outs: vec![0; 8],
             driver_level,
             faults: None,
+            obs_levels_eval: 0,
+            obs_levels_skip: 0,
+            obs_ops_retired: 0,
         }
+    }
+
+    /// Take and reset the observability tallies.
+    fn obs_drain(&mut self) -> (u64, u64, u64) {
+        let t = (
+            self.obs_levels_eval,
+            self.obs_levels_skip,
+            self.obs_ops_retired,
+        );
+        self.obs_levels_eval = 0;
+        self.obs_levels_skip = 0;
+        self.obs_ops_retired = 0;
+        t
     }
 
     /// Install a fault overlay (the part forces only its own writes).
@@ -351,17 +373,23 @@ impl<'n> PartSim<'n> {
             scratch_ins,
             scratch_outs,
             faults,
+            obs_levels_eval,
+            obs_levels_skip,
+            obs_ops_retired,
             ..
         } = self;
         let pins = &nl.pins;
         let n_levels = dirty.len();
         for b in 0..n_levels {
             if !dirty[b] {
+                *obs_levels_skip += 1;
                 continue;
             }
+            *obs_levels_eval += 1;
             dirty[b] = false;
             let start = level_start[b] as usize;
             let end = level_start[b + 1] as usize;
+            *obs_ops_retired += (end - start) as u64;
             for node in &nodes[start..end] {
                 use crate::cells::CellKind as K;
                 let ps = node.pin_start as usize;
@@ -571,6 +599,11 @@ pub trait TickPart: Send {
     fn values(&self) -> &[u64];
     /// Per-instance counters (drained by the coordinator's fold).
     fn activity_mut(&mut self) -> &mut Activity;
+    /// Take and reset observability tallies since the last drain:
+    /// `(levels_evaluated, levels_skipped, ops_retired)`.
+    fn obs_drain(&mut self) -> (u64, u64, u64) {
+        (0, 0, 0)
+    }
 }
 
 impl TickPart for PartSim<'_> {
@@ -614,6 +647,10 @@ impl TickPart for PartSim<'_> {
     fn activity_mut(&mut self) -> &mut Activity {
         &mut self.activity
     }
+
+    fn obs_drain(&mut self) -> (u64, u64, u64) {
+        PartSim::obs_drain(self)
+    }
 }
 
 impl TickPart for Tape {
@@ -656,6 +693,10 @@ impl TickPart for Tape {
 
     fn activity_mut(&mut self) -> &mut Activity {
         Tape::activity_mut(self)
+    }
+
+    fn obs_drain(&mut self) -> (u64, u64, u64) {
+        Tape::obs_drain(self)
     }
 }
 
@@ -1006,6 +1047,8 @@ impl<'n, P: TickPart> ShardedSimulator<'n, P> {
         let n_shards = shards.len();
         let mut cycle = self.cycle;
         let mut pending = 0u64;
+        // Coordinator idle time per shard, waiting on boundary words.
+        let mut wait_us: Vec<u64> = vec![0; n_shards];
 
         std::thread::scope(|scope| {
             let (res_tx, res_rx) = mpsc::channel::<(usize, Vec<u64>)>();
@@ -1018,6 +1061,9 @@ impl<'n, P: TickPart> ShardedSimulator<'n, P> {
                 job_txs.push(tx);
                 let res_tx = res_tx.clone();
                 scope.spawn(move || {
+                    let mut sp = crate::obs::span("sim.shard");
+                    sp.attr("shard", s);
+                    let mut jobs = 0u64;
                     while let Ok(job) = rx.recv() {
                         shard.apply_inputs(&job.inputs, true);
                         if let Some(tf) = &job.faults {
@@ -1028,6 +1074,7 @@ impl<'n, P: TickPart> ShardedSimulator<'n, P> {
                             );
                         }
                         shard.settle_commit(job.gclk_edge, job.mask);
+                        jobs += 1;
                         let vals = shard.values();
                         let out: Vec<u64> = pub_nets
                             .iter()
@@ -1037,6 +1084,7 @@ impl<'n, P: TickPart> ShardedSimulator<'n, P> {
                             break;
                         }
                     }
+                    sp.attr("ticks", jobs);
                 });
             }
             drop(res_tx);
@@ -1066,8 +1114,10 @@ impl<'n, P: TickPart> ShardedSimulator<'n, P> {
                 }
                 tail.apply_inputs(&job.inputs, false);
                 for _ in 0..n_shards {
+                    let t0 = std::time::Instant::now();
                     let (s, words) =
                         res_rx.recv().expect("shard worker result");
+                    wait_us[s] += t0.elapsed().as_micros() as u64;
                     tail.apply_words(&publish[s], &words);
                 }
                 tail.settle_commit(tick.gclk_edge, mask);
@@ -1082,6 +1132,45 @@ impl<'n, P: TickPart> ShardedSimulator<'n, P> {
         self.cycle = cycle;
         self.cycles_pending += pending;
         self.fold();
+        self.flush_obs(&wait_us, pending);
+    }
+
+    /// Flush the run's observability tallies to the global registry:
+    /// quiescence gating and ops retired across all parts, lane-ticks,
+    /// and the coordinator's per-shard boundary-exchange wait.  Called
+    /// once per `run_ticks` batch, never inside the tick loop.
+    fn flush_obs(&mut self, wait_us: &[u64], lane_ticks: u64) {
+        let obs = crate::obs::global();
+        let mut eval = 0u64;
+        let mut skip = 0u64;
+        let mut ops = 0u64;
+        for (e, s, o) in std::iter::once(self.head.obs_drain())
+            .chain(self.shards.iter_mut().map(|p| p.obs_drain()))
+            .chain(std::iter::once(self.tail.obs_drain()))
+        {
+            eval += e;
+            skip += s;
+            ops += o;
+        }
+        super::compiled::flush_tape_obs(&obs, "sharded", eval, skip, ops);
+        obs.counter(
+            "tnn7_sim_engine_ticks_total",
+            "Gclk lane-ticks retired, by engine",
+            &[("engine", "sharded")],
+        )
+        .add(lane_ticks);
+        for (s, &w) in wait_us.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            let shard = s.to_string();
+            obs.counter(
+                "tnn7_sim_boundary_wait_micros_total",
+                "Coordinator wait for shard boundary words, microseconds",
+                &[("shard", shard.as_str())],
+            )
+            .add(w);
+        }
     }
 
     /// Drain the per-part counters into the aggregate, so

@@ -292,6 +292,13 @@ pub trait LaneEngine {
         glitches: &[(NetId, u64)],
         seus: &[SeuFlip],
     );
+    /// Stable engine label for metrics series and span attributes.
+    fn engine_label(&self) -> &'static str;
+    /// Drain any internal observability tallies into `obs` (the
+    /// compiled tape reports quiescence gating and ops retired;
+    /// interpreters have nothing to drain).  Called once per run by
+    /// the parallel wave drivers — never inside the tick loop.
+    fn obs_flush(&mut self, _obs: &crate::obs::Registry) {}
 }
 
 impl LaneEngine for PackedSimulator<'_> {
@@ -327,6 +334,10 @@ impl LaneEngine for PackedSimulator<'_> {
     ) {
         PackedSimulator::set_tick_faults(self, glitches, seus);
     }
+
+    fn engine_label(&self) -> &'static str {
+        "packed"
+    }
 }
 
 impl LaneEngine for CompiledSimulator {
@@ -360,6 +371,14 @@ impl LaneEngine for CompiledSimulator {
         seus: &[SeuFlip],
     ) {
         CompiledSimulator::set_tick_faults(self, glitches, seus);
+    }
+
+    fn engine_label(&self) -> &'static str {
+        "compiled"
+    }
+
+    fn obs_flush(&mut self, obs: &crate::obs::Registry) {
+        CompiledSimulator::obs_flush(self, obs);
     }
 }
 
@@ -797,6 +816,11 @@ where
     let n = stim.len();
     if threads == 1 || n == 0 {
         let mut tb = WordTestbench::attach(nl, ports, make(lanes)?);
+        let mut sp = crate::obs::span("sim.worker");
+        sp.attr("engine", tb.sim.engine_label());
+        sp.attr("worker", 0);
+        sp.attr("lanes", format!("0..{lanes}"));
+        sp.attr("waves", n);
         let results = match faults {
             Some(f) => {
                 tb.install_faults(f.overlay.clone())?;
@@ -804,6 +828,8 @@ where
             }
             None => tb.run_waves(stim, rand, params),
         };
+        drop(sp);
+        flush_engine_obs(&crate::obs::global(), &mut tb, n as u64);
         return Ok((results, tb.activity().clone()));
     }
     // Lane ranges: the first `lanes % threads` workers get one extra.
@@ -823,6 +849,10 @@ where
                 (Vec<(usize, Vec<WaveResult>)>, super::Activity);
             handles.push(scope.spawn(move || -> Result<WorkerOut> {
                 let mut tb = WordTestbench::attach(nl, ports, make(width)?);
+                let mut sp = crate::obs::span("sim.worker");
+                sp.attr("engine", tb.sim.engine_label());
+                sp.attr("worker", t);
+                sp.attr("lanes", format!("{my_lo}..{}", my_lo + width));
                 if let Some(f) = faults {
                     tb.install_faults(f.overlay.clone())?;
                 }
@@ -853,6 +883,11 @@ where
                     parts.push((s0, res));
                     chunk += 1;
                 }
+                let waves: u64 =
+                    parts.iter().map(|(_, r)| r.len() as u64).sum();
+                sp.attr("waves", waves);
+                drop(sp);
+                flush_engine_obs(&crate::obs::global(), &mut tb, waves);
                 Ok((parts, tb.activity().clone()))
             }));
         }
@@ -875,6 +910,33 @@ where
         .map(|o| o.expect("every wave covered by a lane range"))
         .collect();
     Ok((results, activity))
+}
+
+/// Flush one worker's engine-level tallies: waves and ticks retired by
+/// the engine itself (counted here so replay, bench and fault paths
+/// that bypass the flow's `Simulate` stage still register), plus
+/// whatever the engine drains internally — the compiled tape reports
+/// quiescence gating and ops retired.  One call per worker per run;
+/// nothing here executes inside the tick loop.
+fn flush_engine_obs<E: LaneEngine>(
+    obs: &crate::obs::Registry,
+    tb: &mut WordTestbench<'_, E>,
+    waves: u64,
+) {
+    let engine = tb.sim.engine_label();
+    obs.counter(
+        "tnn7_sim_engine_waves_total",
+        "Waves retired by wave-parallel engine workers",
+        &[("engine", engine)],
+    )
+    .add(waves);
+    obs.counter(
+        "tnn7_sim_engine_ticks_total",
+        "Gclk lane-ticks retired, by engine",
+        &[("engine", engine)],
+    )
+    .add(tb.activity().cycles);
+    tb.sim.obs_flush(obs);
 }
 
 #[cfg(test)]

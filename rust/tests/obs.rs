@@ -1,0 +1,187 @@
+//! Integration tests for the observability layer (DESIGN.md §15):
+//! registry exactness under concurrency, the Prometheus exposition
+//! golden snapshot, span parentage through the public API, and the
+//! Chrome trace-event export schema.
+
+use std::sync::Mutex;
+
+use tnn7::obs::{
+    self, chrome_trace, profile, set_tracing, take_spans, Registry,
+};
+use tnn7::runtime::json::Json;
+
+/// Tracing is process-global; span tests serialize on this and run
+/// their spans on dedicated threads with unique site names.
+static TRACE_GUARD: Mutex<()> = Mutex::new(());
+
+#[test]
+fn concurrent_counters_and_histograms_are_exact() {
+    let r = Registry::new();
+    let threads = 8usize;
+    let per_thread = 10_000u64;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let c = r.counter("tnn7_t_hits_total", "hits", &[]);
+            let worker = t.to_string();
+            let lc = r.counter(
+                "tnn7_t_labeled_total",
+                "labeled",
+                &[("worker", worker.as_str())],
+            );
+            let h = r.histogram("tnn7_t_us", "latency", &[]);
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    c.inc();
+                    lc.add(2);
+                    h.observe(i % 7);
+                }
+            });
+        }
+    });
+    let total = threads as u64 * per_thread;
+    assert_eq!(r.counter_value("tnn7_t_hits_total", &[]), total);
+    let series = r.counter_series("tnn7_t_labeled_total");
+    assert_eq!(series.len(), threads);
+    for (labels, v) in series {
+        assert_eq!(v, 2 * per_thread, "series {labels:?}");
+    }
+    let h = r.histogram("tnn7_t_us", "latency", &[]);
+    assert_eq!(h.count(), total);
+    // sum of (0..7 cycling) over per_thread draws, times threads.
+    let cycle: u64 = (0..per_thread).map(|i| i % 7).sum();
+    assert_eq!(h.sum(), threads as u64 * cycle);
+    // Buckets: 0 and 1 land in bucket 0, 2 in bucket 1, 3..=4 in
+    // bucket 2, 5..=6 in bucket 3 — cumulative counts must cover all.
+    let counts = h.bucket_counts();
+    assert_eq!(counts.iter().sum::<u64>(), total);
+    assert_eq!(counts[4..].iter().sum::<u64>(), 0, "nothing above 8us");
+}
+
+#[test]
+fn prometheus_exposition_golden() {
+    let r = Registry::new();
+    r.counter("tnn7_demo_total", "Demo counter", &[("stage", "sta")])
+        .add(3);
+    r.counter("tnn7_demo_total", "Demo counter", &[("stage", "sim")])
+        .inc();
+    r.gauge("tnn7_demo_depth", "Demo gauge", &[]).set(-2);
+    let h = r.histogram(
+        "tnn7_demo_us",
+        "Demo histogram",
+        &[("endpoint", "/flow")],
+    );
+    for v in [1, 3, 100] {
+        h.observe(v);
+    }
+    let mut expect = String::from(
+        "# HELP tnn7_demo_depth Demo gauge\n\
+         # TYPE tnn7_demo_depth gauge\n\
+         tnn7_demo_depth -2\n\
+         # HELP tnn7_demo_total Demo counter\n\
+         # TYPE tnn7_demo_total counter\n\
+         tnn7_demo_total{stage=\"sim\"} 1\n\
+         tnn7_demo_total{stage=\"sta\"} 3\n\
+         # HELP tnn7_demo_us Demo histogram\n\
+         # TYPE tnn7_demo_us histogram\n",
+    );
+    // 25 finite power-of-two buckets then +Inf, cumulative: the 1us
+    // observation fills le=1, 3us lands in (2,4], 100us in (64,128].
+    for i in 0..25u32 {
+        let le = 1u64 << i;
+        let cum = match le {
+            1 | 2 => 1,
+            4..=64 => 2,
+            _ => 3,
+        };
+        expect.push_str(&format!(
+            "tnn7_demo_us_bucket{{endpoint=\"/flow\",le=\"{le}\"}} {cum}\n"
+        ));
+    }
+    expect.push_str(
+        "tnn7_demo_us_bucket{endpoint=\"/flow\",le=\"+Inf\"} 3\n\
+         tnn7_demo_us_sum{endpoint=\"/flow\"} 104\n\
+         tnn7_demo_us_count{endpoint=\"/flow\"} 3\n",
+    );
+    assert_eq!(r.prometheus_text(), expect);
+}
+
+#[test]
+fn span_parentage_through_public_api() {
+    let _g = TRACE_GUARD.lock().unwrap();
+    set_tracing(true);
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut outer = obs::span("it.outer");
+            outer.attr("point", "64x8");
+            {
+                let _inner = obs::span("it.inner");
+            }
+        })
+        .join()
+        .unwrap();
+    });
+    set_tracing(false);
+    let spans = take_spans();
+    let outer = spans.iter().find(|r| r.name == "it.outer").unwrap();
+    let inner = spans.iter().find(|r| r.name == "it.inner").unwrap();
+    assert_eq!(outer.parent, 0);
+    assert_eq!(inner.parent, outer.id);
+    assert_eq!(outer.attrs, vec![("point", "64x8".to_string())]);
+    assert!(outer.dur_us >= inner.dur_us.saturating_sub(1));
+    // The profile view sees both sites, each with one span.
+    let rows = profile(&spans);
+    assert!(rows
+        .iter()
+        .any(|r| r.name == "it.outer" && r.count == 1));
+}
+
+#[test]
+fn chrome_trace_export_schema() {
+    let _g = TRACE_GUARD.lock().unwrap();
+    set_tracing(true);
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut sp = obs::span("ct.stage");
+            sp.attr("stage", "simulate");
+            let _child = obs::span("ct.worker");
+        })
+        .join()
+        .unwrap();
+    });
+    set_tracing(false);
+    let spans: Vec<_> = take_spans()
+        .into_iter()
+        .filter(|r| r.name.starts_with("ct."))
+        .collect();
+    assert_eq!(spans.len(), 2);
+    // Round-trip through the parser, exactly as the CI smoke step
+    // consumes `tnn7 flow --trace`.
+    let doc = Json::parse(&chrome_trace(&spans).to_string_pretty())
+        .expect("trace JSON parses");
+    let events = doc.field("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), 3, "metadata event + 2 spans");
+    assert_eq!(
+        events[0].field("ph").unwrap().as_str().unwrap(),
+        "M",
+        "first event is process metadata"
+    );
+    let mut saw_stage_attr = false;
+    for ev in &events[1..] {
+        assert_eq!(ev.field("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(ev.field("cat").unwrap().as_str().unwrap(), "tnn7");
+        assert!(ev.field("ts").unwrap().as_usize().is_ok());
+        assert!(ev.field("dur").unwrap().as_usize().is_ok());
+        assert!(ev.field("tid").unwrap().as_usize().is_ok());
+        let args = ev.field("args").unwrap();
+        assert!(args.field("span_id").unwrap().as_usize().unwrap() > 0);
+        assert!(args.field("parent").is_ok());
+        if ev.field("name").unwrap().as_str().unwrap() == "ct.stage" {
+            assert_eq!(
+                args.field("stage").unwrap().as_str().unwrap(),
+                "simulate"
+            );
+            saw_stage_attr = true;
+        }
+    }
+    assert!(saw_stage_attr, "attrs travel into event args");
+}

@@ -504,6 +504,141 @@ fn retry_client_rides_out_queue_overload() {
     stop(h);
 }
 
+/// Find one series value in a Prometheus text exposition: `labels` is
+/// a `k="v"` fragment that must appear inside the label block (None
+/// matches the unlabeled series exactly).
+fn metric(text: &str, name: &str, labels: Option<&str>) -> u64 {
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let Some((series, value)) = line.rsplit_once(' ') else {
+            continue;
+        };
+        let hit = match labels {
+            None => series == name,
+            Some(l) => {
+                series.strip_prefix(name).is_some_and(|rest| {
+                    rest.starts_with('{') && rest.contains(l)
+                })
+            }
+        };
+        if hit {
+            return value.parse().unwrap_or_else(|_| {
+                panic!("non-numeric value in `{line}`")
+            });
+        }
+    }
+    panic!("metric {name} {labels:?} not in exposition:\n{text}");
+}
+
+/// GET /metrics is well-formed Prometheus text, reads the same
+/// registry as /stats, and its counters advance exactly across an
+/// uncached/cached query pair: the cold run misses all six stages,
+/// the warm run hits all six in the memory tier.
+#[test]
+fn metrics_exposition_tracks_cached_vs_uncached_pair() {
+    let h = spawn(2, 16, 0);
+    let addr = h.addr();
+
+    let cold = fetch(addr, "POST", "/flow", TINY).unwrap();
+    assert_eq!(cold.status, 200, "cold body: {}", cold.body);
+    let m1 = fetch(addr, "GET", "/metrics", "").unwrap();
+    assert_eq!(m1.status, 200);
+    assert_eq!(
+        m1.header("Content-Type"),
+        Some("text/plain; version=0.0.4; charset=utf-8"),
+        "Prometheus text content type"
+    );
+    // Well-formed 0.0.4 text: every non-comment line is
+    // `name[{labels}] value` with a numeric value.
+    for line in m1.body.lines() {
+        if line.is_empty() || line.starts_with("# ") {
+            continue;
+        }
+        let (series, value) =
+            line.rsplit_once(' ').expect("`series value` line");
+        assert!(
+            value.parse::<i64>().is_ok(),
+            "numeric value in `{line}`"
+        );
+        let name = series.split('{').next().unwrap();
+        assert!(
+            !name.is_empty()
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "metric name in `{line}`"
+        );
+        if series.contains('{') {
+            assert!(series.ends_with('}'), "label block in `{line}`");
+        }
+    }
+    assert_eq!(metric(&m1.body, "tnn7_cache_misses_total", None), 6);
+    assert_eq!(metric(&m1.body, "tnn7_serve_flow_runs_total", None), 1);
+
+    let warm = fetch(addr, "POST", "/flow", TINY).unwrap();
+    assert_eq!(
+        warm.header("X-Tnn7-Cache").unwrap(),
+        "executed=0 mem=6 disk=0"
+    );
+    let m2 = fetch(addr, "GET", "/metrics", "").unwrap();
+    assert_eq!(
+        metric(&m2.body, "tnn7_cache_hits_total", Some("tier=\"mem\"")),
+        6,
+        "warm run hits all six stages in the memory tier"
+    );
+    assert_eq!(
+        metric(&m2.body, "tnn7_cache_misses_total", None),
+        6,
+        "warm run adds no misses"
+    );
+    assert_eq!(metric(&m2.body, "tnn7_serve_flow_runs_total", None), 2);
+    assert!(
+        metric(
+            &m2.body,
+            "tnn7_serve_request_micros_count",
+            Some("endpoint=\"/flow\"")
+        ) >= 2,
+        "per-endpoint latency histogram observes both flow requests"
+    );
+    assert_eq!(
+        metric(
+            &m2.body,
+            "tnn7_flow_stage_runs_total",
+            Some("stage=\"simulate\"")
+        ),
+        2,
+        "stage counters count replays too: one executed, one mem hit"
+    );
+    assert_eq!(
+        metric(
+            &m2.body,
+            "tnn7_flow_stage_outcomes_total",
+            Some("outcome=\"executed\",stage=\"simulate\"")
+        ),
+        1
+    );
+    assert_eq!(
+        metric(
+            &m2.body,
+            "tnn7_flow_stage_outcomes_total",
+            Some("outcome=\"mem_hit\",stage=\"simulate\"")
+        ),
+        1
+    );
+
+    // /stats is a JSON view over the same registry — the two cannot
+    // drift.
+    let stats = fetch(addr, "GET", "/stats", "").unwrap();
+    let j = Json::parse(&stats.body).unwrap();
+    assert_eq!(
+        j.field("flow_requests").unwrap().as_usize().unwrap() as u64,
+        metric(&m2.body, "tnn7_serve_flow_runs_total", None)
+    );
+    stop(h);
+}
+
 /// PROPERTY: for random small design points, the cached measurement is
 /// bit-identical to the uncached one, cold and warm — and the warm run
 /// executes zero stages.  Seeded sweep; the seed is in every message.
